@@ -1,0 +1,45 @@
+//! Phase-level perf harness used for the EXPERIMENTS.md §Perf log:
+//! times the dense engine's forward, backward and M-step separately on
+//! the Fig. 3 default workload (D=128 here for fast iteration).
+//!
+//!     cargo run --release --example _perf
+
+use einet::*;
+use einet::em::{m_step, EmConfig};
+use einet::util::Timer;
+
+fn main() {
+    let num_vars = 128;
+    let n = 200;
+    let batch = 100;
+    let data = einet::data::debd::gaussian_noise(n, num_vars, 0);
+    let family = LeafFamily::Gaussian { channels: 1 };
+    let graph = einet::structure::random_binary_trees(num_vars, 4, 10, 7);
+    let plan = LayeredPlan::compile(graph, 8);
+    let mut params = EinetParams::init(&plan, family, 0);
+    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mask = vec![1.0f32; num_vars];
+    let mut logp = vec![0.0f32; batch];
+    let mut stats = EmStats::zeros_like(&params);
+    let em = EmConfig::default();
+    // warm
+    engine.forward(&params, data.rows(0, batch), &mask, &mut logp);
+    let reps = 20;
+    let t = Timer::new();
+    for _ in 0..reps { engine.forward(&params, data.rows(0, batch), &mask, &mut logp); }
+    let fwd = t.elapsed_ms() / reps as f64;
+    let t = Timer::new();
+    for _ in 0..reps {
+        engine.forward(&params, data.rows(0, batch), &mask, &mut logp);
+        engine.backward(&params, data.rows(0, batch), &mask, batch, &mut stats);
+        stats.reset();
+    }
+    let fwdbwd = t.elapsed_ms() / reps as f64;
+    engine.forward(&params, data.rows(0, batch), &mask, &mut logp);
+    engine.backward(&params, data.rows(0, batch), &mask, batch, &mut stats);
+    let t = Timer::new();
+    for _ in 0..reps { m_step(&mut params, &plan, &stats, &em); }
+    let mstep = t.elapsed_ms() / reps as f64;
+    println!("fwd {fwd:.2}ms  fwd+bwd {fwdbwd:.2}ms (bwd {:.2}ms)  m_step {mstep:.2}ms", fwdbwd - fwd);
+    println!("per-epoch estimate (2 batches): {:.1}ms", 2.0*(fwdbwd+mstep));
+}

@@ -1,0 +1,100 @@
+//! End-to-end driver (mandated by DESIGN.md): the full three-layer stack
+//! on a real small workload, proving L1 + L2 + L3 compose.
+//!
+//!   L1: Pallas log-einsum-exp / mixing kernels (interpret-lowered)
+//!   L2: jax EiNet forward + EM statistics via autodiff, AOT-lowered to
+//!       HLO text by `make artifacts`
+//!   L3: this binary — PJRT loads the artifacts, rust owns the parameters,
+//!       streams mini-batches of synthetic 8x8 grayscale digit images
+//!       through the `train` executable (E-step) and applies the M-step.
+//!
+//! Logs the LL curve; results recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_train [-- --steps N]
+
+use einet::coordinator::AotTrainer;
+use einet::data::images;
+use einet::em::EmConfig;
+use einet::runtime::Runtime;
+use einet::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(300);
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let runtime = Runtime::new(dir)?;
+    println!("PJRT platform: {}", runtime.platform());
+
+    // the pd_img_8x8 artifact: PD structure (delta=2, hv), Gaussian leaves,
+    // 8x8 grayscale, batch 32
+    let em = EmConfig {
+        step_size: 0.2,
+        var_bounds: (1e-4, 0.25),
+        ..Default::default()
+    };
+    let t_compile = Timer::new();
+    let mut trainer = AotTrainer::new(&runtime, "pd_img_8x8", 0, em)?;
+    println!(
+        "compiled {} (D={}, K={}, R={}, B={}) in {:.2}s",
+        trainer.meta.name,
+        trainer.meta.num_vars,
+        trainer.meta.k,
+        trainer.meta.replica,
+        trainer.meta.batch,
+        t_compile.elapsed_s()
+    );
+
+    // real small workload: 8x8 grayscale digit images
+    let b = trainer.meta.batch;
+    let (h, w) = (8usize, 8usize);
+    let n_train = 960;
+    let (train, _) = images::digits_gray(n_train, h, w, 0);
+    let (eval, _) = images::digits_gray(b, h, w, 4242);
+    let mask = vec![1.0f32; h * w];
+
+    let ll0 = trainer.eval_batch(&eval.data, &mask)?;
+    println!("step {:>5}: eval LL {:.2}", 0, ll0);
+
+    let t = Timer::new();
+    let mut curve = Vec::new();
+    let batches = n_train / b;
+    for step in 0..steps {
+        let lo = (step % batches) * b;
+        let x = train.rows(lo, lo + b);
+        let ll = trainer.em_step(x, &mask)?;
+        curve.push(ll);
+        if (step + 1) % 25 == 0 {
+            let recent: f64 =
+                curve[curve.len().saturating_sub(25)..].iter().sum::<f64>()
+                    / 25.0_f64.min(curve.len() as f64);
+            println!(
+                "step {:>5}: train LL {:.2} (avg last 25: {:.2}) [{:.1}s]",
+                step + 1,
+                ll,
+                recent,
+                t.elapsed_s()
+            );
+        }
+    }
+    let ll1 = trainer.eval_batch(&eval.data, &mask)?;
+    println!(
+        "eval LL {:.2} -> {:.2} (delta {:+.2}) after {} steps in {:.1}s \
+         ({:.1} steps/s, batch {})",
+        ll0,
+        ll1,
+        ll1 - ll0,
+        steps,
+        t.elapsed_s(),
+        steps as f64 / t.elapsed_s(),
+        b
+    );
+    anyhow::ensure!(ll1 > ll0, "training failed to improve the eval LL");
+    println!("e2e OK: L1 (pallas) + L2 (jax/HLO) + L3 (rust/PJRT) compose.");
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Fig. 4 reproduction: EiNets as generative image models.
+//!
+//! Pipeline (Section 4.2, scaled to CPU + synthetic data):
+//!   1. render an SVHN-like RGB digit dataset (and a CelebA-like face set);
+//!   2. k-means cluster; train one EiNet per cluster on the Poon-Domingos
+//!      structure with factorized Gaussian leaves (variance projected to
+//!      [1e-6, 1e-2], the paper's setting), stochastic EM step 0.5;
+//!   3. draw samples from the mixture (Fig. 4b/e analogue);
+//!   4. inpaint test images with the left half hidden (Fig. 4c/f).
+//!
+//! Outputs PPM images under out_images/.
+//!
+//!     cargo run --release --example image_inpainting [-- --quick]
+
+use std::path::Path;
+
+use einet::data::{images, tile_images, write_ppm};
+use einet::em::EmConfig;
+use einet::mixture::{EinetMixture, MixtureConfig};
+use einet::structure::{poon_domingos, PdAxes};
+use einet::util::rng::Rng;
+use einet::util::Timer;
+use einet::{DecodeMode, LayeredPlan, LeafFamily};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let out_dir = Path::new("out_images");
+    std::fs::create_dir_all(out_dir)?;
+
+    // -- SVHN-like digits --------------------------------------------------
+    let (h, w) = (16usize, 16usize);
+    let n_train = if quick { 300 } else { 3000 };
+    let clusters = if quick { 4 } else { 16 };
+    let epochs = if quick { 3 } else { 8 };
+    println!("rendering {n_train} SVHN-like {h}x{w} RGB digits ...");
+    let (train, _) = images::svhn_like(n_train, h, w, 0);
+    let (test, _) = images::svhn_like(24, h, w, 999);
+
+    // PD structure with vertical splits only (the paper's choice), delta
+    // = w/4 → 4 column strips (the paper used 4 axis-aligned splits)
+    let delta = w / 4;
+    let graph = poon_domingos(h, w, delta, PdAxes::Vertical);
+    let plan = LayeredPlan::compile(graph, if quick { 6 } else { 12 });
+    println!(
+        "PD structure: {} regions, {} partitions, K={}",
+        plan.graph.regions.len(),
+        plan.graph.partitions.len(),
+        plan.k
+    );
+
+    let cfg = MixtureConfig {
+        num_clusters: clusters,
+        k: plan.k,
+        epochs,
+        batch_size: 100,
+        em: EmConfig {
+            step_size: 0.5,
+            var_bounds: (1e-6, 1e-2), // the paper's projection
+            ..Default::default()
+        },
+        seed: 0,
+    };
+    let t = Timer::new();
+    let mut mix = EinetMixture::train(
+        plan.clone(),
+        LeafFamily::Gaussian { channels: 3 },
+        &train.data,
+        n_train,
+        &cfg,
+        |c, e, ll| {
+            if e == 0 {
+                println!("  cluster {c:>2} epoch 0: LL {ll:.1}");
+            }
+        },
+    )?;
+    println!("trained {} components in {:.1}s", clusters, t.elapsed_s());
+
+    // test-set likelihood (bits per dimension, a standard report)
+    let mask = vec![1.0f32; h * w];
+    let mut lp = vec![0.0f32; 24];
+    mix.log_prob(&test.data, &mask, &mut lp);
+    let mean_ll = lp.iter().map(|&l| l as f64).sum::<f64>() / 24.0;
+    println!("test LL {:.1} ({:.3} nats/dim)", mean_ll, mean_ll / (h * w * 3) as f64);
+
+    // -- Fig 4a/b: originals + samples --------------------------------------
+    let mut rng = Rng::new(1);
+    let (orig_grid, gh, gw) = tile_images(&train.data[..24 * h * w * 3], 24, h, w, 3, 6);
+    write_ppm(&out_dir.join("svhn_originals.ppm"), &orig_grid, gh, gw)?;
+    let samples = mix.sample(24, &mut rng, DecodeMode::Sample);
+    let (grid, gh, gw) = tile_images(&samples, 24, h, w, 3, 6);
+    write_ppm(&out_dir.join("svhn_samples.ppm"), &grid, gh, gw)?;
+    println!("wrote svhn_originals.ppm, svhn_samples.ppm");
+
+    // -- Fig 4c: inpainting (left half hidden) -------------------------------
+    let mut emask = vec![1.0f32; h * w];
+    for y in 0..h {
+        for x in 0..w / 2 {
+            emask[y * w + x] = 0.0;
+        }
+    }
+    let mut masked = test.data.clone();
+    for b in 0..24 {
+        for d in 0..h * w {
+            if emask[d] == 0.0 {
+                for c in 0..3 {
+                    masked[(b * h * w + d) * 3 + c] = 0.5; // display gray
+                }
+            }
+        }
+    }
+    let (mgrid, gh, gw) = tile_images(&masked, 24, h, w, 3, 6);
+    write_ppm(&out_dir.join("svhn_masked.ppm"), &mgrid, gh, gw)?;
+    let inpainted = mix.inpaint(&test.data, &emask, 24, DecodeMode::Argmax, &mut rng);
+    let (igrid, gh, gw) = tile_images(&inpainted, 24, h, w, 3, 6);
+    write_ppm(&out_dir.join("svhn_inpainted.ppm"), &igrid, gh, gw)?;
+    println!("wrote svhn_masked.ppm, svhn_inpainted.ppm");
+
+    // inpainting quality: MSE on the hidden half vs a mean-image baseline
+    let mut mse_model = 0.0f64;
+    let mut mse_base = 0.0f64;
+    let mut count = 0usize;
+    let mean_pixel: f32 =
+        train.data.iter().sum::<f32>() / train.data.len() as f32;
+    for b in 0..24 {
+        for d in 0..h * w {
+            if emask[d] == 0.0 {
+                for c in 0..3 {
+                    let idx = (b * h * w + d) * 3 + c;
+                    let truth = test.data[idx] as f64;
+                    mse_model += (inpainted[idx] as f64 - truth).powi(2);
+                    mse_base += (mean_pixel as f64 - truth).powi(2);
+                    count += 1;
+                }
+            }
+        }
+    }
+    println!(
+        "inpainting MSE {:.4} vs mean-image baseline {:.4} (ratio {:.2})",
+        mse_model / count as f64,
+        mse_base / count as f64,
+        (mse_model / count as f64) / (mse_base / count as f64),
+    );
+
+    // -- CelebA-like faces ----------------------------------------------------
+    if !quick {
+        println!("\nrendering CelebA-like faces ...");
+        let faces = images::celeba_like(2000, h, w, 5);
+        let mut mixf = EinetMixture::train(
+            plan,
+            LeafFamily::Gaussian { channels: 3 },
+            &faces.data,
+            2000,
+            &cfg,
+            |_, _, _| {},
+        )?;
+        let fsamples = mixf.sample(24, &mut rng, DecodeMode::Sample);
+        let (fgrid, gh, gw) = tile_images(&fsamples, 24, h, w, 3, 6);
+        write_ppm(&out_dir.join("celeba_samples.ppm"), &fgrid, gh, gw)?;
+        let ftest = images::celeba_like(24, h, w, 6);
+        let finp = mixf.inpaint(&ftest.data, &emask, 24, DecodeMode::Argmax, &mut rng);
+        let (figrid, gh, gw) = tile_images(&finp, 24, h, w, 3, 6);
+        write_ppm(&out_dir.join("celeba_inpainted.ppm"), &figrid, gh, gw)?;
+        println!("wrote celeba_samples.ppm, celeba_inpainted.ppm");
+    }
+    Ok(())
+}

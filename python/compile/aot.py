@@ -1,0 +1,186 @@
+"""AOT compilation: lower EiNet entry points to HLO *text* artifacts.
+
+Emits, per configuration:
+  artifacts/<name>.fwd.hlo.txt    logp(params..., x, mask)          -> (logp,)
+  artifacts/<name>.train.hlo.txt  logp + EM expected statistics     -> (logp, grads...)
+  artifacts/<name>.meta.json      IO contract the rust runtime reads
+
+HLO text — NOT serialized HloModuleProto — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the text
+parser reassigns ids and round-trips cleanly.  See /opt/xla-example/.
+
+Python runs only here, at build time.  The rust binary owns the parameters,
+feeds them as executable inputs, and performs the EM M-step — so no
+re-lowering ever happens during training.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .hlo_proto_fix import renumber_hlo_module_proto
+from .model import FAMILIES, EiNet
+from .structure import layerize, poon_domingos, random_binary_trees
+
+# ---------------------------------------------------------------------------
+# Configurations compiled by `make artifacts`
+# ---------------------------------------------------------------------------
+CONFIGS = {
+    # tiny config exercised by pytest and rust integration tests
+    "quick_d4": dict(
+        structure="rat", num_vars=4, depth=2, replica=2, k=4, seed=7,
+        family="bernoulli", family_cfg={}, batch=8,
+    ),
+    # binary density estimation (Table-1-like workloads)
+    "rat_bin_d16": dict(
+        structure="rat", num_vars=16, depth=3, replica=4, k=8, seed=1,
+        family="bernoulli", family_cfg={}, batch=64,
+    ),
+    # image modeling with the PD structure (Fig-4-like workloads);
+    # 8x8 grayscale, vertical+horizontal splits with delta=2
+    "pd_img_8x8": dict(
+        structure="pd", height=8, width=8, delta=2, axes="hv", k=8,
+        family="gaussian", family_cfg={"channels": 1}, batch=32,
+    ),
+}
+
+
+def build_net(cfg):
+    if cfg["structure"] == "rat":
+        g = random_binary_trees(cfg["num_vars"], cfg["depth"],
+                                cfg["replica"], cfg["seed"])
+    elif cfg["structure"] == "pd":
+        g = poon_domingos(cfg["height"], cfg["width"], cfg["delta"],
+                          cfg["axes"])
+    else:
+        raise ValueError(cfg["structure"])
+    plan = layerize(g, cfg["k"])
+    family = FAMILIES[cfg["family"]](cfg["family_cfg"])
+    return EiNet(plan, family)
+
+
+def param_descriptors(net, specs):
+    """Describe each parameter tensor for the rust runtime: name, shape,
+    kind, and (for mixing layers) the per-row real-child counts needed by
+    the M-step's padding-aware renormalization."""
+    out = []
+    for name, shape in specs:
+        desc = {"name": name, "shape": list(shape)}
+        if name == "theta":
+            desc["kind"] = "theta"
+        elif name == "shift":
+            desc["kind"] = "shift"
+        elif name.startswith("mix"):
+            desc["kind"] = "mix"
+            level = int(name[3:])
+            desc["child_counts"] = [
+                len(ch) for ch in net.plan.levels[level].mixing.child_slots
+            ]
+        else:
+            desc["kind"] = "w"
+        out.append(desc)
+    return out
+
+
+def to_xla_computation(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    return xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+
+
+def lower_config(name, cfg, out_dir):
+    net = build_net(cfg)
+    specs = net.param_specs()
+    pnames = [n for n, _ in specs]
+    batch = cfg["batch"]
+    d, od = net.num_vars, net.family.obs_dim
+
+    def fwd(*args):
+        params = dict(zip(pnames, args[:len(pnames)]))
+        x, mask = args[len(pnames)], args[len(pnames) + 1]
+        return (net.forward(params, x, mask),)
+
+    def train(*args):
+        params = dict(zip(pnames, args[:len(pnames)]))
+        x, mask = args[len(pnames)], args[len(pnames) + 1]
+        logp, grads = net.forward_and_stats(params, x, mask)
+        return (logp,) + tuple(grads[n] for n in pnames)
+
+    arg_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    arg_specs.append(jax.ShapeDtypeStruct((batch, d, od), jnp.float32))
+    arg_specs.append(jax.ShapeDtypeStruct((d,), jnp.float32))
+
+    paths = {}
+    for tag, fn in (("fwd", fwd), ("train", train)):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        comp = to_xla_computation(lowered)
+        # keep HLO text for humans / debugging ...
+        txt_path = os.path.join(out_dir, f"{name}.{tag}.hlo.txt")
+        with open(txt_path, "w") as f:
+            f.write(comp.as_hlo_text())
+        # ... but the rust runtime consumes BINARY protos with renumbered
+        # ids, taken straight from the XlaComputation. NEVER round-trip
+        # through hlo_module_from_text here: the HLO text parser (both in
+        # xla_extension 0.5.1 and in current jaxlib) keeps process-global
+        # state and silently corrupts the second-or-later large module
+        # parsed in one process. See hlo_proto_fix.py.
+        fixed = renumber_hlo_module_proto(
+            comp.as_serialized_hlo_module_proto())
+        pb_path = os.path.join(out_dir, f"{name}.{tag}.pb")
+        with open(pb_path, "wb") as f:
+            f.write(fixed)
+        paths[tag] = os.path.basename(pb_path)
+        print(f"  {pb_path}: {len(fixed)} bytes pb")
+
+    meta = {
+        "name": name,
+        "config": {k: v for k, v in cfg.items()},
+        "family": cfg["family"],
+        "family_cfg": cfg["family_cfg"],
+        "num_vars": d,
+        "obs_dim": od,
+        "stat_dim": net.family.stat_dim,
+        "k": net.k,
+        "replica": net.num_replica,
+        "batch": batch,
+        "params": param_descriptors(net, specs),
+        "inputs": pnames + ["x", "mask"],
+        "outputs_fwd": ["logp"],
+        "outputs_train": ["logp"] + [f"grad_{n}" for n in pnames],
+        "files": paths,
+        "num_levels": len(net.plan.levels),
+        "num_sums": net.plan.num_sums,
+        "num_leaves": net.num_leaves,
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated config names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only.split(",") if args.only else list(CONFIGS)
+    for name in names:
+        print(f"[aot] lowering {name} ...")
+        lower_config(name, CONFIGS[name], args.out_dir)
+    # manifest for artifact discovery on the rust side
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"configs": names}, f)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Renumber HLO proto ids so xla_extension 0.5.1 accepts binary protos.
+
+Why this exists (see DESIGN.md §6 and the README gotchas):
+
+* jax >= 0.5 / modern XLA assign 64-bit unique ids to HLO instructions and
+  computations (module_id << 32 | local_id). xla_extension 0.5.1 —the
+  version behind the published `xla` 0.1.6 crate — RET_CHECKs
+  `proto.id() <= INT_MAX` and rejects them.
+* The workaround of exchanging HLO *text* (whose parser reassigns small
+  ids) turned out to be unsound: the 0.5.1 text parser keeps process-global
+  state and silently corrupts the second large module parsed in a process
+  (observed as the marginalization mask being constant-folded away).
+* Binary protobuf parsing, by contrast, is stateless. So we renumber the
+  ids *here*, at build time, operating directly on the protobuf wire
+  format (no hlo_pb2 schema is shipped with jaxlib), and emit `.pb`
+  artifacts the rust runtime loads with `HloModuleProto::parse_proto`.
+
+Field numbers (stable in xla/service/hlo.proto across the relevant
+versions):
+
+  HloModuleProto:      name=1, entry_computation_name=2, computations=3,
+                       host_program_shape=4, id=5, entry_computation_id=6
+  HloComputationProto: name=1, instructions=2, program_shape=4, id=5,
+                       root_id=6
+  HloInstructionProto: id=35, operand_ids=36, control_predecessor_ids=37,
+                       called_computation_ids=38
+
+Instruction ids and computation ids live in separate spaces; each is
+remapped densely from 0 within the module.
+"""
+
+from __future__ import annotations
+
+
+def _read_varint(buf: bytes, i: int) -> tuple[int, int]:
+    shift = 0
+    val = 0
+    while True:
+        b = buf[i]
+        val |= (b & 0x7F) << shift
+        i += 1
+        if not b & 0x80:
+            return val, i
+        shift += 7
+
+
+def _write_varint(val: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = val & 0x7F
+        val >>= 7
+        if val:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def _fields(buf: bytes):
+    """Yield (field_no, wire_type, payload, raw_bytes) for a message."""
+    i = 0
+    n = len(buf)
+    while i < n:
+        tag, j = _read_varint(buf, i)
+        field_no = tag >> 3
+        wire = tag & 7
+        if wire == 0:  # varint
+            val, k = _read_varint(buf, j)
+            yield field_no, wire, val, buf[i:k]
+            i = k
+        elif wire == 1:  # fixed64
+            yield field_no, wire, buf[j:j + 8], buf[i:j + 8]
+            i = j + 8
+        elif wire == 2:  # length-delimited
+            ln, k = _read_varint(buf, j)
+            yield field_no, wire, buf[k:k + ln], buf[i:k + ln]
+            i = k + ln
+        elif wire == 5:  # fixed32
+            yield field_no, wire, buf[j:j + 4], buf[i:j + 4]
+            i = j + 4
+        else:
+            raise ValueError(f"unsupported wire type {wire}")
+
+
+def _emit(field_no: int, wire: int, payload) -> bytes:
+    tag = _write_varint((field_no << 3) | wire)
+    if wire == 0:
+        return tag + _write_varint(payload)
+    if wire == 2:
+        return tag + _write_varint(len(payload)) + payload
+    return tag + payload
+
+
+def _packed_varints(payload: bytes):
+    i = 0
+    while i < len(payload):
+        v, i = _read_varint(payload, i)
+        yield v
+
+
+def _collect_ids(module: bytes) -> tuple[dict, dict]:
+    # proto3 omits zero-valued fields: an instruction/computation with
+    # id == 0 serializes no id field at all, but references to it still
+    # appear — seed both maps with the identity for 0.
+    instr_map: dict[int, int] = {0: 0}
+    comp_map: dict[int, int] = {0: 0}
+    for fno, wire, payload, _ in _fields(module):
+        if fno == 3 and wire == 2:  # computation
+            for cf, cw, cp, _ in _fields(payload):
+                if cf == 5 and cw == 0 and cp not in comp_map:
+                    comp_map[cp] = len(comp_map)
+                elif cf == 2 and cw == 2:  # instruction
+                    for inf, inw, inp, _ in _fields(cp):
+                        if inf == 35 and inw == 0 and inp not in instr_map:
+                            instr_map[inp] = len(instr_map)
+    return instr_map, comp_map
+
+
+def _rewrite_instruction(buf: bytes, instr_map: dict, comp_map: dict) -> bytes:
+    out = bytearray()
+    for fno, wire, payload, raw in _fields(buf):
+        if fno == 35 and wire == 0:
+            out += _emit(35, 0, instr_map[payload])
+        elif fno in (36, 37) and wire == 0:
+            out += _emit(fno, 0, instr_map[payload])
+        elif fno in (36, 37) and wire == 2:  # packed
+            packed = b"".join(
+                _write_varint(instr_map[v]) for v in _packed_varints(payload)
+            )
+            out += _emit(fno, 2, packed)
+        elif fno == 38 and wire == 0:
+            out += _emit(38, 0, comp_map[payload])
+        elif fno == 38 and wire == 2:
+            packed = b"".join(
+                _write_varint(comp_map[v]) for v in _packed_varints(payload)
+            )
+            out += _emit(fno, 2, packed)
+        else:
+            out += raw
+    return bytes(out)
+
+
+def _rewrite_computation(buf: bytes, instr_map: dict, comp_map: dict) -> bytes:
+    out = bytearray()
+    for fno, wire, payload, raw in _fields(buf):
+        if fno == 2 and wire == 2:
+            out += _emit(2, 2, _rewrite_instruction(payload, instr_map, comp_map))
+        elif fno == 5 and wire == 0:
+            out += _emit(5, 0, comp_map[payload])
+        elif fno == 6 and wire == 0:
+            out += _emit(6, 0, instr_map[payload])
+        else:
+            out += raw
+    return bytes(out)
+
+
+def renumber_hlo_module_proto(module: bytes) -> bytes:
+    """Return the module proto with instruction/computation ids remapped
+    densely from 0 (all < 2^31), preserving everything else."""
+    instr_map, comp_map = _collect_ids(module)
+    out = bytearray()
+    for fno, wire, payload, raw in _fields(module):
+        if fno == 3 and wire == 2:
+            out += _emit(3, 2, _rewrite_computation(payload, instr_map, comp_map))
+        elif fno == 5 and wire == 0:
+            out += _emit(5, 0, 0)  # module id: single module per file
+        elif fno == 6 and wire == 0:
+            out += _emit(6, 0, comp_map[payload])
+        else:
+            out += raw
+    return bytes(out)

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot (einsum + mixing
+# layers with the log-einsum-exp trick), plus the pure-jnp oracle (ref.py).
+from .logeinsumexp import log_einsum_layer
+from .mixing import mixing_layer
+
+__all__ = ["log_einsum_layer", "mixing_layer"]

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: the EiNet einsum layer with the log-einsum-exp trick.
+
+This is the paper's core computational unit (Section 3.2/3.3, Eq. 4/5):
+
+    S_blk = sum_ij  W_lkij * exp(logN_bli) * exp(logN'_blj)
+
+computed stably by subtracting the per-(b, l) maxima of logN / logN' before
+exponentiation.  All probabilistic values stay in the log-domain; the weight
+tensor stays linear; product nodes are never materialized in HBM (here: the
+outer product lives only in the kernel's VMEM scratch).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over the
+layer axis `l`; each grid step holds one [B, K] tile of each child plus one
+[Ko, K, K] weight slice in VMEM and performs the contraction on the MXU as a
+(B, K²) x (K², Ko) matmul after forming the scaled outer product on the VPU.
+Interpret mode (mandatory on CPU PJRT) executes the same schedule with numpy.
+
+``pallas_call`` has no automatic reverse-mode rule, so the backward pass is a
+second Pallas kernel wired up through ``jax.custom_vjp``.  The backward
+quantities (with t_blk = g_blk * exp(a + a' - logS_blk), which is bounded by
+1/min_k s_blk and finite whenever all weights are positive):
+
+    gW_lkij  = sum_b t_blk * en_bli * enp_blj
+    gN_bli   = en_bli  * sum_k t_blk * (sum_j W_lkij * enp_blj)
+    gN'_blj  = enp_blj * sum_k t_blk * (sum_i W_lkij * en_bli)
+
+where en = exp(logN - a), enp = exp(logN' - a').
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(logn_ref, lognp_ref, w_ref, out_ref):
+    """One grid step: the full batch for a single layer-node l."""
+    logn = logn_ref[:, 0, :]      # [B, K]
+    lognp = lognp_ref[:, 0, :]    # [B, K]
+    w = w_ref[0]                  # [Ko, K, K]
+    a = jnp.max(logn, axis=-1, keepdims=True)     # [B, 1]
+    ap = jnp.max(lognp, axis=-1, keepdims=True)   # [B, 1]
+    en = jnp.exp(logn - a)
+    enp = jnp.exp(lognp - ap)
+    # outer product lives only in kernel scratch; contraction hits the MXU
+    # as (B, K*K) @ (K*K, Ko) when lowered for TPU.
+    s = jnp.einsum("bi,bj,kij->bk", en, enp, w)
+    out_ref[:, 0, :] = a + ap + jnp.log(s)
+
+
+def _bwd_kernel(logn_ref, lognp_ref, w_ref, logs_ref, g_ref,
+                gn_ref, gnp_ref, gw_ref):
+    logn = logn_ref[:, 0, :]
+    lognp = lognp_ref[:, 0, :]
+    w = w_ref[0]                  # [Ko, K, K]
+    logs = logs_ref[:, 0, :]      # [B, Ko]
+    g = g_ref[:, 0, :]            # [B, Ko]
+    a = jnp.max(logn, axis=-1, keepdims=True)
+    ap = jnp.max(lognp, axis=-1, keepdims=True)
+    en = jnp.exp(logn - a)
+    enp = jnp.exp(lognp - ap)
+    # t = g / s where s is the scaled linear sum (logS = a + a' + log s)
+    t = g * jnp.exp(a + ap - logs)                  # [B, Ko]
+    gw_ref[0] = jnp.einsum("bk,bi,bj->kij", t, en, enp)
+    gn_ref[:, 0, :] = en * jnp.einsum("bk,kij,bj->bi", t, w, enp)
+    gnp_ref[:, 0, :] = enp * jnp.einsum("bk,kij,bi->bj", t, w, en)
+
+
+def _fwd_call(logn, lognp, w, *, interpret):
+    b, l, k = logn.shape
+    ko = w.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, ko, k, k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, ko), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, ko), logn.dtype),
+        interpret=interpret,
+    )(logn, lognp, w)
+
+
+def _bwd_call(logn, lognp, w, logs, g, *, interpret):
+    b, l, k = logn.shape
+    ko = w.shape[1]
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, ko, k, k), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((b, 1, ko), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, ko), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, ko, k, k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, k), logn.dtype),
+            jax.ShapeDtypeStruct((b, l, k), logn.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        ],
+        interpret=interpret,
+    )(logn, lognp, w, logs, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def log_einsum_layer(logn, lognp, w, interpret=True):
+    """EiNet einsum layer (Eq. 5), numerically stable, Pallas-backed.
+
+    Args:
+      logn:  [B, L, K]  left-child log-densities.
+      lognp: [B, L, K]  right-child log-densities.
+      w:     [L, Ko, K, K] linear sum-weights, normalized over (i, j),
+             strictly positive (the paper's stability condition).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      [B, L, Ko] log-densities of the vectorized sum nodes.
+    """
+    return _fwd_call(logn, lognp, w, interpret=interpret)
+
+
+def _vjp_fwd(logn, lognp, w, interpret):
+    logs = _fwd_call(logn, lognp, w, interpret=interpret)
+    return logs, (logn, lognp, w, logs)
+
+
+def _vjp_bwd(interpret, res, g):
+    logn, lognp, w, logs = res
+    gn, gnp, gw = _bwd_call(logn, lognp, w, logs, g, interpret=interpret)
+    return gn, gnp, gw
+
+
+log_einsum_layer.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: the EiNet mixing layer (Appendix B).
+
+Sum nodes with C > 1 product children are over-parameterized into a chain of
+(einsum layer -> element-wise mixture).  The mixture is
+
+    S_bmk = sum_c  w_mc * exp(logC_bmck)
+
+over a zero-padded [B, M, C, K] tensor of child log-densities, where padded
+slots carry w_mc == 0 (their logC values, conventionally a large negative
+number, are never exponentiated into anything that matters because the max
+is taken over real children only when at least one weight is positive —
+guaranteed since every mixing node has >= 2 real children).
+
+Same custom_vjp treatment as logeinsumexp.py; backward quantities with
+t_bmk = g_bmk * exp(a_bmk - logS_bmk):
+
+    gW_mc    = sum_bk t_bmk * e_bmck
+    gC_bmck  = w_mc * t_bmk * e_bmck
+
+where e = exp(logC - a), a = max_c logC.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(logc_ref, w_ref, out_ref):
+    logc = logc_ref[:, 0, :, :]   # [B, C, K]
+    w = w_ref[0]                  # [C]
+    a = jnp.max(logc, axis=1, keepdims=True)   # [B, 1, K]
+    e = jnp.exp(logc - a)                      # [B, C, K]
+    s = jnp.einsum("bck,c->bk", e, w)
+    out_ref[:, 0, :] = a[:, 0, :] + jnp.log(s)
+
+
+def _bwd_kernel(logc_ref, w_ref, logs_ref, g_ref, gc_ref, gw_ref):
+    logc = logc_ref[:, 0, :, :]   # [B, C, K]
+    w = w_ref[0]                  # [C]
+    logs = logs_ref[:, 0, :]      # [B, K]
+    g = g_ref[:, 0, :]            # [B, K]
+    a = jnp.max(logc, axis=1, keepdims=True)
+    e = jnp.exp(logc - a)
+    t = g * jnp.exp(a[:, 0, :] - logs)          # [B, K]
+    gw_ref[0] = jnp.einsum("bk,bck->c", t, e)
+    gc_ref[:, 0, :, :] = w[None, :, None] * t[:, None, :] * e
+
+
+def _fwd_call(logc, w, *, interpret):
+    b, m, c, k = logc.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((b, 1, c, k), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, k), logc.dtype),
+        interpret=interpret,
+    )(logc, w)
+
+
+def _bwd_call(logc, w, logs, g, *, interpret):
+    b, m, c, k = logc.shape
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((b, 1, c, k), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1, c, k), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(logc.shape, logc.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        ],
+        interpret=interpret,
+    )(logc, w, logs, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def mixing_layer(logc, w, interpret=True):
+    """EiNet mixing layer (Appendix B), numerically stable, Pallas-backed.
+
+    Args:
+      logc: [B, M, C, K] padded child log-densities.
+      w:    [M, C] linear mixing weights, normalized over C, exactly 0 on
+            padded slots.
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      [B, M, K] mixed log-densities.
+    """
+    return _fwd_call(logc, w, interpret=interpret)
+
+
+def _vjp_fwd(logc, w, interpret):
+    logs = _fwd_call(logc, w, interpret=interpret)
+    return logs, (logc, w, logs)
+
+
+def _vjp_bwd(interpret, res, g):
+    logc, w, logs = res
+    gc, gw = _bwd_call(logc, w, logs, g, interpret=interpret)
+    return gc, gw
+
+
+mixing_layer.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the EiNet layer operations.
+
+These are the ground truth the Pallas kernels (logeinsumexp.py, mixing.py)
+are validated against in python/tests/.  They implement Eq. (4)/(5) of the
+paper (the log-einsum-exp trick over a whole einsum layer) and the mixing
+layer of Appendix B, in straightforward jax.numpy.
+
+Shapes
+------
+log_einsum_layer_ref:
+    logn  : [B, L, K]   log-densities of the "left" product children
+    lognp : [B, L, K]   log-densities of the "right" product children
+    w     : [L, Ko, K, K]  linear-domain weights, normalized over (i, j)
+    ->      [B, L, Ko]  log-densities of the L vectorized sum nodes
+
+mixing_layer_ref:
+    logc  : [B, M, C, K]  log-densities of the (padded) children
+    w     : [M, C]        linear-domain mixing weights, normalized over C,
+                          exactly 0.0 on padded child slots
+    ->      [B, M, K]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def log_einsum_layer_ref(logn, lognp, w):
+    """Eq. (5) with the log-einsum-exp trick of Eq. (4), pure jnp."""
+    # max-subtraction per (batch, layer-node) pair
+    a = jnp.max(logn, axis=-1, keepdims=True)    # [B, L, 1]
+    ap = jnp.max(lognp, axis=-1, keepdims=True)  # [B, L, 1]
+    en = jnp.exp(logn - a)                        # [B, L, K], max entry == 1
+    enp = jnp.exp(lognp - ap)                     # [B, L, K]
+    # S_blk = sum_ij W_lkij N_bli N'_blj
+    s = jnp.einsum("bli,blj,lkij->blk", en, enp, w)
+    return a + ap + jnp.log(s)
+
+
+def log_einsum_layer_naive(logn, lognp, w):
+    """Eq. (5) WITHOUT max-subtraction — the numerically unstable variant
+    used by the stability ablation (A1)."""
+    s = jnp.einsum("bli,blj,lkij->blk", jnp.exp(logn), jnp.exp(lognp), w)
+    return jnp.log(s)
+
+
+def log_einsum_layer_sparse_style(logn, lognp, w):
+    """The LibSPN/SPFlow-style computation of the same quantity: explicit
+    outer-sum product materialization + broadcasted log-sum-exp.
+
+    Computes identical values (up to float error); exists so python tests can
+    assert the two layouts agree, mirroring the rust sparse engine."""
+    # explicit product nodes: [B, L, K, K] log-domain outer sum
+    logp = logn[..., :, None] + lognp[..., None, :]
+    # log-sum-exp against log-weights: [B, L, Ko]
+    logw = jnp.log(w)  # [L, Ko, K, K]
+    z = logw[None] + logp[:, :, None, :, :]  # [B, L, Ko, K, K]
+    zmax = jnp.max(z, axis=(-1, -2), keepdims=True)
+    out = zmax[..., 0, 0] + jnp.log(
+        jnp.sum(jnp.exp(z - zmax), axis=(-1, -2))
+    )
+    return out
+
+
+def mixing_layer_ref(logc, w):
+    """Appendix B mixing layer: element-wise convex combinations.
+
+    Padded child slots must carry w == 0; their logc values are ignored
+    (conventionally filled with a large negative number)."""
+    a = jnp.max(logc, axis=2, keepdims=True)  # [B, M, 1, K]
+    e = jnp.exp(logc - a)                     # [B, M, C, K]
+    s = jnp.einsum("bmck,mc->bmk", e, w)
+    return a[:, :, 0, :] + jnp.log(s)

@@ -1,0 +1,263 @@
+"""L2: the EiNet model — jax forward/backward over a layered plan.
+
+The forward pass evaluates a smooth + decomposable PC bottom-up:
+
+  1. exponential-family input layer: a [B, D, K, R] tensor E of per-variable
+     log-densities (Section 3.4), parameterized by *natural* parameters so
+     that EM's expected statistics pop out of jax.grad (Section 3.5);
+  2. leaf regions: factorizations over E (segment-sums over scopes);
+  3. alternating einsum layers (Pallas kernel, Eq. 5) and mixing layers
+     (Pallas kernel, Appendix B) following the LayeredPlan;
+  4. the root sum yields log P(x) per sample.
+
+Marginalization (Eq. 1's integrals) is a per-variable 0/1 mask that zeroes
+the corresponding E rows — decomposability then guarantees the feedforward
+pass computes the exact marginal.
+
+EM statistics via autodiff (the paper's algorithmic contribution):
+  d log P / d W      (linear-domain sum weights)  = n_{S,N} of Eq. 6
+  d log P / d shift  (zero-valued offset on E)    = p_L    of Eq. 6
+  d log P / d theta  (natural leaf params)        = p_L * (T(x) - phi)
+so a single jax.vjp call yields everything the M-step (Eq. 7-9) needs; the
+M-step itself lives in rust (rust/src/em/).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import log_einsum_layer, mixing_layer
+from .kernels import ref as kref
+from .structure import LayeredPlan
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Exponential families (natural parameterization)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Bernoulli:
+    """Bernoulli over a binary variable: T(x)=x, A(t)=log(1+e^t)."""
+    name: str = "bernoulli"
+    obs_dim: int = 1
+    stat_dim: int = 1
+
+    def log_prob(self, theta, x):
+        """theta: [D,K,R,1]; x: [B,D,1] -> [B,D,K,R]."""
+        t = theta[..., 0]                                   # [D,K,R]
+        a = jnp.logaddexp(0.0, t)                           # log(1+e^t)
+        return x[:, :, None, None, 0] * t[None] - a[None]
+
+    def init_theta(self, key, d, k, r):
+        p = jax.random.uniform(key, (d, k, r, 1), minval=0.2, maxval=0.8)
+        return jnp.log(p) - jnp.log1p(-p)
+
+
+@dataclass(frozen=True)
+class Gaussian:
+    """Diagonal Gaussian over ``channels`` observation channels per variable.
+
+    Natural params per channel: t1 = mu/var, t2 = -1/(2 var);
+    T(x) = (x, x^2); A = sum_ch -t1^2/(4 t2) - log(-2 t2)/2.
+    """
+    channels: int = 1
+    name: str = "gaussian"
+
+    @property
+    def obs_dim(self):
+        return self.channels
+
+    @property
+    def stat_dim(self):
+        return 2 * self.channels
+
+    def log_prob(self, theta, x):
+        """theta: [D,K,R,2*CH]; x: [B,D,CH] -> [B,D,K,R]."""
+        ch = self.channels
+        t1 = theta[..., :ch]                                # [D,K,R,CH]
+        t2 = theta[..., ch:]                                # [D,K,R,CH]
+        a = -t1 * t1 / (4.0 * t2) - 0.5 * jnp.log(-2.0 * t2)
+        xb = x[:, :, None, None, :]                         # [B,D,1,1,CH]
+        lp = (xb * t1[None] + xb * xb * t2[None]
+              - a[None] - 0.5 * math.log(2.0 * math.pi))
+        return jnp.sum(lp, axis=-1)
+
+    def init_theta(self, key, d, k, r):
+        ch = self.channels
+        kmu, _ = jax.random.split(key)
+        mu = 0.5 + 0.15 * jax.random.normal(kmu, (d, k, r, ch))
+        var = jnp.full((d, k, r, ch), 0.05)
+        return jnp.concatenate([mu / var, -0.5 / var], axis=-1)
+
+
+@dataclass(frozen=True)
+class Categorical:
+    """Categorical over ``num_cats`` values: theta = logits, T(x) = one-hot."""
+    num_cats: int = 2
+    name: str = "categorical"
+    obs_dim: int = 1
+
+    @property
+    def stat_dim(self):
+        return self.num_cats
+
+    def log_prob(self, theta, x):
+        """theta: [D,K,R,V]; x: [B,D,1] integer-valued -> [B,D,K,R]."""
+        logz = jax.nn.logsumexp(theta, axis=-1)             # [D,K,R]
+        onehot = jax.nn.one_hot(x[..., 0].astype(jnp.int32), self.num_cats)
+        lp = jnp.einsum("bdv,dkrv->bdkr", onehot, theta)
+        return lp - logz[None]
+
+    def init_theta(self, key, d, k, r):
+        return 0.1 * jax.random.normal(key, (d, k, r, self.num_cats))
+
+
+FAMILIES = {
+    "bernoulli": lambda cfg: Bernoulli(),
+    "gaussian": lambda cfg: Gaussian(channels=cfg.get("channels", 1)),
+    "categorical": lambda cfg: Categorical(num_cats=cfg.get("num_cats", 2)),
+}
+
+
+# ---------------------------------------------------------------------------
+# The EiNet
+# ---------------------------------------------------------------------------
+
+class EiNet:
+    """A layered EiNet over a ``LayeredPlan``.
+
+    Parameters (a flat dict, the artifact IO contract — see aot.py):
+      theta          [D, K, R, S]    natural leaf parameters
+      shift          [D, K, R]       zero offset on E (its grad is p_L)
+      w{i}           [L_i, Ko_i, K, K]  per-level einsum weights (linear)
+      mix{i}         [M_i, C_i]      per-level mixing weights (linear)
+    """
+
+    def __init__(self, plan: LayeredPlan, family, use_pallas=True):
+        self.plan = plan
+        self.family = family
+        self.use_pallas = use_pallas
+        self.k = plan.k
+        self.num_vars = plan.graph.num_vars
+        self.num_replica = plan.num_replica
+        self._build_leaf_index()
+
+    def _build_leaf_index(self):
+        """Flatten (leaf region, var) pairs for one segment-sum gather."""
+        var_idx, rep_idx, seg_idx = [], [], []
+        for seg, rid in enumerate(self.plan.leaf_region_ids):
+            r = self.plan.graph.regions[rid]
+            for v in sorted(r.scope):
+                var_idx.append(v)
+                rep_idx.append(r.replica)
+                seg_idx.append(seg)
+        self.leaf_var = np.array(var_idx, dtype=np.int32)
+        self.leaf_rep = np.array(rep_idx, dtype=np.int32)
+        self.leaf_seg = np.array(seg_idx, dtype=np.int32)
+        self.num_leaves = len(self.plan.leaf_region_ids)
+
+    # -- parameters -------------------------------------------------------
+    def param_specs(self):
+        """Deterministic (name, shape) list — the artifact IO contract."""
+        d, k, r = self.num_vars, self.k, self.num_replica
+        specs = [("theta", (d, k, r, self.family.stat_dim)),
+                 ("shift", (d, k, r))]
+        for i, lv in enumerate(self.plan.levels):
+            l = len(lv.einsum.partition_ids)
+            specs.append((f"w{i}", (l, lv.einsum.ko, k, k)))
+            if lv.mixing is not None:
+                m = len(lv.mixing.region_ids)
+                specs.append((f"mix{i}", (m, lv.mixing.cmax)))
+        return specs
+
+    def init_params(self, seed=0):
+        key = jax.random.PRNGKey(seed)
+        d, k, r = self.num_vars, self.k, self.num_replica
+        params = {}
+        key, sub = jax.random.split(key)
+        params["theta"] = self.family.init_theta(sub, d, k, r)
+        params["shift"] = jnp.zeros((d, k, r))
+        for i, lv in enumerate(self.plan.levels):
+            l = len(lv.einsum.partition_ids)
+            key, sub = jax.random.split(key)
+            w = jax.random.uniform(sub, (l, lv.einsum.ko, k, k),
+                                   minval=0.01, maxval=1.0)
+            params[f"w{i}"] = w / jnp.sum(w, axis=(2, 3), keepdims=True)
+            if lv.mixing is not None:
+                m = len(lv.mixing.region_ids)
+                key, sub = jax.random.split(key)
+                wm = jax.random.uniform(sub, (m, lv.mixing.cmax),
+                                        minval=0.01, maxval=1.0)
+                pad = np.zeros((m, lv.mixing.cmax), dtype=np.float32)
+                for j, ch in enumerate(lv.mixing.child_slots):
+                    pad[j, :len(ch)] = 1.0
+                wm = wm * pad
+                params[f"mix{i}"] = wm / jnp.sum(wm, axis=1, keepdims=True)
+        return params
+
+    # -- forward ----------------------------------------------------------
+    def leaf_log_densities(self, params, x, marg_mask):
+        """[B, NumLeaves, K] leaf-region log-densities."""
+        e = self.family.log_prob(params["theta"], x)        # [B,D,K,R]
+        e = e + params["shift"][None]
+        e = e * marg_mask[None, :, None, None]
+        # gather (var, replica) pairs then segment-sum into leaf regions
+        gathered = e[:, self.leaf_var, :, self.leaf_rep]    # [T,B,K]
+        seg = jax.ops.segment_sum(gathered, jnp.asarray(self.leaf_seg),
+                                  num_segments=self.num_leaves)
+        return jnp.transpose(seg, (1, 0, 2))                # [B,NL,K]
+
+    def forward(self, params, x, marg_mask):
+        """log P(x) under the marginalization mask -> [B]."""
+        leaf_lp = self.leaf_log_densities(params, x, marg_mask)
+        b = x.shape[0]
+        out = {}  # region id -> [B, K_region]
+        for seg, rid in enumerate(self.plan.leaf_region_ids):
+            out[rid] = leaf_lp[:, seg, :]
+        for i, lv in enumerate(self.plan.levels):
+            logn = jnp.stack([out[r] for r in lv.einsum.left], axis=1)
+            lognp = jnp.stack([out[r] for r in lv.einsum.right], axis=1)
+            if self.use_pallas:
+                es = log_einsum_layer(logn, lognp, params[f"w{i}"])
+            else:
+                es = kref.log_einsum_layer_ref(logn, lognp, params[f"w{i}"])
+            ms = None
+            if lv.mixing is not None:
+                m, cmax = len(lv.mixing.region_ids), lv.mixing.cmax
+                cols = []
+                for j, ch in enumerate(lv.mixing.child_slots):
+                    idx = list(ch) + [0] * (cmax - len(ch))
+                    cols.append(es[:, idx, :])
+                logc = jnp.stack(cols, axis=1)              # [B,M,C,K]
+                pad = np.full((m, cmax), NEG_INF, dtype=np.float32)
+                for j, ch in enumerate(lv.mixing.child_slots):
+                    pad[j, :len(ch)] = 0.0
+                logc = logc + pad[None, :, :, None]
+                if self.use_pallas:
+                    ms = mixing_layer(logc, params[f"mix{i}"])
+                else:
+                    ms = kref.mixing_layer_ref(logc, params[f"mix{i}"])
+            for rid, (kind, slot) in lv.region_out.items():
+                out[rid] = es[:, slot, :] if kind == "e" else ms[:, slot, :]
+        root = out[self.plan.graph.root_id]                 # [B, 1]
+        return root[:, 0]
+
+    # -- EM statistics ----------------------------------------------------
+    def forward_and_stats(self, params, x, marg_mask):
+        """Per-sample log-likelihoods + summed expected EM statistics.
+
+        Returns (logp [B], grads dict matching param_specs order): grads of
+        sum_b log P(x_b) w.r.t. every parameter tensor — exactly the E-step
+        accumulators of Eq. 6/7 (see module docstring).
+        """
+        logp, pullback = jax.vjp(
+            lambda p: self.forward(p, x, marg_mask), params)
+        grads = pullback(jnp.ones_like(logp))[0]
+        return logp, grads

@@ -1,0 +1,312 @@
+"""Region graphs and their layered execution plans (build-time mirror).
+
+The rust side (rust/src/structure/, rust/src/layers/) is the runtime source
+of truth for structures used by the pure-rust engines; this module generates
+the *same* structures for AOT artifact compilation, so that the HLO
+executables bake in the gather patterns while rust only supplies parameters.
+
+Two generators, matching the paper's experiments:
+
+* ``random_binary_trees`` — the RAT-SPN structure (Peharz et al., 2019):
+  R replica of randomized balanced binary scope splits down to depth D.
+* ``poon_domingos`` — the image-tailored PD structure (Poon & Domingos,
+  2011): recursive axis-aligned rectangle splits with step-size delta.
+
+A ``RegionGraph`` is compiled into a ``LayeredPlan`` by the topological
+layering of Appendix A (Algorithm 1), phrased over regions/partitions:
+every partition becomes one slot of an einsum layer, every region with >= 2
+partitions becomes one slot of a mixing layer.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Region:
+    """A scope (set of variables) in the region graph."""
+    id: int
+    scope: frozenset
+    partitions: list = field(default_factory=list)  # partition ids
+    replica: int = -1  # leaf regions only: EF replica index
+
+    @property
+    def is_leaf(self):
+        return not self.partitions
+
+
+@dataclass
+class Partition:
+    """A binary decomposition of a region into two disjoint child regions."""
+    id: int
+    left: int
+    right: int
+    out: int
+
+
+class RegionGraph:
+    """A vectorized, smooth and decomposable PC skeleton."""
+
+    def __init__(self, num_vars):
+        self.num_vars = num_vars
+        self.regions: list[Region] = []
+        self.partitions: list[Partition] = []
+        self._by_scope: dict[frozenset, int] = {}
+        self.root_id = self.get_region(frozenset(range(num_vars)))
+
+    def get_region(self, scope) -> int:
+        scope = frozenset(scope)
+        rid = self._by_scope.get(scope)
+        if rid is None:
+            rid = len(self.regions)
+            self.regions.append(Region(rid, scope))
+            self._by_scope[scope] = rid
+        return rid
+
+    def add_partition(self, out, left_scope, right_scope) -> int:
+        left_scope, right_scope = frozenset(left_scope), frozenset(right_scope)
+        assert left_scope and right_scope
+        assert not (left_scope & right_scope), "decomposability violated"
+        assert left_scope | right_scope == self.regions[out].scope, \
+            "smoothness violated"
+        lid = self.get_region(left_scope)
+        rid = self.get_region(right_scope)
+        pid = len(self.partitions)
+        self.partitions.append(Partition(pid, lid, rid, out))
+        self.regions[out].partitions.append(pid)
+        return pid
+
+    # -- structural invariants -------------------------------------------
+    def validate(self):
+        """Check smoothness + decomposability + acyclicity (depth-bounded)."""
+        for p in self.partitions:
+            ls = self.regions[p.left].scope
+            rs = self.regions[p.right].scope
+            assert not (ls & rs)
+            assert ls | rs == self.regions[p.out].scope
+        assert self.regions[self.root_id].scope == frozenset(
+            range(self.num_vars))
+        # every region reachable from root must bottom out at leaves
+        for r in self.regions:
+            assert r.is_leaf or all(
+                self.partitions[p].out == r.id for p in r.partitions)
+
+    def leaves(self):
+        return [r for r in self.regions if r.is_leaf]
+
+    def assign_replicas(self) -> int:
+        """Greedily assign replica indices so leaves sharing a replica have
+        pairwise disjoint scopes (Section 3.4).  Returns R."""
+        used: list[set] = []
+        for r in sorted(self.leaves(), key=lambda r: min(r.scope)):
+            for i, occ in enumerate(used):
+                if not (occ & r.scope):
+                    r.replica = i
+                    occ |= r.scope
+                    break
+            else:
+                r.replica = len(used)
+                used.append(set(r.scope))
+        return len(used)
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def random_binary_trees(num_vars, depth, replica, seed=0) -> RegionGraph:
+    """RAT-SPN structure: ``replica`` randomized balanced binary trees of
+    scope splits, each of the given ``depth``, mixed at the root."""
+    g = RegionGraph(num_vars)
+    rng = random.Random(seed)
+
+    def split(scope, d):
+        rid = g.get_region(scope)
+        if d <= 0 or len(scope) <= 1:
+            return rid
+        items = sorted(scope)
+        rng.shuffle(items)
+        half = len(items) // 2
+        ls, rs = frozenset(items[:half]), frozenset(items[half:])
+        g.add_partition(rid, ls, rs)
+        split(ls, d - 1)
+        split(rs, d - 1)
+        return rid
+
+    for _ in range(replica):
+        split(frozenset(range(num_vars)), depth)
+    return g
+
+
+def poon_domingos(height, width, delta, axes="hv") -> RegionGraph:
+    """Poon-Domingos structure over an ``height x width`` pixel grid.
+
+    Variables are pixel indices ``row * width + col`` (channels live inside
+    the leaf EF).  ``delta`` is the split step-size; candidate cuts fall at
+    multiples of delta strictly inside the rectangle.  ``axes`` selects
+    horizontal ("h", splits along rows) and/or vertical ("v", along columns)
+    cuts; the paper used only vertical splits for its image experiments.
+    """
+    g = RegionGraph(height * width)
+
+    def scope_of(r0, c0, r1, c1):
+        return frozenset(r * width + c
+                         for r in range(r0, r1) for c in range(c0, c1))
+
+    seen = set()
+
+    def rec(r0, c0, r1, c1):
+        key = (r0, c0, r1, c1)
+        if key in seen:
+            return
+        seen.add(key)
+        out = g.get_region(scope_of(r0, c0, r1, c1))
+        cuts = []
+        if "v" in axes:
+            c = c0 + delta
+            while c < c1:
+                cuts.append(("v", c))
+                c += delta
+        if "h" in axes:
+            r = r0 + delta
+            while r < r1:
+                cuts.append(("h", r))
+                r += delta
+        for axis, pos in cuts:
+            if axis == "v":
+                ls = scope_of(r0, c0, r1, pos)
+                rs = scope_of(r0, pos, r1, c1)
+            else:
+                ls = scope_of(r0, c0, pos, c1)
+                rs = scope_of(pos, c0, r1, c1)
+            g.add_partition(out, ls, rs)
+            if axis == "v":
+                rec(r0, c0, r1, pos)
+                rec(r0, pos, r1, c1)
+            else:
+                rec(r0, c0, pos, c1)
+                rec(pos, c0, r1, c1)
+
+    rec(0, 0, height, width)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Layered plan (Algorithm 1, phrased over regions/partitions)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EinsumLayerSpec:
+    """One einsum layer: L partitions computed by a single kernel call."""
+    partition_ids: list      # length L
+    left: list               # region ids, length L
+    right: list              # region ids, length L
+    ko: int                  # output vector length of every slot
+
+
+@dataclass
+class MixingLayerSpec:
+    """One mixing layer: M regions, each mixing C_m partition slots."""
+    region_ids: list         # length M
+    child_slots: list        # list of lists of einsum-layer slot indices
+    cmax: int
+
+
+@dataclass
+class LevelPlan:
+    einsum: EinsumLayerSpec
+    mixing: MixingLayerSpec | None
+    # region id -> ("e", slot) or ("m", slot): where its output lives
+    region_out: dict
+
+
+@dataclass
+class LayeredPlan:
+    graph: RegionGraph
+    k: int
+    num_replica: int
+    levels: list            # list of LevelPlan, bottom-up
+    leaf_region_ids: list   # evaluation order of leaf regions
+
+    @property
+    def num_sums(self):
+        """Total number of vectorized sum slots (einsum + mixing)."""
+        n = 0
+        for lv in self.levels:
+            n += len(lv.einsum.partition_ids)
+            if lv.mixing:
+                n += len(lv.mixing.region_ids)
+        return n
+
+
+def layerize(graph: RegionGraph, k: int) -> LayeredPlan:
+    """Compile a region graph into the layered plan of Appendix A.
+
+    Levels are assigned bottom-up: leaves are level 0; a region's level is
+    1 + the maximum level over all regions appearing in its partitions; the
+    root is bumped to a dedicated top level so its Ko=1 einsum layer never
+    shares a kernel call with Ko=K slots.
+    """
+    graph.validate()
+    num_replica = graph.assign_replicas()
+
+    level = {}
+
+    def region_level(rid):
+        if rid in level:
+            return level[rid]
+        r = graph.regions[rid]
+        if r.is_leaf:
+            level[rid] = 0
+        else:
+            level[rid] = 1 + max(
+                max(region_level(graph.partitions[p].left),
+                    region_level(graph.partitions[p].right))
+                for p in r.partitions)
+        return level[rid]
+
+    for r in graph.regions:
+        region_level(r.id)
+    top = max(level.values())
+    if level[graph.root_id] <= top and any(
+            lv == level[graph.root_id] and rid != graph.root_id
+            for rid, lv in level.items()):
+        level[graph.root_id] = top + 1
+
+    max_level = level[graph.root_id]
+    levels = []
+    for lv in range(1, max_level + 1):
+        rids = [r.id for r in graph.regions
+                if level[r.id] == lv and not r.is_leaf]
+        if not rids:
+            continue
+        part_ids, left, right = [], [], []
+        slot_of = {}
+        for rid in rids:
+            for pid in graph.regions[rid].partitions:
+                slot_of[pid] = len(part_ids)
+                part_ids.append(pid)
+                left.append(graph.partitions[pid].left)
+                right.append(graph.partitions[pid].right)
+        ko = 1 if (len(rids) == 1 and rids[0] == graph.root_id) else k
+        espec = EinsumLayerSpec(part_ids, left, right, ko)
+        region_out = {}
+        mix_rids, mix_children = [], []
+        for rid in rids:
+            parts = graph.regions[rid].partitions
+            if len(parts) == 1:
+                region_out[rid] = ("e", slot_of[parts[0]])
+            else:
+                region_out[rid] = ("m", len(mix_rids))
+                mix_rids.append(rid)
+                mix_children.append([slot_of[p] for p in parts])
+        mspec = None
+        if mix_rids:
+            cmax = max(len(c) for c in mix_children)
+            mspec = MixingLayerSpec(mix_rids, mix_children, cmax)
+        levels.append(LevelPlan(espec, mspec, region_out))
+
+    leaf_ids = [r.id for r in sorted(graph.leaves(), key=lambda r: r.id)]
+    return LayeredPlan(graph, k, num_replica, levels, leaf_ids)

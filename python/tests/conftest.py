@@ -1,0 +1,8 @@
+"""Shared pytest config: enable float64 once, for the whole suite.
+
+Individual test modules must NOT flip jax.config at import time — import
+order would make the setting race between modules.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

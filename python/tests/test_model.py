@@ -1,0 +1,189 @@
+"""L2 model semantics: normalization, marginalization, EM statistics."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import Bernoulli, Categorical, EiNet, Gaussian
+from compile.structure import layerize, poon_domingos, random_binary_trees
+
+def rat_net(nv=6, depth=2, rep=2, k=3, seed=0, family=None):
+    g = random_binary_trees(nv, depth, rep, seed)
+    plan = layerize(g, k)
+    return EiNet(plan, family or Bernoulli())
+
+
+class TestForward:
+    @given(seed=st.integers(0, 200), nv=st.integers(2, 8),
+           depth=st.integers(1, 3), rep=st.integers(1, 3),
+           k=st.integers(1, 4))
+    @settings(max_examples=15, deadline=None)
+    def test_bernoulli_normalizes(self, seed, nv, depth, rep, k):
+        """sum_x P(x) == 1 by brute-force enumeration — the defining
+        property of a smooth + decomposable PC with normalized weights."""
+        net = rat_net(nv, depth, rep, k, seed)
+        params = net.init_params(seed)
+        allx = jnp.asarray(
+            [list(t) for t in itertools.product([0.0, 1.0], repeat=nv)]
+        )[:, :, None]
+        lp = net.forward(params, allx, jnp.ones(nv))
+        total = jax.nn.logsumexp(lp)
+        np.testing.assert_allclose(np.exp(total), 1.0, atol=1e-4)
+
+    def test_pallas_and_ref_paths_agree(self):
+        g = poon_domingos(3, 4, 1, "hv")
+        plan = layerize(g, 3)
+        x = jnp.asarray(np.random.default_rng(0).random((4, 12, 1)),
+                        dtype=jnp.float32)
+        net_p = EiNet(plan, Gaussian(1), use_pallas=True)
+        net_r = EiNet(plan, Gaussian(1), use_pallas=False)
+        params = net_p.init_params(3)
+        np.testing.assert_allclose(
+            net_p.forward(params, x, jnp.ones(12)),
+            net_r.forward(params, x, jnp.ones(12)), rtol=2e-4, atol=2e-4)
+
+    def test_full_marginalization_is_zero(self):
+        net = rat_net()
+        params = net.init_params(1)
+        x = jnp.zeros((3, 6, 1))
+        lp = net.forward(params, x, jnp.zeros(6))
+        np.testing.assert_allclose(lp, 0.0, atol=1e-4)
+
+    def test_partial_marginal_equals_enumeration(self):
+        """Marginal over X_m computed by the mask equals the brute-force
+        sum over X_m's states (Eq. 1 numerator) — decomposability at work."""
+        nv = 5
+        net = rat_net(nv=nv, depth=2, rep=2, k=3, seed=2)
+        params = net.init_params(2)
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 2, (4, nv, 1)).astype(np.float32)
+        marg = [1, 3]  # marginalize X_1, X_3
+        mask = np.ones(nv, np.float32)
+        mask[marg] = 0.0
+        got = net.forward(jax.tree.map(jnp.asarray, params),
+                          jnp.asarray(x), jnp.asarray(mask))
+        # brute force: sum over the 4 completions
+        acc = np.full(4, -np.inf)
+        for v1, v3 in itertools.product([0.0, 1.0], repeat=2):
+            xc = x.copy()
+            xc[:, marg[0], 0] = v1
+            xc[:, marg[1], 0] = v3
+            lp = np.asarray(net.forward(params, jnp.asarray(xc),
+                                        jnp.ones(nv)))
+            acc = np.logaddexp(acc, lp)
+        np.testing.assert_allclose(got, acc, rtol=1e-4, atol=1e-4)
+
+    def test_gaussian_density_integrates(self):
+        """1-var Gaussian EiNet: compare against quadrature."""
+        g = random_binary_trees(2, 1, 1, 0)
+        plan = layerize(g, 2)
+        net = EiNet(plan, Gaussian(1))
+        params = net.init_params(5)
+        xs = np.linspace(-3, 4, 1500)
+        grid = np.stack(np.meshgrid(xs, xs), -1).reshape(-1, 2, 1)
+        lp = []
+        for chunk in np.array_split(grid, 30):
+            lp.append(np.asarray(net.forward(
+                params, jnp.asarray(chunk, dtype=jnp.float32),
+                jnp.ones(2))))
+        dx = xs[1] - xs[0]
+        total = np.exp(np.concatenate(lp)).sum() * dx * dx
+        np.testing.assert_allclose(total, 1.0, atol=5e-3)
+
+    def test_categorical_normalizes(self):
+        g = random_binary_trees(3, 2, 2, 1)
+        plan = layerize(g, 2)
+        net = EiNet(plan, Categorical(num_cats=3))
+        params = net.init_params(0)
+        allx = jnp.asarray([list(t) for t in
+                            itertools.product([0., 1., 2.], repeat=3)]
+                           )[:, :, None]
+        lp = net.forward(params, allx, jnp.ones(3))
+        np.testing.assert_allclose(np.exp(jax.nn.logsumexp(lp)), 1.0,
+                                   atol=1e-4)
+
+
+class TestEMStatistics:
+    def test_shift_grad_is_leaf_posterior(self):
+        """Per variable d: sum_{k,r} p_L == B (total posterior mass of the
+        latent mixture assignment at each leaf factor)."""
+        net = rat_net(nv=6, depth=2, rep=3, k=4, seed=3)
+        params = net.init_params(3)
+        b = 7
+        x = jnp.asarray(np.random.default_rng(1).integers(0, 2, (b, 6, 1)),
+                        dtype=jnp.float32)
+        _, grads = net.forward_and_stats(params, x, jnp.ones(6))
+        per_var = np.asarray(grads["shift"]).sum(axis=(1, 2))
+        np.testing.assert_allclose(per_var, b, rtol=1e-3)
+
+    def test_w_grad_matches_eq6(self):
+        """n_{S,N} = w * dlogP/dw identity: grads of logP wrt linear w,
+        multiplied by w and renormalized, must be a distribution."""
+        net = rat_net(nv=4, depth=2, rep=2, k=3, seed=4)
+        params = net.init_params(4)
+        x = jnp.asarray(np.random.default_rng(2).integers(0, 2, (5, 4, 1)),
+                        dtype=jnp.float32)
+        _, grads = net.forward_and_stats(params, x, jnp.ones(4))
+        for name in grads:
+            if not name.startswith("w"):
+                continue
+            n = np.asarray(params[name]) * np.asarray(grads[name])
+            upd = n / n.sum(axis=(2, 3), keepdims=True)
+            np.testing.assert_allclose(
+                upd.sum(axis=(2, 3)), 1.0, rtol=1e-4)
+            assert (upd >= -1e-7).all()
+
+    def test_em_step_increases_likelihood(self):
+        """One full-batch EM step (Eq. 7) must not decrease sum log P."""
+        net = rat_net(nv=6, depth=2, rep=2, k=3, seed=5)
+        params = net.init_params(5)
+        rng = np.random.default_rng(3)
+        # correlated data so there is something to learn
+        z = rng.integers(0, 2, (64, 1))
+        x = ((z + rng.random((64, 6)) * 0.4) > 0.5).astype(np.float32)
+        x = jnp.asarray(x[:, :, None])
+        mask = jnp.ones(6)
+
+        def em_step(params):
+            logp, grads = net.forward_and_stats(params, x, mask)
+            new = dict(params)
+            for name in params:
+                if name.startswith(("w", "mix")):
+                    n = params[name] * grads[name]
+                    axes = (2, 3) if name.startswith("w") else (1,)
+                    den = jnp.sum(n, axis=axes, keepdims=True)
+                    new[name] = jnp.where(den > 0, n / den, params[name])
+            # bernoulli leaf update: phi = sum p*T / sum p
+            p = grads["shift"]
+            theta = params["theta"][..., 0]
+            phi = jax.nn.sigmoid(theta)
+            sum_pt = grads["theta"][..., 0] + phi * p
+            new_phi = jnp.where(p > 1e-6,
+                                jnp.clip(sum_pt / jnp.maximum(p, 1e-6),
+                                         1e-4, 1 - 1e-4),
+                                phi)
+            new["theta"] = (jnp.log(new_phi)
+                            - jnp.log1p(-new_phi))[..., None]
+            return float(jnp.sum(logp)), new
+
+        ll0, params = em_step(params)
+        ll1, params = em_step(params)
+        ll2, _ = em_step(params)
+        assert ll1 >= ll0 - 1e-3
+        assert ll2 >= ll1 - 1e-3
+
+    def test_marginalized_vars_get_no_stats(self):
+        net = rat_net(nv=4, depth=2, rep=2, k=3, seed=6)
+        params = net.init_params(6)
+        x = jnp.asarray(np.random.default_rng(4).integers(0, 2, (3, 4, 1)),
+                        dtype=jnp.float32)
+        mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+        _, grads = net.forward_and_stats(params, x, mask)
+        np.testing.assert_allclose(np.asarray(grads["shift"])[1], 0.0,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(grads["theta"])[1], 0.0,
+                                   atol=1e-6)

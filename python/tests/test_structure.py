@@ -1,0 +1,121 @@
+"""Structure generators + layering invariants (Appendix A / Algorithm 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.structure import (layerize, poon_domingos, random_binary_trees)
+
+
+class TestRandomBinaryTrees:
+    @given(nv=st.integers(2, 24), depth=st.integers(1, 4),
+           rep=st.integers(1, 5), seed=st.integers(0, 100))
+    @settings(max_examples=30, deadline=None)
+    def test_invariants(self, nv, depth, rep, seed):
+        g = random_binary_trees(nv, depth, rep, seed)
+        g.validate()
+        root = g.regions[g.root_id]
+        assert root.scope == frozenset(range(nv))
+        assert len(root.partitions) == rep
+
+    def test_balanced_split(self):
+        g = random_binary_trees(16, 1, 1, 0)
+        p = g.partitions[0]
+        assert len(g.regions[p.left].scope) == 8
+        assert len(g.regions[p.right].scope) == 8
+
+    def test_depth_limits_leaf_size(self):
+        g = random_binary_trees(16, 4, 2, 3)
+        for leaf in g.leaves():
+            assert len(leaf.scope) == 1
+
+    def test_deterministic_by_seed(self):
+        a = random_binary_trees(12, 3, 2, 42)
+        b = random_binary_trees(12, 3, 2, 42)
+        assert [r.scope for r in a.regions] == [r.scope for r in b.regions]
+
+
+class TestPoonDomingos:
+    @given(h=st.integers(2, 6), w=st.integers(2, 6), d=st.integers(1, 3))
+    @settings(max_examples=20, deadline=None)
+    def test_invariants(self, h, w, d):
+        g = poon_domingos(h, w, d, "hv")
+        g.validate()
+        assert g.regions[g.root_id].scope == frozenset(range(h * w))
+
+    def test_vertical_only_gives_column_strips(self):
+        g = poon_domingos(4, 8, 2, "v")
+        # leaves are width-2 column strips (8/2 = 4 of them)
+        leaves = g.leaves()
+        assert len(leaves) == 4
+        for leaf in leaves:
+            cols = {v % 8 for v in leaf.scope}
+            assert len(cols) == 2
+
+    def test_region_count_grows_with_inverse_delta(self):
+        """Paper: number of sums is O(1/delta^3)."""
+        small = poon_domingos(8, 8, 4, "hv")
+        big = poon_domingos(8, 8, 2, "hv")
+        assert len(big.regions) > len(small.regions)
+
+    def test_multi_partition_regions_exist(self):
+        """PD structures exercise the mixing layer."""
+        g = poon_domingos(4, 8, 2, "hv")
+        assert any(len(r.partitions) > 1 for r in g.regions)
+
+
+class TestLayerize:
+    @given(nv=st.integers(2, 16), depth=st.integers(1, 3),
+           rep=st.integers(1, 4), k=st.integers(1, 6),
+           seed=st.integers(0, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_topological_order(self, nv, depth, rep, k, seed):
+        """Every einsum input region is produced strictly below its level —
+        Algorithm 1's defining property."""
+        g = random_binary_trees(nv, depth, rep, seed)
+        plan = layerize(g, k)
+        produced = set(plan.leaf_region_ids)
+        for lv in plan.levels:
+            for rid in lv.einsum.left + lv.einsum.right:
+                assert rid in produced
+            produced |= set(lv.region_out.keys())
+        assert g.root_id in produced
+
+    def test_replica_disjointness(self):
+        """Leaves sharing a replica index must have disjoint scopes."""
+        g = poon_domingos(4, 6, 2, "hv")
+        layerize(g, 3)
+        by_rep = {}
+        for leaf in g.leaves():
+            assert leaf.replica >= 0
+            occ = by_rep.setdefault(leaf.replica, set())
+            assert not (occ & leaf.scope)
+            occ |= leaf.scope
+
+    def test_root_is_alone_on_top_level_with_ko1(self):
+        g = poon_domingos(4, 4, 2, "hv")
+        plan = layerize(g, 5)
+        top = plan.levels[-1]
+        outs = {g.partitions[p].out for p in top.einsum.partition_ids}
+        assert outs == {g.root_id}
+        assert top.einsum.ko == 1
+
+    def test_mixing_slots_cover_multi_partition_regions(self):
+        g = poon_domingos(4, 6, 2, "hv")
+        plan = layerize(g, 3)
+        for lv in plan.levels:
+            for rid, (kind, slot) in lv.region_out.items():
+                nparts = len(g.regions[rid].partitions)
+                assert (kind == "m") == (nparts > 1)
+            if lv.mixing:
+                for ch in lv.mixing.child_slots:
+                    assert len(ch) >= 2
+                    assert len(ch) <= lv.mixing.cmax
+
+    def test_num_sums_counts_einsum_and_mixing(self):
+        g = random_binary_trees(8, 2, 3, 0)
+        plan = layerize(g, 4)
+        n_e = sum(len(lv.einsum.partition_ids) for lv in plan.levels)
+        n_m = sum(len(lv.mixing.region_ids)
+                  for lv in plan.levels if lv.mixing)
+        assert plan.num_sums == n_e + n_m

@@ -1,0 +1,136 @@
+//! Section 3.2 micro-benchmark: the basic einsum operation in isolation.
+//!
+//! The paper's op-count analysis: for one vectorized sum-product with
+//! children of length K,
+//!   dense  (Eq. 4): O(K^3) mul-adds, 2K exp, K log, NO product storage
+//!   sparse (LibSPN/SPFlow style): O(K^3) adds, K^3 exp, K log, K^2 stored
+//! This bench isolates exactly that unit over a K sweep to show where the
+//! crossover in exp-ops vs mul-adds lands on CPU.
+//!
+//!     cargo bench --bench einsum_op
+
+use einet::bench::{fmt_si, time_it, Table};
+use einet::util::rng::Rng;
+
+/// dense: log-einsum-exp (Eq. 4)
+fn dense_op(logn: &[f32], lognp: &[f32], w: &[f32], k: usize, out: &mut [f32]) {
+    let mut a = f32::NEG_INFINITY;
+    let mut ap = f32::NEG_INFINITY;
+    for i in 0..k {
+        a = a.max(logn[i]);
+        ap = ap.max(lognp[i]);
+    }
+    // en/enp in stack buffers
+    let mut en = vec![0.0f32; k];
+    let mut enp = vec![0.0f32; k];
+    for i in 0..k {
+        en[i] = (logn[i] - a).exp();
+        enp[i] = (lognp[i] - ap).exp();
+    }
+    for ko in 0..k {
+        let wrow = &w[ko * k * k..(ko + 1) * k * k];
+        let mut acc = 0.0f32;
+        for i in 0..k {
+            let eni = en[i];
+            let wr = &wrow[i * k..(i + 1) * k];
+            let mut dot = 0.0f32;
+            for j in 0..k {
+                dot += wr[j] * enp[j];
+            }
+            acc += eni * dot;
+        }
+        out[ko] = a + ap + acc.ln();
+    }
+}
+
+/// sparse: explicit outer-sum product + broadcast logw + K^2 logsumexp
+fn sparse_op(
+    logn: &[f32],
+    lognp: &[f32],
+    logw: &[f32],
+    k: usize,
+    prod: &mut [f32],
+    out: &mut [f32],
+) {
+    for i in 0..k {
+        for j in 0..k {
+            prod[i * k + j] = logn[i] + lognp[j];
+        }
+    }
+    for ko in 0..k {
+        let wrow = &logw[ko * k * k..(ko + 1) * k * k];
+        let mut m = f32::NEG_INFINITY;
+        for idx in 0..k * k {
+            m = m.max(wrow[idx] + prod[idx]);
+        }
+        let mut s = 0.0f32;
+        for idx in 0..k * k {
+            s += (wrow[idx] + prod[idx] - m).exp();
+        }
+        out[ko] = m + s.ln();
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("Section 3.2 — basic einsum op, dense (Eq. 4) vs sparse workaround");
+    let mut table = Table::new(&["K", "dense", "sparse", "speedup", "max |diff|"]);
+    for k in [2usize, 4, 8, 16, 32, 64] {
+        let logn: Vec<f32> = (0..k).map(|_| rng.normal() as f32 - 2.0).collect();
+        let lognp: Vec<f32> = (0..k).map(|_| rng.normal() as f32 - 2.0).collect();
+        let mut w: Vec<f32> = (0..k * k * k)
+            .map(|_| rng.uniform_in(0.01, 1.0) as f32)
+            .collect();
+        for block in w.chunks_mut(k * k) {
+            let total: f32 = block.iter().sum();
+            for v in block.iter_mut() {
+                *v /= total;
+            }
+        }
+        let logw: Vec<f32> = w.iter().map(|&v| v.ln()).collect();
+        let mut out_d = vec![0.0f32; k];
+        let mut out_s = vec![0.0f32; k];
+        let mut prod = vec![0.0f32; k * k];
+        let reps = 512.max(65536 / (k * k));
+        let md = time_it(
+            || {
+                for _ in 0..reps {
+                    dense_op(&logn, &lognp, &w, k, &mut out_d);
+                    std::hint::black_box(&out_d);
+                }
+            },
+            1,
+            5,
+        );
+        let ms = time_it(
+            || {
+                for _ in 0..reps {
+                    sparse_op(&logn, &lognp, &logw, k, &mut prod, &mut out_s);
+                    std::hint::black_box(&out_s);
+                }
+            },
+            1,
+            5,
+        );
+        let diff = out_d
+            .iter()
+            .zip(&out_s)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        table.row(vec![
+            format!("{k}"),
+            fmt_si(md.median_s / reps as f64),
+            fmt_si(ms.median_s / reps as f64),
+            format!("{:.1}x", ms.median_s / md.median_s),
+            format!("{diff:.2e}"),
+        ]);
+        println!(
+            "K={k:<3} dense {}  sparse {}  speedup {:.1}x  diff {diff:.1e}",
+            fmt_si(md.median_s / reps as f64),
+            fmt_si(ms.median_s / reps as f64),
+            ms.median_s / md.median_s
+        );
+        assert!(diff < 1e-3, "layouts disagree");
+    }
+    println!("\n{}", table.render());
+}

@@ -1,0 +1,146 @@
+//! Fig. 3 reproduction: training time per epoch + peak memory of the
+//! EiNet (dense einsum) layout vs the LibSPN/SPFlow-style sparse layout,
+//! sweeping the three structural hyper-parameters of RAT structures:
+//!
+//!   K (densities per sum/leaf), depth D, replica R
+//!
+//! Paper setup: Gaussian-noise data, N = 2000 samples, D = 512 dims,
+//! single-dimensional Gaussian leaves, defaults (D=4, R=10, K=10); we
+//! scale N down (CPU, not a 2080 Ti) but keep the sweep shape. The claim
+//! under test: the dense layout is 1-2 orders of magnitude faster and
+//! substantially smaller at large K/D/R, growing gracefully.
+//!
+//!     cargo bench --bench fig3_train            # full sweep
+//!     EINET_BENCH_QUICK=1 cargo bench --bench fig3_train
+
+use einet::bench::{fmt_bytes, fmt_si, time_it, Table};
+use einet::data::debd::gaussian_noise;
+use einet::em::{m_step, EmConfig};
+use einet::{
+    DenseEngine, EinetParams, EmStats, LayeredPlan, LeafFamily, SparseEngine,
+};
+
+struct SweepPoint {
+    label: String,
+    k: usize,
+    depth: usize,
+    replica: usize,
+}
+
+fn sweep() -> Vec<SweepPoint> {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let mut pts = Vec::new();
+    let kk: &[usize] = if quick { &[2, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    let dd: &[usize] = if quick { &[2, 4] } else { &[1, 2, 3, 4, 5, 6] };
+    let rr: &[usize] = if quick { &[2, 8] } else { &[1, 2, 5, 10, 20] };
+    for &k in kk {
+        pts.push(SweepPoint { label: format!("K={k}"), k, depth: 4, replica: 10 });
+    }
+    for &d in dd {
+        pts.push(SweepPoint { label: format!("D={d}"), k: 10, depth: d, replica: 10 });
+    }
+    for &r in rr {
+        pts.push(SweepPoint { label: format!("R={r}"), k: 10, depth: 4, replica: r });
+    }
+    pts
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let num_vars = if quick { 128 } else { 512 };
+    let n = if quick { 200 } else { 500 };
+    let batch = 100usize;
+    let data = gaussian_noise(n, num_vars, 0);
+    let family = LeafFamily::Gaussian { channels: 1 };
+    // unit-variance data: the paper's image-oriented variance clamp would
+    // degenerate the leaves (and let exp-underflow skip work in later
+    // epochs, biasing the timing) — use bounds that fit the data scale
+    let em = EmConfig {
+        var_bounds: (1e-3, 10.0),
+        ..Default::default()
+    };
+    let mask = vec![1.0f32; num_vars];
+
+    println!(
+        "Fig. 3 — train time/epoch + memory, Gaussian noise N={n} D={num_vars}, batch={batch}"
+    );
+    let mut table = Table::new(&[
+        "point", "params", "dense t/epoch", "sparse t/epoch", "speedup",
+        "dense mem", "sparse mem", "mem ratio",
+    ]);
+
+    for pt in sweep() {
+        let graph = einet::structure::random_binary_trees(
+            num_vars, pt.depth, pt.replica, 7,
+        );
+        let plan = LayeredPlan::compile(graph, pt.k);
+        let params = EinetParams::init(&plan, family, 0);
+
+        // ---- dense (EiNet) --------------------------------------------
+        // every timed epoch starts from the same fresh parameters so all
+        // repetitions (and both engines) do identical numerical work
+        let mut dense = DenseEngine::new(plan.clone(), family, batch);
+        let mut p_dense = params.clone();
+        let mut run_dense = || {
+            p_dense.clone_from(&params);
+            let mut stats = EmStats::zeros_like(&p_dense);
+            let mut logp = vec![0.0f32; batch];
+            let mut b0 = 0;
+            while b0 < n {
+                let bn = batch.min(n - b0);
+                let xs = data.rows(b0, b0 + bn);
+                dense.forward(&p_dense, xs, &mask, &mut logp[..bn]);
+                dense.backward(&p_dense, xs, &mask, bn, &mut stats);
+                m_step(&mut p_dense, &plan, &stats, &em);
+                stats.reset();
+                b0 += bn;
+            }
+        };
+        run_dense(); // warmup + establish timing scale
+        let md = time_it(run_dense, 0, if quick { 2 } else { 3 });
+
+        // ---- sparse (LibSPN/SPFlow-style) ------------------------------
+        let mut sparse = SparseEngine::new(plan.clone(), family, batch);
+        let mut p_sparse = params.clone();
+        let mut run_sparse = || {
+            p_sparse.clone_from(&params);
+            let mut stats = EmStats::zeros_like(&p_sparse);
+            let mut logp = vec![0.0f32; batch];
+            let mut b0 = 0;
+            while b0 < n {
+                let bn = batch.min(n - b0);
+                let xs = data.rows(b0, b0 + bn);
+                sparse.forward(&p_sparse, xs, &mask, &mut logp[..bn]);
+                sparse.backward(&p_sparse, xs, &mask, bn, &mut stats);
+                m_step(&mut p_sparse, &plan, &stats, &em);
+                stats.reset();
+                b0 += bn;
+            }
+        };
+        run_sparse();
+        let ms = time_it(run_sparse, 0, if quick { 2 } else { 3 });
+
+        let mem_d = dense.memory_footprint(&params).total();
+        let mem_s = sparse.memory_footprint(&params).total();
+        table.row(vec![
+            pt.label.clone(),
+            format!("{}", params.num_params()),
+            fmt_si(md.median_s),
+            fmt_si(ms.median_s),
+            format!("{:.1}x", ms.median_s / md.median_s),
+            fmt_bytes(mem_d),
+            fmt_bytes(mem_s),
+            format!("{:.1}x", mem_s as f64 / mem_d as f64),
+        ]);
+        println!(
+            "{:<6} dense {} sparse {} speedup {:.1}x  mem {} vs {}",
+            pt.label,
+            fmt_si(md.median_s),
+            fmt_si(ms.median_s),
+            ms.median_s / md.median_s,
+            fmt_bytes(mem_d),
+            fmt_bytes(mem_s)
+        );
+    }
+    println!("\n{}", table.render());
+}

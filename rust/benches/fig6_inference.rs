@@ -1,0 +1,76 @@
+//! Fig. 6 reproduction (supplementary): inference time per sample +
+//! memory, same K / depth / replica sweep as Fig. 3, forward pass only on
+//! a batch of 100 test samples (the paper reports time/100-batch / 100).
+//!
+//!     cargo bench --bench fig6_inference
+//!     EINET_BENCH_QUICK=1 cargo bench --bench fig6_inference
+
+use einet::bench::{fmt_bytes, fmt_si, time_it, Table};
+use einet::data::debd::gaussian_noise;
+use einet::{DenseEngine, EinetParams, LayeredPlan, LeafFamily, SparseEngine};
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let num_vars = if quick { 128 } else { 512 };
+    let batch = 100usize;
+    let data = gaussian_noise(batch, num_vars, 1);
+    let family = LeafFamily::Gaussian { channels: 1 };
+    let mask = vec![1.0f32; num_vars];
+
+    let kk: &[usize] = if quick { &[2, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    let dd: &[usize] = if quick { &[2, 4] } else { &[1, 2, 3, 4, 5, 6] };
+    let rr: &[usize] = if quick { &[2, 8] } else { &[1, 2, 5, 10, 20] };
+    let mut points = Vec::new();
+    for &k in kk {
+        points.push((format!("K={k}"), k, 4usize, 10usize));
+    }
+    for &d in dd {
+        points.push((format!("D={d}"), 10, d, 10));
+    }
+    for &r in rr {
+        points.push((format!("R={r}"), 10, 4, r));
+    }
+
+    println!("Fig. 6 — inference time/sample (batch {batch}), D={num_vars} Gaussian noise");
+    let mut table = Table::new(&[
+        "point", "dense t/sample", "sparse t/sample", "speedup",
+        "dense mem", "sparse mem",
+    ]);
+    for (label, k, depth, replica) in points {
+        let graph =
+            einet::structure::random_binary_trees(num_vars, depth, replica, 7);
+        let plan = LayeredPlan::compile(graph, k);
+        let params = EinetParams::init(&plan, family, 0);
+        let mut dense = DenseEngine::new(plan.clone(), family, batch);
+        let mut sparse = SparseEngine::new(plan.clone(), family, batch);
+        let mut logp = vec![0.0f32; batch];
+        let md = time_it(
+            || dense.forward(&params, &data.data, &mask, &mut logp),
+            1,
+            if quick { 3 } else { 5 },
+        );
+        let ms = time_it(
+            || sparse.forward(&params, &data.data, &mask, &mut logp),
+            1,
+            if quick { 3 } else { 5 },
+        );
+        let mem_d = dense.memory_footprint(&params).total();
+        let mem_s = sparse.memory_footprint(&params).total();
+        table.row(vec![
+            label.clone(),
+            fmt_si(md.median_s / batch as f64),
+            fmt_si(ms.median_s / batch as f64),
+            format!("{:.1}x", ms.median_s / md.median_s),
+            fmt_bytes(mem_d),
+            fmt_bytes(mem_s),
+        ]);
+        println!(
+            "{:<6} dense {}/sample  sparse {}/sample  speedup {:.1}x",
+            label,
+            fmt_si(md.median_s / batch as f64),
+            fmt_si(ms.median_s / batch as f64),
+            ms.median_s / md.median_s
+        );
+    }
+    println!("\n{}", table.render());
+}

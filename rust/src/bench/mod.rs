@@ -1,0 +1,158 @@
+//! Benchmark harness (criterion is unavailable offline): warmup + repeated
+//! timing with median/min reporting, plus the table printer used by every
+//! `rust/benches/*` binary to emit the paper's rows.
+
+use crate::util::Timer;
+
+/// One measurement: wall-clock stats over repeats.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median_s: f64,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub repeats: usize,
+}
+
+/// Run `f` once for warmup, then `repeats` timed iterations.
+pub fn time_it(mut f: impl FnMut(), warmup: usize, repeats: usize) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t = Timer::new();
+        f();
+        samples.push(t.elapsed_s());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement {
+        median_s: median,
+        min_s: min,
+        mean_s: mean,
+        repeats,
+    }
+}
+
+/// Adaptive repeat count: aim for ~`budget_s` seconds total, bounded.
+pub fn auto_repeats(single_run_s: f64, budget_s: f64) -> usize {
+    ((budget_s / single_run_s.max(1e-9)) as usize).clamp(3, 50)
+}
+
+/// Plain-text table printer with column alignment (markdown-ish).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+}
+
+/// Human formatting helpers.
+pub fn fmt_si(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.2}s")
+    } else if seconds >= 1e-3 {
+        format!("{:.2}ms", seconds * 1e3)
+    } else {
+        format!("{:.1}us", seconds * 1e6)
+    }
+}
+
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2}MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_orders() {
+        let m = time_it(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            1,
+            5,
+        );
+        assert!(m.min_s <= m.median_s);
+        assert!(m.median_s >= 0.0);
+        assert_eq!(m.repeats, 5);
+    }
+
+    #[test]
+    fn auto_repeats_bounds() {
+        assert_eq!(auto_repeats(1000.0, 1.0), 3);
+        assert_eq!(auto_repeats(1e-9, 1.0), 50);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("| name "));
+        assert!(s.contains("| long-name |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_si(2.5), "2.50s");
+        assert_eq!(fmt_si(0.0025), "2.50ms");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+    }
+}

@@ -1,0 +1,232 @@
+//! k-means clustering (k-means++ init) — the paper's first modeling step
+//! for images: cluster the dataset into C groups, learn one EiNet per
+//! cluster, and mix them with the cluster proportions (Section 4.2; this
+//! is step 1 of LearnSPN).
+
+use crate::util::rng::Rng;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub k: usize,
+    pub dim: usize,
+    pub centroids: Vec<f32>,
+    pub assignment: Vec<usize>,
+    /// cluster sizes
+    pub counts: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+impl KMeans {
+    /// Index of the nearest centroid for a new point.
+    pub fn predict(&self, x: &[f32]) -> usize {
+        nearest(&self.centroids, self.k, self.dim, x).0
+    }
+
+    /// Cluster proportions (mixture coefficients).
+    pub fn proportions(&self) -> Vec<f64> {
+        let n: usize = self.counts.iter().sum();
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / n as f64)
+            .collect()
+    }
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum()
+}
+
+fn nearest(centroids: &[f32], k: usize, dim: usize, x: &[f32]) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for c in 0..k {
+        let d = dist2(x, &centroids[c * dim..(c + 1) * dim]);
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best
+}
+
+/// Lloyd's algorithm with k-means++ seeding.
+///
+/// `data` is `[n, dim]` row-major. Empty clusters are re-seeded from the
+/// point farthest from its centroid.
+pub fn kmeans(
+    data: &[f32],
+    n: usize,
+    dim: usize,
+    k: usize,
+    max_iter: usize,
+    seed: u64,
+) -> KMeans {
+    assert!(k >= 1 && n >= k, "need n >= k >= 1");
+    assert_eq!(data.len(), n * dim);
+    let mut rng = Rng::new(seed);
+
+    // --- k-means++ seeding -------------------------------------------------
+    let mut centroids = vec![0.0f32; k * dim];
+    let first = rng.below(n);
+    centroids[..dim].copy_from_slice(&data[first * dim..(first + 1) * dim]);
+    let mut d2 = vec![0.0f64; n];
+    for c in 1..k {
+        let mut total = 0.0f64;
+        for i in 0..n {
+            d2[i] = nearest(&centroids[..c * dim], c, dim, &data[i * dim..(i + 1) * dim]).1;
+            total += d2[i];
+        }
+        let pick = if total > 0.0 {
+            let mut u = rng.uniform() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        } else {
+            rng.below(n)
+        };
+        centroids[c * dim..(c + 1) * dim]
+            .copy_from_slice(&data[pick * dim..(pick + 1) * dim]);
+    }
+
+    // --- Lloyd iterations ----------------------------------------------------
+    let mut assignment = vec![0usize; n];
+    let mut counts = vec![0usize; k];
+    let mut inertia = 0.0f64;
+    let mut iterations = 0usize;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // assign
+        let mut changed = 0usize;
+        inertia = 0.0;
+        for i in 0..n {
+            let (c, d) = nearest(&centroids, k, dim, &data[i * dim..(i + 1) * dim]);
+            if assignment[i] != c {
+                changed += 1;
+                assignment[i] = c;
+            }
+            inertia += d;
+        }
+        // update
+        centroids.fill(0.0);
+        counts.fill(0);
+        for i in 0..n {
+            let c = assignment[i];
+            counts[c] += 1;
+            for d in 0..dim {
+                centroids[c * dim + d] += data[i * dim + d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed from the globally farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da =
+                            nearest(&centroids, k, dim, &data[a * dim..(a + 1) * dim]).1;
+                        let db =
+                            nearest(&centroids, k, dim, &data[b * dim..(b + 1) * dim]).1;
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&data[far * dim..(far + 1) * dim]);
+                counts[c] = 1;
+            } else {
+                let inv = 1.0 / counts[c] as f32;
+                for d in 0..dim {
+                    centroids[c * dim + d] *= inv;
+                }
+            }
+        }
+        if changed == 0 && it > 0 {
+            break;
+        }
+    }
+    KMeans {
+        k,
+        dim,
+        centroids,
+        assignment,
+        counts,
+        inertia,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// three well-separated blobs in 2D
+    fn blobs(n_per: usize, seed: u64) -> (Vec<f32>, usize) {
+        let centers = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..n_per {
+                data.push(cx + 0.5 * rng.normal() as f32);
+                data.push(cy + 0.5 * rng.normal() as f32);
+            }
+        }
+        (data, 3 * n_per)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (data, n) = blobs(50, 0);
+        let km = kmeans(&data, n, 2, 3, 50, 1);
+        // each blob should be pure: all 50 points of a blob share a label
+        for blob in 0..3 {
+            let first = km.assignment[blob * 50];
+            for i in 0..50 {
+                assert_eq!(km.assignment[blob * 50 + i], first, "blob {blob} split");
+            }
+        }
+        assert!(km.inertia / (n as f64) < 1.0);
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let (data, n) = blobs(30, 2);
+        let km = kmeans(&data, n, 2, 3, 50, 3);
+        let p = km.proportions();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for v in p {
+            assert!((0.2..0.5).contains(&v), "unbalanced {v}");
+        }
+    }
+
+    #[test]
+    fn predict_matches_assignment() {
+        let (data, n) = blobs(20, 4);
+        let km = kmeans(&data, n, 2, 3, 50, 5);
+        for i in 0..n {
+            assert_eq!(km.predict(&data[i * 2..(i + 1) * 2]), km.assignment[i]);
+        }
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let (data, n) = blobs(10, 6);
+        let km = kmeans(&data, n, 2, 1, 10, 7);
+        assert!(km.assignment.iter().all(|&a| a == 0));
+        assert_eq!(km.counts[0], n);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (data, n) = blobs(25, 8);
+        let a = kmeans(&data, n, 2, 3, 50, 9);
+        let b = kmeans(&data, n, 2, 3, 50, 9);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,506 @@
+//! L3 coordination: multi-threaded EM training (parameter-server pattern),
+//! the AOT-backed trainer that drives the PJRT executables, and a batched
+//! inference service for conditional queries.
+//!
+//! tokio is unavailable in the offline registry; std threads + channels
+//! implement the same patterns (DESIGN.md §3).
+
+pub mod server;
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::em::{m_step, stats_from_natural_grads, EmConfig};
+use crate::engine::dense::DenseEngine;
+use crate::engine::{EinetParams, EmStats};
+use crate::layers::LayeredPlan;
+use crate::leaves::LeafFamily;
+use crate::runtime::{AotParams, ArtifactMeta, Executable};
+
+/// Configuration for the multi-threaded EM trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub workers: usize,
+    pub em: EmConfig,
+    /// log every n-th epoch (0: silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            batch_size: 100,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(1),
+            em: EmConfig {
+                step_size: 0.5,
+                ..Default::default()
+            },
+            log_every: 1,
+        }
+    }
+}
+
+/// Per-epoch progress record.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_ll: f64,
+    pub seconds: f64,
+}
+
+/// Data-parallel stochastic EM: each mini-batch is sharded across worker
+/// threads (each with a private engine), their E-step statistics are
+/// reduced (the parameter-server step), and one M-step updates the shared
+/// parameters. Statistically identical to single-threaded EM.
+pub fn train_parallel(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &mut EinetParams,
+    data: &[f32],
+    n: usize,
+    cfg: &TrainConfig,
+) -> Vec<EpochStats> {
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    assert_eq!(data.len(), n * row);
+    let workers = cfg.workers.max(1);
+    let shard_cap = cfg.batch_size.div_ceil(workers);
+    let mask = vec![1.0f32; d];
+    // one engine per worker, reused across all epochs
+    let mut engines: Vec<DenseEngine> = (0..workers)
+        .map(|_| DenseEngine::new(plan.clone(), family, shard_cap))
+        .collect();
+    let mut history = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let t = crate::util::Timer::new();
+        let mut epoch_ll = 0.0f64;
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = cfg.batch_size.min(n - b0);
+            let batch = &data[b0 * row..(b0 + bn) * row];
+            // shard the mini-batch across workers
+            let shard = bn.div_ceil(workers);
+            let mut merged = EmStats::zeros_like(params);
+            std::thread::scope(|scope| {
+                let (tx, rx) = mpsc::channel::<EmStats>();
+                for (w, engine) in engines.iter_mut().enumerate() {
+                    let lo = (w * shard).min(bn);
+                    let hi = ((w + 1) * shard).min(bn);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let tx = tx.clone();
+                    let mask = &mask;
+                    let params = &*params;
+                    let chunk = &batch[lo * row..hi * row];
+                    scope.spawn(move || {
+                        let bn_w = hi - lo;
+                        let mut stats = EmStats::zeros_like(params);
+                        let mut logp = vec![0.0f32; bn_w];
+                        engine.forward(params, chunk, mask, &mut logp);
+                        engine.backward(params, chunk, mask, bn_w, &mut stats);
+                        let _ = tx.send(stats);
+                    });
+                }
+                drop(tx);
+                while let Ok(stats) = rx.recv() {
+                    merged.merge(&stats);
+                }
+            });
+            epoch_ll += merged.loglik;
+            m_step(params, plan, &merged, &cfg.em);
+            b0 += bn;
+        }
+        let rec = EpochStats {
+            epoch,
+            train_ll: epoch_ll / n as f64,
+            seconds: t.elapsed_s(),
+        };
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            crate::info!(
+                "epoch {:>3}: train LL {:.4} ({:.2}s)",
+                rec.epoch,
+                rec.train_ll,
+                rec.seconds
+            );
+        }
+        history.push(rec);
+    }
+    history
+}
+
+/// Average test log-likelihood of a dataset split under the model.
+pub fn evaluate(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    data: &[f32],
+    n: usize,
+    batch: usize,
+) -> f64 {
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    let mask = vec![1.0f32; d];
+    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut total = 0.0f64;
+    let mut logp = vec![0.0f32; batch];
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bn = batch.min(n - b0);
+        engine.forward(
+            params,
+            &data[b0 * row..(b0 + bn) * row],
+            &mask,
+            &mut logp[..bn],
+        );
+        total += logp[..bn].iter().map(|&l| l as f64).sum::<f64>();
+        b0 += bn;
+    }
+    total / n as f64
+}
+
+/// Per-sample log-likelihoods (returned, not averaged).
+pub fn per_sample_ll(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    data: &[f32],
+    n: usize,
+    batch: usize,
+) -> Vec<f64> {
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    let mask = vec![1.0f32; d];
+    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut out = Vec::with_capacity(n);
+    let mut logp = vec![0.0f32; batch];
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bn = batch.min(n - b0);
+        engine.forward(
+            params,
+            &data[b0 * row..(b0 + bn) * row],
+            &mask,
+            &mut logp[..bn],
+        );
+        out.extend(logp[..bn].iter().map(|&l| l as f64));
+        b0 += bn;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// AOT-backed training: the full three-layer path
+// ---------------------------------------------------------------------------
+
+/// Trainer driving the AOT `train` executable: the E-step runs inside the
+/// PJRT executable (Pallas kernels + jax autodiff, compiled at build
+/// time); rust owns the parameters and performs the M-step. This is the
+/// end-to-end composition of L1/L2/L3.
+pub struct AotTrainer {
+    pub meta: ArtifactMeta,
+    pub family: LeafFamily,
+    pub params: AotParams,
+    train_exe: Executable,
+    fwd_exe: Executable,
+    em: EmConfig,
+}
+
+impl AotTrainer {
+    pub fn new(
+        runtime: &crate::runtime::Runtime,
+        name: &str,
+        seed: u64,
+        em: EmConfig,
+    ) -> Result<Self> {
+        let meta = runtime.meta(name)?;
+        let family = match meta.family.as_str() {
+            "bernoulli" => LeafFamily::Bernoulli,
+            "gaussian" => LeafFamily::Gaussian {
+                channels: meta.obs_dim,
+            },
+            "categorical" => LeafFamily::Categorical {
+                cats: meta.stat_dim,
+            },
+            other => anyhow::bail!("unsupported artifact family '{other}'"),
+        };
+        let params = AotParams::init(&meta, family, seed)?;
+        let train_exe = runtime.compile(&meta, "train")?;
+        let fwd_exe = runtime.compile(&meta, "fwd")?;
+        Ok(Self {
+            meta,
+            family,
+            params,
+            train_exe,
+            fwd_exe,
+            em,
+        })
+    }
+
+    /// One stochastic-EM step on a batch (padded to the artifact's static
+    /// batch size with repeats of the last row; padding rows are excluded
+    /// from the statistics by scaling — we simply require full batches
+    /// here and let callers drop remainders). Returns the mean LL.
+    pub fn em_step(&mut self, x: &[f32], mask: &[f32]) -> Result<f64> {
+        let b = self.meta.batch;
+        let row = self.meta.num_vars * self.meta.obs_dim;
+        anyhow::ensure!(x.len() == b * row, "need a full batch of {b}");
+        let mut inputs = self.params.input_slices();
+        inputs.push(x);
+        inputs.push(mask);
+        let outputs = self.train_exe.run(&inputs)?;
+        let logp = &outputs[0];
+        let mean_ll =
+            logp.iter().map(|&l| l as f64).sum::<f64>() / b as f64;
+
+        // adapt the named gradients into EmStats for the shared M-step
+        let (stats, plan_proxy) = self.grads_to_stats(&outputs)?;
+        let mut eng_params = self.params_as_einet();
+        m_step(&mut eng_params, &plan_proxy, &stats, &self.em);
+        self.einet_to_params(&eng_params);
+        Ok(mean_ll)
+    }
+
+    /// Mean LL of a full batch without updating parameters.
+    pub fn eval_batch(&self, x: &[f32], mask: &[f32]) -> Result<f64> {
+        let b = self.meta.batch;
+        let mut inputs = self.params.input_slices();
+        inputs.push(x);
+        inputs.push(mask);
+        let outputs = self.fwd_exe.run(&inputs)?;
+        Ok(outputs[0].iter().map(|&l| l as f64).sum::<f64>() / b as f64)
+    }
+
+    /// Build a minimal plan-shaped view so the shared `m_step` applies.
+    /// The AOT path does not need a region graph — only the per-level
+    /// weight shapes — so we reconstruct a skeleton plan from metadata.
+    fn grads_to_stats(
+        &self,
+        outputs: &[Vec<f32>],
+    ) -> Result<(EmStats, LayeredPlan)> {
+        let plan = self.skeleton_plan();
+        let eng_params = self.params_as_einet();
+        let mut stats = EmStats::zeros_like(&eng_params);
+        let mut grad_theta: &[f32] = &[];
+        let mut grad_shift: &[f32] = &[];
+        let mut w_i = 0usize;
+        for (pi, desc) in self.meta.params.iter().enumerate() {
+            let g = &outputs[1 + pi];
+            match desc.kind.as_str() {
+                "theta" => grad_theta = g,
+                "shift" => grad_shift = g,
+                "w" => {
+                    stats.grad_w[w_i].copy_from_slice(g);
+                    w_i += 1;
+                }
+                "mix" => {
+                    // mix follows its w level: w_i - 1
+                    stats.grad_mix[w_i - 1]
+                        .as_mut()
+                        .expect("mix level allocated")
+                        .copy_from_slice(g);
+                }
+                _ => {}
+            }
+        }
+        stats.count = self.meta.batch;
+        stats_from_natural_grads(&eng_params, grad_theta, grad_shift, &mut stats);
+        Ok((stats, plan))
+    }
+
+    /// A synthetic LayeredPlan whose level shapes match the artifact's
+    /// parameter tensors (used only to drive the shared M-step).
+    fn skeleton_plan(&self) -> LayeredPlan {
+        use crate::layers::{EinsumLayer, Level, MixingLayer};
+        let mut levels = Vec::new();
+        let mut w_descs = Vec::new();
+        let mut mix_descs: Vec<Option<&crate::runtime::ParamDesc>> = Vec::new();
+        for desc in &self.meta.params {
+            match desc.kind.as_str() {
+                "w" => {
+                    w_descs.push(desc);
+                    mix_descs.push(None);
+                }
+                "mix" => *mix_descs.last_mut().unwrap() = Some(desc),
+                _ => {}
+            }
+        }
+        for (wd, md) in w_descs.iter().zip(&mix_descs) {
+            let l = wd.shape[0];
+            let einsum = EinsumLayer {
+                partition_ids: (0..l).collect(),
+                left: vec![0; l],
+                right: vec![0; l],
+                ko: wd.shape[1],
+            };
+            let mixing = md.map(|d| MixingLayer {
+                region_ids: (0..d.shape[0]).collect(),
+                child_slots: d
+                    .child_counts
+                    .iter()
+                    .map(|&c| (0..c).collect())
+                    .collect(),
+                cmax: d.shape[1],
+            });
+            levels.push(Level {
+                einsum,
+                mixing,
+                region_out: Vec::new(),
+            });
+        }
+        // a throwaway 2-var graph carries the metadata fields m_step needs
+        let graph = crate::structure::binary_chain(2);
+        LayeredPlan {
+            graph,
+            k: self.meta.k,
+            num_replica: self.meta.replica,
+            levels,
+            leaf_region_ids: Vec::new(),
+        }
+    }
+
+    /// View the named AOT tensors as an `EinetParams` (copies).
+    fn params_as_einet(&self) -> EinetParams {
+        let mut w = Vec::new();
+        let mut mix: Vec<Option<Vec<f32>>> = Vec::new();
+        for desc in &self.meta.params {
+            match desc.kind.as_str() {
+                "w" => {
+                    w.push(self.params.tensors[&desc.name].clone());
+                    mix.push(None);
+                }
+                "mix" => {
+                    *mix.last_mut().unwrap() =
+                        Some(self.params.tensors[&desc.name].clone())
+                }
+                _ => {}
+            }
+        }
+        EinetParams {
+            num_vars: self.meta.num_vars,
+            k: self.meta.k,
+            num_replica: self.meta.replica,
+            family: self.family,
+            theta: self.params.tensors["theta"].clone(),
+            w,
+            mix,
+        }
+    }
+
+    /// Write updated EinetParams back into the named AOT tensors.
+    fn einet_to_params(&mut self, p: &EinetParams) {
+        let mut w_i = 0usize;
+        for desc in self.meta.params.clone() {
+            match desc.kind.as_str() {
+                "theta" => self
+                    .params
+                    .tensors
+                    .get_mut("theta")
+                    .unwrap()
+                    .copy_from_slice(&p.theta),
+                "w" => {
+                    self.params
+                        .tensors
+                        .get_mut(&desc.name)
+                        .unwrap()
+                        .copy_from_slice(&p.w[w_i]);
+                    w_i += 1;
+                }
+                "mix" => self
+                    .params
+                    .tensors
+                    .get_mut(&desc.name)
+                    .unwrap()
+                    .copy_from_slice(p.mix[w_i - 1].as_ref().unwrap()),
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structure::random_binary_trees;
+    use crate::util::rng::Rng;
+
+    fn correlated(n: usize, nv: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * nv];
+        for b in 0..n {
+            let z = rng.bernoulli(0.5);
+            for d in 0..nv {
+                let p = if z { 0.85 } else { 0.15 };
+                x[b * nv + d] = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn parallel_training_improves_and_matches_serial() {
+        let nv = 8;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 0), 3);
+        let data = correlated(256, nv, 1);
+        let cfg = TrainConfig {
+            epochs: 4,
+            batch_size: 64,
+            workers: 4,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut p_par = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
+        let hist = train_parallel(&plan, LeafFamily::Bernoulli, &mut p_par, &data, 256, &cfg);
+        assert!(hist.last().unwrap().train_ll > hist[0].train_ll);
+
+        // single-worker run from the same init must match numerically
+        // (the reduction is order-insensitive up to float addition; use a
+        // tolerance)
+        let mut p_ser = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
+        let cfg1 = TrainConfig {
+            workers: 1,
+            ..cfg
+        };
+        let hist1 =
+            train_parallel(&plan, LeafFamily::Bernoulli, &mut p_ser, &data, 256, &cfg1);
+        for (a, b) in hist.iter().zip(&hist1) {
+            assert!(
+                (a.train_ll - b.train_ll).abs() < 1e-2,
+                "parallel {} vs serial {}",
+                a.train_ll,
+                b.train_ll
+            );
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_training_signal() {
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 1), 3);
+        let data = correlated(128, nv, 2);
+        let mut params = EinetParams::init(&plan, LeafFamily::Bernoulli, 3);
+        let cfg = TrainConfig {
+            epochs: 5,
+            batch_size: 64,
+            workers: 2,
+            log_every: 0,
+            ..Default::default()
+        };
+        train_parallel(&plan, LeafFamily::Bernoulli, &mut params, &data, 128, &cfg);
+        let ll = evaluate(&plan, LeafFamily::Bernoulli, &params, &data, 128, 32);
+        assert!(ll > -(nv as f64) * std::f64::consts::LN_2);
+        let per = per_sample_ll(&plan, LeafFamily::Bernoulli, &params, &data, 128, 32);
+        assert_eq!(per.len(), 128);
+        let avg = per.iter().sum::<f64>() / 128.0;
+        assert!((avg - ll).abs() < 1e-6);
+    }
+}

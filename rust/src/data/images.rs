@@ -1,0 +1,298 @@
+//! Procedural image generators standing in for SVHN and CelebA (Fig. 4).
+//!
+//! * [`svhn_like`] — house-number-style digit images: a seven-segment digit
+//!   glyph rendered at jittered position/scale on a colored background with
+//!   per-sample hue, brightness and noise variation.
+//! * [`celeba_like`] — face-like images: an elliptical skin-tone face on a
+//!   background, with eyes, brows, mouth and hair region, jittered in
+//!   geometry and color.
+//!
+//! Both return `[n, h*w, channels]` rows in [0, 1], matching the paper's
+//! normalize-by-255, no-other-preprocessing pipeline, and are deterministic
+//! per seed. They exercise the identical modeling path (PD structure over
+//! pixels, factorized Gaussian leaves over channels, k-means mixture).
+
+use crate::util::rng::Rng;
+
+use super::Split;
+
+/// Seven-segment layout: segments (a..g) as (x0, y0, x1, y1) in a unit box.
+///           a
+///          f b
+///           g
+///          e c
+///           d
+const SEGMENTS: [(f32, f32, f32, f32); 7] = [
+    (0.2, 0.05, 0.8, 0.15), // a
+    (0.7, 0.10, 0.85, 0.50), // b
+    (0.7, 0.50, 0.85, 0.90), // c
+    (0.2, 0.85, 0.8, 0.95), // d
+    (0.15, 0.50, 0.3, 0.90), // e
+    (0.15, 0.10, 0.3, 0.50), // f
+    (0.2, 0.45, 0.8, 0.55), // g
+];
+
+/// Which segments light up per digit 0-9.
+const DIGIT_SEGMENTS: [u8; 10] = [
+    0b0111111, // 0: a b c d e f
+    0b0000110, // 1: b c
+    0b1011011, // 2: a b d e g
+    0b1001111, // 3: a b c d g
+    0b1100110, // 4: b c f g
+    0b1101101, // 5: a c d f g
+    0b1111101, // 6: a c d e f g
+    0b0000111, // 7: a b c
+    0b1111111, // 8
+    0b1101111, // 9: a b c d f g
+];
+
+/// SVHN-like RGB digit images: returns rows of `[h*w, 3]`, plus the digit
+/// labels (useful for clustering sanity checks).
+pub fn svhn_like(n: usize, h: usize, w: usize, seed: u64) -> (Split, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; n * h * w * 3];
+    let mut labels = vec![0u8; n];
+    for i in 0..n {
+        let digit = rng.below(10);
+        labels[i] = digit as u8;
+        let img = &mut data[i * h * w * 3..(i + 1) * h * w * 3];
+        render_digit(img, h, w, digit, &mut rng);
+    }
+    (
+        Split {
+            n,
+            row_len: h * w * 3,
+            data,
+        },
+        labels,
+    )
+}
+
+fn render_digit(img: &mut [f32], h: usize, w: usize, digit: usize, rng: &mut Rng) {
+    // background: dark-ish random hue
+    let bg = [
+        (0.1 + 0.3 * rng.uniform()) as f32,
+        (0.1 + 0.3 * rng.uniform()) as f32,
+        (0.1 + 0.3 * rng.uniform()) as f32,
+    ];
+    // foreground: bright, contrasting
+    let fg = [
+        (0.6 + 0.4 * rng.uniform()) as f32,
+        (0.6 + 0.4 * rng.uniform()) as f32,
+        (0.6 + 0.4 * rng.uniform()) as f32,
+    ];
+    // glyph box jitter
+    let cx = 0.5 + 0.08 * (rng.uniform() as f32 - 0.5);
+    let cy = 0.5 + 0.08 * (rng.uniform() as f32 - 0.5);
+    let scale = 0.75 + 0.2 * rng.uniform() as f32;
+    let segs = DIGIT_SEGMENTS[digit];
+    let noise = 0.03f32;
+    for y in 0..h {
+        for x in 0..w {
+            // map pixel into glyph-local unit coordinates
+            let u = ((x as f32 + 0.5) / w as f32 - cx) / scale + 0.5;
+            let v = ((y as f32 + 0.5) / h as f32 - cy) / scale + 0.5;
+            let mut lit = false;
+            if (0.0..1.0).contains(&u) && (0.0..1.0).contains(&v) {
+                for (s, seg) in SEGMENTS.iter().enumerate() {
+                    if segs & (1 << s) != 0
+                        && u >= seg.0
+                        && u <= seg.2
+                        && v >= seg.1
+                        && v <= seg.3
+                    {
+                        lit = true;
+                        break;
+                    }
+                }
+            }
+            let px = &mut img[(y * w + x) * 3..(y * w + x) * 3 + 3];
+            for c in 0..3 {
+                let base = if lit { fg[c] } else { bg[c] };
+                px[c] = (base + noise * rng.normal() as f32).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// CelebA-like RGB face images (centered face blob with features).
+pub fn celeba_like(n: usize, h: usize, w: usize, seed: u64) -> Split {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0f32; n * h * w * 3];
+    for i in 0..n {
+        let img = &mut data[i * h * w * 3..(i + 1) * h * w * 3];
+        render_face(img, h, w, &mut rng);
+    }
+    Split {
+        n,
+        row_len: h * w * 3,
+        data,
+    }
+}
+
+fn render_face(img: &mut [f32], h: usize, w: usize, rng: &mut Rng) {
+    let bg = [
+        (0.2 + 0.6 * rng.uniform()) as f32,
+        (0.2 + 0.6 * rng.uniform()) as f32,
+        (0.3 + 0.6 * rng.uniform()) as f32,
+    ];
+    // skin tone family
+    let tone = 0.45 + 0.45 * rng.uniform() as f32;
+    let skin = [tone, tone * 0.78, tone * 0.62];
+    let hair = [
+        (0.05 + 0.4 * rng.uniform()) as f32,
+        (0.05 + 0.3 * rng.uniform()) as f32,
+        (0.05 + 0.25 * rng.uniform()) as f32,
+    ];
+    let cx = 0.5 + 0.05 * (rng.uniform() as f32 - 0.5);
+    let cy = 0.52 + 0.05 * (rng.uniform() as f32 - 0.5);
+    let rx = 0.27 + 0.05 * rng.uniform() as f32;
+    let ry = 0.36 + 0.05 * rng.uniform() as f32;
+    let eye_y = cy - 0.08;
+    let eye_dx = 0.11 + 0.02 * rng.uniform() as f32;
+    let mouth_y = cy + 0.18;
+    let noise = 0.025f32;
+    for y in 0..h {
+        for x in 0..w {
+            let u = (x as f32 + 0.5) / w as f32;
+            let v = (y as f32 + 0.5) / h as f32;
+            let du = (u - cx) / rx;
+            let dv = (v - cy) / ry;
+            let in_face = du * du + dv * dv <= 1.0;
+            let in_hair = {
+                let dvh = (v - (cy - 0.12)) / (ry * 1.15);
+                let duh = (u - cx) / (rx * 1.2);
+                duh * duh + dvh * dvh <= 1.0 && v < cy - 0.18
+            };
+            let mut col = if in_hair {
+                hair
+            } else if in_face {
+                skin
+            } else {
+                bg
+            };
+            if in_face {
+                // eyes
+                for side in [-1.0f32, 1.0] {
+                    let ex = cx + side * eye_dx;
+                    let dd = (u - ex) * (u - ex) / (0.035 * 0.035)
+                        + (v - eye_y) * (v - eye_y) / (0.022 * 0.022);
+                    if dd <= 1.0 {
+                        col = [0.08, 0.07, 0.07];
+                    }
+                }
+                // mouth
+                let dm = (u - cx) * (u - cx) / (0.09 * 0.09)
+                    + (v - mouth_y) * (v - mouth_y) / (0.02 * 0.02);
+                if dm <= 1.0 {
+                    col = [0.6, 0.2, 0.22];
+                }
+            }
+            let px = &mut img[(y * w + x) * 3..(y * w + x) * 3 + 3];
+            for c in 0..3 {
+                px[c] = (col[c] + noise * rng.normal() as f32).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Grayscale variant of the digit renderer (used by the AOT e2e config,
+/// which models 8x8 single-channel images).
+pub fn digits_gray(n: usize, h: usize, w: usize, seed: u64) -> (Split, Vec<u8>) {
+    let (rgb, labels) = svhn_like(n, h, w, seed);
+    let mut data = vec![0.0f32; n * h * w];
+    for i in 0..n * h * w {
+        data[i] = (rgb.data[i * 3] + rgb.data[i * 3 + 1] + rgb.data[i * 3 + 2]) / 3.0;
+    }
+    (
+        Split {
+            n,
+            row_len: h * w,
+            data,
+        },
+        labels,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svhn_like_shape_and_range() {
+        let (s, labels) = svhn_like(10, 16, 16, 0);
+        assert_eq!(s.data.len(), 10 * 16 * 16 * 3);
+        assert_eq!(labels.len(), 10);
+        assert!(s.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, la) = svhn_like(3, 8, 8, 7);
+        let (b, lb) = svhn_like(3, 8, 8, 7);
+        assert_eq!(a.data, b.data);
+        assert_eq!(la, lb);
+        let (c, _) = svhn_like(3, 8, 8, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // mean image of digit 1 should differ clearly from digit 8
+        let (s, labels) = svhn_like(400, 16, 16, 1);
+        let dim = 16 * 16 * 3;
+        let mut mean1 = vec![0.0f64; dim];
+        let mut mean8 = vec![0.0f64; dim];
+        let (mut n1, mut n8) = (0, 0);
+        for i in 0..400 {
+            let img = s.row(i);
+            match labels[i] {
+                1 => {
+                    n1 += 1;
+                    for d in 0..dim {
+                        mean1[d] += img[d] as f64;
+                    }
+                }
+                8 => {
+                    n8 += 1;
+                    for d in 0..dim {
+                        mean8[d] += img[d] as f64;
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(n1 > 5 && n8 > 5);
+        let dist: f64 = mean1
+            .iter()
+            .zip(&mean8)
+            .map(|(a, b)| (a / n1 as f64 - b / n8 as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.5, "digit means too close: {dist}");
+    }
+
+    #[test]
+    fn celeba_like_has_face_structure() {
+        let s = celeba_like(5, 32, 32, 2);
+        assert_eq!(s.data.len(), 5 * 32 * 32 * 3);
+        // center pixel should usually differ from corner (face vs bg)
+        let mut diffs = 0;
+        for i in 0..5 {
+            let img = s.row(i);
+            let center = (16 * 32 + 16) * 3;
+            let corner = 0;
+            if (img[center] - img[corner]).abs() > 0.05 {
+                diffs += 1;
+            }
+        }
+        assert!(diffs >= 3);
+    }
+
+    #[test]
+    fn gray_conversion() {
+        let (g, _) = digits_gray(2, 8, 8, 3);
+        assert_eq!(g.data.len(), 2 * 64);
+        assert!(g.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,133 @@
+//! Data pipeline substrate: synthetic stand-ins for the paper's datasets.
+//!
+//! No network access is available, so (per DESIGN.md §3) we synthesize:
+//!  * [`debd`] — the 20 binary density-estimation datasets (Table 1),
+//!    with the real DEBD dimensionalities and split sizes, sampled from
+//!    random tree-structured Bayesian networks;
+//!  * [`images`] — SVHN-like digit images and CelebA-like face images
+//!    (Fig. 4), as procedural renderers with per-sample jitter;
+//! plus PPM/PGM image output for qualitative results.
+
+pub mod debd;
+pub mod images;
+
+/// A dataset split: row-major `[n, num_vars * obs_dim]` f32 matrix.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub n: usize,
+    pub row_len: usize,
+    pub data: Vec<f32>,
+}
+
+impl Split {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.row_len..(i + 1) * self.row_len]
+    }
+
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.data[lo * self.row_len..hi * self.row_len]
+    }
+}
+
+/// Train/valid/test triple.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub num_vars: usize,
+    pub obs_dim: usize,
+    pub train: Split,
+    pub valid: Split,
+    pub test: Split,
+}
+
+/// Write a PPM (P6) RGB image; `pixels` is `[h, w, 3]` in [0, 1].
+pub fn write_ppm(path: &std::path::Path, pixels: &[f32], h: usize, w: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), h * w * 3);
+    let mut buf = format!("P6\n{w} {h}\n255\n").into_bytes();
+    for &v in pixels {
+        buf.push((v.clamp(0.0, 1.0) * 255.0).round() as u8);
+    }
+    std::fs::write(path, buf)
+}
+
+/// Write a PGM (P5) grayscale image; `pixels` is `[h, w]` in [0, 1].
+pub fn write_pgm(path: &std::path::Path, pixels: &[f32], h: usize, w: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), h * w);
+    let mut buf = format!("P5\n{w} {h}\n255\n").into_bytes();
+    for &v in pixels {
+        buf.push((v.clamp(0.0, 1.0) * 255.0).round() as u8);
+    }
+    std::fs::write(path, buf)
+}
+
+/// Tile `n` images (each `[h, w, ch]`, ch in {1, 3}) into one grid image
+/// with 1px separators; returns (pixels_rgb, grid_h, grid_w).
+pub fn tile_images(
+    imgs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    ch: usize,
+    cols: usize,
+) -> (Vec<f32>, usize, usize) {
+    let rows = n.div_ceil(cols);
+    let gh = rows * (h + 1) + 1;
+    let gw = cols * (w + 1) + 1;
+    let mut out = vec![0.25f32; gh * gw * 3];
+    for i in 0..n {
+        let (r0, c0) = (
+            (i / cols) * (h + 1) + 1,
+            (i % cols) * (w + 1) + 1,
+        );
+        for y in 0..h {
+            for x in 0..w {
+                for c in 0..3 {
+                    let src = imgs[((i * h + y) * w + x) * ch + c.min(ch - 1)];
+                    out[((r0 + y) * gw + (c0 + x)) * 3 + c] = src;
+                }
+            }
+        }
+    }
+    (out, gh, gw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_row_access() {
+        let s = Split {
+            n: 2,
+            row_len: 3,
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(s.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(s.rows(0, 2).len(), 6);
+    }
+
+    #[test]
+    fn ppm_and_pgm_write() {
+        let dir = std::env::temp_dir();
+        let ppm = dir.join("einet_test.ppm");
+        write_ppm(&ppm, &vec![0.5; 2 * 2 * 3], 2, 2).unwrap();
+        let content = std::fs::read(&ppm).unwrap();
+        assert!(content.starts_with(b"P6\n2 2\n255\n"));
+        assert_eq!(content.len(), 11 + 12);
+        let pgm = dir.join("einet_test.pgm");
+        write_pgm(&pgm, &vec![1.5; 4], 2, 2).unwrap(); // clamped
+        let content = std::fs::read(&pgm).unwrap();
+        assert_eq!(*content.last().unwrap(), 255);
+        let _ = std::fs::remove_file(ppm);
+        let _ = std::fs::remove_file(pgm);
+    }
+
+    #[test]
+    fn tiling_dimensions() {
+        let imgs = vec![0.5f32; 4 * 2 * 2 * 3];
+        let (out, gh, gw) = tile_images(&imgs, 4, 2, 2, 3, 2);
+        assert_eq!(gh, 2 * 3 + 1);
+        assert_eq!(gw, 2 * 3 + 1);
+        assert_eq!(out.len(), gh * gw * 3);
+    }
+}

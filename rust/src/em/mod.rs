@@ -1,0 +1,309 @@
+//! Expectation-Maximization (Section 3.5).
+//!
+//! The E-step is a backward pass (dense engine: manual backprop; AOT
+//! runtime path: the `*.train` executable's gradient outputs). This module
+//! implements the M-step (Eq. 7) and the *stochastic* EM update with
+//! gliding averages (Eq. 8/9), plus the paper's safety projections:
+//! strictly positive sum-weights (the stability condition for the
+//! log-einsum-exp trick) and Gaussian variance clipping.
+
+use crate::engine::{EinetParams, EmStats};
+use crate::layers::LayeredPlan;
+
+/// Hyper-parameters of an EM run.
+#[derive(Clone, Copy, Debug)]
+pub struct EmConfig {
+    /// stochastic step size λ in Eq. 8/9; 1.0 recovers full-batch EM
+    pub step_size: f32,
+    /// lower bound on sum-weights after normalization (Laplace-style
+    /// smoothing; keeps the log-einsum-exp argument strictly positive)
+    pub weight_floor: f32,
+    /// Gaussian variance projection interval (paper: [1e-6, 1e-2])
+    pub var_bounds: (f32, f32),
+    /// minimum posterior mass required before a leaf component updates
+    pub min_leaf_mass: f32,
+}
+
+impl Default for EmConfig {
+    fn default() -> Self {
+        Self {
+            step_size: 1.0,
+            weight_floor: 1e-12,
+            var_bounds: (1e-6, 1e-2),
+            min_leaf_mass: 1e-6,
+        }
+    }
+}
+
+/// Apply one M-step given accumulated statistics.
+///
+/// Eq. 7: `w ∝ w * sum_x n(x)` per sum node (the accumulated grad of
+/// `log P` w.r.t. linear weights *is* `n` — the autodiff trick), and
+/// `phi = sum_x p T(x) / sum_x p` per leaf; both blended with the old
+/// values by `step_size` (Eq. 8/9).
+pub fn m_step(
+    params: &mut EinetParams,
+    plan: &LayeredPlan,
+    stats: &EmStats,
+    cfg: &EmConfig,
+) {
+    let k = params.k;
+    let lambda = cfg.step_size;
+
+    // --- sum weights -----------------------------------------------------
+    for (i, lv) in plan.levels.iter().enumerate() {
+        let blocks = lv.einsum.len() * lv.einsum.ko;
+        for blk in 0..blocks {
+            let range = blk * k * k..(blk + 1) * k * k;
+            let w = &mut params.w[i][range.clone()];
+            let g = &stats.grad_w[i][range];
+            let mut total = 0.0f32;
+            let mut new = vec![0.0f32; k * k];
+            for idx in 0..k * k {
+                new[idx] = w[idx] * g[idx].max(0.0);
+                total += new[idx];
+            }
+            if total <= 0.0 {
+                continue; // no evidence touched this block: keep old weights
+            }
+            let mut renorm = 0.0f32;
+            for idx in 0..k * k {
+                let target = new[idx] / total;
+                let blended = (1.0 - lambda) * w[idx] + lambda * target;
+                w[idx] = blended.max(cfg.weight_floor);
+                renorm += w[idx];
+            }
+            for v in w.iter_mut() {
+                *v /= renorm;
+            }
+        }
+        // --- mixing weights ------------------------------------------------
+        if let (Some(wm), Some(gm), Some(m)) =
+            (params.mix[i].as_mut(), stats.grad_mix[i].as_ref(), &lv.mixing)
+        {
+            for (j, ch) in m.child_slots.iter().enumerate() {
+                let row = &mut wm[j * m.cmax..j * m.cmax + ch.len()];
+                let grow = &gm[j * m.cmax..j * m.cmax + ch.len()];
+                let mut total = 0.0f32;
+                let mut new = vec![0.0f32; ch.len()];
+                for c in 0..ch.len() {
+                    new[c] = row[c] * grow[c].max(0.0);
+                    total += new[c];
+                }
+                if total <= 0.0 {
+                    continue;
+                }
+                let mut renorm = 0.0f32;
+                for c in 0..ch.len() {
+                    let target = new[c] / total;
+                    row[c] = ((1.0 - lambda) * row[c] + lambda * target)
+                        .max(cfg.weight_floor);
+                    renorm += row[c];
+                }
+                for v in row.iter_mut() {
+                    *v /= renorm;
+                }
+            }
+        }
+    }
+
+    // --- leaves ------------------------------------------------------------
+    let s_dim = params.family.stat_dim();
+    let family = params.family;
+    let n_comp = params.num_vars * k * params.num_replica;
+    let mut phi = vec![0.0f32; s_dim];
+    let mut phi_new = vec![0.0f32; s_dim];
+    for c in 0..n_comp {
+        let mass = stats.sum_p[c];
+        if mass < cfg.min_leaf_mass {
+            continue;
+        }
+        let th = &mut params.theta[c * s_dim..(c + 1) * s_dim];
+        family.phi_from_theta(th, &mut phi);
+        for s in 0..s_dim {
+            phi_new[s] = stats.sum_pt[c * s_dim + s] / mass;
+        }
+        for s in 0..s_dim {
+            phi_new[s] = (1.0 - lambda) * phi[s] + lambda * phi_new[s];
+        }
+        family.project_phi(&mut phi_new, cfg.var_bounds);
+        family.theta_from_phi(&phi_new, th);
+    }
+}
+
+/// Convert the AOT `train` executable's theta-gradient into the
+/// `sum_pt` accumulator the M-step expects:
+///
+///   d log P / d theta = p * (T(x) - phi)   =>   sum p T = grad_theta + phi * sum p
+///
+/// (`sum_p` comes from the shift gradient.) Layouts match
+/// `EinetParams::theta` ([D, K, R, S]) and `EmStats::sum_p` ([D, K, R]).
+pub fn stats_from_natural_grads(
+    params: &EinetParams,
+    grad_theta: &[f32],
+    grad_shift: &[f32],
+    stats: &mut EmStats,
+) {
+    let s_dim = params.family.stat_dim();
+    let n_comp = params.num_vars * params.k * params.num_replica;
+    assert_eq!(grad_theta.len(), n_comp * s_dim);
+    assert_eq!(grad_shift.len(), n_comp);
+    let mut phi = vec![0.0f32; s_dim];
+    for c in 0..n_comp {
+        let p = grad_shift[c];
+        stats.sum_p[c] += p;
+        let th = &params.theta[c * s_dim..(c + 1) * s_dim];
+        params.family.phi_from_theta(th, &mut phi);
+        for s in 0..s_dim {
+            stats.sum_pt[c * s_dim + s] += grad_theta[c * s_dim + s] + phi[s] * p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::dense::DenseEngine;
+    use crate::leaves::LeafFamily;
+    use crate::structure::random_binary_trees;
+    use crate::util::rng::Rng;
+
+    fn make(nv: usize, k: usize, seed: u64) -> (DenseEngine, EinetParams, LayeredPlan) {
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, seed), k);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, seed);
+        let engine = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 256);
+        (engine, params, plan)
+    }
+
+    fn correlated_data(n: usize, nv: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * nv];
+        for b in 0..n {
+            let z = rng.bernoulli(0.5);
+            for d in 0..nv {
+                let p = if z { 0.85 } else { 0.15 };
+                x[b * nv + d] = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            }
+        }
+        x
+    }
+
+    fn avg_ll(e: &mut DenseEngine, params: &EinetParams, x: &[f32], nv: usize) -> f64 {
+        let n = x.len() / nv;
+        let mask = vec![1.0f32; nv];
+        let mut total = 0.0f64;
+        let mut logp = vec![0.0f32; e.batch_capacity()];
+        let cap = e.batch_capacity();
+        let mut b0 = 0;
+        while b0 < n {
+            let bn = cap.min(n - b0);
+            e.forward(params, &x[b0 * nv..(b0 + bn) * nv], &mask, &mut logp[..bn]);
+            total += logp[..bn].iter().map(|&l| l as f64).sum::<f64>();
+            b0 += bn;
+        }
+        total / n as f64
+    }
+
+    #[test]
+    fn full_batch_em_monotonically_improves() {
+        let nv = 8;
+        let (mut e, mut params, plan) = make(nv, 3, 0);
+        let x = correlated_data(200, nv, 1);
+        let mask = vec![1.0f32; nv];
+        let cfg = EmConfig::default();
+        let mut prev = f64::NEG_INFINITY;
+        for it in 0..6 {
+            let mut stats = EmStats::zeros_like(&params);
+            let mut logp = vec![0.0f32; 200];
+            e.forward(&params, &x, &mask, &mut logp);
+            e.backward(&params, &x, &mask, 200, &mut stats);
+            let ll = stats.loglik / 200.0;
+            assert!(
+                ll >= prev - 1e-4,
+                "iteration {it}: LL decreased {prev} -> {ll}"
+            );
+            prev = ll;
+            m_step(&mut params, &plan, &stats, &cfg);
+            params.validate(&plan).unwrap();
+        }
+        // EM must have actually learned the 2-cluster structure:
+        // final LL well above the independent-uniform baseline -nv*ln2
+        assert!(prev > -(nv as f64) * std::f64::consts::LN_2 + 0.5);
+    }
+
+    #[test]
+    fn stochastic_em_improves() {
+        let nv = 8;
+        let (mut e, mut params, plan) = make(nv, 3, 2);
+        let x = correlated_data(512, nv, 3);
+        let mask = vec![1.0f32; nv];
+        let cfg = EmConfig {
+            step_size: 0.3,
+            ..Default::default()
+        };
+        let ll0 = avg_ll(&mut e, &params, &x, nv);
+        let bs = 64;
+        for _epoch in 0..4 {
+            for mb in 0..(512 / bs) {
+                let xs = &x[mb * bs * nv..(mb + 1) * bs * nv];
+                let mut stats = EmStats::zeros_like(&params);
+                let mut logp = vec![0.0f32; bs];
+                e.forward(&params, xs, &mask, &mut logp);
+                e.backward(&params, xs, &mask, bs, &mut stats);
+                m_step(&mut params, &plan, &stats, &cfg);
+            }
+        }
+        let ll1 = avg_ll(&mut e, &params, &x, nv);
+        assert!(ll1 > ll0 + 0.3, "stochastic EM failed to improve: {ll0} -> {ll1}");
+        params.validate(&plan).unwrap();
+    }
+
+    #[test]
+    fn weights_stay_positive_and_normalized() {
+        let (mut e, mut params, plan) = make(6, 2, 4);
+        let x = correlated_data(64, 6, 5);
+        let mask = vec![1.0f32; 6];
+        let cfg = EmConfig::default();
+        for _ in 0..3 {
+            let mut stats = EmStats::zeros_like(&params);
+            let mut logp = vec![0.0f32; 64];
+            e.forward(&params, &x, &mask, &mut logp);
+            e.backward(&params, &x, &mask, 64, &mut stats);
+            m_step(&mut params, &plan, &stats, &cfg);
+        }
+        for wl in &params.w {
+            for &v in wl {
+                assert!(v > 0.0, "weight hit zero");
+            }
+        }
+        params.validate(&plan).unwrap();
+    }
+
+    #[test]
+    fn natural_grad_conversion_identity() {
+        // p and phi known: grad_theta = p (T - phi); reconstruct sum_pt.
+        let (_, params, _) = make(4, 2, 6);
+        let s_dim = params.family.stat_dim();
+        let n_comp = params.num_vars * params.k * params.num_replica;
+        let mut stats = EmStats::zeros_like(&params);
+        // suppose every component saw p = 2.0 with T(x) = 1.0 (x=1)
+        let mut phi = vec![0.0f32; s_dim];
+        let mut grad_theta = vec![0.0f32; n_comp * s_dim];
+        let grad_shift = vec![2.0f32; n_comp];
+        for c in 0..n_comp {
+            params
+                .family
+                .phi_from_theta(&params.theta[c * s_dim..(c + 1) * s_dim], &mut phi);
+            grad_theta[c * s_dim] = 2.0 * (1.0 - phi[0]);
+        }
+        stats_from_natural_grads(&params, &grad_theta, &grad_shift, &mut stats);
+        for c in 0..n_comp {
+            assert!((stats.sum_p[c] - 2.0).abs() < 1e-6);
+            assert!(
+                (stats.sum_pt[c * s_dim] - 2.0).abs() < 1e-5,
+                "sum_pt {} != 2",
+                stats.sum_pt[c * s_dim]
+            );
+        }
+    }
+}

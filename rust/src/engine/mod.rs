@@ -1,0 +1,375 @@
+//! Execution engines over a [`LayeredPlan`].
+//!
+//! * [`dense::DenseEngine`] — the EiNet layout (the paper's contribution):
+//!   per-level fused log-einsum-exp, no explicit product materialization.
+//! * [`sparse::SparseEngine`] — the LibSPN/SPFlow-style baseline: node-by-
+//!   node log-domain evaluation with explicitly materialized product
+//!   vectors and per-entry log-sum-exp (Section 3.2's "indirect
+//!   implementation"), used as the comparator in Fig. 3 / Fig. 6.
+//!
+//! Both engines share the parameter container [`EinetParams`] and produce
+//! identical numbers (cross-checked in tests), differing only in layout,
+//! speed, and memory.
+
+pub mod dense;
+pub mod sparse;
+
+use anyhow::{ensure, Result};
+
+use crate::layers::LayeredPlan;
+use crate::leaves::LeafFamily;
+use crate::util::rng::Rng;
+
+/// All trainable parameters of an EiNet.
+///
+/// Layouts (row-major):
+///   theta   [D, K, R, S]          natural leaf parameters
+///   w[i]    [L_i, Ko_i, K, K]     per-level einsum weights (linear domain,
+///                                 normalized over the trailing K*K block)
+///   mix[i]  [M_i, Cmax_i]         per-level mixing weights (normalized
+///                                 over the real children; 0 on padding)
+#[derive(Clone, Debug)]
+pub struct EinetParams {
+    pub num_vars: usize,
+    pub k: usize,
+    pub num_replica: usize,
+    pub family: LeafFamily,
+    pub theta: Vec<f32>,
+    pub w: Vec<Vec<f32>>,
+    pub mix: Vec<Option<Vec<f32>>>,
+}
+
+impl EinetParams {
+    /// Random initialization matching python `EiNet.init_params` semantics
+    /// (uniform positive weights, normalized; family-specific theta).
+    pub fn init(plan: &LayeredPlan, family: LeafFamily, seed: u64) -> Self {
+        let (d, k, r, s) = (
+            plan.graph.num_vars,
+            plan.k,
+            plan.num_replica,
+            family.stat_dim(),
+        );
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0.0f32; d * k * r * s];
+        for chunk in theta.chunks_mut(s) {
+            family.init_theta(&mut rng, chunk);
+        }
+        let mut w = Vec::new();
+        let mut mix = Vec::new();
+        for lv in &plan.levels {
+            let l = lv.einsum.len();
+            let ko = lv.einsum.ko;
+            let mut wl = vec![0.0f32; l * ko * k * k];
+            for block in wl.chunks_mut(k * k) {
+                let mut total = 0.0f32;
+                for v in block.iter_mut() {
+                    *v = rng.uniform_in(0.01, 1.0) as f32;
+                    total += *v;
+                }
+                for v in block.iter_mut() {
+                    *v /= total;
+                }
+            }
+            w.push(wl);
+            mix.push(lv.mixing.as_ref().map(|m| {
+                let mut wm = vec![0.0f32; m.len() * m.cmax];
+                for (j, ch) in m.child_slots.iter().enumerate() {
+                    let row = &mut wm[j * m.cmax..(j + 1) * m.cmax];
+                    let mut total = 0.0f32;
+                    for slot in 0..ch.len() {
+                        row[slot] = rng.uniform_in(0.01, 1.0) as f32;
+                        total += row[slot];
+                    }
+                    for slot in 0..ch.len() {
+                        row[slot] /= total;
+                    }
+                }
+                wm
+            }));
+        }
+        Self {
+            num_vars: d,
+            k,
+            num_replica: r,
+            family,
+            theta,
+            w,
+            mix,
+        }
+    }
+
+    /// Index into theta for (var, component, replica): start of the
+    /// `stat_dim`-length natural-parameter slice.
+    #[inline]
+    pub fn theta_at(&self, d: usize, k: usize, r: usize) -> usize {
+        ((d * self.k + k) * self.num_replica + r) * self.family.stat_dim()
+    }
+
+    /// Total parameter scalar count.
+    pub fn num_params(&self) -> usize {
+        self.theta.len()
+            + self.w.iter().map(Vec::len).sum::<usize>()
+            + self
+                .mix
+                .iter()
+                .map(|m| m.as_ref().map_or(0, Vec::len))
+                .sum::<usize>()
+    }
+
+    /// Verify normalization invariants (tests + after checkpoint load).
+    pub fn validate(&self, plan: &LayeredPlan) -> Result<()> {
+        let k = self.k;
+        for (i, lv) in plan.levels.iter().enumerate() {
+            for (b, block) in self.w[i].chunks(k * k).enumerate() {
+                let sum: f32 = block.iter().sum();
+                ensure!(
+                    (sum - 1.0).abs() < 1e-3,
+                    "w[{i}] block {b} not normalized: {sum}"
+                );
+                ensure!(
+                    block.iter().all(|&v| v >= 0.0),
+                    "w[{i}] has negative entries"
+                );
+            }
+            if let (Some(wm), Some(m)) = (&self.mix[i], &lv.mixing) {
+                for (j, ch) in m.child_slots.iter().enumerate() {
+                    let row = &wm[j * m.cmax..(j + 1) * m.cmax];
+                    let sum: f32 = row[..ch.len()].iter().sum();
+                    ensure!(
+                        (sum - 1.0).abs() < 1e-3,
+                        "mix[{i}] row {j} not normalized: {sum}"
+                    );
+                    ensure!(
+                        row[ch.len()..].iter().all(|&v| v == 0.0),
+                        "mix[{i}] row {j} has mass on padding"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a simple length-prefixed binary checkpoint.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        let push_usize =
+            |buf: &mut Vec<u8>, v: usize| buf.extend_from_slice(&(v as u64).to_le_bytes());
+        let push_vec = |buf: &mut Vec<u8>, v: &[f32]| {
+            buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        buf.extend_from_slice(b"EINET001");
+        push_usize(&mut buf, self.num_vars);
+        push_usize(&mut buf, self.k);
+        push_usize(&mut buf, self.num_replica);
+        push_vec(&mut buf, &self.theta);
+        push_usize(&mut buf, self.w.len());
+        for wl in &self.w {
+            push_vec(&mut buf, wl);
+        }
+        for m in &self.mix {
+            match m {
+                Some(v) => push_vec(&mut buf, v),
+                None => push_usize(&mut buf, usize::MAX),
+            }
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`EinetParams::save`]; `family` must be
+    /// supplied by the caller (it is part of the experiment config).
+    pub fn load(path: &std::path::Path, family: LeafFamily) -> Result<Self> {
+        let data = std::fs::read(path)?;
+        let mut pos;
+        let take_u64 = |data: &[u8], pos: &mut usize| -> Result<u64> {
+            ensure!(*pos + 8 <= data.len(), "truncated checkpoint");
+            let v = u64::from_le_bytes(data[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            Ok(v)
+        };
+        ensure!(&data[..8] == b"EINET001", "bad checkpoint magic");
+        pos = 8;
+        let num_vars = take_u64(&data, &mut pos)? as usize;
+        let k = take_u64(&data, &mut pos)? as usize;
+        let num_replica = take_u64(&data, &mut pos)? as usize;
+        let take_vec = |data: &[u8], pos: &mut usize| -> Result<Vec<f32>> {
+            let n = take_u64(data, pos)? as usize;
+            ensure!(*pos + 4 * n <= data.len(), "truncated tensor");
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(f32::from_le_bytes(
+                    data[*pos + 4 * i..*pos + 4 * i + 4].try_into().unwrap(),
+                ));
+            }
+            *pos += 4 * n;
+            Ok(v)
+        };
+        let theta = take_vec(&data, &mut pos)?;
+        let n_levels = take_u64(&data, &mut pos)? as usize;
+        let mut w = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            w.push(take_vec(&data, &mut pos)?);
+        }
+        let mut mix = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            let marker =
+                u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap());
+            if marker == u64::MAX {
+                pos += 8;
+                mix.push(None);
+            } else {
+                mix.push(Some(take_vec(&data, &mut pos)?));
+            }
+        }
+        Ok(Self {
+            num_vars,
+            k,
+            num_replica,
+            family,
+            theta,
+            w,
+            mix,
+        })
+    }
+}
+
+/// Accumulated E-step statistics (Eq. 6/7): sufficient for the M-step.
+#[derive(Clone, Debug)]
+pub struct EmStats {
+    /// d(sum_b log P)/dw per level, same layout as `EinetParams::w`
+    pub grad_w: Vec<Vec<f32>>,
+    /// d(sum_b log P)/dmix per level
+    pub grad_mix: Vec<Option<Vec<f32>>>,
+    /// sum_b p_L per (d, k, r) — layout [D, K, R]
+    pub sum_p: Vec<f32>,
+    /// sum_b p_L * T(x) per (d, k, r, s) — layout [D, K, R, S]
+    pub sum_pt: Vec<f32>,
+    /// number of samples accumulated
+    pub count: usize,
+    /// sum of log-likelihoods over accumulated samples
+    pub loglik: f64,
+}
+
+impl EmStats {
+    pub fn zeros_like(params: &EinetParams) -> Self {
+        Self {
+            grad_w: params.w.iter().map(|w| vec![0.0; w.len()]).collect(),
+            grad_mix: params
+                .mix
+                .iter()
+                .map(|m| m.as_ref().map(|v| vec![0.0; v.len()]))
+                .collect(),
+            sum_p: vec![0.0; params.num_vars * params.k * params.num_replica],
+            sum_pt: vec![
+                0.0;
+                params.num_vars
+                    * params.k
+                    * params.num_replica
+                    * params.family.stat_dim()
+            ],
+            count: 0,
+            loglik: 0.0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for g in &mut self.grad_w {
+            g.fill(0.0);
+        }
+        for g in self.grad_mix.iter_mut().flatten() {
+            g.fill(0.0);
+        }
+        self.sum_p.fill(0.0);
+        self.sum_pt.fill(0.0);
+        self.count = 0;
+        self.loglik = 0.0;
+    }
+
+    /// Merge statistics from another accumulator (parameter-server reduce).
+    pub fn merge(&mut self, other: &EmStats) {
+        for (a, b) in self.grad_w.iter_mut().zip(&other.grad_w) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        for (a, b) in self.grad_mix.iter_mut().zip(&other.grad_mix) {
+            if let (Some(x), Some(y)) = (a.as_mut(), b.as_ref()) {
+                for (u, v) in x.iter_mut().zip(y) {
+                    *u += v;
+                }
+            }
+        }
+        for (x, y) in self.sum_p.iter_mut().zip(&other.sum_p) {
+            *x += y;
+        }
+        for (x, y) in self.sum_pt.iter_mut().zip(&other.sum_pt) {
+            *x += y;
+        }
+        self.count += other.count;
+        self.loglik += other.loglik;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structure::random_binary_trees;
+
+    fn plan() -> LayeredPlan {
+        LayeredPlan::compile(random_binary_trees(8, 2, 3, 0), 4)
+    }
+
+    #[test]
+    fn init_is_normalized() {
+        let p = plan();
+        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 0);
+        params.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let p = plan();
+        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 1);
+        let dir = std::env::temp_dir().join("einet_test_ckpt.bin");
+        params.save(&dir).unwrap();
+        let loaded = EinetParams::load(&dir, LeafFamily::Bernoulli).unwrap();
+        assert_eq!(params.theta, loaded.theta);
+        assert_eq!(params.w, loaded.w);
+        assert_eq!(params.mix, loaded.mix);
+        let _ = std::fs::remove_file(dir);
+    }
+
+    #[test]
+    fn stats_merge_adds() {
+        let p = plan();
+        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 2);
+        let mut a = EmStats::zeros_like(&params);
+        let mut b = EmStats::zeros_like(&params);
+        a.sum_p[0] = 1.0;
+        b.sum_p[0] = 2.0;
+        a.count = 3;
+        b.count = 4;
+        b.loglik = -5.0;
+        a.merge(&b);
+        assert_eq!(a.sum_p[0], 3.0);
+        assert_eq!(a.count, 7);
+        assert_eq!(a.loglik, -5.0);
+    }
+
+    #[test]
+    fn num_params_counts_everything() {
+        let p = plan();
+        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 3);
+        let expect = params.theta.len()
+            + params.w.iter().map(Vec::len).sum::<usize>()
+            + params
+                .mix
+                .iter()
+                .map(|m| m.as_ref().map_or(0, Vec::len))
+                .sum::<usize>();
+        assert_eq!(params.num_params(), expect);
+    }
+}

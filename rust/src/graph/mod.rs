@@ -1,0 +1,272 @@
+//! Region graphs: the vectorized-PC skeleton (Section 3.1).
+//!
+//! A region graph is a DAG of *regions* (scopes, i.e. sets of variables)
+//! and *partitions* (binary decompositions of a region into two disjoint
+//! child regions). Regions become length-K vectors of densities, partitions
+//! become outer products, and the (region, partition) containment relation
+//! becomes the sum/product alternation of the PC. Smoothness and
+//! decomposability are enforced structurally at insertion time and can be
+//! re-checked with [`RegionGraph::validate`].
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::bitset::BitSet;
+
+/// Index of a region in its graph.
+pub type RegionId = usize;
+/// Index of a partition in its graph.
+pub type PartitionId = usize;
+
+/// A scope (set of variables) node.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub scope: BitSet,
+    /// Partitions decomposing this region (empty ⇒ leaf).
+    pub partitions: Vec<PartitionId>,
+    /// For leaf regions: the exponential-family replica index (Section
+    /// 3.4); leaves sharing a replica have pairwise disjoint scopes.
+    pub replica: Option<usize>,
+}
+
+impl Region {
+    pub fn is_leaf(&self) -> bool {
+        self.partitions.is_empty()
+    }
+}
+
+/// A binary decomposition of `out` into `left` ⊎ `right`.
+#[derive(Clone, Copy, Debug)]
+pub struct Partition {
+    pub id: PartitionId,
+    pub left: RegionId,
+    pub right: RegionId,
+    pub out: RegionId,
+}
+
+/// The region graph: a smooth + decomposable vectorized-PC skeleton.
+#[derive(Clone, Debug)]
+pub struct RegionGraph {
+    pub num_vars: usize,
+    pub regions: Vec<Region>,
+    pub partitions: Vec<Partition>,
+    pub root: RegionId,
+    by_scope: HashMap<BitSet, RegionId>,
+}
+
+impl RegionGraph {
+    /// New graph over `num_vars` variables; the root region (full scope)
+    /// is created eagerly.
+    pub fn new(num_vars: usize) -> Self {
+        let mut g = Self {
+            num_vars,
+            regions: Vec::new(),
+            partitions: Vec::new(),
+            root: 0,
+            by_scope: HashMap::new(),
+        };
+        g.root = g.region(BitSet::full(num_vars));
+        g
+    }
+
+    /// Get-or-create the region with the given scope.
+    pub fn region(&mut self, scope: BitSet) -> RegionId {
+        if let Some(&id) = self.by_scope.get(&scope) {
+            return id;
+        }
+        let id = self.regions.len();
+        self.regions.push(Region {
+            id,
+            scope: scope.clone(),
+            partitions: Vec::new(),
+            replica: None,
+        });
+        self.by_scope.insert(scope, id);
+        id
+    }
+
+    /// Add a partition of `out` into the two scopes. Enforces smoothness
+    /// (union equals the parent scope) and decomposability (disjointness).
+    pub fn partition(
+        &mut self,
+        out: RegionId,
+        left_scope: BitSet,
+        right_scope: BitSet,
+    ) -> Result<PartitionId> {
+        ensure!(
+            !left_scope.is_empty() && !right_scope.is_empty(),
+            "empty child scope"
+        );
+        ensure!(
+            !left_scope.intersects(&right_scope),
+            "decomposability violated: overlapping children"
+        );
+        ensure!(
+            left_scope.union(&right_scope) == self.regions[out].scope,
+            "smoothness violated: children do not cover the parent scope"
+        );
+        let left = self.region(left_scope);
+        let right = self.region(right_scope);
+        let id = self.partitions.len();
+        self.partitions.push(Partition {
+            id,
+            left,
+            right,
+            out,
+        });
+        self.regions[out].partitions.push(id);
+        Ok(id)
+    }
+
+    pub fn leaves(&self) -> impl Iterator<Item = &Region> {
+        self.regions.iter().filter(|r| r.is_leaf())
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.leaves().count()
+    }
+
+    /// Re-check all structural invariants (used by tests and after
+    /// deserialization).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.regions[self.root].scope == BitSet::full(self.num_vars),
+            "root scope must be the full variable set"
+        );
+        for p in &self.partitions {
+            let ls = &self.regions[p.left].scope;
+            let rs = &self.regions[p.right].scope;
+            if ls.intersects(rs) {
+                bail!("partition {} violates decomposability", p.id);
+            }
+            if ls.union(rs) != self.regions[p.out].scope {
+                bail!("partition {} violates smoothness", p.id);
+            }
+        }
+        for r in &self.regions {
+            for &pid in &r.partitions {
+                ensure!(
+                    self.partitions[pid].out == r.id,
+                    "partition/region cross-link broken"
+                );
+            }
+        }
+        // acyclic by construction (children have strictly smaller scopes),
+        // but verify scope sizes strictly decrease to be safe:
+        for p in &self.partitions {
+            ensure!(
+                self.regions[p.left].scope.len() < self.regions[p.out].scope.len(),
+                "child scope must be strictly smaller"
+            );
+        }
+        Ok(())
+    }
+
+    /// Greedy replica assignment (Section 3.4): each leaf gets the lowest
+    /// replica index whose already-claimed scope does not intersect its
+    /// own. Returns the number of replicas R.
+    pub fn assign_replicas(&mut self) -> usize {
+        let mut order: Vec<RegionId> = self
+            .regions
+            .iter()
+            .filter(|r| r.is_leaf())
+            .map(|r| r.id)
+            .collect();
+        order.sort_by_key(|&id| self.regions[id].scope.min().unwrap_or(0));
+        let mut used: Vec<BitSet> = Vec::new();
+        for id in order {
+            let scope = self.regions[id].scope.clone();
+            let slot = used.iter().position(|occ| !occ.intersects(&scope));
+            match slot {
+                Some(i) => {
+                    used[i].union_with(&scope);
+                    self.regions[id].replica = Some(i);
+                }
+                None => {
+                    self.regions[id].replica = Some(used.len());
+                    used.push(scope);
+                }
+            }
+        }
+        used.len().max(1)
+    }
+
+    /// Count of "sum nodes" in the paper's sense (vectorized): one per
+    /// partition (simple sums) plus one per multi-partition region
+    /// (aggregated sums of the mixing layer).
+    pub fn num_sums(&self) -> usize {
+        self.partitions.len()
+            + self
+                .regions
+                .iter()
+                .filter(|r| r.partitions.len() > 1)
+                .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bs(n: usize, idx: &[usize]) -> BitSet {
+        BitSet::from_indices(n, idx.iter().copied())
+    }
+
+    #[test]
+    fn dedups_regions_by_scope() {
+        let mut g = RegionGraph::new(4);
+        let a = g.region(bs(4, &[0, 1]));
+        let b = g.region(bs(4, &[0, 1]));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partition_enforces_invariants() {
+        let mut g = RegionGraph::new(4);
+        let root = g.root;
+        // overlapping children rejected
+        assert!(g
+            .partition(root, bs(4, &[0, 1, 2]), bs(4, &[2, 3]))
+            .is_err());
+        // non-covering children rejected
+        assert!(g.partition(root, bs(4, &[0]), bs(4, &[1])).is_err());
+        // valid split accepted
+        assert!(g
+            .partition(root, bs(4, &[0, 1]), bs(4, &[2, 3]))
+            .is_ok());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn leaves_and_sums() {
+        let mut g = RegionGraph::new(4);
+        let root = g.root;
+        g.partition(root, bs(4, &[0, 1]), bs(4, &[2, 3])).unwrap();
+        g.partition(root, bs(4, &[0, 2]), bs(4, &[1, 3])).unwrap();
+        assert_eq!(g.num_leaves(), 4);
+        // 2 partitions + 1 multi-partition region
+        assert_eq!(g.num_sums(), 3);
+    }
+
+    #[test]
+    fn replica_assignment_disjointness() {
+        let mut g = RegionGraph::new(4);
+        let root = g.root;
+        g.partition(root, bs(4, &[0, 1]), bs(4, &[2, 3])).unwrap();
+        g.partition(root, bs(4, &[0, 2]), bs(4, &[1, 3])).unwrap();
+        let r = g.assign_replicas();
+        assert!(r >= 2);
+        // leaves sharing a replica must be disjoint
+        let mut claimed: HashMap<usize, BitSet> = HashMap::new();
+        for leaf in g.leaves() {
+            let rep = leaf.replica.unwrap();
+            let entry = claimed
+                .entry(rep)
+                .or_insert_with(|| BitSet::new(4));
+            assert!(!entry.intersects(&leaf.scope));
+            entry.union_with(&leaf.scope);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Topological layering (Appendix A, Algorithm 1) and layer extraction.
+//!
+//! Compiles a [`RegionGraph`] into a bottom-up [`LayeredPlan`]: per level,
+//! one *einsum layer* holding every partition whose output region sits at
+//! that level (the monolithic `S_lk = W_lkij N_li N'_lj` of Eq. 5), plus an
+//! optional *mixing layer* for regions with more than one partition
+//! (Appendix B). The plan is consumed by both rust engines and mirrors the
+//! python build-time layering exactly, including the rule that the root is
+//! bumped onto a dedicated top level so its Ko = 1 einsum layer never mixes
+//! with Ko = K slots.
+
+use crate::graph::{PartitionId, RegionGraph, RegionId};
+
+/// Where a region's output vector lives after its level is computed.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum RegionSlot {
+    /// slot in the level's einsum-layer output (single-partition region)
+    Einsum(usize),
+    /// slot in the level's mixing-layer output (multi-partition region)
+    Mixing(usize),
+}
+
+/// One einsum layer: `L` partitions evaluated by a single fused operation.
+#[derive(Clone, Debug)]
+pub struct EinsumLayer {
+    pub partition_ids: Vec<PartitionId>,
+    /// left/right child region per slot (length L)
+    pub left: Vec<RegionId>,
+    pub right: Vec<RegionId>,
+    /// output vector length of every slot (K, or 1 for the root level)
+    pub ko: usize,
+}
+
+impl EinsumLayer {
+    pub fn len(&self) -> usize {
+        self.partition_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partition_ids.is_empty()
+    }
+}
+
+/// One mixing layer: `M` regions, each aggregating >= 2 einsum slots.
+#[derive(Clone, Debug)]
+pub struct MixingLayer {
+    pub region_ids: Vec<RegionId>,
+    /// per region: the einsum-layer slot indices it mixes
+    pub child_slots: Vec<Vec<usize>>,
+    /// max number of children (for zero-padded weight storage)
+    pub cmax: usize,
+}
+
+impl MixingLayer {
+    pub fn len(&self) -> usize {
+        self.region_ids.len()
+    }
+}
+
+/// One level of the plan.
+#[derive(Clone, Debug)]
+pub struct Level {
+    pub einsum: EinsumLayer,
+    pub mixing: Option<MixingLayer>,
+    /// (region, slot) pairs: where each region's output lives
+    pub region_out: Vec<(RegionId, RegionSlot)>,
+}
+
+/// The full bottom-up execution plan.
+#[derive(Clone, Debug)]
+pub struct LayeredPlan {
+    pub graph: RegionGraph,
+    pub k: usize,
+    pub num_replica: usize,
+    pub levels: Vec<Level>,
+    /// leaf regions in evaluation order
+    pub leaf_region_ids: Vec<RegionId>,
+}
+
+impl LayeredPlan {
+    /// Compile a region graph. Mirrors python `structure.layerize`.
+    pub fn compile(mut graph: RegionGraph, k: usize) -> LayeredPlan {
+        graph.validate().expect("invalid region graph");
+        let num_replica = graph.assign_replicas();
+
+        // region levels, bottom-up
+        let n = graph.regions.len();
+        let mut level = vec![usize::MAX; n];
+        // iterate to fixpoint (graphs are shallow; this is simple + safe)
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for r in &graph.regions {
+                let new = if r.is_leaf() {
+                    0
+                } else {
+                    let mut m = 0usize;
+                    let mut ready = true;
+                    for &pid in &r.partitions {
+                        let p = graph.partitions[pid];
+                        if level[p.left] == usize::MAX || level[p.right] == usize::MAX {
+                            ready = false;
+                            break;
+                        }
+                        m = m.max(level[p.left]).max(level[p.right]);
+                    }
+                    if !ready {
+                        continue;
+                    }
+                    m + 1
+                };
+                if level[r.id] != new {
+                    level[r.id] = new;
+                    changed = true;
+                }
+            }
+        }
+        debug_assert!(level.iter().all(|&l| l != usize::MAX));
+
+        // bump root to its own level if it shares one with another region
+        let top = *level.iter().max().unwrap();
+        let root = graph.root;
+        if level
+            .iter()
+            .enumerate()
+            .any(|(rid, &lv)| lv == level[root] && rid != root)
+        {
+            level[root] = top + 1;
+        }
+        let max_level = level[root];
+
+        let mut levels = Vec::new();
+        for lv in 1..=max_level {
+            let rids: Vec<RegionId> = graph
+                .regions
+                .iter()
+                .filter(|r| level[r.id] == lv && !r.is_leaf())
+                .map(|r| r.id)
+                .collect();
+            if rids.is_empty() {
+                continue;
+            }
+            let mut partition_ids = Vec::new();
+            let mut left = Vec::new();
+            let mut right = Vec::new();
+            let mut slot_of = std::collections::HashMap::new();
+            for &rid in &rids {
+                for &pid in &graph.regions[rid].partitions {
+                    slot_of.insert(pid, partition_ids.len());
+                    partition_ids.push(pid);
+                    left.push(graph.partitions[pid].left);
+                    right.push(graph.partitions[pid].right);
+                }
+            }
+            let ko = if rids.len() == 1 && rids[0] == root { 1 } else { k };
+            let einsum = EinsumLayer {
+                partition_ids,
+                left,
+                right,
+                ko,
+            };
+            let mut region_out = Vec::new();
+            let mut mix_rids = Vec::new();
+            let mut mix_children: Vec<Vec<usize>> = Vec::new();
+            for &rid in &rids {
+                let parts = &graph.regions[rid].partitions;
+                if parts.len() == 1 {
+                    region_out.push((rid, RegionSlot::Einsum(slot_of[&parts[0]])));
+                } else {
+                    region_out.push((rid, RegionSlot::Mixing(mix_rids.len())));
+                    mix_rids.push(rid);
+                    mix_children.push(parts.iter().map(|p| slot_of[p]).collect());
+                }
+            }
+            let mixing = if mix_rids.is_empty() {
+                None
+            } else {
+                let cmax = mix_children.iter().map(Vec::len).max().unwrap();
+                Some(MixingLayer {
+                    region_ids: mix_rids,
+                    child_slots: mix_children,
+                    cmax,
+                })
+            };
+            levels.push(Level {
+                einsum,
+                mixing,
+                region_out,
+            });
+        }
+
+        let mut leaf_region_ids: Vec<RegionId> =
+            graph.leaves().map(|r| r.id).collect();
+        leaf_region_ids.sort_unstable();
+
+        LayeredPlan {
+            graph,
+            k,
+            num_replica,
+            levels,
+            leaf_region_ids,
+        }
+    }
+
+    /// Total number of vectorized sum slots (einsum + mixing), the paper's
+    /// model-size measure.
+    pub fn num_sums(&self) -> usize {
+        self.levels
+            .iter()
+            .map(|lv| lv.einsum.len() + lv.mixing.as_ref().map_or(0, MixingLayer::len))
+            .sum()
+    }
+
+    /// Total trainable parameter count (sum weights + mixing weights),
+    /// excluding leaf parameters.
+    pub fn num_sum_params(&self) -> usize {
+        self.levels
+            .iter()
+            .map(|lv| {
+                lv.einsum.len() * lv.einsum.ko * self.k * self.k
+                    + lv.mixing
+                        .as_ref()
+                        .map_or(0, |m| m.len() * m.cmax)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structure::{poon_domingos, random_binary_trees, PdAxes};
+
+    #[test]
+    fn topological_order_holds() {
+        let g = random_binary_trees(16, 3, 4, 0);
+        let plan = LayeredPlan::compile(g, 5);
+        let mut produced: std::collections::HashSet<usize> =
+            plan.leaf_region_ids.iter().copied().collect();
+        for lv in &plan.levels {
+            for &rid in lv.einsum.left.iter().chain(&lv.einsum.right) {
+                assert!(produced.contains(&rid), "input region not yet produced");
+            }
+            for &(rid, _) in &lv.region_out {
+                produced.insert(rid);
+            }
+        }
+        assert!(produced.contains(&plan.graph.root));
+    }
+
+    #[test]
+    fn root_level_is_alone_with_ko_1() {
+        let g = poon_domingos(4, 4, 2, PdAxes::Both);
+        let plan = LayeredPlan::compile(g, 6);
+        let top = plan.levels.last().unwrap();
+        assert_eq!(top.einsum.ko, 1);
+        let root = plan.graph.root;
+        for &pid in &top.einsum.partition_ids {
+            assert_eq!(plan.graph.partitions[pid].out, root);
+        }
+    }
+
+    #[test]
+    fn mixing_covers_exactly_multi_partition_regions() {
+        let g = poon_domingos(4, 6, 2, PdAxes::Both);
+        let plan = LayeredPlan::compile(g, 3);
+        for lv in &plan.levels {
+            for &(rid, slot) in &lv.region_out {
+                let nparts = plan.graph.regions[rid].partitions.len();
+                match slot {
+                    RegionSlot::Einsum(_) => assert_eq!(nparts, 1),
+                    RegionSlot::Mixing(_) => assert!(nparts > 1),
+                }
+            }
+            if let Some(m) = &lv.mixing {
+                for ch in &m.child_slots {
+                    assert!(ch.len() >= 2 && ch.len() <= m.cmax);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_partition_appears_exactly_once() {
+        let g = random_binary_trees(12, 3, 3, 1);
+        let total: usize = {
+            let plan = LayeredPlan::compile(g, 4);
+            let mut seen = std::collections::HashSet::new();
+            for lv in &plan.levels {
+                for &pid in &lv.einsum.partition_ids {
+                    assert!(seen.insert(pid), "partition duplicated across layers");
+                }
+            }
+            seen.len()
+        };
+        let g2 = random_binary_trees(12, 3, 3, 1);
+        assert_eq!(total, g2.partitions.len());
+    }
+
+    #[test]
+    fn num_sums_matches_graph_count() {
+        let g = poon_domingos(4, 4, 2, PdAxes::Both);
+        let expected = g.num_sums();
+        let plan = LayeredPlan::compile(g, 4);
+        assert_eq!(plan.num_sums(), expected);
+    }
+
+    #[test]
+    fn replica_count_positive_and_recorded() {
+        let g = random_binary_trees(8, 2, 3, 2);
+        let plan = LayeredPlan::compile(g, 2);
+        assert!(plan.num_replica >= 1);
+        for &rid in &plan.leaf_region_ids {
+            assert!(plan.graph.regions[rid].replica.unwrap() < plan.num_replica);
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! Exponential-family input layer (Section 3.4).
+//!
+//! Leaves compute log-densities of an exponential family
+//! `log L = log h(x) + T(x)^T theta - A(theta)`. Parameters are kept in the
+//! *natural* form `theta` for evaluation and converted to/from the
+//! *expectation* form `phi = E[T(X)]` for EM updates (Sato, 1999): the EM
+//! M-step is simply `phi <- sum_x p_L(x) T(x) / sum_x p_L(x)` followed by a
+//! projection (e.g. the paper's variance clipping to [1e-6, 1e-2]).
+//!
+//! Implemented families: Bernoulli, diagonal Gaussian with `channels`
+//! observation channels per variable (the paper's RGB-factorized leaves),
+//! Categorical, and Binomial.
+
+use crate::util::rng::Rng;
+
+/// Supported exponential families.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum LeafFamily {
+    Bernoulli,
+    /// Diagonal Gaussian over `channels` observation channels, factorized
+    /// per channel (e.g. channels = 3 for RGB pixels).
+    Gaussian { channels: usize },
+    Categorical { cats: usize },
+    Binomial { trials: u32 },
+}
+
+impl LeafFamily {
+    /// Number of observed values per variable (columns of x).
+    pub fn obs_dim(&self) -> usize {
+        match self {
+            LeafFamily::Gaussian { channels } => *channels,
+            _ => 1,
+        }
+    }
+
+    /// Dimensionality of the sufficient statistic T(x) (== of theta/phi).
+    pub fn stat_dim(&self) -> usize {
+        match self {
+            LeafFamily::Bernoulli | LeafFamily::Binomial { .. } => 1,
+            LeafFamily::Gaussian { channels } => 2 * channels,
+            LeafFamily::Categorical { cats } => *cats,
+        }
+    }
+
+    /// The per-component log-normalizer term that does not depend on x
+    /// (A(theta) plus constant parts of log h). Precomputing it once per
+    /// batch moves all transcendentals off the per-sample hot path — see
+    /// [`LeafFamily::log_prob_with_const`].
+    pub fn log_norm_const(&self, theta: &[f32]) -> f32 {
+        match self {
+            LeafFamily::Bernoulli => softplus(theta[0]),
+            LeafFamily::Gaussian { channels } => {
+                let ch = *channels;
+                let mut c = 0.0f32;
+                for i in 0..ch {
+                    let (t1, t2) = (theta[i], theta[ch + i]);
+                    c += -t1 * t1 / (4.0 * t2) - 0.5 * (-2.0 * t2).ln()
+                        + 0.5 * (2.0 * std::f32::consts::PI).ln();
+                }
+                c
+            }
+            LeafFamily::Categorical { .. } => {
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = theta.iter().map(|&t| (t - m).exp()).sum();
+                m + z.ln()
+            }
+            LeafFamily::Binomial { trials } => {
+                *trials as f32 * softplus(theta[0])
+            }
+        }
+    }
+
+    /// Fast log-density using a precomputed [`LeafFamily::log_norm_const`]:
+    /// only multiply-adds (plus `ln_choose` for Binomial) per call.
+    #[inline]
+    pub fn log_prob_with_const(&self, theta: &[f32], c: f32, x: &[f32]) -> f32 {
+        match self {
+            LeafFamily::Bernoulli => x[0] * theta[0] - c,
+            LeafFamily::Gaussian { channels } => {
+                let ch = *channels;
+                let mut lp = -c;
+                for i in 0..ch {
+                    lp += x[i] * theta[i] + x[i] * x[i] * theta[ch + i];
+                }
+                lp
+            }
+            LeafFamily::Categorical { .. } => theta[x[0] as usize] - c,
+            LeafFamily::Binomial { trials } => {
+                ln_choose(*trials, x[0] as u32) + x[0] * theta[0] - c
+            }
+        }
+    }
+
+    /// log-density of one component: `theta` has length `stat_dim`,
+    /// `x` has length `obs_dim`.
+    pub fn log_prob(&self, theta: &[f32], x: &[f32]) -> f32 {
+        match self {
+            LeafFamily::Bernoulli => {
+                let t = theta[0];
+                // x*t - log(1+e^t), stable
+                x[0] * t - softplus(t)
+            }
+            LeafFamily::Gaussian { channels } => {
+                let ch = *channels;
+                let mut lp = 0.0f32;
+                for c in 0..ch {
+                    let (t1, t2) = (theta[c], theta[ch + c]);
+                    let a = -t1 * t1 / (4.0 * t2) - 0.5 * (-2.0 * t2).ln();
+                    lp += x[c] * t1 + x[c] * x[c] * t2
+                        - a
+                        - 0.5 * (2.0 * std::f32::consts::PI).ln();
+                }
+                lp
+            }
+            LeafFamily::Categorical { cats } => {
+                let v = x[0] as usize;
+                debug_assert!(v < *cats);
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = theta.iter().map(|&t| (t - m).exp()).sum();
+                theta[v] - (m + z.ln())
+            }
+            LeafFamily::Binomial { trials } => {
+                let n = *trials as f32;
+                let t = theta[0];
+                ln_choose(*trials, x[0] as u32) + x[0] * t - n * softplus(t)
+            }
+        }
+    }
+
+    /// Sufficient statistics T(x) written into `out` (length `stat_dim`).
+    pub fn suff_stats(&self, x: &[f32], out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli | LeafFamily::Binomial { .. } => out[0] = x[0],
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    out[c] = x[c];
+                    out[channels + c] = x[c] * x[c];
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                out[..*cats].fill(0.0);
+                out[x[0] as usize] = 1.0;
+            }
+        }
+    }
+
+    /// Expectation parameters phi from natural parameters theta.
+    pub fn phi_from_theta(&self, theta: &[f32], phi: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => phi[0] = sigmoid(theta[0]),
+            LeafFamily::Binomial { trials } => {
+                phi[0] = *trials as f32 * sigmoid(theta[0])
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let (t1, t2) = (theta[c], theta[channels + c]);
+                    let var = -0.5 / t2;
+                    let mu = t1 * var;
+                    phi[c] = mu;
+                    phi[channels + c] = mu * mu + var;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = theta.iter().map(|&t| (t - m).exp()).sum();
+                for c in 0..*cats {
+                    phi[c] = (theta[c] - m).exp() / z;
+                }
+            }
+        }
+    }
+
+    /// Natural parameters theta from expectation parameters phi.
+    pub fn theta_from_phi(&self, phi: &[f32], theta: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => {
+                let p = phi[0];
+                theta[0] = p.ln() - (1.0 - p).ln();
+            }
+            LeafFamily::Binomial { trials } => {
+                let p = phi[0] / *trials as f32;
+                theta[0] = p.ln() - (1.0 - p).ln();
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let mu = phi[c];
+                    let var = phi[channels + c] - mu * mu;
+                    theta[c] = mu / var;
+                    theta[channels + c] = -0.5 / var;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                for c in 0..*cats {
+                    theta[c] = phi[c].ln();
+                }
+            }
+        }
+    }
+
+    /// Project phi back into the valid (and numerically safe) region.
+    /// `var_bounds` applies to Gaussian variances — the paper projects to
+    /// [1e-6, 1e-2] for images.
+    pub fn project_phi(&self, phi: &mut [f32], var_bounds: (f32, f32)) {
+        const EPS: f32 = 1e-4;
+        match self {
+            LeafFamily::Bernoulli => phi[0] = phi[0].clamp(EPS, 1.0 - EPS),
+            LeafFamily::Binomial { trials } => {
+                let n = *trials as f32;
+                phi[0] = phi[0].clamp(EPS * n, (1.0 - EPS) * n);
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let mu = phi[c];
+                    let var =
+                        (phi[channels + c] - mu * mu).clamp(var_bounds.0, var_bounds.1);
+                    phi[channels + c] = mu * mu + var;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                let mut total = 0.0;
+                for c in 0..*cats {
+                    phi[c] = phi[c].max(EPS);
+                    total += phi[c];
+                }
+                for c in 0..*cats {
+                    phi[c] /= total;
+                }
+            }
+        }
+    }
+
+    /// Draw a sample from the component, writing `obs_dim` values.
+    pub fn sample(&self, theta: &[f32], rng: &mut Rng, out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => {
+                out[0] = if rng.bernoulli(sigmoid(theta[0]) as f64) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            LeafFamily::Binomial { trials } => {
+                let p = sigmoid(theta[0]) as f64;
+                out[0] = (0..*trials).filter(|_| rng.bernoulli(p)).count() as f32;
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let (t1, t2) = (theta[c], theta[channels + c]);
+                    let var = -0.5 / t2;
+                    let mu = t1 * var;
+                    out[c] = mu + (var as f64).sqrt() as f32 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let w: Vec<f64> =
+                    theta[..*cats].iter().map(|&t| ((t - m) as f64).exp()).collect();
+                out[0] = rng.categorical(&w) as f32;
+            }
+        }
+    }
+
+    /// The component's mean (used for expectation-style reconstruction).
+    pub fn mean(&self, theta: &[f32], out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => out[0] = sigmoid(theta[0]),
+            LeafFamily::Binomial { trials } => {
+                out[0] = *trials as f32 * sigmoid(theta[0])
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let var = -0.5 / theta[channels + c];
+                    out[c] = theta[c] * var;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                // argmax as the representative value
+                let mut best = 0;
+                for c in 1..*cats {
+                    if theta[c] > theta[best] {
+                        best = c;
+                    }
+                }
+                out[0] = best as f32;
+            }
+        }
+    }
+
+    /// Random initialization of theta for one component.
+    pub fn init_theta(&self, rng: &mut Rng, out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => {
+                let p = rng.uniform_in(0.2, 0.8) as f32;
+                out[0] = p.ln() - (1.0 - p).ln();
+            }
+            LeafFamily::Binomial { .. } => {
+                let p = rng.uniform_in(0.2, 0.8) as f32;
+                out[0] = p.ln() - (1.0 - p).ln();
+            }
+            LeafFamily::Gaussian { channels } => {
+                for c in 0..*channels {
+                    let mu = 0.5 + 0.15 * rng.normal() as f32;
+                    let var = 0.05f32;
+                    out[c] = mu / var;
+                    out[channels + c] = -0.5 / var;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                for c in 0..*cats {
+                    out[c] = 0.1 * rng.normal() as f32;
+                }
+            }
+        }
+    }
+
+    /// Parse from a config string, e.g. "bernoulli", "gaussian:3",
+    /// "categorical:5", "binomial:8".
+    pub fn from_spec(spec: &str) -> anyhow::Result<LeafFamily> {
+        let (kind, arg) = spec.split_once(':').unwrap_or((spec, ""));
+        Ok(match kind {
+            "bernoulli" => LeafFamily::Bernoulli,
+            "gaussian" => LeafFamily::Gaussian {
+                channels: arg.parse().unwrap_or(1),
+            },
+            "categorical" => LeafFamily::Categorical {
+                cats: arg.parse().unwrap_or(2),
+            },
+            "binomial" => LeafFamily::Binomial {
+                trials: arg.parse().unwrap_or(1),
+            },
+            other => anyhow::bail!("unknown leaf family '{other}'"),
+        })
+    }
+}
+
+#[inline]
+fn sigmoid(t: f32) -> f32 {
+    1.0 / (1.0 + (-t).exp())
+}
+
+#[inline]
+fn softplus(t: f32) -> f32 {
+    if t > 20.0 {
+        t
+    } else {
+        t.exp().ln_1p()
+    }
+}
+
+fn ln_choose(n: u32, k: u32) -> f32 {
+    debug_assert!(k <= n);
+    let mut acc = 0.0f64;
+    for i in 0..k.min(n - k) {
+        acc += ((n - i) as f64).ln() - ((i + 1) as f64).ln();
+    }
+    acc as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bernoulli_normalizes() {
+        let fam = LeafFamily::Bernoulli;
+        let theta = [0.7f32];
+        let p0 = fam.log_prob(&theta, &[0.0]).exp();
+        let p1 = fam.log_prob(&theta, &[1.0]).exp();
+        assert!((p0 + p1 - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn categorical_normalizes() {
+        let fam = LeafFamily::Categorical { cats: 4 };
+        let theta = [0.1f32, -0.5, 1.2, 0.0];
+        let total: f32 = (0..4)
+            .map(|v| fam.log_prob(&theta, &[v as f32]).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn binomial_normalizes() {
+        let fam = LeafFamily::Binomial { trials: 6 };
+        let theta = [-0.3f32];
+        let total: f32 = (0..=6)
+            .map(|v| fam.log_prob(&theta, &[v as f32]).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gaussian_integrates_to_one() {
+        let fam = LeafFamily::Gaussian { channels: 1 };
+        let mut theta = [0.0f32; 2];
+        let mut rng = Rng::new(0);
+        fam.init_theta(&mut rng, &mut theta);
+        let n = 20_000;
+        let (lo, hi) = (-5.0f32, 6.0f32);
+        let dx = (hi - lo) / n as f32;
+        let total: f32 = (0..n)
+            .map(|i| fam.log_prob(&theta, &[lo + (i as f32 + 0.5) * dx]).exp() * dx)
+            .sum();
+        assert!((total - 1.0).abs() < 1e-3, "total {total}");
+    }
+
+    #[test]
+    fn theta_phi_round_trip_all_families() {
+        let mut rng = Rng::new(3);
+        for fam in [
+            LeafFamily::Bernoulli,
+            LeafFamily::Gaussian { channels: 2 },
+            LeafFamily::Categorical { cats: 3 },
+            LeafFamily::Binomial { trials: 5 },
+        ] {
+            let s = fam.stat_dim();
+            let mut theta = vec![0.0f32; s];
+            fam.init_theta(&mut rng, &mut theta);
+            let mut phi = vec![0.0f32; s];
+            fam.phi_from_theta(&theta, &mut phi);
+            let mut theta2 = vec![0.0f32; s];
+            fam.theta_from_phi(&phi, &mut theta2);
+            for (a, b) in theta.iter().zip(&theta2) {
+                // categorical logits are identified only up to a constant
+                if matches!(fam, LeafFamily::Categorical { .. }) {
+                    continue;
+                }
+                assert!((a - b).abs() < 1e-3, "{fam:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_mean_matches_samples() {
+        let fam = LeafFamily::Gaussian { channels: 1 };
+        let var = 0.04f32;
+        let mu = 0.3f32;
+        let theta = [mu / var, -0.5 / var];
+        let mut m = [0.0f32];
+        fam.mean(&theta, &mut m);
+        assert!((m[0] - mu).abs() < 1e-6);
+        let mut rng = Rng::new(1);
+        let mut acc = 0.0;
+        let n = 20_000;
+        let mut out = [0.0f32];
+        for _ in 0..n {
+            fam.sample(&theta, &mut rng, &mut out);
+            acc += out[0] as f64;
+        }
+        assert!((acc / n as f64 - mu as f64).abs() < 0.01);
+    }
+
+    #[test]
+    fn projection_clamps_variance() {
+        let fam = LeafFamily::Gaussian { channels: 1 };
+        // phi encodes mu=0.5, var=10 (way out of bounds)
+        let mut phi = [0.5f32, 0.5 * 0.5 + 10.0];
+        fam.project_phi(&mut phi, (1e-6, 1e-2));
+        let var = phi[1] - phi[0] * phi[0];
+        assert!((var - 1e-2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn suff_stats_shapes() {
+        let fam = LeafFamily::Gaussian { channels: 2 };
+        let mut t = [0.0f32; 4];
+        fam.suff_stats(&[0.5, -1.0], &mut t);
+        assert_eq!(t, [0.5, -1.0, 0.25, 1.0]);
+        let cat = LeafFamily::Categorical { cats: 3 };
+        let mut tc = [9.0f32; 3];
+        cat.suff_stats(&[2.0], &mut tc);
+        assert_eq!(tc, [0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fast_path_matches_log_prob() {
+        let mut rng = Rng::new(7);
+        for fam in [
+            LeafFamily::Bernoulli,
+            LeafFamily::Gaussian { channels: 3 },
+            LeafFamily::Categorical { cats: 4 },
+            LeafFamily::Binomial { trials: 5 },
+        ] {
+            let s = fam.stat_dim();
+            let od = fam.obs_dim();
+            let mut theta = vec![0.0f32; s];
+            fam.init_theta(&mut rng, &mut theta);
+            let c = fam.log_norm_const(&theta);
+            for trial in 0..20 {
+                let x: Vec<f32> = (0..od)
+                    .map(|i| match fam {
+                        LeafFamily::Bernoulli => ((trial + i) % 2) as f32,
+                        LeafFamily::Categorical { cats } => {
+                            ((trial + i) % cats) as f32
+                        }
+                        LeafFamily::Binomial { trials } => {
+                            ((trial + i) as u32 % (trials + 1)) as f32
+                        }
+                        _ => rng.normal() as f32,
+                    })
+                    .collect();
+                let slow = fam.log_prob(&theta, &x);
+                let fast = fam.log_prob_with_const(&theta, c, &x);
+                assert!(
+                    (slow - fast).abs() < 1e-5,
+                    "{fam:?}: {slow} vs {fast}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn family_spec_parsing() {
+        assert_eq!(
+            LeafFamily::from_spec("gaussian:3").unwrap(),
+            LeafFamily::Gaussian { channels: 3 }
+        );
+        assert_eq!(
+            LeafFamily::from_spec("bernoulli").unwrap(),
+            LeafFamily::Bernoulli
+        );
+        assert!(LeafFamily::from_spec("weird").is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! # einet — Einsum Networks in Rust + JAX + Pallas
+//!
+//! A reproduction of *"Einsum Networks: Fast and Scalable Learning of
+//! Tractable Probabilistic Circuits"* (Peharz et al., ICML 2020) as a
+//! three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the einsum layer
+//!   with the log-einsum-exp trick (Eq. 4/5) and the mixing layer.
+//! * **L2** — JAX model (`python/compile/model.py`): the full EiNet
+//!   forward pass and EM statistics via autodiff, AOT-lowered to HLO text.
+//! * **L3** — this crate: region graphs, structure generators, two
+//!   execution engines (dense einsum layout vs the sparse LibSPN/SPFlow
+//!   baseline), EM training, tractable inference (marginals, conditionals,
+//!   sampling, inpainting), a PJRT runtime for the AOT artifacts, a
+//!   multithreaded training coordinator, datasets, clustering, and the
+//!   benchmark harness reproducing every table and figure of the paper.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod bench;
+pub mod clustering;
+pub mod coordinator;
+pub mod data;
+pub mod em;
+pub mod engine;
+pub mod graph;
+pub mod infer;
+pub mod layers;
+pub mod leaves;
+pub mod mixture;
+pub mod runtime;
+pub mod structure;
+pub mod util;
+
+pub use engine::dense::{DecodeMode, DenseEngine};
+pub use engine::sparse::SparseEngine;
+pub use engine::{EinetParams, EmStats};
+pub use layers::LayeredPlan;
+pub use leaves::LeafFamily;

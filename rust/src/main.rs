@@ -1,0 +1,383 @@
+//! einet CLI — train / evaluate / sample / inpaint / bench / serve.
+//!
+//! Examples:
+//!   einet train --dataset nltcs --structure rat:depth=3,replica=10 --k 10
+//!   einet eval  --dataset nltcs --ckpt model.bin --structure ... --k 10
+//!   einet table1 --k 10 --replica 10 --epochs 5
+//!   einet sample --ckpt model.bin --structure ... --n 16
+//!   einet e2e --artifact quick_d4 --steps 50
+//!   einet serve-demo
+//!
+//! Full per-figure benchmark drivers live in `rust/benches/` and the
+//! runnable scenarios in `examples/`.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use einet::coordinator::{evaluate, train_parallel, TrainConfig};
+use einet::data::debd;
+use einet::em::EmConfig;
+use einet::structure::from_spec;
+use einet::util::cli::{usage, Args, OptSpec};
+use einet::util::rng::Rng;
+use einet::util::stats::welch_t_test;
+use einet::{DecodeMode, DenseEngine, EinetParams, LayeredPlan, LeafFamily, SparseEngine};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "sample" => cmd_sample(rest),
+        "table1" => cmd_table1(rest),
+        "e2e" => cmd_e2e(rest),
+        "serve-demo" => cmd_serve_demo(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `einet help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "einet — Einsum Networks (ICML 2020) in Rust + JAX + Pallas
+
+commands:
+  train       train an EiNet on a DEBD-like dataset with stochastic EM
+  eval        evaluate a checkpoint's test log-likelihood
+  sample      draw samples from a checkpoint
+  table1      reproduce Table 1 (20 datasets, EiNet vs sparse baseline)
+  e2e         train via the AOT PJRT path (L1+L2+L3 composed)
+  serve-demo  run the batched inference service on synthetic queries
+  artifacts   list compiled AOT artifacts
+
+benches: cargo bench --bench fig3_train | fig6_inference | einsum_op |
+         ablation_stability
+examples: cargo run --release --example quickstart | density_estimation |
+          image_inpainting | e2e_train"
+    );
+}
+
+fn common_spec() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "dataset", help: "DEBD dataset name (e.g. nltcs)", default: Some("nltcs"), is_flag: false },
+        OptSpec { name: "structure", help: "structure spec, e.g. rat:depth=3,replica=10", default: Some("rat:depth=3,replica=10"), is_flag: false },
+        OptSpec { name: "k", help: "densities per sum/leaf vector", default: Some("10"), is_flag: false },
+        OptSpec { name: "epochs", help: "EM epochs", default: Some("10"), is_flag: false },
+        OptSpec { name: "batch-size", help: "mini-batch size", default: Some("100"), is_flag: false },
+        OptSpec { name: "step-size", help: "stochastic EM step size", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "workers", help: "worker threads", default: Some("4"), is_flag: false },
+        OptSpec { name: "seed", help: "random seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "ckpt", help: "checkpoint path", default: Some("einet.bin"), is_flag: false },
+        OptSpec { name: "n", help: "sample count", default: Some("16"), is_flag: false },
+        OptSpec { name: "artifact", help: "AOT artifact name", default: Some("quick_d4"), is_flag: false },
+        OptSpec { name: "artifact-dir", help: "artifact directory", default: Some("artifacts"), is_flag: false },
+        OptSpec { name: "steps", help: "EM steps (e2e)", default: Some("50"), is_flag: false },
+        OptSpec { name: "replica", help: "replica override for table1", default: Some("10"), is_flag: false },
+        OptSpec { name: "help", help: "show usage", default: None, is_flag: true },
+    ]
+}
+
+fn setup(
+    a: &Args,
+    spec: &[OptSpec],
+) -> Result<(einet::data::Dataset, LayeredPlan, LeafFamily)> {
+    let name = a.get_str("dataset", spec)?;
+    let ds = debd::load(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown dataset '{name}' (available: {})",
+            debd::all_names().join(", ")
+        )
+    })?;
+    let structure = a.get_str("structure", spec)?;
+    let k = a.get_usize("k", spec)?;
+    let graph = from_spec(ds.num_vars, &structure)?;
+    let plan = LayeredPlan::compile(graph, k);
+    Ok((ds, plan, LeafFamily::Bernoulli))
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    if a.flag("help") {
+        println!("{}", usage("einet train", "train on a DEBD-like dataset", &spec));
+        return Ok(());
+    }
+    let (ds, plan, family) = setup(&a, &spec)?;
+    let mut params = EinetParams::init(&plan, family, a.get_usize("seed", &spec)? as u64);
+    let cfg = TrainConfig {
+        epochs: a.get_usize("epochs", &spec)?,
+        batch_size: a.get_usize("batch-size", &spec)?,
+        workers: a.get_usize("workers", &spec)?,
+        em: EmConfig {
+            step_size: a.get_f64("step-size", &spec)? as f32,
+            ..Default::default()
+        },
+        log_every: 1,
+    };
+    println!(
+        "dataset={} D={} sums={} params={}",
+        ds.name,
+        ds.num_vars,
+        plan.num_sums(),
+        params.num_params()
+    );
+    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let valid = evaluate(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
+    let test = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    println!("valid LL {valid:.4}  test LL {test:.4}");
+    let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
+    params.save(&ckpt)?;
+    println!("saved {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let (ds, plan, family) = setup(&a, &spec)?;
+    let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
+    let params = EinetParams::load(&ckpt, family)?;
+    let test = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    println!("test LL {test:.4}");
+    Ok(())
+}
+
+fn cmd_sample(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let (ds, plan, family) = setup(&a, &spec)?;
+    let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
+    let params = EinetParams::load(&ckpt, family)?;
+    let n = a.get_usize("n", &spec)?;
+    let mut engine = DenseEngine::new(plan, family, 1);
+    let mut rng = Rng::new(a.get_usize("seed", &spec)? as u64);
+    let samples = engine.sample(&params, n, &mut rng, DecodeMode::Sample);
+    for s in 0..n {
+        let row: String = samples[s * ds.num_vars..(s + 1) * ds.num_vars]
+            .iter()
+            .map(|&v| if v > 0.5 { '1' } else { '0' })
+            .collect();
+        println!("{row}");
+    }
+    Ok(())
+}
+
+/// Reproduce Table 1: per dataset, train the dense EiNet engine and the
+/// sparse (RAT-SPN-style) baseline on the same structure and compare test
+/// LL with the paper's one-sided t-test at p = 0.05.
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let k = a.get_usize("k", &spec)?;
+    let replica = a.get_usize("replica", &spec)?;
+    let epochs = a.get_usize("epochs", &spec)?;
+    let mut table = einet::bench::Table::new(&[
+        "dataset", "RAT-SPN(sparse)", "EiNet(dense)", "not-sig-diff(p=.05)",
+    ]);
+    for name in debd::all_names() {
+        let ds = debd::load(name).unwrap();
+        let depth = ((ds.num_vars as f64).log2().floor() as usize).clamp(1, 4);
+        let graph = einet::structure::random_binary_trees(ds.num_vars, depth, replica, 0);
+        let plan = LayeredPlan::compile(graph, k);
+        let (ll_dense, ll_sparse, same) =
+            table1_one(&plan, &ds, epochs, a.get_usize("batch-size", &spec)?)?;
+        table.row(vec![
+            name.to_string(),
+            format!("{ll_sparse:.3}"),
+            format!("{ll_dense:.3}"),
+            format!("{same}"),
+        ]);
+        println!("{name}: sparse {ll_sparse:.3} dense {ll_dense:.3}");
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn table1_one(
+    plan: &LayeredPlan,
+    ds: &einet::data::Dataset,
+    epochs: usize,
+    batch: usize,
+) -> Result<(f64, f64, bool)> {
+    let family = LeafFamily::Bernoulli;
+    let cfg = TrainConfig {
+        epochs,
+        batch_size: batch,
+        workers: 4,
+        em: EmConfig { step_size: 0.5, ..Default::default() },
+        log_every: 0,
+    };
+    // dense engine training
+    let mut p_dense = EinetParams::init(plan, family, 1);
+    train_parallel(plan, family, &mut p_dense, &ds.train.data, ds.train.n, &cfg);
+    let per_dense = einet::coordinator::per_sample_ll(
+        plan, family, &p_dense, &ds.test.data, ds.test.n, 256,
+    );
+    // sparse engine training (same init, same schedule, sparse layout)
+    let mut p_sparse = EinetParams::init(plan, family, 1);
+    let mask = vec![1.0f32; ds.num_vars];
+    let mut sparse = SparseEngine::new(plan.clone(), family, batch);
+    let mut logp = vec![0.0f32; batch];
+    for _ in 0..epochs {
+        let mut b0 = 0usize;
+        while b0 < ds.train.n {
+            let bn = batch.min(ds.train.n - b0);
+            let xs = ds.train.rows(b0, b0 + bn);
+            let mut stats = einet::EmStats::zeros_like(&p_sparse);
+            sparse.forward(&p_sparse, xs, &mask, &mut logp[..bn]);
+            sparse.backward(&p_sparse, xs, &mask, bn, &mut stats);
+            einet::em::m_step(&mut p_sparse, plan, &stats, &cfg.em);
+            b0 += bn;
+        }
+    }
+    let per_sparse = einet::coordinator::per_sample_ll(
+        plan, family, &p_sparse, &ds.test.data, ds.test.n, 256,
+    );
+    let ll_dense = per_dense.iter().sum::<f64>() / per_dense.len() as f64;
+    let ll_sparse = per_sparse.iter().sum::<f64>() / per_sparse.len() as f64;
+    let t = welch_t_test(&per_dense, &per_sparse);
+    let same = t.p_greater > 0.05 && (1.0 - t.p_greater) > 0.05;
+    Ok((ll_dense, ll_sparse, same))
+}
+
+/// End-to-end AOT path: train via the PJRT executable.
+fn cmd_e2e(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let dir = a.get_str("artifact-dir", &spec)?;
+    let name = a.get_str("artifact", &spec)?;
+    let steps = a.get_usize("steps", &spec)?;
+    let runtime = einet::runtime::Runtime::new(dir)?;
+    println!("PJRT platform: {}", runtime.platform());
+    let em = EmConfig { step_size: 0.3, ..Default::default() };
+    let mut trainer =
+        einet::coordinator::AotTrainer::new(&runtime, &name, 0, em)?;
+    let b = trainer.meta.batch;
+    let d = trainer.meta.num_vars;
+    let od = trainer.meta.obs_dim;
+    let mask = vec![1.0f32; d];
+    let mut rng = Rng::new(1);
+    let is_gaussian = trainer.meta.family == "gaussian";
+    // synthetic correlated binary / image-like data matching the artifact
+    let gen_batch = move |rng: &mut Rng| -> Vec<f32> {
+        let mut x = vec![0.0f32; b * d * od];
+        for i in 0..b {
+            let z = rng.bernoulli(0.5);
+            for j in 0..d * od {
+                let p = if z { 0.8 } else { 0.2 };
+                x[i * d * od + j] = if is_gaussian {
+                    (if z { 0.7 } else { 0.3 }) + 0.1 * rng.normal() as f32
+                } else if rng.bernoulli(p) {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+        x
+    };
+    let eval_x = gen_batch(&mut rng);
+    let ll0 = trainer.eval_batch(&eval_x, &mask)?;
+    println!("initial eval LL {ll0:.4}");
+    for step in 0..steps {
+        let x = gen_batch(&mut rng);
+        let ll = trainer.em_step(&x, &mask)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}: batch LL {ll:.4}");
+        }
+    }
+    let ll1 = trainer.eval_batch(&eval_x, &mask)?;
+    println!("final eval LL {ll1:.4} (delta {:+.4})", ll1 - ll0);
+    Ok(())
+}
+
+fn cmd_serve_demo(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let nv = 16;
+    let graph = einet::structure::random_binary_trees(nv, 3, 4, 0);
+    let plan = LayeredPlan::compile(graph, a.get_usize("k", &spec)?);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
+    let server = einet::coordinator::server::InferenceServer::start(
+        plan,
+        LeafFamily::Bernoulli,
+        params,
+        64,
+        std::time::Duration::from_millis(2),
+    );
+    let n = a.get_usize("n", &spec)?.max(100);
+    let t = einet::util::Timer::new();
+    let mut rng = Rng::new(0);
+    let receivers: Vec<_> = (0..n)
+        .map(|_| {
+            let x: Vec<f32> = (0..nv)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let mut mask = vec![1.0f32; nv];
+            // a third of the queries marginalize half the variables
+            if rng.bernoulli(0.33) {
+                for d in 0..nv / 2 {
+                    mask[d] = 0.0;
+                }
+            }
+            server.submit(x, mask)
+        })
+        .collect();
+    let mut acc = 0.0f64;
+    for rx in receivers {
+        acc += rx.recv().unwrap() as f64;
+    }
+    let dt = t.elapsed_s();
+    let stats = server.stop();
+    println!(
+        "{} queries in {:.1}ms ({:.0} q/s), {} batches, mean LL {:.4}",
+        stats.queries,
+        dt * 1e3,
+        stats.queries as f64 / dt,
+        stats.batches,
+        acc / stats.queries as f64
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    let dir = a.get_str("artifact-dir", &spec)?;
+    let runtime = einet::runtime::Runtime::new(dir)?;
+    println!("PJRT platform: {}", runtime.platform());
+    for name in runtime.list()? {
+        let m = runtime.meta(&name)?;
+        println!(
+            "{name}: family={} D={} K={} R={} B={} params={}",
+            m.family,
+            m.num_vars,
+            m.k,
+            m.replica,
+            m.batch,
+            m.params.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,368 @@
+//! Mixture-of-EiNets (Section 4.2): k-means clusters as mixture
+//! components, one EiNet per cluster — step 1 of LearnSPN. A mixture of
+//! PCs is again a PC, so marginals/conditionals/sampling stay tractable.
+
+use anyhow::Result;
+
+use crate::clustering::kmeans;
+use crate::em::{m_step, EmConfig};
+use crate::engine::dense::{DecodeMode, DenseEngine};
+use crate::engine::{EinetParams, EmStats};
+use crate::layers::LayeredPlan;
+use crate::leaves::LeafFamily;
+use crate::util::logsumexp::logsumexp_f64;
+use crate::util::rng::Rng;
+
+/// One mixture component: a plan-shared EiNet with private parameters.
+pub struct Component {
+    pub params: EinetParams,
+    pub log_weight: f64,
+}
+
+/// A mixture of EiNets sharing a single structure (plan + engine reuse).
+pub struct EinetMixture {
+    pub plan: LayeredPlan,
+    pub family: LeafFamily,
+    pub components: Vec<Component>,
+    engine: DenseEngine,
+}
+
+/// Training configuration for the image pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct MixtureConfig {
+    pub num_clusters: usize,
+    pub k: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub em: EmConfig,
+    pub seed: u64,
+}
+
+impl Default for MixtureConfig {
+    fn default() -> Self {
+        Self {
+            num_clusters: 10,
+            k: 8,
+            epochs: 5,
+            batch_size: 100,
+            em: EmConfig {
+                step_size: 0.5,
+                ..Default::default()
+            },
+            seed: 0,
+        }
+    }
+}
+
+impl EinetMixture {
+    /// The paper's image pipeline: k-means cluster the data, train one
+    /// EiNet per cluster with stochastic EM, use cluster proportions as
+    /// mixture coefficients.
+    pub fn train(
+        plan: LayeredPlan,
+        family: LeafFamily,
+        data: &[f32],
+        n: usize,
+        cfg: &MixtureConfig,
+        mut progress: impl FnMut(usize, usize, f64),
+    ) -> Result<Self> {
+        let d = plan.graph.num_vars;
+        let od = family.obs_dim();
+        let row = d * od;
+        assert_eq!(data.len(), n * row);
+        let km = kmeans(data, n, row, cfg.num_clusters, 30, cfg.seed);
+        let mut engine = DenseEngine::new(plan.clone(), family, cfg.batch_size);
+        let mask = vec![1.0f32; d];
+        let mut components = Vec::new();
+        for c in 0..cfg.num_clusters {
+            // gather this cluster's rows
+            let idx: Vec<usize> = (0..n).filter(|&i| km.assignment[i] == c).collect();
+            let mut params = EinetParams::init(&plan, family, cfg.seed + 1 + c as u64);
+            if !idx.is_empty() {
+                let mut cluster = vec![0.0f32; idx.len() * row];
+                for (j, &i) in idx.iter().enumerate() {
+                    cluster[j * row..(j + 1) * row]
+                        .copy_from_slice(&data[i * row..(i + 1) * row]);
+                }
+                let mut stats = EmStats::zeros_like(&params);
+                let mut logp = vec![0.0f32; cfg.batch_size];
+                for epoch in 0..cfg.epochs {
+                    let mut total = 0.0f64;
+                    let mut b0 = 0usize;
+                    while b0 < idx.len() {
+                        let bn = cfg.batch_size.min(idx.len() - b0);
+                        stats.reset();
+                        engine.forward(
+                            &params,
+                            &cluster[b0 * row..(b0 + bn) * row],
+                            &mask,
+                            &mut logp[..bn],
+                        );
+                        engine.backward(
+                            &params,
+                            &cluster[b0 * row..(b0 + bn) * row],
+                            &mask,
+                            bn,
+                            &mut stats,
+                        );
+                        total += stats.loglik;
+                        m_step(&mut params, &plan, &stats, &cfg.em);
+                        b0 += bn;
+                    }
+                    progress(c, epoch, total / idx.len() as f64);
+                }
+            }
+            let weight = (km.counts[c].max(1) as f64) / (n as f64);
+            components.push(Component {
+                params,
+                log_weight: weight.ln(),
+            });
+        }
+        // renormalize weights (empty-cluster floor may break normalization)
+        let z = logsumexp_f64(
+            &components
+                .iter()
+                .map(|c| c.log_weight)
+                .collect::<Vec<_>>(),
+        );
+        for c in &mut components {
+            c.log_weight -= z;
+        }
+        Ok(Self {
+            plan,
+            family,
+            components,
+            engine,
+        })
+    }
+
+    /// Mixture log-likelihood per sample (chunked to engine capacity).
+    pub fn log_prob(&mut self, x: &[f32], mask: &[f32], out: &mut [f32]) {
+        let bn = out.len();
+        let row = self.plan.graph.num_vars * self.family.obs_dim();
+        let cap = self.engine.batch_capacity();
+        let mut acc = vec![f64::NEG_INFINITY; bn];
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let chunk = cap.min(bn - b0);
+            let mut logp = vec![0.0f32; chunk];
+            for c in 0..self.components.len() {
+                self.engine.forward(
+                    &self.components[c].params,
+                    &x[b0 * row..(b0 + chunk) * row],
+                    mask,
+                    &mut logp,
+                );
+                let lw = self.components[c].log_weight;
+                for b in 0..chunk {
+                    let v = logp[b] as f64 + lw;
+                    let a = acc[b0 + b];
+                    acc[b0 + b] = if a > v {
+                        a + (v - a).exp().ln_1p()
+                    } else {
+                        v + (a - v).exp().ln_1p()
+                    };
+                }
+            }
+            b0 += chunk;
+        }
+        for b in 0..bn {
+            out[b] = acc[b] as f32;
+        }
+    }
+
+    /// Unconditional samples: draw a component by weight, then ancestral-
+    /// sample within it.
+    pub fn sample(&mut self, n: usize, rng: &mut Rng, mode: DecodeMode) -> Vec<f32> {
+        let d = self.plan.graph.num_vars;
+        let od = self.family.obs_dim();
+        let weights: Vec<f64> = self
+            .components
+            .iter()
+            .map(|c| c.log_weight.exp())
+            .collect();
+        let mut out = vec![0.0f32; n * d * od];
+        for s in 0..n {
+            let c = rng.categorical(&weights);
+            let one = self
+                .engine
+                .sample(&self.components[c].params, 1, rng, mode);
+            out[s * d * od..(s + 1) * d * od].copy_from_slice(&one);
+        }
+        out
+    }
+
+    /// Conditional sampling (inpainting) under the mixture: pick a
+    /// component from its posterior given the evidence, then decode the
+    /// missing variables within that component.
+    pub fn inpaint(
+        &mut self,
+        x: &[f32],
+        evidence_mask: &[f32],
+        bn: usize,
+        mode: DecodeMode,
+        rng: &mut Rng,
+    ) -> Vec<f32> {
+        let d = self.plan.graph.num_vars;
+        let od = self.family.obs_dim();
+        let nc = self.components.len();
+        // posterior over components per sample (chunked to capacity)
+        let row = d * od;
+        let cap = self.engine.batch_capacity();
+        let mut post = vec![0.0f64; bn * nc];
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let chunk = cap.min(bn - b0);
+            let mut logp = vec![0.0f32; chunk];
+            for c in 0..nc {
+                self.engine.forward(
+                    &self.components[c].params,
+                    &x[b0 * row..(b0 + chunk) * row],
+                    evidence_mask,
+                    &mut logp,
+                );
+                for b in 0..chunk {
+                    post[(b0 + b) * nc + c] =
+                        logp[b] as f64 + self.components[c].log_weight;
+                }
+            }
+            b0 += chunk;
+        }
+        let mut out = x.to_vec();
+        for b in 0..bn {
+            let row = &post[b * nc..(b + 1) * nc];
+            let z = logsumexp_f64(row);
+            let weights: Vec<f64> = row.iter().map(|&v| (v - z).exp()).collect();
+            let c = match mode {
+                DecodeMode::Sample => rng.categorical(&weights),
+                DecodeMode::Argmax => {
+                    let mut best = 0;
+                    for (i, &w) in weights.iter().enumerate() {
+                        if w > weights[best] {
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            };
+            // re-run forward for the chosen component to refresh its
+            // activations, then decode sample b
+            self.engine.forward(
+                &self.components[c].params,
+                &x[b * d * od..(b + 1) * d * od],
+                evidence_mask,
+                &mut [0.0f32][..],
+            );
+            self.engine.decode(
+                &self.components[c].params,
+                0,
+                evidence_mask,
+                mode,
+                rng,
+                &mut out[b * d * od..(b + 1) * d * od],
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structure::random_binary_trees;
+
+    fn two_mode_data(n: usize, nv: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut x = vec![0.0f32; n * nv];
+        for b in 0..n {
+            let mode = rng.bernoulli(0.5);
+            for d in 0..nv {
+                let p = if mode { 0.9 } else { 0.1 };
+                x[b * nv + d] = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn mixture_trains_and_scores() {
+        let nv = 8;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 0), 3);
+        let data = two_mode_data(200, nv, 1);
+        let cfg = MixtureConfig {
+            num_clusters: 2,
+            epochs: 3,
+            batch_size: 50,
+            ..Default::default()
+        };
+        let mut mix =
+            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 200, &cfg, |_, _, _| {})
+                .unwrap();
+        // weights normalized
+        let z: f64 = mix.components.iter().map(|c| c.log_weight.exp()).sum();
+        assert!((z - 1.0).abs() < 1e-9);
+        // scores the training data better than uniform
+        let mask = vec![1.0f32; nv];
+        let mut lp = vec![0.0f32; 200];
+        mix.log_prob(&data, &mask, &mut lp);
+        let avg: f64 = lp.iter().map(|&l| l as f64).sum::<f64>() / 200.0;
+        assert!(avg > -(nv as f64) * std::f64::consts::LN_2);
+    }
+
+    #[test]
+    fn mixture_sampling_hits_both_modes() {
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 2), 3);
+        let data = two_mode_data(300, nv, 3);
+        let cfg = MixtureConfig {
+            num_clusters: 2,
+            epochs: 4,
+            batch_size: 64,
+            ..Default::default()
+        };
+        let mut mix =
+            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 300, &cfg, |_, _, _| {})
+                .unwrap();
+        let mut rng = Rng::new(4);
+        let samples = mix.sample(300, &mut rng, DecodeMode::Sample);
+        // sample means should be bimodal: average bit density near 0.5
+        // overall but individual samples mostly near 0 or 1 density
+        let mut extremes = 0usize;
+        for s in 0..300 {
+            let density: f32 =
+                samples[s * nv..(s + 1) * nv].iter().sum::<f32>() / nv as f32;
+            if !(0.25..=0.75).contains(&density) {
+                extremes += 1;
+            }
+        }
+        assert!(extremes > 150, "samples not bimodal: {extremes}/300");
+    }
+
+    #[test]
+    fn mixture_inpaint_keeps_evidence() {
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 5), 3);
+        let data = two_mode_data(100, nv, 6);
+        let cfg = MixtureConfig {
+            num_clusters: 2,
+            epochs: 2,
+            batch_size: 32,
+            ..Default::default()
+        };
+        let mut mix =
+            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 100, &cfg, |_, _, _| {})
+                .unwrap();
+        let mut rng = Rng::new(7);
+        let x = vec![1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let mask = [1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let out = mix.inpaint(&x, &mask, 1, DecodeMode::Sample, &mut rng);
+        assert_eq!(&out[..3], &[1.0, 1.0, 1.0]);
+        // conditioned on the all-ones half, completion should mostly be ones
+        let mut ones = 0;
+        for _ in 0..20 {
+            let o = mix.inpaint(&x, &mask, 1, DecodeMode::Sample, &mut rng);
+            ones += o[3..].iter().filter(|&&v| v > 0.5).count();
+        }
+        assert!(ones > 30, "conditional inpainting ignored evidence: {ones}/60");
+    }
+}

@@ -1,0 +1,355 @@
+//! PJRT runtime: load and execute the AOT artifacts from the rust hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers each EiNet config to
+//! an id-renumbered **binary HloModuleProto** plus a JSON metadata sidecar
+//! (and an `.hlo.txt` for humans); this module loads the proto, compiles
+//! it on the PJRT CPU client, and executes it with rust-owned parameters.
+//! Python never runs at serve or train time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+// Interchange format note: artifacts are BINARY HloModuleProto files whose
+// instruction/computation ids were renumbered at build time
+// (python/compile/hlo_proto_fix.py). Two upstream constraints force this:
+//  * jax >= 0.5 emits 64-bit ids, which xla_extension 0.5.1 RET_CHECKs
+//    (`proto.id() <= INT_MAX`) at compile time;
+//  * the 0.5.1 HLO *text* parser (the usual workaround) keeps process-
+//    global state and silently corrupts the second large module parsed in
+//    a process — observed as the marginalization-mask parameter being
+//    constant-folded to zero. Binary protobuf parsing is stateless.
+
+/// Parameter tensor descriptor from the metadata sidecar.
+#[derive(Clone, Debug)]
+pub struct ParamDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "theta" | "shift" | "w" | "mix"
+    pub kind: String,
+    /// for kind == "mix": real child count per row (padding-aware M-step)
+    pub child_counts: Vec<usize>,
+}
+
+impl ParamDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub family: String,
+    pub num_vars: usize,
+    pub obs_dim: usize,
+    pub stat_dim: usize,
+    pub k: usize,
+    pub replica: usize,
+    pub batch: usize,
+    pub params: Vec<ParamDesc>,
+    pub file_fwd: String,
+    pub file_train: String,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| -> Result<ParamDesc> {
+                Ok(ParamDesc {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                    kind: p
+                        .opt("kind")
+                        .map(|k| k.as_str().map(str::to_string))
+                        .transpose()?
+                        .unwrap_or_else(|| "w".to_string()),
+                    child_counts: match p.opt("child_counts") {
+                        Some(cc) => cc
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<Result<_>>()?,
+                        None => Vec::new(),
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let files = j.get("files")?;
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            family: j.get("family")?.as_str()?.to_string(),
+            num_vars: j.get("num_vars")?.as_usize()?,
+            obs_dim: j.get("obs_dim")?.as_usize()?,
+            stat_dim: j.get("stat_dim")?.as_usize()?,
+            k: j.get("k")?.as_usize()?,
+            replica: j.get("replica")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            params,
+            file_fwd: files.get("fwd")?.as_str()?.to_string(),
+            file_train: files.get("train")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// A compiled executable plus its IO contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// expected input shapes: params..., x, mask
+    input_shapes: Vec<Vec<usize>>,
+    /// number of tuple outputs (1 for fwd; 1 + num params for train)
+    pub num_outputs: usize,
+}
+
+impl Executable {
+    /// Execute with f32 inputs in metadata order (params..., x, mask).
+    /// Returns each tuple element flattened to `Vec<f32>`.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "expected {} inputs, got {}",
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, x) in inputs.iter().enumerate() {
+            let shape = &self.input_shapes[i];
+            let numel: usize = shape.iter().product();
+            ensure!(
+                x.len() == numel,
+                "input {i}: expected {numel} elements, got {}",
+                x.len()
+            );
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
+            };
+            literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                bytes,
+            )?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        ensure!(
+            tuple.len() == self.num_outputs,
+            "expected {} outputs, got {}",
+            self.num_outputs,
+            tuple.len()
+        );
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+            .collect()
+    }
+}
+
+/// The PJRT CPU runtime: artifact discovery + compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = artifact_dir.into();
+        ensure!(
+            dir.is_dir(),
+            "artifact directory {} missing — run `make artifacts`",
+            dir.display()
+        );
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names listed in the artifact manifest.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))?;
+        Json::parse(&text)?
+            .get("configs")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+        ArtifactMeta::load(&self.dir, name)
+    }
+
+    /// Compile one entry point ("fwd" or "train") of a named artifact.
+    pub fn compile(&self, meta: &ArtifactMeta, tag: &str) -> Result<Executable> {
+        let file = match tag {
+            "fwd" => &meta.file_fwd,
+            "train" => &meta.file_train,
+            other => bail!("unknown entry point '{other}'"),
+        };
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_proto_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            /* binary= */ true,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let mut input_shapes: Vec<Vec<usize>> =
+            meta.params.iter().map(|p| p.shape.clone()).collect();
+        input_shapes.push(vec![meta.batch, meta.num_vars, meta.obs_dim]);
+        input_shapes.push(vec![meta.num_vars]);
+        let num_outputs = match tag {
+            "fwd" => 1,
+            _ => 1 + meta.params.len(),
+        };
+        Ok(Executable {
+            exe,
+            input_shapes,
+            num_outputs,
+        })
+    }
+}
+
+/// Rust-owned parameter state for an AOT artifact, keyed by tensor name.
+#[derive(Clone, Debug)]
+pub struct AotParams {
+    pub tensors: BTreeMap<String, Vec<f32>>,
+    pub order: Vec<String>,
+}
+
+impl AotParams {
+    /// Initialize with the same scheme as `EinetParams::init`: normalized
+    /// uniform sum/mixing weights, family-initialized theta, zero shift.
+    pub fn init(
+        meta: &ArtifactMeta,
+        family: crate::leaves::LeafFamily,
+        seed: u64,
+    ) -> Result<Self> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for p in &meta.params {
+            let mut v = vec![0.0f32; p.numel()];
+            match p.kind.as_str() {
+                "theta" => {
+                    let s = meta.stat_dim;
+                    ensure!(p.shape.last() == Some(&s), "theta stat_dim mismatch");
+                    for chunk in v.chunks_mut(s) {
+                        family.init_theta(&mut rng, chunk);
+                    }
+                }
+                "shift" => { /* zeros */ }
+                "w" => {
+                    let kk = p.shape[2] * p.shape[3];
+                    for block in v.chunks_mut(kk) {
+                        let mut total = 0.0f32;
+                        for x in block.iter_mut() {
+                            *x = rng.uniform_in(0.01, 1.0) as f32;
+                            total += *x;
+                        }
+                        for x in block.iter_mut() {
+                            *x /= total;
+                        }
+                    }
+                }
+                "mix" => {
+                    let cmax = p.shape[1];
+                    ensure!(
+                        p.child_counts.len() == p.shape[0],
+                        "mix child_counts length mismatch"
+                    );
+                    for (j, &cn) in p.child_counts.iter().enumerate() {
+                        let row = &mut v[j * cmax..j * cmax + cn];
+                        let mut total = 0.0f32;
+                        for x in row.iter_mut() {
+                            *x = rng.uniform_in(0.01, 1.0) as f32;
+                            total += *x;
+                        }
+                        for x in row.iter_mut() {
+                            *x /= total;
+                        }
+                    }
+                }
+                other => bail!("unknown param kind '{other}'"),
+            }
+            tensors.insert(p.name.clone(), v);
+            order.push(p.name.clone());
+        }
+        Ok(Self { tensors, order })
+    }
+
+    /// Slices in executable input order (params only; append x and mask).
+    pub fn input_slices(&self) -> Vec<&[f32]> {
+        self.order
+            .iter()
+            .map(|n| self.tensors[n].as_slice())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META_EXAMPLE: &str = r#"{
+      "name": "quick", "family": "bernoulli", "num_vars": 4, "obs_dim": 1,
+      "stat_dim": 1, "k": 4, "replica": 2, "batch": 8,
+      "params": [
+        {"name": "theta", "shape": [4, 4, 2, 1], "kind": "theta"},
+        {"name": "shift", "shape": [4, 4, 2], "kind": "shift"},
+        {"name": "w0", "shape": [4, 4, 4, 4], "kind": "w"},
+        {"name": "mix1", "shape": [1, 2], "kind": "mix", "child_counts": [2]}
+      ],
+      "files": {"fwd": "quick.fwd.hlo.txt", "train": "quick.train.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::parse(META_EXAMPLE).unwrap();
+        assert_eq!(m.num_vars, 4);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params[3].child_counts, vec![2]);
+        assert_eq!(m.params[0].numel(), 32);
+    }
+
+    #[test]
+    fn aot_params_init_normalized() {
+        let m = ArtifactMeta::parse(META_EXAMPLE).unwrap();
+        let p =
+            AotParams::init(&m, crate::leaves::LeafFamily::Bernoulli, 0).unwrap();
+        let w0 = &p.tensors["w0"];
+        for block in w0.chunks(16) {
+            let s: f32 = block.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+        let mix = &p.tensors["mix1"];
+        assert!((mix.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(p.tensors["shift"].iter().all(|&v| v == 0.0));
+        assert_eq!(p.input_slices().len(), 4);
+    }
+}

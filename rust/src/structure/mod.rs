@@ -1,0 +1,249 @@
+//! Structure generators: RAT random binary trees and Poon–Domingos grids.
+//!
+//! These mirror python/compile/structure.py (the build-time copy used for
+//! AOT artifact generation); the rust versions are the runtime source of
+//! truth for the pure-rust engines and benches.
+
+use anyhow::Result;
+
+use crate::graph::{RegionGraph, RegionId};
+use crate::util::bitset::BitSet;
+use crate::util::rng::Rng;
+
+/// RAT-SPN structure (Peharz et al., 2019): `replica` randomized balanced
+/// binary trees of scope splits, each of depth `depth`, mixed at the root.
+///
+/// This is the structure family of the paper's Fig. 3 / Fig. 6 / Table 1
+/// experiments, parameterized by split-depth D and number of replica R.
+pub fn random_binary_trees(
+    num_vars: usize,
+    depth: usize,
+    replica: usize,
+    seed: u64,
+) -> RegionGraph {
+    assert!(num_vars >= 2, "need at least two variables");
+    let mut g = RegionGraph::new(num_vars);
+    let mut rng = Rng::new(seed);
+    for _ in 0..replica {
+        split_recursive(&mut g, &mut rng, BitSet::full(num_vars), depth);
+    }
+    g
+}
+
+fn split_recursive(g: &mut RegionGraph, rng: &mut Rng, scope: BitSet, depth: usize) -> RegionId {
+    let rid = g.region(scope.clone());
+    if depth == 0 || scope.len() <= 1 {
+        return rid;
+    }
+    let mut items = scope.to_vec();
+    rng.shuffle(&mut items);
+    let half = items.len() / 2;
+    let ls = BitSet::from_indices(g.num_vars, items[..half].iter().copied());
+    let rs = BitSet::from_indices(g.num_vars, items[half..].iter().copied());
+    g.partition(rid, ls.clone(), rs.clone())
+        .expect("balanced split is always valid");
+    split_recursive(g, rng, ls, depth - 1);
+    split_recursive(g, rng, rs, depth - 1);
+    rid
+}
+
+/// Axis selection for Poon–Domingos splits.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum PdAxes {
+    /// vertical cuts only (columns) — what the paper used for images
+    Vertical,
+    /// horizontal cuts only (rows)
+    Horizontal,
+    /// both
+    Both,
+}
+
+/// Poon–Domingos structure (Poon & Domingos, 2011) over a `height x width`
+/// pixel grid: recursive axis-aligned rectangle splits at multiples of
+/// `delta`. Variables are pixel indices `row * width + col`; channels are
+/// handled inside the leaf exponential family.
+pub fn poon_domingos(height: usize, width: usize, delta: usize, axes: PdAxes) -> RegionGraph {
+    assert!(delta >= 1);
+    let mut g = RegionGraph::new(height * width);
+    let mut stack = vec![(0usize, 0usize, height, width)];
+    let mut seen = std::collections::HashSet::new();
+    while let Some((r0, c0, r1, c1)) = stack.pop() {
+        if !seen.insert((r0, c0, r1, c1)) {
+            continue;
+        }
+        let out = g.region(rect_scope(width, r0, c0, r1, c1));
+        // vertical cuts
+        if axes != PdAxes::Horizontal {
+            let mut c = c0 + delta;
+            while c < c1 {
+                let ls = rect_scope(width, r0, c0, r1, c);
+                let rs = rect_scope(width, r0, c, r1, c1);
+                g.partition(out, ls, rs).expect("valid rectangle cut");
+                stack.push((r0, c0, r1, c));
+                stack.push((r0, c, r1, c1));
+                c += delta;
+            }
+        }
+        // horizontal cuts
+        if axes != PdAxes::Vertical {
+            let mut r = r0 + delta;
+            while r < r1 {
+                let ls = rect_scope(width, r0, c0, r, c1);
+                let rs = rect_scope(width, r, c0, r1, c1);
+                g.partition(out, ls, rs).expect("valid rectangle cut");
+                stack.push((r0, c0, r, c1));
+                stack.push((r, c0, r1, c1));
+                r += delta;
+            }
+        }
+    }
+    g
+}
+
+fn rect_scope(width: usize, r0: usize, c0: usize, r1: usize, c1: usize) -> BitSet {
+    let mut s = BitSet::new(width * r1);
+    for r in r0..r1 {
+        for c in c0..c1 {
+            s.insert(r * width + c);
+        }
+    }
+    s
+}
+
+/// A deterministic left-to-right binary chain over `num_vars` variables —
+/// the simplest valid structure; useful for tests and tiny examples.
+pub fn binary_chain(num_vars: usize) -> RegionGraph {
+    assert!(num_vars >= 2);
+    let mut g = RegionGraph::new(num_vars);
+    let mut lo = 0usize;
+    let mut out = g.root;
+    while num_vars - lo > 1 {
+        let ls = BitSet::from_indices(num_vars, [lo]);
+        let rs = BitSet::from_indices(num_vars, (lo + 1)..num_vars);
+        let rs_clone = rs.clone();
+        g.partition(out, ls, rs).expect("chain split valid");
+        out = g.region(rs_clone);
+        lo += 1;
+    }
+    g
+}
+
+/// Structure described by a config string, e.g. for the CLI:
+/// `rat:depth=3,replica=4` or `pd:h=8,w=8,delta=2,axes=hv`.
+pub fn from_spec(num_vars: usize, spec: &str) -> Result<RegionGraph> {
+    let (kind, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let mut kv = std::collections::HashMap::new();
+    for pair in rest.split(',').filter(|p| !p.is_empty()) {
+        if let Some((k, v)) = pair.split_once('=') {
+            kv.insert(k.to_string(), v.to_string());
+        }
+    }
+    let get = |k: &str, d: usize| -> usize {
+        kv.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    Ok(match kind {
+        "rat" => random_binary_trees(
+            num_vars,
+            get("depth", 3),
+            get("replica", 4),
+            get("seed", 0) as u64,
+        ),
+        "pd" => {
+            let h = get("h", 8);
+            let w = get("w", 8);
+            anyhow::ensure!(h * w == num_vars, "pd: h*w must equal num_vars");
+            let axes = match kv.get("axes").map(String::as_str) {
+                Some("v") => PdAxes::Vertical,
+                Some("h") => PdAxes::Horizontal,
+                _ => PdAxes::Both,
+            };
+            poon_domingos(h, w, get("delta", 2), axes)
+        }
+        "chain" => binary_chain(num_vars),
+        other => anyhow::bail!("unknown structure kind '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rat_root_has_replica_partitions() {
+        let g = random_binary_trees(16, 3, 5, 0);
+        g.validate().unwrap();
+        assert_eq!(g.regions[g.root].partitions.len(), 5);
+    }
+
+    #[test]
+    fn rat_depth_bounds_leaf_size() {
+        let g = random_binary_trees(16, 4, 2, 1);
+        for leaf in g.leaves() {
+            assert_eq!(leaf.scope.len(), 1);
+        }
+        // shallow tree: leaves are 4-var blocks
+        let g2 = random_binary_trees(16, 2, 1, 1);
+        for leaf in g2.leaves() {
+            assert_eq!(leaf.scope.len(), 4);
+        }
+    }
+
+    #[test]
+    fn rat_deterministic_by_seed() {
+        let a = random_binary_trees(12, 3, 2, 42);
+        let b = random_binary_trees(12, 3, 2, 42);
+        assert_eq!(a.regions.len(), b.regions.len());
+        for (x, y) in a.regions.iter().zip(&b.regions) {
+            assert_eq!(x.scope, y.scope);
+        }
+    }
+
+    #[test]
+    fn rat_balanced_split() {
+        let g = random_binary_trees(16, 1, 1, 7);
+        let p = g.partitions[0];
+        assert_eq!(g.regions[p.left].scope.len(), 8);
+        assert_eq!(g.regions[p.right].scope.len(), 8);
+    }
+
+    #[test]
+    fn pd_vertical_strips() {
+        let g = poon_domingos(4, 8, 2, PdAxes::Vertical);
+        g.validate().unwrap();
+        let leaves: Vec<_> = g.leaves().collect();
+        assert_eq!(leaves.len(), 4); // four 2-wide column strips
+        for leaf in leaves {
+            assert_eq!(leaf.scope.len(), 8);
+        }
+    }
+
+    #[test]
+    fn pd_both_axes_has_mixing_regions() {
+        let g = poon_domingos(4, 4, 2, PdAxes::Both);
+        g.validate().unwrap();
+        assert!(g.regions.iter().any(|r| r.partitions.len() > 1));
+    }
+
+    #[test]
+    fn pd_region_count_scales_with_inverse_delta() {
+        let coarse = poon_domingos(8, 8, 4, PdAxes::Both);
+        let fine = poon_domingos(8, 8, 2, PdAxes::Both);
+        assert!(fine.regions.len() > coarse.regions.len());
+    }
+
+    #[test]
+    fn chain_is_valid_and_linear() {
+        let g = binary_chain(6);
+        g.validate().unwrap();
+        assert_eq!(g.partitions.len(), 5);
+        assert_eq!(g.num_leaves(), 6);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert!(from_spec(8, "rat:depth=2,replica=3").is_ok());
+        assert!(from_spec(16, "pd:h=4,w=4,delta=2,axes=hv").is_ok());
+        assert!(from_spec(8, "pd:h=4,w=4").is_err()); // 16 != 8
+        assert!(from_spec(8, "bogus").is_err());
+    }
+}

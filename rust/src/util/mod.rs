@@ -1,0 +1,137 @@
+//! Shared substrates: RNG, log-domain math, bitsets, statistics, JSON,
+//! CLI parsing, timing, and buffer accounting.
+//!
+//! Everything here is hand-rolled because the offline crate registry only
+//! carries the `xla` dependency closure — see DESIGN.md §3 (Substitutions).
+
+pub mod bitset;
+pub mod fastmath;
+pub mod cli;
+pub mod json;
+pub mod logsumexp;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock timer with split support.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Leveled stderr logger controlled by the `EINET_LOG` env var
+/// (`error|warn|info|debug`, default `info`).
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+pub fn log_level() -> Level {
+    match std::env::var("EINET_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $tag:expr, $($arg:tt)*) => {
+        if $crate::util::log_level() >= $lvl {
+            eprintln!("[{}] {}", $tag, format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Info, "info", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Debug, "debug", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::Level::Warn, "warn", $($arg)*) };
+}
+
+/// Byte counts for the Fig. 3 / Fig. 6 memory-proxy: every engine reports
+/// the f32 buffers it keeps alive, mirroring the paper's GPU peak-memory
+/// comparison (explicit product materialization is exactly the term that
+/// separates the layouts).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemFootprint {
+    /// parameter storage (weights, leaf params), bytes
+    pub params: usize,
+    /// activation storage (per-batch log-prob buffers), bytes
+    pub activations: usize,
+    /// scratch storage (temporaries the engine must keep allocated),
+    /// in particular explicit product nodes in the sparse layout
+    pub scratch: usize,
+}
+
+impl MemFootprint {
+    pub fn total(&self) -> usize {
+        self.params + self.activations + self.scratch
+    }
+
+    pub fn total_mib(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn footprint_total() {
+        let m = MemFootprint {
+            params: 100,
+            activations: 50,
+            scratch: 25,
+        };
+        assert_eq!(m.total(), 175);
+        assert!(m.total_mib() > 0.0);
+    }
+}

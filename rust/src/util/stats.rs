@@ -1,0 +1,255 @@
+//! Summary statistics and the one-sided Welch t-test used by Table 1.
+//!
+//! The paper declares EiNet/RAT-SPN log-likelihood differences significant
+//! via a one-sided t-test at p = 0.05; we reproduce that decision rule.
+//! The p-value requires the CDF of Student's t, computed through the
+//! regularized incomplete beta function (continued-fraction evaluation,
+//! Numerical-Recipes style) — implemented here from scratch since no stats
+//! crate is available offline.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// ln Gamma via the Lanczos approximation (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized incomplete beta I_x(a, b) by Lentz continued fraction.
+pub fn betainc(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x), "x out of range");
+    if x == 0.0 || x == 1.0 {
+        return x;
+    }
+    let ln_front =
+        ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    // use the symmetry relation for faster convergence (non-recursive to
+    // avoid the boundary case x == (a+1)/(a+b+2) ping-ponging)
+    if x < (a + 1.0) / (a + b + 2.0) {
+        ln_front.exp() * beta_cf(a, b, x) / a
+    } else {
+        1.0 - ln_front.exp() * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 1e-14;
+    const TINY: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < TINY {
+        d = TINY;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // even step
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // odd step
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// CDF of Student's t with `df` degrees of freedom.
+pub fn student_t_cdf(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    let p = 0.5 * betainc(0.5 * df, 0.5, x);
+    if t > 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Result of a Welch two-sample t-test.
+#[derive(Clone, Copy, Debug)]
+pub struct TTest {
+    pub t: f64,
+    pub df: f64,
+    /// One-sided p-value for H1: mean(a) > mean(b).
+    pub p_greater: f64,
+    /// Two-sided p-value.
+    pub p_two_sided: f64,
+}
+
+/// Welch's unequal-variance t-test of samples `a` vs `b`.
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> TTest {
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (variance(a), variance(b));
+    let se2 = va / na + vb / nb;
+    let t = if se2 > 0.0 {
+        (ma - mb) / se2.sqrt()
+    } else if ma == mb {
+        0.0
+    } else if ma > mb {
+        f64::INFINITY
+    } else {
+        f64::NEG_INFINITY
+    };
+    let df = if se2 > 0.0 {
+        se2 * se2
+            / ((va / na).powi(2) / (na - 1.0).max(1.0)
+                + (vb / nb).powi(2) / (nb - 1.0).max(1.0))
+    } else {
+        na + nb - 2.0
+    };
+    let p_greater = if t.is_finite() {
+        1.0 - student_t_cdf(t, df)
+    } else if t > 0.0 {
+        0.0
+    } else {
+        1.0
+    };
+    let p_two = if t.is_finite() {
+        2.0 * (1.0 - student_t_cdf(t.abs(), df))
+    } else {
+        0.0
+    };
+    TTest {
+        t,
+        df,
+        p_greater,
+        p_two_sided: p_two,
+    }
+}
+
+/// The paper's Table-1 decision: are the two result samples statistically
+/// indistinguishable at level `alpha` (one-sided, either direction)?
+pub fn not_significantly_different(a: &[f64], b: &[f64], alpha: f64) -> bool {
+    let t = welch_t_test(a, b);
+    t.p_greater > alpha && (1.0 - t.p_greater) > alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(5) = 24
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        // Gamma(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn betainc_symmetry_and_bounds() {
+        assert_eq!(betainc(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betainc(2.0, 3.0, 1.0), 1.0);
+        let v = betainc(2.0, 2.0, 0.5);
+        assert!((v - 0.5).abs() < 1e-10); // symmetric case
+    }
+
+    #[test]
+    fn student_t_cdf_known_values() {
+        // t=0 -> 0.5 for any df
+        assert!((student_t_cdf(0.0, 5.0) - 0.5).abs() < 1e-12);
+        // df=1 (Cauchy): CDF(1) = 0.75
+        assert!((student_t_cdf(1.0, 1.0) - 0.75).abs() < 1e-9);
+        // large df approaches normal: CDF(1.96, 1e6) ~ 0.975
+        assert!((student_t_cdf(1.96, 1e6) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn welch_detects_difference() {
+        let a: Vec<f64> = (0..50).map(|i| 1.0 + (i % 5) as f64 * 0.01).collect();
+        let b: Vec<f64> = (0..50).map(|i| 0.0 + (i % 5) as f64 * 0.01).collect();
+        let t = welch_t_test(&a, &b);
+        assert!(t.p_greater < 1e-6);
+        assert!(!not_significantly_different(&a, &b, 0.05));
+    }
+
+    #[test]
+    fn welch_accepts_same_distribution() {
+        let a: Vec<f64> = (0..60).map(|i| ((i * 37) % 17) as f64).collect();
+        let b: Vec<f64> = (0..60).map(|i| ((i * 23 + 5) % 17) as f64).collect();
+        assert!(not_significantly_different(&a, &b, 0.05));
+    }
+
+    #[test]
+    fn zero_variance_equal_means() {
+        let a = [2.0, 2.0, 2.0];
+        let b = [2.0, 2.0, 2.0];
+        let t = welch_t_test(&a, &b);
+        assert_eq!(t.t, 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Integration tests over the full AOT path: python-lowered HLO artifacts
+//! executed through the rust PJRT runtime.
+//!
+//! Requires `make artifacts` to have produced `artifacts/` (the Makefile
+//! test target guarantees this ordering). These tests exercise the exact
+//! request-path composition: L1 Pallas kernels inside L2 jax graphs,
+//! compiled once, driven by rust-owned parameters.
+
+use einet::coordinator::AotTrainer;
+use einet::em::EmConfig;
+use einet::leaves::LeafFamily;
+use einet::runtime::{AotParams, Runtime};
+use einet::util::rng::Rng;
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(artifact_dir()).expect("artifacts/ present — run `make artifacts`")
+}
+
+#[test]
+fn manifest_lists_configs() {
+    let rt = runtime();
+    let names = rt.list().unwrap();
+    assert!(names.contains(&"quick_d4".to_string()));
+    assert!(!rt.platform().is_empty());
+}
+
+#[test]
+fn fwd_executes_and_normalizes() {
+    // sum of P(x) over all 2^4 binary states must be 1 — through the whole
+    // python->HLO->PJRT->rust chain.
+    let rt = runtime();
+    let meta = rt.meta("quick_d4").unwrap();
+    assert_eq!(meta.num_vars, 4);
+    assert_eq!(meta.batch, 8);
+    let exe = rt.compile(&meta, "fwd").unwrap();
+    let params = AotParams::init(&meta, LeafFamily::Bernoulli, 0).unwrap();
+    let mask = vec![1.0f32; 4];
+    let mut total = 0.0f64;
+    // 16 states in two batches of 8
+    for half in 0..2 {
+        let mut x = vec![0.0f32; 8 * 4];
+        for i in 0..8 {
+            let state = half * 8 + i;
+            for d in 0..4 {
+                x[i * 4 + d] = ((state >> d) & 1) as f32;
+            }
+        }
+        let mut inputs = params.input_slices();
+        inputs.push(&x);
+        inputs.push(&mask);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 8);
+        total += out[0].iter().map(|&l| (l as f64).exp()).sum::<f64>();
+    }
+    assert!((total - 1.0).abs() < 1e-4, "total {total}");
+}
+
+#[test]
+fn fwd_marginalization_gives_zero() {
+    let rt = runtime();
+    let meta = rt.meta("quick_d4").unwrap();
+    let exe = rt.compile(&meta, "fwd").unwrap();
+    let params = AotParams::init(&meta, LeafFamily::Bernoulli, 1).unwrap();
+    let mask = vec![0.0f32; 4];
+    let x = vec![0.0f32; 8 * 4];
+    let mut inputs = params.input_slices();
+    inputs.push(&x);
+    inputs.push(&mask);
+    let out = exe.run(&inputs).unwrap();
+    for &l in &out[0] {
+        assert!(l.abs() < 1e-4, "marginalized logp {l}");
+    }
+}
+
+#[test]
+fn train_outputs_match_contract_and_grads_are_sane() {
+    let rt = runtime();
+    let meta = rt.meta("quick_d4").unwrap();
+    let exe = rt.compile(&meta, "train").unwrap();
+    let params = AotParams::init(&meta, LeafFamily::Bernoulli, 2).unwrap();
+    let mask = vec![1.0f32; 4];
+    let mut rng = Rng::new(0);
+    let mut x = vec![0.0f32; 8 * 4];
+    for v in x.iter_mut() {
+        *v = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+    }
+    let mut inputs = params.input_slices();
+    inputs.push(&x);
+    inputs.push(&mask);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1 + meta.params.len());
+    // shift gradient: per variable, total posterior mass == batch size
+    let shift_idx = 1 + meta
+        .params
+        .iter()
+        .position(|p| p.kind == "shift")
+        .unwrap();
+    let g = &out[shift_idx];
+    let kr = meta.k * meta.replica;
+    for d in 0..meta.num_vars {
+        let mass: f32 = g[d * kr..(d + 1) * kr].iter().sum();
+        assert!(
+            (mass - meta.batch as f32).abs() < 1e-2,
+            "var {d}: posterior mass {mass}"
+        );
+    }
+    // w gradients must be non-negative (they are expected counts / w)
+    for (pi, desc) in meta.params.iter().enumerate() {
+        if desc.kind == "w" {
+            assert!(
+                out[1 + pi].iter().all(|&v| v >= -1e-5),
+                "negative n-statistic in {}",
+                desc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn aot_trainer_improves_likelihood() {
+    // the full L1+L2+L3 training loop: PJRT E-step + rust M-step
+    let rt = runtime();
+    let em = EmConfig {
+        step_size: 0.5,
+        ..Default::default()
+    };
+    let mut trainer = AotTrainer::new(&rt, "quick_d4", 0, em).unwrap();
+    let b = trainer.meta.batch;
+    let d = trainer.meta.num_vars;
+    let mask = vec![1.0f32; d];
+    let mut rng = Rng::new(3);
+    // a correlated data stream (all-equal bits with noise)
+    let gen = |rng: &mut Rng| -> Vec<f32> {
+        let mut x = vec![0.0f32; b * d];
+        for i in 0..b {
+            let z = rng.bernoulli(0.5);
+            for j in 0..d {
+                let p = if z { 0.9 } else { 0.1 };
+                x[i * d + j] = if rng.bernoulli(p) { 1.0 } else { 0.0 };
+            }
+        }
+        x
+    };
+    let eval = gen(&mut rng);
+    let ll0 = trainer.eval_batch(&eval, &mask).unwrap();
+    for _ in 0..30 {
+        let x = gen(&mut rng);
+        trainer.em_step(&x, &mask).unwrap();
+    }
+    let ll1 = trainer.eval_batch(&eval, &mask).unwrap();
+    assert!(
+        ll1 > ll0 + 0.1,
+        "AOT EM failed to improve: {ll0:.4} -> {ll1:.4}"
+    );
+}
+
+#[test]
+fn aot_agrees_with_rust_dense_engine_on_leaf_math() {
+    // Cross-implementation check: a Bernoulli leaf evaluated by the HLO
+    // path must match the rust leaf math. We compare full-graph outputs
+    // for a 1-variable-marginalized mask where only variable 0 is active
+    // in a K=R=structure shared between both sides is impractical (the
+    // structures differ), so instead we check the *family* math: the HLO
+    // model with all-but-one variable marginalized defines a mixture of
+    // Bernoullis over var 0; its total over {0,1} must be 1.
+    let rt = runtime();
+    let meta = rt.meta("quick_d4").unwrap();
+    let exe = rt.compile(&meta, "fwd").unwrap();
+    let params = AotParams::init(&meta, LeafFamily::Bernoulli, 5).unwrap();
+    let mut mask = vec![0.0f32; 4];
+    mask[0] = 1.0;
+    let mut x = vec![0.0f32; 8 * 4];
+    x[0] = 0.0; // sample 0: var0 = 0
+    x[4] = 1.0; // sample 1: var0 = 1
+    let mut inputs = params.input_slices();
+    inputs.push(&x);
+    inputs.push(&mask);
+    let out = exe.run(&inputs).unwrap();
+    let p0 = (out[0][0] as f64).exp();
+    let p1 = (out[0][1] as f64).exp();
+    assert!((p0 + p1 - 1.0).abs() < 1e-5, "p0+p1 = {}", p0 + p1);
+}

@@ -1,0 +1,325 @@
+//! Cross-module system tests: full pipelines over the pure-rust engines
+//! (the AOT/PJRT pipeline is covered in runtime_integration.rs).
+
+use einet::coordinator::server::InferenceServer;
+use einet::coordinator::{evaluate, train_parallel, TrainConfig};
+use einet::data::{debd, images};
+use einet::em::EmConfig;
+use einet::infer::inpaint;
+use einet::mixture::{EinetMixture, MixtureConfig};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::util::stats::welch_t_test;
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, EmStats, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+/// Full Table-1-style pipeline on one dataset: synth data -> RAT structure
+/// -> parallel stochastic EM -> test LL beats the independence baseline.
+#[test]
+fn density_estimation_learns_tree_bn() {
+    let ds = debd::load("nltcs").unwrap();
+    let graph = random_binary_trees(ds.num_vars, 3, 4, 0);
+    let plan = LayeredPlan::compile(graph, 6);
+    let family = LeafFamily::Bernoulli;
+    let mut params = EinetParams::init(&plan, family, 0);
+    let cfg = TrainConfig {
+        epochs: 4,
+        batch_size: 256,
+        workers: 4,
+        em: EmConfig {
+            step_size: 0.5,
+            ..Default::default()
+        },
+        log_every: 0,
+    };
+    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let test_ll = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    // independence baseline: product of marginal Bernoullis
+    let mut marg = vec![0.0f64; ds.num_vars];
+    for i in 0..ds.train.n {
+        for d in 0..ds.num_vars {
+            marg[d] += ds.train.row(i)[d] as f64;
+        }
+    }
+    let mut indep_ll = 0.0f64;
+    for i in 0..ds.test.n {
+        for d in 0..ds.num_vars {
+            let p = (marg[d] / ds.train.n as f64).clamp(1e-4, 1.0 - 1e-4);
+            let x = ds.test.row(i)[d] as f64;
+            indep_ll += x * p.ln() + (1.0 - x) * (1.0 - p).ln();
+        }
+    }
+    indep_ll /= ds.test.n as f64;
+    assert!(
+        test_ll > indep_ll + 0.3,
+        "EiNet {test_ll:.3} failed to beat independence {indep_ll:.3}"
+    );
+}
+
+/// Dense vs sparse engines trained with identical schedules produce
+/// statistically indistinguishable test likelihoods (the Table 1 claim).
+#[test]
+fn engines_reach_parity_on_test_ll() {
+    let ds = debd::load("nltcs").unwrap();
+    let graph = random_binary_trees(ds.num_vars, 3, 3, 1);
+    let plan = LayeredPlan::compile(graph, 4);
+    let family = LeafFamily::Bernoulli;
+    let em = EmConfig {
+        step_size: 0.5,
+        ..Default::default()
+    };
+    let batch = 256;
+    let n = 2048.min(ds.train.n);
+    let epochs = 3;
+    // dense
+    let mut p_d = EinetParams::init(&plan, family, 2);
+    let cfg = TrainConfig {
+        epochs,
+        batch_size: batch,
+        workers: 2,
+        em,
+        log_every: 0,
+    };
+    train_parallel(&plan, family, &mut p_d, ds.train.rows(0, n), n, &cfg);
+    // sparse
+    let mut p_s = EinetParams::init(&plan, family, 2);
+    let mask = vec![1.0f32; ds.num_vars];
+    let mut sparse = SparseEngine::new(plan.clone(), family, batch);
+    let mut logp = vec![0.0f32; batch];
+    for _ in 0..epochs {
+        let mut b0 = 0;
+        while b0 < n {
+            let bn = batch.min(n - b0);
+            let xs = ds.train.rows(b0, b0 + bn);
+            let mut stats = EmStats::zeros_like(&p_s);
+            sparse.forward(&p_s, xs, &mask, &mut logp[..bn]);
+            sparse.backward(&p_s, xs, &mask, bn, &mut stats);
+            einet::em::m_step(&mut p_s, &plan, &stats, &em);
+            b0 += bn;
+        }
+    }
+    let per_d = einet::coordinator::per_sample_ll(
+        &plan, family, &p_d, &ds.test.data, ds.test.n, 256,
+    );
+    let per_s = einet::coordinator::per_sample_ll(
+        &plan, family, &p_s, &ds.test.data, ds.test.n, 256,
+    );
+    let t = welch_t_test(&per_d, &per_s);
+    assert!(
+        t.p_greater > 0.05 && 1.0 - t.p_greater > 0.05,
+        "engines diverged: t = {:.3}",
+        t.t
+    );
+}
+
+/// Fig-4-style image pipeline end to end: synthetic digits -> k-means ->
+/// per-cluster EiNets on a PD structure -> samples + inpainting.
+#[test]
+fn image_pipeline_produces_valid_samples_and_inpaintings() {
+    let (h, w) = (8usize, 8usize);
+    let n = 160;
+    let (train, _) = images::svhn_like(n, h, w, 0);
+    let graph = poon_domingos(h, w, 2, PdAxes::Vertical);
+    let plan = LayeredPlan::compile(graph, 4);
+    let cfg = MixtureConfig {
+        num_clusters: 3,
+        k: 4,
+        epochs: 2,
+        batch_size: 40,
+        em: EmConfig {
+            step_size: 0.5,
+            var_bounds: (1e-6, 1e-1),
+            ..Default::default()
+        },
+        seed: 0,
+    };
+    let mut mix = EinetMixture::train(
+        plan,
+        LeafFamily::Gaussian { channels: 3 },
+        &train.data,
+        n,
+        &cfg,
+        |_, _, _| {},
+    )
+    .unwrap();
+    let mut rng = Rng::new(1);
+    let samples = mix.sample(4, &mut rng, DecodeMode::Sample);
+    assert_eq!(samples.len(), 4 * h * w * 3);
+    assert!(samples.iter().all(|v| v.is_finite()));
+    // inpaint with left half hidden
+    let (test, _) = images::svhn_like(2, h, w, 9);
+    let mut emask = vec![1.0f32; h * w];
+    for y in 0..h {
+        for x in 0..w / 2 {
+            emask[y * w + x] = 0.0;
+        }
+    }
+    let out = mix.inpaint(&test.data, &emask, 2, DecodeMode::Argmax, &mut rng);
+    // observed pixels unchanged
+    for b in 0..2 {
+        for d in 0..h * w {
+            if emask[d] == 1.0 {
+                for c in 0..3 {
+                    assert_eq!(
+                        out[(b * h * w + d) * 3 + c],
+                        test.data[(b * h * w + d) * 3 + c]
+                    );
+                }
+            }
+        }
+    }
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+/// Gaussian-leaf dense engine + training: continuous data path.
+#[test]
+fn gaussian_em_improves_on_continuous_data() {
+    let nv = 16;
+    let n = 256;
+    let mut rng = Rng::new(5);
+    let mut data = vec![0.0f32; n * nv];
+    for b in 0..n {
+        let mode = rng.bernoulli(0.5);
+        for d in 0..nv {
+            let mu = if mode { 0.7 } else { 0.3 };
+            data[b * nv + d] = mu + 0.08 * rng.normal() as f32;
+        }
+    }
+    let family = LeafFamily::Gaussian { channels: 1 };
+    let graph = random_binary_trees(nv, 2, 2, 3);
+    let plan = LayeredPlan::compile(graph, 4);
+    let mut params = EinetParams::init(&plan, family, 4);
+    let ll0 = evaluate(&plan, family, &params, &data, n, 64);
+    let cfg = TrainConfig {
+        epochs: 6,
+        batch_size: 64,
+        workers: 2,
+        em: EmConfig {
+            step_size: 0.5,
+            var_bounds: (1e-5, 0.5),
+            ..Default::default()
+        },
+        log_every: 0,
+    };
+    train_parallel(&plan, family, &mut params, &data, n, &cfg);
+    let ll1 = evaluate(&plan, family, &params, &data, n, 64);
+    assert!(ll1 > ll0 + 1.0, "Gaussian EM barely improved: {ll0} -> {ll1}");
+}
+
+/// The serving path: concurrent clients against the batched service get
+/// exactly the same answers as direct engine calls.
+#[test]
+fn inference_server_concurrent_consistency() {
+    let nv = 12;
+    let graph = random_binary_trees(nv, 3, 2, 0);
+    let plan = LayeredPlan::compile(graph, 4);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
+    let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 1);
+    let mask = vec![1.0f32; nv];
+    let server = InferenceServer::start(
+        plan,
+        LeafFamily::Bernoulli,
+        params.clone(),
+        32,
+        std::time::Duration::from_millis(2),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let rxs: Vec<_> = (0..25)
+            .map(|i| {
+                let x: Vec<f32> = (0..nv)
+                    .map(|d| (((t * 25 + i) >> (d % 8)) & 1) as f32)
+                    .collect();
+                (x.clone(), server.submit(x, mask.clone()))
+            })
+            .collect();
+        handles.push(rxs);
+    }
+    for rxs in handles {
+        for (x, rx) in rxs {
+            let got = rx.recv().unwrap();
+            let mut want = vec![0.0f32; 1];
+            direct.forward(&params, &x, &mask, &mut want);
+            assert!((got - want[0]).abs() < 1e-5);
+        }
+    }
+    let stats = server.stop();
+    assert_eq!(stats.queries, 100);
+}
+
+/// Checkpoint round-trip preserves inference results exactly.
+#[test]
+fn checkpoint_preserves_model_behaviour() {
+    let ds = debd::load("nltcs").unwrap();
+    let graph = random_binary_trees(ds.num_vars, 2, 2, 0);
+    let plan = LayeredPlan::compile(graph, 4);
+    let family = LeafFamily::Bernoulli;
+    let mut params = EinetParams::init(&plan, family, 0);
+    let cfg = TrainConfig {
+        epochs: 1,
+        batch_size: 256,
+        workers: 2,
+        em: EmConfig::default(),
+        log_every: 0,
+    };
+    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let path = std::env::temp_dir().join("einet_system_ckpt.bin");
+    params.save(&path).unwrap();
+    let loaded = EinetParams::load(&path, family).unwrap();
+    let a = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 128);
+    let b = evaluate(&plan, family, &loaded, &ds.test.data, ds.test.n, 128);
+    assert_eq!(a, b);
+    let _ = std::fs::remove_file(path);
+}
+
+/// Inpainting on a trained model beats chance at recovering masked bits.
+#[test]
+fn trained_inpainting_beats_random_fill() {
+    let ds = debd::load("nltcs").unwrap();
+    let graph = random_binary_trees(ds.num_vars, 3, 4, 0);
+    let plan = LayeredPlan::compile(graph, 6);
+    let family = LeafFamily::Bernoulli;
+    let mut params = EinetParams::init(&plan, family, 0);
+    let cfg = TrainConfig {
+        epochs: 3,
+        batch_size: 256,
+        workers: 4,
+        em: EmConfig {
+            step_size: 0.5,
+            ..Default::default()
+        },
+        log_every: 0,
+    };
+    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let mut engine = DenseEngine::new(plan, family, 64);
+    let nv = ds.num_vars;
+    let mut emask = vec![1.0f32; nv];
+    for d in nv / 2..nv {
+        emask[d] = 0.0;
+    }
+    let mut rng = Rng::new(2);
+    let n_eval = 64;
+    let out = inpaint(
+        &mut engine,
+        &params,
+        ds.test.rows(0, n_eval),
+        &emask,
+        n_eval,
+        DecodeMode::Argmax,
+        &mut rng,
+    );
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in 0..n_eval {
+        for d in nv / 2..nv {
+            total += 1;
+            if (out[b * nv + d] > 0.5) == (ds.test.row(b)[d] > 0.5) {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(acc > 0.6, "inpainting accuracy {acc:.3} no better than chance");
+}
