@@ -38,7 +38,7 @@ fn main() {
     engine.forward(&params, data.rows(0, batch), &mask, &mut logp);
     engine.backward(&params, data.rows(0, batch), &mask, batch, &mut stats);
     let t = Timer::new();
-    for _ in 0..reps { m_step(&mut params, &plan, &stats, &em); }
+    for _ in 0..reps { m_step(&mut params, &stats, &em); }
     let mstep = t.elapsed_ms() / reps as f64;
     println!("fwd {fwd:.2}ms  fwd+bwd {fwdbwd:.2}ms (bwd {:.2}ms)  m_step {mstep:.2}ms", fwdbwd - fwd);
     println!("per-epoch estimate (2 batches): {:.1}ms", 2.0*(fwdbwd+mstep));

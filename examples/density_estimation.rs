@@ -18,7 +18,7 @@ use einet::data::debd;
 use einet::em::{m_step, EmConfig};
 use einet::util::json;
 use einet::util::stats::welch_t_test;
-use einet::{EinetParams, EmStats, LayeredPlan, LeafFamily, SparseEngine};
+use einet::{DenseEngine, EinetParams, EmStats, LayeredPlan, LeafFamily, SparseEngine};
 
 struct Row {
     name: String,
@@ -28,7 +28,7 @@ struct Row {
     t_stat: f64,
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> einet::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     // full mode covers all 20 datasets; scaled to K=8/R=6/4 epochs so the
     // single-threaded sparse comparator finishes the suite in CPU minutes
@@ -102,7 +102,7 @@ fn run_one(
     ds: &einet::data::Dataset,
     plan: &LayeredPlan,
     epochs: usize,
-) -> anyhow::Result<Row> {
+) -> einet::Result<Row> {
     let family = LeafFamily::Bernoulli;
     let batch = 256;
     let em = EmConfig {
@@ -118,8 +118,9 @@ fn run_one(
         em,
         log_every: 0,
     };
-    train_parallel(plan, family, &mut p_dense, &ds.train.data, ds.train.n, &cfg);
-    let per_dense = per_sample_ll(plan, family, &p_dense, &ds.test.data, ds.test.n, 256);
+    train_parallel::<DenseEngine>(plan, family, &mut p_dense, &ds.train.data, ds.train.n, &cfg);
+    let per_dense =
+        per_sample_ll::<DenseEngine>(plan, family, &p_dense, &ds.test.data, ds.test.n, 256);
 
     // RAT-SPN stand-in: sparse engine, same init/schedule
     let mut p_sparse = EinetParams::init(plan, family, 1);
@@ -134,12 +135,12 @@ fn run_one(
             let mut stats = EmStats::zeros_like(&p_sparse);
             sparse.forward(&p_sparse, xs, &mask, &mut logp[..bn]);
             sparse.backward(&p_sparse, xs, &mask, bn, &mut stats);
-            m_step(&mut p_sparse, plan, &stats, &em);
+            m_step(&mut p_sparse, &stats, &em);
             b0 += bn;
         }
     }
     let per_sparse =
-        per_sample_ll(plan, family, &p_sparse, &ds.test.data, ds.test.n, 256);
+        per_sample_ll::<DenseEngine>(plan, family, &p_sparse, &ds.test.data, ds.test.n, 256);
 
     let dense_ll = per_dense.iter().sum::<f64>() / per_dense.len() as f64;
     let sparse_ll = per_sparse.iter().sum::<f64>() / per_sparse.len() as f64;

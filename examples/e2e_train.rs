@@ -18,7 +18,7 @@ use einet::em::EmConfig;
 use einet::runtime::Runtime;
 use einet::util::Timer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> einet::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args
         .iter()
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         steps as f64 / t.elapsed_s(),
         b
     );
-    anyhow::ensure!(ll1 > ll0, "training failed to improve the eval LL");
+    einet::ensure!(ll1 > ll0, "training failed to improve the eval LL");
     println!("e2e OK: L1 (pallas) + L2 (jax/HLO) + L3 (rust/PJRT) compose.");
     Ok(())
 }

@@ -20,9 +20,9 @@ use einet::mixture::{EinetMixture, MixtureConfig};
 use einet::structure::{poon_domingos, PdAxes};
 use einet::util::rng::Rng;
 use einet::util::Timer;
-use einet::{DecodeMode, LayeredPlan, LeafFamily};
+use einet::{DecodeMode, DenseEngine, LayeredPlan, LeafFamily};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> einet::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let out_dir = Path::new("out_images");
     std::fs::create_dir_all(out_dir)?;
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         seed: 0,
     };
     let t = Timer::new();
-    let mut mix = EinetMixture::train(
+    let mut mix = EinetMixture::<DenseEngine>::train(
         plan.clone(),
         LeafFamily::Gaussian { channels: 3 },
         &train.data,
@@ -145,7 +145,7 @@ fn main() -> anyhow::Result<()> {
     if !quick {
         println!("\nrendering CelebA-like faces ...");
         let faces = images::celeba_like(2000, h, w, 5);
-        let mut mixf = EinetMixture::train(
+        let mut mixf = EinetMixture::<DenseEngine>::train(
             plan,
             LeafFamily::Gaussian { channels: 3 },
             &faces.data,

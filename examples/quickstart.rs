@@ -12,7 +12,7 @@ use einet::structure::random_binary_trees;
 use einet::util::rng::Rng;
 use einet::{DecodeMode, DenseEngine, EinetParams, LayeredPlan, LeafFamily};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> einet::Result<()> {
     // 1. data: a binary density-estimation dataset (synthetic DEBD twin)
     let ds = debd::load("nltcs").expect("known dataset");
     println!(
@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
         },
         log_every: 1,
     };
-    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
-    let test_ll = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let test_ll = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
     println!("test log-likelihood: {test_ll:.4}");
 
     // 4. tractable inference

@@ -14,7 +14,7 @@ use einet::bench::Table;
 use einet::coordinator::{evaluate, train_parallel, TrainConfig};
 use einet::data::debd;
 use einet::em::EmConfig;
-use einet::{EinetParams, LayeredPlan, LeafFamily};
+use einet::{DenseEngine, EinetParams, LayeredPlan, LeafFamily};
 
 fn main() {
     let ds = debd::load("nltcs").unwrap();
@@ -47,9 +47,11 @@ fn main() {
             },
             log_every: 0,
         };
-        let hist =
-            train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
-        let valid = evaluate(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
+        let hist = train_parallel::<DenseEngine>(
+            &plan, family, &mut params, &ds.train.data, ds.train.n, &cfg,
+        );
+        let valid =
+            evaluate::<DenseEngine>(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
         let secs: f64 =
             hist.iter().map(|h| h.seconds).sum::<f64>() / hist.len() as f64;
         table.row(vec![

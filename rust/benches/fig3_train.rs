@@ -10,12 +10,21 @@
 //! under test: the dense layout is 1-2 orders of magnitude faster and
 //! substantially smaller at large K/D/R, growing gracefully.
 //!
+//! Also measures the coordinator's persistent worker pool against the old
+//! per-mini-batch `thread::scope` spawning design on the Fig. 3 default
+//! config, and records everything (including dense forward throughput,
+//! for before/after regression tracking) in BENCH_fig3.json.
+//!
 //!     cargo bench --bench fig3_train            # full sweep
 //!     EINET_BENCH_QUICK=1 cargo bench --bench fig3_train
 
+use std::sync::mpsc;
+
 use einet::bench::{fmt_bytes, fmt_si, time_it, Table};
+use einet::coordinator::{train_parallel, TrainConfig};
 use einet::data::debd::gaussian_noise;
 use einet::em::{m_step, EmConfig};
+use einet::util::json;
 use einet::{
     DenseEngine, EinetParams, EmStats, LayeredPlan, LeafFamily, SparseEngine,
 };
@@ -45,6 +54,62 @@ fn sweep() -> Vec<SweepPoint> {
     pts
 }
 
+/// The coordinator's PREVIOUS design, kept here as the baseline for the
+/// worker-pool comparison: engines are reused, but a `thread::scope` is
+/// opened (and its threads spawned and joined) for EVERY mini-batch.
+#[allow(clippy::too_many_arguments)]
+fn train_epoch_spawn_per_batch(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &mut EinetParams,
+    engines: &mut [DenseEngine],
+    data: &[f32],
+    n: usize,
+    batch: usize,
+    em: &EmConfig,
+) {
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    let workers = engines.len();
+    let mask = vec![1.0f32; d];
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bn = batch.min(n - b0);
+        let batch_data = &data[b0 * row..(b0 + bn) * row];
+        let shard = bn.div_ceil(workers);
+        let mut merged = EmStats::zeros_like(params);
+        std::thread::scope(|scope| {
+            let (tx, rx) = mpsc::channel::<EmStats>();
+            for (w, engine) in engines.iter_mut().enumerate() {
+                let lo = (w * shard).min(bn);
+                let hi = ((w + 1) * shard).min(bn);
+                if lo >= hi {
+                    continue;
+                }
+                let tx = tx.clone();
+                let mask = &mask;
+                let params = &*params;
+                let chunk = &batch_data[lo * row..hi * row];
+                scope.spawn(move || {
+                    let bn_w = hi - lo;
+                    let mut stats = EmStats::zeros_like(params);
+                    let mut logp = vec![0.0f32; bn_w];
+                    engine.forward(params, chunk, mask, &mut logp);
+                    engine.backward(params, chunk, mask, bn_w, &mut stats);
+                    let _ = tx.send(stats);
+                });
+            }
+            drop(tx);
+            while let Ok(stats) = rx.recv() {
+                merged.merge(&stats);
+            }
+        });
+        m_step(params, &merged, em);
+        b0 += bn;
+    }
+}
+
 fn main() {
     let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
     let num_vars = if quick { 128 } else { 512 };
@@ -60,6 +125,7 @@ fn main() {
         ..Default::default()
     };
     let mask = vec![1.0f32; num_vars];
+    let mut report_rows: Vec<json::Json> = Vec::new();
 
     println!(
         "Fig. 3 — train time/epoch + memory, Gaussian noise N={n} D={num_vars}, batch={batch}"
@@ -91,7 +157,7 @@ fn main() {
                 let xs = data.rows(b0, b0 + bn);
                 dense.forward(&p_dense, xs, &mask, &mut logp[..bn]);
                 dense.backward(&p_dense, xs, &mask, bn, &mut stats);
-                m_step(&mut p_dense, &plan, &stats, &em);
+                m_step(&mut p_dense, &stats, &em);
                 stats.reset();
                 b0 += bn;
             }
@@ -112,7 +178,7 @@ fn main() {
                 let xs = data.rows(b0, b0 + bn);
                 sparse.forward(&p_sparse, xs, &mask, &mut logp[..bn]);
                 sparse.backward(&p_sparse, xs, &mask, bn, &mut stats);
-                m_step(&mut p_sparse, &plan, &stats, &em);
+                m_step(&mut p_sparse, &stats, &em);
                 stats.reset();
                 b0 += bn;
             }
@@ -141,6 +207,117 @@ fn main() {
             fmt_bytes(mem_d),
             fmt_bytes(mem_s)
         );
+        report_rows.push(json::obj(vec![
+            ("point", json::s(&pt.label)),
+            ("params", json::num(params.num_params() as f64)),
+            ("dense_epoch_s", json::num(md.median_s)),
+            ("sparse_epoch_s", json::num(ms.median_s)),
+            ("speedup", json::num(ms.median_s / md.median_s)),
+            ("dense_mem_bytes", json::num(mem_d as f64)),
+            ("sparse_mem_bytes", json::num(mem_s as f64)),
+        ]));
     }
     println!("\n{}", table.render());
+
+    // ---- worker pool vs per-batch thread spawning ----------------------
+    // Fig. 3 default config (K=10 D=4 R=10), multi-worker: the persistent
+    // pool in coordinator::train_parallel against the old design that
+    // re-spawned scoped threads every mini-batch.
+    let workers = 4usize;
+    let epochs = if quick { 2 } else { 3 };
+    let graph = einet::structure::random_binary_trees(num_vars, 4, 10, 7);
+    let plan = LayeredPlan::compile(graph, 10);
+    let params0 = EinetParams::init(&plan, family, 0);
+
+    let mut p_pool = params0.clone();
+    let cfg = TrainConfig {
+        epochs,
+        batch_size: batch,
+        workers,
+        em,
+        log_every: 0,
+    };
+    let m_pool = time_it(
+        || {
+            p_pool.clone_from(&params0);
+            train_parallel::<DenseEngine>(&plan, family, &mut p_pool, &data.data, n, &cfg);
+        },
+        1,
+        if quick { 2 } else { 3 },
+    );
+
+    let shard_cap = batch.div_ceil(workers);
+    let mut p_spawn = params0.clone();
+    let m_spawn = time_it(
+        || {
+            // engine construction inside the timed region on BOTH sides
+            // (train_parallel builds its worker engines per call too), so
+            // the comparison isolates thread churn
+            let mut engines: Vec<DenseEngine> = (0..workers)
+                .map(|_| DenseEngine::new(plan.clone(), family, shard_cap))
+                .collect();
+            p_spawn.clone_from(&params0);
+            for _ in 0..epochs {
+                train_epoch_spawn_per_batch(
+                    &plan, family, &mut p_spawn, &mut engines, &data.data, n, batch,
+                    &em,
+                );
+            }
+        },
+        1,
+        if quick { 2 } else { 3 },
+    );
+    let pool_speedup = m_spawn.median_s / m_pool.median_s;
+    println!(
+        "coordinator: persistent pool {} vs per-batch spawn {} ({:.2}x), \
+         {workers} workers, {epochs} epochs",
+        fmt_si(m_pool.median_s),
+        fmt_si(m_spawn.median_s),
+        pool_speedup
+    );
+
+    // ---- dense forward throughput on the Fig. 3 default config ---------
+    // (recorded so future engine changes can be regression-checked)
+    let mut fwd_engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut logp = vec![0.0f32; batch];
+    let xs = data.rows(0, batch);
+    let m_fwd = time_it(
+        || fwd_engine.forward(&params0, xs, &mask, &mut logp),
+        2,
+        if quick { 5 } else { 10 },
+    );
+    let samples_per_s = batch as f64 / m_fwd.median_s;
+    println!(
+        "dense forward (K=10 D=4 R=10, batch {batch}): {} per batch ({:.0} samples/s)",
+        fmt_si(m_fwd.median_s),
+        samples_per_s
+    );
+
+    let report = json::obj(vec![
+        ("experiment", json::s("fig3_train")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(num_vars as f64)),
+        ("n", json::num(n as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(report_rows)),
+        (
+            "coordinator",
+            json::obj(vec![
+                ("workers", json::num(workers as f64)),
+                ("epochs", json::num(epochs as f64)),
+                ("persistent_pool_s", json::num(m_pool.median_s)),
+                ("spawn_per_batch_s", json::num(m_spawn.median_s)),
+                ("pool_speedup", json::num(pool_speedup)),
+            ]),
+        ),
+        (
+            "dense_forward",
+            json::obj(vec![
+                ("batch_s", json::num(m_fwd.median_s)),
+                ("samples_per_s", json::num(samples_per_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_fig3.json", report.to_string()).expect("write BENCH_fig3.json");
+    println!("wrote BENCH_fig3.json");
 }

@@ -1,13 +1,32 @@
 //! Fig. 6 reproduction (supplementary): inference time per sample +
 //! memory, same K / depth / replica sweep as Fig. 3, forward pass only on
 //! a batch of 100 test samples (the paper reports time/100-batch / 100).
+//! Both engines run through the shared `Engine` trait; results are also
+//! recorded in BENCH_fig6.json.
 //!
 //!     cargo bench --bench fig6_inference
 //!     EINET_BENCH_QUICK=1 cargo bench --bench fig6_inference
 
 use einet::bench::{fmt_bytes, fmt_si, time_it, Table};
 use einet::data::debd::gaussian_noise;
-use einet::{DenseEngine, EinetParams, LayeredPlan, LeafFamily, SparseEngine};
+use einet::util::json;
+use einet::{
+    DenseEngine, EinetParams, Engine, LayeredPlan, LeafFamily, SparseEngine,
+};
+
+/// One timed forward measurement through the trait — the same code path
+/// either engine serves from.
+fn time_forward<E: Engine>(
+    engine: &mut E,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    batch: usize,
+    repeats: usize,
+) -> f64 {
+    let mut logp = vec![0.0f32; batch];
+    time_it(|| engine.forward(params, x, mask, &mut logp), 1, repeats).median_s
+}
 
 fn main() {
     let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
@@ -16,6 +35,7 @@ fn main() {
     let data = gaussian_noise(batch, num_vars, 1);
     let family = LeafFamily::Gaussian { channels: 1 };
     let mask = vec![1.0f32; num_vars];
+    let repeats = if quick { 3 } else { 5 };
 
     let kk: &[usize] = if quick { &[2, 8] } else { &[1, 2, 4, 8, 16, 32] };
     let dd: &[usize] = if quick { &[2, 4] } else { &[1, 2, 3, 4, 5, 6] };
@@ -36,6 +56,7 @@ fn main() {
         "point", "dense t/sample", "sparse t/sample", "speedup",
         "dense mem", "sparse mem",
     ]);
+    let mut report_rows: Vec<json::Json> = Vec::new();
     for (label, k, depth, replica) in points {
         let graph =
             einet::structure::random_binary_trees(num_vars, depth, replica, 7);
@@ -43,34 +64,42 @@ fn main() {
         let params = EinetParams::init(&plan, family, 0);
         let mut dense = DenseEngine::new(plan.clone(), family, batch);
         let mut sparse = SparseEngine::new(plan.clone(), family, batch);
-        let mut logp = vec![0.0f32; batch];
-        let md = time_it(
-            || dense.forward(&params, &data.data, &mask, &mut logp),
-            1,
-            if quick { 3 } else { 5 },
-        );
-        let ms = time_it(
-            || sparse.forward(&params, &data.data, &mask, &mut logp),
-            1,
-            if quick { 3 } else { 5 },
-        );
-        let mem_d = dense.memory_footprint(&params).total();
-        let mem_s = sparse.memory_footprint(&params).total();
+        let td = time_forward(&mut dense, &params, &data.data, &mask, batch, repeats);
+        let ts = time_forward(&mut sparse, &params, &data.data, &mask, batch, repeats);
+        let mem_d = Engine::memory_footprint(&dense, &params).total();
+        let mem_s = Engine::memory_footprint(&sparse, &params).total();
         table.row(vec![
             label.clone(),
-            fmt_si(md.median_s / batch as f64),
-            fmt_si(ms.median_s / batch as f64),
-            format!("{:.1}x", ms.median_s / md.median_s),
+            fmt_si(td / batch as f64),
+            fmt_si(ts / batch as f64),
+            format!("{:.1}x", ts / td),
             fmt_bytes(mem_d),
             fmt_bytes(mem_s),
         ]);
         println!(
             "{:<6} dense {}/sample  sparse {}/sample  speedup {:.1}x",
             label,
-            fmt_si(md.median_s / batch as f64),
-            fmt_si(ms.median_s / batch as f64),
-            ms.median_s / md.median_s
+            fmt_si(td / batch as f64),
+            fmt_si(ts / batch as f64),
+            ts / td
         );
+        report_rows.push(json::obj(vec![
+            ("point", json::s(&label)),
+            ("dense_sample_s", json::num(td / batch as f64)),
+            ("sparse_sample_s", json::num(ts / batch as f64)),
+            ("speedup", json::num(ts / td)),
+            ("dense_mem_bytes", json::num(mem_d as f64)),
+            ("sparse_mem_bytes", json::num(mem_s as f64)),
+        ]));
     }
     println!("\n{}", table.render());
+    let report = json::obj(vec![
+        ("experiment", json::s("fig6_inference")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(num_vars as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(report_rows)),
+    ]);
+    std::fs::write("BENCH_fig6.json", report.to_string()).expect("write BENCH_fig6.json");
+    println!("wrote BENCH_fig6.json");
 }

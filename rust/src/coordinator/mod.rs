@@ -2,21 +2,37 @@
 //! the AOT-backed trainer that drives the PJRT executables, and a batched
 //! inference service for conditional queries.
 //!
+//! Everything here is generic over `E:`[`Engine`] — the dense EiNet
+//! layout, the sparse baseline, and any future backend train and serve
+//! through the same code path. The parameter-server state is a single
+//! contiguous [`EinetParams`] arena behind an `RwLock`: workers take read
+//! locks for the E-step, the coordinator takes the write lock for the
+//! M-step, and the reduce is [`EmStats::merge`] — one flat element-wise
+//! add, because the statistics mirror the arena layout.
+//!
+//! Worker threads are **persistent**: spawned once per training run, fed
+//! (lo, hi) shard ranges over a channel per mini-batch, each owning a
+//! private engine for the whole run. (The previous design re-spawned a
+//! thread per mini-batch; on small batches thread churn dominated the
+//! E-step — see `benches/fig3_train.rs`, which records the speedup in
+//! BENCH_fig3.json.)
+//!
 //! tokio is unavailable in the offline registry; std threads + channels
 //! implement the same patterns (DESIGN.md §3).
 
 pub mod server;
 
-use std::sync::mpsc;
-
-use anyhow::Result;
+use std::sync::{mpsc, RwLock};
 
 use crate::em::{m_step, stats_from_natural_grads, EmConfig};
-use crate::engine::dense::DenseEngine;
-use crate::engine::{EinetParams, EmStats};
+use crate::engine::{
+    EinetParams, EmStats, Engine, LevelSpec, ParamArena, ParamLayout,
+};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
 use crate::runtime::{AotParams, ArtifactMeta, Executable};
+use crate::util::error::Result;
+use crate::{anyhow, ensure};
 
 /// Configuration for the multi-threaded EM trainer.
 #[derive(Clone, Copy, Debug)]
@@ -54,11 +70,12 @@ pub struct EpochStats {
     pub seconds: f64,
 }
 
-/// Data-parallel stochastic EM: each mini-batch is sharded across worker
-/// threads (each with a private engine), their E-step statistics are
-/// reduced (the parameter-server step), and one M-step updates the shared
-/// parameters. Statistically identical to single-threaded EM.
-pub fn train_parallel(
+/// Data-parallel stochastic EM: each mini-batch is sharded across a pool
+/// of persistent worker threads (each with a private engine built once
+/// for the whole run), their E-step statistics are reduced (the
+/// parameter-server step), and one M-step updates the shared parameter
+/// arena. Statistically identical to single-threaded EM.
+pub fn train_parallel<E: Engine>(
     plan: &LayeredPlan,
     family: LeafFamily,
     params: &mut EinetParams,
@@ -66,6 +83,11 @@ pub fn train_parallel(
     n: usize,
     cfg: &TrainConfig,
 ) -> Vec<EpochStats> {
+    assert_eq!(
+        params.family(),
+        family,
+        "parameter arena family does not match the configured family"
+    );
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
@@ -73,71 +95,102 @@ pub fn train_parallel(
     let workers = cfg.workers.max(1);
     let shard_cap = cfg.batch_size.div_ceil(workers);
     let mask = vec![1.0f32; d];
-    // one engine per worker, reused across all epochs
-    let mut engines: Vec<DenseEngine> = (0..workers)
-        .map(|_| DenseEngine::new(plan.clone(), family, shard_cap))
-        .collect();
+    let layout = params.layout.clone();
+    // the parameter-server state: workers read, the coordinator writes
+    let shared = RwLock::new(params.clone());
     let mut history = Vec::new();
-    for epoch in 0..cfg.epochs {
-        let t = crate::util::Timer::new();
-        let mut epoch_ll = 0.0f64;
-        let mut b0 = 0usize;
-        while b0 < n {
-            let bn = cfg.batch_size.min(n - b0);
-            let batch = &data[b0 * row..(b0 + bn) * row];
-            // shard the mini-batch across workers
-            let shard = bn.div_ceil(workers);
-            let mut merged = EmStats::zeros_like(params);
-            std::thread::scope(|scope| {
-                let (tx, rx) = mpsc::channel::<EmStats>();
-                for (w, engine) in engines.iter_mut().enumerate() {
-                    let lo = (w * shard).min(bn);
-                    let hi = ((w + 1) * shard).min(bn);
+    std::thread::scope(|scope| {
+        // one job channel and one private result channel per worker: if a
+        // worker dies (panics) its result sender drops, so the coordinator
+        // gets a recv error for the shard it is owed instead of blocking
+        // forever, and the reduce order is deterministic by worker index
+        let mut job_txs: Vec<mpsc::Sender<(usize, usize)>> =
+            Vec::with_capacity(workers);
+        let mut res_rxs: Vec<mpsc::Receiver<EmStats>> = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (jtx, jrx) = mpsc::channel::<(usize, usize)>();
+            let (res_tx, res_rx) = mpsc::channel::<EmStats>();
+            job_txs.push(jtx);
+            res_rxs.push(res_rx);
+            let mask = &mask;
+            let shared = &shared;
+            let layout = &layout;
+            scope.spawn(move || {
+                // private engine, owned for the whole training run
+                let mut engine = E::build(plan.clone(), family, shard_cap);
+                let mut logp = vec![0.0f32; shard_cap];
+                while let Ok((lo, hi)) = jrx.recv() {
+                    let bn = hi - lo;
+                    let chunk = &data[lo * row..hi * row];
+                    let mut stats = EmStats::zeros(layout);
+                    let guard = shared.read().expect("params lock poisoned");
+                    engine.forward(&guard, chunk, mask, &mut logp[..bn]);
+                    engine.backward(&guard, chunk, mask, bn, &mut stats);
+                    drop(guard);
+                    if res_tx.send(stats).is_err() {
+                        break; // coordinator gone: shut down
+                    }
+                }
+            });
+        }
+        let mut assigned: Vec<usize> = Vec::with_capacity(workers);
+        for epoch in 0..cfg.epochs {
+            let t = crate::util::Timer::new();
+            let mut epoch_ll = 0.0f64;
+            let mut b0 = 0usize;
+            while b0 < n {
+                let bn = cfg.batch_size.min(n - b0);
+                // shard the mini-batch across the worker pool
+                let shard = bn.div_ceil(workers);
+                assigned.clear();
+                for (w, jtx) in job_txs.iter().enumerate() {
+                    let lo = b0 + (w * shard).min(bn);
+                    let hi = b0 + ((w + 1) * shard).min(bn);
                     if lo >= hi {
                         continue;
                     }
-                    let tx = tx.clone();
-                    let mask = &mask;
-                    let params = &*params;
-                    let chunk = &batch[lo * row..hi * row];
-                    scope.spawn(move || {
-                        let bn_w = hi - lo;
-                        let mut stats = EmStats::zeros_like(params);
-                        let mut logp = vec![0.0f32; bn_w];
-                        engine.forward(params, chunk, mask, &mut logp);
-                        engine.backward(params, chunk, mask, bn_w, &mut stats);
-                        let _ = tx.send(stats);
-                    });
+                    jtx.send((lo, hi)).expect("training worker hung up");
+                    assigned.push(w);
                 }
-                drop(tx);
-                while let Ok(stats) = rx.recv() {
+                let mut merged = EmStats::zeros(&layout);
+                for &w in &assigned {
+                    let stats = res_rxs[w]
+                        .recv()
+                        .expect("training worker died before returning its E-step");
                     merged.merge(&stats);
                 }
-            });
-            epoch_ll += merged.loglik;
-            m_step(params, plan, &merged, &cfg.em);
-            b0 += bn;
+                epoch_ll += merged.loglik;
+                {
+                    let mut guard = shared.write().expect("params lock poisoned");
+                    m_step(&mut guard, &merged, &cfg.em);
+                }
+                b0 += bn;
+            }
+            let rec = EpochStats {
+                epoch,
+                train_ll: epoch_ll / n as f64,
+                seconds: t.elapsed_s(),
+            };
+            if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+                crate::info!(
+                    "epoch {:>3}: train LL {:.4} ({:.2}s)",
+                    rec.epoch,
+                    rec.train_ll,
+                    rec.seconds
+                );
+            }
+            history.push(rec);
         }
-        let rec = EpochStats {
-            epoch,
-            train_ll: epoch_ll / n as f64,
-            seconds: t.elapsed_s(),
-        };
-        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
-            crate::info!(
-                "epoch {:>3}: train LL {:.4} ({:.2}s)",
-                rec.epoch,
-                rec.train_ll,
-                rec.seconds
-            );
-        }
-        history.push(rec);
-    }
+        // dropping the job channels shuts the worker pool down; the scope
+        // then joins the threads
+        drop(job_txs);
+    });
+    *params = shared.into_inner().expect("params lock poisoned");
     history
 }
 
 /// Average test log-likelihood of a dataset split under the model.
-pub fn evaluate(
+pub fn evaluate<E: Engine>(
     plan: &LayeredPlan,
     family: LeafFamily,
     params: &EinetParams,
@@ -145,11 +198,16 @@ pub fn evaluate(
     n: usize,
     batch: usize,
 ) -> f64 {
+    assert_eq!(
+        params.family(),
+        family,
+        "parameter arena family does not match the configured family"
+    );
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
     let mask = vec![1.0f32; d];
-    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut engine = E::build(plan.clone(), family, batch);
     let mut total = 0.0f64;
     let mut logp = vec![0.0f32; batch];
     let mut b0 = 0usize;
@@ -168,7 +226,7 @@ pub fn evaluate(
 }
 
 /// Per-sample log-likelihoods (returned, not averaged).
-pub fn per_sample_ll(
+pub fn per_sample_ll<E: Engine>(
     plan: &LayeredPlan,
     family: LeafFamily,
     params: &EinetParams,
@@ -176,11 +234,16 @@ pub fn per_sample_ll(
     n: usize,
     batch: usize,
 ) -> Vec<f64> {
+    assert_eq!(
+        params.family(),
+        family,
+        "parameter arena family does not match the configured family"
+    );
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
     let mask = vec![1.0f32; d];
-    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut engine = E::build(plan.clone(), family, batch);
     let mut out = Vec::with_capacity(n);
     let mut logp = vec![0.0f32; batch];
     let mut b0 = 0usize;
@@ -206,10 +269,16 @@ pub fn per_sample_ll(
 /// PJRT executable (Pallas kernels + jax autodiff, compiled at build
 /// time); rust owns the parameters and performs the M-step. This is the
 /// end-to-end composition of L1/L2/L3.
+///
+/// The artifact's named tensors are bridged into a [`ParamArena`] whose
+/// [`ParamLayout`] is built straight from the artifact metadata — the AOT
+/// path shares the exact [`m_step`] the rust engines use, with no
+/// plan-shaped scaffolding in between.
 pub struct AotTrainer {
     pub meta: ArtifactMeta,
     pub family: LeafFamily,
     pub params: AotParams,
+    layout: ParamLayout,
     train_exe: Executable,
     fwd_exe: Executable,
     em: EmConfig,
@@ -231,8 +300,9 @@ impl AotTrainer {
             "categorical" => LeafFamily::Categorical {
                 cats: meta.stat_dim,
             },
-            other => anyhow::bail!("unsupported artifact family '{other}'"),
+            other => crate::bail!("unsupported artifact family '{other}'"),
         };
+        let layout = layout_from_meta(&meta, family)?;
         let params = AotParams::init(&meta, family, seed)?;
         let train_exe = runtime.compile(&meta, "train")?;
         let fwd_exe = runtime.compile(&meta, "fwd")?;
@@ -240,33 +310,32 @@ impl AotTrainer {
             meta,
             family,
             params,
+            layout,
             train_exe,
             fwd_exe,
             em,
         })
     }
 
-    /// One stochastic-EM step on a batch (padded to the artifact's static
-    /// batch size with repeats of the last row; padding rows are excluded
-    /// from the statistics by scaling — we simply require full batches
-    /// here and let callers drop remainders). Returns the mean LL.
+    /// One stochastic-EM step on a batch (callers supply full batches of
+    /// the artifact's static batch size and drop remainders). Returns the
+    /// mean LL.
     pub fn em_step(&mut self, x: &[f32], mask: &[f32]) -> Result<f64> {
         let b = self.meta.batch;
         let row = self.meta.num_vars * self.meta.obs_dim;
-        anyhow::ensure!(x.len() == b * row, "need a full batch of {b}");
+        ensure!(x.len() == b * row, "need a full batch of {b}");
         let mut inputs = self.params.input_slices();
         inputs.push(x);
         inputs.push(mask);
         let outputs = self.train_exe.run(&inputs)?;
         let logp = &outputs[0];
-        let mean_ll =
-            logp.iter().map(|&l| l as f64).sum::<f64>() / b as f64;
+        let mean_ll = logp.iter().map(|&l| l as f64).sum::<f64>() / b as f64;
 
-        // adapt the named gradients into EmStats for the shared M-step
-        let (stats, plan_proxy) = self.grads_to_stats(&outputs)?;
-        let mut eng_params = self.params_as_einet();
-        m_step(&mut eng_params, &plan_proxy, &stats, &self.em);
-        self.einet_to_params(&eng_params);
+        // bridge the named tensors + gradients into the shared arena path
+        let mut arena = self.params_to_arena();
+        let stats = self.grads_to_stats(&arena, &outputs)?;
+        m_step(&mut arena, &stats, &self.em);
+        self.arena_to_params(&arena);
         Ok(mean_ll)
     }
 
@@ -280,16 +349,14 @@ impl AotTrainer {
         Ok(outputs[0].iter().map(|&l| l as f64).sum::<f64>() / b as f64)
     }
 
-    /// Build a minimal plan-shaped view so the shared `m_step` applies.
-    /// The AOT path does not need a region graph — only the per-level
-    /// weight shapes — so we reconstruct a skeleton plan from metadata.
+    /// Adapt the executable's named gradient outputs into the flat
+    /// [`EmStats`] the shared M-step expects.
     fn grads_to_stats(
         &self,
+        arena: &ParamArena,
         outputs: &[Vec<f32>],
-    ) -> Result<(EmStats, LayeredPlan)> {
-        let plan = self.skeleton_plan();
-        let eng_params = self.params_as_einet();
-        let mut stats = EmStats::zeros_like(&eng_params);
+    ) -> Result<EmStats> {
+        let mut stats = EmStats::zeros(&self.layout);
         let mut grad_theta: &[f32] = &[];
         let mut grad_shift: &[f32] = &[];
         let mut w_i = 0usize;
@@ -299,105 +366,54 @@ impl AotTrainer {
                 "theta" => grad_theta = g,
                 "shift" => grad_shift = g,
                 "w" => {
-                    stats.grad_w[w_i].copy_from_slice(g);
+                    stats.grad_w_mut(w_i).copy_from_slice(g);
                     w_i += 1;
                 }
                 "mix" => {
                     // mix follows its w level: w_i - 1
-                    stats.grad_mix[w_i - 1]
-                        .as_mut()
-                        .expect("mix level allocated")
+                    stats
+                        .grad_mix_mut(w_i - 1)
+                        .ok_or_else(|| anyhow!("mix level not in layout"))?
                         .copy_from_slice(g);
                 }
                 _ => {}
             }
         }
         stats.count = self.meta.batch;
-        stats_from_natural_grads(&eng_params, grad_theta, grad_shift, &mut stats);
-        Ok((stats, plan))
+        stats_from_natural_grads(
+            &self.layout,
+            arena.theta(),
+            grad_theta,
+            grad_shift,
+            &mut stats,
+        );
+        Ok(stats)
     }
 
-    /// A synthetic LayeredPlan whose level shapes match the artifact's
-    /// parameter tensors (used only to drive the shared M-step).
-    fn skeleton_plan(&self) -> LayeredPlan {
-        use crate::layers::{EinsumLayer, Level, MixingLayer};
-        let mut levels = Vec::new();
-        let mut w_descs = Vec::new();
-        let mut mix_descs: Vec<Option<&crate::runtime::ParamDesc>> = Vec::new();
+    /// Copy the named AOT tensors into one contiguous arena.
+    fn params_to_arena(&self) -> ParamArena {
+        let mut arena = ParamArena::zeros(self.layout.clone());
+        let mut w_i = 0usize;
         for desc in &self.meta.params {
+            let t = &self.params.tensors[&desc.name];
             match desc.kind.as_str() {
+                "theta" => arena.theta_mut().copy_from_slice(t),
                 "w" => {
-                    w_descs.push(desc);
-                    mix_descs.push(None);
+                    arena.w_mut(w_i).copy_from_slice(t);
+                    w_i += 1;
                 }
-                "mix" => *mix_descs.last_mut().unwrap() = Some(desc),
+                "mix" => arena
+                    .mix_mut(w_i - 1)
+                    .expect("mix level in layout")
+                    .copy_from_slice(t),
                 _ => {}
             }
         }
-        for (wd, md) in w_descs.iter().zip(&mix_descs) {
-            let l = wd.shape[0];
-            let einsum = EinsumLayer {
-                partition_ids: (0..l).collect(),
-                left: vec![0; l],
-                right: vec![0; l],
-                ko: wd.shape[1],
-            };
-            let mixing = md.map(|d| MixingLayer {
-                region_ids: (0..d.shape[0]).collect(),
-                child_slots: d
-                    .child_counts
-                    .iter()
-                    .map(|&c| (0..c).collect())
-                    .collect(),
-                cmax: d.shape[1],
-            });
-            levels.push(Level {
-                einsum,
-                mixing,
-                region_out: Vec::new(),
-            });
-        }
-        // a throwaway 2-var graph carries the metadata fields m_step needs
-        let graph = crate::structure::binary_chain(2);
-        LayeredPlan {
-            graph,
-            k: self.meta.k,
-            num_replica: self.meta.replica,
-            levels,
-            leaf_region_ids: Vec::new(),
-        }
+        arena
     }
 
-    /// View the named AOT tensors as an `EinetParams` (copies).
-    fn params_as_einet(&self) -> EinetParams {
-        let mut w = Vec::new();
-        let mut mix: Vec<Option<Vec<f32>>> = Vec::new();
-        for desc in &self.meta.params {
-            match desc.kind.as_str() {
-                "w" => {
-                    w.push(self.params.tensors[&desc.name].clone());
-                    mix.push(None);
-                }
-                "mix" => {
-                    *mix.last_mut().unwrap() =
-                        Some(self.params.tensors[&desc.name].clone())
-                }
-                _ => {}
-            }
-        }
-        EinetParams {
-            num_vars: self.meta.num_vars,
-            k: self.meta.k,
-            num_replica: self.meta.replica,
-            family: self.family,
-            theta: self.params.tensors["theta"].clone(),
-            w,
-            mix,
-        }
-    }
-
-    /// Write updated EinetParams back into the named AOT tensors.
-    fn einet_to_params(&mut self, p: &EinetParams) {
+    /// Write the updated arena back into the named AOT tensors.
+    fn arena_to_params(&mut self, arena: &ParamArena) {
         let mut w_i = 0usize;
         for desc in self.meta.params.clone() {
             match desc.kind.as_str() {
@@ -406,13 +422,13 @@ impl AotTrainer {
                     .tensors
                     .get_mut("theta")
                     .unwrap()
-                    .copy_from_slice(&p.theta),
+                    .copy_from_slice(arena.theta()),
                 "w" => {
                     self.params
                         .tensors
                         .get_mut(&desc.name)
                         .unwrap()
-                        .copy_from_slice(&p.w[w_i]);
+                        .copy_from_slice(arena.w(w_i));
                     w_i += 1;
                 }
                 "mix" => self
@@ -420,16 +436,68 @@ impl AotTrainer {
                     .tensors
                     .get_mut(&desc.name)
                     .unwrap()
-                    .copy_from_slice(p.mix[w_i - 1].as_ref().unwrap()),
+                    .copy_from_slice(arena.mix(w_i - 1).unwrap()),
                 _ => {}
             }
         }
     }
 }
 
+/// Build a [`ParamLayout`] straight from artifact metadata: each "w"
+/// descriptor ([L, Ko, K, K]) opens a level, a following "mix"
+/// descriptor ([M, cmax] + child counts) attaches to it.
+fn layout_from_meta(meta: &ArtifactMeta, family: LeafFamily) -> Result<ParamLayout> {
+    let mut specs: Vec<LevelSpec> = Vec::new();
+    for desc in &meta.params {
+        match desc.kind.as_str() {
+            "w" => {
+                ensure!(
+                    desc.shape.len() == 4
+                        && desc.shape[2] == meta.k
+                        && desc.shape[3] == meta.k,
+                    "artifact tensor '{}' is not [L, Ko, K, K]",
+                    desc.name
+                );
+                specs.push(LevelSpec {
+                    slots: desc.shape[0],
+                    ko: desc.shape[1],
+                    mix: None,
+                });
+            }
+            "mix" => {
+                ensure!(
+                    desc.shape.len() == 2
+                        && desc.child_counts.len() == desc.shape[0],
+                    "artifact tensor '{}' is not [M, cmax] with child counts",
+                    desc.name
+                );
+                let last = specs
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("mix tensor before any w tensor"))?;
+                ensure!(last.mix.is_none(), "two mix tensors for one level");
+                last.mix = Some((desc.shape[1], desc.child_counts.clone()));
+            }
+            _ => {}
+        }
+    }
+    let layout =
+        ParamLayout::from_specs(meta.num_vars, meta.k, meta.replica, family, &specs);
+    // cross-check the theta span against the artifact's theta tensor
+    if let Some(th) = meta.params.iter().find(|p| p.kind == "theta") {
+        ensure!(
+            th.numel() == layout.theta_len,
+            "artifact theta tensor has {} scalars, layout expects {}",
+            th.numel(),
+            layout.theta_len
+        );
+    }
+    Ok(layout)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::dense::DenseEngine;
     use crate::structure::random_binary_trees;
     use crate::util::rng::Rng;
 
@@ -459,19 +527,29 @@ mod tests {
             ..Default::default()
         };
         let mut p_par = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
-        let hist = train_parallel(&plan, LeafFamily::Bernoulli, &mut p_par, &data, 256, &cfg);
+        let hist = train_parallel::<DenseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &mut p_par,
+            &data,
+            256,
+            &cfg,
+        );
         assert!(hist.last().unwrap().train_ll > hist[0].train_ll);
 
         // single-worker run from the same init must match numerically
         // (the reduction is order-insensitive up to float addition; use a
         // tolerance)
         let mut p_ser = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
-        let cfg1 = TrainConfig {
-            workers: 1,
-            ..cfg
-        };
-        let hist1 =
-            train_parallel(&plan, LeafFamily::Bernoulli, &mut p_ser, &data, 256, &cfg1);
+        let cfg1 = TrainConfig { workers: 1, ..cfg };
+        let hist1 = train_parallel::<DenseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &mut p_ser,
+            &data,
+            256,
+            &cfg1,
+        );
         for (a, b) in hist.iter().zip(&hist1) {
             assert!(
                 (a.train_ll - b.train_ll).abs() < 1e-2,
@@ -495,12 +573,100 @@ mod tests {
             log_every: 0,
             ..Default::default()
         };
-        train_parallel(&plan, LeafFamily::Bernoulli, &mut params, &data, 128, &cfg);
-        let ll = evaluate(&plan, LeafFamily::Bernoulli, &params, &data, 128, 32);
+        train_parallel::<DenseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &mut params,
+            &data,
+            128,
+            &cfg,
+        );
+        let ll =
+            evaluate::<DenseEngine>(&plan, LeafFamily::Bernoulli, &params, &data, 128, 32);
         assert!(ll > -(nv as f64) * std::f64::consts::LN_2);
-        let per = per_sample_ll(&plan, LeafFamily::Bernoulli, &params, &data, 128, 32);
+        let per = per_sample_ll::<DenseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &params,
+            &data,
+            128,
+            32,
+        );
         assert_eq!(per.len(), 128);
         let avg = per.iter().sum::<f64>() / 128.0;
         assert!((avg - ll).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_is_engine_agnostic() {
+        // the sparse baseline trains through the SAME generic path and
+        // reaches the same likelihood from the same init
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 9), 3);
+        let data = correlated(128, nv, 4);
+        let cfg = TrainConfig {
+            epochs: 3,
+            batch_size: 64,
+            workers: 2,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut p_d = EinetParams::init(&plan, LeafFamily::Bernoulli, 11);
+        let mut p_s = EinetParams::init(&plan, LeafFamily::Bernoulli, 11);
+        let h_d = train_parallel::<DenseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &mut p_d,
+            &data,
+            128,
+            &cfg,
+        );
+        let h_s = train_parallel::<crate::engine::sparse::SparseEngine>(
+            &plan,
+            LeafFamily::Bernoulli,
+            &mut p_s,
+            &data,
+            128,
+            &cfg,
+        );
+        for (a, b) in h_d.iter().zip(&h_s) {
+            assert!(
+                (a.train_ll - b.train_ll).abs() < 1e-2,
+                "dense {} vs sparse {} training diverged",
+                a.train_ll,
+                b.train_ll
+            );
+        }
+    }
+
+    #[test]
+    fn aot_layout_builds_from_meta() {
+        let meta = ArtifactMeta::parse(
+            r#"{
+              "name": "quick", "family": "bernoulli", "num_vars": 4, "obs_dim": 1,
+              "stat_dim": 1, "k": 4, "replica": 2, "batch": 8,
+              "params": [
+                {"name": "theta", "shape": [4, 4, 2, 1], "kind": "theta"},
+                {"name": "shift", "shape": [4, 4, 2], "kind": "shift"},
+                {"name": "w0", "shape": [4, 4, 4, 4], "kind": "w"},
+                {"name": "w1", "shape": [1, 1, 4, 4], "kind": "w"},
+                {"name": "mix1", "shape": [1, 2], "kind": "mix", "child_counts": [2]}
+              ],
+              "files": {"fwd": "q.fwd.pb", "train": "q.train.pb"}
+            }"#,
+        )
+        .unwrap();
+        let layout = layout_from_meta(&meta, LeafFamily::Bernoulli).unwrap();
+        assert_eq!(layout.theta_len, 4 * 4 * 2);
+        assert_eq!(layout.levels.len(), 2);
+        assert_eq!(layout.levels[0].w_len, 4 * 4 * 4 * 4);
+        assert_eq!(layout.levels[1].w_len, 16);
+        let m = layout.levels[1].mix.as_ref().unwrap();
+        assert_eq!(m.cmax, 2);
+        assert_eq!(m.child_counts, vec![2]);
+        assert_eq!(
+            layout.total,
+            layout.theta_len + layout.levels[0].w_len + layout.levels[1].w_len + m.len
+        );
     }
 }

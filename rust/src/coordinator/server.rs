@@ -4,16 +4,16 @@
 //! Clients submit [`Query`] requests (evidence + mask); a dispatcher
 //! thread coalesces up to `max_batch` pending requests (or whatever has
 //! arrived within `max_wait`), runs a single batched forward pass, and
-//! answers each request on its private channel. Demonstrates that the
-//! engine's batched layout serves concurrent small queries efficiently —
-//! the serving-side benefit of the einsum layout.
+//! answers each request on its private channel. The dispatcher is generic
+//! over `E:`[`Engine`] — any backend that implements the trait serves
+//! through the same router, demonstrating that the batched layout serves
+//! concurrent small queries efficiently.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::engine::dense::DenseEngine;
-use crate::engine::EinetParams;
+use crate::engine::{EinetParams, Engine};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
 
@@ -38,8 +38,8 @@ pub struct ServerStats {
 }
 
 impl InferenceServer {
-    /// Spawn the dispatcher with its private engine.
-    pub fn start(
+    /// Spawn the dispatcher with its private engine of type `E`.
+    pub fn start<E: Engine + 'static>(
         plan: LayeredPlan,
         family: LeafFamily,
         params: EinetParams,
@@ -48,7 +48,7 @@ impl InferenceServer {
     ) -> Self {
         let (tx, rx) = mpsc::channel::<Query>();
         let handle = std::thread::spawn(move || {
-            dispatcher(plan, family, params, rx, max_batch, max_wait)
+            dispatcher::<E>(plan, family, params, rx, max_batch, max_wait)
         });
         Self {
             tx,
@@ -78,7 +78,7 @@ impl InferenceServer {
     }
 }
 
-fn dispatcher(
+fn dispatcher<E: Engine>(
     plan: LayeredPlan,
     family: LeafFamily,
     params: EinetParams,
@@ -86,10 +86,15 @@ fn dispatcher(
     max_batch: usize,
     max_wait: Duration,
 ) -> ServerStats {
+    assert_eq!(
+        params.family(),
+        family,
+        "parameter arena family does not match the configured family"
+    );
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
-    let mut engine = DenseEngine::new(plan, family, max_batch);
+    let mut engine = E::build(plan, family, max_batch);
     let mut stats = ServerStats::default();
     let mut pending: Vec<Query> = Vec::new();
     loop {
@@ -143,6 +148,8 @@ fn dispatcher(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::dense::DenseEngine;
+    use crate::engine::sparse::SparseEngine;
     use crate::structure::random_binary_trees;
 
     #[test]
@@ -160,7 +167,7 @@ mod tests {
             engine.forward(&params, &x, &mask, &mut lp);
             want.push(lp[0]);
         }
-        let server = InferenceServer::start(
+        let server = InferenceServer::start::<DenseEngine>(
             plan,
             LeafFamily::Bernoulli,
             params,
@@ -191,7 +198,7 @@ mod tests {
         let nv = 4;
         let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 1), 2);
         let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 1);
-        let server = InferenceServer::start(
+        let server = InferenceServer::start::<DenseEngine>(
             plan,
             LeafFamily::Bernoulli,
             params,
@@ -206,6 +213,32 @@ mod tests {
         let b = server.query(x, marg);
         // marginal likelihood >= joint likelihood (sums over x0)
         assert!(b >= a - 1e-6);
+        server.stop();
+    }
+
+    #[test]
+    fn serves_through_any_engine_backend() {
+        // the same router over the sparse baseline produces the same
+        // answers — the serving path is engine-agnostic
+        let nv = 5;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 3), 3);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 3);
+        let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 1);
+        let mask = vec![1.0f32; nv];
+        let server = InferenceServer::start::<SparseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params.clone(),
+            8,
+            Duration::from_millis(2),
+        );
+        for i in 0..10 {
+            let x: Vec<f32> = (0..nv).map(|d| ((i >> d) & 1) as f32).collect();
+            let got = server.query(x.clone(), mask.clone());
+            let mut want = vec![0.0f32];
+            direct.forward(&params, &x, &mask, &mut want);
+            assert!((got - want[0]).abs() < 1e-4, "{got} vs {}", want[0]);
+        }
         server.stop();
     }
 }

@@ -1,14 +1,20 @@
 //! Expectation-Maximization (Section 3.5).
 //!
-//! The E-step is a backward pass (dense engine: manual backprop; AOT
-//! runtime path: the `*.train` executable's gradient outputs). This module
-//! implements the M-step (Eq. 7) and the *stochastic* EM update with
-//! gliding averages (Eq. 8/9), plus the paper's safety projections:
-//! strictly positive sum-weights (the stability condition for the
-//! log-einsum-exp trick) and Gaussian variance clipping.
+//! The E-step is a backward pass through any [`crate::engine::Engine`]
+//! (manual backprop in the rust engines; the AOT runtime path uses the
+//! `*.train` executable's gradient outputs). This module implements the
+//! M-step (Eq. 7) and the *stochastic* EM update with gliding averages
+//! (Eq. 8/9), plus the paper's safety projections: strictly positive
+//! sum-weights (the stability condition for the log-einsum-exp trick) and
+//! Gaussian variance clipping.
+//!
+//! Because parameters live in a flat [`ParamArena`] and the E-step
+//! statistics in a same-layout flat buffer ([`EmStats::grad`]), the
+//! M-step walks the two buffers in lockstep using only the
+//! [`crate::engine::ParamLayout`] offset table — no plan or region graph
+//! is needed, which is what lets the AOT trainer share this exact code.
 
-use crate::engine::{EinetParams, EmStats};
-use crate::layers::LayeredPlan;
+use crate::engine::{EinetParams, EmStats, ParamLayout};
 
 /// Hyper-parameters of an EM run.
 #[derive(Clone, Copy, Debug)]
@@ -35,82 +41,85 @@ impl Default for EmConfig {
     }
 }
 
+/// Blend one normalized weight block: `w ∝ w * n` (Eq. 7), gliding-
+/// averaged with the old values by `lambda` (Eq. 8/9), floored and
+/// renormalized. `w` and `g` are same-length slices (a K*K einsum block
+/// or the real-children prefix of a mixing row).
+fn blend_block(w: &mut [f32], g: &[f32], lambda: f32, floor: f32, scratch: &mut Vec<f32>) {
+    scratch.clear();
+    let mut total = 0.0f32;
+    for (wv, gv) in w.iter().zip(g) {
+        let nv = wv * gv.max(0.0);
+        scratch.push(nv);
+        total += nv;
+    }
+    if total <= 0.0 {
+        return; // no evidence touched this block: keep old weights
+    }
+    let mut renorm = 0.0f32;
+    for (wv, nv) in w.iter_mut().zip(scratch.iter()) {
+        let target = nv / total;
+        let blended = (1.0 - lambda) * *wv + lambda * target;
+        *wv = blended.max(floor);
+        renorm += *wv;
+    }
+    for wv in w.iter_mut() {
+        *wv /= renorm;
+    }
+}
+
 /// Apply one M-step given accumulated statistics.
 ///
 /// Eq. 7: `w ∝ w * sum_x n(x)` per sum node (the accumulated grad of
 /// `log P` w.r.t. linear weights *is* `n` — the autodiff trick), and
 /// `phi = sum_x p T(x) / sum_x p` per leaf; both blended with the old
 /// values by `step_size` (Eq. 8/9).
-pub fn m_step(
-    params: &mut EinetParams,
-    plan: &LayeredPlan,
-    stats: &EmStats,
-    cfg: &EmConfig,
-) {
-    let k = params.k;
+pub fn m_step(params: &mut EinetParams, stats: &EmStats, cfg: &EmConfig) {
+    debug_assert_eq!(params.layout.total, stats.layout.total);
+    let k = params.layout.k;
     let lambda = cfg.step_size;
+    let mut scratch: Vec<f32> = Vec::with_capacity(k * k);
 
-    // --- sum weights -----------------------------------------------------
-    for (i, lv) in plan.levels.iter().enumerate() {
-        let blocks = lv.einsum.len() * lv.einsum.ko;
-        for blk in 0..blocks {
-            let range = blk * k * k..(blk + 1) * k * k;
-            let w = &mut params.w[i][range.clone()];
-            let g = &stats.grad_w[i][range];
-            let mut total = 0.0f32;
-            let mut new = vec![0.0f32; k * k];
-            for idx in 0..k * k {
-                new[idx] = w[idx] * g[idx].max(0.0);
-                total += new[idx];
-            }
-            if total <= 0.0 {
-                continue; // no evidence touched this block: keep old weights
-            }
-            let mut renorm = 0.0f32;
-            for idx in 0..k * k {
-                let target = new[idx] / total;
-                let blended = (1.0 - lambda) * w[idx] + lambda * target;
-                w[idx] = blended.max(cfg.weight_floor);
-                renorm += w[idx];
-            }
-            for v in w.iter_mut() {
-                *v /= renorm;
-            }
+    // --- sum weights (einsum blocks) + mixing rows ------------------------
+    for i in 0..params.layout.levels.len() {
+        let (w_off, w_len) = {
+            let lv = &params.layout.levels[i];
+            (lv.w_off, lv.w_len)
+        };
+        for blk in 0..w_len / (k * k) {
+            let off = w_off + blk * k * k;
+            blend_block(
+                &mut params.data[off..off + k * k],
+                &stats.grad[off..off + k * k],
+                lambda,
+                cfg.weight_floor,
+                &mut scratch,
+            );
         }
-        // --- mixing weights ------------------------------------------------
-        if let (Some(wm), Some(gm), Some(m)) =
-            (params.mix[i].as_mut(), stats.grad_mix[i].as_ref(), &lv.mixing)
-        {
-            for (j, ch) in m.child_slots.iter().enumerate() {
-                let row = &mut wm[j * m.cmax..j * m.cmax + ch.len()];
-                let grow = &gm[j * m.cmax..j * m.cmax + ch.len()];
-                let mut total = 0.0f32;
-                let mut new = vec![0.0f32; ch.len()];
-                for c in 0..ch.len() {
-                    new[c] = row[c] * grow[c].max(0.0);
-                    total += new[c];
-                }
-                if total <= 0.0 {
-                    continue;
-                }
-                let mut renorm = 0.0f32;
-                for c in 0..ch.len() {
-                    let target = new[c] / total;
-                    row[c] = ((1.0 - lambda) * row[c] + lambda * target)
-                        .max(cfg.weight_floor);
-                    renorm += row[c];
-                }
-                for v in row.iter_mut() {
-                    *v /= renorm;
-                }
+        // scalars only — no per-batch clone of the layout's Vecs
+        let mix_shape = params.layout.levels[i]
+            .mix
+            .as_ref()
+            .map(|m| (m.off, m.cmax, m.child_counts.len()));
+        if let Some((mix_off, cmax, rows)) = mix_shape {
+            for j in 0..rows {
+                let cn = params.layout.levels[i].mix.as_ref().unwrap().child_counts[j];
+                let off = mix_off + j * cmax;
+                blend_block(
+                    &mut params.data[off..off + cn],
+                    &stats.grad[off..off + cn],
+                    lambda,
+                    cfg.weight_floor,
+                    &mut scratch,
+                );
             }
         }
     }
 
     // --- leaves ------------------------------------------------------------
-    let s_dim = params.family.stat_dim();
-    let family = params.family;
-    let n_comp = params.num_vars * k * params.num_replica;
+    let family = params.layout.family;
+    let s_dim = family.stat_dim();
+    let n_comp = params.layout.num_vars * k * params.layout.num_replica;
     let mut phi = vec![0.0f32; s_dim];
     let mut phi_new = vec![0.0f32; s_dim];
     for c in 0..n_comp {
@@ -118,10 +127,11 @@ pub fn m_step(
         if mass < cfg.min_leaf_mass {
             continue;
         }
-        let th = &mut params.theta[c * s_dim..(c + 1) * s_dim];
+        // the theta span of stats.grad holds sum_pt (same [D,K,R,S] layout)
+        let th = &mut params.data[c * s_dim..(c + 1) * s_dim];
         family.phi_from_theta(th, &mut phi);
         for s in 0..s_dim {
-            phi_new[s] = stats.sum_pt[c * s_dim + s] / mass;
+            phi_new[s] = stats.grad[c * s_dim + s] / mass;
         }
         for s in 0..s_dim {
             phi_new[s] = (1.0 - lambda) * phi[s] + lambda * phi_new[s];
@@ -136,26 +146,29 @@ pub fn m_step(
 ///
 ///   d log P / d theta = p * (T(x) - phi)   =>   sum p T = grad_theta + phi * sum p
 ///
-/// (`sum_p` comes from the shift gradient.) Layouts match
-/// `EinetParams::theta` ([D, K, R, S]) and `EmStats::sum_p` ([D, K, R]).
+/// (`sum_p` comes from the shift gradient.) Layouts match the arena's
+/// theta span ([D, K, R, S]) and `EmStats::sum_p` ([D, K, R]).
 pub fn stats_from_natural_grads(
-    params: &EinetParams,
+    layout: &ParamLayout,
+    theta: &[f32],
     grad_theta: &[f32],
     grad_shift: &[f32],
     stats: &mut EmStats,
 ) {
-    let s_dim = params.family.stat_dim();
-    let n_comp = params.num_vars * params.k * params.num_replica;
+    let family = layout.family;
+    let s_dim = family.stat_dim();
+    let n_comp = layout.num_vars * layout.k * layout.num_replica;
+    assert_eq!(theta.len(), n_comp * s_dim);
     assert_eq!(grad_theta.len(), n_comp * s_dim);
     assert_eq!(grad_shift.len(), n_comp);
     let mut phi = vec![0.0f32; s_dim];
     for c in 0..n_comp {
         let p = grad_shift[c];
         stats.sum_p[c] += p;
-        let th = &params.theta[c * s_dim..(c + 1) * s_dim];
-        params.family.phi_from_theta(th, &mut phi);
+        let th = &theta[c * s_dim..(c + 1) * s_dim];
+        family.phi_from_theta(th, &mut phi);
         for s in 0..s_dim {
-            stats.sum_pt[c * s_dim + s] += grad_theta[c * s_dim + s] + phi[s] * p;
+            stats.grad[c * s_dim + s] += grad_theta[c * s_dim + s] + phi[s] * p;
         }
     }
 }
@@ -164,15 +177,16 @@ pub fn stats_from_natural_grads(
 mod tests {
     use super::*;
     use crate::engine::dense::DenseEngine;
+    use crate::layers::LayeredPlan;
     use crate::leaves::LeafFamily;
     use crate::structure::random_binary_trees;
     use crate::util::rng::Rng;
 
-    fn make(nv: usize, k: usize, seed: u64) -> (DenseEngine, EinetParams, LayeredPlan) {
+    fn make(nv: usize, k: usize, seed: u64) -> (DenseEngine, EinetParams) {
         let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, seed), k);
         let params = EinetParams::init(&plan, LeafFamily::Bernoulli, seed);
-        let engine = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 256);
-        (engine, params, plan)
+        let engine = DenseEngine::new(plan, LeafFamily::Bernoulli, 256);
+        (engine, params)
     }
 
     fn correlated_data(n: usize, nv: usize, seed: u64) -> Vec<f32> {
@@ -207,7 +221,7 @@ mod tests {
     #[test]
     fn full_batch_em_monotonically_improves() {
         let nv = 8;
-        let (mut e, mut params, plan) = make(nv, 3, 0);
+        let (mut e, mut params) = make(nv, 3, 0);
         let x = correlated_data(200, nv, 1);
         let mask = vec![1.0f32; nv];
         let cfg = EmConfig::default();
@@ -223,8 +237,8 @@ mod tests {
                 "iteration {it}: LL decreased {prev} -> {ll}"
             );
             prev = ll;
-            m_step(&mut params, &plan, &stats, &cfg);
-            params.validate(&plan).unwrap();
+            m_step(&mut params, &stats, &cfg);
+            params.validate().unwrap();
         }
         // EM must have actually learned the 2-cluster structure:
         // final LL well above the independent-uniform baseline -nv*ln2
@@ -234,7 +248,7 @@ mod tests {
     #[test]
     fn stochastic_em_improves() {
         let nv = 8;
-        let (mut e, mut params, plan) = make(nv, 3, 2);
+        let (mut e, mut params) = make(nv, 3, 2);
         let x = correlated_data(512, nv, 3);
         let mask = vec![1.0f32; nv];
         let cfg = EmConfig {
@@ -250,17 +264,17 @@ mod tests {
                 let mut logp = vec![0.0f32; bs];
                 e.forward(&params, xs, &mask, &mut logp);
                 e.backward(&params, xs, &mask, bs, &mut stats);
-                m_step(&mut params, &plan, &stats, &cfg);
+                m_step(&mut params, &stats, &cfg);
             }
         }
         let ll1 = avg_ll(&mut e, &params, &x, nv);
         assert!(ll1 > ll0 + 0.3, "stochastic EM failed to improve: {ll0} -> {ll1}");
-        params.validate(&plan).unwrap();
+        params.validate().unwrap();
     }
 
     #[test]
     fn weights_stay_positive_and_normalized() {
-        let (mut e, mut params, plan) = make(6, 2, 4);
+        let (mut e, mut params) = make(6, 2, 4);
         let x = correlated_data(64, 6, 5);
         let mask = vec![1.0f32; 6];
         let cfg = EmConfig::default();
@@ -269,40 +283,45 @@ mod tests {
             let mut logp = vec![0.0f32; 64];
             e.forward(&params, &x, &mask, &mut logp);
             e.backward(&params, &x, &mask, 64, &mut stats);
-            m_step(&mut params, &plan, &stats, &cfg);
+            m_step(&mut params, &stats, &cfg);
         }
-        for wl in &params.w {
-            for &v in wl {
+        for i in 0..params.layout.levels.len() {
+            for &v in params.w(i) {
                 assert!(v > 0.0, "weight hit zero");
             }
         }
-        params.validate(&plan).unwrap();
+        params.validate().unwrap();
     }
 
     #[test]
     fn natural_grad_conversion_identity() {
         // p and phi known: grad_theta = p (T - phi); reconstruct sum_pt.
-        let (_, params, _) = make(4, 2, 6);
-        let s_dim = params.family.stat_dim();
-        let n_comp = params.num_vars * params.k * params.num_replica;
+        let (_, params) = make(4, 2, 6);
+        let family = params.layout.family;
+        let s_dim = family.stat_dim();
+        let n_comp = params.layout.num_vars * params.layout.k * params.layout.num_replica;
         let mut stats = EmStats::zeros_like(&params);
         // suppose every component saw p = 2.0 with T(x) = 1.0 (x=1)
         let mut phi = vec![0.0f32; s_dim];
         let mut grad_theta = vec![0.0f32; n_comp * s_dim];
         let grad_shift = vec![2.0f32; n_comp];
         for c in 0..n_comp {
-            params
-                .family
-                .phi_from_theta(&params.theta[c * s_dim..(c + 1) * s_dim], &mut phi);
+            family.phi_from_theta(&params.theta()[c * s_dim..(c + 1) * s_dim], &mut phi);
             grad_theta[c * s_dim] = 2.0 * (1.0 - phi[0]);
         }
-        stats_from_natural_grads(&params, &grad_theta, &grad_shift, &mut stats);
+        stats_from_natural_grads(
+            &params.layout,
+            params.theta(),
+            &grad_theta,
+            &grad_shift,
+            &mut stats,
+        );
         for c in 0..n_comp {
             assert!((stats.sum_p[c] - 2.0).abs() < 1e-6);
             assert!(
-                (stats.sum_pt[c * s_dim] - 2.0).abs() < 1e-5,
+                (stats.sum_pt()[c * s_dim] - 2.0).abs() < 1e-5,
                 "sum_pt {} != 2",
-                stats.sum_pt[c * s_dim]
+                stats.sum_pt()[c * s_dim]
             );
         }
     }

@@ -1,29 +1,30 @@
-//! The EiNet engine: fused log-einsum-exp layers (Eq. 4/5) over a
-//! [`LayeredPlan`] — the paper's layout, in rust.
+//! The EiNet engine: fused log-einsum-exp kernels (Eq. 4/5) executing the
+//! flat [`ExecPlan`] IR — the paper's layout, in rust.
 //!
 //! Design notes (mirroring Section 3.2/3.3):
 //!  * all probabilistic values live in the log-domain; weights stay linear;
-//!  * the outer product of child vectors is **never materialized** — the
-//!    contraction `sum_ij W_kij exp(logN_i - a) exp(logN'_j - a')` runs in
-//!    registers, which is exactly why the dense layout wins the memory
-//!    comparison of Fig. 3;
-//!  * per region the engine keeps one `[B, K]` activation slice; einsum
-//!    slots feeding a mixing layer write to a per-level scratch area
-//!    instead (they are not region outputs until mixed);
+//!  * the outer product of child vectors is **never materialized** in the
+//!    arena — the contraction `sum_ij W_kij exp(logN_i - a) exp(logN'_j -
+//!    a')` runs through a cache-resident per-slot scratch block, which is
+//!    exactly why the dense layout wins the memory comparison of Fig. 3;
+//!  * weight blocks are read straight out of the contiguous
+//!    [`ParamArena`], and — because [`EmStats::grad`] mirrors that arena
+//!    scalar-for-scalar — the backward pass accumulates gradients at the
+//!    *same offsets* it read weights from;
 //!  * the backward pass re-derives the EM expected statistics of Eq. 6
 //!    from saved activations without any extra forward work.
 //!
-//! The same object also implements ancestral sampling / conditional
-//! sampling top-down through the latent-variable interpretation, reusing
-//! the forward activations as posterior messages (used for Fig. 4
-//! inpainting).
+//! Sampling / conditional decoding runs through the shared top-down
+//! decode in [`super::exec`], reusing the forward activations as
+//! posterior messages (Fig. 4 inpainting).
 
-use crate::layers::{LayeredPlan, RegionSlot};
+use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
-use super::{EinetParams, EmStats};
+use super::exec::{self, ExecPlan, Step};
+use super::{DecodeMode, EmStats, Engine, ParamArena};
 
 /// Four-accumulator dot product: float reductions cannot be auto-
 /// vectorized under strict FP semantics, so we unroll the accumulation
@@ -48,50 +49,17 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// Destination of an einsum slot's output vector.
-#[derive(Clone, Copy, Debug)]
-enum SlotDest {
-    /// the slot is the single partition of a region: write there directly
-    Region(usize),
-    /// the slot feeds a mixing layer: write to level scratch at this index
-    Scratch(usize),
-}
-
-struct LevelIndex {
-    slot_dest: Vec<SlotDest>,
-    /// number of scratch slots in this level
-    n_scratch: usize,
-    /// offset (f32s) of this level's scratch block in the scratch arena
-    scratch_off: usize,
-}
-
-/// Sampling behaviour for the top-down pass.
-#[derive(Clone, Copy, PartialEq, Debug)]
-pub enum DecodeMode {
-    /// ancestral sampling (draw latent branches and leaf values)
-    Sample,
-    /// greedy: argmax latent branches, leaf means (approximate MPE)
-    Argmax,
-}
-
 /// The dense EiNet engine. Construct once per (plan, batch capacity);
 /// buffers are reused across calls — the training hot loop is
 /// allocation-free.
 pub struct DenseEngine {
-    pub plan: LayeredPlan,
-    pub family: LeafFamily,
-    batch_cap: usize,
-    /// per region: offset into `arena` and vector width (K, root: 1)
-    region_off: Vec<usize>,
-    region_width: Vec<usize>,
-    levels: Vec<LevelIndex>,
+    exec: ExecPlan,
     arena: Vec<f32>,
     scratch: Vec<f32>,
     grad_arena: Vec<f32>,
     grad_scratch: Vec<f32>,
     /// reusable K-length temporaries
     t_en: Vec<f32>,
-    t_enp: Vec<f32>,
     t_t: Vec<f32>,
     /// per-slot batched scratch: scaled children ([B,K] each), their
     /// maxima ([B]), and the outer-product block ([B,K*K]). The product
@@ -111,63 +79,14 @@ pub struct DenseEngine {
 
 impl DenseEngine {
     pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
-        let k = plan.k;
-        let n_regions = plan.graph.regions.len();
-        let mut region_off = vec![usize::MAX; n_regions];
-        let mut region_width = vec![k; n_regions];
-        region_width[plan.graph.root] = plan
-            .levels
-            .last()
-            .map(|lv| lv.einsum.ko)
-            .unwrap_or(k);
-        let mut off = 0usize;
-        for r in &plan.graph.regions {
-            region_off[r.id] = off;
-            off += batch_cap * region_width[r.id];
-        }
-        let arena_len = off;
-
-        let mut levels = Vec::with_capacity(plan.levels.len());
-        let mut scratch_off = 0usize;
-        for lv in &plan.levels {
-            let mut slot_dest = vec![SlotDest::Region(usize::MAX); lv.einsum.len()];
-            let mut n_scratch = 0usize;
-            // regions with one partition map their slot directly
-            for &(rid, slot) in &lv.region_out {
-                if let RegionSlot::Einsum(s) = slot {
-                    slot_dest[s] = SlotDest::Region(rid);
-                }
-            }
-            // slots consumed by mixing go to scratch, in child_slots order
-            if let Some(m) = &lv.mixing {
-                for ch in &m.child_slots {
-                    for &s in ch {
-                        slot_dest[s] = SlotDest::Scratch(n_scratch);
-                        n_scratch += 1;
-                    }
-                }
-            }
-            levels.push(LevelIndex {
-                slot_dest,
-                n_scratch,
-                scratch_off,
-            });
-            scratch_off += batch_cap * n_scratch * lv.einsum.ko;
-        }
-        let scratch_len = scratch_off;
-
+        let exec = ExecPlan::lower(plan, family, batch_cap);
+        let k = exec.k;
         Self {
-            family,
-            batch_cap,
-            region_off,
-            region_width,
-            levels,
-            arena: vec![0.0; arena_len],
-            scratch: vec![0.0; scratch_len],
+            arena: vec![0.0; exec.arena_len],
+            scratch: vec![0.0; exec.scratch_len],
             grad_arena: Vec::new(),
             grad_scratch: Vec::new(),
             t_en: vec![0.0; k],
-            t_enp: vec![0.0; k],
             t_t: vec![0.0; k.max(1)],
             t_en_all: vec![0.0; batch_cap * k],
             t_enp_all: vec![0.0; batch_cap * k],
@@ -176,18 +95,26 @@ impl DenseEngine {
             t_prod: vec![0.0; batch_cap * k * k],
             t_g: Vec::new(),
             leaf_const: Vec::new(),
-            plan,
+            exec,
         }
     }
 
+    /// The compiled plan this engine executes.
+    pub fn plan(&self) -> &LayeredPlan {
+        &self.exec.plan
+    }
+
+    pub fn family(&self) -> LeafFamily {
+        self.exec.family
+    }
+
     pub fn batch_capacity(&self) -> usize {
-        self.batch_cap
+        self.exec.batch_cap
     }
 
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison.
-    pub fn memory_footprint(&self, params: &EinetParams) -> MemFootprint {
+    pub fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
         let temporaries = self.t_en.len()
-            + self.t_enp.len()
             + self.t_t.len()
             + self.t_en_all.len()
             + self.t_enp_all.len()
@@ -203,99 +130,70 @@ impl DenseEngine {
         }
     }
 
-    #[inline]
-    fn slice(&self, rid: usize, b: usize) -> (usize, usize) {
-        let w = self.region_width[rid];
-        let start = self.region_off[rid] + b * w;
-        (start, w)
-    }
-
     // ------------------------------------------------------------------
     // forward
     // ------------------------------------------------------------------
 
-    /// Evaluate `log P(x)` for a batch under a marginalization mask
-    /// (`mask[d] == 0.0` integrates variable d out; Eq. 1's inner sums).
-    ///
-    /// `x` is `[bn, D, obs_dim]` row-major; `logp` receives `bn` values.
+    /// See [`Engine::forward`].
     pub fn forward(
         &mut self,
-        params: &EinetParams,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         logp: &mut [f32],
     ) {
         let bn = logp.len();
-        assert!(bn <= self.batch_cap, "batch exceeds engine capacity");
-        let d_total = self.plan.graph.num_vars;
-        let od = self.family.obs_dim();
+        assert!(bn <= self.exec.batch_cap, "batch exceeds engine capacity");
+        let d_total = self.exec.plan.graph.num_vars;
+        let od = self.exec.family.obs_dim();
         assert_eq!(x.len(), bn * d_total * od);
         assert_eq!(mask.len(), d_total);
 
-        self.forward_leaves(params, x, mask, bn);
-        for i in 0..self.plan.levels.len() {
-            self.forward_einsum_level(params, i, bn);
-            self.forward_mixing_level(params, i, bn);
-        }
-        let root = self.plan.graph.root;
-        for (b, lp) in logp.iter_mut().enumerate() {
-            let (s, _) = self.slice(root, b);
-            *lp = self.arena[s];
-        }
-    }
-
-    fn forward_leaves(&mut self, params: &EinetParams, x: &[f32], mask: &[f32], bn: usize) {
-        let k = self.plan.k;
-        let od = self.family.obs_dim();
-        let d_total = self.plan.graph.num_vars;
-        let s_dim = self.family.stat_dim();
-        let r_total = params.num_replica;
-        // refresh the per-component log-normalizer cache (once per batch:
-        // all transcendentals happen here, not in the b-loop)
-        let n_comp = d_total * k * r_total;
-        if self.leaf_const.len() != n_comp {
-            self.leaf_const.resize(n_comp, 0.0);
-        }
-        for (c, lc) in self.leaf_const.iter_mut().enumerate() {
-            *lc = self
-                .family
-                .log_norm_const(&params.theta[c * s_dim..(c + 1) * s_dim]);
-        }
-        for li in 0..self.plan.leaf_region_ids.len() {
-            let rid = self.plan.leaf_region_ids[li];
-            let rep = self.plan.graph.regions[rid].replica.unwrap();
-            let off = self.region_off[rid];
-            self.arena[off..off + bn * k].fill(0.0);
-            let scope = self.plan.graph.regions[rid].scope.to_vec();
-            for d in scope {
-                if mask[d] == 0.0 {
-                    continue; // marginalized: contributes log 1 = 0
-                }
-                let comp_base = (d * k) * r_total + rep;
-                for b in 0..bn {
-                    let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
-                    let row = &mut self.arena[off + b * k..off + b * k + k];
-                    for (kk, slot) in row.iter_mut().enumerate() {
-                        let c = comp_base + kk * r_total;
-                        let th = &params.theta[c * s_dim..(c + 1) * s_dim];
-                        *slot += self.family.log_prob_with_const(
-                            th,
-                            self.leaf_const[c],
-                            xv,
-                        );
-                    }
-                }
+        exec::refresh_leaf_const(&self.exec, params, &mut self.leaf_const);
+        for si in 0..self.exec.steps.len() {
+            let step = self.exec.steps[si];
+            match step {
+                Step::Leaf { rid, out } => exec::leaf_forward(
+                    &self.exec,
+                    params,
+                    &self.leaf_const,
+                    rid,
+                    out,
+                    x,
+                    mask,
+                    bn,
+                    &mut self.arena,
+                ),
+                Step::Einsum {
+                    left,
+                    right,
+                    ko,
+                    w,
+                    dest,
+                    to_scratch,
+                    ..
+                } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn),
+                Step::Mix {
+                    out,
+                    ko,
+                    children,
+                    child,
+                    child_stride,
+                    w,
+                    ..
+                } => self.fwd_mix(params, out, ko, children, child, child_stride, w, bn),
             }
+        }
+        for (b, lp) in logp.iter_mut().enumerate() {
+            *lp = self.arena[self.exec.root_row(b)];
         }
     }
 
     /// Prepare per-slot batched scratch: maxima, scaled children, and the
     /// outer-product block ("the einsum operand") for one (left, right)
-    /// region pair. Shared by forward and backward.
-    fn prep_slot_scratch(&mut self, left: usize, right: usize, bn: usize) {
-        let k = self.plan.k;
-        let loff = self.region_off[left];
-        let roff = self.region_off[right];
+    /// child-block pair. Shared by forward and backward.
+    fn prep_slot_scratch(&mut self, loff: usize, roff: usize, bn: usize) {
+        let k = self.exec.k;
         for b in 0..bn {
             let lrow = &self.arena[loff + b * k..loff + b * k + k];
             let rrow = &self.arena[roff + b * k..roff + b * k + k];
@@ -315,8 +213,7 @@ impl DenseEngine {
             }
             let prod = &mut self.t_prod[b * k * k..(b + 1) * k * k];
             for (ii, &eni) in en.iter().enumerate() {
-                for (p, &enpj) in
-                    prod[ii * k..(ii + 1) * k].iter_mut().zip(enp.iter())
+                for (p, &enpj) in prod[ii * k..(ii + 1) * k].iter_mut().zip(enp.iter())
                 {
                     *p = eni * enpj;
                 }
@@ -324,75 +221,67 @@ impl DenseEngine {
         }
     }
 
-    fn forward_einsum_level(&mut self, params: &EinetParams, i: usize, bn: usize) {
-        let k = self.plan.k;
-        let ko = self.plan.levels[i].einsum.ko;
-        let wl = &params.w[i];
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_einsum(
+        &mut self,
+        params: &ParamArena,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+    ) {
+        let k = self.exec.k;
         let kk2 = k * k;
-        for l in 0..self.plan.levels[i].einsum.len() {
-            let left = self.plan.levels[i].einsum.left[l];
-            let right = self.plan.levels[i].einsum.right[l];
-            // outer product materialized ONLY in cache-resident scratch
-            // (Eq. 4's max-subtraction included)
-            self.prep_slot_scratch(left, right, bn);
-            let wslot = &wl[l * ko * kk2..(l + 1) * ko * kk2];
-            for b in 0..bn {
-                let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
-                let base = self.t_a[b] + self.t_ap[b];
-                let dest_row = match self.levels[i].slot_dest[l] {
-                    SlotDest::Region(rid) => self.region_off[rid] + b * ko,
-                    SlotDest::Scratch(sidx) => {
-                        self.levels[i].scratch_off
-                            + (b * self.levels[i].n_scratch + sidx) * ko
-                    }
-                };
-                // S_ko = W_ko . prod — length-K^2 dots, SIMD-friendly
-                for kout in 0..ko {
-                    let acc = dot4(&wslot[kout * kk2..(kout + 1) * kk2], prod);
-                    let out = base + acc.ln();
-                    match self.levels[i].slot_dest[l] {
-                        SlotDest::Region(_) => self.arena[dest_row + kout] = out,
-                        SlotDest::Scratch(_) => self.scratch[dest_row + kout] = out,
-                    }
+        // outer product materialized ONLY in cache-resident scratch
+        // (Eq. 4's max-subtraction included)
+        self.prep_slot_scratch(left, right, bn);
+        let wslot = &params.data[w..w + ko * kk2];
+        for b in 0..bn {
+            let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
+            let base = self.t_a[b] + self.t_ap[b];
+            let dest_row = dest + b * ko;
+            // S_ko = W_ko . prod — length-K^2 dots, SIMD-friendly
+            for kout in 0..ko {
+                let acc = dot4(&wslot[kout * kk2..(kout + 1) * kk2], prod);
+                let out = base + acc.ln();
+                if to_scratch {
+                    self.scratch[dest_row + kout] = out;
+                } else {
+                    self.arena[dest_row + kout] = out;
                 }
             }
         }
     }
 
-    fn forward_mixing_level(&mut self, params: &EinetParams, i: usize, bn: usize) {
-        let Some(m) = &self.plan.levels[i].mixing else {
-            return;
-        };
-        let ko = self.plan.levels[i].einsum.ko;
-        let wm = params.mix[i].as_ref().expect("mixing weights present");
-        let lvx = &self.levels[i];
-        // scratch indices were assigned in child_slots iteration order
-        let mut scratch_cursor = 0usize;
-        for (j, ch) in m.child_slots.iter().enumerate() {
-            let rid = m.region_ids[j];
-            let wrow = &wm[j * m.cmax..j * m.cmax + ch.len()];
-            let out_off = self.region_off[rid];
-            let first = scratch_cursor;
-            scratch_cursor += ch.len();
-            for b in 0..bn {
-                for kk in 0..ko {
-                    // stable mixture over the C children
-                    let mut a = f32::NEG_INFINITY;
-                    for c in 0..ch.len() {
-                        let v = self.scratch[lvx.scratch_off
-                            + (b * lvx.n_scratch + first + c) * ko
-                            + kk];
-                        a = a.max(v);
-                    }
-                    let mut s = 0.0f32;
-                    for c in 0..ch.len() {
-                        let v = self.scratch[lvx.scratch_off
-                            + (b * lvx.n_scratch + first + c) * ko
-                            + kk];
-                        s += wrow[c] * (v - a).exp();
-                    }
-                    self.arena[out_off + b * ko + kk] = a + s.ln();
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_mix(
+        &mut self,
+        params: &ParamArena,
+        out: usize,
+        ko: usize,
+        children: usize,
+        child: usize,
+        stride: usize,
+        w: usize,
+        bn: usize,
+    ) {
+        let wrow = &params.data[w..w + children];
+        for b in 0..bn {
+            for kk in 0..ko {
+                // stable mixture over the C children
+                let mut a = f32::NEG_INFINITY;
+                for c in 0..children {
+                    a = a.max(self.scratch[child + c * stride + b * ko + kk]);
                 }
+                let mut s = 0.0f32;
+                for (c, &wc) in wrow.iter().enumerate() {
+                    s += wc
+                        * (self.scratch[child + c * stride + b * ko + kk] - a).exp();
+                }
+                self.arena[out + b * ko + kk] = a + s.ln();
             }
         }
     }
@@ -401,12 +290,10 @@ impl DenseEngine {
     // backward (E-step statistics)
     // ------------------------------------------------------------------
 
-    /// Accumulate the EM expected statistics (Eq. 6) for the batch last
-    /// passed to [`DenseEngine::forward`] — must be called with the same
-    /// `x`/`mask`/batch size, with activations still in place.
+    /// See [`Engine::backward`].
     pub fn backward(
         &mut self,
-        params: &EinetParams,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         bn: usize,
@@ -420,224 +307,204 @@ impl DenseEngine {
         self.grad_scratch.fill(0.0);
 
         // d(sum_b log P_b)/d(log root_b) = 1
-        let root = self.plan.graph.root;
-        let rw = self.region_width[root];
         for b in 0..bn {
-            self.grad_arena[self.region_off[root] + b * rw] = 1.0;
-            stats.loglik += self.arena[self.region_off[root] + b * rw] as f64;
+            let r = self.exec.root_row(b);
+            self.grad_arena[r] = 1.0;
+            stats.loglik += self.arena[r] as f64;
         }
         stats.count += bn;
 
-        for i in (0..self.plan.levels.len()).rev() {
-            self.backward_mixing_level(params, i, bn, stats);
-            self.backward_einsum_level(params, i, bn, stats);
+        let k = self.exec.k;
+        if self.t_t.len() < bn * k.max(1) {
+            self.t_t.resize(bn * k.max(1), 0.0);
         }
-        self.backward_leaves(params, x, mask, bn, stats);
-    }
-
-    fn backward_mixing_level(
-        &mut self,
-        params: &EinetParams,
-        i: usize,
-        bn: usize,
-        stats: &mut EmStats,
-    ) {
-        let Some(m) = &self.plan.levels[i].mixing else {
-            return;
-        };
-        let ko = self.plan.levels[i].einsum.ko;
-        let wm = params.mix[i].as_ref().unwrap();
-        let gm = stats.grad_mix[i].as_mut().unwrap();
-        let lvx = &self.levels[i];
-        let mut scratch_cursor = 0usize;
-        for (j, ch) in m.child_slots.iter().enumerate() {
-            let rid = m.region_ids[j];
-            let wrow = &wm[j * m.cmax..j * m.cmax + ch.len()];
-            let out_off = self.region_off[rid];
-            let first = scratch_cursor;
-            scratch_cursor += ch.len();
-            for b in 0..bn {
-                for kk in 0..ko {
-                    let g = self.grad_arena[out_off + b * ko + kk];
-                    if g == 0.0 {
-                        continue;
-                    }
-                    let logs = self.arena[out_off + b * ko + kk];
-                    for c in 0..ch.len() {
-                        let idx = lvx.scratch_off
-                            + (b * lvx.n_scratch + first + c) * ko
-                            + kk;
-                        // exp(logC - logS) <= 1/w_min: bounded
-                        let ew = (self.scratch[idx] - logs).exp();
-                        gm[j * m.cmax + c] += g * ew;
-                        self.grad_scratch[idx] += g * wrow[c] * ew;
-                    }
-                }
+        if self.t_g.len() < bn * k * k {
+            self.t_g.resize(bn * k * k, 0.0);
+        }
+        // one suff-stats scratch for every Leaf step of this pass
+        let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
+        for si in (0..self.exec.steps.len()).rev() {
+            let step = self.exec.steps[si];
+            match step {
+                Step::Mix {
+                    out,
+                    ko,
+                    children,
+                    child,
+                    child_stride,
+                    w,
+                    ..
+                } => self.bwd_mix(
+                    params,
+                    out,
+                    ko,
+                    children,
+                    child,
+                    child_stride,
+                    w,
+                    bn,
+                    stats,
+                ),
+                Step::Einsum {
+                    left,
+                    right,
+                    ko,
+                    w,
+                    dest,
+                    to_scratch,
+                    ..
+                } => self.bwd_einsum(
+                    params, left, right, ko, w, dest, to_scratch, bn, stats,
+                ),
+                Step::Leaf { rid, out } => exec::leaf_backward(
+                    &self.exec,
+                    rid,
+                    out,
+                    x,
+                    mask,
+                    bn,
+                    &self.grad_arena,
+                    &mut tbuf,
+                    stats,
+                ),
             }
         }
     }
 
-    fn backward_einsum_level(
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_mix(
         &mut self,
-        params: &EinetParams,
-        i: usize,
+        params: &ParamArena,
+        out: usize,
+        ko: usize,
+        children: usize,
+        child: usize,
+        stride: usize,
+        w: usize,
         bn: usize,
         stats: &mut EmStats,
     ) {
-        let k = self.plan.k;
-        let kk2 = k * k;
-        let ko = self.plan.levels[i].einsum.ko;
-        let wl = &params.w[i];
-        let gw = &mut stats.grad_w[i];
-        if self.t_t.len() < bn * ko {
-            self.t_t.resize(bn * ko, 0.0);
-        }
-        // G[b, ij] = sum_ko t[b,ko] W[ko,ij] accumulator (reuses no other
-        // live scratch; allocated lazily once)
-        if self.t_g.len() < bn * kk2 {
-            self.t_g.resize(bn * kk2, 0.0);
-        }
-        for l in 0..self.plan.levels[i].einsum.len() {
-            let left = self.plan.levels[i].einsum.left[l];
-            let right = self.plan.levels[i].einsum.right[l];
-            let wslot = &wl[l * ko * kk2..(l + 1) * ko * kk2];
-            let gslot = &mut gw[l * ko * kk2..(l + 1) * ko * kk2];
-            self.prep_slot_scratch(left, right, bn);
-            // t[b, ko] = g / s with s = exp(logS - a - a')
-            let mut any = false;
-            for b in 0..bn {
-                let (out_row, in_scratch) = match self.levels[i].slot_dest[l] {
-                    SlotDest::Region(rid) => (self.region_off[rid] + b * ko, false),
-                    SlotDest::Scratch(sidx) => (
-                        self.levels[i].scratch_off
-                            + (b * self.levels[i].n_scratch + sidx) * ko,
-                        true,
-                    ),
-                };
-                let base = self.t_a[b] + self.t_ap[b];
-                for kout in 0..ko {
-                    let (g, logs) = if in_scratch {
-                        (
-                            self.grad_scratch[out_row + kout],
-                            self.scratch[out_row + kout],
-                        )
-                    } else {
-                        (
-                            self.grad_arena[out_row + kout],
-                            self.arena[out_row + kout],
-                        )
-                    };
-                    self.t_t[b * ko + kout] = if g != 0.0 {
-                        any = true;
-                        g * (base - logs).exp()
-                    } else {
-                        0.0
-                    };
-                }
-            }
-            if !any {
-                continue;
-            }
-            // 1) gW_ko += sum_b t[b,ko] * prod[b]  (axpy over K^2, W row hot)
-            for kout in 0..ko {
-                let grow = &mut gslot[kout * kk2..(kout + 1) * kk2];
-                for b in 0..bn {
-                    let tk = self.t_t[b * ko + kout];
-                    if tk == 0.0 {
-                        continue;
-                    }
-                    let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
-                    for (g, &p) in grow.iter_mut().zip(prod) {
-                        *g += tk * p;
-                    }
-                }
-            }
-            // 2) G[b] = sum_ko t[b,ko] * W[ko]; then child gradients
-            let loff = self.region_off[left];
-            let roff = self.region_off[right];
-            for b in 0..bn {
-                let gbuf = &mut self.t_g[b * kk2..(b + 1) * kk2];
-                gbuf.fill(0.0);
-                let mut live = false;
-                for kout in 0..ko {
-                    let tk = self.t_t[b * ko + kout];
-                    if tk == 0.0 {
-                        continue;
-                    }
-                    live = true;
-                    let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
-                    for (g, &w) in gbuf.iter_mut().zip(wrow) {
-                        *g += tk * w;
-                    }
-                }
-                if !live {
+        let wrow = &params.data[w..w + children];
+        for b in 0..bn {
+            for kk in 0..ko {
+                let g = self.grad_arena[out + b * ko + kk];
+                if g == 0.0 {
                     continue;
                 }
-                let en = &self.t_en_all[b * k..(b + 1) * k];
-                let enp = &self.t_enp_all[b * k..(b + 1) * k];
-                // gleft_i += en_i * (G_i . enp); col_j = sum_i en_i G_ij
-                self.t_en[..k].fill(0.0);
-                let lrow = loff + b * k;
-                let rrow = roff + b * k;
-                for (ii, &eni) in en.iter().enumerate() {
-                    if eni == 0.0 {
-                        continue;
-                    }
-                    let grow = &gbuf[ii * k..(ii + 1) * k];
-                    self.grad_arena[lrow + ii] += eni * dot4(grow, enp);
-                    for (c, &g) in self.t_en[..k].iter_mut().zip(grow) {
-                        *c += eni * g;
-                    }
-                }
-                for (jj, (&enpj, &colj)) in
-                    enp.iter().zip(self.t_en[..k].iter()).enumerate()
-                {
-                    self.grad_arena[rrow + jj] += enpj * colj;
+                let logs = self.arena[out + b * ko + kk];
+                for (c, &wc) in wrow.iter().enumerate() {
+                    let idx = child + c * stride + b * ko + kk;
+                    // exp(logC - logS) <= 1/w_min: bounded
+                    let ew = (self.scratch[idx] - logs).exp();
+                    // stats.grad mirrors the arena layout: the mixing row
+                    // gradient lives at the weight's own offset
+                    stats.grad[w + c] += g * ew;
+                    self.grad_scratch[idx] += g * wc * ew;
                 }
             }
         }
     }
 
-    fn backward_leaves(
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_einsum(
         &mut self,
-        params: &EinetParams,
-        x: &[f32],
-        mask: &[f32],
+        params: &ParamArena,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        dest: usize,
+        to_scratch: bool,
         bn: usize,
         stats: &mut EmStats,
     ) {
-        let k = self.plan.k;
-        let od = self.family.obs_dim();
-        let s_dim = self.family.stat_dim();
-        let d_total = self.plan.graph.num_vars;
-        let r_total = params.num_replica;
-        let mut tbuf = vec![0.0f32; s_dim];
-        for li in 0..self.plan.leaf_region_ids.len() {
-            let rid = self.plan.leaf_region_ids[li];
-            let rep = self.plan.graph.regions[rid].replica.unwrap();
-            let off = self.region_off[rid];
-            let scope = self.plan.graph.regions[rid].scope.to_vec();
-            for d in scope {
-                if mask[d] == 0.0 {
-                    continue; // no statistics for marginalized variables
+        let k = self.exec.k;
+        let kk2 = k * k;
+        self.prep_slot_scratch(left, right, bn);
+        let wslot = &params.data[w..w + ko * kk2];
+        // t[b, ko] = g / s with s = exp(logS - a - a')
+        let mut any = false;
+        for b in 0..bn {
+            let out_row = dest + b * ko;
+            let base = self.t_a[b] + self.t_ap[b];
+            for kout in 0..ko {
+                let (g, logs) = if to_scratch {
+                    (
+                        self.grad_scratch[out_row + kout],
+                        self.scratch[out_row + kout],
+                    )
+                } else {
+                    (
+                        self.grad_arena[out_row + kout],
+                        self.arena[out_row + kout],
+                    )
+                };
+                self.t_t[b * ko + kout] = if g != 0.0 {
+                    any = true;
+                    g * (base - logs).exp()
+                } else {
+                    0.0
+                };
+            }
+        }
+        if !any {
+            return;
+        }
+        // 1) gW_ko += sum_b t[b,ko] * prod[b] (axpy over K^2, W row hot);
+        //    the gradient span sits at the weight span's own arena offset
+        let gslot = &mut stats.grad[w..w + ko * kk2];
+        for kout in 0..ko {
+            let grow = &mut gslot[kout * kk2..(kout + 1) * kk2];
+            for b in 0..bn {
+                let tk = self.t_t[b * ko + kout];
+                if tk == 0.0 {
+                    continue;
                 }
-                for b in 0..bn {
-                    let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
-                    self.family.suff_stats(xv, &mut tbuf);
-                    let grow = off + b * k;
-                    for kk in 0..k {
-                        let p = self.grad_arena[grow + kk];
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let base = (d * k + kk) * r_total + rep;
-                        stats.sum_p[base] += p;
-                        let pt = &mut stats.sum_pt[base * s_dim..(base + 1) * s_dim];
-                        for (s_i, t) in tbuf.iter().enumerate() {
-                            pt[s_i] += p * t;
-                        }
-                    }
+                let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
+                for (g, &p) in grow.iter_mut().zip(prod) {
+                    *g += tk * p;
                 }
+            }
+        }
+        // 2) G[b] = sum_ko t[b,ko] * W[ko]; then child gradients
+        for b in 0..bn {
+            let gbuf = &mut self.t_g[b * kk2..(b + 1) * kk2];
+            gbuf.fill(0.0);
+            let mut live = false;
+            for kout in 0..ko {
+                let tk = self.t_t[b * ko + kout];
+                if tk == 0.0 {
+                    continue;
+                }
+                live = true;
+                let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
+                for (g, &wv) in gbuf.iter_mut().zip(wrow) {
+                    *g += tk * wv;
+                }
+            }
+            if !live {
+                continue;
+            }
+            let en = &self.t_en_all[b * k..(b + 1) * k];
+            let enp = &self.t_enp_all[b * k..(b + 1) * k];
+            // gleft_i += en_i * (G_i . enp); col_j = sum_i en_i G_ij
+            self.t_en[..k].fill(0.0);
+            let lrow = left + b * k;
+            let rrow = right + b * k;
+            for (ii, &eni) in en.iter().enumerate() {
+                if eni == 0.0 {
+                    continue;
+                }
+                let grow = &gbuf[ii * k..(ii + 1) * k];
+                self.grad_arena[lrow + ii] += eni * dot4(grow, enp);
+                for (c, &g) in self.t_en[..k].iter_mut().zip(grow) {
+                    *c += eni * g;
+                }
+            }
+            for (jj, (&enpj, &colj)) in
+                enp.iter().zip(self.t_en[..k].iter()).enumerate()
+            {
+                self.grad_arena[rrow + jj] += enpj * colj;
             }
         }
     }
@@ -646,165 +513,95 @@ impl DenseEngine {
     // sampling / decoding (used for Fig. 4 image generation + inpainting)
     // ------------------------------------------------------------------
 
-    /// Top-down ancestral decode for sample index `b` of the last forward
-    /// pass. With an all-zero mask this is unconditional sampling (the
-    /// forward pass then carries log 1 everywhere, so posterior == prior);
-    /// with evidence (mask[d] = 1 for observed d) it draws from the
-    /// conditional distribution of Eq. 1, writing only unobserved
-    /// variables into `out` (`[D, obs_dim]`, pre-filled with evidence).
+    /// See [`Engine::decode`].
     pub fn decode(
         &self,
-        params: &EinetParams,
+        params: &ParamArena,
         b: usize,
         mask: &[f32],
         mode: DecodeMode,
         rng: &mut Rng,
         out: &mut [f32],
     ) {
-        let k = self.plan.k;
-        let od = self.family.obs_dim();
-        let s_dim = self.family.stat_dim();
-        // (region, entry) stack
-        let mut stack: Vec<(usize, usize)> = vec![(self.plan.graph.root, 0)];
-        // locate level+slot for each partition once
-        let mut part_level = vec![usize::MAX; self.plan.graph.partitions.len()];
-        let mut part_slot = vec![usize::MAX; self.plan.graph.partitions.len()];
-        for (i, lv) in self.plan.levels.iter().enumerate() {
-            for (s, &pid) in lv.einsum.partition_ids.iter().enumerate() {
-                part_level[pid] = i;
-                part_slot[pid] = s;
-            }
-        }
-        let mut wbuf = vec![0.0f32; k * k];
-        while let Some((rid, entry)) = stack.pop() {
-            let region = &self.plan.graph.regions[rid];
-            if region.is_leaf() {
-                let rep = region.replica.unwrap();
-                for d in region.scope.iter() {
-                    if mask[d] != 0.0 {
-                        continue; // observed: keep evidence value
-                    }
-                    let th_base = ((d * k + entry) * params.num_replica + rep) * s_dim;
-                    let th = &params.theta[th_base..th_base + s_dim];
-                    let dst = &mut out[d * od..(d + 1) * od];
-                    match mode {
-                        DecodeMode::Sample => self.family.sample(th, rng, dst),
-                        DecodeMode::Argmax => self.family.mean(th, dst),
-                    }
-                }
-                continue;
-            }
-            // choose a partition (posterior-weighted for multi-partition)
-            let pid = if region.partitions.len() == 1 {
-                region.partitions[0]
-            } else {
-                // find the mixing slot for this region
-                let i = part_level[region.partitions[0]];
-                let lvx = &self.levels[i];
-                let m = self.plan.levels[i].mixing.as_ref().unwrap();
-                let j = m
-                    .region_ids
-                    .iter()
-                    .position(|&r| r == rid)
-                    .expect("region in mixing layer");
-                let wm = params.mix[i].as_ref().unwrap();
-                let wrow = &wm[j * m.cmax..j * m.cmax + m.child_slots[j].len()];
-                // scratch index of this region's first child
-                let first: usize = m.child_slots[..j].iter().map(Vec::len).sum();
-                let ko = self.plan.levels[i].einsum.ko;
-                let mut weights = vec![0.0f32; m.child_slots[j].len()];
-                let mut maxv = f32::NEG_INFINITY;
-                for c in 0..weights.len() {
-                    let v = self.scratch[lvx.scratch_off
-                        + (b * lvx.n_scratch + first + c) * ko
-                        + entry];
-                    maxv = maxv.max(v);
-                }
-                for (c, wgt) in weights.iter_mut().enumerate() {
-                    let v = self.scratch[lvx.scratch_off
-                        + (b * lvx.n_scratch + first + c) * ko
-                        + entry];
-                    *wgt = wrow[c] * (v - maxv).exp();
-                }
-                let c = match mode {
-                    DecodeMode::Sample => rng.categorical_f32(&weights),
-                    DecodeMode::Argmax => argmax(&weights),
-                };
-                region.partitions[c]
-            };
-            let i = part_level[pid];
-            let slot = part_slot[pid];
-            let lv = &self.plan.levels[i];
-            let ko = lv.einsum.ko;
-            debug_assert!(entry < ko);
-            let p = self.plan.graph.partitions[pid];
-            let wl = &params.w[i];
-            let wslot =
-                &wl[(slot * ko + entry) * k * k..(slot * ko + entry + 1) * k * k];
-            // posterior over (i, j) ∝ W_kij * N_i * N'_j
-            let loff = self.region_off[p.left] + b * k;
-            let roff = self.region_off[p.right] + b * k;
-            let mut a = f32::NEG_INFINITY;
-            let mut ap = f32::NEG_INFINITY;
-            for kk in 0..k {
-                a = a.max(self.arena[loff + kk]);
-                ap = ap.max(self.arena[roff + kk]);
-            }
-            for ii in 0..k {
-                let eni = (self.arena[loff + ii] - a).exp();
-                for jj in 0..k {
-                    wbuf[ii * k + jj] =
-                        wslot[ii * k + jj] * eni * (self.arena[roff + jj] - ap).exp();
-                }
-            }
-            let pick = match mode {
-                DecodeMode::Sample => rng.categorical_f32(&wbuf),
-                DecodeMode::Argmax => argmax(&wbuf),
-            };
-            stack.push((p.left, pick / k));
-            stack.push((p.right, pick % k));
-        }
+        exec::decode(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            b,
+            mask,
+            mode,
+            rng,
+            out,
+        );
     }
 
-    /// Convenience: unconditional samples. Runs a fully-marginalized
-    /// forward pass for one dummy sample and decodes `n` times.
+    /// Convenience: unconditional samples (the [`Engine::sample`] default,
+    /// reachable without importing the trait).
     pub fn sample(
         &mut self,
-        params: &EinetParams,
+        params: &ParamArena,
         n: usize,
         rng: &mut Rng,
         mode: DecodeMode,
     ) -> Vec<f32> {
-        let d = self.plan.graph.num_vars;
-        let od = self.family.obs_dim();
-        let mask = vec![0.0f32; d];
-        let x = vec![0.0f32; d * od];
-        let mut logp = vec![0.0f32; 1];
-        self.forward(params, &x, &mask, &mut logp);
-        let mut out = vec![0.0f32; n * d * od];
-        for s in 0..n {
-            self.decode(
-                params,
-                0,
-                &mask,
-                mode,
-                rng,
-                &mut out[s * d * od..(s + 1) * d * od],
-            );
-        }
-        out
+        Engine::sample(self, params, n, rng, mode)
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
-        }
+impl Engine for DenseEngine {
+    fn build(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
+        DenseEngine::new(plan, family, batch_cap)
     }
-    let _ = best.min(xs.len() - 1);
-    best
+
+    fn plan(&self) -> &LayeredPlan {
+        DenseEngine::plan(self)
+    }
+
+    fn family(&self) -> LeafFamily {
+        DenseEngine::family(self)
+    }
+
+    fn batch_capacity(&self) -> usize {
+        DenseEngine::batch_capacity(self)
+    }
+
+    fn forward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+    ) {
+        DenseEngine::forward(self, params, x, mask, logp)
+    }
+
+    fn backward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        DenseEngine::backward(self, params, x, mask, bn, stats)
+    }
+
+    fn decode(
+        &self,
+        params: &ParamArena,
+        b: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        DenseEngine::decode(self, params, b, mask, mode, rng, out)
+    }
+
+    fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
+        DenseEngine::memory_footprint(self, params)
+    }
 }
 
 #[cfg(test)]
@@ -819,9 +616,9 @@ mod tests {
         rep: usize,
         k: usize,
         seed: u64,
-    ) -> (DenseEngine, EinetParams) {
+    ) -> (DenseEngine, ParamArena) {
         let plan = LayeredPlan::compile(random_binary_trees(nv, depth, rep, seed), k);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, seed);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, seed);
         let engine = DenseEngine::new(plan, LeafFamily::Bernoulli, 64);
         (engine, params)
     }
@@ -902,7 +699,7 @@ mod tests {
     #[test]
     fn pd_structure_with_mixing_normalizes() {
         let plan = LayeredPlan::compile(poon_domingos(2, 3, 1, PdAxes::Both), 3);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 3);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 3);
         let mut e = DenseEngine::new(plan, LeafFamily::Bernoulli, 64);
         let nv = 6;
         let x = all_binary(nv);
@@ -925,16 +722,16 @@ mod tests {
         // numeric grad wrt a few w entries (unconstrained perturbation)
         let eps = 1e-3f32;
         for idx in [0usize, 3, 7] {
-            let orig = params.w[0][idx];
-            params.w[0][idx] = orig + eps;
+            let orig = params.w(0)[idx];
+            params.w_mut(0)[idx] = orig + eps;
             let mut lp_hi = vec![0.0f32; 1];
             e.forward(&params, &x, &mask, &mut lp_hi);
-            params.w[0][idx] = orig - eps;
+            params.w_mut(0)[idx] = orig - eps;
             let mut lp_lo = vec![0.0f32; 1];
             e.forward(&params, &x, &mask, &mut lp_lo);
-            params.w[0][idx] = orig;
+            params.w_mut(0)[idx] = orig;
             let fd = (lp_hi[0] - lp_lo[0]) / (2.0 * eps);
-            let an = stats.grad_w[0][idx];
+            let an = stats.grad_w(0)[idx];
             assert!(
                 (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
                 "idx {idx}: fd {fd} vs an {an}"
@@ -957,7 +754,7 @@ mod tests {
         let mut stats = EmStats::zeros_like(&params);
         e.backward(&params, &x, &mask, bn, &mut stats);
         // per variable d: sum over (k, r) of sum_p == bn
-        let kr = params.k * params.num_replica;
+        let kr = params.layout.k * params.layout.num_replica;
         for d in 0..6 {
             let total: f32 = stats.sum_p[d * kr..(d + 1) * kr].iter().sum();
             assert!(
@@ -1035,5 +832,19 @@ mod tests {
         let m = e.memory_footprint(&params);
         assert!(m.params > 0 && m.activations > 0);
         assert_eq!(m.params, 4 * params.num_params());
+    }
+
+    #[test]
+    fn trait_object_dispatch_works() {
+        // the serving path may hold engines as dyn Engine
+        let plan = LayeredPlan::compile(random_binary_trees(6, 2, 2, 0), 3);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 0);
+        let mut boxed: Box<dyn Engine> =
+            Box::new(DenseEngine::new(plan, LeafFamily::Bernoulli, 4));
+        let x = vec![0.0f32; 6];
+        let mask = vec![1.0f32; 6];
+        let mut lp = vec![0.0f32; 1];
+        boxed.forward(&params, &x, &mask, &mut lp);
+        assert!(lp[0].is_finite() && lp[0] < 0.0);
     }
 }

@@ -1,0 +1,540 @@
+//! The flat compiled IR every engine executes.
+//!
+//! [`ExecPlan::lower`] turns a [`LayeredPlan`] into a linear program of
+//! [`Step`]s — `Leaf` / `Einsum` / `Mix` — with every buffer offset
+//! precomputed at construction time:
+//!
+//! * each region owns a `[batch_cap, width]` block in the activation
+//!   arena at `region_off[rid]` (row `b` at `region_off[rid] + b * width`);
+//! * einsum slots that feed a mixing layer write to a scratch buffer
+//!   instead, one contiguous `[batch_cap, ko]` block per slot, with a
+//!   mixing region's children in consecutive blocks;
+//! * every step carries the absolute offset of its weight span inside the
+//!   [`super::ParamArena`] — and, because [`super::EmStats::grad`] mirrors
+//!   that layout scalar-for-scalar, the same offset addresses the
+//!   gradient accumulator in the backward sweep.
+//!
+//! Forward execution is a single pass over `steps`; the backward sweep is
+//! the same list in reverse (mixing before its einsum level, leaves
+//! last). The dense and sparse engines differ only in the kernel they run
+//! per step, so the leaf layer and the top-down decode are shared here.
+
+use crate::layers::{LayeredPlan, RegionSlot};
+use crate::leaves::LeafFamily;
+use crate::util::rng::Rng;
+
+use super::{DecodeMode, EmStats, ParamArena, ParamLayout};
+
+/// One step of the linear program. All fields are precomputed offsets or
+/// ids; steps are `Copy` so engines can destructure without borrowing.
+#[derive(Clone, Copy, Debug)]
+pub enum Step {
+    /// Evaluate one leaf region into the activation arena.
+    Leaf {
+        /// region id (scope + replica live in the region graph)
+        rid: usize,
+        /// arena offset of the region's [batch_cap, K] block
+        out: usize,
+    },
+    /// One einsum slot: contract the (left, right) child vectors through
+    /// a [Ko, K, K] weight block.
+    Einsum {
+        /// level index in the source plan
+        level: usize,
+        /// slot index within the level
+        slot: usize,
+        /// partition id (addresses per-partition buffers, e.g. the sparse
+        /// engine's explicit product blocks)
+        pid: usize,
+        /// arena offsets of the child blocks
+        left: usize,
+        right: usize,
+        /// output width of this slot
+        ko: usize,
+        /// ParamArena offset of the slot's [Ko, K, K] weight block
+        w: usize,
+        /// output block offset (row b at `dest + b * ko`)
+        dest: usize,
+        /// `dest` addresses the scratch buffer (slot feeds mixing) rather
+        /// than the activation arena
+        to_scratch: bool,
+    },
+    /// One mixing region aggregating `children` consecutive scratch
+    /// blocks.
+    Mix {
+        level: usize,
+        /// row index within the level's mixing layer
+        row: usize,
+        rid: usize,
+        /// arena offset of the region's output block
+        out: usize,
+        ko: usize,
+        /// number of real children
+        children: usize,
+        /// scratch offset of the first child block; child c starts at
+        /// `child + c * child_stride`
+        child: usize,
+        child_stride: usize,
+        /// ParamArena offset of the [cmax] mixing row (first `children`
+        /// entries are real)
+        w: usize,
+    },
+}
+
+/// The compiled flat execution plan: shared, immutable engine input.
+pub struct ExecPlan {
+    pub plan: LayeredPlan,
+    pub family: LeafFamily,
+    pub layout: ParamLayout,
+    pub k: usize,
+    pub batch_cap: usize,
+    pub steps: Vec<Step>,
+    /// per region: offset of its [batch_cap, width] arena block
+    pub region_off: Vec<usize>,
+    /// per region: vector width (K; root: top level's Ko)
+    pub region_width: Vec<usize>,
+    pub arena_len: usize,
+    pub scratch_len: usize,
+    /// per partition: (level, slot) — the decode path's reverse index
+    part_level: Vec<usize>,
+    part_slot: Vec<usize>,
+    /// per level: scratch offset of each mixing row's first child block
+    mix_child_scratch: Vec<Vec<usize>>,
+}
+
+impl ExecPlan {
+    /// Lower a layered plan to the flat step program.
+    pub fn lower(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
+        let k = plan.k;
+        let layout = ParamLayout::from_plan(&plan, family);
+        let n_regions = plan.graph.regions.len();
+        let mut region_off = vec![usize::MAX; n_regions];
+        let mut region_width = vec![k; n_regions];
+        region_width[plan.graph.root] =
+            plan.levels.last().map(|lv| lv.einsum.ko).unwrap_or(k);
+        let mut off = 0usize;
+        for r in &plan.graph.regions {
+            region_off[r.id] = off;
+            off += batch_cap * region_width[r.id];
+        }
+        let arena_len = off;
+
+        let mut steps = Vec::new();
+        for &rid in &plan.leaf_region_ids {
+            steps.push(Step::Leaf {
+                rid,
+                out: region_off[rid],
+            });
+        }
+
+        let mut scratch_off = 0usize;
+        let mut mix_child_scratch = Vec::with_capacity(plan.levels.len());
+        for (i, lv) in plan.levels.iter().enumerate() {
+            let ko = lv.einsum.ko;
+            let slot_block = batch_cap * ko;
+            // destination of each einsum slot: its region's arena block,
+            // or a scratch block when the slot feeds a mixing layer
+            let mut dest = vec![(usize::MAX, false); lv.einsum.len()];
+            for &(rid, slot) in &lv.region_out {
+                if let RegionSlot::Einsum(s) = slot {
+                    dest[s] = (region_off[rid], false);
+                }
+            }
+            let mut row_first = Vec::new();
+            if let Some(m) = &lv.mixing {
+                for ch in &m.child_slots {
+                    row_first.push(scratch_off);
+                    for &s in ch {
+                        dest[s] = (scratch_off, true);
+                        scratch_off += slot_block;
+                    }
+                }
+            }
+            let kk2 = k * k;
+            let w_off = layout.levels[i].w_off;
+            for l in 0..lv.einsum.len() {
+                let (d, to_scratch) = dest[l];
+                debug_assert!(d != usize::MAX, "slot {l} of level {i} unrouted");
+                steps.push(Step::Einsum {
+                    level: i,
+                    slot: l,
+                    pid: lv.einsum.partition_ids[l],
+                    left: region_off[lv.einsum.left[l]],
+                    right: region_off[lv.einsum.right[l]],
+                    ko,
+                    w: w_off + l * ko * kk2,
+                    dest: d,
+                    to_scratch,
+                });
+            }
+            if let Some(m) = &lv.mixing {
+                let ml = layout.levels[i].mix.as_ref().unwrap();
+                for (j, ch) in m.child_slots.iter().enumerate() {
+                    steps.push(Step::Mix {
+                        level: i,
+                        row: j,
+                        rid: m.region_ids[j],
+                        out: region_off[m.region_ids[j]],
+                        ko,
+                        children: ch.len(),
+                        child: row_first[j],
+                        child_stride: slot_block,
+                        w: ml.off + j * ml.cmax,
+                    });
+                }
+            }
+            mix_child_scratch.push(row_first);
+        }
+        let scratch_len = scratch_off;
+
+        let n_parts = plan.graph.partitions.len();
+        let mut part_level = vec![usize::MAX; n_parts];
+        let mut part_slot = vec![usize::MAX; n_parts];
+        for (i, lv) in plan.levels.iter().enumerate() {
+            for (s, &pid) in lv.einsum.partition_ids.iter().enumerate() {
+                part_level[pid] = i;
+                part_slot[pid] = s;
+            }
+        }
+
+        Self {
+            family,
+            layout,
+            k,
+            batch_cap,
+            steps,
+            region_off,
+            region_width,
+            arena_len,
+            scratch_len,
+            part_level,
+            part_slot,
+            mix_child_scratch,
+            plan,
+        }
+    }
+
+    /// Offset of the root region's row `b` plus the root width.
+    #[inline]
+    pub fn root_row(&self, b: usize) -> usize {
+        let root = self.plan.graph.root;
+        self.region_off[root] + b * self.region_width[root]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared leaf layer
+// ---------------------------------------------------------------------------
+
+/// Refresh the per-component log-normalizer cache (once per batch: all
+/// transcendentals happen here, not in the per-sample loop).
+pub(crate) fn refresh_leaf_const(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    leaf_const: &mut Vec<f32>,
+) {
+    let s_dim = ep.family.stat_dim();
+    let n_comp = ep.plan.graph.num_vars * ep.k * ep.layout.num_replica;
+    if leaf_const.len() != n_comp {
+        leaf_const.resize(n_comp, 0.0);
+    }
+    let theta = params.theta();
+    for (c, lc) in leaf_const.iter_mut().enumerate() {
+        *lc = ep
+            .family
+            .log_norm_const(&theta[c * s_dim..(c + 1) * s_dim]);
+    }
+}
+
+/// Forward one leaf region: accumulate per-variable log-densities into
+/// the region's [bn, K] arena block (mask 0 ⇒ the variable is integrated
+/// out and contributes log 1 = 0).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn leaf_forward(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    leaf_const: &[f32],
+    rid: usize,
+    out: usize,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    arena: &mut [f32],
+) {
+    let k = ep.k;
+    let od = ep.family.obs_dim();
+    let d_total = ep.plan.graph.num_vars;
+    let s_dim = ep.family.stat_dim();
+    let r_total = ep.layout.num_replica;
+    let rep = ep.plan.graph.regions[rid].replica.unwrap();
+    arena[out..out + bn * k].fill(0.0);
+    let theta = params.theta();
+    for d in ep.plan.graph.regions[rid].scope.iter() {
+        if mask[d] == 0.0 {
+            continue;
+        }
+        let comp_base = (d * k) * r_total + rep;
+        for b in 0..bn {
+            let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
+            let row = &mut arena[out + b * k..out + b * k + k];
+            for (kk, slot) in row.iter_mut().enumerate() {
+                let c = comp_base + kk * r_total;
+                let th = &theta[c * s_dim..(c + 1) * s_dim];
+                *slot += ep.family.log_prob_with_const(th, leaf_const[c], xv);
+            }
+        }
+    }
+}
+
+/// Backward one leaf region: turn the region-block gradients (leaf
+/// posteriors p_L) into the Eq. 6 sufficient statistics.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn leaf_backward(
+    ep: &ExecPlan,
+    rid: usize,
+    out: usize,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    grad_arena: &[f32],
+    tbuf: &mut [f32],
+    stats: &mut EmStats,
+) {
+    let k = ep.k;
+    let od = ep.family.obs_dim();
+    let s_dim = ep.family.stat_dim();
+    debug_assert_eq!(tbuf.len(), s_dim);
+    let d_total = ep.plan.graph.num_vars;
+    let r_total = ep.layout.num_replica;
+    let rep = ep.plan.graph.regions[rid].replica.unwrap();
+    for d in ep.plan.graph.regions[rid].scope.iter() {
+        if mask[d] == 0.0 {
+            continue; // no statistics for marginalized variables
+        }
+        for b in 0..bn {
+            let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
+            ep.family.suff_stats(xv, tbuf);
+            let grow = out + b * k;
+            for kk in 0..k {
+                let p = grad_arena[grow + kk];
+                if p == 0.0 {
+                    continue;
+                }
+                let base = (d * k + kk) * r_total + rep;
+                stats.sum_p[base] += p;
+                // the theta span of the flat grad buffer holds sum_pt
+                let pt = &mut stats.grad[base * s_dim..(base + 1) * s_dim];
+                for (s_i, t) in tbuf.iter().enumerate() {
+                    pt[s_i] += p * t;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared top-down decode
+// ---------------------------------------------------------------------------
+
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-down ancestral decode for sample `b`, reading the activations
+/// (`arena`) and mixing inputs (`scratch`) left by the engine's forward
+/// pass. With an all-zero mask this is unconditional sampling (the
+/// forward pass then carries log 1 everywhere, so posterior == prior);
+/// with evidence it draws from the conditional of Eq. 1, writing only
+/// unobserved variables into `out` (`[D, obs_dim]`, pre-filled with
+/// evidence). Shared by every engine: their forward passes leave
+/// identical activation values.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    b: usize,
+    mask: &[f32],
+    mode: DecodeMode,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    let k = ep.k;
+    let od = ep.family.obs_dim();
+    let s_dim = ep.family.stat_dim();
+    let r_total = ep.layout.num_replica;
+    // (region, entry) stack
+    let mut stack: Vec<(usize, usize)> = vec![(ep.plan.graph.root, 0)];
+    let mut wbuf = vec![0.0f32; k * k];
+    let theta = params.theta();
+    while let Some((rid, entry)) = stack.pop() {
+        let region = &ep.plan.graph.regions[rid];
+        if region.is_leaf() {
+            let rep = region.replica.unwrap();
+            for d in region.scope.iter() {
+                if mask[d] != 0.0 {
+                    continue; // observed: keep evidence value
+                }
+                let th_base = ((d * k + entry) * r_total + rep) * s_dim;
+                let th = &theta[th_base..th_base + s_dim];
+                let dst = &mut out[d * od..(d + 1) * od];
+                match mode {
+                    DecodeMode::Sample => ep.family.sample(th, rng, dst),
+                    DecodeMode::Argmax => ep.family.mean(th, dst),
+                }
+            }
+            continue;
+        }
+        // choose a partition (posterior-weighted for multi-partition)
+        let pid = if region.partitions.len() == 1 {
+            region.partitions[0]
+        } else {
+            let i = ep.part_level[region.partitions[0]];
+            let m = ep.plan.levels[i].mixing.as_ref().unwrap();
+            let j = m
+                .region_ids
+                .iter()
+                .position(|&r| r == rid)
+                .expect("region in mixing layer");
+            let ml = ep.layout.levels[i].mix.as_ref().unwrap();
+            let nch = m.child_slots[j].len();
+            let wrow = &params.data[ml.off + j * ml.cmax..ml.off + j * ml.cmax + nch];
+            let first = ep.mix_child_scratch[i][j];
+            let ko = ep.plan.levels[i].einsum.ko;
+            let stride = ep.batch_cap * ko;
+            let mut weights = vec![0.0f32; nch];
+            let mut maxv = f32::NEG_INFINITY;
+            for c in 0..nch {
+                maxv = maxv.max(scratch[first + c * stride + b * ko + entry]);
+            }
+            for (c, wgt) in weights.iter_mut().enumerate() {
+                let v = scratch[first + c * stride + b * ko + entry];
+                *wgt = wrow[c] * (v - maxv).exp();
+            }
+            let c = match mode {
+                DecodeMode::Sample => rng.categorical_f32(&weights),
+                DecodeMode::Argmax => argmax(&weights),
+            };
+            region.partitions[c]
+        };
+        let i = ep.part_level[pid];
+        let slot = ep.part_slot[pid];
+        let ko = ep.plan.levels[i].einsum.ko;
+        debug_assert!(entry < ko);
+        let p = ep.plan.graph.partitions[pid];
+        let w_off = ep.layout.levels[i].w_off;
+        let wslot = &params.data
+            [w_off + (slot * ko + entry) * k * k..w_off + (slot * ko + entry + 1) * k * k];
+        // posterior over (i, j) ∝ W_kij * N_i * N'_j
+        let loff = ep.region_off[p.left] + b * k;
+        let roff = ep.region_off[p.right] + b * k;
+        let mut a = f32::NEG_INFINITY;
+        let mut ap = f32::NEG_INFINITY;
+        for kk in 0..k {
+            a = a.max(arena[loff + kk]);
+            ap = ap.max(arena[roff + kk]);
+        }
+        for ii in 0..k {
+            let eni = (arena[loff + ii] - a).exp();
+            for jj in 0..k {
+                wbuf[ii * k + jj] =
+                    wslot[ii * k + jj] * eni * (arena[roff + jj] - ap).exp();
+            }
+        }
+        let pick = match mode {
+            DecodeMode::Sample => rng.categorical_f32(&wbuf),
+            DecodeMode::Argmax => argmax(&wbuf),
+        };
+        stack.push((p.left, pick / k));
+        stack.push((p.right, pick % k));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structure::{poon_domingos, random_binary_trees, PdAxes};
+
+    #[test]
+    fn lowering_routes_every_slot_and_region() {
+        for plan in [
+            LayeredPlan::compile(random_binary_trees(12, 3, 3, 0), 4),
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+        ] {
+            let n_slots: usize = plan.levels.iter().map(|lv| lv.einsum.len()).sum();
+            let n_mix: usize = plan
+                .levels
+                .iter()
+                .filter_map(|lv| lv.mixing.as_ref())
+                .map(|m| m.len())
+                .sum();
+            let n_leaves = plan.leaf_region_ids.len();
+            let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+            let mut leaf = 0;
+            let mut einsum = 0;
+            let mut mix = 0;
+            for s in &ep.steps {
+                match s {
+                    Step::Leaf { .. } => leaf += 1,
+                    Step::Einsum { .. } => einsum += 1,
+                    Step::Mix { .. } => mix += 1,
+                }
+            }
+            assert_eq!(leaf, n_leaves);
+            assert_eq!(einsum, n_slots);
+            assert_eq!(mix, n_mix);
+        }
+    }
+
+    #[test]
+    fn scratch_blocks_do_not_overlap() {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        let cap = 8;
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, cap);
+        let mut claimed = vec![false; ep.scratch_len];
+        for s in &ep.steps {
+            if let Step::Einsum {
+                dest,
+                to_scratch: true,
+                ko,
+                ..
+            } = *s
+            {
+                for i in dest..dest + cap * ko {
+                    assert!(!claimed[i], "scratch overlap at {i}");
+                    claimed[i] = true;
+                }
+            }
+        }
+        assert!(claimed.iter().all(|&c| c), "scratch holes");
+    }
+
+    #[test]
+    fn param_offsets_stay_inside_their_spans() {
+        let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 4);
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 4);
+        let k = ep.k;
+        for s in &ep.steps {
+            match *s {
+                Step::Einsum { level, slot, ko, w, .. } => {
+                    let lv = &ep.layout.levels[level];
+                    assert_eq!(w, lv.w_off + slot * ko * k * k);
+                    assert!(w + ko * k * k <= lv.w_off + lv.w_len);
+                }
+                Step::Mix { level, row, children, w, .. } => {
+                    let m = ep.layout.levels[level].mix.as_ref().unwrap();
+                    assert_eq!(w, m.off + row * m.cmax);
+                    assert_eq!(children, m.child_counts[row]);
+                }
+                Step::Leaf { .. } => {}
+            }
+        }
+    }
+}

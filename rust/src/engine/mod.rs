@@ -1,66 +1,214 @@
-//! Execution engines over a [`LayeredPlan`].
+//! The execution stack: one [`Engine`] trait over a compiled flat
+//! [`exec::ExecPlan`] IR, backed by a contiguous parameter arena.
 //!
-//! * [`dense::DenseEngine`] — the EiNet layout (the paper's contribution):
-//!   per-level fused log-einsum-exp, no explicit product materialization.
-//! * [`sparse::SparseEngine`] — the LibSPN/SPFlow-style baseline: node-by-
-//!   node log-domain evaluation with explicitly materialized product
-//!   vectors and per-entry log-sum-exp (Section 3.2's "indirect
-//!   implementation"), used as the comparator in Fig. 3 / Fig. 6.
+//! Architecture (this module is the spine of the crate):
 //!
-//! Both engines share the parameter container [`EinetParams`] and produce
-//! identical numbers (cross-checked in tests), differing only in layout,
-//! speed, and memory.
+//! * [`ParamArena`] — every trainable scalar of an EiNet (leaf theta, all
+//!   per-level einsum weights, all mixing weights) lives in ONE contiguous
+//!   `Vec<f32>`, addressed through a typed offset table ([`ParamLayout`]).
+//!   Checkpointing is a single length-prefixed slice write, parameter-
+//!   server broadcast is a memcpy, and the inner kernels index straight
+//!   into one cache-friendly buffer.
+//! * [`EmStats`] — the E-step accumulator is a *same-layout* flat gradient
+//!   buffer: `stats.grad[i]` is the gradient of the scalar `params.data[i]`
+//!   (with the theta span reused for the `sum_p·T(x)` statistics), so the
+//!   parameter-server reduce ([`EmStats::merge`]) is one element-wise add.
+//! * [`Engine`] — the common contract (`forward` / `backward` / `decode` /
+//!   `sample` / `memory_footprint` / `batch_capacity`) implemented by both
+//!   [`dense::DenseEngine`] (the paper's fused log-einsum-exp layout) and
+//!   [`sparse::SparseEngine`] (the LibSPN/SPFlow-style baseline of
+//!   Section 3.2), both lowered from a [`crate::layers::LayeredPlan`] into
+//!   the flat [`exec::ExecPlan`] step program once at construction.
+//!   Training ([`crate::coordinator`]), mixtures ([`crate::mixture`]),
+//!   inference ([`crate::infer`]), and the serving path are generic over
+//!   `E: Engine`, so every backend shares one code path.
+//!
+//! The two engines produce identical numbers (cross-checked in tests and
+//! in `tests/engine_parity.rs`), differing only in layout, speed, and
+//! memory — exactly the dimensions Fig. 3 / Fig. 6 measure.
 
 pub mod dense;
+pub mod exec;
 pub mod sparse;
 
-use anyhow::{ensure, Result};
+use std::path::Path;
 
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
+use crate::util::MemFootprint;
+use crate::{bail, ensure};
 
-/// All trainable parameters of an EiNet.
+// ---------------------------------------------------------------------------
+// ParamLayout: the typed offset table
+// ---------------------------------------------------------------------------
+
+/// Offset/shape table for the flat parameter arena.
 ///
-/// Layouts (row-major):
-///   theta   [D, K, R, S]          natural leaf parameters
-///   w[i]    [L_i, Ko_i, K, K]     per-level einsum weights (linear domain,
-///                                 normalized over the trailing K*K block)
-///   mix[i]  [M_i, Cmax_i]         per-level mixing weights (normalized
-///                                 over the real children; 0 on padding)
-#[derive(Clone, Debug)]
-pub struct EinetParams {
+/// Arena order (row-major within each span):
+///   theta    [D, K, R, S]        natural leaf parameters, offset 0
+///   level i: w [L_i, Ko_i, K, K] einsum weights (linear domain, normalized
+///                                over each trailing K*K block)
+///            mix [M_i, Cmax_i]   mixing weights (normalized over the real
+///                                children; 0 on padding), when present
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamLayout {
     pub num_vars: usize,
     pub k: usize,
     pub num_replica: usize,
     pub family: LeafFamily,
-    pub theta: Vec<f32>,
-    pub w: Vec<Vec<f32>>,
-    pub mix: Vec<Option<Vec<f32>>>,
+    /// scalar count of the theta span (which starts at offset 0)
+    pub theta_len: usize,
+    pub levels: Vec<LevelLayout>,
+    /// total scalar count of the arena
+    pub total: usize,
 }
 
-impl EinetParams {
-    /// Random initialization matching python `EiNet.init_params` semantics
-    /// (uniform positive weights, normalized; family-specific theta).
-    pub fn init(plan: &LayeredPlan, family: LeafFamily, seed: u64) -> Self {
-        let (d, k, r, s) = (
+/// One level's spans inside the arena.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelLayout {
+    /// number of einsum slots L
+    pub slots: usize,
+    /// per-slot output width Ko (K, or 1 on the root level)
+    pub ko: usize,
+    /// offset of the [L, Ko, K, K] einsum-weight span
+    pub w_off: usize,
+    pub w_len: usize,
+    pub mix: Option<MixLayout>,
+}
+
+/// A level's mixing-weight span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixLayout {
+    /// offset of the [M, cmax] span
+    pub off: usize,
+    pub len: usize,
+    pub cmax: usize,
+    /// real child count per row (the rest of each row is zero padding)
+    pub child_counts: Vec<usize>,
+}
+
+/// Per-level shape description for building a [`ParamLayout`] when no
+/// [`LayeredPlan`] is at hand (checkpoint load, AOT artifact metadata).
+#[derive(Clone, Debug)]
+pub struct LevelSpec {
+    pub slots: usize,
+    pub ko: usize,
+    /// (cmax, per-row real child counts)
+    pub mix: Option<(usize, Vec<usize>)>,
+}
+
+impl ParamLayout {
+    /// Build the layout for a compiled plan.
+    pub fn from_plan(plan: &LayeredPlan, family: LeafFamily) -> Self {
+        let specs: Vec<LevelSpec> = plan
+            .levels
+            .iter()
+            .map(|lv| LevelSpec {
+                slots: lv.einsum.len(),
+                ko: lv.einsum.ko,
+                mix: lv.mixing.as_ref().map(|m| {
+                    (m.cmax, m.child_slots.iter().map(Vec::len).collect())
+                }),
+            })
+            .collect();
+        Self::from_specs(
             plan.graph.num_vars,
             plan.k,
             plan.num_replica,
-            family.stat_dim(),
-        );
+            family,
+            &specs,
+        )
+    }
+
+    /// Build the layout from raw per-level shapes.
+    pub fn from_specs(
+        num_vars: usize,
+        k: usize,
+        num_replica: usize,
+        family: LeafFamily,
+        specs: &[LevelSpec],
+    ) -> Self {
+        let theta_len = num_vars * k * num_replica * family.stat_dim();
+        let mut off = theta_len;
+        let mut levels = Vec::with_capacity(specs.len());
+        for sp in specs {
+            let w_len = sp.slots * sp.ko * k * k;
+            let w_off = off;
+            off += w_len;
+            let mix = sp.mix.as_ref().map(|(cmax, counts)| {
+                let m = MixLayout {
+                    off,
+                    len: counts.len() * cmax,
+                    cmax: *cmax,
+                    child_counts: counts.clone(),
+                };
+                off += m.len;
+                m
+            });
+            levels.push(LevelLayout {
+                slots: sp.slots,
+                ko: sp.ko,
+                w_off,
+                w_len,
+                mix,
+            });
+        }
+        Self {
+            num_vars,
+            k,
+            num_replica,
+            family,
+            theta_len,
+            levels,
+            total: off,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParamArena: all trainable parameters, contiguous
+// ---------------------------------------------------------------------------
+
+/// All trainable parameters of an EiNet in one contiguous arena.
+#[derive(Clone, Debug)]
+pub struct ParamArena {
+    pub layout: ParamLayout,
+    /// the contiguous scalar store, `layout.total` long
+    pub data: Vec<f32>,
+}
+
+/// Historical name kept for call-site continuity.
+pub type EinetParams = ParamArena;
+
+impl ParamArena {
+    /// Zero-filled arena for a layout.
+    pub fn zeros(layout: ParamLayout) -> Self {
+        let n = layout.total;
+        Self {
+            layout,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Random initialization matching python `EiNet.init_params` semantics
+    /// (uniform positive weights, normalized; family-specific theta).
+    pub fn init(plan: &LayeredPlan, family: LeafFamily, seed: u64) -> Self {
+        let layout = ParamLayout::from_plan(plan, family);
+        let mut arena = Self::zeros(layout);
         let mut rng = Rng::new(seed);
-        let mut theta = vec![0.0f32; d * k * r * s];
-        for chunk in theta.chunks_mut(s) {
+        let s = family.stat_dim();
+        for chunk in arena.data[..arena.layout.theta_len].chunks_mut(s) {
             family.init_theta(&mut rng, chunk);
         }
-        let mut w = Vec::new();
-        let mut mix = Vec::new();
-        for lv in &plan.levels {
-            let l = lv.einsum.len();
-            let ko = lv.einsum.ko;
-            let mut wl = vec![0.0f32; l * ko * k * k];
-            for block in wl.chunks_mut(k * k) {
+        let k = arena.layout.k;
+        for i in 0..arena.layout.levels.len() {
+            let (w_off, w_len) = {
+                let lv = &arena.layout.levels[i];
+                (lv.w_off, lv.w_len)
+            };
+            for block in arena.data[w_off..w_off + w_len].chunks_mut(k * k) {
                 let mut total = 0.0f32;
                 for v in block.iter_mut() {
                     *v = rng.uniform_in(0.01, 1.0) as f32;
@@ -70,57 +218,89 @@ impl EinetParams {
                     *v /= total;
                 }
             }
-            w.push(wl);
-            mix.push(lv.mixing.as_ref().map(|m| {
-                let mut wm = vec![0.0f32; m.len() * m.cmax];
-                for (j, ch) in m.child_slots.iter().enumerate() {
-                    let row = &mut wm[j * m.cmax..(j + 1) * m.cmax];
+            let mix = arena.layout.levels[i].mix.clone();
+            if let Some(m) = mix {
+                for (j, &cn) in m.child_counts.iter().enumerate() {
+                    let row =
+                        &mut arena.data[m.off + j * m.cmax..m.off + j * m.cmax + cn];
                     let mut total = 0.0f32;
-                    for slot in 0..ch.len() {
-                        row[slot] = rng.uniform_in(0.01, 1.0) as f32;
-                        total += row[slot];
+                    for v in row.iter_mut() {
+                        *v = rng.uniform_in(0.01, 1.0) as f32;
+                        total += *v;
                     }
-                    for slot in 0..ch.len() {
-                        row[slot] /= total;
+                    for v in row.iter_mut() {
+                        *v /= total;
                     }
                 }
-                wm
-            }));
+            }
         }
-        Self {
-            num_vars: d,
-            k,
-            num_replica: r,
-            family,
-            theta,
-            w,
-            mix,
-        }
+        arena
     }
 
-    /// Index into theta for (var, component, replica): start of the
-    /// `stat_dim`-length natural-parameter slice.
+    pub fn family(&self) -> LeafFamily {
+        self.layout.family
+    }
+
+    /// The leaf-parameter span, layout [D, K, R, S].
+    pub fn theta(&self) -> &[f32] {
+        &self.data[..self.layout.theta_len]
+    }
+
+    pub fn theta_mut(&mut self) -> &mut [f32] {
+        &mut self.data[..self.layout.theta_len]
+    }
+
+    /// Level `i`'s einsum-weight span, layout [L, Ko, K, K].
+    pub fn w(&self, i: usize) -> &[f32] {
+        let lv = &self.layout.levels[i];
+        &self.data[lv.w_off..lv.w_off + lv.w_len]
+    }
+
+    pub fn w_mut(&mut self, i: usize) -> &mut [f32] {
+        let (off, len) = {
+            let lv = &self.layout.levels[i];
+            (lv.w_off, lv.w_len)
+        };
+        &mut self.data[off..off + len]
+    }
+
+    /// Level `i`'s mixing-weight span, layout [M, cmax], if mixing exists.
+    pub fn mix(&self, i: usize) -> Option<&[f32]> {
+        self.layout.levels[i]
+            .mix
+            .as_ref()
+            .map(|m| &self.data[m.off..m.off + m.len])
+    }
+
+    pub fn mix_mut(&mut self, i: usize) -> Option<&mut [f32]> {
+        let (off, len) = match &self.layout.levels[i].mix {
+            Some(m) => (m.off, m.len),
+            None => return None,
+        };
+        Some(&mut self.data[off..off + len])
+    }
+
+    /// Index into the theta span for (var, component, replica): start of
+    /// the `stat_dim`-length natural-parameter slice.
     #[inline]
     pub fn theta_at(&self, d: usize, k: usize, r: usize) -> usize {
-        ((d * self.k + k) * self.num_replica + r) * self.family.stat_dim()
+        ((d * self.layout.k + k) * self.layout.num_replica + r)
+            * self.layout.family.stat_dim()
     }
 
     /// Total parameter scalar count.
     pub fn num_params(&self) -> usize {
-        self.theta.len()
-            + self.w.iter().map(Vec::len).sum::<usize>()
-            + self
-                .mix
-                .iter()
-                .map(|m| m.as_ref().map_or(0, Vec::len))
-                .sum::<usize>()
+        self.layout.total
     }
 
     /// Verify normalization invariants (tests + after checkpoint load).
-    pub fn validate(&self, plan: &LayeredPlan) -> Result<()> {
-        let k = self.k;
-        for (i, lv) in plan.levels.iter().enumerate() {
-            for (b, block) in self.w[i].chunks(k * k).enumerate() {
+    pub fn validate(&self) -> Result<()> {
+        let k = self.layout.k;
+        for (i, lv) in self.layout.levels.iter().enumerate() {
+            for (b, block) in self.data[lv.w_off..lv.w_off + lv.w_len]
+                .chunks(k * k)
+                .enumerate()
+            {
                 let sum: f32 = block.iter().sum();
                 ensure!(
                     (sum - 1.0).abs() < 1e-3,
@@ -131,16 +311,16 @@ impl EinetParams {
                     "w[{i}] has negative entries"
                 );
             }
-            if let (Some(wm), Some(m)) = (&self.mix[i], &lv.mixing) {
-                for (j, ch) in m.child_slots.iter().enumerate() {
-                    let row = &wm[j * m.cmax..(j + 1) * m.cmax];
-                    let sum: f32 = row[..ch.len()].iter().sum();
+            if let Some(m) = &lv.mix {
+                for (j, &cn) in m.child_counts.iter().enumerate() {
+                    let row = &self.data[m.off + j * m.cmax..m.off + (j + 1) * m.cmax];
+                    let sum: f32 = row[..cn].iter().sum();
                     ensure!(
                         (sum - 1.0).abs() < 1e-3,
                         "mix[{i}] row {j} not normalized: {sum}"
                     );
                     ensure!(
-                        row[ch.len()..].iter().all(|&v| v == 0.0),
+                        row[cn..].iter().all(|&v| v == 0.0),
                         "mix[{i}] row {j} has mass on padding"
                     );
                 }
@@ -149,104 +329,206 @@ impl EinetParams {
         Ok(())
     }
 
-    /// Serialize to a simple length-prefixed binary checkpoint.
-    pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        let mut buf: Vec<u8> = Vec::new();
-        let push_usize =
-            |buf: &mut Vec<u8>, v: usize| buf.extend_from_slice(&(v as u64).to_le_bytes());
-        let push_vec = |buf: &mut Vec<u8>, v: &[f32]| {
-            buf.extend_from_slice(&(v.len() as u64).to_le_bytes());
-            for x in v {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
+    /// Serialize as a self-describing binary checkpoint: a layout header
+    /// (including the leaf-family tag) followed by ONE length-prefixed
+    /// slice — the whole arena in a single write.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::with_capacity(4 * self.data.len() + 256);
+        let push = |buf: &mut Vec<u8>, v: usize| {
+            buf.extend_from_slice(&(v as u64).to_le_bytes())
         };
-        buf.extend_from_slice(b"EINET001");
-        push_usize(&mut buf, self.num_vars);
-        push_usize(&mut buf, self.k);
-        push_usize(&mut buf, self.num_replica);
-        push_vec(&mut buf, &self.theta);
-        push_usize(&mut buf, self.w.len());
-        for wl in &self.w {
-            push_vec(&mut buf, wl);
-        }
-        for m in &self.mix {
-            match m {
-                Some(v) => push_vec(&mut buf, v),
-                None => push_usize(&mut buf, usize::MAX),
+        buf.extend_from_slice(MAGIC);
+        let (tag, arg) = family_tag(self.layout.family);
+        push(&mut buf, tag);
+        push(&mut buf, arg);
+        push(&mut buf, self.layout.num_vars);
+        push(&mut buf, self.layout.k);
+        push(&mut buf, self.layout.num_replica);
+        push(&mut buf, self.layout.levels.len());
+        for lv in &self.layout.levels {
+            push(&mut buf, lv.slots);
+            push(&mut buf, lv.ko);
+            match &lv.mix {
+                None => push(&mut buf, u64::MAX as usize),
+                Some(m) => {
+                    push(&mut buf, m.cmax);
+                    push(&mut buf, m.child_counts.len());
+                    for &c in &m.child_counts {
+                        push(&mut buf, c);
+                    }
+                }
             }
+        }
+        push(&mut buf, self.data.len());
+        for x in &self.data {
+            buf.extend_from_slice(&x.to_le_bytes());
         }
         std::fs::write(path, buf)?;
         Ok(())
     }
 
-    /// Load a checkpoint saved by [`EinetParams::save`]; `family` must be
-    /// supplied by the caller (it is part of the experiment config).
-    pub fn load(path: &std::path::Path, family: LeafFamily) -> Result<Self> {
+    /// Load a checkpoint saved by [`ParamArena::save`]. The leaf family is
+    /// read (and thus verified) from the header — callers no longer supply
+    /// it. Every read is bounds-checked: a truncated or corrupted file
+    /// yields `Err`, never a panic.
+    pub fn load(path: &Path) -> Result<Self> {
         let data = std::fs::read(path)?;
-        let mut pos;
+        ensure!(data.len() >= MAGIC.len(), "truncated checkpoint header");
+        if &data[..MAGIC.len()] != MAGIC {
+            if &data[..MAGIC.len()] == b"EINET001" {
+                bail!(
+                    "legacy EINET001 checkpoint: re-save with this version \
+                     (the format now carries the leaf-family tag)"
+                );
+            }
+            bail!("bad checkpoint magic");
+        }
+        let mut pos = MAGIC.len();
         let take_u64 = |data: &[u8], pos: &mut usize| -> Result<u64> {
             ensure!(*pos + 8 <= data.len(), "truncated checkpoint");
             let v = u64::from_le_bytes(data[*pos..*pos + 8].try_into().unwrap());
             *pos += 8;
             Ok(v)
         };
-        ensure!(&data[..8] == b"EINET001", "bad checkpoint magic");
-        pos = 8;
-        let num_vars = take_u64(&data, &mut pos)? as usize;
-        let k = take_u64(&data, &mut pos)? as usize;
-        let num_replica = take_u64(&data, &mut pos)? as usize;
-        let take_vec = |data: &[u8], pos: &mut usize| -> Result<Vec<f32>> {
-            let n = take_u64(data, pos)? as usize;
-            ensure!(*pos + 4 * n <= data.len(), "truncated tensor");
-            let mut v = Vec::with_capacity(n);
-            for i in 0..n {
-                v.push(f32::from_le_bytes(
-                    data[*pos + 4 * i..*pos + 4 * i + 4].try_into().unwrap(),
-                ));
-            }
-            *pos += 4 * n;
-            Ok(v)
-        };
-        let theta = take_vec(&data, &mut pos)?;
-        let n_levels = take_u64(&data, &mut pos)? as usize;
-        let mut w = Vec::with_capacity(n_levels);
+        let take_usize =
+            |data: &[u8], pos: &mut usize| -> Result<usize> { Ok(take_u64(data, pos)? as usize) };
+        let tag = take_u64(&data, &mut pos)?;
+        let arg = take_u64(&data, &mut pos)?;
+        let family = family_from_tag(tag, arg)?;
+        // plausibility bounds keep the layout arithmetic below safely
+        // inside usize even for adversarial headers
+        const LIM: usize = 1 << 24;
+        let num_vars = take_usize(&data, &mut pos)?;
+        let k = take_usize(&data, &mut pos)?;
+        let num_replica = take_usize(&data, &mut pos)?;
+        ensure!(
+            0 < num_vars && num_vars < LIM && 0 < k && k < 1 << 12 && 0 < num_replica && num_replica < LIM,
+            "implausible checkpoint dimensions D={num_vars} K={k} R={num_replica}"
+        );
+        let n_levels = take_usize(&data, &mut pos)?;
+        ensure!(n_levels < 1 << 16, "implausible level count {n_levels}");
+        let mut specs = Vec::with_capacity(n_levels);
         for _ in 0..n_levels {
-            w.push(take_vec(&data, &mut pos)?);
-        }
-        let mut mix = Vec::with_capacity(n_levels);
-        for _ in 0..n_levels {
-            let marker =
-                u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap());
-            if marker == u64::MAX {
-                pos += 8;
-                mix.push(None);
+            let slots = take_usize(&data, &mut pos)?;
+            let ko = take_usize(&data, &mut pos)?;
+            ensure!(
+                slots < LIM && 0 < ko && ko < 1 << 12,
+                "implausible level shape L={slots} Ko={ko}"
+            );
+            let marker = take_u64(&data, &mut pos)?;
+            let mix = if marker == u64::MAX {
+                None
             } else {
-                mix.push(Some(take_vec(&data, &mut pos)?));
+                let cmax = marker as usize;
+                let rows = take_usize(&data, &mut pos)?;
+                ensure!(
+                    cmax < LIM && rows < LIM,
+                    "implausible mixing shape M={rows} cmax={cmax}"
+                );
+                let mut counts = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    let c = take_usize(&data, &mut pos)?;
+                    ensure!(
+                        0 < c && c <= cmax,
+                        "mix child count {c} outside 1..={cmax}"
+                    );
+                    counts.push(c);
+                }
+                Some((cmax, counts))
+            };
+            specs.push(LevelSpec { slots, ko, mix });
+        }
+        // pre-validate the total size in u128 so the usize offset
+        // arithmetic inside from_specs cannot overflow (each span is a
+        // product of factors >= 1, so prefix products are bounded by the
+        // verified total)
+        let mut total_scalars: u128 = num_vars as u128
+            * k as u128
+            * num_replica as u128
+            * family.stat_dim() as u128;
+        for sp in &specs {
+            total_scalars += sp.slots as u128 * sp.ko as u128 * (k as u128) * (k as u128);
+            if let Some((cmax, counts)) = &sp.mix {
+                total_scalars += counts.len() as u128 * *cmax as u128;
             }
+        }
+        ensure!(
+            total_scalars < 1 << 40,
+            "implausible checkpoint size: {total_scalars} scalars"
+        );
+        let layout = ParamLayout::from_specs(num_vars, k, num_replica, family, &specs);
+        let n = take_usize(&data, &mut pos)?;
+        ensure!(
+            n == layout.total,
+            "checkpoint data length {n} does not match its layout ({})",
+            layout.total
+        );
+        ensure!(
+            pos + 4 * n <= data.len(),
+            "truncated checkpoint tensor data"
+        );
+        let mut values = Vec::with_capacity(n);
+        for i in 0..n {
+            values.push(f32::from_le_bytes(
+                data[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
         }
         Ok(Self {
-            num_vars,
-            k,
-            num_replica,
-            family,
-            theta,
-            w,
-            mix,
+            layout,
+            data: values,
         })
     }
 }
 
+const MAGIC: &[u8; 8] = b"EINET002";
+
+fn family_tag(family: LeafFamily) -> (usize, usize) {
+    match family {
+        LeafFamily::Bernoulli => (0, 0),
+        LeafFamily::Gaussian { channels } => (1, channels),
+        LeafFamily::Categorical { cats } => (2, cats),
+        LeafFamily::Binomial { trials } => (3, trials as usize),
+    }
+}
+
+fn family_from_tag(tag: u64, arg: u64) -> Result<LeafFamily> {
+    ensure!(arg < 1 << 20, "implausible family parameter {arg}");
+    Ok(match tag {
+        0 => LeafFamily::Bernoulli,
+        1 => {
+            ensure!(arg >= 1, "gaussian family needs >= 1 channel");
+            LeafFamily::Gaussian {
+                channels: arg as usize,
+            }
+        }
+        2 => {
+            ensure!(arg >= 2, "categorical family needs >= 2 categories");
+            LeafFamily::Categorical {
+                cats: arg as usize,
+            }
+        }
+        3 => LeafFamily::Binomial { trials: arg as u32 },
+        other => bail!("unknown leaf-family tag {other} in checkpoint"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// EmStats: flat same-layout E-step accumulator
+// ---------------------------------------------------------------------------
+
 /// Accumulated E-step statistics (Eq. 6/7): sufficient for the M-step.
+///
+/// `grad` mirrors the [`ParamArena`] layout scalar-for-scalar: the w/mix
+/// spans hold `d(sum_b log P)/d(linear weight)`, and the theta span is
+/// reused for `sum_b p_L · T(x)` (layout [D, K, R, S] — identical to
+/// theta's). `sum_p` is the posterior-mass accumulator [D, K, R].
 #[derive(Clone, Debug)]
 pub struct EmStats {
-    /// d(sum_b log P)/dw per level, same layout as `EinetParams::w`
-    pub grad_w: Vec<Vec<f32>>,
-    /// d(sum_b log P)/dmix per level
-    pub grad_mix: Vec<Option<Vec<f32>>>,
-    /// sum_b p_L per (d, k, r) — layout [D, K, R]
+    pub layout: ParamLayout,
+    /// flat gradient/statistics buffer, `layout.total` long
+    pub grad: Vec<f32>,
+    /// sum_b p_L per (d, k, r)
     pub sum_p: Vec<f32>,
-    /// sum_b p_L * T(x) per (d, k, r, s) — layout [D, K, R, S]
-    pub sum_pt: Vec<f32>,
     /// number of samples accumulated
     pub count: usize,
     /// sum of log-likelihoods over accumulated samples
@@ -254,122 +536,363 @@ pub struct EmStats {
 }
 
 impl EmStats {
-    pub fn zeros_like(params: &EinetParams) -> Self {
+    pub fn zeros(layout: &ParamLayout) -> Self {
         Self {
-            grad_w: params.w.iter().map(|w| vec![0.0; w.len()]).collect(),
-            grad_mix: params
-                .mix
-                .iter()
-                .map(|m| m.as_ref().map(|v| vec![0.0; v.len()]))
-                .collect(),
-            sum_p: vec![0.0; params.num_vars * params.k * params.num_replica],
-            sum_pt: vec![
-                0.0;
-                params.num_vars
-                    * params.k
-                    * params.num_replica
-                    * params.family.stat_dim()
-            ],
+            grad: vec![0.0; layout.total],
+            sum_p: vec![0.0; layout.num_vars * layout.k * layout.num_replica],
             count: 0,
             loglik: 0.0,
+            layout: layout.clone(),
         }
     }
 
+    pub fn zeros_like(params: &ParamArena) -> Self {
+        Self::zeros(&params.layout)
+    }
+
     pub fn reset(&mut self) {
-        for g in &mut self.grad_w {
-            g.fill(0.0);
-        }
-        for g in self.grad_mix.iter_mut().flatten() {
-            g.fill(0.0);
-        }
+        self.grad.fill(0.0);
         self.sum_p.fill(0.0);
-        self.sum_pt.fill(0.0);
         self.count = 0;
         self.loglik = 0.0;
     }
 
-    /// Merge statistics from another accumulator (parameter-server reduce).
+    /// Merge statistics from another accumulator (parameter-server
+    /// reduce): one flat element-wise add.
     pub fn merge(&mut self, other: &EmStats) {
-        for (a, b) in self.grad_w.iter_mut().zip(&other.grad_w) {
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
+        debug_assert_eq!(self.grad.len(), other.grad.len());
+        for (a, b) in self.grad.iter_mut().zip(&other.grad) {
+            *a += b;
         }
-        for (a, b) in self.grad_mix.iter_mut().zip(&other.grad_mix) {
-            if let (Some(x), Some(y)) = (a.as_mut(), b.as_ref()) {
-                for (u, v) in x.iter_mut().zip(y) {
-                    *u += v;
-                }
-            }
-        }
-        for (x, y) in self.sum_p.iter_mut().zip(&other.sum_p) {
-            *x += y;
-        }
-        for (x, y) in self.sum_pt.iter_mut().zip(&other.sum_pt) {
-            *x += y;
+        for (a, b) in self.sum_p.iter_mut().zip(&other.sum_p) {
+            *a += b;
         }
         self.count += other.count;
         self.loglik += other.loglik;
+    }
+
+    /// sum_b p_L T(x) per component, layout [D, K, R, S] (the theta span).
+    pub fn sum_pt(&self) -> &[f32] {
+        &self.grad[..self.layout.theta_len]
+    }
+
+    pub fn sum_pt_mut(&mut self) -> &mut [f32] {
+        &mut self.grad[..self.layout.theta_len]
+    }
+
+    /// Level `i`'s einsum-weight gradient span.
+    pub fn grad_w(&self, i: usize) -> &[f32] {
+        let lv = &self.layout.levels[i];
+        &self.grad[lv.w_off..lv.w_off + lv.w_len]
+    }
+
+    pub fn grad_w_mut(&mut self, i: usize) -> &mut [f32] {
+        let (off, len) = {
+            let lv = &self.layout.levels[i];
+            (lv.w_off, lv.w_len)
+        };
+        &mut self.grad[off..off + len]
+    }
+
+    /// Level `i`'s mixing-weight gradient span, if mixing exists.
+    pub fn grad_mix(&self, i: usize) -> Option<&[f32]> {
+        self.layout.levels[i]
+            .mix
+            .as_ref()
+            .map(|m| &self.grad[m.off..m.off + m.len])
+    }
+
+    pub fn grad_mix_mut(&mut self, i: usize) -> Option<&mut [f32]> {
+        let (off, len) = match &self.layout.levels[i].mix {
+            Some(m) => (m.off, m.len),
+            None => return None,
+        };
+        Some(&mut self.grad[off..off + len])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Engine trait
+// ---------------------------------------------------------------------------
+
+/// Sampling behaviour for the top-down pass.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum DecodeMode {
+    /// ancestral sampling (draw latent branches and leaf values)
+    Sample,
+    /// greedy: argmax latent branches, leaf means (approximate MPE)
+    Argmax,
+}
+
+/// A compiled execution engine over a [`LayeredPlan`].
+///
+/// Engines are constructed once per (plan, batch capacity); all buffers
+/// are reused across calls, so the training hot loop is allocation-free.
+/// `backward` and `decode` read the activations left by the most recent
+/// `forward` and must be called with the same batch.
+pub trait Engine {
+    /// Compile the plan into this engine's executable form.
+    fn build(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self
+    where
+        Self: Sized;
+
+    /// The source plan this engine was compiled from.
+    fn plan(&self) -> &LayeredPlan;
+
+    /// The leaf family the engine evaluates.
+    fn family(&self) -> LeafFamily;
+
+    /// Maximum batch size per forward call.
+    fn batch_capacity(&self) -> usize;
+
+    /// Evaluate `log P(x)` for a batch under a marginalization mask
+    /// (`mask[d] == 0.0` integrates variable d out; Eq. 1's inner sums).
+    /// `x` is `[bn, D, obs_dim]` row-major; `logp` receives `bn` values.
+    fn forward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+    );
+
+    /// Accumulate the EM expected statistics (Eq. 6) for the batch last
+    /// passed to `forward` — same `x`/`mask`/batch size, with activations
+    /// still in place.
+    fn backward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+    );
+
+    /// Top-down ancestral decode for sample `b` of the last forward pass:
+    /// writes unobserved variables (mask 0) of `out` (`[D, obs_dim]`,
+    /// pre-filled with evidence) from the exact conditional.
+    fn decode(
+        &self,
+        params: &ParamArena,
+        b: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    );
+
+    /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison.
+    fn memory_footprint(&self, params: &ParamArena) -> MemFootprint;
+
+    /// Unconditional samples: one fully-marginalized forward pass, then
+    /// `n` top-down decodes.
+    fn sample(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let d = self.plan().graph.num_vars;
+        let od = self.family().obs_dim();
+        let mask = vec![0.0f32; d];
+        let x = vec![0.0f32; d * od];
+        let mut logp = vec![0.0f32; 1];
+        self.forward(params, &x, &mask, &mut logp);
+        let mut out = vec![0.0f32; n * d * od];
+        for s in 0..n {
+            self.decode(
+                params,
+                0,
+                &mask,
+                mode,
+                rng,
+                &mut out[s * d * od..(s + 1) * d * od],
+            );
+        }
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::structure::random_binary_trees;
+    use crate::structure::{poon_domingos, random_binary_trees, PdAxes};
 
     fn plan() -> LayeredPlan {
         LayeredPlan::compile(random_binary_trees(8, 2, 3, 0), 4)
     }
 
+    fn pd_plan() -> LayeredPlan {
+        LayeredPlan::compile(poon_domingos(2, 3, 1, PdAxes::Both), 3)
+    }
+
     #[test]
     fn init_is_normalized() {
         let p = plan();
-        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 0);
-        params.validate(&p).unwrap();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 0);
+        params.validate().unwrap();
     }
 
     #[test]
-    fn checkpoint_round_trip() {
-        let p = plan();
-        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 1);
-        let dir = std::env::temp_dir().join("einet_test_ckpt.bin");
-        params.save(&dir).unwrap();
-        let loaded = EinetParams::load(&dir, LeafFamily::Bernoulli).unwrap();
-        assert_eq!(params.theta, loaded.theta);
-        assert_eq!(params.w, loaded.w);
-        assert_eq!(params.mix, loaded.mix);
-        let _ = std::fs::remove_file(dir);
+    fn layout_spans_are_contiguous_and_disjoint() {
+        let p = pd_plan();
+        let layout = ParamLayout::from_plan(&p, LeafFamily::Gaussian { channels: 2 });
+        let mut cursor = layout.theta_len;
+        for lv in &layout.levels {
+            assert_eq!(lv.w_off, cursor);
+            cursor += lv.w_len;
+            if let Some(m) = &lv.mix {
+                assert_eq!(m.off, cursor);
+                assert_eq!(m.len, m.child_counts.len() * m.cmax);
+                cursor += m.len;
+            }
+        }
+        assert_eq!(cursor, layout.total);
     }
 
     #[test]
-    fn stats_merge_adds() {
+    fn checkpoint_round_trip_bit_exact() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 1);
+        let path = std::env::temp_dir().join("einet_test_ckpt_rt.bin");
+        params.save(&path).unwrap();
+        let loaded = ParamArena::load(&path).unwrap();
+        assert_eq!(params.layout, loaded.layout);
+        assert_eq!(params.data, loaded.data);
+        loaded.validate().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn checkpoint_preserves_family_tag() {
+        for family in [
+            LeafFamily::Gaussian { channels: 3 },
+            LeafFamily::Categorical { cats: 5 },
+            LeafFamily::Binomial { trials: 7 },
+        ] {
+            let p = plan();
+            let params = ParamArena::init(&p, family, 2);
+            let path = std::env::temp_dir().join(format!(
+                "einet_test_ckpt_fam_{}.bin",
+                family_tag(family).0
+            ));
+            params.save(&path).unwrap();
+            let loaded = ParamArena::load(&path).unwrap();
+            assert_eq!(loaded.family(), family);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn truncated_checkpoint_errors_instead_of_panicking() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 3);
+        let full_path = std::env::temp_dir().join("einet_test_ckpt_full.bin");
+        params.save(&full_path).unwrap();
+        let full = std::fs::read(&full_path).unwrap();
+        let path = std::env::temp_dir().join("einet_test_ckpt_trunc.bin");
+        // cut at many points: inside the magic, the header, the level
+        // table (the old mix-marker crash site), and the tensor data
+        let cuts = [
+            3usize,
+            9,
+            40,
+            64,
+            full.len() / 2,
+            full.len() - 5,
+            full.len() - 1,
+        ];
+        for &cut in cuts.iter().filter(|&&c| c < full.len()) {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(
+                ParamArena::load(&path).is_err(),
+                "truncation at {cut} did not error"
+            );
+        }
+        let _ = std::fs::remove_file(full_path);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupted_magic_and_family_are_rejected() {
         let p = plan();
-        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 2);
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 4);
+        let path = std::env::temp_dir().join("einet_test_ckpt_bad.bin");
+        params.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ParamArena::load(&path).is_err(), "bad magic accepted");
+        bytes[0] = b'E';
+        bytes[8] = 200; // family tag byte -> unknown family
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ParamArena::load(&path).is_err(), "bad family tag accepted");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn legacy_checkpoint_reports_clear_error() {
+        let path = std::env::temp_dir().join("einet_test_ckpt_v1.bin");
+        std::fs::write(&path, b"EINET001trailing-bytes").unwrap();
+        let err = ParamArena::load(&path).unwrap_err().to_string();
+        assert!(err.contains("EINET001"), "unhelpful legacy error: {err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stats_merge_is_flat_elementwise_add() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 2);
         let mut a = EmStats::zeros_like(&params);
         let mut b = EmStats::zeros_like(&params);
         a.sum_p[0] = 1.0;
         b.sum_p[0] = 2.0;
+        a.grad[0] = 0.5; // theta span (sum_pt)
+        b.grad[params.layout.levels[0].w_off] = 1.5; // a w span entry
         a.count = 3;
         b.count = 4;
         b.loglik = -5.0;
         a.merge(&b);
         assert_eq!(a.sum_p[0], 3.0);
+        assert_eq!(a.sum_pt()[0], 0.5);
+        assert_eq!(a.grad_w(0)[0], 1.5);
         assert_eq!(a.count, 7);
         assert_eq!(a.loglik, -5.0);
     }
 
     #[test]
+    fn stats_accessors_alias_the_flat_buffer() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 5);
+        let mut st = EmStats::zeros_like(&params);
+        let n_levels = st.layout.levels.len();
+        for i in 0..n_levels {
+            st.grad_w_mut(i)[0] = (i + 1) as f32;
+            if let Some(gm) = st.grad_mix_mut(i) {
+                gm[0] = 100.0 + i as f32;
+            }
+        }
+        for i in 0..n_levels {
+            let off = st.layout.levels[i].w_off;
+            assert_eq!(st.grad[off], (i + 1) as f32);
+            if let Some(m) = &st.layout.levels[i].mix {
+                assert_eq!(st.grad[m.off], 100.0 + i as f32);
+            }
+        }
+    }
+
+    #[test]
     fn num_params_counts_everything() {
         let p = plan();
-        let params = EinetParams::init(&p, LeafFamily::Bernoulli, 3);
-        let expect = params.theta.len()
-            + params.w.iter().map(Vec::len).sum::<usize>()
-            + params
-                .mix
-                .iter()
-                .map(|m| m.as_ref().map_or(0, Vec::len))
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 3);
+        let expect = params.theta().len()
+            + (0..params.layout.levels.len())
+                .map(|i| {
+                    params.w(i).len() + params.mix(i).map_or(0, <[f32]>::len)
+                })
                 .sum::<usize>();
         assert_eq!(params.num_params(), expect);
+        assert_eq!(params.num_params(), params.data.len());
     }
 }

@@ -1,4 +1,5 @@
-//! The baseline engine: LibSPN/SPFlow-style node-by-node evaluation.
+//! The baseline engine: LibSPN/SPFlow-style node-by-node evaluation over
+//! the same flat [`ExecPlan`] IR as the dense engine.
 //!
 //! This reproduces the "indirect implementation" the paper compares
 //! against (Section 3.2): the outer product becomes an explicit
@@ -6,484 +7,492 @@
 //! partition), the weighted sum becomes a broadcast of `log W` plus a
 //! log-sum-exp — i.e. `K^3` exp-operations per vectorized sum node and
 //! `K^2` extra storage per product node, versus the dense engine's `K^3`
-//! multiply-adds, `2K` exps and zero product storage.
+//! multiply-adds, `2K` exps and zero product storage. The baseline also
+//! keeps a full log-domain copy of the weight arena, refreshed every
+//! forward pass — more standing memory the dense layout does not pay.
 //!
-//! Numerically the two engines agree (cross-checked in tests); they differ
-//! exactly in the layout/speed/memory dimensions that Fig. 3 and Fig. 6
-//! measure.
+//! Numerically the two engines agree (cross-checked in tests and in
+//! `tests/engine_parity.rs`); they differ exactly in the layout/speed/
+//! memory dimensions that Fig. 3 and Fig. 6 measure. Because both engines
+//! execute the same [`ExecPlan`] and leave identical activations, the
+//! shared top-down decode works here too.
 
-use crate::layers::{LayeredPlan, RegionSlot};
+use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
+use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
-use super::{EinetParams, EmStats};
+use super::exec::{self, ExecPlan, Step};
+use super::{DecodeMode, EmStats, Engine, ParamArena};
 
-/// Node-by-node baseline engine over the same [`LayeredPlan`].
+/// Node-by-node baseline engine over the same [`ExecPlan`].
 pub struct SparseEngine {
-    pub plan: LayeredPlan,
-    pub family: LeafFamily,
-    batch_cap: usize,
-    region_off: Vec<usize>,
-    region_width: Vec<usize>,
+    exec: ExecPlan,
     arena: Vec<f32>,
+    scratch: Vec<f32>,
     /// explicit product nodes: per partition a [B, K*K] block
     prod_off: Vec<usize>,
     prod_arena: Vec<f32>,
-    /// cached log-weights (the baseline keeps weights in the log domain)
-    logw: Vec<Vec<f32>>,
-    logmix: Vec<Option<Vec<f32>>>,
+    /// cached log-domain weights: the arena's w/mix spans, shifted down
+    /// by theta_len (index with `arena_offset - layout.theta_len`)
+    log_params: Vec<f32>,
     grad_arena: Vec<f32>,
+    grad_scratch: Vec<f32>,
     grad_prod: Vec<f32>,
     leaf_const: Vec<f32>,
 }
 
 impl SparseEngine {
     pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
-        let k = plan.k;
-        let n_regions = plan.graph.regions.len();
-        let mut region_off = vec![usize::MAX; n_regions];
-        let mut region_width = vec![k; n_regions];
-        region_width[plan.graph.root] =
-            plan.levels.last().map(|lv| lv.einsum.ko).unwrap_or(k);
-        let mut off = 0usize;
-        for r in &plan.graph.regions {
-            region_off[r.id] = off;
-            off += batch_cap * region_width[r.id];
-        }
-        let arena_len = off;
-        let n_parts = plan.graph.partitions.len();
+        let exec = ExecPlan::lower(plan, family, batch_cap);
+        let k = exec.k;
+        let n_parts = exec.plan.graph.partitions.len();
         let mut prod_off = vec![usize::MAX; n_parts];
         let mut poff = 0usize;
-        for p in 0..n_parts {
-            prod_off[p] = poff;
+        for p in prod_off.iter_mut() {
+            *p = poff;
             poff += batch_cap * k * k;
         }
         Self {
-            family,
-            batch_cap,
-            region_off,
-            region_width,
-            arena: vec![0.0; arena_len],
+            arena: vec![0.0; exec.arena_len],
+            scratch: vec![0.0; exec.scratch_len],
             prod_off,
             prod_arena: vec![0.0; poff],
-            logw: Vec::new(),
-            logmix: Vec::new(),
+            log_params: vec![0.0; exec.layout.total - exec.layout.theta_len],
             grad_arena: Vec::new(),
+            grad_scratch: Vec::new(),
             grad_prod: Vec::new(),
             leaf_const: Vec::new(),
-            plan,
+            exec,
         }
     }
 
+    pub fn plan(&self) -> &LayeredPlan {
+        &self.exec.plan
+    }
+
+    pub fn family(&self) -> LeafFamily {
+        self.exec.family
+    }
+
     pub fn batch_capacity(&self) -> usize {
-        self.batch_cap
+        self.exec.batch_cap
     }
 
     /// Buffer accounting: note the `prod_arena` and log-weight cache terms
     /// that the dense layout does not pay.
-    pub fn memory_footprint(&self, params: &EinetParams) -> MemFootprint {
-        let logw_bytes: usize = self.logw.iter().map(|v| 4 * v.len()).sum::<usize>()
-            + self
-                .logmix
-                .iter()
-                .map(|m| m.as_ref().map_or(0, |v| 4 * v.len()))
-                .sum::<usize>();
+    pub fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
+        // the log-domain weight cache is standing memory the dense
+        // layout does not pay
+        let logw_bytes = 4 * self.log_params.len();
         MemFootprint {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
-            scratch: 4 * self.prod_arena.len() + logw_bytes,
+            scratch: 4 * (self.prod_arena.len() + self.scratch.len()) + logw_bytes,
         }
     }
 
-    fn refresh_log_weights(&mut self, params: &EinetParams) {
-        self.logw = params
-            .w
-            .iter()
-            .map(|wl| wl.iter().map(|&v| v.max(1e-30).ln()).collect())
-            .collect();
-        self.logmix = params
-            .mix
-            .iter()
-            .map(|m| {
-                m.as_ref()
-                    .map(|v| v.iter().map(|&x| x.max(1e-30).ln()).collect())
-            })
-            .collect();
+    /// Refresh the log-domain weight cache: one pass over the contiguous
+    /// non-theta spans of the arena.
+    fn refresh_log_weights(&mut self, params: &ParamArena) {
+        let lo = self.exec.layout.theta_len;
+        for (dst, &src) in self.log_params.iter_mut().zip(&params.data[lo..]) {
+            *dst = src.max(1e-30).ln();
+        }
     }
 
-    /// Evaluate `log P(x)` for a batch (same contract as the dense engine).
+    // ------------------------------------------------------------------
+    // forward
+    // ------------------------------------------------------------------
+
+    /// See [`Engine::forward`] (same contract as the dense engine).
     pub fn forward(
         &mut self,
-        params: &EinetParams,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         logp: &mut [f32],
     ) {
         let bn = logp.len();
-        assert!(bn <= self.batch_cap);
+        assert!(bn <= self.exec.batch_cap, "batch exceeds engine capacity");
+        let d_total = self.exec.plan.graph.num_vars;
+        let od = self.exec.family.obs_dim();
+        assert_eq!(x.len(), bn * d_total * od);
+        assert_eq!(mask.len(), d_total);
         self.refresh_log_weights(params);
-        self.forward_leaves(params, x, mask, bn);
-        for i in 0..self.plan.levels.len() {
-            self.forward_level(i, bn);
+        exec::refresh_leaf_const(&self.exec, params, &mut self.leaf_const);
+        for si in 0..self.exec.steps.len() {
+            let step = self.exec.steps[si];
+            match step {
+                Step::Leaf { rid, out } => exec::leaf_forward(
+                    &self.exec,
+                    params,
+                    &self.leaf_const,
+                    rid,
+                    out,
+                    x,
+                    mask,
+                    bn,
+                    &mut self.arena,
+                ),
+                Step::Einsum {
+                    pid,
+                    left,
+                    right,
+                    ko,
+                    w,
+                    dest,
+                    to_scratch,
+                    ..
+                } => self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn),
+                Step::Mix {
+                    out,
+                    ko,
+                    children,
+                    child,
+                    child_stride,
+                    w,
+                    ..
+                } => self.fwd_mix(out, ko, children, child, child_stride, w, bn),
+            }
         }
-        let root = self.plan.graph.root;
-        let rw = self.region_width[root];
         for (b, lp) in logp.iter_mut().enumerate() {
-            *lp = self.arena[self.region_off[root] + b * rw];
+            *lp = self.arena[self.exec.root_row(b)];
         }
     }
 
-    fn forward_leaves(&mut self, params: &EinetParams, x: &[f32], mask: &[f32], bn: usize) {
-        // identical to the dense engine's leaf layer (with the same
-        // precomputed log-normalizer fast path) — the engines differ only
-        // in the sum/product layout, which is what Fig. 3/6 compare
-        let k = self.plan.k;
-        let od = self.family.obs_dim();
-        let d_total = self.plan.graph.num_vars;
-        let s_dim = self.family.stat_dim();
-        let r_total = params.num_replica;
-        let n_comp = d_total * k * r_total;
-        if self.leaf_const.len() != n_comp {
-            self.leaf_const.resize(n_comp, 0.0);
-        }
-        for (c, lc) in self.leaf_const.iter_mut().enumerate() {
-            *lc = self
-                .family
-                .log_norm_const(&params.theta[c * s_dim..(c + 1) * s_dim]);
-        }
-        for li in 0..self.plan.leaf_region_ids.len() {
-            let rid = self.plan.leaf_region_ids[li];
-            let rep = self.plan.graph.regions[rid].replica.unwrap();
-            let off = self.region_off[rid];
-            self.arena[off..off + bn * k].fill(0.0);
-            let scope = self.plan.graph.regions[rid].scope.to_vec();
-            for d in scope {
-                if mask[d] == 0.0 {
-                    continue;
-                }
-                let comp_base = (d * k) * r_total + rep;
-                for b in 0..bn {
-                    let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
-                    let row = &mut self.arena[off + b * k..off + b * k + k];
-                    for (kk, slot) in row.iter_mut().enumerate() {
-                        let c = comp_base + kk * r_total;
-                        let th = &params.theta[c * s_dim..(c + 1) * s_dim];
-                        *slot += self.family.log_prob_with_const(
-                            th,
-                            self.leaf_const[c],
-                            xv,
-                        );
-                    }
+    /// One einsum slot, baseline style: 1) explicitly materialize the
+    /// log-domain outer sum (the baseline's hallmark), 2) broadcast
+    /// `log W` and reduce with a K^2 log-sum-exp per output entry.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_einsum(
+        &mut self,
+        pid: usize,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+    ) {
+        let k = self.exec.k;
+        let kk2 = k * k;
+        let poff = self.prod_off[pid];
+        for b in 0..bn {
+            let lrow = left + b * k;
+            let rrow = right + b * k;
+            let prow = poff + b * kk2;
+            for ii in 0..k {
+                let ln_i = self.arena[lrow + ii];
+                for jj in 0..k {
+                    self.prod_arena[prow + ii * k + jj] =
+                        ln_i + self.arena[rrow + jj];
                 }
             }
         }
-    }
-
-    fn forward_level(&mut self, i: usize, bn: usize) {
-        let k = self.plan.k;
-        let lv = &self.plan.levels[i];
-        let ko = lv.einsum.ko;
-        // 1) explicit product materialization (the baseline's hallmark)
-        for l in 0..lv.einsum.len() {
-            let pid = lv.einsum.partition_ids[l];
-            let loff = self.region_off[lv.einsum.left[l]];
-            let roff = self.region_off[lv.einsum.right[l]];
-            let poff = self.prod_off[pid];
-            for b in 0..bn {
-                let lrow = loff + b * k;
-                let rrow = roff + b * k;
-                let prow = poff + b * k * k;
-                for ii in 0..k {
-                    let ln_i = self.arena[lrow + ii];
-                    for jj in 0..k {
-                        self.prod_arena[prow + ii * k + jj] =
-                            ln_i + self.arena[rrow + jj];
-                    }
+        let wl = w - self.exec.layout.theta_len;
+        for b in 0..bn {
+            let prow = poff + b * kk2;
+            for kout in 0..ko {
+                let wrow =
+                    &self.log_params[wl + kout * kk2..wl + (kout + 1) * kk2];
+                // log-sum-exp over K^2 entries
+                let mut m = f32::NEG_INFINITY;
+                for (idx, &wv) in wrow.iter().enumerate() {
+                    m = m.max(wv + self.prod_arena[prow + idx]);
                 }
-            }
-        }
-        // 2) per-sum-entry broadcast of log W + log-sum-exp (K^3 exps)
-        let mut mix_inputs: Vec<Vec<f32>> = Vec::new(); // per mixing child slot: [bn*ko]
-        let mut slot_mix_idx = vec![usize::MAX; lv.einsum.len()];
-        if let Some(m) = &lv.mixing {
-            let mut cursor = 0usize;
-            for ch in &m.child_slots {
-                for &s in ch {
-                    slot_mix_idx[s] = cursor;
-                    cursor += 1;
+                let mut s = 0.0f32;
+                for (idx, &wv) in wrow.iter().enumerate() {
+                    s += (wv + self.prod_arena[prow + idx] - m).exp();
                 }
-            }
-            mix_inputs = vec![vec![0.0f32; bn * ko]; cursor];
-        }
-        for l in 0..lv.einsum.len() {
-            let pid = lv.einsum.partition_ids[l];
-            let poff = self.prod_off[pid];
-            let wslot = &self.logw[i][l * ko * k * k..(l + 1) * ko * k * k];
-            // where does this slot's output go?
-            let dest_region = lv
-                .region_out
-                .iter()
-                .find_map(|&(rid, slot)| match slot {
-                    RegionSlot::Einsum(s) if s == l => Some(rid),
-                    _ => None,
-                });
-            for b in 0..bn {
-                let prow = poff + b * k * k;
-                for kout in 0..ko {
-                    let wrow = &wslot[kout * k * k..(kout + 1) * k * k];
-                    // log-sum-exp over K^2 entries
-                    let mut m = f32::NEG_INFINITY;
-                    for idx in 0..k * k {
-                        m = m.max(wrow[idx] + self.prod_arena[prow + idx]);
-                    }
-                    let mut s = 0.0f32;
-                    for idx in 0..k * k {
-                        s += (wrow[idx] + self.prod_arena[prow + idx] - m).exp();
-                    }
-                    let out = m + s.ln();
-                    match dest_region {
-                        Some(rid) => {
-                            self.arena[self.region_off[rid] + b * ko + kout] = out
-                        }
-                        None => mix_inputs[slot_mix_idx[l]][b * ko + kout] = out,
-                    }
-                }
-            }
-        }
-        // 3) mixing nodes: log-domain weighted log-sum-exp over children
-        if let Some(m) = &lv.mixing {
-            let lmix = self.logmix[i].as_ref().unwrap();
-            let mut cursor = 0usize;
-            for (j, ch) in m.child_slots.iter().enumerate() {
-                let rid = m.region_ids[j];
-                let wrow = &lmix[j * m.cmax..j * m.cmax + ch.len()];
-                let out_off = self.region_off[rid];
-                let first = cursor;
-                cursor += ch.len();
-                for b in 0..bn {
-                    for kk in 0..ko {
-                        let mut mx = f32::NEG_INFINITY;
-                        for c in 0..ch.len() {
-                            mx = mx.max(wrow[c] + mix_inputs[first + c][b * ko + kk]);
-                        }
-                        let mut s = 0.0f32;
-                        for c in 0..ch.len() {
-                            s += (wrow[c] + mix_inputs[first + c][b * ko + kk] - mx)
-                                .exp();
-                        }
-                        self.arena[out_off + b * ko + kk] = mx + s.ln();
-                    }
+                let out = m + s.ln();
+                let drow = dest + b * ko + kout;
+                if to_scratch {
+                    self.scratch[drow] = out;
+                } else {
+                    self.arena[drow] = out;
                 }
             }
         }
     }
 
-    /// Backward pass producing the same EM statistics as the dense engine,
-    /// in the baseline layout (explicit per-product gradient buffers).
-    /// Must follow a [`SparseEngine::forward`] call on the same batch.
+    /// Mixing node, baseline style: log-domain weighted log-sum-exp over
+    /// the stored child outputs.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_mix(
+        &mut self,
+        out: usize,
+        ko: usize,
+        children: usize,
+        child: usize,
+        stride: usize,
+        w: usize,
+        bn: usize,
+    ) {
+        let wl = w - self.exec.layout.theta_len;
+        for b in 0..bn {
+            for kk in 0..ko {
+                let mut m = f32::NEG_INFINITY;
+                for c in 0..children {
+                    m = m.max(
+                        self.log_params[wl + c]
+                            + self.scratch[child + c * stride + b * ko + kk],
+                    );
+                }
+                let mut s = 0.0f32;
+                for c in 0..children {
+                    s += (self.log_params[wl + c]
+                        + self.scratch[child + c * stride + b * ko + kk]
+                        - m)
+                        .exp();
+                }
+                self.arena[out + b * ko + kk] = m + s.ln();
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // backward (E-step statistics)
+    // ------------------------------------------------------------------
+
+    /// See [`Engine::backward`]: produces the same EM statistics as the
+    /// dense engine, in the baseline layout (explicit per-product gradient
+    /// buffers). Must follow a `forward` call on the same batch.
     pub fn backward(
         &mut self,
-        params: &EinetParams,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         bn: usize,
         stats: &mut EmStats,
     ) {
+        let _ = params; // weights are read from the log-domain cache
         if self.grad_arena.len() != self.arena.len() {
             self.grad_arena = vec![0.0; self.arena.len()];
+            self.grad_scratch = vec![0.0; self.scratch.len()];
             self.grad_prod = vec![0.0; self.prod_arena.len()];
         }
         self.grad_arena.fill(0.0);
+        self.grad_scratch.fill(0.0);
         self.grad_prod.fill(0.0);
-        let root = self.plan.graph.root;
-        let rw = self.region_width[root];
         for b in 0..bn {
-            self.grad_arena[self.region_off[root] + b * rw] = 1.0;
-            stats.loglik += self.arena[self.region_off[root] + b * rw] as f64;
+            let r = self.exec.root_row(b);
+            self.grad_arena[r] = 1.0;
+            stats.loglik += self.arena[r] as f64;
         }
         stats.count += bn;
 
-        // we must recompute the pre-mixing slot outputs in the backward
-        // sweep (the forward pass stores them only transiently), mirroring
-        // the recomputation overhead real sparse implementations pay.
-        let k = self.plan.k;
-        for i in (0..self.plan.levels.len()).rev() {
-            let lv = &self.plan.levels[i];
-            let ko = lv.einsum.ko;
-            // recompute mixing-child outputs if needed
-            let mut mix_inputs: Vec<Vec<f32>> = Vec::new();
-            let mut mix_grads: Vec<Vec<f32>> = Vec::new();
-            let mut slot_mix_idx = vec![usize::MAX; lv.einsum.len()];
-            if let Some(m) = &lv.mixing {
-                let mut cursor = 0usize;
-                for ch in &m.child_slots {
-                    for &s in ch {
-                        slot_mix_idx[s] = cursor;
-                        cursor += 1;
-                    }
-                }
-                mix_inputs = vec![vec![0.0f32; bn * ko]; cursor];
-                mix_grads = vec![vec![0.0f32; bn * ko]; cursor];
-                for l in 0..lv.einsum.len() {
-                    if slot_mix_idx[l] == usize::MAX {
-                        continue;
-                    }
-                    let pid = lv.einsum.partition_ids[l];
-                    let poff = self.prod_off[pid];
-                    let wslot = &self.logw[i][l * ko * k * k..(l + 1) * ko * k * k];
-                    for b in 0..bn {
-                        let prow = poff + b * k * k;
-                        for kout in 0..ko {
-                            let wrow = &wslot[kout * k * k..(kout + 1) * k * k];
-                            let mut mx = f32::NEG_INFINITY;
-                            for idx in 0..k * k {
-                                mx = mx.max(wrow[idx] + self.prod_arena[prow + idx]);
-                            }
-                            let mut s = 0.0f32;
-                            for idx in 0..k * k {
-                                s += (wrow[idx] + self.prod_arena[prow + idx] - mx)
-                                    .exp();
-                            }
-                            mix_inputs[slot_mix_idx[l]][b * ko + kout] = mx + s.ln();
-                        }
-                    }
-                }
-                // mixing backward
-                let lmix = self.logmix[i].as_ref().unwrap();
-                let gm = stats.grad_mix[i].as_mut().unwrap();
-                let mut cursor2 = 0usize;
-                for (j, ch) in m.child_slots.iter().enumerate() {
-                    let rid = m.region_ids[j];
-                    let wrow = &lmix[j * m.cmax..j * m.cmax + ch.len()];
-                    let out_off = self.region_off[rid];
-                    let first = cursor2;
-                    cursor2 += ch.len();
-                    for b in 0..bn {
-                        for kk in 0..ko {
-                            let g = self.grad_arena[out_off + b * ko + kk];
-                            if g == 0.0 {
-                                continue;
-                            }
-                            let logs = self.arena[out_off + b * ko + kk];
-                            for c in 0..ch.len() {
-                                let lc = mix_inputs[first + c][b * ko + kk];
-                                let ew = (lc - logs).exp();
-                                gm[j * m.cmax + c] += g * ew;
-                                mix_grads[first + c][b * ko + kk] +=
-                                    g * wrow[c].exp() * ew;
-                            }
-                        }
-                    }
-                }
+        // one suff-stats scratch for every Leaf step of this pass
+        let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
+        for si in (0..self.exec.steps.len()).rev() {
+            let step = self.exec.steps[si];
+            match step {
+                Step::Mix {
+                    out,
+                    ko,
+                    children,
+                    child,
+                    child_stride,
+                    w,
+                    ..
+                } => self.bwd_mix(out, ko, children, child, child_stride, w, bn, stats),
+                Step::Einsum {
+                    pid,
+                    left,
+                    right,
+                    ko,
+                    w,
+                    dest,
+                    to_scratch,
+                    ..
+                } => self.bwd_einsum(
+                    pid, left, right, ko, w, dest, to_scratch, bn, stats,
+                ),
+                Step::Leaf { rid, out } => exec::leaf_backward(
+                    &self.exec,
+                    rid,
+                    out,
+                    x,
+                    mask,
+                    bn,
+                    &self.grad_arena,
+                    &mut tbuf,
+                    stats,
+                ),
             }
-            // einsum slots backward
-            let gw = &mut stats.grad_w[i];
-            for l in 0..lv.einsum.len() {
-                let pid = lv.einsum.partition_ids[l];
-                let poff = self.prod_off[pid];
-                let wslot = &self.logw[i][l * ko * k * k..(l + 1) * ko * k * k];
-                let gslot = &mut gw[l * ko * k * k..(l + 1) * ko * k * k];
-                let dest_region = lv
-                    .region_out
-                    .iter()
-                    .find_map(|&(rid, slot)| match slot {
-                        RegionSlot::Einsum(s) if s == l => Some(rid),
-                        _ => None,
-                    });
-                for b in 0..bn {
-                    let prow = poff + b * k * k;
-                    for kout in 0..ko {
-                        let (g, logs) = match dest_region {
-                            Some(rid) => {
-                                let idx = self.region_off[rid] + b * ko + kout;
-                                (self.grad_arena[idx], self.arena[idx])
-                            }
-                            None => {
-                                let mi = slot_mix_idx[l];
-                                (
-                                    mix_grads[mi][b * ko + kout],
-                                    mix_inputs[mi][b * ko + kout],
-                                )
-                            }
-                        };
-                        if g == 0.0 {
-                            continue;
-                        }
-                        let wrow = &wslot[kout * k * k..(kout + 1) * k * k];
-                        let grow = &mut gslot[kout * k * k..(kout + 1) * k * k];
-                        for idx in 0..k * k {
-                            // d logS / d logProd = exp(logw + prod - logS)
-                            let e = (wrow[idx] + self.prod_arena[prow + idx] - logs)
-                                .exp();
-                            self.grad_prod[prow + idx] += g * e;
-                            // EM wants d logS / d (linear w) = exp(prod - logS)
-                            grow[idx] +=
-                                g * (self.prod_arena[prow + idx] - logs).exp();
-                        }
-                    }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_mix(
+        &mut self,
+        out: usize,
+        ko: usize,
+        children: usize,
+        child: usize,
+        stride: usize,
+        w: usize,
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        let wl = w - self.exec.layout.theta_len;
+        for b in 0..bn {
+            for kk in 0..ko {
+                let g = self.grad_arena[out + b * ko + kk];
+                if g == 0.0 {
+                    continue;
                 }
-                // product backward: distribute to the two children
-                let loff = self.region_off[lv.einsum.left[l]];
-                let roff = self.region_off[lv.einsum.right[l]];
-                for b in 0..bn {
-                    let prow = poff + b * k * k;
-                    let lrow = loff + b * k;
-                    let rrow = roff + b * k;
-                    for ii in 0..k {
-                        let mut acc = 0.0f32;
-                        for jj in 0..k {
-                            let gp = self.grad_prod[prow + ii * k + jj];
-                            acc += gp;
-                            self.grad_arena[rrow + jj] += gp;
-                        }
-                        self.grad_arena[lrow + ii] += acc;
-                    }
+                let logs = self.arena[out + b * ko + kk];
+                for c in 0..children {
+                    let idx = child + c * stride + b * ko + kk;
+                    let ew = (self.scratch[idx] - logs).exp();
+                    stats.grad[w + c] += g * ew;
+                    self.grad_scratch[idx] += g * self.log_params[wl + c].exp() * ew;
                 }
             }
         }
-        self.backward_leaves(params, x, mask, bn, stats);
     }
 
-    fn backward_leaves(
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_einsum(
         &mut self,
-        params: &EinetParams,
+        pid: usize,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        let k = self.exec.k;
+        let kk2 = k * k;
+        let poff = self.prod_off[pid];
+        let wl = w - self.exec.layout.theta_len;
+        for b in 0..bn {
+            let prow = poff + b * kk2;
+            for kout in 0..ko {
+                let drow = dest + b * ko + kout;
+                let (g, logs) = if to_scratch {
+                    (self.grad_scratch[drow], self.scratch[drow])
+                } else {
+                    (self.grad_arena[drow], self.arena[drow])
+                };
+                if g == 0.0 {
+                    continue;
+                }
+                let gslot =
+                    &mut stats.grad[w + kout * kk2..w + (kout + 1) * kk2];
+                let wrow = &self.log_params
+                    [wl + kout * kk2..wl + (kout + 1) * kk2];
+                for (idx, (&wv, gv)) in
+                    wrow.iter().zip(gslot.iter_mut()).enumerate()
+                {
+                    // d logS / d logProd = exp(logw + prod - logS)
+                    let e = (wv + self.prod_arena[prow + idx] - logs).exp();
+                    self.grad_prod[prow + idx] += g * e;
+                    // EM wants d logS / d (linear w) = exp(prod - logS)
+                    *gv += g * (self.prod_arena[prow + idx] - logs).exp();
+                }
+            }
+        }
+        // product backward: distribute to the two children
+        for b in 0..bn {
+            let prow = poff + b * kk2;
+            let lrow = left + b * k;
+            let rrow = right + b * k;
+            for ii in 0..k {
+                let mut acc = 0.0f32;
+                for jj in 0..k {
+                    let gp = self.grad_prod[prow + ii * k + jj];
+                    acc += gp;
+                    self.grad_arena[rrow + jj] += gp;
+                }
+                self.grad_arena[lrow + ii] += acc;
+            }
+        }
+    }
+
+    /// See [`Engine::decode`]: shared with the dense engine — the forward
+    /// pass leaves identical activations, so posterior-weighted top-down
+    /// decoding is layout-independent.
+    pub fn decode(
+        &self,
+        params: &ParamArena,
+        b: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        exec::decode(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            b,
+            mask,
+            mode,
+            rng,
+            out,
+        );
+    }
+}
+
+impl Engine for SparseEngine {
+    fn build(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
+        SparseEngine::new(plan, family, batch_cap)
+    }
+
+    fn plan(&self) -> &LayeredPlan {
+        SparseEngine::plan(self)
+    }
+
+    fn family(&self) -> LeafFamily {
+        SparseEngine::family(self)
+    }
+
+    fn batch_capacity(&self) -> usize {
+        SparseEngine::batch_capacity(self)
+    }
+
+    fn forward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+    ) {
+        SparseEngine::forward(self, params, x, mask, logp)
+    }
+
+    fn backward(
+        &mut self,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         bn: usize,
         stats: &mut EmStats,
     ) {
-        let k = self.plan.k;
-        let od = self.family.obs_dim();
-        let s_dim = self.family.stat_dim();
-        let d_total = self.plan.graph.num_vars;
-        let r_total = params.num_replica;
-        let mut tbuf = vec![0.0f32; s_dim];
-        for li in 0..self.plan.leaf_region_ids.len() {
-            let rid = self.plan.leaf_region_ids[li];
-            let rep = self.plan.graph.regions[rid].replica.unwrap();
-            let off = self.region_off[rid];
-            let scope = self.plan.graph.regions[rid].scope.to_vec();
-            for d in scope {
-                if mask[d] == 0.0 {
-                    continue;
-                }
-                for b in 0..bn {
-                    let xv = &x[(b * d_total + d) * od..(b * d_total + d) * od + od];
-                    self.family.suff_stats(xv, &mut tbuf);
-                    for kk in 0..k {
-                        let p = self.grad_arena[off + b * k + kk];
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let base = (d * k + kk) * r_total + rep;
-                        stats.sum_p[base] += p;
-                        for (s_i, t) in tbuf.iter().enumerate() {
-                            stats.sum_pt[base * s_dim + s_i] += p * t;
-                        }
-                    }
-                }
-            }
-        }
+        SparseEngine::backward(self, params, x, mask, bn, stats)
+    }
+
+    fn decode(
+        &self,
+        params: &ParamArena,
+        b: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        SparseEngine::decode(self, params, b, mask, mode, rng, out)
+    }
+
+    fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
+        SparseEngine::memory_footprint(self, params)
     }
 }
 
@@ -492,7 +501,6 @@ mod tests {
     use super::*;
     use crate::engine::dense::DenseEngine;
     use crate::structure::{poon_domingos, random_binary_trees, PdAxes};
-    use crate::util::rng::Rng;
 
     fn random_x(bn: usize, nv: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);
@@ -504,7 +512,7 @@ mod tests {
     #[test]
     fn agrees_with_dense_engine_rat() {
         let plan = LayeredPlan::compile(random_binary_trees(10, 3, 3, 0), 4);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 0);
         let mut dense = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 16);
         let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 16);
         let x = random_x(16, 10, 1);
@@ -521,7 +529,7 @@ mod tests {
     #[test]
     fn agrees_with_dense_engine_pd_mixing() {
         let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 3);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 2);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 2);
         let mut dense = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 8);
         let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 8);
         let x = random_x(8, 8, 3);
@@ -538,7 +546,7 @@ mod tests {
     #[test]
     fn backward_stats_agree_with_dense() {
         let plan = LayeredPlan::compile(poon_domingos(2, 3, 1, PdAxes::Both), 3);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 4);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 4);
         let mut dense = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 8);
         let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 8);
         let bn = 8;
@@ -551,10 +559,12 @@ mod tests {
         sparse.forward(&params, &x, &mask, &mut lp);
         let mut st_s = EmStats::zeros_like(&params);
         sparse.backward(&params, &x, &mask, bn, &mut st_s);
-        for (gw_d, gw_s) in st_d.grad_w.iter().zip(&st_s.grad_w) {
-            for (a, b) in gw_d.iter().zip(gw_s) {
-                assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()), "{a} vs {b}");
-            }
+        // the flat gradient buffers must agree scalar-for-scalar
+        for (i, (a, b)) in st_d.grad.iter().zip(&st_s.grad).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 * (1.0 + a.abs()),
+                "grad[{i}]: {a} vs {b}"
+            );
         }
         for (a, b) in st_d.sum_p.iter().zip(&st_s.sum_p) {
             assert!((a - b).abs() < 2e-3 * (1.0 + a.abs()), "sum_p {a} vs {b}");
@@ -566,7 +576,7 @@ mod tests {
     fn sparse_memory_exceeds_dense() {
         // the defining difference: explicit product storage
         let plan = LayeredPlan::compile(random_binary_trees(32, 4, 4, 6), 8);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 6);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 6);
         let dense = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 32);
         let sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 32);
         let md = dense.memory_footprint(&params);
@@ -582,7 +592,7 @@ mod tests {
     #[test]
     fn marginalization_agrees_with_dense() {
         let plan = LayeredPlan::compile(random_binary_trees(8, 2, 2, 7), 3);
-        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 7);
         let mut dense = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 4);
         let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 4);
         let x = random_x(4, 8, 8);
@@ -593,6 +603,47 @@ mod tests {
         sparse.forward(&params, &x, &mask, &mut lp_s);
         for (a, b) in lp_d.iter().zip(&lp_s) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_decode_matches_density() {
+        // the shared decode path over sparse activations: empirical sample
+        // frequencies track the exact density
+        let plan = LayeredPlan::compile(random_binary_trees(3, 2, 2, 2), 2);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 7);
+        let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 8);
+        let nv = 3;
+        let mut x = vec![0.0f32; 8 * nv];
+        for i in 0..8 {
+            for d in 0..nv {
+                x[i * nv + d] = ((i >> d) & 1) as f32;
+            }
+        }
+        let mask = vec![1.0f32; nv];
+        let mut logp = vec![0.0f32; 8];
+        sparse.forward(&params, &x, &mask, &mut logp);
+        let probs: Vec<f64> = logp.iter().map(|&l| (l as f64).exp()).collect();
+        let mut rng = Rng::new(2);
+        let n = 40_000;
+        let samples = Engine::sample(&mut sparse, &params, n, &mut rng, DecodeMode::Sample);
+        let mut counts = [0usize; 8];
+        for s in 0..n {
+            let mut idx = 0usize;
+            for d in 0..nv {
+                if samples[s * nv + d] > 0.5 {
+                    idx |= 1 << d;
+                }
+            }
+            counts[idx] += 1;
+        }
+        for i in 0..8 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - probs[i]).abs() < 0.02,
+                "state {i}: emp {emp} vs true {}",
+                probs[i]
+            );
         }
     }
 }

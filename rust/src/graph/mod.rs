@@ -10,7 +10,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{bail, ensure, Result};
+use crate::util::error::Result;
+use crate::{bail, ensure};
 
 use crate::util::bitset::BitSet;
 

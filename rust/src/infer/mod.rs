@@ -4,9 +4,11 @@
 //! size, by decomposability: marginals are mask-forward passes,
 //! conditionals are ratios of two marginals, and conditional *sampling*
 //! (inpainting, Fig. 4c/f) is a posterior-weighted top-down decode.
+//!
+//! All routines are generic over `E:`[`Engine`] — the dense layout, the
+//! sparse baseline, and future backends answer queries identically.
 
-use crate::engine::dense::{DecodeMode, DenseEngine};
-use crate::engine::EinetParams;
+use crate::engine::{DecodeMode, EinetParams, Engine};
 use crate::util::rng::Rng;
 
 /// log p(x_q | x_e) = log p(x_q, x_e) - log p(x_e) (Eq. 1).
@@ -14,15 +16,15 @@ use crate::util::rng::Rng;
 /// `x` carries values for both query and evidence variables;
 /// `query_mask[d]` / `evidence_mask[d]` select the two sets (disjoint;
 /// everything else is marginalized).
-pub fn conditional_log_prob(
-    engine: &mut DenseEngine,
+pub fn conditional_log_prob<E: Engine>(
+    engine: &mut E,
     params: &EinetParams,
     x: &[f32],
     query_mask: &[f32],
     evidence_mask: &[f32],
     out: &mut [f32],
 ) {
-    let d = engine.plan.graph.num_vars;
+    let d = engine.plan().graph.num_vars;
     assert_eq!(query_mask.len(), d);
     assert_eq!(evidence_mask.len(), d);
     // joint mask = query ∪ evidence
@@ -49,8 +51,8 @@ pub fn conditional_log_prob(
 }
 
 /// Marginal log-likelihood log p(x_e) under an evidence mask.
-pub fn marginal_log_prob(
-    engine: &mut DenseEngine,
+pub fn marginal_log_prob<E: Engine>(
+    engine: &mut E,
     params: &EinetParams,
     x: &[f32],
     evidence_mask: &[f32],
@@ -66,8 +68,8 @@ pub fn marginal_log_prob(
 /// (`evidence_mask[d] == 1`) are kept; unobserved entries are replaced by
 /// conditional samples (or conditional greedy decodes). Returns the
 /// completed batch.
-pub fn inpaint(
-    engine: &mut DenseEngine,
+pub fn inpaint<E: Engine>(
+    engine: &mut E,
     params: &EinetParams,
     x: &[f32],
     evidence_mask: &[f32],
@@ -75,8 +77,8 @@ pub fn inpaint(
     mode: DecodeMode,
     rng: &mut Rng,
 ) -> Vec<f32> {
-    let d = engine.plan.graph.num_vars;
-    let od = engine.family.obs_dim();
+    let d = engine.plan().graph.num_vars;
+    let od = engine.family().obs_dim();
     assert_eq!(x.len(), bn * d * od);
     let row = d * od;
     let cap = engine.batch_capacity();
@@ -109,6 +111,7 @@ pub fn inpaint(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::dense::DenseEngine;
     use crate::layers::LayeredPlan;
     use crate::leaves::LeafFamily;
     use crate::structure::random_binary_trees;

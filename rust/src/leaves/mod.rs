@@ -315,7 +315,7 @@ impl LeafFamily {
 
     /// Parse from a config string, e.g. "bernoulli", "gaussian:3",
     /// "categorical:5", "binomial:8".
-    pub fn from_spec(spec: &str) -> anyhow::Result<LeafFamily> {
+    pub fn from_spec(spec: &str) -> crate::util::error::Result<LeafFamily> {
         let (kind, arg) = spec.split_once(':').unwrap_or((spec, ""));
         Ok(match kind {
             "bernoulli" => LeafFamily::Bernoulli,
@@ -328,7 +328,7 @@ impl LeafFamily {
             "binomial" => LeafFamily::Binomial {
                 trials: arg.parse().unwrap_or(1),
             },
-            other => anyhow::bail!("unknown leaf family '{other}'"),
+            other => crate::bail!("unknown leaf family '{other}'"),
         })
     }
 }

@@ -8,12 +8,19 @@
 //!   with the log-einsum-exp trick (Eq. 4/5) and the mixing layer.
 //! * **L2** — JAX model (`python/compile/model.py`): the full EiNet
 //!   forward pass and EM statistics via autodiff, AOT-lowered to HLO text.
-//! * **L3** — this crate: region graphs, structure generators, two
-//!   execution engines (dense einsum layout vs the sparse LibSPN/SPFlow
-//!   baseline), EM training, tractable inference (marginals, conditionals,
-//!   sampling, inpainting), a PJRT runtime for the AOT artifacts, a
-//!   multithreaded training coordinator, datasets, clustering, and the
+//! * **L3** — this crate: region graphs, structure generators, a unified
+//!   execution stack — the [`engine::Engine`] trait over a compiled flat
+//!   [`engine::exec::ExecPlan`] IR with a contiguous parameter arena
+//!   ([`engine::ParamArena`]), implemented by the dense einsum layout and
+//!   the sparse LibSPN/SPFlow baseline — EM training, tractable inference
+//!   (marginals, conditionals, sampling, inpainting), a PJRT runtime for
+//!   the AOT artifacts (feature `pjrt`), a multithreaded training
+//!   coordinator with persistent workers, datasets, clustering, and the
 //!   benchmark harness reproducing every table and figure of the paper.
+//!
+//! Training, mixtures, inference, and serving are all generic over
+//! `E: Engine`, so backends share one code path and new ones (e.g. a
+//! PJRT-executed engine) plug in without touching call sites.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
@@ -32,8 +39,11 @@ pub mod runtime;
 pub mod structure;
 pub mod util;
 
-pub use engine::dense::{DecodeMode, DenseEngine};
+pub use engine::dense::DenseEngine;
 pub use engine::sparse::SparseEngine;
-pub use engine::{EinetParams, EmStats};
+pub use engine::{
+    DecodeMode, EinetParams, EmStats, Engine, ParamArena, ParamLayout,
+};
 pub use layers::LayeredPlan;
 pub use leaves::LeafFamily;
+pub use util::error::{Error, Result};

@@ -13,7 +13,8 @@
 
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Result};
+use einet::util::error::Result;
+use einet::{anyhow, bail};
 
 use einet::coordinator::{evaluate, train_parallel, TrainConfig};
 use einet::data::debd;
@@ -142,9 +143,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         plan.num_sums(),
         params.num_params()
     );
-    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
-    let valid = evaluate(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
-    let test = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let valid = evaluate::<DenseEngine>(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
+    let test = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
     println!("valid LL {valid:.4}  test LL {test:.4}");
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
     params.save(&ckpt)?;
@@ -157,8 +158,20 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
-    let params = EinetParams::load(&ckpt, family)?;
-    let test = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    let params = EinetParams::load(&ckpt)?;
+    if params.family() != family {
+        bail!(
+            "checkpoint family {:?} does not match configured family {:?}",
+            params.family(),
+            family
+        );
+    }
+    if params.layout != einet::ParamLayout::from_plan(&plan, family) {
+        bail!(
+            "checkpoint layout does not match the configured structure/--k              (saved with a different plan?)"
+        );
+    }
+    let test = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
     println!("test LL {test:.4}");
     Ok(())
 }
@@ -168,7 +181,19 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
-    let params = EinetParams::load(&ckpt, family)?;
+    let params = EinetParams::load(&ckpt)?;
+    if params.family() != family {
+        bail!(
+            "checkpoint family {:?} does not match configured family {:?}",
+            params.family(),
+            family
+        );
+    }
+    if params.layout != einet::ParamLayout::from_plan(&plan, family) {
+        bail!(
+            "checkpoint layout does not match the configured structure/--k              (saved with a different plan?)"
+        );
+    }
     let n = a.get_usize("n", &spec)?;
     let mut engine = DenseEngine::new(plan, family, 1);
     let mut rng = Rng::new(a.get_usize("seed", &spec)? as u64);
@@ -230,8 +255,8 @@ fn table1_one(
     };
     // dense engine training
     let mut p_dense = EinetParams::init(plan, family, 1);
-    train_parallel(plan, family, &mut p_dense, &ds.train.data, ds.train.n, &cfg);
-    let per_dense = einet::coordinator::per_sample_ll(
+    train_parallel::<DenseEngine>(plan, family, &mut p_dense, &ds.train.data, ds.train.n, &cfg);
+    let per_dense = einet::coordinator::per_sample_ll::<DenseEngine>(
         plan, family, &p_dense, &ds.test.data, ds.test.n, 256,
     );
     // sparse engine training (same init, same schedule, sparse layout)
@@ -247,11 +272,11 @@ fn table1_one(
             let mut stats = einet::EmStats::zeros_like(&p_sparse);
             sparse.forward(&p_sparse, xs, &mask, &mut logp[..bn]);
             sparse.backward(&p_sparse, xs, &mask, bn, &mut stats);
-            einet::em::m_step(&mut p_sparse, plan, &stats, &cfg.em);
+            einet::em::m_step(&mut p_sparse, &stats, &cfg.em);
             b0 += bn;
         }
     }
-    let per_sparse = einet::coordinator::per_sample_ll(
+    let per_sparse = einet::coordinator::per_sample_ll::<DenseEngine>(
         plan, family, &p_sparse, &ds.test.data, ds.test.n, 256,
     );
     let ll_dense = per_dense.iter().sum::<f64>() / per_dense.len() as f64;
@@ -319,7 +344,7 @@ fn cmd_serve_demo(argv: &[String]) -> Result<()> {
     let graph = einet::structure::random_binary_trees(nv, 3, 4, 0);
     let plan = LayeredPlan::compile(graph, a.get_usize("k", &spec)?);
     let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
-    let server = einet::coordinator::server::InferenceServer::start(
+    let server = einet::coordinator::server::InferenceServer::start::<DenseEngine>(
         plan,
         LeafFamily::Bernoulli,
         params,

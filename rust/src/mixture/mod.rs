@@ -1,15 +1,16 @@
 //! Mixture-of-EiNets (Section 4.2): k-means clusters as mixture
 //! components, one EiNet per cluster — step 1 of LearnSPN. A mixture of
 //! PCs is again a PC, so marginals/conditionals/sampling stay tractable.
-
-use anyhow::Result;
+//!
+//! The mixture is generic over `E:`[`Engine`]: all components share one
+//! compiled engine (plan reuse) of whichever backend the caller picks.
 
 use crate::clustering::kmeans;
 use crate::em::{m_step, EmConfig};
-use crate::engine::dense::{DecodeMode, DenseEngine};
-use crate::engine::{EinetParams, EmStats};
+use crate::engine::{DecodeMode, EinetParams, EmStats, Engine};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
+use crate::util::error::Result;
 use crate::util::logsumexp::logsumexp_f64;
 use crate::util::rng::Rng;
 
@@ -20,11 +21,10 @@ pub struct Component {
 }
 
 /// A mixture of EiNets sharing a single structure (plan + engine reuse).
-pub struct EinetMixture {
-    pub plan: LayeredPlan,
+pub struct EinetMixture<E: Engine> {
     pub family: LeafFamily,
     pub components: Vec<Component>,
-    engine: DenseEngine,
+    engine: E,
 }
 
 /// Training configuration for the image pipeline.
@@ -54,7 +54,12 @@ impl Default for MixtureConfig {
     }
 }
 
-impl EinetMixture {
+impl<E: Engine> EinetMixture<E> {
+    /// The shared structure plan.
+    pub fn plan(&self) -> &LayeredPlan {
+        self.engine.plan()
+    }
+
     /// The paper's image pipeline: k-means cluster the data, train one
     /// EiNet per cluster with stochastic EM, use cluster proportions as
     /// mixture coefficients.
@@ -71,7 +76,7 @@ impl EinetMixture {
         let row = d * od;
         assert_eq!(data.len(), n * row);
         let km = kmeans(data, n, row, cfg.num_clusters, 30, cfg.seed);
-        let mut engine = DenseEngine::new(plan.clone(), family, cfg.batch_size);
+        let mut engine = E::build(plan.clone(), family, cfg.batch_size);
         let mask = vec![1.0f32; d];
         let mut components = Vec::new();
         for c in 0..cfg.num_clusters {
@@ -106,7 +111,7 @@ impl EinetMixture {
                             &mut stats,
                         );
                         total += stats.loglik;
-                        m_step(&mut params, &plan, &stats, &cfg.em);
+                        m_step(&mut params, &stats, &cfg.em);
                         b0 += bn;
                     }
                     progress(c, epoch, total / idx.len() as f64);
@@ -129,7 +134,6 @@ impl EinetMixture {
             c.log_weight -= z;
         }
         Ok(Self {
-            plan,
             family,
             components,
             engine,
@@ -139,7 +143,7 @@ impl EinetMixture {
     /// Mixture log-likelihood per sample (chunked to engine capacity).
     pub fn log_prob(&mut self, x: &[f32], mask: &[f32], out: &mut [f32]) {
         let bn = out.len();
-        let row = self.plan.graph.num_vars * self.family.obs_dim();
+        let row = self.engine.plan().graph.num_vars * self.family.obs_dim();
         let cap = self.engine.batch_capacity();
         let mut acc = vec![f64::NEG_INFINITY; bn];
         let mut b0 = 0usize;
@@ -174,7 +178,7 @@ impl EinetMixture {
     /// Unconditional samples: draw a component by weight, then ancestral-
     /// sample within it.
     pub fn sample(&mut self, n: usize, rng: &mut Rng, mode: DecodeMode) -> Vec<f32> {
-        let d = self.plan.graph.num_vars;
+        let d = self.engine.plan().graph.num_vars;
         let od = self.family.obs_dim();
         let weights: Vec<f64> = self
             .components
@@ -203,7 +207,7 @@ impl EinetMixture {
         mode: DecodeMode,
         rng: &mut Rng,
     ) -> Vec<f32> {
-        let d = self.plan.graph.num_vars;
+        let d = self.engine.plan().graph.num_vars;
         let od = self.family.obs_dim();
         let nc = self.components.len();
         // posterior over components per sample (chunked to capacity)
@@ -230,9 +234,9 @@ impl EinetMixture {
         }
         let mut out = x.to_vec();
         for b in 0..bn {
-            let row = &post[b * nc..(b + 1) * nc];
-            let z = logsumexp_f64(row);
-            let weights: Vec<f64> = row.iter().map(|&v| (v - z).exp()).collect();
+            let prow = &post[b * nc..(b + 1) * nc];
+            let z = logsumexp_f64(prow);
+            let weights: Vec<f64> = prow.iter().map(|&v| (v - z).exp()).collect();
             let c = match mode {
                 DecodeMode::Sample => rng.categorical(&weights),
                 DecodeMode::Argmax => {
@@ -269,6 +273,7 @@ impl EinetMixture {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::dense::DenseEngine;
     use crate::structure::random_binary_trees;
 
     fn two_mode_data(n: usize, nv: usize, seed: u64) -> Vec<f32> {
@@ -295,9 +300,15 @@ mod tests {
             batch_size: 50,
             ..Default::default()
         };
-        let mut mix =
-            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 200, &cfg, |_, _, _| {})
-                .unwrap();
+        let mut mix = EinetMixture::<DenseEngine>::train(
+            plan,
+            LeafFamily::Bernoulli,
+            &data,
+            200,
+            &cfg,
+            |_, _, _| {},
+        )
+        .unwrap();
         // weights normalized
         let z: f64 = mix.components.iter().map(|c| c.log_weight.exp()).sum();
         assert!((z - 1.0).abs() < 1e-9);
@@ -320,9 +331,15 @@ mod tests {
             batch_size: 64,
             ..Default::default()
         };
-        let mut mix =
-            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 300, &cfg, |_, _, _| {})
-                .unwrap();
+        let mut mix = EinetMixture::<DenseEngine>::train(
+            plan,
+            LeafFamily::Bernoulli,
+            &data,
+            300,
+            &cfg,
+            |_, _, _| {},
+        )
+        .unwrap();
         let mut rng = Rng::new(4);
         let samples = mix.sample(300, &mut rng, DecodeMode::Sample);
         // sample means should be bimodal: average bit density near 0.5
@@ -349,9 +366,15 @@ mod tests {
             batch_size: 32,
             ..Default::default()
         };
-        let mut mix =
-            EinetMixture::train(plan, LeafFamily::Bernoulli, &data, 100, &cfg, |_, _, _| {})
-                .unwrap();
+        let mut mix = EinetMixture::<DenseEngine>::train(
+            plan,
+            LeafFamily::Bernoulli,
+            &data,
+            100,
+            &cfg,
+            |_, _, _| {},
+        )
+        .unwrap();
         let mut rng = Rng::new(7);
         let x = vec![1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
         let mask = [1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];

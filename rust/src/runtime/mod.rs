@@ -5,13 +5,21 @@
 //! (and an `.hlo.txt` for humans); this module loads the proto, compiles
 //! it on the PJRT CPU client, and executes it with rust-owned parameters.
 //! Python never runs at serve or train time.
+//!
+//! The PJRT execution path needs the vendored `xla` crate (the
+//! xla_extension 0.5.1 closure), which is not available in every build
+//! environment, so it is gated behind the `pjrt` cargo feature. Without
+//! the feature, artifact *metadata* handling ([`ArtifactMeta`],
+//! [`AotParams`]) and discovery still work — only compilation/execution
+//! returns a descriptive error. Everything else in the crate (both
+//! engines, EM, inference, serving) is independent of this module.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{bail, ensure};
 
 // Interchange format note: artifacts are BINARY HloModuleProto files whose
 // instruction/computation ids were renumbered at build time
@@ -112,128 +120,6 @@ impl ArtifactMeta {
     }
 }
 
-/// A compiled executable plus its IO contract.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// expected input shapes: params..., x, mask
-    input_shapes: Vec<Vec<usize>>,
-    /// number of tuple outputs (1 for fwd; 1 + num params for train)
-    pub num_outputs: usize,
-}
-
-impl Executable {
-    /// Execute with f32 inputs in metadata order (params..., x, mask).
-    /// Returns each tuple element flattened to `Vec<f32>`.
-    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        ensure!(
-            inputs.len() == self.input_shapes.len(),
-            "expected {} inputs, got {}",
-            self.input_shapes.len(),
-            inputs.len()
-        );
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, x) in inputs.iter().enumerate() {
-            let shape = &self.input_shapes[i];
-            let numel: usize = shape.iter().product();
-            ensure!(
-                x.len() == numel,
-                "input {i}: expected {numel} elements, got {}",
-                x.len()
-            );
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
-            };
-            literals.push(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                shape,
-                bytes,
-            )?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        ensure!(
-            tuple.len() == self.num_outputs,
-            "expected {} outputs, got {}",
-            self.num_outputs,
-            tuple.len()
-        );
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
-            .collect()
-    }
-}
-
-/// The PJRT CPU runtime: artifact discovery + compilation cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = artifact_dir.into();
-        ensure!(
-            dir.is_dir(),
-            "artifact directory {} missing — run `make artifacts`",
-            dir.display()
-        );
-        Ok(Self {
-            client: xla::PjRtClient::cpu()?,
-            dir,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Names listed in the artifact manifest.
-    pub fn list(&self) -> Result<Vec<String>> {
-        let text = std::fs::read_to_string(self.dir.join("manifest.json"))?;
-        Json::parse(&text)?
-            .get("configs")?
-            .as_arr()?
-            .iter()
-            .map(|v| v.as_str().map(str::to_string))
-            .collect()
-    }
-
-    pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
-        ArtifactMeta::load(&self.dir, name)
-    }
-
-    /// Compile one entry point ("fwd" or "train") of a named artifact.
-    pub fn compile(&self, meta: &ArtifactMeta, tag: &str) -> Result<Executable> {
-        let file = match tag {
-            "fwd" => &meta.file_fwd,
-            "train" => &meta.file_train,
-            other => bail!("unknown entry point '{other}'"),
-        };
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_proto_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            /* binary= */ true,
-        )
-        .with_context(|| format!("loading {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let mut input_shapes: Vec<Vec<usize>> =
-            meta.params.iter().map(|p| p.shape.clone()).collect();
-        input_shapes.push(vec![meta.batch, meta.num_vars, meta.obs_dim]);
-        input_shapes.push(vec![meta.num_vars]);
-        let num_outputs = match tag {
-            "fwd" => 1,
-            _ => 1 + meta.params.len(),
-        };
-        Ok(Executable {
-            exe,
-            input_shapes,
-            num_outputs,
-        })
-    }
-}
-
 /// Rust-owned parameter state for an AOT artifact, keyed by tensor name.
 #[derive(Clone, Debug)]
 pub struct AotParams {
@@ -312,6 +198,206 @@ impl AotParams {
     }
 }
 
+// ---------------------------------------------------------------------------
+// PJRT-backed Runtime / Executable (feature "pjrt")
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+    use crate::util::error::Context;
+    use crate::{anyhow, bail, ensure};
+
+    /// A compiled executable plus its IO contract.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// expected input shapes: params..., x, mask
+        input_shapes: Vec<Vec<usize>>,
+        /// number of tuple outputs (1 for fwd; 1 + num params for train)
+        pub num_outputs: usize,
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs in metadata order (params..., x, mask).
+        /// Returns each tuple element flattened to `Vec<f32>`.
+        pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            ensure!(
+                inputs.len() == self.input_shapes.len(),
+                "expected {} inputs, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            );
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, x) in inputs.iter().enumerate() {
+                let shape = &self.input_shapes[i];
+                let numel: usize = shape.iter().product();
+                ensure!(
+                    x.len() == numel,
+                    "input {i}: expected {numel} elements, got {}",
+                    x.len()
+                );
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
+                };
+                literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?);
+            }
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            ensure!(
+                tuple.len() == self.num_outputs,
+                "expected {} outputs, got {}",
+                self.num_outputs,
+                tuple.len()
+            );
+            tuple
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}")))
+                .collect()
+        }
+    }
+
+    /// The PJRT CPU runtime: artifact discovery + compilation cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = artifact_dir.into();
+            ensure!(
+                dir.is_dir(),
+                "artifact directory {} missing — run `make artifacts`",
+                dir.display()
+            );
+            Ok(Self {
+                client: xla::PjRtClient::cpu()?,
+                dir,
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Names listed in the artifact manifest.
+        pub fn list(&self) -> Result<Vec<String>> {
+            super::list_manifest(&self.dir)
+        }
+
+        pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+            ArtifactMeta::load(&self.dir, name)
+        }
+
+        /// Compile one entry point ("fwd" or "train") of a named artifact.
+        pub fn compile(&self, meta: &ArtifactMeta, tag: &str) -> Result<Executable> {
+            let file = match tag {
+                "fwd" => &meta.file_fwd,
+                "train" => &meta.file_train,
+                other => bail!("unknown entry point '{other}'"),
+            };
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_proto_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                /* binary= */ true,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let mut input_shapes: Vec<Vec<usize>> =
+                meta.params.iter().map(|p| p.shape.clone()).collect();
+            input_shapes.push(vec![meta.batch, meta.num_vars, meta.obs_dim]);
+            input_shapes.push(vec![meta.num_vars]);
+            let num_outputs = match tag {
+                "fwd" => 1,
+                _ => 1 + meta.params.len(),
+            };
+            Ok(Executable {
+                exe,
+                input_shapes,
+                num_outputs,
+            })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stub Runtime / Executable (default build, no xla closure)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
+    use crate::{bail, ensure};
+
+    const UNAVAILABLE: &str =
+        "PJRT execution requires the `pjrt` cargo feature (and the vendored \
+         `xla` crate); this build can read artifact metadata but not run \
+         executables";
+
+    /// Stub executable: same API, always errors at run time.
+    pub struct Executable {
+        pub num_outputs: usize,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    /// Metadata-only runtime: discovery and meta parsing work, compilation
+    /// reports the missing feature.
+    pub struct Runtime {
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = artifact_dir.into();
+            ensure!(
+                dir.is_dir(),
+                "artifact directory {} missing — run `make artifacts`",
+                dir.display()
+            );
+            Ok(Self { dir })
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without feature `pjrt`)".to_string()
+        }
+
+        pub fn list(&self) -> Result<Vec<String>> {
+            super::list_manifest(&self.dir)
+        }
+
+        pub fn meta(&self, name: &str) -> Result<ArtifactMeta> {
+            ArtifactMeta::load(&self.dir, name)
+        }
+
+        pub fn compile(&self, _meta: &ArtifactMeta, _tag: &str) -> Result<Executable> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+pub use backend::{Executable, Runtime};
+
+/// Names listed in the artifact manifest (shared by both backends).
+fn list_manifest(dir: &Path) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+    Json::parse(&text)?
+        .get("configs")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_str().map(str::to_string))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,5 +437,15 @@ mod tests {
         assert!((mix.iter().sum::<f32>() - 1.0).abs() < 1e-4);
         assert!(p.tensors["shift"].iter().all(|&v| v == 0.0));
         assert_eq!(p.input_slices().len(), 4);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::new("/definitely/not/a/dir").unwrap_err().to_string();
+        assert!(err.contains("missing"));
+        let exe = Executable { num_outputs: 1 };
+        let err = exe.run(&[]).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unhelpful stub error: {err}");
     }
 }

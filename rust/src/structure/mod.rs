@@ -4,7 +4,7 @@
 //! AOT artifact generation); the rust versions are the runtime source of
 //! truth for the pure-rust engines and benches.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::graph::{RegionGraph, RegionId};
 use crate::util::bitset::BitSet;
@@ -151,7 +151,7 @@ pub fn from_spec(num_vars: usize, spec: &str) -> Result<RegionGraph> {
         "pd" => {
             let h = get("h", 8);
             let w = get("w", 8);
-            anyhow::ensure!(h * w == num_vars, "pd: h*w must equal num_vars");
+            crate::ensure!(h * w == num_vars, "pd: h*w must equal num_vars");
             let axes = match kv.get("axes").map(String::as_str) {
                 Some("v") => PdAxes::Vertical,
                 Some("h") => PdAxes::Horizontal,
@@ -160,7 +160,7 @@ pub fn from_spec(num_vars: usize, spec: &str) -> Result<RegionGraph> {
             poon_domingos(h, w, get("delta", 2), axes)
         }
         "chain" => binary_chain(num_vars),
-        other => anyhow::bail!("unknown structure kind '{other}'"),
+        other => crate::bail!("unknown structure kind '{other}'"),
     })
 }
 

@@ -5,7 +5,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// Declarative option spec used for usage text and validation.
 #[derive(Clone, Debug)]

@@ -1,0 +1,165 @@
+//! Minimal error substrate: a drop-in replacement for the `anyhow` API
+//! surface this crate uses (`Result`, `Error`, `Context`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros), hand-rolled because the build
+//! environment has no crate registry (DESIGN.md §3, Substitutions).
+//!
+//! The implementation is a message string plus an optional context chain;
+//! `{e}` and `{e:#}` both render the full chain.
+
+use std::fmt;
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error with a context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a higher-level context message.
+    pub fn wrap(mut self, ctx: impl fmt::Display) -> Self {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion does not collide with `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::util::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)+)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42)
+    }
+
+    #[test]
+    fn macros_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 42");
+        assert_eq!(e.message(), "outer");
+        let e2: Error = anyhow!("direct {x}", x = 7);
+        assert_eq!(format!("{e2}"), "direct 7");
+    }
+
+    #[test]
+    fn ensure_variants() {
+        fn check(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too big: {v}");
+            ensure!(v != 3);
+            Ok(v)
+        }
+        assert!(check(2).is_ok());
+        assert!(check(12).unwrap_err().to_string().contains("too big"));
+        assert!(check(3).unwrap_err().to_string().contains("v != 3"));
+    }
+
+    #[test]
+    fn std_error_converts() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+        let n: Result<u32> = "x".parse::<u32>().map_err(Error::from);
+        assert!(n.is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(5u32).with_context(|| "no").unwrap(), 5);
+    }
+}

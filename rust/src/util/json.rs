@@ -9,7 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]

@@ -5,6 +5,7 @@
 //! carries the `xla` dependency closure — see DESIGN.md §3 (Substitutions).
 
 pub mod bitset;
+pub mod error;
 pub mod fastmath;
 pub mod cli;
 pub mod json;

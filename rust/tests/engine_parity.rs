@@ -1,0 +1,189 @@
+//! Dense/sparse engine parity as ONE generic harness over the `Engine`
+//! trait: for every `LeafFamily` variant, over both RAT (tree) and
+//! Poon–Domingos (mixing-layer) structures, under full-evidence and
+//! random marginalization masks, the two engines must produce identical
+//! log-likelihoods, identical flat EM statistics, and identical
+//! marginals — they are two layouts of the same model (the paper's
+//! Table 1 premise).
+
+use einet::engine::exec::ExecPlan;
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    DenseEngine, EinetParams, EmStats, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+/// Draw a batch of valid observations for the family.
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+/// A random marginalization mask that keeps at least one variable.
+fn random_mask(nv: usize, rng: &mut Rng) -> Vec<f32> {
+    loop {
+        let mask: Vec<f32> = (0..nv)
+            .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+            .collect();
+        if mask.iter().any(|&m| m != 0.0) {
+            return mask;
+        }
+    }
+}
+
+/// The generic harness: run forward + backward through any engine.
+fn run_engine<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+) -> (Vec<f32>, EmStats) {
+    let mut engine = E::build(plan.clone(), family, bn);
+    let mut logp = vec![0.0f32; bn];
+    engine.forward(params, x, mask, &mut logp);
+    let mut stats = EmStats::zeros_like(params);
+    engine.backward(params, x, mask, bn, &mut stats);
+    (logp, stats)
+}
+
+fn assert_stats_close(a: &EmStats, b: &EmStats, ctx: &str) {
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    assert!(
+        (a.loglik - b.loglik).abs() < 1e-3 * (1.0 + a.loglik.abs()),
+        "{ctx}: loglik {} vs {}",
+        a.loglik,
+        b.loglik
+    );
+    for (i, (x, y)) in a.grad.iter().zip(&b.grad).enumerate() {
+        assert!(
+            (x - y).abs() < 3e-3 * (1.0 + x.abs()),
+            "{ctx}: grad[{i}] {x} vs {y}"
+        );
+    }
+    for (i, (x, y)) in a.sum_p.iter().zip(&b.sum_p).enumerate() {
+        assert!(
+            (x - y).abs() < 3e-3 * (1.0 + x.abs()),
+            "{ctx}: sum_p[{i}] {x} vs {y}"
+        );
+    }
+}
+
+fn parity_case(plan: &LayeredPlan, family: LeafFamily, seed: u64, label: &str) {
+    let nv = plan.graph.num_vars;
+    let bn = 8;
+    let mut rng = Rng::new(seed);
+    let params = EinetParams::init(plan, family, seed);
+    let x = random_batch(family, bn, nv, &mut rng);
+    let full = vec![1.0f32; nv];
+    for (mi, mask) in [full, random_mask(nv, &mut rng), random_mask(nv, &mut rng)]
+        .into_iter()
+        .enumerate()
+    {
+        let ctx = format!("{label} family={family:?} mask#{mi}");
+        let (lp_d, st_d) =
+            run_engine::<DenseEngine>(plan, family, &params, &x, &mask, bn);
+        let (lp_s, st_s) =
+            run_engine::<SparseEngine>(plan, family, &params, &x, &mask, bn);
+        for (b, (a, s)) in lp_d.iter().zip(&lp_s).enumerate() {
+            assert!(a.is_finite(), "{ctx}: dense logp[{b}] not finite");
+            assert!(
+                (a - s).abs() < 1e-3 * (1.0 + a.abs()),
+                "{ctx}: logp[{b}] dense {a} vs sparse {s}"
+            );
+        }
+        assert_stats_close(&st_d, &st_s, &ctx);
+    }
+}
+
+fn all_families() -> Vec<LeafFamily> {
+    vec![
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Gaussian { channels: 3 },
+        LeafFamily::Categorical { cats: 4 },
+        LeafFamily::Binomial { trials: 6 },
+    ]
+}
+
+#[test]
+fn parity_all_families_rat_structure() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(random_binary_trees(10, 3, 3, i as u64), 4);
+        parity_case(&plan, family, 10 + i as u64, "rat");
+    }
+}
+
+#[test]
+fn parity_all_families_pd_mixing_structure() {
+    // Poon–Domingos with both axes ⇒ multi-partition regions ⇒ mixing
+    // layers on several levels — the structurally hard case
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        parity_case(&plan, family, 20 + i as u64, "pd");
+    }
+}
+
+#[test]
+fn marginals_are_consistent_across_engines_and_masks() {
+    // p(x_e) computed by either engine under nested masks: more
+    // marginalization can only increase the log-likelihood mass
+    let plan = LayeredPlan::compile(random_binary_trees(9, 2, 2, 3), 3);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 3);
+    let mut rng = Rng::new(99);
+    let bn = 4;
+    let x = random_batch(family, bn, 9, &mut rng);
+    let mut dense = DenseEngine::new(plan.clone(), family, bn);
+    let mut sparse = SparseEngine::new(plan, family, bn);
+    let full = vec![1.0f32; 9];
+    let mut partial = full.clone();
+    partial[2] = 0.0;
+    partial[5] = 0.0;
+    let mut lp_full = vec![0.0f32; bn];
+    let mut lp_part_d = vec![0.0f32; bn];
+    let mut lp_part_s = vec![0.0f32; bn];
+    dense.forward(&params, &x, &full, &mut lp_full);
+    dense.forward(&params, &x, &partial, &mut lp_part_d);
+    sparse.forward(&params, &x, &partial, &mut lp_part_s);
+    for b in 0..bn {
+        assert!((lp_part_d[b] - lp_part_s[b]).abs() < 1e-4);
+        assert!(
+            lp_part_d[b] >= lp_full[b] - 1e-4,
+            "marginal smaller than joint"
+        );
+    }
+}
+
+#[test]
+fn exec_plan_is_engine_shared() {
+    // both engines lower the same plan to the same step program shape
+    let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 3);
+    let ep_a = ExecPlan::lower(plan.clone(), LeafFamily::Bernoulli, 8);
+    let ep_b = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+    assert_eq!(ep_a.steps.len(), ep_b.steps.len());
+    assert_eq!(ep_a.arena_len, ep_b.arena_len);
+    assert_eq!(ep_a.scratch_len, ep_b.scratch_len);
+    assert_eq!(ep_a.layout, ep_b.layout);
+}

@@ -34,8 +34,8 @@ fn density_estimation_learns_tree_bn() {
         },
         log_every: 0,
     };
-    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
-    let test_ll = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    let test_ll = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
     // independence baseline: product of marginal Bernoullis
     let mut marg = vec![0.0f64; ds.num_vars];
     for i in 0..ds.train.n {
@@ -82,7 +82,7 @@ fn engines_reach_parity_on_test_ll() {
         em,
         log_every: 0,
     };
-    train_parallel(&plan, family, &mut p_d, ds.train.rows(0, n), n, &cfg);
+    train_parallel::<DenseEngine>(&plan, family, &mut p_d, ds.train.rows(0, n), n, &cfg);
     // sparse
     let mut p_s = EinetParams::init(&plan, family, 2);
     let mask = vec![1.0f32; ds.num_vars];
@@ -96,14 +96,14 @@ fn engines_reach_parity_on_test_ll() {
             let mut stats = EmStats::zeros_like(&p_s);
             sparse.forward(&p_s, xs, &mask, &mut logp[..bn]);
             sparse.backward(&p_s, xs, &mask, bn, &mut stats);
-            einet::em::m_step(&mut p_s, &plan, &stats, &em);
+            einet::em::m_step(&mut p_s, &stats, &em);
             b0 += bn;
         }
     }
-    let per_d = einet::coordinator::per_sample_ll(
+    let per_d = einet::coordinator::per_sample_ll::<DenseEngine>(
         &plan, family, &p_d, &ds.test.data, ds.test.n, 256,
     );
-    let per_s = einet::coordinator::per_sample_ll(
+    let per_s = einet::coordinator::per_sample_ll::<DenseEngine>(
         &plan, family, &p_s, &ds.test.data, ds.test.n, 256,
     );
     let t = welch_t_test(&per_d, &per_s);
@@ -135,7 +135,7 @@ fn image_pipeline_produces_valid_samples_and_inpaintings() {
         },
         seed: 0,
     };
-    let mut mix = EinetMixture::train(
+    let mut mix = EinetMixture::<DenseEngine>::train(
         plan,
         LeafFamily::Gaussian { channels: 3 },
         &train.data,
@@ -191,7 +191,7 @@ fn gaussian_em_improves_on_continuous_data() {
     let graph = random_binary_trees(nv, 2, 2, 3);
     let plan = LayeredPlan::compile(graph, 4);
     let mut params = EinetParams::init(&plan, family, 4);
-    let ll0 = evaluate(&plan, family, &params, &data, n, 64);
+    let ll0 = evaluate::<DenseEngine>(&plan, family, &params, &data, n, 64);
     let cfg = TrainConfig {
         epochs: 6,
         batch_size: 64,
@@ -203,8 +203,8 @@ fn gaussian_em_improves_on_continuous_data() {
         },
         log_every: 0,
     };
-    train_parallel(&plan, family, &mut params, &data, n, &cfg);
-    let ll1 = evaluate(&plan, family, &params, &data, n, 64);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &data, n, &cfg);
+    let ll1 = evaluate::<DenseEngine>(&plan, family, &params, &data, n, 64);
     assert!(ll1 > ll0 + 1.0, "Gaussian EM barely improved: {ll0} -> {ll1}");
 }
 
@@ -218,7 +218,7 @@ fn inference_server_concurrent_consistency() {
     let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
     let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 1);
     let mask = vec![1.0f32; nv];
-    let server = InferenceServer::start(
+    let server = InferenceServer::start::<DenseEngine>(
         plan,
         LeafFamily::Bernoulli,
         params.clone(),
@@ -264,12 +264,13 @@ fn checkpoint_preserves_model_behaviour() {
         em: EmConfig::default(),
         log_every: 0,
     };
-    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
     let path = std::env::temp_dir().join("einet_system_ckpt.bin");
     params.save(&path).unwrap();
-    let loaded = EinetParams::load(&path, family).unwrap();
-    let a = evaluate(&plan, family, &params, &ds.test.data, ds.test.n, 128);
-    let b = evaluate(&plan, family, &loaded, &ds.test.data, ds.test.n, 128);
+    let loaded = EinetParams::load(&path).unwrap();
+    assert_eq!(loaded.family(), family);
+    let a = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 128);
+    let b = evaluate::<DenseEngine>(&plan, family, &loaded, &ds.test.data, ds.test.n, 128);
     assert_eq!(a, b);
     let _ = std::fs::remove_file(path);
 }
@@ -292,7 +293,7 @@ fn trained_inpainting_beats_random_fill() {
         },
         log_every: 0,
     };
-    train_parallel(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
+    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
     let mut engine = DenseEngine::new(plan, family, 64);
     let nv = ds.num_vars;
     let mut emask = vec![1.0f32; nv];
