@@ -70,9 +70,10 @@ fn main() -> einet::Result<()> {
     conditional_log_prob(&mut engine, &params, &x, &qmask, &emask, &mut lp);
     println!("log p(x0 | x1..x3) = {:.4}", lp[0]);
 
-    //    c) unconditional sampling
+    //    c) unconditional sampling (batched: one shared forward pass +
+    //       one SamplePlan execution for the whole request)
     let mut rng = Rng::new(7);
-    let samples = engine.sample(&params, 3, &mut rng, DecodeMode::Sample);
+    let samples = engine.sample_batch(&params, 3, &mut rng, DecodeMode::Sample);
     for s in 0..3 {
         let bits: String = samples[s * ds.num_vars..(s + 1) * ds.num_vars]
             .iter()

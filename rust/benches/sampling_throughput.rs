@@ -1,0 +1,166 @@
+//! Batched vs per-sample top-down sampling throughput.
+//!
+//! Compares the legacy path (one 1-row forward + B per-sample region-graph
+//! walks, `Engine::sample`) against the fused path (one 1-row forward +
+//! ONE batched `SamplePlan` execution, `Engine::sample_batch`) at B = 256
+//! on both engines, plus a batched conditional-decode measurement for the
+//! serving workload. Results go to stdout and BENCH_sampling.json.
+//!
+//!     cargo bench --bench sampling_throughput
+//!     EINET_BENCH_QUICK=1 cargo bench --bench sampling_throughput
+
+use einet::bench::{fmt_si, time_it, Table};
+use einet::util::json;
+use einet::util::rng::Rng;
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+struct Row {
+    engine: &'static str,
+    batch: usize,
+    per_sample_s: f64,
+    batched_s: f64,
+    cond_batched_s: f64,
+}
+
+fn bench_engine<E: Engine>(
+    name: &'static str,
+    plan: &LayeredPlan,
+    batch: usize,
+    repeats: usize,
+) -> Row {
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(plan, family, 0);
+    let mut engine = E::build(plan.clone(), family, batch);
+    let nv = plan.graph.num_vars;
+
+    // legacy: forward once (bn = 1), then `batch` stack walks
+    let mut rng = Rng::new(1);
+    let legacy = time_it(
+        || {
+            let out = Engine::sample(&mut engine, &params, batch, &mut rng, DecodeMode::Sample);
+            std::hint::black_box(out.len());
+        },
+        1,
+        repeats,
+    );
+
+    // batched: forward once (bn = 1), then ONE SamplePlan execution
+    let mut rng = Rng::new(2);
+    let batched = time_it(
+        || {
+            let out = engine.sample_batch(&params, batch, &mut rng, DecodeMode::Sample);
+            std::hint::black_box(out.len());
+        },
+        1,
+        repeats,
+    );
+
+    // conditional decode (inpainting/serving shape): batched forward over
+    // real evidence + one batched decode
+    let mut rng = Rng::new(3);
+    let mut x = vec![0.0f32; batch * nv];
+    for v in x.iter_mut() {
+        *v = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+    }
+    let mask: Vec<f32> = (0..nv).map(|d| if d % 2 == 0 { 1.0 } else { 0.0 }).collect();
+    let mut logp = vec![0.0f32; batch];
+    engine.forward(&params, &x, &mask, &mut logp);
+    let mut out = x.clone();
+    let cond = time_it(
+        || {
+            out.copy_from_slice(&x);
+            engine.decode_batch(&params, batch, &mask, DecodeMode::Sample, &mut rng, &mut out);
+            std::hint::black_box(out[0]);
+        },
+        1,
+        repeats,
+    );
+
+    Row {
+        engine: name,
+        batch,
+        per_sample_s: legacy.median_s,
+        batched_s: batched.median_s,
+        cond_batched_s: cond.median_s,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let batch = 256usize;
+    let repeats = if quick { 3 } else { 7 };
+
+    // dense: a model whose weight arena dwarfs L2 so the per-sample walk
+    // pays a cache miss per visited block; sparse: moderated so its
+    // [B, K^2] product arena stays reasonable
+    let (d_nv, d_k, d_depth, d_rep) = if quick { (64, 12, 5, 6) } else { (128, 16, 5, 8) };
+    let (s_nv, s_k, s_depth, s_rep) = if quick { (48, 8, 4, 4) } else { (64, 10, 4, 5) };
+
+    let dense_plan = LayeredPlan::compile(
+        einet::structure::random_binary_trees(d_nv, d_depth, d_rep, 7),
+        d_k,
+    );
+    let sparse_plan = LayeredPlan::compile(
+        einet::structure::random_binary_trees(s_nv, s_depth, s_rep, 7),
+        s_k,
+    );
+
+    println!("Sampling throughput — per-sample walk vs batched SamplePlan (B={batch})");
+    let rows = vec![
+        bench_engine::<DenseEngine>("dense", &dense_plan, batch, repeats),
+        bench_engine::<SparseEngine>("sparse", &sparse_plan, batch, repeats),
+    ];
+
+    let mut table = Table::new(&[
+        "engine",
+        "per-sample (B walks)",
+        "batched (1 plan)",
+        "speedup",
+        "batched samples/s",
+        "cond decode/batch",
+    ]);
+    let mut report_rows: Vec<json::Json> = Vec::new();
+    for r in &rows {
+        let speedup = r.per_sample_s / r.batched_s;
+        let sps = r.batch as f64 / r.batched_s;
+        table.row(vec![
+            r.engine.to_string(),
+            fmt_si(r.per_sample_s),
+            fmt_si(r.batched_s),
+            format!("{speedup:.1}x"),
+            format!("{sps:.0}"),
+            fmt_si(r.cond_batched_s),
+        ]);
+        println!(
+            "{:<7} per-sample {}  batched {}  speedup {:.1}x  ({:.0} samples/s batched)",
+            r.engine,
+            fmt_si(r.per_sample_s),
+            fmt_si(r.batched_s),
+            speedup,
+            sps
+        );
+        report_rows.push(json::obj(vec![
+            ("engine", json::s(r.engine)),
+            ("batch", json::num(r.batch as f64)),
+            ("per_sample_s", json::num(r.per_sample_s)),
+            ("batched_s", json::num(r.batched_s)),
+            ("speedup", json::num(speedup)),
+            ("batched_samples_per_s", json::num(sps)),
+            ("per_sample_samples_per_s", json::num(r.batch as f64 / r.per_sample_s)),
+            ("cond_decode_batch_s", json::num(r.cond_batched_s)),
+        ]));
+    }
+    println!("\n{}", table.render());
+    let report = json::obj(vec![
+        ("experiment", json::s("sampling_throughput")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(report_rows)),
+    ]);
+    std::fs::write("BENCH_sampling.json", report.to_string())
+        .expect("write BENCH_sampling.json");
+    println!("wrote BENCH_sampling.json");
+}

@@ -1,21 +1,26 @@
 //! Batched inference service: the router/batcher pattern (vLLM-style)
-//! over EiNet conditional queries.
+//! over EiNet conditional queries AND conditional generation.
 //!
-//! Clients submit [`Query`] requests (evidence + mask); a dispatcher
-//! thread coalesces up to `max_batch` pending requests (or whatever has
-//! arrived within `max_wait`), runs a single batched forward pass, and
-//! answers each request on its private channel. The dispatcher is generic
-//! over `E:`[`Engine`] — any backend that implements the trait serves
-//! through the same router, demonstrating that the batched layout serves
-//! concurrent small queries efficiently.
+//! Clients submit [`Query`] requests (evidence + mask, answered with a
+//! log-probability) or [`GenQuery`] requests (evidence + mask, answered
+//! with a completed sample); a dispatcher thread coalesces up to
+//! `max_batch` pending requests (or whatever has arrived within
+//! `max_wait`), groups them by mask, and serves each group with a single
+//! batched forward pass — generation groups additionally run ONE batched
+//! top-down decode ([`Engine::decode_batch`], the compiled `SamplePlan`
+//! reverse program) for the whole group. The dispatcher is generic over
+//! `E:`[`Engine`] — any backend that implements the trait serves through
+//! the same router, so high-throughput conditional generation comes for
+//! free on every backend.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::engine::{EinetParams, Engine};
+use crate::engine::{DecodeMode, EinetParams, Engine};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
+use crate::util::rng::Rng;
 
 /// A marginal-likelihood query: evidence values + evidence mask.
 pub struct Query {
@@ -24,9 +29,25 @@ pub struct Query {
     pub reply: Sender<f32>,
 }
 
+/// A conditional-generation query: evidence values + evidence mask; the
+/// reply is the completed `[D, obs_dim]` row (observed dims untouched,
+/// unobserved dims drawn from the exact conditional).
+pub struct GenQuery {
+    pub x: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub mode: DecodeMode,
+    pub reply: Sender<Vec<f32>>,
+}
+
+/// What clients can ask the dispatcher for.
+enum Request {
+    LogProb(Query),
+    Generate(GenQuery),
+}
+
 /// Handle to the running service.
 pub struct InferenceServer {
-    tx: Sender<Query>,
+    tx: Sender<Request>,
     handle: Option<JoinHandle<ServerStats>>,
 }
 
@@ -35,10 +56,13 @@ pub struct InferenceServer {
 pub struct ServerStats {
     pub queries: usize,
     pub batches: usize,
+    /// conditional samples produced by the generation endpoint
+    pub generated: usize,
 }
 
 impl InferenceServer {
-    /// Spawn the dispatcher with its private engine of type `E`.
+    /// Spawn the dispatcher with its private engine of type `E` (sampler
+    /// seeded with 0; use [`InferenceServer::start_seeded`] to pick one).
     pub fn start<E: Engine + 'static>(
         plan: LayeredPlan,
         family: LeafFamily,
@@ -46,9 +70,22 @@ impl InferenceServer {
         max_batch: usize,
         max_wait: Duration,
     ) -> Self {
-        let (tx, rx) = mpsc::channel::<Query>();
+        Self::start_seeded::<E>(plan, family, params, max_batch, max_wait, 0)
+    }
+
+    /// Spawn the dispatcher with an explicit seed for the generation
+    /// endpoint's RNG (reproducible serving).
+    pub fn start_seeded<E: Engine + 'static>(
+        plan: LayeredPlan,
+        family: LeafFamily,
+        params: EinetParams,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Request>();
         let handle = std::thread::spawn(move || {
-            dispatcher::<E>(plan, family, params, rx, max_batch, max_wait)
+            dispatcher::<E>(plan, family, params, rx, max_batch, max_wait, seed)
         });
         Self {
             tx,
@@ -59,13 +96,35 @@ impl InferenceServer {
     /// Submit a query; returns the receiver for the log-probability.
     pub fn submit(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<f32> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Query { x, mask, reply });
+        let _ = self.tx.send(Request::LogProb(Query { x, mask, reply }));
         rx
     }
 
     /// Blocking convenience call.
     pub fn query(&self, x: Vec<f32>, mask: Vec<f32>) -> f32 {
         self.submit(x, mask).recv().expect("server alive")
+    }
+
+    /// Submit a conditional-generation request; returns the receiver for
+    /// the completed row.
+    pub fn submit_generate(
+        &self,
+        x: Vec<f32>,
+        mask: Vec<f32>,
+        mode: DecodeMode,
+    ) -> Receiver<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self
+            .tx
+            .send(Request::Generate(GenQuery { x, mask, mode, reply }));
+        rx
+    }
+
+    /// Blocking convenience call for conditional generation.
+    pub fn generate(&self, x: Vec<f32>, mask: Vec<f32>, mode: DecodeMode) -> Vec<f32> {
+        self.submit_generate(x, mask, mode)
+            .recv()
+            .expect("server alive")
     }
 
     /// Shut down and return stats.
@@ -78,13 +137,27 @@ impl InferenceServer {
     }
 }
 
+/// Total lexicographic order on masks (NaN-safe: a malformed request must
+/// not panic the shared dispatcher thread).
+fn mask_cmp(a: &[f32], b: &[f32]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b) {
+        let o = x.total_cmp(y);
+        if o != std::cmp::Ordering::Equal {
+            return o;
+        }
+    }
+    a.len().cmp(&b.len())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn dispatcher<E: Engine>(
     plan: LayeredPlan,
     family: LeafFamily,
     params: EinetParams,
-    rx: Receiver<Query>,
+    rx: Receiver<Request>,
     max_batch: usize,
     max_wait: Duration,
+    seed: u64,
 ) -> ServerStats {
     assert_eq!(
         params.family(),
@@ -95,8 +168,9 @@ fn dispatcher<E: Engine>(
     let od = family.obs_dim();
     let row = d * od;
     let mut engine = E::build(plan, family, max_batch);
+    let mut rng = Rng::new(seed);
     let mut stats = ServerStats::default();
-    let mut pending: Vec<Query> = Vec::new();
+    let mut pending: Vec<Request> = Vec::new();
     loop {
         // block for the first request (or shutdown)
         if pending.is_empty() {
@@ -118,16 +192,25 @@ fn dispatcher<E: Engine>(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // group by mask (a batch shares one marginalization pattern)
-        pending.sort_by(|a, b| a.mask.partial_cmp(&b.mask).unwrap());
-        while !pending.is_empty() {
-            let mask = pending[0].mask.clone();
-            let take = pending
+        // split the wave by kind, then group by mask (a batch shares one
+        // marginalization pattern)
+        let mut queries: Vec<Query> = Vec::new();
+        let mut gens: Vec<GenQuery> = Vec::new();
+        for r in pending.drain(..) {
+            match r {
+                Request::LogProb(q) => queries.push(q),
+                Request::Generate(g) => gens.push(g),
+            }
+        }
+        queries.sort_by(|a, b| mask_cmp(&a.mask, &b.mask));
+        while !queries.is_empty() {
+            let mask = queries[0].mask.clone();
+            let take = queries
                 .iter()
                 .take_while(|q| q.mask == mask)
                 .count()
                 .min(max_batch);
-            let group: Vec<Query> = pending.drain(..take).collect();
+            let group: Vec<Query> = queries.drain(..take).collect();
             let bn = group.len();
             let mut x = vec![0.0f32; bn * row];
             for (i, q) in group.iter().enumerate() {
@@ -139,6 +222,36 @@ fn dispatcher<E: Engine>(
                 let _ = q.reply.send(lp);
             }
             stats.queries += bn;
+            stats.batches += 1;
+        }
+        // generation groups share (mask, mode): one batched forward pass
+        // plus one batched top-down decode per group
+        gens.sort_by(|a, b| {
+            mask_cmp(&a.mask, &b.mask)
+                .then((a.mode == DecodeMode::Argmax).cmp(&(b.mode == DecodeMode::Argmax)))
+        });
+        while !gens.is_empty() {
+            let mask = gens[0].mask.clone();
+            let mode = gens[0].mode;
+            let take = gens
+                .iter()
+                .take_while(|q| q.mask == mask && q.mode == mode)
+                .count()
+                .min(max_batch);
+            let group: Vec<GenQuery> = gens.drain(..take).collect();
+            let bn = group.len();
+            let mut x = vec![0.0f32; bn * row];
+            for (i, q) in group.iter().enumerate() {
+                x[i * row..(i + 1) * row].copy_from_slice(&q.x);
+            }
+            let mut logp = vec![0.0f32; bn];
+            engine.forward(&params, &x, &mask, &mut logp);
+            let mut out = x;
+            engine.decode_batch(&params, bn, &mask, mode, &mut rng, &mut out);
+            for (i, q) in group.iter().enumerate() {
+                let _ = q.reply.send(out[i * row..(i + 1) * row].to_vec());
+            }
+            stats.generated += bn;
             stats.batches += 1;
         }
     }
@@ -214,6 +327,45 @@ mod tests {
         // marginal likelihood >= joint likelihood (sums over x0)
         assert!(b >= a - 1e-6);
         server.stop();
+    }
+
+    #[test]
+    fn generation_endpoint_respects_evidence_and_batches() {
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 5), 3);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 5);
+        let server = InferenceServer::start_seeded::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            8,
+            Duration::from_millis(5),
+            9,
+        );
+        let mask = vec![1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let receivers: Vec<_> = (0..12)
+            .map(|i| {
+                let mut x = vec![0.0f32; nv];
+                x[0] = (i % 2) as f32;
+                x[1] = 1.0;
+                (
+                    x.clone(),
+                    server.submit_generate(x, mask.clone(), DecodeMode::Sample),
+                )
+            })
+            .collect();
+        for (x, rx) in receivers {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.len(), nv);
+            assert_eq!(out[0], x[0], "observed dim resampled");
+            assert_eq!(out[1], 1.0, "observed dim resampled");
+            for &v in &out {
+                assert!(v == 0.0 || v == 1.0, "non-binary completion {v}");
+            }
+        }
+        let stats = server.stop();
+        assert_eq!(stats.generated, 12);
+        assert!(stats.batches <= 12, "generation never coalesced");
     }
 
     #[test]

@@ -75,6 +75,8 @@ pub struct DenseEngine {
     /// per-component log-normalizer cache ([D*K*R]), refreshed per forward
     /// so the leaf hot loop is multiply-add only
     leaf_const: Vec<f32>,
+    /// reusable state of the batched SamplePlan executor
+    samp: exec::SampleScratch,
 }
 
 impl DenseEngine {
@@ -95,6 +97,7 @@ impl DenseEngine {
             t_prod: vec![0.0; batch_cap * k * k],
             t_g: Vec::new(),
             leaf_const: Vec::new(),
+            samp: exec::SampleScratch::new(&exec),
             exec,
         }
     }
@@ -126,7 +129,7 @@ impl DenseEngine {
         MemFootprint {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
-            scratch: 4 * (self.scratch.len() + temporaries),
+            scratch: 4 * (self.scratch.len() + temporaries) + self.samp.bytes(),
         }
     }
 
@@ -536,8 +539,64 @@ impl DenseEngine {
         );
     }
 
-    /// Convenience: unconditional samples (the [`Engine::sample`] default,
-    /// reachable without importing the trait).
+    /// See [`Engine::decode_batch`]: the fused [`exec::SamplePlan`]
+    /// executor over this engine's forward activations.
+    pub fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        exec::decode_batch(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            bn,
+            false,
+            mask,
+            mode,
+            rng,
+            &mut self.samp,
+            out,
+        );
+    }
+
+    /// See [`Engine::sample_batch`]: under the all-zero mask every batch
+    /// row of the forward pass would be identical, so ONE 1-row forward
+    /// serves the entire batch and the fused executor reads shared (row 0)
+    /// activations for all samples.
+    pub fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let d = self.exec.plan.graph.num_vars;
+        let od = self.exec.family.obs_dim();
+        let mask = vec![0.0f32; d];
+        let x = vec![0.0f32; d * od];
+        let mut logp = vec![0.0f32; 1];
+        self.forward(params, &x, &mask, &mut logp);
+        exec::sample_batch_shared_rows(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            n,
+            mode,
+            rng,
+            &mut self.samp,
+        )
+    }
+
+    /// Convenience: unconditional samples via the legacy per-sample walk
+    /// (the [`Engine::sample`] default, reachable without importing the
+    /// trait). Prefer [`DenseEngine::sample_batch`] for throughput.
     pub fn sample(
         &mut self,
         params: &ParamArena,
@@ -597,6 +656,28 @@ impl Engine for DenseEngine {
         out: &mut [f32],
     ) {
         DenseEngine::decode(self, params, b, mask, mode, rng, out)
+    }
+
+    fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        DenseEngine::decode_batch(self, params, bn, mask, mode, rng, out)
+    }
+
+    fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        DenseEngine::sample_batch(self, params, n, rng, mode)
     }
 
     fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
@@ -805,6 +886,98 @@ mod tests {
                 probs[i]
             );
         }
+    }
+
+    #[test]
+    fn batched_sample_distribution_matches_density() {
+        // the fused SamplePlan path draws from the same distribution the
+        // forward pass assigns
+        let (mut e, params) = setup(3, 2, 2, 2, 7);
+        let x = all_binary(3);
+        let mask = vec![1.0f32; 3];
+        let mut logp = vec![0.0f32; 8];
+        e.forward(&params, &x, &mask, &mut logp);
+        let probs: Vec<f64> = logp.iter().map(|&l| (l as f64).exp()).collect();
+        let mut rng = Rng::new(5);
+        let n = 40_000;
+        let samples = e.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
+        let mut counts = [0usize; 8];
+        for s in 0..n {
+            let mut idx = 0usize;
+            for d in 0..3 {
+                if samples[s * 3 + d] > 0.5 {
+                    idx |= 1 << d;
+                }
+            }
+            counts[idx] += 1;
+        }
+        for i in 0..8 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - probs[i]).abs() < 0.02,
+                "state {i}: emp {emp} vs true {}",
+                probs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn batched_conditional_decode_keeps_evidence() {
+        let (mut e, params) = setup(6, 2, 2, 3, 8);
+        let bn = 5;
+        let mut x = vec![0.0f32; bn * 6];
+        for b in 0..bn {
+            x[b * 6] = 1.0;
+            x[b * 6 + 2] = 1.0;
+        }
+        let mask = [1.0, 0.0, 1.0, 0.0, 0.0, 0.0f32];
+        let mut logp = vec![0.0f32; bn];
+        e.forward(&params, &x, &mask, &mut logp);
+        let mut rng = Rng::new(3);
+        let mut out = x.clone();
+        e.decode_batch(&params, bn, &mask, DecodeMode::Sample, &mut rng, &mut out);
+        for b in 0..bn {
+            assert_eq!(out[b * 6], 1.0);
+            assert_eq!(out[b * 6 + 2], 1.0);
+        }
+        for &v in &out {
+            assert!(v == 0.0 || v == 1.0);
+        }
+    }
+
+    #[test]
+    fn batched_argmax_matches_legacy_decode_bitwise() {
+        let (mut e, params) = setup(7, 2, 3, 4, 11);
+        let bn = 6;
+        let mut rng = Rng::new(0);
+        let mut x = vec![0.0f32; bn * 7];
+        for v in x.iter_mut() {
+            *v = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+        }
+        let mask = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0f32];
+        let mut logp = vec![0.0f32; bn];
+        e.forward(&params, &x, &mask, &mut logp);
+        let mut legacy = x.clone();
+        for b in 0..bn {
+            e.decode(
+                &params,
+                b,
+                &mask,
+                DecodeMode::Argmax,
+                &mut rng,
+                &mut legacy[b * 7..(b + 1) * 7],
+            );
+        }
+        let mut batched = x.clone();
+        e.decode_batch(
+            &params,
+            bn,
+            &mask,
+            DecodeMode::Argmax,
+            &mut rng,
+            &mut batched,
+        );
+        assert_eq!(legacy, batched, "Argmax decode paths must be bit-identical");
     }
 
     #[test]

@@ -18,6 +18,24 @@
 //! the same list in reverse (mixing before its einsum level, leaves
 //! last). The dense and sparse engines differ only in the kernel they run
 //! per step, so the leaf layer and the top-down decode are shared here.
+//!
+//! Sampling is lowered the same way: [`SamplePlan`] is the *reverse* step
+//! program of the forward pass — one [`SampleStep::Branch`] per internal
+//! region in top-down (root-first) order, then one [`SampleStep::Leaf`]
+//! per leaf region — with every buffer, weight, and mixing offset
+//! precomputed at lowering time. [`decode_batch`] executes it over the
+//! whole batch at once: per-sample selected entries live in a flat
+//! `[n_regions, batch_cap]` index buffer ([`SampleScratch::sel`]) instead
+//! of a per-sample stack, so partition choice, the posterior
+//! `W_kij·N_i·N'_j` weighting, mixing-layer selection, and leaf emission
+//! each become one batched loop over `B` with zero per-step allocation
+//! (all scratch is preallocated and capacity-checked in debug builds).
+//! The legacy per-sample [`decode`] walk is kept as the reference
+//! implementation; in `Argmax` mode the two are bit-identical
+//! (`tests/sampling_parity.rs`). In `Sample` mode they draw the same
+//! distribution but consume the RNG stream in a different order
+//! (step-major over the batch instead of sample-major), so the raw
+//! streams intentionally diverge.
 
 use crate::layers::{LayeredPlan, RegionSlot};
 use crate::leaves::LeafFamily;
@@ -81,6 +99,139 @@ pub enum Step {
     },
 }
 
+/// One candidate partition of a [`SampleStep::Branch`]: everything the
+/// top-down pass needs to descend through it, precomputed.
+#[derive(Clone, Copy, Debug)]
+pub struct BranchPart {
+    /// child region ids (index the `sel` entry buffer)
+    pub left: usize,
+    pub right: usize,
+    /// arena offsets of the child [batch_cap, K] blocks
+    pub left_off: usize,
+    pub right_off: usize,
+    /// ParamArena offset of the slot's [Ko, K, K] weight block (the
+    /// entry's [K, K] posterior block starts at `w + entry * K * K`)
+    pub w: usize,
+}
+
+/// One step of the reverse (top-down) sampling program.
+#[derive(Clone, Copy, Debug)]
+pub enum SampleStep {
+    /// Internal region: pick a partition (posterior-weighted through the
+    /// mixing scratch when there are several), then the child entry pair
+    /// from `W_kij · N_i · N'_j`.
+    Branch {
+        rid: usize,
+        /// range [part0, part0 + nparts) into [`SamplePlan::parts`]
+        part0: usize,
+        nparts: usize,
+        /// mixing-selection info, valid when `nparts > 1`: ParamArena
+        /// offset of the region's mixing row, scratch offset of its first
+        /// child block, the per-child stride, and the level's Ko
+        mix_w: usize,
+        mix_first: usize,
+        mix_stride: usize,
+        mix_ko: usize,
+    },
+    /// Leaf region: emit values for the unobserved variables in scope.
+    Leaf { rid: usize, rep: usize },
+}
+
+/// The reverse step program of the forward pass, compiled once alongside
+/// [`ExecPlan`]: branches in root-first order, then every leaf.
+pub struct SamplePlan {
+    pub steps: Vec<SampleStep>,
+    pub parts: Vec<BranchPart>,
+    /// widest mixing fan-in (sizes the partition-choice scratch)
+    pub max_children: usize,
+}
+
+impl SamplePlan {
+    #[allow(clippy::too_many_arguments)]
+    fn lower(
+        plan: &LayeredPlan,
+        layout: &ParamLayout,
+        region_off: &[usize],
+        part_level: &[usize],
+        part_slot: &[usize],
+        mix_child_scratch: &[Vec<usize>],
+        batch_cap: usize,
+        k: usize,
+    ) -> Self {
+        // bucket internal regions by producing level: layers::compile puts
+        // all of a region's partitions on the level that computes it, so
+        // the first partition's level is the region's level
+        let n_levels = plan.levels.len();
+        let mut by_level: Vec<Vec<usize>> = vec![Vec::new(); n_levels];
+        for r in &plan.graph.regions {
+            if !r.is_leaf() {
+                by_level[part_level[r.partitions[0]]].push(r.id);
+            }
+        }
+        let mut steps = Vec::new();
+        let mut parts = Vec::new();
+        let mut max_children = 1usize;
+        for i in (0..n_levels).rev() {
+            let lv = &plan.levels[i];
+            let ko = lv.einsum.ko;
+            for &rid in &by_level[i] {
+                let region = &plan.graph.regions[rid];
+                let part0 = parts.len();
+                let nparts = region.partitions.len();
+                for &pid in &region.partitions {
+                    debug_assert_eq!(part_level[pid], i);
+                    let slot = part_slot[pid];
+                    let p = plan.graph.partitions[pid];
+                    parts.push(BranchPart {
+                        left: p.left,
+                        right: p.right,
+                        left_off: region_off[p.left],
+                        right_off: region_off[p.right],
+                        w: layout.levels[i].w_off + slot * ko * k * k,
+                    });
+                }
+                let (mix_w, mix_first) = if nparts > 1 {
+                    let m = lv
+                        .mixing
+                        .as_ref()
+                        .expect("multi-partition region without mixing layer");
+                    let j = m
+                        .region_ids
+                        .iter()
+                        .position(|&r| r == rid)
+                        .expect("region missing from its mixing layer");
+                    debug_assert_eq!(m.child_slots[j].len(), nparts);
+                    let ml = layout.levels[i].mix.as_ref().unwrap();
+                    max_children = max_children.max(nparts);
+                    (ml.off + j * ml.cmax, mix_child_scratch[i][j])
+                } else {
+                    (0, 0)
+                };
+                steps.push(SampleStep::Branch {
+                    rid,
+                    part0,
+                    nparts,
+                    mix_w,
+                    mix_first,
+                    mix_stride: batch_cap * ko,
+                    mix_ko: ko,
+                });
+            }
+        }
+        for &rid in &plan.leaf_region_ids {
+            steps.push(SampleStep::Leaf {
+                rid,
+                rep: plan.graph.regions[rid].replica.unwrap(),
+            });
+        }
+        Self {
+            steps,
+            parts,
+            max_children,
+        }
+    }
+}
+
 /// The compiled flat execution plan: shared, immutable engine input.
 pub struct ExecPlan {
     pub plan: LayeredPlan,
@@ -95,6 +246,8 @@ pub struct ExecPlan {
     pub region_width: Vec<usize>,
     pub arena_len: usize,
     pub scratch_len: usize,
+    /// the compiled reverse (top-down sampling) step program
+    pub sample_plan: SamplePlan,
     /// per partition: (level, slot) — the decode path's reverse index
     part_level: Vec<usize>,
     part_slot: Vec<usize>,
@@ -197,6 +350,17 @@ impl ExecPlan {
             }
         }
 
+        let sample_plan = SamplePlan::lower(
+            &plan,
+            &layout,
+            &region_off,
+            &part_level,
+            &part_slot,
+            &mix_child_scratch,
+            batch_cap,
+            k,
+        );
+
         Self {
             family,
             layout,
@@ -207,6 +371,7 @@ impl ExecPlan {
             region_width,
             arena_len,
             scratch_len,
+            sample_plan,
             part_level,
             part_slot,
             mix_child_scratch,
@@ -370,9 +535,12 @@ pub(crate) fn decode(
     let od = ep.family.obs_dim();
     let s_dim = ep.family.stat_dim();
     let r_total = ep.layout.num_replica;
-    // (region, entry) stack
-    let mut stack: Vec<(usize, usize)> = vec![(ep.plan.graph.root, 0)];
+    // (region, entry) stack; all scratch is sized up front so the walk
+    // below allocates nothing (capacity-checked in debug builds)
+    let mut stack: Vec<(usize, usize)> = Vec::with_capacity(ep.plan.graph.regions.len());
+    stack.push((ep.plan.graph.root, 0));
     let mut wbuf = vec![0.0f32; k * k];
+    let mut mixw = vec![0.0f32; ep.sample_plan.max_children];
     let theta = params.theta();
     while let Some((rid, entry)) = stack.pop() {
         let region = &ep.plan.graph.regions[rid];
@@ -409,7 +577,8 @@ pub(crate) fn decode(
             let first = ep.mix_child_scratch[i][j];
             let ko = ep.plan.levels[i].einsum.ko;
             let stride = ep.batch_cap * ko;
-            let mut weights = vec![0.0f32; nch];
+            debug_assert!(nch <= mixw.len(), "mixing fan-in exceeds plan scratch");
+            let weights = &mut mixw[..nch];
             let mut maxv = f32::NEG_INFINITY;
             for c in 0..nch {
                 maxv = maxv.max(scratch[first + c * stride + b * ko + entry]);
@@ -419,8 +588,8 @@ pub(crate) fn decode(
                 *wgt = wrow[c] * (v - maxv).exp();
             }
             let c = match mode {
-                DecodeMode::Sample => rng.categorical_f32(&weights),
-                DecodeMode::Argmax => argmax(&weights),
+                DecodeMode::Sample => rng.categorical_f32(weights),
+                DecodeMode::Argmax => argmax(weights),
             };
             region.partitions[c]
         };
@@ -455,6 +624,243 @@ pub(crate) fn decode(
         stack.push((p.left, pick / k));
         stack.push((p.right, pick % k));
     }
+}
+
+// ---------------------------------------------------------------------------
+// batched top-down decode over the SamplePlan
+// ---------------------------------------------------------------------------
+
+/// Reusable executor state for [`decode_batch`]: owned by the engine so
+/// the batched hot loop never allocates.
+pub struct SampleScratch {
+    /// per (region, sample) slot: selected entry + 1 (0 = inactive),
+    /// laid out `[n_regions, batch_cap]` (region `r`, sample `b` at
+    /// `r * batch_cap + b`)
+    sel: Vec<u32>,
+    /// [K, K] posterior buffer for the (i, j) entry pick
+    wbuf: Vec<f32>,
+    /// [K] right-child scaled-exponential cache
+    ebuf: Vec<f32>,
+    /// [max mixing children] partition-choice weights
+    mbuf: Vec<f32>,
+    cap: usize,
+}
+
+impl SampleScratch {
+    pub fn new(ep: &ExecPlan) -> Self {
+        Self {
+            // the entry buffer is the large allocation (n_regions *
+            // batch_cap); engines that never decode (training workers)
+            // shouldn't pay for it, so it is sized on first use
+            sel: Vec::new(),
+            wbuf: vec![0.0; ep.k * ep.k],
+            ebuf: vec![0.0; ep.k],
+            mbuf: vec![0.0; ep.sample_plan.max_children],
+            cap: ep.batch_cap,
+        }
+    }
+
+    /// Byte footprint (for the memory accounting of the bench tables).
+    pub fn bytes(&self) -> usize {
+        4 * (self.sel.len() + self.wbuf.len() + self.ebuf.len() + self.mbuf.len())
+    }
+}
+
+/// Batched top-down ancestral decode: execute the [`SamplePlan`] once for
+/// samples `0..bn` of the most recent forward pass, instead of walking the
+/// region graph per sample. Semantics per sample match [`decode`] exactly
+/// (bit-identical in `Argmax` mode); in `Sample` mode the RNG stream is
+/// consumed step-major over the batch rather than sample-major, so the
+/// stream order (not the distribution) differs from a per-sample loop.
+///
+/// `shared_rows` reads every sample's activations from batch row 0 — the
+/// unconditional-sampling fast path, where one 1-row forward pass under an
+/// all-zero mask serves the entire batch (all rows would be identical).
+///
+/// `out` is `[bn, D, obs_dim]`, pre-filled with evidence; only variables
+/// with `mask[d] == 0.0` are written.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_batch(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    bn: usize,
+    shared_rows: bool,
+    mask: &[f32],
+    mode: DecodeMode,
+    rng: &mut Rng,
+    ss: &mut SampleScratch,
+    out: &mut [f32],
+) {
+    let k = ep.k;
+    let kk2 = k * k;
+    let od = ep.family.obs_dim();
+    let s_dim = ep.family.stat_dim();
+    let r_total = ep.layout.num_replica;
+    let d_total = ep.plan.graph.num_vars;
+    let cap = ss.cap;
+    assert!(bn <= cap, "batch exceeds sampler scratch capacity");
+    assert_eq!(out.len(), bn * d_total * od);
+    // all per-step scratch was sized at construction — the step loop
+    // allocates nothing (checked here so debug builds catch a mis-sized
+    // executor); the entry buffer itself is sized on first use
+    debug_assert!(ss.wbuf.len() >= kk2 && ss.ebuf.len() >= k);
+    debug_assert!(ss.mbuf.len() >= ep.sample_plan.max_children);
+    let n_regions = ep.plan.graph.regions.len();
+    if ss.sel.len() != n_regions * cap {
+        ss.sel.resize(n_regions * cap, 0);
+    }
+    if bn == cap {
+        ss.sel.fill(0);
+    } else {
+        // only columns 0..bn are ever read or written below
+        for r in 0..n_regions {
+            ss.sel[r * cap..r * cap + bn].fill(0);
+        }
+    }
+    let root = ep.plan.graph.root;
+    for b in 0..bn {
+        ss.sel[root * cap + b] = 1;
+    }
+    let theta = params.theta();
+    for step in &ep.sample_plan.steps {
+        match *step {
+            SampleStep::Branch {
+                rid,
+                part0,
+                nparts,
+                mix_w,
+                mix_first,
+                mix_stride,
+                mix_ko,
+            } => {
+                for b in 0..bn {
+                    let e = ss.sel[rid * cap + b];
+                    if e == 0 {
+                        continue;
+                    }
+                    let entry = (e - 1) as usize;
+                    let br = if shared_rows { 0 } else { b };
+                    // choose a partition (posterior-weighted when several)
+                    let c = if nparts == 1 {
+                        0
+                    } else {
+                        let weights = &mut ss.mbuf[..nparts];
+                        let mut maxv = f32::NEG_INFINITY;
+                        for ci in 0..nparts {
+                            maxv = maxv.max(
+                                scratch[mix_first + ci * mix_stride + br * mix_ko + entry],
+                            );
+                        }
+                        for (ci, wgt) in weights.iter_mut().enumerate() {
+                            let v =
+                                scratch[mix_first + ci * mix_stride + br * mix_ko + entry];
+                            *wgt = params.data[mix_w + ci] * (v - maxv).exp();
+                        }
+                        match mode {
+                            DecodeMode::Sample => rng.categorical_f32(weights),
+                            DecodeMode::Argmax => argmax(weights),
+                        }
+                    };
+                    let p = ep.sample_plan.parts[part0 + c];
+                    let wslot = &params.data[p.w + entry * kk2..p.w + (entry + 1) * kk2];
+                    // posterior over (i, j) ∝ W_kij * N_i * N'_j
+                    let loff = p.left_off + br * k;
+                    let roff = p.right_off + br * k;
+                    let mut a = f32::NEG_INFINITY;
+                    let mut ap = f32::NEG_INFINITY;
+                    for kk in 0..k {
+                        a = a.max(arena[loff + kk]);
+                        ap = ap.max(arena[roff + kk]);
+                    }
+                    let ebuf = &mut ss.ebuf[..k];
+                    for (jj, ev) in ebuf.iter_mut().enumerate() {
+                        *ev = (arena[roff + jj] - ap).exp();
+                    }
+                    let wbuf = &mut ss.wbuf[..kk2];
+                    for ii in 0..k {
+                        let eni = (arena[loff + ii] - a).exp();
+                        let wrow = &wslot[ii * k..(ii + 1) * k];
+                        let orow = &mut wbuf[ii * k..(ii + 1) * k];
+                        for (jj, o) in orow.iter_mut().enumerate() {
+                            *o = wrow[jj] * eni * ebuf[jj];
+                        }
+                    }
+                    let pick = match mode {
+                        DecodeMode::Sample => rng.categorical_f32(wbuf),
+                        DecodeMode::Argmax => argmax(wbuf),
+                    };
+                    ss.sel[p.left * cap + b] = (pick / k) as u32 + 1;
+                    ss.sel[p.right * cap + b] = (pick % k) as u32 + 1;
+                }
+            }
+            SampleStep::Leaf { rid, rep } => {
+                for d in ep.plan.graph.regions[rid].scope.iter() {
+                    if mask[d] != 0.0 {
+                        continue; // observed: keep evidence value
+                    }
+                    for b in 0..bn {
+                        let e = ss.sel[rid * cap + b];
+                        if e == 0 {
+                            continue;
+                        }
+                        let entry = (e - 1) as usize;
+                        let th_base = ((d * k + entry) * r_total + rep) * s_dim;
+                        let th = &theta[th_base..th_base + s_dim];
+                        let row = b * d_total * od;
+                        let dst = &mut out[row + d * od..row + (d + 1) * od];
+                        match mode {
+                            DecodeMode::Sample => ep.family.sample(th, rng, dst),
+                            DecodeMode::Argmax => ep.family.mean(th, dst),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Shared body of the engines' `sample_batch` fast path: after ONE 1-row
+/// fully-marginalized forward pass, decode the whole request in capacity
+/// chunks reading the shared row-0 activations. Both engines delegate
+/// here so the chunking logic has a single home.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sample_batch_shared_rows(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    n: usize,
+    mode: DecodeMode,
+    rng: &mut Rng,
+    ss: &mut SampleScratch,
+) -> Vec<f32> {
+    let d = ep.plan.graph.num_vars;
+    let od = ep.family.obs_dim();
+    let row = d * od;
+    let mask = vec![0.0f32; d];
+    let mut out = vec![0.0f32; n * row];
+    let cap = ep.batch_cap;
+    let mut s0 = 0usize;
+    while s0 < n {
+        let bn = cap.min(n - s0);
+        decode_batch(
+            ep,
+            params,
+            arena,
+            scratch,
+            bn,
+            true,
+            &mask,
+            mode,
+            rng,
+            ss,
+            &mut out[s0 * row..(s0 + bn) * row],
+        );
+        s0 += bn;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -514,6 +920,95 @@ mod tests {
             }
         }
         assert!(claimed.iter().all(|&c| c), "scratch holes");
+    }
+
+    #[test]
+    fn sample_plan_covers_every_region_once_top_down() {
+        for plan in [
+            LayeredPlan::compile(random_binary_trees(12, 3, 3, 0), 4),
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+        ] {
+            let n_parts = plan.graph.partitions.len();
+            let n_internal =
+                plan.graph.regions.iter().filter(|r| !r.is_leaf()).count();
+            let n_leaves = plan.leaf_region_ids.len();
+            let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+            let sp = &ep.sample_plan;
+            assert_eq!(sp.parts.len(), n_parts);
+            // every region appears exactly once, branches strictly before
+            // the children they can activate
+            let mut pos = vec![usize::MAX; ep.plan.graph.regions.len()];
+            let mut branches = 0;
+            let mut leaves = 0;
+            for (si, s) in sp.steps.iter().enumerate() {
+                let rid = match *s {
+                    SampleStep::Branch { rid, .. } => {
+                        branches += 1;
+                        rid
+                    }
+                    SampleStep::Leaf { rid, .. } => {
+                        leaves += 1;
+                        rid
+                    }
+                };
+                assert_eq!(pos[rid], usize::MAX, "region {rid} appears twice");
+                pos[rid] = si;
+            }
+            assert_eq!(branches, n_internal);
+            assert_eq!(leaves, n_leaves);
+            for s in &sp.steps {
+                if let SampleStep::Branch {
+                    rid, part0, nparts, ..
+                } = *s
+                {
+                    for p in &sp.parts[part0..part0 + nparts] {
+                        assert!(
+                            pos[p.left] > pos[rid] && pos[p.right] > pos[rid],
+                            "child scheduled before its parent branch"
+                        );
+                    }
+                }
+            }
+            // the first step must be the root's branch (or leaf)
+            match sp.steps[0] {
+                SampleStep::Branch { rid, .. } | SampleStep::Leaf { rid, .. } => {
+                    assert_eq!(rid, ep.plan.graph.root);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_plan_mixing_branches_carry_valid_offsets() {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+        let sp = &ep.sample_plan;
+        let mut saw_mixing = false;
+        for s in &sp.steps {
+            if let SampleStep::Branch {
+                rid,
+                nparts,
+                mix_w,
+                mix_first,
+                mix_stride,
+                mix_ko,
+                ..
+            } = *s
+            {
+                assert_eq!(nparts, ep.plan.graph.regions[rid].partitions.len());
+                if nparts > 1 {
+                    saw_mixing = true;
+                    assert!(nparts <= sp.max_children);
+                    assert!(mix_w + nparts <= ep.layout.total);
+                    // the last child's [batch_cap, ko] block stays in scratch
+                    assert!(
+                        mix_first + (nparts - 1) * mix_stride + ep.batch_cap * mix_ko
+                            <= ep.scratch_len
+                    );
+                }
+            }
+        }
+        assert!(saw_mixing, "PD structure should produce mixing branches");
     }
 
     #[test]

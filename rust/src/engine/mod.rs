@@ -14,7 +14,8 @@
 //!   (with the theta span reused for the `sum_p·T(x)` statistics), so the
 //!   parameter-server reduce ([`EmStats::merge`]) is one element-wise add.
 //! * [`Engine`] — the common contract (`forward` / `backward` / `decode` /
-//!   `sample` / `memory_footprint` / `batch_capacity`) implemented by both
+//!   `decode_batch` / `sample` / `sample_batch` / `memory_footprint` /
+//!   `batch_capacity`) implemented by both
 //!   [`dense::DenseEngine`] (the paper's fused log-einsum-exp layout) and
 //!   [`sparse::SparseEngine`] (the LibSPN/SPFlow-style baseline of
 //!   Section 3.2), both lowered from a [`crate::layers::LayeredPlan`] into
@@ -670,7 +671,9 @@ pub trait Engine {
 
     /// Top-down ancestral decode for sample `b` of the last forward pass:
     /// writes unobserved variables (mask 0) of `out` (`[D, obs_dim]`,
-    /// pre-filled with evidence) from the exact conditional.
+    /// pre-filled with evidence) from the exact conditional. This is the
+    /// legacy per-sample walk, kept as the reference implementation —
+    /// batch work should go through [`Engine::decode_batch`].
     fn decode(
         &self,
         params: &ParamArena,
@@ -681,11 +684,84 @@ pub trait Engine {
         out: &mut [f32],
     );
 
+    /// Batched top-down decode for samples `0..bn` of the last forward
+    /// pass: writes the unobserved variables of every row of `out`
+    /// (`[bn, D, obs_dim]`, pre-filled with evidence) in one call. The
+    /// default loops the per-sample [`Engine::decode`]; the dense and
+    /// sparse engines override it with the fused [`exec::SamplePlan`]
+    /// executor (same conditional distribution; bit-identical in `Argmax`
+    /// mode; in `Sample` mode the RNG stream is consumed step-major over
+    /// the batch instead of sample-major, so raw streams diverge from the
+    /// per-sample loop).
+    fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        let d = self.plan().graph.num_vars;
+        let od = self.family().obs_dim();
+        let row = d * od;
+        assert_eq!(out.len(), bn * row);
+        for b in 0..bn {
+            self.decode(
+                params,
+                b,
+                mask,
+                mode,
+                rng,
+                &mut out[b * row..(b + 1) * row],
+            );
+        }
+    }
+
+    /// Batched unconditional samples: a fully-marginalized forward pass
+    /// per engine-capacity chunk followed by one batched top-down decode —
+    /// the fused counterpart of [`Engine::sample`]. Engines with shared-
+    /// activation support override this to run a single 1-row forward for
+    /// the whole batch.
+    fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let d = self.plan().graph.num_vars;
+        let od = self.family().obs_dim();
+        let row = d * od;
+        let cap = self.batch_capacity();
+        let mask = vec![0.0f32; d];
+        let mut out = vec![0.0f32; n * row];
+        let mut s0 = 0usize;
+        while s0 < n {
+            let bn = cap.min(n - s0);
+            let x = vec![0.0f32; bn * row];
+            let mut logp = vec![0.0f32; bn];
+            self.forward(params, &x, &mask, &mut logp);
+            self.decode_batch(
+                params,
+                bn,
+                &mask,
+                mode,
+                rng,
+                &mut out[s0 * row..(s0 + bn) * row],
+            );
+            s0 += bn;
+        }
+        out
+    }
+
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison.
     fn memory_footprint(&self, params: &ParamArena) -> MemFootprint;
 
-    /// Unconditional samples: one fully-marginalized forward pass, then
-    /// `n` top-down decodes.
+    /// Unconditional samples via the legacy per-sample walk: one fully-
+    /// marginalized forward pass, then `n` top-down decodes. Kept as the
+    /// reference baseline (and the bench's comparison point); prefer
+    /// [`Engine::sample_batch`] for throughput.
     fn sample(
         &mut self,
         params: &ParamArena,

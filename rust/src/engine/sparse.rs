@@ -40,6 +40,8 @@ pub struct SparseEngine {
     grad_scratch: Vec<f32>,
     grad_prod: Vec<f32>,
     leaf_const: Vec<f32>,
+    /// reusable state of the batched SamplePlan executor
+    samp: exec::SampleScratch,
 }
 
 impl SparseEngine {
@@ -63,6 +65,7 @@ impl SparseEngine {
             grad_scratch: Vec::new(),
             grad_prod: Vec::new(),
             leaf_const: Vec::new(),
+            samp: exec::SampleScratch::new(&exec),
             exec,
         }
     }
@@ -88,7 +91,9 @@ impl SparseEngine {
         MemFootprint {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
-            scratch: 4 * (self.prod_arena.len() + self.scratch.len()) + logw_bytes,
+            scratch: 4 * (self.prod_arena.len() + self.scratch.len())
+                + logw_bytes
+                + self.samp.bytes(),
         }
     }
 
@@ -439,6 +444,59 @@ impl SparseEngine {
             out,
         );
     }
+
+    /// See [`Engine::decode_batch`]: the same fused [`exec::SamplePlan`]
+    /// executor as the dense engine — both leave identical activations.
+    pub fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        exec::decode_batch(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            bn,
+            false,
+            mask,
+            mode,
+            rng,
+            &mut self.samp,
+            out,
+        );
+    }
+
+    /// See [`Engine::sample_batch`]: one 1-row fully-marginalized forward
+    /// pass serves the whole batch through shared (row 0) activations.
+    pub fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let d = self.exec.plan.graph.num_vars;
+        let od = self.exec.family.obs_dim();
+        let mask = vec![0.0f32; d];
+        let x = vec![0.0f32; d * od];
+        let mut logp = vec![0.0f32; 1];
+        self.forward(params, &x, &mask, &mut logp);
+        exec::sample_batch_shared_rows(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            n,
+            mode,
+            rng,
+            &mut self.samp,
+        )
+    }
 }
 
 impl Engine for SparseEngine {
@@ -489,6 +547,28 @@ impl Engine for SparseEngine {
         out: &mut [f32],
     ) {
         SparseEngine::decode(self, params, b, mask, mode, rng, out)
+    }
+
+    fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        SparseEngine::decode_batch(self, params, bn, mask, mode, rng, out)
+    }
+
+    fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        SparseEngine::sample_batch(self, params, n, rng, mode)
     }
 
     fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
@@ -603,6 +683,47 @@ mod tests {
         sparse.forward(&params, &x, &mask, &mut lp_s);
         for (a, b) in lp_d.iter().zip(&lp_s) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_batched_sample_matches_density() {
+        // the fused SamplePlan path over sparse activations tracks the
+        // exact density, like the legacy walk
+        let plan = LayeredPlan::compile(random_binary_trees(3, 2, 2, 2), 2);
+        let params = ParamArena::init(&plan, LeafFamily::Bernoulli, 7);
+        let mut sparse = SparseEngine::new(plan, LeafFamily::Bernoulli, 64);
+        let nv = 3;
+        let mut x = vec![0.0f32; 8 * nv];
+        for i in 0..8 {
+            for d in 0..nv {
+                x[i * nv + d] = ((i >> d) & 1) as f32;
+            }
+        }
+        let mask = vec![1.0f32; nv];
+        let mut logp = vec![0.0f32; 8];
+        sparse.forward(&params, &x, &mask, &mut logp);
+        let probs: Vec<f64> = logp.iter().map(|&l| (l as f64).exp()).collect();
+        let mut rng = Rng::new(4);
+        let n = 40_000;
+        let samples = sparse.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
+        let mut counts = [0usize; 8];
+        for s in 0..n {
+            let mut idx = 0usize;
+            for d in 0..nv {
+                if samples[s * nv + d] > 0.5 {
+                    idx |= 1 << d;
+                }
+            }
+            counts[idx] += 1;
+        }
+        for i in 0..8 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - probs[i]).abs() < 0.02,
+                "state {i}: emp {emp} vs true {}",
+                probs[i]
+            );
         }
     }
 

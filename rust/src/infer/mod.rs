@@ -5,6 +5,13 @@
 //! conditionals are ratios of two marginals, and conditional *sampling*
 //! (inpainting, Fig. 4c/f) is a posterior-weighted top-down decode.
 //!
+//! Sampling runs fully batched: [`inpaint`] pairs each batched forward
+//! pass with ONE [`Engine::decode_batch`] call — the compiled
+//! [`crate::engine::exec::SamplePlan`] reverse step program — instead of
+//! a per-sample graph walk, so conditional generation moves at the same
+//! batch-contiguous cadence as the forward pass (the property the paper's
+//! Fig. 4 inpainting workload and the serving path both lean on).
+//!
 //! All routines are generic over `E:`[`Engine`] — the dense layout, the
 //! sparse baseline, and future backends answer queries identically.
 
@@ -66,7 +73,9 @@ pub fn marginal_log_prob<E: Engine>(
 ///
 /// `x` is a batch `[bn, D, obs_dim]` whose observed entries
 /// (`evidence_mask[d] == 1`) are kept; unobserved entries are replaced by
-/// conditional samples (or conditional greedy decodes). Returns the
+/// conditional samples (or conditional greedy decodes). Each capacity
+/// chunk is one batched forward pass plus one batched top-down decode
+/// ([`Engine::decode_batch`]) — no per-sample graph walking. Returns the
 /// completed batch.
 pub fn inpaint<E: Engine>(
     engine: &mut E,
@@ -93,16 +102,14 @@ pub fn inpaint<E: Engine>(
             evidence_mask,
             &mut logp,
         );
-        for b in 0..chunk {
-            engine.decode(
-                params,
-                b,
-                evidence_mask,
-                mode,
-                rng,
-                &mut out[(b0 + b) * row..(b0 + b + 1) * row],
-            );
-        }
+        engine.decode_batch(
+            params,
+            chunk,
+            evidence_mask,
+            mode,
+            rng,
+            &mut out[b0 * row..(b0 + chunk) * row],
+        );
         b0 += chunk;
     }
     out

@@ -195,9 +195,11 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
         );
     }
     let n = a.get_usize("n", &spec)?;
-    let mut engine = DenseEngine::new(plan, family, 1);
+    // batched sampling: one shared forward pass + one SamplePlan
+    // execution per capacity chunk
+    let mut engine = DenseEngine::new(plan, family, n.clamp(1, 512));
     let mut rng = Rng::new(a.get_usize("seed", &spec)? as u64);
-    let samples = engine.sample(&params, n, &mut rng, DecodeMode::Sample);
+    let samples = engine.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
     for s in 0..n {
         let row: String = samples[s * ds.num_vars..(s + 1) * ds.num_vars]
             .iter()
@@ -374,6 +376,23 @@ fn cmd_serve_demo(argv: &[String]) -> Result<()> {
         acc += rx.recv().unwrap() as f64;
     }
     let dt = t.elapsed_s();
+    // conditional generation through the same dispatcher: half the
+    // variables observed, the rest drawn batched from the conditional
+    let tg = einet::util::Timer::new();
+    let mut gmask = vec![0.0f32; nv];
+    for d in 0..nv / 2 {
+        gmask[d] = 1.0;
+    }
+    let gen_rx: Vec<_> = (0..n / 2)
+        .map(|_| {
+            let x: Vec<f32> = (0..nv)
+                .map(|d| if d < nv / 2 && rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            server.submit_generate(x, gmask.clone(), DecodeMode::Sample)
+        })
+        .collect();
+    let generated = gen_rx.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    let dtg = tg.elapsed_s();
     let stats = server.stop();
     println!(
         "{} queries in {:.1}ms ({:.0} q/s), {} batches, mean LL {:.4}",
@@ -382,6 +401,11 @@ fn cmd_serve_demo(argv: &[String]) -> Result<()> {
         stats.queries as f64 / dt,
         stats.batches,
         acc / stats.queries as f64
+    );
+    println!(
+        "{generated} conditional samples in {:.1}ms ({:.0} samples/s, batched decode)",
+        dtg * 1e3,
+        generated as f64 / dtg
     );
     Ok(())
 }

@@ -175,30 +175,41 @@ impl<E: Engine> EinetMixture<E> {
         }
     }
 
-    /// Unconditional samples: draw a component by weight, then ancestral-
-    /// sample within it.
+    /// Unconditional samples: draw every sample's component by weight up
+    /// front, then ancestral-sample each component's group in ONE batched
+    /// [`Engine::sample_batch`] call and scatter the rows back.
     pub fn sample(&mut self, n: usize, rng: &mut Rng, mode: DecodeMode) -> Vec<f32> {
         let d = self.engine.plan().graph.num_vars;
         let od = self.family.obs_dim();
+        let row = d * od;
         let weights: Vec<f64> = self
             .components
             .iter()
             .map(|c| c.log_weight.exp())
             .collect();
-        let mut out = vec![0.0f32; n * d * od];
-        for s in 0..n {
-            let c = rng.categorical(&weights);
-            let one = self
-                .engine
-                .sample(&self.components[c].params, 1, rng, mode);
-            out[s * d * od..(s + 1) * d * od].copy_from_slice(&one);
+        let comp: Vec<usize> = (0..n).map(|_| rng.categorical(&weights)).collect();
+        let mut out = vec![0.0f32; n * row];
+        for c in 0..self.components.len() {
+            let idx: Vec<usize> = (0..n).filter(|&s| comp[s] == c).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let block =
+                self.engine
+                    .sample_batch(&self.components[c].params, idx.len(), rng, mode);
+            for (j, &s) in idx.iter().enumerate() {
+                out[s * row..(s + 1) * row]
+                    .copy_from_slice(&block[j * row..(j + 1) * row]);
+            }
         }
         out
     }
 
-    /// Conditional sampling (inpainting) under the mixture: pick a
-    /// component from its posterior given the evidence, then decode the
-    /// missing variables within that component.
+    /// Conditional sampling (inpainting) under the mixture: pick each
+    /// sample's component from its posterior given the evidence, then
+    /// decode all samples assigned to a component together — one batched
+    /// forward + one [`Engine::decode_batch`] per (component, chunk)
+    /// instead of a forward/decode pair per sample.
     pub fn inpaint(
         &mut self,
         x: &[f32],
@@ -232,39 +243,65 @@ impl<E: Engine> EinetMixture<E> {
             }
             b0 += chunk;
         }
-        let mut out = x.to_vec();
-        for b in 0..bn {
-            let prow = &post[b * nc..(b + 1) * nc];
-            let z = logsumexp_f64(prow);
-            let weights: Vec<f64> = prow.iter().map(|&v| (v - z).exp()).collect();
-            let c = match mode {
-                DecodeMode::Sample => rng.categorical(&weights),
-                DecodeMode::Argmax => {
-                    let mut best = 0;
-                    for (i, &w) in weights.iter().enumerate() {
-                        if w > weights[best] {
-                            best = i;
-                        }
-                    }
-                    best
+        // component choice per sample, then group-and-batch the decodes
+        let mut weights = vec![0.0f64; nc];
+        let comp: Vec<usize> = (0..bn)
+            .map(|b| {
+                let prow = &post[b * nc..(b + 1) * nc];
+                let z = logsumexp_f64(prow);
+                for (w, &v) in weights.iter_mut().zip(prow) {
+                    *w = (v - z).exp();
                 }
-            };
-            // re-run forward for the chosen component to refresh its
-            // activations, then decode sample b
-            self.engine.forward(
-                &self.components[c].params,
-                &x[b * d * od..(b + 1) * d * od],
-                evidence_mask,
-                &mut [0.0f32][..],
-            );
-            self.engine.decode(
-                &self.components[c].params,
-                0,
-                evidence_mask,
-                mode,
-                rng,
-                &mut out[b * d * od..(b + 1) * d * od],
-            );
+                match mode {
+                    DecodeMode::Sample => rng.categorical(&weights),
+                    DecodeMode::Argmax => {
+                        let mut best = 0;
+                        for (i, &w) in weights.iter().enumerate() {
+                            if w > weights[best] {
+                                best = i;
+                            }
+                        }
+                        best
+                    }
+                }
+            })
+            .collect();
+        let mut out = x.to_vec();
+        for c in 0..nc {
+            let idx: Vec<usize> = (0..bn).filter(|&b| comp[b] == c).collect();
+            let mut g0 = 0usize;
+            while g0 < idx.len() {
+                let chunk = cap.min(idx.len() - g0);
+                let group = &idx[g0..g0 + chunk];
+                // gather the group's evidence rows, forward once, decode
+                // the whole group, scatter the completions back
+                let mut xg = vec![0.0f32; chunk * row];
+                for (j, &b) in group.iter().enumerate() {
+                    xg[j * row..(j + 1) * row]
+                        .copy_from_slice(&x[b * row..(b + 1) * row]);
+                }
+                let mut logp = vec![0.0f32; chunk];
+                self.engine.forward(
+                    &self.components[c].params,
+                    &xg,
+                    evidence_mask,
+                    &mut logp,
+                );
+                let mut og = xg.clone();
+                self.engine.decode_batch(
+                    &self.components[c].params,
+                    chunk,
+                    evidence_mask,
+                    mode,
+                    rng,
+                    &mut og,
+                );
+                for (j, &b) in group.iter().enumerate() {
+                    out[b * row..(b + 1) * row]
+                        .copy_from_slice(&og[j * row..(j + 1) * row]);
+                }
+                g0 += chunk;
+            }
         }
         out
     }

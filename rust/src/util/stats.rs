@@ -192,6 +192,47 @@ pub fn not_significantly_different(a: &[f64], b: &[f64], alpha: f64) -> bool {
     t.p_greater > alpha && (1.0 - t.p_greater) > alpha
 }
 
+/// Pearson chi-square statistic of observed `counts` against expected
+/// cell probabilities `probs` over `n` total draws. A draw landing in a
+/// zero-probability cell returns infinity (an outright failure).
+pub fn chi_square_stat(counts: &[usize], probs: &[f64], n: usize) -> f64 {
+    debug_assert_eq!(counts.len(), probs.len());
+    let mut chi2 = 0.0f64;
+    for (&c, &p) in counts.iter().zip(probs) {
+        let e = p * n as f64;
+        if e > 0.0 {
+            let d = c as f64 - e;
+            chi2 += d * d / e;
+        } else if c > 0 {
+            return f64::INFINITY;
+        }
+    }
+    chi2
+}
+
+/// Approximate upper critical value of the chi-square distribution with
+/// `df` degrees of freedom at the one-sided normal quantile `z`, via the
+/// Wilson–Hilferty cube transformation (z = 3.09 ⇒ alpha ≈ 1e-3). Good
+/// to a few percent for df >= 3 — plenty for generous sampler tests.
+pub fn chi_square_critical(df: f64, z: f64) -> f64 {
+    let a = 2.0 / (9.0 * df);
+    df * (1.0 - a + z * a.sqrt()).powi(3)
+}
+
+/// Kolmogorov–Smirnov distance between the empirical CDF of an ascending
+/// `sorted` sample and a reference CDF (both one-sided deviations).
+pub fn ks_distance(sorted: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let n = sorted.len() as f64;
+    let mut dist = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f = cdf(x);
+        dist = dist
+            .max((f - i as f64 / n).abs())
+            .max(((i + 1) as f64 / n - f).abs());
+    }
+    dist
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +292,39 @@ mod tests {
         let b = [2.0, 2.0, 2.0];
         let t = welch_t_test(&a, &b);
         assert_eq!(t.t, 0.0);
+    }
+
+    #[test]
+    fn chi_square_stat_zero_on_perfect_fit() {
+        let probs = [0.25f64, 0.25, 0.5];
+        let counts = [25usize, 25, 50];
+        assert!(chi_square_stat(&counts, &probs, 100) < 1e-12);
+        // a draw in a zero-probability cell is an outright failure
+        let bad = chi_square_stat(&[1, 99, 0], &[0.0, 1.0, 0.0], 100);
+        assert!(bad.is_infinite());
+    }
+
+    #[test]
+    fn chi_square_critical_matches_tables() {
+        // df=7, alpha=0.001 -> 24.32; df=15, alpha=0.001 -> 37.70
+        let c7 = chi_square_critical(7.0, 3.0902);
+        assert!((c7 - 24.32).abs() < 0.8, "df7 crit {c7}");
+        let c15 = chi_square_critical(15.0, 3.0902);
+        assert!((c15 - 37.70).abs() < 1.0, "df15 crit {c15}");
+        // df=4, alpha=0.05 -> 9.488
+        let c4 = chi_square_critical(4.0, 1.6449);
+        assert!((c4 - 9.488).abs() < 0.3, "df4 crit {c4}");
+    }
+
+    #[test]
+    fn ks_distance_detects_shift_and_accepts_exact() {
+        // exact uniform grid against the uniform CDF: distance = 1/(2n)
+        let n = 100;
+        let sorted: Vec<f64> = (0..n).map(|i| (i as f64 + 0.5) / n as f64).collect();
+        let d = ks_distance(&sorted, |x| x.clamp(0.0, 1.0));
+        assert!(d <= 0.5 / n as f64 + 1e-12, "uniform grid distance {d}");
+        // shifted sample is far from the uniform CDF
+        let shifted: Vec<f64> = sorted.iter().map(|&x| 0.5 * x).collect();
+        assert!(ks_distance(&shifted, |x| x.clamp(0.0, 1.0)) > 0.4);
     }
 }

@@ -1,0 +1,242 @@
+//! Parity between the batched `SamplePlan` executor (`decode_batch`) and
+//! the legacy per-sample graph walk (`decode`).
+//!
+//! Contract: in `Argmax` mode the two paths are **bit-identical** — same
+//! activations, same arithmetic, same tie-breaking — across dense/sparse
+//! engines, RAT and Poon–Domingos structures, every `LeafFamily`, and
+//! random marginalization masks. In `Sample` mode the two paths draw the
+//! same distribution (see `tests/sampling_stats.rs`) but consume the RNG
+//! stream in a different order (the batched executor draws step-major
+//! over the batch, the walk draws sample-major), so raw streams diverge
+//! BY DESIGN; what we pin down here instead is determinism (same seed ⇒
+//! same batch) and the evidence contract.
+
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+/// Draw a batch of valid observations for the family.
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+/// A random marginalization mask that keeps at least one variable
+/// observed and at least one unobserved.
+fn random_mask(nv: usize, rng: &mut Rng) -> Vec<f32> {
+    loop {
+        let mask: Vec<f32> = (0..nv)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        let ones = mask.iter().filter(|&&m| m != 0.0).count();
+        if ones > 0 && ones < nv {
+            return mask;
+        }
+    }
+}
+
+/// Argmax decode through both paths over the same forward activations
+/// must agree bitwise.
+fn argmax_parity_case<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    seed: u64,
+    label: &str,
+) {
+    let nv = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = nv * od;
+    let bn = 6;
+    let mut rng = Rng::new(seed);
+    let params = EinetParams::init(plan, family, seed);
+    let mut engine = E::build(plan.clone(), family, bn);
+    let x = random_batch(family, bn, nv, &mut rng);
+    let full = vec![1.0f32; nv];
+    for (mi, mask) in [full, random_mask(nv, &mut rng), random_mask(nv, &mut rng)]
+        .into_iter()
+        .enumerate()
+    {
+        let ctx = format!("{label} family={family:?} mask#{mi}");
+        let mut logp = vec![0.0f32; bn];
+        engine.forward(&params, &x, &mask, &mut logp);
+        let mut legacy = x.clone();
+        for b in 0..bn {
+            engine.decode(
+                &params,
+                b,
+                &mask,
+                DecodeMode::Argmax,
+                &mut rng,
+                &mut legacy[b * row..(b + 1) * row],
+            );
+        }
+        let mut batched = x.clone();
+        engine.decode_batch(
+            &params,
+            bn,
+            &mask,
+            DecodeMode::Argmax,
+            &mut rng,
+            &mut batched,
+        );
+        for (i, (a, b)) in legacy.iter().zip(&batched).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{ctx}: element {i} diverged: legacy {a} vs batched {b}"
+            );
+        }
+    }
+}
+
+fn all_families() -> Vec<LeafFamily> {
+    vec![
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Gaussian { channels: 3 },
+        LeafFamily::Categorical { cats: 4 },
+        LeafFamily::Binomial { trials: 6 },
+    ]
+}
+
+#[test]
+fn argmax_parity_all_families_rat_dense() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(random_binary_trees(10, 3, 3, i as u64), 4);
+        argmax_parity_case::<DenseEngine>(&plan, family, 40 + i as u64, "dense/rat");
+    }
+}
+
+#[test]
+fn argmax_parity_all_families_rat_sparse() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(random_binary_trees(10, 3, 3, i as u64), 4);
+        argmax_parity_case::<SparseEngine>(&plan, family, 40 + i as u64, "sparse/rat");
+    }
+}
+
+#[test]
+fn argmax_parity_all_families_pd_dense() {
+    // Poon–Domingos with both axes ⇒ mixing layers ⇒ the posterior-
+    // weighted partition choice must also match bitwise
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        argmax_parity_case::<DenseEngine>(&plan, family, 50 + i as u64, "dense/pd");
+    }
+}
+
+#[test]
+fn argmax_parity_all_families_pd_sparse() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        argmax_parity_case::<SparseEngine>(&plan, family, 50 + i as u64, "sparse/pd");
+    }
+}
+
+#[test]
+fn unconditional_argmax_sample_matches_legacy_bitwise() {
+    // the shared-row (1-row forward) fast path of sample_batch must
+    // reproduce the legacy Engine::sample greedy output exactly
+    let plan = LayeredPlan::compile(random_binary_trees(9, 3, 2, 7), 3);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 7);
+    let n = 5;
+    let mut dense = DenseEngine::new(plan.clone(), family, n);
+    let mut rng = Rng::new(0);
+    let legacy = Engine::sample(&mut dense, &params, n, &mut rng, DecodeMode::Argmax);
+    let batched = dense.sample_batch(&params, n, &mut rng, DecodeMode::Argmax);
+    assert_eq!(legacy, batched);
+}
+
+#[test]
+fn sample_mode_is_deterministic_per_seed_but_stream_diverges_from_legacy() {
+    // Sample mode: same seed ⇒ identical batch (determinism), and the
+    // documented divergence — the batched executor consumes the RNG
+    // step-major, so it does NOT reproduce the per-sample stream
+    let plan = LayeredPlan::compile(random_binary_trees(8, 2, 2, 3), 3);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 3);
+    let bn = 16;
+    let mut engine = DenseEngine::new(plan, family, bn);
+    let x = vec![0.0f32; bn * 8];
+    let mask = vec![0.0f32; 8];
+    let mut logp = vec![0.0f32; bn];
+    engine.forward(&params, &x, &mask, &mut logp);
+
+    let mut out_a = x.clone();
+    let mut rng_a = Rng::new(123);
+    engine.decode_batch(&params, bn, &mask, DecodeMode::Sample, &mut rng_a, &mut out_a);
+    let mut out_b = x.clone();
+    let mut rng_b = Rng::new(123);
+    engine.decode_batch(&params, bn, &mask, DecodeMode::Sample, &mut rng_b, &mut out_b);
+    assert_eq!(out_a, out_b, "same seed must reproduce the same batch");
+
+    let mut legacy = x.clone();
+    let mut rng_c = Rng::new(123);
+    for b in 0..bn {
+        engine.decode(
+            &params,
+            b,
+            &mask,
+            DecodeMode::Sample,
+            &mut rng_c,
+            &mut legacy[b * 8..(b + 1) * 8],
+        );
+    }
+    // every row is a valid sample either way; the streams (row contents)
+    // are allowed — expected — to differ
+    for &v in legacy.iter().chain(&out_a) {
+        assert!(v == 0.0 || v == 1.0);
+    }
+}
+
+#[test]
+fn conditional_decode_batch_respects_random_evidence_masks() {
+    let mut seed_rng = Rng::new(77);
+    for trial in 0..4 {
+        let plan = LayeredPlan::compile(random_binary_trees(10, 2, 2, trial), 3);
+        let family = LeafFamily::Bernoulli;
+        let params = EinetParams::init(&plan, family, trial);
+        let bn = 12;
+        let mut engine = DenseEngine::new(plan, family, bn);
+        let x = random_batch(family, bn, 10, &mut seed_rng);
+        let mask = random_mask(10, &mut seed_rng);
+        let mut logp = vec![0.0f32; bn];
+        engine.forward(&params, &x, &mask, &mut logp);
+        let mut out = x.clone();
+        let mut rng = Rng::new(trial + 500);
+        engine.decode_batch(&params, bn, &mask, DecodeMode::Sample, &mut rng, &mut out);
+        for b in 0..bn {
+            for d in 0..10 {
+                if mask[d] != 0.0 {
+                    assert_eq!(
+                        out[b * 10 + d],
+                        x[b * 10 + d],
+                        "trial {trial}: observed dim {d} of sample {b} changed"
+                    );
+                }
+            }
+        }
+    }
+}

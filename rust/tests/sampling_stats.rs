@@ -1,0 +1,325 @@
+//! Statistical acceptance suite for the batched `SamplePlan` sampler:
+//! empirical frequencies from `sample_batch` / `decode_batch` must match
+//! the exact densities the forward pass computes — per `LeafFamily`, for
+//! BOTH engines, unconditionally and under evidence masks. Discrete
+//! families get a Pearson chi-square test against enumerated state
+//! probabilities; the Gaussian family gets a KS test of a sampled
+//! marginal against the numerically integrated marginal CDF. Every test
+//! is seeded and the significance thresholds are generous (alpha ~ 1e-4)
+//! so the suite is deterministic in CI.
+
+use einet::infer::{conditional_log_prob, inpaint};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::util::stats::{chi_square_critical, chi_square_stat, ks_distance};
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+/// Generous one-sided normal quantile: alpha ~ 1.2e-4.
+const Z_CRIT: f64 = 3.7;
+
+/// Enumerate every joint state of `nv` variables with `m` values each,
+/// little-endian (digit d of state s is `(s / m^d) % m`).
+fn all_states(m: usize, nv: usize) -> (usize, Vec<f32>) {
+    let states = m.pow(nv as u32);
+    let mut x = vec![0.0f32; states * nv];
+    for s in 0..states {
+        let mut t = s;
+        for d in 0..nv {
+            x[s * nv + d] = (t % m) as f32;
+            t /= m;
+        }
+    }
+    (states, x)
+}
+
+fn state_index(row: &[f32], m: usize) -> usize {
+    let mut idx = 0usize;
+    let mut mul = 1usize;
+    for &v in row {
+        idx += (v as usize) * mul;
+        mul *= m;
+    }
+    idx
+}
+
+/// Chi-square test: unconditional `sample_batch` frequencies against the
+/// exact enumerated density, for any discrete family with `m` values per
+/// variable.
+fn discrete_unconditional<E: Engine>(
+    plan: LayeredPlan,
+    family: LeafFamily,
+    m: usize,
+    seed: u64,
+    label: &str,
+) {
+    let nv = plan.graph.num_vars;
+    let params = EinetParams::init(&plan, family, seed);
+    let (states, x) = all_states(m, nv);
+    let mut engine = E::build(plan, family, 256.max(states));
+    let mask = vec![1.0f32; nv];
+    let mut logp = vec![0.0f32; states];
+    engine.forward(&params, &x, &mask, &mut logp);
+    let probs: Vec<f64> = logp.iter().map(|&l| (l as f64).exp()).collect();
+    let total: f64 = probs.iter().sum();
+    assert!((total - 1.0).abs() < 1e-3, "{label}: density sums to {total}");
+
+    let n = 25_000;
+    let mut rng = Rng::new(seed + 1000);
+    let samples = engine.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
+    let mut counts = vec![0usize; states];
+    for s in 0..n {
+        counts[state_index(&samples[s * nv..(s + 1) * nv], m)] += 1;
+    }
+    let chi2 = chi_square_stat(&counts, &probs, n);
+    let crit = chi_square_critical((states - 1) as f64, Z_CRIT);
+    assert!(
+        chi2 < crit,
+        "{label}: chi2 {chi2:.2} exceeds critical {crit:.2} (df {})",
+        states - 1
+    );
+}
+
+fn rat_plan(nv: usize, seed: u64) -> LayeredPlan {
+    LayeredPlan::compile(random_binary_trees(nv, 2, 2, seed), 3)
+}
+
+#[test]
+fn unconditional_bernoulli_matches_density_dense() {
+    discrete_unconditional::<DenseEngine>(
+        rat_plan(4, 0),
+        LeafFamily::Bernoulli,
+        2,
+        10,
+        "dense/bernoulli",
+    );
+}
+
+#[test]
+fn unconditional_bernoulli_matches_density_sparse() {
+    discrete_unconditional::<SparseEngine>(
+        rat_plan(4, 0),
+        LeafFamily::Bernoulli,
+        2,
+        10,
+        "sparse/bernoulli",
+    );
+}
+
+#[test]
+fn unconditional_categorical_matches_density_dense() {
+    discrete_unconditional::<DenseEngine>(
+        rat_plan(2, 1),
+        LeafFamily::Categorical { cats: 3 },
+        3,
+        11,
+        "dense/categorical",
+    );
+}
+
+#[test]
+fn unconditional_categorical_matches_density_sparse() {
+    discrete_unconditional::<SparseEngine>(
+        rat_plan(2, 1),
+        LeafFamily::Categorical { cats: 3 },
+        3,
+        11,
+        "sparse/categorical",
+    );
+}
+
+#[test]
+fn unconditional_binomial_matches_density_dense() {
+    discrete_unconditional::<DenseEngine>(
+        rat_plan(2, 2),
+        LeafFamily::Binomial { trials: 2 },
+        3,
+        12,
+        "dense/binomial",
+    );
+}
+
+#[test]
+fn unconditional_binomial_matches_density_sparse() {
+    discrete_unconditional::<SparseEngine>(
+        rat_plan(2, 2),
+        LeafFamily::Binomial { trials: 2 },
+        3,
+        12,
+        "sparse/binomial",
+    );
+}
+
+#[test]
+fn pd_mixing_structure_matches_density_both_engines() {
+    // Poon–Domingos with both axes ⇒ mixing layers ⇒ the sampler's
+    // posterior-weighted partition choice is exercised
+    let plan = LayeredPlan::compile(poon_domingos(2, 3, 1, PdAxes::Both), 3);
+    discrete_unconditional::<DenseEngine>(
+        plan.clone(),
+        LeafFamily::Bernoulli,
+        2,
+        13,
+        "dense/pd",
+    );
+    discrete_unconditional::<SparseEngine>(plan, LeafFamily::Bernoulli, 2, 13, "sparse/pd");
+}
+
+/// KS test of the sampled Gaussian marginal of variable 0 against its
+/// numerically integrated CDF (the forward pass under a single-variable
+/// mask IS the marginal density).
+fn gaussian_marginal_ks<E: Engine>(seed: u64, label: &str) {
+    let nv = 4;
+    let family = LeafFamily::Gaussian { channels: 1 };
+    let plan = rat_plan(nv, seed);
+    let params = EinetParams::init(&plan, family, seed);
+    let grid_n = 800usize;
+    let (lo, hi) = (-1.5f32, 3.0f32);
+    let mut engine = E::build(plan, family, grid_n.max(256));
+    let mut mask = vec![0.0f32; nv];
+    mask[0] = 1.0;
+    let dx = ((hi - lo) / grid_n as f32) as f64;
+    let mut xg = vec![0.0f32; grid_n * nv];
+    for i in 0..grid_n {
+        xg[i * nv] = lo + (i as f32 + 0.5) * (hi - lo) / grid_n as f32;
+    }
+    let mut logp = vec![0.0f32; grid_n];
+    engine.forward(&params, &xg, &mask, &mut logp);
+    let mut cdf_grid = vec![0.0f64; grid_n];
+    let mut acc = 0.0f64;
+    for i in 0..grid_n {
+        acc += (logp[i] as f64).exp() * dx;
+        cdf_grid[i] = acc;
+    }
+    assert!(
+        (acc - 1.0).abs() < 0.02,
+        "{label}: marginal integrates to {acc}"
+    );
+
+    let n = 20_000;
+    let mut rng = Rng::new(seed + 2000);
+    let samples = engine.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
+    let mut v0: Vec<f64> = (0..n).map(|s| samples[s * nv] as f64).collect();
+    v0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cdf = |x: f64| -> f64 {
+        if x <= lo as f64 {
+            0.0
+        } else if x >= hi as f64 {
+            1.0
+        } else {
+            let pos = ((x - lo as f64) / dx) as usize;
+            cdf_grid[pos.min(grid_n - 1)]
+        }
+    };
+    let d = ks_distance(&v0, cdf);
+    // KS critical at alpha=1e-4 is ~1.95/sqrt(n) ≈ 0.014; allow grid
+    // integration error on top
+    assert!(d < 0.03, "{label}: KS distance {d:.4}");
+}
+
+#[test]
+fn gaussian_marginal_matches_cdf_dense() {
+    gaussian_marginal_ks::<DenseEngine>(20, "dense/gaussian");
+}
+
+#[test]
+fn gaussian_marginal_matches_cdf_sparse() {
+    gaussian_marginal_ks::<SparseEngine>(20, "sparse/gaussian");
+}
+
+/// Conditional sampling: with evidence clamped, `inpaint` (one batched
+/// forward + one batched decode per chunk) must draw the query variables
+/// from the exact conditional p(x_q | x_e).
+fn conditional_matches_exact<E: Engine>(seed: u64, label: &str) {
+    let nv = 5;
+    let family = LeafFamily::Bernoulli;
+    let plan = rat_plan(nv, seed);
+    let params = EinetParams::init(&plan, family, seed);
+    let mut engine = E::build(plan, family, 256);
+    // evidence: x0 = 1, x1 = 0; query: x2, x3, x4 (8 states)
+    let mut emask = vec![0.0f32; nv];
+    emask[0] = 1.0;
+    emask[1] = 1.0;
+    let mut qmask = vec![0.0f32; nv];
+    qmask[2] = 1.0;
+    qmask[3] = 1.0;
+    qmask[4] = 1.0;
+    let mut probs = vec![0.0f64; 8];
+    for s in 0..8usize {
+        let mut x = vec![0.0f32; nv];
+        x[0] = 1.0;
+        x[2] = (s & 1) as f32;
+        x[3] = ((s >> 1) & 1) as f32;
+        x[4] = ((s >> 2) & 1) as f32;
+        let mut lp = vec![0.0f32; 1];
+        conditional_log_prob(&mut engine, &params, &x, &qmask, &emask, &mut lp);
+        probs[s] = (lp[0] as f64).exp();
+    }
+    let total: f64 = probs.iter().sum();
+    assert!(
+        (total - 1.0).abs() < 1e-3,
+        "{label}: conditional sums to {total}"
+    );
+
+    let n = 16_000;
+    let mut base = vec![0.0f32; nv];
+    base[0] = 1.0;
+    let xs = base.repeat(n);
+    let mut rng = Rng::new(seed + 3000);
+    let out = inpaint(&mut engine, &params, &xs, &emask, n, DecodeMode::Sample, &mut rng);
+    let mut counts = vec![0usize; 8];
+    for b in 0..n {
+        // evidence untouched, completions binary
+        assert_eq!(out[b * nv], 1.0, "{label}: evidence x0 resampled");
+        assert_eq!(out[b * nv + 1], 0.0, "{label}: evidence x1 resampled");
+        let mut s = 0usize;
+        for q in 0..3 {
+            let v = out[b * nv + 2 + q];
+            assert!(v == 0.0 || v == 1.0, "{label}: non-binary completion");
+            if v > 0.5 {
+                s |= 1 << q;
+            }
+        }
+        counts[s] += 1;
+    }
+    let chi2 = chi_square_stat(&counts, &probs, n);
+    let crit = chi_square_critical(7.0, Z_CRIT);
+    assert!(
+        chi2 < crit,
+        "{label}: conditional chi2 {chi2:.2} exceeds critical {crit:.2}"
+    );
+}
+
+#[test]
+fn conditional_sampling_matches_exact_dense() {
+    conditional_matches_exact::<DenseEngine>(30, "dense/conditional");
+}
+
+#[test]
+fn conditional_sampling_matches_exact_sparse() {
+    conditional_matches_exact::<SparseEngine>(30, "sparse/conditional");
+}
+
+#[test]
+fn argmax_batched_sampling_is_deterministic() {
+    // Argmax mode touches no RNG: every batch row must be identical, and
+    // two independent runs must agree bitwise
+    let plan = rat_plan(6, 4);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 4);
+    let mut engine = DenseEngine::new(plan, family, 32);
+    let mut rng_a = Rng::new(1);
+    let a = engine.sample_batch(&params, 8, &mut rng_a, DecodeMode::Argmax);
+    let mut rng_b = Rng::new(99);
+    let b = engine.sample_batch(&params, 8, &mut rng_b, DecodeMode::Argmax);
+    assert_eq!(a, b, "Argmax sampling depends on the RNG");
+    for s in 1..8 {
+        assert_eq!(
+            &a[..6],
+            &a[s * 6..(s + 1) * 6],
+            "Argmax rows differ within a batch"
+        );
+    }
+}
