@@ -58,6 +58,14 @@ pub struct ServerStats {
     pub batches: usize,
     /// conditional samples produced by the generation endpoint
     pub generated: usize,
+    /// malformed requests dropped at the dispatch boundary (wrong-length
+    /// evidence/mask, non-finite mask values, or observed evidence
+    /// outside the leaf family's support)
+    pub rejected: usize,
+    /// largest number of requests served by a single batched pass — the
+    /// coalescing witness the tests assert on (>= 2 proves batching
+    /// without depending on wall-clock wave counts)
+    pub max_group: usize,
 }
 
 impl InferenceServer {
@@ -94,19 +102,31 @@ impl InferenceServer {
     }
 
     /// Submit a query; returns the receiver for the log-probability.
+    ///
+    /// Malformed requests (wrong-length `x`/`mask`, non-finite mask
+    /// values, or observed evidence outside the leaf family's support —
+    /// see [`LeafFamily::valid_obs`]) are dropped by the dispatcher: the
+    /// receiver disconnects instead of yielding a value. Evidence at
+    /// marginalized dims is never read, so non-finite placeholders there
+    /// are accepted.
     pub fn submit(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<f32> {
         let (reply, rx) = mpsc::channel();
         let _ = self.tx.send(Request::LogProb(Query { x, mask, reply }));
         rx
     }
 
-    /// Blocking convenience call.
+    /// Blocking convenience call. Panics if the request is rejected as
+    /// malformed (see [`InferenceServer::submit`]) or the server is down;
+    /// use [`InferenceServer::submit`] to observe the disconnect instead.
     pub fn query(&self, x: Vec<f32>, mask: Vec<f32>) -> f32 {
-        self.submit(x, mask).recv().expect("server alive")
+        self.submit(x, mask)
+            .recv()
+            .expect("request rejected or server down")
     }
 
     /// Submit a conditional-generation request; returns the receiver for
-    /// the completed row.
+    /// the completed row. Malformed requests are dropped as in
+    /// [`InferenceServer::submit`].
     pub fn submit_generate(
         &self,
         x: Vec<f32>,
@@ -120,25 +140,33 @@ impl InferenceServer {
         rx
     }
 
-    /// Blocking convenience call for conditional generation.
+    /// Blocking convenience call for conditional generation. Panics if
+    /// the request is rejected as malformed or the server is down; use
+    /// [`InferenceServer::submit_generate`] to observe the disconnect
+    /// instead.
     pub fn generate(&self, x: Vec<f32>, mask: Vec<f32>, mode: DecodeMode) -> Vec<f32> {
         self.submit_generate(x, mask, mode)
             .recv()
-            .expect("server alive")
+            .expect("request rejected or server down")
     }
 
-    /// Shut down and return stats.
+    /// Shut down and return stats. A dispatcher panic (an engine assert
+    /// slipping past request validation) is propagated here rather than
+    /// silently mapped to zeroed stats.
     pub fn stop(mut self) -> ServerStats {
         drop(self.tx);
         self.handle
             .take()
-            .map(|h| h.join().unwrap_or_default())
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
             .unwrap_or_default()
     }
 }
 
 /// Total lexicographic order on masks (NaN-safe: a malformed request must
-/// not panic the shared dispatcher thread).
+/// not panic the shared dispatcher thread). Batch grouping must use this
+/// same order: under `PartialEq` a NaN-bearing mask is unequal to itself,
+/// so a group would drain zero requests and the dispatch loop would spin
+/// forever.
 fn mask_cmp(a: &[f32], b: &[f32]) -> std::cmp::Ordering {
     for (x, y) in a.iter().zip(b) {
         let o = x.total_cmp(y);
@@ -193,13 +221,46 @@ fn dispatcher<E: Engine>(
             }
         }
         // split the wave by kind, then group by mask (a batch shares one
-        // marginalization pattern)
+        // marginalization pattern). Malformed requests — wrong-length
+        // evidence/mask, a non-finite mask value, or observed evidence
+        // outside the leaf family's support — are dropped here instead of
+        // reaching the engine, where they would panic (length asserts,
+        // Categorical theta indexing, Binomial's ln_choose contract, and
+        // in debug builds the sampler's categorical draw over NaN
+        // posterior weights) or poison a batch with NaN; dropping the
+        // request closes its reply channel, so the client sees a
+        // disconnect rather than a hang or a dead server. Evidence at
+        // marginalized dims (mask 0) is never read, so NaN placeholders
+        // there — the natural missing-value encoding for inpainting —
+        // stay legal.
+        let well_formed = |x: &[f32], mask: &[f32]| {
+            x.len() == row
+                && mask.len() == d
+                && mask.iter().all(|m| m.is_finite())
+                && (0..d).all(|v| mask[v] == 0.0 || family.valid_obs(&x[v * od..(v + 1) * od]))
+        };
+        // the engine only distinguishes mask[d] == 0.0 (marginalized)
+        // from nonzero (observed); canonicalize to exactly 0.0/1.0 so
+        // equivalent patterns — including -0.0 vs 0.0, which order
+        // differently under total_cmp — coalesce into one batch
+        let canon = |mask: &mut [f32]| {
+            for m in mask.iter_mut() {
+                *m = if *m == 0.0 { 0.0 } else { 1.0 };
+            }
+        };
         let mut queries: Vec<Query> = Vec::new();
         let mut gens: Vec<GenQuery> = Vec::new();
         for r in pending.drain(..) {
             match r {
-                Request::LogProb(q) => queries.push(q),
-                Request::Generate(g) => gens.push(g),
+                Request::LogProb(mut q) if well_formed(&q.x, &q.mask) => {
+                    canon(&mut q.mask);
+                    queries.push(q);
+                }
+                Request::Generate(mut g) if well_formed(&g.x, &g.mask) => {
+                    canon(&mut g.mask);
+                    gens.push(g);
+                }
+                _ => stats.rejected += 1,
             }
         }
         queries.sort_by(|a, b| mask_cmp(&a.mask, &b.mask));
@@ -207,7 +268,7 @@ fn dispatcher<E: Engine>(
             let mask = queries[0].mask.clone();
             let take = queries
                 .iter()
-                .take_while(|q| q.mask == mask)
+                .take_while(|q| mask_cmp(&q.mask, &mask).is_eq())
                 .count()
                 .min(max_batch);
             let group: Vec<Query> = queries.drain(..take).collect();
@@ -223,6 +284,7 @@ fn dispatcher<E: Engine>(
             }
             stats.queries += bn;
             stats.batches += 1;
+            stats.max_group = stats.max_group.max(bn);
         }
         // generation groups share (mask, mode): one batched forward pass
         // plus one batched top-down decode per group
@@ -235,7 +297,7 @@ fn dispatcher<E: Engine>(
             let mode = gens[0].mode;
             let take = gens
                 .iter()
-                .take_while(|q| q.mask == mask && q.mode == mode)
+                .take_while(|q| mask_cmp(&q.mask, &mask).is_eq() && q.mode == mode)
                 .count()
                 .min(max_batch);
             let group: Vec<GenQuery> = gens.drain(..take).collect();
@@ -253,6 +315,7 @@ fn dispatcher<E: Engine>(
             }
             stats.generated += bn;
             stats.batches += 1;
+            stats.max_group = stats.max_group.max(bn);
         }
     }
     stats
@@ -303,7 +366,12 @@ mod tests {
         }
         let stats = server.stop();
         assert_eq!(stats.queries, 20);
-        assert!(stats.batches <= 20, "batching never coalesced");
+        // all 20 share one mask and are submitted before any recv: at
+        // least one wave must have served several at once. max_group is
+        // robust to scheduler stalls where a wave-count bound is not
+        // (every wave waits max_wait for more requests, so the client's
+        // burst cannot be outrun 20 times in a row).
+        assert!(stats.max_group >= 2, "batching never coalesced");
     }
 
     #[test]
@@ -327,6 +395,90 @@ mod tests {
         // marginal likelihood >= joint likelihood (sums over x0)
         assert!(b >= a - 1e-6);
         server.stop();
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_without_killing_the_dispatcher() {
+        // regression: grouping once used Vec<f32> PartialEq, under which a
+        // NaN-bearing mask is unequal to itself — the group drained zero
+        // requests and the dispatch loop spun forever. Malformed requests
+        // (NaN mask, wrong-length evidence or mask, NaN evidence at an
+        // observed dim) are now dropped at the dispatch boundary: the
+        // client's reply channel disconnects, the dispatcher keeps
+        // serving well-formed requests, and stop() returns with the
+        // drops accounted in `rejected`.
+        let nv = 4;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 2), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 2);
+        let server = InferenceServer::start::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            8,
+            Duration::from_millis(2),
+        );
+        let mut nan_mask = vec![1.0f32; nv];
+        nan_mask[1] = f32::NAN;
+        let x = vec![1.0f32, 0.0, 1.0, 0.0];
+        let nan_rx = server.submit(x.clone(), nan_mask.clone());
+        let short_x_rx = server.submit(vec![0.0f32; nv - 1], vec![1.0f32; nv]);
+        let short_mask_rx = server.submit(x.clone(), vec![1.0f32; nv - 1]);
+        // Sample mode would draw from NaN posterior weights if either of
+        // these reached the engine (debug builds panic in categorical_f32)
+        let gen_rx = server.submit_generate(x.clone(), nan_mask, DecodeMode::Sample);
+        let mut nan_x = x.clone();
+        nan_x[2] = f32::NAN;
+        let nan_x_rx = server.submit_generate(nan_x, vec![1.0f32; nv], DecodeMode::Sample);
+        // NaN evidence at a marginalized dim is the missing-value
+        // encoding — never read by the engine, so it must be accepted
+        let mut marg_mask = vec![1.0f32; nv];
+        marg_mask[3] = 0.0;
+        let mut miss_x = x.clone();
+        miss_x[3] = f32::NAN;
+        let miss_rx = server.submit(miss_x, marg_mask);
+        let good_rx = server.submit(x.clone(), vec![1.0f32; nv]);
+        assert!(nan_rx.recv().is_err(), "NaN-mask query must be rejected");
+        assert!(short_x_rx.recv().is_err(), "short evidence must be rejected");
+        assert!(short_mask_rx.recv().is_err(), "short mask must be rejected");
+        assert!(gen_rx.recv().is_err(), "NaN-mask generate must be rejected");
+        assert!(nan_x_rx.recv().is_err(), "NaN-evidence generate must be rejected");
+        let miss_lp = miss_rx
+            .recv()
+            .expect("NaN at a marginalized dim must be accepted");
+        assert!(miss_lp.is_finite(), "marginal query poisoned by NaN placeholder");
+        let lp = good_rx.recv().expect("dispatcher died on malformed input");
+        assert!(lp.is_finite(), "well-formed query poisoned by rejects");
+        let stats = server.stop();
+        assert_eq!(stats.queries, 2);
+        assert_eq!(stats.generated, 0);
+        assert_eq!(stats.rejected, 5);
+    }
+
+    #[test]
+    fn out_of_domain_categorical_evidence_is_rejected() {
+        // finite but out-of-support evidence would index theta out of
+        // bounds inside the leaf kernel — it must be caught at the
+        // dispatch boundary like the NaN cases
+        let nv = 4;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 3), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Categorical { cats: 3 }, 3);
+        let server = InferenceServer::start::<DenseEngine>(
+            plan,
+            LeafFamily::Categorical { cats: 3 },
+            params,
+            8,
+            Duration::from_millis(2),
+        );
+        let mask = vec![1.0f32; nv];
+        let mut bad_x = vec![1.0f32; nv];
+        bad_x[0] = 10.0;
+        let bad_rx = server.submit(bad_x, mask.clone());
+        let good_rx = server.submit(vec![2.0f32; nv], mask);
+        assert!(bad_rx.recv().is_err(), "out-of-domain evidence must be rejected");
+        assert!(good_rx.recv().unwrap().is_finite());
+        let stats = server.stop();
+        assert_eq!(stats.queries, 1);
+        assert_eq!(stats.rejected, 1);
     }
 
     #[test]
@@ -365,7 +517,10 @@ mod tests {
         }
         let stats = server.stop();
         assert_eq!(stats.generated, 12);
-        assert!(stats.batches <= 12, "generation never coalesced");
+        // one (mask, mode) group submitted up front: at least one decode
+        // pass must have served several requests at once (see the
+        // max_group note in serves_batched_queries_correctly)
+        assert!(stats.max_group >= 2, "generation never coalesced");
     }
 
     #[test]

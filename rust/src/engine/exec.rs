@@ -256,6 +256,13 @@ pub struct ExecPlan {
 }
 
 impl ExecPlan {
+    /// Number of leaf components (`num_vars * k * num_replica`) — the
+    /// size of the per-component log-normalizer cache that
+    /// [`refresh_leaf_const`] maintains and the engines preallocate.
+    pub fn n_leaf_components(&self) -> usize {
+        self.plan.graph.num_vars * self.k * self.layout.num_replica
+    }
+
     /// Lower a layered plan to the flat step program.
     pub fn lower(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
         let k = plan.k;
@@ -399,7 +406,7 @@ pub(crate) fn refresh_leaf_const(
     leaf_const: &mut Vec<f32>,
 ) {
     let s_dim = ep.family.stat_dim();
-    let n_comp = ep.plan.graph.num_vars * ep.k * ep.layout.num_replica;
+    let n_comp = ep.n_leaf_components();
     if leaf_const.len() != n_comp {
         leaf_const.resize(n_comp, 0.0);
     }
@@ -644,6 +651,9 @@ pub struct SampleScratch {
     /// [max mixing children] partition-choice weights
     mbuf: Vec<f32>,
     cap: usize,
+    /// eventual `sel` length (`n_regions * batch_cap`); `sel` itself is
+    /// allocated lazily but the footprint is reported from day one
+    sel_len: usize,
 }
 
 impl SampleScratch {
@@ -651,18 +661,24 @@ impl SampleScratch {
         Self {
             // the entry buffer is the large allocation (n_regions *
             // batch_cap); engines that never decode (training workers)
-            // shouldn't pay for it, so it is sized on first use
+            // shouldn't pay for it in RSS, so it is sized on first use —
+            // but bytes() always reports the eventual size so the
+            // footprint metric doesn't depend on whether sampling has
+            // run yet
             sel: Vec::new(),
             wbuf: vec![0.0; ep.k * ep.k],
             ebuf: vec![0.0; ep.k],
             mbuf: vec![0.0; ep.sample_plan.max_children],
             cap: ep.batch_cap,
+            sel_len: ep.plan.graph.regions.len() * ep.batch_cap,
         }
     }
 
     /// Byte footprint (for the memory accounting of the bench tables).
+    /// Counts `sel` at its eventual size so footprints captured before the
+    /// first decode match footprints captured after.
     pub fn bytes(&self) -> usize {
-        4 * (self.sel.len() + self.wbuf.len() + self.ebuf.len() + self.mbuf.len())
+        4 * (self.sel_len + self.wbuf.len() + self.ebuf.len() + self.mbuf.len())
     }
 }
 

@@ -64,7 +64,9 @@ impl SparseEngine {
             grad_arena: Vec::new(),
             grad_scratch: Vec::new(),
             grad_prod: Vec::new(),
-            leaf_const: Vec::new(),
+            // sized eagerly, matching DenseEngine, so the footprint
+            // accounting (which counts it on both layouts) is stable
+            leaf_const: vec![0.0; exec.n_leaf_components()],
             samp: exec::SampleScratch::new(&exec),
             exec,
         }
@@ -83,7 +85,9 @@ impl SparseEngine {
     }
 
     /// Buffer accounting: note the `prod_arena` and log-weight cache terms
-    /// that the dense layout does not pay.
+    /// that the dense layout does not pay. Like the dense metric, this is
+    /// inference memory only — the `grad_*` backward buffers are excluded
+    /// on both layouts.
     pub fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
         // the log-domain weight cache is standing memory the dense
         // layout does not pay
@@ -91,7 +95,7 @@ impl SparseEngine {
         MemFootprint {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
-            scratch: 4 * (self.prod_arena.len() + self.scratch.len())
+            scratch: 4 * (self.prod_arena.len() + self.scratch.len() + self.leaf_const.len())
                 + logw_bytes
                 + self.samp.bytes(),
         }

@@ -33,6 +33,27 @@ impl LeafFamily {
         }
     }
 
+    /// Whether one observation (length [`LeafFamily::obs_dim`]) is in the
+    /// family's support, i.e. safe and meaningful to evaluate: finite
+    /// everywhere, and for the discrete families an integer within the
+    /// support — {0, 1} for Bernoulli, the index domain for Categorical
+    /// (the kernel indexes `theta[x as usize]`), `0..=trials` for
+    /// Binomial (`ln_choose` requires `x <= trials`). Untrusted evidence
+    /// (e.g. inference-server requests) must pass this before reaching
+    /// the kernels.
+    pub fn valid_obs(&self, x: &[f32]) -> bool {
+        if x.len() != self.obs_dim() || x.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        let integral = || x[0] >= 0.0 && x[0].fract() == 0.0;
+        match self {
+            LeafFamily::Bernoulli => integral() && x[0] <= 1.0,
+            LeafFamily::Categorical { cats } => integral() && (x[0] as usize) < *cats,
+            LeafFamily::Binomial { trials } => integral() && (x[0] as u32) <= *trials,
+            LeafFamily::Gaussian { .. } => true,
+        }
+    }
+
     /// Dimensionality of the sufficient statistic T(x) (== of theta/phi).
     pub fn stat_dim(&self) -> usize {
         match self {
@@ -387,6 +408,31 @@ mod tests {
             .map(|v| fam.log_prob(&theta, &[v as f32]).exp())
             .sum();
         assert!((total - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn valid_obs_guards_the_kernel_domains() {
+        let cat = LeafFamily::Categorical { cats: 3 };
+        assert!(cat.valid_obs(&[0.0]) && cat.valid_obs(&[2.0]));
+        assert!(!cat.valid_obs(&[3.0]), "theta index out of bounds");
+        assert!(!cat.valid_obs(&[-1.0]));
+        assert!(!cat.valid_obs(&[2.7]), "non-integer category");
+        assert!(!cat.valid_obs(&[f32::NAN]));
+        assert!(!cat.valid_obs(&[1.0, 1.0]), "wrong obs_dim");
+        let bin = LeafFamily::Binomial { trials: 6 };
+        assert!(bin.valid_obs(&[6.0]));
+        assert!(!bin.valid_obs(&[7.0]), "violates ln_choose k <= n");
+        assert!(!bin.valid_obs(&[6.9]), "non-integer count");
+        assert!(!bin.valid_obs(&[-1.0]));
+        let gauss = LeafFamily::Gaussian { channels: 2 };
+        assert!(gauss.valid_obs(&[-5.0, 1e30]));
+        assert!(!gauss.valid_obs(&[0.0, f32::INFINITY]));
+        assert!(!gauss.valid_obs(&[0.0]), "wrong obs_dim");
+        assert!(LeafFamily::Bernoulli.valid_obs(&[0.0]));
+        assert!(LeafFamily::Bernoulli.valid_obs(&[1.0]));
+        assert!(!LeafFamily::Bernoulli.valid_obs(&[0.5]), "outside {{0, 1}}");
+        assert!(!LeafFamily::Bernoulli.valid_obs(&[2.0]));
+        assert!(!LeafFamily::Bernoulli.valid_obs(&[f32::NAN]));
     }
 
     #[test]

@@ -106,10 +106,15 @@ impl Rng {
         self.uniform() < p
     }
 
-    /// Sample an index from unnormalized non-negative weights.
+    /// Sample an index from unnormalized non-negative weights. Degenerate
+    /// total mass falls back to index 0 before any draw — see
+    /// [`Rng::categorical_f32`] for why this cannot be an assert (the
+    /// mixture decode path reaches the same collapsed-posterior input).
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
-        debug_assert!(total > 0.0, "categorical with zero total mass");
+        if !(total > 0.0) || !total.is_finite() {
+            return 0;
+        }
         let mut u = self.uniform() * total;
         for (i, w) in weights.iter().enumerate() {
             u -= w;
@@ -120,10 +125,20 @@ impl Rng {
         weights.len() - 1
     }
 
-    /// Sample an index from f32 weights (hot path helper).
+    /// Sample an index from f32 weights (hot path helper). A degenerate
+    /// total (zero, NaN, or infinite — e.g. a decode posterior collapsed
+    /// by evidence that underflowed every mixture component to -inf)
+    /// falls back to index 0 deterministically, before any RNG draw, so
+    /// a shared server thread survives pathological-but-finite requests
+    /// and the stream stays identical for valid inputs. This cannot be a
+    /// debug assert: extreme-but-finite evidence passes every boundary
+    /// validation yet still collapses the posterior, so degenerate mass
+    /// here is reachable input, not necessarily an internal bug.
     pub fn categorical_f32(&mut self, weights: &[f32]) -> usize {
         let total: f32 = weights.iter().sum();
-        debug_assert!(total > 0.0);
+        if !(total > 0.0) || !total.is_finite() {
+            return 0;
+        }
         let mut u = (self.uniform() as f32) * total;
         for (i, w) in weights.iter().enumerate() {
             u -= w;
@@ -153,6 +168,19 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn categorical_f32_degenerate_mass_falls_back_to_zero() {
+        let mut rng = Rng::new(1);
+        assert_eq!(rng.categorical_f32(&[0.0, 0.0]), 0);
+        assert_eq!(rng.categorical_f32(&[f32::NAN, 1.0]), 0);
+        assert_eq!(rng.categorical_f32(&[f32::INFINITY, 1.0]), 0);
+        assert_eq!(rng.categorical(&[0.0f64, 0.0]), 0);
+        assert_eq!(rng.categorical(&[f64::NAN, 1.0]), 0);
+        // a valid draw still lands in the support
+        assert_eq!(rng.categorical_f32(&[0.0, 1.0]), 1);
+        assert_eq!(rng.categorical(&[0.0f64, 1.0]), 1);
+    }
 
     #[test]
     fn deterministic_by_seed() {
