@@ -1,0 +1,170 @@
+//! Scope-partitioned execution scaling: stochastic-EM training and
+//! forward serving throughput of the [`ShardedPool`] at 1 / 2 / 4 shards,
+//! dense and sparse engines, on the Fig. 3-size model (RAT, D=512,
+//! depth 4, replica 10, K=10, Gaussian leaves; quick mode scales the
+//! model down but keeps the shape).
+//!
+//! The 1-shard pool is the baseline — identical machinery, one worker —
+//! so the reported speedups isolate the scope-partitioning itself
+//! (N-shard results are bit-identical to 1-shard, see
+//! `tests/sharding_parity.rs`; this bench measures only throughput).
+//! Results land in BENCH_sharding.json (CI artifact).
+//!
+//!     cargo bench --bench sharding_scaling            # full size
+//!     EINET_BENCH_QUICK=1 cargo bench --bench sharding_scaling
+
+use einet::bench::{fmt_si, time_it, Table};
+use einet::coordinator::ShardedPool;
+use einet::data::debd::gaussian_noise;
+use einet::em::EmConfig;
+use einet::util::json;
+use einet::{
+    boxed_build, DenseEngine, EinetParams, EngineFactory, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+struct PathResult {
+    train_samples_per_s: f64,
+    serve_samples_per_s: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    factory: EngineFactory,
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params0: &EinetParams,
+    data: &[f32],
+    n: usize,
+    batch: usize,
+    shards: usize,
+    reps: usize,
+) -> PathResult {
+    let d = plan.graph.num_vars;
+    let mask = vec![1.0f32; d];
+    let em = EmConfig {
+        step_size: 0.5,
+        var_bounds: (1e-3, 10.0),
+        ..Default::default()
+    };
+    let mut pool = ShardedPool::new(factory, plan, family, params0, shards, batch);
+    let row = d * family.obs_dim();
+
+    // --- train: one epoch of sharded stochastic EM per rep -------------
+    let mut run_train = || {
+        pool.set_params(params0);
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = batch.min(n - b0);
+            pool.train_step(&data[b0 * row..(b0 + bn) * row], &mask, bn, &em);
+            b0 += bn;
+        }
+    };
+    run_train(); // warmup
+    let mt = time_it(&mut run_train, 0, reps);
+
+    // --- serve: forward-only batched log-likelihood queries ------------
+    let mut logp = vec![0.0f32; batch];
+    let mut run_serve = || {
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = batch.min(n - b0);
+            pool.forward(&data[b0 * row..(b0 + bn) * row], &mask, bn, &mut logp[..bn]);
+            b0 += bn;
+        }
+    };
+    run_serve(); // warmup
+    let ms = time_it(&mut run_serve, 0, reps);
+
+    PathResult {
+        train_samples_per_s: n as f64 / mt.median_s,
+        serve_samples_per_s: n as f64 / ms.median_s,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let (num_vars, depth, replica, k) =
+        if quick { (128, 3, 8, 6) } else { (512, 4, 10, 10) };
+    let n = if quick { 100 } else { 300 };
+    let batch = 50usize;
+    let reps = if quick { 2 } else { 3 };
+    let family = LeafFamily::Gaussian { channels: 1 };
+    let data = gaussian_noise(n, num_vars, 0);
+
+    let graph = einet::structure::random_binary_trees(num_vars, depth, replica, 7);
+    let plan = LayeredPlan::compile(graph, k);
+    let params0 = EinetParams::init(&plan, family, 0);
+
+    println!(
+        "sharding scaling — RAT D={num_vars} depth={depth} R={replica} K={k}, \
+         N={n}, batch={batch} ({} params)",
+        params0.num_params()
+    );
+    let mut table = Table::new(&[
+        "engine", "shards", "train t/epoch", "train samples/s", "serve samples/s",
+    ]);
+    let engines: [(&str, EngineFactory); 2] = [
+        ("dense", boxed_build::<DenseEngine>),
+        ("sparse", boxed_build::<SparseEngine>),
+    ];
+    let shard_counts = [1usize, 2, 4];
+    let mut rows: Vec<json::Json> = Vec::new();
+    let mut speedup_4x = Vec::new();
+    for (name, factory) in engines {
+        let mut base_train = 0.0f64;
+        for &shards in &shard_counts {
+            let r = run_point(
+                factory, &plan, family, &params0, &data.data, n, batch, shards, reps,
+            );
+            if shards == 1 {
+                base_train = r.train_samples_per_s;
+            }
+            table.row(vec![
+                name.to_string(),
+                format!("{shards}"),
+                fmt_si(n as f64 / r.train_samples_per_s),
+                format!("{:.0}", r.train_samples_per_s),
+                format!("{:.0}", r.serve_samples_per_s),
+            ]);
+            println!(
+                "{name} x{shards}: train {:.0} samples/s, serve {:.0} samples/s",
+                r.train_samples_per_s, r.serve_samples_per_s
+            );
+            if shards == 4 {
+                let s = r.train_samples_per_s / base_train;
+                println!("{name}: 4-shard train speedup {s:.2}x over 1-shard");
+                speedup_4x.push((name, s));
+            }
+            rows.push(json::obj(vec![
+                ("engine", json::s(name)),
+                ("shards", json::num(shards as f64)),
+                ("train_samples_per_s", json::num(r.train_samples_per_s)),
+                ("serve_samples_per_s", json::num(r.serve_samples_per_s)),
+            ]));
+        }
+    }
+    println!("\n{}", table.render());
+
+    let mut summary = vec![
+        ("experiment", json::s("sharding_scaling")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(num_vars as f64)),
+        ("depth", json::num(depth as f64)),
+        ("replica", json::num(replica as f64)),
+        ("k", json::num(k as f64)),
+        ("n", json::num(n as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(rows)),
+    ];
+    for (name, s) in &speedup_4x {
+        summary.push(match *name {
+            "dense" => ("train_speedup_4x_dense", json::num(*s)),
+            _ => ("train_speedup_4x_sparse", json::num(*s)),
+        });
+    }
+    let report = json::obj(summary);
+    std::fs::write("BENCH_sharding.json", report.to_string())
+        .expect("write BENCH_sharding.json");
+    println!("wrote BENCH_sharding.json");
+}

@@ -1,37 +1,58 @@
 //! L3 coordination: multi-threaded EM training (parameter-server pattern),
-//! the AOT-backed trainer that drives the PJRT executables, and a batched
+//! scope-partitioned *model-parallel* execution ([`ShardedPool`]), the
+//! AOT-backed trainer that drives the PJRT executables, and a batched
 //! inference service for conditional queries.
 //!
-//! Everything here is generic over `E:`[`Engine`] — the dense EiNet
-//! layout, the sparse baseline, and any future backend train and serve
-//! through the same code path. The parameter-server state is a single
-//! contiguous [`EinetParams`] arena behind an `RwLock`: workers take read
-//! locks for the E-step, the coordinator takes the write lock for the
-//! M-step, and the reduce is [`EmStats::merge`] — one flat element-wise
-//! add, because the statistics mirror the arena layout.
+//! Everything here is engine-agnostic — the dense EiNet layout, the
+//! sparse baseline, and any backend registered in
+//! [`crate::engine::registry::EngineRegistry`] train and serve through
+//! the same code paths ([`train_parallel`] is generic over `E:`
+//! [`Engine`]; the sharded pool takes a runtime
+//! [`crate::engine::registry::EngineFactory`]).
 //!
-//! Worker threads are **persistent**: spawned once per training run, fed
-//! (lo, hi) shard ranges over a channel per mini-batch, each owning a
-//! private engine for the whole run. (The previous design re-spawned a
-//! thread per mini-batch; on small batches thread churn dominated the
-//! E-step — see `benches/fig3_train.rs`, which records the speedup in
-//! BENCH_fig3.json.)
+//! Two parallelism axes compose with one parameter server:
+//!
+//! * **data-parallel** ([`train_parallel`]) — each mini-batch is split
+//!   into row ranges across a pool of persistent workers, each owning a
+//!   private full-model engine; the E-step reduce is [`EmStats::merge`]
+//!   (one flat element-wise add, because statistics mirror the arena).
+//! * **model-parallel** ([`ShardedPool`], [`train_sharded`]) — the
+//!   *circuit* is split instead: [`crate::engine::exec::PlanPartition`]
+//!   cuts the step program into scope-disjoint segments, each persistent
+//!   worker executes its segment over the whole batch, and only the typed
+//!   boundary state crosses threads — per-region activation rows forward,
+//!   gradient rows backward, one `sel` u32 per region·sample when
+//!   sampling. The parameter server broadcasts each worker its
+//!   [`crate::engine::ArenaShard`] — the spans its segment reads — not
+//!   the whole arena, so a worker's resident parameter set (and its
+//!   broadcast traffic) scales with the shard. Because every EM statistic
+//!   scalar is owned by exactly one segment, N-shard training is
+//!   bit-identical to 1-shard training on the same seed.
+//!
+//! Worker threads are **persistent** in both pools: spawned once per
+//! run, fed jobs over channels, each owning a private engine. (The
+//! previous design re-spawned a thread per mini-batch; on small batches
+//! thread churn dominated the E-step — see `benches/fig3_train.rs`.)
 //!
 //! tokio is unavailable in the offline registry; std threads + channels
 //! implement the same patterns (DESIGN.md §3).
 
 pub mod server;
 
-use std::sync::{mpsc, RwLock};
+use std::sync::{mpsc, Arc, RwLock};
 
 use crate::em::{m_step, stats_from_natural_grads, EmConfig};
+use crate::engine::exec::PlanPartition;
+use crate::engine::registry::EngineFactory;
 use crate::engine::{
-    EinetParams, EmStats, Engine, LevelSpec, ParamArena, ParamLayout,
+    ArenaShard, DecodeMode, EinetParams, EmStats, Engine, LevelSpec, ParamArena,
+    ParamLayout,
 };
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
 use crate::runtime::{AotParams, ArtifactMeta, Executable};
 use crate::util::error::Result;
+use crate::util::rng::Rng;
 use crate::{anyhow, ensure};
 
 /// Configuration for the multi-threaded EM trainer.
@@ -259,6 +280,544 @@ pub fn per_sample_ll<E: Engine>(
         b0 += bn;
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Scope-partitioned model-parallel execution
+// ---------------------------------------------------------------------------
+
+/// What the coordinator sends a segment worker.
+enum ShardJob {
+    /// new parameter spans from the server (applies before later jobs —
+    /// the channel is ordered)
+    Params(ArenaShard),
+    /// forward the worker's segment over the batch; reply `Boundary`
+    Forward {
+        x: Arc<Vec<f32>>,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+    },
+    /// backward sweep seeded with the spine's boundary gradients
+    /// (packed in `Segment::boundary` order); reply `Stats`
+    Backward {
+        x: Arc<Vec<f32>>,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        grads: Vec<f32>,
+    },
+    /// finish the top-down decode locally from the spine's `sel` entries
+    /// (packed in `Segment::sel_in` order); reply `Decoded`
+    Decode {
+        mask: Arc<Vec<f32>>,
+        mode: DecodeMode,
+        bn: usize,
+        salt: u64,
+        sel: Vec<u32>,
+    },
+}
+
+/// A segment worker's reply.
+enum ShardReply {
+    /// boundary activation rows, packed in `Segment::boundary` order
+    Boundary(Vec<f32>),
+    /// the segment's E-step statistics (its scalars only; everything
+    /// else stays zero, so the coordinator's merge is exact)
+    Stats(Box<EmStats>),
+    /// leaf emissions for the segment's owned variables: var-major
+    /// values plus the written mask (see [`Engine::decode_segment`])
+    Decoded { vals: Vec<f32>, written: Vec<bool> },
+}
+
+#[allow(clippy::too_many_arguments)]
+fn shard_worker(
+    factory: EngineFactory,
+    plan: LayeredPlan,
+    family: LeafFamily,
+    batch_cap: usize,
+    seg: crate::engine::exec::Segment,
+    layout: ParamLayout,
+    jobs: mpsc::Receiver<ShardJob>,
+    replies: mpsc::Sender<ShardReply>,
+) {
+    let mut engine = factory(plan, family, batch_cap);
+    // worker-local arena: only the broadcast spans are ever written or
+    // read — the engines refresh their per-batch caches per step, scoped
+    // to the segment, so the unowned remainder stays untouched
+    // lazily-zero memory and the worker's resident parameter set (and
+    // cache-refresh work) scales with the shard, not the model
+    let mut local = ParamArena::zeros(layout);
+    let od = family.obs_dim();
+    while let Ok(job) = jobs.recv() {
+        match job {
+            ShardJob::Params(shard) => shard.scatter_into(&mut local),
+            ShardJob::Forward { x, mask, bn } => {
+                engine.forward_steps(&local, &x, &mask, bn, &seg.steps);
+                let mut out = Vec::new();
+                for &rid in &seg.boundary {
+                    engine.export_rows(rid, bn, &mut out);
+                }
+                if replies.send(ShardReply::Boundary(out)).is_err() {
+                    break;
+                }
+            }
+            ShardJob::Backward { x, mask, bn, grads } => {
+                engine.clear_grad();
+                let mut off = 0usize;
+                for &rid in &seg.boundary {
+                    let w = engine.exec_plan().region_width[rid];
+                    engine.import_grad_rows(rid, bn, &grads[off..off + bn * w]);
+                    off += bn * w;
+                }
+                let mut stats = EmStats::zeros(&local.layout);
+                engine.backward_steps(&local, &x, &mask, bn, &seg.steps, &mut stats);
+                if replies.send(ShardReply::Stats(Box::new(stats))).is_err() {
+                    break;
+                }
+            }
+            ShardJob::Decode {
+                mask,
+                mode,
+                bn,
+                salt,
+                sel,
+            } => {
+                let mut vals = vec![0.0f32; seg.vars.len() * bn * od];
+                let mut written = vec![false; seg.vars.len() * bn];
+                engine.decode_segment(
+                    &local,
+                    bn,
+                    &mask,
+                    mode,
+                    salt,
+                    &seg.sample_steps,
+                    false,
+                    &seg.sel_in,
+                    &sel,
+                    &seg.vars,
+                    &mut vals,
+                    &mut written,
+                );
+                if replies
+                    .send(ShardReply::Decoded { vals, written })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Scatter a segment's var-major leaf emissions into `[bn, D, obs_dim]`
+/// rows (only positions the segment actually wrote).
+fn scatter_decoded(
+    out: &mut [f32],
+    vars: &[usize],
+    vals: &[f32],
+    written: &[bool],
+    bn: usize,
+    od: usize,
+    d_total: usize,
+) {
+    for (j, &d) in vars.iter().enumerate() {
+        for b in 0..bn {
+            if written[j * bn + b] {
+                let src = &vals[(j * bn + b) * od..(j * bn + b + 1) * od];
+                out[(b * d_total + d) * od..(b * d_total + d + 1) * od]
+                    .copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// The scope-partitioned execution pool: one persistent worker thread per
+/// shard segment (each with a private engine built by `factory` and only
+/// its [`ArenaShard`] of the parameters), with the spine executed inline
+/// by the calling thread against the full parameter-server arena.
+///
+/// `forward`/`backward`/`decode` must be called in that order per batch
+/// (activations persist between them, exactly like a single engine), and
+/// [`ShardedPool::train_step`] bundles a whole stochastic-EM step:
+/// forward → backward+reduce → M-step → per-shard broadcast. All three
+/// passes are bit-identical to single-engine execution: forward because
+/// the steps and arithmetic are unchanged, backward because every
+/// statistic scalar is owned by exactly one segment (the merge adds
+/// worker stats into zeros), and Argmax decoding because it is
+/// deterministic over identical activations — `Sample` decoding is also
+/// bit-identical because draws are counter-based per (sample, region)
+/// under a shared salt.
+pub struct ShardedPool {
+    partition: Arc<PlanPartition>,
+    spine: Box<dyn Engine + Send>,
+    params: EinetParams,
+    family: LeafFamily,
+    batch_cap: usize,
+    job_txs: Vec<mpsc::Sender<ShardJob>>,
+    res_rxs: Vec<mpsc::Receiver<ShardReply>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    last_x: Option<Arc<Vec<f32>>>,
+    last_mask: Option<Arc<Vec<f32>>>,
+    last_bn: usize,
+}
+
+impl ShardedPool {
+    /// Build the pool: compile the plan once, cut it into `n_shards`
+    /// segments, spawn the workers, and broadcast the initial parameter
+    /// shards.
+    pub fn new(
+        factory: EngineFactory,
+        plan: &LayeredPlan,
+        family: LeafFamily,
+        params: &EinetParams,
+        n_shards: usize,
+        batch_cap: usize,
+    ) -> Self {
+        assert_eq!(
+            params.family(),
+            family,
+            "parameter arena family does not match the configured family"
+        );
+        let spine = factory(plan.clone(), family, batch_cap);
+        let mut partition = PlanPartition::cut(spine.exec_plan(), n_shards);
+        // heavily shared structures can yield fewer clusters than
+        // requested shards; re-cut at the non-empty count so no idle
+        // worker threads (with full engines and per-batch channel
+        // round-trips) are ever spawned
+        let busy = partition
+            .shards
+            .iter()
+            .filter(|s| !s.steps.is_empty())
+            .count()
+            .max(1);
+        if busy < partition.n_shards {
+            partition = PlanPartition::cut(spine.exec_plan(), busy);
+        }
+        let partition = Arc::new(partition);
+        let layout = params.layout.clone();
+        let mut job_txs = Vec::with_capacity(partition.n_shards);
+        let mut res_rxs = Vec::with_capacity(partition.n_shards);
+        let mut handles = Vec::with_capacity(partition.n_shards);
+        for s in 0..partition.n_shards {
+            let (jtx, jrx) = mpsc::channel::<ShardJob>();
+            let (rtx, rrx) = mpsc::channel::<ShardReply>();
+            let seg = partition.shards[s].clone();
+            let plan_c = plan.clone();
+            let layout_c = layout.clone();
+            handles.push(std::thread::spawn(move || {
+                shard_worker(factory, plan_c, family, batch_cap, seg, layout_c, jrx, rtx)
+            }));
+            job_txs.push(jtx);
+            res_rxs.push(rrx);
+        }
+        let mut pool = Self {
+            partition,
+            spine,
+            params: params.clone(),
+            family,
+            batch_cap,
+            job_txs,
+            res_rxs,
+            handles,
+            last_x: None,
+            last_mask: None,
+            last_bn: 0,
+        };
+        pool.broadcast();
+        pool
+    }
+
+    /// The compiled cut (inspection / diagnostics).
+    pub fn partition(&self) -> &PlanPartition {
+        &self.partition
+    }
+
+    /// The parameter-server master arena.
+    pub fn params(&self) -> &EinetParams {
+        &self.params
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_cap
+    }
+
+    /// Push each worker its current parameter spans (a slice copy per
+    /// shard, not the whole arena).
+    pub fn broadcast(&mut self) {
+        for (s, tx) in self.job_txs.iter().enumerate() {
+            let shard =
+                ArenaShard::gather(&self.params, &self.partition.shards[s].param_spans);
+            tx.send(ShardJob::Params(shard))
+                .expect("shard worker hung up");
+        }
+    }
+
+    /// Replace the master parameters and rebroadcast.
+    pub fn set_params(&mut self, params: &EinetParams) {
+        self.params.clone_from(params);
+        self.broadcast();
+    }
+
+    /// Segmented forward pass over one batch: shards run concurrently,
+    /// boundary activations flow to the spine, the spine finishes and
+    /// reads the root.
+    pub fn forward(&mut self, x: &[f32], mask: &[f32], bn: usize, logp: &mut [f32]) {
+        assert!(bn <= self.batch_cap, "batch exceeds pool capacity");
+        let x = Arc::new(x.to_vec());
+        let mask = Arc::new(mask.to_vec());
+        for tx in &self.job_txs {
+            tx.send(ShardJob::Forward {
+                x: x.clone(),
+                mask: mask.clone(),
+                bn,
+            })
+            .expect("shard worker hung up");
+        }
+        for (s, rx) in self.res_rxs.iter().enumerate() {
+            match rx.recv().expect("shard worker died mid-forward") {
+                ShardReply::Boundary(buf) => {
+                    let mut off = 0usize;
+                    for &rid in &self.partition.shards[s].boundary {
+                        let w = self.spine.exec_plan().region_width[rid];
+                        self.spine.import_rows(rid, bn, &buf[off..off + bn * w]);
+                        off += bn * w;
+                    }
+                }
+                _ => unreachable!("forward expects a boundary reply"),
+            }
+        }
+        self.spine.forward_steps(
+            &self.params,
+            x.as_slice(),
+            mask.as_slice(),
+            bn,
+            &self.partition.spine.steps,
+        );
+        self.spine.read_logp(bn, &mut logp[..bn]);
+        self.last_x = Some(x);
+        self.last_mask = Some(mask);
+        self.last_bn = bn;
+    }
+
+    /// Segmented backward pass for the batch last given to `forward`:
+    /// spine first (root seed + its steps), boundary gradients out to the
+    /// shards, per-shard E-steps reduced into `stats` via
+    /// [`EmStats::merge`].
+    pub fn backward(&mut self, stats: &mut EmStats) {
+        let x = self.last_x.clone().expect("backward without forward");
+        let mask = self.last_mask.clone().expect("backward without forward");
+        let bn = self.last_bn;
+        self.spine.clear_grad();
+        self.spine.seed_root_grad(bn, stats);
+        self.spine.backward_steps(
+            &self.params,
+            x.as_slice(),
+            mask.as_slice(),
+            bn,
+            &self.partition.spine.steps,
+            stats,
+        );
+        for (s, tx) in self.job_txs.iter().enumerate() {
+            let mut grads = Vec::new();
+            for &rid in &self.partition.shards[s].boundary {
+                self.spine.export_grad_rows(rid, bn, &mut grads);
+            }
+            tx.send(ShardJob::Backward {
+                x: x.clone(),
+                mask: mask.clone(),
+                bn,
+                grads,
+            })
+            .expect("shard worker hung up");
+        }
+        for rx in &self.res_rxs {
+            match rx.recv().expect("shard worker died mid-backward") {
+                ShardReply::Stats(s) => stats.merge(&s),
+                _ => unreachable!("backward expects a stats reply"),
+            }
+        }
+    }
+
+    /// Segmented top-down decode for the batch last given to `forward`:
+    /// the spine walks the root down to the cut and hands each shard its
+    /// `sel` entries (one u32 per region·sample — the only cross-shard
+    /// sampling state); shards finish concurrently and their leaf
+    /// emissions are scattered into `out` (`[bn, D, obs_dim]`, pre-filled
+    /// with evidence).
+    pub fn decode(
+        &mut self,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        assert_eq!(bn, self.last_bn, "decode must follow a matching forward");
+        let d_total = self.spine.plan().graph.num_vars;
+        let od = self.family.obs_dim();
+        assert_eq!(out.len(), bn * d_total * od);
+        let salt = rng.next_u64();
+        let mask_arc = Arc::new(mask.to_vec());
+        // spine first: owns the root, produces the boundary sel entries
+        let n_spine_vars = self.partition.spine.vars.len();
+        let mut vals = vec![0.0f32; n_spine_vars * bn * od];
+        let mut written = vec![false; n_spine_vars * bn];
+        self.spine.decode_segment(
+            &self.params,
+            bn,
+            mask,
+            mode,
+            salt,
+            &self.partition.spine.sample_steps,
+            true,
+            &[],
+            &[],
+            &self.partition.spine.vars,
+            &mut vals,
+            &mut written,
+        );
+        scatter_decoded(
+            out,
+            &self.partition.spine.vars,
+            &vals,
+            &written,
+            bn,
+            od,
+            d_total,
+        );
+        for (s, tx) in self.job_txs.iter().enumerate() {
+            let seg = &self.partition.shards[s];
+            let sel = self.spine.export_sel(&seg.sel_in, bn);
+            tx.send(ShardJob::Decode {
+                mask: mask_arc.clone(),
+                mode,
+                bn,
+                salt,
+                sel,
+            })
+            .expect("shard worker hung up");
+        }
+        for (s, rx) in self.res_rxs.iter().enumerate() {
+            match rx.recv().expect("shard worker died mid-decode") {
+                ShardReply::Decoded { vals, written } => scatter_decoded(
+                    out,
+                    &self.partition.shards[s].vars,
+                    &vals,
+                    &written,
+                    bn,
+                    od,
+                    d_total,
+                ),
+                _ => unreachable!("decode expects a decoded reply"),
+            }
+        }
+    }
+
+    /// One stochastic-EM step on a batch: segmented forward + backward,
+    /// M-step on the master arena, per-shard span broadcast. Returns the
+    /// batch log-likelihood sum.
+    pub fn train_step(&mut self, x: &[f32], mask: &[f32], bn: usize, em: &EmConfig) -> f64 {
+        let mut logp = vec![0.0f32; bn];
+        self.forward(x, mask, bn, &mut logp);
+        let mut stats = EmStats::zeros(&self.params.layout);
+        self.backward(&mut stats);
+        let ll = stats.loglik;
+        m_step(&mut self.params, &stats, em);
+        self.broadcast();
+        ll
+    }
+}
+
+impl Drop for ShardedPool {
+    fn drop(&mut self) {
+        // dropping the senders shuts the workers down; join to not leak
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Configuration for [`train_sharded`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    pub n_shards: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub em: EmConfig,
+    /// log every n-th epoch (0: silent)
+    pub log_every: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            n_shards: 2,
+            epochs: 10,
+            batch_size: 100,
+            em: EmConfig {
+                step_size: 0.5,
+                ..Default::default()
+            },
+            log_every: 1,
+        }
+    }
+}
+
+/// Model-parallel stochastic EM over a [`ShardedPool`]: the circuit (not
+/// the batch) is split across workers. Bit-identical to single-engine
+/// stochastic EM with the same schedule — including at `n_shards = 1` —
+/// because every statistic scalar is owned by exactly one segment.
+pub fn train_sharded(
+    factory: EngineFactory,
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &mut EinetParams,
+    data: &[f32],
+    n: usize,
+    cfg: &ShardConfig,
+) -> Vec<EpochStats> {
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    assert_eq!(data.len(), n * row);
+    let mask = vec![1.0f32; d];
+    let mut pool = ShardedPool::new(
+        factory,
+        plan,
+        family,
+        params,
+        cfg.n_shards,
+        cfg.batch_size,
+    );
+    let mut history = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let t = crate::util::Timer::new();
+        let mut epoch_ll = 0.0f64;
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = cfg.batch_size.min(n - b0);
+            epoch_ll +=
+                pool.train_step(&data[b0 * row..(b0 + bn) * row], &mask, bn, &cfg.em);
+            b0 += bn;
+        }
+        let rec = EpochStats {
+            epoch,
+            train_ll: epoch_ll / n as f64,
+            seconds: t.elapsed_s(),
+        };
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            crate::info!(
+                "epoch {:>3}: train LL {:.4} ({:.2}s, {} shards)",
+                rec.epoch,
+                rec.train_ll,
+                rec.seconds,
+                cfg.n_shards
+            );
+        }
+        history.push(rec);
+    }
+    params.clone_from(pool.params());
+    history
 }
 
 // ---------------------------------------------------------------------------
@@ -637,6 +1196,109 @@ mod tests {
                 b.train_ll
             );
         }
+    }
+
+    #[test]
+    fn sharded_training_is_bit_identical_to_single_engine() {
+        let nv = 16;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 4, 3), 3);
+        let data = correlated(128, nv, 5);
+        let family = LeafFamily::Bernoulli;
+        let em = EmConfig {
+            step_size: 0.5,
+            ..Default::default()
+        };
+        // reference: monolithic single-engine stochastic EM, same schedule
+        let mut p_ref = EinetParams::init(&plan, family, 21);
+        {
+            let mut engine = DenseEngine::new(plan.clone(), family, 32);
+            let mask = vec![1.0f32; nv];
+            let mut logp = vec![0.0f32; 32];
+            for _ in 0..2 {
+                let mut b0 = 0usize;
+                while b0 < 128 {
+                    let bn = 32.min(128 - b0);
+                    let chunk = &data[b0 * nv..(b0 + bn) * nv];
+                    let mut stats = EmStats::zeros_like(&p_ref);
+                    engine.forward(&p_ref, chunk, &mask, &mut logp[..bn]);
+                    engine.backward(&p_ref, chunk, &mask, bn, &mut stats);
+                    m_step(&mut p_ref, &stats, &em);
+                    b0 += bn;
+                }
+            }
+        }
+        for shards in [1usize, 3] {
+            let mut p = EinetParams::init(&plan, family, 21);
+            let cfg = ShardConfig {
+                n_shards: shards,
+                epochs: 2,
+                batch_size: 32,
+                em,
+                log_every: 0,
+            };
+            train_sharded(
+                crate::engine::registry::boxed_build::<DenseEngine>,
+                &plan,
+                family,
+                &mut p,
+                &data,
+                128,
+                &cfg,
+            );
+            assert_eq!(
+                p.data, p_ref.data,
+                "{shards}-shard EM diverged from the single-engine reference"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_forward_and_decode_match_single_engine_bitwise() {
+        let nv = 12;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 3, 7), 3);
+        let family = LeafFamily::Bernoulli;
+        let params = EinetParams::init(&plan, family, 9);
+        let bn = 8;
+        let mut rng_data = crate::util::rng::Rng::new(2);
+        let x: Vec<f32> = (0..bn * nv)
+            .map(|_| if rng_data.bernoulli(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        let mut mask = vec![1.0f32; nv];
+        for d in nv / 2..nv {
+            mask[d] = 0.0;
+        }
+        // single engine reference
+        let mut engine = DenseEngine::new(plan.clone(), family, bn);
+        let mut lp_ref = vec![0.0f32; bn];
+        engine.forward(&params, &x, &mask, &mut lp_ref);
+        let mut out_ref = x.clone();
+        let mut rng_ref = crate::util::rng::Rng::new(77);
+        engine.decode_batch(
+            &params,
+            bn,
+            &mask,
+            DecodeMode::Sample,
+            &mut rng_ref,
+            &mut out_ref,
+        );
+        // sharded pool (same salt through the same fresh seed)
+        let mut pool = ShardedPool::new(
+            crate::engine::registry::boxed_build::<DenseEngine>,
+            &plan,
+            family,
+            &params,
+            3,
+            bn,
+        );
+        let mut lp = vec![0.0f32; bn];
+        pool.forward(&x, &mask, bn, &mut lp);
+        for (a, b) in lp_ref.iter().zip(&lp) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sharded forward diverged");
+        }
+        let mut out = x.clone();
+        let mut rng = crate::util::rng::Rng::new(77);
+        pool.decode(bn, &mask, DecodeMode::Sample, &mut rng, &mut out);
+        assert_eq!(out_ref, out, "sharded Sample decode diverged");
     }
 
     #[test]

@@ -8,19 +8,66 @@
 //! `max_wait`), groups them by mask, and serves each group with a single
 //! batched forward pass — generation groups additionally run ONE batched
 //! top-down decode ([`Engine::decode_batch`], the compiled `SamplePlan`
-//! reverse program) for the whole group. The dispatcher is generic over
-//! `E:`[`Engine`] — any backend that implements the trait serves through
-//! the same router, so high-throughput conditional generation comes for
-//! free on every backend.
+//! reverse program) for the whole group. The dispatcher is
+//! backend-agnostic: a private engine of any type implementing
+//! [`Engine`] ([`InferenceServer::start`]), a backend picked by name
+//! from the runtime registry ([`InferenceServer::start_named`]), or a
+//! scope-partitioned [`ShardedPool`]
+//! ([`InferenceServer::start_sharded`]) whose segment workers each hold
+//! only their parameter shard — forward *and* generation batches then
+//! execute across the cut, with one `sel` u32 per region·sample as the
+//! only cross-shard sampling state.
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use super::ShardedPool;
+use crate::engine::registry::{EngineFactory, EngineRegistry};
 use crate::engine::{DecodeMode, EinetParams, Engine};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
+
+/// What the dispatcher executes batches on: one private engine, or a
+/// scope-partitioned worker pool ([`ShardedPool`]) for models larger than
+/// one core's cache. Both present the same two calls the router needs.
+enum Backend {
+    /// a private engine plus the one resident parameter arena
+    Single(Box<dyn Engine + Send>, EinetParams),
+    /// the pool owns the master arena (workers hold only their shards),
+    /// so no second full copy lives on the serving host
+    Sharded(ShardedPool),
+}
+
+impl Backend {
+    fn forward(&mut self, x: &[f32], mask: &[f32], logp: &mut [f32]) {
+        match self {
+            Backend::Single(e, params) => e.forward(params, x, mask, logp),
+            Backend::Sharded(p) => {
+                let bn = logp.len();
+                p.forward(x, mask, bn, logp)
+            }
+        }
+    }
+
+    fn decode_batch(
+        &mut self,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        match self {
+            Backend::Single(e, params) => {
+                e.decode_batch(params, bn, mask, mode, rng, out)
+            }
+            Backend::Sharded(p) => p.decode(bn, mask, mode, rng, out),
+        }
+    }
+}
 
 /// A marginal-likelihood query: evidence values + evidence mask.
 pub struct Query {
@@ -71,7 +118,7 @@ pub struct ServerStats {
 impl InferenceServer {
     /// Spawn the dispatcher with its private engine of type `E` (sampler
     /// seeded with 0; use [`InferenceServer::start_seeded`] to pick one).
-    pub fn start<E: Engine + 'static>(
+    pub fn start<E: Engine + Send + 'static>(
         plan: LayeredPlan,
         family: LeafFamily,
         params: EinetParams,
@@ -83,7 +130,7 @@ impl InferenceServer {
 
     /// Spawn the dispatcher with an explicit seed for the generation
     /// endpoint's RNG (reproducible serving).
-    pub fn start_seeded<E: Engine + 'static>(
+    pub fn start_seeded<E: Engine + Send + 'static>(
         plan: LayeredPlan,
         family: LeafFamily,
         params: EinetParams,
@@ -91,9 +138,81 @@ impl InferenceServer {
         max_wait: Duration,
         seed: u64,
     ) -> Self {
+        assert_eq!(
+            params.family(),
+            family,
+            "parameter arena family does not match the configured family"
+        );
+        let backend =
+            Backend::Single(Box::new(E::build(plan.clone(), family, max_batch)), params);
+        Self::start_backend(plan, family, backend, max_batch, max_wait, seed)
+    }
+
+    /// Spawn the dispatcher on a backend picked from the runtime engine
+    /// registry by name — the serving half of per-request backend
+    /// selection (one server process per engine name; clients pick the
+    /// endpoint).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_named(
+        registry: &EngineRegistry,
+        name: &str,
+        plan: LayeredPlan,
+        family: LeafFamily,
+        params: EinetParams,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+    ) -> Result<Self> {
+        assert_eq!(
+            params.family(),
+            family,
+            "parameter arena family does not match the configured family"
+        );
+        let backend =
+            Backend::Single(registry.build(name, plan.clone(), family, max_batch)?, params);
+        Ok(Self::start_backend(
+            plan, family, backend, max_batch, max_wait, seed,
+        ))
+    }
+
+    /// Spawn the dispatcher over a scope-partitioned [`ShardedPool`]:
+    /// forward and generation batches execute across `n_shards` segment
+    /// workers, with each worker holding only its parameter shard.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_sharded(
+        factory: EngineFactory,
+        plan: LayeredPlan,
+        family: LeafFamily,
+        params: EinetParams,
+        n_shards: usize,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+    ) -> Self {
+        let pool =
+            ShardedPool::new(factory, &plan, family, &params, n_shards, max_batch);
+        drop(params); // the pool's master arena is the single resident copy
+        Self::start_backend(
+            plan,
+            family,
+            Backend::Sharded(pool),
+            max_batch,
+            max_wait,
+            seed,
+        )
+    }
+
+    fn start_backend(
+        plan: LayeredPlan,
+        family: LeafFamily,
+        backend: Backend,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<Request>();
         let handle = std::thread::spawn(move || {
-            dispatcher::<E>(plan, family, params, rx, max_batch, max_wait, seed)
+            dispatcher(plan, family, backend, rx, max_batch, max_wait, seed)
         });
         Self {
             tx,
@@ -178,24 +297,18 @@ fn mask_cmp(a: &[f32], b: &[f32]) -> std::cmp::Ordering {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn dispatcher<E: Engine>(
+fn dispatcher(
     plan: LayeredPlan,
     family: LeafFamily,
-    params: EinetParams,
+    mut engine: Backend,
     rx: Receiver<Request>,
     max_batch: usize,
     max_wait: Duration,
     seed: u64,
 ) -> ServerStats {
-    assert_eq!(
-        params.family(),
-        family,
-        "parameter arena family does not match the configured family"
-    );
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
-    let mut engine = E::build(plan, family, max_batch);
     let mut rng = Rng::new(seed);
     let mut stats = ServerStats::default();
     let mut pending: Vec<Request> = Vec::new();
@@ -278,7 +391,7 @@ fn dispatcher<E: Engine>(
                 x[i * row..(i + 1) * row].copy_from_slice(&q.x);
             }
             let mut logp = vec![0.0f32; bn];
-            engine.forward(&params, &x, &mask, &mut logp);
+            engine.forward(&x, &mask, &mut logp);
             for (q, &lp) in group.iter().zip(&logp) {
                 let _ = q.reply.send(lp);
             }
@@ -307,9 +420,9 @@ fn dispatcher<E: Engine>(
                 x[i * row..(i + 1) * row].copy_from_slice(&q.x);
             }
             let mut logp = vec![0.0f32; bn];
-            engine.forward(&params, &x, &mask, &mut logp);
+            engine.forward(&x, &mask, &mut logp);
             let mut out = x;
-            engine.decode_batch(&params, bn, &mask, mode, &mut rng, &mut out);
+            engine.decode_batch(bn, &mask, mode, &mut rng, &mut out);
             for (i, q) in group.iter().enumerate() {
                 let _ = q.reply.send(out[i * row..(i + 1) * row].to_vec());
             }
@@ -521,6 +634,96 @@ mod tests {
         // pass must have served several requests at once (see the
         // max_group note in serves_batched_queries_correctly)
         assert!(stats.max_group >= 2, "generation never coalesced");
+    }
+
+    #[test]
+    fn sharded_server_matches_direct_engine_and_generates() {
+        // the segmented serving path answers log-prob queries bit-exactly
+        // like a private engine, and generation (forward + sharded
+        // decode) respects evidence
+        let nv = 10;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 3, 11), 3);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 11);
+        let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 1);
+        let server = InferenceServer::start_sharded(
+            crate::engine::registry::boxed_build::<DenseEngine>,
+            plan,
+            LeafFamily::Bernoulli,
+            params.clone(),
+            3,
+            8,
+            Duration::from_millis(2),
+            13,
+        );
+        let mask = vec![1.0f32; nv];
+        for i in 0..8 {
+            let x: Vec<f32> = (0..nv).map(|d| ((i >> d) & 1) as f32).collect();
+            let got = server.query(x.clone(), mask.clone());
+            let mut want = vec![0.0f32];
+            direct.forward(&params, &x, &mask, &mut want);
+            assert_eq!(
+                got.to_bits(),
+                want[0].to_bits(),
+                "sharded serving diverged: {got} vs {}",
+                want[0]
+            );
+        }
+        let mut gen_mask = vec![0.0f32; nv];
+        gen_mask[0] = 1.0;
+        gen_mask[1] = 1.0;
+        for _ in 0..6 {
+            let mut x = vec![0.0f32; nv];
+            x[0] = 1.0;
+            let out = server.generate(x, gen_mask.clone(), DecodeMode::Sample);
+            assert_eq!(out[0], 1.0, "evidence resampled by sharded decode");
+            assert_eq!(out[1], 0.0, "evidence resampled by sharded decode");
+            for &v in &out {
+                assert!(v == 0.0 || v == 1.0, "non-binary completion {v}");
+            }
+        }
+        let stats = server.stop();
+        assert_eq!(stats.queries, 8);
+        assert_eq!(stats.generated, 6);
+    }
+
+    #[test]
+    fn registry_named_serving_selects_backends() {
+        let nv = 5;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 4), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 4);
+        let reg = crate::engine::registry::EngineRegistry::builtin();
+        assert!(InferenceServer::start_named(
+            &reg,
+            "no-such-backend",
+            plan.clone(),
+            LeafFamily::Bernoulli,
+            params.clone(),
+            4,
+            Duration::from_millis(1),
+            0,
+        )
+        .is_err());
+        let mut answers = Vec::new();
+        for name in ["dense", "sparse"] {
+            let server = InferenceServer::start_named(
+                &reg,
+                name,
+                plan.clone(),
+                LeafFamily::Bernoulli,
+                params.clone(),
+                4,
+                Duration::from_millis(1),
+                0,
+            )
+            .unwrap();
+            let x = vec![1.0f32, 0.0, 1.0, 0.0, 1.0];
+            answers.push(server.query(x, vec![1.0f32; nv]));
+            server.stop();
+        }
+        assert!(
+            (answers[0] - answers[1]).abs() < 1e-4,
+            "named backends disagree: {answers:?}"
+        );
     }
 
     #[test]

@@ -83,7 +83,7 @@ impl DenseEngine {
     pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
         let exec = ExecPlan::lower(plan, family, batch_cap);
         let k = exec.k;
-        // sized eagerly (refresh_leaf_const fills it per forward) so
+        // sized eagerly (refresh_leaf_const_region fills it per Leaf step) so
         // memory_footprint is identical before and after the first pass
         let n_comp = exec.n_leaf_components();
         Self {
@@ -144,26 +144,37 @@ impl DenseEngine {
     // forward
     // ------------------------------------------------------------------
 
-    /// See [`Engine::forward`].
-    pub fn forward(
-        &mut self,
-        params: &ParamArena,
-        x: &[f32],
-        mask: &[f32],
-        logp: &mut [f32],
-    ) {
-        let bn = logp.len();
+    /// Per-batch preparation shared by the full and segmented forward
+    /// passes: shape checks (the leaf log-normalizer cache is refreshed
+    /// per Leaf step, so segments only pay for components they own).
+    fn fwd_prepare(&mut self, params: &ParamArena, x: &[f32], mask: &[f32], bn: usize) {
+        let _ = params;
         assert!(bn <= self.exec.batch_cap, "batch exceeds engine capacity");
         let d_total = self.exec.plan.graph.num_vars;
         let od = self.exec.family.obs_dim();
         assert_eq!(x.len(), bn * d_total * od);
         assert_eq!(mask.len(), d_total);
+    }
 
-        exec::refresh_leaf_const(&self.exec, params, &mut self.leaf_const);
-        for si in 0..self.exec.steps.len() {
-            let step = self.exec.steps[si];
-            match step {
-                Step::Leaf { rid, out } => exec::leaf_forward(
+    /// Execute one forward step by index.
+    fn run_forward_step(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        si: usize,
+    ) {
+        let step = self.exec.steps[si];
+        match step {
+            Step::Leaf { rid, out } => {
+                exec::refresh_leaf_const_region(
+                    &self.exec,
+                    params,
+                    &mut self.leaf_const,
+                    rid,
+                );
+                exec::leaf_forward(
                     &self.exec,
                     params,
                     &self.leaf_const,
@@ -173,29 +184,59 @@ impl DenseEngine {
                     mask,
                     bn,
                     &mut self.arena,
-                ),
-                Step::Einsum {
-                    left,
-                    right,
-                    ko,
-                    w,
-                    dest,
-                    to_scratch,
-                    ..
-                } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn),
-                Step::Mix {
-                    out,
-                    ko,
-                    children,
-                    child,
-                    child_stride,
-                    w,
-                    ..
-                } => self.fwd_mix(params, out, ko, children, child, child_stride, w, bn),
+                )
             }
+            Step::Einsum {
+                left,
+                right,
+                ko,
+                w,
+                dest,
+                to_scratch,
+                ..
+            } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn),
+            Step::Mix {
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                ..
+            } => self.fwd_mix(params, out, ko, children, child, child_stride, w, bn),
+        }
+    }
+
+    /// See [`Engine::forward`].
+    pub fn forward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+    ) {
+        let bn = logp.len();
+        self.fwd_prepare(params, x, mask, bn);
+        for si in 0..self.exec.steps.len() {
+            self.run_forward_step(params, x, mask, bn, si);
         }
         for (b, lp) in logp.iter_mut().enumerate() {
             *lp = self.arena[self.exec.root_row(b)];
+        }
+    }
+
+    /// See [`Engine::forward_steps`]: the segmented forward pass.
+    pub fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+    ) {
+        self.fwd_prepare(params, x, mask, bn);
+        for &si in steps {
+            self.run_forward_step(params, x, mask, bn, si);
         }
     }
 
@@ -300,6 +341,97 @@ impl DenseEngine {
     // backward (E-step statistics)
     // ------------------------------------------------------------------
 
+    /// See [`Engine::clear_grad`]: zero (allocating on first use) the
+    /// gradient mirrors of the arena and the mixing scratch.
+    pub fn clear_grad(&mut self) {
+        if self.grad_arena.len() != self.arena.len() {
+            self.grad_arena = vec![0.0; self.arena.len()];
+            self.grad_scratch = vec![0.0; self.scratch.len()];
+        }
+        self.grad_arena.fill(0.0);
+        self.grad_scratch.fill(0.0);
+    }
+
+    /// See [`Engine::seed_root_grad`]: d(sum_b log P_b)/d(log root_b) = 1,
+    /// plus the loglik/count accounting. Requires `clear_grad` first.
+    pub fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
+        for b in 0..bn {
+            let r = self.exec.root_row(b);
+            self.grad_arena[r] = 1.0;
+            stats.loglik += self.arena[r] as f64;
+        }
+        stats.count += bn;
+    }
+
+    /// Size the backward temporaries for this batch.
+    fn bwd_prepare(&mut self, bn: usize) {
+        let k = self.exec.k;
+        if self.t_t.len() < bn * k.max(1) {
+            self.t_t.resize(bn * k.max(1), 0.0);
+        }
+        if self.t_g.len() < bn * k * k {
+            self.t_g.resize(bn * k * k, 0.0);
+        }
+    }
+
+    /// Execute one backward step by index.
+    #[allow(clippy::too_many_arguments)]
+    fn run_backward_step(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        si: usize,
+        stats: &mut EmStats,
+        tbuf: &mut [f32],
+    ) {
+        let step = self.exec.steps[si];
+        match step {
+            Step::Mix {
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                ..
+            } => self.bwd_mix(
+                params,
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                bn,
+                stats,
+            ),
+            Step::Einsum {
+                left,
+                right,
+                ko,
+                w,
+                dest,
+                to_scratch,
+                ..
+            } => self.bwd_einsum(
+                params, left, right, ko, w, dest, to_scratch, bn, stats,
+            ),
+            Step::Leaf { rid, out } => exec::leaf_backward(
+                &self.exec,
+                rid,
+                out,
+                x,
+                mask,
+                bn,
+                &self.grad_arena,
+                tbuf,
+                stats,
+            ),
+        }
+    }
+
     /// See [`Engine::backward`].
     pub fn backward(
         &mut self,
@@ -309,75 +441,32 @@ impl DenseEngine {
         bn: usize,
         stats: &mut EmStats,
     ) {
-        if self.grad_arena.len() != self.arena.len() {
-            self.grad_arena = vec![0.0; self.arena.len()];
-            self.grad_scratch = vec![0.0; self.scratch.len()];
-        }
-        self.grad_arena.fill(0.0);
-        self.grad_scratch.fill(0.0);
-
-        // d(sum_b log P_b)/d(log root_b) = 1
-        for b in 0..bn {
-            let r = self.exec.root_row(b);
-            self.grad_arena[r] = 1.0;
-            stats.loglik += self.arena[r] as f64;
-        }
-        stats.count += bn;
-
-        let k = self.exec.k;
-        if self.t_t.len() < bn * k.max(1) {
-            self.t_t.resize(bn * k.max(1), 0.0);
-        }
-        if self.t_g.len() < bn * k * k {
-            self.t_g.resize(bn * k * k, 0.0);
-        }
+        self.clear_grad();
+        self.seed_root_grad(bn, stats);
+        self.bwd_prepare(bn);
         // one suff-stats scratch for every Leaf step of this pass
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for si in (0..self.exec.steps.len()).rev() {
-            let step = self.exec.steps[si];
-            match step {
-                Step::Mix {
-                    out,
-                    ko,
-                    children,
-                    child,
-                    child_stride,
-                    w,
-                    ..
-                } => self.bwd_mix(
-                    params,
-                    out,
-                    ko,
-                    children,
-                    child,
-                    child_stride,
-                    w,
-                    bn,
-                    stats,
-                ),
-                Step::Einsum {
-                    left,
-                    right,
-                    ko,
-                    w,
-                    dest,
-                    to_scratch,
-                    ..
-                } => self.bwd_einsum(
-                    params, left, right, ko, w, dest, to_scratch, bn, stats,
-                ),
-                Step::Leaf { rid, out } => exec::leaf_backward(
-                    &self.exec,
-                    rid,
-                    out,
-                    x,
-                    mask,
-                    bn,
-                    &self.grad_arena,
-                    &mut tbuf,
-                    stats,
-                ),
-            }
+            self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
+        }
+    }
+
+    /// See [`Engine::backward_steps`]: the segmented backward sweep (the
+    /// ascending index list is processed in reverse). Gradients must have
+    /// been seeded (`seed_root_grad` and/or `import_grad_rows`) first.
+    pub fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    ) {
+        self.bwd_prepare(bn);
+        let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
+        for &si in steps.iter().rev() {
+            self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
         }
     }
 
@@ -572,24 +661,26 @@ impl DenseEngine {
         );
     }
 
-    /// See [`Engine::sample_batch`]: under the all-zero mask every batch
-    /// row of the forward pass would be identical, so ONE 1-row forward
-    /// serves the entire batch and the fused executor reads shared (row 0)
-    /// activations for all samples.
-    pub fn sample_batch(
+    /// See [`Engine::sample_batch_into`]: under the all-zero mask every
+    /// batch row of the forward pass would be identical, so ONE 1-row
+    /// forward serves the entire batch and the fused executor reads shared
+    /// (row 0) activations for all samples, writing into the caller's
+    /// buffer (`[n, D, obs_dim]`).
+    pub fn sample_batch_into(
         &mut self,
         params: &ParamArena,
         n: usize,
         rng: &mut Rng,
         mode: DecodeMode,
-    ) -> Vec<f32> {
+        out: &mut [f32],
+    ) {
         let d = self.exec.plan.graph.num_vars;
         let od = self.exec.family.obs_dim();
         let mask = vec![0.0f32; d];
         let x = vec![0.0f32; d * od];
         let mut logp = vec![0.0f32; 1];
         self.forward(params, &x, &mask, &mut logp);
-        exec::sample_batch_shared_rows(
+        exec::sample_batch_shared_rows_into(
             &self.exec,
             params,
             &self.arena,
@@ -598,7 +689,23 @@ impl DenseEngine {
             mode,
             rng,
             &mut self.samp,
-        )
+            out,
+        );
+    }
+
+    /// See [`Engine::sample_batch`]: the allocating wrapper over
+    /// [`DenseEngine::sample_batch_into`].
+    pub fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let row = self.exec.plan.graph.num_vars * self.exec.family.obs_dim();
+        let mut out = vec![0.0f32; n * row];
+        self.sample_batch_into(params, n, rng, mode, &mut out);
+        out
     }
 
     /// Convenience: unconditional samples via the legacy per-sample walk
@@ -687,8 +794,112 @@ impl Engine for DenseEngine {
         DenseEngine::sample_batch(self, params, n, rng, mode)
     }
 
+    fn sample_batch_into(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+        out: &mut [f32],
+    ) {
+        DenseEngine::sample_batch_into(self, params, n, rng, mode, out)
+    }
+
     fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
         DenseEngine::memory_footprint(self, params)
+    }
+
+    // --- segmented execution -------------------------------------------
+
+    fn exec_plan(&self) -> &ExecPlan {
+        &self.exec
+    }
+
+    fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+    ) {
+        DenseEngine::forward_steps(self, params, x, mask, bn, steps)
+    }
+
+    fn clear_grad(&mut self) {
+        DenseEngine::clear_grad(self)
+    }
+
+    fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
+        DenseEngine::seed_root_grad(self, bn, stats)
+    }
+
+    fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    ) {
+        DenseEngine::backward_steps(self, params, x, mask, bn, steps, stats)
+    }
+
+    fn arena(&self) -> &[f32] {
+        &self.arena
+    }
+
+    fn arena_mut(&mut self) -> &mut [f32] {
+        &mut self.arena
+    }
+
+    fn grad_buf(&self) -> &[f32] {
+        &self.grad_arena
+    }
+
+    fn grad_buf_mut(&mut self) -> &mut [f32] {
+        &mut self.grad_arena
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode_segment(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        salt: u64,
+        steps: &[usize],
+        seed_root: bool,
+        sel_rids: &[usize],
+        sel_src: &[u32],
+        vars: &[usize],
+        vals: &mut [f32],
+        written: &mut [bool],
+    ) {
+        exec::decode_segment(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            bn,
+            mask,
+            mode,
+            salt,
+            &mut self.samp,
+            steps,
+            seed_root,
+            sel_rids,
+            sel_src,
+            vars,
+            vals,
+            written,
+        )
+    }
+
+    fn export_sel(&self, rids: &[usize], bn: usize) -> Vec<u32> {
+        self.samp.export_sel(rids, bn)
     }
 }
 

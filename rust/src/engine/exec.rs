@@ -32,10 +32,38 @@
 //! (all scratch is preallocated and capacity-checked in debug builds).
 //! The legacy per-sample [`decode`] walk is kept as the reference
 //! implementation; in `Argmax` mode the two are bit-identical
-//! (`tests/sampling_parity.rs`). In `Sample` mode they draw the same
-//! distribution but consume the RNG stream in a different order
-//! (step-major over the batch instead of sample-major), so the raw
-//! streams intentionally diverge.
+//! (`tests/sampling_parity.rs`). In `Sample` mode every (sample, region)
+//! visit draws from its own counter-based stream
+//! ([`crate::util::rng::Rng::from_stream`], keyed by a per-call salt), so
+//! the batched executor is reproducible under ANY execution order —
+//! step-major, sample-major, chunked, or sharded across workers — and the
+//! old step-major/sample-major stream divergence is gone by construction.
+//!
+//! # Scope-partitioned segments
+//!
+//! [`PlanPartition::cut`] is the sharding compilation stage on top of the
+//! flat IR: it cuts both step programs into `n` mutually independent
+//! worker [`Segment`]s plus one *spine*. The cut set is the root's direct
+//! children, merged by actual sub-circuit sharing (union–find over
+//! reachability) and LPT-packed into shards by estimated cost. Because
+//! ownership follows scope, a shard's steps read only shard-owned
+//! regions; everything that crosses the cut is in the typed boundary
+//! tables:
+//!
+//! * **forward** — each shard's [`Segment::boundary`] lists the region
+//!   rows the spine reads (one `[bn, K]` block per region);
+//! * **backward** — the same rows, in reverse: the spine hands each shard
+//!   the gradients of its boundary regions, and EM statistics reduce via
+//!   the flat [`super::EmStats::merge`] (every stat scalar is owned by
+//!   exactly one segment, so sharded EM is bit-identical to monolithic);
+//! * **sampling** — [`Segment::sel_in`] lists the regions whose selected
+//!   entry a spine branch writes: ONE u32 per region·sample
+//!   ([`SampleScratch::export_sel`]) is the entire cross-shard sampling
+//!   state, and [`decode_segment`] finishes the walk locally;
+//! * **parameters** — [`Segment::param_spans`] are the arena spans a
+//!   worker actually reads (its einsum/mixing weights plus the theta
+//!   blocks of its variables), which is what the parameter server
+//!   broadcasts ([`super::ArenaShard`]) instead of the whole arena.
 
 use crate::layers::{LayeredPlan, RegionSlot};
 use crate::leaves::LeafFamily;
@@ -258,7 +286,7 @@ pub struct ExecPlan {
 impl ExecPlan {
     /// Number of leaf components (`num_vars * k * num_replica`) — the
     /// size of the per-component log-normalizer cache that
-    /// [`refresh_leaf_const`] maintains and the engines preallocate.
+    /// [`refresh_leaf_const_region`] maintains and the engines preallocate.
     pub fn n_leaf_components(&self) -> usize {
         self.plan.graph.num_vars * self.k * self.layout.num_replica
     }
@@ -395,26 +423,406 @@ impl ExecPlan {
 }
 
 // ---------------------------------------------------------------------------
+// PlanPartition: scope-partitioned segments over the step program
+// ---------------------------------------------------------------------------
+
+/// One scope-contiguous segment of a partitioned plan: a sub-list of the
+/// forward (and reverse/sampling) step program plus everything needed to
+/// run it in isolation — the owned regions and variables, the parameter
+/// spans it reads, and the typed boundary tables describing exactly what
+/// crosses the cut (activation rows forward, gradient rows backward, one
+/// `sel` entry per region·sample during decoding).
+#[derive(Clone, Debug, Default)]
+pub struct Segment {
+    /// ascending indices into [`ExecPlan::steps`]
+    pub steps: Vec<usize>,
+    /// ascending indices into [`SamplePlan::steps`]
+    pub sample_steps: Vec<usize>,
+    /// owned region ids, ascending
+    pub regions: Vec<usize>,
+    /// owned variables (union of owned leaf scopes), ascending
+    pub vars: Vec<usize>,
+    /// owned regions whose activations the spine reads (and whose
+    /// gradients it hands back), ascending
+    pub boundary: Vec<usize>,
+    /// owned regions whose `sel` entry a spine branch writes (the only
+    /// cross-segment sampling state: one u32 per region·sample)
+    pub sel_in: Vec<usize>,
+    /// global [`super::ParamArena`] spans this segment reads, merged and
+    /// ascending — what the parameter server broadcasts to its worker
+    pub param_spans: Vec<(usize, usize)>,
+    /// rough scalar-ops-per-row estimate (for balance diagnostics)
+    pub cost: f64,
+}
+
+impl Segment {
+    /// Total scalar count of the parameter spans (broadcast size / 4).
+    pub fn param_scalars(&self) -> usize {
+        self.param_spans.iter().map(|&(lo, hi)| hi - lo).sum()
+    }
+}
+
+/// The scope-partitioning pass: cut an [`ExecPlan`] (and its reverse
+/// [`SamplePlan`]) into `n_shards` mutually independent worker segments
+/// plus one *spine* segment.
+///
+/// The cut set is the root's direct children. Any two of them either have
+/// disjoint reachable sub-circuits (disjoint scopes cannot share a
+/// region, because a shared region's scope would be a subset of both) or
+/// they share structure — in which case they are merged into one cluster
+/// (union–find over actual reachability, so DAG-shared sub-circuits are
+/// never split). Clusters are LPT–bin-packed into `n_shards` shards by
+/// estimated cost; everything else — the root level, cross-scope mixing —
+/// is the spine. By construction a shard's steps read only shard-owned
+/// regions, so workers run with no communication except the boundary
+/// tables: shard→spine activations forward, spine→shard gradients
+/// backward, spine→shard `sel` entries when sampling.
+///
+/// Structures whose root children all share structure (e.g. dense
+/// Poon–Domingos grids) collapse toward one cluster and execute mostly
+/// serially — correct, just not accelerated; RAT-style replica forests
+/// split cleanly into `2R` clusters.
+pub struct PlanPartition {
+    pub n_shards: usize,
+    /// worker segments, length `n_shards` (some may be empty on tiny or
+    /// heavily shared structures)
+    pub shards: Vec<Segment>,
+    /// the steps no shard owns: root level(s) and shared spines
+    pub spine: Segment,
+    /// region id → owning segment (`n_shards` means the spine)
+    pub owner: Vec<usize>,
+}
+
+fn uf_find(uf: &mut [usize], mut i: usize) -> usize {
+    while uf[i] != i {
+        uf[i] = uf[uf[i]];
+        i = uf[i];
+    }
+    i
+}
+
+impl PlanPartition {
+    /// Cut the plan into `n_shards` worker segments plus the spine.
+    pub fn cut(ep: &ExecPlan, n_shards: usize) -> Self {
+        let n_shards = n_shards.max(1);
+        let graph = &ep.plan.graph;
+        let n_regions = graph.regions.len();
+        let root = graph.root;
+
+        // per-region cost: the scalar work of the steps producing it
+        let mut cost = vec![0.0f64; n_regions];
+        for s in &ep.steps {
+            match *s {
+                Step::Leaf { rid, .. } => {
+                    cost[rid] += (graph.regions[rid].scope.len() * ep.k) as f64;
+                }
+                Step::Einsum { pid, ko, .. } => {
+                    cost[graph.partitions[pid].out] += (ko * ep.k * ep.k) as f64;
+                }
+                Step::Mix { rid, ko, children, .. } => {
+                    cost[rid] += (children * ko) as f64;
+                }
+            }
+        }
+
+        // cut candidates: the root's direct children, deduplicated
+        let mut cand: Vec<usize> = Vec::new();
+        for &pid in &graph.regions[root].partitions {
+            let p = graph.partitions[pid];
+            for rid in [p.left, p.right] {
+                if !cand.contains(&rid) {
+                    cand.push(rid);
+                }
+            }
+        }
+
+        // union–find over candidates by actual reachability sharing;
+        // tag[r] = first candidate that reached region r
+        let mut uf: Vec<usize> = (0..cand.len()).collect();
+        let mut tag: Vec<usize> = vec![usize::MAX; n_regions];
+        for (ci, &c) in cand.iter().enumerate() {
+            let mut vis = vec![false; n_regions];
+            let mut stack = vec![c];
+            while let Some(r) = stack.pop() {
+                if vis[r] {
+                    continue;
+                }
+                vis[r] = true;
+                if tag[r] == usize::MAX {
+                    tag[r] = ci;
+                } else {
+                    let a = uf_find(&mut uf, ci);
+                    let b = uf_find(&mut uf, tag[r]);
+                    if a != b {
+                        uf[a.max(b)] = a.min(b);
+                    }
+                }
+                for &pid in &graph.regions[r].partitions {
+                    let p = graph.partitions[pid];
+                    stack.push(p.left);
+                    stack.push(p.right);
+                }
+            }
+        }
+
+        // cluster costs (each region counted once, at its cluster)
+        let mut cluster_cost = vec![0.0f64; cand.len()];
+        for r in 0..n_regions {
+            if r != root && tag[r] != usize::MAX {
+                let c = uf_find(&mut uf, tag[r]);
+                cluster_cost[c] += cost[r];
+            }
+        }
+
+        // LPT bin-packing of clusters into shards (deterministic:
+        // descending cost, candidate index breaking ties, lowest-loaded
+        // lowest-index shard wins)
+        let mut order: Vec<usize> = (0..cand.len())
+            .filter(|&ci| uf_find(&mut uf, ci) == ci)
+            .collect();
+        order.sort_by(|&a, &b| {
+            cluster_cost[b]
+                .partial_cmp(&cluster_cost[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut shard_load = vec![0.0f64; n_shards];
+        let mut shard_of_cluster = vec![usize::MAX; cand.len()];
+        for &ci in &order {
+            let mut best = 0usize;
+            for s in 1..n_shards {
+                if shard_load[s] < shard_load[best] {
+                    best = s;
+                }
+            }
+            shard_of_cluster[ci] = best;
+            shard_load[best] += cluster_cost[ci];
+        }
+
+        // region ownership: its cluster's shard; the root (and anything
+        // unreachable from the cut, which cannot happen in a valid plan)
+        // belongs to the spine
+        let mut owner = vec![n_shards; n_regions];
+        for r in 0..n_regions {
+            if r != root && tag[r] != usize::MAX {
+                owner[r] = shard_of_cluster[uf_find(&mut uf, tag[r])];
+            }
+        }
+
+        // build the segments (index n_shards = spine)
+        let mut segs: Vec<Segment> = vec![Segment::default(); n_shards + 1];
+        for r in 0..n_regions {
+            let seg = &mut segs[owner[r]];
+            seg.regions.push(r);
+            seg.cost += cost[r];
+            if graph.regions[r].is_leaf() {
+                for d in graph.regions[r].scope.iter() {
+                    seg.vars.push(d);
+                }
+            }
+        }
+        for seg in segs.iter_mut() {
+            seg.vars.sort_unstable();
+            seg.vars.dedup();
+        }
+        let out_region = |s: &Step| -> usize {
+            match *s {
+                Step::Leaf { rid, .. } => rid,
+                Step::Einsum { pid, .. } => graph.partitions[pid].out,
+                Step::Mix { rid, .. } => rid,
+            }
+        };
+        for (si, s) in ep.steps.iter().enumerate() {
+            segs[owner[out_region(s)]].steps.push(si);
+        }
+        for (si, s) in ep.sample_plan.steps.iter().enumerate() {
+            let rid = match *s {
+                SampleStep::Branch { rid, .. } => rid,
+                SampleStep::Leaf { rid, .. } => rid,
+            };
+            segs[owner[rid]].sample_steps.push(si);
+        }
+
+        // boundary tables: what the spine reads from each shard (forward
+        // activations in, gradients back out), and which shard regions
+        // receive their sel entry from a spine branch
+        let mut boundary: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for &si in &segs[n_shards].steps {
+            if let Step::Einsum { pid, .. } = ep.steps[si] {
+                let p = graph.partitions[pid];
+                for rid in [p.left, p.right] {
+                    if owner[rid] < n_shards {
+                        boundary[owner[rid]].push(rid);
+                    }
+                }
+            }
+        }
+        let mut sel_in: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for &si in &segs[n_shards].sample_steps {
+            if let SampleStep::Branch { part0, nparts, .. } =
+                ep.sample_plan.steps[si]
+            {
+                for p in &ep.sample_plan.parts[part0..part0 + nparts] {
+                    for rid in [p.left, p.right] {
+                        if owner[rid] < n_shards {
+                            sel_in[owner[rid]].push(rid);
+                        }
+                    }
+                }
+            }
+        }
+        for s in 0..n_shards {
+            boundary[s].sort_unstable();
+            boundary[s].dedup();
+            sel_in[s].sort_unstable();
+            sel_in[s].dedup();
+            segs[s].boundary = std::mem::take(&mut boundary[s]);
+            segs[s].sel_in = std::mem::take(&mut sel_in[s]);
+        }
+
+        // parameter spans: each segment's step weights plus the theta
+        // blocks of its variables (theta is laid out [D, K, R, S], so one
+        // variable is one contiguous block; variables shared between
+        // segments through different replicas are simply broadcast twice)
+        let s_dim = ep.family.stat_dim();
+        let var_block = ep.k * ep.layout.num_replica * s_dim;
+        for seg in segs.iter_mut() {
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for &d in &seg.vars {
+                spans.push((d * var_block, (d + 1) * var_block));
+            }
+            for &si in &seg.steps {
+                match ep.steps[si] {
+                    Step::Leaf { .. } => {}
+                    Step::Einsum { ko, w, .. } => {
+                        spans.push((w, w + ko * ep.k * ep.k));
+                    }
+                    Step::Mix { w, children, .. } => {
+                        spans.push((w, w + children));
+                    }
+                }
+            }
+            spans.sort_unstable();
+            let mut merged: Vec<(usize, usize)> = Vec::new();
+            for (lo, hi) in spans {
+                match merged.last_mut() {
+                    Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+                    _ => merged.push((lo, hi)),
+                }
+            }
+            seg.param_spans = merged;
+        }
+
+        let spine = segs.pop().expect("spine segment");
+        Self {
+            n_shards,
+            shards: segs,
+            spine,
+            owner,
+        }
+    }
+
+    /// Structural invariants, used by tests: the segments exactly
+    /// partition both step programs, shard steps never read another
+    /// segment's regions, and every step's weight span is covered by its
+    /// segment's parameter spans.
+    pub fn validate(&self, ep: &ExecPlan) -> Result<(), String> {
+        let graph = &ep.plan.graph;
+        let mut seen_fwd = vec![0usize; ep.steps.len()];
+        let mut seen_smp = vec![0usize; ep.sample_plan.steps.len()];
+        let mut segments: Vec<&Segment> = self.shards.iter().collect();
+        segments.push(&self.spine);
+        let covered = |seg: &Segment, lo: usize, hi: usize| -> bool {
+            seg.param_spans
+                .iter()
+                .any(|&(a, b)| a <= lo && hi <= b)
+        };
+        for (idx, seg) in segments.iter().enumerate() {
+            let is_spine = idx == self.n_shards;
+            for &si in &seg.steps {
+                seen_fwd[si] += 1;
+                match ep.steps[si] {
+                    Step::Leaf { rid, .. } => {
+                        for d in graph.regions[rid].scope.iter() {
+                            if !seg.vars.contains(&d) {
+                                return Err(format!(
+                                    "segment {idx} leaf step {si} var {d} unowned"
+                                ));
+                            }
+                        }
+                    }
+                    Step::Einsum { pid, ko, w, .. } => {
+                        let p = graph.partitions[pid];
+                        for rid in [p.left, p.right] {
+                            if !is_spine && self.owner[rid] != idx {
+                                return Err(format!(
+                                    "shard {idx} step {si} reads foreign region {rid}"
+                                ));
+                            }
+                        }
+                        if !covered(seg, w, w + ko * ep.k * ep.k) {
+                            return Err(format!(
+                                "segment {idx} einsum {si} weights uncovered"
+                            ));
+                        }
+                    }
+                    Step::Mix { w, children, .. } => {
+                        if !covered(seg, w, w + children) {
+                            return Err(format!(
+                                "segment {idx} mix {si} weights uncovered"
+                            ));
+                        }
+                    }
+                }
+            }
+            for &si in &seg.sample_steps {
+                seen_smp[si] += 1;
+            }
+        }
+        if seen_fwd.iter().any(|&c| c != 1) {
+            return Err("forward steps not exactly partitioned".into());
+        }
+        if seen_smp.iter().any(|&c| c != 1) {
+            return Err("sample steps not exactly partitioned".into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // shared leaf layer
 // ---------------------------------------------------------------------------
 
-/// Refresh the per-component log-normalizer cache (once per batch: all
-/// transcendentals happen here, not in the per-sample loop).
-pub(crate) fn refresh_leaf_const(
+/// Refresh the log-normalizer cache entries of ONE leaf region — its
+/// replica's components over its scope (once per Leaf step per batch:
+/// all transcendentals happen here, not in the per-sample loop). Leaf
+/// regions sharing a replica have disjoint scopes, so per-region
+/// refresh covers each component at most once per batch; because it is
+/// driven by the Leaf steps actually executed, a *segmented* forward
+/// pays only for the components its shard owns — never reading the
+/// unowned (zero) spans of a worker-local arena.
+pub(crate) fn refresh_leaf_const_region(
     ep: &ExecPlan,
     params: &ParamArena,
     leaf_const: &mut Vec<f32>,
+    rid: usize,
 ) {
     let s_dim = ep.family.stat_dim();
     let n_comp = ep.n_leaf_components();
     if leaf_const.len() != n_comp {
         leaf_const.resize(n_comp, 0.0);
     }
+    let k = ep.k;
+    let r_total = ep.layout.num_replica;
+    let rep = ep.plan.graph.regions[rid].replica.unwrap();
     let theta = params.theta();
-    for (c, lc) in leaf_const.iter_mut().enumerate() {
-        *lc = ep
-            .family
-            .log_norm_const(&theta[c * s_dim..(c + 1) * s_dim]);
+    for d in ep.plan.graph.regions[rid].scope.iter() {
+        for kk in 0..k {
+            let c = (d * k + kk) * r_total + rep;
+            leaf_const[c] = ep
+                .family
+                .log_norm_const(&theta[c * s_dim..(c + 1) * s_dim]);
+        }
     }
 }
 
@@ -650,6 +1058,9 @@ pub struct SampleScratch {
     ebuf: Vec<f32>,
     /// [max mixing children] partition-choice weights
     mbuf: Vec<f32>,
+    /// every sample-step index, in plan order (the full-decode step list,
+    /// so the segmented executor and the full path share one core)
+    all_steps: Vec<usize>,
     cap: usize,
     /// eventual `sel` length (`n_regions * batch_cap`); `sel` itself is
     /// allocated lazily but the footprint is reported from day one
@@ -669,9 +1080,58 @@ impl SampleScratch {
             wbuf: vec![0.0; ep.k * ep.k],
             ebuf: vec![0.0; ep.k],
             mbuf: vec![0.0; ep.sample_plan.max_children],
+            all_steps: (0..ep.sample_plan.steps.len()).collect(),
             cap: ep.batch_cap,
             sel_len: ep.plan.graph.regions.len() * ep.batch_cap,
         }
+    }
+
+    /// Size `sel` (lazily) and reset rows `0..bn`: zero everything, seed
+    /// the root entry when this executor starts the walk, and import any
+    /// boundary entries written by an upstream segment.
+    fn prepare(
+        &mut self,
+        ep: &ExecPlan,
+        bn: usize,
+        seed_root: bool,
+        sel_rids: &[usize],
+        sel_src: &[u32],
+    ) {
+        let cap = self.cap;
+        assert!(bn <= cap, "batch exceeds sampler scratch capacity");
+        let n_regions = ep.plan.graph.regions.len();
+        if self.sel.len() != n_regions * cap {
+            self.sel.resize(n_regions * cap, 0);
+        }
+        if bn == cap {
+            self.sel.fill(0);
+        } else {
+            // only columns 0..bn are ever read or written
+            for r in 0..n_regions {
+                self.sel[r * cap..r * cap + bn].fill(0);
+            }
+        }
+        if seed_root {
+            let root = ep.plan.graph.root;
+            for b in 0..bn {
+                self.sel[root * cap + b] = 1;
+            }
+        }
+        debug_assert_eq!(sel_src.len(), sel_rids.len() * bn);
+        for (j, &rid) in sel_rids.iter().enumerate() {
+            self.sel[rid * cap..rid * cap + bn]
+                .copy_from_slice(&sel_src[j * bn..(j + 1) * bn]);
+        }
+    }
+
+    /// Pack the given regions' entries for samples `0..bn` — the
+    /// cross-segment sampling state, one u32 per region·sample.
+    pub(crate) fn export_sel(&self, rids: &[usize], bn: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(rids.len() * bn);
+        for &rid in rids {
+            out.extend_from_slice(&self.sel[rid * self.cap..rid * self.cap + bn]);
+        }
+        out
     }
 
     /// Byte footprint (for the memory accounting of the bench tables).
@@ -682,21 +1142,50 @@ impl SampleScratch {
     }
 }
 
-/// Batched top-down ancestral decode: execute the [`SamplePlan`] once for
-/// samples `0..bn` of the most recent forward pass, instead of walking the
-/// region graph per sample. Semantics per sample match [`decode`] exactly
-/// (bit-identical in `Argmax` mode); in `Sample` mode the RNG stream is
-/// consumed step-major over the batch rather than sample-major, so the
-/// stream order (not the distribution) differs from a per-sample loop.
+/// The destination of a leaf emission during a batched decode.
 ///
-/// `shared_rows` reads every sample's activations from batch row 0 — the
-/// unconditional-sampling fast path, where one 1-row forward pass under an
-/// all-zero mask serves the entire batch (all rows would be identical).
-///
-/// `out` is `[bn, D, obs_dim]`, pre-filled with evidence; only variables
-/// with `mask[d] == 0.0` are written.
+/// A monolithic decode writes completed `[bn, D, obs_dim]` rows; a
+/// *segment* of a sharded decode owns only some variables, so it emits
+/// var-major values plus a written flag per (variable, sample) and lets
+/// the coordinator scatter them into the final rows.
+enum LeafSink<'a> {
+    /// `[bn, D, obs_dim]` rows, pre-filled with evidence
+    Rows(&'a mut [f32]),
+    /// var-major emission: `pos[d]` maps a variable to its slot (or
+    /// `usize::MAX`), `vals` is `[n_vars, bn, obs_dim]`, `written` is
+    /// `[n_vars, bn]`
+    Vars {
+        pos: &'a [usize],
+        vals: &'a mut [f32],
+        written: &'a mut [bool],
+    },
+}
+
+/// The per-(sample, region) stream key: every visit of region `rid` for
+/// sample `b` draws from `Rng::from_stream(salt, sample_key(b, rid))`, so
+/// the draw is a pure function of (salt, sample, region) — execution
+/// order (step-major, sample-major, or split across shards) cannot
+/// change the result.
+#[inline]
+fn sample_key(b: usize, rid: usize) -> u64 {
+    ((b as u64) << 32) | rid as u64
+}
+
+#[inline]
+fn emit_leaf(ep: &ExecPlan, th: &[f32], st: &mut Option<Rng>, dst: &mut [f32]) {
+    match st {
+        Some(rng) => ep.family.sample(th, rng, dst),
+        None => ep.family.mean(th, dst),
+    }
+}
+
+/// The shared core of the batched top-down executors: run the given
+/// sample-step indices (plan order) over samples `0..bn`, reading `sel`
+/// entries prepared by [`SampleScratch::prepare`] and emitting leaves
+/// into `sink`. All randomness is counter-based per (sample, region)
+/// under `salt` (see [`sample_key`]).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn decode_batch(
+fn run_sample_steps(
     ep: &ExecPlan,
     params: &ParamArena,
     arena: &[f32],
@@ -705,9 +1194,10 @@ pub(crate) fn decode_batch(
     shared_rows: bool,
     mask: &[f32],
     mode: DecodeMode,
-    rng: &mut Rng,
+    salt: u64,
     ss: &mut SampleScratch,
-    out: &mut [f32],
+    step_idx: &[usize],
+    sink: &mut LeafSink,
 ) {
     let k = ep.k;
     let kk2 = k * k;
@@ -717,31 +1207,14 @@ pub(crate) fn decode_batch(
     let d_total = ep.plan.graph.num_vars;
     let cap = ss.cap;
     assert!(bn <= cap, "batch exceeds sampler scratch capacity");
-    assert_eq!(out.len(), bn * d_total * od);
     // all per-step scratch was sized at construction — the step loop
     // allocates nothing (checked here so debug builds catch a mis-sized
-    // executor); the entry buffer itself is sized on first use
+    // executor)
     debug_assert!(ss.wbuf.len() >= kk2 && ss.ebuf.len() >= k);
     debug_assert!(ss.mbuf.len() >= ep.sample_plan.max_children);
-    let n_regions = ep.plan.graph.regions.len();
-    if ss.sel.len() != n_regions * cap {
-        ss.sel.resize(n_regions * cap, 0);
-    }
-    if bn == cap {
-        ss.sel.fill(0);
-    } else {
-        // only columns 0..bn are ever read or written below
-        for r in 0..n_regions {
-            ss.sel[r * cap..r * cap + bn].fill(0);
-        }
-    }
-    let root = ep.plan.graph.root;
-    for b in 0..bn {
-        ss.sel[root * cap + b] = 1;
-    }
     let theta = params.theta();
-    for step in &ep.sample_plan.steps {
-        match *step {
+    for &si in step_idx {
+        match ep.sample_plan.steps[si] {
             SampleStep::Branch {
                 rid,
                 part0,
@@ -758,6 +1231,14 @@ pub(crate) fn decode_batch(
                     }
                     let entry = (e - 1) as usize;
                     let br = if shared_rows { 0 } else { b };
+                    // Argmax draws nothing: build the per-(sample, region)
+                    // stream only when sampling
+                    let mut st = match mode {
+                        DecodeMode::Sample => {
+                            Some(Rng::from_stream(salt, sample_key(b, rid)))
+                        }
+                        DecodeMode::Argmax => None,
+                    };
                     // choose a partition (posterior-weighted when several)
                     let c = if nparts == 1 {
                         0
@@ -774,9 +1255,9 @@ pub(crate) fn decode_batch(
                                 scratch[mix_first + ci * mix_stride + br * mix_ko + entry];
                             *wgt = params.data[mix_w + ci] * (v - maxv).exp();
                         }
-                        match mode {
-                            DecodeMode::Sample => rng.categorical_f32(weights),
-                            DecodeMode::Argmax => argmax(weights),
+                        match st.as_mut() {
+                            Some(st) => st.categorical_f32(weights),
+                            None => argmax(weights),
                         }
                     };
                     let p = ep.sample_plan.parts[part0 + c];
@@ -803,32 +1284,50 @@ pub(crate) fn decode_batch(
                             *o = wrow[jj] * eni * ebuf[jj];
                         }
                     }
-                    let pick = match mode {
-                        DecodeMode::Sample => rng.categorical_f32(wbuf),
-                        DecodeMode::Argmax => argmax(wbuf),
+                    let pick = match st.as_mut() {
+                        Some(st) => st.categorical_f32(wbuf),
+                        None => argmax(wbuf),
                     };
                     ss.sel[p.left * cap + b] = (pick / k) as u32 + 1;
                     ss.sel[p.right * cap + b] = (pick % k) as u32 + 1;
                 }
             }
             SampleStep::Leaf { rid, rep } => {
-                for d in ep.plan.graph.regions[rid].scope.iter() {
-                    if mask[d] != 0.0 {
-                        continue; // observed: keep evidence value
+                for b in 0..bn {
+                    let e = ss.sel[rid * cap + b];
+                    if e == 0 {
+                        continue;
                     }
-                    for b in 0..bn {
-                        let e = ss.sel[rid * cap + b];
-                        if e == 0 {
-                            continue;
+                    let entry = (e - 1) as usize;
+                    let mut st = match mode {
+                        DecodeMode::Sample => {
+                            Some(Rng::from_stream(salt, sample_key(b, rid)))
                         }
-                        let entry = (e - 1) as usize;
+                        DecodeMode::Argmax => None,
+                    };
+                    for d in ep.plan.graph.regions[rid].scope.iter() {
+                        if mask[d] != 0.0 {
+                            continue; // observed: keep evidence value
+                        }
                         let th_base = ((d * k + entry) * r_total + rep) * s_dim;
                         let th = &theta[th_base..th_base + s_dim];
-                        let row = b * d_total * od;
-                        let dst = &mut out[row + d * od..row + (d + 1) * od];
-                        match mode {
-                            DecodeMode::Sample => ep.family.sample(th, rng, dst),
-                            DecodeMode::Argmax => ep.family.mean(th, dst),
+                        match sink {
+                            LeafSink::Rows(out) => {
+                                let row = b * d_total * od;
+                                let dst = &mut out[row + d * od..row + (d + 1) * od];
+                                emit_leaf(ep, th, &mut st, dst);
+                            }
+                            LeafSink::Vars { pos, vals, written } => {
+                                let j = pos[d];
+                                debug_assert!(
+                                    j != usize::MAX,
+                                    "segment leaf emits unowned var {d}"
+                                );
+                                let dst =
+                                    &mut vals[(j * bn + b) * od..(j * bn + b + 1) * od];
+                                emit_leaf(ep, th, &mut st, dst);
+                                written[j * bn + b] = true;
+                            }
                         }
                     }
                 }
@@ -837,12 +1336,124 @@ pub(crate) fn decode_batch(
     }
 }
 
+/// Batched top-down ancestral decode: execute the [`SamplePlan`] once for
+/// samples `0..bn` of the most recent forward pass, instead of walking the
+/// region graph per sample. Semantics per sample match [`decode`] exactly
+/// (bit-identical in `Argmax` mode). In `Sample` mode every (sample,
+/// region) visit draws from its own counter-based stream keyed by a salt
+/// taken from `rng` ([`crate::util::rng::Rng::from_stream`]), so the
+/// result is reproducible under ANY execution order — step-major,
+/// sample-major, chunked, or sharded across workers — given the same
+/// starting `rng` state.
+///
+/// `shared_rows` reads every sample's activations from batch row 0 — the
+/// unconditional-sampling fast path, where one 1-row forward pass under an
+/// all-zero mask serves the entire batch (all rows would be identical).
+///
+/// `out` is `[bn, D, obs_dim]`, pre-filled with evidence; only variables
+/// with `mask[d] == 0.0` are written.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_batch(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    bn: usize,
+    shared_rows: bool,
+    mask: &[f32],
+    mode: DecodeMode,
+    rng: &mut Rng,
+    ss: &mut SampleScratch,
+    out: &mut [f32],
+) {
+    let d_total = ep.plan.graph.num_vars;
+    let od = ep.family.obs_dim();
+    assert_eq!(out.len(), bn * d_total * od);
+    let salt = rng.next_u64();
+    ss.prepare(ep, bn, true, &[], &[]);
+    let steps = std::mem::take(&mut ss.all_steps);
+    run_sample_steps(
+        ep,
+        params,
+        arena,
+        scratch,
+        bn,
+        shared_rows,
+        mask,
+        mode,
+        salt,
+        ss,
+        &steps,
+        &mut LeafSink::Rows(out),
+    );
+    ss.all_steps = steps;
+}
+
+/// One segment's share of a sharded top-down decode: run the given
+/// sample-step indices over the activations of the segment's own forward
+/// pass. The spine passes `seed_root = true` and exports `sel` entries
+/// for the shard-owned regions its branches selected
+/// ([`SampleScratch::export_sel`]); shards import those entries and emit
+/// their owned variables var-major into `vals`/`written`. Every segment
+/// of one decode must receive the same `salt` — draws are keyed per
+/// (sample, region), so the sharded result equals the monolithic
+/// [`decode_batch`] bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_segment(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    bn: usize,
+    mask: &[f32],
+    mode: DecodeMode,
+    salt: u64,
+    ss: &mut SampleScratch,
+    steps: &[usize],
+    seed_root: bool,
+    sel_rids: &[usize],
+    sel_src: &[u32],
+    vars: &[usize],
+    vals: &mut [f32],
+    written: &mut [bool],
+) {
+    let od = ep.family.obs_dim();
+    let d_total = ep.plan.graph.num_vars;
+    assert_eq!(vals.len(), vars.len() * bn * od);
+    assert_eq!(written.len(), vars.len() * bn);
+    ss.prepare(ep, bn, seed_root, sel_rids, sel_src);
+    let mut pos = vec![usize::MAX; d_total];
+    for (j, &d) in vars.iter().enumerate() {
+        pos[d] = j;
+    }
+    written.fill(false);
+    run_sample_steps(
+        ep,
+        params,
+        arena,
+        scratch,
+        bn,
+        false,
+        mask,
+        mode,
+        salt,
+        ss,
+        steps,
+        &mut LeafSink::Vars {
+            pos: &pos,
+            vals,
+            written,
+        },
+    );
+}
+
 /// Shared body of the engines' `sample_batch` fast path: after ONE 1-row
 /// fully-marginalized forward pass, decode the whole request in capacity
-/// chunks reading the shared row-0 activations. Both engines delegate
-/// here so the chunking logic has a single home.
+/// chunks reading the shared row-0 activations, writing into the caller's
+/// buffer. Both engines delegate here so the chunking logic has a single
+/// home.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn sample_batch_shared_rows(
+pub(crate) fn sample_batch_shared_rows_into(
     ep: &ExecPlan,
     params: &ParamArena,
     arena: &[f32],
@@ -851,12 +1462,13 @@ pub(crate) fn sample_batch_shared_rows(
     mode: DecodeMode,
     rng: &mut Rng,
     ss: &mut SampleScratch,
-) -> Vec<f32> {
+    out: &mut [f32],
+) {
     let d = ep.plan.graph.num_vars;
     let od = ep.family.obs_dim();
     let row = d * od;
+    assert_eq!(out.len(), n * row);
     let mask = vec![0.0f32; d];
-    let mut out = vec![0.0f32; n * row];
     let cap = ep.batch_cap;
     let mut s0 = 0usize;
     while s0 < n {
@@ -876,7 +1488,6 @@ pub(crate) fn sample_batch_shared_rows(
         );
         s0 += bn;
     }
-    out
 }
 
 #[cfg(test)]
@@ -1025,6 +1636,65 @@ mod tests {
             }
         }
         assert!(saw_mixing, "PD structure should produce mixing branches");
+    }
+
+    #[test]
+    fn plan_partition_covers_and_isolates() {
+        for plan in [
+            LayeredPlan::compile(random_binary_trees(12, 3, 3, 0), 4),
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+        ] {
+            let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+            for shards in [1usize, 2, 4] {
+                let pp = PlanPartition::cut(&ep, shards);
+                pp.validate(&ep).unwrap();
+                assert_eq!(pp.shards.len(), shards);
+                for (s, seg) in pp.shards.iter().enumerate() {
+                    for &r in &seg.regions {
+                        assert_eq!(pp.owner[r], s);
+                    }
+                }
+                // the root always lives on the spine
+                assert!(pp.spine.regions.contains(&ep.plan.graph.root));
+                // spans are merged: ascending and non-touching
+                let mut segs: Vec<&Segment> = pp.shards.iter().collect();
+                segs.push(&pp.spine);
+                for seg in segs {
+                    for w in seg.param_spans.windows(2) {
+                        assert!(w[0].1 < w[1].0, "unmerged spans {w:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rat_partition_spreads_work_and_shrinks_broadcast() {
+        // a replica forest splits into ~2R independent clusters: with 8
+        // replicas and 4 shards, the cut must actually spread the work
+        // and each worker's parameter spans must be a strict subset of
+        // the arena
+        let plan = LayeredPlan::compile(random_binary_trees(64, 3, 8, 1), 4);
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+        let pp = PlanPartition::cut(&ep, 4);
+        pp.validate(&ep).unwrap();
+        let busy = pp.shards.iter().filter(|s| !s.steps.is_empty()).count();
+        assert!(busy >= 2, "only {busy} shards got work");
+        let total_cost: f64 =
+            pp.shards.iter().map(|s| s.cost).sum::<f64>() + pp.spine.cost;
+        assert!(
+            pp.spine.cost < total_cost * 0.5,
+            "spine dominates: {} of {total_cost}",
+            pp.spine.cost
+        );
+        for seg in &pp.shards {
+            if !seg.steps.is_empty() {
+                assert!(
+                    seg.param_scalars() < ep.layout.total,
+                    "shard broadcast not smaller than the arena"
+                );
+            }
+        }
     }
 
     #[test]

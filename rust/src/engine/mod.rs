@@ -30,6 +30,7 @@
 
 pub mod dense;
 pub mod exec;
+pub mod registry;
 pub mod sparse;
 
 use std::path::Path;
@@ -40,6 +41,8 @@ use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 use crate::{bail, ensure};
+#[cfg(all(unix, feature = "mmap"))]
+use crate::anyhow;
 
 // ---------------------------------------------------------------------------
 // ParamLayout: the typed offset table
@@ -169,6 +172,186 @@ impl ParamLayout {
 }
 
 // ---------------------------------------------------------------------------
+// ParamData: the contiguous scalar store (owned, or a read-only mapping)
+// ---------------------------------------------------------------------------
+
+/// Read-only `mmap` of a checkpoint file (unix + feature `mmap`): the
+/// serving path reads parameters straight out of the page cache, with no
+/// heap copy of the tensor payload.
+#[cfg(all(unix, feature = "mmap"))]
+mod mapping {
+    use std::os::raw::{c_int, c_void};
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    /// An owned read-only file mapping, unmapped on drop.
+    #[derive(Debug)]
+    pub struct Mapping {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // the mapping is read-only and never handed out mutably
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        /// Map a whole file read-only. `len` must be the file's size in
+        /// bytes and nonzero.
+        pub fn map(file: &std::fs::File, len: usize) -> std::io::Result<Self> {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 || ptr.is_null() {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Self { ptr, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+/// The arena's scalar store: either an owned `Vec<f32>` or a read-only
+/// window into an `mmap`ed checkpoint (zero-copy serving). Derefs to
+/// `[f32]`, so all slice indexing works unchanged; the first *mutable*
+/// access to a mapped store copies it out into an owned buffer
+/// (copy-on-write), so training on a mapped checkpoint is transparent
+/// while pure serving never touches the heap for the payload.
+pub struct ParamData(ParamRepr);
+
+enum ParamRepr {
+    Owned(Vec<f32>),
+    /// (shared mapping, f32 offset into it, f32 length)
+    #[cfg(all(unix, feature = "mmap"))]
+    Mapped(std::sync::Arc<mapping::Mapping>, usize, usize),
+}
+
+impl ParamData {
+    pub fn owned(v: Vec<f32>) -> Self {
+        Self(ParamRepr::Owned(v))
+    }
+
+    /// True when backed by a read-only mapping (no heap copy yet).
+    pub fn is_mapped(&self) -> bool {
+        #[cfg(all(unix, feature = "mmap"))]
+        if let ParamRepr::Mapped(..) = self.0 {
+            return true;
+        }
+        false
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        match &self.0 {
+            ParamRepr::Owned(v) => v.as_slice(),
+            #[cfg(all(unix, feature = "mmap"))]
+            ParamRepr::Mapped(m, off, len) => {
+                // alignment and bounds were verified at load time
+                let bytes = m.bytes();
+                unsafe {
+                    std::slice::from_raw_parts(
+                        bytes.as_ptr().add(off * 4) as *const f32,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for ParamData {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for ParamData {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        #[cfg(all(unix, feature = "mmap"))]
+        if let ParamRepr::Mapped(..) = self.0 {
+            // copy-on-write: detach from the mapping before mutating
+            self.0 = ParamRepr::Owned(self.as_slice().to_vec());
+        }
+        match &mut self.0 {
+            ParamRepr::Owned(v) => v.as_mut_slice(),
+            #[cfg(all(unix, feature = "mmap"))]
+            ParamRepr::Mapped(..) => unreachable!("copy-on-write above"),
+        }
+    }
+}
+
+impl Clone for ParamData {
+    fn clone(&self) -> Self {
+        match &self.0 {
+            ParamRepr::Owned(v) => Self(ParamRepr::Owned(v.clone())),
+            #[cfg(all(unix, feature = "mmap"))]
+            ParamRepr::Mapped(m, off, len) => {
+                Self(ParamRepr::Mapped(m.clone(), *off, *len))
+            }
+        }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        match (&mut self.0, &source.0) {
+            (ParamRepr::Owned(dst), ParamRepr::Owned(src))
+                if dst.len() == src.len() =>
+            {
+                dst.copy_from_slice(src);
+            }
+            _ => *self = source.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for ParamData {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParamData")
+            .field("len", &self.as_slice().len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+impl PartialEq for ParamData {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // ParamArena: all trainable parameters, contiguous
 // ---------------------------------------------------------------------------
 
@@ -177,7 +360,7 @@ impl ParamLayout {
 pub struct ParamArena {
     pub layout: ParamLayout,
     /// the contiguous scalar store, `layout.total` long
-    pub data: Vec<f32>,
+    pub data: ParamData,
 }
 
 /// Historical name kept for call-site continuity.
@@ -189,7 +372,7 @@ impl ParamArena {
         let n = layout.total;
         Self {
             layout,
-            data: vec![0.0; n],
+            data: ParamData::owned(vec![0.0; n]),
         }
     }
 
@@ -361,19 +544,81 @@ impl ParamArena {
             }
         }
         push(&mut buf, self.data.len());
-        for x in &self.data {
+        for x in self.data.iter() {
             buf.extend_from_slice(&x.to_le_bytes());
         }
         std::fs::write(path, buf)?;
         Ok(())
     }
 
-    /// Load a checkpoint saved by [`ParamArena::save`]. The leaf family is
-    /// read (and thus verified) from the header — callers no longer supply
-    /// it. Every read is bounds-checked: a truncated or corrupted file
-    /// yields `Err`, never a panic.
+    /// Load a checkpoint saved by [`ParamArena::save`] into an owned
+    /// buffer. The leaf family is read (and thus verified) from the
+    /// header — callers no longer supply it. Every read is bounds-checked:
+    /// a truncated or corrupted file yields `Err`, never a panic.
     pub fn load(path: &Path) -> Result<Self> {
         let data = std::fs::read(path)?;
+        let (layout, pos, n) = parse_checkpoint(&data)?;
+        let mut values = Vec::with_capacity(n);
+        for i in 0..n {
+            values.push(f32::from_le_bytes(
+                data[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        Ok(Self {
+            layout,
+            data: ParamData::owned(values),
+        })
+    }
+
+    /// Zero-copy load for serving (unix + feature `mmap`): validate the
+    /// EINET002 header through the exact same bounds checks as
+    /// [`ParamArena::load`], then serve the tensor payload straight out of
+    /// a read-only file mapping — no heap copy. Mutation (an M-step on a
+    /// mapped arena) transparently copies out first ([`ParamData`]'s
+    /// copy-on-write). Elsewhere this falls back to the buffered load.
+    ///
+    /// Caveat inherent to mapping: the `Err`-never-panic contract covers
+    /// the file as it exists AT LOAD TIME. If the checkpoint is truncated
+    /// or rewritten in place while a mapping is live, later page reads
+    /// can fault (SIGBUS) — so writers must replace checkpoints
+    /// atomically (save to a temp file in the same directory, then
+    /// rename over the old path; unlink-and-recreate is also safe, since
+    /// the mapping pins the old inode). Use [`ParamArena::load`] when the
+    /// file's lifetime cannot be controlled.
+    #[cfg(all(unix, feature = "mmap"))]
+    pub fn load_mapped(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        ensure!(len >= MAGIC.len(), "truncated checkpoint header");
+        let map = mapping::Mapping::map(&file, len)
+            .map_err(|e| anyhow!("mmap of checkpoint failed: {e}"))?;
+        let (layout, pos, n) = parse_checkpoint(map.bytes())?;
+        // the header is 8-byte records after an 8-byte magic, so the
+        // payload offset is always f32-aligned; keep the check anyway so a
+        // format change cannot silently produce a misaligned view
+        ensure!(pos % 4 == 0, "checkpoint payload misaligned for mmap");
+        Ok(Self {
+            layout,
+            data: ParamData(ParamRepr::Mapped(
+                std::sync::Arc::new(map),
+                pos / 4,
+                n,
+            )),
+        })
+    }
+
+    /// Fallback when the platform or feature set has no mmap support.
+    #[cfg(not(all(unix, feature = "mmap")))]
+    pub fn load_mapped(path: &Path) -> Result<Self> {
+        Self::load(path)
+    }
+}
+
+/// Parse and bounds-check an EINET002 header, returning the layout, the
+/// byte offset of the f32 payload, and its element count. Shared by the
+/// buffered and mmap load paths so both ride the same validation.
+fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
+    {
         ensure!(data.len() >= MAGIC.len(), "truncated checkpoint header");
         if &data[..MAGIC.len()] != MAGIC {
             if &data[..MAGIC.len()] == b"EINET001" {
@@ -468,16 +713,7 @@ impl ParamArena {
             pos + 4 * n <= data.len(),
             "truncated checkpoint tensor data"
         );
-        let mut values = Vec::with_capacity(n);
-        for i in 0..n {
-            values.push(f32::from_le_bytes(
-                data[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
-            ));
-        }
-        Ok(Self {
-            layout,
-            data: values,
-        })
+        Ok((layout, pos, n))
     }
 }
 
@@ -511,6 +747,53 @@ fn family_from_tag(tag: u64, arg: u64) -> Result<LeafFamily> {
         3 => LeafFamily::Binomial { trials: arg as u32 },
         other => bail!("unknown leaf-family tag {other} in checkpoint"),
     })
+}
+
+// ---------------------------------------------------------------------------
+// ArenaShard: the sharded view of the arena (segment-owned spans)
+// ---------------------------------------------------------------------------
+
+/// A sharded view of a [`ParamArena`]: the concatenated contents of a
+/// segment's owned spans, plus the span table itself. The layout stays
+/// shared (every worker compiles the same [`ParamLayout`]); only the
+/// scalars a segment actually reads travel over the parameter-server
+/// channel, so broadcast cost scales with the shard, not the model.
+#[derive(Clone, Debug)]
+pub struct ArenaShard {
+    /// global `[lo, hi)` spans, ascending and disjoint
+    pub spans: Vec<(usize, usize)>,
+    /// the spans' scalars, concatenated in span order
+    pub data: Vec<f32>,
+}
+
+impl ArenaShard {
+    /// Gather a shard from the full arena.
+    pub fn gather(params: &ParamArena, spans: &[(usize, usize)]) -> Self {
+        let total: usize = spans.iter().map(|&(lo, hi)| hi - lo).sum();
+        let mut data = Vec::with_capacity(total);
+        for &(lo, hi) in spans {
+            data.extend_from_slice(&params.data[lo..hi]);
+        }
+        Self {
+            spans: spans.to_vec(),
+            data,
+        }
+    }
+
+    /// Scatter the shard back into a (worker-local) full-size arena.
+    pub fn scatter_into(&self, dst: &mut ParamArena) {
+        let mut off = 0usize;
+        for &(lo, hi) in &self.spans {
+            let n = hi - lo;
+            dst.data[lo..hi].copy_from_slice(&self.data[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// Bytes on the wire (the broadcast cost this type exists to shrink).
+    pub fn bytes(&self) -> usize {
+        4 * self.data.len() + 16 * self.spans.len()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -669,6 +952,148 @@ pub trait Engine {
         stats: &mut EmStats,
     );
 
+    // ------------------------------------------------------------------
+    // segmented execution (scope-partitioned sharding; see exec::PlanPartition)
+    //
+    // A sharded run cuts the step program into scope-disjoint segments:
+    // workers execute `forward_steps`/`backward_steps` over their own
+    // step lists and exchange only boundary activations/gradients
+    // (`export_rows`/`import_rows` and the grad variants); the decode
+    // pass crosses the cut through the `sel` entry buffer alone
+    // (`export_sel` + `decode_segment`). Single-engine execution is the
+    // 1-segment special case: `forward` == `forward_steps` over every
+    // step, `backward` == `clear_grad` + `seed_root_grad` +
+    // `backward_steps` over every step.
+    // ------------------------------------------------------------------
+
+    /// The compiled flat step program this engine executes.
+    fn exec_plan(&self) -> &exec::ExecPlan;
+
+    /// Execute a subset of forward steps (ascending indices into
+    /// `exec_plan().steps`). Boundary inputs must already be in place
+    /// (`import_rows`). Refreshes the per-batch caches, so the first
+    /// segment call of a batch needs no special-casing.
+    fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+    );
+
+    /// Zero (allocating on first use) the backward gradient buffers.
+    /// Must precede `import_grad_rows`/`seed_root_grad`/`backward_steps`.
+    fn clear_grad(&mut self);
+
+    /// Seed the root gradient rows (d log P / d log root = 1) and account
+    /// `stats.loglik`/`stats.count` for the batch — the spine's half of
+    /// what a monolithic `backward` does before sweeping steps.
+    fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats);
+
+    /// Accumulate EM statistics for a subset of steps (the given ascending
+    /// index list is processed in reverse). Requires activations from the
+    /// matching `forward_steps` and gradients seeded via `seed_root_grad`
+    /// and/or `import_grad_rows`.
+    fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    );
+
+    /// The activation arena (plumbing for the default boundary-exchange
+    /// helpers; offsets come from `exec_plan().region_off`).
+    fn arena(&self) -> &[f32];
+    fn arena_mut(&mut self) -> &mut [f32];
+
+    /// The gradient mirror of the arena (empty until `clear_grad`).
+    fn grad_buf(&self) -> &[f32];
+    fn grad_buf_mut(&mut self) -> &mut [f32];
+
+    /// Append region `rid`'s `[bn, width]` activation rows to `out`.
+    fn export_rows(&self, rid: usize, bn: usize, out: &mut Vec<f32>) {
+        let ep = self.exec_plan();
+        let off = ep.region_off[rid];
+        let w = ep.region_width[rid];
+        out.extend_from_slice(&self.arena()[off..off + bn * w]);
+    }
+
+    /// Write region `rid`'s `[bn, width]` activation rows from `src`.
+    fn import_rows(&mut self, rid: usize, bn: usize, src: &[f32]) {
+        let (off, w) = {
+            let ep = self.exec_plan();
+            (ep.region_off[rid], ep.region_width[rid])
+        };
+        self.arena_mut()[off..off + bn * w].copy_from_slice(&src[..bn * w]);
+    }
+
+    /// Append region `rid`'s gradient rows to `out` (after a backward
+    /// sweep that covered all of the region's consumers).
+    fn export_grad_rows(&self, rid: usize, bn: usize, out: &mut Vec<f32>) {
+        let ep = self.exec_plan();
+        let off = ep.region_off[rid];
+        let w = ep.region_width[rid];
+        out.extend_from_slice(&self.grad_buf()[off..off + bn * w]);
+    }
+
+    /// Accumulate (+=) boundary gradient rows for region `rid`. Call
+    /// after `clear_grad`, before `backward_steps`.
+    fn import_grad_rows(&mut self, rid: usize, bn: usize, src: &[f32]) {
+        let (off, w) = {
+            let ep = self.exec_plan();
+            (ep.region_off[rid], ep.region_width[rid])
+        };
+        let dst = &mut self.grad_buf_mut()[off..off + bn * w];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+
+    /// Read the root log-likelihoods of the last forward pass.
+    fn read_logp(&self, bn: usize, logp: &mut [f32]) {
+        let ep = self.exec_plan();
+        let arena = self.arena();
+        for (b, lp) in logp.iter_mut().enumerate().take(bn) {
+            *lp = arena[ep.root_row(b)];
+        }
+    }
+
+    /// Execute a subset of the [`exec::SamplePlan`] steps (ascending
+    /// indices) for samples `0..bn` of the last forward pass. `seed_root`
+    /// starts the top-down walk (the spine's job); `sel_rids`/`sel_src`
+    /// import boundary entries written by an upstream segment (packed
+    /// `[sel_rids.len(), bn]`). Leaf emissions land in `vals`/`written`
+    /// (`[vars.len(), bn, obs_dim]` / `[vars.len(), bn]`), var-major in
+    /// `vars` order, instead of a `[bn, D]` row buffer — the caller
+    /// scatters. `salt` keys the counter-based per-(sample, region) RNG
+    /// streams, so every segment of one decode must receive the same
+    /// salt; execution order then cannot change the draw.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_segment(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        salt: u64,
+        steps: &[usize],
+        seed_root: bool,
+        sel_rids: &[usize],
+        sel_src: &[u32],
+        vars: &[usize],
+        vals: &mut [f32],
+        written: &mut [bool],
+    );
+
+    /// Export the selected-entry (`sel`) values of the given regions for
+    /// samples `0..bn`, packed `[rids.len(), bn]` — the only state that
+    /// crosses a segment cut during sampling.
+    fn export_sel(&self, rids: &[usize], bn: usize) -> Vec<u32>;
+
     /// Top-down ancestral decode for sample `b` of the last forward pass:
     /// writes unobserved variables (mask 0) of `out` (`[D, obs_dim]`,
     /// pre-filled with evidence) from the exact conditional. This is the
@@ -753,6 +1178,22 @@ pub trait Engine {
             s0 += bn;
         }
         out
+    }
+
+    /// Like [`Engine::sample_batch`], writing into a caller-provided
+    /// `[n, D, obs_dim]` buffer so callers looping over groups (e.g. the
+    /// mixture) can reuse ONE allocation across calls. The dense and
+    /// sparse engines override this with the shared-rows fast path.
+    fn sample_batch_into(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+        out: &mut [f32],
+    ) {
+        let v = self.sample_batch(params, n, rng, mode);
+        out[..v.len()].copy_from_slice(&v);
     }
 
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison.
@@ -913,6 +1354,45 @@ mod tests {
         std::fs::write(&path, b"EINET001trailing-bytes").unwrap();
         let err = ParamArena::load(&path).unwrap_err().to_string();
         assert!(err.contains("EINET001"), "unhelpful legacy error: {err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn arena_shard_round_trips_spans() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 6);
+        let total = params.layout.total;
+        // two disjoint spans + one touching the end
+        let spans = vec![(0usize, 8usize), (total / 2, total / 2 + 5), (total - 3, total)];
+        let shard = ArenaShard::gather(&params, &spans);
+        assert_eq!(shard.data.len(), 8 + 5 + 3);
+        let mut dst = ParamArena::zeros(params.layout.clone());
+        shard.scatter_into(&mut dst);
+        for &(lo, hi) in &spans {
+            assert_eq!(&dst.data[lo..hi], &params.data[lo..hi]);
+        }
+        // untouched scalars stay zero
+        assert_eq!(dst.data[9], 0.0);
+        assert!(shard.bytes() >= 4 * shard.data.len());
+    }
+
+    #[test]
+    fn mapped_checkpoint_serves_and_copies_on_write() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 8);
+        let path = std::env::temp_dir().join("einet_test_ckpt_mmap_cow.bin");
+        params.save(&path).unwrap();
+        let mut loaded = ParamArena::load_mapped(&path).unwrap();
+        assert_eq!(params.data, loaded.data);
+        #[cfg(all(unix, feature = "mmap"))]
+        assert!(loaded.data.is_mapped(), "unix load_mapped should map");
+        // immutable access keeps the mapping; the first mutation copies
+        // out and must not disturb the values
+        let before = loaded.theta()[0];
+        loaded.theta_mut()[0] = before + 1.0;
+        assert!(!loaded.data.is_mapped(), "mutation must detach the mapping");
+        assert_eq!(loaded.theta()[0], before + 1.0);
+        assert_eq!(loaded.data[params.layout.theta_len], params.data[params.layout.theta_len]);
         let _ = std::fs::remove_file(path);
     }
 

@@ -101,11 +101,16 @@ impl SparseEngine {
         }
     }
 
-    /// Refresh the log-domain weight cache: one pass over the contiguous
-    /// non-theta spans of the arena.
-    fn refresh_log_weights(&mut self, params: &ParamArena) {
+    /// Refresh the log-domain cache of ONE weight span (`[w, w + len)` in
+    /// arena coordinates). Called per einsum/mix step, so a segmented
+    /// forward converts only the weights its shard owns — never touching
+    /// the unowned (zero) spans of a worker-local arena.
+    fn refresh_log_span(&mut self, params: &ParamArena, w: usize, len: usize) {
         let lo = self.exec.layout.theta_len;
-        for (dst, &src) in self.log_params.iter_mut().zip(&params.data[lo..]) {
+        for (dst, &src) in self.log_params[w - lo..w - lo + len]
+            .iter_mut()
+            .zip(&params.data[w..w + len])
+        {
             *dst = src.max(1e-30).ln();
         }
     }
@@ -113,6 +118,76 @@ impl SparseEngine {
     // ------------------------------------------------------------------
     // forward
     // ------------------------------------------------------------------
+
+    /// Per-batch preparation shared by the full and segmented forward
+    /// passes: shape checks (the log-weight and leaf caches are refreshed
+    /// per step, so segments only pay for the spans they own).
+    fn fwd_prepare(&mut self, params: &ParamArena, x: &[f32], mask: &[f32], bn: usize) {
+        let _ = params;
+        assert!(bn <= self.exec.batch_cap, "batch exceeds engine capacity");
+        let d_total = self.exec.plan.graph.num_vars;
+        let od = self.exec.family.obs_dim();
+        assert_eq!(x.len(), bn * d_total * od);
+        assert_eq!(mask.len(), d_total);
+    }
+
+    /// Execute one forward step by index.
+    fn run_forward_step(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        si: usize,
+    ) {
+        let step = self.exec.steps[si];
+        match step {
+            Step::Leaf { rid, out } => {
+                exec::refresh_leaf_const_region(
+                    &self.exec,
+                    params,
+                    &mut self.leaf_const,
+                    rid,
+                );
+                exec::leaf_forward(
+                    &self.exec,
+                    params,
+                    &self.leaf_const,
+                    rid,
+                    out,
+                    x,
+                    mask,
+                    bn,
+                    &mut self.arena,
+                )
+            }
+            Step::Einsum {
+                pid,
+                left,
+                right,
+                ko,
+                w,
+                dest,
+                to_scratch,
+                ..
+            } => {
+                self.refresh_log_span(params, w, ko * self.exec.k * self.exec.k);
+                self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn)
+            }
+            Step::Mix {
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                ..
+            } => {
+                self.refresh_log_span(params, w, children);
+                self.fwd_mix(out, ko, children, child, child_stride, w, bn)
+            }
+        }
+    }
 
     /// See [`Engine::forward`] (same contract as the dense engine).
     pub fn forward(
@@ -123,50 +198,27 @@ impl SparseEngine {
         logp: &mut [f32],
     ) {
         let bn = logp.len();
-        assert!(bn <= self.exec.batch_cap, "batch exceeds engine capacity");
-        let d_total = self.exec.plan.graph.num_vars;
-        let od = self.exec.family.obs_dim();
-        assert_eq!(x.len(), bn * d_total * od);
-        assert_eq!(mask.len(), d_total);
-        self.refresh_log_weights(params);
-        exec::refresh_leaf_const(&self.exec, params, &mut self.leaf_const);
+        self.fwd_prepare(params, x, mask, bn);
         for si in 0..self.exec.steps.len() {
-            let step = self.exec.steps[si];
-            match step {
-                Step::Leaf { rid, out } => exec::leaf_forward(
-                    &self.exec,
-                    params,
-                    &self.leaf_const,
-                    rid,
-                    out,
-                    x,
-                    mask,
-                    bn,
-                    &mut self.arena,
-                ),
-                Step::Einsum {
-                    pid,
-                    left,
-                    right,
-                    ko,
-                    w,
-                    dest,
-                    to_scratch,
-                    ..
-                } => self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn),
-                Step::Mix {
-                    out,
-                    ko,
-                    children,
-                    child,
-                    child_stride,
-                    w,
-                    ..
-                } => self.fwd_mix(out, ko, children, child, child_stride, w, bn),
-            }
+            self.run_forward_step(params, x, mask, bn, si);
         }
         for (b, lp) in logp.iter_mut().enumerate() {
             *lp = self.arena[self.exec.root_row(b)];
+        }
+    }
+
+    /// See [`Engine::forward_steps`]: the segmented forward pass.
+    pub fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+    ) {
+        self.fwd_prepare(params, x, mask, bn);
+        for &si in steps {
+            self.run_forward_step(params, x, mask, bn, si);
         }
     }
 
@@ -265,6 +317,76 @@ impl SparseEngine {
     // backward (E-step statistics)
     // ------------------------------------------------------------------
 
+    /// See [`Engine::clear_grad`].
+    pub fn clear_grad(&mut self) {
+        if self.grad_arena.len() != self.arena.len() {
+            self.grad_arena = vec![0.0; self.arena.len()];
+            self.grad_scratch = vec![0.0; self.scratch.len()];
+            self.grad_prod = vec![0.0; self.prod_arena.len()];
+        }
+        self.grad_arena.fill(0.0);
+        self.grad_scratch.fill(0.0);
+        self.grad_prod.fill(0.0);
+    }
+
+    /// See [`Engine::seed_root_grad`]. Requires `clear_grad` first.
+    pub fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
+        for b in 0..bn {
+            let r = self.exec.root_row(b);
+            self.grad_arena[r] = 1.0;
+            stats.loglik += self.arena[r] as f64;
+        }
+        stats.count += bn;
+    }
+
+    /// Execute one backward step by index.
+    #[allow(clippy::too_many_arguments)]
+    fn run_backward_step(
+        &mut self,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        si: usize,
+        stats: &mut EmStats,
+        tbuf: &mut [f32],
+    ) {
+        let step = self.exec.steps[si];
+        match step {
+            Step::Mix {
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                ..
+            } => self.bwd_mix(out, ko, children, child, child_stride, w, bn, stats),
+            Step::Einsum {
+                pid,
+                left,
+                right,
+                ko,
+                w,
+                dest,
+                to_scratch,
+                ..
+            } => self.bwd_einsum(
+                pid, left, right, ko, w, dest, to_scratch, bn, stats,
+            ),
+            Step::Leaf { rid, out } => exec::leaf_backward(
+                &self.exec,
+                rid,
+                out,
+                x,
+                mask,
+                bn,
+                &self.grad_arena,
+                tbuf,
+                stats,
+            ),
+        }
+    }
+
     /// See [`Engine::backward`]: produces the same EM statistics as the
     /// dense engine, in the baseline layout (explicit per-product gradient
     /// buffers). Must follow a `forward` call on the same batch.
@@ -277,59 +399,31 @@ impl SparseEngine {
         stats: &mut EmStats,
     ) {
         let _ = params; // weights are read from the log-domain cache
-        if self.grad_arena.len() != self.arena.len() {
-            self.grad_arena = vec![0.0; self.arena.len()];
-            self.grad_scratch = vec![0.0; self.scratch.len()];
-            self.grad_prod = vec![0.0; self.prod_arena.len()];
-        }
-        self.grad_arena.fill(0.0);
-        self.grad_scratch.fill(0.0);
-        self.grad_prod.fill(0.0);
-        for b in 0..bn {
-            let r = self.exec.root_row(b);
-            self.grad_arena[r] = 1.0;
-            stats.loglik += self.arena[r] as f64;
-        }
-        stats.count += bn;
-
+        self.clear_grad();
+        self.seed_root_grad(bn, stats);
         // one suff-stats scratch for every Leaf step of this pass
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for si in (0..self.exec.steps.len()).rev() {
-            let step = self.exec.steps[si];
-            match step {
-                Step::Mix {
-                    out,
-                    ko,
-                    children,
-                    child,
-                    child_stride,
-                    w,
-                    ..
-                } => self.bwd_mix(out, ko, children, child, child_stride, w, bn, stats),
-                Step::Einsum {
-                    pid,
-                    left,
-                    right,
-                    ko,
-                    w,
-                    dest,
-                    to_scratch,
-                    ..
-                } => self.bwd_einsum(
-                    pid, left, right, ko, w, dest, to_scratch, bn, stats,
-                ),
-                Step::Leaf { rid, out } => exec::leaf_backward(
-                    &self.exec,
-                    rid,
-                    out,
-                    x,
-                    mask,
-                    bn,
-                    &self.grad_arena,
-                    &mut tbuf,
-                    stats,
-                ),
-            }
+            self.run_backward_step(x, mask, bn, si, stats, &mut tbuf);
+        }
+    }
+
+    /// See [`Engine::backward_steps`]: the segmented backward sweep.
+    /// Gradients must have been seeded (`seed_root_grad` and/or
+    /// `import_grad_rows`) after `clear_grad`.
+    pub fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    ) {
+        let _ = params; // weights are read from the log-domain cache
+        let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
+        for &si in steps.iter().rev() {
+            self.run_backward_step(x, mask, bn, si, stats, &mut tbuf);
         }
     }
 
@@ -475,22 +569,24 @@ impl SparseEngine {
         );
     }
 
-    /// See [`Engine::sample_batch`]: one 1-row fully-marginalized forward
-    /// pass serves the whole batch through shared (row 0) activations.
-    pub fn sample_batch(
+    /// See [`Engine::sample_batch_into`]: one 1-row fully-marginalized
+    /// forward pass serves the whole batch through shared (row 0)
+    /// activations, writing into the caller's buffer.
+    pub fn sample_batch_into(
         &mut self,
         params: &ParamArena,
         n: usize,
         rng: &mut Rng,
         mode: DecodeMode,
-    ) -> Vec<f32> {
+        out: &mut [f32],
+    ) {
         let d = self.exec.plan.graph.num_vars;
         let od = self.exec.family.obs_dim();
         let mask = vec![0.0f32; d];
         let x = vec![0.0f32; d * od];
         let mut logp = vec![0.0f32; 1];
         self.forward(params, &x, &mask, &mut logp);
-        exec::sample_batch_shared_rows(
+        exec::sample_batch_shared_rows_into(
             &self.exec,
             params,
             &self.arena,
@@ -499,7 +595,23 @@ impl SparseEngine {
             mode,
             rng,
             &mut self.samp,
-        )
+            out,
+        );
+    }
+
+    /// See [`Engine::sample_batch`]: the allocating wrapper over
+    /// [`SparseEngine::sample_batch_into`].
+    pub fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let row = self.exec.plan.graph.num_vars * self.exec.family.obs_dim();
+        let mut out = vec![0.0f32; n * row];
+        self.sample_batch_into(params, n, rng, mode, &mut out);
+        out
     }
 }
 
@@ -575,8 +687,112 @@ impl Engine for SparseEngine {
         SparseEngine::sample_batch(self, params, n, rng, mode)
     }
 
+    fn sample_batch_into(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+        out: &mut [f32],
+    ) {
+        SparseEngine::sample_batch_into(self, params, n, rng, mode, out)
+    }
+
     fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
         SparseEngine::memory_footprint(self, params)
+    }
+
+    // --- segmented execution -------------------------------------------
+
+    fn exec_plan(&self) -> &ExecPlan {
+        &self.exec
+    }
+
+    fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+    ) {
+        SparseEngine::forward_steps(self, params, x, mask, bn, steps)
+    }
+
+    fn clear_grad(&mut self) {
+        SparseEngine::clear_grad(self)
+    }
+
+    fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
+        SparseEngine::seed_root_grad(self, bn, stats)
+    }
+
+    fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    ) {
+        SparseEngine::backward_steps(self, params, x, mask, bn, steps, stats)
+    }
+
+    fn arena(&self) -> &[f32] {
+        &self.arena
+    }
+
+    fn arena_mut(&mut self) -> &mut [f32] {
+        &mut self.arena
+    }
+
+    fn grad_buf(&self) -> &[f32] {
+        &self.grad_arena
+    }
+
+    fn grad_buf_mut(&mut self) -> &mut [f32] {
+        &mut self.grad_arena
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode_segment(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        salt: u64,
+        steps: &[usize],
+        seed_root: bool,
+        sel_rids: &[usize],
+        sel_src: &[u32],
+        vars: &[usize],
+        vals: &mut [f32],
+        written: &mut [bool],
+    ) {
+        exec::decode_segment(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            bn,
+            mask,
+            mode,
+            salt,
+            &mut self.samp,
+            steps,
+            seed_root,
+            sel_rids,
+            sel_src,
+            vars,
+            vals,
+            written,
+        )
+    }
+
+    fn export_sel(&self, rids: &[usize], bn: usize) -> Vec<u32> {
+        self.samp.export_sel(rids, bn)
     }
 }
 

@@ -20,7 +20,13 @@
 //!
 //! Training, mixtures, inference, and serving are all generic over
 //! `E: Engine`, so backends share one code path and new ones (e.g. a
-//! PJRT-executed engine) plug in without touching call sites.
+//! PJRT-executed engine) plug in without touching call sites; the
+//! runtime [`engine::registry::EngineRegistry`] adds name-based backend
+//! selection for the CLI and the server. For models larger than one
+//! core's cache, [`engine::exec::PlanPartition`] cuts the compiled plan
+//! into scope-disjoint segments and [`coordinator::ShardedPool`] trains,
+//! serves, and samples across segment workers that each hold only their
+//! [`engine::ArenaShard`] of the parameters.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
@@ -40,9 +46,11 @@ pub mod structure;
 pub mod util;
 
 pub use engine::dense::DenseEngine;
+pub use engine::exec::{PlanPartition, Segment};
+pub use engine::registry::{boxed_build, EngineEntry, EngineFactory, EngineRegistry};
 pub use engine::sparse::SparseEngine;
 pub use engine::{
-    DecodeMode, EinetParams, EmStats, Engine, ParamArena, ParamLayout,
+    ArenaShard, DecodeMode, EinetParams, EmStats, Engine, ParamArena, ParamLayout,
 };
 pub use layers::LayeredPlan;
 pub use leaves::LeafFamily;

@@ -16,14 +16,17 @@ use std::path::PathBuf;
 use einet::util::error::Result;
 use einet::{anyhow, bail};
 
-use einet::coordinator::{evaluate, train_parallel, TrainConfig};
+use einet::coordinator::{train_parallel, train_sharded, ShardConfig, TrainConfig};
 use einet::data::debd;
 use einet::em::EmConfig;
 use einet::structure::from_spec;
 use einet::util::cli::{usage, Args, OptSpec};
 use einet::util::rng::Rng;
 use einet::util::stats::welch_t_test;
-use einet::{DecodeMode, DenseEngine, EinetParams, LayeredPlan, LeafFamily, SparseEngine};
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, EngineRegistry, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -51,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "e2e" => cmd_e2e(rest),
         "serve-demo" => cmd_serve_demo(rest),
         "artifacts" => cmd_artifacts(rest),
+        "engines" => cmd_engines(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -71,6 +75,11 @@ commands:
   e2e         train via the AOT PJRT path (L1+L2+L3 composed)
   serve-demo  run the batched inference service on synthetic queries
   artifacts   list compiled AOT artifacts
+  engines     list the runtime engine registry (--engine names)
+
+global options: --engine dense|sparse selects the backend by registry
+name; --shards N scope-partitions the model across N segment workers
+(model-parallel; 0 = data-parallel / single engine)
 
 benches: cargo bench --bench fig3_train | fig6_inference | einsum_op |
          ablation_stability
@@ -95,6 +104,8 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "artifact-dir", help: "artifact directory", default: Some("artifacts"), is_flag: false },
         OptSpec { name: "steps", help: "EM steps (e2e)", default: Some("50"), is_flag: false },
         OptSpec { name: "replica", help: "replica override for table1", default: Some("10"), is_flag: false },
+        OptSpec { name: "engine", help: "execution backend (registry name; see `einet engines`)", default: Some("dense"), is_flag: false },
+        OptSpec { name: "shards", help: "scope-partition across N workers (0: data-parallel)", default: Some("0"), is_flag: false },
         OptSpec { name: "help", help: "show usage", default: None, is_flag: true },
     ]
 }
@@ -117,6 +128,70 @@ fn setup(
     Ok((ds, plan, LeafFamily::Bernoulli))
 }
 
+/// Data-parallel training is monomorphized per engine; dispatch the two
+/// in-tree backends by registry name (other registered backends train
+/// through the factory-based `--shards` path).
+#[allow(clippy::too_many_arguments)]
+fn data_parallel_train(
+    engine: &str,
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &mut EinetParams,
+    data: &[f32],
+    n: usize,
+    cfg: &TrainConfig,
+) -> Result<()> {
+    match engine {
+        "dense" => {
+            train_parallel::<DenseEngine>(plan, family, params, data, n, cfg);
+        }
+        "sparse" => {
+            train_parallel::<SparseEngine>(plan, family, params, data, n, cfg);
+        }
+        other => bail!(
+            "data-parallel training supports dense|sparse; \
+             use --shards N to train registry engine '{other}'"
+        ),
+    }
+    Ok(())
+}
+
+/// Average test LL through a registry-built boxed engine — so every
+/// registered backend (not just the two in-tree ones) can be evaluated.
+#[allow(clippy::too_many_arguments)]
+fn eval_named(
+    engine: &str,
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    data: &[f32],
+    n: usize,
+    batch: usize,
+) -> Result<f64> {
+    let mut e = EngineRegistry::builtin().build(engine, plan.clone(), family, batch)?;
+    let row = plan.graph.num_vars * family.obs_dim();
+    let mask = vec![1.0f32; plan.graph.num_vars];
+    let mut logp = vec![0.0f32; batch];
+    let mut total = 0.0f64;
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bn = batch.min(n - b0);
+        e.forward(params, &data[b0 * row..(b0 + bn) * row], &mask, &mut logp[..bn]);
+        total += logp[..bn].iter().map(|&l| l as f64).sum::<f64>();
+        b0 += bn;
+    }
+    Ok(total / n as f64)
+}
+
+fn cmd_engines(argv: &[String]) -> Result<()> {
+    let _ = argv;
+    let reg = EngineRegistry::builtin();
+    for e in reg.entries() {
+        println!("{:<8} {}", e.name, e.description);
+    }
+    Ok(())
+}
+
 fn cmd_train(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
@@ -136,16 +211,31 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         },
         log_every: 1,
     };
+    let engine = a.get_str("engine", &spec)?;
+    let shards = a.get_usize("shards", &spec)?;
     println!(
-        "dataset={} D={} sums={} params={}",
+        "dataset={} D={} sums={} params={} engine={engine} shards={shards}",
         ds.name,
         ds.num_vars,
         plan.num_sums(),
         params.num_params()
     );
-    train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
-    let valid = evaluate::<DenseEngine>(&plan, family, &params, &ds.valid.data, ds.valid.n, 256);
-    let test = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    if shards > 0 {
+        // model-parallel: scope-partitioned segments, any registry engine
+        let factory = EngineRegistry::builtin().factory(&engine)?;
+        let scfg = ShardConfig {
+            n_shards: shards,
+            epochs: cfg.epochs,
+            batch_size: cfg.batch_size,
+            em: cfg.em,
+            log_every: cfg.log_every,
+        };
+        train_sharded(factory, &plan, family, &mut params, &ds.train.data, ds.train.n, &scfg);
+    } else {
+        data_parallel_train(&engine, &plan, family, &mut params, &ds.train.data, ds.train.n, &cfg)?;
+    }
+    let valid = eval_named(&engine, &plan, family, &params, &ds.valid.data, ds.valid.n, 256)?;
+    let test = eval_named(&engine, &plan, family, &params, &ds.test.data, ds.test.n, 256)?;
     println!("valid LL {valid:.4}  test LL {test:.4}");
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
     params.save(&ckpt)?;
@@ -158,7 +248,8 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
-    let params = EinetParams::load(&ckpt)?;
+    // zero-copy: the tensor payload is served straight from the mapping
+    let params = EinetParams::load_mapped(&ckpt)?;
     if params.family() != family {
         bail!(
             "checkpoint family {:?} does not match configured family {:?}",
@@ -171,7 +262,8 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             "checkpoint layout does not match the configured structure/--k              (saved with a different plan?)"
         );
     }
-    let test = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
+    let engine = a.get_str("engine", &spec)?;
+    let test = eval_named(&engine, &plan, family, &params, &ds.test.data, ds.test.n, 256)?;
     println!("test LL {test:.4}");
     Ok(())
 }
@@ -181,7 +273,8 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
     let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
-    let params = EinetParams::load(&ckpt)?;
+    // zero-copy: the tensor payload is served straight from the mapping
+    let params = EinetParams::load_mapped(&ckpt)?;
     if params.family() != family {
         bail!(
             "checkpoint family {:?} does not match configured family {:?}",
@@ -196,8 +289,13 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
     }
     let n = a.get_usize("n", &spec)?;
     // batched sampling: one shared forward pass + one SamplePlan
-    // execution per capacity chunk
-    let mut engine = DenseEngine::new(plan, family, n.clamp(1, 512));
+    // execution per capacity chunk, on the backend picked by name
+    let mut engine = EngineRegistry::builtin().build(
+        &a.get_str("engine", &spec)?,
+        plan,
+        family,
+        n.clamp(1, 512),
+    )?;
     let mut rng = Rng::new(a.get_usize("seed", &spec)? as u64);
     let samples = engine.sample_batch(&params, n, &mut rng, DecodeMode::Sample);
     for s in 0..n {
@@ -346,13 +444,34 @@ fn cmd_serve_demo(argv: &[String]) -> Result<()> {
     let graph = einet::structure::random_binary_trees(nv, 3, 4, 0);
     let plan = LayeredPlan::compile(graph, a.get_usize("k", &spec)?);
     let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
-    let server = einet::coordinator::server::InferenceServer::start::<DenseEngine>(
-        plan,
-        LeafFamily::Bernoulli,
-        params,
-        64,
-        std::time::Duration::from_millis(2),
-    );
+    let engine = a.get_str("engine", &spec)?;
+    let shards = a.get_usize("shards", &spec)?;
+    let reg = EngineRegistry::builtin();
+    let server = if shards > 0 {
+        println!("serving engine={engine} across {shards} scope-partitioned shards");
+        einet::coordinator::server::InferenceServer::start_sharded(
+            reg.factory(&engine)?,
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            shards,
+            64,
+            std::time::Duration::from_millis(2),
+            0,
+        )
+    } else {
+        println!("serving engine={engine}");
+        einet::coordinator::server::InferenceServer::start_named(
+            &reg,
+            &engine,
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            64,
+            std::time::Duration::from_millis(2),
+            0,
+        )?
+    };
     let n = a.get_usize("n", &spec)?.max(100);
     let t = einet::util::Timer::new();
     let mut rng = Rng::new(0);

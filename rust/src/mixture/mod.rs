@@ -20,11 +20,27 @@ pub struct Component {
     pub log_weight: f64,
 }
 
+/// Reusable buffers for the batched sample/inpaint paths: sized once per
+/// call to the engine's capacity and reused across every component group
+/// (the gather/forward/decode/scatter loop used to reallocate per group).
+#[derive(Default)]
+struct MixScratch {
+    /// gathered evidence rows of one component group
+    xg: Vec<f32>,
+    /// the group's completions (decode output)
+    og: Vec<f32>,
+    /// per-chunk forward log-probabilities
+    logp: Vec<f32>,
+    /// per-component block for `sample_batch_into`
+    blk: Vec<f32>,
+}
+
 /// A mixture of EiNets sharing a single structure (plan + engine reuse).
 pub struct EinetMixture<E: Engine> {
     pub family: LeafFamily,
     pub components: Vec<Component>,
     engine: E,
+    scratch: MixScratch,
 }
 
 /// Training configuration for the image pipeline.
@@ -137,6 +153,7 @@ impl<E: Engine> EinetMixture<E> {
             family,
             components,
             engine,
+            scratch: MixScratch::default(),
         })
     }
 
@@ -177,7 +194,9 @@ impl<E: Engine> EinetMixture<E> {
 
     /// Unconditional samples: draw every sample's component by weight up
     /// front, then ancestral-sample each component's group in ONE batched
-    /// [`Engine::sample_batch`] call and scatter the rows back.
+    /// [`Engine::sample_batch_into`] call and scatter the rows back. The
+    /// group block is engine scratch reused across component groups (and
+    /// calls) — no per-group allocation.
     pub fn sample(&mut self, n: usize, rng: &mut Rng, mode: DecodeMode) -> Vec<f32> {
         let d = self.engine.plan().graph.num_vars;
         let od = self.family.obs_dim();
@@ -194,12 +213,19 @@ impl<E: Engine> EinetMixture<E> {
             if idx.is_empty() {
                 continue;
             }
-            let block =
-                self.engine
-                    .sample_batch(&self.components[c].params, idx.len(), rng, mode);
+            if self.scratch.blk.len() < idx.len() * row {
+                self.scratch.blk.resize(idx.len() * row, 0.0);
+            }
+            self.engine.sample_batch_into(
+                &self.components[c].params,
+                idx.len(),
+                rng,
+                mode,
+                &mut self.scratch.blk[..idx.len() * row],
+            );
             for (j, &s) in idx.iter().enumerate() {
                 out[s * row..(s + 1) * row]
-                    .copy_from_slice(&block[j * row..(j + 1) * row]);
+                    .copy_from_slice(&self.scratch.blk[j * row..(j + 1) * row]);
             }
         }
         out
@@ -209,7 +235,9 @@ impl<E: Engine> EinetMixture<E> {
     /// sample's component from its posterior given the evidence, then
     /// decode all samples assigned to a component together — one batched
     /// forward + one [`Engine::decode_batch`] per (component, chunk)
-    /// instead of a forward/decode pair per sample.
+    /// instead of a forward/decode pair per sample. The gather/forward/
+    /// decode buffers are engine scratch sized once to capacity and
+    /// reused across every component group (and across calls).
     pub fn inpaint(
         &mut self,
         x: &[f32],
@@ -224,21 +252,27 @@ impl<E: Engine> EinetMixture<E> {
         // posterior over components per sample (chunked to capacity)
         let row = d * od;
         let cap = self.engine.batch_capacity();
+        if self.scratch.logp.len() < cap {
+            self.scratch.logp.resize(cap, 0.0);
+        }
+        if self.scratch.xg.len() < cap * row {
+            self.scratch.xg.resize(cap * row, 0.0);
+            self.scratch.og.resize(cap * row, 0.0);
+        }
         let mut post = vec![0.0f64; bn * nc];
         let mut b0 = 0usize;
         while b0 < bn {
             let chunk = cap.min(bn - b0);
-            let mut logp = vec![0.0f32; chunk];
             for c in 0..nc {
                 self.engine.forward(
                     &self.components[c].params,
                     &x[b0 * row..(b0 + chunk) * row],
                     evidence_mask,
-                    &mut logp,
+                    &mut self.scratch.logp[..chunk],
                 );
                 for b in 0..chunk {
                     post[(b0 + b) * nc + c] =
-                        logp[b] as f64 + self.components[c].log_weight;
+                        self.scratch.logp[b] as f64 + self.components[c].log_weight;
                 }
             }
             b0 += chunk;
@@ -273,32 +307,31 @@ impl<E: Engine> EinetMixture<E> {
             while g0 < idx.len() {
                 let chunk = cap.min(idx.len() - g0);
                 let group = &idx[g0..g0 + chunk];
-                // gather the group's evidence rows, forward once, decode
-                // the whole group, scatter the completions back
-                let mut xg = vec![0.0f32; chunk * row];
+                // gather the group's evidence rows into reused scratch,
+                // forward once, decode the whole group, scatter back
                 for (j, &b) in group.iter().enumerate() {
-                    xg[j * row..(j + 1) * row]
+                    self.scratch.xg[j * row..(j + 1) * row]
                         .copy_from_slice(&x[b * row..(b + 1) * row]);
                 }
-                let mut logp = vec![0.0f32; chunk];
                 self.engine.forward(
                     &self.components[c].params,
-                    &xg,
+                    &self.scratch.xg[..chunk * row],
                     evidence_mask,
-                    &mut logp,
+                    &mut self.scratch.logp[..chunk],
                 );
-                let mut og = xg.clone();
+                self.scratch.og[..chunk * row]
+                    .copy_from_slice(&self.scratch.xg[..chunk * row]);
                 self.engine.decode_batch(
                     &self.components[c].params,
                     chunk,
                     evidence_mask,
                     mode,
                     rng,
-                    &mut og,
+                    &mut self.scratch.og[..chunk * row],
                 );
                 for (j, &b) in group.iter().enumerate() {
                     out[b * row..(b + 1) * row]
-                        .copy_from_slice(&og[j * row..(j + 1) * row]);
+                        .copy_from_slice(&self.scratch.og[j * row..(j + 1) * row]);
                 }
                 g0 += chunk;
             }

@@ -72,14 +72,22 @@ fn generation_endpoint_checkpoint_round_trip() {
     let data = two_mode_data(n, nv, 2);
     let params = quick_train(&plan, family, &data, n, nv);
 
-    // checkpoint round trip: EINET002 save + bounds-checked load
+    // checkpoint round trip through the ZERO-COPY serving path: EINET002
+    // save + mmap load (same bounds checks as the buffered load; on
+    // non-unix or without the `mmap` feature this transparently falls
+    // back to the buffered read)
     let path = std::env::temp_dir().join("einet_test_server_gen_ckpt.bin");
     params.save(&path).unwrap();
-    let loaded = EinetParams::load(&path).unwrap();
-    let _ = std::fs::remove_file(&path);
+    let loaded = EinetParams::load_mapped(&path).unwrap();
     assert_eq!(params.layout, loaded.layout);
     assert_eq!(params.data, loaded.data);
     loaded.validate().unwrap();
+    #[cfg(all(unix, feature = "mmap"))]
+    assert!(
+        loaded.data.is_mapped(),
+        "serving load should be backed by the mapping, not a heap copy"
+    );
+    let _ = std::fs::remove_file(&path);
 
     // serve the reloaded model
     let server = InferenceServer::start_seeded::<DenseEngine>(
@@ -176,4 +184,42 @@ fn generation_endpoint_argmax_is_reproducible_across_backends() {
     for &v in &c {
         assert!(v == 0.0 || v == 1.0);
     }
+}
+
+#[test]
+fn mapped_load_rides_the_same_bounds_checks() {
+    // truncation and corruption must error through `load_mapped` exactly
+    // like the buffered `load` — the mmap path parses the same header
+    // with the same validation before any view is handed out
+    let nv = 6;
+    let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 4), 3);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 4);
+    let full_path = std::env::temp_dir().join("einet_test_mmap_full.bin");
+    params.save(&full_path).unwrap();
+    let full = std::fs::read(&full_path).unwrap();
+    let path = std::env::temp_dir().join("einet_test_mmap_trunc.bin");
+    let cuts = [3usize, 9, 40, 64, full.len() / 2, full.len() - 5, full.len() - 1];
+    for &cut in cuts.iter().filter(|&&c| c < full.len()) {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(
+            EinetParams::load_mapped(&path).is_err(),
+            "mapped load accepted a file truncated at {cut}"
+        );
+    }
+    let mut bad = full.clone();
+    bad[0] = b'X'; // magic
+    std::fs::write(&path, &bad).unwrap();
+    assert!(EinetParams::load_mapped(&path).is_err(), "bad magic accepted");
+    bad[0] = b'E';
+    bad[8] = 200; // unknown family tag
+    std::fs::write(&path, &bad).unwrap();
+    assert!(
+        EinetParams::load_mapped(&path).is_err(),
+        "bad family tag accepted"
+    );
+    // and the good file still loads and is bit-identical to the source
+    let ok = EinetParams::load_mapped(&full_path).unwrap();
+    assert_eq!(ok.data, params.data);
+    let _ = std::fs::remove_file(full_path);
+    let _ = std::fs::remove_file(path);
 }

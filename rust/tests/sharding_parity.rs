@@ -1,0 +1,236 @@
+//! 1-shard vs N-shard parity for the scope-partitioned execution path.
+//!
+//! Contract (the sharding analogue of `tests/sampling_parity.rs`): for
+//! the same seed, a [`ShardedPool`] must reproduce single-engine
+//! execution exactly — forward log-likelihoods and `Argmax` decoding
+//! bit-for-bit, EM-stepped parameters value-for-value, and `Sample`-mode
+//! decoding draw-for-draw (the counter-based per-(sample, region) RNG
+//! streams share one salt across all segments, so even the sampled
+//! values coincide) — across engines (dense/sparse), structures
+//! (RAT replica forests and Poon–Domingos grids, i.e. clean cuts and
+//! heavily shared spines), and leaf families.
+
+use einet::coordinator::ShardedPool;
+use einet::em::{m_step, EmConfig};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DecodeMode, DenseEngine, EinetParams, EmStats, Engine,
+    LayeredPlan, LeafFamily, SparseEngine,
+};
+
+/// Draw a batch of valid observations for the family.
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+fn parity_case<E: Engine + Send + 'static>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    seed: u64,
+    label: &str,
+) {
+    let nv = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = nv * od;
+    let bn = 6;
+    let mut rng = Rng::new(seed);
+    let params = EinetParams::init(plan, family, seed);
+    let x = random_batch(family, bn, nv, &mut rng);
+    let mut mask = vec![1.0f32; nv];
+    for d in nv / 2..nv {
+        mask[d] = 0.0;
+    }
+    let em = EmConfig {
+        step_size: 0.5,
+        var_bounds: (1e-3, 10.0),
+        ..Default::default()
+    };
+
+    // single-engine reference: forward, E-step, Argmax + Sample decode
+    let mut engine = E::build(plan.clone(), family, bn);
+    let mut lp_ref = vec![0.0f32; bn];
+    engine.forward(&params, &x, &mask, &mut lp_ref);
+    let mut stats_ref = EmStats::zeros_like(&params);
+    engine.backward(&params, &x, &mask, bn, &mut stats_ref);
+    let mut p_ref = params.clone();
+    m_step(&mut p_ref, &stats_ref, &em);
+    let mut argmax_ref = x.clone();
+    engine.decode_batch(
+        &params,
+        bn,
+        &mask,
+        DecodeMode::Argmax,
+        &mut Rng::new(seed + 9),
+        &mut argmax_ref,
+    );
+    let mut sample_ref = x.clone();
+    engine.decode_batch(
+        &params,
+        bn,
+        &mask,
+        DecodeMode::Sample,
+        &mut Rng::new(seed + 77),
+        &mut sample_ref,
+    );
+
+    for shards in [1usize, 4] {
+        let ctx = format!("{label} family={family:?} shards={shards}");
+        let mut pool =
+            ShardedPool::new(boxed_build::<E>, plan, family, &params, shards, bn);
+        // forward log-likelihood: bit-identical
+        let mut lp = vec![0.0f32; bn];
+        pool.forward(&x, &mask, bn, &mut lp);
+        for (b, (a, g)) in lp_ref.iter().zip(&lp).enumerate() {
+            assert!(
+                a.to_bits() == g.to_bits(),
+                "{ctx}: forward row {b} diverged: {a} vs {g}"
+            );
+        }
+        // EM step: same parameters from the reduced statistics
+        let mut stats = EmStats::zeros_like(&params);
+        pool.backward(&mut stats);
+        assert_eq!(stats.count, stats_ref.count, "{ctx}: count");
+        assert_eq!(stats.loglik, stats_ref.loglik, "{ctx}: loglik");
+        let mut p = params.clone();
+        m_step(&mut p, &stats, &em);
+        assert_eq!(p.data, p_ref.data, "{ctx}: EM-stepped parameters diverged");
+        // Argmax decode: bit-identical
+        let mut argmax_out = x.clone();
+        pool.decode(
+            bn,
+            &mask,
+            DecodeMode::Argmax,
+            &mut Rng::new(seed + 9),
+            &mut argmax_out,
+        );
+        for i in 0..bn * row {
+            assert!(
+                argmax_ref[i].to_bits() == argmax_out[i].to_bits(),
+                "{ctx}: Argmax element {i} diverged"
+            );
+        }
+        // Sample decode: the shared salt + per-(sample, region) streams
+        // make even the draws identical
+        let mut sample_out = x.clone();
+        pool.decode(
+            bn,
+            &mask,
+            DecodeMode::Sample,
+            &mut Rng::new(seed + 77),
+            &mut sample_out,
+        );
+        assert_eq!(sample_ref, sample_out, "{ctx}: Sample decode diverged");
+    }
+}
+
+fn all_families() -> Vec<LeafFamily> {
+    vec![
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Categorical { cats: 4 },
+        LeafFamily::Binomial { trials: 6 },
+    ]
+}
+
+#[test]
+fn sharding_parity_rat_dense() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(random_binary_trees(12, 3, 3, i as u64), 3);
+        parity_case::<DenseEngine>(&plan, family, 60 + i as u64, "dense/rat");
+    }
+}
+
+#[test]
+fn sharding_parity_rat_sparse() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        let plan = LayeredPlan::compile(random_binary_trees(12, 3, 3, i as u64), 3);
+        parity_case::<SparseEngine>(&plan, family, 60 + i as u64, "sparse/rat");
+    }
+}
+
+#[test]
+fn sharding_parity_pd_dense() {
+    // Poon–Domingos grids share sub-circuits heavily: clusters collapse
+    // toward the spine, which must stay correct (if not accelerated)
+    for (i, family) in [LeafFamily::Bernoulli, LeafFamily::Gaussian { channels: 1 }]
+        .into_iter()
+        .enumerate()
+    {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        parity_case::<DenseEngine>(&plan, family, 80 + i as u64, "dense/pd");
+    }
+}
+
+#[test]
+fn sharding_parity_pd_sparse() {
+    for (i, family) in [LeafFamily::Bernoulli, LeafFamily::Gaussian { channels: 1 }]
+        .into_iter()
+        .enumerate()
+    {
+        let plan = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        parity_case::<SparseEngine>(&plan, family, 80 + i as u64, "sparse/pd");
+    }
+}
+
+#[test]
+fn sharded_training_trajectories_match_across_shard_counts() {
+    // several EM steps end-to-end: 1-shard and 3-shard pools walk the
+    // exact same parameter trajectory
+    use einet::coordinator::{train_sharded, ShardConfig};
+    let nv = 14;
+    let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 3, 5), 3);
+    let family = LeafFamily::Bernoulli;
+    let mut rng = Rng::new(31);
+    let n = 96;
+    let data = random_batch(family, n, nv, &mut rng);
+    let mut results: Vec<EinetParams> = Vec::new();
+    for shards in [1usize, 3] {
+        let mut p = EinetParams::init(&plan, family, 17);
+        let cfg = ShardConfig {
+            n_shards: shards,
+            epochs: 3,
+            batch_size: 32,
+            em: EmConfig {
+                step_size: 0.5,
+                ..Default::default()
+            },
+            log_every: 0,
+        };
+        let hist = train_sharded(
+            boxed_build::<DenseEngine>,
+            &plan,
+            family,
+            &mut p,
+            &data,
+            n,
+            &cfg,
+        );
+        assert_eq!(hist.len(), 3);
+        results.push(p);
+    }
+    assert_eq!(
+        results[0].data, results[1].data,
+        "shard count changed the training trajectory"
+    );
+}
