@@ -1,0 +1,193 @@
+//! Per-query-type throughput through the unified Query API.
+//!
+//! Measures `Engine::execute` over compiled plans at B = 256 on both
+//! engines: fully-observed log-likelihood, half-observed marginal,
+//! conditional (two passes), true max-product MPE (max-product forward +
+//! backtrack) — including the raw MaxProduct-vs-SumProduct forward
+//! comparison — plus conditional inpainting and unconditional sampling.
+//! Results go to stdout and BENCH_queries.json.
+//!
+//!     cargo bench --bench query_throughput
+//!     EINET_BENCH_QUICK=1 cargo bench --bench query_throughput
+
+use einet::bench::{fmt_si, time_it, Table};
+use einet::util::json;
+use einet::util::rng::Rng;
+use einet::{
+    DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan, LeafFamily, Query,
+    QueryOutput, Semiring, SparseEngine,
+};
+
+struct Row {
+    engine: &'static str,
+    loglik_s: f64,
+    marginal_s: f64,
+    conditional_s: f64,
+    mpe_s: f64,
+    fwd_sum_s: f64,
+    fwd_max_s: f64,
+    inpaint_s: f64,
+    sample_s: f64,
+}
+
+fn bench_engine<E: Engine>(
+    name: &'static str,
+    plan: &LayeredPlan,
+    batch: usize,
+    repeats: usize,
+) -> Row {
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(plan, family, 0);
+    let mut engine = E::build(plan.clone(), family, batch);
+    let nv = plan.graph.num_vars;
+
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..batch * nv)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let emask: Vec<f32> = (0..nv).map(|d| if d % 2 == 0 { 1.0 } else { 0.0 }).collect();
+    let qmask: Vec<f32> = (0..nv)
+        .map(|d| if d % 2 == 1 && d < nv / 2 { 1.0 } else { 0.0 })
+        .collect();
+
+    let mut out = QueryOutput::default();
+    let mut run = |query: Query, rng: &mut Rng, out: &mut QueryOutput| -> f64 {
+        let qp = query.compile(nv).unwrap();
+        time_it(
+            || {
+                engine.execute(&params, &qp, &x, batch, rng, out);
+                std::hint::black_box(out.scores.len().max(out.rows.len()));
+            },
+            1,
+            repeats,
+        )
+        .median_s
+    };
+
+    let loglik_s = run(Query::LogLik, &mut rng, &mut out);
+    let marginal_s = run(Query::Marginal { mask: emask.clone() }, &mut rng, &mut out);
+    let conditional_s = run(
+        Query::Conditional {
+            query_mask: qmask,
+            evidence_mask: emask.clone(),
+        },
+        &mut rng,
+        &mut out,
+    );
+    let mpe_s = run(Query::Mpe { mask: emask.clone() }, &mut rng, &mut out);
+    let inpaint_s = run(
+        Query::Inpaint {
+            mask: emask.clone(),
+            mode: DecodeMode::Sample,
+        },
+        &mut rng,
+        &mut out,
+    );
+    let sample_s = run(Query::Sample { n: batch }, &mut rng, &mut out);
+
+    // raw forward comparison: the same mask under both semirings
+    let mut logp = vec![0.0f32; batch];
+    let fwd_sum_s = time_it(
+        || {
+            engine.forward_semiring(&params, &x, &emask, &mut logp, Semiring::SumProduct);
+            std::hint::black_box(logp[0]);
+        },
+        1,
+        repeats,
+    )
+    .median_s;
+    let fwd_max_s = time_it(
+        || {
+            engine.forward_semiring(&params, &x, &emask, &mut logp, Semiring::MaxProduct);
+            std::hint::black_box(logp[0]);
+        },
+        1,
+        repeats,
+    )
+    .median_s;
+
+    Row {
+        engine: name,
+        loglik_s,
+        marginal_s,
+        conditional_s,
+        mpe_s,
+        fwd_sum_s,
+        fwd_max_s,
+        inpaint_s,
+        sample_s,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let batch = 256usize;
+    let repeats = if quick { 3 } else { 7 };
+    let (nv, k, depth, rep) = if quick { (64, 8, 4, 4) } else { (128, 10, 5, 6) };
+
+    let plan = LayeredPlan::compile(
+        einet::structure::random_binary_trees(nv, depth, rep, 7),
+        k,
+    );
+
+    println!("Query throughput — unified Engine::execute, B={batch}, D={nv}, K={k}");
+    let rows = vec![
+        bench_engine::<DenseEngine>("dense", &plan, batch, repeats),
+        bench_engine::<SparseEngine>("sparse", &plan, batch, repeats),
+    ];
+
+    let mut table = Table::new(&[
+        "engine", "loglik", "marginal", "conditional", "mpe", "fwd max/sum",
+        "inpaint", "sample",
+    ]);
+    let mut report_rows: Vec<json::Json> = Vec::new();
+    for r in &rows {
+        let max_over_sum = r.fwd_max_s / r.fwd_sum_s;
+        table.row(vec![
+            r.engine.to_string(),
+            fmt_si(r.loglik_s),
+            fmt_si(r.marginal_s),
+            fmt_si(r.conditional_s),
+            fmt_si(r.mpe_s),
+            format!("{max_over_sum:.2}x"),
+            fmt_si(r.inpaint_s),
+            fmt_si(r.sample_s),
+        ]);
+        println!(
+            "{:<7} loglik {}  marginal {}  cond {}  mpe {}  inpaint {}  sample {}",
+            r.engine,
+            fmt_si(r.loglik_s),
+            fmt_si(r.marginal_s),
+            fmt_si(r.conditional_s),
+            fmt_si(r.mpe_s),
+            fmt_si(r.inpaint_s),
+            fmt_si(r.sample_s),
+        );
+        let qps = |s: f64| batch as f64 / s;
+        report_rows.push(json::obj(vec![
+            ("engine", json::s(r.engine)),
+            ("batch", json::num(batch as f64)),
+            ("loglik_rows_per_s", json::num(qps(r.loglik_s))),
+            ("marginal_rows_per_s", json::num(qps(r.marginal_s))),
+            ("conditional_rows_per_s", json::num(qps(r.conditional_s))),
+            ("mpe_rows_per_s", json::num(qps(r.mpe_s))),
+            ("inpaint_rows_per_s", json::num(qps(r.inpaint_s))),
+            ("sample_rows_per_s", json::num(qps(r.sample_s))),
+            ("forward_sum_product_s", json::num(r.fwd_sum_s)),
+            ("forward_max_product_s", json::num(r.fwd_max_s)),
+            ("max_over_sum_forward_ratio", json::num(r.fwd_max_s / r.fwd_sum_s)),
+        ]));
+    }
+    println!("\n{}", table.render());
+    let report = json::obj(vec![
+        ("experiment", json::s("query_throughput")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("batch", json::num(batch as f64)),
+        ("num_vars", json::num(nv as f64)),
+        ("k", json::num(k as f64)),
+        ("rows", json::arr(report_rows)),
+    ]);
+    std::fs::write("BENCH_queries.json", report.to_string())
+        .expect("write BENCH_queries.json");
+    println!("wrote BENCH_queries.json");
+}

@@ -48,7 +48,11 @@ fn run_point(
         ..Default::default()
     };
     let mut pool = ShardedPool::new(factory, plan, family, params0, shards, batch);
-    let row = d * family.obs_dim();
+
+    // zero-copy hand-off: the dataset and mask are wrapped in Arcs once,
+    // each batch ships as a pointer + row range
+    let data = std::sync::Arc::new(data.to_vec());
+    let mask = std::sync::Arc::new(mask);
 
     // --- train: one epoch of sharded stochastic EM per rep -------------
     let mut run_train = || {
@@ -56,7 +60,7 @@ fn run_point(
         let mut b0 = 0usize;
         while b0 < n {
             let bn = batch.min(n - b0);
-            pool.train_step(&data[b0 * row..(b0 + bn) * row], &mask, bn, &em);
+            pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &em);
             b0 += bn;
         }
     };
@@ -69,7 +73,14 @@ fn run_point(
         let mut b0 = 0usize;
         while b0 < n {
             let bn = batch.min(n - b0);
-            pool.forward(&data[b0 * row..(b0 + bn) * row], &mask, bn, &mut logp[..bn]);
+            pool.forward_shared(
+                data.clone(),
+                b0,
+                mask.clone(),
+                bn,
+                einet::Semiring::SumProduct,
+                &mut logp[..bn],
+            );
             b0 += bn;
         }
     };

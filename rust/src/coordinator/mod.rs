@@ -42,7 +42,7 @@ pub mod server;
 use std::sync::{mpsc, Arc, RwLock};
 
 use crate::em::{m_step, stats_from_natural_grads, EmConfig};
-use crate::engine::exec::PlanPartition;
+use crate::engine::exec::{PlanPartition, Semiring};
 use crate::engine::registry::EngineFactory;
 use crate::engine::{
     ArenaShard, DecodeMode, EinetParams, EmStats, Engine, LevelSpec, ParamArena,
@@ -286,21 +286,29 @@ pub fn per_sample_ll<E: Engine>(
 // Scope-partitioned model-parallel execution
 // ---------------------------------------------------------------------------
 
-/// What the coordinator sends a segment worker.
+/// What the coordinator sends a segment worker. Batches travel as a
+/// shared `Arc` plus a row offset — the pool never copies the batch per
+/// call: callers that already hold the data in an `Arc` (the trainer
+/// holds the whole dataset in one; the server wraps each coalesced
+/// group once) ship a pointer and a range.
 enum ShardJob {
     /// new parameter spans from the server (applies before later jobs —
     /// the channel is ordered)
     Params(ArenaShard),
-    /// forward the worker's segment over the batch; reply `Boundary`
+    /// forward the worker's segment over rows `[row0, row0 + bn)` of `x`
+    /// under the given semiring; reply `Boundary`
     Forward {
         x: Arc<Vec<f32>>,
+        row0: usize,
         mask: Arc<Vec<f32>>,
         bn: usize,
+        sr: Semiring,
     },
     /// backward sweep seeded with the spine's boundary gradients
     /// (packed in `Segment::boundary` order); reply `Stats`
     Backward {
         x: Arc<Vec<f32>>,
+        row0: usize,
         mask: Arc<Vec<f32>>,
         bn: usize,
         grads: Vec<f32>,
@@ -347,11 +355,13 @@ fn shard_worker(
     // cache-refresh work) scales with the shard, not the model
     let mut local = ParamArena::zeros(layout);
     let od = family.obs_dim();
+    let row = engine.plan().graph.num_vars * od;
     while let Ok(job) = jobs.recv() {
         match job {
             ShardJob::Params(shard) => shard.scatter_into(&mut local),
-            ShardJob::Forward { x, mask, bn } => {
-                engine.forward_steps(&local, &x, &mask, bn, &seg.steps);
+            ShardJob::Forward { x, row0, mask, bn, sr } => {
+                let xs = &x[row0 * row..(row0 + bn) * row];
+                engine.forward_steps(&local, xs, &mask, bn, &seg.steps, sr);
                 let mut out = Vec::new();
                 for &rid in &seg.boundary {
                     engine.export_rows(rid, bn, &mut out);
@@ -360,7 +370,7 @@ fn shard_worker(
                     break;
                 }
             }
-            ShardJob::Backward { x, mask, bn, grads } => {
+            ShardJob::Backward { x, row0, mask, bn, grads } => {
                 engine.clear_grad();
                 let mut off = 0usize;
                 for &rid in &seg.boundary {
@@ -369,7 +379,8 @@ fn shard_worker(
                     off += bn * w;
                 }
                 let mut stats = EmStats::zeros(&local.layout);
-                engine.backward_steps(&local, &x, &mask, bn, &seg.steps, &mut stats);
+                let xs = &x[row0 * row..(row0 + bn) * row];
+                engine.backward_steps(&local, xs, &mask, bn, &seg.steps, &mut stats);
                 if replies.send(ShardReply::Stats(Box::new(stats))).is_err() {
                     break;
                 }
@@ -452,12 +463,16 @@ pub struct ShardedPool {
     params: EinetParams,
     family: LeafFamily,
     batch_cap: usize,
+    /// row stride (`D * obs_dim`)
+    row: usize,
     job_txs: Vec<mpsc::Sender<ShardJob>>,
     res_rxs: Vec<mpsc::Receiver<ShardReply>>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    last_x: Option<Arc<Vec<f32>>>,
+    /// the batch of the most recent forward: shared buffer + row offset
+    last_x: Option<(Arc<Vec<f32>>, usize)>,
     last_mask: Option<Arc<Vec<f32>>>,
     last_bn: usize,
+    last_sr: Semiring,
 }
 
 impl ShardedPool {
@@ -509,18 +524,21 @@ impl ShardedPool {
             job_txs.push(jtx);
             res_rxs.push(rrx);
         }
+        let row = plan.graph.num_vars * family.obs_dim();
         let mut pool = Self {
             partition,
             spine,
             params: params.clone(),
             family,
             batch_cap,
+            row,
             job_txs,
             res_rxs,
             handles,
             last_x: None,
             last_mask: None,
             last_bn: 0,
+            last_sr: Semiring::SumProduct,
         };
         pool.broadcast();
         pool
@@ -557,18 +575,47 @@ impl ShardedPool {
         self.broadcast();
     }
 
-    /// Segmented forward pass over one batch: shards run concurrently,
-    /// boundary activations flow to the spine, the spine finishes and
-    /// reads the root.
+    /// Segmented forward pass over one batch (copying convenience
+    /// wrapper; the zero-copy path is [`ShardedPool::forward_shared`]).
     pub fn forward(&mut self, x: &[f32], mask: &[f32], bn: usize, logp: &mut [f32]) {
+        self.forward_shared(
+            Arc::new(x.to_vec()),
+            0,
+            Arc::new(mask.to_vec()),
+            bn,
+            Semiring::SumProduct,
+            logp,
+        )
+    }
+
+    /// Segmented forward pass without copying the batch: rows
+    /// `[row0, row0 + bn)` of the shared buffer `x` are evaluated under
+    /// `sr`. Shards run concurrently, boundary activations flow to the
+    /// spine, the spine finishes and reads the root. Callers holding
+    /// their data in an `Arc` (the sharded trainer ships the whole
+    /// dataset once; the server wraps each coalesced group) pay only an
+    /// `Arc` clone per worker per call.
+    pub fn forward_shared(
+        &mut self,
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        sr: Semiring,
+        logp: &mut [f32],
+    ) {
         assert!(bn <= self.batch_cap, "batch exceeds pool capacity");
-        let x = Arc::new(x.to_vec());
-        let mask = Arc::new(mask.to_vec());
+        assert!(
+            (row0 + bn) * self.row <= x.len(),
+            "batch range outside the shared buffer"
+        );
         for tx in &self.job_txs {
             tx.send(ShardJob::Forward {
                 x: x.clone(),
+                row0,
                 mask: mask.clone(),
                 bn,
+                sr,
             })
             .expect("shard worker hung up");
         }
@@ -587,15 +634,17 @@ impl ShardedPool {
         }
         self.spine.forward_steps(
             &self.params,
-            x.as_slice(),
+            &x[row0 * self.row..(row0 + bn) * self.row],
             mask.as_slice(),
             bn,
             &self.partition.spine.steps,
+            sr,
         );
         self.spine.read_logp(bn, &mut logp[..bn]);
-        self.last_x = Some(x);
+        self.last_x = Some((x, row0));
         self.last_mask = Some(mask);
         self.last_bn = bn;
+        self.last_sr = sr;
     }
 
     /// Segmented backward pass for the batch last given to `forward`:
@@ -603,14 +652,19 @@ impl ShardedPool {
     /// shards, per-shard E-steps reduced into `stats` via
     /// [`EmStats::merge`].
     pub fn backward(&mut self, stats: &mut EmStats) {
-        let x = self.last_x.clone().expect("backward without forward");
+        let (x, row0) = self.last_x.clone().expect("backward without forward");
         let mask = self.last_mask.clone().expect("backward without forward");
         let bn = self.last_bn;
+        debug_assert_eq!(
+            self.last_sr,
+            Semiring::SumProduct,
+            "EM statistics are expectations: backward requires a sum-product forward"
+        );
         self.spine.clear_grad();
         self.spine.seed_root_grad(bn, stats);
         self.spine.backward_steps(
             &self.params,
-            x.as_slice(),
+            &x[row0 * self.row..(row0 + bn) * self.row],
             mask.as_slice(),
             bn,
             &self.partition.spine.steps,
@@ -623,6 +677,7 @@ impl ShardedPool {
             }
             tx.send(ShardJob::Backward {
                 x: x.clone(),
+                row0,
                 mask: mask.clone(),
                 bn,
                 grads,
@@ -714,10 +769,25 @@ impl ShardedPool {
 
     /// One stochastic-EM step on a batch: segmented forward + backward,
     /// M-step on the master arena, per-shard span broadcast. Returns the
-    /// batch log-likelihood sum.
+    /// batch log-likelihood sum. (Copying wrapper over
+    /// [`ShardedPool::train_step_shared`].)
     pub fn train_step(&mut self, x: &[f32], mask: &[f32], bn: usize, em: &EmConfig) -> f64 {
+        self.train_step_shared(Arc::new(x.to_vec()), 0, Arc::new(mask.to_vec()), bn, em)
+    }
+
+    /// [`ShardedPool::train_step`] without copying the batch: one EM step
+    /// on rows `[row0, row0 + bn)` of the shared buffer (the trainer
+    /// wraps the dataset in ONE `Arc` up front and hands out ranges).
+    pub fn train_step_shared(
+        &mut self,
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        em: &EmConfig,
+    ) -> f64 {
         let mut logp = vec![0.0f32; bn];
-        self.forward(x, mask, bn, &mut logp);
+        self.forward_shared(x, row0, mask, bn, Semiring::SumProduct, &mut logp);
         let mut stats = EmStats::zeros(&self.params.layout);
         self.backward(&mut stats);
         let ll = stats.loglik;
@@ -780,7 +850,11 @@ pub fn train_sharded(
     let od = family.obs_dim();
     let row = d * od;
     assert_eq!(data.len(), n * row);
-    let mask = vec![1.0f32; d];
+    // one shared copy of the dataset and the mask for the whole run:
+    // per-batch hand-off to the workers is an Arc clone + row range, not
+    // a buffer copy
+    let data = Arc::new(data.to_vec());
+    let mask = Arc::new(vec![1.0f32; d]);
     let mut pool = ShardedPool::new(
         factory,
         plan,
@@ -797,7 +871,7 @@ pub fn train_sharded(
         while b0 < n {
             let bn = cfg.batch_size.min(n - b0);
             epoch_ll +=
-                pool.train_step(&data[b0 * row..(b0 + bn) * row], &mask, bn, &cfg.em);
+                pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &cfg.em);
             b0 += bn;
         }
         let rec = EpochStats {

@@ -1,28 +1,39 @@
 //! Batched inference service: the router/batcher pattern (vLLM-style)
-//! over EiNet conditional queries AND conditional generation.
+//! over the unified [`Query`] API.
 //!
-//! Clients submit [`Query`] requests (evidence + mask, answered with a
-//! log-probability) or [`GenQuery`] requests (evidence + mask, answered
-//! with a completed sample); a dispatcher thread coalesces up to
-//! `max_batch` pending requests (or whatever has arrived within
-//! `max_wait`), groups them by mask, and serves each group with a single
-//! batched forward pass — generation groups additionally run ONE batched
-//! top-down decode ([`Engine::decode_batch`], the compiled `SamplePlan`
-//! reverse program) for the whole group. The dispatcher is
-//! backend-agnostic: a private engine of any type implementing
-//! [`Engine`] ([`InferenceServer::start`]), a backend picked by name
-//! from the runtime registry ([`InferenceServer::start_named`]), or a
-//! scope-partitioned [`ShardedPool`]
+//! Clients submit typed [`Query`] values (evidence row + query) through
+//! [`InferenceServer::submit_query`] — or through the legacy shims
+//! ([`InferenceServer::submit`] = `Marginal`,
+//! [`InferenceServer::submit_generate`] = `Inpaint`,
+//! [`InferenceServer::submit_mpe`] = `Mpe`). A dispatcher thread
+//! coalesces up to `max_batch` pending requests (or whatever has arrived
+//! within `max_wait`), compiles each into a [`QueryPlan`] once, groups
+//! requests whose compiled plans are identical
+//! ([`QueryPlan::group_cmp`]), and serves each group with the plan's
+//! semiring-parameterized forward passes plus (for decoding queries) ONE
+//! batched top-down decode. Because grouping is by *compiled plan*, a
+//! marginal, a conditional, a max-product MPE, and an inpainting request
+//! each land in their own batch automatically — no parallel bespoke
+//! request types.
+//!
+//! The dispatcher is backend-agnostic: a private engine of any type
+//! implementing [`Engine`] ([`InferenceServer::start`]), a backend picked
+//! by name from the runtime registry ([`InferenceServer::start_named`]),
+//! or a scope-partitioned [`ShardedPool`]
 //! ([`InferenceServer::start_sharded`]) whose segment workers each hold
-//! only their parameter shard — forward *and* generation batches then
-//! execute across the cut, with one `sel` u32 per region·sample as the
-//! only cross-shard sampling state.
+//! only their parameter shard. MPE serves sharded for free: the
+//! max-product forward crosses the cut through the same boundary
+//! activation rows as sum-product, and the backtrack through the same
+//! one-`sel`-u32-per-region·sample tables as sampling. Batches are
+//! handed to the sharded backend as a shared `Arc` (no per-call copy).
 
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::ShardedPool;
+use crate::engine::query::{Query, QueryOutput, QueryPlan};
 use crate::engine::registry::{EngineFactory, EngineRegistry};
 use crate::engine::{DecodeMode, EinetParams, Engine};
 use crate::layers::LayeredPlan;
@@ -42,72 +53,96 @@ enum Backend {
 }
 
 impl Backend {
-    fn forward(&mut self, x: &[f32], mask: &[f32], logp: &mut [f32]) {
-        match self {
-            Backend::Single(e, params) => e.forward(params, x, mask, logp),
-            Backend::Sharded(p) => {
-                let bn = logp.len();
-                p.forward(x, mask, bn, logp)
-            }
-        }
-    }
-
-    fn decode_batch(
+    /// Serve one plan-homogeneous group. The single-engine case IS
+    /// [`Engine::execute`] — one source of truth for how a compiled plan
+    /// runs; the sharded case replays the same plan semantics over the
+    /// pool's segmented primitives (which have no boxed-engine `execute`),
+    /// shipping the batch `Arc` to the workers with no per-call copy.
+    fn run_plan(
         &mut self,
+        qp: &QueryPlan,
+        x: &Arc<Vec<f32>>,
         bn: usize,
-        mask: &[f32],
-        mode: DecodeMode,
         rng: &mut Rng,
-        out: &mut [f32],
+        den: &mut Vec<f32>,
+        out: &mut QueryOutput,
     ) {
         match self {
-            Backend::Single(e, params) => {
-                e.decode_batch(params, bn, mask, mode, rng, out)
+            Backend::Single(e, params) => e.execute(params, qp, x.as_slice(), bn, rng, out),
+            Backend::Sharded(p) => {
+                out.scores.clear();
+                out.scores.resize(bn, 0.0);
+                out.rows.clear();
+                let m0 = Arc::new(qp.passes[0].mask.clone());
+                p.forward_shared(
+                    x.clone(),
+                    0,
+                    m0.clone(),
+                    bn,
+                    qp.passes[0].semiring,
+                    &mut out.scores,
+                );
+                if let Some(mode) = qp.decode {
+                    out.rows.extend_from_slice(x.as_slice());
+                    p.decode(bn, m0.as_slice(), mode, rng, &mut out.rows);
+                }
+                if qp.is_ratio() {
+                    den.clear();
+                    den.resize(bn, 0.0);
+                    let m1 = Arc::new(qp.passes[1].mask.clone());
+                    p.forward_shared(x.clone(), 0, m1, bn, qp.passes[1].semiring, den);
+                    for b in 0..bn {
+                        out.scores[b] -= den[b];
+                    }
+                }
             }
-            Backend::Sharded(p) => p.decode(bn, mask, mode, rng, out),
         }
     }
 }
 
-/// A marginal-likelihood query: evidence values + evidence mask.
-pub struct Query {
-    pub x: Vec<f32>,
-    pub mask: Vec<f32>,
-    pub reply: Sender<f32>,
+/// A served answer: the per-row log score (marginal / conditional /
+/// max-product MPE, depending on the query) plus, for decoding queries,
+/// the completed `[D, obs_dim]` row (observed dims untouched).
+#[derive(Clone, Debug)]
+pub struct QueryAnswer {
+    pub score: f32,
+    /// empty for score-only queries
+    pub row: Vec<f32>,
 }
 
-/// A conditional-generation query: evidence values + evidence mask; the
-/// reply is the completed `[D, obs_dim]` row (observed dims untouched,
-/// unobserved dims drawn from the exact conditional).
-pub struct GenQuery {
-    pub x: Vec<f32>,
-    pub mask: Vec<f32>,
-    pub mode: DecodeMode,
-    pub reply: Sender<Vec<f32>>,
+/// How a request wants its answer delivered: the legacy endpoints keep
+/// their scalar/row channel types, the unified endpoint gets everything.
+enum ReplyTo {
+    Score(Sender<f32>),
+    Row(Sender<Vec<f32>>),
+    Full(Sender<QueryAnswer>),
 }
 
-/// What clients can ask the dispatcher for.
-enum Request {
-    LogProb(Query),
-    Generate(GenQuery),
+/// One in-flight request: evidence row + typed query + reply channel.
+struct QueryRequest {
+    x: Vec<f32>,
+    query: Query,
+    reply: ReplyTo,
 }
 
 /// Handle to the running service.
 pub struct InferenceServer {
-    tx: Sender<Request>,
+    tx: Sender<QueryRequest>,
     handle: Option<JoinHandle<ServerStats>>,
 }
 
 /// Throughput accounting returned on shutdown.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerStats {
+    /// score-only queries served (LogLik / Marginal / Conditional)
     pub queries: usize,
     pub batches: usize,
-    /// conditional samples produced by the generation endpoint
+    /// decoded rows produced (Inpaint / Mpe)
     pub generated: usize,
     /// malformed requests dropped at the dispatch boundary (wrong-length
-    /// evidence/mask, non-finite mask values, or observed evidence
-    /// outside the leaf family's support)
+    /// evidence/mask, non-finite mask values, overlapping conditional
+    /// masks, observed evidence outside the leaf family's support, or a
+    /// `Sample` query — unsupported per-request here)
     pub rejected: usize,
     /// largest number of requests served by a single batched pass — the
     /// coalescing witness the tests assert on (>= 2 proves batching
@@ -176,8 +211,9 @@ impl InferenceServer {
     }
 
     /// Spawn the dispatcher over a scope-partitioned [`ShardedPool`]:
-    /// forward and generation batches execute across `n_shards` segment
-    /// workers, with each worker holding only its parameter shard.
+    /// every query type — including max-product MPE — executes across
+    /// `n_shards` segment workers, with each worker holding only its
+    /// parameter shard.
     #[allow(clippy::too_many_arguments)]
     pub fn start_sharded(
         factory: EngineFactory,
@@ -210,7 +246,7 @@ impl InferenceServer {
         max_wait: Duration,
         seed: u64,
     ) -> Self {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::channel::<QueryRequest>();
         let handle = std::thread::spawn(move || {
             dispatcher(plan, family, backend, rx, max_batch, max_wait, seed)
         });
@@ -220,32 +256,63 @@ impl InferenceServer {
         }
     }
 
-    /// Submit a query; returns the receiver for the log-probability.
+    /// Submit any typed [`Query`]; the receiver yields the full
+    /// [`QueryAnswer`] (score + completed row where applicable).
     ///
-    /// Malformed requests (wrong-length `x`/`mask`, non-finite mask
-    /// values, or observed evidence outside the leaf family's support —
-    /// see [`LeafFamily::valid_obs`]) are dropped by the dispatcher: the
-    /// receiver disconnects instead of yielding a value. Evidence at
-    /// marginalized dims is never read, so non-finite placeholders there
-    /// are accepted.
+    /// Malformed requests — wrong-length evidence, an invalid mask
+    /// (length, non-finite values, conditional overlap), observed
+    /// evidence outside the leaf family's support (see
+    /// [`LeafFamily::valid_obs`]), or a [`Query::Sample`] (whose n-row
+    /// answer does not fit the one-row-per-request protocol; submit
+    /// `Inpaint` rows with an all-zero mask instead) — are dropped by the
+    /// dispatcher: the receiver disconnects instead of yielding a value.
+    /// Evidence at marginalized dims is never read, so non-finite
+    /// placeholders there are accepted.
+    pub fn submit_query(&self, x: Vec<f32>, query: Query) -> Receiver<QueryAnswer> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(QueryRequest {
+            x,
+            query,
+            reply: ReplyTo::Full(reply),
+        });
+        rx
+    }
+
+    /// Blocking convenience for [`InferenceServer::submit_query`]. Panics
+    /// if the request is rejected as malformed or the server is down.
+    pub fn run_query(&self, x: Vec<f32>, query: Query) -> QueryAnswer {
+        self.submit_query(x, query)
+            .recv()
+            .expect("request rejected or server down")
+    }
+
+    /// Legacy shim for [`Query::Marginal`]: submit evidence + mask,
+    /// receive the marginal log-likelihood. Prefer
+    /// [`InferenceServer::submit_query`].
     pub fn submit(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<f32> {
         let (reply, rx) = mpsc::channel();
-        let _ = self.tx.send(Request::LogProb(Query { x, mask, reply }));
+        let _ = self.tx.send(QueryRequest {
+            x,
+            query: Query::Marginal { mask },
+            reply: ReplyTo::Score(reply),
+        });
         rx
     }
 
     /// Blocking convenience call. Panics if the request is rejected as
-    /// malformed (see [`InferenceServer::submit`]) or the server is down;
-    /// use [`InferenceServer::submit`] to observe the disconnect instead.
+    /// malformed (see [`InferenceServer::submit_query`]) or the server is
+    /// down; use [`InferenceServer::submit`] to observe the disconnect
+    /// instead.
     pub fn query(&self, x: Vec<f32>, mask: Vec<f32>) -> f32 {
         self.submit(x, mask)
             .recv()
             .expect("request rejected or server down")
     }
 
-    /// Submit a conditional-generation request; returns the receiver for
-    /// the completed row. Malformed requests are dropped as in
-    /// [`InferenceServer::submit`].
+    /// Legacy shim for [`Query::Inpaint`]: submit a conditional-generation
+    /// request; returns the receiver for the completed row. Malformed
+    /// requests are dropped as in [`InferenceServer::submit_query`].
+    /// Prefer [`InferenceServer::submit_query`].
     pub fn submit_generate(
         &self,
         x: Vec<f32>,
@@ -253,9 +320,11 @@ impl InferenceServer {
         mode: DecodeMode,
     ) -> Receiver<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
-        let _ = self
-            .tx
-            .send(Request::Generate(GenQuery { x, mask, mode, reply }));
+        let _ = self.tx.send(QueryRequest {
+            x,
+            query: Query::Inpaint { mask, mode },
+            reply: ReplyTo::Row(reply),
+        });
         rx
     }
 
@@ -265,6 +334,20 @@ impl InferenceServer {
     /// instead.
     pub fn generate(&self, x: Vec<f32>, mask: Vec<f32>, mode: DecodeMode) -> Vec<f32> {
         self.submit_generate(x, mask, mode)
+            .recv()
+            .expect("request rejected or server down")
+    }
+
+    /// Convenience for [`Query::Mpe`]: the answer's `row` is the exact
+    /// max-product completion of the unobserved variables, its `score`
+    /// the MPE log-score.
+    pub fn submit_mpe(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<QueryAnswer> {
+        self.submit_query(x, Query::Mpe { mask })
+    }
+
+    /// Blocking convenience for [`InferenceServer::submit_mpe`].
+    pub fn mpe(&self, x: Vec<f32>, mask: Vec<f32>) -> QueryAnswer {
+        self.submit_mpe(x, mask)
             .recv()
             .expect("request rejected or server down")
     }
@@ -281,19 +364,36 @@ impl InferenceServer {
     }
 }
 
-/// Total lexicographic order on masks (NaN-safe: a malformed request must
-/// not panic the shared dispatcher thread). Batch grouping must use this
-/// same order: under `PartialEq` a NaN-bearing mask is unequal to itself,
-/// so a group would drain zero requests and the dispatch loop would spin
-/// forever.
-fn mask_cmp(a: &[f32], b: &[f32]) -> std::cmp::Ordering {
-    for (x, y) in a.iter().zip(b) {
-        let o = x.total_cmp(y);
-        if o != std::cmp::Ordering::Equal {
-            return o;
+/// Compile one request into its plan and validate the evidence against
+/// it: `None` means reject (the request never reaches the engine, where
+/// it would panic — length asserts, Categorical theta indexing,
+/// Binomial's `ln_choose` contract, or in debug builds the sampler's
+/// categorical draw over NaN posterior weights — or poison a batch with
+/// NaN). [`Query::compile`] already rejects NaN-bearing and wrong-length
+/// masks, so the NaN-livelock of the old `Vec<f32> PartialEq` grouping
+/// cannot recur: grouping happens on *compiled* plans, whose masks are
+/// canonical and finite by construction. Evidence at marginalized dims
+/// (mask 0) is never read, so NaN placeholders there — the natural
+/// missing-value encoding for inpainting — stay legal.
+fn compile_request(
+    r: &QueryRequest,
+    d: usize,
+    od: usize,
+    row: usize,
+    family: LeafFamily,
+) -> Option<QueryPlan> {
+    let qp = r.query.compile(d).ok()?;
+    if qp.sample_n.is_some() || r.x.len() != row {
+        return None;
+    }
+    for pass in &qp.passes {
+        for v in 0..d {
+            if pass.mask[v] != 0.0 && !family.valid_obs(&r.x[v * od..(v + 1) * od]) {
+                return None;
+            }
         }
     }
-    a.len().cmp(&b.len())
+    Some(qp)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -301,7 +401,7 @@ fn dispatcher(
     plan: LayeredPlan,
     family: LeafFamily,
     mut engine: Backend,
-    rx: Receiver<Request>,
+    rx: Receiver<QueryRequest>,
     max_batch: usize,
     max_wait: Duration,
     seed: u64,
@@ -311,7 +411,9 @@ fn dispatcher(
     let row = d * od;
     let mut rng = Rng::new(seed);
     let mut stats = ServerStats::default();
-    let mut pending: Vec<Request> = Vec::new();
+    let mut pending: Vec<QueryRequest> = Vec::new();
+    let mut out = QueryOutput::default();
+    let mut den: Vec<f32> = Vec::new();
     loop {
         // block for the first request (or shutdown)
         if pending.is_empty() {
@@ -333,100 +435,64 @@ fn dispatcher(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        // split the wave by kind, then group by mask (a batch shares one
-        // marginalization pattern). Malformed requests — wrong-length
-        // evidence/mask, a non-finite mask value, or observed evidence
-        // outside the leaf family's support — are dropped here instead of
-        // reaching the engine, where they would panic (length asserts,
-        // Categorical theta indexing, Binomial's ln_choose contract, and
-        // in debug builds the sampler's categorical draw over NaN
-        // posterior weights) or poison a batch with NaN; dropping the
-        // request closes its reply channel, so the client sees a
-        // disconnect rather than a hang or a dead server. Evidence at
-        // marginalized dims (mask 0) is never read, so NaN placeholders
-        // there — the natural missing-value encoding for inpainting —
-        // stay legal.
-        let well_formed = |x: &[f32], mask: &[f32]| {
-            x.len() == row
-                && mask.len() == d
-                && mask.iter().all(|m| m.is_finite())
-                && (0..d).all(|v| mask[v] == 0.0 || family.valid_obs(&x[v * od..(v + 1) * od]))
-        };
-        // the engine only distinguishes mask[d] == 0.0 (marginalized)
-        // from nonzero (observed); canonicalize to exactly 0.0/1.0 so
-        // equivalent patterns — including -0.0 vs 0.0, which order
-        // differently under total_cmp — coalesce into one batch
-        let canon = |mask: &mut [f32]| {
-            for m in mask.iter_mut() {
-                *m = if *m == 0.0 { 0.0 } else { 1.0 };
-            }
-        };
-        let mut queries: Vec<Query> = Vec::new();
-        let mut gens: Vec<GenQuery> = Vec::new();
+        // compile once per request; invalid requests are dropped here
+        // (the reply channel disconnects, the client sees an error, the
+        // dispatcher keeps serving)
+        let mut jobs: Vec<(QueryPlan, QueryRequest)> = Vec::with_capacity(pending.len());
         for r in pending.drain(..) {
-            match r {
-                Request::LogProb(mut q) if well_formed(&q.x, &q.mask) => {
-                    canon(&mut q.mask);
-                    queries.push(q);
-                }
-                Request::Generate(mut g) if well_formed(&g.x, &g.mask) => {
-                    canon(&mut g.mask);
-                    gens.push(g);
-                }
-                _ => stats.rejected += 1,
+            match compile_request(&r, d, od, row, family) {
+                Some(qp) => jobs.push((qp, r)),
+                None => stats.rejected += 1,
             }
         }
-        queries.sort_by(|a, b| mask_cmp(&a.mask, &b.mask));
-        while !queries.is_empty() {
-            let mask = queries[0].mask.clone();
-            let take = queries
+        // group identically-compiled plans: each group is served by one
+        // set of semiring passes + one batched decode
+        jobs.sort_by(|a, b| a.0.group_cmp(&b.0));
+        while !jobs.is_empty() {
+            let take = jobs
                 .iter()
-                .take_while(|q| mask_cmp(&q.mask, &mask).is_eq())
+                .take_while(|j| j.0.group_cmp(&jobs[0].0).is_eq())
                 .count()
                 .min(max_batch);
-            let group: Vec<Query> = queries.drain(..take).collect();
+            let group: Vec<(QueryPlan, QueryRequest)> = jobs.drain(..take).collect();
             let bn = group.len();
-            let mut x = vec![0.0f32; bn * row];
-            for (i, q) in group.iter().enumerate() {
-                x[i * row..(i + 1) * row].copy_from_slice(&q.x);
+            let qp = &group[0].0;
+            let mut xbuf = vec![0.0f32; bn * row];
+            for (i, (_, q)) in group.iter().enumerate() {
+                xbuf[i * row..(i + 1) * row].copy_from_slice(&q.x);
             }
-            let mut logp = vec![0.0f32; bn];
-            engine.forward(&x, &mask, &mut logp);
-            for (q, &lp) in group.iter().zip(&logp) {
-                let _ = q.reply.send(lp);
+            // one Arc per group: the sharded backend ships this pointer
+            // to its workers with no further copies
+            let x = Arc::new(xbuf);
+            engine.run_plan(qp, &x, bn, &mut rng, &mut den, &mut out);
+            let decoded = qp.decode.is_some();
+            for (i, (_, q)) in group.iter().enumerate() {
+                let score = out.scores[i];
+                match &q.reply {
+                    ReplyTo::Score(tx) => {
+                        let _ = tx.send(score);
+                    }
+                    ReplyTo::Row(tx) => {
+                        let _ = tx.send(out.rows[i * row..(i + 1) * row].to_vec());
+                    }
+                    ReplyTo::Full(tx) => {
+                        let row_out = if decoded {
+                            out.rows[i * row..(i + 1) * row].to_vec()
+                        } else {
+                            Vec::new()
+                        };
+                        let _ = tx.send(QueryAnswer {
+                            score,
+                            row: row_out,
+                        });
+                    }
+                }
             }
-            stats.queries += bn;
-            stats.batches += 1;
-            stats.max_group = stats.max_group.max(bn);
-        }
-        // generation groups share (mask, mode): one batched forward pass
-        // plus one batched top-down decode per group
-        gens.sort_by(|a, b| {
-            mask_cmp(&a.mask, &b.mask)
-                .then((a.mode == DecodeMode::Argmax).cmp(&(b.mode == DecodeMode::Argmax)))
-        });
-        while !gens.is_empty() {
-            let mask = gens[0].mask.clone();
-            let mode = gens[0].mode;
-            let take = gens
-                .iter()
-                .take_while(|q| mask_cmp(&q.mask, &mask).is_eq() && q.mode == mode)
-                .count()
-                .min(max_batch);
-            let group: Vec<GenQuery> = gens.drain(..take).collect();
-            let bn = group.len();
-            let mut x = vec![0.0f32; bn * row];
-            for (i, q) in group.iter().enumerate() {
-                x[i * row..(i + 1) * row].copy_from_slice(&q.x);
+            if decoded {
+                stats.generated += bn;
+            } else {
+                stats.queries += bn;
             }
-            let mut logp = vec![0.0f32; bn];
-            engine.forward(&x, &mask, &mut logp);
-            let mut out = x;
-            engine.decode_batch(bn, &mask, mode, &mut rng, &mut out);
-            for (i, q) in group.iter().enumerate() {
-                let _ = q.reply.send(out[i * row..(i + 1) * row].to_vec());
-            }
-            stats.generated += bn;
             stats.batches += 1;
             stats.max_group = stats.max_group.max(bn);
         }
@@ -514,12 +580,13 @@ mod tests {
     fn malformed_requests_are_rejected_without_killing_the_dispatcher() {
         // regression: grouping once used Vec<f32> PartialEq, under which a
         // NaN-bearing mask is unequal to itself — the group drained zero
-        // requests and the dispatch loop spun forever. Malformed requests
-        // (NaN mask, wrong-length evidence or mask, NaN evidence at an
-        // observed dim) are now dropped at the dispatch boundary: the
-        // client's reply channel disconnects, the dispatcher keeps
-        // serving well-formed requests, and stop() returns with the
-        // drops accounted in `rejected`.
+        // requests and the dispatch loop spun forever. Requests now
+        // compile into canonical QueryPlans before grouping: NaN masks,
+        // wrong-length evidence or masks, and NaN evidence at an observed
+        // dim are dropped at the dispatch boundary — the client's reply
+        // channel disconnects, the dispatcher keeps serving well-formed
+        // requests, and stop() returns with the drops accounted in
+        // `rejected`.
         let nv = 4;
         let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 2), 2);
         let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 2);
@@ -630,10 +697,72 @@ mod tests {
         }
         let stats = server.stop();
         assert_eq!(stats.generated, 12);
-        // one (mask, mode) group submitted up front: at least one decode
-        // pass must have served several requests at once (see the
-        // max_group note in serves_batched_queries_correctly)
+        // one compiled plan submitted up front: at least one decode pass
+        // must have served several requests at once (see the max_group
+        // note in serves_batched_queries_correctly)
         assert!(stats.max_group >= 2, "generation never coalesced");
+    }
+
+    #[test]
+    fn typed_queries_serve_mpe_and_conditionals() {
+        // the unified endpoint: Conditional and Mpe requests batch and
+        // answer identically to a direct engine running the same compiled
+        // plan
+        let nv = 8;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 7), 3);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 7);
+        let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 4);
+        let server = InferenceServer::start_seeded::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params.clone(),
+            8,
+            Duration::from_millis(3),
+            17,
+        );
+        let mut emask = vec![0.0f32; nv];
+        emask[0] = 1.0;
+        emask[1] = 1.0;
+        let mut qmask = vec![0.0f32; nv];
+        qmask[2] = 1.0;
+        // conditional: p(x2 | x0, x1)
+        let mut x = vec![0.0f32; nv];
+        x[0] = 1.0;
+        x[2] = 1.0;
+        let cond = server.run_query(
+            x.clone(),
+            Query::Conditional {
+                query_mask: qmask.clone(),
+                evidence_mask: emask.clone(),
+            },
+        );
+        assert!(cond.row.is_empty(), "score-only query returned a row");
+        let qp = Query::Conditional {
+            query_mask: qmask,
+            evidence_mask: emask.clone(),
+        }
+        .compile(nv)
+        .unwrap();
+        let mut want = QueryOutput::default();
+        let mut rng = Rng::new(0);
+        direct.execute(&params, &qp, &x, 1, &mut rng, &mut want);
+        assert_eq!(cond.score.to_bits(), want.scores[0].to_bits());
+        // MPE: completion + max-product score, bit-equal to the direct
+        // engine (decode draws nothing in Mpe mode)
+        let ans = server.mpe(x.clone(), emask.clone());
+        let qp = Query::Mpe { mask: emask }.compile(nv).unwrap();
+        let mut want = QueryOutput::default();
+        direct.execute(&params, &qp, &x, 1, &mut rng, &mut want);
+        assert_eq!(ans.score.to_bits(), want.scores[0].to_bits());
+        assert_eq!(ans.row, want.rows);
+        assert_eq!(ans.row[0], 1.0, "MPE resampled the evidence");
+        // Sample{n} does not fit one-row-per-request serving: rejected
+        let rej = server.submit_query(vec![0.0; nv], Query::Sample { n: 4 });
+        assert!(rej.recv().is_err(), "Sample query must be rejected");
+        let stats = server.stop();
+        assert_eq!(stats.queries, 1);
+        assert_eq!(stats.generated, 1);
+        assert_eq!(stats.rejected, 1);
     }
 
     #[test]
@@ -681,9 +810,25 @@ mod tests {
                 assert!(v == 0.0 || v == 1.0, "non-binary completion {v}");
             }
         }
+        // MPE rides the same sharded backend: max-product forward across
+        // the cut + sel-table backtrack, bit-equal to a direct engine
+        let x = vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let ans = server.mpe(x.clone(), gen_mask.clone());
+        let qp = Query::Mpe { mask: gen_mask }.compile(nv).unwrap();
+        let mut want = QueryOutput::default();
+        let mut rng = Rng::new(0);
+        let mut direct_cap =
+            DenseEngine::new(direct.plan().clone(), LeafFamily::Bernoulli, 8);
+        direct_cap.execute(&params, &qp, &x, 1, &mut rng, &mut want);
+        assert_eq!(
+            ans.score.to_bits(),
+            want.scores[0].to_bits(),
+            "sharded MPE score diverged"
+        );
+        assert_eq!(ans.row, want.rows, "sharded MPE completion diverged");
         let stats = server.stop();
         assert_eq!(stats.queries, 8);
-        assert_eq!(stats.generated, 6);
+        assert_eq!(stats.generated, 7);
     }
 
     #[test]

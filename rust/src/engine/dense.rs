@@ -23,7 +23,7 @@ use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
-use super::exec::{self, ExecPlan, Step};
+use super::exec::{self, ExecPlan, Semiring, Step};
 use super::{DecodeMode, EmStats, Engine, ParamArena};
 
 /// Four-accumulator dot product: float reductions cannot be auto-
@@ -47,6 +47,20 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
         s += x * y;
     }
     s
+}
+
+/// The max-semiring twin of [`dot4`]: `max_i a_i * b_i` over the same
+/// scaled-product operands (entries are non-negative, so the result is
+/// >= 0; `ln` of it recovers `max_ij (log W + log N_i + log N'_j)` after
+/// adding back the row maxima).
+#[inline]
+fn max4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut m = f32::NEG_INFINITY;
+    for (x, y) in a.iter().zip(b) {
+        m = m.max(x * y);
+    }
+    m
 }
 
 /// The dense EiNet engine. Construct once per (plan, batch capacity);
@@ -156,7 +170,7 @@ impl DenseEngine {
         assert_eq!(mask.len(), d_total);
     }
 
-    /// Execute one forward step by index.
+    /// Execute one forward step by index under a semiring.
     fn run_forward_step(
         &mut self,
         params: &ParamArena,
@@ -164,6 +178,7 @@ impl DenseEngine {
         mask: &[f32],
         bn: usize,
         si: usize,
+        sr: Semiring,
     ) {
         let step = self.exec.steps[si];
         match step {
@@ -183,6 +198,7 @@ impl DenseEngine {
                     x,
                     mask,
                     bn,
+                    sr,
                     &mut self.arena,
                 )
             }
@@ -194,7 +210,7 @@ impl DenseEngine {
                 dest,
                 to_scratch,
                 ..
-            } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn),
+            } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn, sr),
             Step::Mix {
                 out,
                 ko,
@@ -203,7 +219,28 @@ impl DenseEngine {
                 child_stride,
                 w,
                 ..
-            } => self.fwd_mix(params, out, ko, children, child, child_stride, w, bn),
+            } => {
+                self.fwd_mix(params, out, ko, children, child, child_stride, w, bn, sr)
+            }
+        }
+    }
+
+    /// See [`Engine::forward_semiring`].
+    pub fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        let bn = logp.len();
+        self.fwd_prepare(params, x, mask, bn);
+        for si in 0..self.exec.steps.len() {
+            self.run_forward_step(params, x, mask, bn, si, sr);
+        }
+        for (b, lp) in logp.iter_mut().enumerate() {
+            *lp = self.arena[self.exec.root_row(b)];
         }
     }
 
@@ -215,14 +252,7 @@ impl DenseEngine {
         mask: &[f32],
         logp: &mut [f32],
     ) {
-        let bn = logp.len();
-        self.fwd_prepare(params, x, mask, bn);
-        for si in 0..self.exec.steps.len() {
-            self.run_forward_step(params, x, mask, bn, si);
-        }
-        for (b, lp) in logp.iter_mut().enumerate() {
-            *lp = self.arena[self.exec.root_row(b)];
-        }
+        self.forward_semiring(params, x, mask, logp, Semiring::SumProduct)
     }
 
     /// See [`Engine::forward_steps`]: the segmented forward pass.
@@ -233,10 +263,11 @@ impl DenseEngine {
         mask: &[f32],
         bn: usize,
         steps: &[usize],
+        sr: Semiring,
     ) {
         self.fwd_prepare(params, x, mask, bn);
         for &si in steps {
-            self.run_forward_step(params, x, mask, bn, si);
+            self.run_forward_step(params, x, mask, bn, si, sr);
         }
     }
 
@@ -283,6 +314,7 @@ impl DenseEngine {
         dest: usize,
         to_scratch: bool,
         bn: usize,
+        sr: Semiring,
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
@@ -294,9 +326,15 @@ impl DenseEngine {
             let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
             let base = self.t_a[b] + self.t_ap[b];
             let dest_row = dest + b * ko;
-            // S_ko = W_ko . prod — length-K^2 dots, SIMD-friendly
+            // S_ko = W_ko . prod (sum-product) or max(W_ko * prod)
+            // (max-product) — length-K^2 reductions over the same
+            // scaled-product block, SIMD-friendly
             for kout in 0..ko {
-                let acc = dot4(&wslot[kout * kk2..(kout + 1) * kk2], prod);
+                let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
+                let acc = match sr {
+                    Semiring::SumProduct => dot4(wrow, prod),
+                    Semiring::MaxProduct => max4(wrow, prod),
+                };
                 let out = base + acc.ln();
                 if to_scratch {
                     self.scratch[dest_row + kout] = out;
@@ -318,21 +356,41 @@ impl DenseEngine {
         stride: usize,
         w: usize,
         bn: usize,
+        sr: Semiring,
     ) {
         let wrow = &params.data[w..w + children];
         for b in 0..bn {
             for kk in 0..ko {
-                // stable mixture over the C children
+                // stable reduction over the C children: log-sum-exp under
+                // the sum semiring, max under the max semiring
                 let mut a = f32::NEG_INFINITY;
                 for c in 0..children {
                     a = a.max(self.scratch[child + c * stride + b * ko + kk]);
                 }
-                let mut s = 0.0f32;
-                for (c, &wc) in wrow.iter().enumerate() {
-                    s += wc
-                        * (self.scratch[child + c * stride + b * ko + kk] - a).exp();
-                }
-                self.arena[out + b * ko + kk] = a + s.ln();
+                let v = match sr {
+                    Semiring::SumProduct => {
+                        let mut s = 0.0f32;
+                        for (c, &wc) in wrow.iter().enumerate() {
+                            s += wc
+                                * (self.scratch[child + c * stride + b * ko + kk]
+                                    - a)
+                                    .exp();
+                        }
+                        a + s.ln()
+                    }
+                    Semiring::MaxProduct => {
+                        let mut m = f32::NEG_INFINITY;
+                        for (c, &wc) in wrow.iter().enumerate() {
+                            m = m.max(
+                                wc * (self.scratch[child + c * stride + b * ko + kk]
+                                    - a)
+                                    .exp(),
+                            );
+                        }
+                        a + m.ln()
+                    }
+                };
+                self.arena[out + b * ko + kk] = v;
             }
         }
     }
@@ -739,6 +797,17 @@ impl Engine for DenseEngine {
         DenseEngine::batch_capacity(self)
     }
 
+    fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        DenseEngine::forward_semiring(self, params, x, mask, logp, sr)
+    }
+
     fn forward(
         &mut self,
         params: &ParamArena,
@@ -822,8 +891,9 @@ impl Engine for DenseEngine {
         mask: &[f32],
         bn: usize,
         steps: &[usize],
+        sr: Semiring,
     ) {
-        DenseEngine::forward_steps(self, params, x, mask, bn, steps)
+        DenseEngine::forward_steps(self, params, x, mask, bn, steps, sr)
     }
 
     fn clear_grad(&mut self) {

@@ -14,8 +14,19 @@
 //!   that layout scalar-for-scalar, the same offset addresses the
 //!   gradient accumulator in the backward sweep.
 //!
-//! Forward execution is a single pass over `steps`; the backward sweep is
-//! the same list in reverse (mixing before its einsum level, leaves
+//! Forward execution is a single pass over `steps` under a chosen
+//! [`Semiring`] — the queryable quantity is an *interpretation* of the
+//! step program, not a property of it. [`Semiring::SumProduct`] runs the
+//! log-sum-exp kernels (marginals, likelihoods, EM); the same steps under
+//! [`Semiring::MaxProduct`] run max kernels over identical buffers and
+//! weight offsets and compute the MPE score `max_{z, x_masked} log p`,
+//! with masked variables *maximized* out at the leaves instead of
+//! integrated. A [`DecodeMode::Mpe`] top-down pass over max-product
+//! activations is then the exact argmax backtrack (leaf *modes*, argmax
+//! branches) — this is how [`super::query::Query::Mpe`] beats the greedy
+//! `Argmax` walk, which approximates MPE over sum-product activations.
+//! The backward sweep (sum-product only: EM statistics are expectations)
+//! is the same list in reverse (mixing before its einsum level, leaves
 //! last). The dense and sparse engines differ only in the kernel they run
 //! per step, so the leaf layer and the top-down decode are shared here.
 //!
@@ -70,6 +81,25 @@ use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 
 use super::{DecodeMode, EmStats, ParamArena, ParamLayout};
+
+/// The semiring a forward pass evaluates the step program under. The
+/// step list, buffer offsets, and weight offsets are identical for both —
+/// a semiring is an *interpretation* of the same compiled [`ExecPlan`]:
+///
+/// * [`Semiring::SumProduct`] — log-sum-exp kernels; a masked (mask 0)
+///   variable is integrated out (contributes `log 1 = 0`). The root value
+///   is the (marginal) log-likelihood. This is the only semiring with a
+///   backward pass (EM statistics are expectations).
+/// * [`Semiring::MaxProduct`] — max kernels over the same steps; a masked
+///   variable is *maximized* out (contributes `max_x log p(x)`). The root
+///   value is the MPE log-score `max_{z, x_unobs} log p(x, z)`, and a
+///   [`DecodeMode::Mpe`] decode over the resulting activations is the
+///   exact argmax backtrack.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Semiring {
+    SumProduct,
+    MaxProduct,
+}
 
 /// One step of the linear program. All fields are precomputed offsets or
 /// ids; steps are `Copy` so engines can destructure without borrowing.
@@ -827,8 +857,14 @@ pub(crate) fn refresh_leaf_const_region(
 }
 
 /// Forward one leaf region: accumulate per-variable log-densities into
-/// the region's [bn, K] arena block (mask 0 ⇒ the variable is integrated
-/// out and contributes log 1 = 0).
+/// the region's [bn, K] arena block. A masked (mask 0) variable is
+/// integrated out under [`Semiring::SumProduct`] (contributes
+/// `log 1 = 0`) and *maximized* out under [`Semiring::MaxProduct`]
+/// (contributes the component's [`LeafFamily::max_log_prob`], the same
+/// for every batch row). Observed variables contribute their
+/// log-density under both semirings — a leaf vector has no latent to
+/// reduce over, so the semirings only differ in how missingness is
+/// eliminated.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn leaf_forward(
     ep: &ExecPlan,
@@ -839,6 +875,7 @@ pub(crate) fn leaf_forward(
     x: &[f32],
     mask: &[f32],
     bn: usize,
+    sr: Semiring,
     arena: &mut [f32],
 ) {
     let k = ep.k;
@@ -851,6 +888,17 @@ pub(crate) fn leaf_forward(
     let theta = params.theta();
     for d in ep.plan.graph.regions[rid].scope.iter() {
         if mask[d] == 0.0 {
+            if sr == Semiring::MaxProduct {
+                // maximize the variable out: every row gets the same
+                // per-component best-case log-density
+                for kk in 0..k {
+                    let c = (d * k + kk) * r_total + rep;
+                    let m = ep.family.max_log_prob(&theta[c * s_dim..(c + 1) * s_dim]);
+                    for b in 0..bn {
+                        arena[out + b * k + kk] += m;
+                    }
+                }
+            }
             continue;
         }
         let comp_base = (d * k) * r_total + rep;
@@ -971,6 +1019,7 @@ pub(crate) fn decode(
                 match mode {
                     DecodeMode::Sample => ep.family.sample(th, rng, dst),
                     DecodeMode::Argmax => ep.family.mean(th, dst),
+                    DecodeMode::Mpe => ep.family.mode(th, dst),
                 }
             }
             continue;
@@ -1004,7 +1053,7 @@ pub(crate) fn decode(
             }
             let c = match mode {
                 DecodeMode::Sample => rng.categorical_f32(weights),
-                DecodeMode::Argmax => argmax(weights),
+                DecodeMode::Argmax | DecodeMode::Mpe => argmax(weights),
             };
             region.partitions[c]
         };
@@ -1034,7 +1083,7 @@ pub(crate) fn decode(
         }
         let pick = match mode {
             DecodeMode::Sample => rng.categorical_f32(&wbuf),
-            DecodeMode::Argmax => argmax(&wbuf),
+            DecodeMode::Argmax | DecodeMode::Mpe => argmax(&wbuf),
         };
         stack.push((p.left, pick / k));
         stack.push((p.right, pick % k));
@@ -1058,6 +1107,17 @@ pub struct SampleScratch {
     ebuf: Vec<f32>,
     /// [max mixing children] partition-choice weights
     mbuf: Vec<f32>,
+    /// per-component emission table for `Sample`-mode leaf draws
+    /// (Bernoulli success probability / Categorical softmax weights, see
+    /// [`LeafFamily::emit_table`]): refreshed per Leaf step per batch, so
+    /// emission is a table lookup + uniform draw instead of a
+    /// transcendental per (sample, variable). Sized lazily on the first
+    /// Sample decode; `[n_leaf_components, tab_width]`.
+    leaf_tab: Vec<f64>,
+    tab_width: usize,
+    /// eventual `leaf_tab` length (counted by `bytes()` from day one,
+    /// like `sel_len`, so the footprint metric is decode-history-free)
+    tab_len: usize,
     /// every sample-step index, in plan order (the full-decode step list,
     /// so the segmented executor and the full path share one core)
     all_steps: Vec<usize>,
@@ -1080,6 +1140,12 @@ impl SampleScratch {
             wbuf: vec![0.0; ep.k * ep.k],
             ebuf: vec![0.0; ep.k],
             mbuf: vec![0.0; ep.sample_plan.max_children],
+            leaf_tab: Vec::new(),
+            tab_width: ep.family.emit_table_width().unwrap_or(0),
+            tab_len: ep
+                .family
+                .emit_table_width()
+                .map_or(0, |w| w * ep.n_leaf_components()),
             all_steps: (0..ep.sample_plan.steps.len()).collect(),
             cap: ep.batch_cap,
             sel_len: ep.plan.graph.regions.len() * ep.batch_cap,
@@ -1135,10 +1201,12 @@ impl SampleScratch {
     }
 
     /// Byte footprint (for the memory accounting of the bench tables).
-    /// Counts `sel` at its eventual size so footprints captured before the
-    /// first decode match footprints captured after.
+    /// Counts `sel` and the leaf emission table at their eventual sizes so
+    /// footprints captured before the first decode match footprints
+    /// captured after.
     pub fn bytes(&self) -> usize {
         4 * (self.sel_len + self.wbuf.len() + self.ebuf.len() + self.mbuf.len())
+            + 8 * self.tab_len
     }
 }
 
@@ -1172,10 +1240,49 @@ fn sample_key(b: usize, rid: usize) -> u64 {
 }
 
 #[inline]
-fn emit_leaf(ep: &ExecPlan, th: &[f32], st: &mut Option<Rng>, dst: &mut [f32]) {
-    match st {
-        Some(rng) => ep.family.sample(th, rng, dst),
-        None => ep.family.mean(th, dst),
+fn emit_leaf(
+    ep: &ExecPlan,
+    th: &[f32],
+    mode: DecodeMode,
+    st: &mut Option<Rng>,
+    dst: &mut [f32],
+) {
+    match (mode, st) {
+        (DecodeMode::Sample, Some(rng)) => ep.family.sample(th, rng, dst),
+        (DecodeMode::Mpe, _) => ep.family.mode(th, dst),
+        _ => ep.family.mean(th, dst),
+    }
+}
+
+/// Refresh the Sample-mode emission table entries of ONE leaf region
+/// (see [`SampleScratch::leaf_tab`]). Like [`refresh_leaf_const_region`],
+/// refresh is region-scoped and driven by the Leaf steps actually
+/// executed, so a segmented decode only transforms the components its
+/// shard owns.
+fn refresh_leaf_tab_region(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    tab: &mut Vec<f64>,
+    tab_width: usize,
+    tab_len: usize,
+    rid: usize,
+) {
+    if tab.len() != tab_len {
+        tab.resize(tab_len, 0.0);
+    }
+    let k = ep.k;
+    let s_dim = ep.family.stat_dim();
+    let r_total = ep.layout.num_replica;
+    let rep = ep.plan.graph.regions[rid].replica.unwrap();
+    let theta = params.theta();
+    for d in ep.plan.graph.regions[rid].scope.iter() {
+        for kk in 0..k {
+            let c = (d * k + kk) * r_total + rep;
+            ep.family.emit_table(
+                &theta[c * s_dim..(c + 1) * s_dim],
+                &mut tab[c * tab_width..(c + 1) * tab_width],
+            );
+        }
     }
 }
 
@@ -1231,13 +1338,13 @@ fn run_sample_steps(
                     }
                     let entry = (e - 1) as usize;
                     let br = if shared_rows { 0 } else { b };
-                    // Argmax draws nothing: build the per-(sample, region)
-                    // stream only when sampling
+                    // Argmax/Mpe draw nothing: build the per-(sample,
+                    // region) stream only when sampling
                     let mut st = match mode {
                         DecodeMode::Sample => {
                             Some(Rng::from_stream(salt, sample_key(b, rid)))
                         }
-                        DecodeMode::Argmax => None,
+                        DecodeMode::Argmax | DecodeMode::Mpe => None,
                     };
                     // choose a partition (posterior-weighted when several)
                     let c = if nparts == 1 {
@@ -1293,6 +1400,20 @@ fn run_sample_steps(
                 }
             }
             SampleStep::Leaf { rid, rep } => {
+                // vectorized emission: for table-driven families the
+                // per-component transform (sigmoid / softmax) is hoisted
+                // out of the (sample, variable) loop — each draw below is
+                // then a table lookup plus a uniform, bit-identical to the
+                // direct path
+                let tabw = if mode == DecodeMode::Sample {
+                    ss.tab_width
+                } else {
+                    0
+                };
+                if tabw > 0 {
+                    let tab_len = ss.tab_len;
+                    refresh_leaf_tab_region(ep, params, &mut ss.leaf_tab, tabw, tab_len, rid);
+                }
                 for b in 0..bn {
                     let e = ss.sel[rid * cap + b];
                     if e == 0 {
@@ -1303,19 +1424,18 @@ fn run_sample_steps(
                         DecodeMode::Sample => {
                             Some(Rng::from_stream(salt, sample_key(b, rid)))
                         }
-                        DecodeMode::Argmax => None,
+                        DecodeMode::Argmax | DecodeMode::Mpe => None,
                     };
                     for d in ep.plan.graph.regions[rid].scope.iter() {
                         if mask[d] != 0.0 {
                             continue; // observed: keep evidence value
                         }
-                        let th_base = ((d * k + entry) * r_total + rep) * s_dim;
-                        let th = &theta[th_base..th_base + s_dim];
-                        match sink {
+                        let c = (d * k + entry) * r_total + rep;
+                        let th = &theta[c * s_dim..(c + 1) * s_dim];
+                        let dst = match sink {
                             LeafSink::Rows(out) => {
                                 let row = b * d_total * od;
-                                let dst = &mut out[row + d * od..row + (d + 1) * od];
-                                emit_leaf(ep, th, &mut st, dst);
+                                &mut out[row + d * od..row + (d + 1) * od]
                             }
                             LeafSink::Vars { pos, vals, written } => {
                                 let j = pos[d];
@@ -1323,11 +1443,21 @@ fn run_sample_steps(
                                     j != usize::MAX,
                                     "segment leaf emits unowned var {d}"
                                 );
-                                let dst =
-                                    &mut vals[(j * bn + b) * od..(j * bn + b + 1) * od];
-                                emit_leaf(ep, th, &mut st, dst);
                                 written[j * bn + b] = true;
+                                &mut vals[(j * bn + b) * od..(j * bn + b + 1) * od]
                             }
+                        };
+                        if tabw > 0 {
+                            // tabw > 0 implies Sample mode, so the
+                            // per-(sample, region) stream exists
+                            let rng = st.as_mut().expect("sample-mode stream");
+                            ep.family.sample_from_table(
+                                &ss.leaf_tab[c * tabw..(c + 1) * tabw],
+                                rng,
+                                dst,
+                            );
+                        } else {
+                            emit_leaf(ep, th, mode, &mut st, dst);
                         }
                     }
                 }

@@ -30,6 +30,7 @@
 
 pub mod dense;
 pub mod exec;
+pub mod query;
 pub mod registry;
 pub mod sparse;
 
@@ -899,13 +900,19 @@ impl EmStats {
 // The Engine trait
 // ---------------------------------------------------------------------------
 
-/// Sampling behaviour for the top-down pass.
-#[derive(Clone, Copy, PartialEq, Debug)]
+/// Behaviour of the top-down pass. (`Ord` so batchers can group
+/// requests by mode.)
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum DecodeMode {
     /// ancestral sampling (draw latent branches and leaf values)
     Sample,
-    /// greedy: argmax latent branches, leaf means (approximate MPE)
+    /// greedy: argmax latent branches, leaf means. Over *sum-product*
+    /// activations this is only an MPE heuristic — see `Mpe`.
     Argmax,
+    /// exact MPE backtrack: argmax latent branches, leaf *modes*. Over
+    /// the activations of a [`exec::Semiring::MaxProduct`] forward pass
+    /// ([`query::Query::Mpe`]) this recovers the exact argmax completion.
+    Mpe,
 }
 
 /// A compiled execution engine over a [`LayeredPlan`].
@@ -929,16 +936,35 @@ pub trait Engine {
     /// Maximum batch size per forward call.
     fn batch_capacity(&self) -> usize;
 
-    /// Evaluate `log P(x)` for a batch under a marginalization mask
-    /// (`mask[d] == 0.0` integrates variable d out; Eq. 1's inner sums).
-    /// `x` is `[bn, D, obs_dim]` row-major; `logp` receives `bn` values.
+    /// Evaluate the step program under a semiring:
+    /// [`exec::Semiring::SumProduct`] computes `log P(x)` (a masked
+    /// variable is integrated out; Eq. 1's inner sums),
+    /// [`exec::Semiring::MaxProduct`] computes the MPE score
+    /// `max_{z, x_masked} log P(x, z)` (a masked variable is maximized
+    /// out) over the SAME steps, buffers, and weight offsets. `x` is
+    /// `[bn, D, obs_dim]` row-major; `logp` receives `bn` values. This is
+    /// the one forward primitive a backend implements — every query type
+    /// ([`query::Query`]) reaches it through [`Engine::execute`].
+    fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: exec::Semiring,
+    );
+
+    /// Sum-product forward pass (the common case; see
+    /// [`Engine::forward_semiring`]).
     fn forward(
         &mut self,
         params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         logp: &mut [f32],
-    );
+    ) {
+        self.forward_semiring(params, x, mask, logp, exec::Semiring::SumProduct)
+    }
 
     /// Accumulate the EM expected statistics (Eq. 6) for the batch last
     /// passed to `forward` — same `x`/`mask`/batch size, with activations
@@ -970,9 +996,10 @@ pub trait Engine {
     fn exec_plan(&self) -> &exec::ExecPlan;
 
     /// Execute a subset of forward steps (ascending indices into
-    /// `exec_plan().steps`). Boundary inputs must already be in place
-    /// (`import_rows`). Refreshes the per-batch caches, so the first
-    /// segment call of a batch needs no special-casing.
+    /// `exec_plan().steps`) under a semiring. Boundary inputs must
+    /// already be in place (`import_rows`). Refreshes the per-batch
+    /// caches, so the first segment call of a batch needs no
+    /// special-casing.
     fn forward_steps(
         &mut self,
         params: &ParamArena,
@@ -980,6 +1007,7 @@ pub trait Engine {
         mask: &[f32],
         bn: usize,
         steps: &[usize],
+        sr: exec::Semiring,
     );
 
     /// Zero (allocating on first use) the backward gradient buffers.
@@ -1194,6 +1222,88 @@ pub trait Engine {
     ) {
         let v = self.sample_batch(params, n, rng, mode);
         out[..v.len()].copy_from_slice(&v);
+    }
+
+    /// The single generic query entry point: run a compiled
+    /// [`query::QueryPlan`] over a batch, filling `out`
+    /// ([`query::QueryOutput`], reusable across calls).
+    ///
+    /// `x` is `[bn, D, obs_dim]` row-major evidence (ignored, and allowed
+    /// empty with `bn == 0`, for `Sample` plans); batches larger than
+    /// [`Engine::batch_capacity`] are chunked internally. For decoding
+    /// plans `out.rows` starts as a copy of `x` (observed values kept) and
+    /// the unobserved variables are overwritten; `out.scores[b]` carries
+    /// the per-row log score (the `passes[0] − passes[1]` ratio when the
+    /// plan is conditional, the max-product MPE score for `Mpe` plans).
+    ///
+    /// Provided once over the backend primitives
+    /// ([`Engine::forward_semiring`], [`Engine::decode_batch`],
+    /// [`Engine::sample_batch_into`]) — a third-party backend implements
+    /// those and every query type works, unsharded or sharded.
+    fn execute(
+        &mut self,
+        params: &ParamArena,
+        qp: &query::QueryPlan,
+        x: &[f32],
+        bn: usize,
+        rng: &mut Rng,
+        out: &mut query::QueryOutput,
+    ) {
+        let d = self.plan().graph.num_vars;
+        let od = self.family().obs_dim();
+        let row = d * od;
+        if let Some(n) = qp.sample_n {
+            out.scores.clear();
+            out.rows.clear();
+            out.rows.resize(n * row, 0.0);
+            self.sample_batch_into(params, n, rng, DecodeMode::Sample, &mut out.rows);
+            return;
+        }
+        assert!(!qp.passes.is_empty(), "query plan without passes");
+        assert_eq!(x.len(), bn * row, "batch shape mismatch");
+        out.scores.clear();
+        out.scores.resize(bn, 0.0);
+        out.rows.clear();
+        if qp.decode.is_some() {
+            out.rows.extend_from_slice(x);
+        }
+        let cap = self.batch_capacity();
+        let mut den = vec![0.0f32; if qp.is_ratio() { cap.min(bn) } else { 0 }];
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let chunk = cap.min(bn - b0);
+            let xs = &x[b0 * row..(b0 + chunk) * row];
+            self.forward_semiring(
+                params,
+                xs,
+                &qp.passes[0].mask,
+                &mut out.scores[b0..b0 + chunk],
+                qp.passes[0].semiring,
+            );
+            if let Some(mode) = qp.decode {
+                self.decode_batch(
+                    params,
+                    chunk,
+                    &qp.passes[0].mask,
+                    mode,
+                    rng,
+                    &mut out.rows[b0 * row..(b0 + chunk) * row],
+                );
+            }
+            if qp.is_ratio() {
+                self.forward_semiring(
+                    params,
+                    xs,
+                    &qp.passes[1].mask,
+                    &mut den[..chunk],
+                    qp.passes[1].semiring,
+                );
+                for b in 0..chunk {
+                    out.scores[b0 + b] -= den[b];
+                }
+            }
+            b0 += chunk;
+        }
     }
 
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison.

@@ -1,0 +1,339 @@
+//! The unified query API: typed inference requests compiled into
+//! semiring-parameterized plan passes.
+//!
+//! The paper's central promise is that ONE circuit answers a *family* of
+//! exact queries. This module makes that a compilation story instead of a
+//! pile of per-query entry points: a [`Query`] value names *what* is
+//! asked (density, marginal, conditional, MPE, sampling, inpainting) and
+//! [`Query::compile`] lowers it into a [`QueryPlan`] — a short list of
+//! forward interpretations of the same [`super::exec::ExecPlan`] step
+//! program (each a `(mask, `[`Semiring`]`)` pair) plus an optional
+//! top-down decode mode. A single generic entry point,
+//! [`super::Engine::execute`], runs any compiled plan on any backend;
+//! the legacy `infer::{conditional_log_prob, marginal_log_prob, inpaint}`
+//! helpers are thin shims over it.
+//!
+//! Compilation table (see [`Query::compile`]):
+//!
+//! | query                  | passes                              | decode |
+//! |------------------------|-------------------------------------|--------|
+//! | `LogLik`               | (all-ones, SumProduct)              | —      |
+//! | `Marginal {mask}`      | (mask, SumProduct)                  | —      |
+//! | `Conditional {q, e}`   | (q ∪ e, SumProduct), (e, SumProduct); score = first − second | — |
+//! | `Mpe {mask}`           | (mask, MaxProduct)                  | `Mpe` (argmax backtrack, leaf modes) |
+//! | `Sample {n}`           | shared-rows fast path               | `Sample` |
+//! | `Inpaint {mask, mode}` | (mask, SumProduct)                  | `mode` |
+//!
+//! Masks are canonicalized (0.0 / 1.0) and validated at compile time, so
+//! equivalent queries compile to comparable plans — which is what the
+//! inference server batches on ([`QueryPlan::group_cmp`]).
+
+use super::exec::Semiring;
+use super::DecodeMode;
+use crate::ensure;
+use crate::util::error::Result;
+
+/// A typed inference request. Evidence/query *values* travel in the batch
+/// (`x`, `[bn, D, obs_dim]` row-major) handed to
+/// [`super::Engine::execute`]; the query itself carries only the
+/// per-variable masks that select how each variable is treated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Query {
+    /// Fully-observed log-likelihood `log p(x)` per batch row.
+    LogLik,
+    /// Marginal log-likelihood `log p(x_e)`: `mask[d] == 0` integrates
+    /// variable `d` out.
+    Marginal { mask: Vec<f32> },
+    /// Conditional log-likelihood `log p(x_q | x_e)`: the two masks are
+    /// disjoint; everything outside both is marginalized.
+    Conditional {
+        query_mask: Vec<f32>,
+        evidence_mask: Vec<f32>,
+    },
+    /// True max-product MPE: the score is
+    /// `max_{z, x_u} log p(x_e, x_u, z)` and the decoded row is the
+    /// argmax completion (exact backtrack — unlike the greedy
+    /// [`DecodeMode::Argmax`] walk over sum-product activations, which is
+    /// only a heuristic).
+    Mpe { mask: Vec<f32> },
+    /// `n` unconditional ancestral samples (the shared-rows fast path:
+    /// one 1-row fully-marginalized forward serves the whole batch).
+    Sample { n: usize },
+    /// Conditional completion of the unobserved variables per batch row
+    /// (`mask[d] == 1` keeps the evidence value): `Sample` draws from the
+    /// exact conditional, `Argmax` is the greedy walk, `Mpe` emits
+    /// per-branch modes over sum-product activations (greedy MPE — for
+    /// the exact version use [`Query::Mpe`]).
+    Inpaint { mask: Vec<f32>, mode: DecodeMode },
+}
+
+/// One forward interpretation of the step program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryPass {
+    /// canonical per-variable mask (0.0 = marginalized/maximized out)
+    pub mask: Vec<f32>,
+    pub semiring: Semiring,
+}
+
+/// A compiled query: what [`super::Engine::execute`] runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryPlan {
+    /// 1 or 2 forward passes; with 2, the per-row score is
+    /// `passes[0] − passes[1]` (the conditional ratio).
+    pub passes: Vec<QueryPass>,
+    /// top-down decode (over the activations of `passes[0]`) producing
+    /// completed rows
+    pub decode: Option<DecodeMode>,
+    /// `Some(n)`: the unconditional-sampling fast path (no batch input)
+    pub sample_n: Option<usize>,
+}
+
+impl QueryPlan {
+    /// True when the score is a two-pass ratio (conditional).
+    pub fn is_ratio(&self) -> bool {
+        self.passes.len() == 2
+    }
+
+    /// True when executing this plan produces completed rows.
+    pub fn wants_rows(&self) -> bool {
+        self.decode.is_some() || self.sample_n.is_some()
+    }
+
+    /// Total order on compiled plans, NaN-free by construction (masks are
+    /// validated finite and canonicalized at compile time). Two plans
+    /// comparing equal execute identically, so a batcher may group
+    /// requests by this key and serve each group with one set of passes.
+    pub fn group_cmp(&self, other: &QueryPlan) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        let key = |p: &QueryPlan| (p.passes.len(), p.decode, p.sample_n);
+        match key(self).cmp(&key(other)) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+        for (a, b) in self.passes.iter().zip(&other.passes) {
+            match a.semiring.cmp(&b.semiring) {
+                Ordering::Equal => {}
+                o => return o,
+            }
+            for (x, y) in a.mask.iter().zip(&b.mask) {
+                match x.total_cmp(y) {
+                    Ordering::Equal => {}
+                    o => return o,
+                }
+            }
+            match a.mask.len().cmp(&b.mask.len()) {
+                Ordering::Equal => {}
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+/// The result buffer [`super::Engine::execute`] fills: reusable across
+/// calls so a serving loop allocates nothing per batch.
+#[derive(Clone, Debug, Default)]
+pub struct QueryOutput {
+    /// per-row log score: log-likelihood / marginal / conditional, or the
+    /// max-product MPE score. Empty for pure sampling.
+    pub scores: Vec<f32>,
+    /// completed `[n, D, obs_dim]` rows for decoding queries
+    /// (Mpe / Inpaint / Sample); empty otherwise.
+    pub rows: Vec<f32>,
+}
+
+/// Validate a mask: right length, finite everywhere; returns the
+/// canonical 0.0/1.0 form (the engines only distinguish zero from
+/// nonzero, and canonical masks make equivalent queries group together).
+fn canon_mask(mask: &[f32], num_vars: usize, what: &str) -> Result<Vec<f32>> {
+    ensure!(
+        mask.len() == num_vars,
+        "{what} mask has {} entries, circuit has {num_vars} variables",
+        mask.len()
+    );
+    ensure!(
+        mask.iter().all(|m| m.is_finite()),
+        "{what} mask contains non-finite values"
+    );
+    Ok(mask
+        .iter()
+        .map(|&m| if m == 0.0 { 0.0 } else { 1.0 })
+        .collect())
+}
+
+impl Query {
+    /// Compile into the semiring-parameterized pass program. Masks are
+    /// validated (length, finiteness, conditional disjointness) and
+    /// canonicalized here, once — execution never re-checks them.
+    pub fn compile(&self, num_vars: usize) -> Result<QueryPlan> {
+        let plan = match self {
+            Query::LogLik => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: vec![1.0; num_vars],
+                    semiring: Semiring::SumProduct,
+                }],
+                decode: None,
+                sample_n: None,
+            },
+            Query::Marginal { mask } => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: canon_mask(mask, num_vars, "marginal")?,
+                    semiring: Semiring::SumProduct,
+                }],
+                decode: None,
+                sample_n: None,
+            },
+            Query::Conditional {
+                query_mask,
+                evidence_mask,
+            } => {
+                let q = canon_mask(query_mask, num_vars, "query")?;
+                let e = canon_mask(evidence_mask, num_vars, "evidence")?;
+                let mut joint = vec![0.0f32; num_vars];
+                for d in 0..num_vars {
+                    ensure!(
+                        !(q[d] != 0.0 && e[d] != 0.0),
+                        "query and evidence masks overlap at variable {d}"
+                    );
+                    if q[d] != 0.0 || e[d] != 0.0 {
+                        joint[d] = 1.0;
+                    }
+                }
+                QueryPlan {
+                    passes: vec![
+                        QueryPass {
+                            mask: joint,
+                            semiring: Semiring::SumProduct,
+                        },
+                        QueryPass {
+                            mask: e,
+                            semiring: Semiring::SumProduct,
+                        },
+                    ],
+                    decode: None,
+                    sample_n: None,
+                }
+            }
+            Query::Mpe { mask } => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: canon_mask(mask, num_vars, "evidence")?,
+                    semiring: Semiring::MaxProduct,
+                }],
+                decode: Some(DecodeMode::Mpe),
+                sample_n: None,
+            },
+            Query::Sample { n } => {
+                ensure!(*n > 0, "sample count must be positive");
+                QueryPlan {
+                    passes: Vec::new(),
+                    decode: None,
+                    sample_n: Some(*n),
+                }
+            }
+            // an Inpaint with DecodeMode::Mpe is legal: it emits
+            // per-branch modes over SUM-product activations (greedy) —
+            // the exact max-product query is Query::Mpe
+            Query::Inpaint { mask, mode } => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: canon_mask(mask, num_vars, "evidence")?,
+                    semiring: Semiring::SumProduct,
+                }],
+                decode: Some(*mode),
+                sample_n: None,
+            },
+        };
+        Ok(plan)
+    }
+
+    /// Human-readable query kind (CLI/server logging).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Query::LogLik => "loglik",
+            Query::Marginal { .. } => "marginal",
+            Query::Conditional { .. } => "conditional",
+            Query::Mpe { .. } => "mpe",
+            Query::Sample { .. } => "sample",
+            Query::Inpaint { .. } => "inpaint",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_validates_and_canonicalizes() {
+        let d = 4;
+        // wrong length
+        assert!(Query::Marginal { mask: vec![1.0; 3] }.compile(d).is_err());
+        // NaN mask
+        let mut m = vec![1.0f32; d];
+        m[1] = f32::NAN;
+        assert!(Query::Marginal { mask: m }.compile(d).is_err());
+        // canonicalization: nonzero → 1.0, -0.0 → 0.0
+        let q = Query::Marginal {
+            mask: vec![2.5, -0.0, 1.0, 0.0],
+        };
+        let qp = q.compile(d).unwrap();
+        assert_eq!(qp.passes[0].mask, vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(qp.passes[0].semiring, Semiring::SumProduct);
+        assert!(qp.decode.is_none() && !qp.is_ratio());
+    }
+
+    #[test]
+    fn conditional_compiles_to_ratio_and_rejects_overlap() {
+        let d = 3;
+        let qp = Query::Conditional {
+            query_mask: vec![1.0, 0.0, 0.0],
+            evidence_mask: vec![0.0, 1.0, 0.0],
+        }
+        .compile(d)
+        .unwrap();
+        assert!(qp.is_ratio());
+        assert_eq!(qp.passes[0].mask, vec![1.0, 1.0, 0.0]); // joint
+        assert_eq!(qp.passes[1].mask, vec![0.0, 1.0, 0.0]); // evidence
+        assert!(Query::Conditional {
+            query_mask: vec![1.0, 0.0, 0.0],
+            evidence_mask: vec![1.0, 1.0, 0.0],
+        }
+        .compile(d)
+        .is_err());
+    }
+
+    #[test]
+    fn mpe_compiles_to_max_product_with_backtrack() {
+        let q = Query::Mpe {
+            mask: vec![1.0, 0.0],
+        };
+        let qp = q.compile(2).unwrap();
+        assert_eq!(qp.passes[0].semiring, Semiring::MaxProduct);
+        assert_eq!(qp.decode, Some(DecodeMode::Mpe));
+        assert!(qp.wants_rows());
+    }
+
+    #[test]
+    fn group_cmp_groups_equivalent_queries() {
+        let d = 3;
+        let marginal = |mask: Vec<f32>| Query::Marginal { mask }.compile(d).unwrap();
+        let a = marginal(vec![1.0, 0.0, 2.0]);
+        let b = marginal(vec![5.0, -0.0, 1.0]);
+        assert_eq!(a.group_cmp(&b), std::cmp::Ordering::Equal);
+        let c = Query::Mpe {
+            mask: vec![1.0, 0.0, 1.0],
+        };
+        let c = c.compile(d).unwrap();
+        assert_ne!(a.group_cmp(&c), std::cmp::Ordering::Equal);
+        // same mask, different semiring must not group
+        let m = marginal(vec![1.0, 0.0, 1.0]);
+        assert_ne!(m.group_cmp(&c), std::cmp::Ordering::Equal);
+    }
+
+    #[test]
+    fn sample_compiles_to_fast_path() {
+        let qp = Query::Sample { n: 7 }.compile(4).unwrap();
+        assert_eq!(qp.sample_n, Some(7));
+        assert!(qp.passes.is_empty() && qp.wants_rows());
+        assert!(Query::Sample { n: 0 }.compile(4).is_err());
+    }
+}

@@ -22,7 +22,7 @@ use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
-use super::exec::{self, ExecPlan, Step};
+use super::exec::{self, ExecPlan, Semiring, Step};
 use super::{DecodeMode, EmStats, Engine, ParamArena};
 
 /// Node-by-node baseline engine over the same [`ExecPlan`].
@@ -131,7 +131,7 @@ impl SparseEngine {
         assert_eq!(mask.len(), d_total);
     }
 
-    /// Execute one forward step by index.
+    /// Execute one forward step by index under a semiring.
     fn run_forward_step(
         &mut self,
         params: &ParamArena,
@@ -139,6 +139,7 @@ impl SparseEngine {
         mask: &[f32],
         bn: usize,
         si: usize,
+        sr: Semiring,
     ) {
         let step = self.exec.steps[si];
         match step {
@@ -158,6 +159,7 @@ impl SparseEngine {
                     x,
                     mask,
                     bn,
+                    sr,
                     &mut self.arena,
                 )
             }
@@ -172,7 +174,7 @@ impl SparseEngine {
                 ..
             } => {
                 self.refresh_log_span(params, w, ko * self.exec.k * self.exec.k);
-                self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn)
+                self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn, sr)
             }
             Step::Mix {
                 out,
@@ -184,8 +186,30 @@ impl SparseEngine {
                 ..
             } => {
                 self.refresh_log_span(params, w, children);
-                self.fwd_mix(out, ko, children, child, child_stride, w, bn)
+                self.fwd_mix(out, ko, children, child, child_stride, w, bn, sr)
             }
+        }
+    }
+
+    /// See [`Engine::forward_semiring`] (same contract as the dense
+    /// engine; in the baseline layout the max-product einsum is simply
+    /// the log-sum-exp with the sum dropped — the running max over
+    /// `log W + prod` IS the reduction).
+    pub fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        let bn = logp.len();
+        self.fwd_prepare(params, x, mask, bn);
+        for si in 0..self.exec.steps.len() {
+            self.run_forward_step(params, x, mask, bn, si, sr);
+        }
+        for (b, lp) in logp.iter_mut().enumerate() {
+            *lp = self.arena[self.exec.root_row(b)];
         }
     }
 
@@ -197,14 +221,7 @@ impl SparseEngine {
         mask: &[f32],
         logp: &mut [f32],
     ) {
-        let bn = logp.len();
-        self.fwd_prepare(params, x, mask, bn);
-        for si in 0..self.exec.steps.len() {
-            self.run_forward_step(params, x, mask, bn, si);
-        }
-        for (b, lp) in logp.iter_mut().enumerate() {
-            *lp = self.arena[self.exec.root_row(b)];
-        }
+        self.forward_semiring(params, x, mask, logp, Semiring::SumProduct)
     }
 
     /// See [`Engine::forward_steps`]: the segmented forward pass.
@@ -215,10 +232,11 @@ impl SparseEngine {
         mask: &[f32],
         bn: usize,
         steps: &[usize],
+        sr: Semiring,
     ) {
         self.fwd_prepare(params, x, mask, bn);
         for &si in steps {
-            self.run_forward_step(params, x, mask, bn, si);
+            self.run_forward_step(params, x, mask, bn, si, sr);
         }
     }
 
@@ -236,6 +254,7 @@ impl SparseEngine {
         dest: usize,
         to_scratch: bool,
         bn: usize,
+        sr: Semiring,
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
@@ -258,16 +277,22 @@ impl SparseEngine {
             for kout in 0..ko {
                 let wrow =
                     &self.log_params[wl + kout * kk2..wl + (kout + 1) * kk2];
-                // log-sum-exp over K^2 entries
+                // running max over log W + prod: the max-product value,
+                // and the log-sum-exp pivot
                 let mut m = f32::NEG_INFINITY;
                 for (idx, &wv) in wrow.iter().enumerate() {
                     m = m.max(wv + self.prod_arena[prow + idx]);
                 }
-                let mut s = 0.0f32;
-                for (idx, &wv) in wrow.iter().enumerate() {
-                    s += (wv + self.prod_arena[prow + idx] - m).exp();
-                }
-                let out = m + s.ln();
+                let out = match sr {
+                    Semiring::SumProduct => {
+                        let mut s = 0.0f32;
+                        for (idx, &wv) in wrow.iter().enumerate() {
+                            s += (wv + self.prod_arena[prow + idx] - m).exp();
+                        }
+                        m + s.ln()
+                    }
+                    Semiring::MaxProduct => m,
+                };
                 let drow = dest + b * ko + kout;
                 if to_scratch {
                     self.scratch[drow] = out;
@@ -278,8 +303,8 @@ impl SparseEngine {
         }
     }
 
-    /// Mixing node, baseline style: log-domain weighted log-sum-exp over
-    /// the stored child outputs.
+    /// Mixing node, baseline style: log-domain weighted log-sum-exp (or
+    /// plain max, under the max semiring) over the stored child outputs.
     #[allow(clippy::too_many_arguments)]
     fn fwd_mix(
         &mut self,
@@ -290,6 +315,7 @@ impl SparseEngine {
         stride: usize,
         w: usize,
         bn: usize,
+        sr: Semiring,
     ) {
         let wl = w - self.exec.layout.theta_len;
         for b in 0..bn {
@@ -301,14 +327,20 @@ impl SparseEngine {
                             + self.scratch[child + c * stride + b * ko + kk],
                     );
                 }
-                let mut s = 0.0f32;
-                for c in 0..children {
-                    s += (self.log_params[wl + c]
-                        + self.scratch[child + c * stride + b * ko + kk]
-                        - m)
-                        .exp();
-                }
-                self.arena[out + b * ko + kk] = m + s.ln();
+                let v = match sr {
+                    Semiring::SumProduct => {
+                        let mut s = 0.0f32;
+                        for c in 0..children {
+                            s += (self.log_params[wl + c]
+                                + self.scratch[child + c * stride + b * ko + kk]
+                                - m)
+                                .exp();
+                        }
+                        m + s.ln()
+                    }
+                    Semiring::MaxProduct => m,
+                };
+                self.arena[out + b * ko + kk] = v;
             }
         }
     }
@@ -632,6 +664,17 @@ impl Engine for SparseEngine {
         SparseEngine::batch_capacity(self)
     }
 
+    fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        SparseEngine::forward_semiring(self, params, x, mask, logp, sr)
+    }
+
     fn forward(
         &mut self,
         params: &ParamArena,
@@ -715,8 +758,9 @@ impl Engine for SparseEngine {
         mask: &[f32],
         bn: usize,
         steps: &[usize],
+        sr: Semiring,
     ) {
-        SparseEngine::forward_steps(self, params, x, mask, bn, steps)
+        SparseEngine::forward_steps(self, params, x, mask, bn, steps, sr)
     }
 
     fn clear_grad(&mut self) {

@@ -281,6 +281,124 @@ impl LeafFamily {
         }
     }
 
+    /// The component's mode: the observation maximizing the density. This
+    /// is what a max-product (MPE) decode emits at the leaves — unlike
+    /// [`LeafFamily::mean`], the mode is always inside the support (e.g. a
+    /// Bernoulli mode is 0 or 1, never the fractional success
+    /// probability).
+    pub fn mode(&self, theta: &[f32], out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => {
+                // p >= 0.5 ⟺ theta >= 0 (ties break toward 0, matching
+                // max_log_prob's max(theta, 0))
+                out[0] = if theta[0] > 0.0 { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Binomial { trials } => {
+                // exact argmax over the (trials + 1)-point support
+                let mut best = 0u32;
+                let mut best_lp = f32::NEG_INFINITY;
+                for v in 0..=*trials {
+                    let lp = self.log_prob(theta, &[v as f32]);
+                    if lp > best_lp {
+                        best_lp = lp;
+                        best = v;
+                    }
+                }
+                out[0] = best as f32;
+            }
+            // Gaussian mode == mean; Categorical mean already reports the
+            // argmax category
+            LeafFamily::Gaussian { .. } | LeafFamily::Categorical { .. } => {
+                self.mean(theta, out)
+            }
+        }
+    }
+
+    /// `max_x log p(x)` — the log-density at the mode. Under the
+    /// max-product semiring this is what a marginalized (mask 0) variable
+    /// contributes in place of `log 1 = 0`: maximization replaces
+    /// integration. Consistent with [`LeafFamily::mode`]: evaluating
+    /// [`LeafFamily::log_prob`] at the mode gives this value.
+    pub fn max_log_prob(&self, theta: &[f32]) -> f32 {
+        match self {
+            // max(theta * 1, theta * 0) - softplus(theta)
+            LeafFamily::Bernoulli => theta[0].max(0.0) - softplus(theta[0]),
+            LeafFamily::Gaussian { channels } => {
+                // density at the mean: -0.5 log(2 pi var) per channel
+                let ch = *channels;
+                let mut lp = 0.0f32;
+                for c in 0..ch {
+                    let var = -0.5 / theta[ch + c];
+                    lp += -0.5 * (2.0 * std::f32::consts::PI * var).ln();
+                }
+                lp
+            }
+            LeafFamily::Categorical { .. } => {
+                // max_v theta[v] - logsumexp(theta) = -ln sum exp(t - m)
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = theta.iter().map(|&t| (t - m).exp()).sum();
+                -z.ln()
+            }
+            LeafFamily::Binomial { trials } => {
+                let mut best = f32::NEG_INFINITY;
+                for v in 0..=*trials {
+                    best = best.max(self.log_prob(theta, &[v as f32]));
+                }
+                best
+            }
+        }
+    }
+
+    /// Width of the per-component emission table for the batched
+    /// Sample-mode leaf fast path, when the family supports it: the
+    /// per-draw transform (sigmoid / softmax weights) is a pure function
+    /// of theta, so it can be computed once per batch and every draw
+    /// becomes a table lookup plus a uniform. `None` for families whose
+    /// sampling is not table-driven (Gaussian, Binomial).
+    pub fn emit_table_width(&self) -> Option<usize> {
+        match self {
+            LeafFamily::Bernoulli => Some(1),
+            LeafFamily::Categorical { cats } => Some(*cats),
+            LeafFamily::Gaussian { .. } | LeafFamily::Binomial { .. } => None,
+        }
+    }
+
+    /// Fill one component's emission table (length
+    /// [`LeafFamily::emit_table_width`]): exactly the intermediate values
+    /// [`LeafFamily::sample`] would compute per draw, hoisted — so
+    /// [`LeafFamily::sample_from_table`] consumes the identical RNG stream
+    /// and produces bit-identical draws.
+    pub fn emit_table(&self, theta: &[f32], out: &mut [f64]) {
+        match self {
+            LeafFamily::Bernoulli => out[0] = sigmoid(theta[0]) as f64,
+            LeafFamily::Categorical { cats } => {
+                let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                for (o, &t) in out[..*cats].iter_mut().zip(theta) {
+                    *o = ((t - m) as f64).exp();
+                }
+            }
+            LeafFamily::Gaussian { .. } | LeafFamily::Binomial { .. } => {
+                unreachable!("no emission table for {self:?}")
+            }
+        }
+    }
+
+    /// Draw from a component through its cached emission table —
+    /// bit-identical to [`LeafFamily::sample`] on the same RNG state.
+    pub fn sample_from_table(&self, tab: &[f64], rng: &mut Rng, out: &mut [f32]) {
+        match self {
+            LeafFamily::Bernoulli => {
+                out[0] = if rng.bernoulli(tab[0]) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Categorical { .. } => {
+                out[0] = rng.categorical(tab) as f32;
+            }
+            LeafFamily::Gaussian { .. } | LeafFamily::Binomial { .. } => {
+                unreachable!("no emission table for {self:?}")
+            }
+        }
+    }
+
     /// The component's mean (used for expectation-style reconstruction).
     pub fn mean(&self, theta: &[f32], out: &mut [f32]) {
         match self {
@@ -553,6 +671,87 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn mode_maximizes_the_density_and_matches_max_log_prob() {
+        let mut rng = Rng::new(13);
+        for fam in [
+            LeafFamily::Bernoulli,
+            LeafFamily::Gaussian { channels: 2 },
+            LeafFamily::Categorical { cats: 4 },
+            LeafFamily::Binomial { trials: 5 },
+        ] {
+            for _ in 0..10 {
+                let s = fam.stat_dim();
+                let od = fam.obs_dim();
+                let mut theta = vec![0.0f32; s];
+                fam.init_theta(&mut rng, &mut theta);
+                let mut m = vec![0.0f32; od];
+                fam.mode(&theta, &mut m);
+                let at_mode = fam.log_prob(&theta, &m);
+                let max_lp = fam.max_log_prob(&theta);
+                assert!(
+                    (at_mode - max_lp).abs() < 1e-4,
+                    "{fam:?}: log p(mode) {at_mode} != max_log_prob {max_lp}"
+                );
+                // no discrete support point beats the mode
+                match fam {
+                    LeafFamily::Bernoulli => {
+                        for v in [0.0f32, 1.0] {
+                            assert!(fam.log_prob(&theta, &[v]) <= max_lp + 1e-6);
+                        }
+                        assert!(m[0] == 0.0 || m[0] == 1.0);
+                    }
+                    LeafFamily::Categorical { cats } => {
+                        for v in 0..cats {
+                            assert!(
+                                fam.log_prob(&theta, &[v as f32]) <= max_lp + 1e-6
+                            );
+                        }
+                    }
+                    LeafFamily::Binomial { trials } => {
+                        for v in 0..=trials {
+                            assert!(
+                                fam.log_prob(&theta, &[v as f32]) <= max_lp + 1e-6
+                            );
+                        }
+                    }
+                    LeafFamily::Gaussian { .. } => {
+                        // sampled points never beat the mode's density
+                        let mut x = vec![0.0f32; od];
+                        for _ in 0..50 {
+                            fam.sample(&theta, &mut rng, &mut x);
+                            assert!(fam.log_prob(&theta, &x) <= max_lp + 1e-5);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_emission_is_bit_identical_to_direct_sampling() {
+        let mut rng = Rng::new(21);
+        for fam in [LeafFamily::Bernoulli, LeafFamily::Categorical { cats: 5 }] {
+            let s = fam.stat_dim();
+            let mut theta = vec![0.0f32; s];
+            fam.init_theta(&mut rng, &mut theta);
+            let w = fam.emit_table_width().unwrap();
+            let mut tab = vec![0.0f64; w];
+            fam.emit_table(&theta, &mut tab);
+            let mut a = Rng::new(99);
+            let mut b = Rng::new(99);
+            let mut xa = [0.0f32];
+            let mut xb = [0.0f32];
+            for _ in 0..200 {
+                fam.sample(&theta, &mut a, &mut xa);
+                fam.sample_from_table(&tab, &mut b, &mut xb);
+                assert_eq!(xa[0].to_bits(), xb[0].to_bits(), "{fam:?} diverged");
+            }
+        }
+        assert!(LeafFamily::Gaussian { channels: 1 }.emit_table_width().is_none());
+        assert!(LeafFamily::Binomial { trials: 3 }.emit_table_width().is_none());
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //!   [`engine::exec::ExecPlan`] IR with a contiguous parameter arena
 //!   ([`engine::ParamArena`]), implemented by the dense einsum layout and
 //!   the sparse LibSPN/SPFlow baseline — EM training, tractable inference
-//!   (marginals, conditionals, sampling, inpainting), a PJRT runtime for
+//!   through the unified [`engine::query::Query`] API (marginals,
+//!   conditionals, true max-product MPE, sampling, inpainting — each a
+//!   semiring interpretation of the same compiled plan, executed through
+//!   [`engine::Engine::execute`]), a PJRT runtime for
 //!   the AOT artifacts (feature `pjrt`), a multithreaded training
 //!   coordinator with persistent workers, datasets, clustering, and the
 //!   benchmark harness reproducing every table and figure of the paper.
@@ -46,7 +49,8 @@ pub mod structure;
 pub mod util;
 
 pub use engine::dense::DenseEngine;
-pub use engine::exec::{PlanPartition, Segment};
+pub use engine::exec::{PlanPartition, Segment, Semiring};
+pub use engine::query::{Query, QueryOutput, QueryPass, QueryPlan};
 pub use engine::registry::{boxed_build, EngineEntry, EngineFactory, EngineRegistry};
 pub use engine::sparse::SparseEngine;
 pub use engine::{

@@ -25,7 +25,7 @@ use einet::util::rng::Rng;
 use einet::util::stats::welch_t_test;
 use einet::{
     DecodeMode, DenseEngine, EinetParams, EngineRegistry, LayeredPlan, LeafFamily,
-    SparseEngine,
+    Query, QueryOutput, SparseEngine,
 };
 
 fn main() {
@@ -49,6 +49,8 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
+        "query" => cmd_query(rest),
+        "mpe" => cmd_mpe(rest),
         "sample" => cmd_sample(rest),
         "table1" => cmd_table1(rest),
         "e2e" => cmd_e2e(rest),
@@ -70,6 +72,10 @@ fn print_help() {
 commands:
   train       train an EiNet on a DEBD-like dataset with stochastic EM
   eval        evaluate a checkpoint's test log-likelihood
+  query       run a typed query over the test split
+              (--mode loglik|marginal|conditional|mpe, --obs-frac F)
+  mpe         exact max-product completions of partially observed test
+              rows (vs the greedy Argmax walk)
   sample      draw samples from a checkpoint
   table1      reproduce Table 1 (20 datasets, EiNet vs sparse baseline)
   e2e         train via the AOT PJRT path (L1+L2+L3 composed)
@@ -106,6 +112,8 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "replica", help: "replica override for table1", default: Some("10"), is_flag: false },
         OptSpec { name: "engine", help: "execution backend (registry name; see `einet engines`)", default: Some("dense"), is_flag: false },
         OptSpec { name: "shards", help: "scope-partition across N workers (0: data-parallel)", default: Some("0"), is_flag: false },
+        OptSpec { name: "mode", help: "query mode: loglik|marginal|conditional|mpe", default: Some("marginal"), is_flag: false },
+        OptSpec { name: "obs-frac", help: "fraction of variables observed (query/mpe evidence)", default: Some("0.5"), is_flag: false },
         OptSpec { name: "help", help: "show usage", default: None, is_flag: true },
     ]
 }
@@ -247,8 +255,23 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
-    let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
     // zero-copy: the tensor payload is served straight from the mapping
+    let params = load_checked(&a, &spec, &plan, family)?;
+    let engine = a.get_str("engine", &spec)?;
+    let test = eval_named(&engine, &plan, family, &params, &ds.test.data, ds.test.n, 256)?;
+    println!("test LL {test:.4}");
+    Ok(())
+}
+
+/// Load the checkpoint named by `--ckpt` (zero-copy mapped) and verify
+/// it matches the configured structure/family.
+fn load_checked(
+    a: &Args,
+    spec: &[OptSpec],
+    plan: &LayeredPlan,
+    family: LeafFamily,
+) -> Result<EinetParams> {
+    let ckpt = PathBuf::from(a.get_str("ckpt", spec)?);
     let params = EinetParams::load_mapped(&ckpt)?;
     if params.family() != family {
         bail!(
@@ -257,14 +280,134 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             family
         );
     }
-    if params.layout != einet::ParamLayout::from_plan(&plan, family) {
+    if params.layout != einet::ParamLayout::from_plan(plan, family) {
         bail!(
-            "checkpoint layout does not match the configured structure/--k              (saved with a different plan?)"
+            "checkpoint layout does not match the configured structure/--k \
+             (saved with a different plan?)"
         );
     }
-    let engine = a.get_str("engine", &spec)?;
-    let test = eval_named(&engine, &plan, family, &params, &ds.test.data, ds.test.n, 256)?;
-    println!("test LL {test:.4}");
+    Ok(params)
+}
+
+/// Evidence mask observing the first `obs_frac` of the variables.
+fn obs_mask(d: usize, obs_frac: f64) -> Vec<f32> {
+    let n_obs = ((d as f64 * obs_frac).round() as usize).min(d);
+    (0..d).map(|v| if v < n_obs { 1.0 } else { 0.0 }).collect()
+}
+
+/// Run a typed query over the test split through the unified
+/// `Engine::execute` entry point.
+fn cmd_query(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    if a.flag("help") {
+        println!("{}", usage("einet query", "typed queries over the test split", &spec));
+        return Ok(());
+    }
+    let (ds, plan, family) = setup(&a, &spec)?;
+    let params = load_checked(&a, &spec, &plan, family)?;
+    let d = plan.graph.num_vars;
+    let mask = obs_mask(d, a.get_f64("obs-frac", &spec)?);
+    let mode = a.get_str("mode", &spec)?;
+    let query = match mode.as_str() {
+        "loglik" => Query::LogLik,
+        "marginal" => Query::Marginal { mask },
+        "conditional" => {
+            // evidence = the observed prefix, query = the rest
+            let query_mask: Vec<f32> = mask.iter().map(|&m| 1.0 - m).collect();
+            Query::Conditional {
+                query_mask,
+                evidence_mask: mask,
+            }
+        }
+        "mpe" => Query::Mpe { mask },
+        other => bail!("unknown query mode '{other}' (loglik|marginal|conditional|mpe)"),
+    };
+    let qp = query.compile(d)?;
+    let mut engine = EngineRegistry::builtin().build(
+        &a.get_str("engine", &spec)?,
+        plan,
+        family,
+        256,
+    )?;
+    let n = ds.test.n;
+    let mut rng = Rng::new(a.get_usize("seed", &spec)? as u64);
+    let mut out = QueryOutput::default();
+    let t = einet::util::Timer::new();
+    engine.execute(&params, &qp, &ds.test.data, n, &mut rng, &mut out);
+    let dt = t.elapsed_s();
+    let mean = out.scores.iter().map(|&s| s as f64).sum::<f64>() / n as f64;
+    println!(
+        "{} [{}] over {} test rows: mean score {mean:.4} ({:.0} rows/s)",
+        query.kind(),
+        ds.name,
+        n,
+        n as f64 / dt
+    );
+    Ok(())
+}
+
+/// Exact MPE completions vs the greedy Argmax walk on test rows.
+fn cmd_mpe(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    if a.flag("help") {
+        println!("{}", usage("einet mpe", "exact max-product completions", &spec));
+        return Ok(());
+    }
+    let (ds, plan, family) = setup(&a, &spec)?;
+    let params = load_checked(&a, &spec, &plan, family)?;
+    let d = plan.graph.num_vars;
+    let mask = obs_mask(d, a.get_f64("obs-frac", &spec)?);
+    let n = a.get_usize("n", &spec)?.min(ds.test.n).clamp(1, 256);
+    let mut engine = EngineRegistry::builtin().build(
+        &a.get_str("engine", &spec)?,
+        plan,
+        family,
+        n,
+    )?;
+    let rows = &ds.test.data[..n * d];
+    let (mpe_rows, mpe_scores) = einet::infer::mpe(engine.as_mut(), &params, rows, &mask, n);
+    // greedy baseline: Argmax walk over sum-product activations,
+    // thresholded into the Bernoulli domain
+    let mut rng = Rng::new(0);
+    let mut greedy = einet::infer::inpaint(
+        engine.as_mut(),
+        &params,
+        rows,
+        &mask,
+        n,
+        DecodeMode::Argmax,
+        &mut rng,
+    );
+    for v in greedy.iter_mut() {
+        *v = if *v > 0.5 { 1.0 } else { 0.0 };
+    }
+    // score both completions under the true (sum-product) density
+    let full = vec![1.0f32; d];
+    let mut lp_mpe = vec![0.0f32; n];
+    let mut lp_greedy = vec![0.0f32; n];
+    engine.forward(&params, &mpe_rows, &full, &mut lp_mpe);
+    engine.forward(&params, &greedy, &full, &mut lp_greedy);
+    let mut wins = 0usize;
+    for i in 0..n {
+        let row: String = mpe_rows[i * d..(i + 1) * d]
+            .iter()
+            .map(|&v| if v > 0.5 { '1' } else { '0' })
+            .collect();
+        if lp_mpe[i] >= lp_greedy[i] {
+            wins += 1;
+        }
+        println!(
+            "{row}  mpe-score {:.4}  log p {:.4} (greedy {:.4})",
+            mpe_scores[i], lp_mpe[i], lp_greedy[i]
+        );
+    }
+    println!(
+        "max-product completion >= greedy walk on {wins}/{n} rows \
+         (exact MPE maximizes the joint INCLUDING latents; the greedy \
+         walk is a heuristic)"
+    );
     Ok(())
 }
 
@@ -272,21 +415,8 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
     let (ds, plan, family) = setup(&a, &spec)?;
-    let ckpt = PathBuf::from(a.get_str("ckpt", &spec)?);
     // zero-copy: the tensor payload is served straight from the mapping
-    let params = EinetParams::load_mapped(&ckpt)?;
-    if params.family() != family {
-        bail!(
-            "checkpoint family {:?} does not match configured family {:?}",
-            params.family(),
-            family
-        );
-    }
-    if params.layout != einet::ParamLayout::from_plan(&plan, family) {
-        bail!(
-            "checkpoint layout does not match the configured structure/--k              (saved with a different plan?)"
-        );
-    }
+    let params = load_checked(&a, &spec, &plan, family)?;
     let n = a.get_usize("n", &spec)?;
     // batched sampling: one shared forward pass + one SamplePlan
     // execution per capacity chunk, on the backend picked by name

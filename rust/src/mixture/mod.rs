@@ -7,6 +7,8 @@
 
 use crate::clustering::kmeans;
 use crate::em::{m_step, EmConfig};
+use crate::engine::exec::Semiring;
+use crate::engine::query::{Query, QueryOutput};
 use crate::engine::{DecodeMode, EinetParams, EmStats, Engine};
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
@@ -27,12 +29,12 @@ pub struct Component {
 struct MixScratch {
     /// gathered evidence rows of one component group
     xg: Vec<f32>,
-    /// the group's completions (decode output)
-    og: Vec<f32>,
     /// per-chunk forward log-probabilities
     logp: Vec<f32>,
     /// per-component block for `sample_batch_into`
     blk: Vec<f32>,
+    /// compiled-query results for one component group (scores + rows)
+    qout: QueryOutput,
 }
 
 /// A mixture of EiNets sharing a single structure (plan + engine reuse).
@@ -233,11 +235,12 @@ impl<E: Engine> EinetMixture<E> {
 
     /// Conditional sampling (inpainting) under the mixture: pick each
     /// sample's component from its posterior given the evidence, then
-    /// decode all samples assigned to a component together — one batched
-    /// forward + one [`Engine::decode_batch`] per (component, chunk)
-    /// instead of a forward/decode pair per sample. The gather/forward/
-    /// decode buffers are engine scratch sized once to capacity and
-    /// reused across every component group (and across calls).
+    /// complete all samples assigned to a component together — one
+    /// compiled [`Query::Inpaint`] execution ([`Engine::execute`]: one
+    /// batched forward + one batched decode) per (component, chunk)
+    /// instead of a forward/decode pair per sample. The gather/result
+    /// buffers are engine scratch sized once to capacity and reused
+    /// across every component group (and across calls).
     pub fn inpaint(
         &mut self,
         x: &[f32],
@@ -257,7 +260,6 @@ impl<E: Engine> EinetMixture<E> {
         }
         if self.scratch.xg.len() < cap * row {
             self.scratch.xg.resize(cap * row, 0.0);
-            self.scratch.og.resize(cap * row, 0.0);
         }
         let mut post = vec![0.0f64; bn * nc];
         let mut b0 = 0usize;
@@ -288,7 +290,7 @@ impl<E: Engine> EinetMixture<E> {
                 }
                 match mode {
                     DecodeMode::Sample => rng.categorical(&weights),
-                    DecodeMode::Argmax => {
+                    DecodeMode::Argmax | DecodeMode::Mpe => {
                         let mut best = 0;
                         for (i, &w) in weights.iter().enumerate() {
                             if w > weights[best] {
@@ -300,6 +302,13 @@ impl<E: Engine> EinetMixture<E> {
                 }
             })
             .collect();
+        // one compiled plan for every component group
+        let qp = Query::Inpaint {
+            mask: evidence_mask.to_vec(),
+            mode,
+        }
+        .compile(d)
+        .expect("invalid evidence mask");
         let mut out = x.to_vec();
         for c in 0..nc {
             let idx: Vec<usize> = (0..bn).filter(|&b| comp[b] == c).collect();
@@ -308,35 +317,117 @@ impl<E: Engine> EinetMixture<E> {
                 let chunk = cap.min(idx.len() - g0);
                 let group = &idx[g0..g0 + chunk];
                 // gather the group's evidence rows into reused scratch,
-                // forward once, decode the whole group, scatter back
+                // execute the compiled query, scatter the completions
                 for (j, &b) in group.iter().enumerate() {
                     self.scratch.xg[j * row..(j + 1) * row]
                         .copy_from_slice(&x[b * row..(b + 1) * row]);
                 }
-                self.engine.forward(
+                self.engine.execute(
                     &self.components[c].params,
+                    &qp,
                     &self.scratch.xg[..chunk * row],
-                    evidence_mask,
-                    &mut self.scratch.logp[..chunk],
-                );
-                self.scratch.og[..chunk * row]
-                    .copy_from_slice(&self.scratch.xg[..chunk * row]);
-                self.engine.decode_batch(
-                    &self.components[c].params,
                     chunk,
-                    evidence_mask,
-                    mode,
                     rng,
-                    &mut self.scratch.og[..chunk * row],
+                    &mut self.scratch.qout,
                 );
                 for (j, &b) in group.iter().enumerate() {
-                    out[b * row..(b + 1) * row]
-                        .copy_from_slice(&self.scratch.og[j * row..(j + 1) * row]);
+                    out[b * row..(b + 1) * row].copy_from_slice(
+                        &self.scratch.qout.rows[j * row..(j + 1) * row],
+                    );
                 }
                 g0 += chunk;
             }
         }
         out
+    }
+
+    /// Mixture MPE: a mixture of PCs is again a PC, so the exact argmax
+    /// completion is `max_c w_c · max_{z, x_u} p_c(x_e, x_u, z)` — one
+    /// max-product forward per component scores the candidates, then
+    /// each winning component completes its rows with one compiled
+    /// [`Query::Mpe`] execution. Returns `(completions, scores)`; the
+    /// score includes the mixture weight. Deterministic.
+    pub fn mpe(
+        &mut self,
+        x: &[f32],
+        evidence_mask: &[f32],
+        bn: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let d = self.engine.plan().graph.num_vars;
+        let od = self.family.obs_dim();
+        let row = d * od;
+        let nc = self.components.len();
+        let cap = self.engine.batch_capacity();
+        if self.scratch.logp.len() < cap {
+            self.scratch.logp.resize(cap, 0.0);
+        }
+        if self.scratch.xg.len() < cap * row {
+            self.scratch.xg.resize(cap * row, 0.0);
+        }
+        // winning component per row under the max-product score
+        let mut best_c = vec![0usize; bn];
+        let mut best_s = vec![f64::NEG_INFINITY; bn];
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let chunk = cap.min(bn - b0);
+            for c in 0..nc {
+                self.engine.forward_semiring(
+                    &self.components[c].params,
+                    &x[b0 * row..(b0 + chunk) * row],
+                    evidence_mask,
+                    &mut self.scratch.logp[..chunk],
+                    Semiring::MaxProduct,
+                );
+                for b in 0..chunk {
+                    let v = self.scratch.logp[b] as f64
+                        + self.components[c].log_weight;
+                    if v > best_s[b0 + b] {
+                        best_s[b0 + b] = v;
+                        best_c[b0 + b] = c;
+                    }
+                }
+            }
+            b0 += chunk;
+        }
+        // complete each winner's group exactly
+        let qp = Query::Mpe {
+            mask: evidence_mask.to_vec(),
+        }
+        .compile(d)
+        .expect("invalid evidence mask");
+        let mut out = x.to_vec();
+        let mut scores = vec![0.0f32; bn];
+        let mut rng = Rng::new(0); // the Mpe decode draws nothing
+        for c in 0..nc {
+            let idx: Vec<usize> = (0..bn).filter(|&b| best_c[b] == c).collect();
+            let mut g0 = 0usize;
+            while g0 < idx.len() {
+                let chunk = cap.min(idx.len() - g0);
+                let group = &idx[g0..g0 + chunk];
+                for (j, &b) in group.iter().enumerate() {
+                    self.scratch.xg[j * row..(j + 1) * row]
+                        .copy_from_slice(&x[b * row..(b + 1) * row]);
+                }
+                self.engine.execute(
+                    &self.components[c].params,
+                    &qp,
+                    &self.scratch.xg[..chunk * row],
+                    chunk,
+                    &mut rng,
+                    &mut self.scratch.qout,
+                );
+                for (j, &b) in group.iter().enumerate() {
+                    out[b * row..(b + 1) * row].copy_from_slice(
+                        &self.scratch.qout.rows[j * row..(j + 1) * row],
+                    );
+                    scores[b] = (self.scratch.qout.scores[j] as f64
+                        + self.components[c].log_weight)
+                        as f32;
+                }
+                g0 += chunk;
+            }
+        }
+        (out, scores)
     }
 }
 
@@ -423,6 +514,41 @@ mod tests {
             }
         }
         assert!(extremes > 150, "samples not bimodal: {extremes}/300");
+    }
+
+    #[test]
+    fn mixture_mpe_is_deterministic_and_respects_evidence() {
+        let nv = 6;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 8), 3);
+        let data = two_mode_data(120, nv, 9);
+        let cfg = MixtureConfig {
+            num_clusters: 2,
+            epochs: 2,
+            batch_size: 32,
+            ..Default::default()
+        };
+        let mut mix = EinetMixture::<DenseEngine>::train(
+            plan,
+            LeafFamily::Bernoulli,
+            &data,
+            120,
+            &cfg,
+            |_, _, _| {},
+        )
+        .unwrap();
+        let x = vec![1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let mask = [1.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let (rows_a, scores_a) = mix.mpe(&x, &mask, 1);
+        let (rows_b, scores_b) = mix.mpe(&x, &mask, 1);
+        assert_eq!(rows_a, rows_b, "MPE must be deterministic");
+        assert_eq!(scores_a[0].to_bits(), scores_b[0].to_bits());
+        assert_eq!(&rows_a[..3], &[1.0, 1.0, 1.0], "evidence overwritten");
+        for &v in &rows_a {
+            assert!(v == 0.0 || v == 1.0, "non-mode completion {v}");
+        }
+        // the winning component's weighted max-product score is what the
+        // query reports; it must dominate every other component's
+        assert!(scores_a[0].is_finite());
     }
 
     #[test]

@@ -1,0 +1,513 @@
+//! Brute-force enumeration oracle for the unified Query API.
+//!
+//! On tiny binary circuits (<= 12 variables) every query answer can be
+//! computed independently of the engines: an external recursive
+//! evaluator walks the region graph (this file — it shares NO code with
+//! `engine::exec`) and enumeration closes the marginalization /
+//! maximization. Pinned here:
+//!
+//! * `Marginal` == logsumexp over all completions of the evidence;
+//! * `Conditional` == the enumerated joint/evidence ratio;
+//! * `Mpe` score == the enumerated `max` over completions of the
+//!   max-product circuit value (the exact `max_{z, x_u} p(x_e, x_u, z)`),
+//!   and the decoded completion ACHIEVES that max;
+//! * on a constructed counterexample the greedy `Argmax` walk provably
+//!   returns a worse completion than `Query::Mpe` under the true
+//!   density — and `Mpe` matches the enumerated true argmax;
+//! * sharded execution (4 segments) answers `Marginal` and `Mpe`
+//!   bit-identically to the single engine, across dense/sparse and
+//!   RAT/PD structures.
+
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan,
+    LeafFamily, ParamLayout, Query, QueryOutput, Semiring, SparseEngine,
+};
+
+// ---------------------------------------------------------------------------
+// independent oracle: recursive region-graph evaluation in f64
+// ---------------------------------------------------------------------------
+
+fn logsumexp(terms: &[f64]) -> f64 {
+    let m = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + terms.iter().map(|&t| (t - m).exp()).sum::<f64>().ln()
+}
+
+/// (level, slot) of a partition in the layered plan.
+fn part_pos(plan: &LayeredPlan, pid: usize) -> (usize, usize) {
+    for (i, lv) in plan.levels.iter().enumerate() {
+        if let Some(s) = lv.einsum.partition_ids.iter().position(|&p| p == pid) {
+            return (i, s);
+        }
+    }
+    unreachable!("partition {pid} not on any level");
+}
+
+/// The region's log-value vector for a FULLY observed binary assignment
+/// `x` (`[D]`, Bernoulli), under sum-product or max-product semantics.
+fn oracle_region(
+    plan: &LayeredPlan,
+    params: &EinetParams,
+    x: &[f32],
+    max_product: bool,
+    rid: usize,
+    memo: &mut Vec<Option<Vec<f64>>>,
+) -> Vec<f64> {
+    if let Some(v) = &memo[rid] {
+        return v.clone();
+    }
+    let region = &plan.graph.regions[rid];
+    let k = plan.k;
+    let fam = params.family();
+    let s_dim = fam.stat_dim();
+    let r_total = plan.num_replica;
+    let value = if region.is_leaf() {
+        let rep = region.replica.unwrap();
+        let mut v = vec![0.0f64; k];
+        for d in region.scope.iter() {
+            for (kk, acc) in v.iter_mut().enumerate() {
+                let c = (d * k + kk) * r_total + rep;
+                let th = &params.theta()[c * s_dim..(c + 1) * s_dim];
+                *acc += fam.log_prob(th, &x[d..d + 1]) as f64;
+            }
+        }
+        v
+    } else {
+        // all of a region's partitions live on one level
+        let (lvl, _) = part_pos(plan, region.partitions[0]);
+        let ko = plan.levels[lvl].einsum.ko;
+        let mut per_part: Vec<Vec<f64>> = Vec::new();
+        for &pid in &region.partitions {
+            let (i, s) = part_pos(plan, pid);
+            assert_eq!(i, lvl);
+            let p = plan.graph.partitions[pid];
+            let lv = oracle_region(plan, params, x, max_product, p.left, memo);
+            let rv = oracle_region(plan, params, x, max_product, p.right, memo);
+            let w = params.w(i);
+            let mut out = vec![0.0f64; ko];
+            for (kout, o) in out.iter_mut().enumerate() {
+                let mut terms = Vec::with_capacity(k * k);
+                for (ii, &l) in lv.iter().enumerate() {
+                    for (jj, &r) in rv.iter().enumerate() {
+                        let wv = w[(s * ko + kout) * k * k + ii * k + jj] as f64;
+                        terms.push(wv.ln() + l + r);
+                    }
+                }
+                *o = if max_product {
+                    terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                } else {
+                    logsumexp(&terms)
+                };
+            }
+            per_part.push(out);
+        }
+        if per_part.len() == 1 {
+            per_part.pop().unwrap()
+        } else {
+            let m = plan.levels[lvl].mixing.as_ref().expect("mixing layer");
+            let j = m
+                .region_ids
+                .iter()
+                .position(|&r| r == rid)
+                .expect("region row");
+            let mix = params.mix(lvl).expect("mixing weights");
+            let mut out = vec![0.0f64; ko];
+            for (kout, o) in out.iter_mut().enumerate() {
+                let terms: Vec<f64> = per_part
+                    .iter()
+                    .enumerate()
+                    .map(|(c, pv)| (mix[j * m.cmax + c] as f64).ln() + pv[kout])
+                    .collect();
+                *o = if max_product {
+                    terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+                } else {
+                    logsumexp(&terms)
+                };
+            }
+            out
+        }
+    };
+    memo[rid] = Some(value.clone());
+    value
+}
+
+/// Root log-value of a fully observed assignment (f64, independent of
+/// the engines).
+fn oracle_value(
+    plan: &LayeredPlan,
+    params: &EinetParams,
+    x: &[f32],
+    max_product: bool,
+) -> f64 {
+    let mut memo = vec![None; plan.graph.regions.len()];
+    let v = oracle_region(plan, params, x, max_product, plan.graph.root, &mut memo);
+    assert_eq!(v.len(), 1, "root must have a scalar value");
+    v[0]
+}
+
+/// Every completion of `x` over the unobserved (`mask[d] == 0`) dims.
+fn completions(x: &[f32], mask: &[f32]) -> Vec<Vec<f32>> {
+    let free: Vec<usize> = (0..mask.len()).filter(|&d| mask[d] == 0.0).collect();
+    let mut out = Vec::with_capacity(1 << free.len());
+    for bits in 0..(1usize << free.len()) {
+        let mut c = x.to_vec();
+        for (j, &d) in free.iter().enumerate() {
+            c[d] = ((bits >> j) & 1) as f32;
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn oracle_cases() -> Vec<(&'static str, LayeredPlan)> {
+    vec![
+        (
+            "rat",
+            LayeredPlan::compile(random_binary_trees(8, 2, 2, 3), 3),
+        ),
+        (
+            "pd",
+            LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 2),
+        ),
+    ]
+}
+
+fn random_binary(nv: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..nv)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn half_mask(nv: usize) -> Vec<f32> {
+    (0..nv).map(|d| if d < nv / 2 { 1.0 } else { 0.0 }).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Marginal / Conditional vs enumeration
+// ---------------------------------------------------------------------------
+
+fn check_marginal_conditional<E: Engine>(label: &str) {
+    for (sname, plan) in oracle_cases() {
+        let nv = plan.graph.num_vars;
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 11);
+        let mut engine = E::build(plan.clone(), LeafFamily::Bernoulli, 4);
+        let mut rng = Rng::new(5);
+        let x = random_binary(nv, &mut rng);
+        let emask = half_mask(nv);
+        let ctx = format!("{label}/{sname}");
+
+        // marginal: engine score vs enumerated logsumexp
+        let mut out = QueryOutput::default();
+        let qp = Query::Marginal {
+            mask: emask.clone(),
+        }
+        .compile(nv)
+        .unwrap();
+        engine.execute(&params, &qp, &x, 1, &mut rng, &mut out);
+        let enum_terms: Vec<f64> = completions(&x, &emask)
+            .iter()
+            .map(|c| oracle_value(&plan, &params, c, false))
+            .collect();
+        let want = logsumexp(&enum_terms);
+        assert!(
+            (out.scores[0] as f64 - want).abs() < 1e-3,
+            "{ctx}: marginal {} vs enumerated {want}",
+            out.scores[0]
+        );
+
+        // conditional: first unobserved variable becomes the query
+        let mut qmask = vec![0.0f32; nv];
+        qmask[nv / 2] = 1.0;
+        let mut joint_mask = emask.clone();
+        joint_mask[nv / 2] = 1.0;
+        let qp = Query::Conditional {
+            query_mask: qmask,
+            evidence_mask: emask.clone(),
+        }
+        .compile(nv)
+        .unwrap();
+        engine.execute(&params, &qp, &x, 1, &mut rng, &mut out);
+        let joint: Vec<f64> = completions(&x, &joint_mask)
+            .iter()
+            .map(|c| oracle_value(&plan, &params, c, false))
+            .collect();
+        let want = logsumexp(&joint) - logsumexp(&enum_terms);
+        assert!(
+            (out.scores[0] as f64 - want).abs() < 1e-3,
+            "{ctx}: conditional {} vs enumerated {want}",
+            out.scores[0]
+        );
+    }
+}
+
+#[test]
+fn marginal_and_conditional_match_enumeration_dense() {
+    check_marginal_conditional::<DenseEngine>("dense");
+}
+
+#[test]
+fn marginal_and_conditional_match_enumeration_sparse() {
+    check_marginal_conditional::<SparseEngine>("sparse");
+}
+
+// ---------------------------------------------------------------------------
+// MPE vs enumeration
+// ---------------------------------------------------------------------------
+
+fn check_mpe_exact<E: Engine>(label: &str) {
+    for (sname, plan) in oracle_cases() {
+        let nv = plan.graph.num_vars;
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 23);
+        let mut engine = E::build(plan.clone(), LeafFamily::Bernoulli, 4);
+        let mut rng = Rng::new(9);
+        let ctx = format!("{label}/{sname}");
+        for trial in 0..3 {
+            let x = random_binary(nv, &mut rng);
+            let emask = if trial == 0 {
+                vec![0.0f32; nv] // fully unobserved MPE
+            } else {
+                half_mask(nv)
+            };
+            let mut out = QueryOutput::default();
+            let qp = Query::Mpe { mask: emask.clone() }.compile(nv).unwrap();
+            engine.execute(&params, &qp, &x, 1, &mut rng, &mut out);
+            // enumerated max over completions of the max-product value
+            let mut best = f64::NEG_INFINITY;
+            for c in completions(&x, &emask) {
+                best = best.max(oracle_value(&plan, &params, &c, true));
+            }
+            assert!(
+                (out.scores[0] as f64 - best).abs() < 1e-3,
+                "{ctx} trial {trial}: MPE score {} vs enumerated {best}",
+                out.scores[0]
+            );
+            // the decoded completion achieves the enumerated max
+            let decoded = &out.rows[..nv];
+            for (d, &m) in emask.iter().enumerate() {
+                if m != 0.0 {
+                    assert_eq!(decoded[d], x[d], "{ctx}: evidence overwritten");
+                } else {
+                    assert!(
+                        decoded[d] == 0.0 || decoded[d] == 1.0,
+                        "{ctx}: non-binary MPE completion"
+                    );
+                }
+            }
+            let achieved = oracle_value(&plan, &params, decoded, true);
+            assert!(
+                (achieved - best).abs() < 1e-3,
+                "{ctx} trial {trial}: decoded completion scores {achieved}, \
+                 enumerated max is {best}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mpe_matches_enumerated_max_product_dense() {
+    check_mpe_exact::<DenseEngine>("dense");
+}
+
+#[test]
+fn mpe_matches_enumerated_max_product_sparse() {
+    check_mpe_exact::<SparseEngine>("sparse");
+}
+
+// ---------------------------------------------------------------------------
+// the constructed counterexample: greedy Argmax provably fails
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mpe_beats_the_greedy_walk_on_the_constructed_counterexample() {
+    // Two Bernoulli variables, K = 2, one root partition. Component 0 is
+    // sharply concentrated (p = 0.99 on both vars), component 1 is
+    // near-uniform (p = 0.45). The root weight matrix puts its largest
+    // single weight on the (1, 1) component pair:
+    //
+    //   W = [[0.35, 0.125], [0.125, 0.40]]
+    //
+    // Unconditional greedy decode sees identical (log 1 = 0) child
+    // activations everywhere, so it follows argmax W = (1, 1) into the
+    // near-uniform components and emits their means (0.45 -> 0 after
+    // thresholding): completion (0, 0), p ~ 0.12. Max-product weighs the
+    // weights BY the best completion density: 0.35 * 0.99^2 = 0.343
+    // beats 0.40 * 0.55^2 = 0.121, so Query::Mpe descends into
+    // component 0 and emits its modes: completion (1, 1), p ~ 0.54 —
+    // which enumeration confirms is the true argmax.
+    let plan = LayeredPlan::compile(random_binary_trees(2, 1, 1, 0), 2);
+    let nv = 2;
+    let family = LeafFamily::Bernoulli;
+    let mut params = EinetParams::zeros(ParamLayout::from_plan(&plan, family));
+    let logit = |p: f32| (p / (1.0 - p)).ln();
+    {
+        let theta = params.theta_mut();
+        for d in 0..2 {
+            theta[d * 2] = logit(0.99); // component 0
+            theta[d * 2 + 1] = logit(0.45); // component 1
+        }
+        let w = params.w_mut(0);
+        w[0] = 0.35; // (0, 0)
+        w[1] = 0.125; // (0, 1)
+        w[2] = 0.125; // (1, 0)
+        w[3] = 0.40; // (1, 1)
+    }
+    params.validate().unwrap();
+
+    for engine_name in ["dense", "sparse"] {
+        let mut engine = einet::EngineRegistry::builtin()
+            .build(engine_name, plan.clone(), family, 4)
+            .unwrap();
+        let zeros = vec![0.0f32; nv];
+        let no_evidence = vec![0.0f32; nv];
+
+        // exact MPE
+        let (mpe_rows, mpe_scores) =
+            einet::infer::mpe(engine.as_mut(), &params, &zeros, &no_evidence, 1);
+        assert_eq!(
+            &mpe_rows[..],
+            &[1.0, 1.0],
+            "{engine_name}: MPE must pick the concentrated component's modes"
+        );
+
+        // greedy walk, thresholded into the Bernoulli domain
+        let mut rng = Rng::new(0);
+        let mut greedy = einet::infer::inpaint(
+            engine.as_mut(),
+            &params,
+            &zeros,
+            &no_evidence,
+            1,
+            DecodeMode::Argmax,
+            &mut rng,
+        );
+        for v in greedy.iter_mut() {
+            *v = if *v > 0.5 { 1.0 } else { 0.0 };
+        }
+        assert_eq!(
+            &greedy[..],
+            &[0.0, 0.0],
+            "{engine_name}: the counterexample must trap the greedy walk"
+        );
+
+        // true densities via full-mask forward: MPE's completion wins,
+        // and enumeration confirms it is the global argmax
+        let full = vec![1.0f32; nv];
+        let mut lp = vec![0.0f32; 1];
+        engine.forward(&params, &mpe_rows, &full, &mut lp);
+        let p_mpe = lp[0];
+        engine.forward(&params, &greedy, &full, &mut lp);
+        let p_greedy = lp[0];
+        assert!(
+            p_mpe > p_greedy + 1.0,
+            "{engine_name}: MPE {p_mpe} must clearly beat greedy {p_greedy}"
+        );
+        let mut best_state = vec![0.0f32; nv];
+        let mut best_lp = f32::NEG_INFINITY;
+        for s in 0..4usize {
+            let c = vec![(s & 1) as f32, ((s >> 1) & 1) as f32];
+            engine.forward(&params, &c, &full, &mut lp);
+            if lp[0] > best_lp {
+                best_lp = lp[0];
+                best_state = c;
+            }
+        }
+        assert_eq!(
+            best_state, mpe_rows,
+            "{engine_name}: MPE must match the enumerated true argmax here"
+        );
+        // and the reported MPE score equals the max-product oracle
+        let want = oracle_value(&plan, &params, &mpe_rows, true);
+        assert!(
+            (mpe_scores[0] as f64 - want).abs() < 1e-4,
+            "{engine_name}: MPE score {} vs oracle {want}",
+            mpe_scores[0]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sharded bit-identity: 1-shard == 4-shard == single engine
+// ---------------------------------------------------------------------------
+
+fn check_sharded_mpe<E: Engine + Send + 'static>(label: &str) {
+    use einet::coordinator::ShardedPool;
+    for (sname, plan) in [
+        (
+            "rat",
+            LayeredPlan::compile(random_binary_trees(12, 3, 3, 2), 3),
+        ),
+        (
+            "pd",
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+        ),
+    ] {
+        let nv = plan.graph.num_vars;
+        let family = LeafFamily::Bernoulli;
+        let params = EinetParams::init(&plan, family, 31);
+        let bn = 5;
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..bn * nv)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+            .collect();
+        let emask = half_mask(nv);
+        let ctx = format!("{label}/{sname}");
+
+        // single-engine reference: max-product forward + Mpe backtrack
+        let mut engine = E::build(plan.clone(), family, bn);
+        let mut lp_ref = vec![0.0f32; bn];
+        engine.forward_semiring(&params, &x, &emask, &mut lp_ref, Semiring::MaxProduct);
+        let mut rows_ref = x.clone();
+        engine.decode_batch(
+            &params,
+            bn,
+            &emask,
+            DecodeMode::Mpe,
+            &mut Rng::new(1),
+            &mut rows_ref,
+        );
+
+        for shards in [1usize, 4] {
+            let mut pool =
+                ShardedPool::new(boxed_build::<E>, &plan, family, &params, shards, bn);
+            let mut lp = vec![0.0f32; bn];
+            pool.forward_shared(
+                std::sync::Arc::new(x.clone()),
+                0,
+                std::sync::Arc::new(emask.clone()),
+                bn,
+                Semiring::MaxProduct,
+                &mut lp,
+            );
+            for (b, (a, g)) in lp_ref.iter().zip(&lp).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    g.to_bits(),
+                    "{ctx} shards={shards}: max-product forward row {b} diverged"
+                );
+            }
+            let mut rows = x.clone();
+            pool.decode(bn, &emask, DecodeMode::Mpe, &mut Rng::new(1), &mut rows);
+            for i in 0..bn * nv {
+                assert_eq!(
+                    rows_ref[i].to_bits(),
+                    rows[i].to_bits(),
+                    "{ctx} shards={shards}: Mpe completion element {i} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_mpe_is_bit_identical_dense() {
+    check_sharded_mpe::<DenseEngine>("dense");
+}
+
+#[test]
+fn sharded_mpe_is_bit_identical_sparse() {
+    check_sharded_mpe::<SparseEngine>("sparse");
+}
