@@ -1,15 +1,35 @@
-//! Section 3.2 micro-benchmark: the basic einsum operation in isolation.
+//! Section 3.2 micro-benchmark: the basic einsum operation in isolation,
+//! plus the kernel-layout sweep behind `BENCH_kernels.json`.
 //!
-//! The paper's op-count analysis: for one vectorized sum-product with
-//! children of length K,
+//! Part 1 (the paper's op-count analysis): for one vectorized sum-product
+//! with children of length K,
 //!   dense  (Eq. 4): O(K^3) mul-adds, 2K exp, K log, NO product storage
 //!   sparse (LibSPN/SPFlow style): O(K^3) adds, K^3 exp, K log, K^2 stored
-//! This bench isolates exactly that unit over a K sweep to show where the
+//! This isolates exactly that unit over a K sweep to show where the
 //! crossover in exp-ops vs mul-adds lands on CPU.
 //!
+//! Part 2 (the systems sweep): the SAME dense einsum step at batch
+//! B = 256, three ways —
+//!   per-row scalar   : row-major product + per-row `dot4`/`max4`
+//!                      (the pre-kernel engine path: the weight slot is
+//!                      re-streamed once per batch row)
+//!   blocked scalar   : transposed [K², b_blk] operand + the portable
+//!                      4-lane-chunked `einsum_block`
+//!   blocked SIMD     : the same blocked kernel on the detected ISA
+//!                      (AVX2 / NEON)
+//! All three start from the same scaled-exponential children (the 2K exps
+//! and K logs per row are identical across layouts and included in every
+//! timing), and all three are asserted bit-identical before timing.
+//! Results go to stdout and BENCH_kernels.json (schema documented in
+//! docs/BENCHMARKS.md).
+//!
 //!     cargo bench --bench einsum_op
+//!     EINET_BENCH_QUICK=1 cargo bench --bench einsum_op   # CI quick mode
 
 use einet::bench::{fmt_si, time_it, Table};
+use einet::engine::exec::Semiring;
+use einet::engine::kernels::{self, Isa};
+use einet::util::json;
 use einet::util::rng::Rng;
 
 /// dense: log-einsum-exp (Eq. 4)
@@ -71,11 +91,113 @@ fn sparse_op(
     }
 }
 
-fn main() {
+/// One full einsum step over the batch, per-row layout: per row compute
+/// the scaled children, the row-major K² product, then Ko `dot4`/`max4`
+/// reductions + logs — exactly what the engines did before the blocked
+/// kernels.
+#[allow(clippy::too_many_arguments)]
+fn step_per_row(
+    sr: Semiring,
+    logn: &[f32],
+    lognp: &[f32],
+    w: &[f32],
+    k: usize,
+    ko: usize,
+    bn: usize,
+    en: &mut [f32],
+    enp: &mut [f32],
+    prod: &mut [f32],
+    out: &mut [f32],
+) {
+    let k2 = k * k;
+    for b in 0..bn {
+        let lrow = &logn[b * k..(b + 1) * k];
+        let rrow = &lognp[b * k..(b + 1) * k];
+        let mut a = f32::NEG_INFINITY;
+        let mut ap = f32::NEG_INFINITY;
+        for kk in 0..k {
+            a = a.max(lrow[kk]);
+            ap = ap.max(rrow[kk]);
+        }
+        for kk in 0..k {
+            en[kk] = (lrow[kk] - a).exp();
+            enp[kk] = (rrow[kk] - ap).exp();
+        }
+        for (ii, &eni) in en.iter().enumerate() {
+            for (p, &enpj) in prod[ii * k..(ii + 1) * k].iter_mut().zip(enp.iter()) {
+                *p = eni * enpj;
+            }
+        }
+        let base = a + ap;
+        for kout in 0..ko {
+            let wrow = &w[kout * k2..(kout + 1) * k2];
+            let acc = match sr {
+                Semiring::SumProduct => kernels::dot4(Isa::Scalar, wrow, prod),
+                Semiring::MaxProduct => kernels::max4(Isa::Scalar, wrow, prod),
+            };
+            out[b * ko + kout] = base + acc.ln();
+        }
+    }
+}
+
+/// The same step through the blocked kernels under `isa`: per block of
+/// `b_blk` rows build the transposed operands and run `outer_block` +
+/// `einsum_block`, then add the row maxima back.
+#[allow(clippy::too_many_arguments)]
+fn step_blocked(
+    isa: Isa,
+    sr: Semiring,
+    logn: &[f32],
+    lognp: &[f32],
+    w: &[f32],
+    k: usize,
+    ko: usize,
+    bn: usize,
+    b_blk: usize,
+    en_t: &mut [f32],
+    enp_t: &mut [f32],
+    prod_t: &mut [f32],
+    acc: &mut [f32],
+    base: &mut [f32],
+    out: &mut [f32],
+) {
+    let k2 = k * k;
+    let mut b0 = 0usize;
+    while b0 < bn {
+        let bb = b_blk.min(bn - b0);
+        for j in 0..bb {
+            let b = b0 + j;
+            let lrow = &logn[b * k..(b + 1) * k];
+            let rrow = &lognp[b * k..(b + 1) * k];
+            let mut a = f32::NEG_INFINITY;
+            let mut ap = f32::NEG_INFINITY;
+            for kk in 0..k {
+                a = a.max(lrow[kk]);
+                ap = ap.max(rrow[kk]);
+            }
+            base[j] = a + ap;
+            for kk in 0..k {
+                en_t[kk * bb + j] = (lrow[kk] - a).exp();
+                enp_t[kk * bb + j] = (rrow[kk] - ap).exp();
+            }
+        }
+        kernels::outer_block(isa, en_t, enp_t, k, bb, prod_t);
+        kernels::einsum_block(isa, sr, w, prod_t, k2, ko, bb, acc);
+        for j in 0..bb {
+            for kout in 0..ko {
+                out[(b0 + j) * ko + kout] = base[j] + acc[kout * bb + j].ln();
+            }
+        }
+        b0 += bb;
+    }
+}
+
+fn part1_dense_vs_sparse(quick: bool, report_rows: &mut Vec<json::Json>) {
     let mut rng = Rng::new(0);
     println!("Section 3.2 — basic einsum op, dense (Eq. 4) vs sparse workaround");
     let mut table = Table::new(&["K", "dense", "sparse", "speedup", "max |diff|"]);
-    for k in [2usize, 4, 8, 16, 32, 64] {
+    let ks: &[usize] = if quick { &[4, 8, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    for &k in ks {
         let logn: Vec<f32> = (0..k).map(|_| rng.normal() as f32 - 2.0).collect();
         let lognp: Vec<f32> = (0..k).map(|_| rng.normal() as f32 - 2.0).collect();
         let mut w: Vec<f32> = (0..k * k * k)
@@ -92,6 +214,7 @@ fn main() {
         let mut out_s = vec![0.0f32; k];
         let mut prod = vec![0.0f32; k * k];
         let reps = 512.max(65536 / (k * k));
+        let timing_reps = if quick { 3 } else { 5 };
         let md = time_it(
             || {
                 for _ in 0..reps {
@@ -100,7 +223,7 @@ fn main() {
                 }
             },
             1,
-            5,
+            timing_reps,
         );
         let ms = time_it(
             || {
@@ -110,7 +233,7 @@ fn main() {
                 }
             },
             1,
-            5,
+            timing_reps,
         );
         let diff = out_d
             .iter()
@@ -131,6 +254,347 @@ fn main() {
             ms.median_s / md.median_s
         );
         assert!(diff < 1e-3, "layouts disagree");
+        report_rows.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("dense_op_s", json::num(md.median_s / reps as f64)),
+            ("sparse_op_s", json::num(ms.median_s / reps as f64)),
+            ("sparse_vs_dense", json::num(ms.median_s / md.median_s)),
+        ]));
     }
     println!("\n{}", table.render());
+}
+
+/// Kernel-only, per-row layout: from precomputed scaled children, build
+/// each row's K² product and run Ko `dot4`/`max4` reductions — the
+/// contraction exactly as the pre-kernel engines executed it (linear
+/// domain; the identical exp/ln plumbing around it is timed separately
+/// in the `step_*` figures).
+#[allow(clippy::too_many_arguments)]
+fn kernel_per_row(
+    sr: Semiring,
+    en_all: &[f32],
+    enp_all: &[f32],
+    w: &[f32],
+    k: usize,
+    ko: usize,
+    bn: usize,
+    prod: &mut [f32],
+    out: &mut [f32],
+) {
+    let k2 = k * k;
+    for b in 0..bn {
+        let en = &en_all[b * k..(b + 1) * k];
+        let enp = &enp_all[b * k..(b + 1) * k];
+        for (ii, &eni) in en.iter().enumerate() {
+            for (p, &enpj) in prod[ii * k..(ii + 1) * k].iter_mut().zip(enp.iter()) {
+                *p = eni * enpj;
+            }
+        }
+        for kout in 0..ko {
+            let wrow = &w[kout * k2..(kout + 1) * k2];
+            out[b * ko + kout] = match sr {
+                Semiring::SumProduct => kernels::dot4(Isa::Scalar, wrow, prod),
+                Semiring::MaxProduct => kernels::max4(Isa::Scalar, wrow, prod),
+            };
+        }
+    }
+}
+
+/// Kernel-only, blocked layout: `outer_block` + `einsum_block` per
+/// 16-row block over block-transposed children (`[nblocks, k, b_blk]`).
+#[allow(clippy::too_many_arguments)]
+fn kernel_blocked(
+    isa: Isa,
+    sr: Semiring,
+    en_t_all: &[f32],
+    enp_t_all: &[f32],
+    w: &[f32],
+    k: usize,
+    ko: usize,
+    bn: usize,
+    b_blk: usize,
+    prod_t: &mut [f32],
+    acc: &mut [f32],
+    out: &mut [f32],
+) {
+    let k2 = k * k;
+    let mut b0 = 0usize;
+    while b0 < bn {
+        let bb = b_blk.min(bn - b0);
+        let blk = (b0 / b_blk) * k * b_blk;
+        kernels::outer_block(
+            isa,
+            &en_t_all[blk..blk + k * bb],
+            &enp_t_all[blk..blk + k * bb],
+            k,
+            bb,
+            prod_t,
+        );
+        kernels::einsum_block(isa, sr, w, prod_t, k2, ko, bb, acc);
+        for j in 0..bb {
+            for kout in 0..ko {
+                out[(b0 + j) * ko + kout] = acc[kout * bb + j];
+            }
+        }
+        b0 += bb;
+    }
+}
+
+fn sr_tag(sr: Semiring) -> &'static str {
+    match sr {
+        Semiring::SumProduct => "sum",
+        Semiring::MaxProduct => "max",
+    }
+}
+
+fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
+    let isa = Isa::best();
+    let batch = 256usize;
+    let b_blk = kernels::block_rows(batch);
+    println!(
+        "Kernel sweep — per-row scalar vs blocked scalar vs blocked {} (B={batch}, b_blk={b_blk})",
+        isa.name()
+    );
+    let mut table = Table::new(&[
+        "K",
+        "semiring",
+        "kernel/row",
+        "kernel/blocked",
+        "kernel/simd",
+        "simd vs row",
+        "full step",
+    ]);
+    let ks: &[usize] = if quick { &[4, 8, 16] } else { &[2, 4, 8, 10, 16, 32] };
+    for &k in ks {
+        let ko = k;
+        let k2 = k * k;
+        let mut rng = Rng::new(7 + k as u64);
+        let logn: Vec<f32> = (0..batch * k)
+            .map(|_| rng.uniform_in(-8.0, 0.0) as f32)
+            .collect();
+        let lognp: Vec<f32> = (0..batch * k)
+            .map(|_| rng.uniform_in(-8.0, 0.0) as f32)
+            .collect();
+        let mut w: Vec<f32> = (0..ko * k2)
+            .map(|_| rng.uniform_in(0.01, 1.0) as f32)
+            .collect();
+        for block in w.chunks_mut(k2) {
+            let total: f32 = block.iter().sum();
+            for v in block.iter_mut() {
+                *v /= total;
+            }
+        }
+        // precompute scaled children once, in both layouts (row-major and
+        // block-transposed) — they are byte-for-byte the same values
+        let mut en_all = vec![0.0f32; batch * k];
+        let mut enp_all = vec![0.0f32; batch * k];
+        for b in 0..batch {
+            let lrow = &logn[b * k..(b + 1) * k];
+            let rrow = &lognp[b * k..(b + 1) * k];
+            let mut a = f32::NEG_INFINITY;
+            let mut ap = f32::NEG_INFINITY;
+            for kk in 0..k {
+                a = a.max(lrow[kk]);
+                ap = ap.max(rrow[kk]);
+            }
+            for kk in 0..k {
+                en_all[b * k + kk] = (lrow[kk] - a).exp();
+                enp_all[b * k + kk] = (rrow[kk] - ap).exp();
+            }
+        }
+        let mut en_t_all = vec![0.0f32; batch * k];
+        let mut enp_t_all = vec![0.0f32; batch * k];
+        for b in 0..batch {
+            let (bi, j) = (b / b_blk, b % b_blk);
+            for kk in 0..k {
+                en_t_all[bi * k * b_blk + kk * b_blk + j] = en_all[b * k + kk];
+                enp_t_all[bi * k * b_blk + kk * b_blk + j] = enp_all[b * k + kk];
+            }
+        }
+        let mut prod = vec![0.0f32; k2];
+        let mut en = vec![0.0f32; k];
+        let mut enp = vec![0.0f32; k];
+        let mut prod_t = vec![0.0f32; k2 * b_blk];
+        let mut acc = vec![0.0f32; ko * b_blk];
+        let mut base = vec![0.0f32; b_blk];
+        let mut out_row = vec![0.0f32; batch * ko];
+        let mut out_blk = vec![0.0f32; batch * ko];
+        let mut out_simd = vec![0.0f32; batch * ko];
+        let timing_reps = if quick { 5 } else { 9 };
+        let mut row = vec![
+            ("k", json::num(k as f64)),
+            ("ko", json::num(ko as f64)),
+            ("batch", json::num(batch as f64)),
+            ("b_blk", json::num(b_blk as f64)),
+        ];
+        for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+            // correctness first: all three contraction paths bit-identical
+            kernel_per_row(sr, &en_all, &enp_all, &w, k, ko, batch, &mut prod, &mut out_row);
+            kernel_blocked(
+                Isa::Scalar, sr, &en_t_all, &enp_t_all, &w, k, ko, batch, b_blk,
+                &mut prod_t, &mut acc, &mut out_blk,
+            );
+            kernel_blocked(
+                isa, sr, &en_t_all, &enp_t_all, &w, k, ko, batch, b_blk,
+                &mut prod_t, &mut acc, &mut out_simd,
+            );
+            for i in 0..batch * ko {
+                assert_eq!(
+                    out_row[i].to_bits(),
+                    out_blk[i].to_bits(),
+                    "per-row vs blocked diverge at K={k} {sr:?} [{i}]"
+                );
+                assert_eq!(
+                    out_blk[i].to_bits(),
+                    out_simd[i].to_bits(),
+                    "blocked scalar vs SIMD diverge at K={k} {sr:?} [{i}]"
+                );
+            }
+            // ... and so are the full steps (exp prep + contraction + ln)
+            let mut en_t = vec![0.0f32; k * b_blk];
+            let mut enp_t = vec![0.0f32; k * b_blk];
+            step_per_row(
+                sr, &logn, &lognp, &w, k, ko, batch, &mut en, &mut enp, &mut prod,
+                &mut out_row,
+            );
+            step_blocked(
+                isa, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_simd,
+            );
+            for i in 0..batch * ko {
+                assert_eq!(
+                    out_row[i].to_bits(),
+                    out_simd[i].to_bits(),
+                    "full step diverges at K={k} {sr:?} [{i}]"
+                );
+            }
+            // kernel-only timings (the headline: the contraction itself)
+            let t_row = time_it(
+                || {
+                    kernel_per_row(
+                        sr, &en_all, &enp_all, &w, k, ko, batch, &mut prod, &mut out_row,
+                    );
+                    std::hint::black_box(&out_row);
+                },
+                2,
+                timing_reps,
+            );
+            let t_blk = time_it(
+                || {
+                    kernel_blocked(
+                        Isa::Scalar, sr, &en_t_all, &enp_t_all, &w, k, ko, batch, b_blk,
+                        &mut prod_t, &mut acc, &mut out_blk,
+                    );
+                    std::hint::black_box(&out_blk);
+                },
+                2,
+                timing_reps,
+            );
+            let t_simd = time_it(
+                || {
+                    kernel_blocked(
+                        isa, sr, &en_t_all, &enp_t_all, &w, k, ko, batch, b_blk,
+                        &mut prod_t, &mut acc, &mut out_simd,
+                    );
+                    std::hint::black_box(&out_simd);
+                },
+                2,
+                timing_reps,
+            );
+            // full-step timings (exp prep + contraction + ln): what the
+            // engine-level forward pays, transcendentals included
+            let t_step_row = time_it(
+                || {
+                    step_per_row(
+                        sr, &logn, &lognp, &w, k, ko, batch, &mut en, &mut enp, &mut prod,
+                        &mut out_row,
+                    );
+                    std::hint::black_box(&out_row);
+                },
+                2,
+                timing_reps,
+            );
+            let t_step_simd = time_it(
+                || {
+                    step_blocked(
+                        isa, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                        &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_simd,
+                    );
+                    std::hint::black_box(&out_simd);
+                },
+                2,
+                timing_reps,
+            );
+            let simd_vs_row = t_row.median_s / t_simd.median_s;
+            let step_ratio = t_step_row.median_s / t_step_simd.median_s;
+            let tag = sr_tag(sr);
+            table.row(vec![
+                format!("{k}"),
+                tag.into(),
+                fmt_si(t_row.median_s),
+                fmt_si(t_blk.median_s),
+                fmt_si(t_simd.median_s),
+                format!("{simd_vs_row:.2}x"),
+                format!("{step_ratio:.2}x"),
+            ]);
+            println!(
+                "K={k:<3} {tag}: kernel row {} blocked {} {} {} ({simd_vs_row:.2}x); full step {} -> {} ({step_ratio:.2}x)",
+                fmt_si(t_row.median_s),
+                fmt_si(t_blk.median_s),
+                isa.name(),
+                fmt_si(t_simd.median_s),
+                fmt_si(t_step_row.median_s),
+                fmt_si(t_step_simd.median_s),
+            );
+            let key = |name: &'static str, alt: &'static str| -> &'static str {
+                match sr {
+                    Semiring::SumProduct => name,
+                    Semiring::MaxProduct => alt,
+                }
+            };
+            row.push((key("kernel_row_sum_s", "kernel_row_max_s"), json::num(t_row.median_s)));
+            row.push((
+                key("kernel_blocked_sum_s", "kernel_blocked_max_s"),
+                json::num(t_blk.median_s),
+            ));
+            row.push((
+                key("kernel_simd_sum_s", "kernel_simd_max_s"),
+                json::num(t_simd.median_s),
+            ));
+            row.push((key("simd_vs_row_sum", "simd_vs_row_max"), json::num(simd_vs_row)));
+            row.push((
+                key("step_row_sum_s", "step_row_max_s"),
+                json::num(t_step_row.median_s),
+            ));
+            row.push((
+                key("step_simd_sum_s", "step_simd_max_s"),
+                json::num(t_step_simd.median_s),
+            ));
+            row.push((
+                key("step_simd_vs_row_sum", "step_simd_vs_row_max"),
+                json::num(step_ratio),
+            ));
+        }
+        report_rows.push(json::obj(row));
+    }
+    println!("\n{}", table.render());
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let mut op_rows: Vec<json::Json> = Vec::new();
+    let mut kernel_rows: Vec<json::Json> = Vec::new();
+    part1_dense_vs_sparse(quick, &mut op_rows);
+    part2_kernel_sweep(quick, &mut kernel_rows);
+    let report = json::obj(vec![
+        ("experiment", json::s("einsum_kernels")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("isa", json::s(Isa::best().name())),
+        ("b_blk", json::num(kernels::block_rows(256) as f64)),
+        ("op_rows", json::arr(op_rows)),
+        ("kernel_rows", json::arr(kernel_rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", report.to_string())
+        .expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
 }

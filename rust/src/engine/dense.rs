@@ -11,6 +11,11 @@
 //!    [`ParamArena`], and — because [`EmStats::grad`] mirrors that arena
 //!    scalar-for-scalar — the backward pass accumulates gradients at the
 //!    *same offsets* it read weights from;
+//!  * the per-slot contraction runs through the batch-blocked,
+//!    semiring-generic SIMD kernels of [`super::kernels`]: one weight
+//!    slot is loaded per batch *block* (not per row) and the SIMD lanes
+//!    run across the batch, so the per-row reduction order — and with it
+//!    every test that pins engine outputs — is untouched bit-for-bit;
 //!  * the backward pass re-derives the EM expected statistics of Eq. 6
 //!    from saved activations without any extra forward work.
 //!
@@ -24,44 +29,8 @@ use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
 use super::exec::{self, ExecPlan, Semiring, Step};
+use super::kernels;
 use super::{DecodeMode, EmStats, Engine, ParamArena};
-
-/// Four-accumulator dot product: float reductions cannot be auto-
-/// vectorized under strict FP semantics, so we unroll the accumulation
-/// into independent lanes ourselves (the hot inner kernel of Eq. 4).
-#[inline]
-fn dot4(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let ca = a.chunks_exact(4);
-    let cb = b.chunks_exact(4);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (x, y) in ca.zip(cb) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (x, y) in ra.iter().zip(rb) {
-        s += x * y;
-    }
-    s
-}
-
-/// The max-semiring twin of [`dot4`]: `max_i a_i * b_i` over the same
-/// scaled-product operands (entries are non-negative, so the result is
-/// >= 0; `ln` of it recovers `max_ij (log W + log N_i + log N'_j)` after
-/// adding back the row maxima).
-#[inline]
-fn max4(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut m = f32::NEG_INFINITY;
-    for (x, y) in a.iter().zip(b) {
-        m = m.max(x * y);
-    }
-    m
-}
 
 /// The dense EiNet engine. Construct once per (plan, batch capacity);
 /// buffers are reused across calls — the training hot loop is
@@ -75,15 +44,29 @@ pub struct DenseEngine {
     /// reusable K-length temporaries
     t_en: Vec<f32>,
     t_t: Vec<f32>,
-    /// per-slot batched scratch: scaled children ([B,K] each), their
-    /// maxima ([B]), and the outer-product block ([B,K*K]). The product
-    /// lives ONLY here — cache-resident, reused across slots — mirroring
-    /// the TPU mapping where it exists only in VMEM (never in the arena).
+    /// per-slot batched scratch (backward pass only, sized lazily on the
+    /// first backward like `t_g` so serving-only engines never allocate
+    /// it): scaled children ([B,K] each) and the row-major outer-product
+    /// block ([B,K*K]). The product lives ONLY here — cache-resident,
+    /// reused across slots — mirroring the TPU mapping where it exists
+    /// only in VMEM (never in the arena).
     t_en_all: Vec<f32>,
     t_enp_all: Vec<f32>,
+    t_prod: Vec<f32>,
+    /// per-row maxima ([B] each), shared by the blocked forward prep and
+    /// the backward's row-major prep
     t_a: Vec<f32>,
     t_ap: Vec<f32>,
-    t_prod: Vec<f32>,
+    /// forward-pass blocked-kernel scratch, one batch block at a time
+    /// (see [`kernels`]): transposed scaled children ([K, b_blk] each),
+    /// the transposed product block ([K*K, b_blk]), and the linear-domain
+    /// reduction block ([Ko, b_blk])
+    t_ent: Vec<f32>,
+    t_enpt: Vec<f32>,
+    t_prodt: Vec<f32>,
+    t_acc: Vec<f32>,
+    /// mixing-layer running-max scratch ([B, Ko])
+    t_mix: Vec<f32>,
     /// backward scratch: G[b,ij] = sum_ko t W (lazily sized)
     t_g: Vec<f32>,
     /// per-component log-normalizer cache ([D*K*R]), refreshed per forward
@@ -94,9 +77,11 @@ pub struct DenseEngine {
 }
 
 impl DenseEngine {
+    /// Lower the plan and size every buffer for `batch_cap` rows.
     pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
         let exec = ExecPlan::lower(plan, family, batch_cap);
         let k = exec.k;
+        let bb = exec.b_blk;
         // sized eagerly (refresh_leaf_const_region fills it per Leaf step) so
         // memory_footprint is identical before and after the first pass
         let n_comp = exec.n_leaf_components();
@@ -107,11 +92,16 @@ impl DenseEngine {
             grad_scratch: Vec::new(),
             t_en: vec![0.0; k],
             t_t: vec![0.0; k.max(1)],
-            t_en_all: vec![0.0; batch_cap * k],
-            t_enp_all: vec![0.0; batch_cap * k],
+            t_en_all: Vec::new(),
+            t_enp_all: Vec::new(),
+            t_prod: Vec::new(),
             t_a: vec![0.0; batch_cap],
             t_ap: vec![0.0; batch_cap],
-            t_prod: vec![0.0; batch_cap * k * k],
+            t_ent: vec![0.0; k * bb],
+            t_enpt: vec![0.0; k * bb],
+            t_prodt: vec![0.0; k * k * bb],
+            t_acc: vec![0.0; k * bb],
+            t_mix: vec![0.0; batch_cap * k],
             t_g: Vec::new(),
             leaf_const: vec![0.0; n_comp],
             samp: exec::SampleScratch::new(&exec),
@@ -124,28 +114,37 @@ impl DenseEngine {
         &self.exec.plan
     }
 
+    /// The leaf distribution family the engine evaluates.
     pub fn family(&self) -> LeafFamily {
         self.exec.family
     }
 
+    /// Maximum batch rows per pass.
     pub fn batch_capacity(&self) -> usize {
         self.exec.batch_cap
     }
 
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison:
     /// forward/decode (inference) memory only. Backward/EM scratch
-    /// (`t_en`/`t_t`/`t_g` here, the `grad_*` buffers on both layouts) is
-    /// excluded on both engines so the dense-vs-sparse comparison is
-    /// symmetric; every counted buffer is at its fixed size from
-    /// construction (the sampler's lazily-allocated entry buffer is
-    /// reported at its eventual size), so the metric does not depend on
-    /// which passes have already run.
+    /// (`t_en`/`t_t`/`t_g` here, plus the row-major
+    /// `t_en_all`/`t_enp_all`/`t_prod` block that only the backward pass
+    /// uses since the forward moved onto the blocked kernels, and the
+    /// `grad_*` buffers on both layouts) is excluded on both engines so
+    /// the dense-vs-sparse comparison is symmetric; every counted buffer
+    /// is at its fixed size from construction (the sampler's
+    /// lazily-allocated entry buffer is reported at its eventual size),
+    /// so the metric does not depend on which passes have already run.
+    /// Note the inference story the numbers now tell: the forward pass's
+    /// product block is `[K², b_blk]` (a fixed 16-row block), no longer
+    /// `[B, K²]`.
     pub fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
-        let temporaries = self.t_en_all.len()
-            + self.t_enp_all.len()
-            + self.t_a.len()
+        let temporaries = self.t_a.len()
             + self.t_ap.len()
-            + self.t_prod.len()
+            + self.t_ent.len()
+            + self.t_enpt.len()
+            + self.t_prodt.len()
+            + self.t_acc.len()
+            + self.t_mix.len()
             + self.leaf_const.len();
         MemFootprint {
             params: 4 * params.num_params(),
@@ -271,9 +270,11 @@ impl DenseEngine {
         }
     }
 
-    /// Prepare per-slot batched scratch: maxima, scaled children, and the
-    /// outer-product block ("the einsum operand") for one (left, right)
-    /// child-block pair. Shared by forward and backward.
+    /// Prepare per-slot batched scratch for the *backward* pass: maxima,
+    /// scaled children, and the row-major outer-product block ("the
+    /// einsum operand") for one (left, right) child-block pair. The
+    /// forward pass uses the transposed per-block layout built in
+    /// [`DenseEngine::fwd_einsum`] instead.
     fn prep_slot_scratch(&mut self, loff: usize, roff: usize, bn: usize) {
         let k = self.exec.k;
         for b in 0..bn {
@@ -303,6 +304,13 @@ impl DenseEngine {
         }
     }
 
+    /// One einsum slot through the batch-blocked kernels: per block of
+    /// [`ExecPlan::b_blk`] rows, build the *transposed* scaled-product
+    /// operand (`[K², b_blk]`, Eq. 4's max-subtraction included) and run
+    /// the `[Ko, K²] × [K², b_blk]` semiring GEMM of
+    /// [`kernels::einsum_block`] — the weight slot is streamed once per
+    /// block instead of once per row, and the SIMD lanes run across the
+    /// batch so every row keeps the scalar reduction order bit-for-bit.
     #[allow(clippy::too_many_arguments)]
     fn fwd_einsum(
         &mut self,
@@ -318,33 +326,57 @@ impl DenseEngine {
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
-        // outer product materialized ONLY in cache-resident scratch
-        // (Eq. 4's max-subtraction included)
-        self.prep_slot_scratch(left, right, bn);
+        let isa = self.exec.simd;
         let wslot = &params.data[w..w + ko * kk2];
-        for b in 0..bn {
-            let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
-            let base = self.t_a[b] + self.t_ap[b];
-            let dest_row = dest + b * ko;
-            // S_ko = W_ko . prod (sum-product) or max(W_ko * prod)
-            // (max-product) — length-K^2 reductions over the same
-            // scaled-product block, SIMD-friendly
-            for kout in 0..ko {
-                let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
-                let acc = match sr {
-                    Semiring::SumProduct => dot4(wrow, prod),
-                    Semiring::MaxProduct => max4(wrow, prod),
-                };
-                let out = base + acc.ln();
-                if to_scratch {
-                    self.scratch[dest_row + kout] = out;
-                } else {
-                    self.arena[dest_row + kout] = out;
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let bb = self.exec.b_blk.min(bn - b0);
+            // block prep: per-row maxima and scaled children, written in
+            // transposed [K, bb] layout (same exp values as the row-major
+            // layout — only the addresses differ)
+            for j in 0..bb {
+                let b = b0 + j;
+                let lrow = &self.arena[left + b * k..left + b * k + k];
+                let rrow = &self.arena[right + b * k..right + b * k + k];
+                let mut a = f32::NEG_INFINITY;
+                let mut ap = f32::NEG_INFINITY;
+                for kk in 0..k {
+                    a = a.max(lrow[kk]);
+                    ap = ap.max(rrow[kk]);
+                }
+                self.t_a[b] = a;
+                self.t_ap[b] = ap;
+                for kk in 0..k {
+                    self.t_ent[kk * bb + j] = (lrow[kk] - a).exp();
+                    self.t_enpt[kk * bb + j] = (rrow[kk] - ap).exp();
                 }
             }
+            // outer product materialized ONLY in cache-resident scratch
+            kernels::outer_block(isa, &self.t_ent, &self.t_enpt, k, bb, &mut self.t_prodt);
+            kernels::einsum_block(isa, sr, wslot, &self.t_prodt, kk2, ko, bb, &mut self.t_acc);
+            // write-back: add the row maxima back and return to log-domain
+            for j in 0..bb {
+                let b = b0 + j;
+                let base = self.t_a[b] + self.t_ap[b];
+                let dest_row = dest + b * ko;
+                for kout in 0..ko {
+                    let out = base + self.t_acc[kout * bb + j].ln();
+                    if to_scratch {
+                        self.scratch[dest_row + kout] = out;
+                    } else {
+                        self.arena[dest_row + kout] = out;
+                    }
+                }
+            }
+            b0 += bb;
         }
     }
 
+    /// One mixing region in two passes: a vectorized running-max over the
+    /// contiguous `[bn, Ko]` child blocks ([`kernels::vmax_inplace`] —
+    /// max is exact, so the vectorization cannot change a bit), then the
+    /// weighted reduction in the original per-element order (log-sum-exp
+    /// under the sum semiring, max under the max semiring).
     #[allow(clippy::too_many_arguments)]
     fn fwd_mix(
         &mut self,
@@ -358,40 +390,34 @@ impl DenseEngine {
         bn: usize,
         sr: Semiring,
     ) {
+        let isa = self.exec.simd;
+        let n = bn * ko;
         let wrow = &params.data[w..w + children];
-        for b in 0..bn {
-            for kk in 0..ko {
-                // stable reduction over the C children: log-sum-exp under
-                // the sum semiring, max under the max semiring
-                let mut a = f32::NEG_INFINITY;
-                for c in 0..children {
-                    a = a.max(self.scratch[child + c * stride + b * ko + kk]);
+        let m = &mut self.t_mix[..n];
+        m.fill(f32::NEG_INFINITY);
+        for c in 0..children {
+            let src = &self.scratch[child + c * stride..child + c * stride + n];
+            kernels::vmax_inplace(isa, m, src);
+        }
+        for i in 0..n {
+            let a = m[i];
+            let v = match sr {
+                Semiring::SumProduct => {
+                    let mut s = 0.0f32;
+                    for (c, &wc) in wrow.iter().enumerate() {
+                        s += wc * (self.scratch[child + c * stride + i] - a).exp();
+                    }
+                    a + s.ln()
                 }
-                let v = match sr {
-                    Semiring::SumProduct => {
-                        let mut s = 0.0f32;
-                        for (c, &wc) in wrow.iter().enumerate() {
-                            s += wc
-                                * (self.scratch[child + c * stride + b * ko + kk]
-                                    - a)
-                                    .exp();
-                        }
-                        a + s.ln()
+                Semiring::MaxProduct => {
+                    let mut mx = f32::NEG_INFINITY;
+                    for (c, &wc) in wrow.iter().enumerate() {
+                        mx = mx.max(wc * (self.scratch[child + c * stride + i] - a).exp());
                     }
-                    Semiring::MaxProduct => {
-                        let mut m = f32::NEG_INFINITY;
-                        for (c, &wc) in wrow.iter().enumerate() {
-                            m = m.max(
-                                wc * (self.scratch[child + c * stride + b * ko + kk]
-                                    - a)
-                                    .exp(),
-                            );
-                        }
-                        a + m.ln()
-                    }
-                };
-                self.arena[out + b * ko + kk] = v;
-            }
+                    a + mx.ln()
+                }
+            };
+            self.arena[out + i] = v;
         }
     }
 
@@ -421,7 +447,8 @@ impl DenseEngine {
         stats.count += bn;
     }
 
-    /// Size the backward temporaries for this batch.
+    /// Size the backward temporaries for this batch (all lazy: engines
+    /// that never train pay neither RSS nor footprint for them).
     fn bwd_prepare(&mut self, bn: usize) {
         let k = self.exec.k;
         if self.t_t.len() < bn * k.max(1) {
@@ -429,6 +456,13 @@ impl DenseEngine {
         }
         if self.t_g.len() < bn * k * k {
             self.t_g.resize(bn * k * k, 0.0);
+        }
+        if self.t_en_all.len() < bn * k {
+            self.t_en_all.resize(bn * k, 0.0);
+            self.t_enp_all.resize(bn * k, 0.0);
+        }
+        if self.t_prod.len() < bn * k * k {
+            self.t_prod.resize(bn * k * k, 0.0);
         }
     }
 
@@ -577,6 +611,7 @@ impl DenseEngine {
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
+        let isa = self.exec.simd;
         self.prep_slot_scratch(left, right, bn);
         let wslot = &params.data[w..w + ko * kk2];
         // t[b, ko] = g / s with s = exp(logS - a - a')
@@ -607,8 +642,9 @@ impl DenseEngine {
         if !any {
             return;
         }
-        // 1) gW_ko += sum_b t[b,ko] * prod[b] (axpy over K^2, W row hot);
-        //    the gradient span sits at the weight span's own arena offset
+        // 1) gW_ko += sum_b t[b,ko] * prod[b] (kernels::axpy over K^2,
+        //    W row hot); the gradient span sits at the weight span's own
+        //    arena offset
         let gslot = &mut stats.grad[w..w + ko * kk2];
         for kout in 0..ko {
             let grow = &mut gslot[kout * kk2..(kout + 1) * kk2];
@@ -618,9 +654,7 @@ impl DenseEngine {
                     continue;
                 }
                 let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
-                for (g, &p) in grow.iter_mut().zip(prod) {
-                    *g += tk * p;
-                }
+                kernels::axpy(isa, grow, prod, tk);
             }
         }
         // 2) G[b] = sum_ko t[b,ko] * W[ko]; then child gradients
@@ -635,9 +669,7 @@ impl DenseEngine {
                 }
                 live = true;
                 let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
-                for (g, &wv) in gbuf.iter_mut().zip(wrow) {
-                    *g += tk * wv;
-                }
+                kernels::axpy(isa, gbuf, wrow, tk);
             }
             if !live {
                 continue;
@@ -653,10 +685,8 @@ impl DenseEngine {
                     continue;
                 }
                 let grow = &gbuf[ii * k..(ii + 1) * k];
-                self.grad_arena[lrow + ii] += eni * dot4(grow, enp);
-                for (c, &g) in self.t_en[..k].iter_mut().zip(grow) {
-                    *c += eni * g;
-                }
+                self.grad_arena[lrow + ii] += eni * kernels::dot4(isa, grow, enp);
+                kernels::axpy(isa, &mut self.t_en[..k], grow, eni);
             }
             for (jj, (&enpj, &colj)) in
                 enp.iter().zip(self.t_en[..k].iter()).enumerate()

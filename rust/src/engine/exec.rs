@@ -16,7 +16,11 @@
 //!
 //! Forward execution is a single pass over `steps` under a chosen
 //! [`Semiring`] — the queryable quantity is an *interpretation* of the
-//! step program, not a property of it. [`Semiring::SumProduct`] runs the
+//! step program, not a property of it. The per-step reductions run
+//! through the batch-blocked, ISA-dispatched kernels of
+//! [`super::kernels`]: the lowering records the detected [`kernels::Isa`]
+//! and the batch block size in [`ExecPlan::simd`] / [`ExecPlan::b_blk`],
+//! and the engines size their per-block scratch from them. [`Semiring::SumProduct`] runs the
 //! log-sum-exp kernels (marginals, likelihoods, EM); the same steps under
 //! [`Semiring::MaxProduct`] run max kernels over identical buffers and
 //! weight offsets and compute the MPE score `max_{z, x_masked} log p`,
@@ -34,14 +38,14 @@
 //! program of the forward pass — one [`SampleStep::Branch`] per internal
 //! region in top-down (root-first) order, then one [`SampleStep::Leaf`]
 //! per leaf region — with every buffer, weight, and mixing offset
-//! precomputed at lowering time. [`decode_batch`] executes it over the
+//! precomputed at lowering time. `decode_batch` executes it over the
 //! whole batch at once: per-sample selected entries live in a flat
-//! `[n_regions, batch_cap]` index buffer ([`SampleScratch::sel`]) instead
+//! `[n_regions, batch_cap]` index buffer (`SampleScratch::sel`) instead
 //! of a per-sample stack, so partition choice, the posterior
 //! `W_kij·N_i·N'_j` weighting, mixing-layer selection, and leaf emission
 //! each become one batched loop over `B` with zero per-step allocation
 //! (all scratch is preallocated and capacity-checked in debug builds).
-//! The legacy per-sample [`decode`] walk is kept as the reference
+//! The legacy per-sample `decode` walk is kept as the reference
 //! implementation; in `Argmax` mode the two are bit-identical
 //! (`tests/sampling_parity.rs`). In `Sample` mode every (sample, region)
 //! visit draws from its own counter-based stream
@@ -69,8 +73,8 @@
 //!   exactly one segment, so sharded EM is bit-identical to monolithic);
 //! * **sampling** — [`Segment::sel_in`] lists the regions whose selected
 //!   entry a spine branch writes: ONE u32 per region·sample
-//!   ([`SampleScratch::export_sel`]) is the entire cross-shard sampling
-//!   state, and [`decode_segment`] finishes the walk locally;
+//!   (`SampleScratch::export_sel`) is the entire cross-shard sampling
+//!   state, and `decode_segment` finishes the walk locally;
 //! * **parameters** — [`Segment::param_spans`] are the arena spans a
 //!   worker actually reads (its einsum/mixing weights plus the theta
 //!   blocks of its variables), which is what the parameter server
@@ -80,6 +84,7 @@ use crate::layers::{LayeredPlan, RegionSlot};
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 
+use super::kernels;
 use super::{DecodeMode, EmStats, ParamArena, ParamLayout};
 
 /// The semiring a forward pass evaluates the step program under. The
@@ -97,7 +102,9 @@ use super::{DecodeMode, EmStats, ParamArena, ParamLayout};
 ///   exact argmax backtrack.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum Semiring {
+    /// Log-sum-exp kernels: likelihoods, marginals, EM.
     SumProduct,
+    /// Max kernels over the same steps: the MPE score and backtrack.
     MaxProduct,
 }
 
@@ -122,8 +129,9 @@ pub enum Step {
         /// partition id (addresses per-partition buffers, e.g. the sparse
         /// engine's explicit product blocks)
         pid: usize,
-        /// arena offsets of the child blocks
+        /// arena offset of the left child's block
         left: usize,
+        /// arena offset of the right child's block
         right: usize,
         /// output width of this slot
         ko: usize,
@@ -138,20 +146,24 @@ pub enum Step {
     /// One mixing region aggregating `children` consecutive scratch
     /// blocks.
     Mix {
+        /// level index in the source plan
         level: usize,
         /// row index within the level's mixing layer
         row: usize,
+        /// the mixing region's id
         rid: usize,
         /// arena offset of the region's output block
         out: usize,
+        /// output width of the level
         ko: usize,
         /// number of real children
         children: usize,
         /// scratch offset of the first child block; child c starts at
         /// `child + c * child_stride`
         child: usize,
+        /// scratch stride between consecutive child blocks
         child_stride: usize,
-        /// ParamArena offset of the [cmax] mixing row (first `children`
+        /// ParamArena offset of the `[cmax]` mixing row (first `children`
         /// entries are real)
         w: usize,
     },
@@ -161,11 +173,13 @@ pub enum Step {
 /// top-down pass needs to descend through it, precomputed.
 #[derive(Clone, Copy, Debug)]
 pub struct BranchPart {
-    /// child region ids (index the `sel` entry buffer)
+    /// left child region id (indexes the `sel` entry buffer)
     pub left: usize,
+    /// right child region id (indexes the `sel` entry buffer)
     pub right: usize,
-    /// arena offsets of the child [batch_cap, K] blocks
+    /// arena offset of the left child's [batch_cap, K] block
     pub left_off: usize,
+    /// arena offset of the right child's [batch_cap, K] block
     pub right_off: usize,
     /// ParamArena offset of the slot's [Ko, K, K] weight block (the
     /// entry's [K, K] posterior block starts at `w + entry * K * K`)
@@ -179,26 +193,38 @@ pub enum SampleStep {
     /// mixing scratch when there are several), then the child entry pair
     /// from `W_kij · N_i · N'_j`.
     Branch {
+        /// the region this branch descends through
         rid: usize,
-        /// range [part0, part0 + nparts) into [`SamplePlan::parts`]
+        /// start of the range [part0, part0 + nparts) into
+        /// [`SamplePlan::parts`]
         part0: usize,
+        /// number of candidate partitions
         nparts: usize,
-        /// mixing-selection info, valid when `nparts > 1`: ParamArena
-        /// offset of the region's mixing row, scratch offset of its first
-        /// child block, the per-child stride, and the level's Ko
+        /// mixing selection (valid when `nparts > 1`): ParamArena offset
+        /// of the region's mixing row
         mix_w: usize,
+        /// scratch offset of the region's first mixing-child block
         mix_first: usize,
+        /// scratch stride between consecutive mixing-child blocks
         mix_stride: usize,
+        /// the mixing level's output width
         mix_ko: usize,
     },
     /// Leaf region: emit values for the unobserved variables in scope.
-    Leaf { rid: usize, rep: usize },
+    Leaf {
+        /// the leaf region id
+        rid: usize,
+        /// the leaf region's replica index
+        rep: usize,
+    },
 }
 
 /// The reverse step program of the forward pass, compiled once alongside
 /// [`ExecPlan`]: branches in root-first order, then every leaf.
 pub struct SamplePlan {
+    /// the top-down step list (branches root-first, then leaves)
     pub steps: Vec<SampleStep>,
+    /// flat candidate-partition records, indexed by the branch steps
     pub parts: Vec<BranchPart>,
     /// widest mixing fan-in (sizes the partition-choice scratch)
     pub max_children: usize,
@@ -292,18 +318,34 @@ impl SamplePlan {
 
 /// The compiled flat execution plan: shared, immutable engine input.
 pub struct ExecPlan {
+    /// the source layered plan
     pub plan: LayeredPlan,
+    /// the leaf distribution family
     pub family: LeafFamily,
+    /// the parameter arena's offset table
     pub layout: ParamLayout,
+    /// vector width K of every non-root region
     pub k: usize,
+    /// maximum batch rows per pass
     pub batch_cap: usize,
+    /// the linear forward step program
     pub steps: Vec<Step>,
     /// per region: offset of its [batch_cap, width] arena block
     pub region_off: Vec<usize>,
     /// per region: vector width (K; root: top level's Ko)
     pub region_width: Vec<usize>,
+    /// total activation-arena length in scalars
     pub arena_len: usize,
+    /// total mixing-scratch length in scalars
     pub scratch_len: usize,
+    /// the kernel ISA selected at lowering time ([`kernels::Isa::detect`]);
+    /// every worker of a sharded run lowers the same plan and therefore
+    /// runs the same kernels, keeping N-shard results bit-identical
+    pub simd: kernels::Isa,
+    /// batch block size of the einsum kernels ([`kernels::block_rows`]):
+    /// one weight-slot load is amortized over this many batch rows, and
+    /// the engines size their transposed per-block scratch with it
+    pub b_blk: usize,
     /// the compiled reverse (top-down sampling) step program
     pub sample_plan: SamplePlan,
     /// per partition: (level, slot) — the decode path's reverse index
@@ -316,7 +358,7 @@ pub struct ExecPlan {
 impl ExecPlan {
     /// Number of leaf components (`num_vars * k * num_replica`) — the
     /// size of the per-component log-normalizer cache that
-    /// [`refresh_leaf_const_region`] maintains and the engines preallocate.
+    /// `refresh_leaf_const_region` maintains and the engines preallocate.
     pub fn n_leaf_components(&self) -> usize {
         self.plan.graph.num_vars * self.k * self.layout.num_replica
     }
@@ -436,6 +478,8 @@ impl ExecPlan {
             region_width,
             arena_len,
             scratch_len,
+            simd: kernels::Isa::detect(),
+            b_blk: kernels::block_rows(batch_cap),
             sample_plan,
             part_level,
             part_slot,
@@ -513,6 +557,7 @@ impl Segment {
 /// serially — correct, just not accelerated; RAT-style replica forests
 /// split cleanly into `2R` clusters.
 pub struct PlanPartition {
+    /// number of worker segments the plan was cut into
     pub n_shards: usize,
     /// worker segments, length `n_shards` (some may be empty on tiny or
     /// heavily shared structures)
@@ -1094,7 +1139,8 @@ pub(crate) fn decode(
 // batched top-down decode over the SamplePlan
 // ---------------------------------------------------------------------------
 
-/// Reusable executor state for [`decode_batch`]: owned by the engine so
+/// Reusable executor state for the batched top-down decode (the
+/// `decode_batch`/`decode_segment` executors): owned by the engine so
 /// the batched hot loop never allocates.
 pub struct SampleScratch {
     /// per (region, sample) slot: selected entry + 1 (0 = inactive),
@@ -1103,7 +1149,7 @@ pub struct SampleScratch {
     sel: Vec<u32>,
     /// [K, K] posterior buffer for the (i, j) entry pick
     wbuf: Vec<f32>,
-    /// [K] right-child scaled-exponential cache
+    /// `[K]` right-child scaled-exponential cache
     ebuf: Vec<f32>,
     /// [max mixing children] partition-choice weights
     mbuf: Vec<f32>,
@@ -1128,6 +1174,8 @@ pub struct SampleScratch {
 }
 
 impl SampleScratch {
+    /// Size the executor state for a compiled plan (the large `sel`
+    /// entry buffer itself is allocated on first use).
     pub fn new(ep: &ExecPlan) -> Self {
         Self {
             // the entry buffer is the large allocation (n_regions *

@@ -1,0 +1,1100 @@
+//! Batch-blocked, semiring-generic SIMD kernels for the einsum hot loop.
+//!
+//! The paper's speed claim rests on collapsing the circuit into monolithic
+//! einsum operations; the [`super::exec::ExecPlan`] does the collapsing,
+//! and this module makes the innermost reduction fast. One einsum step
+//! contracts a `[Ko, K²]` weight slot against a batch of `K²`-long
+//! scaled-product vectors. Executed row-by-row (the pre-kernel layout),
+//! the weight slot is re-streamed once per batch *row*; here the batch is
+//! processed in blocks of [`block_rows`] rows against a *transposed*
+//! product operand, so the contraction becomes a small GEMM
+//!
+//! ```text
+//!   acc[Ko, B_blk] = W[Ko, K²] · prodᵀ[K², B_blk]      (sum-product)
+//!   acc[Ko, B_blk] = max_ij W[Ko, ij] * prodᵀ[ij, B_blk] (max-product)
+//! ```
+//!
+//! with the weight slot loaded once per *block* and the inner loops
+//! vectorized across the batch dimension (each SIMD lane is one batch
+//! row, so per-row reduction order is untouched — see below). Because
+//! the kernels are parameterized by [`Semiring`], the same blocked path
+//! serves likelihood/EM traffic *and* max-product MPE serving.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel in this module produces **bit-identical** results across
+//! all ISA paths ([`Isa::Scalar`], AVX2, NEON) and across the blocked vs
+//! per-row layouts. This is what lets the engines adopt the kernels
+//! without perturbing a single test: the parity / oracle / sharding
+//! suites pin engine outputs to the last bit, and `tests/kernel_identity.rs`
+//! pins the kernels themselves. Three rules enforce it:
+//!
+//! * **Fixed reduction order.** The sum-product reduction keeps the
+//!   4-accumulator order of the original scalar `dot4`: lane `j` of a
+//!   4-accumulator group sums the terms with index `≡ j (mod 4)`, the
+//!   groups combine as `(a0 + a1) + (a2 + a3)`, and the `K² mod 4` tail
+//!   is added sequentially afterwards. SIMD paths vectorize across the
+//!   *batch* dimension, so each batch row still performs exactly this
+//!   scalar sequence.
+//! * **No FMA contraction.** Multiplies and adds stay separate
+//!   (`vmulps` + `vaddps`, `fmul` + `fadd`): a fused multiply-add rounds
+//!   once instead of twice and would make SIMD results diverge from the
+//!   portable scalar fallback. Reproducibility across machines beats the
+//!   ~15% FMA win here.
+//! * **`f32::max` semantics.** SIMD max reductions use a
+//!   greater-than-select (`x > m ? x : m`) instead of the bare hardware
+//!   `max` instruction, whose NaN behaviour (propagate the second
+//!   operand) differs from Rust's `f32::max` (keep the non-NaN operand).
+//!
+//! # Dispatch
+//!
+//! [`Isa::detect`] picks the best available path at plan-lowering time
+//! (`EINET_KERNELS=scalar` or [`force_scalar`] pin the portable path for
+//! A/B benchmarks and identity tests); the chosen [`Isa`] is stored in
+//! the [`super::exec::ExecPlan`] so every worker of a sharded run uses
+//! the same kernels. AVX2 is runtime-detected on x86-64; NEON is
+//! architecturally guaranteed on AArch64. The scalar fallback processes
+//! the batch in 4-lane chunks with per-lane accumulator arrays — the
+//! same shape the SIMD paths use — so the compiler can auto-vectorize it
+//! where strict FP semantics allow (every reduction is per-lane).
+
+use super::exec::Semiring;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// The instruction-set path a kernel call executes.
+///
+/// Values other than [`Isa::Scalar`] are only ever constructed after the
+/// corresponding hardware check succeeded, which is what makes the
+/// `unsafe` SIMD dispatch sound.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Portable 4-lane-chunked scalar fallback (also the reference
+    /// implementation every SIMD path must match bit-for-bit).
+    Scalar,
+    /// 256-bit AVX2 path, 8 batch rows per vector (x86-64 only,
+    /// runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON path, 4 batch rows per vector (AArch64 only; NEON is
+    /// mandatory on AArch64, so no runtime check is needed).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Test/bench override: route every subsequently lowered plan through the
+/// scalar kernels (see [`Isa::detect`]).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Pin (or unpin) kernel dispatch to the scalar path for plans lowered
+/// after this call. Used by the identity tests and the kernel benchmark
+/// to build scalar-vs-SIMD engine pairs in one process; because every
+/// path is bit-identical, flipping this concurrently with other engine
+/// construction is benign.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_isa() -> Isa {
+    if is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn best_isa() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn best_isa() -> Isa {
+    Isa::Scalar
+}
+
+impl Isa {
+    /// The fastest ISA available on this machine.
+    pub fn best() -> Isa {
+        best_isa()
+    }
+
+    /// The ISA new plans should use: [`Isa::best`], unless the scalar
+    /// path is pinned by [`force_scalar`] or `EINET_KERNELS=scalar` in
+    /// the environment.
+    pub fn detect() -> Isa {
+        if FORCE_SCALAR.load(Ordering::Relaxed) {
+            return Isa::Scalar;
+        }
+        if std::env::var("EINET_KERNELS").as_deref() == Ok("scalar") {
+            return Isa::Scalar;
+        }
+        Isa::best()
+    }
+
+    /// Short name for logs and bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// The batch block size for a given engine capacity: how many batch rows
+/// one weight-slot load is amortized over. 16 rows keep the transposed
+/// product block (`K² * 16 * 4` bytes) L1-resident up to K = 16 while
+/// cutting weight-stream traffic 16×; capacities below 16 simply use the
+/// whole batch as one block.
+pub fn block_rows(batch_cap: usize) -> usize {
+    batch_cap.clamp(1, 16)
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference implementations
+// ---------------------------------------------------------------------------
+//
+// These define the numbers. Every SIMD variant below must agree with them
+// bit-for-bit (pinned by the in-module tests and tests/kernel_identity.rs).
+
+/// One output column of the blocked sum-product GEMM: the 4-accumulator
+/// dot product of `wrow` (length K²) with column `lane` of the transposed
+/// `[K², bb]` product block — the exact reduction order of [`dot4`].
+#[inline]
+fn dot_col(wrow: &[f32], prod_t: &[f32], bb: usize, lane: usize) -> f32 {
+    let k2 = wrow.len();
+    let mut a = [0.0f32; 4];
+    let mut ij = 0usize;
+    while ij + 4 <= k2 {
+        a[0] += wrow[ij] * prod_t[ij * bb + lane];
+        a[1] += wrow[ij + 1] * prod_t[(ij + 1) * bb + lane];
+        a[2] += wrow[ij + 2] * prod_t[(ij + 2) * bb + lane];
+        a[3] += wrow[ij + 3] * prod_t[(ij + 3) * bb + lane];
+        ij += 4;
+    }
+    let mut s = (a[0] + a[1]) + (a[2] + a[3]);
+    while ij < k2 {
+        s += wrow[ij] * prod_t[ij * bb + lane];
+        ij += 1;
+    }
+    s
+}
+
+/// One output column of the blocked max-product reduction: sequential
+/// single-accumulator `max`, the exact order of [`max4`].
+#[inline]
+fn max_col(wrow: &[f32], prod_t: &[f32], bb: usize, lane: usize) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for (ij, &wv) in wrow.iter().enumerate() {
+        m = m.max(wv * prod_t[ij * bb + lane]);
+    }
+    m
+}
+
+fn dot4_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+fn max4_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for (x, y) in a.iter().zip(b) {
+        m = m.max(x * y);
+    }
+    m
+}
+
+fn axpy_scalar(dst: &mut [f32], src: &[f32], t: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += t * s;
+    }
+}
+
+fn mul_into_scalar(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+        *d = x * y;
+    }
+}
+
+fn add_scalar_scalar(dst: &mut [f32], src: &[f32], c: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = c + s;
+    }
+}
+
+fn vmax_scalar(m: &mut [f32], src: &[f32]) {
+    for (d, &s) in m.iter_mut().zip(src) {
+        *d = d.max(s);
+    }
+}
+
+fn vmax_shift_scalar(m: &mut [f32], src: &[f32], shift: f32) {
+    for (d, &s) in m.iter_mut().zip(src) {
+        *d = d.max(s + shift);
+    }
+}
+
+fn max_add_scalar(w: &[f32], p: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for (x, y) in w.iter().zip(p) {
+        m = m.max(x + y);
+    }
+    m
+}
+
+/// Portable blocked einsum kernel: the 4-lane-chunked scalar fallback.
+/// Lane chunks use per-lane accumulator *arrays* in the same shape as the
+/// SIMD registers, so each lane runs the canonical reduction order and
+/// the compiler may auto-vectorize (all reductions are per-lane).
+fn einsum_block_scalar(
+    sr: Semiring,
+    w: &[f32],
+    prod_t: &[f32],
+    k2: usize,
+    ko: usize,
+    bb: usize,
+    acc: &mut [f32],
+) {
+    for kout in 0..ko {
+        let wrow = &w[kout * k2..(kout + 1) * k2];
+        let arow = &mut acc[kout * bb..(kout + 1) * bb];
+        match sr {
+            Semiring::SumProduct => {
+                let mut lane = 0usize;
+                while lane + 4 <= bb {
+                    let mut a0 = [0.0f32; 4];
+                    let mut a1 = [0.0f32; 4];
+                    let mut a2 = [0.0f32; 4];
+                    let mut a3 = [0.0f32; 4];
+                    let mut ij = 0usize;
+                    while ij + 4 <= k2 {
+                        let (w0, w1, w2, w3) =
+                            (wrow[ij], wrow[ij + 1], wrow[ij + 2], wrow[ij + 3]);
+                        for l in 0..4 {
+                            a0[l] += w0 * prod_t[ij * bb + lane + l];
+                            a1[l] += w1 * prod_t[(ij + 1) * bb + lane + l];
+                            a2[l] += w2 * prod_t[(ij + 2) * bb + lane + l];
+                            a3[l] += w3 * prod_t[(ij + 3) * bb + lane + l];
+                        }
+                        ij += 4;
+                    }
+                    let mut s = [0.0f32; 4];
+                    for l in 0..4 {
+                        s[l] = (a0[l] + a1[l]) + (a2[l] + a3[l]);
+                    }
+                    while ij < k2 {
+                        let wv = wrow[ij];
+                        for l in 0..4 {
+                            s[l] += wv * prod_t[ij * bb + lane + l];
+                        }
+                        ij += 1;
+                    }
+                    arow[lane..lane + 4].copy_from_slice(&s);
+                    lane += 4;
+                }
+                while lane < bb {
+                    arow[lane] = dot_col(wrow, prod_t, bb, lane);
+                    lane += 1;
+                }
+            }
+            Semiring::MaxProduct => {
+                let mut lane = 0usize;
+                while lane + 4 <= bb {
+                    let mut m = [f32::NEG_INFINITY; 4];
+                    for (ij, &wv) in wrow.iter().enumerate() {
+                        for l in 0..4 {
+                            m[l] = m[l].max(wv * prod_t[ij * bb + lane + l]);
+                        }
+                    }
+                    arow[lane..lane + 4].copy_from_slice(&m);
+                    lane += 4;
+                }
+                while lane < bb {
+                    arow[lane] = max_col(wrow, prod_t, bb, lane);
+                    lane += 1;
+                }
+            }
+        }
+    }
+}
+
+fn outer_block_scalar(en_t: &[f32], enp_t: &[f32], k: usize, bb: usize, prod_t: &mut [f32]) {
+    for ii in 0..k {
+        let erow = &en_t[ii * bb..ii * bb + bb];
+        for jj in 0..k {
+            let prow = &mut prod_t[(ii * k + jj) * bb..(ii * k + jj) * bb + bb];
+            mul_into_scalar(prow, erow, &enp_t[jj * bb..jj * bb + bb]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86-64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{dot_col, max_col, Semiring};
+    use core::arch::x86_64::*;
+
+    // SAFETY contract for every fn here: the caller verified AVX2 via
+    // `is_x86_feature_detected!("avx2")` (Isa::Avx2 is only constructed
+    // then), and slice lengths were checked by the dispatching wrapper.
+
+    /// `x > m ? x : m` — `f32::max(m, x)` semantics (keep `m` on NaN `x`),
+    /// unlike `vmaxps` which would propagate the second operand.
+    /// (`target_feature` so the `__m256` arguments stay in registers —
+    /// vector types must not cross a non-AVX ABI boundary.)
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn max_sel(m: __m256, x: __m256) -> __m256 {
+        _mm256_blendv_ps(m, x, _mm256_cmp_ps::<_CMP_GT_OQ>(x, m))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = _mm_add_ps(acc, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+            i += 4;
+        }
+        let mut t = [0.0f32; 4];
+        _mm_storeu_ps(t.as_mut_ptr(), acc);
+        let mut s = (t[0] + t[1]) + (t[2] + t[3]);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn max4(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc = max_sel(acc, prod);
+            i += 8;
+        }
+        let mut t = [0.0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), acc);
+        let mut m = f32::NEG_INFINITY;
+        for &v in &t {
+            m = m.max(v);
+        }
+        while i < n {
+            m = m.max(a[i] * b[i]);
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy(dst: &mut [f32], src: &[f32], t: f32) {
+        let n = dst.len().min(src.len());
+        let (pd, ps) = (dst.as_mut_ptr(), src.as_ptr());
+        let tv = _mm256_set1_ps(t);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(pd.add(i));
+            let s = _mm256_loadu_ps(ps.add(i));
+            _mm256_storeu_ps(pd.add(i), _mm256_add_ps(d, _mm256_mul_ps(tv, s)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += t * src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = dst.len().min(a.len()).min(b.len());
+        let (pd, pa, pb) = (dst.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(
+                pd.add(i),
+                _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i))),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] = a[i] * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_scalar(dst: &mut [f32], src: &[f32], c: f32) {
+        let n = dst.len().min(src.len());
+        let (pd, ps) = (dst.as_mut_ptr(), src.as_ptr());
+        let cv = _mm256_set1_ps(c);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(pd.add(i), _mm256_add_ps(cv, _mm256_loadu_ps(ps.add(i))));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = c + src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vmax(m: &mut [f32], src: &[f32]) {
+        let n = m.len().min(src.len());
+        let (pm, ps) = (m.as_mut_ptr(), src.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let mv = _mm256_loadu_ps(pm.add(i));
+            _mm256_storeu_ps(pm.add(i), max_sel(mv, _mm256_loadu_ps(ps.add(i))));
+            i += 8;
+        }
+        while i < n {
+            m[i] = m[i].max(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vmax_shift(m: &mut [f32], src: &[f32], shift: f32) {
+        let n = m.len().min(src.len());
+        let (pm, ps) = (m.as_mut_ptr(), src.as_ptr());
+        let sv = _mm256_set1_ps(shift);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let mv = _mm256_loadu_ps(pm.add(i));
+            let cand = _mm256_add_ps(_mm256_loadu_ps(ps.add(i)), sv);
+            _mm256_storeu_ps(pm.add(i), max_sel(mv, cand));
+            i += 8;
+        }
+        while i < n {
+            m[i] = m[i].max(src[i] + shift);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn max_add(w: &[f32], p: &[f32]) -> f32 {
+        let n = w.len().min(p.len());
+        let (pw, pp) = (w.as_ptr(), p.as_ptr());
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let sum = _mm256_add_ps(_mm256_loadu_ps(pw.add(i)), _mm256_loadu_ps(pp.add(i)));
+            acc = max_sel(acc, sum);
+            i += 8;
+        }
+        let mut t = [0.0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), acc);
+        let mut m = f32::NEG_INFINITY;
+        for &v in &t {
+            m = m.max(v);
+        }
+        while i < n {
+            m = m.max(w[i] + p[i]);
+            i += 1;
+        }
+        m
+    }
+
+    /// The blocked GEMM, 8 batch rows per vector. Per lane this is the
+    /// exact 4-accumulator order of `dot_col` (sum) / the sequential
+    /// order of `max_col` (max); lanes `bb mod 8` fall back to those
+    /// scalar columns.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn einsum_block(
+        sr: Semiring,
+        w: &[f32],
+        prod_t: &[f32],
+        k2: usize,
+        ko: usize,
+        bb: usize,
+        acc: &mut [f32],
+    ) {
+        let p = prod_t.as_ptr();
+        for kout in 0..ko {
+            let wrow = &w[kout * k2..(kout + 1) * k2];
+            let pw = wrow.as_ptr();
+            let pa = acc.as_mut_ptr().add(kout * bb);
+            match sr {
+                Semiring::SumProduct => {
+                    let mut lane = 0usize;
+                    while lane + 8 <= bb {
+                        let mut a0 = _mm256_setzero_ps();
+                        let mut a1 = _mm256_setzero_ps();
+                        let mut a2 = _mm256_setzero_ps();
+                        let mut a3 = _mm256_setzero_ps();
+                        let mut ij = 0usize;
+                        while ij + 4 <= k2 {
+                            let w0 = _mm256_set1_ps(*pw.add(ij));
+                            let w1 = _mm256_set1_ps(*pw.add(ij + 1));
+                            let w2 = _mm256_set1_ps(*pw.add(ij + 2));
+                            let w3 = _mm256_set1_ps(*pw.add(ij + 3));
+                            a0 = _mm256_add_ps(
+                                a0,
+                                _mm256_mul_ps(w0, _mm256_loadu_ps(p.add(ij * bb + lane))),
+                            );
+                            a1 = _mm256_add_ps(
+                                a1,
+                                _mm256_mul_ps(w1, _mm256_loadu_ps(p.add((ij + 1) * bb + lane))),
+                            );
+                            a2 = _mm256_add_ps(
+                                a2,
+                                _mm256_mul_ps(w2, _mm256_loadu_ps(p.add((ij + 2) * bb + lane))),
+                            );
+                            a3 = _mm256_add_ps(
+                                a3,
+                                _mm256_mul_ps(w3, _mm256_loadu_ps(p.add((ij + 3) * bb + lane))),
+                            );
+                            ij += 4;
+                        }
+                        let mut s =
+                            _mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3));
+                        while ij < k2 {
+                            let wv = _mm256_set1_ps(*pw.add(ij));
+                            s = _mm256_add_ps(
+                                s,
+                                _mm256_mul_ps(wv, _mm256_loadu_ps(p.add(ij * bb + lane))),
+                            );
+                            ij += 1;
+                        }
+                        _mm256_storeu_ps(pa.add(lane), s);
+                        lane += 8;
+                    }
+                    while lane < bb {
+                        *pa.add(lane) = dot_col(wrow, prod_t, bb, lane);
+                        lane += 1;
+                    }
+                }
+                Semiring::MaxProduct => {
+                    let mut lane = 0usize;
+                    while lane + 8 <= bb {
+                        let mut m = _mm256_set1_ps(f32::NEG_INFINITY);
+                        for ij in 0..k2 {
+                            let wv = _mm256_set1_ps(*pw.add(ij));
+                            m = max_sel(
+                                m,
+                                _mm256_mul_ps(wv, _mm256_loadu_ps(p.add(ij * bb + lane))),
+                            );
+                        }
+                        _mm256_storeu_ps(pa.add(lane), m);
+                        lane += 8;
+                    }
+                    while lane < bb {
+                        *pa.add(lane) = max_col(wrow, prod_t, bb, lane);
+                        lane += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (AArch64; architecturally guaranteed)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{dot_col, max_col, Semiring};
+    use core::arch::aarch64::*;
+
+    // SAFETY contract: NEON is mandatory on AArch64 (Isa::Neon is only
+    // constructed there); slice lengths were checked by the dispatching
+    // wrapper. Multiplies and adds are kept as separate vmulq/vaddq ops —
+    // never vfmaq — to preserve the no-FMA bit-identity contract.
+
+    /// `x > m ? x : m` — `f32::max(m, x)` semantics on NaN.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn max_sel(m: float32x4_t, x: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcgtq_f32(x, m), x, m)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            i += 4;
+        }
+        let mut t = [0.0f32; 4];
+        vst1q_f32(t.as_mut_ptr(), acc);
+        let mut s = (t[0] + t[1]) + (t[2] + t[3]);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn max4(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = max_sel(acc, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            i += 4;
+        }
+        let mut t = [0.0f32; 4];
+        vst1q_f32(t.as_mut_ptr(), acc);
+        let mut m = f32::NEG_INFINITY;
+        for &v in &t {
+            m = m.max(v);
+        }
+        while i < n {
+            m = m.max(a[i] * b[i]);
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(dst: &mut [f32], src: &[f32], t: f32) {
+        let n = dst.len().min(src.len());
+        let (pd, ps) = (dst.as_mut_ptr(), src.as_ptr());
+        let tv = vdupq_n_f32(t);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = vld1q_f32(pd.add(i));
+            let s = vld1q_f32(ps.add(i));
+            vst1q_f32(pd.add(i), vaddq_f32(d, vmulq_f32(tv, s)));
+            i += 4;
+        }
+        while i < n {
+            dst[i] += t * src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mul_into(dst: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = dst.len().min(a.len()).min(b.len());
+        let (pd, pa, pb) = (dst.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(pd.add(i), vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            i += 4;
+        }
+        while i < n {
+            dst[i] = a[i] * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_scalar(dst: &mut [f32], src: &[f32], c: f32) {
+        let n = dst.len().min(src.len());
+        let (pd, ps) = (dst.as_mut_ptr(), src.as_ptr());
+        let cv = vdupq_n_f32(c);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(pd.add(i), vaddq_f32(cv, vld1q_f32(ps.add(i))));
+            i += 4;
+        }
+        while i < n {
+            dst[i] = c + src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vmax(m: &mut [f32], src: &[f32]) {
+        let n = m.len().min(src.len());
+        let (pm, ps) = (m.as_mut_ptr(), src.as_ptr());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let mv = vld1q_f32(pm.add(i));
+            vst1q_f32(pm.add(i), max_sel(mv, vld1q_f32(ps.add(i))));
+            i += 4;
+        }
+        while i < n {
+            m[i] = m[i].max(src[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vmax_shift(m: &mut [f32], src: &[f32], shift: f32) {
+        let n = m.len().min(src.len());
+        let (pm, ps) = (m.as_mut_ptr(), src.as_ptr());
+        let sv = vdupq_n_f32(shift);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let mv = vld1q_f32(pm.add(i));
+            let cand = vaddq_f32(vld1q_f32(ps.add(i)), sv);
+            vst1q_f32(pm.add(i), max_sel(mv, cand));
+            i += 4;
+        }
+        while i < n {
+            m[i] = m[i].max(src[i] + shift);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn max_add(w: &[f32], p: &[f32]) -> f32 {
+        let n = w.len().min(p.len());
+        let (pw, pp) = (w.as_ptr(), p.as_ptr());
+        let mut acc = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = max_sel(acc, vaddq_f32(vld1q_f32(pw.add(i)), vld1q_f32(pp.add(i))));
+            i += 4;
+        }
+        let mut t = [0.0f32; 4];
+        vst1q_f32(t.as_mut_ptr(), acc);
+        let mut m = f32::NEG_INFINITY;
+        for &v in &t {
+            m = m.max(v);
+        }
+        while i < n {
+            m = m.max(w[i] + p[i]);
+            i += 1;
+        }
+        m
+    }
+
+    /// The blocked GEMM, 4 batch rows per vector; see the AVX2 twin.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn einsum_block(
+        sr: Semiring,
+        w: &[f32],
+        prod_t: &[f32],
+        k2: usize,
+        ko: usize,
+        bb: usize,
+        acc: &mut [f32],
+    ) {
+        let p = prod_t.as_ptr();
+        for kout in 0..ko {
+            let wrow = &w[kout * k2..(kout + 1) * k2];
+            let pw = wrow.as_ptr();
+            let pa = acc.as_mut_ptr().add(kout * bb);
+            match sr {
+                Semiring::SumProduct => {
+                    let mut lane = 0usize;
+                    while lane + 4 <= bb {
+                        let mut a0 = vdupq_n_f32(0.0);
+                        let mut a1 = vdupq_n_f32(0.0);
+                        let mut a2 = vdupq_n_f32(0.0);
+                        let mut a3 = vdupq_n_f32(0.0);
+                        let mut ij = 0usize;
+                        while ij + 4 <= k2 {
+                            let w0 = vdupq_n_f32(*pw.add(ij));
+                            let w1 = vdupq_n_f32(*pw.add(ij + 1));
+                            let w2 = vdupq_n_f32(*pw.add(ij + 2));
+                            let w3 = vdupq_n_f32(*pw.add(ij + 3));
+                            a0 = vaddq_f32(a0, vmulq_f32(w0, vld1q_f32(p.add(ij * bb + lane))));
+                            a1 = vaddq_f32(
+                                a1,
+                                vmulq_f32(w1, vld1q_f32(p.add((ij + 1) * bb + lane))),
+                            );
+                            a2 = vaddq_f32(
+                                a2,
+                                vmulq_f32(w2, vld1q_f32(p.add((ij + 2) * bb + lane))),
+                            );
+                            a3 = vaddq_f32(
+                                a3,
+                                vmulq_f32(w3, vld1q_f32(p.add((ij + 3) * bb + lane))),
+                            );
+                            ij += 4;
+                        }
+                        let mut s = vaddq_f32(vaddq_f32(a0, a1), vaddq_f32(a2, a3));
+                        while ij < k2 {
+                            let wv = vdupq_n_f32(*pw.add(ij));
+                            s = vaddq_f32(s, vmulq_f32(wv, vld1q_f32(p.add(ij * bb + lane))));
+                            ij += 1;
+                        }
+                        vst1q_f32(pa.add(lane), s);
+                        lane += 4;
+                    }
+                    while lane < bb {
+                        *pa.add(lane) = dot_col(wrow, prod_t, bb, lane);
+                        lane += 1;
+                    }
+                }
+                Semiring::MaxProduct => {
+                    let mut lane = 0usize;
+                    while lane + 4 <= bb {
+                        let mut m = vdupq_n_f32(f32::NEG_INFINITY);
+                        for ij in 0..k2 {
+                            let wv = vdupq_n_f32(*pw.add(ij));
+                            m = max_sel(m, vmulq_f32(wv, vld1q_f32(p.add(ij * bb + lane))));
+                        }
+                        vst1q_f32(pa.add(lane), m);
+                        lane += 4;
+                    }
+                    while lane < bb {
+                        *pa.add(lane) = max_col(wrow, prod_t, bb, lane);
+                        lane += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public dispatchers
+// ---------------------------------------------------------------------------
+
+/// Four-accumulator dot product (the per-row kernel of Eq. 4, kept for
+/// the K-length reductions of the backward pass): lane `j` sums elements
+/// `≡ j (mod 4)`, lanes combine as `(a0 + a1) + (a2 + a3)`, the tail is
+/// added sequentially. Bit-identical across ISAs.
+#[inline]
+pub fn dot4(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot4_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot4(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot4(a, b) },
+    }
+}
+
+/// The max-semiring twin of [`dot4`]: `max_i a_i * b_i` (exact under any
+/// evaluation order; NaN products are ignored, matching `f32::max`).
+#[inline]
+pub fn max4(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => max4_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::max4(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::max4(a, b) },
+    }
+}
+
+/// `dst[i] += t * src[i]` — the backward pass's gradient accumulation
+/// primitive. Element-wise, hence trivially bit-identical across ISAs.
+#[inline]
+pub fn axpy(isa: Isa, dst: &mut [f32], src: &[f32], t: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    match isa {
+        Isa::Scalar => axpy_scalar(dst, src, t),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::axpy(dst, src, t) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::axpy(dst, src, t) },
+    }
+}
+
+/// `dst[i] = c + src[i]` — the sparse baseline's log-domain outer-sum
+/// row (broadcast the left child's entry over the right child's vector).
+#[inline]
+pub fn add_scalar(isa: Isa, dst: &mut [f32], src: &[f32], c: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    match isa {
+        Isa::Scalar => add_scalar_scalar(dst, src, c),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::add_scalar(dst, src, c) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::add_scalar(dst, src, c) },
+    }
+}
+
+/// `m[i] = max(m[i], src[i])` — the mixing layer's running-max pass over
+/// a contiguous child block (`f32::max` NaN semantics).
+#[inline]
+pub fn vmax_inplace(isa: Isa, m: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(m.len(), src.len());
+    match isa {
+        Isa::Scalar => vmax_scalar(m, src),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::vmax(m, src) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::vmax(m, src) },
+    }
+}
+
+/// `m[i] = max(m[i], src[i] + shift)` — the sparse mixing layer's
+/// running-max pass (shift = the child's log-weight).
+#[inline]
+pub fn vmax_shift_inplace(isa: Isa, m: &mut [f32], src: &[f32], shift: f32) {
+    debug_assert_eq!(m.len(), src.len());
+    match isa {
+        Isa::Scalar => vmax_shift_scalar(m, src, shift),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::vmax_shift(m, src, shift) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::vmax_shift(m, src, shift) },
+    }
+}
+
+/// `max_i (w[i] + p[i])` — the sparse einsum's log-sum-exp pivot (and,
+/// under the max semiring, its entire reduction). Max is exact, so any
+/// evaluation order gives the same bits.
+#[inline]
+pub fn max_add(isa: Isa, w: &[f32], p: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), p.len());
+    match isa {
+        Isa::Scalar => max_add_scalar(w, p),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::max_add(w, p) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::max_add(w, p) },
+    }
+}
+
+/// Build the transposed product block for one batch block:
+/// `prod_t[(ii*k + jj) * bb + lane] = en_t[ii*bb + lane] * enp_t[jj*bb + lane]`
+/// — the outer product of the scaled child vectors, laid out `[K², bb]`
+/// so [`einsum_block`] reads contiguous batch lanes per `ij` term.
+/// Element-wise multiplies only: the values are identical to the
+/// row-major layout the per-row path used, just transposed.
+pub fn outer_block(isa: Isa, en_t: &[f32], enp_t: &[f32], k: usize, bb: usize, prod_t: &mut [f32]) {
+    debug_assert!(en_t.len() >= k * bb && enp_t.len() >= k * bb);
+    debug_assert!(prod_t.len() >= k * k * bb);
+    match isa {
+        Isa::Scalar => outer_block_scalar(en_t, enp_t, k, bb, prod_t),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            for ii in 0..k {
+                let erow = &en_t[ii * bb..ii * bb + bb];
+                for jj in 0..k {
+                    let prow = &mut prod_t[(ii * k + jj) * bb..(ii * k + jj) * bb + bb];
+                    unsafe { avx2::mul_into(prow, erow, &enp_t[jj * bb..jj * bb + bb]) };
+                }
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            for ii in 0..k {
+                let erow = &en_t[ii * bb..ii * bb + bb];
+                for jj in 0..k {
+                    let prow = &mut prod_t[(ii * k + jj) * bb..(ii * k + jj) * bb + bb];
+                    unsafe { neon::mul_into(prow, erow, &enp_t[jj * bb..jj * bb + bb]) };
+                }
+            }
+        }
+    }
+}
+
+/// The blocked einsum contraction: `acc[kout * bb + lane]` receives the
+/// semiring reduction of weight row `kout` against batch column `lane` of
+/// the transposed `[k2, bb]` product block —
+///
+/// * [`Semiring::SumProduct`]: the 4-accumulator dot product (exact
+///   [`dot4`] order per lane);
+/// * [`Semiring::MaxProduct`]: the sequential lane-wise max (exact
+///   [`max4`] order per lane).
+///
+/// The caller adds back the per-row maxima and takes `ln` — exactly as
+/// the per-row path did — so swapping layouts never changes a bit.
+///
+/// The shape checks below are hard `assert!`s, not debug asserts: the
+/// SIMD paths write through raw pointers, so an undersized `acc` or
+/// `prod_t` from safe code must panic here rather than scribble out of
+/// bounds in release builds (one check per *block* call — noise next to
+/// the `Ko · K² · bb` multiply-adds it guards).
+#[allow(clippy::too_many_arguments)]
+pub fn einsum_block(
+    isa: Isa,
+    sr: Semiring,
+    w: &[f32],
+    prod_t: &[f32],
+    k2: usize,
+    ko: usize,
+    bb: usize,
+    acc: &mut [f32],
+) {
+    assert!(w.len() >= ko * k2, "einsum_block: weight slot undersized");
+    assert!(prod_t.len() >= k2 * bb, "einsum_block: product block undersized");
+    assert!(acc.len() >= ko * bb, "einsum_block: accumulator undersized");
+    match isa {
+        Isa::Scalar => einsum_block_scalar(sr, w, prod_t, k2, ko, bb, acc),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::einsum_block(sr, w, prod_t, k2, ko, bb, acc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::einsum_block(sr, w, prod_t, k2, ko, bb, acc) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The comprehensive bit-identity suites (scalar vs SIMD across every
+    // K/block shape, blocked vs per-row dot4/max4 equivalence, helper
+    // kernels on randomized operands) live in tests/kernel_identity.rs —
+    // the one source of truth, run in release mode by CI — plus the
+    // randomized-operand check in tests/engine_parity.rs. Here: only the
+    // module-local behaviours (dispatch, block sizing, NaN semantics).
+    use super::*;
+
+    #[test]
+    fn max_kernels_ignore_nan_like_f32_max() {
+        // -inf log-activations can surface NaN products; SIMD max paths
+        // must keep f32::max semantics (skip the NaN operand)
+        let isa = Isa::best();
+        let n = 19;
+        let mut a = vec![1.0f32; n];
+        let b = vec![1.0f32; n];
+        a[3] = f32::NAN;
+        a[17] = f32::NAN;
+        let s = max4(Isa::Scalar, &a, &b);
+        let v = max4(isa, &a, &b);
+        assert_eq!(s.to_bits(), v.to_bits());
+        assert_eq!(s, 1.0);
+        let mut m1 = vec![0.5f32; n];
+        let mut m2 = m1.clone();
+        vmax_inplace(Isa::Scalar, &mut m1, &a);
+        vmax_inplace(isa, &mut m2, &a);
+        assert_eq!(m1, m2);
+        assert_eq!(m1[3], 0.5);
+    }
+
+    #[test]
+    fn detect_honors_force_scalar() {
+        force_scalar(true);
+        assert_eq!(Isa::detect(), Isa::Scalar);
+        force_scalar(false);
+        // whatever best() is, detect() must agree when unforced and the
+        // env override is absent
+        if std::env::var("EINET_KERNELS").is_err() {
+            assert_eq!(Isa::detect(), Isa::best());
+        }
+    }
+
+    #[test]
+    fn block_rows_is_clamped() {
+        assert_eq!(block_rows(0), 1);
+        assert_eq!(block_rows(1), 1);
+        assert_eq!(block_rows(8), 8);
+        assert_eq!(block_rows(16), 16);
+        assert_eq!(block_rows(256), 16);
+    }
+}

@@ -26,10 +26,17 @@
 //!
 //! The two engines produce identical numbers (cross-checked in tests and
 //! in `tests/engine_parity.rs`), differing only in layout, speed, and
-//! memory — exactly the dimensions Fig. 3 / Fig. 6 measure.
+//! memory — exactly the dimensions Fig. 3 / Fig. 6 measure. Both route
+//! their innermost reductions through the batch-blocked, semiring-generic
+//! SIMD kernels of [`kernels`] (AVX2 / NEON behind runtime detection,
+//! with a bit-identical portable fallback), selected once at plan
+//! lowering and recorded in the [`exec::ExecPlan`].
+
+#![warn(missing_docs)]
 
 pub mod dense;
 pub mod exec;
+pub mod kernels;
 pub mod query;
 pub mod registry;
 pub mod sparse;
@@ -59,12 +66,17 @@ use crate::anyhow;
 ///                                children; 0 on padding), when present
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamLayout {
+    /// number of observed variables D
     pub num_vars: usize,
+    /// vector width K of every region
     pub k: usize,
+    /// number of leaf replica R
     pub num_replica: usize,
+    /// the leaf distribution family (determines the theta span's S)
     pub family: LeafFamily,
     /// scalar count of the theta span (which starts at offset 0)
     pub theta_len: usize,
+    /// per-level weight spans, in arena order
     pub levels: Vec<LevelLayout>,
     /// total scalar count of the arena
     pub total: usize,
@@ -79,7 +91,9 @@ pub struct LevelLayout {
     pub ko: usize,
     /// offset of the [L, Ko, K, K] einsum-weight span
     pub w_off: usize,
+    /// scalar count of the einsum-weight span
     pub w_len: usize,
+    /// the level's mixing-weight span, when it has a mixing layer
     pub mix: Option<MixLayout>,
 }
 
@@ -88,7 +102,9 @@ pub struct LevelLayout {
 pub struct MixLayout {
     /// offset of the [M, cmax] span
     pub off: usize,
+    /// scalar count of the span (`child_counts.len() * cmax`)
     pub len: usize,
+    /// padded row width (widest fan-in on the level)
     pub cmax: usize,
     /// real child count per row (the rest of each row is zero padding)
     pub child_counts: Vec<usize>,
@@ -98,7 +114,9 @@ pub struct MixLayout {
 /// [`LayeredPlan`] is at hand (checkpoint load, AOT artifact metadata).
 #[derive(Clone, Debug)]
 pub struct LevelSpec {
+    /// number of einsum slots on the level
     pub slots: usize,
+    /// per-slot output width
     pub ko: usize,
     /// (cmax, per-row real child counts)
     pub mix: Option<(usize, Vec<usize>)>,
@@ -260,6 +278,7 @@ enum ParamRepr {
 }
 
 impl ParamData {
+    /// Wrap an owned buffer.
     pub fn owned(v: Vec<f32>) -> Self {
         Self(ParamRepr::Owned(v))
     }
@@ -359,6 +378,7 @@ impl PartialEq for ParamData {
 /// All trainable parameters of an EiNet in one contiguous arena.
 #[derive(Clone, Debug)]
 pub struct ParamArena {
+    /// the typed offset table describing `data`
     pub layout: ParamLayout,
     /// the contiguous scalar store, `layout.total` long
     pub data: ParamData,
@@ -422,6 +442,7 @@ impl ParamArena {
         arena
     }
 
+    /// The leaf distribution family the arena was initialized for.
     pub fn family(&self) -> LeafFamily {
         self.layout.family
     }
@@ -431,6 +452,7 @@ impl ParamArena {
         &self.data[..self.layout.theta_len]
     }
 
+    /// Mutable view of the leaf-parameter span.
     pub fn theta_mut(&mut self) -> &mut [f32] {
         &mut self.data[..self.layout.theta_len]
     }
@@ -441,6 +463,7 @@ impl ParamArena {
         &self.data[lv.w_off..lv.w_off + lv.w_len]
     }
 
+    /// Mutable view of level `i`'s einsum-weight span.
     pub fn w_mut(&mut self, i: usize) -> &mut [f32] {
         let (off, len) = {
             let lv = &self.layout.levels[i];
@@ -457,6 +480,7 @@ impl ParamArena {
             .map(|m| &self.data[m.off..m.off + m.len])
     }
 
+    /// Mutable view of level `i`'s mixing-weight span, if mixing exists.
     pub fn mix_mut(&mut self, i: usize) -> Option<&mut [f32]> {
         let (off, len) = match &self.layout.levels[i].mix {
             Some(m) => (m.off, m.len),
@@ -809,6 +833,7 @@ impl ArenaShard {
 /// theta's). `sum_p` is the posterior-mass accumulator [D, K, R].
 #[derive(Clone, Debug)]
 pub struct EmStats {
+    /// the arena layout `grad` mirrors
     pub layout: ParamLayout,
     /// flat gradient/statistics buffer, `layout.total` long
     pub grad: Vec<f32>,
@@ -821,6 +846,7 @@ pub struct EmStats {
 }
 
 impl EmStats {
+    /// A zeroed accumulator for a layout.
     pub fn zeros(layout: &ParamLayout) -> Self {
         Self {
             grad: vec![0.0; layout.total],
@@ -831,10 +857,12 @@ impl EmStats {
         }
     }
 
+    /// A zeroed accumulator matching an arena's layout.
     pub fn zeros_like(params: &ParamArena) -> Self {
         Self::zeros(&params.layout)
     }
 
+    /// Zero every accumulator (for reuse across batches).
     pub fn reset(&mut self) {
         self.grad.fill(0.0);
         self.sum_p.fill(0.0);
@@ -861,6 +889,7 @@ impl EmStats {
         &self.grad[..self.layout.theta_len]
     }
 
+    /// Mutable view of the `sum_pt` (theta) span.
     pub fn sum_pt_mut(&mut self) -> &mut [f32] {
         &mut self.grad[..self.layout.theta_len]
     }
@@ -871,6 +900,7 @@ impl EmStats {
         &self.grad[lv.w_off..lv.w_off + lv.w_len]
     }
 
+    /// Mutable view of level `i`'s einsum-weight gradient span.
     pub fn grad_w_mut(&mut self, i: usize) -> &mut [f32] {
         let (off, len) = {
             let lv = &self.layout.levels[i];
@@ -887,6 +917,7 @@ impl EmStats {
             .map(|m| &self.grad[m.off..m.off + m.len])
     }
 
+    /// Mutable view of level `i`'s mixing-weight gradient span.
     pub fn grad_mix_mut(&mut self, i: usize) -> Option<&mut [f32]> {
         let (off, len) = match &self.layout.levels[i].mix {
             Some(m) => (m.off, m.len),
@@ -1036,10 +1067,14 @@ pub trait Engine {
     /// The activation arena (plumbing for the default boundary-exchange
     /// helpers; offsets come from `exec_plan().region_off`).
     fn arena(&self) -> &[f32];
+
+    /// Mutable view of the activation arena (boundary-row imports).
     fn arena_mut(&mut self) -> &mut [f32];
 
     /// The gradient mirror of the arena (empty until `clear_grad`).
     fn grad_buf(&self) -> &[f32];
+
+    /// Mutable view of the gradient mirror (boundary-gradient imports).
     fn grad_buf_mut(&mut self) -> &mut [f32];
 
     /// Append region `rid`'s `[bn, width]` activation rows to `out`.

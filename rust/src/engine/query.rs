@@ -72,6 +72,7 @@ pub enum Query {
 pub struct QueryPass {
     /// canonical per-variable mask (0.0 = marginalized/maximized out)
     pub mask: Vec<f32>,
+    /// the semiring this pass evaluates the step program under
     pub semiring: Semiring,
 }
 

@@ -34,8 +34,11 @@ pub fn boxed_build<E: Engine + Send + 'static>(
 /// One registered backend.
 #[derive(Clone)]
 pub struct EngineEntry {
+    /// the unique name the CLI/server select the backend by
     pub name: &'static str,
+    /// one-line description (shown by `einet engines`)
     pub description: &'static str,
+    /// the boxed-engine constructor
     pub factory: EngineFactory,
 }
 
@@ -81,6 +84,7 @@ impl EngineRegistry {
         Ok(())
     }
 
+    /// Look a backend up by name.
     pub fn get(&self, name: &str) -> Option<&EngineEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
@@ -106,10 +110,12 @@ impl EngineRegistry {
         Ok((self.factory(name)?)(plan, family, batch_cap))
     }
 
+    /// The registered backend names, in registration order.
     pub fn names(&self) -> Vec<&'static str> {
         self.entries.iter().map(|e| e.name).collect()
     }
 
+    /// Every registered backend, in registration order.
     pub fn entries(&self) -> &[EngineEntry] {
         &self.entries
     }

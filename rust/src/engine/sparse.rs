@@ -15,7 +15,11 @@
 //! `tests/engine_parity.rs`); they differ exactly in the layout/speed/
 //! memory dimensions that Fig. 3 and Fig. 6 measure. Because both engines
 //! execute the same [`ExecPlan`] and leave identical activations, the
-//! shared top-down decode works here too.
+//! shared top-down decode works here too. The element-wise parts of the
+//! baseline (outer-sum rows, running-max pivots) dispatch through
+//! [`super::kernels`] like the dense engine's do — bit-identically — but
+//! the `K^3` exp-operations that define the baseline stay scalar, so the
+//! dense-vs-sparse comparison keeps measuring what the paper measures.
 
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
@@ -23,6 +27,7 @@ use crate::util::rng::Rng;
 use crate::util::MemFootprint;
 
 use super::exec::{self, ExecPlan, Semiring, Step};
+use super::kernels;
 use super::{DecodeMode, EmStats, Engine, ParamArena};
 
 /// Node-by-node baseline engine over the same [`ExecPlan`].
@@ -40,11 +45,14 @@ pub struct SparseEngine {
     grad_scratch: Vec<f32>,
     grad_prod: Vec<f32>,
     leaf_const: Vec<f32>,
+    /// mixing-layer running-max scratch ([B, Ko])
+    t_mix: Vec<f32>,
     /// reusable state of the batched SamplePlan executor
     samp: exec::SampleScratch,
 }
 
 impl SparseEngine {
+    /// Lower the plan and size every buffer for `batch_cap` rows.
     pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
         let exec = ExecPlan::lower(plan, family, batch_cap);
         let k = exec.k;
@@ -67,19 +75,23 @@ impl SparseEngine {
             // sized eagerly, matching DenseEngine, so the footprint
             // accounting (which counts it on both layouts) is stable
             leaf_const: vec![0.0; exec.n_leaf_components()],
+            t_mix: vec![0.0; batch_cap * k],
             samp: exec::SampleScratch::new(&exec),
             exec,
         }
     }
 
+    /// The compiled plan this engine executes.
     pub fn plan(&self) -> &LayeredPlan {
         &self.exec.plan
     }
 
+    /// The leaf distribution family the engine evaluates.
     pub fn family(&self) -> LeafFamily {
         self.exec.family
     }
 
+    /// Maximum batch rows per pass.
     pub fn batch_capacity(&self) -> usize {
         self.exec.batch_cap
     }
@@ -95,7 +107,10 @@ impl SparseEngine {
         MemFootprint {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
-            scratch: 4 * (self.prod_arena.len() + self.scratch.len() + self.leaf_const.len())
+            scratch: 4 * (self.prod_arena.len()
+                + self.scratch.len()
+                + self.leaf_const.len()
+                + self.t_mix.len())
                 + logw_bytes
                 + self.samp.bytes(),
         }
@@ -242,7 +257,12 @@ impl SparseEngine {
 
     /// One einsum slot, baseline style: 1) explicitly materialize the
     /// log-domain outer sum (the baseline's hallmark), 2) broadcast
-    /// `log W` and reduce with a K^2 log-sum-exp per output entry.
+    /// `log W` and reduce with a K^2 log-sum-exp per output entry. The
+    /// outer-sum rows and the running-max pivot run through the
+    /// [`kernels`] dispatchers (element-wise adds and an exact max, so
+    /// results are unchanged to the bit); the K^3 exp-operations — the
+    /// baseline's defining cost — remain scalar, as there is nothing
+    /// sound to vectorize them with.
     #[allow(clippy::too_many_arguments)]
     fn fwd_einsum(
         &mut self,
@@ -258,6 +278,7 @@ impl SparseEngine {
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
+        let isa = self.exec.simd;
         let poff = self.prod_off[pid];
         for b in 0..bn {
             let lrow = left + b * k;
@@ -265,10 +286,12 @@ impl SparseEngine {
             let prow = poff + b * kk2;
             for ii in 0..k {
                 let ln_i = self.arena[lrow + ii];
-                for jj in 0..k {
-                    self.prod_arena[prow + ii * k + jj] =
-                        ln_i + self.arena[rrow + jj];
-                }
+                kernels::add_scalar(
+                    isa,
+                    &mut self.prod_arena[prow + ii * k..prow + (ii + 1) * k],
+                    &self.arena[rrow..rrow + k],
+                    ln_i,
+                );
             }
         }
         let wl = w - self.exec.layout.theta_len;
@@ -279,10 +302,7 @@ impl SparseEngine {
                     &self.log_params[wl + kout * kk2..wl + (kout + 1) * kk2];
                 // running max over log W + prod: the max-product value,
                 // and the log-sum-exp pivot
-                let mut m = f32::NEG_INFINITY;
-                for (idx, &wv) in wrow.iter().enumerate() {
-                    m = m.max(wv + self.prod_arena[prow + idx]);
-                }
+                let m = kernels::max_add(isa, wrow, &self.prod_arena[prow..prow + kk2]);
                 let out = match sr {
                     Semiring::SumProduct => {
                         let mut s = 0.0f32;
@@ -305,6 +325,9 @@ impl SparseEngine {
 
     /// Mixing node, baseline style: log-domain weighted log-sum-exp (or
     /// plain max, under the max semiring) over the stored child outputs.
+    /// Pass 1 is a vectorized running max over the contiguous child
+    /// blocks shifted by their log-weights ([`kernels::vmax_shift_inplace`],
+    /// exact); pass 2 keeps the original per-element exp-sum order.
     #[allow(clippy::too_many_arguments)]
     fn fwd_mix(
         &mut self,
@@ -317,31 +340,35 @@ impl SparseEngine {
         bn: usize,
         sr: Semiring,
     ) {
+        let isa = self.exec.simd;
         let wl = w - self.exec.layout.theta_len;
-        for b in 0..bn {
-            for kk in 0..ko {
-                let mut m = f32::NEG_INFINITY;
-                for c in 0..children {
-                    m = m.max(
-                        self.log_params[wl + c]
-                            + self.scratch[child + c * stride + b * ko + kk],
-                    );
-                }
-                let v = match sr {
-                    Semiring::SumProduct => {
-                        let mut s = 0.0f32;
-                        for c in 0..children {
-                            s += (self.log_params[wl + c]
-                                + self.scratch[child + c * stride + b * ko + kk]
-                                - m)
-                                .exp();
-                        }
-                        m + s.ln()
+        let n = bn * ko;
+        let m = &mut self.t_mix[..n];
+        m.fill(f32::NEG_INFINITY);
+        for c in 0..children {
+            kernels::vmax_shift_inplace(
+                isa,
+                m,
+                &self.scratch[child + c * stride..child + c * stride + n],
+                self.log_params[wl + c],
+            );
+        }
+        for i in 0..n {
+            let mi = m[i];
+            let v = match sr {
+                Semiring::SumProduct => {
+                    let mut s = 0.0f32;
+                    for c in 0..children {
+                        s += (self.log_params[wl + c]
+                            + self.scratch[child + c * stride + i]
+                            - mi)
+                            .exp();
                     }
-                    Semiring::MaxProduct => m,
-                };
-                self.arena[out + b * ko + kk] = v;
-            }
+                    mi + s.ln()
+                }
+                Semiring::MaxProduct => mi,
+            };
+            self.arena[out + i] = v;
         }
     }
 

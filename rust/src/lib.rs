@@ -21,6 +21,11 @@
 //!   coordinator with persistent workers, datasets, clustering, and the
 //!   benchmark harness reproducing every table and figure of the paper.
 //!
+//! The innermost einsum reductions run through the batch-blocked,
+//! semiring-generic SIMD kernels of [`engine::kernels`] (AVX2 / NEON
+//! behind runtime detection, with a bit-identical portable fallback), so
+//! likelihood, EM, *and* max-product MPE serving share one fast path.
+//!
 //! Training, mixtures, inference, and serving are all generic over
 //! `E: Engine`, so backends share one code path and new ones (e.g. a
 //! PJRT-executed engine) plug in without touching call sites; the
@@ -31,7 +36,58 @@
 //! serves, and samples across segment workers that each hold only their
 //! [`engine::ArenaShard`] of the parameters.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+//! See `docs/ARCHITECTURE.md` for a guided tour of the compile pipeline
+//! and `docs/BENCHMARKS.md` for what every `BENCH_*.json` artifact means.
+//!
+//! # Quickstart
+//!
+//! Build a RAT structure, train a few EM steps, and answer an exact
+//! marginal query through the compiled [`Query`] API:
+//!
+//! ```
+//! use einet::em::{m_step, EmConfig};
+//! use einet::structure::random_binary_trees;
+//! use einet::util::rng::Rng;
+//! use einet::{
+//!     DenseEngine, EinetParams, EmStats, Engine, LayeredPlan, LeafFamily,
+//!     Query, QueryOutput,
+//! };
+//!
+//! // structure: a small RAT region graph (8 binary variables), K = 4
+//! let plan = LayeredPlan::compile(random_binary_trees(8, 2, 2, 0), 4);
+//! let family = LeafFamily::Bernoulli;
+//! let mut params = EinetParams::init(&plan, family, 0);
+//!
+//! // a toy batch and a few stochastic EM steps
+//! let (bn, nv) = (32usize, 8usize);
+//! let mut rng = Rng::new(1);
+//! let x: Vec<f32> = (0..bn * nv)
+//!     .map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 })
+//!     .collect();
+//! let mask = vec![1.0f32; nv];
+//! let mut engine = DenseEngine::new(plan.clone(), family, bn);
+//! let mut logp = vec![0.0f32; bn];
+//! let mut last_ll = f64::NEG_INFINITY;
+//! for _ in 0..3 {
+//!     engine.forward(&params, &x, &mask, &mut logp);
+//!     let mut stats = EmStats::zeros_like(&params);
+//!     engine.backward(&params, &x, &mask, bn, &mut stats);
+//!     last_ll = stats.loglik;
+//!     m_step(&mut params, &stats, &EmConfig::default());
+//! }
+//! assert!(last_ll.is_finite());
+//!
+//! // exact inference: marginalize out the second half of the variables
+//! let mut mmask = vec![1.0f32; nv];
+//! for m in mmask.iter_mut().skip(nv / 2) {
+//!     *m = 0.0;
+//! }
+//! let qp = Query::Marginal { mask: mmask }.compile(nv).unwrap();
+//! let mut out = QueryOutput::default();
+//! engine.execute(&params, &qp, &x, bn, &mut rng, &mut out);
+//! assert_eq!(out.scores.len(), bn);
+//! assert!(out.scores.iter().all(|s| s.is_finite() && *s <= 1e-4));
+//! ```
 
 pub mod bench;
 pub mod clustering;

@@ -177,6 +177,97 @@ fn marginals_are_consistent_across_engines_and_masks() {
 }
 
 #[test]
+fn kernel_paths_agree_on_randomized_operands() {
+    // proptest-style randomized-operand check: across random shapes
+    // (k, ko, block width) and random log-domain operands — including
+    // the 0-probability (-inf) edge — the scalar and SIMD einsum kernels
+    // must agree bit-for-bit, and the blocked layout must reproduce the
+    // per-row dot4/max4 reduction exactly. 120 random cases per run,
+    // deterministic seeds so failures replay.
+    use einet::engine::exec::Semiring;
+    use einet::engine::kernels::{self, Isa};
+    let isa = Isa::best();
+    for case in 0..120u64 {
+        let mut rng = Rng::new(0xC0FFEE + case);
+        let k = 1 + rng.below(12);
+        let ko = 1 + rng.below(k);
+        let bb = 1 + rng.below(24);
+        let k2 = k * k;
+        let mut w: Vec<f32> = (0..ko * k2)
+            .map(|_| rng.uniform_in(0.0, 1.0) as f32)
+            .collect();
+        if !w.is_empty() {
+            let zi = rng.below(w.len());
+            w[zi] = 0.0; // exact-zero weights occur after EM steps
+        }
+        // children in log-domain, occasionally -inf (zero probability)
+        let mut logn: Vec<f32> = (0..k * bb)
+            .map(|_| rng.uniform_in(-40.0, 0.0) as f32)
+            .collect();
+        let lognp: Vec<f32> = (0..k * bb)
+            .map(|_| rng.uniform_in(-40.0, 0.0) as f32)
+            .collect();
+        if rng.bernoulli(0.3) {
+            logn[rng.below(logn.len())] = f32::NEG_INFINITY;
+        }
+        // scale per-lane like the engines do (max-subtracted exps)
+        let mut en_t = vec![0.0f32; k * bb];
+        let mut enp_t = vec![0.0f32; k * bb];
+        for lane in 0..bb {
+            let mut a = f32::NEG_INFINITY;
+            let mut ap = f32::NEG_INFINITY;
+            for kk in 0..k {
+                a = a.max(logn[kk * bb + lane]);
+                ap = ap.max(lognp[kk * bb + lane]);
+            }
+            for kk in 0..k {
+                en_t[kk * bb + lane] = (logn[kk * bb + lane] - a).exp();
+                enp_t[kk * bb + lane] = (lognp[kk * bb + lane] - ap).exp();
+            }
+        }
+        let mut pt_s = vec![0.0f32; k2 * bb];
+        let mut pt_v = vec![0.0f32; k2 * bb];
+        kernels::outer_block(Isa::Scalar, &en_t, &enp_t, k, bb, &mut pt_s);
+        kernels::outer_block(isa, &en_t, &enp_t, k, bb, &mut pt_v);
+        let as_bits = |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(as_bits(&pt_s), as_bits(&pt_v), "case {case}: outer_block");
+        for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+            let mut acc_s = vec![0.0f32; ko * bb];
+            let mut acc_v = vec![0.0f32; ko * bb];
+            kernels::einsum_block(Isa::Scalar, sr, &w, &pt_s, k2, ko, bb, &mut acc_s);
+            kernels::einsum_block(isa, sr, &w, &pt_s, k2, ko, bb, &mut acc_v);
+            assert_eq!(
+                as_bits(&acc_s),
+                as_bits(&acc_v),
+                "case {case} {sr:?}: scalar vs SIMD einsum_block"
+            );
+            // per-row reference: the pre-kernel engine reduction
+            for lane in 0..bb {
+                let mut prow = vec![0.0f32; k2];
+                for ii in 0..k {
+                    for jj in 0..k {
+                        prow[ii * k + jj] =
+                            en_t[ii * bb + lane] * enp_t[jj * bb + lane];
+                    }
+                }
+                for kout in 0..ko {
+                    let wrow = &w[kout * k2..(kout + 1) * k2];
+                    let want = match sr {
+                        Semiring::SumProduct => kernels::dot4(Isa::Scalar, wrow, &prow),
+                        Semiring::MaxProduct => kernels::max4(Isa::Scalar, wrow, &prow),
+                    };
+                    assert_eq!(
+                        want.to_bits(),
+                        acc_s[kout * bb + lane].to_bits(),
+                        "case {case} {sr:?} lane={lane} kout={kout}: blocked vs per-row"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn exec_plan_is_engine_shared() {
     // both engines lower the same plan to the same step program shape
     let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 3);

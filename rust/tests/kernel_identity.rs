@@ -1,0 +1,317 @@
+//! Scalar-vs-SIMD kernel bit-identity: the batch-blocked kernels of
+//! `engine::kernels` must produce *bit-identical* results on every ISA
+//! path, for both semirings, forward and backward — this is the contract
+//! that lets the engines adopt them without perturbing the parity /
+//! oracle / sharding test wall. Pinned here at two levels:
+//!
+//! * kernel level — `einsum_block` / `outer_block` and the helper
+//!   kernels on randomized operands, scalar vs the best detected ISA,
+//!   across every K the RAT/PD structures and the benches use;
+//! * engine level — a full forward (both semirings) and backward (EM
+//!   statistics) through `DenseEngine` and `SparseEngine` built with
+//!   forced-scalar kernels vs detected-SIMD kernels, compared via
+//!   `f32::to_bits` across structures, families, and masks.
+
+use einet::engine::exec::Semiring;
+use einet::engine::kernels::{self, Isa};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    DenseEngine, EinetParams, EmStats, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+// ---------------------------------------------------------------------------
+// kernel level
+// ---------------------------------------------------------------------------
+
+fn random_operands(
+    k: usize,
+    ko: usize,
+    bb: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let k2 = k * k;
+    let mut w: Vec<f32> = (0..ko * k2)
+        .map(|_| rng.uniform_in(0.005, 1.0) as f32)
+        .collect();
+    for block in w.chunks_mut(k2) {
+        let total: f32 = block.iter().sum();
+        for v in block.iter_mut() {
+            *v /= total;
+        }
+    }
+    // scaled-exponential children in [0, 1], transposed [k, bb]
+    let en_t: Vec<f32> = (0..k * bb).map(|_| rng.uniform() as f32).collect();
+    let enp_t: Vec<f32> = (0..k * bb).map(|_| rng.uniform() as f32).collect();
+    (w, en_t, enp_t)
+}
+
+#[test]
+fn einsum_block_scalar_vs_simd_all_k() {
+    let isa = Isa::best();
+    // every K the RAT/PD suites and the benches use, plus odd sizes for
+    // the K² mod 4 tails, and batch blocks exercising the lane tails
+    for &k in &[1usize, 2, 3, 4, 5, 8, 10, 16, 32] {
+        for &bb in &[1usize, 4, 7, 8, 11, 16] {
+            let ko = k;
+            let k2 = k * k;
+            let (w, en_t, enp_t) = random_operands(k, ko, bb, 31 * k as u64 + bb as u64);
+            let mut pt_a = vec![0.0f32; k2 * bb];
+            let mut pt_b = vec![0.0f32; k2 * bb];
+            kernels::outer_block(Isa::Scalar, &en_t, &enp_t, k, bb, &mut pt_a);
+            kernels::outer_block(isa, &en_t, &enp_t, k, bb, &mut pt_b);
+            for (i, (a, b)) in pt_a.iter().zip(&pt_b).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "outer_block k={k} bb={bb} [{i}]"
+                );
+            }
+            for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+                let mut acc_a = vec![0.0f32; ko * bb];
+                let mut acc_b = vec![0.0f32; ko * bb];
+                kernels::einsum_block(Isa::Scalar, sr, &w, &pt_a, k2, ko, bb, &mut acc_a);
+                kernels::einsum_block(isa, sr, &w, &pt_a, k2, ko, bb, &mut acc_b);
+                for (i, (a, b)) in acc_a.iter().zip(&acc_b).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "einsum_block {sr:?} k={k} bb={bb} [{i}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_kernel_matches_per_row_reduction() {
+    // the blocked layout must reproduce the per-row dot4/max4 reduction
+    // (the pre-kernel engine path) bit-for-bit: same 4-accumulator order,
+    // only the operand addresses differ
+    for &k in &[2usize, 3, 4, 8, 10] {
+        let (bb, ko, k2) = (11usize, k, k * k);
+        let (w, en_t, enp_t) = random_operands(k, k, bb, 77 + k as u64);
+        let mut prod_t = vec![0.0f32; k2 * bb];
+        kernels::outer_block(Isa::Scalar, &en_t, &enp_t, k, bb, &mut prod_t);
+        for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+            let mut acc = vec![0.0f32; ko * bb];
+            kernels::einsum_block(Isa::best(), sr, &w, &prod_t, k2, ko, bb, &mut acc);
+            for b in 0..bb {
+                // row-major product for sample b, as the old path built it
+                let mut prow = vec![0.0f32; k2];
+                for ii in 0..k {
+                    for jj in 0..k {
+                        prow[ii * k + jj] = en_t[ii * bb + b] * enp_t[jj * bb + b];
+                    }
+                }
+                for kout in 0..ko {
+                    let wrow = &w[kout * k2..(kout + 1) * k2];
+                    let want = match sr {
+                        Semiring::SumProduct => kernels::dot4(Isa::Scalar, wrow, &prow),
+                        Semiring::MaxProduct => kernels::max4(Isa::Scalar, wrow, &prow),
+                    };
+                    assert_eq!(
+                        want.to_bits(),
+                        acc[kout * bb + b].to_bits(),
+                        "{sr:?} k={k} b={b} kout={kout}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn helper_kernels_bit_identical_with_edge_values() {
+    let isa = Isa::best();
+    let mut rng = Rng::new(9);
+    for trial in 0..40 {
+        let n = 1 + (rng.below(70));
+        let mut a: Vec<f32> = (0..n).map(|_| rng.uniform_in(-30.0, 2.0) as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.uniform_in(-30.0, 2.0) as f32).collect();
+        // sprinkle the log-domain edge values the engines actually hit
+        if n > 2 {
+            a[rng.below(n)] = f32::NEG_INFINITY;
+            a[rng.below(n)] = 0.0;
+        }
+        assert_eq!(
+            kernels::dot4(Isa::Scalar, &a, &b).to_bits(),
+            kernels::dot4(isa, &a, &b).to_bits(),
+            "dot4 trial {trial}"
+        );
+        assert_eq!(
+            kernels::max4(Isa::Scalar, &a, &b).to_bits(),
+            kernels::max4(isa, &a, &b).to_bits(),
+            "max4 trial {trial}"
+        );
+        assert_eq!(
+            kernels::max_add(Isa::Scalar, &a, &b).to_bits(),
+            kernels::max_add(isa, &a, &b).to_bits(),
+            "max_add trial {trial}"
+        );
+        let mut d1: Vec<f32> = (0..n).map(|_| rng.uniform() as f32).collect();
+        let mut d2 = d1.clone();
+        kernels::axpy(Isa::Scalar, &mut d1, &b, 0.713);
+        kernels::axpy(isa, &mut d2, &b, 0.713);
+        assert_eq!(bits(&d1), bits(&d2), "axpy trial {trial}");
+        kernels::add_scalar(Isa::Scalar, &mut d1, &b, -4.25);
+        kernels::add_scalar(isa, &mut d2, &b, -4.25);
+        assert_eq!(bits(&d1), bits(&d2), "add_scalar trial {trial}");
+        let mut m1 = vec![f32::NEG_INFINITY; n];
+        let mut m2 = m1.clone();
+        kernels::vmax_inplace(Isa::Scalar, &mut m1, &a);
+        kernels::vmax_inplace(isa, &mut m2, &a);
+        assert_eq!(bits(&m1), bits(&m2), "vmax trial {trial}");
+        kernels::vmax_shift_inplace(Isa::Scalar, &mut m1, &b, -0.5);
+        kernels::vmax_shift_inplace(isa, &mut m2, &b, -0.5);
+        assert_eq!(bits(&m1), bits(&m2), "vmax_shift trial {trial}");
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// engine level
+// ---------------------------------------------------------------------------
+
+/// `force_scalar` is process-global; serialize the engine-level tests so
+/// a concurrently built engine cannot blur which kernels each side used.
+static FORCE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+/// Forward under `sr` (+ backward EM statistics under sum-product),
+/// returned as raw bits.
+fn run_bits<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    cap: usize,
+    sr: Semiring,
+) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let mut e = E::build(plan.clone(), family, cap);
+    let mut logp = vec![0.0f32; bn];
+    e.forward_semiring(params, x, mask, &mut logp, sr);
+    let mut stats = EmStats::zeros_like(params);
+    if sr == Semiring::SumProduct {
+        e.backward(params, x, mask, bn, &mut stats);
+    }
+    (bits(&logp), bits(&stats.grad), bits(&stats.sum_p))
+}
+
+fn engine_case<E: Engine>(plan: &LayeredPlan, family: LeafFamily, seed: u64, label: &str) {
+    let nv = plan.graph.num_vars;
+    // bn == cap exercises whole blocks + lane tails (13 = 8 + 5); a
+    // second batch size crosses multiple 16-row blocks
+    for (bn, cap) in [(13usize, 13usize), (37, 37)] {
+        let mut rng = Rng::new(seed);
+        let params = EinetParams::init(plan, family, seed);
+        let x = random_batch(family, bn, nv, &mut rng);
+        let full = vec![1.0f32; nv];
+        let mut partial = full.clone();
+        partial[nv / 2] = 0.0;
+        partial[nv - 1] = 0.0;
+        for mask in [full, partial] {
+            for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+                kernels::force_scalar(true);
+                let scalar = run_bits::<E>(plan, family, &params, &x, &mask, bn, cap, sr);
+                kernels::force_scalar(false);
+                let simd = run_bits::<E>(plan, family, &params, &x, &mask, bn, cap, sr);
+                assert_eq!(
+                    scalar, simd,
+                    "{label} family={family:?} bn={bn} {sr:?}: scalar and SIMD engines diverge"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_engine_scalar_vs_simd_bit_identical() {
+    let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for (i, family) in [
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Categorical { cats: 4 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let rat = LayeredPlan::compile(random_binary_trees(10, 3, 3, i as u64), 4);
+        engine_case::<DenseEngine>(&rat, family, 100 + i as u64, "dense/rat");
+        let pd = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+        engine_case::<DenseEngine>(&pd, family, 200 + i as u64, "dense/pd");
+    }
+    // the bench-sized K values (8, 10) on smaller circuits
+    for k in [8usize, 10] {
+        let plan = LayeredPlan::compile(random_binary_trees(8, 2, 2, k as u64), k);
+        engine_case::<DenseEngine>(&plan, LeafFamily::Bernoulli, 300 + k as u64, "dense/k");
+    }
+}
+
+#[test]
+fn sparse_engine_scalar_vs_simd_bit_identical() {
+    let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let rat = LayeredPlan::compile(random_binary_trees(10, 3, 3, 0), 4);
+    engine_case::<SparseEngine>(&rat, LeafFamily::Bernoulli, 400, "sparse/rat");
+    let pd = LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3);
+    engine_case::<SparseEngine>(&pd, LeafFamily::Gaussian { channels: 1 }, 401, "sparse/pd");
+}
+
+#[test]
+fn dense_decode_after_simd_forward_matches_scalar() {
+    // the sampler reads forward activations: a Sample-mode batched decode
+    // seeded identically must emit identical rows whichever kernels
+    // produced the activations
+    let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let plan = LayeredPlan::compile(random_binary_trees(9, 2, 3, 5), 4);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 5);
+    let bn = 13;
+    let mut rng = Rng::new(3);
+    let x = random_batch(family, bn, 9, &mut rng);
+    let mask = [1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0f32];
+    let mut rows = Vec::new();
+    for scalar in [true, false] {
+        kernels::force_scalar(scalar);
+        let mut e = DenseEngine::new(plan.clone(), family, bn);
+        let mut logp = vec![0.0f32; bn];
+        e.forward(&params, &x, &mask, &mut logp);
+        let mut out = x.clone();
+        let mut drng = Rng::new(11);
+        e.decode_batch(&params, bn, &mask, einet::DecodeMode::Sample, &mut drng, &mut out);
+        rows.push(out);
+    }
+    kernels::force_scalar(false);
+    assert_eq!(rows[0], rows[1], "decode over scalar vs SIMD activations");
+}
