@@ -9,7 +9,7 @@
 //! crossover in exp-ops vs mul-adds lands on CPU.
 //!
 //! Part 2 (the systems sweep): the SAME dense einsum step at batch
-//! B = 256, three ways —
+//! B = 256, three layouts —
 //!   per-row scalar   : row-major product + per-row `dot4`/`max4`
 //!                      (the pre-kernel engine path: the weight slot is
 //!                      re-streamed once per batch row)
@@ -17,9 +17,20 @@
 //!                      4-lane-chunked `einsum_block`
 //!   blocked SIMD     : the same blocked kernel on the detected ISA
 //!                      (AVX2 / NEON)
-//! All three start from the same scaled-exponential children (the 2K exps
-//! and K logs per row are identical across layouts and included in every
-//! timing), and all three are asserted bit-identical before timing.
+//! — with `b_blk` autotuned per K ([`kernels::tune_block_rows`], the
+//! value the engines record in their `ExecPlan`). All three start from
+//! the same scaled-exponential children (the 2K exps and K logs per row
+//! are identical across layouts and included in every timing), and all
+//! three are asserted bit-identical before timing. The full step is then
+//! A/B'd across the two math tiers IN ONE PROCESS AND ONE RUN — `exact`
+//! (libm, the default) vs `fast` (the vectorized polynomial `vexp`/`vln`
+//! tier) — so every BENCH_kernels.json entry carries both tiers'
+//! `step_exact_*`/`step_fast_*` columns plus the speedup ratio.
+//!
+//! Part 3 (the transcendental split): per forward step kind — leaf
+//! normalizer/emission, einsum, mixing — the full step in both tiers
+//! next to a transcendental-free skeleton of the same loop, giving the
+//! exp/ln *fraction* each step kind pays and what the fast tier buys it.
 //! Results go to stdout and BENCH_kernels.json (schema documented in
 //! docs/BENCHMARKS.md).
 //!
@@ -28,7 +39,7 @@
 
 use einet::bench::{fmt_si, time_it, Table};
 use einet::engine::exec::Semiring;
-use einet::engine::kernels::{self, Isa};
+use einet::engine::kernels::{self, Isa, MathTier};
 use einet::util::json;
 use einet::util::rng::Rng;
 
@@ -140,12 +151,17 @@ fn step_per_row(
     }
 }
 
-/// The same step through the blocked kernels under `isa`: per block of
-/// `b_blk` rows build the transposed operands and run `outer_block` +
-/// `einsum_block`, then add the row maxima back.
+/// The same step through the blocked kernels under `isa` and `math` —
+/// exactly the engine's `fwd_einsum` shape: per block of `b_blk` rows
+/// stage the scaled-child *arguments* transposed, sweep them with
+/// [`kernels::vexp`], run `outer_block` + `einsum_block`, return to the
+/// log domain with [`kernels::vln`], and add the row maxima back. Under
+/// [`MathTier::Exact`] the sweeps replay libm per element, so the output
+/// is bit-identical to [`step_per_row`].
 #[allow(clippy::too_many_arguments)]
 fn step_blocked(
     isa: Isa,
+    math: MathTier,
     sr: Semiring,
     logn: &[f32],
     lognp: &[f32],
@@ -177,15 +193,18 @@ fn step_blocked(
             }
             base[j] = a + ap;
             for kk in 0..k {
-                en_t[kk * bb + j] = (lrow[kk] - a).exp();
-                enp_t[kk * bb + j] = (rrow[kk] - ap).exp();
+                en_t[kk * bb + j] = lrow[kk] - a;
+                enp_t[kk * bb + j] = rrow[kk] - ap;
             }
         }
+        kernels::vexp(isa, math, &mut en_t[..k * bb]);
+        kernels::vexp(isa, math, &mut enp_t[..k * bb]);
         kernels::outer_block(isa, en_t, enp_t, k, bb, prod_t);
         kernels::einsum_block(isa, sr, w, prod_t, k2, ko, bb, acc);
+        kernels::vln(isa, math, &mut acc[..ko * bb]);
         for j in 0..bb {
             for kout in 0..ko {
-                out[(b0 + j) * ko + kout] = base[j] + acc[kout * bb + j].ln();
+                out[(b0 + j) * ko + kout] = base[j] + acc[kout * bb + j];
             }
         }
         b0 += bb;
@@ -301,7 +320,8 @@ fn kernel_per_row(
 }
 
 /// Kernel-only, blocked layout: `outer_block` + `einsum_block` per
-/// 16-row block over block-transposed children (`[nblocks, k, b_blk]`).
+/// `b_blk`-row block over block-transposed children (block bases
+/// `b_blk`-strided, values packed at each block's actual width).
 #[allow(clippy::too_many_arguments)]
 fn kernel_blocked(
     isa: Isa,
@@ -350,24 +370,28 @@ fn sr_tag(sr: Semiring) -> &'static str {
 fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
     let isa = Isa::best();
     let batch = 256usize;
-    let b_blk = kernels::block_rows(batch);
     println!(
-        "Kernel sweep — per-row scalar vs blocked scalar vs blocked {} (B={batch}, b_blk={b_blk})",
+        "Kernel sweep — per-row scalar vs blocked scalar vs blocked {} \
+         (B={batch}, b_blk autotuned per K, exact vs fast tier A/B)",
         isa.name()
     );
     let mut table = Table::new(&[
         "K",
+        "b_blk",
         "semiring",
         "kernel/row",
         "kernel/blocked",
         "kernel/simd",
         "simd vs row",
-        "full step",
+        "step exact",
+        "step fast",
+        "fast vs exact",
     ]);
-    let ks: &[usize] = if quick { &[4, 8, 16] } else { &[2, 4, 8, 10, 16, 32] };
+    let ks: &[usize] = if quick { &[4, 8, 10, 16] } else { &[2, 4, 8, 10, 16, 32] };
     for &k in ks {
         let ko = k;
         let k2 = k * k;
+        let b_blk = kernels::tune_block_rows(k, batch, isa);
         let mut rng = Rng::new(7 + k as u64);
         let logn: Vec<f32> = (0..batch * k)
             .map(|_| rng.uniform_in(-8.0, 0.0) as f32)
@@ -402,13 +426,19 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                 enp_all[b * k + kk] = (rrow[kk] - ap).exp();
             }
         }
-        let mut en_t_all = vec![0.0f32; batch * k];
-        let mut enp_t_all = vec![0.0f32; batch * k];
+        // block bases are b_blk-strided, but *within* a block values are
+        // packed at that block's actual width (the tail block is narrower
+        // when b_blk does not divide the batch) — the layout
+        // `kernel_blocked` consumes
+        let nblocks = batch.div_ceil(b_blk);
+        let mut en_t_all = vec![0.0f32; nblocks * k * b_blk];
+        let mut enp_t_all = vec![0.0f32; nblocks * k * b_blk];
         for b in 0..batch {
             let (bi, j) = (b / b_blk, b % b_blk);
+            let bb = b_blk.min(batch - bi * b_blk);
             for kk in 0..k {
-                en_t_all[bi * k * b_blk + kk * b_blk + j] = en_all[b * k + kk];
-                enp_t_all[bi * k * b_blk + kk * b_blk + j] = enp_all[b * k + kk];
+                en_t_all[bi * k * b_blk + kk * bb + j] = en_all[b * k + kk];
+                enp_t_all[bi * k * b_blk + kk * bb + j] = enp_all[b * k + kk];
             }
         }
         let mut prod = vec![0.0f32; k2];
@@ -426,6 +456,11 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
             ("ko", json::num(ko as f64)),
             ("batch", json::num(batch as f64)),
             ("b_blk", json::num(b_blk as f64)),
+            ("isa", json::s(isa.name())),
+            (
+                "tiers",
+                json::arr(vec![json::s("exact"), json::s("fast")]),
+            ),
         ];
         for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
             // correctness first: all three contraction paths bit-identical
@@ -450,7 +485,8 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                     "blocked scalar vs SIMD diverge at K={k} {sr:?} [{i}]"
                 );
             }
-            // ... and so are the full steps (exp prep + contraction + ln)
+            // ... and so is the full Exact-tier step (exp prep +
+            // contraction + ln): the tier default must not move a bit
             let mut en_t = vec![0.0f32; k * b_blk];
             let mut enp_t = vec![0.0f32; k * b_blk];
             step_per_row(
@@ -458,7 +494,7 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                 &mut out_row,
             );
             step_blocked(
-                isa, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                isa, MathTier::Exact, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
                 &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_simd,
             );
             for i in 0..batch * ko {
@@ -466,6 +502,20 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                     out_row[i].to_bits(),
                     out_simd[i].to_bits(),
                     "full step diverges at K={k} {sr:?} [{i}]"
+                );
+            }
+            // the Fast tier trades bits for speed: hold it to the
+            // engine-level drift bound instead
+            let mut out_fast = vec![0.0f32; batch * ko];
+            step_blocked(
+                isa, MathTier::Fast, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_fast,
+            );
+            for i in 0..batch * ko {
+                let (a, b) = (out_simd[i], out_fast[i]);
+                assert!(
+                    (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+                    "fast tier drifted at K={k} {sr:?} [{i}]: {a} vs {b}"
                 );
             }
             // kernel-only timings (the headline: the contraction itself)
@@ -514,10 +564,10 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                 2,
                 timing_reps,
             );
-            let t_step_simd = time_it(
+            let t_step_exact = time_it(
                 || {
                     step_blocked(
-                        isa, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                        isa, MathTier::Exact, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
                         &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_simd,
                     );
                     std::hint::black_box(&out_simd);
@@ -525,26 +575,50 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                 2,
                 timing_reps,
             );
+            let t_step_fast = time_it(
+                || {
+                    step_blocked(
+                        isa, MathTier::Fast, sr, &logn, &lognp, &w, k, ko, batch, b_blk,
+                        &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base, &mut out_fast,
+                    );
+                    std::hint::black_box(&out_fast);
+                },
+                2,
+                timing_reps,
+            );
             let simd_vs_row = t_row.median_s / t_simd.median_s;
-            let step_ratio = t_step_row.median_s / t_step_simd.median_s;
+            let step_ratio = t_step_row.median_s / t_step_exact.median_s;
+            let fast_vs_exact = t_step_exact.median_s / t_step_fast.median_s;
+            let fast_vs_row = t_step_row.median_s / t_step_fast.median_s;
+            // share of the Exact full step spent OUTSIDE the contraction
+            // kernel: the exp/ln sweeps plus arg staging and write-back
+            let transc_frac =
+                ((t_step_exact.median_s - t_simd.median_s) / t_step_exact.median_s).max(0.0);
             let tag = sr_tag(sr);
             table.row(vec![
                 format!("{k}"),
+                format!("{b_blk}"),
                 tag.into(),
                 fmt_si(t_row.median_s),
                 fmt_si(t_blk.median_s),
                 fmt_si(t_simd.median_s),
                 format!("{simd_vs_row:.2}x"),
-                format!("{step_ratio:.2}x"),
+                fmt_si(t_step_exact.median_s),
+                fmt_si(t_step_fast.median_s),
+                format!("{fast_vs_exact:.2}x"),
             ]);
             println!(
-                "K={k:<3} {tag}: kernel row {} blocked {} {} {} ({simd_vs_row:.2}x); full step {} -> {} ({step_ratio:.2}x)",
+                "K={k:<3} {tag}: kernel row {} blocked {} {} {} ({simd_vs_row:.2}x); \
+                 step row {} -> exact {} ({step_ratio:.2}x) -> fast {} \
+                 ({fast_vs_exact:.2}x over exact, {fast_vs_row:.2}x over row, \
+                 transc frac {transc_frac:.2})",
                 fmt_si(t_row.median_s),
                 fmt_si(t_blk.median_s),
                 isa.name(),
                 fmt_si(t_simd.median_s),
                 fmt_si(t_step_row.median_s),
-                fmt_si(t_step_simd.median_s),
+                fmt_si(t_step_exact.median_s),
+                fmt_si(t_step_fast.median_s),
             );
             let key = |name: &'static str, alt: &'static str| -> &'static str {
                 match sr {
@@ -567,12 +641,28 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
                 json::num(t_step_row.median_s),
             ));
             row.push((
-                key("step_simd_sum_s", "step_simd_max_s"),
-                json::num(t_step_simd.median_s),
+                key("step_exact_sum_s", "step_exact_max_s"),
+                json::num(t_step_exact.median_s),
             ));
             row.push((
-                key("step_simd_vs_row_sum", "step_simd_vs_row_max"),
+                key("step_fast_sum_s", "step_fast_max_s"),
+                json::num(t_step_fast.median_s),
+            ));
+            row.push((
+                key("step_exact_vs_row_sum", "step_exact_vs_row_max"),
                 json::num(step_ratio),
+            ));
+            row.push((
+                key("step_fast_vs_exact_sum", "step_fast_vs_exact_max"),
+                json::num(fast_vs_exact),
+            ));
+            row.push((
+                key("step_fast_vs_row_sum", "step_fast_vs_row_max"),
+                json::num(fast_vs_row),
+            ));
+            row.push((
+                key("transc_frac_sum", "transc_frac_max"),
+                json::num(transc_frac),
             ));
         }
         report_rows.push(json::obj(row));
@@ -580,19 +670,233 @@ fn part2_kernel_sweep(quick: bool, report_rows: &mut Vec<json::Json>) {
     println!("\n{}", table.render());
 }
 
+/// Part 3: the transcendental split. For each forward step *kind* —
+/// leaf log-normalizer, einsum, mixing — time the full step in both
+/// math tiers next to a transcendental-free *skeleton* of the same loop
+/// (identical staging, memory traffic, and reductions; only the exp/ln
+/// sweeps elided). `transc frac` = (exact − skeleton) / exact is the
+/// share of the step the transcendentals cost, the ceiling on what any
+/// fast-math tier can recover.
+fn part3_transcendental_split(quick: bool, report_rows: &mut Vec<json::Json>) {
+    let isa = Isa::best();
+    let batch = 256usize;
+    let k = 10usize;
+    let ko = k;
+    let k2 = k * k;
+    let timing_reps = if quick { 5 } else { 9 };
+    println!(
+        "\nTranscendental split — full step vs exp/ln-free skeleton per step kind \
+         (K={k}, B={batch}, {})",
+        isa.name()
+    );
+    let mut table = Table::new(&[
+        "step kind", "exact", "fast", "skeleton", "transc frac", "fast vs exact",
+    ]);
+    let mut rng = Rng::new(99);
+    let mut record = |kind: &'static str, exact_s: f64, fast_s: f64, skel_s: f64| {
+        let frac = ((exact_s - skel_s) / exact_s).max(0.0);
+        let ratio = exact_s / fast_s;
+        table.row(vec![
+            kind.into(),
+            fmt_si(exact_s),
+            fmt_si(fast_s),
+            fmt_si(skel_s),
+            format!("{frac:.2}"),
+            format!("{ratio:.2}x"),
+        ]);
+        report_rows.push(json::obj(vec![
+            ("kind", json::s(kind)),
+            ("k", json::num(k as f64)),
+            ("batch", json::num(batch as f64)),
+            ("step_exact_s", json::num(exact_s)),
+            ("step_fast_s", json::num(fast_s)),
+            ("step_skeleton_s", json::num(skel_s)),
+            ("transc_frac", json::num(frac)),
+            ("fast_vs_exact", json::num(ratio)),
+        ]));
+    };
+
+    // --- einsum: the blocked forward step (exp prep + contraction + ln)
+    let b_blk = kernels::tune_block_rows(k, batch, isa);
+    let logn: Vec<f32> = (0..batch * k).map(|_| rng.uniform_in(-8.0, 0.0) as f32).collect();
+    let lognp: Vec<f32> = (0..batch * k).map(|_| rng.uniform_in(-8.0, 0.0) as f32).collect();
+    let w: Vec<f32> = (0..ko * k2).map(|_| rng.uniform_in(0.01, 1.0) as f32).collect();
+    let mut en_t = vec![0.0f32; k * b_blk];
+    let mut enp_t = vec![0.0f32; k * b_blk];
+    let mut prod_t = vec![0.0f32; k2 * b_blk];
+    let mut acc = vec![0.0f32; ko * b_blk];
+    let mut base = vec![0.0f32; b_blk];
+    let mut out = vec![0.0f32; batch * ko];
+    let mut time_einsum = |math: Option<MathTier>| -> f64 {
+        time_it(
+            || {
+                match math {
+                    Some(m) => step_blocked(
+                        isa, m, Semiring::SumProduct, &logn, &lognp, &w, k, ko, batch,
+                        b_blk, &mut en_t, &mut enp_t, &mut prod_t, &mut acc, &mut base,
+                        &mut out,
+                    ),
+                    // skeleton: same staging and contraction, exp/ln elided
+                    None => {
+                        let mut b0 = 0usize;
+                        while b0 < batch {
+                            let bb = b_blk.min(batch - b0);
+                            for j in 0..bb {
+                                let b = b0 + j;
+                                let lrow = &logn[b * k..(b + 1) * k];
+                                let rrow = &lognp[b * k..(b + 1) * k];
+                                let mut a = f32::NEG_INFINITY;
+                                let mut ap = f32::NEG_INFINITY;
+                                for kk in 0..k {
+                                    a = a.max(lrow[kk]);
+                                    ap = ap.max(rrow[kk]);
+                                }
+                                base[j] = a + ap;
+                                for kk in 0..k {
+                                    en_t[kk * bb + j] = lrow[kk] - a;
+                                    enp_t[kk * bb + j] = rrow[kk] - ap;
+                                }
+                            }
+                            kernels::outer_block(isa, &en_t, &enp_t, k, bb, &mut prod_t);
+                            kernels::einsum_block(
+                                isa, Semiring::SumProduct, &w, &prod_t, k2, ko, bb, &mut acc,
+                            );
+                            for j in 0..bb {
+                                for kout in 0..ko {
+                                    out[(b0 + j) * ko + kout] = base[j] + acc[kout * bb + j];
+                                }
+                            }
+                            b0 += bb;
+                        }
+                    }
+                }
+                std::hint::black_box(&out);
+            },
+            2,
+            timing_reps,
+        )
+        .median_s
+    };
+    let einsum_exact = time_einsum(Some(MathTier::Exact));
+    let einsum_fast = time_einsum(Some(MathTier::Fast));
+    let einsum_skel = time_einsum(None);
+    record("einsum", einsum_exact, einsum_fast, einsum_skel);
+
+    // --- mix: the vectorized mixing layer (running max, C exp sweeps +
+    // weighted accumulate, ln finalize) over n = B·Ko values, C children
+    let c_children = 4usize;
+    let n = batch * ko;
+    let kids: Vec<Vec<f32>> = (0..c_children)
+        .map(|_| (0..n).map(|_| rng.uniform_in(-8.0, 0.0) as f32).collect())
+        .collect();
+    let wc: Vec<f32> = (0..c_children)
+        .map(|_| rng.uniform_in(0.05, 1.0) as f32)
+        .collect();
+    let mut m = vec![0.0f32; n];
+    let mut e = vec![0.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let mut time_mix = |math: Option<MathTier>| -> f64 {
+        time_it(
+            || {
+                m.copy_from_slice(&kids[0]);
+                for kid in &kids[1..] {
+                    kernels::vmax_inplace(isa, &mut m, kid);
+                }
+                dst.fill(0.0);
+                for (ci, kid) in kids.iter().enumerate() {
+                    for ((ev, &sv), &mv) in e.iter_mut().zip(kid).zip(m.iter()) {
+                        *ev = sv - mv;
+                    }
+                    if let Some(mt) = math {
+                        kernels::vexp(isa, mt, &mut e);
+                    }
+                    kernels::axpy(isa, &mut dst, &e, wc[ci]);
+                }
+                if let Some(mt) = math {
+                    kernels::vln(isa, mt, &mut dst);
+                }
+                for (dv, &mv) in dst.iter_mut().zip(m.iter()) {
+                    *dv += mv;
+                }
+                std::hint::black_box(&dst);
+            },
+            2,
+            timing_reps,
+        )
+        .median_s
+    };
+    let mix_exact = time_mix(Some(MathTier::Exact));
+    let mix_fast = time_mix(Some(MathTier::Fast));
+    let mix_skel = time_mix(None);
+    record("mix", mix_exact, mix_fast, mix_skel);
+
+    // --- leaf: the categorical log-normalizer loop (S exps + 1 ln per
+    // component, scalar calls — the shape of `log_norm_const_tier` /
+    // `emit_table_tier`) over D·K·R components
+    let s_cats = 10usize;
+    let n_comp = 256 * k; // D=256 vars, R=1
+    let theta: Vec<f32> = (0..n_comp * s_cats)
+        .map(|_| rng.uniform_in(-3.0, 3.0) as f32)
+        .collect();
+    let mut lnz = vec![0.0f32; n_comp];
+    let mut time_leaf = |math: Option<MathTier>| -> f64 {
+        time_it(
+            || {
+                for (ci, o) in lnz.iter_mut().enumerate() {
+                    let row = &theta[ci * s_cats..(ci + 1) * s_cats];
+                    let mut mx = f32::NEG_INFINITY;
+                    for &t in row {
+                        mx = mx.max(t);
+                    }
+                    match math {
+                        Some(mt) => {
+                            let mut z = 0.0f32;
+                            for &t in row {
+                                z += mt.exp1(t - mx);
+                            }
+                            *o = mx + mt.ln1(z);
+                        }
+                        None => {
+                            let mut z = 0.0f32;
+                            for &t in row {
+                                z += t - mx;
+                            }
+                            *o = mx + z;
+                        }
+                    }
+                }
+                std::hint::black_box(&lnz);
+            },
+            2,
+            timing_reps,
+        )
+        .median_s
+    };
+    let leaf_exact = time_leaf(Some(MathTier::Exact));
+    let leaf_fast = time_leaf(Some(MathTier::Fast));
+    let leaf_skel = time_leaf(None);
+    record("leaf", leaf_exact, leaf_fast, leaf_skel);
+
+    println!("\n{}", table.render());
+}
+
 fn main() {
     let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
     let mut op_rows: Vec<json::Json> = Vec::new();
     let mut kernel_rows: Vec<json::Json> = Vec::new();
+    let mut transc_rows: Vec<json::Json> = Vec::new();
     part1_dense_vs_sparse(quick, &mut op_rows);
     part2_kernel_sweep(quick, &mut kernel_rows);
+    part3_transcendental_split(quick, &mut transc_rows);
     let report = json::obj(vec![
         ("experiment", json::s("einsum_kernels")),
         ("quick", json::num(quick as i32 as f64)),
         ("isa", json::s(Isa::best().name())),
-        ("b_blk", json::num(kernels::block_rows(256) as f64)),
+        ("tier_default", json::s(MathTier::detect().name())),
+        ("b_blk_policy", json::s("autotuned per (K, ISA); see kernel_rows[].b_blk")),
         ("op_rows", json::arr(op_rows)),
         ("kernel_rows", json::arr(kernel_rows)),
+        ("transc_rows", json::arr(transc_rows)),
     ]);
     std::fs::write("BENCH_kernels.json", report.to_string())
         .expect("write BENCH_kernels.json");

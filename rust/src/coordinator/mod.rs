@@ -24,10 +24,12 @@
 //!   gradient rows backward, one `sel` u32 per region·sample when
 //!   sampling. The parameter server broadcasts each worker its
 //!   [`crate::engine::ArenaShard`] — the spans its segment reads — not
-//!   the whole arena, so a worker's resident parameter set (and its
-//!   broadcast traffic) scales with the shard. Because every EM statistic
-//!   scalar is owned by exactly one segment, N-shard training is
-//!   bit-identical to 1-shard training on the same seed.
+//!   the whole arena, and workers reply with the mirror-image
+//!   [`crate::engine::StatsShard`] — only their segment's statistic
+//!   spans — so traffic scales with the shard in both directions.
+//!   Because every EM statistic scalar is owned by exactly one segment,
+//!   N-shard training is bit-identical to 1-shard training on the same
+//!   seed.
 //!
 //! Worker threads are **persistent** in both pools: spawned once per
 //! run, fed jobs over channels, each owning a private engine. (The
@@ -45,8 +47,8 @@ use crate::em::{m_step, stats_from_natural_grads, EmConfig};
 use crate::engine::exec::{PlanPartition, Semiring};
 use crate::engine::registry::EngineFactory;
 use crate::engine::{
-    ArenaShard, DecodeMode, EinetParams, EmStats, Engine, LevelSpec, ParamArena,
-    ParamLayout,
+    sum_p_spans_for_vars, ArenaShard, DecodeMode, EinetParams, EmStats, Engine,
+    LevelSpec, ParamArena, ParamLayout, StatsShard,
 };
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
@@ -328,9 +330,12 @@ enum ShardJob {
 enum ShardReply {
     /// boundary activation rows, packed in `Segment::boundary` order
     Boundary(Vec<f32>),
-    /// the segment's E-step statistics (its scalars only; everything
-    /// else stays zero, so the coordinator's merge is exact)
-    Stats(Box<EmStats>),
+    /// the segment's E-step statistics, span-packed: only the scalars
+    /// the segment can write (its `param_spans` of `grad`, its owned
+    /// vars' `sum_p` rows) travel back — the reduce-direction mirror of
+    /// the [`ArenaShard`] broadcast, so reply traffic also scales with
+    /// the shard, not the model
+    Stats(Box<StatsShard>),
     /// leaf emissions for the segment's owned variables: var-major
     /// values plus the written mask (see [`Engine::decode_segment`])
     Decoded { vals: Vec<f32>, written: Vec<bool> },
@@ -354,6 +359,10 @@ fn shard_worker(
     // lazily-zero memory and the worker's resident parameter set (and
     // cache-refresh work) scales with the shard, not the model
     let mut local = ParamArena::zeros(layout);
+    // the reply-side span tables, fixed for the worker's lifetime: grad
+    // writes are bounded by the spans the segment reads, sum_p writes by
+    // the vars it owns
+    let sum_p_spans = sum_p_spans_for_vars(&local.layout, &seg.vars);
     let od = family.obs_dim();
     let row = engine.plan().graph.num_vars * od;
     while let Ok(job) = jobs.recv() {
@@ -381,7 +390,9 @@ fn shard_worker(
                 let mut stats = EmStats::zeros(&local.layout);
                 let xs = &x[row0 * row..(row0 + bn) * row];
                 engine.backward_steps(&local, xs, &mask, bn, &seg.steps, &mut stats);
-                if replies.send(ShardReply::Stats(Box::new(stats))).is_err() {
+                let shard =
+                    StatsShard::gather(&stats, &seg.param_spans, &sum_p_spans);
+                if replies.send(ShardReply::Stats(Box::new(shard))).is_err() {
                     break;
                 }
             }
@@ -649,8 +660,8 @@ impl ShardedPool {
 
     /// Segmented backward pass for the batch last given to `forward`:
     /// spine first (root seed + its steps), boundary gradients out to the
-    /// shards, per-shard E-steps reduced into `stats` via
-    /// [`EmStats::merge`].
+    /// shards, per-shard span-packed E-steps reduced into `stats` via
+    /// [`StatsShard::merge_into`].
     pub fn backward(&mut self, stats: &mut EmStats) {
         let (x, row0) = self.last_x.clone().expect("backward without forward");
         let mask = self.last_mask.clone().expect("backward without forward");
@@ -686,7 +697,7 @@ impl ShardedPool {
         }
         for rx in &self.res_rxs {
             match rx.recv().expect("shard worker died mid-backward") {
-                ShardReply::Stats(s) => stats.merge(&s),
+                ShardReply::Stats(s) => s.merge_into(stats),
                 _ => unreachable!("backward expects a stats reply"),
             }
         }

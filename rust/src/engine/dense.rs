@@ -41,33 +41,31 @@ pub struct DenseEngine {
     scratch: Vec<f32>,
     grad_arena: Vec<f32>,
     grad_scratch: Vec<f32>,
-    /// reusable K-length temporaries
+    /// reusable temporaries: `t_en` is the blocked backward's per-row
+    /// accumulator ([b_blk], grown lazily), `t_t` its transposed
+    /// `g/exp(logS)` block ([Ko, b_blk] staging)
     t_en: Vec<f32>,
     t_t: Vec<f32>,
-    /// per-slot batched scratch (backward pass only, sized lazily on the
-    /// first backward like `t_g` so serving-only engines never allocate
-    /// it): scaled children ([B,K] each) and the row-major outer-product
-    /// block ([B,K*K]). The product lives ONLY here — cache-resident,
-    /// reused across slots — mirroring the TPU mapping where it exists
-    /// only in VMEM (never in the arena).
-    t_en_all: Vec<f32>,
-    t_enp_all: Vec<f32>,
-    t_prod: Vec<f32>,
-    /// per-row maxima ([B] each), shared by the blocked forward prep and
-    /// the backward's row-major prep
+    /// per-row maxima ([B] each), shared by the blocked forward and
+    /// backward preps
     t_a: Vec<f32>,
     t_ap: Vec<f32>,
-    /// forward-pass blocked-kernel scratch, one batch block at a time
-    /// (see [`kernels`]): transposed scaled children ([K, b_blk] each),
-    /// the transposed product block ([K*K, b_blk]), and the linear-domain
-    /// reduction block ([Ko, b_blk])
+    /// blocked-kernel scratch, one batch block at a time (see
+    /// [`kernels`]), shared by the forward pass and the tiled backward:
+    /// transposed scaled children ([K, b_blk] each), the transposed
+    /// product block ([K*K, b_blk]), and the linear-domain reduction
+    /// block ([Ko, b_blk]). The outer product lives ONLY here —
+    /// cache-resident, reused across slots — mirroring the TPU mapping
+    /// where it exists only in VMEM (never in the arena).
     t_ent: Vec<f32>,
     t_enpt: Vec<f32>,
     t_prodt: Vec<f32>,
     t_acc: Vec<f32>,
     /// mixing-layer running-max scratch ([B, Ko])
     t_mix: Vec<f32>,
-    /// backward scratch: G[b,ij] = sum_ko t W (lazily sized)
+    /// mixing-layer exp staging ([B, Ko]) feeding [`kernels::vexp`]
+    t_mix_e: Vec<f32>,
+    /// backward scratch: G_t[ij, b_blk] = sum_ko t W (lazily sized)
     t_g: Vec<f32>,
     /// per-component log-normalizer cache ([D*K*R]), refreshed per forward
     /// so the leaf hot loop is multiply-add only
@@ -92,9 +90,6 @@ impl DenseEngine {
             grad_scratch: Vec::new(),
             t_en: vec![0.0; k],
             t_t: vec![0.0; k.max(1)],
-            t_en_all: Vec::new(),
-            t_enp_all: Vec::new(),
-            t_prod: Vec::new(),
             t_a: vec![0.0; batch_cap],
             t_ap: vec![0.0; batch_cap],
             t_ent: vec![0.0; k * bb],
@@ -102,6 +97,7 @@ impl DenseEngine {
             t_prodt: vec![0.0; k * k * bb],
             t_acc: vec![0.0; k * bb],
             t_mix: vec![0.0; batch_cap * k],
+            t_mix_e: vec![0.0; batch_cap * k],
             t_g: Vec::new(),
             leaf_const: vec![0.0; n_comp],
             samp: exec::SampleScratch::new(&exec),
@@ -126,17 +122,16 @@ impl DenseEngine {
 
     /// Buffer accounting for the Fig. 3 / Fig. 6 memory comparison:
     /// forward/decode (inference) memory only. Backward/EM scratch
-    /// (`t_en`/`t_t`/`t_g` here, plus the row-major
-    /// `t_en_all`/`t_enp_all`/`t_prod` block that only the backward pass
-    /// uses since the forward moved onto the blocked kernels, and the
-    /// `grad_*` buffers on both layouts) is excluded on both engines so
-    /// the dense-vs-sparse comparison is symmetric; every counted buffer
-    /// is at its fixed size from construction (the sampler's
-    /// lazily-allocated entry buffer is reported at its eventual size),
-    /// so the metric does not depend on which passes have already run.
-    /// Note the inference story the numbers now tell: the forward pass's
-    /// product block is `[K², b_blk]` (a fixed 16-row block), no longer
-    /// `[B, K²]`.
+    /// (`t_en`/`t_t`/`t_g` here, and the `grad_*` buffers on both
+    /// layouts) is excluded on both engines so the dense-vs-sparse
+    /// comparison is symmetric; every counted buffer is at its fixed
+    /// size from construction (the sampler's lazily-allocated entry
+    /// buffer is reported at its eventual size), so the metric does not
+    /// depend on which passes have already run. Note the inference story
+    /// the numbers now tell: the product block is `[K², b_blk]` with
+    /// `b_blk` autotuned per (K, ISA) at lowering time, no longer
+    /// `[B, K²]` — and since this PR the backward reuses the same
+    /// blocked scratch instead of carrying a row-major `[B, K²]` copy.
     pub fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
         let temporaries = self.t_a.len()
             + self.t_ap.len()
@@ -145,6 +140,7 @@ impl DenseEngine {
             + self.t_prodt.len()
             + self.t_acc.len()
             + self.t_mix.len()
+            + self.t_mix_e.len()
             + self.leaf_const.len();
         MemFootprint {
             params: 4 * params.num_params(),
@@ -270,16 +266,17 @@ impl DenseEngine {
         }
     }
 
-    /// Prepare per-slot batched scratch for the *backward* pass: maxima,
-    /// scaled children, and the row-major outer-product block ("the
-    /// einsum operand") for one (left, right) child-block pair. The
-    /// forward pass uses the transposed per-block layout built in
-    /// [`DenseEngine::fwd_einsum`] instead.
-    fn prep_slot_scratch(&mut self, loff: usize, roff: usize, bn: usize) {
+    /// Prepare one batch block's transposed operands for an einsum slot:
+    /// per-row maxima into `t_a`/`t_ap` and the scaled-children exponent
+    /// *arguments* into `t_ent`/`t_enpt` (`[K, bb]`), which the caller
+    /// then exponentiates in one [`kernels::vexp`] sweep per operand —
+    /// shared by the forward contraction and the tiled backward.
+    fn prep_block_args(&mut self, left: usize, right: usize, b0: usize, bb: usize) {
         let k = self.exec.k;
-        for b in 0..bn {
-            let lrow = &self.arena[loff + b * k..loff + b * k + k];
-            let rrow = &self.arena[roff + b * k..roff + b * k + k];
+        for j in 0..bb {
+            let b = b0 + j;
+            let lrow = &self.arena[left + b * k..left + b * k + k];
+            let rrow = &self.arena[right + b * k..right + b * k + k];
             let mut a = f32::NEG_INFINITY;
             let mut ap = f32::NEG_INFINITY;
             for kk in 0..k {
@@ -288,18 +285,9 @@ impl DenseEngine {
             }
             self.t_a[b] = a;
             self.t_ap[b] = ap;
-            let en = &mut self.t_en_all[b * k..(b + 1) * k];
-            let enp = &mut self.t_enp_all[b * k..(b + 1) * k];
             for kk in 0..k {
-                en[kk] = (lrow[kk] - a).exp();
-                enp[kk] = (rrow[kk] - ap).exp();
-            }
-            let prod = &mut self.t_prod[b * k * k..(b + 1) * k * k];
-            for (ii, &eni) in en.iter().enumerate() {
-                for (p, &enpj) in prod[ii * k..(ii + 1) * k].iter_mut().zip(enp.iter())
-                {
-                    *p = eni * enpj;
-                }
+                self.t_ent[kk * bb + j] = lrow[kk] - a;
+                self.t_enpt[kk * bb + j] = rrow[kk] - ap;
             }
         }
     }
@@ -311,6 +299,9 @@ impl DenseEngine {
     /// [`kernels::einsum_block`] — the weight slot is streamed once per
     /// block instead of once per row, and the SIMD lanes run across the
     /// batch so every row keeps the scalar reduction order bit-for-bit.
+    /// All exp/ln traffic rides [`kernels::vexp`]/[`kernels::vln`] under
+    /// the plan's [`kernels::MathTier`]: the Exact tier replays libm per
+    /// element, so restructuring the loops changed no bits.
     #[allow(clippy::too_many_arguments)]
     fn fwd_einsum(
         &mut self,
@@ -327,40 +318,29 @@ impl DenseEngine {
         let k = self.exec.k;
         let kk2 = k * k;
         let isa = self.exec.simd;
-        let wslot = &params.data[w..w + ko * kk2];
+        let math = self.exec.math;
         let mut b0 = 0usize;
         while b0 < bn {
             let bb = self.exec.b_blk.min(bn - b0);
-            // block prep: per-row maxima and scaled children, written in
-            // transposed [K, bb] layout (same exp values as the row-major
-            // layout — only the addresses differ)
-            for j in 0..bb {
-                let b = b0 + j;
-                let lrow = &self.arena[left + b * k..left + b * k + k];
-                let rrow = &self.arena[right + b * k..right + b * k + k];
-                let mut a = f32::NEG_INFINITY;
-                let mut ap = f32::NEG_INFINITY;
-                for kk in 0..k {
-                    a = a.max(lrow[kk]);
-                    ap = ap.max(rrow[kk]);
-                }
-                self.t_a[b] = a;
-                self.t_ap[b] = ap;
-                for kk in 0..k {
-                    self.t_ent[kk * bb + j] = (lrow[kk] - a).exp();
-                    self.t_enpt[kk * bb + j] = (rrow[kk] - ap).exp();
-                }
-            }
+            // block prep: per-row maxima and scaled-children exponent
+            // args in transposed [K, bb] layout, then one vexp sweep per
+            // operand (same values as the per-element exps — only the
+            // call structure differs)
+            self.prep_block_args(left, right, b0, bb);
+            kernels::vexp(isa, math, &mut self.t_ent[..k * bb]);
+            kernels::vexp(isa, math, &mut self.t_enpt[..k * bb]);
             // outer product materialized ONLY in cache-resident scratch
+            let wslot = &params.data[w..w + ko * kk2];
             kernels::outer_block(isa, &self.t_ent, &self.t_enpt, k, bb, &mut self.t_prodt);
             kernels::einsum_block(isa, sr, wslot, &self.t_prodt, kk2, ko, bb, &mut self.t_acc);
-            // write-back: add the row maxima back and return to log-domain
+            // write-back: return to log-domain and add the row maxima back
+            kernels::vln(isa, math, &mut self.t_acc[..ko * bb]);
             for j in 0..bb {
                 let b = b0 + j;
                 let base = self.t_a[b] + self.t_ap[b];
                 let dest_row = dest + b * ko;
                 for kout in 0..ko {
-                    let out = base + self.t_acc[kout * bb + j].ln();
+                    let out = base + self.t_acc[kout * bb + j];
                     if to_scratch {
                         self.scratch[dest_row + kout] = out;
                     } else {
@@ -372,11 +352,15 @@ impl DenseEngine {
         }
     }
 
-    /// One mixing region in two passes: a vectorized running-max over the
-    /// contiguous `[bn, Ko]` child blocks ([`kernels::vmax_inplace`] —
-    /// max is exact, so the vectorization cannot change a bit), then the
-    /// weighted reduction in the original per-element order (log-sum-exp
-    /// under the sum semiring, max under the max semiring).
+    /// One mixing region in three passes: a vectorized running-max over
+    /// the contiguous `[bn, Ko]` child blocks ([`kernels::vmax_inplace`]
+    /// — max is exact, so the vectorization cannot change a bit), then a
+    /// per-child [`kernels::vexp`] sweep accumulated into the output
+    /// region (child order — and with it every element's scalar add
+    /// order — unchanged), then one [`kernels::vln`] finalize. Addition
+    /// is commutative bitwise, so `ln(s) + a` equals the old `a +
+    /// s.ln()` exactly; under the Exact tier the whole region is
+    /// bit-identical to the per-element formulation.
     #[allow(clippy::too_many_arguments)]
     fn fwd_mix(
         &mut self,
@@ -391,6 +375,7 @@ impl DenseEngine {
         sr: Semiring,
     ) {
         let isa = self.exec.simd;
+        let math = self.exec.math;
         let n = bn * ko;
         let wrow = &params.data[w..w + children];
         let m = &mut self.t_mix[..n];
@@ -399,25 +384,30 @@ impl DenseEngine {
             let src = &self.scratch[child + c * stride..child + c * stride + n];
             kernels::vmax_inplace(isa, m, src);
         }
-        for i in 0..n {
-            let a = m[i];
-            let v = match sr {
-                Semiring::SumProduct => {
-                    let mut s = 0.0f32;
-                    for (c, &wc) in wrow.iter().enumerate() {
-                        s += wc * (self.scratch[child + c * stride + i] - a).exp();
-                    }
-                    a + s.ln()
-                }
+        let dst = &mut self.arena[out..out + n];
+        dst.fill(match sr {
+            Semiring::SumProduct => 0.0,
+            Semiring::MaxProduct => f32::NEG_INFINITY,
+        });
+        for (c, &wc) in wrow.iter().enumerate() {
+            let src = &self.scratch[child + c * stride..child + c * stride + n];
+            let e = &mut self.t_mix_e[..n];
+            for ((ev, &sv), &mv) in e.iter_mut().zip(src).zip(m.iter()) {
+                *ev = sv - mv;
+            }
+            kernels::vexp(isa, math, e);
+            match sr {
+                Semiring::SumProduct => kernels::axpy(isa, dst, e, wc),
                 Semiring::MaxProduct => {
-                    let mut mx = f32::NEG_INFINITY;
-                    for (c, &wc) in wrow.iter().enumerate() {
-                        mx = mx.max(wc * (self.scratch[child + c * stride + i] - a).exp());
+                    for (d, &ev) in dst.iter_mut().zip(e.iter()) {
+                        *d = d.max(wc * ev);
                     }
-                    a + mx.ln()
                 }
-            };
-            self.arena[out + i] = v;
+            }
+        }
+        kernels::vln(isa, math, dst);
+        for (d, &mv) in dst.iter_mut().zip(m.iter()) {
+            *d += mv;
         }
     }
 
@@ -447,22 +437,21 @@ impl DenseEngine {
         stats.count += bn;
     }
 
-    /// Size the backward temporaries for this batch (all lazy: engines
-    /// that never train pay neither RSS nor footprint for them).
-    fn bwd_prepare(&mut self, bn: usize) {
+    /// Size the backward temporaries (all lazy: engines that never train
+    /// pay neither RSS nor footprint for them). The tiled backward works
+    /// one `b_blk` block at a time, so everything is block-sized — no
+    /// `[B, K²]` buffer survives on the training path either.
+    fn bwd_prepare(&mut self) {
         let k = self.exec.k;
-        if self.t_t.len() < bn * k.max(1) {
-            self.t_t.resize(bn * k.max(1), 0.0);
+        let bb = self.exec.b_blk;
+        if self.t_t.len() < (k * bb).max(1) {
+            self.t_t.resize((k * bb).max(1), 0.0);
         }
-        if self.t_g.len() < bn * k * k {
-            self.t_g.resize(bn * k * k, 0.0);
+        if self.t_g.len() < k * k * bb {
+            self.t_g.resize(k * k * bb, 0.0);
         }
-        if self.t_en_all.len() < bn * k {
-            self.t_en_all.resize(bn * k, 0.0);
-            self.t_enp_all.resize(bn * k, 0.0);
-        }
-        if self.t_prod.len() < bn * k * k {
-            self.t_prod.resize(bn * k * k, 0.0);
+        if self.t_en.len() < bb.max(k) {
+            self.t_en.resize(bb.max(k), 0.0);
         }
     }
 
@@ -535,7 +524,7 @@ impl DenseEngine {
     ) {
         self.clear_grad();
         self.seed_root_grad(bn, stats);
-        self.bwd_prepare(bn);
+        self.bwd_prepare();
         // one suff-stats scratch for every Leaf step of this pass
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for si in (0..self.exec.steps.len()).rev() {
@@ -555,7 +544,7 @@ impl DenseEngine {
         steps: &[usize],
         stats: &mut EmStats,
     ) {
-        self.bwd_prepare(bn);
+        self.bwd_prepare();
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for &si in steps.iter().rev() {
             self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
@@ -586,7 +575,7 @@ impl DenseEngine {
                 for (c, &wc) in wrow.iter().enumerate() {
                     let idx = child + c * stride + b * ko + kk;
                     // exp(logC - logS) <= 1/w_min: bounded
-                    let ew = (self.scratch[idx] - logs).exp();
+                    let ew = self.exec.math.exp1(self.scratch[idx] - logs);
                     // stats.grad mirrors the arena layout: the mixing row
                     // gradient lives at the weight's own offset
                     stats.grad[w + c] += g * ew;
@@ -596,6 +585,16 @@ impl DenseEngine {
         }
     }
 
+    /// The tiled backward for one einsum slot, mirroring the forward's
+    /// transposed-block layout: per `b_blk` block the scaled children,
+    /// the outer-product operand ([`kernels::outer_block`]) and the
+    /// `g·exp(base − logS)` factors are laid out `[·, bb]` with the
+    /// batch contiguous, so every accumulation — the `[Ko, K²]` weight
+    /// gradient GEMM ([`kernels::dot4`] rows against batch lanes), the
+    /// `G = Wᵀt` back-message ([`kernels::axpy`]), and both child
+    /// gradients ([`kernels::vmla`]) — streams whole batch lanes instead
+    /// of per-row `axpy`/`dot4` calls. All transcendentals ride
+    /// [`kernels::vexp`] under the plan's tier.
     #[allow(clippy::too_many_arguments)]
     fn bwd_einsum(
         &mut self,
@@ -612,87 +611,126 @@ impl DenseEngine {
         let k = self.exec.k;
         let kk2 = k * k;
         let isa = self.exec.simd;
-        self.prep_slot_scratch(left, right, bn);
+        let math = self.exec.math;
         let wslot = &params.data[w..w + ko * kk2];
-        // t[b, ko] = g / s with s = exp(logS - a - a')
-        let mut any = false;
-        for b in 0..bn {
-            let out_row = dest + b * ko;
-            let base = self.t_a[b] + self.t_ap[b];
-            for kout in 0..ko {
-                let (g, logs) = if to_scratch {
-                    (
-                        self.grad_scratch[out_row + kout],
-                        self.scratch[out_row + kout],
-                    )
-                } else {
-                    (
-                        self.grad_arena[out_row + kout],
-                        self.arena[out_row + kout],
-                    )
-                };
-                self.t_t[b * ko + kout] = if g != 0.0 {
-                    any = true;
-                    g * (base - logs).exp()
-                } else {
-                    0.0
-                };
-            }
-        }
-        if !any {
-            return;
-        }
-        // 1) gW_ko += sum_b t[b,ko] * prod[b] (kernels::axpy over K^2,
-        //    W row hot); the gradient span sits at the weight span's own
-        //    arena offset
         let gslot = &mut stats.grad[w..w + ko * kk2];
-        for kout in 0..ko {
-            let grow = &mut gslot[kout * kk2..(kout + 1) * kk2];
-            for b in 0..bn {
-                let tk = self.t_t[b * ko + kout];
-                if tk == 0.0 {
-                    continue;
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let bb = self.exec.b_blk.min(bn - b0);
+            // t[ko, bb] = g * exp(base - logS), staged as exponent args
+            // (dead lanes get -inf -> exp 0) times the g factors so one
+            // vexp sweep covers the whole block
+            let mut any = false;
+            for j in 0..bb {
+                let b = b0 + j;
+                let out_row = dest + b * ko;
+                for kout in 0..ko {
+                    let (g, logs) = if to_scratch {
+                        (
+                            self.grad_scratch[out_row + kout],
+                            self.scratch[out_row + kout],
+                        )
+                    } else {
+                        (
+                            self.grad_arena[out_row + kout],
+                            self.arena[out_row + kout],
+                        )
+                    };
+                    self.t_t[kout * bb + j] = g;
+                    self.t_acc[kout * bb + j] = if g != 0.0 {
+                        any = true;
+                        -logs
+                    } else {
+                        f32::NEG_INFINITY
+                    };
                 }
-                let prod = &self.t_prod[b * kk2..(b + 1) * kk2];
-                kernels::axpy(isa, grow, prod, tk);
             }
-        }
-        // 2) G[b] = sum_ko t[b,ko] * W[ko]; then child gradients
-        for b in 0..bn {
-            let gbuf = &mut self.t_g[b * kk2..(b + 1) * kk2];
-            gbuf.fill(0.0);
-            let mut live = false;
-            for kout in 0..ko {
-                let tk = self.t_t[b * ko + kout];
-                if tk == 0.0 {
-                    continue;
-                }
-                live = true;
-                let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
-                kernels::axpy(isa, gbuf, wrow, tk);
-            }
-            if !live {
+            if !any {
+                b0 += bb;
                 continue;
             }
-            let en = &self.t_en_all[b * k..(b + 1) * k];
-            let enp = &self.t_enp_all[b * k..(b + 1) * k];
-            // gleft_i += en_i * (G_i . enp); col_j = sum_i en_i G_ij
-            self.t_en[..k].fill(0.0);
-            let lrow = left + b * k;
-            let rrow = right + b * k;
-            for (ii, &eni) in en.iter().enumerate() {
-                if eni == 0.0 {
-                    continue;
+            // maxima + scaled children in [K, bb], shared with the forward
+            self.prep_block_args(left, right, b0, bb);
+            kernels::vexp(isa, math, &mut self.t_ent[..k * bb]);
+            kernels::vexp(isa, math, &mut self.t_enpt[..k * bb]);
+            for j in 0..bb {
+                let base = self.t_a[b0 + j] + self.t_ap[b0 + j];
+                for kout in 0..ko {
+                    let v = &mut self.t_acc[kout * bb + j];
+                    if *v != f32::NEG_INFINITY {
+                        *v += base;
+                    }
                 }
-                let grow = &gbuf[ii * k..(ii + 1) * k];
-                self.grad_arena[lrow + ii] += eni * kernels::dot4(isa, grow, enp);
-                kernels::axpy(isa, &mut self.t_en[..k], grow, eni);
             }
-            for (jj, (&enpj, &colj)) in
-                enp.iter().zip(self.t_en[..k].iter()).enumerate()
+            kernels::vexp(isa, math, &mut self.t_acc[..ko * bb]);
+            for (t, &g) in self.t_acc[..ko * bb]
+                .iter_mut()
+                .zip(self.t_t[..ko * bb].iter())
             {
-                self.grad_arena[rrow + jj] += enpj * colj;
+                *t *= g;
             }
+            // the transposed outer-product block, shared with the forward
+            kernels::outer_block(isa, &self.t_ent, &self.t_enpt, k, bb, &mut self.t_prodt);
+            // 1) gW[ko, ij] += <prod_t[ij, :], t[ko, :]>: the [Ko, K²] x
+            //    [K², bb] gradient GEMM, contracted over the batch lanes;
+            //    the gradient span sits at the weight span's own offset
+            for kout in 0..ko {
+                let trow = &self.t_acc[kout * bb..(kout + 1) * bb];
+                let grow = &mut gslot[kout * kk2..(kout + 1) * kk2];
+                for (idx, gw) in grow.iter_mut().enumerate() {
+                    *gw +=
+                        kernels::dot4(isa, &self.t_prodt[idx * bb..idx * bb + bb], trow);
+                }
+            }
+            // 2) G_t[ij, :] = sum_ko t[ko, :] * W[ko, ij], kout-sequential
+            //    per element exactly as the per-row formulation was
+            let gbuf = &mut self.t_g[..kk2 * bb];
+            gbuf.fill(0.0);
+            for kout in 0..ko {
+                let trow = &self.t_acc[kout * bb..(kout + 1) * bb];
+                let wrow = &wslot[kout * kk2..(kout + 1) * kk2];
+                for (idx, &wv) in wrow.iter().enumerate() {
+                    kernels::axpy(isa, &mut gbuf[idx * bb..(idx + 1) * bb], trow, wv);
+                }
+            }
+            // 3) gleft[i, :] += en[i, :] * sum_j G_t[ij, :] * enp[j, :]
+            let acc = &mut self.t_en[..bb];
+            for i in 0..k {
+                acc.fill(0.0);
+                for jj in 0..k {
+                    kernels::vmla(
+                        isa,
+                        acc,
+                        &gbuf[(i * k + jj) * bb..(i * k + jj + 1) * bb],
+                        &self.t_enpt[jj * bb..(jj + 1) * bb],
+                    );
+                }
+                for (j, &aj) in acc.iter().enumerate() {
+                    self.grad_arena[left + (b0 + j) * k + i] +=
+                        self.t_ent[i * bb + j] * aj;
+                }
+            }
+            // 4) gright[j, :] += enp[j, :] * sum_i en[i, :] * G_t[ij, :]
+            //    (col_t reuses the product block — it is dead by now)
+            let colt = &mut self.t_prodt[..k * bb];
+            colt.fill(0.0);
+            for i in 0..k {
+                for jj in 0..k {
+                    kernels::vmla(
+                        isa,
+                        &mut colt[jj * bb..(jj + 1) * bb],
+                        &self.t_ent[i * bb..(i + 1) * bb],
+                        &gbuf[(i * k + jj) * bb..(i * k + jj + 1) * bb],
+                    );
+                }
+            }
+            for j in 0..bb {
+                for jj in 0..k {
+                    self.grad_arena[right + (b0 + j) * k + jj] +=
+                        self.t_enpt[jj * bb + j] * colt[jj * bb + j];
+                }
+            }
+            b0 += bb;
         }
     }
 

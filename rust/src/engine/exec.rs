@@ -342,9 +342,15 @@ pub struct ExecPlan {
     /// every worker of a sharded run lowers the same plan and therefore
     /// runs the same kernels, keeping N-shard results bit-identical
     pub simd: kernels::Isa,
-    /// batch block size of the einsum kernels ([`kernels::block_rows`]):
-    /// one weight-slot load is amortized over this many batch rows, and
-    /// the engines size their transposed per-block scratch with it
+    /// the transcendental tier selected at lowering time
+    /// ([`kernels::MathTier::detect`]): `Exact` (libm, the default) or
+    /// the opt-in vectorized `Fast` tier. Deterministic per process, so
+    /// sharded workers agree.
+    pub math: kernels::MathTier,
+    /// batch block size of the einsum kernels, autotuned per `(K, ISA)`
+    /// at lowering time ([`kernels::tune_block_rows`]): one weight-slot
+    /// load is amortized over this many batch rows, and the engines size
+    /// their transposed per-block scratch with it
     pub b_blk: usize,
     /// the compiled reverse (top-down sampling) step program
     pub sample_plan: SamplePlan,
@@ -468,6 +474,7 @@ impl ExecPlan {
             k,
         );
 
+        let simd = kernels::Isa::detect();
         Self {
             family,
             layout,
@@ -478,8 +485,9 @@ impl ExecPlan {
             region_width,
             arena_len,
             scratch_len,
-            simd: kernels::Isa::detect(),
-            b_blk: kernels::block_rows(batch_cap),
+            simd,
+            math: kernels::MathTier::detect(),
+            b_blk: kernels::tune_block_rows(k, batch_cap, simd),
             sample_plan,
             part_level,
             part_slot,
@@ -896,7 +904,7 @@ pub(crate) fn refresh_leaf_const_region(
             let c = (d * k + kk) * r_total + rep;
             leaf_const[c] = ep
                 .family
-                .log_norm_const(&theta[c * s_dim..(c + 1) * s_dim]);
+                .log_norm_const_tier(&theta[c * s_dim..(c + 1) * s_dim], ep.math);
         }
     }
 }
@@ -1094,7 +1102,7 @@ pub(crate) fn decode(
             }
             for (c, wgt) in weights.iter_mut().enumerate() {
                 let v = scratch[first + c * stride + b * ko + entry];
-                *wgt = wrow[c] * (v - maxv).exp();
+                *wgt = wrow[c] * ep.math.exp1(v - maxv);
             }
             let c = match mode {
                 DecodeMode::Sample => rng.categorical_f32(weights),
@@ -1120,10 +1128,10 @@ pub(crate) fn decode(
             ap = ap.max(arena[roff + kk]);
         }
         for ii in 0..k {
-            let eni = (arena[loff + ii] - a).exp();
+            let eni = ep.math.exp1(arena[loff + ii] - a);
             for jj in 0..k {
                 wbuf[ii * k + jj] =
-                    wslot[ii * k + jj] * eni * (arena[roff + jj] - ap).exp();
+                    wslot[ii * k + jj] * eni * ep.math.exp1(arena[roff + jj] - ap);
             }
         }
         let pick = match mode {
@@ -1326,9 +1334,10 @@ fn refresh_leaf_tab_region(
     for d in ep.plan.graph.regions[rid].scope.iter() {
         for kk in 0..k {
             let c = (d * k + kk) * r_total + rep;
-            ep.family.emit_table(
+            ep.family.emit_table_tier(
                 &theta[c * s_dim..(c + 1) * s_dim],
                 &mut tab[c * tab_width..(c + 1) * tab_width],
+                ep.math,
             );
         }
     }
@@ -1408,7 +1417,7 @@ fn run_sample_steps(
                         for (ci, wgt) in weights.iter_mut().enumerate() {
                             let v =
                                 scratch[mix_first + ci * mix_stride + br * mix_ko + entry];
-                            *wgt = params.data[mix_w + ci] * (v - maxv).exp();
+                            *wgt = params.data[mix_w + ci] * ep.math.exp1(v - maxv);
                         }
                         match st.as_mut() {
                             Some(st) => st.categorical_f32(weights),
@@ -1428,11 +1437,12 @@ fn run_sample_steps(
                     }
                     let ebuf = &mut ss.ebuf[..k];
                     for (jj, ev) in ebuf.iter_mut().enumerate() {
-                        *ev = (arena[roff + jj] - ap).exp();
+                        *ev = arena[roff + jj] - ap;
                     }
+                    kernels::vexp(ep.simd, ep.math, ebuf);
                     let wbuf = &mut ss.wbuf[..kk2];
                     for ii in 0..k {
-                        let eni = (arena[loff + ii] - a).exp();
+                        let eni = ep.math.exp1(arena[loff + ii] - a);
                         let wrow = &wslot[ii * k..(ii + 1) * k];
                         let orow = &mut wbuf[ii * k..(ii + 1) * k];
                         for (jj, o) in orow.iter_mut().enumerate() {

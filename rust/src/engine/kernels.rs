@@ -46,17 +46,57 @@
 //!   `max` instruction, whose NaN behaviour (propagate the second
 //!   operand) differs from Rust's `f32::max` (keep the non-NaN operand).
 //!
-//! # Dispatch
+//! # Math tiers
 //!
-//! [`Isa::detect`] picks the best available path at plan-lowering time
-//! (`EINET_KERNELS=scalar` or [`force_scalar`] pin the portable path for
-//! A/B benchmarks and identity tests); the chosen [`Isa`] is stored in
-//! the [`super::exec::ExecPlan`] so every worker of a sharded run uses
-//! the same kernels. AVX2 is runtime-detected on x86-64; NEON is
-//! architecturally guaranteed on AArch64. The scalar fallback processes
-//! the batch in 4-lane chunks with per-lane accumulator arrays — the
-//! same shape the SIMD paths use — so the compiler can auto-vectorize it
-//! where strict FP semantics allow (every reduction is per-lane).
+//! The transcendental calls that bracket every log-space contraction
+//! (`exp` scale-in, `ln` finalize) run in one of two tiers, chosen at
+//! plan-lowering time and recorded in the [`super::exec::ExecPlan`] as
+//! [`MathTier`]:
+//!
+//! * [`MathTier::Exact`] (the default) calls libm `exp`/`ln` per
+//!   element. Every bit of every existing suite is preserved: the
+//!   batched [`vexp`]/[`vln`] entry points degenerate to the exact same
+//!   per-element libm calls the engines made before the tier existed.
+//! * [`MathTier::Fast`] is the opt-in fast-math tier: branch-free
+//!   polynomial `exp`/`ln` (the `util::fastmath` polynomials, here
+//!   vectorized 8-wide on AVX2 / 4-wide on NEON with a bit-identical
+//!   scalar fallback). **Accuracy contract:** over the engine's working
+//!   range (`exp` on [-87, 88], `ln` on normal positive floats) results
+//!   stay within 512 ULP of libm (measured ≪ that in practice; relative
+//!   error ≤ 2e-5 for `exp`, absolute error ≤ 3e-7·(1+|ln x|) for `ln`).
+//!   Edge semantics: `exp` flushes below -87 to 0 and saturates above
+//!   +88 (finite, no inf); `ln` returns -inf at ±0, NaN for negative or
+//!   NaN input, a large finite value (~88.73) for +inf, and degraded
+//!   accuracy on subnormals. All three ISA paths of the Fast tier are
+//!   bit-identical to each other (same operation order, no FMA), so
+//!   scalar-vs-SIMD engine pairs still match bitwise *within* a tier.
+//!
+//! # Dispatch and the `EINET_KERNELS` variable
+//!
+//! [`Isa::detect`] picks the best available path at plan-lowering time;
+//! the chosen [`Isa`] is stored in the [`super::exec::ExecPlan`] so
+//! every worker of a sharded run uses the same kernels. AVX2 is
+//! runtime-detected on x86-64; NEON is architecturally guaranteed on
+//! AArch64. The scalar fallback processes the batch in 4-lane chunks
+//! with per-lane accumulator arrays — the same shape the SIMD paths
+//! use — so the compiler can auto-vectorize it where strict FP
+//! semantics allow (every reduction is per-lane).
+//!
+//! `EINET_KERNELS` is the single environment knob for both axes. It
+//! holds a comma-separated token list, parsed once per process:
+//!
+//! | token      | effect                                              |
+//! |------------|-----------------------------------------------------|
+//! | `scalar`   | pin the portable scalar ISA path                    |
+//! | `simd`     | undo a previous `scalar` token (use the best ISA)   |
+//! | `fastmath` | select the [`MathTier::Fast`] transcendental tier   |
+//! | `exact`    | undo a previous `fastmath` token (libm tier)        |
+//!
+//! Unknown tokens are **not** silently ignored: each unrecognized token
+//! warns on stderr once per process. Programmatic overrides
+//! ([`force_scalar`], [`force_fastmath`]) take precedence over the
+//! environment; the CLI `--fastmath` flag and the registry's fast-math
+//! knob both route through [`force_fastmath`].
 
 use super::exec::Semiring;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -94,6 +134,110 @@ pub fn force_scalar(on: bool) {
     FORCE_SCALAR.store(on, Ordering::SeqCst);
 }
 
+/// Parsed `EINET_KERNELS` configuration (token grammar in the module
+/// docs). The variable is read once per process; later tokens override
+/// earlier ones, and unknown tokens warn on stderr.
+#[derive(Clone, Copy, Default)]
+struct EnvCfg {
+    scalar: bool,
+    fastmath: bool,
+}
+
+fn env_cfg() -> EnvCfg {
+    static CFG: std::sync::OnceLock<EnvCfg> = std::sync::OnceLock::new();
+    *CFG.get_or_init(|| {
+        let mut cfg = EnvCfg::default();
+        let Ok(raw) = std::env::var("EINET_KERNELS") else {
+            return cfg;
+        };
+        for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok {
+                "scalar" => cfg.scalar = true,
+                "simd" => cfg.scalar = false,
+                "fastmath" => cfg.fastmath = true,
+                "exact" => cfg.fastmath = false,
+                other => eprintln!(
+                    "einet: unrecognized EINET_KERNELS token `{other}` \
+                     (valid tokens: scalar, simd, fastmath, exact)"
+                ),
+            }
+        }
+        cfg
+    })
+}
+
+/// The transcendental tier a plan's `exp`/`ln` traffic runs in: libm
+/// ([`MathTier::Exact`], the default — bit-identical to the pre-tier
+/// engines) or the vectorized polynomial fast path ([`MathTier::Fast`],
+/// opt-in). Accuracy contract and edge semantics are in the module docs.
+/// Recorded in the [`super::exec::ExecPlan`] next to [`Isa`] so sharded
+/// workers agree on the tier.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MathTier {
+    /// Per-element libm `exp`/`ln`: the reference tier, preserved
+    /// bit-for-bit from the pre-fast-math engines.
+    Exact,
+    /// Vectorized polynomial `exp`/`ln` (ULP-bounded, see module docs).
+    Fast,
+}
+
+/// Programmatic override: route every subsequently lowered plan through
+/// the fast-math tier (see [`MathTier::detect`]).
+static FORCE_FASTMATH: AtomicBool = AtomicBool::new(false);
+
+/// Pin (or unpin) the fast-math transcendental tier for plans lowered
+/// after this call — the programmatic twin of `EINET_KERNELS=fastmath`,
+/// used by the CLI `--fastmath` flag, the engine registry's fast-math
+/// knob, and the A/B benchmarks. Process-wide: affects every engine
+/// (including sharded workers) constructed after the call.
+pub fn force_fastmath(on: bool) {
+    FORCE_FASTMATH.store(on, Ordering::SeqCst);
+}
+
+impl MathTier {
+    /// The tier new plans should use: [`MathTier::Fast`] if pinned by
+    /// [`force_fastmath`] or requested via `EINET_KERNELS=fastmath`,
+    /// otherwise [`MathTier::Exact`].
+    pub fn detect() -> MathTier {
+        if FORCE_FASTMATH.load(Ordering::Relaxed) {
+            return MathTier::Fast;
+        }
+        if env_cfg().fastmath {
+            MathTier::Fast
+        } else {
+            MathTier::Exact
+        }
+    }
+
+    /// Short name for logs and bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            MathTier::Exact => "exact",
+            MathTier::Fast => "fast",
+        }
+    }
+
+    /// Scalar one-off `exp` in this tier. The Fast path is the exact
+    /// lane function of [`vexp`], so mixing batched and one-off calls
+    /// never changes a bit.
+    #[inline]
+    pub fn exp1(self, x: f32) -> f32 {
+        match self {
+            MathTier::Exact => x.exp(),
+            MathTier::Fast => fast_exp_lane(x),
+        }
+    }
+
+    /// Scalar one-off `ln` in this tier (lane function of [`vln`]).
+    #[inline]
+    pub fn ln1(self, x: f32) -> f32 {
+        match self {
+            MathTier::Exact => x.ln(),
+            MathTier::Fast => fast_ln_lane(x),
+        }
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 fn best_isa() -> Isa {
     if is_x86_feature_detected!("avx2") {
@@ -120,13 +264,13 @@ impl Isa {
     }
 
     /// The ISA new plans should use: [`Isa::best`], unless the scalar
-    /// path is pinned by [`force_scalar`] or `EINET_KERNELS=scalar` in
-    /// the environment.
+    /// path is pinned by [`force_scalar`] or an `EINET_KERNELS` `scalar`
+    /// token (module docs) in the environment.
     pub fn detect() -> Isa {
         if FORCE_SCALAR.load(Ordering::Relaxed) {
             return Isa::Scalar;
         }
-        if std::env::var("EINET_KERNELS").as_deref() == Ok("scalar") {
+        if env_cfg().scalar {
             return Isa::Scalar;
         }
         Isa::best()
@@ -142,6 +286,20 @@ impl Isa {
             Isa::Neon => "neon",
         }
     }
+
+    /// Batch lanes one vector register holds (the scalar fallback is
+    /// 4-lane-chunked, so it reports 4). Block sizes are rounded to a
+    /// multiple of this so the blocked kernels stay on their vector
+    /// fast path instead of the per-lane tail.
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 4,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => 8,
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => 4,
+        }
+    }
 }
 
 /// The batch block size for a given engine capacity: how many batch rows
@@ -153,12 +311,108 @@ pub fn block_rows(batch_cap: usize) -> usize {
     batch_cap.clamp(1, 16)
 }
 
+/// Working-set budget (in f32 slots) for one batch block: half of a
+/// 32 KiB L1d. The PR-5 sweep showed the blocked kernels win exactly as
+/// long as the transposed product block stays cache-resident, so the
+/// autotuner sizes blocks against this budget instead of the old fixed
+/// 16 rows.
+const L1_BUDGET_F32: usize = 4096;
+
+/// Autotuned batch block size for one einsum shape: the largest block
+/// whose per-row working set — the `K²` transposed product column, the
+/// two `K`-long scaled-child columns, the `K`-long accumulator column,
+/// and slack for the weight stream — fits [`L1_BUDGET_F32`], rounded
+/// down to a multiple of [`Isa::lanes`] and clamped to `[lane, 64]`
+/// before the batch capacity cap. Deterministic in `(k, batch_cap,
+/// isa)`, so every sharded worker lowers the same shape. Replaces the
+/// fixed [`block_rows`] at plan-lowering time; the chosen value is
+/// recorded in the [`super::exec::ExecPlan`] and in
+/// `BENCH_kernels.json`. Block size never changes kernel *values* (each
+/// batch row keeps its canonical per-row reduction), only how many rows
+/// one weight-slot load is amortized over.
+pub fn tune_block_rows(k: usize, batch_cap: usize, isa: Isa) -> usize {
+    let lane = isa.lanes();
+    let per_row = k * k + 3 * k + 4;
+    let raw = (L1_BUDGET_F32 / per_row.max(1)).clamp(lane, 64);
+    let bb = raw - raw % lane;
+    batch_cap.clamp(1, bb)
+}
+
 // ---------------------------------------------------------------------------
 // scalar reference implementations
 // ---------------------------------------------------------------------------
 //
 // These define the numbers. Every SIMD variant below must agree with them
 // bit-for-bit (pinned by the in-module tests and tests/kernel_identity.rs).
+
+// Fast-math polynomial coefficients — the exact constants of
+// `util::fastmath` (`2^f` Taylor tail for exp, atanh-series for ln).
+// The SIMD paths below replay the same multiply/add sequence on these
+// constants, which is what makes all ISA paths of the Fast tier
+// bit-identical.
+const EXP_LO: f32 = -87.0;
+const EXP_HI: f32 = 88.0;
+const EXP_C1: f32 = 0.693_147_2;
+const EXP_C2: f32 = 0.240_226_51;
+const EXP_C3: f32 = 0.055_504_11;
+const EXP_C4: f32 = 0.009_618_13;
+const EXP_C5: f32 = 0.001_333_36;
+const EXP_C6: f32 = 0.000_154_03;
+const LN_C1: f32 = 0.333_333_3;
+const LN_C2: f32 = 0.2;
+const LN_C3: f32 = 0.142_857_15;
+const LN_C4: f32 = 0.111_111_1;
+const LN_C5: f32 = 0.090_909_1;
+
+/// One lane of the Fast-tier `exp`: `2^k · 2^f` with a degree-6
+/// polynomial for `2^f`, `f ∈ [0, 1)`. Flushes below [`EXP_LO`] to 0,
+/// saturates above [`EXP_HI`] (finite), returns canonical NaN for NaN.
+/// The SIMD [`vexp`] paths replay exactly this operation sequence.
+#[inline]
+fn fast_exp_lane(x: f32) -> f32 {
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    if x < EXP_LO {
+        return 0.0;
+    }
+    let t = x.min(EXP_HI) * std::f32::consts::LOG2_E;
+    let kf = t.floor();
+    let f = t - kf;
+    let p = 1.0
+        + f * (EXP_C1 + f * (EXP_C2 + f * (EXP_C3 + f * (EXP_C4 + f * (EXP_C5 + f * EXP_C6)))));
+    let bits = (((kf as i32).wrapping_add(127)) << 23) as u32;
+    f32::from_bits(bits) * p
+}
+
+/// One lane of the Fast-tier `ln`: exponent extraction plus the
+/// atanh-series polynomial on the mantissa. Returns -inf at ±0,
+/// canonical NaN for negative or NaN input, ~88.73 for +inf, degraded
+/// accuracy on subnormals. The SIMD [`vln`] paths replay exactly this
+/// operation sequence.
+#[inline]
+fn fast_ln_lane(x: f32) -> f32 {
+    if x.is_nan() || x < 0.0 {
+        return f32::NAN;
+    }
+    if x == 0.0 {
+        return f32::NEG_INFINITY;
+    }
+    let bits = x.to_bits();
+    let e = (((bits >> 23) & 0xFF) as i32 - 127) as f32;
+    let m = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000);
+    let u = (m - 1.0) / (m + 1.0);
+    let u2 = u * u;
+    let poly = 1.0 + u2 * (LN_C1 + u2 * (LN_C2 + u2 * (LN_C3 + u2 * (LN_C4 + u2 * LN_C5))));
+    let lnm = 2.0 * u * poly;
+    e * std::f32::consts::LN_2 + lnm
+}
+
+fn vmla_scalar(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    for ((d, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+        *d += x * y;
+    }
+}
 
 /// One output column of the blocked sum-product GEMM: the 4-accumulator
 /// dot product of `wrow` (length K²) with column `lane` of the transposed
@@ -613,6 +867,130 @@ mod avx2 {
             }
         }
     }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vmla(acc: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = acc.len().min(a.len()).min(b.len());
+        let (pd, pa, pb) = (acc.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(pd.add(i));
+            let prod = _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            _mm256_storeu_ps(pd.add(i), _mm256_add_ps(d, prod));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += a[i] * b[i];
+            i += 1;
+        }
+    }
+
+    /// 8-wide Fast-tier exp: the exact operation sequence of
+    /// `fast_exp_lane`, which handles the `bb mod 8` tail.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vexp(xs: &mut [f32]) {
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let hi = _mm256_set1_ps(super::EXP_HI);
+        let lo = _mm256_set1_ps(super::EXP_LO);
+        let one = _mm256_set1_ps(1.0);
+        let nan = _mm256_set1_ps(f32::NAN);
+        let (c1, c2, c3) = (
+            _mm256_set1_ps(super::EXP_C1),
+            _mm256_set1_ps(super::EXP_C2),
+            _mm256_set1_ps(super::EXP_C3),
+        );
+        let (c4, c5, c6) = (
+            _mm256_set1_ps(super::EXP_C4),
+            _mm256_set1_ps(super::EXP_C5),
+            _mm256_set1_ps(super::EXP_C6),
+        );
+        let bias = _mm256_set1_epi32(127);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(p.add(i));
+            let t = _mm256_mul_ps(_mm256_min_ps(x, hi), log2e);
+            let kf = _mm256_floor_ps(t);
+            let f = _mm256_sub_ps(t, kf);
+            let mut q = _mm256_add_ps(c5, _mm256_mul_ps(f, c6));
+            q = _mm256_add_ps(c4, _mm256_mul_ps(f, q));
+            q = _mm256_add_ps(c3, _mm256_mul_ps(f, q));
+            q = _mm256_add_ps(c2, _mm256_mul_ps(f, q));
+            q = _mm256_add_ps(c1, _mm256_mul_ps(f, q));
+            q = _mm256_add_ps(one, _mm256_mul_ps(f, q));
+            let ki = _mm256_cvttps_epi32(kf);
+            let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(ki, bias)));
+            let mut r = _mm256_mul_ps(scale, q);
+            // flush x < EXP_LO to 0 (ordered: NaN lanes fall through)
+            r = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(x, lo), r);
+            // canonical NaN for NaN input, matching the scalar lane
+            r = _mm256_blendv_ps(r, nan, _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x));
+            _mm256_storeu_ps(p.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            xs[i] = super::fast_exp_lane(xs[i]);
+            i += 1;
+        }
+    }
+
+    /// 8-wide Fast-tier ln: the exact operation sequence of
+    /// `fast_ln_lane`, which handles the `bb mod 8` tail.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vln(xs: &mut [f32]) {
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let one = _mm256_set1_ps(1.0);
+        let two = _mm256_set1_ps(2.0);
+        let zero = _mm256_setzero_ps();
+        let ln2 = _mm256_set1_ps(std::f32::consts::LN_2);
+        let nan = _mm256_set1_ps(f32::NAN);
+        let neginf = _mm256_set1_ps(f32::NEG_INFINITY);
+        let (c1, c2, c3) = (
+            _mm256_set1_ps(super::LN_C1),
+            _mm256_set1_ps(super::LN_C2),
+            _mm256_set1_ps(super::LN_C3),
+        );
+        let (c4, c5) = (_mm256_set1_ps(super::LN_C4), _mm256_set1_ps(super::LN_C5));
+        let expo_mask = _mm256_set1_epi32(0xFF);
+        let bias = _mm256_set1_epi32(127);
+        let mant_mask = _mm256_set1_epi32(0x007F_FFFF);
+        let mant_one = _mm256_set1_epi32(0x3F80_0000);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(p.add(i));
+            let bits = _mm256_castps_si256(x);
+            let e_i = _mm256_sub_epi32(
+                _mm256_and_si256(_mm256_srli_epi32::<23>(bits), expo_mask),
+                bias,
+            );
+            let e = _mm256_cvtepi32_ps(e_i);
+            let m = _mm256_castsi256_ps(_mm256_or_si256(
+                _mm256_and_si256(bits, mant_mask),
+                mant_one,
+            ));
+            let u = _mm256_div_ps(_mm256_sub_ps(m, one), _mm256_add_ps(m, one));
+            let u2 = _mm256_mul_ps(u, u);
+            let mut q = _mm256_add_ps(c4, _mm256_mul_ps(u2, c5));
+            q = _mm256_add_ps(c3, _mm256_mul_ps(u2, q));
+            q = _mm256_add_ps(c2, _mm256_mul_ps(u2, q));
+            q = _mm256_add_ps(c1, _mm256_mul_ps(u2, q));
+            q = _mm256_add_ps(one, _mm256_mul_ps(u2, q));
+            let lnm = _mm256_mul_ps(_mm256_mul_ps(two, u), q);
+            let mut r = _mm256_add_ps(_mm256_mul_ps(e, ln2), lnm);
+            // ±0 → -inf, then negative-or-NaN → canonical NaN (NGE is
+            // false for -0, so the -inf from the zero blend survives)
+            r = _mm256_blendv_ps(r, neginf, _mm256_cmp_ps::<_CMP_EQ_OQ>(x, zero));
+            r = _mm256_blendv_ps(r, nan, _mm256_cmp_ps::<_CMP_NGE_UQ>(x, zero));
+            _mm256_storeu_ps(p.add(i), r);
+            i += 8;
+        }
+        while i < n {
+            xs[i] = super::fast_ln_lane(xs[i]);
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -864,6 +1242,128 @@ mod neon {
             }
         }
     }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vmla(acc: &mut [f32], a: &[f32], b: &[f32]) {
+        let n = acc.len().min(a.len()).min(b.len());
+        let (pd, pa, pb) = (acc.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = vld1q_f32(pd.add(i));
+            let prod = vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            vst1q_f32(pd.add(i), vaddq_f32(d, prod));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += a[i] * b[i];
+            i += 1;
+        }
+    }
+
+    /// 4-wide Fast-tier exp: the exact operation sequence of
+    /// `fast_exp_lane`, which handles the `bb mod 4` tail.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vexp(xs: &mut [f32]) {
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let log2e = vdupq_n_f32(std::f32::consts::LOG2_E);
+        let hi = vdupq_n_f32(super::EXP_HI);
+        let lo = vdupq_n_f32(super::EXP_LO);
+        let one = vdupq_n_f32(1.0);
+        let nan = vdupq_n_f32(f32::NAN);
+        let zero = vdupq_n_f32(0.0);
+        let (c1, c2, c3) = (
+            vdupq_n_f32(super::EXP_C1),
+            vdupq_n_f32(super::EXP_C2),
+            vdupq_n_f32(super::EXP_C3),
+        );
+        let (c4, c5, c6) = (
+            vdupq_n_f32(super::EXP_C4),
+            vdupq_n_f32(super::EXP_C5),
+            vdupq_n_f32(super::EXP_C6),
+        );
+        let bias = vdupq_n_s32(127);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(p.add(i));
+            let t = vmulq_f32(vminq_f32(x, hi), log2e);
+            let kf = vrndmq_f32(t);
+            let f = vsubq_f32(t, kf);
+            let mut q = vaddq_f32(c5, vmulq_f32(f, c6));
+            q = vaddq_f32(c4, vmulq_f32(f, q));
+            q = vaddq_f32(c3, vmulq_f32(f, q));
+            q = vaddq_f32(c2, vmulq_f32(f, q));
+            q = vaddq_f32(c1, vmulq_f32(f, q));
+            q = vaddq_f32(one, vmulq_f32(f, q));
+            let ki = vcvtq_s32_f32(kf);
+            let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(ki, bias)));
+            let mut r = vmulq_f32(scale, q);
+            // flush x < EXP_LO to 0 (compare is false for NaN lanes)
+            r = vbslq_f32(vcltq_f32(x, lo), zero, r);
+            // canonical NaN for NaN input, matching the scalar lane
+            r = vbslq_f32(vmvnq_u32(vceqq_f32(x, x)), nan, r);
+            vst1q_f32(p.add(i), r);
+            i += 4;
+        }
+        while i < n {
+            xs[i] = super::fast_exp_lane(xs[i]);
+            i += 1;
+        }
+    }
+
+    /// 4-wide Fast-tier ln: the exact operation sequence of
+    /// `fast_ln_lane`, which handles the `bb mod 4` tail.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn vln(xs: &mut [f32]) {
+        let n = xs.len();
+        let p = xs.as_mut_ptr();
+        let one = vdupq_n_f32(1.0);
+        let two = vdupq_n_f32(2.0);
+        let zero = vdupq_n_f32(0.0);
+        let ln2 = vdupq_n_f32(std::f32::consts::LN_2);
+        let nan = vdupq_n_f32(f32::NAN);
+        let neginf = vdupq_n_f32(f32::NEG_INFINITY);
+        let (c1, c2, c3) = (
+            vdupq_n_f32(super::LN_C1),
+            vdupq_n_f32(super::LN_C2),
+            vdupq_n_f32(super::LN_C3),
+        );
+        let (c4, c5) = (vdupq_n_f32(super::LN_C4), vdupq_n_f32(super::LN_C5));
+        let expo_mask = vdupq_n_u32(0xFF);
+        let bias = vdupq_n_s32(127);
+        let mant_mask = vdupq_n_u32(0x007F_FFFF);
+        let mant_one = vdupq_n_u32(0x3F80_0000);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(p.add(i));
+            let bits = vreinterpretq_u32_f32(x);
+            let e_i = vsubq_s32(
+                vreinterpretq_s32_u32(vandq_u32(vshrq_n_u32::<23>(bits), expo_mask)),
+                bias,
+            );
+            let e = vcvtq_f32_s32(e_i);
+            let m = vreinterpretq_f32_u32(vorrq_u32(vandq_u32(bits, mant_mask), mant_one));
+            let u = vdivq_f32(vsubq_f32(m, one), vaddq_f32(m, one));
+            let u2 = vmulq_f32(u, u);
+            let mut q = vaddq_f32(c4, vmulq_f32(u2, c5));
+            q = vaddq_f32(c3, vmulq_f32(u2, q));
+            q = vaddq_f32(c2, vmulq_f32(u2, q));
+            q = vaddq_f32(c1, vmulq_f32(u2, q));
+            q = vaddq_f32(one, vmulq_f32(u2, q));
+            let lnm = vmulq_f32(vmulq_f32(two, u), q);
+            let mut r = vaddq_f32(vmulq_f32(e, ln2), lnm);
+            // ±0 → -inf, then negative-or-NaN → canonical NaN
+            r = vbslq_f32(vceqq_f32(x, zero), neginf, r);
+            let bad = vorrq_u32(vcltq_f32(x, zero), vmvnq_u32(vceqq_f32(x, x)));
+            r = vbslq_f32(bad, nan, r);
+            vst1q_f32(p.add(i), r);
+            i += 4;
+        }
+        while i < n {
+            xs[i] = super::fast_ln_lane(xs[i]);
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1045,6 +1545,71 @@ pub fn einsum_block(
     }
 }
 
+/// `acc[i] += a[i] * b[i]` — element-wise multiply-accumulate (separate
+/// multiply and add, never FMA), the tiled backward's child-gradient
+/// primitive. Element-wise, hence trivially bit-identical across ISAs.
+#[inline]
+pub fn vmla(isa: Isa, acc: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(acc.len() <= a.len() && acc.len() <= b.len());
+    match isa {
+        Isa::Scalar => vmla_scalar(acc, a, b),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::vmla(acc, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::vmla(acc, a, b) },
+    }
+}
+
+/// In-place batched `exp` in the given math tier.
+///
+/// * [`MathTier::Exact`]: per-element libm `x.exp()` — bit-identical to
+///   the engines' historical scalar calls, on every ISA.
+/// * [`MathTier::Fast`]: the vectorized polynomial path (8 lanes on
+///   AVX2, 4 on NEON, scalar fallback), bit-identical across ISAs; see
+///   the module docs for the accuracy contract and edge semantics.
+pub fn vexp(isa: Isa, math: MathTier, xs: &mut [f32]) {
+    match math {
+        MathTier::Exact => {
+            for v in xs.iter_mut() {
+                *v = v.exp();
+            }
+        }
+        MathTier::Fast => match isa {
+            Isa::Scalar => {
+                for v in xs.iter_mut() {
+                    *v = fast_exp_lane(*v);
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::vexp(xs) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::vexp(xs) },
+        },
+    }
+}
+
+/// In-place batched `ln` in the given math tier (see [`vexp`]).
+pub fn vln(isa: Isa, math: MathTier, xs: &mut [f32]) {
+    match math {
+        MathTier::Exact => {
+            for v in xs.iter_mut() {
+                *v = v.ln();
+            }
+        }
+        MathTier::Fast => match isa {
+            Isa::Scalar => {
+                for v in xs.iter_mut() {
+                    *v = fast_ln_lane(*v);
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::vln(xs) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::vln(xs) },
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // The comprehensive bit-identity suites (scalar vs SIMD across every
@@ -1096,5 +1661,69 @@ mod tests {
         assert_eq!(block_rows(8), 8);
         assert_eq!(block_rows(16), 16);
         assert_eq!(block_rows(256), 16);
+    }
+
+    #[test]
+    fn tuned_block_rows_shrink_with_k_and_respect_lanes() {
+        for isa in [Isa::Scalar, Isa::best()] {
+            let lane = isa.lanes();
+            let mut prev = usize::MAX;
+            for k in [2usize, 4, 8, 10, 16, 32] {
+                let bb = tune_block_rows(k, 4096, isa);
+                assert!(bb >= lane, "k={k}: bb={bb} below lane width {lane}");
+                assert!(bb <= 64, "k={k}: bb={bb} above cap");
+                assert_eq!(bb % lane, 0, "k={k}: bb={bb} not lane-aligned");
+                assert!(bb <= prev, "block size must not grow with k");
+                prev = bb;
+            }
+            // the batch capacity still caps the block
+            assert_eq!(tune_block_rows(8, 3, isa), 3);
+            assert_eq!(tune_block_rows(8, 0, isa), 1);
+        }
+    }
+
+    #[test]
+    fn detect_honors_force_fastmath() {
+        force_fastmath(true);
+        assert_eq!(MathTier::detect(), MathTier::Fast);
+        force_fastmath(false);
+        if std::env::var("EINET_KERNELS").is_err() {
+            assert_eq!(MathTier::detect(), MathTier::Exact);
+        }
+    }
+
+    #[test]
+    fn vmla_matches_scalar_bitwise() {
+        let isa = Isa::best();
+        let n = 37;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).cos()).collect();
+        let mut d1: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let mut d2 = d1.clone();
+        vmla(Isa::Scalar, &mut d1, &a, &b);
+        vmla(isa, &mut d2, &a, &b);
+        for (x, y) in d1.iter().zip(&d2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn exact_tier_is_libm_bitwise() {
+        let isa = Isa::best();
+        let mut xs: Vec<f32> = (-40..40).map(|i| i as f32 * 0.173).collect();
+        let want_exp: Vec<f32> = xs.iter().map(|v| v.exp()).collect();
+        let mut es = xs.clone();
+        vexp(isa, MathTier::Exact, &mut es);
+        for (g, w) in es.iter().zip(&want_exp) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        for v in xs.iter_mut() {
+            *v = v.abs() + 0.01;
+        }
+        let want_ln: Vec<f32> = xs.iter().map(|v| v.ln()).collect();
+        vln(isa, MathTier::Exact, &mut xs);
+        for (g, w) in xs.iter().zip(&want_ln) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
     }
 }

@@ -928,6 +928,121 @@ impl EmStats {
 }
 
 // ---------------------------------------------------------------------------
+// StatsShard: the sharded E-step reply (segment-owned spans)
+// ---------------------------------------------------------------------------
+
+/// [`ArenaShard`]'s mirror image for the reduce direction: the
+/// concatenated contents of a segment's owned [`EmStats`] spans, plus
+/// the span tables. A scope-partitioned worker only ever *writes* the
+/// statistics of parameters its segment reads (`grad` mirrors the arena
+/// scalar-for-scalar, so the segment's `param_spans` bound its gradient
+/// writes) and of variables it owns (`sum_p` is var-major `[D, K, R]`,
+/// so variable `d` owns `[d·K·R, (d+1)·K·R)`). Shipping only those
+/// spans makes the reduce traffic scale with the shard, not the model —
+/// the full-layout `EmStats` a worker used to send was almost entirely
+/// zeros.
+///
+/// `count`/`loglik` ride along verbatim: only the spine's
+/// `seed_root_grad` sets them, so worker shards carry zeros and the
+/// merge stays exact. Because every statistic scalar is owned by
+/// exactly one segment, span-packed merging is bit-identical to the
+/// flat [`EmStats::merge`] it replaces.
+#[derive(Clone, Debug)]
+pub struct StatsShard {
+    /// global `[lo, hi)` spans into [`EmStats::grad`], ascending and
+    /// disjoint (the segment's `param_spans`)
+    pub grad_spans: Vec<(usize, usize)>,
+    /// the grad spans' scalars, concatenated in span order
+    pub grad: Vec<f32>,
+    /// global `[lo, hi)` spans into [`EmStats::sum_p`] (one `K·R` span
+    /// per owned variable, merged where adjacent)
+    pub sum_p_spans: Vec<(usize, usize)>,
+    /// the sum_p spans' scalars, concatenated in span order
+    pub sum_p: Vec<f32>,
+    /// number of samples accumulated (zero for pure worker segments)
+    pub count: usize,
+    /// sum of log-likelihoods (zero for pure worker segments)
+    pub loglik: f64,
+}
+
+impl StatsShard {
+    /// Gather a shard from a full-layout accumulator.
+    pub fn gather(
+        stats: &EmStats,
+        grad_spans: &[(usize, usize)],
+        sum_p_spans: &[(usize, usize)],
+    ) -> Self {
+        let gn: usize = grad_spans.iter().map(|&(lo, hi)| hi - lo).sum();
+        let mut grad = Vec::with_capacity(gn);
+        for &(lo, hi) in grad_spans {
+            grad.extend_from_slice(&stats.grad[lo..hi]);
+        }
+        let pn: usize = sum_p_spans.iter().map(|&(lo, hi)| hi - lo).sum();
+        let mut sum_p = Vec::with_capacity(pn);
+        for &(lo, hi) in sum_p_spans {
+            sum_p.extend_from_slice(&stats.sum_p[lo..hi]);
+        }
+        Self {
+            grad_spans: grad_spans.to_vec(),
+            grad,
+            sum_p_spans: sum_p_spans.to_vec(),
+            sum_p,
+            count: stats.count,
+            loglik: stats.loglik,
+        }
+    }
+
+    /// Add the shard's scalars into a full-layout accumulator (the
+    /// coordinator's reduce step).
+    pub fn merge_into(&self, dst: &mut EmStats) {
+        let mut off = 0usize;
+        for &(lo, hi) in &self.grad_spans {
+            let n = hi - lo;
+            for (a, b) in dst.grad[lo..hi].iter_mut().zip(&self.grad[off..off + n]) {
+                *a += b;
+            }
+            off += n;
+        }
+        off = 0;
+        for &(lo, hi) in &self.sum_p_spans {
+            let n = hi - lo;
+            for (a, b) in dst.sum_p[lo..hi]
+                .iter_mut()
+                .zip(&self.sum_p[off..off + n])
+            {
+                *a += b;
+            }
+            off += n;
+        }
+        dst.count += self.count;
+        dst.loglik += self.loglik;
+    }
+
+    /// Bytes on the wire (the reduce cost this type exists to shrink).
+    pub fn bytes(&self) -> usize {
+        4 * (self.grad.len() + self.sum_p.len())
+            + 16 * (self.grad_spans.len() + self.sum_p_spans.len())
+            + 16 // count + loglik
+    }
+}
+
+/// The `sum_p` spans a segment's owned variables cover: one `[d·K·R,
+/// (d+1)·K·R)` span per owned variable `d`, with adjacent spans merged
+/// (owned vars are ascending).
+pub fn sum_p_spans_for_vars(layout: &ParamLayout, vars: &[usize]) -> Vec<(usize, usize)> {
+    let kr = layout.k * layout.num_replica;
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for &d in vars {
+        let (lo, hi) = (d * kr, (d + 1) * kr);
+        match spans.last_mut() {
+            Some(last) if last.1 == lo => last.1 = hi,
+            _ => spans.push((lo, hi)),
+        }
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------------
 // The Engine trait
 // ---------------------------------------------------------------------------
 
@@ -1560,6 +1675,41 @@ mod tests {
         assert_eq!(a.grad_w(0)[0], 1.5);
         assert_eq!(a.count, 7);
         assert_eq!(a.loglik, -5.0);
+    }
+
+    #[test]
+    fn stats_shard_round_trips_and_merges_bitwise() {
+        let p = pd_plan();
+        let params = ParamArena::init(&p, LeafFamily::Bernoulli, 4);
+        let layout = &params.layout;
+        // a worker accumulator that only touched its owned spans
+        let mut worker = EmStats::zeros_like(&params);
+        let w_off = layout.levels[0].w_off;
+        let grad_spans = vec![(0usize, 4usize), (w_off, w_off + 8)];
+        worker.grad[1] = 0.25;
+        worker.grad[w_off + 3] = -1.5;
+        let sum_p_spans = sum_p_spans_for_vars(layout, &[0, 1, 3]);
+        // vars 0 and 1 are adjacent: their K·R spans merge into one
+        let kr = layout.k * layout.num_replica;
+        assert_eq!(sum_p_spans, vec![(0, 2 * kr), (3 * kr, 4 * kr)]);
+        worker.sum_p[kr + 2] = 0.75;
+        worker.sum_p[3 * kr] = 2.0;
+
+        let shard = StatsShard::gather(&worker, &grad_spans, &sum_p_spans);
+        assert_eq!(shard.grad.len(), 12);
+        assert_eq!(shard.sum_p.len(), 3 * kr);
+        assert!(shard.bytes() < 4 * (worker.grad.len() + worker.sum_p.len()));
+
+        // merging the packed shard == merging the full accumulator
+        let mut via_shard = EmStats::zeros_like(&params);
+        via_shard.grad[1] = 1.0; // pre-existing spine contribution
+        let mut via_flat = via_shard.clone();
+        shard.merge_into(&mut via_shard);
+        via_flat.merge(&worker);
+        assert_eq!(via_shard.grad, via_flat.grad);
+        assert_eq!(via_shard.sum_p, via_flat.sum_p);
+        assert_eq!(via_shard.count, via_flat.count);
+        assert_eq!(via_shard.loglik, via_flat.loglik);
     }
 
     #[test]

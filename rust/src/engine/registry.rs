@@ -119,6 +119,17 @@ impl EngineRegistry {
     pub fn entries(&self) -> &[EngineEntry] {
         &self.entries
     }
+
+    /// The serving-side fast-math knob: `true` routes every engine built
+    /// after this call (by any factory — the tier is resolved at plan
+    /// lowering) through the ULP-bounded
+    /// [`MathTier::Fast`](super::kernels::MathTier) polynomial `exp`/`ln`
+    /// tier; `false` restores the bit-exact libm default. Process-wide,
+    /// the programmatic twin of `EINET_KERNELS=fastmath` — engines
+    /// already built keep the tier recorded in their `ExecPlan`.
+    pub fn set_fastmath(&self, on: bool) {
+        super::kernels::force_fastmath(on);
+    }
 }
 
 impl Default for EngineRegistry {
@@ -157,6 +168,16 @@ mod tests {
             (got[0] - got[1]).abs() < 1e-4,
             "registry-built backends disagree: {got:?}"
         );
+    }
+
+    #[test]
+    fn fastmath_knob_selects_the_tier_for_new_plans() {
+        use crate::engine::kernels::MathTier;
+        let reg = EngineRegistry::builtin();
+        reg.set_fastmath(true);
+        assert_eq!(MathTier::detect(), MathTier::Fast);
+        reg.set_fastmath(false);
+        assert_eq!(MathTier::detect(), MathTier::Exact);
     }
 
     #[test]

@@ -18,8 +18,14 @@
 //! shared top-down decode works here too. The element-wise parts of the
 //! baseline (outer-sum rows, running-max pivots) dispatch through
 //! [`super::kernels`] like the dense engine's do — bit-identically — but
-//! the `K^3` exp-operations that define the baseline stay scalar, so the
-//! dense-vs-sparse comparison keeps measuring what the paper measures.
+//! the `K^3` exp-operations that define the baseline stay *scalar calls*,
+//! so the dense-vs-sparse comparison keeps measuring what the paper
+//! measures. Those calls route through the plan's
+//! [`kernels::MathTier`] ([`kernels::MathTier::exp1`]/
+//! [`kernels::MathTier::ln1`]): under the default Exact tier they are
+//! plain libm, bit-identical to before; under the opt-in Fast tier the
+//! baseline gets the same polynomial transcendentals as the dense
+//! engine, keeping the comparison apples-to-apples per tier.
 
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
@@ -119,15 +125,16 @@ impl SparseEngine {
     /// Refresh the log-domain cache of ONE weight span (`[w, w + len)` in
     /// arena coordinates). Called per einsum/mix step, so a segmented
     /// forward converts only the weights its shard owns — never touching
-    /// the unowned (zero) spans of a worker-local arena.
+    /// the unowned (zero) spans of a worker-local arena. The clamped
+    /// values are staged first and converted in one [`kernels::vln`]
+    /// sweep under the plan's tier (Exact replays libm per element).
     fn refresh_log_span(&mut self, params: &ParamArena, w: usize, len: usize) {
         let lo = self.exec.layout.theta_len;
-        for (dst, &src) in self.log_params[w - lo..w - lo + len]
-            .iter_mut()
-            .zip(&params.data[w..w + len])
-        {
-            *dst = src.max(1e-30).ln();
+        let span = &mut self.log_params[w - lo..w - lo + len];
+        for (dst, &src) in span.iter_mut().zip(&params.data[w..w + len]) {
+            *dst = src.max(1e-30);
         }
+        kernels::vln(self.exec.simd, self.exec.math, span);
     }
 
     // ------------------------------------------------------------------
@@ -279,6 +286,7 @@ impl SparseEngine {
         let k = self.exec.k;
         let kk2 = k * k;
         let isa = self.exec.simd;
+        let math = self.exec.math;
         let poff = self.prod_off[pid];
         for b in 0..bn {
             let lrow = left + b * k;
@@ -307,9 +315,9 @@ impl SparseEngine {
                     Semiring::SumProduct => {
                         let mut s = 0.0f32;
                         for (idx, &wv) in wrow.iter().enumerate() {
-                            s += (wv + self.prod_arena[prow + idx] - m).exp();
+                            s += math.exp1(wv + self.prod_arena[prow + idx] - m);
                         }
-                        m + s.ln()
+                        m + math.ln1(s)
                     }
                     Semiring::MaxProduct => m,
                 };
@@ -341,6 +349,7 @@ impl SparseEngine {
         sr: Semiring,
     ) {
         let isa = self.exec.simd;
+        let math = self.exec.math;
         let wl = w - self.exec.layout.theta_len;
         let n = bn * ko;
         let m = &mut self.t_mix[..n];
@@ -359,12 +368,13 @@ impl SparseEngine {
                 Semiring::SumProduct => {
                     let mut s = 0.0f32;
                     for c in 0..children {
-                        s += (self.log_params[wl + c]
-                            + self.scratch[child + c * stride + i]
-                            - mi)
-                            .exp();
+                        s += math.exp1(
+                            self.log_params[wl + c]
+                                + self.scratch[child + c * stride + i]
+                                - mi,
+                        );
                     }
-                    mi + s.ln()
+                    mi + math.ln1(s)
                 }
                 Semiring::MaxProduct => mi,
             };
@@ -498,6 +508,7 @@ impl SparseEngine {
         bn: usize,
         stats: &mut EmStats,
     ) {
+        let math = self.exec.math;
         let wl = w - self.exec.layout.theta_len;
         for b in 0..bn {
             for kk in 0..ko {
@@ -508,9 +519,10 @@ impl SparseEngine {
                 let logs = self.arena[out + b * ko + kk];
                 for c in 0..children {
                     let idx = child + c * stride + b * ko + kk;
-                    let ew = (self.scratch[idx] - logs).exp();
+                    let ew = math.exp1(self.scratch[idx] - logs);
                     stats.grad[w + c] += g * ew;
-                    self.grad_scratch[idx] += g * self.log_params[wl + c].exp() * ew;
+                    self.grad_scratch[idx] +=
+                        g * math.exp1(self.log_params[wl + c]) * ew;
                 }
             }
         }
@@ -531,6 +543,7 @@ impl SparseEngine {
     ) {
         let k = self.exec.k;
         let kk2 = k * k;
+        let math = self.exec.math;
         let poff = self.prod_off[pid];
         let wl = w - self.exec.layout.theta_len;
         for b in 0..bn {
@@ -553,10 +566,10 @@ impl SparseEngine {
                     wrow.iter().zip(gslot.iter_mut()).enumerate()
                 {
                     // d logS / d logProd = exp(logw + prod - logS)
-                    let e = (wv + self.prod_arena[prow + idx] - logs).exp();
+                    let e = math.exp1(wv + self.prod_arena[prow + idx] - logs);
                     self.grad_prod[prow + idx] += g * e;
                     // EM wants d logS / d (linear w) = exp(prod - logS)
-                    *gv += g * (self.prod_arena[prow + idx] - logs).exp();
+                    *gv += g * math.exp1(self.prod_arena[prow + idx] - logs);
                 }
             }
         }

@@ -11,6 +11,7 @@
 //! observation channels per variable (the paper's RGB-factorized leaves),
 //! Categorical, and Binomial.
 
+use crate::engine::kernels::MathTier;
 use crate::util::rng::Rng;
 
 /// Supported exponential families.
@@ -68,25 +69,34 @@ impl LeafFamily {
     /// batch moves all transcendentals off the per-sample hot path — see
     /// [`LeafFamily::log_prob_with_const`].
     pub fn log_norm_const(&self, theta: &[f32]) -> f32 {
+        self.log_norm_const_tier(theta, MathTier::Exact)
+    }
+
+    /// Tier-threaded [`LeafFamily::log_norm_const`]: the batched leaf
+    /// refresh passes the plan's [`MathTier`] so the per-component
+    /// softmax/log-normalizer loops ride the fast-math tier when it is
+    /// selected. `MathTier::Exact` replays the libm operation sequence
+    /// bit-for-bit.
+    pub fn log_norm_const_tier(&self, theta: &[f32], math: MathTier) -> f32 {
         match self {
-            LeafFamily::Bernoulli => softplus(theta[0]),
+            LeafFamily::Bernoulli => softplus_tier(theta[0], math),
             LeafFamily::Gaussian { channels } => {
                 let ch = *channels;
                 let mut c = 0.0f32;
                 for i in 0..ch {
                     let (t1, t2) = (theta[i], theta[ch + i]);
-                    c += -t1 * t1 / (4.0 * t2) - 0.5 * (-2.0 * t2).ln()
+                    c += -t1 * t1 / (4.0 * t2) - 0.5 * math.ln1(-2.0 * t2)
                         + 0.5 * (2.0 * std::f32::consts::PI).ln();
                 }
                 c
             }
             LeafFamily::Categorical { .. } => {
                 let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let z: f32 = theta.iter().map(|&t| (t - m).exp()).sum();
-                m + z.ln()
+                let z: f32 = theta.iter().map(|&t| math.exp1(t - m)).sum();
+                m + math.ln1(z)
             }
             LeafFamily::Binomial { trials } => {
-                *trials as f32 * softplus(theta[0])
+                *trials as f32 * softplus_tier(theta[0], math)
             }
         }
     }
@@ -383,6 +393,33 @@ impl LeafFamily {
         }
     }
 
+    /// Tier-threaded [`LeafFamily::emit_table`]. Under
+    /// [`MathTier::Exact`] this is bit-identical to `emit_table`; under
+    /// [`MathTier::Fast`] the table entries come from the polynomial
+    /// f32 exp (widened to f64 afterwards), so table-driven draws may
+    /// diverge from the exact per-sample [`LeafFamily::sample`] stream,
+    /// which always uses libm. The table↔sample bit-identity contract
+    /// therefore holds only in the default Exact tier.
+    pub fn emit_table_tier(&self, theta: &[f32], out: &mut [f64], math: MathTier) {
+        match math {
+            MathTier::Exact => self.emit_table(theta, out),
+            MathTier::Fast => match self {
+                LeafFamily::Bernoulli => {
+                    out[0] = (1.0 / (1.0 + math.exp1(-theta[0]))) as f64
+                }
+                LeafFamily::Categorical { cats } => {
+                    let m = theta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    for (o, &t) in out[..*cats].iter_mut().zip(theta) {
+                        *o = math.exp1(t - m) as f64;
+                    }
+                }
+                LeafFamily::Gaussian { .. } | LeafFamily::Binomial { .. } => {
+                    unreachable!("no emission table for {self:?}")
+                }
+            },
+        }
+    }
+
     /// Draw from a component through its cached emission table —
     /// bit-identical to [`LeafFamily::sample`] on the same RNG state.
     pub fn sample_from_table(&self, tab: &[f64], rng: &mut Rng, out: &mut [f32]) {
@@ -486,6 +523,24 @@ fn softplus(t: f32) -> f32 {
     }
 }
 
+/// Tier-threaded softplus. Exact keeps the `ln_1p` formulation
+/// bit-for-bit; Fast substitutes `ln(1 + exp(t))` through the
+/// polynomial tier (the `ln_1p` refinement only matters below the
+/// tier's own error floor).
+#[inline]
+fn softplus_tier(t: f32, math: MathTier) -> f32 {
+    match math {
+        MathTier::Exact => softplus(t),
+        MathTier::Fast => {
+            if t > 20.0 {
+                t
+            } else {
+                math.ln1(1.0 + math.exp1(t))
+            }
+        }
+    }
+}
+
 fn ln_choose(n: u32, k: u32) -> f32 {
     debug_assert!(k <= n);
     let mut acc = 0.0f64;
@@ -516,6 +571,44 @@ mod tests {
             .map(|v| fam.log_prob(&theta, &[v as f32]).exp())
             .sum();
         assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn tiered_leaf_paths_match_exact_and_stay_close_under_fast() {
+        let mut rng = Rng::new(31);
+        for fam in [
+            LeafFamily::Bernoulli,
+            LeafFamily::Gaussian { channels: 2 },
+            LeafFamily::Categorical { cats: 5 },
+            LeafFamily::Binomial { trials: 4 },
+        ] {
+            let mut theta = vec![0.0f32; fam.stat_dim()];
+            fam.init_theta(&mut rng, &mut theta);
+
+            let want = fam.log_norm_const(&theta);
+            let exact = fam.log_norm_const_tier(&theta, MathTier::Exact);
+            assert_eq!(want.to_bits(), exact.to_bits(), "{fam:?} exact tier");
+            let fast = fam.log_norm_const_tier(&theta, MathTier::Fast);
+            assert!(
+                (fast - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "{fam:?} fast log_norm_const drift: {fast} vs {want}"
+            );
+
+            if let Some(w) = fam.emit_table_width() {
+                let mut t_ref = vec![0.0f64; w];
+                let mut t_tier = vec![0.0f64; w];
+                fam.emit_table(&theta, &mut t_ref);
+                fam.emit_table_tier(&theta, &mut t_tier, MathTier::Exact);
+                assert_eq!(t_ref, t_tier, "{fam:?} exact table");
+                fam.emit_table_tier(&theta, &mut t_tier, MathTier::Fast);
+                for (a, b) in t_ref.iter().zip(&t_tier) {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                        "{fam:?} fast table drift: {b} vs {a}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -85,7 +85,9 @@ commands:
 
 global options: --engine dense|sparse selects the backend by registry
 name; --shards N scope-partitions the model across N segment workers
-(model-parallel; 0 = data-parallel / single engine)
+(model-parallel; 0 = data-parallel / single engine); --fastmath opts
+into the ULP-bounded vectorized exp/ln tier (same as
+EINET_KERNELS=fastmath; default stays bit-exact libm)
 
 benches: cargo bench --bench fig3_train | fig6_inference | einsum_op |
          ablation_stability
@@ -114,8 +116,17 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "shards", help: "scope-partition across N workers (0: data-parallel)", default: Some("0"), is_flag: false },
         OptSpec { name: "mode", help: "query mode: loglik|marginal|conditional|mpe", default: Some("marginal"), is_flag: false },
         OptSpec { name: "obs-frac", help: "fraction of variables observed (query/mpe evidence)", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "fastmath", help: "opt into the ULP-bounded fast-math exp/ln tier (EINET_KERNELS=fastmath)", default: None, is_flag: true },
         OptSpec { name: "help", help: "show usage", default: None, is_flag: true },
     ]
+}
+
+/// Apply the `--fastmath` flag before any engine is built: the tier is
+/// resolved once at plan lowering and recorded in the `ExecPlan`.
+fn apply_fastmath(a: &Args) {
+    if a.flag("fastmath") {
+        einet::engine::kernels::force_fastmath(true);
+    }
 }
 
 fn setup(
@@ -207,6 +218,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         println!("{}", usage("einet train", "train on a DEBD-like dataset", &spec));
         return Ok(());
     }
+    apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     let mut params = EinetParams::init(&plan, family, a.get_usize("seed", &spec)? as u64);
     let cfg = TrainConfig {
@@ -254,6 +266,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
+    apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     // zero-copy: the tensor payload is served straight from the mapping
     let params = load_checked(&a, &spec, &plan, family)?;
@@ -304,6 +317,7 @@ fn cmd_query(argv: &[String]) -> Result<()> {
         println!("{}", usage("einet query", "typed queries over the test split", &spec));
         return Ok(());
     }
+    apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     let params = load_checked(&a, &spec, &plan, family)?;
     let d = plan.graph.num_vars;
@@ -355,6 +369,7 @@ fn cmd_mpe(argv: &[String]) -> Result<()> {
         println!("{}", usage("einet mpe", "exact max-product completions", &spec));
         return Ok(());
     }
+    apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     let params = load_checked(&a, &spec, &plan, family)?;
     let d = plan.graph.num_vars;
@@ -414,6 +429,7 @@ fn cmd_mpe(argv: &[String]) -> Result<()> {
 fn cmd_sample(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
+    apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     // zero-copy: the tensor payload is served straight from the mapping
     let params = load_checked(&a, &spec, &plan, family)?;
@@ -444,6 +460,7 @@ fn cmd_sample(argv: &[String]) -> Result<()> {
 fn cmd_table1(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
+    apply_fastmath(&a);
     let k = a.get_usize("k", &spec)?;
     let replica = a.get_usize("replica", &spec)?;
     let epochs = a.get_usize("epochs", &spec)?;
@@ -570,6 +587,7 @@ fn cmd_e2e(argv: &[String]) -> Result<()> {
 fn cmd_serve_demo(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
+    apply_fastmath(&a);
     let nv = 16;
     let graph = einet::structure::random_binary_trees(nv, 3, 4, 0);
     let plan = LayeredPlan::compile(graph, a.get_usize("k", &spec)?);

@@ -1,14 +1,22 @@
-//! Fast transcendental approximations for the engine hot paths.
+//! Scalar fast transcendental approximations (reference prototypes).
 //!
 //! The dense engine spends a large share of its time in `exp` (2K per
 //! node, Eq. 4) and `ln` (K per node); the sparse baseline spends K^3 in
 //! `exp`. These branch-free polynomial approximations (~1e-7 relative
 //! error, exact at 0) were evaluated as a candidate optimization.
 //!
-//! **Measured outcome (EXPERIMENTS.md §Perf): no speedup on this CPU** —
-//! the scalar call overhead matches libm's exp/ln, so the engines keep the
-//! std functions. The module stays as a tested utility for targets where
-//! libm is slower (and as a record of the experiment).
+//! **Measured outcome (EXPERIMENTS.md §Perf): no speedup as scalar
+//! calls** — one-at-a-time, the call overhead matches libm's exp/ln.
+//! The win only materializes vectorized: the *shipped* fast-math tier
+//! lives in [`crate::engine::kernels`] ([`vexp`]/[`vln`] under
+//! [`MathTier::Fast`]), which evaluates the same polynomial shapes 8
+//! lanes at a time (AVX2; 4 on NEON) with a documented ULP-bounded
+//! accuracy contract and IEEE edge semantics. This module stays as the
+//! tested scalar reference the kernel lanes were derived from.
+//!
+//! [`vexp`]: crate::engine::kernels::vexp
+//! [`vln`]: crate::engine::kernels::vln
+//! [`MathTier::Fast`]: crate::engine::kernels::MathTier::Fast
 
 /// exp(x) via 2^(x log2 e) = 2^k * 2^f with a degree-6 polynomial for
 /// 2^f on f in [0, 1). Max relative error ~1e-5 (Taylor tail plus

@@ -1,0 +1,353 @@
+//! The fast-math tier's accuracy contract, pinned.
+//!
+//! `MathTier::Fast` trades bit-exactness for vectorized polynomial
+//! `exp`/`ln`. This suite is the contract that trade is held to:
+//!
+//! * `vexp` within 512 ULP of libm over the engines' full argument range
+//!   [-87, 88]; `vln` within 512 ULP or 1e-6 absolute (the absolute
+//!   fallback covers results near ln(1) = 0, where ULPs shrink to
+//!   nothing);
+//! * IEEE edge semantics — exp: -inf→0, flush below -87, finite
+//!   saturation above +88, NaN→NaN, exp(0)=1 exactly; ln: ±0→-inf,
+//!   negative/NaN→NaN, +inf→finite, ln(1)=0 exactly;
+//! * every ISA path of the Fast tier is bit-identical to its scalar
+//!   lane, and the one-off `exp1`/`ln1` calls are bit-identical to the
+//!   batched sweeps (so engines may mix them freely);
+//! * end-to-end: a Fast-tier engine's log-likelihoods drift from the
+//!   Exact tier by well under the parity tolerance, EM statistics stay
+//!   finite, and dense/sparse still agree with each other under Fast.
+//!
+//! The Exact tier's own guard (bitwise libm replay) is in
+//! `kernel_identity.rs`. Tier forcing is process-global, so every test
+//! that flips it holds `TIER_LOCK` and restores the default before
+//! releasing.
+
+use einet::engine::kernels::{self, Isa, MathTier};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    DenseEngine, EinetParams, EmStats, Engine, LayeredPlan, LeafFamily,
+    SparseEngine,
+};
+
+/// `force_fastmath` is process-global; serialize the tests that flip it.
+static TIER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Monotone integer key: consecutive floats (of either sign) map to
+/// consecutive integers, so |key(a) - key(b)| counts the ULP steps
+/// between them.
+fn ulp_key(x: f32) -> i64 {
+    let i = x.to_bits() as i32;
+    (if i < 0 { i32::MIN.wrapping_sub(i) } else { i }) as i64
+}
+
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    (ulp_key(a) - ulp_key(b)).unsigned_abs()
+}
+
+const MAX_ULP: u64 = 512;
+
+#[test]
+fn fast_vexp_within_ulp_bound_over_engine_range() {
+    // dense argument grid over the full non-flushed domain, both ISA
+    // paths, buffer sizes crossing the lane tails
+    for &isa in &[Isa::Scalar, Isa::best()] {
+        for n in [5usize, 8, 31] {
+            let mut worst = 0u64;
+            // 7001 points spanning [-87, 88]
+            let mut i = 0usize;
+            while i < 7001 {
+                let xs: Vec<f32> = (0..n)
+                    .map(|j| -87.0 + (i + j).min(7000) as f32 * (175.0 / 7000.0))
+                    .collect();
+                let mut got = xs.clone();
+                kernels::vexp(isa, MathTier::Fast, &mut got);
+                for (x, g) in xs.iter().zip(&got) {
+                    let want = x.exp();
+                    let d = ulp_diff(*g, want);
+                    worst = worst.max(d);
+                    assert!(
+                        d <= MAX_ULP,
+                        "vexp fast isa={} x={x}: {g} vs {want} ({d} ulp)",
+                        isa.name()
+                    );
+                }
+                i += n;
+            }
+            println!("vexp fast isa={} n={n}: worst {worst} ulp", isa.name());
+        }
+    }
+}
+
+#[test]
+fn fast_vln_within_ulp_bound_over_engine_range() {
+    // the engines feed vln sums of scaled exponentials: (0, K] roughly,
+    // but pin the whole normal range
+    for &isa in &[Isa::Scalar, Isa::best()] {
+        let mut rng = Rng::new(4);
+        for n in [5usize, 8, 31] {
+            for trial in 0..400 {
+                let xs: Vec<f32> = (0..n)
+                    .map(|_| {
+                        // log-uniform over [1e-35, 1e35]
+                        let e = rng.uniform_in(-35.0, 35.0);
+                        (10.0f64.powf(e)) as f32
+                    })
+                    .collect();
+                let mut got = xs.clone();
+                kernels::vln(isa, MathTier::Fast, &mut got);
+                for (x, g) in xs.iter().zip(&got) {
+                    let want = x.ln();
+                    let d = ulp_diff(*g, want);
+                    assert!(
+                        d <= MAX_ULP || (g - want).abs() <= 1e-6,
+                        "vln fast isa={} trial={trial} x={x}: {g} vs {want} ({d} ulp)",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_edge_semantics() {
+    for &isa in &[Isa::Scalar, Isa::best()] {
+        let mut e = vec![
+            f32::NEG_INFINITY, // -> 0
+            -88.0,             // below the flush line -> 0
+            -87.0,             // on the line: kept, tiny but nonzero
+            0.0,               // -> exactly 1
+            88.5,              // above saturation: finite, no overflow
+            f32::INFINITY,     // saturates finite
+            f32::NAN,          // -> NaN
+            -3.25,             // plain value, sanity
+        ];
+        kernels::vexp(isa, MathTier::Fast, &mut e);
+        assert_eq!(e[0], 0.0, "exp(-inf) isa={}", isa.name());
+        assert_eq!(e[1], 0.0, "exp flush isa={}", isa.name());
+        assert!(e[2] > 0.0 && e[2].is_finite(), "exp(-87) isa={}", isa.name());
+        assert_eq!(e[3], 1.0, "exp(0) isa={}", isa.name());
+        assert!(e[4].is_finite() && e[4] > 1e37, "exp saturation isa={}", isa.name());
+        assert!(e[5].is_finite(), "exp(+inf) saturates isa={}", isa.name());
+        assert!(e[6].is_nan(), "exp(NaN) isa={}", isa.name());
+        assert!((e[7] - (-3.25f32).exp()).abs() < 1e-6, "exp(-3.25) isa={}", isa.name());
+
+        let mut l = vec![
+            0.0f32,        // -> -inf
+            -0.0,          // -> -inf
+            -1.0,          // -> NaN
+            f32::NAN,      // -> NaN
+            f32::INFINITY, // -> finite (~2^128 in log space)
+            1.0,           // -> exactly 0
+            0.125,         // power of two: mantissa path exact
+        ];
+        kernels::vln(isa, MathTier::Fast, &mut l);
+        assert_eq!(l[0], f32::NEG_INFINITY, "ln(0) isa={}", isa.name());
+        assert_eq!(l[1], f32::NEG_INFINITY, "ln(-0) isa={}", isa.name());
+        assert!(l[2].is_nan(), "ln(-1) isa={}", isa.name());
+        assert!(l[3].is_nan(), "ln(NaN) isa={}", isa.name());
+        assert!(l[4].is_finite() && l[4] > 88.0, "ln(+inf) isa={}", isa.name());
+        assert_eq!(l[5], 0.0, "ln(1) isa={}", isa.name());
+        assert!((l[6] - 0.125f32.ln()).abs() < 1e-6, "ln(0.125) isa={}", isa.name());
+    }
+}
+
+#[test]
+fn fast_tier_bit_identical_across_isa_and_call_shapes() {
+    let isa = Isa::best();
+    let mut rng = Rng::new(17);
+    for trial in 0..60 {
+        let n = 1 + rng.below(70);
+        let mut xs: Vec<f32> = (0..n)
+            .map(|_| rng.uniform_in(-90.0, 90.0) as f32)
+            .collect();
+        if n > 2 {
+            xs[rng.below(n)] = f32::NEG_INFINITY;
+            xs[rng.below(n)] = 0.0;
+        }
+        // vexp: scalar lanes vs SIMD lanes, same bits
+        let mut a = xs.clone();
+        let mut b = xs.clone();
+        kernels::vexp(Isa::Scalar, MathTier::Fast, &mut a);
+        kernels::vexp(isa, MathTier::Fast, &mut b);
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "vexp fast scalar-vs-simd trial={trial} [{i}] x={}",
+                xs[i]
+            );
+            // ...and the one-off scalar call agrees with the sweep
+            assert_eq!(
+                MathTier::Fast.exp1(xs[i]).to_bits(),
+                p.to_bits(),
+                "exp1 vs vexp trial={trial} [{i}]"
+            );
+        }
+        // vln on the (non-negative) exp results
+        let mut c = a.clone();
+        let mut d = a.clone();
+        kernels::vln(Isa::Scalar, MathTier::Fast, &mut c);
+        kernels::vln(isa, MathTier::Fast, &mut d);
+        for (i, (p, q)) in c.iter().zip(&d).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "vln fast scalar-vs-simd trial={trial} [{i}]"
+            );
+            assert_eq!(
+                MathTier::Fast.ln1(a[i]).to_bits(),
+                p.to_bits(),
+                "ln1 vs vln trial={trial} [{i}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn default_tier_is_exact() {
+    let _g = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // the default must stay the bit-exact tier; skip only if the test
+    // environment itself opted in via the env knob
+    if std::env::var_os("EINET_KERNELS").is_none() {
+        assert_eq!(MathTier::detect(), MathTier::Exact);
+    }
+}
+
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+/// Forward log-likelihoods through an engine built in the requested
+/// tier (plus EM statistics under sum-product).
+fn run_tier<E: Engine>(
+    fast: bool,
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+) -> (Vec<f32>, EmStats) {
+    kernels::force_fastmath(fast);
+    let mut e = E::build(plan.clone(), family, bn);
+    kernels::force_fastmath(false);
+    let mut logp = vec![0.0f32; bn];
+    e.forward(params, x, mask, &mut logp);
+    let mut stats = EmStats::zeros_like(params);
+    e.backward(params, x, mask, bn, &mut stats);
+    (logp, stats)
+}
+
+#[test]
+fn engine_loglik_drift_under_fast_tier_is_bounded() {
+    let _g = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let bn = 13usize;
+    let cases: Vec<(LayeredPlan, LeafFamily)> = vec![
+        (
+            LayeredPlan::compile(random_binary_trees(10, 3, 3, 1), 4),
+            LeafFamily::Bernoulli,
+        ),
+        (
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+            LeafFamily::Gaussian { channels: 1 },
+        ),
+        (
+            LayeredPlan::compile(random_binary_trees(8, 2, 2, 8), 10),
+            LeafFamily::Categorical { cats: 4 },
+        ),
+    ];
+    for (ci, (plan, family)) in cases.into_iter().enumerate() {
+        let nv = plan.graph.num_vars;
+        let mut rng = Rng::new(50 + ci as u64);
+        let params = EinetParams::init(&plan, family, 50 + ci as u64);
+        let x = random_batch(family, bn, nv, &mut rng);
+        let mut mask = vec![1.0f32; nv];
+        mask[nv / 2] = 0.0; // marginalization goes through the tier too
+        let (ll_exact, st_exact) =
+            run_tier::<DenseEngine>(false, &plan, family, &params, &x, &mask, bn);
+        let (ll_fast, st_fast) =
+            run_tier::<DenseEngine>(true, &plan, family, &params, &x, &mask, bn);
+        for (b, (a, f)) in ll_exact.iter().zip(&ll_fast).enumerate() {
+            assert!(
+                a.is_finite() && f.is_finite(),
+                "case {ci} row {b}: non-finite LL ({a} exact, {f} fast)"
+            );
+            assert!(
+                (a - f).abs() < 5e-3 * (1.0 + a.abs()),
+                "case {ci} row {b}: fast tier drifted: {a} exact vs {f} fast"
+            );
+        }
+        // EM statistics from a Fast-tier backward stay finite and close
+        assert!(st_fast.grad.iter().all(|g| g.is_finite()), "case {ci}: NaN in fast grad");
+        assert!(st_fast.sum_p.iter().all(|p| p.is_finite()), "case {ci}: NaN in fast sum_p");
+        for (i, (a, f)) in st_exact.sum_p.iter().zip(&st_fast.sum_p).enumerate() {
+            assert!(
+                (a - f).abs() < 1e-2 * (1.0 + a.abs()),
+                "case {ci} sum_p[{i}]: {a} exact vs {f} fast"
+            );
+        }
+        // dense and sparse must still agree with each other *within* the
+        // fast tier (the tier is engine-independent)
+        let (ll_sparse_fast, _) =
+            run_tier::<SparseEngine>(true, &plan, family, &params, &x, &mask, bn);
+        for (b, (d, s)) in ll_fast.iter().zip(&ll_sparse_fast).enumerate() {
+            assert!(
+                (d - s).abs() < 1e-3 * (1.0 + d.abs()),
+                "case {ci} row {b}: dense/sparse disagree under fast: {d} vs {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fast_tier_is_recorded_at_lowering_not_at_call_time() {
+    let _g = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // an engine built under Fast keeps producing Fast-tier numbers after
+    // the global knob is restored — the tier is plan state, not ambient
+    let plan = LayeredPlan::compile(random_binary_trees(10, 3, 3, 2), 4);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 9);
+    let bn = 7usize;
+    let mut rng = Rng::new(9);
+    let x = random_batch(family, bn, 10, &mut rng);
+    let mask = vec![1.0f32; 10];
+
+    kernels::force_fastmath(true);
+    let mut e_fast = DenseEngine::new(plan.clone(), family, bn);
+    kernels::force_fastmath(false);
+
+    let mut lp_after = vec![0.0f32; bn];
+    e_fast.forward(&params, &x, &mask, &mut lp_after);
+
+    kernels::force_fastmath(true);
+    let mut lp_during = vec![0.0f32; bn];
+    e_fast.forward(&params, &x, &mask, &mut lp_during);
+    kernels::force_fastmath(false);
+
+    assert_eq!(
+        lp_after, lp_during,
+        "tier must be pinned in the plan, not re-read per forward"
+    );
+}

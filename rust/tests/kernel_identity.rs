@@ -11,9 +11,15 @@
 //!   statistics) through `DenseEngine` and `SparseEngine` built with
 //!   forced-scalar kernels vs detected-SIMD kernels, compared via
 //!   `f32::to_bits` across structures, families, and masks.
+//!
+//! The default math tier rides on the same contract: `MathTier::Exact`
+//! `vexp`/`vln` sweeps must replay libm per element (pinned below), so
+//! staging arguments into a buffer and sweeping once is bitwise the same
+//! as the pre-tier per-element `.exp()`/`.ln()` calls. The fast tier's
+//! own (ULP-bounded, not bitwise) contract lives in `fastmath_tier.rs`.
 
 use einet::engine::exec::Semiring;
-use einet::engine::kernels::{self, Isa};
+use einet::engine::kernels::{self, Isa, MathTier};
 use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
 use einet::util::rng::Rng;
 use einet::{
@@ -168,6 +174,41 @@ fn helper_kernels_bit_identical_with_edge_values() {
         kernels::vmax_shift_inplace(Isa::Scalar, &mut m1, &b, -0.5);
         kernels::vmax_shift_inplace(isa, &mut m2, &b, -0.5);
         assert_eq!(bits(&m1), bits(&m2), "vmax_shift trial {trial}");
+    }
+}
+
+/// The exact-tier guard: under [`MathTier::Exact`] the vectorized
+/// `vexp`/`vln` sweeps are *libm replayed per element*, on every ISA —
+/// the property that makes the staged-sweep rewrite of the engines'
+/// transcendental sites a no-op bitwise, and therefore keeps the whole
+/// parity / oracle / sharding wall green with the tier layer in place.
+#[test]
+fn exact_tier_vexp_vln_replay_libm_bitwise() {
+    let mut rng = Rng::new(21);
+    for &isa in &[Isa::Scalar, Isa::best()] {
+        for n in [1usize, 3, 7, 8, 16, 33, 100] {
+            let mut xs: Vec<f32> =
+                (0..n).map(|_| rng.uniform_in(-40.0, 5.0) as f32).collect();
+            if n > 3 {
+                // the log-domain edges the engines actually feed in
+                xs[0] = f32::NEG_INFINITY;
+                xs[1] = 0.0;
+                xs[2] = -87.5;
+            }
+            let want: Vec<u32> = xs.iter().map(|x| x.exp().to_bits()).collect();
+            kernels::vexp(isa, MathTier::Exact, &mut xs);
+            assert_eq!(bits(&xs), want, "vexp exact isa={} n={n}", isa.name());
+
+            let mut ys: Vec<f32> =
+                (0..n).map(|_| rng.uniform_in(0.0, 3.0) as f32).collect();
+            if n > 2 {
+                ys[0] = 0.0;
+                ys[1] = f32::MIN_POSITIVE / 2.0; // subnormal
+            }
+            let want: Vec<u32> = ys.iter().map(|y| y.ln().to_bits()).collect();
+            kernels::vln(isa, MathTier::Exact, &mut ys);
+            assert_eq!(bits(&ys), want, "vln exact isa={} n={n}", isa.name());
+        }
     }
 }
 
