@@ -56,11 +56,12 @@ fn run_point(
 
     // --- train: one epoch of sharded stochastic EM per rep -------------
     let mut run_train = || {
-        pool.set_params(params0);
+        pool.set_params(params0).unwrap();
         let mut b0 = 0usize;
         while b0 < n {
             let bn = batch.min(n - b0);
-            pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &em);
+            pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &em)
+                .unwrap();
             b0 += bn;
         }
     };
@@ -80,7 +81,8 @@ fn run_point(
                 bn,
                 einet::Semiring::SumProduct,
                 &mut logp[..bn],
-            );
+            )
+            .unwrap();
             b0 += bn;
         }
     };

@@ -1,0 +1,135 @@
+//! Transport overhead: forward-serving throughput of the [`ShardedPool`]
+//! over its two carriers — in-process channel workers vs loopback-TCP
+//! workers (the [`spawn_loopback_workers`] stand-in for real
+//! `einet shard-worker` processes) — at 1 / 2 / 4 shards on the dense
+//! engine. The two pools run the identical cut of the identical plan, so
+//! the reported ratio isolates the wire: frame encode/decode plus one
+//! loopback round-trip per shard per batch.
+//!
+//! Results land in BENCH_transport.json (CI artifact).
+//!
+//!     cargo bench --bench transport_overhead            # full size
+//!     EINET_BENCH_QUICK=1 cargo bench --bench transport_overhead
+
+use einet::bench::{time_it, Table};
+use einet::coordinator::transport::spawn_loopback_workers;
+use einet::coordinator::ShardedPool;
+use einet::data::debd::gaussian_noise;
+use einet::util::json;
+use einet::{boxed_build, DenseEngine, EinetParams, LayeredPlan, LeafFamily, Semiring};
+
+/// Forward-only serving throughput of one pool over the whole dataset.
+fn serve_rate(
+    pool: &mut ShardedPool,
+    data: &std::sync::Arc<Vec<f32>>,
+    mask: &std::sync::Arc<Vec<f32>>,
+    n: usize,
+    batch: usize,
+    reps: usize,
+) -> f64 {
+    let mut logp = vec![0.0f32; batch];
+    let mut run = || {
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = batch.min(n - b0);
+            pool.forward_shared(
+                data.clone(),
+                b0,
+                mask.clone(),
+                bn,
+                Semiring::SumProduct,
+                &mut logp[..bn],
+            )
+            .expect("shard worker failed mid-bench");
+            b0 += bn;
+        }
+    };
+    run(); // warmup
+    let t = time_it(&mut run, 0, reps);
+    n as f64 / t.median_s
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let (num_vars, depth, replica, k) = if quick { (64, 3, 4, 4) } else { (256, 3, 8, 8) };
+    let n = if quick { 100 } else { 300 };
+    let batch = 50usize;
+    let reps = if quick { 2 } else { 3 };
+    let seed = 0u64;
+    let structure = format!("rat:depth={depth},replica={replica},seed={seed}");
+    let family = LeafFamily::Gaussian { channels: 1 };
+
+    let graph = einet::structure::from_spec(num_vars, &structure).expect("structure");
+    let plan = LayeredPlan::compile(graph, k);
+    let params = EinetParams::init(&plan, family, 0);
+    let data = std::sync::Arc::new(gaussian_noise(n, num_vars, 0).data);
+    let mask = std::sync::Arc::new(vec![1.0f32; num_vars]);
+
+    println!(
+        "transport overhead — RAT D={num_vars} depth={depth} R={replica} K={k}, \
+         N={n}, batch={batch} ({} params)",
+        params.num_params()
+    );
+    let mut table = Table::new(&[
+        "shards", "in-process rows/s", "loopback-TCP rows/s", "tcp/in-process",
+    ]);
+    let mut rows: Vec<json::Json> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let mut inproc = ShardedPool::new(
+            boxed_build::<DenseEngine>,
+            &plan,
+            family,
+            &params,
+            shards,
+            batch,
+        );
+        let r_in = serve_rate(&mut inproc, &data, &mask, n, batch, reps);
+        inproc.stop();
+
+        let (addrs, handles) =
+            spawn_loopback_workers(shards).expect("spawn loopback workers");
+        let mut tcp = ShardedPool::connect(
+            &addrs, &structure, "dense", &plan, family, &params, shards, batch,
+        )
+        .expect("connect loopback pool");
+        let r_tcp = serve_rate(&mut tcp, &data, &mask, n, batch, reps);
+        tcp.stop();
+        for h in handles {
+            let _ = h.join();
+        }
+
+        let ratio = r_tcp / r_in;
+        table.row(vec![
+            format!("{shards}"),
+            format!("{r_in:.0}"),
+            format!("{r_tcp:.0}"),
+            format!("{ratio:.2}x"),
+        ]);
+        println!(
+            "x{shards}: in-process {r_in:.0} rows/s, loopback TCP {r_tcp:.0} rows/s \
+             ({ratio:.2}x)"
+        );
+        rows.push(json::obj(vec![
+            ("shards", json::num(shards as f64)),
+            ("inproc_rows_per_s", json::num(r_in)),
+            ("tcp_rows_per_s", json::num(r_tcp)),
+            ("tcp_over_inproc", json::num(ratio)),
+        ]));
+    }
+    println!("\n{}", table.render());
+
+    let report = json::obj(vec![
+        ("experiment", json::s("transport_overhead")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(num_vars as f64)),
+        ("depth", json::num(depth as f64)),
+        ("replica", json::num(replica as f64)),
+        ("k", json::num(k as f64)),
+        ("n", json::num(n as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_transport.json", report.to_string())
+        .expect("write BENCH_transport.json");
+    println!("wrote BENCH_transport.json");
+}

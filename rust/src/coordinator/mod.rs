@@ -40,15 +40,16 @@
 //! implement the same patterns (DESIGN.md §3).
 
 pub mod server;
+pub mod transport;
 
+use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, RwLock};
 
 use crate::em::{m_step, stats_from_natural_grads, EmConfig};
 use crate::engine::exec::{PlanPartition, Semiring};
-use crate::engine::registry::EngineFactory;
+use crate::engine::registry::{EngineFactory, EngineRegistry};
 use crate::engine::{
-    sum_p_spans_for_vars, ArenaShard, DecodeMode, EinetParams, EmStats, Engine,
-    LevelSpec, ParamArena, ParamLayout, StatsShard,
+    ArenaShard, DecodeMode, EinetParams, EmStats, Engine, LevelSpec, ParamLayout,
 };
 use crate::layers::LayeredPlan;
 use crate::leaves::LeafFamily;
@@ -56,6 +57,10 @@ use crate::runtime::{AotParams, ArtifactMeta, Executable};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::{anyhow, ensure};
+use transport::{
+    ChannelTransport, ShardError, ShardJob, ShardReply, ShardTransport,
+    TcpTransport, WorkerConfig,
+};
 
 /// Configuration for the multi-threaded EM trainer.
 #[derive(Clone, Copy, Debug)]
@@ -288,148 +293,6 @@ pub fn per_sample_ll<E: Engine>(
 // Scope-partitioned model-parallel execution
 // ---------------------------------------------------------------------------
 
-/// What the coordinator sends a segment worker. Batches travel as a
-/// shared `Arc` plus a row offset — the pool never copies the batch per
-/// call: callers that already hold the data in an `Arc` (the trainer
-/// holds the whole dataset in one; the server wraps each coalesced
-/// group once) ship a pointer and a range.
-enum ShardJob {
-    /// new parameter spans from the server (applies before later jobs —
-    /// the channel is ordered)
-    Params(ArenaShard),
-    /// forward the worker's segment over rows `[row0, row0 + bn)` of `x`
-    /// under the given semiring; reply `Boundary`
-    Forward {
-        x: Arc<Vec<f32>>,
-        row0: usize,
-        mask: Arc<Vec<f32>>,
-        bn: usize,
-        sr: Semiring,
-    },
-    /// backward sweep seeded with the spine's boundary gradients
-    /// (packed in `Segment::boundary` order); reply `Stats`
-    Backward {
-        x: Arc<Vec<f32>>,
-        row0: usize,
-        mask: Arc<Vec<f32>>,
-        bn: usize,
-        grads: Vec<f32>,
-    },
-    /// finish the top-down decode locally from the spine's `sel` entries
-    /// (packed in `Segment::sel_in` order); reply `Decoded`
-    Decode {
-        mask: Arc<Vec<f32>>,
-        mode: DecodeMode,
-        bn: usize,
-        salt: u64,
-        sel: Vec<u32>,
-    },
-}
-
-/// A segment worker's reply.
-enum ShardReply {
-    /// boundary activation rows, packed in `Segment::boundary` order
-    Boundary(Vec<f32>),
-    /// the segment's E-step statistics, span-packed: only the scalars
-    /// the segment can write (its `param_spans` of `grad`, its owned
-    /// vars' `sum_p` rows) travel back — the reduce-direction mirror of
-    /// the [`ArenaShard`] broadcast, so reply traffic also scales with
-    /// the shard, not the model
-    Stats(Box<StatsShard>),
-    /// leaf emissions for the segment's owned variables: var-major
-    /// values plus the written mask (see [`Engine::decode_segment`])
-    Decoded { vals: Vec<f32>, written: Vec<bool> },
-}
-
-#[allow(clippy::too_many_arguments)]
-fn shard_worker(
-    factory: EngineFactory,
-    plan: LayeredPlan,
-    family: LeafFamily,
-    batch_cap: usize,
-    seg: crate::engine::exec::Segment,
-    layout: ParamLayout,
-    jobs: mpsc::Receiver<ShardJob>,
-    replies: mpsc::Sender<ShardReply>,
-) {
-    let mut engine = factory(plan, family, batch_cap);
-    // worker-local arena: only the broadcast spans are ever written or
-    // read — the engines refresh their per-batch caches per step, scoped
-    // to the segment, so the unowned remainder stays untouched
-    // lazily-zero memory and the worker's resident parameter set (and
-    // cache-refresh work) scales with the shard, not the model
-    let mut local = ParamArena::zeros(layout);
-    // the reply-side span tables, fixed for the worker's lifetime: grad
-    // writes are bounded by the spans the segment reads, sum_p writes by
-    // the vars it owns
-    let sum_p_spans = sum_p_spans_for_vars(&local.layout, &seg.vars);
-    let od = family.obs_dim();
-    let row = engine.plan().graph.num_vars * od;
-    while let Ok(job) = jobs.recv() {
-        match job {
-            ShardJob::Params(shard) => shard.scatter_into(&mut local),
-            ShardJob::Forward { x, row0, mask, bn, sr } => {
-                let xs = &x[row0 * row..(row0 + bn) * row];
-                engine.forward_steps(&local, xs, &mask, bn, &seg.steps, sr);
-                let mut out = Vec::new();
-                for &rid in &seg.boundary {
-                    engine.export_rows(rid, bn, &mut out);
-                }
-                if replies.send(ShardReply::Boundary(out)).is_err() {
-                    break;
-                }
-            }
-            ShardJob::Backward { x, row0, mask, bn, grads } => {
-                engine.clear_grad();
-                let mut off = 0usize;
-                for &rid in &seg.boundary {
-                    let w = engine.exec_plan().region_width[rid];
-                    engine.import_grad_rows(rid, bn, &grads[off..off + bn * w]);
-                    off += bn * w;
-                }
-                let mut stats = EmStats::zeros(&local.layout);
-                let xs = &x[row0 * row..(row0 + bn) * row];
-                engine.backward_steps(&local, xs, &mask, bn, &seg.steps, &mut stats);
-                let shard =
-                    StatsShard::gather(&stats, &seg.param_spans, &sum_p_spans);
-                if replies.send(ShardReply::Stats(Box::new(shard))).is_err() {
-                    break;
-                }
-            }
-            ShardJob::Decode {
-                mask,
-                mode,
-                bn,
-                salt,
-                sel,
-            } => {
-                let mut vals = vec![0.0f32; seg.vars.len() * bn * od];
-                let mut written = vec![false; seg.vars.len() * bn];
-                engine.decode_segment(
-                    &local,
-                    bn,
-                    &mask,
-                    mode,
-                    salt,
-                    &seg.sample_steps,
-                    false,
-                    &seg.sel_in,
-                    &sel,
-                    &seg.vars,
-                    &mut vals,
-                    &mut written,
-                );
-                if replies
-                    .send(ShardReply::Decoded { vals, written })
-                    .is_err()
-                {
-                    break;
-                }
-            }
-        }
-    }
-}
-
 /// Scatter a segment's var-major leaf emissions into `[bn, D, obs_dim]`
 /// rows (only positions the segment actually wrote).
 fn scatter_decoded(
@@ -452,10 +315,27 @@ fn scatter_decoded(
     }
 }
 
-/// The scope-partitioned execution pool: one persistent worker thread per
-/// shard segment (each with a private engine built by `factory` and only
-/// its [`ArenaShard`] of the parameters), with the spine executed inline
-/// by the calling thread against the full parameter-server arena.
+/// One forward pass the shards are computing (or have computed) that
+/// the spine has not reduced yet — the double-buffering unit behind
+/// [`ShardedPool::begin_forward`] / [`ShardedPool::finish_forward`].
+struct InflightForward {
+    x: Arc<Vec<f32>>,
+    row0: usize,
+    mask: Arc<Vec<f32>>,
+    bn: usize,
+    sr: Semiring,
+    /// per-shard boundary rows, staged early when a second forward is
+    /// begun before this one's spine reduce (keeps the links drained so
+    /// a full TCP socket buffer can never deadlock both ends)
+    boundaries: Option<Vec<Vec<f32>>>,
+}
+
+/// The scope-partitioned execution pool: one persistent worker per shard
+/// segment — an in-process thread ([`ChannelTransport`]) or a remote
+/// `einet shard-worker` process ([`TcpTransport`], see
+/// [`ShardedPool::connect`]) — each with a private engine and only its
+/// [`ArenaShard`] of the parameters, with the spine executed inline by
+/// the calling thread against the full parameter-server arena.
 ///
 /// `forward`/`backward`/`decode` must be called in that order per batch
 /// (activations persist between them, exactly like a single engine), and
@@ -467,7 +347,14 @@ fn scatter_decoded(
 /// worker stats into zeros), and Argmax decoding because it is
 /// deterministic over identical activations — `Sample` decoding is also
 /// bit-identical because draws are counter-based per (sample, region)
-/// under a shared salt.
+/// under a shared salt. The TCP carrier preserves all of this: frames
+/// encode the same f32 bits the channels hand over.
+///
+/// **Failure model**: every transport operation returns a typed
+/// [`ShardError`] instead of panicking. The first failure marks the
+/// pool unhealthy — subsequent calls fail fast with
+/// [`ShardError::Unhealthy`] — and [`ShardedPool::stop`] (or `Drop`)
+/// still joins every surviving worker cleanly.
 pub struct ShardedPool {
     partition: Arc<PlanPartition>,
     spine: Box<dyn Engine + Send>,
@@ -476,10 +363,13 @@ pub struct ShardedPool {
     batch_cap: usize,
     /// row stride (`D * obs_dim`)
     row: usize,
-    job_txs: Vec<mpsc::Sender<ShardJob>>,
-    res_rxs: Vec<mpsc::Receiver<ShardReply>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    /// the batch of the most recent forward: shared buffer + row offset
+    links: Vec<Box<dyn ShardTransport>>,
+    /// the first shard failure; poisons all later operations
+    failed: Option<ShardError>,
+    /// forwards begun but not yet spine-reduced (at most 2)
+    inflight: VecDeque<InflightForward>,
+    /// the batch of the most recent finished forward: shared buffer +
+    /// row offset
     last_x: Option<(Arc<Vec<f32>>, usize)>,
     last_mask: Option<Arc<Vec<f32>>>,
     last_bn: usize,
@@ -487,9 +377,54 @@ pub struct ShardedPool {
 }
 
 impl ShardedPool {
-    /// Build the pool: compile the plan once, cut it into `n_shards`
-    /// segments, spawn the workers, and broadcast the initial parameter
-    /// shards.
+    /// Cut the plan for this pool: re-cut at the non-empty segment count
+    /// so no idle workers (with full engines and per-batch round-trips)
+    /// are ever spawned on heavily shared structures. Deterministic, so
+    /// remote workers handed the FINAL count reproduce it exactly.
+    fn cut_plan(spine: &dyn Engine, n_shards: usize) -> PlanPartition {
+        let partition = PlanPartition::cut(spine.exec_plan(), n_shards);
+        let busy = partition
+            .shards
+            .iter()
+            .filter(|s| !s.steps.is_empty())
+            .count()
+            .max(1);
+        if busy < partition.n_shards {
+            PlanPartition::cut(spine.exec_plan(), busy)
+        } else {
+            partition
+        }
+    }
+
+    fn assemble(
+        partition: Arc<PlanPartition>,
+        spine: Box<dyn Engine + Send>,
+        params: &EinetParams,
+        family: LeafFamily,
+        batch_cap: usize,
+        row: usize,
+        links: Vec<Box<dyn ShardTransport>>,
+    ) -> Self {
+        Self {
+            partition,
+            spine,
+            params: params.clone(),
+            family,
+            batch_cap,
+            row,
+            links,
+            failed: None,
+            inflight: VecDeque::new(),
+            last_x: None,
+            last_mask: None,
+            last_bn: 0,
+            last_sr: Semiring::SumProduct,
+        }
+    }
+
+    /// Build the in-process pool: compile the plan once, cut it into
+    /// `n_shards` segments, spawn the worker threads, and broadcast the
+    /// initial parameter shards.
     pub fn new(
         factory: EngineFactory,
         plan: &LayeredPlan,
@@ -504,55 +439,91 @@ impl ShardedPool {
             "parameter arena family does not match the configured family"
         );
         let spine = factory(plan.clone(), family, batch_cap);
-        let mut partition = PlanPartition::cut(spine.exec_plan(), n_shards);
-        // heavily shared structures can yield fewer clusters than
-        // requested shards; re-cut at the non-empty count so no idle
-        // worker threads (with full engines and per-batch channel
-        // round-trips) are ever spawned
-        let busy = partition
-            .shards
-            .iter()
-            .filter(|s| !s.steps.is_empty())
-            .count()
-            .max(1);
-        if busy < partition.n_shards {
-            partition = PlanPartition::cut(spine.exec_plan(), busy);
-        }
-        let partition = Arc::new(partition);
+        let partition = Arc::new(Self::cut_plan(spine.as_ref(), n_shards));
         let layout = params.layout.clone();
-        let mut job_txs = Vec::with_capacity(partition.n_shards);
-        let mut res_rxs = Vec::with_capacity(partition.n_shards);
-        let mut handles = Vec::with_capacity(partition.n_shards);
+        let mut links: Vec<Box<dyn ShardTransport>> =
+            Vec::with_capacity(partition.n_shards);
         for s in 0..partition.n_shards {
-            let (jtx, jrx) = mpsc::channel::<ShardJob>();
-            let (rtx, rrx) = mpsc::channel::<ShardReply>();
-            let seg = partition.shards[s].clone();
-            let plan_c = plan.clone();
-            let layout_c = layout.clone();
-            handles.push(std::thread::spawn(move || {
-                shard_worker(factory, plan_c, family, batch_cap, seg, layout_c, jrx, rtx)
-            }));
-            job_txs.push(jtx);
-            res_rxs.push(rrx);
+            links.push(Box::new(ChannelTransport::spawn(
+                factory,
+                plan.clone(),
+                family,
+                batch_cap,
+                partition.shards[s].clone(),
+                layout.clone(),
+                s,
+            )));
         }
         let row = plan.graph.num_vars * family.obs_dim();
-        let mut pool = Self {
-            partition,
-            spine,
-            params: params.clone(),
-            family,
-            batch_cap,
-            row,
-            job_txs,
-            res_rxs,
-            handles,
-            last_x: None,
-            last_mask: None,
-            last_bn: 0,
-            last_sr: Semiring::SumProduct,
-        };
-        pool.broadcast();
+        let mut pool =
+            Self::assemble(partition, spine, params, family, batch_cap, row, links);
+        pool.broadcast()
+            .expect("in-process shard workers died during startup");
         pool
+    }
+
+    /// Build a multi-process pool over TCP: one `einet shard-worker`
+    /// per address (the first `n_shards` of `addrs` after the re-cut),
+    /// each handed the deterministic `structure` spec so it rebuilds the
+    /// identical plan and segment, then the usual [`ArenaShard`] span
+    /// broadcast — remote workers never read a checkpoint.
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect(
+        addrs: &[String],
+        structure: &str,
+        engine_name: &str,
+        plan: &LayeredPlan,
+        family: LeafFamily,
+        params: &EinetParams,
+        n_shards: usize,
+        batch_cap: usize,
+    ) -> Result<Self> {
+        ensure!(
+            params.family() == family,
+            "parameter arena family does not match the configured family"
+        );
+        let factory = EngineRegistry::builtin().factory(engine_name)?;
+        let spine = factory(plan.clone(), family, batch_cap);
+        // the spec is the worker's only source of structure: verify it
+        // reproduces the serving plan before anything crosses the wire
+        let recompiled =
+            LayeredPlan::compile(crate::structure::from_spec(plan.graph.num_vars, structure)?, plan.k);
+        ensure!(
+            recompiled.graph.regions.len() == plan.graph.regions.len()
+                && recompiled.graph.partitions.len() == plan.graph.partitions.len()
+                && recompiled.levels.len() == plan.levels.len(),
+            "structure spec '{structure}' does not reproduce the serving plan"
+        );
+        let partition = Arc::new(Self::cut_plan(spine.as_ref(), n_shards));
+        ensure!(
+            addrs.len() >= partition.n_shards,
+            "{} worker addresses for a {}-shard cut",
+            addrs.len(),
+            partition.n_shards
+        );
+        let fastmath =
+            spine.exec_plan().math == crate::engine::kernels::MathTier::Fast;
+        let row = plan.graph.num_vars * family.obs_dim();
+        let mut links: Vec<Box<dyn ShardTransport>> =
+            Vec::with_capacity(partition.n_shards);
+        for s in 0..partition.n_shards {
+            let cfg = WorkerConfig {
+                structure: structure.to_string(),
+                num_vars: plan.graph.num_vars,
+                k: plan.k,
+                family,
+                engine: engine_name.to_string(),
+                n_shards: partition.n_shards,
+                shard_id: s,
+                batch_cap,
+                fastmath,
+            };
+            links.push(Box::new(TcpTransport::connect(&addrs[s], &cfg, row)?));
+        }
+        let mut pool =
+            Self::assemble(partition, spine, params, family, batch_cap, row, links);
+        pool.broadcast()?;
+        Ok(pool)
     }
 
     /// The compiled cut (inspection / diagnostics).
@@ -569,26 +540,64 @@ impl ShardedPool {
         self.batch_cap
     }
 
-    /// Push each worker its current parameter spans (a slice copy per
-    /// shard, not the whole arena).
-    pub fn broadcast(&mut self) {
-        for (s, tx) in self.job_txs.iter().enumerate() {
-            let shard =
-                ArenaShard::gather(&self.params, &self.partition.shards[s].param_spans);
-            tx.send(ShardJob::Params(shard))
-                .expect("shard worker hung up");
+    /// Whether any shard link has failed. An unhealthy pool fails every
+    /// operation fast with [`ShardError::Unhealthy`]; the original cause
+    /// is [`ShardedPool::failure`].
+    pub fn healthy(&self) -> bool {
+        self.failed.is_none()
+    }
+
+    /// The first shard failure, if any.
+    pub fn failure(&self) -> Option<&ShardError> {
+        self.failed.as_ref()
+    }
+
+    /// Record the first failure and return the error for propagation.
+    fn fail(&mut self, e: ShardError) -> ShardError {
+        if self.failed.is_none() {
+            self.failed = Some(e.clone());
+        }
+        // a failed pool cannot finish staged forwards
+        self.inflight.clear();
+        e
+    }
+
+    fn check(&self) -> Result<(), ShardError> {
+        match &self.failed {
+            Some(_) => Err(ShardError::Unhealthy),
+            None => Ok(()),
         }
     }
 
+    /// Push each worker its current parameter spans (a slice copy per
+    /// shard, not the whole arena).
+    pub fn broadcast(&mut self) -> Result<(), ShardError> {
+        self.check()?;
+        for s in 0..self.links.len() {
+            let shard =
+                ArenaShard::gather(&self.params, &self.partition.shards[s].param_spans);
+            if let Err(e) = self.links[s].send(ShardJob::Params(shard)) {
+                return Err(self.fail(e));
+            }
+        }
+        Ok(())
+    }
+
     /// Replace the master parameters and rebroadcast.
-    pub fn set_params(&mut self, params: &EinetParams) {
+    pub fn set_params(&mut self, params: &EinetParams) -> Result<(), ShardError> {
         self.params.clone_from(params);
-        self.broadcast();
+        self.broadcast()
     }
 
     /// Segmented forward pass over one batch (copying convenience
     /// wrapper; the zero-copy path is [`ShardedPool::forward_shared`]).
-    pub fn forward(&mut self, x: &[f32], mask: &[f32], bn: usize, logp: &mut [f32]) {
+    pub fn forward(
+        &mut self,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        logp: &mut [f32],
+    ) -> Result<(), ShardError> {
         self.forward_shared(
             Arc::new(x.to_vec()),
             0,
@@ -605,7 +614,8 @@ impl ShardedPool {
     /// spine, the spine finishes and reads the root. Callers holding
     /// their data in an `Arc` (the sharded trainer ships the whole
     /// dataset once; the server wraps each coalesced group) pay only an
-    /// `Arc` clone per worker per call.
+    /// `Arc` clone per worker per call. Equivalent to
+    /// [`ShardedPool::begin_forward`] + [`ShardedPool::finish_forward`].
     pub fn forward_shared(
         &mut self,
         x: Arc<Vec<f32>>,
@@ -614,55 +624,173 @@ impl ShardedPool {
         bn: usize,
         sr: Semiring,
         logp: &mut [f32],
-    ) {
+    ) -> Result<(), ShardError> {
+        self.begin_forward(x, row0, mask, bn, sr)?;
+        self.finish_forward(logp)
+    }
+
+    /// Ship one forward pass to the shards without reducing it yet: the
+    /// spine half runs in [`ShardedPool::finish_forward`]. Up to two
+    /// forwards may be in flight — beginning the second stages the
+    /// first's boundary rows into a double buffer, so shard compute for
+    /// pass N+1 overlaps the spine reduce of pass N (the server's
+    /// two-pass conditional plans and back-to-back groups use this).
+    pub fn begin_forward(
+        &mut self,
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        sr: Semiring,
+    ) -> Result<(), ShardError> {
+        self.check()?;
         assert!(bn <= self.batch_cap, "batch exceeds pool capacity");
         assert!(
             (row0 + bn) * self.row <= x.len(),
             "batch range outside the shared buffer"
         );
-        for tx in &self.job_txs {
-            tx.send(ShardJob::Forward {
+        assert!(
+            self.inflight.len() < 2,
+            "at most two forwards may be in flight"
+        );
+        // drain the previous forward's boundary replies into the staging
+        // buffer BEFORE sending new jobs: the links stay empty-downstream,
+        // so a full TCP socket buffer can never deadlock both ends
+        if let Err(e) = self.stage_pending_boundaries() {
+            return Err(self.fail(e));
+        }
+        for link in &mut self.links {
+            if let Err(e) = link.send(ShardJob::Forward {
                 x: x.clone(),
                 row0,
                 mask: mask.clone(),
                 bn,
                 sr,
-            })
-            .expect("shard worker hung up");
+            }) {
+                return Err(self.fail(e));
+            }
         }
-        for (s, rx) in self.res_rxs.iter().enumerate() {
-            match rx.recv().expect("shard worker died mid-forward") {
-                ShardReply::Boundary(buf) => {
-                    let mut off = 0usize;
-                    for &rid in &self.partition.shards[s].boundary {
-                        let w = self.spine.exec_plan().region_width[rid];
-                        self.spine.import_rows(rid, bn, &buf[off..off + bn * w]);
-                        off += bn * w;
+        self.inflight.push_back(InflightForward {
+            x,
+            row0,
+            mask,
+            bn,
+            sr,
+            boundaries: None,
+        });
+        Ok(())
+    }
+
+    /// Receive the boundary rows of every in-flight forward that has not
+    /// been collected yet (in practice: the front entry, before a second
+    /// `begin_forward` goes out).
+    fn stage_pending_boundaries(&mut self) -> Result<(), ShardError> {
+        for inf in &mut self.inflight {
+            if inf.boundaries.is_some() {
+                continue;
+            }
+            let mut per_shard = Vec::with_capacity(self.links.len());
+            for (s, link) in self.links.iter_mut().enumerate() {
+                match link.recv() {
+                    Ok(ShardReply::Boundary(buf)) => per_shard.push(buf),
+                    Ok(_) => {
+                        return Err(ShardError::Frame {
+                            shard: s,
+                            detail: "expected a boundary reply".into(),
+                        })
                     }
+                    Err(e) => return Err(e),
                 }
-                _ => unreachable!("forward expects a boundary reply"),
+            }
+            inf.boundaries = Some(per_shard);
+        }
+        Ok(())
+    }
+
+    /// Reduce the oldest in-flight forward on the spine and read the
+    /// root log-probabilities into `logp`.
+    pub fn finish_forward(&mut self, logp: &mut [f32]) -> Result<(), ShardError> {
+        self.check()?;
+        assert!(
+            !self.inflight.is_empty(),
+            "finish_forward without a begun forward"
+        );
+        // collect this forward's rows if they were not staged already
+        if self.inflight.front().unwrap().boundaries.is_none() {
+            let mut per_shard = Vec::with_capacity(self.links.len());
+            for (s, link) in self.links.iter_mut().enumerate() {
+                match link.recv() {
+                    Ok(ShardReply::Boundary(buf)) => per_shard.push(buf),
+                    Ok(_) => {
+                        let e = ShardError::Frame {
+                            shard: s,
+                            detail: "expected a boundary reply".into(),
+                        };
+                        return Err(self.fail(e));
+                    }
+                    Err(e) => return Err(self.fail(e)),
+                }
+            }
+            self.inflight.front_mut().unwrap().boundaries = Some(per_shard);
+        }
+        let inf = self.inflight.pop_front().expect("inflight checked above");
+        let bn = inf.bn;
+        let boundaries = inf.boundaries.expect("boundaries staged above");
+        for (s, buf) in boundaries.iter().enumerate() {
+            let mut off = 0usize;
+            for &rid in &self.partition.shards[s].boundary {
+                let w = self.spine.exec_plan().region_width[rid];
+                if buf.len() < off + bn * w {
+                    let e = ShardError::Frame {
+                        shard: s,
+                        detail: format!(
+                            "short boundary rows: {} scalars, need {}",
+                            buf.len(),
+                            off + bn * w
+                        ),
+                    };
+                    return Err(self.fail(e));
+                }
+                self.spine.import_rows(rid, bn, &buf[off..off + bn * w]);
+                off += bn * w;
+            }
+            if off != buf.len() {
+                let e = ShardError::Frame {
+                    shard: s,
+                    detail: format!(
+                        "boundary rows carry {} scalars, expected {off}",
+                        buf.len()
+                    ),
+                };
+                return Err(self.fail(e));
             }
         }
         self.spine.forward_steps(
             &self.params,
-            &x[row0 * self.row..(row0 + bn) * self.row],
-            mask.as_slice(),
+            &inf.x[inf.row0 * self.row..(inf.row0 + bn) * self.row],
+            inf.mask.as_slice(),
             bn,
             &self.partition.spine.steps,
-            sr,
+            inf.sr,
         );
         self.spine.read_logp(bn, &mut logp[..bn]);
-        self.last_x = Some((x, row0));
-        self.last_mask = Some(mask);
+        self.last_x = Some((inf.x, inf.row0));
+        self.last_mask = Some(inf.mask);
         self.last_bn = bn;
-        self.last_sr = sr;
+        self.last_sr = inf.sr;
+        Ok(())
     }
 
     /// Segmented backward pass for the batch last given to `forward`:
     /// spine first (root seed + its steps), boundary gradients out to the
     /// shards, per-shard span-packed E-steps reduced into `stats` via
     /// [`StatsShard::merge_into`].
-    pub fn backward(&mut self, stats: &mut EmStats) {
+    pub fn backward(&mut self, stats: &mut EmStats) -> Result<(), ShardError> {
+        self.check()?;
+        assert!(
+            self.inflight.is_empty(),
+            "backward with a forward still in flight"
+        );
         let (x, row0) = self.last_x.clone().expect("backward without forward");
         let mask = self.last_mask.clone().expect("backward without forward");
         let bn = self.last_bn;
@@ -681,26 +809,35 @@ impl ShardedPool {
             &self.partition.spine.steps,
             stats,
         );
-        for (s, tx) in self.job_txs.iter().enumerate() {
+        for s in 0..self.links.len() {
             let mut grads = Vec::new();
             for &rid in &self.partition.shards[s].boundary {
                 self.spine.export_grad_rows(rid, bn, &mut grads);
             }
-            tx.send(ShardJob::Backward {
+            if let Err(e) = self.links[s].send(ShardJob::Backward {
                 x: x.clone(),
                 row0,
                 mask: mask.clone(),
                 bn,
                 grads,
-            })
-            .expect("shard worker hung up");
-        }
-        for rx in &self.res_rxs {
-            match rx.recv().expect("shard worker died mid-backward") {
-                ShardReply::Stats(s) => s.merge_into(stats),
-                _ => unreachable!("backward expects a stats reply"),
+            }) {
+                return Err(self.fail(e));
             }
         }
+        for s in 0..self.links.len() {
+            match self.links[s].recv() {
+                Ok(ShardReply::Stats(sh)) => sh.merge_into(stats),
+                Ok(_) => {
+                    let e = ShardError::Frame {
+                        shard: s,
+                        detail: "expected a stats reply".into(),
+                    };
+                    return Err(self.fail(e));
+                }
+                Err(e) => return Err(self.fail(e)),
+            }
+        }
+        Ok(())
     }
 
     /// Segmented top-down decode for the batch last given to `forward`:
@@ -716,7 +853,12 @@ impl ShardedPool {
         mode: DecodeMode,
         rng: &mut Rng,
         out: &mut [f32],
-    ) {
+    ) -> Result<(), ShardError> {
+        self.check()?;
+        assert!(
+            self.inflight.is_empty(),
+            "decode with a forward still in flight"
+        );
         assert_eq!(bn, self.last_bn, "decode must follow a matching forward");
         let d_total = self.spine.plan().graph.num_vars;
         let od = self.family.obs_dim();
@@ -750,39 +892,57 @@ impl ShardedPool {
             od,
             d_total,
         );
-        for (s, tx) in self.job_txs.iter().enumerate() {
-            let seg = &self.partition.shards[s];
-            let sel = self.spine.export_sel(&seg.sel_in, bn);
-            tx.send(ShardJob::Decode {
+        for s in 0..self.links.len() {
+            let sel = self.spine.export_sel(&self.partition.shards[s].sel_in, bn);
+            if let Err(e) = self.links[s].send(ShardJob::Decode {
                 mask: mask_arc.clone(),
                 mode,
                 bn,
                 salt,
                 sel,
-            })
-            .expect("shard worker hung up");
-        }
-        for (s, rx) in self.res_rxs.iter().enumerate() {
-            match rx.recv().expect("shard worker died mid-decode") {
-                ShardReply::Decoded { vals, written } => scatter_decoded(
-                    out,
-                    &self.partition.shards[s].vars,
-                    &vals,
-                    &written,
-                    bn,
-                    od,
-                    d_total,
-                ),
-                _ => unreachable!("decode expects a decoded reply"),
+            }) {
+                return Err(self.fail(e));
             }
         }
+        for s in 0..self.links.len() {
+            match self.links[s].recv() {
+                Ok(ShardReply::Decoded { vals, written }) => {
+                    let seg = &self.partition.shards[s];
+                    if vals.len() != seg.vars.len() * bn * od
+                        || written.len() != seg.vars.len() * bn
+                    {
+                        let e = ShardError::Frame {
+                            shard: s,
+                            detail: "decoded reply has the wrong shape".into(),
+                        };
+                        return Err(self.fail(e));
+                    }
+                    scatter_decoded(out, &seg.vars, &vals, &written, bn, od, d_total)
+                }
+                Ok(_) => {
+                    let e = ShardError::Frame {
+                        shard: s,
+                        detail: "expected a decoded reply".into(),
+                    };
+                    return Err(self.fail(e));
+                }
+                Err(e) => return Err(self.fail(e)),
+            }
+        }
+        Ok(())
     }
 
     /// One stochastic-EM step on a batch: segmented forward + backward,
     /// M-step on the master arena, per-shard span broadcast. Returns the
     /// batch log-likelihood sum. (Copying wrapper over
     /// [`ShardedPool::train_step_shared`].)
-    pub fn train_step(&mut self, x: &[f32], mask: &[f32], bn: usize, em: &EmConfig) -> f64 {
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        em: &EmConfig,
+    ) -> Result<f64, ShardError> {
         self.train_step_shared(Arc::new(x.to_vec()), 0, Arc::new(mask.to_vec()), bn, em)
     }
 
@@ -796,24 +956,35 @@ impl ShardedPool {
         mask: Arc<Vec<f32>>,
         bn: usize,
         em: &EmConfig,
-    ) -> f64 {
+    ) -> Result<f64, ShardError> {
         let mut logp = vec![0.0f32; bn];
-        self.forward_shared(x, row0, mask, bn, Semiring::SumProduct, &mut logp);
+        self.forward_shared(x, row0, mask, bn, Semiring::SumProduct, &mut logp)?;
         let mut stats = EmStats::zeros(&self.params.layout);
-        self.backward(&mut stats);
+        self.backward(&mut stats)?;
         let ll = stats.loglik;
         m_step(&mut self.params, &stats, em);
-        self.broadcast();
-        ll
+        self.broadcast()?;
+        Ok(ll)
+    }
+
+    /// Shut the pool down explicitly: close every link and join every
+    /// surviving worker thread. Joins cleanly even when the pool is
+    /// degraded (a dead worker's link just closes). `Drop` does the
+    /// same; `stop` exists so callers can make teardown visible.
+    pub fn stop(mut self) {
+        for link in &mut self.links {
+            link.shutdown();
+        }
     }
 }
 
 impl Drop for ShardedPool {
     fn drop(&mut self) {
-        // dropping the senders shuts the workers down; join to not leak
-        self.job_txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        // closing the links shuts the workers down; ChannelTransport
+        // joins its thread, TcpTransport closes its socket (the remote
+        // process sees a clean EOF)
+        for link in &mut self.links {
+            link.shutdown();
         }
     }
 }
@@ -856,7 +1027,7 @@ pub fn train_sharded(
     data: &[f32],
     n: usize,
     cfg: &ShardConfig,
-) -> Vec<EpochStats> {
+) -> Result<Vec<EpochStats>> {
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
@@ -882,7 +1053,7 @@ pub fn train_sharded(
         while b0 < n {
             let bn = cfg.batch_size.min(n - b0);
             epoch_ll +=
-                pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &cfg.em);
+                pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &cfg.em)?;
             b0 += bn;
         }
         let rec = EpochStats {
@@ -902,7 +1073,8 @@ pub fn train_sharded(
         history.push(rec);
     }
     params.clone_from(pool.params());
-    history
+    pool.stop();
+    Ok(history)
 }
 
 // ---------------------------------------------------------------------------
@@ -1329,7 +1501,8 @@ mod tests {
                 &data,
                 128,
                 &cfg,
-            );
+            )
+            .unwrap();
             assert_eq!(
                 p.data, p_ref.data,
                 "{shards}-shard EM diverged from the single-engine reference"
@@ -1376,13 +1549,14 @@ mod tests {
             bn,
         );
         let mut lp = vec![0.0f32; bn];
-        pool.forward(&x, &mask, bn, &mut lp);
+        pool.forward(&x, &mask, bn, &mut lp).unwrap();
         for (a, b) in lp_ref.iter().zip(&lp) {
             assert_eq!(a.to_bits(), b.to_bits(), "sharded forward diverged");
         }
         let mut out = x.clone();
         let mut rng = crate::util::rng::Rng::new(77);
-        pool.decode(bn, &mask, DecodeMode::Sample, &mut rng, &mut out);
+        pool.decode(bn, &mask, DecodeMode::Sample, &mut rng, &mut out)
+            .unwrap();
         assert_eq!(out_ref, out, "sharded Sample decode diverged");
     }
 

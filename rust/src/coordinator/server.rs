@@ -19,19 +19,36 @@
 //! The dispatcher is backend-agnostic: a private engine of any type
 //! implementing [`Engine`] ([`InferenceServer::start`]), a backend picked
 //! by name from the runtime registry ([`InferenceServer::start_named`]),
-//! or a scope-partitioned [`ShardedPool`]
-//! ([`InferenceServer::start_sharded`]) whose segment workers each hold
-//! only their parameter shard. MPE serves sharded for free: the
-//! max-product forward crosses the cut through the same boundary
-//! activation rows as sum-product, and the backtrack through the same
+//! a scope-partitioned [`ShardedPool`]
+//! ([`InferenceServer::start_sharded`]), or a pool of remote
+//! `einet shard-worker` processes reached over TCP
+//! ([`InferenceServer::start_remote`]) — each worker holding only its
+//! parameter shard. MPE serves sharded for free: the max-product forward
+//! crosses the cut through the same boundary activation rows as
+//! sum-product, and the backtrack through the same
 //! one-`sel`-u32-per-region·sample tables as sampling. Batches are
 //! handed to the sharded backend as a shared `Arc` (no per-call copy).
+//!
+//! The front door is non-blocking and bounded: submissions beyond
+//! [`ServerConfig::max_pending`] are turned away immediately with
+//! [`QueryError::Overloaded`] (the dispatcher never sees them), requests
+//! that sit queued past [`ServerConfig::deadline`] are answered
+//! [`QueryError::Expired`] instead of served stale, and every rejection
+//! — malformed, out-of-domain, unsupported, overloaded, expired, or
+//! backend-lost — is a typed [`QueryAnswer::Err`] on the unified
+//! endpoint (the legacy scalar/row shims keep their
+//! drop-the-channel contract). A dead shard worker degrades the
+//! backend: the group being served and everything after it get
+//! [`QueryError::BackendLost`] replies while the dispatcher keeps
+//! draining, so no client ever hangs on a lost pool.
 
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use super::transport::ShardError;
 use super::ShardedPool;
 use crate::engine::query::{Query, QueryOutput, QueryPlan};
 use crate::engine::registry::{EngineFactory, EngineRegistry};
@@ -66,48 +83,140 @@ impl Backend {
         rng: &mut Rng,
         den: &mut Vec<f32>,
         out: &mut QueryOutput,
-    ) {
+    ) -> std::result::Result<(), ShardError> {
         match self {
-            Backend::Single(e, params) => e.execute(params, qp, x.as_slice(), bn, rng, out),
+            Backend::Single(e, params) => {
+                e.execute(params, qp, x.as_slice(), bn, rng, out);
+                Ok(())
+            }
             Backend::Sharded(p) => {
                 out.scores.clear();
                 out.scores.resize(bn, 0.0);
                 out.rows.clear();
                 let m0 = Arc::new(qp.passes[0].mask.clone());
-                p.forward_shared(
-                    x.clone(),
-                    0,
-                    m0.clone(),
-                    bn,
-                    qp.passes[0].semiring,
-                    &mut out.scores,
-                );
-                if let Some(mode) = qp.decode {
-                    out.rows.extend_from_slice(x.as_slice());
-                    p.decode(bn, m0.as_slice(), mode, rng, &mut out.rows);
-                }
-                if qp.is_ratio() {
+                if qp.is_ratio() && qp.decode.is_none() {
+                    // double-buffered ratio: both passes go to the shards
+                    // back to back, so shard compute for the denominator
+                    // overlaps the spine reduce of the numerator (same
+                    // imports, same spine steps — bit-identical to the
+                    // sequential order)
+                    let m1 = Arc::new(qp.passes[1].mask.clone());
+                    p.begin_forward(x.clone(), 0, m0, bn, qp.passes[0].semiring)?;
+                    p.begin_forward(x.clone(), 0, m1, bn, qp.passes[1].semiring)?;
+                    p.finish_forward(&mut out.scores)?;
                     den.clear();
                     den.resize(bn, 0.0);
-                    let m1 = Arc::new(qp.passes[1].mask.clone());
-                    p.forward_shared(x.clone(), 0, m1, bn, qp.passes[1].semiring, den);
+                    p.finish_forward(den)?;
                     for b in 0..bn {
                         out.scores[b] -= den[b];
                     }
+                } else {
+                    p.forward_shared(
+                        x.clone(),
+                        0,
+                        m0.clone(),
+                        bn,
+                        qp.passes[0].semiring,
+                        &mut out.scores,
+                    )?;
+                    if let Some(mode) = qp.decode {
+                        out.rows.extend_from_slice(x.as_slice());
+                        p.decode(bn, m0.as_slice(), mode, rng, &mut out.rows)?;
+                    }
+                    if qp.is_ratio() {
+                        den.clear();
+                        den.resize(bn, 0.0);
+                        let m1 = Arc::new(qp.passes[1].mask.clone());
+                        p.forward_shared(x.clone(), 0, m1, bn, qp.passes[1].semiring, den)?;
+                        for b in 0..bn {
+                            out.scores[b] -= den[b];
+                        }
+                    }
                 }
+                Ok(())
             }
         }
     }
 }
 
+/// Why a request was turned away instead of served. Every rejection on
+/// the unified endpoint carries one of these; [`ServerStats`] tallies
+/// them per cause.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    /// wrong-length evidence, or a mask [`Query::compile`] rejects
+    /// (wrong length, non-finite values, overlapping conditional masks)
+    Malformed,
+    /// observed evidence outside the leaf family's support (would index
+    /// theta out of bounds or poison the batch with NaN)
+    OutOfDomain,
+    /// a [`Query::Sample`] — its n-row answer does not fit the
+    /// one-row-per-request protocol; submit `Inpaint` rows with an
+    /// all-zero mask instead
+    UnsupportedSample,
+    /// admission control: more than [`ServerConfig::max_pending`]
+    /// requests were already queued, so this one never entered
+    Overloaded,
+    /// the request sat queued past [`ServerConfig::deadline`]
+    Expired,
+    /// the serving backend lost a shard worker; the pool is degraded and
+    /// cannot answer (restart workers and reconnect)
+    BackendLost,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::Malformed => write!(f, "malformed request"),
+            QueryError::OutOfDomain => {
+                write!(f, "observed evidence outside the leaf family's support")
+            }
+            QueryError::UnsupportedSample => {
+                write!(f, "Sample queries are not servable per-request")
+            }
+            QueryError::Overloaded => write!(f, "server overloaded: pending queue full"),
+            QueryError::Expired => write!(f, "request deadline expired before serving"),
+            QueryError::BackendLost => write!(f, "serving backend lost a shard worker"),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
 /// A served answer: the per-row log score (marginal / conditional /
 /// max-product MPE, depending on the query) plus, for decoding queries,
 /// the completed `[D, obs_dim]` row (observed dims untouched).
 #[derive(Clone, Debug)]
-pub struct QueryAnswer {
+pub struct QueryOk {
     pub score: f32,
     /// empty for score-only queries
     pub row: Vec<f32>,
+}
+
+/// What the unified endpoint delivers: the answer, or a typed rejection.
+/// (The legacy scalar/row shims signal rejection by dropping the reply
+/// channel instead — they have no payload to carry the cause.)
+#[derive(Clone, Debug)]
+pub enum QueryAnswer {
+    Ok(QueryOk),
+    Err(QueryError),
+}
+
+impl QueryAnswer {
+    /// The answer, or `None` if the request was rejected.
+    pub fn ok(self) -> Option<QueryOk> {
+        match self {
+            QueryAnswer::Ok(a) => Some(a),
+            QueryAnswer::Err(_) => None,
+        }
+    }
+
+    pub fn into_result(self) -> std::result::Result<QueryOk, QueryError> {
+        match self {
+            QueryAnswer::Ok(a) => Ok(a),
+            QueryAnswer::Err(e) => Err(e),
+        }
+    }
 }
 
 /// How a request wants its answer delivered: the legacy endpoints keep
@@ -118,17 +227,98 @@ enum ReplyTo {
     Full(Sender<QueryAnswer>),
 }
 
-/// One in-flight request: evidence row + typed query + reply channel.
+/// One in-flight request: evidence row + typed query + reply channel +
+/// the submission instant its deadline is measured from.
 struct QueryRequest {
     x: Vec<f32>,
     query: Query,
     reply: ReplyTo,
+    enqueued: Instant,
+}
+
+/// Admission state shared between the submitting threads and the
+/// dispatcher: the pending depth is checked (and a slot reserved) BEFORE
+/// a request enters the channel, so overload rejection is immediate and
+/// the dispatcher's queue is bounded.
+struct Gate {
+    depth: AtomicUsize,
+    max_pending: usize,
+    overloaded: AtomicUsize,
+}
+
+impl Gate {
+    /// Reserve a queue slot; `false` means the pending queue is full and
+    /// the request must be turned away.
+    fn admit(&self) -> bool {
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_pending {
+                self.overloaded.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Release a slot: the dispatcher pulled the request off the channel.
+    fn release(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Handle to the running service.
 pub struct InferenceServer {
     tx: Sender<QueryRequest>,
+    gate: Arc<Gate>,
     handle: Option<JoinHandle<ServerStats>>,
+}
+
+/// Serving knobs beyond the plan itself. The legacy constructors
+/// ([`InferenceServer::start`] etc.) keep their `(max_batch, max_wait)`
+/// signatures and fill the rest with these defaults; the config-taking
+/// constructors ([`InferenceServer::start_with`],
+/// [`InferenceServer::start_remote`]) expose everything.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// largest coalesced batch (also the backend's batch capacity)
+    pub max_batch: usize,
+    /// how long the dispatcher holds the FIRST request of an idle wave
+    /// open for co-travellers; leftovers of a burst are served
+    /// immediately, never re-delayed
+    pub max_wait: Duration,
+    /// admission bound: at most this many requests queued ahead of the
+    /// dispatcher; submissions beyond it are rejected
+    /// [`QueryError::Overloaded`] without blocking (0 turns every
+    /// request away — a deterministic test hook)
+    pub max_pending: usize,
+    /// per-request deadline measured from submission: a request still
+    /// queued when `enqueued.elapsed() >= deadline` is answered
+    /// [`QueryError::Expired`] instead of served stale
+    /// (`Duration::MAX` = never; `Duration::ZERO` expires everything —
+    /// the deterministic test hook)
+    pub deadline: Duration,
+    /// seed for the generation endpoint's RNG (reproducible serving)
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            max_pending: 1024,
+            deadline: Duration::MAX,
+            seed: 0,
+        }
+    }
 }
 
 /// Throughput accounting returned on shutdown.
@@ -139,15 +329,38 @@ pub struct ServerStats {
     pub batches: usize,
     /// decoded rows produced (Inpaint / Mpe)
     pub generated: usize,
-    /// malformed requests dropped at the dispatch boundary (wrong-length
-    /// evidence/mask, non-finite mask values, overlapping conditional
-    /// masks, observed evidence outside the leaf family's support, or a
-    /// `Sample` query — unsupported per-request here)
+    /// requests turned away, total across every cause below
     pub rejected: usize,
+    /// wrong-length evidence or a mask `Query::compile` rejects
+    pub rej_malformed: usize,
+    /// observed evidence outside the leaf family's support
+    pub rej_out_of_domain: usize,
+    /// `Sample` queries (unsupported per-request)
+    pub rej_unsupported: usize,
+    /// turned away at the admission gate (pending queue full)
+    pub rej_overloaded: usize,
+    /// expired in the queue past the per-request deadline
+    pub rej_expired: usize,
+    /// rejected because the sharded backend lost a worker
+    pub rej_backend_lost: usize,
     /// largest number of requests served by a single batched pass — the
     /// coalescing witness the tests assert on (>= 2 proves batching
     /// without depending on wall-clock wave counts)
     pub max_group: usize,
+}
+
+impl ServerStats {
+    fn tally(&mut self, e: &QueryError) {
+        self.rejected += 1;
+        match e {
+            QueryError::Malformed => self.rej_malformed += 1,
+            QueryError::OutOfDomain => self.rej_out_of_domain += 1,
+            QueryError::UnsupportedSample => self.rej_unsupported += 1,
+            QueryError::Overloaded => self.rej_overloaded += 1,
+            QueryError::Expired => self.rej_expired += 1,
+            QueryError::BackendLost => self.rej_backend_lost += 1,
+        }
+    }
 }
 
 impl InferenceServer {
@@ -173,14 +386,37 @@ impl InferenceServer {
         max_wait: Duration,
         seed: u64,
     ) -> Self {
+        Self::start_with::<E>(
+            plan,
+            family,
+            params,
+            ServerConfig {
+                max_batch,
+                max_wait,
+                seed,
+                ..ServerConfig::default()
+            },
+        )
+    }
+
+    /// Spawn the dispatcher with a full [`ServerConfig`] (admission bound
+    /// and per-request deadline included).
+    pub fn start_with<E: Engine + Send + 'static>(
+        plan: LayeredPlan,
+        family: LeafFamily,
+        params: EinetParams,
+        cfg: ServerConfig,
+    ) -> Self {
         assert_eq!(
             params.family(),
             family,
             "parameter arena family does not match the configured family"
         );
-        let backend =
-            Backend::Single(Box::new(E::build(plan.clone(), family, max_batch)), params);
-        Self::start_backend(plan, family, backend, max_batch, max_wait, seed)
+        let backend = Backend::Single(
+            Box::new(E::build(plan.clone(), family, cfg.max_batch)),
+            params,
+        );
+        Self::start_backend(plan, family, backend, cfg)
     }
 
     /// Spawn the dispatcher on a backend picked from the runtime engine
@@ -206,7 +442,15 @@ impl InferenceServer {
         let backend =
             Backend::Single(registry.build(name, plan.clone(), family, max_batch)?, params);
         Ok(Self::start_backend(
-            plan, family, backend, max_batch, max_wait, seed,
+            plan,
+            family,
+            backend,
+            ServerConfig {
+                max_batch,
+                max_wait,
+                seed,
+                ..ServerConfig::default()
+            },
         ))
     }
 
@@ -232,69 +476,125 @@ impl InferenceServer {
             plan,
             family,
             Backend::Sharded(pool),
-            max_batch,
-            max_wait,
-            seed,
+            ServerConfig {
+                max_batch,
+                max_wait,
+                seed,
+                ..ServerConfig::default()
+            },
         )
+    }
+
+    /// Spawn the dispatcher over remote `einet shard-worker` processes:
+    /// [`ShardedPool::connect`] hands each address its deterministic
+    /// [`super::transport::WorkerConfig`] and streams the parameter
+    /// spans, then serving proceeds exactly as in
+    /// [`InferenceServer::start_sharded`] — same frames, same
+    /// bit-identical answers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_remote(
+        addrs: &[String],
+        structure: &str,
+        engine_name: &str,
+        plan: LayeredPlan,
+        family: LeafFamily,
+        params: EinetParams,
+        n_shards: usize,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
+        let pool = ShardedPool::connect(
+            addrs,
+            structure,
+            engine_name,
+            &plan,
+            family,
+            &params,
+            n_shards,
+            cfg.max_batch,
+        )?;
+        drop(params); // the pool's master arena is the single resident copy
+        Ok(Self::start_backend(
+            plan,
+            family,
+            Backend::Sharded(pool),
+            cfg,
+        ))
     }
 
     fn start_backend(
         plan: LayeredPlan,
         family: LeafFamily,
         backend: Backend,
-        max_batch: usize,
-        max_wait: Duration,
-        seed: u64,
+        cfg: ServerConfig,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<QueryRequest>();
+        let gate = Arc::new(Gate {
+            depth: AtomicUsize::new(0),
+            max_pending: cfg.max_pending,
+            overloaded: AtomicUsize::new(0),
+        });
+        let gate_d = gate.clone();
         let handle = std::thread::spawn(move || {
-            dispatcher(plan, family, backend, rx, max_batch, max_wait, seed)
+            dispatcher(plan, family, backend, rx, gate_d, cfg)
         });
         Self {
             tx,
+            gate,
             handle: Some(handle),
         }
     }
 
-    /// Submit any typed [`Query`]; the receiver yields the full
-    /// [`QueryAnswer`] (score + completed row where applicable).
-    ///
-    /// Malformed requests — wrong-length evidence, an invalid mask
-    /// (length, non-finite values, conditional overlap), observed
-    /// evidence outside the leaf family's support (see
-    /// [`LeafFamily::valid_obs`]), or a [`Query::Sample`] (whose n-row
-    /// answer does not fit the one-row-per-request protocol; submit
-    /// `Inpaint` rows with an all-zero mask instead) — are dropped by the
-    /// dispatcher: the receiver disconnects instead of yielding a value.
-    /// Evidence at marginalized dims is never read, so non-finite
-    /// placeholders there are accepted.
+    /// Submit any typed [`Query`]; the receiver yields a
+    /// [`QueryAnswer`]: `Ok` with score + completed row where
+    /// applicable, or a typed `Err` — [`QueryError::Malformed`] /
+    /// [`QueryError::OutOfDomain`] (see [`LeafFamily::valid_obs`]) /
+    /// [`QueryError::UnsupportedSample`] for requests the dispatcher
+    /// turns away, [`QueryError::Overloaded`] when the admission gate is
+    /// full (delivered immediately, without entering the queue),
+    /// [`QueryError::Expired`] for requests that out-sat their deadline,
+    /// [`QueryError::BackendLost`] when the sharded backend has lost a
+    /// worker. Evidence at marginalized dims is never read, so
+    /// non-finite placeholders there are accepted.
     pub fn submit_query(&self, x: Vec<f32>, query: Query) -> Receiver<QueryAnswer> {
         let (reply, rx) = mpsc::channel();
+        if !self.gate.admit() {
+            let _ = reply.send(QueryAnswer::Err(QueryError::Overloaded));
+            return rx;
+        }
         let _ = self.tx.send(QueryRequest {
             x,
             query,
             reply: ReplyTo::Full(reply),
+            enqueued: Instant::now(),
         });
         rx
     }
 
     /// Blocking convenience for [`InferenceServer::submit_query`]. Panics
-    /// if the request is rejected as malformed or the server is down.
-    pub fn run_query(&self, x: Vec<f32>, query: Query) -> QueryAnswer {
-        self.submit_query(x, query)
-            .recv()
-            .expect("request rejected or server down")
+    /// if the request is rejected or the server is down.
+    pub fn run_query(&self, x: Vec<f32>, query: Query) -> QueryOk {
+        match self.submit_query(x, query).recv() {
+            Ok(QueryAnswer::Ok(ans)) => ans,
+            Ok(QueryAnswer::Err(e)) => panic!("request rejected: {e}"),
+            Err(_) => panic!("server down"),
+        }
     }
 
     /// Legacy shim for [`Query::Marginal`]: submit evidence + mask,
-    /// receive the marginal log-likelihood. Prefer
-    /// [`InferenceServer::submit_query`].
+    /// receive the marginal log-likelihood. Rejections of any cause
+    /// (including overload) drop the reply channel: the receiver
+    /// disconnects instead of yielding a value. Prefer
+    /// [`InferenceServer::submit_query`] for typed rejections.
     pub fn submit(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<f32> {
         let (reply, rx) = mpsc::channel();
+        if !self.gate.admit() {
+            return rx;
+        }
         let _ = self.tx.send(QueryRequest {
             x,
             query: Query::Marginal { mask },
             reply: ReplyTo::Score(reply),
+            enqueued: Instant::now(),
         });
         rx
     }
@@ -320,10 +620,14 @@ impl InferenceServer {
         mode: DecodeMode,
     ) -> Receiver<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
+        if !self.gate.admit() {
+            return rx;
+        }
         let _ = self.tx.send(QueryRequest {
             x,
             query: Query::Inpaint { mask, mode },
             reply: ReplyTo::Row(reply),
+            enqueued: Instant::now(),
         });
         rx
     }
@@ -345,22 +649,31 @@ impl InferenceServer {
         self.submit_query(x, Query::Mpe { mask })
     }
 
-    /// Blocking convenience for [`InferenceServer::submit_mpe`].
-    pub fn mpe(&self, x: Vec<f32>, mask: Vec<f32>) -> QueryAnswer {
-        self.submit_mpe(x, mask)
-            .recv()
-            .expect("request rejected or server down")
+    /// Blocking convenience for [`InferenceServer::submit_mpe`]. Panics
+    /// if the request is rejected or the server is down.
+    pub fn mpe(&self, x: Vec<f32>, mask: Vec<f32>) -> QueryOk {
+        match self.submit_mpe(x, mask).recv() {
+            Ok(QueryAnswer::Ok(ans)) => ans,
+            Ok(QueryAnswer::Err(e)) => panic!("request rejected: {e}"),
+            Err(_) => panic!("server down"),
+        }
     }
 
-    /// Shut down and return stats. A dispatcher panic (an engine assert
-    /// slipping past request validation) is propagated here rather than
-    /// silently mapped to zeroed stats.
+    /// Shut down and return stats (admission-gate rejections folded in).
+    /// A dispatcher panic (an engine assert slipping past request
+    /// validation) is propagated here rather than silently mapped to
+    /// zeroed stats.
     pub fn stop(mut self) -> ServerStats {
         drop(self.tx);
-        self.handle
+        let mut stats = self
+            .handle
             .take()
             .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
-            .unwrap_or_default()
+            .unwrap_or_default();
+        let over = self.gate.overloaded.load(Ordering::Relaxed);
+        stats.rej_overloaded += over;
+        stats.rejected += over;
+        stats
     }
 }
 
@@ -381,121 +694,177 @@ fn compile_request(
     od: usize,
     row: usize,
     family: LeafFamily,
-) -> Option<QueryPlan> {
-    let qp = r.query.compile(d).ok()?;
-    if qp.sample_n.is_some() || r.x.len() != row {
-        return None;
+) -> std::result::Result<QueryPlan, QueryError> {
+    let qp = r.query.compile(d).map_err(|_| QueryError::Malformed)?;
+    if qp.sample_n.is_some() {
+        return Err(QueryError::UnsupportedSample);
+    }
+    if r.x.len() != row {
+        return Err(QueryError::Malformed);
     }
     for pass in &qp.passes {
         for v in 0..d {
             if pass.mask[v] != 0.0 && !family.valid_obs(&r.x[v * od..(v + 1) * od]) {
-                return None;
+                return Err(QueryError::OutOfDomain);
             }
         }
     }
-    Some(qp)
+    Ok(qp)
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Deliver a typed rejection: the unified endpoint gets the cause, the
+/// legacy scalar/row shims get their drop-the-channel contract (the
+/// sender is dropped here, the receiver disconnects).
+fn reject(r: QueryRequest, e: QueryError, stats: &mut ServerStats) {
+    stats.tally(&e);
+    if let ReplyTo::Full(tx) = r.reply {
+        let _ = tx.send(QueryAnswer::Err(e));
+    }
+}
+
 fn dispatcher(
     plan: LayeredPlan,
     family: LeafFamily,
     mut engine: Backend,
     rx: Receiver<QueryRequest>,
-    max_batch: usize,
-    max_wait: Duration,
-    seed: u64,
+    gate: Arc<Gate>,
+    cfg: ServerConfig,
 ) -> ServerStats {
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
-    let mut rng = Rng::new(seed);
+    let mut rng = Rng::new(cfg.seed);
     let mut stats = ServerStats::default();
-    let mut pending: Vec<QueryRequest> = Vec::new();
+    let mut jobs: Vec<(QueryPlan, QueryRequest)> = Vec::new();
     let mut out = QueryOutput::default();
     let mut den: Vec<f32> = Vec::new();
-    loop {
-        // block for the first request (or shutdown)
-        if pending.is_empty() {
+    // intake: release the admission slot, enforce the deadline, compile,
+    // reject typed — only well-formed live requests reach the job queue
+    let intake = |q: QueryRequest,
+                  jobs: &mut Vec<(QueryPlan, QueryRequest)>,
+                  stats: &mut ServerStats| {
+        gate.release();
+        if q.enqueued.elapsed() >= cfg.deadline {
+            reject(q, QueryError::Expired, stats);
+            return;
+        }
+        match compile_request(&q, d, od, row, family) {
+            Ok(qp) => jobs.push((qp, q)),
+            Err(e) => reject(q, e, stats),
+        }
+    };
+    let mut open = true;
+    while open || !jobs.is_empty() {
+        // block only when idle: a leftover from the previous wave is
+        // served immediately, never re-delayed behind a fresh window
+        let mut fresh = false;
+        if open && jobs.is_empty() {
             match rx.recv() {
-                Ok(q) => pending.push(q),
-                Err(_) => break,
+                Ok(q) => {
+                    intake(q, &mut jobs, &mut stats);
+                    fresh = true;
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
             }
         }
-        // coalesce more requests up to max_batch / max_wait
-        let deadline = std::time::Instant::now() + max_wait;
-        while pending.len() < max_batch {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(q) => pending.push(q),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+        // non-blocking drain of everything already queued
+        while open {
+            match rx.try_recv() {
+                Ok(q) => intake(q, &mut jobs, &mut stats),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
             }
         }
-        // compile once per request; invalid requests are dropped here
-        // (the reply channel disconnects, the client sees an error, the
-        // dispatcher keeps serving)
-        let mut jobs: Vec<(QueryPlan, QueryRequest)> = Vec::with_capacity(pending.len());
-        for r in pending.drain(..) {
-            match compile_request(&r, d, od, row, family) {
-                Some(qp) => jobs.push((qp, r)),
-                None => stats.rejected += 1,
-            }
-        }
-        // group identically-compiled plans: each group is served by one
-        // set of semiring passes + one batched decode
-        jobs.sort_by(|a, b| a.0.group_cmp(&b.0));
-        while !jobs.is_empty() {
-            let take = jobs
-                .iter()
-                .take_while(|j| j.0.group_cmp(&jobs[0].0).is_eq())
-                .count()
-                .min(max_batch);
-            let group: Vec<(QueryPlan, QueryRequest)> = jobs.drain(..take).collect();
-            let bn = group.len();
-            let qp = &group[0].0;
-            let mut xbuf = vec![0.0f32; bn * row];
-            for (i, (_, q)) in group.iter().enumerate() {
-                xbuf[i * row..(i + 1) * row].copy_from_slice(&q.x);
-            }
-            // one Arc per group: the sharded backend ships this pointer
-            // to its workers with no further copies
-            let x = Arc::new(xbuf);
-            engine.run_plan(qp, &x, bn, &mut rng, &mut den, &mut out);
-            let decoded = qp.decode.is_some();
-            for (i, (_, q)) in group.iter().enumerate() {
-                let score = out.scores[i];
-                match &q.reply {
-                    ReplyTo::Score(tx) => {
-                        let _ = tx.send(score);
-                    }
-                    ReplyTo::Row(tx) => {
-                        let _ = tx.send(out.rows[i * row..(i + 1) * row].to_vec());
-                    }
-                    ReplyTo::Full(tx) => {
-                        let row_out = if decoded {
-                            out.rows[i * row..(i + 1) * row].to_vec()
-                        } else {
-                            Vec::new()
-                        };
-                        let _ = tx.send(QueryAnswer {
-                            score,
-                            row: row_out,
-                        });
+        // the coalescing window opens ONLY when this wave began from an
+        // idle blocking wait AND the batch still has room (the old loop
+        // re-opened `max_wait` on every iteration, delaying leftovers
+        // that were ready to serve)
+        if open && fresh && jobs.len() < cfg.max_batch {
+            let window = Instant::now() + cfg.max_wait;
+            while jobs.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= window {
+                    break;
+                }
+                match rx.recv_timeout(window - now) {
+                    Ok(q) => intake(q, &mut jobs, &mut stats),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
                     }
                 }
             }
-            if decoded {
-                stats.generated += bn;
-            } else {
-                stats.queries += bn;
-            }
-            stats.batches += 1;
-            stats.max_group = stats.max_group.max(bn);
         }
+        if jobs.is_empty() {
+            continue;
+        }
+        // group identically-compiled plans and serve ONE group per
+        // iteration: each group is one set of semiring passes + one
+        // batched decode; leftovers stay queued and go out next round
+        // without a new wait
+        jobs.sort_by(|a, b| a.0.group_cmp(&b.0));
+        let take = jobs
+            .iter()
+            .take_while(|j| j.0.group_cmp(&jobs[0].0).is_eq())
+            .count()
+            .min(cfg.max_batch);
+        let group: Vec<(QueryPlan, QueryRequest)> = jobs.drain(..take).collect();
+        let bn = group.len();
+        let qp = &group[0].0;
+        let decoded = qp.decode.is_some();
+        let mut xbuf = vec![0.0f32; bn * row];
+        for (i, (_, q)) in group.iter().enumerate() {
+            xbuf[i * row..(i + 1) * row].copy_from_slice(&q.x);
+        }
+        // one Arc per group: the sharded backend ships this pointer
+        // to its workers with no further copies
+        let x = Arc::new(xbuf);
+        if let Err(e) = engine.run_plan(qp, &x, bn, &mut rng, &mut den, &mut out) {
+            // a lost worker degrades the pool, it does not kill serving:
+            // this group — and every later request, via the pool's
+            // fail-fast Unhealthy — gets a typed BackendLost reply
+            crate::info!("serving backend degraded: {e}");
+            for (_, q) in group {
+                reject(q, QueryError::BackendLost, &mut stats);
+            }
+            continue;
+        }
+        for (i, (_, q)) in group.iter().enumerate() {
+            let score = out.scores[i];
+            match &q.reply {
+                ReplyTo::Score(tx) => {
+                    let _ = tx.send(score);
+                }
+                ReplyTo::Row(tx) => {
+                    let _ = tx.send(out.rows[i * row..(i + 1) * row].to_vec());
+                }
+                ReplyTo::Full(tx) => {
+                    let row_out = if decoded {
+                        out.rows[i * row..(i + 1) * row].to_vec()
+                    } else {
+                        Vec::new()
+                    };
+                    let _ = tx.send(QueryAnswer::Ok(QueryOk {
+                        score,
+                        row: row_out,
+                    }));
+                }
+            }
+        }
+        if decoded {
+            stats.generated += bn;
+        } else {
+            stats.queries += bn;
+        }
+        stats.batches += 1;
+        stats.max_group = stats.max_group.max(bn);
     }
     stats
 }
@@ -757,12 +1126,94 @@ mod tests {
         assert_eq!(ans.row, want.rows);
         assert_eq!(ans.row[0], 1.0, "MPE resampled the evidence");
         // Sample{n} does not fit one-row-per-request serving: rejected
+        // with a typed cause on the unified endpoint
         let rej = server.submit_query(vec![0.0; nv], Query::Sample { n: 4 });
-        assert!(rej.recv().is_err(), "Sample query must be rejected");
+        assert!(
+            matches!(
+                rej.recv().expect("typed rejection expected"),
+                QueryAnswer::Err(QueryError::UnsupportedSample)
+            ),
+            "Sample query must be rejected as UnsupportedSample"
+        );
         let stats = server.stop();
         assert_eq!(stats.queries, 1);
         assert_eq!(stats.generated, 1);
         assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.rej_unsupported, 1);
+    }
+
+    #[test]
+    fn overload_rejections_are_typed_and_immediate() {
+        // max_pending = 0: the admission gate turns every request away
+        // before it enters the queue — the unified endpoint sees a typed
+        // Overloaded answer, the legacy shim a disconnect, and stop()
+        // folds the gate's count into the stats
+        let nv = 4;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 6), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 6);
+        let server = InferenceServer::start_with::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_pending: 0,
+                ..ServerConfig::default()
+            },
+        );
+        let x = vec![1.0f32, 0.0, 1.0, 0.0];
+        let full = server.submit_query(x.clone(), Query::LogLik);
+        assert!(
+            matches!(
+                full.recv().expect("typed rejection expected"),
+                QueryAnswer::Err(QueryError::Overloaded)
+            ),
+            "full-queue submission must be rejected Overloaded"
+        );
+        let legacy = server.submit(x, vec![1.0f32; nv]);
+        assert!(
+            legacy.recv().is_err(),
+            "legacy shim signals overload by disconnecting"
+        );
+        let stats = server.stop();
+        assert_eq!(stats.queries, 0);
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.rej_overloaded, 2);
+    }
+
+    #[test]
+    fn expired_requests_are_rejected_not_served() {
+        // deadline = 0: every admitted request has lapsed by the time the
+        // dispatcher drains it — a deterministic stand-in for a stalled
+        // queue — and is answered Expired instead of served stale
+        let nv = 4;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 8), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 8);
+        let server = InferenceServer::start_with::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                deadline: Duration::ZERO,
+                ..ServerConfig::default()
+            },
+        );
+        let x = vec![1.0f32, 0.0, 1.0, 0.0];
+        let rx = server.submit_query(x, Query::LogLik);
+        assert!(
+            matches!(
+                rx.recv().expect("typed rejection expected"),
+                QueryAnswer::Err(QueryError::Expired)
+            ),
+            "lapsed request must be rejected Expired"
+        );
+        let stats = server.stop();
+        assert_eq!(stats.queries, 0);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.rej_expired, 1);
     }
 
     #[test]

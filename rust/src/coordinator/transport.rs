@@ -1,0 +1,1142 @@
+//! Shard transport: the typed boundary tables of
+//! [`crate::engine::exec::PlanPartition`] behind a pluggable carrier, so
+//! one model trains and serves across threads, processes, or hosts.
+//!
+//! The protocol is exactly the in-process job/reply vocabulary that
+//! [`super::ShardedPool`] has always spoken — parameter spans down as an
+//! [`ArenaShard`], boundary activation rows up, gradient rows down,
+//! span-packed [`StatsShard`] statistics up, one `sel` u32 per
+//! region·sample for decoding — lifted into a [`ShardTransport`] trait
+//! with two carriers:
+//!
+//! * [`ChannelTransport`] — a persistent worker **thread** fed over mpsc
+//!   channels: today's behavior, zero-copy batch hand-off via `Arc`.
+//! * [`TcpTransport`] — a worker **process** (`einet shard-worker
+//!   --listen`) behind length-prefixed TCP frames: the coordinator sends
+//!   only the batch window `[row0, row0 + bn)`, never the backing
+//!   buffer, so wire traffic scales with the batch and the shard, not
+//!   the dataset or the model.
+//!
+//! Frame format (little-endian): `[u32 len][u8 tag][payload]`, where
+//! `len` counts the tag byte plus the payload and is capped at
+//! [`wire::MAX_FRAME`]. Payload encodings are the bounds-checked
+//! cursors of [`crate::engine::exec::wire`]; a torn, short, oversized,
+//! or corrupt frame decodes to a typed [`ShardError`] instead of a
+//! panic, and the pool degrades (callers see the error, other shards
+//! keep their replies) rather than taking the dispatcher down.
+//!
+//! A TCP session opens with a config handshake: the coordinator sends
+//! the structure spec string, `k`, leaf family, engine name, final
+//! shard count, and this worker's shard id; the worker rebuilds the
+//! *identical* plan (structure specs are deterministic), cuts it with
+//! the same [`PlanPartition::cut`], and acks. Parameters then flow over
+//! the same [`ArenaShard`] broadcast as in-process workers — a remote
+//! worker never needs checkpoint access — so N-shard execution over TCP
+//! is bit-identical to in-process sharding.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::engine::exec::wire::{self, Dec, Enc, WireResult};
+use crate::engine::exec::{PlanPartition, Segment, Semiring};
+use crate::engine::registry::{EngineFactory, EngineRegistry};
+use crate::engine::{
+    family_from_tag, family_tag, sum_p_spans_for_vars, ArenaShard, DecodeMode,
+    EmStats, Engine, ParamArena, ParamLayout, StatsShard,
+};
+use crate::layers::LayeredPlan;
+use crate::leaves::LeafFamily;
+use crate::structure::from_spec;
+
+// ---------------------------------------------------------------------------
+// ShardError: the typed failure surface of a degraded pool
+// ---------------------------------------------------------------------------
+
+/// Why a shard link failed. Every fallible pool operation returns this;
+/// the first failure marks the pool unhealthy ([`ShardError::Unhealthy`]
+/// on subsequent calls) so one dead worker degrades service instead of
+/// panicking the dispatcher.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// the worker hung up (thread died / process killed / connection
+    /// closed) — the payload is the shard id
+    WorkerLost(usize),
+    /// a torn, short, oversized, or otherwise corrupt frame
+    Frame { shard: usize, detail: String },
+    /// the config handshake failed (connect refused, version or
+    /// structure mismatch, worker-side build error)
+    Handshake { shard: usize, detail: String },
+    /// a previous failure already degraded the pool; the original cause
+    /// was reported then
+    Unhealthy,
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::WorkerLost(s) => write!(f, "shard worker {s} lost"),
+            ShardError::Frame { shard, detail } => {
+                write!(f, "bad frame from shard {shard}: {detail}")
+            }
+            ShardError::Handshake { shard, detail } => {
+                write!(f, "shard {shard} handshake failed: {detail}")
+            }
+            ShardError::Unhealthy => {
+                write!(f, "pool already degraded by an earlier shard failure")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+// ---------------------------------------------------------------------------
+// The job/reply vocabulary (moved here from coordinator/mod.rs)
+// ---------------------------------------------------------------------------
+
+/// What the coordinator sends a segment worker. Batches travel as a
+/// shared `Arc` plus a row offset — the in-process carrier never copies
+/// the batch per call, and the TCP carrier serializes only the
+/// `[row0, row0 + bn)` window.
+pub enum ShardJob {
+    /// new parameter spans from the server (applies before later jobs —
+    /// both carriers are ordered)
+    Params(ArenaShard),
+    /// forward the worker's segment over rows `[row0, row0 + bn)` of `x`
+    /// under the given semiring; reply `Boundary`
+    Forward {
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        sr: Semiring,
+    },
+    /// backward sweep seeded with the spine's boundary gradients
+    /// (packed in `Segment::boundary` order); reply `Stats`
+    Backward {
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        grads: Vec<f32>,
+    },
+    /// finish the top-down decode locally from the spine's `sel` entries
+    /// (packed in `Segment::sel_in` order); reply `Decoded`
+    Decode {
+        mask: Arc<Vec<f32>>,
+        mode: DecodeMode,
+        bn: usize,
+        salt: u64,
+        sel: Vec<u32>,
+    },
+}
+
+/// A segment worker's reply.
+pub enum ShardReply {
+    /// boundary activation rows, packed in `Segment::boundary` order
+    Boundary(Vec<f32>),
+    /// the segment's E-step statistics, span-packed: only the scalars
+    /// the segment can write (its `param_spans` of `grad`, its owned
+    /// vars' `sum_p` rows) travel back — the reduce-direction mirror of
+    /// the [`ArenaShard`] broadcast, so reply traffic also scales with
+    /// the shard, not the model
+    Stats(Box<StatsShard>),
+    /// leaf emissions for the segment's owned variables: var-major
+    /// values plus the written mask (see [`Engine::decode_segment`])
+    Decoded { vals: Vec<f32>, written: Vec<bool> },
+}
+
+// ---------------------------------------------------------------------------
+// Frame tags + codecs
+// ---------------------------------------------------------------------------
+
+const TAG_CONFIG: u8 = 1;
+const TAG_CONFIG_ACK: u8 = 2;
+const TAG_PARAMS: u8 = 3;
+const TAG_FORWARD: u8 = 4;
+const TAG_BACKWARD: u8 = 5;
+const TAG_DECODE: u8 = 6;
+const TAG_BOUNDARY: u8 = 8;
+const TAG_STATS: u8 = 9;
+const TAG_DECODED: u8 = 10;
+
+const HANDSHAKE_MAGIC: u32 = 0x45494E57; // "EINW"
+const HANDSHAKE_VERSION: u32 = 1;
+
+fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    let len = (payload.len() + 1) as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one `[u32 len][u8 tag][payload]` frame. `Ok(None)` is a clean
+/// EOF (the peer closed between frames — the shutdown signal); EOF
+/// *inside* a frame, an empty or oversized length prefix, or an I/O
+/// error all surface as typed [`ShardError`]s attributed to `shard`.
+fn read_frame(
+    r: &mut impl Read,
+    shard: usize,
+) -> Result<Option<(u8, Vec<u8>)>, ShardError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(ShardError::Frame {
+                    shard,
+                    detail: format!("torn frame: EOF after {got} length bytes"),
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(ShardError::WorkerLost(shard)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        return Err(ShardError::Frame {
+            shard,
+            detail: "empty frame (zero length prefix)".into(),
+        });
+    }
+    if len > wire::MAX_FRAME {
+        return Err(ShardError::Frame {
+            shard,
+            detail: format!("oversized frame: {len} bytes > {} cap", wire::MAX_FRAME),
+        });
+    }
+    let mut buf = vec![0u8; len];
+    if let Err(e) = r.read_exact(&mut buf) {
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ShardError::Frame {
+                shard,
+                detail: format!("torn frame: EOF inside a {len}-byte frame"),
+            }
+        } else {
+            ShardError::WorkerLost(shard)
+        });
+    }
+    let tag = buf[0];
+    buf.remove(0);
+    Ok(Some((tag, buf)))
+}
+
+fn semiring_code(sr: Semiring) -> u8 {
+    match sr {
+        Semiring::SumProduct => 0,
+        Semiring::MaxProduct => 1,
+    }
+}
+
+fn semiring_from(code: u8) -> WireResult<Semiring> {
+    match code {
+        0 => Ok(Semiring::SumProduct),
+        1 => Ok(Semiring::MaxProduct),
+        other => Err(format!("unknown semiring code {other}")),
+    }
+}
+
+fn mode_code(mode: DecodeMode) -> u8 {
+    match mode {
+        DecodeMode::Sample => 0,
+        DecodeMode::Argmax => 1,
+        DecodeMode::Mpe => 2,
+    }
+}
+
+fn mode_from(code: u8) -> WireResult<DecodeMode> {
+    match code {
+        0 => Ok(DecodeMode::Sample),
+        1 => Ok(DecodeMode::Argmax),
+        2 => Ok(DecodeMode::Mpe),
+        other => Err(format!("unknown decode-mode code {other}")),
+    }
+}
+
+/// Encode a job for the wire. `row` is the evidence row stride
+/// (`D * obs_dim`): only the batch window the job actually reads is
+/// serialized, never the whole shared buffer.
+fn encode_job(job: &ShardJob, row: usize) -> (u8, Vec<u8>) {
+    let mut e = Enc::new();
+    match job {
+        ShardJob::Params(shard) => {
+            e.spans(&shard.spans);
+            e.f32s(&shard.data);
+            (TAG_PARAMS, e.buf)
+        }
+        ShardJob::Forward { x, row0, mask, bn, sr } => {
+            e.u8(semiring_code(*sr));
+            e.u32(*bn as u32);
+            e.f32s(mask);
+            e.f32s(&x[row0 * row..(row0 + bn) * row]);
+            (TAG_FORWARD, e.buf)
+        }
+        ShardJob::Backward { x, row0, mask, bn, grads } => {
+            e.u32(*bn as u32);
+            e.f32s(mask);
+            e.f32s(&x[row0 * row..(row0 + bn) * row]);
+            e.f32s(grads);
+            (TAG_BACKWARD, e.buf)
+        }
+        ShardJob::Decode { mask, mode, bn, salt, sel } => {
+            e.u8(mode_code(*mode));
+            e.u32(*bn as u32);
+            e.u64(*salt);
+            e.f32s(mask);
+            e.u32s(sel);
+            (TAG_DECODE, e.buf)
+        }
+    }
+}
+
+/// Decode a received job. Batch windows arrive as fresh buffers with
+/// `row0 = 0` — the remote worker slices from the start.
+fn decode_job(tag: u8, payload: &[u8]) -> WireResult<ShardJob> {
+    let mut d = Dec::new(payload);
+    let job = match tag {
+        TAG_PARAMS => {
+            let spans = d.spans()?;
+            let data = d.f32s()?;
+            let want: usize = spans.iter().map(|&(lo, hi)| hi - lo).sum();
+            if data.len() != want {
+                return Err(format!(
+                    "params shard carries {} scalars, spans cover {want}",
+                    data.len()
+                ));
+            }
+            ShardJob::Params(ArenaShard { spans, data })
+        }
+        TAG_FORWARD => {
+            let sr = semiring_from(d.u8()?)?;
+            let bn = d.u32()? as usize;
+            let mask = d.f32s()?;
+            let x = d.f32s()?;
+            ShardJob::Forward {
+                x: Arc::new(x),
+                row0: 0,
+                mask: Arc::new(mask),
+                bn,
+                sr,
+            }
+        }
+        TAG_BACKWARD => {
+            let bn = d.u32()? as usize;
+            let mask = d.f32s()?;
+            let x = d.f32s()?;
+            let grads = d.f32s()?;
+            ShardJob::Backward {
+                x: Arc::new(x),
+                row0: 0,
+                mask: Arc::new(mask),
+                bn,
+                grads,
+            }
+        }
+        TAG_DECODE => {
+            let mode = mode_from(d.u8()?)?;
+            let bn = d.u32()? as usize;
+            let salt = d.u64()?;
+            let mask = d.f32s()?;
+            let sel = d.u32s()?;
+            ShardJob::Decode {
+                mask: Arc::new(mask),
+                mode,
+                bn,
+                salt,
+                sel,
+            }
+        }
+        other => return Err(format!("unexpected job tag {other}")),
+    };
+    d.finish()?;
+    Ok(job)
+}
+
+fn encode_reply(reply: &ShardReply) -> (u8, Vec<u8>) {
+    let mut e = Enc::new();
+    match reply {
+        ShardReply::Boundary(rows) => {
+            e.f32s(rows);
+            (TAG_BOUNDARY, e.buf)
+        }
+        ShardReply::Stats(s) => {
+            e.spans(&s.grad_spans);
+            e.f32s(&s.grad);
+            e.spans(&s.sum_p_spans);
+            e.f32s(&s.sum_p);
+            e.u64(s.count as u64);
+            e.f64(s.loglik);
+            (TAG_STATS, e.buf)
+        }
+        ShardReply::Decoded { vals, written } => {
+            e.f32s(vals);
+            e.u32(written.len() as u32);
+            for &w in written {
+                e.u8(w as u8);
+            }
+            (TAG_DECODED, e.buf)
+        }
+    }
+}
+
+fn decode_reply(tag: u8, payload: &[u8]) -> WireResult<ShardReply> {
+    let mut d = Dec::new(payload);
+    let reply = match tag {
+        TAG_BOUNDARY => ShardReply::Boundary(d.f32s()?),
+        TAG_STATS => {
+            let grad_spans = d.spans()?;
+            let grad = d.f32s()?;
+            let sum_p_spans = d.spans()?;
+            let sum_p = d.f32s()?;
+            let count = d.u64()? as usize;
+            let loglik = d.f64()?;
+            ShardReply::Stats(Box::new(StatsShard {
+                grad_spans,
+                grad,
+                sum_p_spans,
+                sum_p,
+                count,
+                loglik,
+            }))
+        }
+        TAG_DECODED => {
+            let vals = d.f32s()?;
+            let n = d.u32()? as usize;
+            let mut written = Vec::with_capacity(n);
+            for _ in 0..n {
+                written.push(d.u8()? != 0);
+            }
+            ShardReply::Decoded { vals, written }
+        }
+        other => return Err(format!("unexpected reply tag {other}")),
+    };
+    d.finish()?;
+    Ok(reply)
+}
+
+// ---------------------------------------------------------------------------
+// WorkerConfig: the session handshake
+// ---------------------------------------------------------------------------
+
+/// What a remote worker needs to rebuild its segment from nothing: the
+/// deterministic structure spec (see [`crate::structure::from_spec`]),
+/// the plan parameters, the engine registry name, and which shard of
+/// the *final* (post re-cut) partition it owns. Parameters are NOT part
+/// of the handshake — they flow through the ordinary [`ArenaShard`]
+/// broadcast, so workers never touch a checkpoint.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// structure spec string, e.g. `rat:depth=3,replica=4,seed=0`
+    pub structure: String,
+    pub num_vars: usize,
+    pub k: usize,
+    pub family: LeafFamily,
+    /// engine registry name (`dense`, `sparse`, ...)
+    pub engine: String,
+    /// FINAL shard count — after the coordinator's re-cut of empty
+    /// segments — so `PlanPartition::cut` agrees on both ends
+    pub n_shards: usize,
+    pub shard_id: usize,
+    pub batch_cap: usize,
+    /// whether the coordinator's plan lowered with the fast-math tier;
+    /// the worker must match it for cross-process bit-identity
+    pub fastmath: bool,
+}
+
+impl WorkerConfig {
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u32(HANDSHAKE_MAGIC);
+        e.u32(HANDSHAKE_VERSION);
+        e.str(&self.structure);
+        e.u32(self.num_vars as u32);
+        e.u32(self.k as u32);
+        let (tag, arg) = family_tag(self.family);
+        e.u32(tag as u32);
+        e.u32(arg as u32);
+        e.str(&self.engine);
+        e.u32(self.n_shards as u32);
+        e.u32(self.shard_id as u32);
+        e.u32(self.batch_cap as u32);
+        e.u8(self.fastmath as u8);
+        e.buf
+    }
+
+    fn decode(payload: &[u8]) -> WireResult<Self> {
+        let mut d = Dec::new(payload);
+        let magic = d.u32()?;
+        if magic != HANDSHAKE_MAGIC {
+            return Err(format!("bad handshake magic {magic:#x}"));
+        }
+        let version = d.u32()?;
+        if version != HANDSHAKE_VERSION {
+            return Err(format!("unsupported protocol version {version}"));
+        }
+        let structure = d.str()?;
+        let num_vars = d.u32()? as usize;
+        let k = d.u32()? as usize;
+        let ftag = d.u32()? as u64;
+        let farg = d.u32()? as u64;
+        let family = family_from_tag(ftag, farg).map_err(|e| e.to_string())?;
+        let engine = d.str()?;
+        let n_shards = d.u32()? as usize;
+        let shard_id = d.u32()? as usize;
+        let batch_cap = d.u32()? as usize;
+        let fastmath = d.u8()? != 0;
+        d.finish()?;
+        Ok(Self {
+            structure,
+            num_vars,
+            k,
+            family,
+            engine,
+            n_shards,
+            shard_id,
+            batch_cap,
+            fastmath,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SegmentWorker: the job-handling body shared by both carriers
+// ---------------------------------------------------------------------------
+
+/// A segment worker's whole state: a private engine, the worker-local
+/// parameter arena (only the broadcast spans are ever touched), and the
+/// fixed reply-side span tables. Both the channel thread and the remote
+/// TCP process drive exactly this, so the two carriers cannot drift.
+pub(crate) struct SegmentWorker {
+    engine: Box<dyn Engine + Send>,
+    seg: Segment,
+    local: ParamArena,
+    sum_p_spans: Vec<(usize, usize)>,
+    od: usize,
+    row: usize,
+}
+
+impl SegmentWorker {
+    pub(crate) fn new(
+        engine: Box<dyn Engine + Send>,
+        seg: Segment,
+        layout: ParamLayout,
+        family: LeafFamily,
+    ) -> Self {
+        let local = ParamArena::zeros(layout);
+        let sum_p_spans = sum_p_spans_for_vars(&local.layout, &seg.vars);
+        let od = family.obs_dim();
+        let row = engine.plan().graph.num_vars * od;
+        Self {
+            engine,
+            seg,
+            local,
+            sum_p_spans,
+            od,
+            row,
+        }
+    }
+
+    /// Run one job; `Params` updates state and yields no reply.
+    pub(crate) fn handle(&mut self, job: ShardJob) -> Option<ShardReply> {
+        match job {
+            ShardJob::Params(shard) => {
+                shard.scatter_into(&mut self.local);
+                None
+            }
+            ShardJob::Forward { x, row0, mask, bn, sr } => {
+                let xs = &x[row0 * self.row..(row0 + bn) * self.row];
+                self.engine
+                    .forward_steps(&self.local, xs, &mask, bn, &self.seg.steps, sr);
+                let mut out = Vec::new();
+                for &rid in &self.seg.boundary {
+                    self.engine.export_rows(rid, bn, &mut out);
+                }
+                Some(ShardReply::Boundary(out))
+            }
+            ShardJob::Backward { x, row0, mask, bn, grads } => {
+                self.engine.clear_grad();
+                let mut off = 0usize;
+                for &rid in &self.seg.boundary {
+                    let w = self.engine.exec_plan().region_width[rid];
+                    self.engine
+                        .import_grad_rows(rid, bn, &grads[off..off + bn * w]);
+                    off += bn * w;
+                }
+                let mut stats = EmStats::zeros(&self.local.layout);
+                let xs = &x[row0 * self.row..(row0 + bn) * self.row];
+                self.engine.backward_steps(
+                    &self.local,
+                    xs,
+                    &mask,
+                    bn,
+                    &self.seg.steps,
+                    &mut stats,
+                );
+                let shard =
+                    StatsShard::gather(&stats, &self.seg.param_spans, &self.sum_p_spans);
+                Some(ShardReply::Stats(Box::new(shard)))
+            }
+            ShardJob::Decode { mask, mode, bn, salt, sel } => {
+                let mut vals = vec![0.0f32; self.seg.vars.len() * bn * self.od];
+                let mut written = vec![false; self.seg.vars.len() * bn];
+                self.engine.decode_segment(
+                    &self.local,
+                    bn,
+                    &mask,
+                    mode,
+                    salt,
+                    &self.seg.sample_steps,
+                    false,
+                    &self.seg.sel_in,
+                    &sel,
+                    &self.seg.vars,
+                    &mut vals,
+                    &mut written,
+                );
+                Some(ShardReply::Decoded { vals, written })
+            }
+        }
+    }
+
+    /// A Forward/Backward batch must fit the engine's activation arena;
+    /// remote peers can claim anything, so the serving loop validates
+    /// instead of letting the engine assert.
+    fn check_batch(&self, bn: usize, batch_cap: usize, x_len: usize) -> WireResult<()> {
+        if bn == 0 || bn > batch_cap {
+            return Err(format!("batch size {bn} outside [1, {batch_cap}]"));
+        }
+        if x_len != bn * self.row {
+            return Err(format!(
+                "evidence window holds {x_len} scalars, batch {bn} needs {}",
+                bn * self.row
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardTransport: the carrier trait + both impls
+// ---------------------------------------------------------------------------
+
+/// One coordinator↔worker link carrying [`ShardJob`]s down and
+/// [`ShardReply`]s up, in order. Both carriers fail typed: a dead
+/// worker is [`ShardError::WorkerLost`], a corrupt TCP frame is
+/// [`ShardError::Frame`].
+pub trait ShardTransport: Send {
+    fn send(&mut self, job: ShardJob) -> Result<(), ShardError>;
+    fn recv(&mut self) -> Result<ShardReply, ShardError>;
+    /// Release the link (drop channels / close the socket) and reap any
+    /// owned worker thread. Idempotent; must not block indefinitely.
+    fn shutdown(&mut self);
+}
+
+/// The in-process carrier: a persistent worker thread over mpsc
+/// channels, owning a private engine — exactly the pre-transport
+/// [`super::ShardedPool`] worker, with `expect` calls replaced by typed
+/// errors.
+pub struct ChannelTransport {
+    shard: usize,
+    tx: Option<mpsc::Sender<ShardJob>>,
+    rx: mpsc::Receiver<ShardReply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ChannelTransport {
+    /// Spawn the worker thread: build its engine via `factory`, loop on
+    /// the job channel until the coordinator drops the sender.
+    pub fn spawn(
+        factory: EngineFactory,
+        plan: LayeredPlan,
+        family: LeafFamily,
+        batch_cap: usize,
+        seg: Segment,
+        layout: ParamLayout,
+        shard: usize,
+    ) -> Self {
+        let (jtx, jrx) = mpsc::channel::<ShardJob>();
+        let (rtx, rrx) = mpsc::channel::<ShardReply>();
+        let handle = std::thread::spawn(move || {
+            let mut worker =
+                SegmentWorker::new(factory(plan, family, batch_cap), seg, layout, family);
+            while let Ok(job) = jrx.recv() {
+                if let Some(reply) = worker.handle(job) {
+                    if rtx.send(reply).is_err() {
+                        break; // coordinator gone: shut down
+                    }
+                }
+            }
+        });
+        Self {
+            shard,
+            tx: Some(jtx),
+            rx: rrx,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl ShardTransport for ChannelTransport {
+    fn send(&mut self, job: ShardJob) -> Result<(), ShardError> {
+        self.tx
+            .as_ref()
+            .ok_or(ShardError::WorkerLost(self.shard))?
+            .send(job)
+            .map_err(|_| ShardError::WorkerLost(self.shard))
+    }
+
+    fn recv(&mut self) -> Result<ShardReply, ShardError> {
+        self.rx.recv().map_err(|_| ShardError::WorkerLost(self.shard))
+    }
+
+    fn shutdown(&mut self) {
+        // dropping the sender ends the worker's recv loop; join so the
+        // thread never outlives the pool (a panicked worker just yields
+        // a join error, which shutdown absorbs)
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The cross-process carrier: length-prefixed frames over one TCP
+/// connection to an `einet shard-worker` process.
+pub struct TcpTransport {
+    shard: usize,
+    /// row stride (`D * obs_dim`) for slicing the batch window on send
+    row: usize,
+    stream: Option<TcpStream>,
+}
+
+impl TcpTransport {
+    /// Connect and run the config handshake. The worker replies with an
+    /// ack frame after it has rebuilt the plan and cut its segment; any
+    /// worker-side build failure travels back as the ack's detail.
+    pub fn connect(addr: &str, cfg: &WorkerConfig, row: usize) -> Result<Self, ShardError> {
+        let shard = cfg.shard_id;
+        let hs = |detail: String| ShardError::Handshake { shard, detail };
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| hs(format!("connect {addr}: {e}")))?;
+        // boundary rows are latency-bound small frames; never Nagle them
+        let _ = stream.set_nodelay(true);
+        let mut t = Self {
+            shard,
+            row,
+            stream: Some(stream),
+        };
+        let s = t.stream.as_mut().expect("stream just set");
+        write_frame(s, TAG_CONFIG, &cfg.encode())
+            .map_err(|e| hs(format!("send config: {e}")))?;
+        match read_frame(s, shard)? {
+            Some((TAG_CONFIG_ACK, payload)) => {
+                let mut d = Dec::new(&payload);
+                let ok = d.u8().map_err(|e| hs(e.to_string()))? != 0;
+                let detail = d.str().map_err(|e| hs(e.to_string()))?;
+                if !ok {
+                    return Err(hs(format!("worker refused: {detail}")));
+                }
+            }
+            Some((tag, _)) => return Err(hs(format!("expected ack, got tag {tag}"))),
+            None => return Err(hs("worker closed during handshake".into())),
+        }
+        Ok(t)
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn send(&mut self, job: ShardJob) -> Result<(), ShardError> {
+        let stream = self
+            .stream
+            .as_mut()
+            .ok_or(ShardError::WorkerLost(self.shard))?;
+        let (tag, payload) = encode_job(&job, self.row);
+        write_frame(stream, tag, &payload)
+            .map_err(|_| ShardError::WorkerLost(self.shard))
+    }
+
+    fn recv(&mut self) -> Result<ShardReply, ShardError> {
+        let shard = self.shard;
+        let stream = self.stream.as_mut().ok_or(ShardError::WorkerLost(shard))?;
+        match read_frame(stream, shard)? {
+            Some((tag, payload)) => {
+                decode_reply(tag, &payload).map_err(|detail| ShardError::Frame {
+                    shard,
+                    detail,
+                })
+            }
+            None => Err(ShardError::WorkerLost(shard)),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        if let Some(s) = self.stream.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side: the `einet shard-worker` serving loops
+// ---------------------------------------------------------------------------
+
+/// Serve shard sessions forever: accept one connection at a time, run
+/// it to EOF, log per-session errors, keep listening. A corrupt or
+/// hostile peer costs one session, never the process.
+pub fn serve_listener(listener: &TcpListener) -> crate::util::error::Result<()> {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(c) => c,
+            Err(e) => {
+                crate::bail!("shard-worker accept failed: {e}");
+            }
+        };
+        crate::info!("shard-worker: session from {peer}");
+        match serve_connection(stream) {
+            Ok(()) => crate::info!("shard-worker: session from {peer} closed"),
+            Err(e) => crate::info!("shard-worker: session from {peer} failed: {e}"),
+        }
+    }
+}
+
+/// Serve one coordinator connection: handshake, build the segment, then
+/// answer jobs until the peer closes. Every decode is bounds-checked;
+/// any violation ends this session with a typed error.
+pub fn serve_connection(stream: TcpStream) -> crate::util::error::Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut stream = stream;
+    // --- handshake ---------------------------------------------------
+    let cfg = match read_frame(&mut stream, 0)? {
+        Some((TAG_CONFIG, payload)) => match WorkerConfig::decode(&payload) {
+            Ok(cfg) => cfg,
+            Err(detail) => {
+                send_ack(&mut stream, false, &detail)?;
+                crate::bail!("bad worker config: {detail}");
+            }
+        },
+        Some((tag, _)) => crate::bail!("expected config frame, got tag {tag}"),
+        None => crate::bail!("peer closed before the handshake"),
+    };
+    let built = build_segment_worker(&cfg);
+    let mut worker = match built {
+        Ok(w) => w,
+        Err(e) => {
+            send_ack(&mut stream, false, &e.to_string())?;
+            return Err(e);
+        }
+    };
+    send_ack(&mut stream, true, &cfg.engine)?;
+    // --- serve -------------------------------------------------------
+    loop {
+        let (tag, payload) = match read_frame(&mut stream, cfg.shard_id)? {
+            Some(f) => f,
+            None => return Ok(()), // clean shutdown
+        };
+        let job = decode_job(tag, &payload)
+            .map_err(|detail| ShardError::Frame { shard: cfg.shard_id, detail })?;
+        // remote batch sizes are untrusted: validate against the
+        // engine's capacity before touching activation arenas
+        match &job {
+            ShardJob::Forward { x, bn, .. } | ShardJob::Backward { x, bn, .. } => {
+                worker
+                    .check_batch(*bn, cfg.batch_cap, x.len())
+                    .map_err(|detail| ShardError::Frame { shard: cfg.shard_id, detail })?;
+            }
+            ShardJob::Decode { bn, .. } => {
+                if *bn == 0 || *bn > cfg.batch_cap {
+                    crate::bail!("decode batch {bn} outside [1, {}]", cfg.batch_cap);
+                }
+            }
+            ShardJob::Params(_) => {}
+        }
+        if let Some(reply) = worker.handle(job) {
+            let (tag, payload) = encode_reply(&reply);
+            write_frame(&mut stream, tag, &payload)
+                .map_err(|_| ShardError::WorkerLost(cfg.shard_id))?;
+        }
+    }
+}
+
+fn send_ack(
+    stream: &mut TcpStream,
+    ok: bool,
+    detail: &str,
+) -> crate::util::error::Result<()> {
+    let mut e = Enc::new();
+    e.u8(ok as u8);
+    e.str(detail);
+    write_frame(stream, TAG_CONFIG_ACK, &e.buf)
+        .map_err(|err| crate::anyhow!("send ack: {err}"))
+}
+
+/// Rebuild this worker's segment exactly as the coordinator cut it: the
+/// structure spec is deterministic, the plan compiles identically, and
+/// `PlanPartition::cut` at the handshake's FINAL shard count reproduces
+/// the same segments bit-for-bit.
+fn build_segment_worker(cfg: &WorkerConfig) -> crate::util::error::Result<SegmentWorker> {
+    crate::ensure!(
+        cfg.shard_id < cfg.n_shards,
+        "shard id {} outside the {}-shard cut",
+        cfg.shard_id,
+        cfg.n_shards
+    );
+    crate::engine::kernels::force_fastmath(cfg.fastmath);
+    let graph = from_spec(cfg.num_vars, &cfg.structure)?;
+    let plan = LayeredPlan::compile(graph, cfg.k);
+    let factory = EngineRegistry::builtin().factory(&cfg.engine)?;
+    let engine = factory(plan.clone(), cfg.family, cfg.batch_cap);
+    let partition = PlanPartition::cut(engine.exec_plan(), cfg.n_shards);
+    crate::ensure!(
+        partition.n_shards == cfg.n_shards,
+        "local cut yields {} shards, coordinator expects {} — \
+         re-cut mismatch (coordinator must send the final count)",
+        partition.n_shards,
+        cfg.n_shards
+    );
+    let seg = partition.shards[cfg.shard_id].clone();
+    let layout = ParamLayout::from_plan(&plan, cfg.family);
+    Ok(SegmentWorker::new(engine, seg, layout, cfg.family))
+}
+
+/// Spawn `n` single-session loopback workers (one thread each, serving
+/// exactly one connection) and return their addresses — the in-process
+/// stand-in for real `einet shard-worker` processes, used by benches
+/// and tests that cannot spawn subprocesses. Threads exit when their
+/// session closes; join the handles after dropping the pool.
+pub fn spawn_loopback_workers(
+    n: usize,
+) -> crate::util::error::Result<(Vec<String>, Vec<JoinHandle<()>>)> {
+    let mut addrs = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| crate::anyhow!("bind loopback worker: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| crate::anyhow!("local addr: {e}"))?;
+        addrs.push(addr.to_string());
+        handles.push(std::thread::spawn(move || {
+            if let Ok((stream, _)) = listener.accept() {
+                let _ = serve_connection(stream);
+            }
+        }));
+    }
+    Ok((addrs, handles))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_and_replies_round_trip_bitwise() {
+        let row = 3;
+        let jobs = vec![
+            ShardJob::Params(ArenaShard {
+                spans: vec![(0, 2), (5, 8)],
+                data: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+            }),
+            ShardJob::Forward {
+                x: Arc::new(vec![1.0; 4 * row]),
+                row0: 1,
+                mask: Arc::new(vec![1.0, 0.0, 1.0]),
+                bn: 2,
+                sr: Semiring::MaxProduct,
+            },
+            ShardJob::Backward {
+                x: Arc::new(vec![0.5; 2 * row]),
+                row0: 0,
+                mask: Arc::new(vec![1.0; 3]),
+                bn: 2,
+                grads: vec![-0.25, f32::NEG_INFINITY, 3.5],
+            },
+            ShardJob::Decode {
+                mask: Arc::new(vec![0.0; 3]),
+                mode: DecodeMode::Mpe,
+                bn: 4,
+                salt: u64::MAX - 7,
+                sel: vec![0, 3, u32::MAX],
+            },
+        ];
+        for job in &jobs {
+            let (tag, payload) = encode_job(job, row);
+            let back = decode_job(tag, &payload).expect("decode");
+            match (job, &back) {
+                (ShardJob::Params(a), ShardJob::Params(b)) => {
+                    assert_eq!(a.spans, b.spans);
+                    assert_eq!(a.data, b.data);
+                }
+                (
+                    ShardJob::Forward { x, row0, mask, bn, sr },
+                    ShardJob::Forward {
+                        x: x2,
+                        row0: r2,
+                        mask: m2,
+                        bn: b2,
+                        sr: s2,
+                    },
+                ) => {
+                    // the wire ships only the window, re-based to row 0
+                    assert_eq!(&x[row0 * row..(row0 + bn) * row], x2.as_slice());
+                    assert_eq!(*r2, 0);
+                    assert_eq!(mask.as_slice(), m2.as_slice());
+                    assert_eq!(bn, b2);
+                    assert_eq!(sr, s2);
+                }
+                (
+                    ShardJob::Backward { grads, .. },
+                    ShardJob::Backward { grads: g2, .. },
+                ) => {
+                    assert_eq!(
+                        grads.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        g2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    );
+                }
+                (
+                    ShardJob::Decode { mode, bn, salt, sel, .. },
+                    ShardJob::Decode {
+                        mode: m2,
+                        bn: b2,
+                        salt: s2,
+                        sel: sel2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(mode, m2);
+                    assert_eq!(bn, b2);
+                    assert_eq!(salt, s2);
+                    assert_eq!(sel, sel2);
+                }
+                _ => panic!("job kind changed across the wire"),
+            }
+        }
+        let replies = vec![
+            ShardReply::Boundary(vec![1.5, -2.5, f32::NEG_INFINITY]),
+            ShardReply::Stats(Box::new(StatsShard {
+                grad_spans: vec![(1, 4)],
+                grad: vec![0.25, 0.5, 0.75],
+                sum_p_spans: vec![(0, 1), (9, 10)],
+                sum_p: vec![1.0, 2.0],
+                count: 17,
+                loglik: -123.456,
+            })),
+            ShardReply::Decoded {
+                vals: vec![1.0, 0.0, 1.0],
+                written: vec![true, false, true],
+            },
+        ];
+        for reply in &replies {
+            let (tag, payload) = encode_reply(reply);
+            let back = decode_reply(tag, &payload).expect("decode");
+            match (reply, &back) {
+                (ShardReply::Boundary(a), ShardReply::Boundary(b)) => {
+                    assert_eq!(
+                        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    );
+                }
+                (ShardReply::Stats(a), ShardReply::Stats(b)) => {
+                    assert_eq!(a.grad_spans, b.grad_spans);
+                    assert_eq!(a.grad, b.grad);
+                    assert_eq!(a.sum_p_spans, b.sum_p_spans);
+                    assert_eq!(a.sum_p, b.sum_p);
+                    assert_eq!(a.count, b.count);
+                    assert_eq!(a.loglik.to_bits(), b.loglik.to_bits());
+                }
+                (
+                    ShardReply::Decoded { vals, written },
+                    ShardReply::Decoded { vals: v2, written: w2 },
+                ) => {
+                    assert_eq!(vals, v2);
+                    assert_eq!(written, w2);
+                }
+                _ => panic!("reply kind changed across the wire"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_config_round_trips() {
+        let cfg = WorkerConfig {
+            structure: "rat:depth=3,replica=4,seed=0".into(),
+            num_vars: 16,
+            k: 3,
+            family: LeafFamily::Categorical { cats: 5 },
+            engine: "dense".into(),
+            n_shards: 4,
+            shard_id: 2,
+            batch_cap: 64,
+            fastmath: true,
+        };
+        let back = WorkerConfig::decode(&cfg.encode()).expect("decode");
+        assert_eq!(back.structure, cfg.structure);
+        assert_eq!(back.num_vars, cfg.num_vars);
+        assert_eq!(back.k, cfg.k);
+        assert_eq!(back.family, cfg.family);
+        assert_eq!(back.engine, cfg.engine);
+        assert_eq!(back.n_shards, cfg.n_shards);
+        assert_eq!(back.shard_id, cfg.shard_id);
+        assert_eq!(back.batch_cap, cfg.batch_cap);
+        assert!(back.fastmath);
+    }
+
+    #[test]
+    fn corrupt_frames_decode_to_typed_errors() {
+        // truncated payload: a Forward frame cut mid-buffer
+        let (tag, payload) = encode_job(
+            &ShardJob::Forward {
+                x: Arc::new(vec![1.0; 6]),
+                row0: 0,
+                mask: Arc::new(vec![1.0; 3]),
+                bn: 2,
+                sr: Semiring::SumProduct,
+            },
+            3,
+        );
+        assert!(decode_job(tag, &payload[..payload.len() - 3]).is_err());
+        // unknown tag
+        assert!(decode_job(42, &payload).is_err());
+        // trailing garbage is a protocol violation, not silently ignored
+        let mut long = payload.clone();
+        long.extend_from_slice(&[0xAB; 4]);
+        assert!(decode_job(tag, &long).is_err());
+        // an implausible element count must not allocate
+        let mut e = Enc::new();
+        e.u8(0);
+        e.u32(2);
+        e.u32(u32::MAX); // mask "length"
+        assert!(decode_job(TAG_FORWARD, &e.buf).is_err());
+        // oversized length prefix is rejected before any read
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.push(TAG_FORWARD);
+        let err = read_frame(&mut buf.as_slice(), 3).unwrap_err();
+        assert!(matches!(err, ShardError::Frame { shard: 3, .. }), "{err}");
+        // torn frame: length promises more bytes than arrive
+        let mut torn: Vec<u8> = Vec::new();
+        torn.extend_from_slice(&100u32.to_le_bytes());
+        torn.push(TAG_BOUNDARY);
+        torn.extend_from_slice(&[0u8; 10]);
+        let err = read_frame(&mut torn.as_slice(), 1).unwrap_err();
+        assert!(matches!(err, ShardError::Frame { shard: 1, .. }), "{err}");
+        // clean EOF between frames is the shutdown signal, not an error
+        assert!(read_frame(&mut (&[][..]), 0).unwrap().is_none());
+    }
+}

@@ -1678,6 +1678,192 @@ pub(crate) fn sample_batch_shared_rows_into(
     }
 }
 
+// ---------------------------------------------------------------------------
+// wire: frame (de)serialization for the typed boundary tables
+// ---------------------------------------------------------------------------
+
+/// Byte-level encoding of everything that crosses a shard cut when the
+/// segments live in different processes: boundary activation/gradient
+/// rows, `sel` tables, [`super::ArenaShard`] / [`super::StatsShard`]
+/// span tables, and the evidence rows themselves.
+///
+/// Everything is little-endian. Containers are length-prefixed with a
+/// `u32` element count; span tables are `u32 (lo, hi)` pairs (the arena
+/// is far below 4 G scalars). The transport layer
+/// ([`crate::coordinator::transport`]) wraps one encoded job or reply
+/// into a `[u32 len][u8 tag][payload]` frame; decoding here is fully
+/// bounds-checked so a torn or corrupt frame surfaces as a typed error
+/// instead of a panic or an out-of-bounds read.
+pub mod wire {
+    /// Hard ceiling on a single frame's payload (256 MiB): an absurd
+    /// length prefix (corruption, a non-protocol peer) is rejected
+    /// before any allocation.
+    pub const MAX_FRAME: usize = 256 << 20;
+
+    /// Decode-side error: what was being read and why it failed. The
+    /// transport maps this into `ShardError::Frame`.
+    pub type WireResult<T> = std::result::Result<T, String>;
+
+    /// Append-only encoder over a plain byte buffer.
+    #[derive(Default)]
+    pub struct Enc {
+        pub buf: Vec<u8>,
+    }
+
+    impl Enc {
+        pub fn new() -> Self {
+            Self::default()
+        }
+        pub fn u8(&mut self, v: u8) {
+            self.buf.push(v);
+        }
+        pub fn u32(&mut self, v: u32) {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn u64(&mut self, v: u64) {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn f32(&mut self, v: f32) {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn f64(&mut self, v: f64) {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+        /// `u32` count + raw little-endian scalars.
+        pub fn f32s(&mut self, v: &[f32]) {
+            self.u32(v.len() as u32);
+            self.buf.reserve(4 * v.len());
+            for &x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        /// `u32` count + raw little-endian scalars.
+        pub fn u32s(&mut self, v: &[u32]) {
+            self.u32(v.len() as u32);
+            self.buf.reserve(4 * v.len());
+            for &x in v {
+                self.buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        /// `u32` count + `u32 (lo, hi)` pairs.
+        pub fn spans(&mut self, v: &[(usize, usize)]) {
+            self.u32(v.len() as u32);
+            for &(lo, hi) in v {
+                self.u32(lo as u32);
+                self.u32(hi as u32);
+            }
+        }
+        /// `u32` byte count + UTF-8 bytes.
+        pub fn str(&mut self, v: &str) {
+            self.u32(v.len() as u32);
+            self.buf.extend_from_slice(v.as_bytes());
+        }
+    }
+
+    /// Bounds-checked cursor decoder over a received payload.
+    pub struct Dec<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Dec<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Self { buf, pos: 0 }
+        }
+
+        fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
+            let end = self.pos.checked_add(n).ok_or("length overflow")?;
+            if end > self.buf.len() {
+                return Err(format!(
+                    "short frame: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                ));
+            }
+            let s = &self.buf[self.pos..end];
+            self.pos = end;
+            Ok(s)
+        }
+
+        /// The decode must consume the payload exactly — trailing bytes
+        /// mean a protocol mismatch.
+        pub fn finish(self) -> WireResult<()> {
+            if self.pos != self.buf.len() {
+                return Err(format!(
+                    "{} trailing bytes after a complete message",
+                    self.buf.len() - self.pos
+                ));
+            }
+            Ok(())
+        }
+
+        pub fn u8(&mut self) -> WireResult<u8> {
+            Ok(self.take(1)?[0])
+        }
+        pub fn u32(&mut self) -> WireResult<u32> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+        pub fn u64(&mut self) -> WireResult<u64> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+        pub fn f32(&mut self) -> WireResult<f32> {
+            Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+        pub fn f64(&mut self) -> WireResult<f64> {
+            Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+
+        /// A scalar-count prefix sanity-checked against the bytes that
+        /// actually remain, so a corrupt count cannot trigger a huge
+        /// allocation.
+        fn count(&mut self, elem_bytes: usize) -> WireResult<usize> {
+            let n = self.u32()? as usize;
+            if n.saturating_mul(elem_bytes) > self.buf.len() - self.pos {
+                return Err(format!("implausible element count {n}"));
+            }
+            Ok(n)
+        }
+
+        pub fn f32s(&mut self) -> WireResult<Vec<f32>> {
+            let n = self.count(4)?;
+            let raw = self.take(4 * n)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
+
+        pub fn u32s(&mut self) -> WireResult<Vec<u32>> {
+            let n = self.count(4)?;
+            let raw = self.take(4 * n)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        }
+
+        pub fn spans(&mut self) -> WireResult<Vec<(usize, usize)>> {
+            let n = self.count(8)?;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let lo = self.u32()? as usize;
+                let hi = self.u32()? as usize;
+                if lo > hi {
+                    return Err(format!("inverted span [{lo}, {hi})"));
+                }
+                out.push((lo, hi));
+            }
+            Ok(out)
+        }
+
+        pub fn str(&mut self) -> WireResult<String> {
+            let n = self.count(1)?;
+            let raw = self.take(n)?;
+            String::from_utf8(raw.to_vec()).map_err(|_| "non-UTF-8 string".to_string())
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

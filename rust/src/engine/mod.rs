@@ -744,7 +744,7 @@ fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
 
 const MAGIC: &[u8; 8] = b"EINET002";
 
-fn family_tag(family: LeafFamily) -> (usize, usize) {
+pub(crate) fn family_tag(family: LeafFamily) -> (usize, usize) {
     match family {
         LeafFamily::Bernoulli => (0, 0),
         LeafFamily::Gaussian { channels } => (1, channels),
@@ -753,7 +753,7 @@ fn family_tag(family: LeafFamily) -> (usize, usize) {
     }
 }
 
-fn family_from_tag(tag: u64, arg: u64) -> Result<LeafFamily> {
+pub(crate) fn family_from_tag(tag: u64, arg: u64) -> Result<LeafFamily> {
     ensure!(arg < 1 << 20, "implausible family parameter {arg}");
     Ok(match tag {
         0 => LeafFamily::Bernoulli,

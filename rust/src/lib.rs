@@ -104,6 +104,8 @@ pub mod runtime;
 pub mod structure;
 pub mod util;
 
+pub use coordinator::server::{QueryAnswer, QueryError, QueryOk, ServerConfig};
+pub use coordinator::transport::{ShardError, ShardTransport, WorkerConfig};
 pub use engine::dense::DenseEngine;
 pub use engine::exec::{PlanPartition, Segment, Semiring};
 pub use engine::query::{Query, QueryOutput, QueryPass, QueryPlan};

@@ -55,6 +55,7 @@ fn run(argv: &[String]) -> Result<()> {
         "table1" => cmd_table1(rest),
         "e2e" => cmd_e2e(rest),
         "serve-demo" => cmd_serve_demo(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "artifacts" => cmd_artifacts(rest),
         "engines" => cmd_engines(rest),
         "help" | "--help" | "-h" => {
@@ -80,6 +81,9 @@ commands:
   table1      reproduce Table 1 (20 datasets, EiNet vs sparse baseline)
   e2e         train via the AOT PJRT path (L1+L2+L3 composed)
   serve-demo  run the batched inference service on synthetic queries
+              (--connect host:port,host:port serves over remote workers)
+  shard-worker  host one model segment over TCP (--listen host:port);
+              pair with serve-demo --connect for multi-process serving
   artifacts   list compiled AOT artifacts
   engines     list the runtime engine registry (--engine names)
 
@@ -115,6 +119,8 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "engine", help: "execution backend (registry name; see `einet engines`)", default: Some("dense"), is_flag: false },
         OptSpec { name: "shards", help: "scope-partition across N workers (0: data-parallel)", default: Some("0"), is_flag: false },
         OptSpec { name: "mode", help: "query mode: loglik|marginal|conditional|mpe", default: Some("marginal"), is_flag: false },
+        OptSpec { name: "listen", help: "shard-worker bind address (0 picks an ephemeral port)", default: Some("127.0.0.1:0"), is_flag: false },
+        OptSpec { name: "connect", help: "comma-separated shard-worker addresses for remote serving", default: Some(""), is_flag: false },
         OptSpec { name: "obs-frac", help: "fraction of variables observed (query/mpe evidence)", default: Some("0.5"), is_flag: false },
         OptSpec { name: "fastmath", help: "opt into the ULP-bounded fast-math exp/ln tier (EINET_KERNELS=fastmath)", default: None, is_flag: true },
         OptSpec { name: "help", help: "show usage", default: None, is_flag: true },
@@ -250,7 +256,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             em: cfg.em,
             log_every: cfg.log_every,
         };
-        train_sharded(factory, &plan, family, &mut params, &ds.train.data, ds.train.n, &scfg);
+        train_sharded(factory, &plan, family, &mut params, &ds.train.data, ds.train.n, &scfg)?;
     } else {
         data_parallel_train(&engine, &plan, family, &mut params, &ds.train.data, ds.train.n, &cfg)?;
     }
@@ -584,18 +590,48 @@ fn cmd_e2e(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The serve-demo model structure, as a spec string so remote
+/// `shard-worker` processes can rebuild the identical plan from their
+/// handshake config (`from_spec` is deterministic).
+const SERVE_DEMO_SPEC: &str = "rat:depth=3,replica=4,seed=0";
+
 fn cmd_serve_demo(argv: &[String]) -> Result<()> {
     let spec = common_spec();
     let a = Args::parse(argv, &spec)?;
     apply_fastmath(&a);
     let nv = 16;
-    let graph = einet::structure::random_binary_trees(nv, 3, 4, 0);
+    let graph = from_spec(nv, SERVE_DEMO_SPEC)?;
     let plan = LayeredPlan::compile(graph, a.get_usize("k", &spec)?);
     let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 0);
     let engine = a.get_str("engine", &spec)?;
     let shards = a.get_usize("shards", &spec)?;
+    let connect = a.get_str("connect", &spec)?;
     let reg = EngineRegistry::builtin();
-    let server = if shards > 0 {
+    let server = if !connect.is_empty() {
+        let addrs: Vec<String> = connect
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        println!(
+            "serving engine={engine} over {} remote shard worker(s): {connect}",
+            addrs.len()
+        );
+        einet::coordinator::server::InferenceServer::start_remote(
+            &addrs,
+            SERVE_DEMO_SPEC,
+            &engine,
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            addrs.len(),
+            einet::coordinator::server::ServerConfig {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_millis(2),
+                ..Default::default()
+            },
+        )?
+    } else if shards > 0 {
         println!("serving engine={engine} across {shards} scope-partitioned shards");
         einet::coordinator::server::InferenceServer::start_sharded(
             reg.factory(&engine)?,
@@ -675,6 +711,34 @@ fn cmd_serve_demo(argv: &[String]) -> Result<()> {
         generated as f64 / dtg
     );
     Ok(())
+}
+
+/// Host one model segment over TCP: bind, announce the bound address on
+/// stdout (scripts parse this line to learn an ephemeral port), then
+/// serve handshake sessions until killed. The segment to build — plan
+/// spec, shard cut, engine, batch capacity — arrives in each session's
+/// CONFIG frame; this process never reads a checkpoint (parameters
+/// stream in as span-packed `ArenaShard` frames).
+fn cmd_shard_worker(argv: &[String]) -> Result<()> {
+    let spec = common_spec();
+    let a = Args::parse(argv, &spec)?;
+    if a.flag("help") {
+        println!(
+            "{}",
+            usage("einet shard-worker", "host one model segment over TCP", &spec)
+        );
+        return Ok(());
+    }
+    let addr = a.get_str("listen", &spec)?;
+    let listener = std::net::TcpListener::bind(&addr)
+        .map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| anyhow!("local_addr: {e}"))?;
+    println!("listening on {local}");
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    einet::coordinator::transport::serve_listener(&listener)
 }
 
 fn cmd_artifacts(argv: &[String]) -> Result<()> {

@@ -481,7 +481,8 @@ fn check_sharded_mpe<E: Engine + Send + 'static>(label: &str) {
                 bn,
                 Semiring::MaxProduct,
                 &mut lp,
-            );
+            )
+            .unwrap();
             for (b, (a, g)) in lp_ref.iter().zip(&lp).enumerate() {
                 assert_eq!(
                     a.to_bits(),
@@ -490,7 +491,8 @@ fn check_sharded_mpe<E: Engine + Send + 'static>(label: &str) {
                 );
             }
             let mut rows = x.clone();
-            pool.decode(bn, &emask, DecodeMode::Mpe, &mut Rng::new(1), &mut rows);
+            pool.decode(bn, &emask, DecodeMode::Mpe, &mut Rng::new(1), &mut rows)
+                .unwrap();
             for i in 0..bn * nv {
                 assert_eq!(
                     rows_ref[i].to_bits(),

@@ -100,7 +100,7 @@ fn parity_case<E: Engine + Send + 'static>(
             ShardedPool::new(boxed_build::<E>, plan, family, &params, shards, bn);
         // forward log-likelihood: bit-identical
         let mut lp = vec![0.0f32; bn];
-        pool.forward(&x, &mask, bn, &mut lp);
+        pool.forward(&x, &mask, bn, &mut lp).unwrap();
         for (b, (a, g)) in lp_ref.iter().zip(&lp).enumerate() {
             assert!(
                 a.to_bits() == g.to_bits(),
@@ -109,7 +109,7 @@ fn parity_case<E: Engine + Send + 'static>(
         }
         // EM step: same parameters from the reduced statistics
         let mut stats = EmStats::zeros_like(&params);
-        pool.backward(&mut stats);
+        pool.backward(&mut stats).unwrap();
         assert_eq!(stats.count, stats_ref.count, "{ctx}: count");
         assert_eq!(stats.loglik, stats_ref.loglik, "{ctx}: loglik");
         let mut p = params.clone();
@@ -123,7 +123,8 @@ fn parity_case<E: Engine + Send + 'static>(
             DecodeMode::Argmax,
             &mut Rng::new(seed + 9),
             &mut argmax_out,
-        );
+        )
+        .unwrap();
         for i in 0..bn * row {
             assert!(
                 argmax_ref[i].to_bits() == argmax_out[i].to_bits(),
@@ -139,7 +140,8 @@ fn parity_case<E: Engine + Send + 'static>(
             DecodeMode::Sample,
             &mut Rng::new(seed + 77),
             &mut sample_out,
-        );
+        )
+        .unwrap();
         assert_eq!(sample_ref, sample_out, "{ctx}: Sample decode diverged");
     }
 }
@@ -225,7 +227,8 @@ fn sharded_training_trajectories_match_across_shard_counts() {
             &data,
             n,
             &cfg,
-        );
+        )
+        .unwrap();
         assert_eq!(hist.len(), 3);
         results.push(p);
     }

@@ -1,0 +1,341 @@
+//! Fault injection and cross-carrier parity for the TCP shard transport:
+//! real `einet shard-worker` subprocesses behind [`ShardedPool::connect`].
+//!
+//! What must hold (and is asserted here):
+//! * forward / EM / decode over loopback TCP are **bit-identical** to
+//!   in-process sharding, including when the remote pool is built from a
+//!   reloaded EINET002 checkpoint;
+//! * killing a worker mid-train or mid-serve surfaces a typed
+//!   [`ShardError`] (never a panic), degrades the pool to fail-fast
+//!   [`ShardError::Unhealthy`], and teardown still joins cleanly;
+//! * a dead worker behind an [`InferenceServer`] turns into typed
+//!   [`QueryError::BackendLost`] replies while the dispatcher survives;
+//! * torn / corrupt / oversized frames cost the worker one session, not
+//!   the process — the next session handshakes normally.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use einet::coordinator::server::InferenceServer;
+use einet::coordinator::transport::TcpTransport;
+use einet::coordinator::ShardedPool;
+use einet::em::EmConfig;
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DecodeMode, DenseEngine, EinetParams, LayeredPlan, LeafFamily,
+    Query, QueryAnswer, QueryError, ServerConfig, ShardError, WorkerConfig,
+};
+
+/// One `einet shard-worker` subprocess, killed on drop.
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Worker {
+    fn spawn() -> Self {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_einet"))
+            .args(["shard-worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn einet shard-worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let line = BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("shard-worker exited before announcing its address")
+            .expect("read shard-worker stdout");
+        let addr = line
+            .strip_prefix("listening on ")
+            .unwrap_or_else(|| panic!("unexpected announcement: {line}"))
+            .to_string();
+        Self { child, addr }
+    }
+
+    /// Kill the process and wait until it is gone (its sockets closed).
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn spawn_workers(n: usize) -> (Vec<Worker>, Vec<String>) {
+    let workers: Vec<Worker> = (0..n).map(|_| Worker::spawn()).collect();
+    let addrs = workers.iter().map(|w| w.addr.clone()).collect();
+    (workers, addrs)
+}
+
+const NV: usize = 16;
+const STRUCTURE: &str = "rat:depth=2,replica=3,seed=5";
+const K: usize = 3;
+
+fn build_plan() -> LayeredPlan {
+    let graph = einet::structure::from_spec(NV, STRUCTURE).expect("structure spec");
+    LayeredPlan::compile(graph, K)
+}
+
+fn binary_batch(bn: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..bn * NV)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+#[test]
+fn tcp_pool_matches_in_process_bitwise_from_checkpoint() {
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 9);
+
+    // round-trip the parameters through an EINET002 checkpoint: the
+    // remote pool restarts from disk exactly as a redeployed server would
+    let ckpt = std::env::temp_dir().join(format!(
+        "einet_transport_faults_{}.einet",
+        std::process::id()
+    ));
+    params.save(&ckpt).expect("save checkpoint");
+    let reloaded = EinetParams::load(&ckpt).expect("load checkpoint");
+    let _ = std::fs::remove_file(&ckpt);
+    assert_eq!(params.data, reloaded.data, "checkpoint round-trip drifted");
+
+    let bn = 8usize;
+    let x = binary_batch(bn, 2);
+    let mut mask = vec![1.0f32; NV];
+    for m in mask.iter_mut().skip(NV / 2) {
+        *m = 0.0;
+    }
+    let full = vec![1.0f32; NV];
+    let em = EmConfig {
+        step_size: 0.5,
+        ..Default::default()
+    };
+
+    // --- in-process reference -----------------------------------------
+    let mut pool = ShardedPool::new(boxed_build::<DenseEngine>, &plan, family, &params, 3, bn);
+    let mut lp_ref = vec![0.0f32; bn];
+    pool.forward(&x, &mask, bn, &mut lp_ref).unwrap();
+    let mut out_ref = x.clone();
+    let mut rng = Rng::new(77);
+    pool.decode(bn, &mask, DecodeMode::Sample, &mut rng, &mut out_ref)
+        .unwrap();
+    let ll_ref = pool.train_step(&x, &full, bn, &em).unwrap();
+    let params_ref = pool.params().data.clone();
+    pool.stop();
+
+    // --- loopback-TCP pool over real shard-worker processes ------------
+    let (_workers, addrs) = spawn_workers(3);
+    let mut tcp = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &reloaded, 3, bn,
+    )
+    .expect("connect TCP pool");
+    let mut lp = vec![0.0f32; bn];
+    tcp.forward(&x, &mask, bn, &mut lp).unwrap();
+    for (a, b) in lp_ref.iter().zip(&lp) {
+        assert_eq!(a.to_bits(), b.to_bits(), "TCP forward diverged");
+    }
+    let mut out = x.clone();
+    let mut rng = Rng::new(77);
+    tcp.decode(bn, &mask, DecodeMode::Sample, &mut rng, &mut out)
+        .unwrap();
+    assert_eq!(out_ref, out, "TCP Sample decode diverged");
+    let ll = tcp.train_step(&x, &full, bn, &em).unwrap();
+    assert_eq!(
+        ll_ref.to_bits(),
+        ll.to_bits(),
+        "TCP EM log-likelihood diverged"
+    );
+    assert_eq!(
+        params_ref,
+        tcp.params().data,
+        "TCP EM parameter update diverged"
+    );
+    tcp.stop();
+}
+
+#[test]
+fn killing_a_worker_mid_serve_yields_typed_errors() {
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 4);
+    let bn = 4usize;
+    let (mut workers, addrs) = spawn_workers(2);
+    let mut pool = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &params, 2, bn,
+    )
+    .expect("connect TCP pool");
+
+    let x = binary_batch(bn, 3);
+    let mask = vec![1.0f32; NV];
+    let mut lp = vec![0.0f32; bn];
+    pool.forward(&x, &mask, bn, &mut lp).unwrap();
+    assert!(pool.healthy());
+
+    // shard 0 is always connected, even if the cut folded empty segments
+    workers[0].kill();
+    let err = pool
+        .forward(&x, &mask, bn, &mut lp)
+        .expect_err("forward over a dead worker must fail");
+    assert!(
+        matches!(err, ShardError::WorkerLost(_) | ShardError::Frame { .. }),
+        "wrong failure kind: {err}"
+    );
+    assert!(!pool.healthy());
+    assert!(pool.failure().is_some());
+
+    // degraded pool fails fast from here on — no hang, no panic
+    let err = pool
+        .forward(&x, &mask, bn, &mut lp)
+        .expect_err("degraded pool must fail fast");
+    assert_eq!(err, ShardError::Unhealthy);
+    pool.stop(); // joins the surviving worker's link cleanly
+}
+
+#[test]
+fn killing_a_worker_mid_train_degrades_without_panicking() {
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 6);
+    let bn = 4usize;
+    let (mut workers, addrs) = spawn_workers(2);
+    let mut pool = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &params, 2, bn,
+    )
+    .expect("connect TCP pool");
+
+    let x = binary_batch(bn, 5);
+    let mask = vec![1.0f32; NV];
+    let em = EmConfig {
+        step_size: 0.5,
+        ..Default::default()
+    };
+    pool.train_step(&x, &mask, bn, &em)
+        .expect("healthy pool trains");
+
+    workers[0].kill();
+    let err = pool
+        .train_step(&x, &mask, bn, &em)
+        .expect_err("training over a dead worker must fail");
+    assert!(
+        matches!(err, ShardError::WorkerLost(_) | ShardError::Frame { .. }),
+        "wrong failure kind: {err}"
+    );
+    let err = pool
+        .train_step(&x, &mask, bn, &em)
+        .expect_err("degraded pool must fail fast");
+    assert_eq!(err, ShardError::Unhealthy);
+    pool.stop();
+}
+
+#[test]
+fn server_answers_backend_lost_after_worker_death() {
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 8);
+    let (mut workers, addrs) = spawn_workers(2);
+    let server = InferenceServer::start_remote(
+        &addrs,
+        STRUCTURE,
+        "dense",
+        plan,
+        family,
+        params,
+        2,
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("start remote server");
+
+    let x = binary_batch(1, 7);
+    let ans = server.run_query(x.clone(), Query::LogLik);
+    assert!(ans.score.is_finite());
+
+    workers[0].kill();
+    // the group being served when the pool degrades — and everything
+    // after it — gets a typed BackendLost reply; the dispatcher survives
+    for _ in 0..2 {
+        let reply = server
+            .submit_query(x.clone(), Query::LogLik)
+            .recv()
+            .expect("dispatcher must answer, not die");
+        assert!(
+            matches!(reply, QueryAnswer::Err(QueryError::BackendLost)),
+            "expected BackendLost, got {reply:?}"
+        );
+    }
+    let stats = server.stop();
+    assert_eq!(stats.queries, 1);
+    assert_eq!(stats.rej_backend_lost, 2);
+}
+
+#[test]
+fn corrupt_frames_cost_one_session_not_the_worker() {
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 1);
+    let bn = 2usize;
+    let (_workers, addrs) = spawn_workers(1);
+
+    // session 1: an oversized length prefix (4 GiB frame) — rejected
+    // before any allocation, session dropped
+    {
+        let mut s = TcpStream::connect(&addrs[0]).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        s.write_all(&[4u8]).unwrap();
+    }
+    // session 2: a torn frame — the length promises more bytes than
+    // arrive before EOF
+    {
+        let mut s = TcpStream::connect(&addrs[0]).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[1u8, 2, 3]).unwrap();
+    }
+    // session 3: junk that parses as no config frame at all
+    {
+        let mut s = TcpStream::connect(&addrs[0]).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    }
+    // session 4: a well-formed handshake the worker must REFUSE (unknown
+    // engine) — the refusal travels back as a typed Handshake error
+    let cfg = WorkerConfig {
+        structure: STRUCTURE.to_string(),
+        num_vars: NV,
+        k: K,
+        family,
+        engine: "no-such-engine".to_string(),
+        n_shards: 1,
+        shard_id: 0,
+        batch_cap: bn,
+        fastmath: false,
+    };
+    let err = TcpTransport::connect(&addrs[0], &cfg, NV)
+        .expect_err("unknown engine must be refused");
+    assert!(
+        matches!(err, ShardError::Handshake { .. }),
+        "wrong failure kind: {err}"
+    );
+
+    // session 5: after all of the abuse, a real pool still connects and
+    // serves — corruption cost sessions, never the process
+    let mut pool = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &params, 1, bn,
+    )
+    .expect("worker must survive corrupt sessions");
+    let x = binary_batch(bn, 11);
+    let mask = vec![1.0f32; NV];
+    let mut lp = vec![0.0f32; bn];
+    pool.forward(&x, &mask, bn, &mut lp).unwrap();
+    assert!(lp.iter().all(|l| l.is_finite()));
+    pool.stop();
+}
