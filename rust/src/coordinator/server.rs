@@ -237,9 +237,12 @@ struct QueryRequest {
 }
 
 /// Admission state shared between the submitting threads and the
-/// dispatcher: the pending depth is checked (and a slot reserved) BEFORE
-/// a request enters the channel, so overload rejection is immediate and
-/// the dispatcher's queue is bounded.
+/// dispatcher: the in-flight depth is checked (and a slot reserved)
+/// BEFORE a request enters the channel, so overload rejection is
+/// immediate, and the slot is held until the request leaves the system
+/// (served or rejected) — so `max_pending` bounds TOTAL in-flight work:
+/// channel occupancy plus everything parked in the dispatcher's
+/// coalescing queue across waves, not just the channel.
 struct Gate {
     depth: AtomicUsize,
     max_pending: usize,
@@ -247,8 +250,8 @@ struct Gate {
 }
 
 impl Gate {
-    /// Reserve a queue slot; `false` means the pending queue is full and
-    /// the request must be turned away.
+    /// Reserve an in-flight slot; `false` means the server is already
+    /// carrying `max_pending` requests and this one must be turned away.
     fn admit(&self) -> bool {
         let mut cur = self.depth.load(Ordering::Relaxed);
         loop {
@@ -268,9 +271,14 @@ impl Gate {
         }
     }
 
-    /// Release a slot: the dispatcher pulled the request off the channel.
+    /// Release one slot: a request was served or rejected.
     fn release(&self) {
         self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Release a whole served group's slots at once.
+    fn release_n(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::Relaxed);
     }
 }
 
@@ -294,14 +302,19 @@ pub struct ServerConfig {
     /// open for co-travellers; leftovers of a burst are served
     /// immediately, never re-delayed
     pub max_wait: Duration,
-    /// admission bound: at most this many requests queued ahead of the
-    /// dispatcher; submissions beyond it are rejected
+    /// admission bound: at most this many requests in flight — queued
+    /// ahead of the dispatcher, parked for coalescing, or being served;
+    /// a slot is held from submission until the request is answered, so
+    /// dispatcher memory stays bounded under sustained overload and
+    /// submissions beyond the bound are rejected
     /// [`QueryError::Overloaded`] without blocking (0 turns every
     /// request away — a deterministic test hook)
     pub max_pending: usize,
     /// per-request deadline measured from submission: a request still
     /// queued when `enqueued.elapsed() >= deadline` is answered
-    /// [`QueryError::Expired`] instead of served stale
+    /// [`QueryError::Expired`] instead of served stale — checked both at
+    /// dispatcher intake and again as a batch group forms, so requests
+    /// parked for coalescing across waves cannot dodge it
     /// (`Duration::MAX` = never; `Duration::ZERO` expires everything —
     /// the deterministic test hook)
     pub deadline: Duration,
@@ -714,9 +727,11 @@ fn compile_request(
 
 /// Deliver a typed rejection: the unified endpoint gets the cause, the
 /// legacy scalar/row shims get their drop-the-channel contract (the
-/// sender is dropped here, the receiver disconnects).
-fn reject(r: QueryRequest, e: QueryError, stats: &mut ServerStats) {
+/// sender is dropped here, the receiver disconnects). The request is
+/// leaving the system, so its admission slot is released here.
+fn reject(r: QueryRequest, e: QueryError, stats: &mut ServerStats, gate: &Gate) {
     stats.tally(&e);
+    gate.release();
     if let ReplyTo::Full(tx) = r.reply {
         let _ = tx.send(QueryAnswer::Err(e));
     }
@@ -738,19 +753,22 @@ fn dispatcher(
     let mut jobs: Vec<(QueryPlan, QueryRequest)> = Vec::new();
     let mut out = QueryOutput::default();
     let mut den: Vec<f32> = Vec::new();
-    // intake: release the admission slot, enforce the deadline, compile,
-    // reject typed — only well-formed live requests reach the job queue
+    // intake: enforce the deadline, compile, reject typed — only
+    // well-formed live requests reach the job queue. The admission slot
+    // is NOT released here: it stays held until the request is served or
+    // rejected, so `max_pending` bounds everything in flight (channel +
+    // the coalescing queue) and sustained overload reports Overloaded
+    // instead of growing `jobs` without bound.
     let intake = |q: QueryRequest,
                   jobs: &mut Vec<(QueryPlan, QueryRequest)>,
                   stats: &mut ServerStats| {
-        gate.release();
         if q.enqueued.elapsed() >= cfg.deadline {
-            reject(q, QueryError::Expired, stats);
+            reject(q, QueryError::Expired, stats, &gate);
             return;
         }
         match compile_request(&q, d, od, row, family) {
             Ok(qp) => jobs.push((qp, q)),
-            Err(e) => reject(q, e, stats),
+            Err(e) => reject(q, e, stats, &gate),
         }
     };
     let mut open = true;
@@ -815,7 +833,18 @@ fn dispatcher(
             .take_while(|j| j.0.group_cmp(&jobs[0].0).is_eq())
             .count()
             .min(cfg.max_batch);
-        let group: Vec<(QueryPlan, QueryRequest)> = jobs.drain(..take).collect();
+        // intake checked the deadline once, but a request can out-sit it
+        // parked in `jobs` across waves; re-check as the group forms so
+        // nothing is ever served stale
+        let (group, stale): (Vec<(QueryPlan, QueryRequest)>, Vec<_>) = jobs
+            .drain(..take)
+            .partition(|(_, q)| q.enqueued.elapsed() < cfg.deadline);
+        for (_, q) in stale {
+            reject(q, QueryError::Expired, &mut stats, &gate);
+        }
+        if group.is_empty() {
+            continue;
+        }
         let bn = group.len();
         let qp = &group[0].0;
         let decoded = qp.decode.is_some();
@@ -832,10 +861,14 @@ fn dispatcher(
             // fail-fast Unhealthy — gets a typed BackendLost reply
             crate::info!("serving backend degraded: {e}");
             for (_, q) in group {
-                reject(q, QueryError::BackendLost, &mut stats);
+                reject(q, QueryError::BackendLost, &mut stats, &gate);
             }
             continue;
         }
+        // hand the slots back BEFORE the replies go out: a client that
+        // just received its answer must be able to submit again without
+        // racing the release
+        gate.release_n(bn);
         for (i, (_, q)) in group.iter().enumerate() {
             let score = out.scores[i];
             match &q.reply {
@@ -1180,6 +1213,56 @@ mod tests {
         assert_eq!(stats.queries, 0);
         assert_eq!(stats.rejected, 2);
         assert_eq!(stats.rej_overloaded, 2);
+    }
+
+    #[test]
+    fn admission_slots_recycle_as_requests_leave_the_system() {
+        // a slot is now held from submission until the answer goes out
+        // (so max_pending bounds TOTAL in-flight work, not just channel
+        // occupancy); both the serve path and the reject path must hand
+        // their slot back, or a max_pending=1 server bricks after one
+        // request
+        let nv = 4;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 1, 9), 2);
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 9);
+        let server = InferenceServer::start_with::<DenseEngine>(
+            plan,
+            LeafFamily::Bernoulli,
+            params,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_pending: 1,
+                ..ServerConfig::default()
+            },
+        );
+        let x = vec![1.0f32, 0.0, 1.0, 0.0];
+        for i in 0..3 {
+            let ans = server
+                .submit_query(x.clone(), Query::LogLik)
+                .recv()
+                .expect("server must answer");
+            assert!(
+                matches!(ans, QueryAnswer::Ok(_)),
+                "request {i} not served: {ans:?} — slot leaked by the serve path?"
+            );
+        }
+        for i in 0..3 {
+            // malformed (short evidence): leaves through the reject path
+            let ans = server
+                .submit_query(vec![0.0f32; nv - 1], Query::LogLik)
+                .recv()
+                .expect("server must answer");
+            assert!(
+                matches!(ans, QueryAnswer::Err(QueryError::Malformed)),
+                "reject {i} wrong: {ans:?} — slot leaked by the reject path?"
+            );
+        }
+        let stats = server.stop();
+        assert_eq!(stats.queries, 3);
+        assert_eq!(stats.rejected, 3);
+        assert_eq!(stats.rej_malformed, 3);
+        assert_eq!(stats.rej_overloaded, 0, "admission slots were not recycled");
     }
 
     #[test]

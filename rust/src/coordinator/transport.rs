@@ -23,7 +23,13 @@
 //! cursors of [`crate::engine::exec::wire`]; a torn, short, oversized,
 //! or corrupt frame decodes to a typed [`ShardError`] instead of a
 //! panic, and the pool degrades (callers see the error, other shards
-//! keep their replies) rather than taking the dispatcher down.
+//! keep their replies) rather than taking the dispatcher down. On the
+//! worker side a frame that *decodes* but carries crafted contents — a
+//! mask, gradient, or `sel` table of the wrong length, a parameter span
+//! past the arena end — is rejected by `SegmentWorker::check_job`
+//! before it can reach a slice index, and each session additionally
+//! runs under `catch_unwind`, so a hostile peer costs one session,
+//! never the process.
 //!
 //! A TCP session opens with a config handshake: the coordinator sends
 //! the structure spec string, `k`, leaf family, engine name, final
@@ -210,20 +216,30 @@ fn read_frame(
             detail: format!("oversized frame: {len} bytes > {} cap", wire::MAX_FRAME),
         });
     }
-    let mut buf = vec![0u8; len];
-    if let Err(e) = r.read_exact(&mut buf) {
+    // the tag is read separately so the payload lands at offset 0 of its
+    // buffer — shifting it out afterwards would memmove up to MAX_FRAME
+    // bytes per frame on the hot recv path
+    let torn = |shard| ShardError::Frame {
+        shard,
+        detail: format!("torn frame: EOF inside a {len}-byte frame"),
+    };
+    let mut tag = [0u8; 1];
+    if let Err(e) = r.read_exact(&mut tag) {
         return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            ShardError::Frame {
-                shard,
-                detail: format!("torn frame: EOF inside a {len}-byte frame"),
-            }
+            torn(shard)
         } else {
             ShardError::WorkerLost(shard)
         });
     }
-    let tag = buf[0];
-    buf.remove(0);
-    Ok(Some((tag, buf)))
+    let mut buf = vec![0u8; len - 1];
+    if let Err(e) = r.read_exact(&mut buf) {
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            torn(shard)
+        } else {
+            ShardError::WorkerLost(shard)
+        });
+    }
+    Ok(Some((tag[0], buf)))
 }
 
 fn semiring_code(sr: Semiring) -> u8 {
@@ -603,20 +619,94 @@ impl SegmentWorker {
         }
     }
 
-    /// A Forward/Backward batch must fit the engine's activation arena;
-    /// remote peers can claim anything, so the serving loop validates
-    /// instead of letting the engine assert.
-    fn check_batch(&self, bn: usize, batch_cap: usize, x_len: usize) -> WireResult<()> {
-        if bn == 0 || bn > batch_cap {
-            return Err(format!("batch size {bn} outside [1, {batch_cap}]"));
+    /// Validate every wire-derived length and range in `job` against the
+    /// local plan, segment, and arena. Remote peers can claim anything:
+    /// a well-framed but crafted message — a `Params` span past the
+    /// arena end, a short mask, gradient, or `sel` vector — must cost
+    /// the session a typed error, never reach a slice index inside
+    /// [`SegmentWorker::handle`] (where it would panic the process).
+    fn check_job(&self, job: &ShardJob, batch_cap: usize) -> WireResult<()> {
+        let d = self.engine.plan().graph.num_vars;
+        let check_bn = |bn: usize| {
+            if bn == 0 || bn > batch_cap {
+                return Err(format!("batch size {bn} outside [1, {batch_cap}]"));
+            }
+            Ok(())
+        };
+        let check_mask = |mask: &[f32]| {
+            if mask.len() != d {
+                return Err(format!(
+                    "mask holds {} entries, plan has {d} variables",
+                    mask.len()
+                ));
+            }
+            Ok(())
+        };
+        let check_x = |bn: usize, x_len: usize| {
+            if x_len != bn * self.row {
+                return Err(format!(
+                    "evidence window holds {x_len} scalars, batch {bn} needs {}",
+                    bn * self.row
+                ));
+            }
+            Ok(())
+        };
+        match job {
+            ShardJob::Params(shard) => {
+                let arena = self.local.data.len();
+                for &(lo, hi) in &shard.spans {
+                    if lo > hi || hi > arena {
+                        return Err(format!(
+                            "params span [{lo}, {hi}) outside the {arena}-scalar arena"
+                        ));
+                    }
+                }
+                let want: usize = shard.spans.iter().map(|&(lo, hi)| hi - lo).sum();
+                if shard.data.len() != want {
+                    return Err(format!(
+                        "params shard carries {} scalars, spans cover {want}",
+                        shard.data.len()
+                    ));
+                }
+                Ok(())
+            }
+            ShardJob::Forward { x, mask, bn, .. } => {
+                check_bn(*bn)?;
+                check_mask(mask)?;
+                check_x(*bn, x.len())
+            }
+            ShardJob::Backward { x, mask, bn, grads, .. } => {
+                check_bn(*bn)?;
+                check_mask(mask)?;
+                check_x(*bn, x.len())?;
+                let ep = self.engine.exec_plan();
+                let want: usize = self
+                    .seg
+                    .boundary
+                    .iter()
+                    .map(|&rid| bn * ep.region_width[rid])
+                    .sum();
+                if grads.len() != want {
+                    return Err(format!(
+                        "boundary gradients carry {} scalars, segment needs {want}",
+                        grads.len()
+                    ));
+                }
+                Ok(())
+            }
+            ShardJob::Decode { mask, bn, sel, .. } => {
+                check_bn(*bn)?;
+                check_mask(mask)?;
+                let want = self.seg.sel_in.len() * bn;
+                if sel.len() != want {
+                    return Err(format!(
+                        "sel table carries {} entries, segment needs {want}",
+                        sel.len()
+                    ));
+                }
+                Ok(())
+            }
         }
-        if x_len != bn * self.row {
-            return Err(format!(
-                "evidence window holds {x_len} scalars, batch {bn} needs {}",
-                bn * self.row
-            ));
-        }
-        Ok(())
     }
 }
 
@@ -799,19 +889,32 @@ impl Drop for TcpTransport {
 
 /// Serve shard sessions forever: accept one connection at a time, run
 /// it to EOF, log per-session errors, keep listening. A corrupt or
-/// hostile peer costs one session, never the process.
+/// hostile peer costs one session, never the process: every
+/// wire-derived length is validated before execution
+/// ([`SegmentWorker::check_job`]), each session runs under
+/// `catch_unwind` so even a slipped assert is contained, and transient
+/// `accept` failures (EMFILE, ECONNABORTED) are logged and retried
+/// instead of ending a long-lived serving process.
 pub fn serve_listener(listener: &TcpListener) -> crate::util::error::Result<()> {
     loop {
         let (stream, peer) = match listener.accept() {
             Ok(c) => c,
             Err(e) => {
-                crate::bail!("shard-worker accept failed: {e}");
+                crate::info!("shard-worker: accept failed (retrying): {e}");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                continue;
             }
         };
         crate::info!("shard-worker: session from {peer}");
-        match serve_connection(stream) {
-            Ok(()) => crate::info!("shard-worker: session from {peer} closed"),
-            Err(e) => crate::info!("shard-worker: session from {peer} failed: {e}"),
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_connection(stream)
+        }));
+        match outcome {
+            Ok(Ok(())) => crate::info!("shard-worker: session from {peer} closed"),
+            Ok(Err(e)) => crate::info!("shard-worker: session from {peer} failed: {e}"),
+            Err(_) => {
+                crate::info!("shard-worker: session from {peer} panicked; session dropped")
+            }
         }
     }
 }
@@ -822,6 +925,11 @@ pub fn serve_listener(listener: &TcpListener) -> crate::util::error::Result<()> 
 pub fn serve_connection(stream: TcpStream) -> crate::util::error::Result<()> {
     let _ = stream.set_nodelay(true);
     let mut stream = stream;
+    // a peer that connects and then stalls (or sends nothing) must not
+    // hold the single-session worker hostage: the handshake gets a
+    // finite window; once a coordinator has identified itself the serve
+    // loop returns to blocking reads (an idle coordinator is normal)
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(30)));
     // --- handshake ---------------------------------------------------
     let cfg = match read_frame(&mut stream, 0)? {
         Some((TAG_CONFIG, payload)) => match WorkerConfig::decode(&payload) {
@@ -843,6 +951,7 @@ pub fn serve_connection(stream: TcpStream) -> crate::util::error::Result<()> {
         }
     };
     send_ack(&mut stream, true, &cfg.engine)?;
+    let _ = stream.set_read_timeout(None);
     // --- serve -------------------------------------------------------
     loop {
         let (tag, payload) = match read_frame(&mut stream, cfg.shard_id)? {
@@ -851,21 +960,11 @@ pub fn serve_connection(stream: TcpStream) -> crate::util::error::Result<()> {
         };
         let job = decode_job(tag, &payload)
             .map_err(|detail| ShardError::Frame { shard: cfg.shard_id, detail })?;
-        // remote batch sizes are untrusted: validate against the
-        // engine's capacity before touching activation arenas
-        match &job {
-            ShardJob::Forward { x, bn, .. } | ShardJob::Backward { x, bn, .. } => {
-                worker
-                    .check_batch(*bn, cfg.batch_cap, x.len())
-                    .map_err(|detail| ShardError::Frame { shard: cfg.shard_id, detail })?;
-            }
-            ShardJob::Decode { bn, .. } => {
-                if *bn == 0 || *bn > cfg.batch_cap {
-                    crate::bail!("decode batch {bn} outside [1, {}]", cfg.batch_cap);
-                }
-            }
-            ShardJob::Params(_) => {}
-        }
+        // every wire-derived length and range is untrusted: validate
+        // against the local plan/segment/arena before touching a buffer
+        worker
+            .check_job(&job, cfg.batch_cap)
+            .map_err(|detail| ShardError::Frame { shard: cfg.shard_id, detail })?;
         if let Some(reply) = worker.handle(job) {
             let (tag, payload) = encode_reply(&reply);
             write_frame(&mut stream, tag, &payload)
@@ -1095,6 +1194,94 @@ mod tests {
         assert_eq!(back.shard_id, cfg.shard_id);
         assert_eq!(back.batch_cap, cfg.batch_cap);
         assert!(back.fastmath);
+    }
+
+    #[test]
+    fn crafted_jobs_are_rejected_before_execution() {
+        // well-framed but semantically malformed payloads — a short
+        // mask/gradient/sel vector, a params span past the arena end —
+        // must fail validation before `handle` can slice out of bounds
+        let cfg = WorkerConfig {
+            structure: "rat:depth=2,replica=2,seed=1".into(),
+            num_vars: 8,
+            k: 2,
+            family: LeafFamily::Bernoulli,
+            engine: "dense".into(),
+            n_shards: 1,
+            shard_id: 0,
+            batch_cap: 4,
+            fastmath: false,
+        };
+        let worker = build_segment_worker(&cfg).expect("build worker");
+        let d = cfg.num_vars;
+        let bn = 2usize;
+        let cap = cfg.batch_cap;
+        let x = Arc::new(vec![0.0f32; bn * d]);
+        let mask = Arc::new(vec![1.0f32; d]);
+        let fwd = |x: Arc<Vec<f32>>, mask: Arc<Vec<f32>>, bn: usize| ShardJob::Forward {
+            x,
+            row0: 0,
+            mask,
+            bn,
+            sr: Semiring::SumProduct,
+        };
+        // a well-formed forward passes
+        assert!(worker.check_job(&fwd(x.clone(), mask.clone(), bn), cap).is_ok());
+        // short mask: engines index mask[d] for every variable
+        assert!(worker
+            .check_job(&fwd(x.clone(), Arc::new(vec![1.0; d - 1]), bn), cap)
+            .is_err());
+        // batch beyond the engine's activation capacity
+        assert!(worker
+            .check_job(&fwd(Arc::new(vec![0.0; 64 * d]), mask.clone(), 64), cap)
+            .is_err());
+        // evidence window shorter than the claimed batch
+        assert!(worker
+            .check_job(&fwd(Arc::new(vec![0.0; bn * d - 1]), mask.clone(), bn), cap)
+            .is_err());
+        // short boundary gradients: Backward slices grads[off..off+bn*w]
+        let bad = ShardJob::Backward {
+            x: x.clone(),
+            row0: 0,
+            mask: mask.clone(),
+            bn,
+            grads: vec![0.0; 1],
+        };
+        assert!(worker.check_job(&bad, cap).is_err());
+        // params span past the local arena end: scatter_into would
+        // index dst.data[lo..hi] out of bounds
+        let arena = worker.local.data.len();
+        let bad = ShardJob::Params(ArenaShard {
+            spans: vec![(arena, arena + 4)],
+            data: vec![0.0; 4],
+        });
+        assert!(worker.check_job(&bad, cap).is_err());
+        // span/data length mismatch
+        let bad = ShardJob::Params(ArenaShard {
+            spans: vec![(0, 4)],
+            data: vec![0.0; 3],
+        });
+        assert!(worker.check_job(&bad, cap).is_err());
+        // wrong-length sel table: decode copies sel[j*bn..(j+1)*bn] per
+        // imported region
+        let want_sel = worker.seg.sel_in.len() * bn;
+        let bad = ShardJob::Decode {
+            mask: mask.clone(),
+            mode: DecodeMode::Argmax,
+            bn,
+            salt: 1,
+            sel: vec![0; want_sel + 1],
+        };
+        assert!(worker.check_job(&bad, cap).is_err());
+        // a well-formed decode passes
+        let ok = ShardJob::Decode {
+            mask,
+            mode: DecodeMode::Argmax,
+            bn,
+            salt: 1,
+            sel: vec![0; want_sel],
+        };
+        assert!(worker.check_job(&ok, cap).is_ok());
     }
 
     #[test]

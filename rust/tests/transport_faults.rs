@@ -16,16 +16,18 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
 use std::time::Duration;
 
 use einet::coordinator::server::InferenceServer;
-use einet::coordinator::transport::TcpTransport;
+use einet::coordinator::transport::{ShardJob, TcpTransport};
 use einet::coordinator::ShardedPool;
 use einet::em::EmConfig;
 use einet::util::rng::Rng;
 use einet::{
-    boxed_build, DecodeMode, DenseEngine, EinetParams, LayeredPlan, LeafFamily,
-    Query, QueryAnswer, QueryError, ServerConfig, ShardError, WorkerConfig,
+    boxed_build, ArenaShard, DecodeMode, DenseEngine, EinetParams, LayeredPlan,
+    LeafFamily, Query, QueryAnswer, QueryError, Semiring, ServerConfig, ShardError,
+    ShardTransport, WorkerConfig,
 };
 
 /// One `einet shard-worker` subprocess, killed on drop.
@@ -333,6 +335,94 @@ fn corrupt_frames_cost_one_session_not_the_worker() {
     )
     .expect("worker must survive corrupt sessions");
     let x = binary_batch(bn, 11);
+    let mask = vec![1.0f32; NV];
+    let mut lp = vec![0.0f32; bn];
+    pool.forward(&x, &mask, bn, &mut lp).unwrap();
+    assert!(lp.iter().all(|l| l.is_finite()));
+    pool.stop();
+}
+
+#[test]
+fn crafted_payloads_cost_one_session_not_the_worker() {
+    // frames that parse fine but carry semantically malformed contents:
+    // without worker-side validation each of these would panic a slice
+    // index inside the engine and kill the whole process
+    let plan = build_plan();
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 3);
+    let bn = 2usize;
+    let (_workers, addrs) = spawn_workers(1);
+    let cfg = WorkerConfig {
+        structure: STRUCTURE.to_string(),
+        num_vars: NV,
+        k: K,
+        family,
+        engine: "dense".to_string(),
+        n_shards: 1,
+        shard_id: 0,
+        batch_cap: bn,
+        fastmath: false,
+    };
+    let row = NV; // Bernoulli evidence: one scalar per variable
+    let sessions: Vec<(&str, ShardJob)> = vec![
+        (
+            "mask shorter than the variable count",
+            ShardJob::Forward {
+                x: Arc::new(vec![0.0; bn * row]),
+                row0: 0,
+                mask: Arc::new(vec![1.0; 3]),
+                bn,
+                sr: Semiring::SumProduct,
+            },
+        ),
+        (
+            "boundary gradient vector far too short",
+            ShardJob::Backward {
+                x: Arc::new(vec![0.0; bn * row]),
+                row0: 0,
+                mask: Arc::new(vec![1.0; NV]),
+                bn,
+                grads: vec![0.0; 2],
+            },
+        ),
+        (
+            "parameter span past the arena end",
+            ShardJob::Params(ArenaShard {
+                spans: vec![(1 << 28, (1 << 28) + 8)],
+                data: vec![0.0; 8],
+            }),
+        ),
+        (
+            "sel table with the wrong entry count",
+            ShardJob::Decode {
+                mask: Arc::new(vec![0.0; NV]),
+                mode: DecodeMode::Argmax,
+                bn,
+                salt: 9,
+                sel: vec![0; 1],
+            },
+        ),
+    ];
+    for (what, job) in sessions {
+        let mut t = TcpTransport::connect(&addrs[0], &cfg, row)
+            .unwrap_or_else(|e| panic!("handshake before `{what}` failed: {e}"));
+        t.send(job).unwrap_or_else(|e| panic!("send `{what}` failed: {e}"));
+        let err = t
+            .recv()
+            .expect_err("worker must drop the session, not answer");
+        assert!(
+            matches!(err, ShardError::WorkerLost(_) | ShardError::Frame { .. }),
+            "`{what}`: wrong failure kind: {err}"
+        );
+    }
+
+    // the worker process survived every crafted session: a real pool
+    // still connects and serves bit-normal answers
+    let mut pool = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &params, 1, bn,
+    )
+    .expect("worker must survive crafted sessions");
+    let x = binary_batch(bn, 13);
     let mask = vec![1.0f32; NV];
     let mut lp = vec![0.0f32; bn];
     pool.forward(&x, &mask, bn, &mut lp).unwrap();
