@@ -1,0 +1,199 @@
+//! Layer-fusion speedup: dense (step-at-a-time) vs fused (superblock)
+//! execution of the SAME lowered plan, bit-identical by contract — so
+//! every ratio here is pure dispatch/sweep amortization, no numerical
+//! trade.
+//!
+//! The sweep covers K ∈ {4, 8, 16, 32} × RAT depth, forward rows/s
+//! under both semirings plus a full EM step (forward + backward +
+//! M-step), at a small serving batch where per-step kernel dispatch is
+//! the bottleneck the fusion removes. Runs in the Fast math tier (the
+//! serving configuration; the Exact tier is libm-bound and fusion
+//! cannot buy transcendentals back).
+//!
+//! Results land in BENCH_layers.json (CI artifact) with a `speedup`
+//! field per row.
+//!
+//!     cargo bench --bench layer_fusion            # full size
+//!     EINET_BENCH_QUICK=1 cargo bench --bench layer_fusion
+
+use einet::bench::{time_it, Table};
+use einet::em::{m_step, EmConfig};
+use einet::engine::kernels;
+use einet::util::json;
+use einet::util::rng::Rng;
+use einet::{
+    DenseEngine, EinetParams, EmStats, Engine, FusedEngine, LayeredPlan,
+    LeafFamily, Semiring,
+};
+
+/// Forward-only throughput over the dataset, batch-at-a-time.
+#[allow(clippy::too_many_arguments)]
+fn forward_rate<E: Engine>(
+    e: &mut E,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    n: usize,
+    bn: usize,
+    row: usize,
+    sr: Semiring,
+    reps: usize,
+) -> f64 {
+    let mut logp = vec![0.0f32; bn];
+    let mut run = || {
+        let mut b0 = 0usize;
+        while b0 < n {
+            let b = bn.min(n - b0);
+            e.forward_semiring(
+                params,
+                &x[b0 * row..(b0 + b) * row],
+                mask,
+                &mut logp[..b],
+                sr,
+            );
+            b0 += b;
+        }
+    };
+    run(); // warmup
+    let t = time_it(&mut run, 0, reps);
+    n as f64 / t.median_s
+}
+
+/// One full EM step (forward + E-step over every batch, then the
+/// M-step) per timed iteration.
+#[allow(clippy::too_many_arguments)]
+fn em_rate<E: Engine>(
+    e: &mut E,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    n: usize,
+    bn: usize,
+    row: usize,
+    reps: usize,
+) -> f64 {
+    let em = EmConfig {
+        step_size: 0.5,
+        ..Default::default()
+    };
+    let mut logp = vec![0.0f32; bn];
+    let mut run = || {
+        let mut stats = EmStats::zeros_like(params);
+        let mut b0 = 0usize;
+        while b0 < n {
+            let b = bn.min(n - b0);
+            let xb = &x[b0 * row..(b0 + b) * row];
+            e.forward(params, xb, mask, &mut logp[..b]);
+            e.backward(params, xb, mask, b, &mut stats);
+            b0 += b;
+        }
+        let mut p = params.clone();
+        m_step(&mut p, &stats, &em);
+    };
+    run(); // warmup
+    let t = time_it(&mut run, 0, reps);
+    n as f64 / t.median_s
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let ks: &[usize] = if quick { &[4, 8] } else { &[4, 8, 16, 32] };
+    let depths: &[usize] = if quick { &[3] } else { &[2, 3] };
+    let (num_vars, replica) = if quick { (32usize, 4usize) } else { (64, 8) };
+    let n = if quick { 192usize } else { 768 };
+    // a small serving batch: the dispatch-bound regime layer fusion
+    // targets (large batches amortize dispatch on their own)
+    let bn = 8usize;
+    let reps = if quick { 3 } else { 5 };
+    let family = LeafFamily::Bernoulli;
+
+    // the serving tier: vectorized polynomial exp/ln (the Exact tier is
+    // transcendental-dominated and blind to call-structure wins)
+    kernels::force_fastmath(true);
+
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..n * num_vars)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect();
+    let mask = vec![1.0f32; num_vars];
+    let row = num_vars;
+
+    println!(
+        "layer fusion — RAT D={num_vars} R={replica}, N={n}, batch={bn}, \
+         fast tier, dense vs fused"
+    );
+    let mut table = Table::new(&[
+        "depth", "K", "pass", "dense rows/s", "fused rows/s", "speedup",
+    ]);
+    let mut rows: Vec<json::Json> = Vec::new();
+    let mut emit = |table: &mut Table,
+                    rows: &mut Vec<json::Json>,
+                    depth: usize,
+                    k: usize,
+                    pass: &str,
+                    rd: f64,
+                    rf: f64| {
+        let speedup = rf / rd;
+        table.row(vec![
+            format!("{depth}"),
+            format!("{k}"),
+            pass.to_string(),
+            format!("{rd:.0}"),
+            format!("{rf:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        println!(
+            "depth={depth} K={k} {pass}: dense {rd:.0} rows/s, \
+             fused {rf:.0} rows/s ({speedup:.2}x)"
+        );
+        rows.push(json::obj(vec![
+            ("depth", json::num(depth as f64)),
+            ("k", json::num(k as f64)),
+            ("pass", json::s(pass)),
+            ("dense_rows_per_s", json::num(rd)),
+            ("fused_rows_per_s", json::num(rf)),
+            ("speedup", json::num(speedup)),
+        ]));
+    };
+
+    for &depth in depths {
+        for &k in ks {
+            let structure = format!("rat:depth={depth},replica={replica},seed=3");
+            let graph = einet::structure::from_spec(num_vars, &structure)
+                .expect("structure");
+            let plan = LayeredPlan::compile(graph, k);
+            let params = EinetParams::init(&plan, family, 5);
+            let mut dense = DenseEngine::new(plan.clone(), family, bn);
+            let mut fused = FusedEngine::new(plan.clone(), family, bn);
+            for (sr, tag) in [
+                (Semiring::SumProduct, "forward"),
+                (Semiring::MaxProduct, "forward_max"),
+            ] {
+                let rd =
+                    forward_rate(&mut dense, &params, &x, &mask, n, bn, row, sr, reps);
+                let rf =
+                    forward_rate(&mut fused, &params, &x, &mask, n, bn, row, sr, reps);
+                emit(&mut table, &mut rows, depth, k, tag, rd, rf);
+            }
+            let rd = em_rate(&mut dense, &params, &x, &mask, n, bn, row, reps);
+            let rf = em_rate(&mut fused, &params, &x, &mask, n, bn, row, reps);
+            emit(&mut table, &mut rows, depth, k, "em_step", rd, rf);
+        }
+    }
+    kernels::force_fastmath(false);
+
+    println!("\n{}", table.render());
+    let report = json::obj(vec![
+        ("experiment", json::s("layer_fusion")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(num_vars as f64)),
+        ("replica", json::num(replica as f64)),
+        ("n", json::num(n as f64)),
+        ("batch", json::num(bn as f64)),
+        ("math", json::s("fast")),
+        ("rows", json::arr(rows)),
+    ]);
+    std::fs::write("BENCH_layers.json", report.to_string())
+        .expect("write BENCH_layers.json");
+    println!("wrote BENCH_layers.json");
+}

@@ -32,6 +32,15 @@ use super::exec::{self, ExecPlan, Semiring, Step};
 use super::kernels;
 use super::{DecodeMode, EmStats, Engine, ParamArena};
 
+/// Split borrow of a [`DenseEngine`]'s forward state, handed to the
+/// layer-fused executor (see [`DenseEngine::fused_parts`]).
+pub(crate) struct FusedParts<'a> {
+    pub exec: &'a ExecPlan,
+    pub arena: &'a mut Vec<f32>,
+    pub scratch: &'a mut Vec<f32>,
+    pub leaf_const: &'a mut Vec<f32>,
+}
+
 /// The dense EiNet engine. Construct once per (plan, batch capacity);
 /// buffers are reused across calls — the training hot loop is
 /// allocation-free.
@@ -146,6 +155,22 @@ impl DenseEngine {
             params: 4 * params.num_params(),
             activations: 4 * self.arena.len(),
             scratch: 4 * (self.scratch.len() + temporaries) + self.samp.bytes(),
+        }
+    }
+
+    /// Split borrow of the forward-pass state for the layer-fused
+    /// executor ([`super::fused::FusedEngine`]): the compiled plan plus
+    /// mutable views of the activation arena, the mixing scratch, and
+    /// the leaf log-normalizer cache. The fused engine runs its
+    /// superblock sweeps over exactly these buffers, so every other
+    /// surface (backward, decode, boundary exchange) reads the same
+    /// state it would after a step-by-step dense forward.
+    pub(crate) fn fused_parts(&mut self) -> FusedParts<'_> {
+        FusedParts {
+            exec: &self.exec,
+            arena: &mut self.arena,
+            scratch: &mut self.scratch,
+            leaf_const: &mut self.leaf_const,
         }
     }
 
@@ -806,6 +831,30 @@ impl DenseEngine {
         let x = vec![0.0f32; d * od];
         let mut logp = vec![0.0f32; 1];
         self.forward(params, &x, &mask, &mut logp);
+        exec::sample_batch_shared_rows_into(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            n,
+            mode,
+            rng,
+            &mut self.samp,
+            out,
+        );
+    }
+
+    /// The shared-rows decode half of [`DenseEngine::sample_batch_into`]
+    /// alone — for callers (the layer-fused engine) that have already run
+    /// the marginalized 1-row forward themselves.
+    pub(crate) fn sample_shared_rows_into(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+        out: &mut [f32],
+    ) {
         exec::sample_batch_shared_rows_into(
             &self.exec,
             params,

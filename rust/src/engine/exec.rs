@@ -505,6 +505,123 @@ impl ExecPlan {
 }
 
 // ---------------------------------------------------------------------------
+// LayerPlan: superblock lowering over the flat step program
+// ---------------------------------------------------------------------------
+
+/// One layer-fused superblock: a maximal run of same-kind, same-level
+/// steps of an [`ExecPlan`]. The fused engine executes a superblock as
+/// one kernel-call chain — a single leaf emission pass, one grouped-GEMM
+/// contraction per batch block ([`kernels::einsum_group`]), or one fused
+/// max/normalize/ln sweep over a run of mixing rows — instead of a
+/// dispatch per step. The `steps` lists hold indices into
+/// [`ExecPlan::steps`] in their original execution order, so flattening
+/// a [`LayerPlan`] recovers the step list it was fused from exactly.
+#[derive(Clone, Debug)]
+pub enum Superblock {
+    /// A run of [`Step::Leaf`] steps: one leaf-layer emission pass.
+    Leaf {
+        /// indices into [`ExecPlan::steps`], in execution order
+        steps: Vec<usize>,
+    },
+    /// A run of [`Step::Einsum`] steps at one level: grouped-GEMM
+    /// contraction, one staged transcendental sweep per batch block.
+    Einsum {
+        /// plan level shared by every step of the run
+        level: usize,
+        /// indices into [`ExecPlan::steps`], in execution order
+        steps: Vec<usize>,
+    },
+    /// A run of [`Step::Mix`] steps at one level: one fused
+    /// max/normalize/ln sweep over all rows of the run.
+    Mix {
+        /// plan level shared by every step of the run
+        level: usize,
+        /// indices into [`ExecPlan::steps`], in execution order
+        steps: Vec<usize>,
+    },
+}
+
+impl Superblock {
+    /// The step indices this superblock fuses, in execution order.
+    pub fn steps(&self) -> &[usize] {
+        match self {
+            Superblock::Leaf { steps }
+            | Superblock::Einsum { steps, .. }
+            | Superblock::Mix { steps, .. } => steps,
+        }
+    }
+}
+
+/// The second lowering stage: a superblock grouping over (a subset of)
+/// an [`ExecPlan`]'s step program. `ExecPlan::lower` emits all Leaf
+/// steps first, then per level every Einsum step followed by that
+/// level's Mix steps — so same-kind, same-level runs are contiguous by
+/// construction and fusing is a linear scan. A sharded worker fuses the
+/// segment [`PlanPartition::cut`] hands it ([`LayerPlan::fuse_steps`]);
+/// grouping never reorders steps across kinds or levels, which is what
+/// keeps the fused execution bit-identical to the step-by-step dense
+/// path (each step's per-row reduction order is untouched; see
+/// `engine/fused.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct LayerPlan {
+    /// superblocks in execution order
+    pub blocks: Vec<Superblock>,
+}
+
+impl LayerPlan {
+    /// Fuse the full step program of `ep` into superblocks.
+    pub fn fuse(ep: &ExecPlan) -> Self {
+        let all: Vec<usize> = (0..ep.steps.len()).collect();
+        Self::fuse_steps(ep, &all)
+    }
+
+    /// Fuse an ascending subset of `ep`'s steps (a worker's segment from
+    /// [`PlanPartition::cut`], or the full program) into superblocks:
+    /// consecutive entries of the same kind and level join one
+    /// superblock; any kind or level change starts a new one. Every
+    /// index appears in exactly one superblock, in its input position.
+    pub fn fuse_steps(ep: &ExecPlan, steps: &[usize]) -> Self {
+        let mut blocks: Vec<Superblock> = Vec::new();
+        for &si in steps {
+            match ep.steps[si] {
+                Step::Leaf { .. } => match blocks.last_mut() {
+                    Some(Superblock::Leaf { steps: run }) => run.push(si),
+                    _ => blocks.push(Superblock::Leaf { steps: vec![si] }),
+                },
+                Step::Einsum { level, .. } => match blocks.last_mut() {
+                    Some(Superblock::Einsum { level: l, steps: run })
+                        if *l == level =>
+                    {
+                        run.push(si)
+                    }
+                    _ => blocks.push(Superblock::Einsum {
+                        level,
+                        steps: vec![si],
+                    }),
+                },
+                Step::Mix { level, .. } => match blocks.last_mut() {
+                    Some(Superblock::Mix { level: l, steps: run })
+                        if *l == level =>
+                    {
+                        run.push(si)
+                    }
+                    _ => blocks.push(Superblock::Mix {
+                        level,
+                        steps: vec![si],
+                    }),
+                },
+            }
+        }
+        LayerPlan { blocks }
+    }
+
+    /// Total number of fused steps across all superblocks.
+    pub fn n_steps(&self) -> usize {
+        self.blocks.iter().map(|b| b.steps().len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PlanPartition: scope-partitioned segments over the step program
 // ---------------------------------------------------------------------------
 
@@ -899,14 +1016,41 @@ pub(crate) fn refresh_leaf_const_region(
     let r_total = ep.layout.num_replica;
     let rep = ep.plan.graph.regions[rid].replica.unwrap();
     let theta = params.theta();
-    for d in ep.plan.graph.regions[rid].scope.iter() {
-        for kk in 0..k {
-            let c = (d * k + kk) * r_total + rep;
-            leaf_const[c] = ep
-                .family
-                .log_norm_const_tier(&theta[c * s_dim..(c + 1) * s_dim], ep.math);
-        }
+    // The region's components are strided by `r_total` in the flat
+    // component space: gather their natural parameters contiguously,
+    // run ONE vectorized normalizer sweep over the whole region
+    // (`LeafFamily::log_norm_const_batch` — bit-identical per component
+    // to the scalar tier path), scatter the results back. The staging
+    // buffers are thread-local so the per-Leaf-step hot path stays
+    // allocation-free after warmup, one set per worker thread.
+    thread_local! {
+        static STAGE: std::cell::RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+            std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new()));
     }
+    STAGE.with(|cell| {
+        let (thetas, out, stage) = &mut *cell.borrow_mut();
+        thetas.clear();
+        let mut n = 0usize;
+        for d in ep.plan.graph.regions[rid].scope.iter() {
+            for kk in 0..k {
+                let c = (d * k + kk) * r_total + rep;
+                thetas.extend_from_slice(&theta[c * s_dim..(c + 1) * s_dim]);
+                n += 1;
+            }
+        }
+        out.clear();
+        out.resize(n, 0.0);
+        ep.family
+            .log_norm_const_batch(thetas, out, ep.simd, ep.math, stage);
+        let mut i = 0usize;
+        for d in ep.plan.graph.regions[rid].scope.iter() {
+            for kk in 0..k {
+                let c = (d * k + kk) * r_total + rep;
+                leaf_const[c] = out[i];
+                i += 1;
+            }
+        }
+    });
 }
 
 /// Forward one leaf region: accumulate per-variable log-densities into

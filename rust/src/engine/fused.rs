@@ -1,0 +1,756 @@
+//! The layer-fused engine: superblock execution of the dense layout.
+//!
+//! `ExecPlan::lower` emits a flat step program; [`LayerPlan::fuse`]
+//! groups its runs of same-kind, same-level steps into *superblocks*
+//! (the PyJuice-style layer compilation of "A Systems Perspective"),
+//! and this engine executes each superblock as one kernel-call chain
+//! instead of a dispatch per step:
+//!
+//!  * **Leaf superblock** — a single leaf-layer emission pass over the
+//!    run's regions (per-region normalizer refresh + emission, exactly
+//!    the dense per-step code, without the per-step dispatch);
+//!  * **Einsum superblock** — per batch block, the run's slots are
+//!    staged into one contiguous `[G·2K, bb]` argument block, covered
+//!    by ONE [`kernels::vexp`] sweep, contracted by ONE grouped-GEMM
+//!    call ([`kernels::einsum_group`], the `[Σ Ko, K²] × [K², bb]`
+//!    batched contraction, both semirings), finished by ONE
+//!    [`kernels::vln`] sweep — instead of two exp sweeps, a GEMM and an
+//!    ln sweep *per slot*;
+//!  * **Mix superblock** — the run's mixing rows share one fused
+//!    max/normalize/ln sweep: all running maxima first, then one staged
+//!    exp sweep over every (row, child) pair, the per-row child
+//!    accumulations, one ln sweep, and the max add-back.
+//!
+//! **Bit-identity with [`DenseEngine`] is the hard contract.** Grouping
+//! preserves each step's per-row reduction order exactly: the grouped
+//! GEMM runs the *same* [`kernels::outer_block`]/[`kernels::einsum_block`]
+//! kernels per slot over the same operands, the batched exp/ln sweeps
+//! are element-wise under the math tier's cross-ISA identity contract
+//! (Exact replays libm per element; Fast pins scalar-tail == SIMD-lane
+//! bits), and write-back replays the dense add order — so only the call
+//! structure differs, never a bit. `tests/layer_fusion.rs` pins this
+//! for forward/backward/decode across structures, families, semirings
+//! and shard counts.
+//!
+//! The engine wraps a [`DenseEngine`] and runs its superblock sweeps
+//! over the inner engine's arena/scratch, so every other surface —
+//! backward, decode, boundary exchange, checkpoints — reads exactly the
+//! state a step-by-step dense forward would have left. Sharding works
+//! unchanged: `PlanPartition::cut` cuts the underlying [`ExecPlan`],
+//! and each worker fuses its own segment ([`LayerPlan::fuse_steps`],
+//! memoized per step list).
+
+use crate::layers::LayeredPlan;
+use crate::leaves::LeafFamily;
+use crate::util::rng::Rng;
+use crate::util::MemFootprint;
+
+use super::dense::DenseEngine;
+use super::exec::{self, ExecPlan, LayerPlan, Semiring, Step, Superblock};
+use super::kernels;
+use super::{DecodeMode, EmStats, Engine, ParamArena};
+
+/// Staging budget (in f32 scalars, ~128 KiB) for one einsum group or
+/// mix chunk: large enough to amortize the per-sweep dispatch over many
+/// slots, small enough that the staged block stays cache-resident. A
+/// single step larger than the budget still forms a (one-step) group.
+const STAGE_BUDGET: usize = 1 << 15;
+
+/// Reusable staging buffers of the superblock executor, grown lazily to
+/// a budget-bounded high-water mark on the first pass (the hot loop is
+/// allocation-free afterwards).
+#[derive(Default)]
+struct FusedStage {
+    /// einsum: staged exponent arguments, `[G, 2K, bb]` per group
+    args: Vec<f32>,
+    /// einsum: per-slot left/right row maxima, `[G, bb]` each
+    a: Vec<f32>,
+    ap: Vec<f32>,
+    /// einsum: the shared transposed product block, `[K², bb]`
+    prod: Vec<f32>,
+    /// einsum: grouped accumulator, `[Σ Ko, bb]` per group
+    acc: Vec<f32>,
+    /// einsum: per-group slot table for [`kernels::einsum_group`]
+    slots: Vec<kernels::GroupSlot>,
+    /// mix: running maxima, one `[bn·Ko]` span per row of the chunk
+    m: Vec<f32>,
+    /// mix: linear-domain accumulators, mirroring `m`
+    dst: Vec<f32>,
+    /// mix: staged exp arguments, one span per (row, child) pair
+    e: Vec<f32>,
+}
+
+impl FusedStage {
+    fn bytes(&self) -> usize {
+        4 * (self.args.len()
+            + self.a.len()
+            + self.ap.len()
+            + self.prod.len()
+            + self.acc.len()
+            + self.m.len()
+            + self.dst.len()
+            + self.e.len())
+    }
+}
+
+#[inline]
+fn ensure(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+/// The layer-fused engine: a [`DenseEngine`] whose forward pass runs
+/// superblock-at-a-time over a [`LayerPlan`]. Register-selectable as
+/// `fused`; bit-identical to `dense` on every pass (see the module
+/// docs for why).
+pub struct FusedEngine {
+    inner: DenseEngine,
+    /// full-program superblock grouping, fused once at construction
+    layers: LayerPlan,
+    /// memoized segment grouping: (step list, its fusion) of the most
+    /// recent `forward_steps` call — sharded workers drive the same
+    /// segment every pass, so this re-fuses only when the list changes
+    seg: Option<(Vec<usize>, LayerPlan)>,
+    st: FusedStage,
+}
+
+impl FusedEngine {
+    /// Lower the plan (via [`DenseEngine::new`]) and fuse its step
+    /// program into superblocks.
+    pub fn new(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
+        let inner = DenseEngine::new(plan, family, batch_cap);
+        let layers = LayerPlan::fuse(Engine::exec_plan(&inner));
+        Self {
+            inner,
+            layers,
+            seg: None,
+            st: FusedStage::default(),
+        }
+    }
+
+    /// The full-program superblock grouping this engine executes.
+    pub fn layer_plan(&self) -> &LayerPlan {
+        &self.layers
+    }
+
+    /// See [`Engine::forward_semiring`]: the superblock forward pass.
+    pub fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        let bn = logp.len();
+        run_layers(
+            &mut self.inner,
+            &self.layers,
+            &mut self.st,
+            params,
+            x,
+            mask,
+            bn,
+            sr,
+        );
+        self.inner.read_logp(bn, logp);
+    }
+
+    /// See [`Engine::forward_steps`]: fuse the segment's step list
+    /// (memoized) and execute it superblock-at-a-time.
+    pub fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        sr: Semiring,
+    ) {
+        let refresh = match &self.seg {
+            Some((list, _)) => list.as_slice() != steps,
+            None => true,
+        };
+        if refresh {
+            let lp = LayerPlan::fuse_steps(Engine::exec_plan(&self.inner), steps);
+            self.seg = Some((steps.to_vec(), lp));
+        }
+        let (_, lp) = self.seg.as_ref().unwrap();
+        run_layers(&mut self.inner, lp, &mut self.st, params, x, mask, bn, sr);
+    }
+}
+
+impl Engine for FusedEngine {
+    fn build(plan: LayeredPlan, family: LeafFamily, batch_cap: usize) -> Self {
+        FusedEngine::new(plan, family, batch_cap)
+    }
+
+    fn plan(&self) -> &LayeredPlan {
+        Engine::plan(&self.inner)
+    }
+
+    fn family(&self) -> LeafFamily {
+        Engine::family(&self.inner)
+    }
+
+    fn batch_capacity(&self) -> usize {
+        Engine::batch_capacity(&self.inner)
+    }
+
+    fn forward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        logp: &mut [f32],
+        sr: Semiring,
+    ) {
+        FusedEngine::forward_semiring(self, params, x, mask, logp, sr)
+    }
+
+    fn backward(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        // the fused forward left bit-identical activations in the inner
+        // arena/scratch, so the dense backward produces bit-identical
+        // statistics
+        Engine::backward(&mut self.inner, params, x, mask, bn, stats)
+    }
+
+    fn decode(
+        &self,
+        params: &ParamArena,
+        b: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        Engine::decode(&self.inner, params, b, mask, mode, rng, out)
+    }
+
+    fn decode_batch(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        rng: &mut Rng,
+        out: &mut [f32],
+    ) {
+        Engine::decode_batch(&mut self.inner, params, bn, mask, mode, rng, out)
+    }
+
+    fn sample_batch(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+    ) -> Vec<f32> {
+        let row = Engine::plan(self).graph.num_vars * Engine::family(self).obs_dim();
+        let mut out = vec![0.0f32; n * row];
+        Engine::sample_batch_into(self, params, n, rng, mode, &mut out);
+        out
+    }
+
+    fn sample_batch_into(
+        &mut self,
+        params: &ParamArena,
+        n: usize,
+        rng: &mut Rng,
+        mode: DecodeMode,
+        out: &mut [f32],
+    ) {
+        // the shared-rows fast path over a fused 1-row forward (the
+        // all-zero mask makes every row identical, same as dense)
+        let d = Engine::plan(self).graph.num_vars;
+        let od = Engine::family(self).obs_dim();
+        let mask = vec![0.0f32; d];
+        let x = vec![0.0f32; d * od];
+        let mut logp = vec![0.0f32; 1];
+        FusedEngine::forward_semiring(self, params, &x, &mask, &mut logp, Semiring::SumProduct);
+        self.inner
+            .sample_shared_rows_into(params, n, rng, mode, out);
+    }
+
+    fn memory_footprint(&self, params: &ParamArena) -> MemFootprint {
+        let mut f = Engine::memory_footprint(&self.inner, params);
+        f.scratch += self.st.bytes();
+        f
+    }
+
+    // --- segmented execution -------------------------------------------
+
+    fn exec_plan(&self) -> &ExecPlan {
+        Engine::exec_plan(&self.inner)
+    }
+
+    fn forward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        sr: Semiring,
+    ) {
+        FusedEngine::forward_steps(self, params, x, mask, bn, steps, sr)
+    }
+
+    fn clear_grad(&mut self) {
+        Engine::clear_grad(&mut self.inner)
+    }
+
+    fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
+        Engine::seed_root_grad(&mut self.inner, bn, stats)
+    }
+
+    fn backward_steps(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        steps: &[usize],
+        stats: &mut EmStats,
+    ) {
+        Engine::backward_steps(&mut self.inner, params, x, mask, bn, steps, stats)
+    }
+
+    fn arena(&self) -> &[f32] {
+        Engine::arena(&self.inner)
+    }
+
+    fn arena_mut(&mut self) -> &mut [f32] {
+        Engine::arena_mut(&mut self.inner)
+    }
+
+    fn grad_buf(&self) -> &[f32] {
+        Engine::grad_buf(&self.inner)
+    }
+
+    fn grad_buf_mut(&mut self) -> &mut [f32] {
+        Engine::grad_buf_mut(&mut self.inner)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn decode_segment(
+        &mut self,
+        params: &ParamArena,
+        bn: usize,
+        mask: &[f32],
+        mode: DecodeMode,
+        salt: u64,
+        steps: &[usize],
+        seed_root: bool,
+        sel_rids: &[usize],
+        sel_src: &[u32],
+        vars: &[usize],
+        vals: &mut [f32],
+        written: &mut [bool],
+    ) {
+        Engine::decode_segment(
+            &mut self.inner,
+            params,
+            bn,
+            mask,
+            mode,
+            salt,
+            steps,
+            seed_root,
+            sel_rids,
+            sel_src,
+            vars,
+            vals,
+            written,
+        )
+    }
+
+    fn export_sel(&self, rids: &[usize], bn: usize) -> Vec<u32> {
+        Engine::export_sel(&self.inner, rids, bn)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the superblock executor
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn run_layers(
+    inner: &mut DenseEngine,
+    lp: &LayerPlan,
+    st: &mut FusedStage,
+    params: &ParamArena,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    sr: Semiring,
+) {
+    let parts = inner.fused_parts();
+    let ep = parts.exec;
+    // the shape checks of the dense fwd_prepare
+    assert!(bn <= ep.batch_cap, "batch exceeds engine capacity");
+    let d_total = ep.plan.graph.num_vars;
+    let od = ep.family.obs_dim();
+    assert_eq!(x.len(), bn * d_total * od);
+    assert_eq!(mask.len(), d_total);
+    for block in &lp.blocks {
+        match block {
+            Superblock::Leaf { steps } => leaf_superblock(
+                ep,
+                params,
+                parts.leaf_const,
+                steps,
+                x,
+                mask,
+                bn,
+                sr,
+                parts.arena,
+            ),
+            Superblock::Einsum { steps, .. } => einsum_superblock(
+                ep,
+                params,
+                parts.arena,
+                parts.scratch,
+                steps,
+                bn,
+                sr,
+                st,
+            ),
+            Superblock::Mix { steps, .. } => mix_superblock(
+                ep,
+                params,
+                parts.arena,
+                parts.scratch,
+                steps,
+                bn,
+                sr,
+                st,
+            ),
+        }
+    }
+}
+
+/// The single leaf-layer emission pass: per region of the run, refresh
+/// its normalizer cache entries (one vectorized sweep per region — see
+/// `exec::refresh_leaf_const_region`) and emit its `[bn, K]` block.
+/// Identical code to the dense per-step Leaf arm, without the per-step
+/// dispatch.
+#[allow(clippy::too_many_arguments)]
+fn leaf_superblock(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    leaf_const: &mut Vec<f32>,
+    steps: &[usize],
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    sr: Semiring,
+    arena: &mut [f32],
+) {
+    for &si in steps {
+        match ep.steps[si] {
+            Step::Leaf { rid, out } => {
+                exec::refresh_leaf_const_region(ep, params, leaf_const, rid);
+                exec::leaf_forward(
+                    ep, params, leaf_const, rid, out, x, mask, bn, sr, arena,
+                );
+            }
+            _ => unreachable!("leaf superblock holds only Leaf steps"),
+        }
+    }
+}
+
+#[inline]
+fn ein_fields(ep: &ExecPlan, si: usize) -> (usize, usize, usize, usize, usize, bool) {
+    match ep.steps[si] {
+        Step::Einsum {
+            left,
+            right,
+            ko,
+            w,
+            dest,
+            to_scratch,
+            ..
+        } => (left, right, ko, w, dest, to_scratch),
+        _ => unreachable!("einsum superblock holds only Einsum steps"),
+    }
+}
+
+/// One einsum superblock, block-major: the outer loop walks batch
+/// blocks of [`ExecPlan::b_blk`] rows, the inner loop walks
+/// budget-bounded *groups* of the run's slots. Per group, all slots'
+/// scaled-children exponent arguments are staged into one contiguous
+/// block and covered by ONE [`kernels::vexp`] sweep, the grouped GEMM
+/// of [`kernels::einsum_group`] contracts every slot (same per-slot
+/// kernels, shared product scratch), and ONE [`kernels::vln`] sweep
+/// finishes the concatenated accumulators. The write-back replays the
+/// dense per-slot add order (`a + a' + acc`). Per (slot, row) every
+/// arithmetic op and its order match `DenseEngine::fwd_einsum` exactly;
+/// the sweeps are element-wise under the tier contract — so the
+/// step-major → block-major reordering changes no bits (rows only read
+/// previous-superblock outputs, and slot destinations are disjoint).
+#[allow(clippy::too_many_arguments)]
+fn einsum_superblock(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &mut [f32],
+    scratch: &mut [f32],
+    steps: &[usize],
+    bn: usize,
+    sr: Semiring,
+    st: &mut FusedStage,
+) {
+    let k = ep.k;
+    let k2 = k * k;
+    let isa = ep.simd;
+    let math = ep.math;
+    let mut b0 = 0usize;
+    while b0 < bn {
+        let bb = ep.b_blk.min(bn - b0);
+        let mut s0 = 0usize;
+        while s0 < steps.len() {
+            // grow the group while the staged block fits the budget
+            let mut s1 = s0;
+            let mut args_len = 0usize;
+            let mut acc_len = 0usize;
+            while s1 < steps.len() {
+                let (_, _, ko, _, _, _) = ein_fields(ep, steps[s1]);
+                let need_args = args_len + 2 * k * bb;
+                let need_acc = acc_len + ko * bb;
+                if s1 > s0 && need_args + need_acc > STAGE_BUDGET {
+                    break;
+                }
+                args_len = need_args;
+                acc_len = need_acc;
+                s1 += 1;
+            }
+            let g = s1 - s0;
+            ensure(&mut st.args, args_len);
+            ensure(&mut st.acc, acc_len);
+            ensure(&mut st.a, g * bb);
+            ensure(&mut st.ap, g * bb);
+            ensure(&mut st.prod, k2 * bb);
+            st.slots.clear();
+            // stage: per-slot row maxima + exponent args, transposed
+            // [K, bb] per operand (the dense prep_block_args layout)
+            let mut args_off = 0usize;
+            let mut acc_off = 0usize;
+            for (s, &si) in steps[s0..s1].iter().enumerate() {
+                let (left, right, ko, w, _, _) = ein_fields(ep, si);
+                st.slots.push(kernels::GroupSlot {
+                    w,
+                    ko,
+                    args_off,
+                    acc_off,
+                });
+                for j in 0..bb {
+                    let b = b0 + j;
+                    let lrow = &arena[left + b * k..left + b * k + k];
+                    let rrow = &arena[right + b * k..right + b * k + k];
+                    let mut a = f32::NEG_INFINITY;
+                    let mut ap = f32::NEG_INFINITY;
+                    for kk in 0..k {
+                        a = a.max(lrow[kk]);
+                        ap = ap.max(rrow[kk]);
+                    }
+                    st.a[s * bb + j] = a;
+                    st.ap[s * bb + j] = ap;
+                    for kk in 0..k {
+                        st.args[args_off + kk * bb + j] = lrow[kk] - a;
+                        st.args[args_off + (k + kk) * bb + j] = rrow[kk] - ap;
+                    }
+                }
+                args_off += 2 * k * bb;
+                acc_off += ko * bb;
+            }
+            // ONE exp sweep over every slot's staged arguments
+            kernels::vexp(isa, math, &mut st.args[..args_len]);
+            // the grouped [Σ Ko, K²] × [K², bb] contraction
+            kernels::einsum_group(
+                isa,
+                sr,
+                &params.data,
+                &st.slots,
+                &st.args[..args_len],
+                k,
+                bb,
+                &mut st.prod,
+                &mut st.acc[..acc_len],
+            );
+            // ONE ln sweep over the concatenated accumulators
+            kernels::vln(isa, math, &mut st.acc[..acc_len]);
+            // write-back: the dense add order, per slot
+            for (s, gs) in st.slots.iter().enumerate() {
+                let (_, _, _, _, dest, to_scratch) = ein_fields(ep, steps[s0 + s]);
+                let ko = gs.ko;
+                let out_buf: &mut [f32] = if to_scratch {
+                    &mut *scratch
+                } else {
+                    &mut *arena
+                };
+                for j in 0..bb {
+                    let b = b0 + j;
+                    let base = st.a[s * bb + j] + st.ap[s * bb + j];
+                    let dest_row = dest + b * ko;
+                    for kout in 0..ko {
+                        out_buf[dest_row + kout] =
+                            base + st.acc[gs.acc_off + kout * bb + j];
+                    }
+                }
+            }
+            s0 = s1;
+        }
+        b0 += bb;
+    }
+}
+
+#[inline]
+fn mix_fields(
+    ep: &ExecPlan,
+    si: usize,
+) -> (usize, usize, usize, usize, usize, usize) {
+    match ep.steps[si] {
+        Step::Mix {
+            out,
+            ko,
+            children,
+            child,
+            child_stride,
+            w,
+            ..
+        } => (out, ko, children, child, child_stride, w),
+        _ => unreachable!("mix superblock holds only Mix steps"),
+    }
+}
+
+/// One mix superblock: budget-bounded chunks of the run's mixing rows
+/// share one fused max/normalize/ln sweep — all running maxima first
+/// ([`kernels::vmax_inplace`], exact under any order), then ONE
+/// [`kernels::vexp`] sweep over every (row, child) staged argument, the
+/// per-row child accumulations in child order ([`kernels::axpy`] /
+/// max-select, the dense order), ONE [`kernels::vln`] sweep over every
+/// row's accumulator, and the max add-back. Per element the operation
+/// sequence is exactly `DenseEngine::fwd_mix`; only the sweep
+/// granularity differs.
+#[allow(clippy::too_many_arguments)]
+fn mix_superblock(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &mut [f32],
+    scratch: &mut [f32],
+    steps: &[usize],
+    bn: usize,
+    sr: Semiring,
+    st: &mut FusedStage,
+) {
+    let isa = ep.simd;
+    let math = ep.math;
+    let mut s0 = 0usize;
+    while s0 < steps.len() {
+        // chunk: each row costs (m + dst) + children·n staged floats
+        let mut s1 = s0;
+        let mut m_len = 0usize;
+        let mut e_len = 0usize;
+        while s1 < steps.len() {
+            let (_, ko, children, ..) = mix_fields(ep, steps[s1]);
+            let n = bn * ko;
+            let need_m = m_len + n;
+            let need_e = e_len + children * n;
+            if s1 > s0 && 2 * need_m + need_e > STAGE_BUDGET {
+                break;
+            }
+            m_len = need_m;
+            e_len = need_e;
+            s1 += 1;
+        }
+        ensure(&mut st.m, m_len);
+        ensure(&mut st.dst, m_len);
+        ensure(&mut st.e, e_len);
+        // phase 1: running maxima per row (exact — order-free)
+        let mut mo = 0usize;
+        for &si in &steps[s0..s1] {
+            let (_, ko, children, child, stride, _) = mix_fields(ep, si);
+            let n = bn * ko;
+            let m = &mut st.m[mo..mo + n];
+            m.fill(f32::NEG_INFINITY);
+            for c in 0..children {
+                let src = &scratch[child + c * stride..child + c * stride + n];
+                kernels::vmax_inplace(isa, m, src);
+            }
+            mo += n;
+        }
+        // phase 2: stage every (row, child) exp argument, ONE sweep
+        let mut mo = 0usize;
+        let mut eo = 0usize;
+        for &si in &steps[s0..s1] {
+            let (_, ko, children, child, stride, _) = mix_fields(ep, si);
+            let n = bn * ko;
+            for c in 0..children {
+                let src = &scratch[child + c * stride..child + c * stride + n];
+                let e = &mut st.e[eo..eo + n];
+                for ((ev, &sv), &mv) in
+                    e.iter_mut().zip(src).zip(st.m[mo..mo + n].iter())
+                {
+                    *ev = sv - mv;
+                }
+                eo += n;
+            }
+            mo += n;
+        }
+        kernels::vexp(isa, math, &mut st.e[..e_len]);
+        // phase 3: per-row child accumulation, dense child order
+        let mut eo = 0usize;
+        let mut doff = 0usize;
+        for &si in &steps[s0..s1] {
+            let (_, ko, children, _, _, w) = mix_fields(ep, si);
+            let n = bn * ko;
+            let wrow = &params.data[w..w + children];
+            let dst = &mut st.dst[doff..doff + n];
+            dst.fill(match sr {
+                Semiring::SumProduct => 0.0,
+                Semiring::MaxProduct => f32::NEG_INFINITY,
+            });
+            for (c, &wc) in wrow.iter().enumerate() {
+                let e = &st.e[eo + c * n..eo + (c + 1) * n];
+                match sr {
+                    Semiring::SumProduct => kernels::axpy(isa, dst, e, wc),
+                    Semiring::MaxProduct => {
+                        for (d, &ev) in dst.iter_mut().zip(e.iter()) {
+                            *d = d.max(wc * ev);
+                        }
+                    }
+                }
+            }
+            eo += children * n;
+            doff += n;
+        }
+        // phase 4: ONE ln sweep over every row's accumulator
+        kernels::vln(isa, math, &mut st.dst[..m_len]);
+        // phase 5: add the maxima back and write the arena rows
+        let mut mo = 0usize;
+        let mut doff = 0usize;
+        for &si in &steps[s0..s1] {
+            let (out, ko, ..) = mix_fields(ep, si);
+            let n = bn * ko;
+            let rows = &mut arena[out..out + n];
+            for ((av, &dv), &mv) in rows
+                .iter_mut()
+                .zip(st.dst[doff..doff + n].iter())
+                .zip(st.m[mo..mo + n].iter())
+            {
+                *av = dv + mv;
+            }
+            mo += n;
+            doff += n;
+        }
+        s0 = s1;
+    }
+}

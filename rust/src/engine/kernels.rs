@@ -240,7 +240,10 @@ impl MathTier {
 
 #[cfg(target_arch = "x86_64")]
 fn best_isa() -> Isa {
-    if is_x86_feature_detected!("avx2") {
+    // The Fast-tier vexp/vln use _mm256_fmadd_ps, so Isa::Avx2 requires
+    // the FMA CPUID bit too (every AVX2 part ships it, but the bits are
+    // architecturally separate).
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
         Isa::Avx2
     } else {
         Isa::Scalar
@@ -347,9 +350,15 @@ pub fn tune_block_rows(k: usize, batch_cap: usize, isa: Isa) -> usize {
 
 // Fast-math polynomial coefficients — the exact constants of
 // `util::fastmath` (`2^f` Taylor tail for exp, atanh-series for ln).
-// The SIMD paths below replay the same multiply/add sequence on these
+// The SIMD paths below replay the same operation sequence on these
 // constants, which is what makes all ISA paths of the Fast tier
-// bit-identical.
+// bit-identical. The Horner chains run as fused multiply-adds: IEEE 754
+// FMA is correctly rounded, so `f32::mul_add` (scalar/tail),
+// `_mm256_fmadd_ps` (AVX2) and `vfmaq_f32` (NEON) all produce the same
+// bits — the cross-ISA identity survives fusion. Only the Fast tier
+// fuses; Exact-contract kernels (dot4 & friends) stay unfused because
+// their contract is bitwise agreement with the historical mul+add
+// scalar code.
 const EXP_LO: f32 = -87.0;
 const EXP_HI: f32 = 88.0;
 const EXP_C1: f32 = 0.693_147_2;
@@ -379,8 +388,14 @@ fn fast_exp_lane(x: f32) -> f32 {
     let t = x.min(EXP_HI) * std::f32::consts::LOG2_E;
     let kf = t.floor();
     let f = t - kf;
-    let p = 1.0
-        + f * (EXP_C1 + f * (EXP_C2 + f * (EXP_C3 + f * (EXP_C4 + f * (EXP_C5 + f * EXP_C6)))));
+    // FMA Horner chain — one rounding per step, same bits as the fused
+    // SIMD paths (see the module comment above the constants).
+    let mut p = f.mul_add(EXP_C6, EXP_C5);
+    p = f.mul_add(p, EXP_C4);
+    p = f.mul_add(p, EXP_C3);
+    p = f.mul_add(p, EXP_C2);
+    p = f.mul_add(p, EXP_C1);
+    p = f.mul_add(p, 1.0);
     let bits = (((kf as i32).wrapping_add(127)) << 23) as u32;
     f32::from_bits(bits) * p
 }
@@ -403,9 +418,13 @@ fn fast_ln_lane(x: f32) -> f32 {
     let m = f32::from_bits((bits & 0x007F_FFFF) | 0x3F80_0000);
     let u = (m - 1.0) / (m + 1.0);
     let u2 = u * u;
-    let poly = 1.0 + u2 * (LN_C1 + u2 * (LN_C2 + u2 * (LN_C3 + u2 * (LN_C4 + u2 * LN_C5))));
-    let lnm = 2.0 * u * poly;
-    e * std::f32::consts::LN_2 + lnm
+    let mut poly = u2.mul_add(LN_C5, LN_C4);
+    poly = u2.mul_add(poly, LN_C3);
+    poly = u2.mul_add(poly, LN_C2);
+    poly = u2.mul_add(poly, LN_C1);
+    poly = u2.mul_add(poly, 1.0);
+    let lnm = (2.0 * u) * poly;
+    e.mul_add(std::f32::consts::LN_2, lnm)
 }
 
 fn vmla_scalar(acc: &mut [f32], a: &[f32], b: &[f32]) {
@@ -886,8 +905,10 @@ mod avx2 {
     }
 
     /// 8-wide Fast-tier exp: the exact operation sequence of
-    /// `fast_exp_lane`, which handles the `bb mod 8` tail.
-    #[target_feature(enable = "avx2")]
+    /// `fast_exp_lane`, which handles the `bb mod 8` tail. The Horner
+    /// chain is fused (`_mm256_fmadd_ps`); `Isa::Avx2` detection
+    /// requires the FMA CPUID bit.
+    #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn vexp(xs: &mut [f32]) {
         let n = xs.len();
         let p = xs.as_mut_ptr();
@@ -913,12 +934,12 @@ mod avx2 {
             let t = _mm256_mul_ps(_mm256_min_ps(x, hi), log2e);
             let kf = _mm256_floor_ps(t);
             let f = _mm256_sub_ps(t, kf);
-            let mut q = _mm256_add_ps(c5, _mm256_mul_ps(f, c6));
-            q = _mm256_add_ps(c4, _mm256_mul_ps(f, q));
-            q = _mm256_add_ps(c3, _mm256_mul_ps(f, q));
-            q = _mm256_add_ps(c2, _mm256_mul_ps(f, q));
-            q = _mm256_add_ps(c1, _mm256_mul_ps(f, q));
-            q = _mm256_add_ps(one, _mm256_mul_ps(f, q));
+            let mut q = _mm256_fmadd_ps(f, c6, c5);
+            q = _mm256_fmadd_ps(f, q, c4);
+            q = _mm256_fmadd_ps(f, q, c3);
+            q = _mm256_fmadd_ps(f, q, c2);
+            q = _mm256_fmadd_ps(f, q, c1);
+            q = _mm256_fmadd_ps(f, q, one);
             let ki = _mm256_cvttps_epi32(kf);
             let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(ki, bias)));
             let mut r = _mm256_mul_ps(scale, q);
@@ -936,8 +957,9 @@ mod avx2 {
     }
 
     /// 8-wide Fast-tier ln: the exact operation sequence of
-    /// `fast_ln_lane`, which handles the `bb mod 8` tail.
-    #[target_feature(enable = "avx2")]
+    /// `fast_ln_lane`, which handles the `bb mod 8` tail. Fused Horner
+    /// chain, like [`vexp`].
+    #[target_feature(enable = "avx2,fma")]
     pub(super) unsafe fn vln(xs: &mut [f32]) {
         let n = xs.len();
         let p = xs.as_mut_ptr();
@@ -972,13 +994,13 @@ mod avx2 {
             ));
             let u = _mm256_div_ps(_mm256_sub_ps(m, one), _mm256_add_ps(m, one));
             let u2 = _mm256_mul_ps(u, u);
-            let mut q = _mm256_add_ps(c4, _mm256_mul_ps(u2, c5));
-            q = _mm256_add_ps(c3, _mm256_mul_ps(u2, q));
-            q = _mm256_add_ps(c2, _mm256_mul_ps(u2, q));
-            q = _mm256_add_ps(c1, _mm256_mul_ps(u2, q));
-            q = _mm256_add_ps(one, _mm256_mul_ps(u2, q));
+            let mut q = _mm256_fmadd_ps(u2, c5, c4);
+            q = _mm256_fmadd_ps(u2, q, c3);
+            q = _mm256_fmadd_ps(u2, q, c2);
+            q = _mm256_fmadd_ps(u2, q, c1);
+            q = _mm256_fmadd_ps(u2, q, one);
             let lnm = _mm256_mul_ps(_mm256_mul_ps(two, u), q);
-            let mut r = _mm256_add_ps(_mm256_mul_ps(e, ln2), lnm);
+            let mut r = _mm256_fmadd_ps(e, ln2, lnm);
             // ±0 → -inf, then negative-or-NaN → canonical NaN (NGE is
             // false for -0, so the -inf from the zero blend survives)
             r = _mm256_blendv_ps(r, neginf, _mm256_cmp_ps::<_CMP_EQ_OQ>(x, zero));
@@ -1004,8 +1026,12 @@ mod neon {
 
     // SAFETY contract: NEON is mandatory on AArch64 (Isa::Neon is only
     // constructed there); slice lengths were checked by the dispatching
-    // wrapper. Multiplies and adds are kept as separate vmulq/vaddq ops —
-    // never vfmaq — to preserve the no-FMA bit-identity contract.
+    // wrapper. In the Exact-contract kernels (dot4 & friends) multiplies
+    // and adds are kept as separate vmulq/vaddq ops — never vfmaq — to
+    // preserve the no-FMA bit-identity contract with the scalar
+    // reference. The Fast-tier vexp/vln below are the one exception:
+    // their Horner chains use vfmaq_f32, matching the fused scalar lane
+    // and AVX2 paths bit-for-bit (IEEE FMA is correctly rounded).
 
     /// `x > m ? x : m` — `f32::max(m, x)` semantics on NaN.
     #[inline]
@@ -1261,7 +1287,8 @@ mod neon {
     }
 
     /// 4-wide Fast-tier exp: the exact operation sequence of
-    /// `fast_exp_lane`, which handles the `bb mod 4` tail.
+    /// `fast_exp_lane`, which handles the `bb mod 4` tail. Fused Horner
+    /// chain (`vfmaq_f32`), bit-identical to the scalar/AVX2 FMA paths.
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn vexp(xs: &mut [f32]) {
         let n = xs.len();
@@ -1289,12 +1316,12 @@ mod neon {
             let t = vmulq_f32(vminq_f32(x, hi), log2e);
             let kf = vrndmq_f32(t);
             let f = vsubq_f32(t, kf);
-            let mut q = vaddq_f32(c5, vmulq_f32(f, c6));
-            q = vaddq_f32(c4, vmulq_f32(f, q));
-            q = vaddq_f32(c3, vmulq_f32(f, q));
-            q = vaddq_f32(c2, vmulq_f32(f, q));
-            q = vaddq_f32(c1, vmulq_f32(f, q));
-            q = vaddq_f32(one, vmulq_f32(f, q));
+            let mut q = vfmaq_f32(c5, f, c6);
+            q = vfmaq_f32(c4, f, q);
+            q = vfmaq_f32(c3, f, q);
+            q = vfmaq_f32(c2, f, q);
+            q = vfmaq_f32(c1, f, q);
+            q = vfmaq_f32(one, f, q);
             let ki = vcvtq_s32_f32(kf);
             let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(ki, bias)));
             let mut r = vmulq_f32(scale, q);
@@ -1312,7 +1339,8 @@ mod neon {
     }
 
     /// 4-wide Fast-tier ln: the exact operation sequence of
-    /// `fast_ln_lane`, which handles the `bb mod 4` tail.
+    /// `fast_ln_lane`, which handles the `bb mod 4` tail. Fused Horner
+    /// chain, like [`vexp`].
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn vln(xs: &mut [f32]) {
         let n = xs.len();
@@ -1345,13 +1373,13 @@ mod neon {
             let m = vreinterpretq_f32_u32(vorrq_u32(vandq_u32(bits, mant_mask), mant_one));
             let u = vdivq_f32(vsubq_f32(m, one), vaddq_f32(m, one));
             let u2 = vmulq_f32(u, u);
-            let mut q = vaddq_f32(c4, vmulq_f32(u2, c5));
-            q = vaddq_f32(c3, vmulq_f32(u2, q));
-            q = vaddq_f32(c2, vmulq_f32(u2, q));
-            q = vaddq_f32(c1, vmulq_f32(u2, q));
-            q = vaddq_f32(one, vmulq_f32(u2, q));
+            let mut q = vfmaq_f32(c4, u2, c5);
+            q = vfmaq_f32(c3, u2, q);
+            q = vfmaq_f32(c2, u2, q);
+            q = vfmaq_f32(c1, u2, q);
+            q = vfmaq_f32(one, u2, q);
             let lnm = vmulq_f32(vmulq_f32(two, u), q);
-            let mut r = vaddq_f32(vmulq_f32(e, ln2), lnm);
+            let mut r = vfmaq_f32(lnm, e, ln2);
             // ±0 → -inf, then negative-or-NaN → canonical NaN
             r = vbslq_f32(vceqq_f32(x, zero), neginf, r);
             let bad = vorrq_u32(vcltq_f32(x, zero), vmvnq_u32(vceqq_f32(x, x)));
@@ -1542,6 +1570,61 @@ pub fn einsum_block(
         Isa::Avx2 => unsafe { avx2::einsum_block(sr, w, prod_t, k2, ko, bb, acc) },
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe { neon::einsum_block(sr, w, prod_t, k2, ko, bb, acc) },
+    }
+}
+
+/// One slot of a grouped einsum superblock contraction: where its
+/// weights live in the parameter arena, how many output sums it has,
+/// and where its staged inputs / accumulator rows sit inside the
+/// superblock's shared staging buffers (see [`einsum_group`]).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupSlot {
+    /// Weight-slot offset into the parameter data (`Ko · K²` floats).
+    pub w: usize,
+    /// Number of output sum nodes (`Ko`) of this slot.
+    pub ko: usize,
+    /// Offset of this slot's staged `[2K, bb]` exp'd child block inside
+    /// the superblock's argument buffer (left rows then right rows).
+    pub args_off: usize,
+    /// Offset of this slot's `[Ko, bb]` rows inside the superblock's
+    /// accumulator buffer.
+    pub acc_off: usize,
+}
+
+/// Grouped-GEMM einsum superblock: the `[Σ Ko, K²] × [K², bb]` batched
+/// contraction of one layer-fused Einsum superblock (`LayerPlan`), both
+/// semirings. One call replaces `slots.len()` [`outer_block`] +
+/// [`einsum_block`] pairs; each slot still runs the *same* kernels over
+/// the same operands in the same order (shared `prod_t` scratch, per-slot
+/// `acc` rows), so every output bit matches the per-step path — grouping
+/// only amortizes dispatch and keeps the staged block cache-resident.
+#[allow(clippy::too_many_arguments)]
+pub fn einsum_group(
+    isa: Isa,
+    sr: Semiring,
+    params: &[f32],
+    slots: &[GroupSlot],
+    args: &[f32],
+    k: usize,
+    bb: usize,
+    prod_t: &mut [f32],
+    acc: &mut [f32],
+) {
+    let k2 = k * k;
+    for s in slots {
+        let en = &args[s.args_off..s.args_off + k * bb];
+        let enp = &args[s.args_off + k * bb..s.args_off + 2 * k * bb];
+        outer_block(isa, en, enp, k, bb, prod_t);
+        einsum_block(
+            isa,
+            sr,
+            &params[s.w..s.w + s.ko * k2],
+            prod_t,
+            k2,
+            s.ko,
+            bb,
+            &mut acc[s.acc_off..s.acc_off + s.ko * bb],
+        );
     }
 }
 

@@ -36,6 +36,7 @@
 
 pub mod dense;
 pub mod exec;
+pub mod fused;
 pub mod kernels;
 pub mod query;
 pub mod registry;

@@ -15,6 +15,7 @@ use crate::util::error::Result;
 use crate::{anyhow, bail};
 
 use super::dense::DenseEngine;
+use super::fused::FusedEngine;
 use super::sparse::SparseEngine;
 use super::Engine;
 
@@ -55,9 +56,11 @@ impl EngineRegistry {
         }
     }
 
-    /// The two in-tree backends: `dense` (the paper's fused
-    /// log-einsum-exp layout) and `sparse` (the LibSPN/SPFlow-style
-    /// baseline of Section 3.2).
+    /// The three in-tree backends: `dense` (the paper's fused
+    /// log-einsum-exp layout), `sparse` (the LibSPN/SPFlow-style
+    /// baseline of Section 3.2) and `fused` (layer-fused superblock
+    /// execution of the dense layout — bit-identical, fewer kernel
+    /// dispatches).
     pub fn builtin() -> Self {
         let mut r = Self::empty();
         r.register(EngineEntry {
@@ -70,6 +73,12 @@ impl EngineRegistry {
             name: "sparse",
             description: "node-by-node LibSPN/SPFlow-style baseline",
             factory: boxed_build::<SparseEngine>,
+        })
+        .expect("fresh registry");
+        r.register(EngineEntry {
+            name: "fused",
+            description: "layer-fused superblock execution of the dense layout",
+            factory: boxed_build::<FusedEngine>,
         })
         .expect("fresh registry");
         r
@@ -147,7 +156,7 @@ mod tests {
     #[test]
     fn builtin_backends_resolve_and_agree() {
         let reg = EngineRegistry::builtin();
-        assert_eq!(reg.names(), vec!["dense", "sparse"]);
+        assert_eq!(reg.names(), vec!["dense", "sparse", "fused"]);
         assert!(reg.get("pjrt").is_none());
         assert!(reg.factory("nope").is_err());
 
@@ -156,7 +165,7 @@ mod tests {
         let x = vec![1.0f32, 0.0, 1.0, 1.0, 0.0, 0.0];
         let mask = vec![1.0f32; 6];
         let mut got = Vec::new();
-        for name in ["dense", "sparse"] {
+        for name in ["dense", "sparse", "fused"] {
             let mut e = reg
                 .build(name, plan.clone(), LeafFamily::Bernoulli, 4)
                 .unwrap();
@@ -167,6 +176,11 @@ mod tests {
         assert!(
             (got[0] - got[1]).abs() < 1e-4,
             "registry-built backends disagree: {got:?}"
+        );
+        assert_eq!(
+            got[0].to_bits(),
+            got[2].to_bits(),
+            "fused must be bit-identical to dense: {got:?}"
         );
     }
 

@@ -11,7 +11,7 @@
 //! observation channels per variable (the paper's RGB-factorized leaves),
 //! Categorical, and Binomial.
 
-use crate::engine::kernels::MathTier;
+use crate::engine::kernels::{self, Isa, MathTier};
 use crate::util::rng::Rng;
 
 /// Supported exponential families.
@@ -97,6 +97,98 @@ impl LeafFamily {
             }
             LeafFamily::Binomial { trials } => {
                 *trials as f32 * softplus_tier(theta[0], math)
+            }
+        }
+    }
+
+    /// Batched [`LeafFamily::log_norm_const_tier`] over `n` components
+    /// whose natural parameters are packed contiguously in `thetas`
+    /// (`[n, stat_dim]` row-major): every transcendental rides one
+    /// [`kernels::vexp`] / [`kernels::vln`] sweep over the whole
+    /// component set instead of a scalar lane per component. Per
+    /// component the operation sequence — including the softplus
+    /// large-argument guard, the Categorical max-shift/fold order, and
+    /// the Gaussian per-channel accumulation order — is exactly that of
+    /// the scalar path, and the sweeps are element-wise under the tier's
+    /// cross-ISA identity contract, so the results are bit-identical to
+    /// calling `log_norm_const_tier` per component in BOTH tiers.
+    /// `stage` is caller-owned scratch, resized as needed.
+    pub fn log_norm_const_batch(
+        &self,
+        thetas: &[f32],
+        out: &mut [f32],
+        isa: Isa,
+        math: MathTier,
+        stage: &mut Vec<f32>,
+    ) {
+        let n = out.len();
+        let s_dim = self.stat_dim();
+        assert_eq!(thetas.len(), n * s_dim, "log_norm_const_batch: shape");
+        if n == 0 {
+            return;
+        }
+        match self {
+            LeafFamily::Bernoulli => {
+                softplus_batch(thetas, out, isa, math, stage);
+            }
+            LeafFamily::Binomial { trials } => {
+                softplus_batch(thetas, out, isa, math, stage);
+                let t = *trials as f32;
+                for v in out.iter_mut() {
+                    *v = t * *v;
+                }
+            }
+            LeafFamily::Gaussian { channels } => {
+                let ch = *channels;
+                // one vln sweep over every channel's -2*t2, then the
+                // scalar combine in the per-channel order of the scalar
+                // path
+                stage.resize(n * ch, 0.0);
+                for i in 0..n {
+                    let th = &thetas[i * s_dim..(i + 1) * s_dim];
+                    for j in 0..ch {
+                        stage[i * ch + j] = -2.0 * th[ch + j];
+                    }
+                }
+                kernels::vln(isa, math, &mut stage[..n * ch]);
+                let half_ln_2pi = 0.5 * (2.0 * std::f32::consts::PI).ln();
+                for (i, o) in out.iter_mut().enumerate() {
+                    let th = &thetas[i * s_dim..(i + 1) * s_dim];
+                    let mut c = 0.0f32;
+                    for j in 0..ch {
+                        let (t1, t2) = (th[j], th[ch + j]);
+                        c += -t1 * t1 / (4.0 * t2) - 0.5 * stage[i * ch + j]
+                            + half_ln_2pi;
+                    }
+                    *o = c;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                let cs = *cats;
+                // stage layout: [n, cats] exp args, then [n] z values
+                stage.resize(n * cs + n, 0.0);
+                for (i, o) in out.iter_mut().enumerate() {
+                    let th = &thetas[i * s_dim..(i + 1) * s_dim];
+                    let m = th.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    *o = m;
+                    for (j, &t) in th.iter().enumerate() {
+                        stage[i * cs + j] = t - m;
+                    }
+                }
+                kernels::vexp(isa, math, &mut stage[..n * cs]);
+                let (es, zs) = stage.split_at_mut(n * cs);
+                for (i, z) in zs.iter_mut().enumerate() {
+                    // sequential left-to-right sum, the scalar fold order
+                    let mut acc = 0.0f32;
+                    for &e in &es[i * cs..(i + 1) * cs] {
+                        acc += e;
+                    }
+                    *z = acc;
+                }
+                kernels::vln(isa, math, zs);
+                for (o, &lz) in out.iter_mut().zip(zs.iter()) {
+                    *o += lz;
+                }
             }
         }
     }
@@ -520,6 +612,42 @@ fn softplus(t: f32) -> f32 {
         t
     } else {
         t.exp().ln_1p()
+    }
+}
+
+/// Batched [`softplus_tier`]: one [`kernels::vexp`] sweep over every
+/// argument, then the tier's own finishing op — Exact keeps the scalar
+/// `ln_1p` per lane (bit-identical to [`softplus`]), Fast shifts by one
+/// and runs a [`kernels::vln`] sweep (bit-identical to the Fast scalar
+/// formulation). The `t > 20` large-argument guard is applied per lane
+/// afterwards, selecting exactly the value the scalar guard returns.
+fn softplus_batch(
+    ts: &[f32],
+    out: &mut [f32],
+    isa: Isa,
+    math: MathTier,
+    stage: &mut Vec<f32>,
+) {
+    let n = ts.len();
+    debug_assert_eq!(out.len(), n);
+    stage.resize(n, 0.0);
+    stage[..n].copy_from_slice(ts);
+    kernels::vexp(isa, math, &mut stage[..n]);
+    match math {
+        MathTier::Exact => {
+            for ((o, &e), &t) in out.iter_mut().zip(stage.iter()).zip(ts) {
+                *o = if t > 20.0 { t } else { e.ln_1p() };
+            }
+        }
+        MathTier::Fast => {
+            for e in stage[..n].iter_mut() {
+                *e += 1.0;
+            }
+            kernels::vln(isa, math, &mut stage[..n]);
+            for ((o, &l), &t) in out.iter_mut().zip(stage.iter()).zip(ts) {
+                *o = if t > 20.0 { t } else { l };
+            }
+        }
     }
 }
 

@@ -107,7 +107,8 @@ pub mod util;
 pub use coordinator::server::{QueryAnswer, QueryError, QueryOk, ServerConfig};
 pub use coordinator::transport::{ShardError, ShardTransport, WorkerConfig};
 pub use engine::dense::DenseEngine;
-pub use engine::exec::{PlanPartition, Segment, Semiring};
+pub use engine::exec::{LayerPlan, PlanPartition, Segment, Semiring, Superblock};
+pub use engine::fused::FusedEngine;
 pub use engine::query::{Query, QueryOutput, QueryPass, QueryPlan};
 pub use engine::registry::{boxed_build, EngineEntry, EngineFactory, EngineRegistry};
 pub use engine::sparse::SparseEngine;

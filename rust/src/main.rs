@@ -24,8 +24,8 @@ use einet::util::cli::{usage, Args, OptSpec};
 use einet::util::rng::Rng;
 use einet::util::stats::welch_t_test;
 use einet::{
-    DecodeMode, DenseEngine, EinetParams, EngineRegistry, LayeredPlan, LeafFamily,
-    Query, QueryOutput, SparseEngine,
+    DecodeMode, DenseEngine, EinetParams, EngineRegistry, FusedEngine, LayeredPlan,
+    LeafFamily, Query, QueryOutput, SparseEngine,
 };
 
 fn main() {
@@ -87,7 +87,7 @@ commands:
   artifacts   list compiled AOT artifacts
   engines     list the runtime engine registry (--engine names)
 
-global options: --engine dense|sparse selects the backend by registry
+global options: --engine dense|sparse|fused selects the backend by registry
 name; --shards N scope-partitions the model across N segment workers
 (model-parallel; 0 = data-parallel / single engine); --fastmath opts
 into the ULP-bounded vectorized exp/ln tier (same as
@@ -153,7 +153,7 @@ fn setup(
     Ok((ds, plan, LeafFamily::Bernoulli))
 }
 
-/// Data-parallel training is monomorphized per engine; dispatch the two
+/// Data-parallel training is monomorphized per engine; dispatch the
 /// in-tree backends by registry name (other registered backends train
 /// through the factory-based `--shards` path).
 #[allow(clippy::too_many_arguments)]
@@ -173,8 +173,11 @@ fn data_parallel_train(
         "sparse" => {
             train_parallel::<SparseEngine>(plan, family, params, data, n, cfg);
         }
+        "fused" => {
+            train_parallel::<FusedEngine>(plan, family, params, data, n, cfg);
+        }
         other => bail!(
-            "data-parallel training supports dense|sparse; \
+            "data-parallel training supports dense|sparse|fused; \
              use --shards N to train registry engine '{other}'"
         ),
     }
@@ -209,10 +212,30 @@ fn eval_named(
 }
 
 fn cmd_engines(argv: &[String]) -> Result<()> {
-    let _ = argv;
+    let spec = [OptSpec {
+        name: "engine",
+        help: "validate a backend name against the registry",
+        default: None,
+        is_flag: false,
+    }];
+    let a = Args::parse(argv, &spec)?;
     let reg = EngineRegistry::builtin();
+    // an unknown --engine fails with the registered names listed, the
+    // same error the serve path and the shard-worker handshake report
+    let selected = match a.get("engine", &spec) {
+        Some(name) => {
+            reg.factory(&name)?;
+            Some(name)
+        }
+        None => None,
+    };
     for e in reg.entries() {
-        println!("{:<8} {}", e.name, e.description);
+        let mark = if selected.as_deref() == Some(e.name) {
+            "*"
+        } else {
+            " "
+        };
+        println!("{mark} {:<8} {}", e.name, e.description);
     }
     Ok(())
 }

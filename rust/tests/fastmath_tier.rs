@@ -52,7 +52,9 @@ fn fast_vexp_within_ulp_bound_over_engine_range() {
     // dense argument grid over the full non-flushed domain, both ISA
     // paths, buffer sizes crossing the lane tails
     for &isa in &[Isa::Scalar, Isa::best()] {
-        for n in [5usize, 8, 31] {
+        // buffer sizes on, below, and across the 4/8-lane FMA kernels'
+        // boundaries, so every tail/main-loop split is swept
+        for n in [5usize, 7, 8, 9, 16, 31, 33] {
             let mut worst = 0u64;
             // 7001 points spanning [-87, 88]
             let mut i = 0usize;
@@ -85,7 +87,7 @@ fn fast_vln_within_ulp_bound_over_engine_range() {
     // but pin the whole normal range
     for &isa in &[Isa::Scalar, Isa::best()] {
         let mut rng = Rng::new(4);
-        for n in [5usize, 8, 31] {
+        for n in [5usize, 7, 8, 9, 16, 31, 33] {
             for trial in 0..400 {
                 let xs: Vec<f32> = (0..n)
                     .map(|_| {
@@ -350,4 +352,107 @@ fn fast_tier_is_recorded_at_lowering_not_at_call_time() {
         lp_after, lp_during,
         "tier must be pinned in the plan, not re-read per forward"
     );
+}
+
+#[test]
+fn fma_lanes_match_scalar_mul_add_bitwise() {
+    // the Fast tier's polynomials now evaluate through FMA — scalar
+    // `f32::mul_add` lanes and the SIMD fused-multiply-add lanes are
+    // both correctly rounded, so the cross-ISA identity contract
+    // survives fusion. Pin it over adversarial inputs: lane-boundary
+    // crossing lengths, subnormal-adjacent magnitudes, and the exact
+    // powers of two the range reductions pivot on.
+    let isa = Isa::best();
+    let mut special: Vec<f32> = vec![
+        0.0, -0.0, 1.0, -1.0, 0.5, 2.0, std::f32::consts::LN_2,
+        -std::f32::consts::LN_2, 87.0, -87.0, 1e-30, 1e30,
+    ];
+    let mut rng = Rng::new(91);
+    for _ in 0..83 {
+        special.push(rng.uniform_in(-87.0, 87.0) as f32);
+    }
+    for hi in 1..special.len() {
+        let mut a = special[..hi].to_vec();
+        let mut b = a.clone();
+        kernels::vexp(Isa::Scalar, MathTier::Fast, &mut a);
+        kernels::vexp(isa, MathTier::Fast, &mut b);
+        for (i, (p, q)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "FMA vexp len={hi} [{i}] x={}",
+                special[i]
+            );
+        }
+        let mut c: Vec<f32> = special[..hi].iter().map(|x| x.abs() + 0.1).collect();
+        let mut d = c.clone();
+        kernels::vln(Isa::Scalar, MathTier::Fast, &mut c);
+        kernels::vln(isa, MathTier::Fast, &mut d);
+        for (i, (p, q)) in c.iter().zip(&d).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "FMA vln len={hi} [{i}]");
+        }
+    }
+}
+
+#[test]
+fn batched_leaf_normalizer_is_bit_identical_to_scalar_path_in_both_tiers() {
+    // the leaf-layer emission pass refreshes a whole region's
+    // log-normalizers through ONE vectorized sweep
+    // (`LeafFamily::log_norm_const_batch`); per component it must
+    // reproduce the scalar `log_norm_const_tier` value bit-for-bit in
+    // BOTH tiers — the dense and fused engines rely on this for their
+    // own bit-identity contract.
+    let families = [
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Gaussian { channels: 3 },
+        LeafFamily::Categorical { cats: 5 },
+        LeafFamily::Binomial { trials: 7 },
+    ];
+    let mut rng = Rng::new(77);
+    for family in families {
+        let s_dim = family.stat_dim();
+        for n in [1usize, 3, 8, 17] {
+            let mut thetas = vec![0.0f32; n * s_dim];
+            for i in 0..n {
+                let th = &mut thetas[i * s_dim..(i + 1) * s_dim];
+                match family {
+                    LeafFamily::Gaussian { channels } => {
+                        for j in 0..channels {
+                            th[j] = rng.uniform_in(-2.0, 2.0) as f32;
+                            th[channels + j] = rng.uniform_in(-5.0, -0.1) as f32;
+                        }
+                    }
+                    _ => {
+                        for t in th.iter_mut() {
+                            *t = rng.uniform_in(-4.0, 4.0) as f32;
+                        }
+                    }
+                }
+            }
+            // occasionally hit the softplus large-argument guard
+            if s_dim == 1 && n > 2 {
+                thetas[0] = 25.0;
+            }
+            for math in [MathTier::Exact, MathTier::Fast] {
+                for isa in [Isa::Scalar, Isa::best()] {
+                    let mut out = vec![0.0f32; n];
+                    let mut stage = Vec::new();
+                    family.log_norm_const_batch(&thetas, &mut out, isa, math, &mut stage);
+                    for i in 0..n {
+                        let th = &thetas[i * s_dim..(i + 1) * s_dim];
+                        let want = family.log_norm_const_tier(th, math);
+                        assert_eq!(
+                            out[i].to_bits(),
+                            want.to_bits(),
+                            "family={family:?} {math:?} isa={} n={n} comp={i}: \
+                             batched {} vs scalar {want}",
+                            isa.name(),
+                            out[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

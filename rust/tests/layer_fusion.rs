@@ -1,0 +1,366 @@
+//! Layer-fused engine contract: `fused` is the dense layout executed
+//! superblock-at-a-time, and **bit-identity with `dense` is the hard
+//! contract** — forward log-likelihoods under both semirings, EM
+//! statistics, and decoding must match bit-for-bit across structures
+//! (RAT replica forests and Poon–Domingos grids), every leaf family,
+//! and shard counts (each sharded worker fuses its own segment).
+//!
+//! Also pinned here: the structural invariants of the superblock
+//! lowering (every step fused exactly once, execution order preserved,
+//! runs maximal and kind/level-uniform) and the unknown-engine error
+//! surfaces (registry lookups and the shard-worker TCP handshake list
+//! the registered engine names).
+
+use einet::coordinator::ShardedPool;
+use einet::em::{m_step, EmConfig};
+use einet::engine::exec::{ExecPlan, Step};
+use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DecodeMode, DenseEngine, EinetParams, EmStats, Engine,
+    EngineRegistry, FusedEngine, LayerPlan, LayeredPlan, LeafFamily, Semiring,
+    Superblock,
+};
+
+/// Draw a batch of valid observations for the family.
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+fn all_families() -> Vec<LeafFamily> {
+    vec![
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Gaussian { channels: 3 },
+        LeafFamily::Categorical { cats: 4 },
+        LeafFamily::Binomial { trials: 6 },
+    ]
+}
+
+fn test_plans() -> Vec<(LayeredPlan, &'static str)> {
+    vec![
+        (
+            LayeredPlan::compile(random_binary_trees(10, 3, 3, 7), 4),
+            "rat",
+        ),
+        (
+            LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3),
+            "pd",
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// structural invariants of the superblock lowering
+// ---------------------------------------------------------------------------
+
+fn step_kind_level(ep: &ExecPlan, si: usize) -> (u8, usize) {
+    match ep.steps[si] {
+        Step::Leaf { .. } => (0, 0),
+        Step::Einsum { level, .. } => (1, level),
+        Step::Mix { level, .. } => (2, level),
+    }
+}
+
+fn assert_valid_fusion(ep: &ExecPlan, lp: &LayerPlan, steps: &[usize], ctx: &str) {
+    // every step fused exactly once, in its original execution order
+    let flat: Vec<usize> = lp.blocks.iter().flat_map(|b| b.steps()).copied().collect();
+    assert_eq!(flat, steps, "{ctx}: flattening must recover the step list");
+    assert_eq!(lp.n_steps(), steps.len(), "{ctx}: n_steps");
+    // each superblock is kind/level-uniform, its enum variant matches
+    // its steps, and adjacent superblocks differ (runs are maximal)
+    let mut prev: Option<(u8, usize)> = None;
+    for block in &lp.blocks {
+        assert!(!block.steps().is_empty(), "{ctx}: empty superblock");
+        let kl = step_kind_level(ep, block.steps()[0]);
+        for &si in block.steps() {
+            assert_eq!(
+                step_kind_level(ep, si),
+                kl,
+                "{ctx}: mixed kind/level inside one superblock"
+            );
+        }
+        match (block, kl.0) {
+            (Superblock::Leaf { .. }, 0) => {}
+            (Superblock::Einsum { level, .. }, 1) => assert_eq!(*level, kl.1, "{ctx}"),
+            (Superblock::Mix { level, .. }, 2) => assert_eq!(*level, kl.1, "{ctx}"),
+            _ => panic!("{ctx}: superblock variant does not match its steps"),
+        }
+        if let Some(p) = prev {
+            assert_ne!(p, kl, "{ctx}: adjacent same-kind same-level superblocks");
+        }
+        prev = Some(kl);
+    }
+}
+
+#[test]
+fn superblocks_cover_every_step_once_in_depth_order() {
+    for (plan, label) in test_plans() {
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+        let all: Vec<usize> = (0..ep.steps.len()).collect();
+        let lp = LayerPlan::fuse(&ep);
+        assert_valid_fusion(&ep, &lp, &all, label);
+        // the lowering order (leaves, then per level einsums before
+        // mixes) means levels never decrease across einsum superblocks
+        let mut last_level = 0usize;
+        for block in &lp.blocks {
+            if let Superblock::Einsum { level, .. } = block {
+                assert!(
+                    *level >= last_level,
+                    "{label}: einsum superblock levels must ascend"
+                );
+                last_level = *level;
+            }
+        }
+    }
+}
+
+#[test]
+fn segment_fusion_covers_each_workers_steps() {
+    use einet::PlanPartition;
+    for (plan, label) in test_plans() {
+        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 8);
+        for shards in [2usize, 4] {
+            let part = PlanPartition::cut(&ep, shards);
+            let segs = part.shards.iter().chain(std::iter::once(&part.spine));
+            for (s, seg) in segs.enumerate() {
+                let ctx = format!("{label} shards={shards} seg={s}");
+                let lp = LayerPlan::fuse_steps(&ep, &seg.steps);
+                assert_valid_fusion(&ep, &lp, &seg.steps, &ctx);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bitwise identity with the dense engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_forward_and_backward_match_dense_bitwise() {
+    for (plan, label) in test_plans() {
+        let nv = plan.graph.num_vars;
+        for (i, family) in all_families().into_iter().enumerate() {
+            let seed = 40 + i as u64;
+            let mut rng = Rng::new(seed);
+            let bn = 6;
+            let params = EinetParams::init(&plan, family, seed);
+            let x = random_batch(family, bn, nv, &mut rng);
+            let mut mask = vec![1.0f32; nv];
+            mask[nv / 2] = 0.0; // one marginalized variable
+            let mut dense = DenseEngine::new(plan.clone(), family, bn);
+            let mut fused = FusedEngine::new(plan.clone(), family, bn);
+            for sr in [Semiring::SumProduct, Semiring::MaxProduct] {
+                let ctx = format!("{label} family={family:?} {sr:?}");
+                let mut lp_d = vec![0.0f32; bn];
+                let mut lp_f = vec![0.0f32; bn];
+                dense.forward_semiring(&params, &x, &mask, &mut lp_d, sr);
+                fused.forward_semiring(&params, &x, &mask, &mut lp_f, sr);
+                for (b, (d, f)) in lp_d.iter().zip(&lp_f).enumerate() {
+                    assert!(d.is_finite(), "{ctx}: dense logp[{b}] not finite");
+                    assert_eq!(
+                        d.to_bits(),
+                        f.to_bits(),
+                        "{ctx}: logp[{b}] dense {d} vs fused {f}"
+                    );
+                }
+            }
+            // EM statistics from the (sum-product) activations
+            let ctx = format!("{label} family={family:?}");
+            let mut lp = vec![0.0f32; bn];
+            dense.forward(&params, &x, &mask, &mut lp);
+            fused.forward(&params, &x, &mask, &mut lp);
+            let mut st_d = EmStats::zeros_like(&params);
+            let mut st_f = EmStats::zeros_like(&params);
+            dense.backward(&params, &x, &mask, bn, &mut st_d);
+            fused.backward(&params, &x, &mask, bn, &mut st_f);
+            assert_eq!(st_d.count, st_f.count, "{ctx}: count");
+            assert_eq!(st_d.loglik, st_f.loglik, "{ctx}: loglik");
+            for (i, (d, f)) in st_d.grad.iter().zip(&st_f.grad).enumerate() {
+                assert_eq!(d.to_bits(), f.to_bits(), "{ctx}: grad[{i}]");
+            }
+            for (i, (d, f)) in st_d.sum_p.iter().zip(&st_f.sum_p).enumerate() {
+                assert_eq!(d.to_bits(), f.to_bits(), "{ctx}: sum_p[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_decode_and_sampling_match_dense() {
+    for (plan, label) in test_plans() {
+        let nv = plan.graph.num_vars;
+        let family = LeafFamily::Bernoulli;
+        let seed = 91;
+        let mut rng = Rng::new(seed);
+        let bn = 5;
+        let params = EinetParams::init(&plan, family, seed);
+        let x = random_batch(family, bn, nv, &mut rng);
+        let mut mask = vec![1.0f32; nv];
+        for d in nv / 2..nv {
+            mask[d] = 0.0;
+        }
+        let mut dense = DenseEngine::new(plan.clone(), family, bn);
+        let mut fused = FusedEngine::new(plan.clone(), family, bn);
+        let mut lp = vec![0.0f32; bn];
+        dense.forward(&params, &x, &mask, &mut lp);
+        fused.forward(&params, &x, &mask, &mut lp);
+        for mode in [DecodeMode::Argmax, DecodeMode::Sample] {
+            let ctx = format!("{label} {mode:?}");
+            let mut out_d = x.clone();
+            let mut out_f = x.clone();
+            dense.decode_batch(&params, bn, &mask, mode, &mut Rng::new(7), &mut out_d);
+            fused.decode_batch(&params, bn, &mask, mode, &mut Rng::new(7), &mut out_f);
+            assert_eq!(out_d, out_f, "{ctx}: decode diverged");
+        }
+        // unconditional sampling rides the same shared-rows fast path
+        let s_d = dense.sample_batch(&params, 16, &mut Rng::new(23), DecodeMode::Sample);
+        let s_f = fused.sample_batch(&params, 16, &mut Rng::new(23), DecodeMode::Sample);
+        assert_eq!(s_d, s_f, "{label}: sample_batch diverged");
+    }
+}
+
+#[test]
+fn fused_sharding_matches_single_dense_reference() {
+    for (plan, label) in test_plans() {
+        let nv = plan.graph.num_vars;
+        for family in [LeafFamily::Bernoulli, LeafFamily::Gaussian { channels: 1 }] {
+            let seed = 55;
+            let mut rng = Rng::new(seed);
+            let bn = 6;
+            let params = EinetParams::init(&plan, family, seed);
+            let x = random_batch(family, bn, nv, &mut rng);
+            let mut mask = vec![1.0f32; nv];
+            mask[0] = 0.0;
+            let em = EmConfig {
+                step_size: 0.5,
+                var_bounds: (1e-3, 10.0),
+                ..Default::default()
+            };
+            // single-engine dense reference
+            let mut dense = DenseEngine::new(plan.clone(), family, bn);
+            let mut lp_ref = vec![0.0f32; bn];
+            dense.forward(&params, &x, &mask, &mut lp_ref);
+            let mut st_ref = EmStats::zeros_like(&params);
+            dense.backward(&params, &x, &mask, bn, &mut st_ref);
+            let mut p_ref = params.clone();
+            m_step(&mut p_ref, &st_ref, &em);
+            let mut dec_ref = x.clone();
+            dense.decode_batch(
+                &params,
+                bn,
+                &mask,
+                DecodeMode::Argmax,
+                &mut Rng::new(seed + 9),
+                &mut dec_ref,
+            );
+            // fused pools: every worker fuses its own segment
+            for shards in [1usize, 4] {
+                let ctx = format!("{label} family={family:?} shards={shards}");
+                let mut pool = ShardedPool::new(
+                    boxed_build::<FusedEngine>,
+                    &plan,
+                    family,
+                    &params,
+                    shards,
+                    bn,
+                );
+                let mut lp = vec![0.0f32; bn];
+                pool.forward(&x, &mask, bn, &mut lp).unwrap();
+                for (b, (r, g)) in lp_ref.iter().zip(&lp).enumerate() {
+                    assert_eq!(
+                        r.to_bits(),
+                        g.to_bits(),
+                        "{ctx}: forward row {b}: {r} vs {g}"
+                    );
+                }
+                let mut stats = EmStats::zeros_like(&params);
+                pool.backward(&mut stats).unwrap();
+                assert_eq!(stats.loglik, st_ref.loglik, "{ctx}: loglik");
+                let mut p = params.clone();
+                m_step(&mut p, &stats, &em);
+                assert_eq!(p.data, p_ref.data, "{ctx}: EM-stepped parameters");
+                let mut dec = x.clone();
+                pool.decode(
+                    bn,
+                    &mask,
+                    DecodeMode::Argmax,
+                    &mut Rng::new(seed + 9),
+                    &mut dec,
+                )
+                .unwrap();
+                assert_eq!(dec_ref, dec, "{ctx}: Argmax decode");
+                pool.stop();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unknown-engine errors list the registered names
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_engine_errors_list_registered_names() {
+    let err = EngineRegistry::builtin()
+        .factory("no-such-engine")
+        .expect_err("unknown engine must fail")
+        .to_string();
+    for name in ["dense", "sparse", "fused"] {
+        assert!(
+            err.contains(name),
+            "registry error must list '{name}': {err}"
+        );
+    }
+}
+
+#[test]
+fn shard_worker_handshake_refusal_lists_registered_names() {
+    use einet::coordinator::transport::{spawn_loopback_workers, TcpTransport};
+    use einet::WorkerConfig;
+
+    let (addrs, handles) = spawn_loopback_workers(1).unwrap();
+    let cfg = WorkerConfig {
+        structure: "rat:depth=2,replica=2,seed=1".to_string(),
+        num_vars: 8,
+        k: 3,
+        family: LeafFamily::Bernoulli,
+        engine: "no-such-engine".to_string(),
+        n_shards: 1,
+        shard_id: 0,
+        batch_cap: 2,
+        fastmath: false,
+    };
+    let err = TcpTransport::connect(&addrs[0], &cfg, 8)
+        .expect_err("unknown engine must be refused")
+        .to_string();
+    for h in handles {
+        h.join().unwrap();
+    }
+    for name in ["dense", "sparse", "fused"] {
+        assert!(
+            err.contains(name),
+            "handshake refusal must list '{name}': {err}"
+        );
+    }
+}
