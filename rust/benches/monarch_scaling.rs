@@ -1,0 +1,179 @@
+//! Monarch weight-structure scaling: dense vs Monarch-factorized sum
+//! layers at K ∈ {32, 64, 128} on the same RAT structure — stochastic-EM
+//! training rows/s, parameter counts, and train-LL-per-parameter.
+//!
+//! The point of comparison the report pins: one logical `[K, K]` sum
+//! block stores `K²` scalars dense but only `K·(K/b + b)` under
+//! `monarch:b`, so a Monarch block at K=128 (3072 weights at b=16) is
+//! *smaller* than a dense block at K=64 (4096) while mixing a 4× larger
+//! product space — the width regime dense K² pricing cannot reach.
+//! `tests/monarch_oracle.rs` pins the numerics; this bench records only
+//! cost. Results land in BENCH_monarch.json (CI artifact; schema in
+//! docs/BENCHMARKS.md).
+//!
+//!     cargo bench --bench monarch_scaling            # full size
+//!     EINET_BENCH_QUICK=1 cargo bench --bench monarch_scaling
+
+use einet::bench::{time_it, Table};
+use einet::em::{m_step, EmConfig};
+use einet::util::json;
+use einet::util::rng::Rng;
+use einet::{
+    DenseEngine, EinetParams, EmStats, Engine, LayeredPlan, LeafFamily,
+    WeightStructure,
+};
+
+struct Point {
+    spec: String,
+    k: usize,
+    block_params: usize,
+    sum_params: usize,
+    total_params: usize,
+    rows_per_s: f64,
+    train_ll: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    nv: usize,
+    depth: usize,
+    replica: usize,
+    k: usize,
+    ws: WeightStructure,
+    data: &[f32],
+    n: usize,
+    batch: usize,
+    reps: usize,
+) -> Point {
+    let graph = einet::structure::random_binary_trees(nv, depth, replica, 7);
+    let plan = LayeredPlan::compile(graph, k)
+        .with_weight_structure(ws)
+        .expect("valid structure for this K");
+    let family = LeafFamily::Bernoulli;
+    let params0 = EinetParams::init(&plan, family, 0);
+    let mask = vec![1.0f32; nv];
+    let em = EmConfig { step_size: 0.5, ..Default::default() };
+
+    let mut engine = DenseEngine::new(plan.clone(), family, batch);
+    let mut params = params0.clone();
+    let mut logp = vec![0.0f32; batch];
+    // one epoch of stochastic EM = the timed unit
+    let mut run_epoch = |params: &mut EinetParams| {
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = batch.min(n - b0);
+            let xs = &data[b0 * nv..(b0 + bn) * nv];
+            engine.forward(params, xs, &mask, &mut logp[..bn]);
+            let mut stats = EmStats::zeros_like(params);
+            engine.backward(params, xs, &mask, bn, &mut stats);
+            m_step(params, &stats, &em);
+            b0 += bn;
+        }
+    };
+    run_epoch(&mut params); // warmup (and one real step of progress)
+    let m = time_it(|| run_epoch(&mut params), 0, reps);
+
+    // trained-model average LL over the training rows
+    let mut total = 0.0f64;
+    let mut b0 = 0usize;
+    while b0 < n {
+        let bn = batch.min(n - b0);
+        engine.forward(&params, &data[b0 * nv..(b0 + bn) * nv], &mask, &mut logp[..bn]);
+        total += logp[..bn].iter().map(|&l| l as f64).sum::<f64>();
+        b0 += bn;
+    }
+    Point {
+        spec: ws.spec(),
+        k,
+        block_params: ws.params_per_block(k),
+        sum_params: plan.num_sum_params(),
+        total_params: params.num_params(),
+        rows_per_s: n as f64 / m.median_s,
+        train_ll: total / n as f64,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let (nv, depth, replica) = if quick { (16, 2, 2) } else { (32, 2, 4) };
+    let n = if quick { 96 } else { 256 };
+    let batch = if quick { 32 } else { 64 };
+    let reps = if quick { 1 } else { 2 };
+    let mut rng = Rng::new(3);
+    let data: Vec<f32> = (0..n * nv)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect();
+
+    println!(
+        "monarch scaling — RAT D={nv} depth={depth} R={replica}, N={n}, batch={batch}"
+    );
+    let mut table = Table::new(&[
+        "structure", "K", "block params", "sum params", "total params",
+        "train rows/s", "train LL",
+    ]);
+    let mut rows: Vec<json::Json> = Vec::new();
+    let mut block_params = std::collections::BTreeMap::new();
+    for &k in &[32usize, 64, 128] {
+        let monarch = WeightStructure::parse("monarch", k).expect("composite K");
+        for ws in [WeightStructure::Dense, monarch] {
+            let p = run_point(nv, depth, replica, k, ws, &data, n, batch, reps);
+            println!(
+                "{:<10} K={k}: {} weights/block, {} sum params, {:.0} rows/s, LL {:.4}",
+                p.spec, p.block_params, p.sum_params, p.rows_per_s, p.train_ll
+            );
+            table.row(vec![
+                p.spec.clone(),
+                format!("{k}"),
+                format!("{}", p.block_params),
+                format!("{}", p.sum_params),
+                format!("{}", p.total_params),
+                format!("{:.0}", p.rows_per_s),
+                format!("{:.4}", p.train_ll),
+            ]);
+            block_params.insert((p.spec.starts_with("monarch"), k), p.block_params);
+            rows.push(json::obj(vec![
+                ("structure", json::s(&p.spec)),
+                ("k", json::num(p.k as f64)),
+                ("block_params", json::num(p.block_params as f64)),
+                ("sum_params", json::num(p.sum_params as f64)),
+                ("total_params", json::num(p.total_params as f64)),
+                ("train_rows_per_s", json::num(p.rows_per_s)),
+                ("train_ll", json::num(p.train_ll)),
+                (
+                    "ll_per_kparam",
+                    json::num(p.train_ll * 1000.0 / p.total_params as f64),
+                ),
+            ]));
+        }
+    }
+    println!("\n{}", table.render());
+
+    // the acceptance comparison: one Monarch K=128 sum block is smaller
+    // than one dense K=64 sum block
+    let m128 = block_params[&(true, 128)] as f64;
+    let d64 = block_params[&(false, 64)] as f64;
+    println!(
+        "per sum block: monarch K=128 stores {m128} weights vs dense K=64's {d64} \
+         (dense K=128 would need {})",
+        128 * 128
+    );
+    let report = json::obj(vec![
+        ("experiment", json::s("monarch_scaling")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("num_vars", json::num(nv as f64)),
+        ("depth", json::num(depth as f64)),
+        ("replica", json::num(replica as f64)),
+        ("n", json::num(n as f64)),
+        ("batch", json::num(batch as f64)),
+        ("rows", json::arr(rows)),
+        ("monarch_k128_block_params", json::num(m128)),
+        ("dense_k64_block_params", json::num(d64)),
+        (
+            "monarch_k128_smaller_than_dense_k64",
+            json::num((m128 < d64) as i32 as f64),
+        ),
+    ]);
+    std::fs::write("BENCH_monarch.json", report.to_string())
+        .expect("write BENCH_monarch.json");
+    println!("wrote BENCH_monarch.json");
+}

@@ -509,6 +509,9 @@ impl ShardedPool {
         for s in 0..partition.n_shards {
             let cfg = WorkerConfig {
                 structure: structure.to_string(),
+                // the serving plan's weight structure rides the handshake
+                // so the worker's ParamLayout spans match bit-for-bit
+                weights: plan.weight_structure().spec(),
                 num_vars: plan.graph.num_vars,
                 k: plan.k,
                 family,
@@ -1277,6 +1280,8 @@ fn layout_from_meta(meta: &ArtifactMeta, family: LeafFamily) -> Result<ParamLayo
                 specs.push(LevelSpec {
                     slots: desc.shape[0],
                     ko: desc.shape[1],
+                    // AOT artifacts predate structured weights: dense only
+                    structure: crate::layers::WeightStructure::Dense,
                     mix: None,
                 });
             }

@@ -169,7 +169,9 @@ const TAG_STATS: u8 = 9;
 const TAG_DECODED: u8 = 10;
 
 const HANDSHAKE_MAGIC: u32 = 0x45494E57; // "EINW"
-const HANDSHAKE_VERSION: u32 = 1;
+// v2 added the weight-structure spec (`dense` / `monarch:b`) so remote
+// workers rebuild structured plans bit-identically
+const HANDSHAKE_VERSION: u32 = 2;
 
 fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
     let len = (payload.len() + 1) as u32;
@@ -449,6 +451,11 @@ fn decode_reply(tag: u8, payload: &[u8]) -> WireResult<ShardReply> {
 pub struct WorkerConfig {
     /// structure spec string, e.g. `rat:depth=3,replica=4,seed=0`
     pub structure: String,
+    /// weight-structure spec of the sum layers (`dense` / `monarch:b`,
+    /// see [`crate::layers::WeightStructure::parse`]); the worker applies
+    /// it before lowering so its `ParamLayout` spans — and therefore the
+    /// partition's span tables — match the coordinator's exactly
+    pub weights: String,
     pub num_vars: usize,
     pub k: usize,
     pub family: LeafFamily,
@@ -470,6 +477,7 @@ impl WorkerConfig {
         e.u32(HANDSHAKE_MAGIC);
         e.u32(HANDSHAKE_VERSION);
         e.str(&self.structure);
+        e.str(&self.weights);
         e.u32(self.num_vars as u32);
         e.u32(self.k as u32);
         let (tag, arg) = family_tag(self.family);
@@ -494,6 +502,7 @@ impl WorkerConfig {
             return Err(format!("unsupported protocol version {version}"));
         }
         let structure = d.str()?;
+        let weights = d.str()?;
         let num_vars = d.u32()? as usize;
         let k = d.u32()? as usize;
         let ftag = d.u32()? as u64;
@@ -507,6 +516,7 @@ impl WorkerConfig {
         d.finish()?;
         Ok(Self {
             structure,
+            weights,
             num_vars,
             k,
             family,
@@ -998,7 +1008,8 @@ fn build_segment_worker(cfg: &WorkerConfig) -> crate::util::error::Result<Segmen
     );
     crate::engine::kernels::force_fastmath(cfg.fastmath);
     let graph = from_spec(cfg.num_vars, &cfg.structure)?;
-    let plan = LayeredPlan::compile(graph, cfg.k);
+    let ws = crate::layers::WeightStructure::parse(&cfg.weights, cfg.k)?;
+    let plan = LayeredPlan::compile(graph, cfg.k).with_weight_structure(ws)?;
     let factory = EngineRegistry::builtin().factory(&cfg.engine)?;
     let engine = factory(plan.clone(), cfg.family, cfg.batch_cap);
     let partition = PlanPartition::cut(engine.exec_plan(), cfg.n_shards);
@@ -1175,6 +1186,7 @@ mod tests {
     fn worker_config_round_trips() {
         let cfg = WorkerConfig {
             structure: "rat:depth=3,replica=4,seed=0".into(),
+            weights: "monarch:2".into(),
             num_vars: 16,
             k: 3,
             family: LeafFamily::Categorical { cats: 5 },
@@ -1186,6 +1198,7 @@ mod tests {
         };
         let back = WorkerConfig::decode(&cfg.encode()).expect("decode");
         assert_eq!(back.structure, cfg.structure);
+        assert_eq!(back.weights, cfg.weights);
         assert_eq!(back.num_vars, cfg.num_vars);
         assert_eq!(back.k, cfg.k);
         assert_eq!(back.family, cfg.family);
@@ -1203,6 +1216,7 @@ mod tests {
         // must fail validation before `handle` can slice out of bounds
         let cfg = WorkerConfig {
             structure: "rat:depth=2,replica=2,seed=1".into(),
+            weights: "dense".into(),
             num_vars: 8,
             k: 2,
             family: LeafFamily::Bernoulli,

@@ -15,6 +15,7 @@
 //! is needed, which is what lets the AOT trainer share this exact code.
 
 use crate::engine::{EinetParams, EmStats, ParamLayout};
+use crate::layers::WeightStructure;
 
 /// Hyper-parameters of an EM run.
 #[derive(Clone, Copy, Debug)]
@@ -82,19 +83,52 @@ pub fn m_step(params: &mut EinetParams, stats: &EmStats, cfg: &EmConfig) {
 
     // --- sum weights (einsum blocks) + mixing rows ------------------------
     for i in 0..params.layout.levels.len() {
-        let (w_off, w_len) = {
+        let (w_off, w_len, w2_off, w2_len, structure) = {
             let lv = &params.layout.levels[i];
-            (lv.w_off, lv.w_len)
+            (lv.w_off, lv.w_len, lv.w2_off, lv.w2_len, lv.structure)
         };
-        for blk in 0..w_len / (k * k) {
-            let off = w_off + blk * k * k;
-            blend_block(
-                &mut params.data[off..off + k * k],
-                &stats.grad[off..off + k * k],
-                lambda,
-                cfg.weight_floor,
-                &mut scratch,
-            );
+        match structure {
+            WeightStructure::Dense => {
+                for blk in 0..w_len / (k * k) {
+                    let off = w_off + blk * k * k;
+                    blend_block(
+                        &mut params.data[off..off + k * k],
+                        &stats.grad[off..off + k * k],
+                        lambda,
+                        cfg.weight_floor,
+                        &mut scratch,
+                    );
+                }
+            }
+            WeightStructure::Monarch { blocks } => {
+                // the conditional decomposition W = L·R normalizes per
+                // factor group, so Eq. 7 applies per group: the whole
+                // [K, q] left block of each (slot, ko) is one
+                // distribution, and each b-long right row p(g'|s,g) is
+                // one distribution — the expected counts in stats.grad
+                // drive each group's exact EM fixed-point update.
+                let q = k / blocks;
+                for blk in 0..w_len / (k * q) {
+                    let off = w_off + blk * k * q;
+                    blend_block(
+                        &mut params.data[off..off + k * q],
+                        &stats.grad[off..off + k * q],
+                        lambda,
+                        cfg.weight_floor,
+                        &mut scratch,
+                    );
+                }
+                for row in 0..w2_len / blocks {
+                    let off = w2_off + row * blocks;
+                    blend_block(
+                        &mut params.data[off..off + blocks],
+                        &stats.grad[off..off + blocks],
+                        lambda,
+                        cfg.weight_floor,
+                        &mut scratch,
+                    );
+                }
+            }
         }
         // scalars only — no per-batch clone of the layout's Vecs
         let mix_shape = params.layout.levels[i]

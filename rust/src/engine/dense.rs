@@ -23,7 +23,7 @@
 //! decode in [`super::exec`], reusing the forward activations as
 //! posterior messages (Fig. 4 inpainting).
 
-use crate::layers::LayeredPlan;
+use crate::layers::{LayeredPlan, WeightStructure};
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
@@ -223,14 +223,16 @@ impl DenseEngine {
                 )
             }
             Step::Einsum {
+                level,
                 left,
                 right,
                 ko,
                 w,
+                w2,
                 dest,
                 to_scratch,
                 ..
-            } => self.fwd_einsum(params, left, right, ko, w, dest, to_scratch, bn, sr),
+            } => self.fwd_einsum(params, level, left, right, ko, w, w2, dest, to_scratch, bn, sr),
             Step::Mix {
                 out,
                 ko,
@@ -331,10 +333,12 @@ impl DenseEngine {
     fn fwd_einsum(
         &mut self,
         params: &ParamArena,
+        level: usize,
         left: usize,
         right: usize,
         ko: usize,
         w: usize,
+        w2: usize,
         dest: usize,
         to_scratch: bool,
         bn: usize,
@@ -344,6 +348,7 @@ impl DenseEngine {
         let kk2 = k * k;
         let isa = self.exec.simd;
         let math = self.exec.math;
+        let structure = self.exec.layout.levels[level].structure;
         let mut b0 = 0usize;
         while b0 < bn {
             let bb = self.exec.b_blk.min(bn - b0);
@@ -354,10 +359,37 @@ impl DenseEngine {
             self.prep_block_args(left, right, b0, bb);
             kernels::vexp(isa, math, &mut self.t_ent[..k * bb]);
             kernels::vexp(isa, math, &mut self.t_enpt[..k * bb]);
-            // outer product materialized ONLY in cache-resident scratch
-            let wslot = &params.data[w..w + ko * kk2];
-            kernels::outer_block(isa, &self.t_ent, &self.t_enpt, k, bb, &mut self.t_prodt);
-            kernels::einsum_block(isa, sr, wslot, &self.t_prodt, kk2, ko, bb, &mut self.t_acc);
+            match structure {
+                WeightStructure::Dense => {
+                    // outer product materialized ONLY in cache-resident scratch
+                    let wslot = &params.data[w..w + ko * kk2];
+                    kernels::outer_block(isa, &self.t_ent, &self.t_enpt, k, bb, &mut self.t_prodt);
+                    kernels::einsum_block(isa, sr, wslot, &self.t_prodt, kk2, ko, bb, &mut self.t_acc);
+                }
+                WeightStructure::Monarch { blocks } => {
+                    // two thin block-diagonal stages; U/V live in the (otherwise
+                    // dead) product scratch — k² ≥ 2k for every legal K ≥ 4
+                    let q = k / blocks;
+                    let lslot = &params.data[w..w + ko * k * q];
+                    let rslot = &params.data[w2..w2 + ko * k * blocks];
+                    let (u, rest) = self.t_prodt.split_at_mut(k * bb);
+                    kernels::monarch_block(
+                        isa,
+                        sr,
+                        lslot,
+                        rslot,
+                        k,
+                        blocks,
+                        ko,
+                        bb,
+                        &self.t_ent,
+                        &self.t_enpt,
+                        u,
+                        &mut rest[..k * bb],
+                        &mut self.t_acc,
+                    );
+                }
+            }
             // write-back: return to log-domain and add the row maxima back
             kernels::vln(isa, math, &mut self.t_acc[..ko * bb]);
             for j in 0..bb {
@@ -514,16 +546,23 @@ impl DenseEngine {
                 stats,
             ),
             Step::Einsum {
+                level,
                 left,
                 right,
                 ko,
                 w,
+                w2,
                 dest,
                 to_scratch,
                 ..
-            } => self.bwd_einsum(
-                params, left, right, ko, w, dest, to_scratch, bn, stats,
-            ),
+            } => match self.exec.layout.levels[level].structure {
+                WeightStructure::Dense => self.bwd_einsum(
+                    params, left, right, ko, w, dest, to_scratch, bn, stats,
+                ),
+                WeightStructure::Monarch { blocks } => self.bwd_einsum_monarch(
+                    params, left, right, ko, w, w2, blocks, dest, to_scratch, bn, stats,
+                ),
+            },
             Step::Leaf { rid, out } => exec::leaf_backward(
                 &self.exec,
                 rid,
@@ -753,6 +792,133 @@ impl DenseEngine {
                 for jj in 0..k {
                     self.grad_arena[right + (b0 + j) * k + jj] +=
                         self.t_enpt[jj * bb + j] * colt[jj * bb + j];
+                }
+            }
+            b0 += bb;
+        }
+    }
+
+    /// The tiled backward of one **Monarch-factorized** einsum slot: the
+    /// same block staging as [`Self::bwd_einsum`] (scaled children and
+    /// `g·exp(base − logS)` in `[·, bb]` lanes), but the contraction
+    /// gradients flow through the two thin factors via
+    /// [`kernels::monarch_block_bwd`] — expected counts for BOTH factor
+    /// blocks plus both child messages, without ever materializing the
+    /// dense `[K², bb]` outer product. `U`/`V` and the child-gradient
+    /// blocks reuse the product scratch (`k² ≥ 4k` for every legal
+    /// Monarch `K ≥ 4`).
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_einsum_monarch(
+        &mut self,
+        params: &ParamArena,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        w2: usize,
+        blocks: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        let k = self.exec.k;
+        let q = k / blocks;
+        debug_assert!(k >= 4, "Monarch levels require composite K >= 4");
+        let isa = self.exec.simd;
+        let math = self.exec.math;
+        let lslot = &params.data[w..w + ko * k * q];
+        let rslot = &params.data[w2..w2 + ko * k * blocks];
+        // the factor spans are disjoint (the whole left-factor region
+        // precedes the right-factor region), so one split yields both
+        // gradient views
+        let (glo, ghi) = stats.grad.split_at_mut(w2);
+        let gl = &mut glo[w..w + ko * k * q];
+        let gr = &mut ghi[..ko * k * blocks];
+        let mut b0 = 0usize;
+        while b0 < bn {
+            let bb = self.exec.b_blk.min(bn - b0);
+            // t[ko, bb] = g * exp(base - logS): identical staging to the
+            // dense backward
+            let mut any = false;
+            for j in 0..bb {
+                let b = b0 + j;
+                let out_row = dest + b * ko;
+                for kout in 0..ko {
+                    let (g, logs) = if to_scratch {
+                        (
+                            self.grad_scratch[out_row + kout],
+                            self.scratch[out_row + kout],
+                        )
+                    } else {
+                        (
+                            self.grad_arena[out_row + kout],
+                            self.arena[out_row + kout],
+                        )
+                    };
+                    self.t_t[kout * bb + j] = g;
+                    self.t_acc[kout * bb + j] = if g != 0.0 {
+                        any = true;
+                        -logs
+                    } else {
+                        f32::NEG_INFINITY
+                    };
+                }
+            }
+            if !any {
+                b0 += bb;
+                continue;
+            }
+            self.prep_block_args(left, right, b0, bb);
+            kernels::vexp(isa, math, &mut self.t_ent[..k * bb]);
+            kernels::vexp(isa, math, &mut self.t_enpt[..k * bb]);
+            for j in 0..bb {
+                let base = self.t_a[b0 + j] + self.t_ap[b0 + j];
+                for kout in 0..ko {
+                    let v = &mut self.t_acc[kout * bb + j];
+                    if *v != f32::NEG_INFINITY {
+                        *v += base;
+                    }
+                }
+            }
+            kernels::vexp(isa, math, &mut self.t_acc[..ko * bb]);
+            for (t, &g) in self.t_acc[..ko * bb]
+                .iter_mut()
+                .zip(self.t_t[..ko * bb].iter())
+            {
+                *t *= g;
+            }
+            // factor + child gradients through the two thin stages; the
+            // product scratch hosts U, V and the two child-grad blocks
+            let (u, rest) = self.t_prodt.split_at_mut(k * bb);
+            let (v, rest) = rest.split_at_mut(k * bb);
+            let (gen_t, rest) = rest.split_at_mut(k * bb);
+            let genp_t = &mut rest[..k * bb];
+            kernels::monarch_block_bwd(
+                isa,
+                lslot,
+                rslot,
+                k,
+                blocks,
+                ko,
+                bb,
+                &self.t_ent,
+                &self.t_enpt,
+                &self.t_acc,
+                u,
+                v,
+                &mut self.t_g[..2 * bb],
+                gl,
+                gr,
+                gen_t,
+                genp_t,
+            );
+            for j in 0..bb {
+                let row_l = left + (b0 + j) * k;
+                let row_r = right + (b0 + j) * k;
+                for i in 0..k {
+                    self.grad_arena[row_l + i] += gen_t[i * bb + j];
+                    self.grad_arena[row_r + i] += genp_t[i * bb + j];
                 }
             }
             b0 += bb;

@@ -80,7 +80,7 @@
 //!   blocks of its variables), which is what the parameter server
 //!   broadcasts ([`super::ArenaShard`]) instead of the whole arena.
 
-use crate::layers::{LayeredPlan, RegionSlot};
+use crate::layers::{LayeredPlan, RegionSlot, WeightStructure};
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 
@@ -135,8 +135,14 @@ pub enum Step {
         right: usize,
         /// output width of this slot
         ko: usize,
-        /// ParamArena offset of the slot's [Ko, K, K] weight block
+        /// ParamArena offset of the slot's primary weight block: the
+        /// dense [Ko, K, K] block, or the Monarch left factor
+        /// [Ko, b, q, q] (the level's structure is in
+        /// `layout.levels[level].structure`)
         w: usize,
+        /// ParamArena offset of the slot's Monarch right factor
+        /// [Ko, q, b, b]; 0 (unused) on dense levels
+        w2: usize,
         /// output block offset (row b at `dest + b * ko`)
         dest: usize,
         /// `dest` addresses the scratch buffer (slot feeds mixing) rather
@@ -181,9 +187,17 @@ pub struct BranchPart {
     pub left_off: usize,
     /// arena offset of the right child's [batch_cap, K] block
     pub right_off: usize,
-    /// ParamArena offset of the slot's [Ko, K, K] weight block (the
-    /// entry's [K, K] posterior block starts at `w + entry * K * K`)
+    /// ParamArena offset of the slot's primary weight block. Dense: the
+    /// entry's [K, K] posterior block starts at `w + entry * K * K`.
+    /// Monarch: the entry's left factor [b, q, q] starts at
+    /// `w + entry * K * q` and the posterior block is materialized on
+    /// demand from the two factors (never stored).
     pub w: usize,
+    /// ParamArena offset of the Monarch right factor (the entry's
+    /// [q, b, b] block starts at `w2 + entry * K * b`); 0 on dense levels
+    pub w2: usize,
+    /// the slot's level index (looks up the level's weight structure)
+    pub level: usize,
 }
 
 /// One step of the reverse (top-down) sampling program.
@@ -266,12 +280,20 @@ impl SamplePlan {
                     debug_assert_eq!(part_level[pid], i);
                     let slot = part_slot[pid];
                     let p = plan.graph.partitions[pid];
+                    let ll = &layout.levels[i];
+                    let (per_l, per_r) = ll.structure.factor_lens(k);
                     parts.push(BranchPart {
                         left: p.left,
                         right: p.right,
                         left_off: region_off[p.left],
                         right_off: region_off[p.right],
-                        w: layout.levels[i].w_off + slot * ko * k * k,
+                        w: ll.w_off + slot * ko * per_l,
+                        w2: if per_r == 0 {
+                            0
+                        } else {
+                            ll.w2_off + slot * ko * per_r
+                        },
+                        level: i,
                     });
                 }
                 let (mix_w, mix_first) = if nparts > 1 {
@@ -416,8 +438,8 @@ impl ExecPlan {
                     }
                 }
             }
-            let kk2 = k * k;
-            let w_off = layout.levels[i].w_off;
+            let ll = &layout.levels[i];
+            let (per_l, per_r) = ll.structure.factor_lens(k);
             for l in 0..lv.einsum.len() {
                 let (d, to_scratch) = dest[l];
                 debug_assert!(d != usize::MAX, "slot {l} of level {i} unrouted");
@@ -428,7 +450,12 @@ impl ExecPlan {
                     left: region_off[lv.einsum.left[l]],
                     right: region_off[lv.einsum.right[l]],
                     ko,
-                    w: w_off + l * ko * kk2,
+                    w: ll.w_off + l * ko * per_l,
+                    w2: if per_r == 0 {
+                        0
+                    } else {
+                        ll.w2_off + l * ko * per_r
+                    },
                     dest: d,
                     to_scratch,
                 });
@@ -716,8 +743,12 @@ impl PlanPartition {
                 Step::Leaf { rid, .. } => {
                     cost[rid] += (graph.regions[rid].scope.len() * ep.k) as f64;
                 }
-                Step::Einsum { pid, ko, .. } => {
-                    cost[graph.partitions[pid].out] += (ko * ep.k * ep.k) as f64;
+                Step::Einsum { level, pid, ko, .. } => {
+                    // dense: ko*K*K MACs; monarch: the two thin stages
+                    let per = ep.layout.levels[level]
+                        .structure
+                        .params_per_block(ep.k);
+                    cost[graph.partitions[pid].out] += (ko * per) as f64;
                 }
                 Step::Mix { rid, ko, children, .. } => {
                     cost[rid] += (children * ko) as f64;
@@ -894,8 +925,15 @@ impl PlanPartition {
             for &si in &seg.steps {
                 match ep.steps[si] {
                     Step::Leaf { .. } => {}
-                    Step::Einsum { ko, w, .. } => {
-                        spans.push((w, w + ko * ep.k * ep.k));
+                    Step::Einsum {
+                        level, ko, w, w2, ..
+                    } => {
+                        let (per_l, per_r) =
+                            ep.layout.levels[level].structure.factor_lens(ep.k);
+                        spans.push((w, w + ko * per_l));
+                        if per_r > 0 {
+                            spans.push((w2, w2 + ko * per_r));
+                        }
                     }
                     Step::Mix { w, children, .. } => {
                         spans.push((w, w + children));
@@ -951,7 +989,14 @@ impl PlanPartition {
                             }
                         }
                     }
-                    Step::Einsum { pid, ko, w, .. } => {
+                    Step::Einsum {
+                        level,
+                        pid,
+                        ko,
+                        w,
+                        w2,
+                        ..
+                    } => {
                         let p = graph.partitions[pid];
                         for rid in [p.left, p.right] {
                             if !is_spine && self.owner[rid] != idx {
@@ -960,9 +1005,16 @@ impl PlanPartition {
                                 ));
                             }
                         }
-                        if !covered(seg, w, w + ko * ep.k * ep.k) {
+                        let (per_l, per_r) =
+                            ep.layout.levels[level].structure.factor_lens(ep.k);
+                        if !covered(seg, w, w + ko * per_l) {
                             return Err(format!(
                                 "segment {idx} einsum {si} weights uncovered"
+                            ));
+                        }
+                        if per_r > 0 && !covered(seg, w2, w2 + ko * per_r) {
+                            return Err(format!(
+                                "segment {idx} einsum {si} right factor uncovered"
                             ));
                         }
                     }
@@ -1259,9 +1311,7 @@ pub(crate) fn decode(
         let ko = ep.plan.levels[i].einsum.ko;
         debug_assert!(entry < ko);
         let p = ep.plan.graph.partitions[pid];
-        let w_off = ep.layout.levels[i].w_off;
-        let wslot = &params.data
-            [w_off + (slot * ko + entry) * k * k..w_off + (slot * ko + entry + 1) * k * k];
+        let ll = &ep.layout.levels[i];
         // posterior over (i, j) ∝ W_kij * N_i * N'_j
         let loff = ep.region_off[p.left] + b * k;
         let roff = ep.region_off[p.right] + b * k;
@@ -1271,11 +1321,40 @@ pub(crate) fn decode(
             a = a.max(arena[loff + kk]);
             ap = ap.max(arena[roff + kk]);
         }
-        for ii in 0..k {
-            let eni = ep.math.exp1(arena[loff + ii] - a);
-            for jj in 0..k {
-                wbuf[ii * k + jj] =
-                    wslot[ii * k + jj] * eni * ep.math.exp1(arena[roff + jj] - ap);
+        match ll.structure {
+            WeightStructure::Dense => {
+                let w_off = ll.w_off;
+                let wslot = &params.data[w_off + (slot * ko + entry) * k * k
+                    ..w_off + (slot * ko + entry + 1) * k * k];
+                for ii in 0..k {
+                    let eni = ep.math.exp1(arena[loff + ii] - a);
+                    for jj in 0..k {
+                        wbuf[ii * k + jj] =
+                            wslot[ii * k + jj] * eni * ep.math.exp1(arena[roff + jj] - ap);
+                    }
+                }
+            }
+            WeightStructure::Monarch { blocks } => {
+                // the branch posterior is materialized per logical row on
+                // demand — W[i,j] = L[i,s]·R[(s,g),g'] — so the walk never
+                // stores a K² weight table
+                let q = k / blocks;
+                let lslot = &params.data[ll.w_off + (slot * ko + entry) * k * q
+                    ..ll.w_off + (slot * ko + entry + 1) * k * q];
+                let rslot = &params.data[ll.w2_off + (slot * ko + entry) * k * blocks
+                    ..ll.w2_off + (slot * ko + entry + 1) * k * blocks];
+                for ii in 0..k {
+                    let eni = ep.math.exp1(arena[loff + ii] - a);
+                    let g = ii / q;
+                    let lrow = &lslot[ii * q..(ii + 1) * q];
+                    for jj in 0..k {
+                        let s = jj / blocks;
+                        let gp = jj % blocks;
+                        let wij = lrow[s] * rslot[(s * blocks + g) * blocks + gp];
+                        wbuf[ii * k + jj] =
+                            wij * eni * ep.math.exp1(arena[roff + jj] - ap);
+                    }
+                }
             }
         }
         let pick = match mode {
@@ -1569,7 +1648,6 @@ fn run_sample_steps(
                         }
                     };
                     let p = ep.sample_plan.parts[part0 + c];
-                    let wslot = &params.data[p.w + entry * kk2..p.w + (entry + 1) * kk2];
                     // posterior over (i, j) ∝ W_kij * N_i * N'_j
                     let loff = p.left_off + br * k;
                     let roff = p.right_off + br * k;
@@ -1585,12 +1663,42 @@ fn run_sample_steps(
                     }
                     kernels::vexp(ep.simd, ep.math, ebuf);
                     let wbuf = &mut ss.wbuf[..kk2];
-                    for ii in 0..k {
-                        let eni = ep.math.exp1(arena[loff + ii] - a);
-                        let wrow = &wslot[ii * k..(ii + 1) * k];
-                        let orow = &mut wbuf[ii * k..(ii + 1) * k];
-                        for (jj, o) in orow.iter_mut().enumerate() {
-                            *o = wrow[jj] * eni * ebuf[jj];
+                    match ep.layout.levels[p.level].structure {
+                        WeightStructure::Dense => {
+                            let wslot = &params.data
+                                [p.w + entry * kk2..p.w + (entry + 1) * kk2];
+                            for ii in 0..k {
+                                let eni = ep.math.exp1(arena[loff + ii] - a);
+                                let wrow = &wslot[ii * k..(ii + 1) * k];
+                                let orow = &mut wbuf[ii * k..(ii + 1) * k];
+                                for (jj, o) in orow.iter_mut().enumerate() {
+                                    *o = wrow[jj] * eni * ebuf[jj];
+                                }
+                            }
+                        }
+                        WeightStructure::Monarch { blocks } => {
+                            // materialize the entry's logical [K, K] block
+                            // on demand from the two factors: W[(g,r),(s,g')]
+                            // = L[g][r,s] * R[s][g,g'] — one row at a time,
+                            // no persistent K*K storage
+                            let q = k / blocks;
+                            let lslot = &params.data
+                                [p.w + entry * k * q..p.w + (entry + 1) * k * q];
+                            let rslot = &params.data[p.w2 + entry * k * blocks
+                                ..p.w2 + (entry + 1) * k * blocks];
+                            for ii in 0..k {
+                                let eni = ep.math.exp1(arena[loff + ii] - a);
+                                let g = ii / q;
+                                let lrow = &lslot[ii * q..(ii + 1) * q];
+                                let orow = &mut wbuf[ii * k..(ii + 1) * k];
+                                for (jj, o) in orow.iter_mut().enumerate() {
+                                    let s = jj / blocks;
+                                    let gp = jj % blocks;
+                                    let wij =
+                                        lrow[s] * rslot[(s * blocks + g) * blocks + gp];
+                                    *o = wij * eni * ebuf[jj];
+                                }
+                            }
                         }
                     }
                     let pick = match st.as_mut() {
@@ -2217,22 +2325,41 @@ mod tests {
 
     #[test]
     fn param_offsets_stay_inside_their_spans() {
-        let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 4);
-        let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 4);
-        let k = ep.k;
-        for s in &ep.steps {
-            match *s {
-                Step::Einsum { level, slot, ko, w, .. } => {
-                    let lv = &ep.layout.levels[level];
-                    assert_eq!(w, lv.w_off + slot * ko * k * k);
-                    assert!(w + ko * k * k <= lv.w_off + lv.w_len);
+        for ws in [
+            WeightStructure::Dense,
+            WeightStructure::Monarch { blocks: 2 },
+        ] {
+            let plan = LayeredPlan::compile(poon_domingos(2, 4, 1, PdAxes::Both), 4)
+                .with_weight_structure(ws)
+                .unwrap();
+            let ep = ExecPlan::lower(plan, LeafFamily::Bernoulli, 4);
+            let k = ep.k;
+            for s in &ep.steps {
+                match *s {
+                    Step::Einsum {
+                        level,
+                        slot,
+                        ko,
+                        w,
+                        w2,
+                        ..
+                    } => {
+                        let lv = &ep.layout.levels[level];
+                        let (per_l, per_r) = lv.structure.factor_lens(k);
+                        assert_eq!(w, lv.w_off + slot * ko * per_l);
+                        assert!(w + ko * per_l <= lv.w_off + lv.w_len);
+                        if per_r > 0 {
+                            assert_eq!(w2, lv.w2_off + slot * ko * per_r);
+                            assert!(w2 + ko * per_r <= lv.w2_off + lv.w2_len);
+                        }
+                    }
+                    Step::Mix { level, row, children, w, .. } => {
+                        let m = ep.layout.levels[level].mix.as_ref().unwrap();
+                        assert_eq!(w, m.off + row * m.cmax);
+                        assert_eq!(children, m.child_counts[row]);
+                    }
+                    Step::Leaf { .. } => {}
                 }
-                Step::Mix { level, row, children, w, .. } => {
-                    let m = ep.layout.levels[level].mix.as_ref().unwrap();
-                    assert_eq!(w, m.off + row * m.cmax);
-                    assert_eq!(children, m.child_counts[row]);
-                }
-                Step::Leaf { .. } => {}
             }
         }
     }

@@ -40,7 +40,7 @@
 //! and each worker fuses its own segment ([`LayerPlan::fuse_steps`],
 //! memoized per step list).
 
-use crate::layers::LayeredPlan;
+use crate::layers::{LayeredPlan, WeightStructure};
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
@@ -469,17 +469,23 @@ fn leaf_superblock(
 }
 
 #[inline]
-fn ein_fields(ep: &ExecPlan, si: usize) -> (usize, usize, usize, usize, usize, bool) {
+#[allow(clippy::type_complexity)]
+fn ein_fields(
+    ep: &ExecPlan,
+    si: usize,
+) -> (usize, usize, usize, usize, usize, usize, usize, bool) {
     match ep.steps[si] {
         Step::Einsum {
+            level,
             left,
             right,
             ko,
             w,
+            w2,
             dest,
             to_scratch,
             ..
-        } => (left, right, ko, w, dest, to_scratch),
+        } => (level, left, right, ko, w, w2, dest, to_scratch),
         _ => unreachable!("einsum superblock holds only Einsum steps"),
     }
 }
@@ -522,7 +528,7 @@ fn einsum_superblock(
             let mut args_len = 0usize;
             let mut acc_len = 0usize;
             while s1 < steps.len() {
-                let (_, _, ko, _, _, _) = ein_fields(ep, steps[s1]);
+                let (_, _, _, ko, _, _, _, _) = ein_fields(ep, steps[s1]);
                 let need_args = args_len + 2 * k * bb;
                 let need_acc = acc_len + ko * bb;
                 if s1 > s0 && need_args + need_acc > STAGE_BUDGET {
@@ -544,9 +550,18 @@ fn einsum_superblock(
             let mut args_off = 0usize;
             let mut acc_off = 0usize;
             for (s, &si) in steps[s0..s1].iter().enumerate() {
-                let (left, right, ko, w, _, _) = ein_fields(ep, si);
+                let (level, left, right, ko, w, w2, _, _) = ein_fields(ep, si);
+                // Monarch slots carry their block count into the grouped
+                // contraction, which routes them through the exact same
+                // kernels::monarch_block call the dense engine makes
+                let blocks = match ep.layout.levels[level].structure {
+                    WeightStructure::Dense => 0,
+                    WeightStructure::Monarch { blocks } => blocks,
+                };
                 st.slots.push(kernels::GroupSlot {
                     w,
+                    w2,
+                    blocks,
                     ko,
                     args_off,
                     acc_off,
@@ -589,7 +604,7 @@ fn einsum_superblock(
             kernels::vln(isa, math, &mut st.acc[..acc_len]);
             // write-back: the dense add order, per slot
             for (s, gs) in st.slots.iter().enumerate() {
-                let (_, _, _, _, dest, to_scratch) = ein_fields(ep, steps[s0 + s]);
+                let (_, _, _, _, _, _, dest, to_scratch) = ein_fields(ep, steps[s0 + s]);
                 let ko = gs.ko;
                 let out_buf: &mut [f32] = if to_scratch {
                     &mut *scratch

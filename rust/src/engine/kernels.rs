@@ -1579,8 +1579,14 @@ pub fn einsum_block(
 /// superblock's shared staging buffers (see [`einsum_group`]).
 #[derive(Clone, Copy, Debug)]
 pub struct GroupSlot {
-    /// Weight-slot offset into the parameter data (`Ko · K²` floats).
+    /// Weight-slot offset into the parameter data (`Ko · K²` floats for
+    /// dense slots, `Ko · K · q` left-factor floats for Monarch slots).
     pub w: usize,
+    /// Monarch right-factor offset (`Ko · K · b` floats); unused (0) on
+    /// dense slots.
+    pub w2: usize,
+    /// Monarch block count `b` of this slot's level; 0 marks a dense slot.
+    pub blocks: usize,
     /// Number of output sum nodes (`Ko`) of this slot.
     pub ko: usize,
     /// Offset of this slot's staged `[2K, bb]` exp'd child block inside
@@ -1614,6 +1620,30 @@ pub fn einsum_group(
     for s in slots {
         let en = &args[s.args_off..s.args_off + k * bb];
         let enp = &args[s.args_off + k * bb..s.args_off + 2 * k * bb];
+        if s.blocks != 0 {
+            // Monarch slot: two thin block-diagonal stages through the
+            // shared scratch (U and V each need [K, bb]; k² ≥ 2k holds
+            // for every legal Monarch K ≥ 4). Same function the dense
+            // engine calls, so every output bit matches the per-step path.
+            let (u, rest) = prod_t.split_at_mut(k * bb);
+            let v = &mut rest[..k * bb];
+            monarch_block(
+                isa,
+                sr,
+                &params[s.w..s.w + s.ko * k * (k / s.blocks)],
+                &params[s.w2..s.w2 + s.ko * k * s.blocks],
+                k,
+                s.blocks,
+                s.ko,
+                bb,
+                en,
+                enp,
+                u,
+                v,
+                &mut acc[s.acc_off..s.acc_off + s.ko * bb],
+            );
+            continue;
+        }
         outer_block(isa, en, enp, k, bb, prod_t);
         einsum_block(
             isa,
@@ -1625,6 +1655,296 @@ pub fn einsum_group(
             bb,
             &mut acc[s.acc_off..s.acc_off + s.ko * bb],
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monarch-factorized einsum slots
+// ---------------------------------------------------------------------------
+
+/// Blocked forward contraction of one **Monarch-factorized** einsum slot,
+/// both semirings: the structured twin of [`outer_block`] +
+/// [`einsum_block`].
+///
+/// A Monarch slot stores, per output sum `ko`, two thin block-diagonal
+/// factors instead of a dense `[K, K]` table (`K = b·q`, left child index
+/// `i = g·q + r`, right child index `j = s·b + g'`):
+///
+/// ```text
+///   W[ko][i, j] = L[ko][g][r, s] · R[ko][s][g, g']
+/// ```
+///
+/// Every expanded entry is the product of exactly ONE `L` and ONE `R`
+/// scalar (a unique path), so the factorization is exact under *both*
+/// semirings: the `K²`-term contraction splits into two `K·q`/`K·b`-term
+/// stages
+///
+/// ```text
+///   U[g, s] = Σ_r  L[g][r, s] · en[g·q + r]      (max_r   in max-product)
+///   V[s, g] = Σ_g' R[s][g, g'] · enp[s·b + g']   (max_g'  in max-product)
+///   out[ko] = Σ_{g,s} U[g, s] · V[s, g]          (max_{g,s})
+/// ```
+///
+/// `l` is `[Ko, b, q, q]` (the `L` row of child `i` is `l[ko·K·q + i·q ..][..q]`
+/// over `s`), `r` is `[Ko, q, b, b]` (entry index `(s·b + g)·b + g'`),
+/// `ent`/`enpt` are the `[K, bb]` transposed exp'd child blocks (the
+/// dense `prep_block_args` layout), `u`/`v` are `[K, bb]` scratch, and
+/// `acc` receives `[Ko, bb]` linear-domain rows.
+///
+/// # Bit-identity
+///
+/// Reduction orders are fixed and ISA-independent: `U` accumulates over
+/// `r` ascending, `V` over `g'` ascending, the output over `(g, s)`
+/// lexicographic — each via the element-wise [`axpy`]/[`vmla`] lanes
+/// (separate multiply + add, never FMA), so each batch lane performs the
+/// exact same scalar sequence on every ISA. Max-semiring lanes use
+/// `f32::max` select semantics, matching [`einsum_block`].
+#[allow(clippy::too_many_arguments)]
+pub fn monarch_block(
+    isa: Isa,
+    sr: Semiring,
+    l: &[f32],
+    r: &[f32],
+    k: usize,
+    blocks: usize,
+    ko: usize,
+    bb: usize,
+    ent: &[f32],
+    enpt: &[f32],
+    u: &mut [f32],
+    v: &mut [f32],
+    acc: &mut [f32],
+) {
+    let b = blocks;
+    let q = k / b;
+    debug_assert_eq!(b * q, k, "monarch_block: blocks must divide K");
+    assert!(l.len() >= ko * k * q, "monarch_block: left factor undersized");
+    assert!(r.len() >= ko * k * b, "monarch_block: right factor undersized");
+    assert!(ent.len() >= k * bb && enpt.len() >= k * bb, "monarch_block: args undersized");
+    assert!(u.len() >= k * bb && v.len() >= k * bb, "monarch_block: scratch undersized");
+    assert!(acc.len() >= ko * bb, "monarch_block: accumulator undersized");
+    for kout in 0..ko {
+        let lk = &l[kout * k * q..(kout + 1) * k * q];
+        let rk = &r[kout * k * b..(kout + 1) * k * b];
+        monarch_stage_uv(isa, sr, lk, rk, k, b, q, bb, ent, enpt, u, v);
+        let arow = &mut acc[kout * bb..(kout + 1) * bb];
+        match sr {
+            Semiring::SumProduct => {
+                arow.fill(0.0);
+                for g in 0..b {
+                    for s in 0..q {
+                        vmla(isa, arow, &u[(g * q + s) * bb..], &v[(s * b + g) * bb..]);
+                    }
+                }
+            }
+            Semiring::MaxProduct => {
+                arow.fill(f32::NEG_INFINITY);
+                for g in 0..b {
+                    for s in 0..q {
+                        let urow = &u[(g * q + s) * bb..(g * q + s) * bb + bb];
+                        let vrow = &v[(s * b + g) * bb..(s * b + g) * bb + bb];
+                        for j in 0..bb {
+                            let c = urow[j] * vrow[j];
+                            if c > arow[j] || arow[j].is_nan() {
+                                arow[j] = c;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Stage the two thin Monarch factors of ONE output sum into `u`/`v`
+/// (`[K, bb]` each): `u[(g·q + s)·bb + j] = U[g, s]` per batch lane `j`,
+/// `v[(s·b + g)·bb + j] = V[s, g]`. Shared by the forward and the
+/// backward (which recomputes `U`/`V` rather than saving `Ko` copies).
+#[allow(clippy::too_many_arguments)]
+fn monarch_stage_uv(
+    isa: Isa,
+    sr: Semiring,
+    lk: &[f32],
+    rk: &[f32],
+    k: usize,
+    b: usize,
+    q: usize,
+    bb: usize,
+    ent: &[f32],
+    enpt: &[f32],
+    u: &mut [f32],
+    v: &mut [f32],
+) {
+    match sr {
+        Semiring::SumProduct => {
+            u[..k * bb].fill(0.0);
+            v[..k * bb].fill(0.0);
+            for g in 0..b {
+                for rr in 0..q {
+                    let i = g * q + rr;
+                    let erow = &ent[i * bb..i * bb + bb];
+                    let lrow = &lk[i * q..i * q + q];
+                    for (s, &lv) in lrow.iter().enumerate() {
+                        axpy(isa, &mut u[(g * q + s) * bb..(g * q + s) * bb + bb], erow, lv);
+                    }
+                }
+            }
+            for s in 0..q {
+                for gp in 0..b {
+                    let j = s * b + gp;
+                    let erow = &enpt[j * bb..j * bb + bb];
+                    for g in 0..b {
+                        let rv = rk[(s * b + g) * b + gp];
+                        axpy(isa, &mut v[(s * b + g) * bb..(s * b + g) * bb + bb], erow, rv);
+                    }
+                }
+            }
+        }
+        Semiring::MaxProduct => {
+            u[..k * bb].fill(f32::NEG_INFINITY);
+            v[..k * bb].fill(f32::NEG_INFINITY);
+            for g in 0..b {
+                for rr in 0..q {
+                    let i = g * q + rr;
+                    let erow = &ent[i * bb..i * bb + bb];
+                    let lrow = &lk[i * q..i * q + q];
+                    for (s, &lv) in lrow.iter().enumerate() {
+                        let urow = &mut u[(g * q + s) * bb..(g * q + s) * bb + bb];
+                        for jj in 0..bb {
+                            let c = lv * erow[jj];
+                            if c > urow[jj] || urow[jj].is_nan() {
+                                urow[jj] = c;
+                            }
+                        }
+                    }
+                }
+            }
+            for s in 0..q {
+                for gp in 0..b {
+                    let j = s * b + gp;
+                    let erow = &enpt[j * bb..j * bb + bb];
+                    for g in 0..b {
+                        let rv = rk[(s * b + g) * b + gp];
+                        let vrow = &mut v[(s * b + g) * bb..(s * b + g) * bb + bb];
+                        for jj in 0..bb {
+                            let c = rv * erow[jj];
+                            if c > vrow[jj] || vrow[jj].is_nan() {
+                                vrow[jj] = c;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Blocked EM backward of one Monarch-factorized einsum slot (sum
+/// semiring — the only semiring the EM path runs).
+///
+/// Given the staged upstream signal `t[ko·bb + j] = ĝ[ko, row_j] ·
+/// exp(base_j − logS[ko, row_j])` (the same per-lane scale the dense
+/// backward stages into its accumulator), this accumulates expected-count
+/// gradients for BOTH factors and the two child blocks:
+///
+/// ```text
+///   gL[g][r, s]  += Σ_j en[g·q+r]_j · V[s, g]_j · t_j
+///   gR[s][g, g'] += Σ_j enp[s·b+g']_j · U[g, s]_j · t_j
+///   gen[g·q+r]_j  += en[g·q+r]_j  · t_j · Σ_s  L[g][r, s] · V[s, g]_j
+///   genp[s·b+g']_j += enp[s·b+g']_j · t_j · Σ_g R[s][g, g'] · U[g, s]_j
+/// ```
+///
+/// (summed over `ko`; `U`/`V` are recomputed per `ko` from the staged
+/// children rather than saved). `gl`/`gr` are accumulated in place
+/// (`[Ko, b, q, q]` / `[Ko, q, b, b]` grad spans); `gen_t`/`genp_t` are
+/// `[K, bb]` child-gradient blocks the caller scatters into its grad
+/// arena — they are zeroed here. `tmp` needs `2·bb` scratch scalars.
+///
+/// Reduction orders are fixed (lane reductions via [`dot4`]'s pinned
+/// 4-accumulator order, factor sums sequential ascending), so the result
+/// is bit-identical across ISAs and across the engines that share this
+/// function.
+#[allow(clippy::too_many_arguments)]
+pub fn monarch_block_bwd(
+    isa: Isa,
+    l: &[f32],
+    r: &[f32],
+    k: usize,
+    blocks: usize,
+    ko: usize,
+    bb: usize,
+    ent: &[f32],
+    enpt: &[f32],
+    t: &[f32],
+    u: &mut [f32],
+    v: &mut [f32],
+    tmp: &mut [f32],
+    gl: &mut [f32],
+    gr: &mut [f32],
+    gen_t: &mut [f32],
+    genp_t: &mut [f32],
+) {
+    let b = blocks;
+    let q = k / b;
+    debug_assert_eq!(b * q, k, "monarch_block_bwd: blocks must divide K");
+    assert!(l.len() >= ko * k * q && gl.len() >= ko * k * q, "monarch_block_bwd: L undersized");
+    assert!(r.len() >= ko * k * b && gr.len() >= ko * k * b, "monarch_block_bwd: R undersized");
+    assert!(t.len() >= ko * bb, "monarch_block_bwd: signal undersized");
+    assert!(tmp.len() >= 2 * bb, "monarch_block_bwd: scratch undersized");
+    assert!(gen_t.len() >= k * bb && genp_t.len() >= k * bb, "monarch_block_bwd: child grads undersized");
+    gen_t[..k * bb].fill(0.0);
+    genp_t[..k * bb].fill(0.0);
+    let (et, sv) = tmp.split_at_mut(bb);
+    for kout in 0..ko {
+        let lk = &l[kout * k * q..(kout + 1) * k * q];
+        let rk = &r[kout * k * b..(kout + 1) * k * b];
+        monarch_stage_uv(isa, Semiring::SumProduct, lk, rk, k, b, q, bb, ent, enpt, u, v);
+        let trow = &t[kout * bb..(kout + 1) * bb];
+        let glk = &mut gl[kout * k * q..(kout + 1) * k * q];
+        let grk = &mut gr[kout * k * b..(kout + 1) * k * b];
+        // left factor + left children: per child i = (g, r), weight the
+        // staged row by the upstream signal once (et = en ∘ t), then walk
+        // its q-entry L row.
+        for g in 0..b {
+            for rr in 0..q {
+                let i = g * q + rr;
+                let erow = &ent[i * bb..i * bb + bb];
+                for j in 0..bb {
+                    et[j] = erow[j] * trow[j];
+                }
+                sv[..bb].fill(0.0);
+                let lrow = &lk[i * q..i * q + q];
+                for s in 0..q {
+                    let vrow = &v[(s * b + g) * bb..(s * b + g) * bb + bb];
+                    glk[i * q + s] += dot4(isa, et, vrow);
+                    axpy(isa, &mut sv[..bb], vrow, lrow[s]);
+                }
+                let grow = &mut gen_t[i * bb..i * bb + bb];
+                for j in 0..bb {
+                    grow[j] += et[j] * sv[j];
+                }
+            }
+        }
+        // right factor + right children, symmetrically over j = (s, g').
+        for s in 0..q {
+            for gp in 0..b {
+                let jc = s * b + gp;
+                let erow = &enpt[jc * bb..jc * bb + bb];
+                for j in 0..bb {
+                    et[j] = erow[j] * trow[j];
+                }
+                sv[..bb].fill(0.0);
+                for g in 0..b {
+                    let urow = &u[(g * q + s) * bb..(g * q + s) * bb + bb];
+                    grk[(s * b + g) * b + gp] += dot4(isa, et, urow);
+                    axpy(isa, &mut sv[..bb], urow, rk[(s * b + g) * b + gp]);
+                }
+                let grow = &mut genp_t[jc * bb..jc * bb + bb];
+                for j in 0..bb {
+                    grow[j] += et[j] * sv[j];
+                }
+            }
+        }
     }
 }
 

@@ -44,7 +44,7 @@ pub mod sparse;
 
 use std::path::Path;
 
-use crate::layers::LayeredPlan;
+use crate::layers::{LayeredPlan, WeightStructure};
 use crate::leaves::LeafFamily;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
@@ -62,7 +62,14 @@ use crate::anyhow;
 /// Arena order (row-major within each span):
 ///   theta    [D, K, R, S]        natural leaf parameters, offset 0
 ///   level i: w [L_i, Ko_i, K, K] einsum weights (linear domain, normalized
-///                                over each trailing K*K block)
+///                                over each trailing K*K block); on a
+///                                Monarch level this span is instead the
+///                                left factor [L_i, Ko_i, b, q, q]
+///                                (normalized over each trailing b*q*q
+///                                block) and is followed by
+///            w2 [L_i, Ko_i, q, b, b] the right factor (each trailing
+///                                length-b row normalized), absent on
+///                                dense levels
 ///            mix [M_i, Cmax_i]   mixing weights (normalized over the real
 ///                                children; 0 on padding), when present
 #[derive(Clone, Debug, PartialEq)]
@@ -90,10 +97,19 @@ pub struct LevelLayout {
     pub slots: usize,
     /// per-slot output width Ko (K, or 1 on the root level)
     pub ko: usize,
-    /// offset of the [L, Ko, K, K] einsum-weight span
+    /// how each (slot, ko) logical [K, K] block is stored
+    pub structure: WeightStructure,
+    /// offset of the primary einsum-weight span: dense [L, Ko, K, K],
+    /// or the Monarch left factor [L, Ko, b, q, q] (layout [g, r, s])
     pub w_off: usize,
-    /// scalar count of the einsum-weight span
+    /// scalar count of the primary einsum-weight span
     pub w_len: usize,
+    /// offset of the Monarch right factor span [L, Ko, q, b, b]
+    /// (layout [s, g, g']); equals `w_off + w_len` (and `w2_len` is 0)
+    /// on dense levels
+    pub w2_off: usize,
+    /// scalar count of the right factor span (0 on dense levels)
+    pub w2_len: usize,
     /// the level's mixing-weight span, when it has a mixing layer
     pub mix: Option<MixLayout>,
 }
@@ -119,6 +135,8 @@ pub struct LevelSpec {
     pub slots: usize,
     /// per-slot output width
     pub ko: usize,
+    /// einsum weight structure of the level
+    pub structure: WeightStructure,
     /// (cmax, per-row real child counts)
     pub mix: Option<(usize, Vec<usize>)>,
 }
@@ -129,9 +147,11 @@ impl ParamLayout {
         let specs: Vec<LevelSpec> = plan
             .levels
             .iter()
-            .map(|lv| LevelSpec {
+            .zip(&plan.structures)
+            .map(|(lv, &ws)| LevelSpec {
                 slots: lv.einsum.len(),
                 ko: lv.einsum.ko,
+                structure: ws,
                 mix: lv.mixing.as_ref().map(|m| {
                     (m.cmax, m.child_slots.iter().map(Vec::len).collect())
                 }),
@@ -158,9 +178,13 @@ impl ParamLayout {
         let mut off = theta_len;
         let mut levels = Vec::with_capacity(specs.len());
         for sp in specs {
-            let w_len = sp.slots * sp.ko * k * k;
+            let (per_l, per_r) = sp.structure.factor_lens(k);
+            let w_len = sp.slots * sp.ko * per_l;
             let w_off = off;
             off += w_len;
+            let w2_len = sp.slots * sp.ko * per_r;
+            let w2_off = off;
+            off += w2_len;
             let mix = sp.mix.as_ref().map(|(cmax, counts)| {
                 let m = MixLayout {
                     off,
@@ -174,8 +198,11 @@ impl ParamLayout {
             levels.push(LevelLayout {
                 slots: sp.slots,
                 ko: sp.ko,
+                structure: sp.structure,
                 w_off,
                 w_len,
+                w2_off,
+                w2_len,
                 mix,
             });
         }
@@ -188,6 +215,31 @@ impl ParamLayout {
             levels,
             total: off,
         }
+    }
+
+    /// Reject a loaded checkpoint whose per-level weight structures differ
+    /// from this (requested) layout's. This fires *before* any span
+    /// arithmetic can misindex: a Monarch factor span read as a dense
+    /// K*K block (or vice versa) would silently produce garbage weights.
+    /// The error message carries the stable prefix
+    /// `weight-structure mismatch` so callers and tests can distinguish
+    /// it from generic shape mismatches.
+    pub fn ensure_same_structure(&self, loaded: &ParamLayout) -> Result<()> {
+        if self.levels.len() != loaded.levels.len() {
+            return Ok(()); // a different model entirely; generic check reports it
+        }
+        for (i, (want, got)) in self.levels.iter().zip(&loaded.levels).enumerate() {
+            ensure!(
+                want.structure == got.structure,
+                "weight-structure mismatch: checkpoint level {i} stores '{}' \
+                 weights but '{}' was requested (re-save the checkpoint or pass \
+                 --weights {})",
+                got.structure,
+                want.structure,
+                got.structure
+            );
+        }
+        Ok(())
     }
 }
 
@@ -409,12 +461,8 @@ impl ParamArena {
             family.init_theta(&mut rng, chunk);
         }
         let k = arena.layout.k;
-        for i in 0..arena.layout.levels.len() {
-            let (w_off, w_len) = {
-                let lv = &arena.layout.levels[i];
-                (lv.w_off, lv.w_len)
-            };
-            for block in arena.data[w_off..w_off + w_len].chunks_mut(k * k) {
+        let mut fill_norm = |rng: &mut Rng, span: &mut [f32], group: usize| {
+            for block in span.chunks_mut(group) {
                 let mut total = 0.0f32;
                 for v in block.iter_mut() {
                     *v = rng.uniform_in(0.01, 1.0) as f32;
@@ -422,6 +470,28 @@ impl ParamArena {
                 }
                 for v in block.iter_mut() {
                     *v /= total;
+                }
+            }
+        };
+        for i in 0..arena.layout.levels.len() {
+            let (structure, w_off, w_len, w2_off, w2_len) = {
+                let lv = &arena.layout.levels[i];
+                (lv.structure, lv.w_off, lv.w_len, lv.w2_off, lv.w2_len)
+            };
+            match structure {
+                WeightStructure::Dense => {
+                    fill_norm(&mut rng, &mut arena.data[w_off..w_off + w_len], k * k);
+                }
+                WeightStructure::Monarch { blocks } => {
+                    // left factor: one distribution per (slot, ko) block of
+                    // b*q*q; right factor: one distribution per length-b row
+                    let q = k / blocks;
+                    fill_norm(&mut rng, &mut arena.data[w_off..w_off + w_len], k * q);
+                    fill_norm(
+                        &mut rng,
+                        &mut arena.data[w2_off..w2_off + w2_len],
+                        blocks,
+                    );
                 }
             }
             let mix = arena.layout.levels[i].mix.clone();
@@ -458,10 +528,18 @@ impl ParamArena {
         &mut self.data[..self.layout.theta_len]
     }
 
-    /// Level `i`'s einsum-weight span, layout [L, Ko, K, K].
+    /// Level `i`'s primary einsum-weight span: dense [L, Ko, K, K], or
+    /// the Monarch left factor [L, Ko, b, q, q].
     pub fn w(&self, i: usize) -> &[f32] {
         let lv = &self.layout.levels[i];
         &self.data[lv.w_off..lv.w_off + lv.w_len]
+    }
+
+    /// Level `i`'s Monarch right-factor span [L, Ko, q, b, b] (empty on
+    /// dense levels).
+    pub fn w2(&self, i: usize) -> &[f32] {
+        let lv = &self.layout.levels[i];
+        &self.data[lv.w2_off..lv.w2_off + lv.w2_len]
     }
 
     /// Mutable view of level `i`'s einsum-weight span.
@@ -507,8 +585,12 @@ impl ParamArena {
     pub fn validate(&self) -> Result<()> {
         let k = self.layout.k;
         for (i, lv) in self.layout.levels.iter().enumerate() {
+            let (group, group2) = match lv.structure {
+                WeightStructure::Dense => (k * k, 0),
+                WeightStructure::Monarch { blocks } => (k * (k / blocks), blocks),
+            };
             for (b, block) in self.data[lv.w_off..lv.w_off + lv.w_len]
-                .chunks(k * k)
+                .chunks(group)
                 .enumerate()
             {
                 let sum: f32 = block.iter().sum();
@@ -520,6 +602,22 @@ impl ParamArena {
                     block.iter().all(|&v| v >= 0.0),
                     "w[{i}] has negative entries"
                 );
+            }
+            if group2 > 0 {
+                for (b, row) in self.data[lv.w2_off..lv.w2_off + lv.w2_len]
+                    .chunks(group2)
+                    .enumerate()
+                {
+                    let sum: f32 = row.iter().sum();
+                    ensure!(
+                        (sum - 1.0).abs() < 1e-3,
+                        "w2[{i}] row {b} not normalized: {sum}"
+                    );
+                    ensure!(
+                        row.iter().all(|&v| v >= 0.0),
+                        "w2[{i}] has negative entries"
+                    );
+                }
             }
             if let Some(m) = &lv.mix {
                 for (j, &cn) in m.child_counts.iter().enumerate() {
@@ -542,12 +640,22 @@ impl ParamArena {
     /// Serialize as a self-describing binary checkpoint: a layout header
     /// (including the leaf-family tag) followed by ONE length-prefixed
     /// slice — the whole arena in a single write.
+    ///
+    /// All-dense arenas write the original EINET002 format byte-for-byte
+    /// (older readers keep working); an arena with any structured level
+    /// writes EINET003, which inserts one weight-structure tag per level
+    /// (0 = dense, `b` = monarch with `b` blocks) after the level's `ko`.
     pub fn save(&self, path: &Path) -> Result<()> {
+        let structured = self
+            .layout
+            .levels
+            .iter()
+            .any(|lv| lv.structure != WeightStructure::Dense);
         let mut buf: Vec<u8> = Vec::with_capacity(4 * self.data.len() + 256);
         let push = |buf: &mut Vec<u8>, v: usize| {
             buf.extend_from_slice(&(v as u64).to_le_bytes())
         };
-        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(if structured { MAGIC_V3 } else { MAGIC });
         let (tag, arg) = family_tag(self.layout.family);
         push(&mut buf, tag);
         push(&mut buf, arg);
@@ -558,6 +666,15 @@ impl ParamArena {
         for lv in &self.layout.levels {
             push(&mut buf, lv.slots);
             push(&mut buf, lv.ko);
+            if structured {
+                push(
+                    &mut buf,
+                    match lv.structure {
+                        WeightStructure::Dense => 0,
+                        WeightStructure::Monarch { blocks } => blocks,
+                    },
+                );
+            }
             match &lv.mix {
                 None => push(&mut buf, u64::MAX as usize),
                 Some(m) => {
@@ -646,7 +763,8 @@ impl ParamArena {
 fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
     {
         ensure!(data.len() >= MAGIC.len(), "truncated checkpoint header");
-        if &data[..MAGIC.len()] != MAGIC {
+        let v3 = &data[..MAGIC.len()] == MAGIC_V3;
+        if !v3 && &data[..MAGIC.len()] != MAGIC {
             if &data[..MAGIC.len()] == b"EINET001" {
                 bail!(
                     "legacy EINET001 checkpoint: re-save with this version \
@@ -687,6 +805,20 @@ fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
                 slots < LIM && 0 < ko && ko < 1 << 12,
                 "implausible level shape L={slots} Ko={ko}"
             );
+            let structure = if v3 {
+                match take_usize(&data, &mut pos)? {
+                    0 => WeightStructure::Dense,
+                    b => {
+                        ensure!(
+                            b > 1 && b < k && k % b == 0,
+                            "invalid monarch block count {b} for K={k} in checkpoint"
+                        );
+                        WeightStructure::Monarch { blocks: b }
+                    }
+                }
+            } else {
+                WeightStructure::Dense
+            };
             let marker = take_u64(&data, &mut pos)?;
             let mix = if marker == u64::MAX {
                 None
@@ -708,7 +840,12 @@ fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
                 }
                 Some((cmax, counts))
             };
-            specs.push(LevelSpec { slots, ko, mix });
+            specs.push(LevelSpec {
+                slots,
+                ko,
+                structure,
+                mix,
+            });
         }
         // pre-validate the total size in u128 so the usize offset
         // arithmetic inside from_specs cannot overflow (each span is a
@@ -719,7 +856,9 @@ fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
             * num_replica as u128
             * family.stat_dim() as u128;
         for sp in &specs {
-            total_scalars += sp.slots as u128 * sp.ko as u128 * (k as u128) * (k as u128);
+            let (per_l, per_r) = sp.structure.factor_lens(k);
+            total_scalars +=
+                sp.slots as u128 * sp.ko as u128 * (per_l as u128 + per_r as u128);
             if let Some((cmax, counts)) = &sp.mix {
                 total_scalars += counts.len() as u128 * *cmax as u128;
             }
@@ -744,6 +883,9 @@ fn parse_checkpoint(data: &[u8]) -> Result<(ParamLayout, usize, usize)> {
 }
 
 const MAGIC: &[u8; 8] = b"EINET002";
+/// Structured-weights checkpoint magic: identical to EINET002 except one
+/// weight-structure tag per level after the level's `ko`.
+const MAGIC_V3: &[u8; 8] = b"EINET003";
 
 pub(crate) fn family_tag(family: LeafFamily) -> (usize, usize) {
     match family {

@@ -39,6 +39,9 @@ pub struct EngineEntry {
     pub name: &'static str,
     /// one-line description (shown by `einet engines`)
     pub description: &'static str,
+    /// weight-structure specs this backend can execute (shown by
+    /// `einet engines`; e.g. `["dense", "monarch"]`)
+    pub structures: &'static [&'static str],
     /// the boxed-engine constructor
     pub factory: EngineFactory,
 }
@@ -66,18 +69,21 @@ impl EngineRegistry {
         r.register(EngineEntry {
             name: "dense",
             description: "fused log-einsum-exp EiNet layout (the paper's)",
+            structures: &["dense", "monarch"],
             factory: boxed_build::<DenseEngine>,
         })
         .expect("fresh registry");
         r.register(EngineEntry {
             name: "sparse",
             description: "node-by-node LibSPN/SPFlow-style baseline",
+            structures: &["dense", "monarch"],
             factory: boxed_build::<SparseEngine>,
         })
         .expect("fresh registry");
         r.register(EngineEntry {
             name: "fused",
             description: "layer-fused superblock execution of the dense layout",
+            structures: &["dense", "monarch"],
             factory: boxed_build::<FusedEngine>,
         })
         .expect("fresh registry");
@@ -202,6 +208,7 @@ mod tests {
         reg.register(EngineEntry {
             name: "dense-v2",
             description: "test double",
+            structures: &["dense"],
             factory: boxed_build::<crate::engine::dense::DenseEngine>,
         })
         .unwrap();
@@ -211,6 +218,7 @@ mod tests {
             .register(EngineEntry {
                 name: "dense",
                 description: "dup",
+                structures: &["dense"],
                 factory: boxed_build::<crate::engine::dense::DenseEngine>,
             })
             .is_err());

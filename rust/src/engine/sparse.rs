@@ -27,7 +27,7 @@
 //! baseline gets the same polynomial transcendentals as the dense
 //! engine, keeping the comparison apples-to-apples per tier.
 
-use crate::layers::LayeredPlan;
+use crate::layers::{LayeredPlan, WeightStructure};
 use crate::leaves::LeafFamily;
 use crate::util::rng::Rng;
 use crate::util::MemFootprint;
@@ -53,6 +53,9 @@ pub struct SparseEngine {
     leaf_const: Vec<f32>,
     /// mixing-layer running-max scratch ([B, Ko])
     t_mix: Vec<f32>,
+    /// Monarch levels only: one dense log-weight row ([K*K]) expanded
+    /// from the two thin factors per output sum (empty on all-dense plans)
+    t_wrow: Vec<f32>,
     /// reusable state of the batched SamplePlan executor
     samp: exec::SampleScratch,
 }
@@ -82,6 +85,14 @@ impl SparseEngine {
             // accounting (which counts it on both layouts) is stable
             leaf_const: vec![0.0; exec.n_leaf_components()],
             t_mix: vec![0.0; batch_cap * k],
+            t_wrow: {
+                let any_monarch = exec
+                    .layout
+                    .levels
+                    .iter()
+                    .any(|l| matches!(l.structure, WeightStructure::Monarch { .. }));
+                vec![0.0; if any_monarch { k * k } else { 0 }]
+            },
             samp: exec::SampleScratch::new(&exec),
             exec,
         }
@@ -116,7 +127,8 @@ impl SparseEngine {
             scratch: 4 * (self.prod_arena.len()
                 + self.scratch.len()
                 + self.leaf_const.len()
-                + self.t_mix.len())
+                + self.t_mix.len()
+                + self.t_wrow.len())
                 + logw_bytes
                 + self.samp.bytes(),
         }
@@ -186,17 +198,31 @@ impl SparseEngine {
                 )
             }
             Step::Einsum {
+                level,
                 pid,
                 left,
                 right,
                 ko,
                 w,
+                w2,
                 dest,
                 to_scratch,
                 ..
             } => {
-                self.refresh_log_span(params, w, ko * self.exec.k * self.exec.k);
-                self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn, sr)
+                let k = self.exec.k;
+                match self.exec.layout.levels[level].structure {
+                    WeightStructure::Dense => {
+                        self.refresh_log_span(params, w, ko * k * k);
+                        self.fwd_einsum(pid, left, right, ko, w, dest, to_scratch, bn, sr)
+                    }
+                    WeightStructure::Monarch { blocks } => {
+                        self.refresh_log_span(params, w, ko * k * (k / blocks));
+                        self.refresh_log_span(params, w2, ko * k * blocks);
+                        self.fwd_einsum_monarch(
+                            pid, left, right, ko, w, w2, blocks, dest, to_scratch, bn, sr,
+                        )
+                    }
+                }
             }
             Step::Mix {
                 out,
@@ -331,6 +357,100 @@ impl SparseEngine {
         }
     }
 
+    /// One **Monarch-factorized** einsum slot, baseline style: the
+    /// explicit outer sum is identical to the dense-weight path, and per
+    /// output sum the two thin log-factors are expanded into one dense
+    /// log-weight row (`log W[i,j] = log L[i,s] + log R[(s,g),g']` — a
+    /// unique path, so the expansion is exact under both semirings)
+    /// before the usual `K²` log-sum-exp. The baseline thus keeps its
+    /// node-by-node character: Monarch only changes where the weight
+    /// row's scalars come from.
+    #[allow(clippy::too_many_arguments)]
+    fn fwd_einsum_monarch(
+        &mut self,
+        pid: usize,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        w2: usize,
+        blocks: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+        sr: Semiring,
+    ) {
+        let k = self.exec.k;
+        let kk2 = k * k;
+        let isa = self.exec.simd;
+        let math = self.exec.math;
+        let poff = self.prod_off[pid];
+        for b in 0..bn {
+            let lrow = left + b * k;
+            let rrow = right + b * k;
+            let prow = poff + b * kk2;
+            for ii in 0..k {
+                let ln_i = self.arena[lrow + ii];
+                kernels::add_scalar(
+                    isa,
+                    &mut self.prod_arena[prow + ii * k..prow + (ii + 1) * k],
+                    &self.arena[rrow..rrow + k],
+                    ln_i,
+                );
+            }
+        }
+        let wl = w - self.exec.layout.theta_len;
+        let w2l = w2 - self.exec.layout.theta_len;
+        for kout in 0..ko {
+            self.expand_log_wrow(wl, w2l, kout, blocks);
+            for b in 0..bn {
+                let prow = poff + b * kk2;
+                let m = kernels::max_add(
+                    isa,
+                    &self.t_wrow[..kk2],
+                    &self.prod_arena[prow..prow + kk2],
+                );
+                let out = match sr {
+                    Semiring::SumProduct => {
+                        let mut s = 0.0f32;
+                        for (idx, &wv) in self.t_wrow[..kk2].iter().enumerate() {
+                            s += math.exp1(wv + self.prod_arena[prow + idx] - m);
+                        }
+                        m + math.ln1(s)
+                    }
+                    Semiring::MaxProduct => m,
+                };
+                let drow = dest + b * ko + kout;
+                if to_scratch {
+                    self.scratch[drow] = out;
+                } else {
+                    self.arena[drow] = out;
+                }
+            }
+        }
+    }
+
+    /// Expand output sum `kout`'s two thin log-factors into the dense
+    /// `[K, K]` log-weight row scratch (`t_wrow`). `wl`/`w2l` are the
+    /// factor spans' offsets into the log-domain cache.
+    fn expand_log_wrow(&mut self, wl: usize, w2l: usize, kout: usize, blocks: usize) {
+        let k = self.exec.k;
+        let q = k / blocks;
+        let lk = &self.log_params[wl + kout * k * q..wl + (kout + 1) * k * q];
+        let rk =
+            &self.log_params[w2l + kout * k * blocks..w2l + (kout + 1) * k * blocks];
+        for ii in 0..k {
+            let g = ii / q;
+            let lrow = &lk[ii * q..(ii + 1) * q];
+            let wrow = &mut self.t_wrow[ii * k..(ii + 1) * k];
+            for (jj, wv) in wrow.iter_mut().enumerate() {
+                let s = jj / blocks;
+                let gp = jj % blocks;
+                *wv = lrow[s] + rk[(s * blocks + g) * blocks + gp];
+            }
+        }
+    }
+
     /// Mixing node, baseline style: log-domain weighted log-sum-exp (or
     /// plain max, under the max semiring) over the stored child outputs.
     /// Pass 1 is a vectorized running max over the contiguous child
@@ -408,10 +528,13 @@ impl SparseEngine {
         stats.count += bn;
     }
 
-    /// Execute one backward step by index.
+    /// Execute one backward step by index (`params` feeds the Monarch
+    /// factor gradients their exact linear co-factors; dense spans keep
+    /// reading the log-domain cache).
     #[allow(clippy::too_many_arguments)]
     fn run_backward_step(
         &mut self,
+        params: &ParamArena,
         x: &[f32],
         mask: &[f32],
         bn: usize,
@@ -431,17 +554,25 @@ impl SparseEngine {
                 ..
             } => self.bwd_mix(out, ko, children, child, child_stride, w, bn, stats),
             Step::Einsum {
+                level,
                 pid,
                 left,
                 right,
                 ko,
                 w,
+                w2,
                 dest,
                 to_scratch,
                 ..
-            } => self.bwd_einsum(
-                pid, left, right, ko, w, dest, to_scratch, bn, stats,
-            ),
+            } => match self.exec.layout.levels[level].structure {
+                WeightStructure::Dense => self.bwd_einsum(
+                    pid, left, right, ko, w, dest, to_scratch, bn, stats,
+                ),
+                WeightStructure::Monarch { blocks } => self.bwd_einsum_monarch(
+                    params, pid, left, right, ko, w, w2, blocks, dest, to_scratch, bn,
+                    stats,
+                ),
+            },
             Step::Leaf { rid, out } => exec::leaf_backward(
                 &self.exec,
                 rid,
@@ -467,13 +598,12 @@ impl SparseEngine {
         bn: usize,
         stats: &mut EmStats,
     ) {
-        let _ = params; // weights are read from the log-domain cache
         self.clear_grad();
         self.seed_root_grad(bn, stats);
         // one suff-stats scratch for every Leaf step of this pass
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for si in (0..self.exec.steps.len()).rev() {
-            self.run_backward_step(x, mask, bn, si, stats, &mut tbuf);
+            self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
         }
     }
 
@@ -489,10 +619,9 @@ impl SparseEngine {
         steps: &[usize],
         stats: &mut EmStats,
     ) {
-        let _ = params; // weights are read from the log-domain cache
         let mut tbuf = vec![0.0f32; self.exec.family.stat_dim()];
         for &si in steps.iter().rev() {
-            self.run_backward_step(x, mask, bn, si, stats, &mut tbuf);
+            self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
         }
     }
 
@@ -574,6 +703,103 @@ impl SparseEngine {
             }
         }
         // product backward: distribute to the two children
+        for b in 0..bn {
+            let prow = poff + b * kk2;
+            let lrow = left + b * k;
+            let rrow = right + b * k;
+            for ii in 0..k {
+                let mut acc = 0.0f32;
+                for jj in 0..k {
+                    let gp = self.grad_prod[prow + ii * k + jj];
+                    acc += gp;
+                    self.grad_arena[rrow + jj] += gp;
+                }
+                self.grad_arena[lrow + ii] += acc;
+            }
+        }
+    }
+
+    /// The baseline backward of one Monarch-factorized einsum slot. The
+    /// product-gradient distribution is identical to the dense-weight
+    /// path (through the expanded log-weight row); the EM weight
+    /// gradients land on the two thin factors via the chain rule through
+    /// `W = L·R`:
+    ///
+    /// ```text
+    ///   ∂logS/∂L[i, s]       = Σ_g'  R[(s,g),g'] · exp(prod[i, (s,g')] − logS)
+    ///   ∂logS/∂R[(s,g), g']  = Σ_r   L[(g,r), s] · exp(prod[(g,r), (s,g')] − logS)
+    /// ```
+    ///
+    /// with the co-factors read at their exact linear values from
+    /// `params` (not `exp(ln ·)` round-trips through the cache).
+    #[allow(clippy::too_many_arguments)]
+    fn bwd_einsum_monarch(
+        &mut self,
+        params: &ParamArena,
+        pid: usize,
+        left: usize,
+        right: usize,
+        ko: usize,
+        w: usize,
+        w2: usize,
+        blocks: usize,
+        dest: usize,
+        to_scratch: bool,
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        let k = self.exec.k;
+        let q = k / blocks;
+        let kk2 = k * k;
+        let math = self.exec.math;
+        let poff = self.prod_off[pid];
+        let wl = w - self.exec.layout.theta_len;
+        let w2l = w2 - self.exec.layout.theta_len;
+        // the left-factor region precedes the right-factor region, so one
+        // split yields both gradient views
+        let (glo, ghi) = stats.grad.split_at_mut(w2);
+        for kout in 0..ko {
+            self.expand_log_wrow(wl, w2l, kout, blocks);
+            let lk_lin = &params.data[w + kout * k * q..w + (kout + 1) * k * q];
+            let rk_lin =
+                &params.data[w2 + kout * k * blocks..w2 + (kout + 1) * k * blocks];
+            let gl = &mut glo[w + kout * k * q..w + (kout + 1) * k * q];
+            let gr = &mut ghi[kout * k * blocks..(kout + 1) * k * blocks];
+            for b in 0..bn {
+                let drow = dest + b * ko + kout;
+                let (g_out, logs) = if to_scratch {
+                    (self.grad_scratch[drow], self.scratch[drow])
+                } else {
+                    (self.grad_arena[drow], self.arena[drow])
+                };
+                if g_out == 0.0 {
+                    continue;
+                }
+                let prow = poff + b * kk2;
+                for ii in 0..k {
+                    let gb = ii / q;
+                    for jj in 0..k {
+                        let idx = ii * k + jj;
+                        let s = jj / blocks;
+                        let gp = jj % blocks;
+                        // d logS / d logProd = exp(logW + prod - logS)
+                        let e = math.exp1(
+                            self.t_wrow[idx] + self.prod_arena[prow + idx] - logs,
+                        );
+                        self.grad_prod[prow + idx] += g_out * e;
+                        // chain rule through W = L·R: co-factor times
+                        // exp(prod - logS)
+                        let ep = math.exp1(self.prod_arena[prow + idx] - logs);
+                        gl[ii * q + s] +=
+                            g_out * rk_lin[(s * blocks + gb) * blocks + gp] * ep;
+                        gr[(s * blocks + gb) * blocks + gp] +=
+                            g_out * lk_lin[ii * q + s] * ep;
+                    }
+                }
+            }
+        }
+        // product backward: distribute to the two children (identical to
+        // the dense-weight path)
         for b in 0..bn {
             let prow = poff + b * kk2;
             let lrow = left + b * k;

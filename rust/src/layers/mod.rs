@@ -10,6 +10,149 @@
 //! with Ko = K slots.
 
 use crate::graph::{PartitionId, RegionGraph, RegionId};
+use crate::util::error::Result;
+use crate::{anyhow, bail, ensure};
+
+/// How a sum layer's per-output `[K, K]` einsum weight block is stored.
+///
+/// `Dense` is the paper's monolithic block: `K*K` free weights per
+/// `(slot, ko)`, normalized over the block. `Monarch { blocks: b }`
+/// factorizes the block into two thin block-diagonal factors
+/// ("Scaling Probabilistic Circuits via Monarch Matrices"): with
+/// `q = K / b`, left child index `i = (g, r)` (`g` in `0..b`, `r` in
+/// `0..q`) and right child index `j = (s, g')` (`s` in `0..q`, `g'` in
+/// `0..b`),
+///
+/// ```text
+/// W[ko][(g,r),(s,g')] = L[ko][g][r,s] * R[ko][s][g,g']
+/// ```
+///
+/// i.e. `b` left blocks of shape `[q, q]` and `q` right blocks of shape
+/// `[b, b]` — `K*(q + b)` parameters per `(slot, ko)` instead of `K*K`.
+/// Every expanded entry is the product of exactly one `L` entry and one
+/// `R` entry (a unique path), so the factorization is exact under both
+/// the sum and the max semiring, and normalizing `L[ko]` over its whole
+/// block while row-normalizing each `R[ko][s]` row (over `g'`, length
+/// `b`) keeps the expanded block a distribution over `(i, j)` — the
+/// "normalization per logical row" the dense layout guarantees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightStructure {
+    /// one dense `[K, K]` block per `(slot, ko)`
+    Dense,
+    /// Monarch factorization with `blocks` left blocks (`blocks | K`)
+    Monarch { blocks: usize },
+}
+
+impl WeightStructure {
+    /// Names accepted by [`WeightStructure::parse`], for error listings.
+    pub const SUPPORTED: &'static str = "dense, monarch[:blocks]";
+
+    /// Parse a CLI/wire spec (`dense`, `monarch`, `monarch:8`) for a
+    /// given layer width `k`. `monarch` without an explicit block count
+    /// picks [`WeightStructure::default_blocks`]. Unknown names and
+    /// invalid block counts are rejected with the supported list.
+    pub fn parse(spec: &str, k: usize) -> Result<Self> {
+        if spec == "dense" {
+            return Ok(Self::Dense);
+        }
+        if let Some(rest) = spec.strip_prefix("monarch") {
+            let blocks = if rest.is_empty() {
+                match Self::default_blocks(k) {
+                    Some(b) => b,
+                    None => bail!(
+                        "weight structure 'monarch' needs a composite K with a \
+                         divisor in 2..K; K={k} has none (use K=16, 32, 64, ...)"
+                    ),
+                }
+            } else {
+                let digits = rest.strip_prefix(':').ok_or_else(|| {
+                    anyhow!(
+                        "unknown weight structure '{spec}': supported structures \
+                         are {}",
+                        Self::SUPPORTED
+                    )
+                })?;
+                let b: usize = digits.parse().map_err(|_| {
+                    anyhow!("bad monarch block count '{digits}' in '{spec}'")
+                })?;
+                ensure!(
+                    b > 1 && b < k && k % b == 0,
+                    "monarch block count {b} must divide K={k} and lie in 2..K"
+                );
+                b
+            };
+            return Ok(Self::Monarch { blocks });
+        }
+        bail!(
+            "unknown weight structure '{spec}': supported structures are {}",
+            Self::SUPPORTED
+        )
+    }
+
+    /// The divisor of `k` nearest `sqrt(k)` (ties toward the larger), the
+    /// parameter-optimal block count. `None` when `k` has no divisor in
+    /// `2..k` (prime `k` or `k <= 3`).
+    pub fn default_blocks(k: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for b in 2..k {
+            if k % b != 0 {
+                continue;
+            }
+            let score = |b: usize| {
+                let q = k / b;
+                // params per (slot, ko): K*(q + b) — minimized at b ~ sqrt(K)
+                q + b
+            };
+            best = Some(match best {
+                Some(cur) if score(cur) < score(b) => cur,
+                _ => b,
+            });
+        }
+        best
+    }
+
+    /// Canonical spec string (`dense` / `monarch:8`); round-trips through
+    /// [`WeightStructure::parse`]. Used by checkpoints and the worker
+    /// handshake so every host resolves the same concrete structure.
+    pub fn spec(&self) -> String {
+        match self {
+            Self::Dense => "dense".into(),
+            Self::Monarch { blocks } => format!("monarch:{blocks}"),
+        }
+    }
+
+    /// The structure family name without parameters (`dense` /
+    /// `monarch`), matched against the registry's per-engine
+    /// supported-structure listings.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Monarch { .. } => "monarch",
+        }
+    }
+
+    /// Scalar counts of the two per-`(slot, ko)` factor spans:
+    /// `(K*K, 0)` for dense, `(K*q, K*b)` for Monarch (left factor
+    /// layout `[g, r, s]`, right factor layout `[s, g, g']`).
+    pub fn factor_lens(&self, k: usize) -> (usize, usize) {
+        match *self {
+            Self::Dense => (k * k, 0),
+            Self::Monarch { blocks } => (k * (k / blocks), k * blocks),
+        }
+    }
+
+    /// Parameters per `(slot, ko)` logical `[K, K]` block.
+    pub fn params_per_block(&self, k: usize) -> usize {
+        let (a, b) = self.factor_lens(k);
+        a + b
+    }
+}
+
+impl std::fmt::Display for WeightStructure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
 
 /// Where a region's output vector lives after its level is computed.
 #[derive(Clone, Copy, PartialEq, Debug)]
@@ -73,6 +216,8 @@ pub struct LayeredPlan {
     pub k: usize,
     pub num_replica: usize,
     pub levels: Vec<Level>,
+    /// per-level einsum weight structure (parallel to `levels`)
+    pub structures: Vec<WeightStructure>,
     /// leaf regions in evaluation order
     pub leaf_region_ids: Vec<RegionId>,
 }
@@ -193,13 +338,41 @@ impl LayeredPlan {
             graph.leaves().map(|r| r.id).collect();
         leaf_region_ids.sort_unstable();
 
+        let structures = vec![WeightStructure::Dense; levels.len()];
         LayeredPlan {
             graph,
             k,
             num_replica,
             levels,
+            structures,
             leaf_region_ids,
         }
+    }
+
+    /// Apply one [`WeightStructure`] to every einsum level. Monarch block
+    /// counts are validated against this plan's `k`; the root level keeps
+    /// the same structure (its `[K, K]` block factorizes the same way —
+    /// `ko = 1` only narrows the outer index).
+    pub fn with_weight_structure(mut self, ws: WeightStructure) -> Result<Self> {
+        if let WeightStructure::Monarch { blocks } = ws {
+            ensure!(
+                blocks > 1 && blocks < self.k && self.k % blocks == 0,
+                "monarch block count {blocks} must divide K={} and lie in 2..K",
+                self.k
+            );
+        }
+        self.structures = vec![ws; self.levels.len()];
+        Ok(self)
+    }
+
+    /// The plan-wide weight structure ([`Self::with_weight_structure`]
+    /// applies one structure to every level; an empty plan reads as
+    /// dense).
+    pub fn weight_structure(&self) -> WeightStructure {
+        self.structures
+            .first()
+            .copied()
+            .unwrap_or(WeightStructure::Dense)
     }
 
     /// Total number of vectorized sum slots (einsum + mixing), the paper's
@@ -216,8 +389,9 @@ impl LayeredPlan {
     pub fn num_sum_params(&self) -> usize {
         self.levels
             .iter()
-            .map(|lv| {
-                lv.einsum.len() * lv.einsum.ko * self.k * self.k
+            .zip(&self.structures)
+            .map(|(lv, ws)| {
+                lv.einsum.len() * lv.einsum.ko * ws.params_per_block(self.k)
                     + lv.mixing
                         .as_ref()
                         .map_or(0, |m| m.len() * m.cmax)

@@ -115,6 +115,6 @@ pub use engine::sparse::SparseEngine;
 pub use engine::{
     ArenaShard, DecodeMode, EinetParams, EmStats, Engine, ParamArena, ParamLayout,
 };
-pub use layers::LayeredPlan;
+pub use layers::{LayeredPlan, WeightStructure};
 pub use leaves::LeafFamily;
 pub use util::error::{Error, Result};

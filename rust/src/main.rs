@@ -25,7 +25,7 @@ use einet::util::rng::Rng;
 use einet::util::stats::welch_t_test;
 use einet::{
     DecodeMode, DenseEngine, EinetParams, EngineRegistry, FusedEngine, LayeredPlan,
-    LeafFamily, Query, QueryOutput, SparseEngine,
+    LeafFamily, Query, QueryOutput, SparseEngine, WeightStructure,
 };
 
 fn main() {
@@ -88,10 +88,12 @@ commands:
   engines     list the runtime engine registry (--engine names)
 
 global options: --engine dense|sparse|fused selects the backend by registry
-name; --shards N scope-partitions the model across N segment workers
-(model-parallel; 0 = data-parallel / single engine); --fastmath opts
-into the ULP-bounded vectorized exp/ln tier (same as
-EINET_KERNELS=fastmath; default stays bit-exact libm)
+name; --weights dense|monarch[:blocks] selects the sum-weight structure
+(monarch stores two thin block-diagonal factors per [K,K] block —
+K*(K/b + b) parameters instead of K*K); --shards N scope-partitions the
+model across N segment workers (model-parallel; 0 = data-parallel /
+single engine); --fastmath opts into the ULP-bounded vectorized exp/ln
+tier (same as EINET_KERNELS=fastmath; default stays bit-exact libm)
 
 benches: cargo bench --bench fig3_train | fig6_inference | einsum_op |
          ablation_stability
@@ -117,6 +119,7 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "steps", help: "EM steps (e2e)", default: Some("50"), is_flag: false },
         OptSpec { name: "replica", help: "replica override for table1", default: Some("10"), is_flag: false },
         OptSpec { name: "engine", help: "execution backend (registry name; see `einet engines`)", default: Some("dense"), is_flag: false },
+        OptSpec { name: "weights", help: "sum-weight structure: dense | monarch[:blocks]", default: Some("dense"), is_flag: false },
         OptSpec { name: "shards", help: "scope-partition across N workers (0: data-parallel)", default: Some("0"), is_flag: false },
         OptSpec { name: "mode", help: "query mode: loglik|marginal|conditional|mpe", default: Some("marginal"), is_flag: false },
         OptSpec { name: "listen", help: "shard-worker bind address (0 picks an ephemeral port)", default: Some("127.0.0.1:0"), is_flag: false },
@@ -149,7 +152,22 @@ fn setup(
     let structure = a.get_str("structure", spec)?;
     let k = a.get_usize("k", spec)?;
     let graph = from_spec(ds.num_vars, &structure)?;
-    let plan = LayeredPlan::compile(graph, k);
+    let weights = a.get_str("weights", spec)?;
+    let ws = WeightStructure::parse(&weights, k)?;
+    // registry-style validation: an engine that does not list the
+    // requested structure family fails here, before any lowering
+    if let Some(entry) = EngineRegistry::builtin().get(&a.get_str("engine", spec)?) {
+        if !entry.structures.contains(&ws.kind()) {
+            bail!(
+                "engine '{}' does not support weight structure '{}' \
+                 (supported: {})",
+                entry.name,
+                ws.kind(),
+                entry.structures.join(", ")
+            );
+        }
+    }
+    let plan = LayeredPlan::compile(graph, k).with_weight_structure(ws)?;
     Ok((ds, plan, LeafFamily::Bernoulli))
 }
 
@@ -235,7 +253,12 @@ fn cmd_engines(argv: &[String]) -> Result<()> {
         } else {
             " "
         };
-        println!("{mark} {:<8} {}", e.name, e.description);
+        println!(
+            "{mark} {:<8} {:<56} weights: {}",
+            e.name,
+            e.description,
+            e.structures.join(", ")
+        );
     }
     Ok(())
 }
@@ -322,7 +345,12 @@ fn load_checked(
             family
         );
     }
-    if params.layout != einet::ParamLayout::from_plan(plan, family) {
+    let want = einet::ParamLayout::from_plan(plan, family);
+    // per-level structure tags first: a dense checkpoint loaded with
+    // --weights monarch (or vice versa) gets the typed
+    // "weight-structure mismatch" error, not the generic one below
+    want.ensure_same_structure(&params.layout)?;
+    if params.layout != want {
         bail!(
             "checkpoint layout does not match the configured structure/--k \
              (saved with a different plan?)"

@@ -356,3 +356,49 @@ fn dense_decode_after_simd_forward_matches_scalar() {
     kernels::force_scalar(false);
     assert_eq!(rows[0], rows[1], "decode over scalar vs SIMD activations");
 }
+
+// ---------------------------------------------------------------------------
+// tune_block_rows: autotuner edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tune_block_rows_edge_cases() {
+    for isa in [Isa::Scalar, Isa::best()] {
+        let lane = isa.lanes();
+        // K = 1 (the root level): still a positive block size
+        for cap in [1usize, 3, 64, 1000] {
+            let bb = kernels::tune_block_rows(1, cap, isa);
+            assert!(bb >= 1 && bb <= cap, "k=1 cap={cap} {isa:?}: bb={bb}");
+        }
+        // K not a multiple of the lane width: the chosen block is still
+        // a lane multiple unless the batch capacity truncates it
+        for k in [3usize, 5, 7, 11, 13] {
+            let bb = kernels::tune_block_rows(k, 4096, isa);
+            assert!(bb >= 1, "k={k} {isa:?}: empty block");
+            assert_eq!(bb % lane, 0, "k={k} {isa:?}: bb={bb} not lane-aligned");
+            assert!(bb <= 64, "k={k} {isa:?}: bb={bb} above the clamp");
+        }
+        // batch capacity smaller than one lane-aligned block: the cap
+        // wins (a partial block, never zero, never above the capacity)
+        for k in [1usize, 4, 8, 64] {
+            for cap in 1..2 * lane {
+                let bb = kernels::tune_block_rows(k, cap, isa);
+                assert!(
+                    bb >= 1 && bb <= cap,
+                    "k={k} cap={cap} {isa:?}: bb={bb} outside [1, cap]"
+                );
+            }
+        }
+        // huge K: the working set overflows the L1 budget; the tuner
+        // falls back to the lane floor instead of zero
+        let bb = kernels::tune_block_rows(512, 4096, isa);
+        assert!(bb >= 1 && bb % lane == 0, "k=512 {isa:?}: bb={bb}");
+        // deterministic in (k, cap, isa): sharded workers must agree
+        for k in [1usize, 4, 7, 32] {
+            assert_eq!(
+                kernels::tune_block_rows(k, 256, isa),
+                kernels::tune_block_rows(k, 256, isa)
+            );
+        }
+    }
+}

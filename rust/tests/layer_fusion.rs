@@ -342,6 +342,7 @@ fn shard_worker_handshake_refusal_lists_registered_names() {
     let (addrs, handles) = spawn_loopback_workers(1).unwrap();
     let cfg = WorkerConfig {
         structure: "rat:depth=2,replica=2,seed=1".to_string(),
+        weights: "dense".to_string(),
         num_vars: 8,
         k: 3,
         family: LeafFamily::Bernoulli,

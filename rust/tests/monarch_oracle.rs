@@ -1,0 +1,574 @@
+//! Monarch weight-structure oracle and parity suite.
+//!
+//! The anchor is the **dense-expansion oracle**: a Monarch level stores
+//! two thin block-diagonal factors whose expansion
+//! `W[ko][(g,r),(s,g')] = L[ko][g][r,s] * R[ko][s][g,g']` is an ordinary
+//! dense `[K, K]` einsum block. Expanding the factors of a
+//! Monarch-structured plan into a dense plan over the same region graph
+//! must reproduce forward log-likelihoods and max-product (MPE) scores —
+//! across every engine (dense / sparse / fused), both structure families
+//! (RAT forests and Poon–Domingos grids with mixing layers), and every
+//! leaf family. On top of the oracle:
+//!
+//! * fused vs dense on Monarch plans is **bit-identical** (forward and
+//!   EM statistics — the fused contract does not weaken for structured
+//!   levels);
+//! * EM on the factors keeps the conditional-decomposition normalization
+//!   invariants and improves training log-likelihood;
+//! * 1-shard vs 4-shard execution (in-process channels and loopback TCP
+//!   with the v2 weight-structure handshake) is bit-identical;
+//! * EINET003 checkpoints round-trip, dense checkpoints stay EINET002
+//!   byte-compatible, and structure mismatches fail with the typed
+//!   `weight-structure mismatch` error instead of misreading spans.
+
+use einet::coordinator::transport::spawn_loopback_workers;
+use einet::coordinator::ShardedPool;
+use einet::em::{m_step, EmConfig};
+use einet::structure::{from_spec, poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DecodeMode, DenseEngine, EinetParams, EmStats, Engine,
+    FusedEngine, LayeredPlan, LeafFamily, ParamLayout, SparseEngine,
+    WeightStructure,
+};
+
+/// Draw a batch of valid observations for the family.
+fn random_batch(family: LeafFamily, bn: usize, nv: usize, rng: &mut Rng) -> Vec<f32> {
+    let od = family.obs_dim();
+    let mut x = vec![0.0f32; bn * nv * od];
+    for v in x.chunks_mut(od) {
+        match family {
+            LeafFamily::Bernoulli => {
+                v[0] = if rng.bernoulli(0.5) { 1.0 } else { 0.0 };
+            }
+            LeafFamily::Gaussian { .. } => {
+                for c in v.iter_mut() {
+                    *c = 0.5 + 0.2 * rng.normal() as f32;
+                }
+            }
+            LeafFamily::Categorical { cats } => {
+                v[0] = rng.below(cats) as f32;
+            }
+            LeafFamily::Binomial { trials } => {
+                v[0] = rng.below(trials as usize + 1) as f32;
+            }
+        }
+    }
+    x
+}
+
+/// A random marginalization mask that keeps at least one variable.
+fn random_mask(nv: usize, rng: &mut Rng) -> Vec<f32> {
+    loop {
+        let mask: Vec<f32> = (0..nv)
+            .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+            .collect();
+        if mask.iter().any(|&m| m != 0.0) {
+            return mask;
+        }
+    }
+}
+
+fn monarch_plan(plan: LayeredPlan, blocks: usize) -> LayeredPlan {
+    plan.with_weight_structure(WeightStructure::Monarch { blocks })
+        .expect("valid monarch block count")
+}
+
+/// Expand a Monarch parameter arena into the dense arena of the same
+/// region graph: theta and mixing spans copy verbatim, every factor pair
+/// expands to its logical `[K, K]` block. This is the ground truth the
+/// structured execution paths are checked against.
+fn expand_to_dense(
+    mplan: &LayeredPlan,
+    params: &EinetParams,
+    family: LeafFamily,
+) -> (LayeredPlan, EinetParams) {
+    let dplan = LayeredPlan::compile(mplan.graph.clone(), mplan.k);
+    let mut dp = EinetParams::zeros(ParamLayout::from_plan(&dplan, family));
+    let k = mplan.k;
+    let ml = &params.layout;
+    dp.data[..ml.theta_len].copy_from_slice(&params.data[..ml.theta_len]);
+    let dlevels = dp.layout.levels.clone();
+    for (lm, ld) in ml.levels.iter().zip(&dlevels) {
+        match lm.structure {
+            WeightStructure::Dense => {
+                dp.data[ld.w_off..ld.w_off + ld.w_len]
+                    .copy_from_slice(&params.data[lm.w_off..lm.w_off + lm.w_len]);
+            }
+            WeightStructure::Monarch { blocks } => {
+                let q = k / blocks;
+                for be in 0..lm.slots * lm.ko {
+                    let l = &params.data
+                        [lm.w_off + be * k * q..lm.w_off + (be + 1) * k * q];
+                    let r = &params.data[lm.w2_off + be * k * blocks
+                        ..lm.w2_off + (be + 1) * k * blocks];
+                    let w = &mut dp.data
+                        [ld.w_off + be * k * k..ld.w_off + (be + 1) * k * k];
+                    for ii in 0..k {
+                        let g = ii / q;
+                        for jj in 0..k {
+                            let s = jj / blocks;
+                            let gp = jj % blocks;
+                            w[ii * k + jj] =
+                                l[ii * q + s] * r[(s * blocks + g) * blocks + gp];
+                        }
+                    }
+                }
+            }
+        }
+        if let (Some(mm), Some(md)) = (&lm.mix, &ld.mix) {
+            dp.data[md.off..md.off + md.len]
+                .copy_from_slice(&params.data[mm.off..mm.off + mm.len]);
+        }
+    }
+    (dplan, dp)
+}
+
+/// Run forward + backward through any engine.
+fn run_engine<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+) -> (Vec<f32>, EmStats) {
+    let mut engine = E::build(plan.clone(), family, bn);
+    let mut logp = vec![0.0f32; bn];
+    engine.forward(params, x, mask, &mut logp);
+    let mut stats = EmStats::zeros_like(params);
+    engine.backward(params, x, mask, bn, &mut stats);
+    (logp, stats)
+}
+
+fn assert_stats_close(a: &EmStats, b: &EmStats, ctx: &str) {
+    assert_eq!(a.count, b.count, "{ctx}: count");
+    assert!(
+        (a.loglik - b.loglik).abs() < 1e-3 * (1.0 + a.loglik.abs()),
+        "{ctx}: loglik {} vs {}",
+        a.loglik,
+        b.loglik
+    );
+    for (i, (x, y)) in a.grad.iter().zip(&b.grad).enumerate() {
+        assert!(
+            (x - y).abs() < 3e-3 * (1.0 + x.abs()),
+            "{ctx}: grad[{i}] {x} vs {y}"
+        );
+    }
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() < 2e-3 * (1.0 + a.abs())
+}
+
+/// The full oracle for one (plan, family) pair: every engine on the
+/// Monarch plan vs the dense engine on the expanded plan (forward and
+/// MPE), plus cross-engine EM parity with fused bit-identity.
+fn oracle_case(mplan: &LayeredPlan, family: LeafFamily, seed: u64, label: &str) {
+    let nv = mplan.graph.num_vars;
+    let bn = 8;
+    let mut rng = Rng::new(seed);
+    let params = EinetParams::init(mplan, family, seed);
+    params.validate().expect("monarch init normalized");
+    let (dplan, dparams) = expand_to_dense(mplan, &params, family);
+    // expanding normalized factors yields a normalized dense block
+    dparams.validate().expect("expanded dense params normalized");
+
+    let x = random_batch(family, bn, nv, &mut rng);
+    let full = vec![1.0f32; nv];
+    for (mi, mask) in [full, random_mask(nv, &mut rng)].into_iter().enumerate() {
+        let ctx = format!("{label} family={family:?} mask#{mi}");
+        let (lp_ref, _) =
+            run_engine::<DenseEngine>(&dplan, family, &dparams, &x, &mask, bn);
+        let (lp_d, st_d) = run_engine::<DenseEngine>(mplan, family, &params, &x, &mask, bn);
+        let (lp_s, st_s) = run_engine::<SparseEngine>(mplan, family, &params, &x, &mask, bn);
+        let (lp_f, st_f) = run_engine::<FusedEngine>(mplan, family, &params, &x, &mask, bn);
+        for b in 0..bn {
+            assert!(lp_d[b].is_finite(), "{ctx}: monarch logp[{b}] not finite");
+            assert!(
+                close(lp_ref[b], lp_d[b]),
+                "{ctx}: row {b} dense-expansion {} vs monarch dense {}",
+                lp_ref[b],
+                lp_d[b]
+            );
+            assert!(
+                close(lp_ref[b], lp_s[b]),
+                "{ctx}: row {b} dense-expansion {} vs monarch sparse {}",
+                lp_ref[b],
+                lp_s[b]
+            );
+            assert_eq!(
+                lp_d[b].to_bits(),
+                lp_f[b].to_bits(),
+                "{ctx}: row {b} fused must be bit-identical to dense"
+            );
+        }
+        // EM statistics: sparse agrees within tolerance, fused delegates
+        // its backward to the dense machinery and must match bit-for-bit
+        assert_stats_close(&st_d, &st_s, &ctx);
+        assert_eq!(st_d.loglik.to_bits(), st_f.loglik.to_bits(), "{ctx}: fused loglik");
+        for (i, (a, b)) in st_d.grad.iter().zip(&st_f.grad).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: fused grad[{i}] diverged");
+        }
+    }
+
+    // MPE (max-product semiring): the unique-path factorization is exact
+    // under max too, so scores match the expanded model
+    let mut mask = vec![1.0f32; nv];
+    for m in mask.iter_mut().skip(nv / 2) {
+        *m = 0.0;
+    }
+    let mut e_ref = DenseEngine::new(dplan.clone(), family, bn);
+    let mut e_d = DenseEngine::new(mplan.clone(), family, bn);
+    let mut e_f = FusedEngine::new(mplan.clone(), family, bn);
+    let (_, sc_ref) = einet::infer::mpe(&mut e_ref, &dparams, &x, &mask, bn);
+    let (rows_d, sc_d) = einet::infer::mpe(&mut e_d, &params, &x, &mask, bn);
+    let (rows_f, sc_f) = einet::infer::mpe(&mut e_f, &params, &x, &mask, bn);
+    for b in 0..bn {
+        assert!(
+            close(sc_ref[b], sc_d[b]),
+            "{label} family={family:?}: MPE score {b} expansion {} vs monarch {}",
+            sc_ref[b],
+            sc_d[b]
+        );
+        assert_eq!(
+            sc_d[b].to_bits(),
+            sc_f[b].to_bits(),
+            "{label} family={family:?}: fused MPE score {b} diverged"
+        );
+    }
+    assert_eq!(rows_d, rows_f, "{label} family={family:?}: fused MPE rows diverged");
+}
+
+fn all_families() -> Vec<LeafFamily> {
+    vec![
+        LeafFamily::Bernoulli,
+        LeafFamily::Gaussian { channels: 1 },
+        LeafFamily::Gaussian { channels: 3 },
+        LeafFamily::Categorical { cats: 4 },
+        LeafFamily::Binomial { trials: 6 },
+    ]
+}
+
+#[test]
+fn monarch_oracle_rat_structure() {
+    for (i, family) in all_families().into_iter().enumerate() {
+        for blocks in [2usize, 4] {
+            let plan = monarch_plan(
+                LayeredPlan::compile(random_binary_trees(10, 3, 2, i as u64), 8),
+                blocks,
+            );
+            oracle_case(&plan, family, 10 + i as u64, &format!("rat/b{blocks}"));
+        }
+    }
+}
+
+#[test]
+fn monarch_oracle_pd_mixing_structure() {
+    // Poon–Domingos with both axes ⇒ multi-partition regions ⇒ mixing
+    // layers riding above Monarch einsum levels
+    for (i, family) in [LeafFamily::Bernoulli, LeafFamily::Gaussian { channels: 1 }]
+        .into_iter()
+        .enumerate()
+    {
+        for blocks in [2usize, 3] {
+            let plan =
+                monarch_plan(LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 6), blocks);
+            oracle_case(&plan, family, 20 + i as u64, &format!("pd/b{blocks}"));
+        }
+    }
+}
+
+#[test]
+fn monarch_has_fewer_parameters_and_em_improves_loglik() {
+    let family = LeafFamily::Bernoulli;
+    let nv = 12;
+    let base = LayeredPlan::compile(random_binary_trees(nv, 3, 3, 4), 8);
+    let dense_params = EinetParams::init(&base, family, 4);
+    let plan = monarch_plan(base, 2);
+    let mut params = EinetParams::init(&plan, family, 4);
+    assert!(
+        params.num_params() < dense_params.num_params(),
+        "monarch K=8 b=2 must be smaller than dense: {} vs {}",
+        params.num_params(),
+        dense_params.num_params()
+    );
+
+    let bn = 64;
+    let mut rng = Rng::new(7);
+    let x = random_batch(family, bn, nv, &mut rng);
+    let mask = vec![1.0f32; nv];
+    let em = EmConfig { step_size: 0.7, ..Default::default() };
+    let mut engine = DenseEngine::new(plan.clone(), family, bn);
+    let mut ll = Vec::new();
+    for _ in 0..6 {
+        let mut logp = vec![0.0f32; bn];
+        engine.forward(&params, &x, &mask, &mut logp);
+        ll.push(logp.iter().map(|&l| l as f64).sum::<f64>() / bn as f64);
+        let mut stats = EmStats::zeros_like(&params);
+        engine.backward(&params, &x, &mask, bn, &mut stats);
+        m_step(&mut params, &stats, &em);
+        // the factor-group m-step must preserve the conditional
+        // decomposition invariants every step
+        params.validate().expect("monarch params normalized after m_step");
+    }
+    assert!(
+        ll.last().unwrap() > &(ll[0] + 1e-3),
+        "EM on monarch factors failed to improve LL: {ll:?}"
+    );
+}
+
+#[test]
+fn monarch_sampling_is_deterministic_and_fused_matches_dense() {
+    let family = LeafFamily::Bernoulli;
+    let plan = monarch_plan(LayeredPlan::compile(random_binary_trees(10, 3, 2, 2), 8), 4);
+    let params = EinetParams::init(&plan, family, 11);
+    let n = 12;
+    let mut e_d = DenseEngine::new(plan.clone(), family, n);
+    let mut e_f = FusedEngine::new(plan.clone(), family, n);
+    let s_d = e_d.sample_batch(&params, n, &mut Rng::new(5), DecodeMode::Sample);
+    let s_d2 = e_d.sample_batch(&params, n, &mut Rng::new(5), DecodeMode::Sample);
+    let s_f = e_f.sample_batch(&params, n, &mut Rng::new(5), DecodeMode::Sample);
+    assert_eq!(s_d, s_d2, "monarch sampling must be seed-deterministic");
+    assert_eq!(s_d, s_f, "fused sampling diverged from dense on a monarch plan");
+    // conditional decode (posterior materialized per logical row) too
+    let nv = plan.graph.num_vars;
+    let mut mask = vec![1.0f32; nv];
+    for m in mask.iter_mut().skip(nv / 2) {
+        *m = 0.0;
+    }
+    let mut rng = Rng::new(23);
+    let x = random_batch(family, n, nv, &mut rng);
+    let mut out_d = x.clone();
+    let mut out_f = x.clone();
+    e_d.forward(&params, &x, &mask, &mut vec![0.0f32; n]);
+    e_d.decode_batch(&params, n, &mask, DecodeMode::Argmax, &mut Rng::new(3), &mut out_d);
+    e_f.forward(&params, &x, &mask, &mut vec![0.0f32; n]);
+    e_f.decode_batch(&params, n, &mask, DecodeMode::Argmax, &mut Rng::new(3), &mut out_f);
+    assert_eq!(out_d, out_f, "fused Argmax decode diverged on a monarch plan");
+}
+
+/// In-process 1-shard vs 4-shard bit-identity on Monarch plans: forward,
+/// reduced EM statistics + stepped parameters, Argmax and Sample decode.
+fn sharded_case<E: Engine + Send + 'static>(plan: &LayeredPlan, seed: u64, label: &str) {
+    let family = LeafFamily::Bernoulli;
+    let nv = plan.graph.num_vars;
+    let bn = 6;
+    let mut rng = Rng::new(seed);
+    let params = EinetParams::init(plan, family, seed);
+    let x = random_batch(family, bn, nv, &mut rng);
+    let mut mask = vec![1.0f32; nv];
+    for d in nv / 2..nv {
+        mask[d] = 0.0;
+    }
+    let em = EmConfig { step_size: 0.5, ..Default::default() };
+
+    let mut engine = E::build(plan.clone(), family, bn);
+    let mut lp_ref = vec![0.0f32; bn];
+    engine.forward(&params, &x, &mask, &mut lp_ref);
+    let mut stats_ref = EmStats::zeros_like(&params);
+    engine.backward(&params, &x, &mask, bn, &mut stats_ref);
+    let mut p_ref = params.clone();
+    m_step(&mut p_ref, &stats_ref, &em);
+    let mut sample_ref = x.clone();
+    engine.decode_batch(
+        &params,
+        bn,
+        &mask,
+        DecodeMode::Sample,
+        &mut Rng::new(seed + 77),
+        &mut sample_ref,
+    );
+
+    for shards in [1usize, 4] {
+        let ctx = format!("{label} shards={shards}");
+        let mut pool =
+            ShardedPool::new(boxed_build::<E>, plan, family, &params, shards, bn);
+        let mut lp = vec![0.0f32; bn];
+        pool.forward(&x, &mask, bn, &mut lp).unwrap();
+        for (b, (a, g)) in lp_ref.iter().zip(&lp).enumerate() {
+            assert!(
+                a.to_bits() == g.to_bits(),
+                "{ctx}: forward row {b} diverged: {a} vs {g}"
+            );
+        }
+        let mut stats = EmStats::zeros_like(&params);
+        pool.backward(&mut stats).unwrap();
+        assert_eq!(stats.loglik, stats_ref.loglik, "{ctx}: loglik");
+        let mut p = params.clone();
+        m_step(&mut p, &stats, &em);
+        assert_eq!(p.data, p_ref.data, "{ctx}: EM-stepped parameters diverged");
+        let mut sample_out = x.clone();
+        pool.decode(
+            bn,
+            &mask,
+            DecodeMode::Sample,
+            &mut Rng::new(seed + 77),
+            &mut sample_out,
+        )
+        .unwrap();
+        assert_eq!(sample_ref, sample_out, "{ctx}: Sample decode diverged");
+    }
+}
+
+#[test]
+fn monarch_sharding_parity_in_process() {
+    let rat = monarch_plan(LayeredPlan::compile(random_binary_trees(12, 3, 3, 1), 8), 2);
+    sharded_case::<DenseEngine>(&rat, 61, "monarch/rat/dense");
+    sharded_case::<FusedEngine>(&rat, 61, "monarch/rat/fused");
+    let pd = monarch_plan(LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 6), 3);
+    sharded_case::<DenseEngine>(&pd, 62, "monarch/pd/dense");
+    sharded_case::<SparseEngine>(&pd, 62, "monarch/pd/sparse");
+}
+
+#[test]
+fn monarch_loopback_tcp_matches_in_process_bitwise() {
+    // the v2 handshake carries the weights spec; the worker rebuilds the
+    // structured plan and its ParamLayout spans bit-for-bit
+    const NV: usize = 16;
+    const STRUCTURE: &str = "rat:depth=2,replica=3,seed=5";
+    let graph = from_spec(NV, STRUCTURE).expect("structure spec");
+    let plan = monarch_plan(LayeredPlan::compile(graph, 8), 2);
+    let family = LeafFamily::Bernoulli;
+    let params = EinetParams::init(&plan, family, 9);
+    let bn = 8;
+    let mut rng = Rng::new(2);
+    let x = random_batch(family, bn, NV, &mut rng);
+    let mut mask = vec![1.0f32; NV];
+    for m in mask.iter_mut().skip(NV / 2) {
+        *m = 0.0;
+    }
+    let full = vec![1.0f32; NV];
+    let em = EmConfig { step_size: 0.5, ..Default::default() };
+
+    // in-process reference pool
+    let mut pool =
+        ShardedPool::new(boxed_build::<DenseEngine>, &plan, family, &params, 3, bn);
+    let mut lp_ref = vec![0.0f32; bn];
+    pool.forward(&x, &mask, bn, &mut lp_ref).unwrap();
+    let mut out_ref = x.clone();
+    pool.decode(bn, &mask, DecodeMode::Sample, &mut Rng::new(77), &mut out_ref)
+        .unwrap();
+    let ll_ref = pool.train_step(&x, &full, bn, &em).unwrap();
+    let params_ref = pool.params().data.clone();
+    pool.stop();
+
+    // loopback-TCP pool over in-thread workers
+    let (addrs, handles) = spawn_loopback_workers(3).unwrap();
+    let mut tcp = ShardedPool::connect(
+        &addrs, STRUCTURE, "dense", &plan, family, &params, 3, bn,
+    )
+    .expect("connect monarch TCP pool");
+    let mut lp = vec![0.0f32; bn];
+    tcp.forward(&x, &mask, bn, &mut lp).unwrap();
+    for (a, b) in lp_ref.iter().zip(&lp) {
+        assert_eq!(a.to_bits(), b.to_bits(), "TCP monarch forward diverged");
+    }
+    let mut out = x.clone();
+    tcp.decode(bn, &mask, DecodeMode::Sample, &mut Rng::new(77), &mut out)
+        .unwrap();
+    assert_eq!(out_ref, out, "TCP monarch Sample decode diverged");
+    let ll = tcp.train_step(&x, &full, bn, &em).unwrap();
+    assert_eq!(ll_ref.to_bits(), ll.to_bits(), "TCP monarch EM LL diverged");
+    assert_eq!(params_ref, tcp.params().data, "TCP monarch EM update diverged");
+    tcp.stop();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoints: EINET003 round-trip, EINET002 byte-compat, typed mismatch
+// ---------------------------------------------------------------------------
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("einet_monarch_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn monarch_checkpoints_roundtrip_as_einet003() {
+    let plan = monarch_plan(LayeredPlan::compile(random_binary_trees(10, 3, 2, 3), 8), 2);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 5);
+    let path = tmp("rt.bin");
+    params.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(&bytes[..8], b"EINET003", "structured checkpoints use the V3 magic");
+    let loaded = EinetParams::load(&path).unwrap();
+    assert_eq!(params.layout, loaded.layout);
+    assert_eq!(params.data, loaded.data);
+    loaded.validate().unwrap();
+    let mapped = EinetParams::load_mapped(&path).unwrap();
+    assert_eq!(params.layout, mapped.layout);
+    assert_eq!(&params.data[..], &mapped.data[..]);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn dense_checkpoints_stay_einet002() {
+    let plan = LayeredPlan::compile(random_binary_trees(10, 3, 2, 3), 8);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 5);
+    let path = tmp("dense.bin");
+    params.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(
+        &bytes[..8],
+        b"EINET002",
+        "all-dense checkpoints must stay byte-compatible"
+    );
+    let loaded = EinetParams::load(&path).unwrap();
+    assert_eq!(params.data, loaded.data);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn weight_structure_mismatch_is_a_typed_error() {
+    let family = LeafFamily::Bernoulli;
+    let base = LayeredPlan::compile(random_binary_trees(10, 3, 2, 3), 8);
+    let mplan = monarch_plan(base.clone(), 2);
+    let dense_layout = ParamLayout::from_plan(&base, family);
+    let monarch_layout = ParamLayout::from_plan(&mplan, family);
+    // a monarch checkpoint loaded with --weights dense, and vice versa
+    for (want, got) in [
+        (&dense_layout, &monarch_layout),
+        (&monarch_layout, &dense_layout),
+    ] {
+        let err = want
+            .ensure_same_structure(got)
+            .expect_err("structure mismatch must be rejected")
+            .to_string();
+        assert!(
+            err.contains("weight-structure mismatch"),
+            "typed prefix missing: {err}"
+        );
+    }
+    // matching layouts pass
+    monarch_layout.ensure_same_structure(&monarch_layout).unwrap();
+    dense_layout.ensure_same_structure(&dense_layout).unwrap();
+}
+
+#[test]
+fn truncated_and_corrupt_monarch_checkpoints_fail_cleanly() {
+    let plan = monarch_plan(LayeredPlan::compile(random_binary_trees(10, 3, 2, 3), 8), 2);
+    let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 5);
+    let full_path = tmp("full.bin");
+    params.save(&full_path).unwrap();
+    let full = std::fs::read(&full_path).unwrap();
+    let path = tmp("cut.bin");
+    // cut inside the magic, the header, the per-level structure tags,
+    // and the tensor payload: every prefix must error, never panic
+    for cut in [0, 4, 8, 24, 48, 64, full.len() / 2, full.len() - 4] {
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(
+            EinetParams::load(&path).is_err(),
+            "truncation at {cut} of {} must fail",
+            full.len()
+        );
+    }
+    // corrupt magic
+    let mut bad = full.clone();
+    bad[7] = b'9';
+    std::fs::write(&path, &bad).unwrap();
+    assert!(EinetParams::load(&path).is_err(), "corrupt magic must fail");
+    let _ = std::fs::remove_file(full_path);
+    let _ = std::fs::remove_file(path);
+}

@@ -312,6 +312,7 @@ fn corrupt_frames_cost_one_session_not_the_worker() {
     // engine) — the refusal travels back as a typed Handshake error
     let cfg = WorkerConfig {
         structure: STRUCTURE.to_string(),
+        weights: "dense".to_string(),
         num_vars: NV,
         k: K,
         family,
@@ -354,6 +355,7 @@ fn crafted_payloads_cost_one_session_not_the_worker() {
     let (_workers, addrs) = spawn_workers(1);
     let cfg = WorkerConfig {
         structure: STRUCTURE.to_string(),
+        weights: "dense".to_string(),
         num_vars: NV,
         k: K,
         family,
