@@ -46,6 +46,7 @@ fn main() {
                 ..Default::default()
             },
             log_every: 0,
+            ..Default::default()
         };
         let hist = train_parallel::<DenseEngine>(
             &plan, family, &mut params, &ds.train.data, ds.train.n, &cfg,

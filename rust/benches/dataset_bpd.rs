@@ -1,0 +1,154 @@
+//! End-to-end dataset harness: bits-per-dim on DEBD-format fixtures and
+//! classify accuracy on the committed class-conditional image fixture.
+//!
+//! Everything runs offline from `fixtures/` (tiny committed files in the
+//! real on-disk formats — see `fixtures/gen_fixtures.py` for
+//! provenance), through the *file* loaders (`data::debd::load_dir`,
+//! `data::images::load_labeled`) with their load-time family validation,
+//! so the numbers are comparable across commits and CI needs no network.
+//! Per dataset we train with batch EM and with an online-EM decay
+//! policy, and report test-set bits-per-dim `-LL / (D ln 2)` for both;
+//! the labeled fixture trains a class-conditional circuit
+//! (`LayeredPlan::with_classes`) and reports classify accuracy, which CI
+//! asserts >= 0.9.
+//!
+//!     EINET_BENCH_QUICK=1 cargo bench --bench dataset_bpd
+
+use std::path::Path;
+
+use einet::bench::Table;
+use einet::coordinator::{
+    classify_accuracy, evaluate, train_class_conditional, train_parallel, TrainConfig,
+};
+use einet::data::{debd, images};
+use einet::em::{StepSchedule, UpdatePolicy};
+use einet::util::json;
+use einet::{DenseEngine, EinetParams, LayeredPlan, LeafFamily};
+
+const LN2: f64 = std::f64::consts::LN_2;
+
+fn main() {
+    let quick = std::env::var("EINET_BENCH_QUICK").is_ok();
+    let fixtures = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures");
+    let family = LeafFamily::Bernoulli;
+    let epochs = if quick { 3 } else { 12 };
+
+    let mut table = Table::new(&["dataset", "D", "train n", "bpd (batch)", "bpd (online)"]);
+    let mut rows: Vec<json::Json> = Vec::new();
+    for name in ["nltcs", "msnbc"] {
+        let ds = debd::load_dir(&fixtures.join("debd"), name).expect("load DEBD fixture");
+        ds.validate_family(family).expect("fixture arity vs leaf family");
+        let graph = einet::structure::random_binary_trees(ds.num_vars, 2, 4, 0);
+        let plan = LayeredPlan::compile(graph, 4);
+        let mut bpd = [0.0f64; 2];
+        for (slot, policy) in [
+            (0usize, UpdatePolicy::full_batch()),
+            (
+                1usize,
+                UpdatePolicy {
+                    frequency: 1,
+                    schedule: StepSchedule::Decay { s0: 0.8, alpha: 0.7 },
+                },
+            ),
+        ] {
+            let mut params = EinetParams::init(&plan, family, 7);
+            let cfg = TrainConfig {
+                epochs,
+                batch_size: 64,
+                workers: 2,
+                policy,
+                log_every: 0,
+                ..Default::default()
+            };
+            train_parallel::<DenseEngine>(
+                &plan, family, &mut params, &ds.train.data, ds.train.n, &cfg,
+            );
+            let test_ll = evaluate::<DenseEngine>(
+                &plan, family, &params, &ds.test.data, ds.test.n, 64,
+            );
+            bpd[slot] = -test_ll / (ds.num_vars as f64 * LN2);
+        }
+        println!(
+            "{name} bpd batch {:.4} online {:.4}",
+            bpd[0], bpd[1]
+        );
+        table.row(vec![
+            name.to_string(),
+            format!("{}", ds.num_vars),
+            format!("{}", ds.train.n),
+            format!("{:.4}", bpd[0]),
+            format!("{:.4}", bpd[1]),
+        ]);
+        rows.push(json::obj(vec![
+            ("dataset", json::s(name)),
+            ("num_vars", json::num(ds.num_vars as f64)),
+            ("train_n", json::num(ds.train.n as f64)),
+            ("bpd_batch", json::num(bpd[0])),
+            ("bpd_online", json::num(bpd[1])),
+        ]));
+    }
+
+    // class-conditional fixture: train p(x | c) with one root per class,
+    // report argmax-posterior accuracy through Query::Classify
+    let li = images::load_labeled(&fixtures.join("images/digits3.eimg"))
+        .expect("load labeled image fixture");
+    li.split
+        .validate_family(family, "digits3")
+        .expect("fixture arity vs leaf family");
+    let d = li.split.row_len;
+    let graph = einet::structure::random_binary_trees(d, 2, 4, 1);
+    let plan = LayeredPlan::compile(graph, 4)
+        .with_classes(li.classes)
+        .expect("widen root");
+    let mut params = EinetParams::init(&plan, family, 11);
+    let cfg = TrainConfig {
+        epochs: if quick { 4 } else { 12 },
+        batch_size: 60,
+        workers: 1,
+        log_every: 0,
+        ..Default::default()
+    };
+    train_class_conditional::<DenseEngine>(
+        &plan,
+        family,
+        &mut params,
+        &li.split.data,
+        &li.labels,
+        li.split.n,
+        &cfg,
+    );
+    let acc = classify_accuracy::<DenseEngine>(
+        &plan,
+        family,
+        &params,
+        &li.split.data,
+        &li.labels,
+        li.split.n,
+        64,
+    )
+    .expect("classify");
+    println!(
+        "classify accuracy {:.4} on digits3 ({} images, {} classes)",
+        acc, li.split.n, li.classes
+    );
+    println!("\n{}", table.render());
+
+    let report = json::obj(vec![
+        ("experiment", json::s("dataset_bpd")),
+        ("quick", json::num(quick as i32 as f64)),
+        ("epochs", json::num(epochs as f64)),
+        ("rows", json::arr(rows)),
+        (
+            "classify",
+            json::obj(vec![
+                ("fixture", json::s("digits3")),
+                ("n", json::num(li.split.n as f64)),
+                ("classes", json::num(li.classes as f64)),
+                ("accuracy", json::num(acc)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_datasets.json", report.to_string())
+        .expect("write BENCH_datasets.json");
+    println!("wrote BENCH_datasets.json");
+}

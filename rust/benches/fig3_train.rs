@@ -236,6 +236,7 @@ fn main() {
         workers,
         em,
         log_every: 0,
+        ..Default::default()
     };
     let m_pool = time_it(
         || {

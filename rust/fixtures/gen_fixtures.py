@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Deterministic generator for the committed benchmark fixtures.
+
+Rebuild with `python3 fixtures/gen_fixtures.py` from `rust/`; output is
+byte-identical across runs (fixed seeds, no platform-dependent RNG).
+
+Two kinds of fixtures:
+
+* `debd/<name>.{train,valid,test}.data` -- tiny datasets in the exact
+  DEBD on-disk format (comma-separated 0/1 rows) with the real variable
+  counts of their namesakes, sampled from a first-order Markov chain so
+  there is learnable correlation structure. They exist so the
+  `dataset_bpd` harness and the EM test suites exercise the *file*
+  loaders offline; bits-per-dim numbers on them are comparable across
+  commits, not to the paper's table (the real corpora are not
+  redistributable).
+
+* `images/digits3.eimg` -- a 3-class labeled binary-image set in the
+  `.eimg` container (see `src/data/images.rs`): each class lights a
+  distinct 4x4-grid block with a 5% per-pixel flip, so a class-conditional
+  EiNet with Bernoulli leaves must reach >= 0.9 classify accuracy.
+"""
+import os
+import random
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# (name, num_vars, train, valid, test, seed, p0, stay)
+DEBD = [
+    ("nltcs", 16, 400, 80, 80, 1601, 0.30, 0.82),
+    ("msnbc", 17, 400, 80, 80, 1701, 0.25, 0.78),
+]
+
+
+def gen_debd():
+    outdir = os.path.join(HERE, "debd")
+    os.makedirs(outdir, exist_ok=True)
+    for name, nv, ntr, nva, nte, seed, p0, stay in DEBD:
+        rng = random.Random(seed)
+        # per-variable bias so the chain is not translation-invariant
+        bias = [0.15 + 0.7 * rng.random() for _ in range(nv)]
+
+        def row():
+            vals = []
+            prev = 1 if rng.random() < p0 else 0
+            for d in range(nv):
+                if d == 0:
+                    v = prev
+                else:
+                    # copy the neighbour with prob `stay`, else redraw
+                    # from the per-variable bias
+                    v = prev if rng.random() < stay else (
+                        1 if rng.random() < bias[d] else 0)
+                vals.append(v)
+                prev = v
+            return ",".join(str(v) for v in vals)
+
+        for split, n in (("train", ntr), ("valid", nva), ("test", nte)):
+            path = os.path.join(outdir, f"{name}.{split}.data")
+            with open(path, "w") as f:
+                for _ in range(n):
+                    f.write(row() + "\n")
+            print(path)
+
+
+def gen_images():
+    outdir = os.path.join(HERE, "images")
+    os.makedirs(outdir, exist_ok=True)
+    h = w = 4
+    classes = 3
+    per_class = 80
+    # disjoint lit blocks per class on the 4x4 grid
+    blocks = [
+        {0, 1, 4, 5, 2},      # class 0: top-left block
+        {10, 11, 14, 15, 13}, # class 1: bottom-right block
+        {3, 6, 7, 9, 12},     # class 2: anti-diagonal band
+    ]
+    rng = random.Random(443)
+    labels = []
+    pixels = []
+    for c in range(classes):
+        for _ in range(per_class):
+            labels.append(c)
+            for p in range(h * w):
+                lit = p in blocks[c]
+                if rng.random() < 0.05:  # 5% flip noise
+                    lit = not lit
+                pixels.append(255 if lit else 0)
+    n = classes * per_class
+    path = os.path.join(outdir, "digits3.eimg")
+    with open(path, "wb") as f:
+        f.write(b"EIMG")
+        f.write(struct.pack("<5I", n, h, w, 1, classes))
+        f.write(bytes(labels))
+        f.write(bytes(pixels))
+    print(path)
+
+
+if __name__ == "__main__":
+    gen_debd()
+    gen_images()

@@ -45,7 +45,9 @@ pub mod transport;
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, RwLock};
 
-use crate::em::{m_step, stats_from_natural_grads, EmConfig};
+use crate::em::{
+    m_step, stats_from_natural_grads, EmConfig, PolicyState, UpdatePolicy,
+};
 use crate::engine::exec::{PlanPartition, Semiring};
 use crate::engine::registry::{EngineFactory, EngineRegistry};
 use crate::engine::{
@@ -69,6 +71,16 @@ pub struct TrainConfig {
     pub batch_size: usize,
     pub workers: usize,
     pub em: EmConfig,
+    /// when/how strongly accumulated statistics update the parameters
+    /// (default: after every mini-batch at `em.step_size` — the
+    /// historical behavior)
+    pub policy: UpdatePolicy,
+    /// the E-step semiring: `SumProduct` is soft EM (expected statistics,
+    /// the default); `MaxProduct` is Viterbi EM — each sample contributes
+    /// hard counts along its MPE latent assignment, and `train_ll`
+    /// reports the mean MPE score `max_z log p(x, z)` instead of the
+    /// marginal log-likelihood
+    pub semiring: Semiring,
     /// log every n-th epoch (0: silent)
     pub log_every: usize,
 }
@@ -85,6 +97,8 @@ impl Default for TrainConfig {
                 step_size: 0.5,
                 ..Default::default()
             },
+            policy: UpdatePolicy::default(),
+            semiring: Semiring::SumProduct,
             log_every: 1,
         }
     }
@@ -152,8 +166,16 @@ pub fn train_parallel<E: Engine>(
                     let chunk = &data[lo * row..hi * row];
                     let mut stats = EmStats::zeros(layout);
                     let guard = shared.read().expect("params lock poisoned");
-                    engine.forward(&guard, chunk, mask, &mut logp[..bn]);
-                    engine.backward(&guard, chunk, mask, bn, &mut stats);
+                    engine.forward_semiring(
+                        &guard,
+                        chunk,
+                        mask,
+                        &mut logp[..bn],
+                        cfg.semiring,
+                    );
+                    engine.backward_semiring(
+                        &guard, chunk, mask, bn, &mut stats, cfg.semiring,
+                    );
                     drop(guard);
                     if res_tx.send(stats).is_err() {
                         break; // coordinator gone: shut down
@@ -162,6 +184,7 @@ pub fn train_parallel<E: Engine>(
             });
         }
         let mut assigned: Vec<usize> = Vec::with_capacity(workers);
+        let mut policy = PolicyState::new(&shared.read().expect("params lock poisoned"));
         for epoch in 0..cfg.epochs {
             let t = crate::util::Timer::new();
             let mut epoch_ll = 0.0f64;
@@ -190,7 +213,13 @@ pub fn train_parallel<E: Engine>(
                 epoch_ll += merged.loglik;
                 {
                     let mut guard = shared.write().expect("params lock poisoned");
-                    m_step(&mut guard, &merged, &cfg.em);
+                    policy.absorb(
+                        &mut guard,
+                        &merged,
+                        &cfg.policy,
+                        &cfg.em,
+                        b0 + bn >= n,
+                    );
                 }
                 b0 += bn;
             }
@@ -251,6 +280,113 @@ pub fn evaluate<E: Engine>(
         b0 += bn;
     }
     total / n as f64
+}
+
+/// Supervised EM for a class-conditional circuit
+/// ([`crate::layers::LayeredPlan::with_classes`]): each sample's E-step
+/// seeds mass 1 on its labeled root ([`Engine::backward_labeled`]), so
+/// every class's root weights train on its own samples while the shared
+/// lower structure trains on all of them. `labels` holds one class index
+/// per row; `train_ll` reports the mean conditional score
+/// `log p(x | y)`. Honors `cfg.policy` (online EM) like
+/// [`train_parallel`].
+pub fn train_class_conditional<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &mut EinetParams,
+    data: &[f32],
+    labels: &[u8],
+    n: usize,
+    cfg: &TrainConfig,
+) -> Vec<EpochStats> {
+    assert_eq!(
+        params.family(),
+        family,
+        "parameter arena family does not match the configured family"
+    );
+    let classes = plan.num_classes();
+    assert!(
+        classes > 1,
+        "supervised training needs a class-conditional plan (with_classes)"
+    );
+    let d = plan.graph.num_vars;
+    let od = family.obs_dim();
+    let row = d * od;
+    assert_eq!(data.len(), n * row);
+    assert_eq!(labels.len(), n, "one label per sample");
+    let mask = vec![1.0f32; d];
+    let cap = cfg.batch_size.max(1);
+    let mut engine = E::build(plan.clone(), family, cap);
+    let mut logp = vec![0.0f32; cap];
+    let mut policy = PolicyState::new(params);
+    let mut history = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let t = crate::util::Timer::new();
+        let mut epoch_ll = 0.0f64;
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = cap.min(n - b0);
+            let chunk = &data[b0 * row..(b0 + bn) * row];
+            let mut stats = EmStats::zeros(&params.layout);
+            engine.forward(params, chunk, &mask, &mut logp[..bn]);
+            engine.backward_labeled(
+                params,
+                chunk,
+                &mask,
+                bn,
+                &labels[b0..b0 + bn],
+                &mut stats,
+            );
+            epoch_ll += stats.loglik;
+            policy.absorb(params, &stats, &cfg.policy, &cfg.em, b0 + bn >= n);
+            b0 += bn;
+        }
+        let rec = EpochStats {
+            epoch,
+            train_ll: epoch_ll / n as f64,
+            seconds: t.elapsed_s(),
+        };
+        if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+            crate::info!(
+                "epoch {:>3}: train log p(x|y) {:.4} ({:.2}s)",
+                rec.epoch,
+                rec.train_ll,
+                rec.seconds
+            );
+        }
+        history.push(rec);
+    }
+    history
+}
+
+/// Fraction of samples whose [`Query::Classify`] prediction matches the
+/// label — the paper-style discriminative metric for class-conditional
+/// circuits.
+pub fn classify_accuracy<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params: &EinetParams,
+    data: &[f32],
+    labels: &[u8],
+    n: usize,
+    batch: usize,
+) -> Result<f64> {
+    let d = plan.graph.num_vars;
+    let qp = crate::engine::query::Query::Classify {
+        mask: vec![1.0; d],
+    }
+    .compile(d)?;
+    let mut engine = E::build(plan.clone(), family, batch);
+    let mut out = crate::engine::query::QueryOutput::default();
+    let mut rng = Rng::new(0);
+    engine.execute(params, &qp, data, n, &mut rng, &mut out);
+    let hits = out
+        .scores
+        .iter()
+        .zip(labels)
+        .filter(|(&p, &y)| p as usize == y as usize)
+        .count();
+    Ok(hits as f64 / n as f64)
 }
 
 /// Per-sample log-likelihoods (returned, not averaged).
@@ -520,6 +656,7 @@ impl ShardedPool {
                 shard_id: s,
                 batch_cap,
                 fastmath,
+                classes: plan.num_classes(),
             };
             links.push(Box::new(TcpTransport::connect(&addrs[s], &cfg, row)?));
         }
@@ -776,12 +913,27 @@ impl ShardedPool {
             &self.partition.spine.steps,
             inf.sr,
         );
-        self.spine.read_logp(bn, &mut logp[..bn]);
+        self.spine.read_logp_semiring(bn, &mut logp[..bn], inf.sr);
         self.last_x = Some((inf.x, inf.row0));
         self.last_mask = Some(inf.mask);
         self.last_bn = bn;
         self.last_sr = inf.sr;
         Ok(())
+    }
+
+    /// Number of class roots the compiled plan carries: `C` after
+    /// [`crate::layers::LayeredPlan::with_classes`], 1 for a plain
+    /// generative circuit.
+    pub fn num_classes(&self) -> usize {
+        self.spine.num_classes()
+    }
+
+    /// Read the raw per-class root scores `[bn, C]` of the last finished
+    /// forward. The root level always lands in the spine's segment, so
+    /// class-conditional serving reads straight off the spine arena — no
+    /// new wire traffic beyond the ordinary boundary rows.
+    pub fn read_class_scores(&self, bn: usize, out: &mut [f32]) {
+        self.spine.read_class_logp(bn, out);
     }
 
     /// Segmented backward pass for the batch last given to `forward`:
@@ -970,6 +1122,35 @@ impl ShardedPool {
         Ok(ll)
     }
 
+    /// [`ShardedPool::train_step_shared`] under an [`UpdatePolicy`]: the
+    /// batch statistics go through the policy's accumulator, and the
+    /// per-shard parameter broadcast happens only when the policy
+    /// actually applied an M-step (accumulation-only batches cost no
+    /// wire traffic). At the default policy this is the plain
+    /// `train_step_shared` sequence, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_policy(
+        &mut self,
+        x: Arc<Vec<f32>>,
+        row0: usize,
+        mask: Arc<Vec<f32>>,
+        bn: usize,
+        em: &EmConfig,
+        policy: &UpdatePolicy,
+        state: &mut PolicyState,
+        end_of_epoch: bool,
+    ) -> Result<f64, ShardError> {
+        let mut logp = vec![0.0f32; bn];
+        self.forward_shared(x, row0, mask, bn, Semiring::SumProduct, &mut logp)?;
+        let mut stats = EmStats::zeros(&self.params.layout);
+        self.backward(&mut stats)?;
+        let ll = stats.loglik;
+        if state.absorb(&mut self.params, &stats, policy, em, end_of_epoch) {
+            self.broadcast()?;
+        }
+        Ok(ll)
+    }
+
     /// Shut the pool down explicitly: close every link and join every
     /// surviving worker thread. Joins cleanly even when the pool is
     /// degraded (a dead worker's link just closes). `Drop` does the
@@ -999,6 +1180,8 @@ pub struct ShardConfig {
     pub epochs: usize,
     pub batch_size: usize,
     pub em: EmConfig,
+    /// when/how strongly accumulated statistics update the parameters
+    pub policy: UpdatePolicy,
     /// log every n-th epoch (0: silent)
     pub log_every: usize,
 }
@@ -1013,6 +1196,7 @@ impl Default for ShardConfig {
                 step_size: 0.5,
                 ..Default::default()
             },
+            policy: UpdatePolicy::default(),
             log_every: 1,
         }
     }
@@ -1049,14 +1233,23 @@ pub fn train_sharded(
         cfg.batch_size,
     );
     let mut history = Vec::new();
+    let mut state = PolicyState::new(pool.params());
     for epoch in 0..cfg.epochs {
         let t = crate::util::Timer::new();
         let mut epoch_ll = 0.0f64;
         let mut b0 = 0usize;
         while b0 < n {
             let bn = cfg.batch_size.min(n - b0);
-            epoch_ll +=
-                pool.train_step_shared(data.clone(), b0, mask.clone(), bn, &cfg.em)?;
+            epoch_ll += pool.train_step_policy(
+                data.clone(),
+                b0,
+                mask.clone(),
+                bn,
+                &cfg.em,
+                &cfg.policy,
+                &mut state,
+                b0 + bn >= n,
+            )?;
             b0 += bn;
         }
         let rec = EpochStats {
@@ -1497,6 +1690,7 @@ mod tests {
                 batch_size: 32,
                 em,
                 log_every: 0,
+                ..Default::default()
             };
             train_sharded(
                 crate::engine::registry::boxed_build::<DenseEngine>,

@@ -50,7 +50,7 @@ use std::time::{Duration, Instant};
 
 use super::transport::ShardError;
 use super::ShardedPool;
-use crate::engine::query::{Query, QueryOutput, QueryPlan};
+use crate::engine::query::{reduce_class_scores, ClassReduce, Query, QueryOutput, QueryPlan};
 use crate::engine::registry::{EngineFactory, EngineRegistry};
 use crate::engine::{DecodeMode, EinetParams, Engine};
 use crate::layers::LayeredPlan;
@@ -90,6 +90,30 @@ impl Backend {
                 Ok(())
             }
             Backend::Sharded(p) => {
+                if let Some(cr) = qp.class_reduce {
+                    // class-conditional reduce: one sum-product pass, then
+                    // the per-class root rows come straight off the spine
+                    // and reduce exactly like Engine::execute's in-process
+                    // path (shared reduce_class_scores)
+                    let classes = p.num_classes();
+                    out.rows.clear();
+                    out.scores.clear();
+                    out.scores.resize(
+                        match cr {
+                            ClassReduce::Argmax => bn,
+                            ClassReduce::Posterior => bn * classes,
+                        },
+                        0.0,
+                    );
+                    den.clear();
+                    den.resize(bn, 0.0);
+                    let m0 = Arc::new(qp.passes[0].mask.clone());
+                    p.forward_shared(x.clone(), 0, m0, bn, qp.passes[0].semiring, den)?;
+                    let mut cls = vec![0.0f32; bn * classes];
+                    p.read_class_scores(bn, &mut cls);
+                    reduce_class_scores(&cls, bn, classes, cr, &mut out.scores);
+                    return Ok(());
+                }
                 out.scores.clear();
                 out.scores.resize(bn, 0.0);
                 out.rows.clear();
@@ -144,8 +168,10 @@ impl Backend {
 /// them per cause.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum QueryError {
-    /// wrong-length evidence, or a mask [`Query::compile`] rejects
-    /// (wrong length, non-finite values, overlapping conditional masks)
+    /// wrong-length evidence, a mask [`Query::compile`] rejects
+    /// (wrong length, non-finite values, overlapping conditional masks),
+    /// or a classify/posterior query against a circuit that carries no
+    /// class roots (see [`crate::layers::LayeredPlan::with_classes`])
     Malformed,
     /// observed evidence outside the leaf family's support (would index
     /// theta out of bounds or poison the batch with NaN)
@@ -185,7 +211,10 @@ impl std::error::Error for QueryError {}
 
 /// A served answer: the per-row log score (marginal / conditional /
 /// max-product MPE, depending on the query) plus, for decoding queries,
-/// the completed `[D, obs_dim]` row (observed dims untouched).
+/// the completed `[D, obs_dim]` row (observed dims untouched). Class
+/// queries bend the convention: `Classify` carries the predicted class
+/// index in `score` (empty `row`), `Posterior` carries the `C` log-
+/// posteriors in `row` and the winning class's log-posterior in `score`.
 #[derive(Clone, Debug)]
 pub struct QueryOk {
     pub score: f32,
@@ -672,6 +701,45 @@ impl InferenceServer {
         }
     }
 
+    /// Convenience for [`Query::Classify`] on a class-conditional circuit
+    /// ([`crate::layers::LayeredPlan::with_classes`]): the answer's
+    /// `score` carries the predicted class index as `f32`, its `row` is
+    /// empty. `mask[d] == 0` marginalizes variable `d` out of the
+    /// evidence. Against a circuit without class roots the request is
+    /// rejected [`QueryError::Malformed`].
+    pub fn submit_classify(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<QueryAnswer> {
+        self.submit_query(x, Query::Classify { mask })
+    }
+
+    /// Blocking convenience for [`InferenceServer::submit_classify`]:
+    /// returns the predicted class. Panics if the request is rejected or
+    /// the server is down.
+    pub fn classify(&self, x: Vec<f32>, mask: Vec<f32>) -> usize {
+        match self.submit_classify(x, mask).recv() {
+            Ok(QueryAnswer::Ok(ans)) => ans.score as usize,
+            Ok(QueryAnswer::Err(e)) => panic!("request rejected: {e}"),
+            Err(_) => panic!("server down"),
+        }
+    }
+
+    /// Convenience for [`Query::Posterior`]: the answer's `row` carries
+    /// the `C` normalized log-posteriors `log p(c | x_e)` (uniform class
+    /// prior), its `score` the winning class's log-posterior.
+    pub fn submit_posterior(&self, x: Vec<f32>, mask: Vec<f32>) -> Receiver<QueryAnswer> {
+        self.submit_query(x, Query::Posterior { mask })
+    }
+
+    /// Blocking convenience for [`InferenceServer::submit_posterior`]:
+    /// returns the `C` log-posteriors. Panics if the request is rejected
+    /// or the server is down.
+    pub fn posterior(&self, x: Vec<f32>, mask: Vec<f32>) -> Vec<f32> {
+        match self.submit_posterior(x, mask).recv() {
+            Ok(QueryAnswer::Ok(ans)) => ans.row,
+            Ok(QueryAnswer::Err(e)) => panic!("request rejected: {e}"),
+            Err(_) => panic!("server down"),
+        }
+    }
+
     /// Shut down and return stats (admission-gate rejections folded in).
     /// A dispatcher panic (an engine assert slipping past request
     /// validation) is propagated here rather than silently mapped to
@@ -707,10 +775,16 @@ fn compile_request(
     od: usize,
     row: usize,
     family: LeafFamily,
+    classes: usize,
 ) -> std::result::Result<QueryPlan, QueryError> {
     let qp = r.query.compile(d).map_err(|_| QueryError::Malformed)?;
     if qp.sample_n.is_some() {
         return Err(QueryError::UnsupportedSample);
+    }
+    if qp.class_reduce.is_some() && classes < 2 {
+        // a classify/posterior request against a plain generative circuit
+        // would trip the engine's assert; turn it away typed instead
+        return Err(QueryError::Malformed);
     }
     if r.x.len() != row {
         return Err(QueryError::Malformed);
@@ -748,6 +822,7 @@ fn dispatcher(
     let d = plan.graph.num_vars;
     let od = family.obs_dim();
     let row = d * od;
+    let classes = plan.num_classes();
     let mut rng = Rng::new(cfg.seed);
     let mut stats = ServerStats::default();
     let mut jobs: Vec<(QueryPlan, QueryRequest)> = Vec::new();
@@ -766,7 +841,7 @@ fn dispatcher(
             reject(q, QueryError::Expired, stats, &gate);
             return;
         }
-        match compile_request(&q, d, od, row, family) {
+        match compile_request(&q, d, od, row, family, classes) {
             Ok(qp) => jobs.push((qp, q)),
             Err(e) => reject(q, e, stats, &gate),
         }
@@ -869,20 +944,29 @@ fn dispatcher(
         // just received its answer must be able to submit again without
         // racing the release
         gate.release_n(bn);
+        // per-request score stride: 1 everywhere except Posterior, whose
+        // group answer is [bn, C] log-posteriors
+        let stride = out.scores.len() / bn;
         for (i, (_, q)) in group.iter().enumerate() {
-            let score = out.scores[i];
             match &q.reply {
                 ReplyTo::Score(tx) => {
-                    let _ = tx.send(score);
+                    let _ = tx.send(out.scores[i * stride]);
                 }
                 ReplyTo::Row(tx) => {
                     let _ = tx.send(out.rows[i * row..(i + 1) * row].to_vec());
                 }
                 ReplyTo::Full(tx) => {
-                    let row_out = if decoded {
-                        out.rows[i * row..(i + 1) * row].to_vec()
+                    let (score, row_out) = if stride > 1 {
+                        // Posterior: the C log-posteriors travel in `row`,
+                        // the score is the winning class's log-posterior
+                        let post = out.scores[i * stride..(i + 1) * stride].to_vec();
+                        let best =
+                            post.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                        (best, post)
+                    } else if decoded {
+                        (out.scores[i], out.rows[i * row..(i + 1) * row].to_vec())
                     } else {
-                        Vec::new()
+                        (out.scores[i], Vec::new())
                     };
                     let _ = tx.send(QueryAnswer::Ok(QueryOk {
                         score,
@@ -1403,6 +1487,93 @@ mod tests {
             (answers[0] - answers[1]).abs() < 1e-4,
             "named backends disagree: {answers:?}"
         );
+    }
+
+    #[test]
+    fn class_queries_serve_single_and_sharded() {
+        // Classify / Posterior answers off the server — private engine
+        // and sharded pool — are bit-equal to the direct engine running
+        // the same compiled plan; against a plain generative circuit the
+        // request is rejected typed, not crashed on
+        let nv = 8;
+        let classes = 3;
+        let plan = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 21), 3)
+            .with_classes(classes)
+            .unwrap();
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 21);
+        let mut direct = DenseEngine::new(plan.clone(), LeafFamily::Bernoulli, 4);
+        let mask = vec![1.0f32; nv];
+        let qp_cls = Query::Classify { mask: mask.clone() }.compile(nv).unwrap();
+        let qp_post = Query::Posterior { mask: mask.clone() }.compile(nv).unwrap();
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..nv).map(|d| (((i * 7 + 3) >> d) & 1) as f32).collect())
+            .collect();
+        for sharded in [false, true] {
+            let server = if sharded {
+                InferenceServer::start_sharded(
+                    crate::engine::registry::boxed_build::<DenseEngine>,
+                    plan.clone(),
+                    LeafFamily::Bernoulli,
+                    params.clone(),
+                    2,
+                    8,
+                    Duration::from_millis(2),
+                    5,
+                )
+            } else {
+                InferenceServer::start::<DenseEngine>(
+                    plan.clone(),
+                    LeafFamily::Bernoulli,
+                    params.clone(),
+                    8,
+                    Duration::from_millis(2),
+                )
+            };
+            let mut rng = Rng::new(0);
+            for x in &xs {
+                let mut want = QueryOutput::default();
+                direct.execute(&params, &qp_cls, x, 1, &mut rng, &mut want);
+                let got = server.classify(x.clone(), mask.clone());
+                assert_eq!(
+                    got, want.scores[0] as usize,
+                    "classify diverged (sharded={sharded})"
+                );
+                let mut want = QueryOutput::default();
+                direct.execute(&params, &qp_post, x, 1, &mut rng, &mut want);
+                let post = server.posterior(x.clone(), mask.clone());
+                assert_eq!(post.len(), classes);
+                for (a, b) in post.iter().zip(&want.scores) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "posterior diverged (sharded={sharded})"
+                    );
+                }
+                // the posteriors are normalized: logsumexp ~ 0
+                let m = post.iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(v));
+                let s: f32 = post.iter().map(|&v| (v - m).exp()).sum();
+                assert!((m + s.ln()).abs() < 1e-5, "posterior not normalized");
+            }
+            server.stop();
+        }
+        let plain = LayeredPlan::compile(random_binary_trees(nv, 2, 2, 21), 3);
+        let pparams = EinetParams::init(&plain, LeafFamily::Bernoulli, 21);
+        let server = InferenceServer::start::<DenseEngine>(
+            plain,
+            LeafFamily::Bernoulli,
+            pparams,
+            4,
+            Duration::from_millis(1),
+        );
+        let rej = server.submit_classify(xs[0].clone(), mask);
+        assert!(
+            matches!(
+                rej.recv().expect("typed rejection expected"),
+                QueryAnswer::Err(QueryError::Malformed)
+            ),
+            "class query on a classless circuit must be rejected Malformed"
+        );
+        server.stop();
     }
 
     #[test]

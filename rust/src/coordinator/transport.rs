@@ -171,7 +171,7 @@ const TAG_DECODED: u8 = 10;
 const HANDSHAKE_MAGIC: u32 = 0x45494E57; // "EINW"
 // v2 added the weight-structure spec (`dense` / `monarch:b`) so remote
 // workers rebuild structured plans bit-identically
-const HANDSHAKE_VERSION: u32 = 2;
+const HANDSHAKE_VERSION: u32 = 3;
 
 fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
     let len = (payload.len() + 1) as u32;
@@ -469,6 +469,12 @@ pub struct WorkerConfig {
     /// whether the coordinator's plan lowered with the fast-math tier;
     /// the worker must match it for cross-process bit-identity
     pub fastmath: bool,
+    /// root class count (see
+    /// [`crate::layers::LayeredPlan::with_classes`]); 1 = the generative
+    /// single-root plan. The worker widens its recompiled plan to match,
+    /// so the cut's region widths — and the boundary-row frames — agree
+    /// on both ends.
+    pub classes: usize,
 }
 
 impl WorkerConfig {
@@ -488,6 +494,7 @@ impl WorkerConfig {
         e.u32(self.shard_id as u32);
         e.u32(self.batch_cap as u32);
         e.u8(self.fastmath as u8);
+        e.u32(self.classes as u32);
         e.buf
     }
 
@@ -513,6 +520,10 @@ impl WorkerConfig {
         let shard_id = d.u32()? as usize;
         let batch_cap = d.u32()? as usize;
         let fastmath = d.u8()? != 0;
+        let classes = d.u32()? as usize;
+        if classes == 0 {
+            return Err("handshake class count must be >= 1".into());
+        }
         d.finish()?;
         Ok(Self {
             structure,
@@ -525,6 +536,7 @@ impl WorkerConfig {
             shard_id,
             batch_cap,
             fastmath,
+            classes,
         })
     }
 }
@@ -1009,7 +1021,10 @@ fn build_segment_worker(cfg: &WorkerConfig) -> crate::util::error::Result<Segmen
     crate::engine::kernels::force_fastmath(cfg.fastmath);
     let graph = from_spec(cfg.num_vars, &cfg.structure)?;
     let ws = crate::layers::WeightStructure::parse(&cfg.weights, cfg.k)?;
-    let plan = LayeredPlan::compile(graph, cfg.k).with_weight_structure(ws)?;
+    let mut plan = LayeredPlan::compile(graph, cfg.k).with_weight_structure(ws)?;
+    if cfg.classes > 1 {
+        plan = plan.with_classes(cfg.classes)?;
+    }
     let factory = EngineRegistry::builtin().factory(&cfg.engine)?;
     let engine = factory(plan.clone(), cfg.family, cfg.batch_cap);
     let partition = PlanPartition::cut(engine.exec_plan(), cfg.n_shards);
@@ -1195,6 +1210,7 @@ mod tests {
             shard_id: 2,
             batch_cap: 64,
             fastmath: true,
+            classes: 10,
         };
         let back = WorkerConfig::decode(&cfg.encode()).expect("decode");
         assert_eq!(back.structure, cfg.structure);
@@ -1207,6 +1223,7 @@ mod tests {
         assert_eq!(back.shard_id, cfg.shard_id);
         assert_eq!(back.batch_cap, cfg.batch_cap);
         assert!(back.fastmath);
+        assert_eq!(back.classes, cfg.classes);
     }
 
     #[test]
@@ -1225,6 +1242,7 @@ mod tests {
             shard_id: 0,
             batch_cap: 4,
             fastmath: false,
+            classes: 1,
         };
         let worker = build_segment_worker(&cfg).expect("build worker");
         let d = cfg.num_vars;

@@ -11,7 +11,11 @@
 //! RAT-SPN parity on identical structures) needs from a workload. Every
 //! dataset is deterministic in its name-derived seed.
 
+use std::path::Path;
+
+use crate::util::error::Result;
 use crate::util::rng::Rng;
+use crate::{anyhow, ensure};
 
 use super::{Dataset, Split};
 
@@ -148,6 +152,84 @@ pub fn load(name: &str) -> Option<Dataset> {
 /// All 20 dataset names in Table-1 order.
 pub fn all_names() -> Vec<&'static str> {
     DEBD_SPECS.iter().map(|s| s.0).collect()
+}
+
+/// Parse one DEBD split body (the canonical `.data` format: one row per
+/// line, comma-separated small non-negative integers). `what` labels the
+/// source in error messages. Every malformation — a non-integer token, a
+/// ragged row, an empty file — is a typed [`crate::util::error::Error`],
+/// never a panic: these files arrive from disk, not from this process.
+pub fn parse_split(text: &str, what: &str) -> Result<Split> {
+    let mut data: Vec<f32> = Vec::new();
+    let mut row_len: Option<usize> = None;
+    let mut n = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let start = data.len();
+        for tok in line.split(',') {
+            let tok = tok.trim();
+            let v: u32 = tok.parse().map_err(|_| {
+                anyhow!(
+                    "{what}:{}: token {tok:?} is not a non-negative integer",
+                    ln + 1
+                )
+            })?;
+            data.push(v as f32);
+        }
+        let width = data.len() - start;
+        match row_len {
+            None => row_len = Some(width),
+            Some(w) => ensure!(
+                width == w,
+                "{what}:{}: row has {width} values, expected {w}",
+                ln + 1
+            ),
+        }
+        n += 1;
+    }
+    let row_len = row_len.ok_or_else(|| anyhow!("{what}: no data rows"))?;
+    Ok(Split { n, row_len, data })
+}
+
+/// Load one `.data` split file from disk (see [`parse_split`]). A
+/// missing or unreadable file is a typed error carrying the path.
+pub fn load_split_file(path: &Path) -> Result<Split> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read DEBD split {}: {e}", path.display()))?;
+    parse_split(&text, &path.display().to_string())
+}
+
+/// Load a DEBD-format dataset from disk: `<dir>/<name>.train.data`,
+/// `.valid.data`, `.test.data` (the canonical DEBD repository layout).
+/// The three splits must agree on the variable count. Callers that know
+/// their circuit's leaf family should follow up with
+/// [`Dataset::validate_family`] so an arity mismatch (e.g. categorical
+/// values under Bernoulli leaves) is rejected at load time instead of
+/// panicking inside a leaf kernel.
+pub fn load_dir(dir: &Path, name: &str) -> Result<Dataset> {
+    let part = |split: &str| load_split_file(&dir.join(format!("{name}.{split}.data")));
+    let train = part("train")?;
+    let valid = part("valid")?;
+    let test = part("test")?;
+    ensure!(
+        valid.row_len == train.row_len && test.row_len == train.row_len,
+        "DEBD splits of {name} disagree on variable count: \
+         train {} / valid {} / test {}",
+        train.row_len,
+        valid.row_len,
+        test.row_len
+    );
+    Ok(Dataset {
+        name: name.to_string(),
+        num_vars: train.row_len,
+        obs_dim: 1,
+        train,
+        valid,
+        test,
+    })
 }
 
 /// Synthetic Gaussian-noise data for the Fig. 3 / Fig. 6 efficiency

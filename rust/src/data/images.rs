@@ -12,7 +12,11 @@
 //! per seed. They exercise the identical modeling path (PD structure over
 //! pixels, factorized Gaussian leaves over channels, k-means mixture).
 
+use std::path::Path;
+
+use crate::util::error::Result;
 use crate::util::rng::Rng;
+use crate::{anyhow, ensure};
 
 use super::Split;
 
@@ -212,6 +216,149 @@ pub fn digits_gray(n: usize, h: usize, w: usize, seed: u64) -> (Split, Vec<u8>) 
         },
         labels,
     )
+}
+
+// ---------------------------------------------------------------------------
+// labeled-image container (.eimg)
+// ---------------------------------------------------------------------------
+
+/// Magic prefix of the `.eimg` labeled-image container.
+pub const EIMG_MAGIC: &[u8; 4] = b"EIMG";
+
+/// A labeled image set loaded from an `.eimg` file: pixel rows, one
+/// `u8` class label per image, and the class count the file declares.
+#[derive(Clone, Debug)]
+pub struct LabeledImages {
+    /// `[n, h*w*channels]` rows in [0, 1] (stored bytes / 255)
+    pub split: Split,
+    pub labels: Vec<u8>,
+    pub h: usize,
+    pub w: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+/// Parse an `.eimg` byte buffer: 4-byte magic `EIMG`, five little-endian
+/// `u32`s (`n`, `h`, `w`, `channels`, `classes`), `n` label bytes (each
+/// `< classes`), then `n*h*w*channels` pixel bytes (value / 255 → f32).
+/// Every malformation — short header, wrong magic, a label out of range,
+/// truncated pixels, trailing bytes — is a typed error naming `what`,
+/// never a panic (mirrors the checkpoint codec's corruption contract).
+pub fn parse_labeled(bytes: &[u8], what: &str) -> Result<LabeledImages> {
+    ensure!(
+        bytes.len() >= 4 + 5 * 4,
+        "{what}: truncated header ({} bytes, need {})",
+        bytes.len(),
+        4 + 5 * 4
+    );
+    ensure!(
+        &bytes[..4] == EIMG_MAGIC,
+        "{what}: bad magic {:?} (not an .eimg file)",
+        &bytes[..4]
+    );
+    let u32_at = |i: usize| {
+        let o = 4 + i * 4;
+        u32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]) as usize
+    };
+    let (n, h, w, channels, classes) =
+        (u32_at(0), u32_at(1), u32_at(2), u32_at(3), u32_at(4));
+    ensure!(
+        n > 0 && h > 0 && w > 0 && channels > 0,
+        "{what}: degenerate shape n={n} h={h} w={w} channels={channels}"
+    );
+    ensure!(classes > 0, "{what}: class count must be >= 1");
+    let row_len = h
+        .checked_mul(w)
+        .and_then(|px| px.checked_mul(channels))
+        .ok_or_else(|| anyhow!("{what}: image shape overflows"))?;
+    let body = &bytes[4 + 5 * 4..];
+    let need = n
+        .checked_mul(row_len)
+        .and_then(|p| p.checked_add(n))
+        .ok_or_else(|| anyhow!("{what}: payload size overflows"))?;
+    ensure!(
+        body.len() == need,
+        "{what}: payload carries {} bytes, expected {need} \
+         ({n} labels + {n}x{row_len} pixels)",
+        body.len()
+    );
+    let labels = body[..n].to_vec();
+    if let Some((i, &y)) = labels.iter().enumerate().find(|(_, &y)| y as usize >= classes)
+    {
+        return Err(anyhow!(
+            "{what}: label {y} of image {i} is outside the declared \
+             {classes} classes"
+        ));
+    }
+    let data: Vec<f32> = body[n..].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(LabeledImages {
+        split: Split {
+            n,
+            row_len,
+            data,
+        },
+        labels,
+        h,
+        w,
+        channels,
+        classes,
+    })
+}
+
+/// Load an `.eimg` labeled-image file (see [`parse_labeled`]). A missing
+/// or unreadable file is a typed error carrying the path.
+pub fn load_labeled(path: &Path) -> Result<LabeledImages> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow!("cannot read image file {}: {e}", path.display()))?;
+    parse_labeled(&bytes, &path.display().to_string())
+}
+
+/// Write an `.eimg` file: `split` rows in [0, 1] are quantized to bytes
+/// (`round(v * 255)`), one label per row, `labels[i] < classes`. The
+/// committed benchmark fixtures and the corruption tests both go through
+/// this writer, so reader and writer cannot drift.
+pub fn save_labeled(
+    path: &Path,
+    split: &Split,
+    labels: &[u8],
+    h: usize,
+    w: usize,
+    channels: usize,
+    classes: usize,
+) -> Result<()> {
+    ensure!(
+        split.row_len == h * w * channels,
+        "row length {} does not match shape {h}x{w}x{channels}",
+        split.row_len
+    );
+    ensure!(
+        labels.len() == split.n,
+        "{} labels for {} images",
+        labels.len(),
+        split.n
+    );
+    ensure!(classes > 0, "class count must be >= 1");
+    if let Some((i, &y)) = labels.iter().enumerate().find(|(_, &y)| y as usize >= classes)
+    {
+        return Err(anyhow!(
+            "label {y} of image {i} is outside the declared {classes} classes"
+        ));
+    }
+    let mut buf = Vec::with_capacity(4 + 5 * 4 + split.n + split.data.len());
+    buf.extend_from_slice(EIMG_MAGIC);
+    for v in [split.n, h, w, channels, classes] {
+        ensure!(v <= u32::MAX as usize, "field {v} overflows the u32 header");
+        buf.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(labels);
+    buf.extend(
+        split
+            .data
+            .iter()
+            .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8),
+    );
+    std::fs::write(path, buf)
+        .map_err(|e| anyhow!("cannot write image file {}: {e}", path.display()))
 }
 
 #[cfg(test)]

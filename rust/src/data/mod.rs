@@ -1,4 +1,5 @@
-//! Data pipeline substrate: synthetic stand-ins for the paper's datasets.
+//! Data pipeline substrate: synthetic stand-ins for the paper's datasets
+//! plus real on-disk loaders.
 //!
 //! No network access is available, so (per DESIGN.md §3) we synthesize:
 //!  * [`debd`] — the 20 binary density-estimation datasets (Table 1),
@@ -7,9 +8,24 @@
 //!  * [`images`] — SVHN-like digit images and CelebA-like face images
 //!    (Fig. 4), as procedural renderers with per-sample jitter;
 //! plus PPM/PGM image output for qualitative results.
+//!
+//! Real files load through [`debd::load_dir`] (the canonical DEBD
+//! `.data` CSV layout) and [`images::load_labeled`] (the `.eimg`
+//! labeled-image container). Both reject malformed input with typed
+//! errors — never a panic (`tests/data_loaders.rs` pins the corruption
+//! contract) — and callers should validate observations against their
+//! circuit's leaf family at load time ([`Split::validate_family`] /
+//! [`Dataset::validate_family`]) so out-of-support evidence is caught
+//! before it reaches a leaf kernel. The committed fixtures under
+//! `rust/fixtures/` (see `gen_fixtures.py`) exercise both loaders
+//! offline in tests and the `dataset_bpd` bench.
 
 pub mod debd;
 pub mod images;
+
+use crate::ensure;
+use crate::leaves::LeafFamily;
+use crate::util::error::Result;
 
 /// A dataset split: row-major `[n, num_vars * obs_dim]` f32 matrix.
 #[derive(Clone, Debug)]
@@ -27,6 +43,35 @@ impl Split {
     pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
         &self.data[lo * self.row_len..hi * self.row_len]
     }
+
+    /// Check every observation against `family`'s support
+    /// ([`LeafFamily::valid_obs`]): binary values for Bernoulli, in-range
+    /// indices for Categorical, `0..=trials` for Binomial, finite values
+    /// for Gaussian. `what` labels the split in the error. Run this at
+    /// load time — evidence outside the support would index theta out of
+    /// bounds or poison training with NaN deep inside a leaf kernel.
+    pub fn validate_family(&self, family: LeafFamily, what: &str) -> Result<()> {
+        let od = family.obs_dim();
+        ensure!(
+            od > 0 && self.row_len % od == 0,
+            "{what}: row length {} is not a multiple of the leaf \
+             family's observation dim {od}",
+            self.row_len
+        );
+        let d = self.row_len / od;
+        for i in 0..self.n {
+            let row = self.row(i);
+            for v in 0..d {
+                let obs = &row[v * od..(v + 1) * od];
+                ensure!(
+                    family.valid_obs(obs),
+                    "{what}: row {i}, variable {v}: observation {obs:?} \
+                     outside the support of {family:?}"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Train/valid/test triple.
@@ -38,6 +83,28 @@ pub struct Dataset {
     pub train: Split,
     pub valid: Split,
     pub test: Split,
+}
+
+impl Dataset {
+    /// Reject a dataset whose arity disagrees with the circuit's leaf
+    /// family — all three splits are checked (see
+    /// [`Split::validate_family`]).
+    pub fn validate_family(&self, family: LeafFamily) -> Result<()> {
+        ensure!(
+            self.obs_dim == family.obs_dim(),
+            "{}: dataset observation dim {} does not match leaf family \
+             {family:?} (obs_dim {})",
+            self.name,
+            self.obs_dim,
+            family.obs_dim()
+        );
+        self.train
+            .validate_family(family, &format!("{} (train)", self.name))?;
+        self.valid
+            .validate_family(family, &format!("{} (valid)", self.name))?;
+        self.test
+            .validate_family(family, &format!("{} (test)", self.name))
+    }
 }
 
 /// Write a PPM (P6) RGB image; `pixels` is `[h, w, 3]` in [0, 1].

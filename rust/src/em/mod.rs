@@ -16,6 +16,7 @@
 
 use crate::engine::{EinetParams, EmStats, ParamLayout};
 use crate::layers::WeightStructure;
+use crate::{bail, Result};
 
 /// Hyper-parameters of an EM run.
 #[derive(Clone, Copy, Debug)]
@@ -38,6 +39,188 @@ impl Default for EmConfig {
             weight_floor: 1e-12,
             var_bounds: (1e-6, 1e-2),
             min_leaf_mass: 1e-6,
+        }
+    }
+}
+
+/// The stepsize λ_t used by update `t` of a training run (Eq. 8/9's
+/// gliding average; the `online_em_stepsize` knob of the exemplar
+/// configs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSchedule {
+    /// defer to [`EmConfig::step_size`] unchanged — the historical
+    /// behavior, and therefore the bit-identity baseline
+    Config,
+    /// a fixed λ for every update
+    Constant(f32),
+    /// Robbins–Monro style decay λ_t = s0 / t^alpha (t is the 1-based
+    /// update counter); alpha in (0.5, 1] satisfies the classical
+    /// stochastic-approximation conditions
+    Decay { s0: f32, alpha: f32 },
+}
+
+impl StepSchedule {
+    /// λ for the `t`-th update (t counts from 1).
+    pub fn step_size(&self, t: u64, cfg: &EmConfig) -> f32 {
+        match *self {
+            StepSchedule::Config => cfg.step_size,
+            StepSchedule::Constant(s) => s,
+            StepSchedule::Decay { s0, alpha } => s0 / (t as f32).powf(alpha),
+        }
+    }
+}
+
+/// When (and how strongly) accumulated E-step statistics are folded into
+/// the parameters during training: the `online_em_frequency` /
+/// `online_em_stepsize` pair every exemplar config exposes, lifted onto
+/// the flat [`EmStats`] reduce so the same policy drives the in-process
+/// trainer, the sharded pool and the AOT path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UpdatePolicy {
+    /// number of mini-batches whose statistics accumulate before one
+    /// M-step; `0` means full-batch (one update per epoch, after every
+    /// mini-batch of the epoch has been absorbed)
+    pub frequency: usize,
+    /// stepsize schedule applied at each update
+    pub schedule: StepSchedule,
+}
+
+impl Default for UpdatePolicy {
+    /// Update after every mini-batch at the configured stepsize — the
+    /// exact historical trainer behavior (bit-identical by construction:
+    /// frequency 1 applies `m_step` to each batch's merged statistics
+    /// directly, without an intermediate accumulator).
+    fn default() -> Self {
+        Self {
+            frequency: 1,
+            schedule: StepSchedule::Config,
+        }
+    }
+}
+
+impl UpdatePolicy {
+    /// Full-batch EM: accumulate a whole epoch, update once.
+    pub fn full_batch() -> Self {
+        Self {
+            frequency: 0,
+            schedule: StepSchedule::Config,
+        }
+    }
+
+    /// Parse the CLI form `FREQ:STEP`, where `FREQ` is the update
+    /// frequency in mini-batches (`0` = full-batch) and `STEP` is either
+    /// a constant stepsize (`0.05`) or a decay spec `s0/t^alpha`
+    /// (`0.5/t^0.7`).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (f, s) = match spec.split_once(':') {
+            Some(p) => p,
+            None => bail!("--online-em expects FREQ:STEP, got {spec:?}"),
+        };
+        let frequency: usize = match f.parse() {
+            Ok(v) => v,
+            Err(_) => bail!("--online-em frequency {f:?} is not an integer"),
+        };
+        let schedule = if let Some((s0, alpha)) = s.split_once("/t^") {
+            let s0: f32 = match s0.parse() {
+                Ok(v) => v,
+                Err(_) => bail!("--online-em stepsize s0 {s0:?} is not a number"),
+            };
+            let alpha: f32 = match alpha.parse() {
+                Ok(v) => v,
+                Err(_) => bail!("--online-em decay exponent {alpha:?} is not a number"),
+            };
+            if !(s0 > 0.0 && s0 <= 1.0) {
+                bail!("--online-em stepsize s0 must be in (0, 1], got {s0}");
+            }
+            StepSchedule::Decay { s0, alpha }
+        } else {
+            let v: f32 = match s.parse() {
+                Ok(v) => v,
+                Err(_) => bail!("--online-em stepsize {s:?} is not a number"),
+            };
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("--online-em stepsize must be in (0, 1], got {v}");
+            }
+            StepSchedule::Constant(v)
+        };
+        Ok(Self {
+            frequency,
+            schedule,
+        })
+    }
+}
+
+/// Running state of one training run's update policy: the statistics
+/// accumulated since the last M-step and the 1-based update counter that
+/// drives the stepsize schedule. Both single-engine and sharded trainers
+/// drive one of these; at the default policy it adds no work and no
+/// float operations (each batch's merged statistics go to `m_step`
+/// untouched).
+pub struct PolicyState {
+    acc: EmStats,
+    pending: usize,
+    updates: u64,
+}
+
+impl PolicyState {
+    pub fn new(params: &EinetParams) -> Self {
+        Self {
+            acc: EmStats::zeros_like(params),
+            pending: 0,
+            updates: 0,
+        }
+    }
+
+    /// Number of M-steps applied so far.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Fold one mini-batch's merged statistics in and apply the M-step
+    /// when the policy's window closes (`frequency` batches absorbed, or
+    /// epoch end for the full-batch policy). Returns `true` when the
+    /// parameters were updated (callers re-broadcast to workers then).
+    pub fn absorb(
+        &mut self,
+        params: &mut EinetParams,
+        stats: &EmStats,
+        policy: &UpdatePolicy,
+        cfg: &EmConfig,
+        end_of_epoch: bool,
+    ) -> bool {
+        if policy.frequency == 1 {
+            // fast path: per-batch updates never touch the accumulator,
+            // so the default policy is bit-identical to the pre-policy
+            // trainers
+            self.updates += 1;
+            let step = self.step_cfg(policy, cfg);
+            m_step(params, stats, &step);
+            return true;
+        }
+        self.acc.merge(stats);
+        self.pending += 1;
+        let due = if policy.frequency == 0 {
+            end_of_epoch
+        } else {
+            self.pending >= policy.frequency || end_of_epoch
+        };
+        if !due {
+            return false;
+        }
+        self.updates += 1;
+        let step = self.step_cfg(policy, cfg);
+        m_step(params, &self.acc, &step);
+        self.acc.reset();
+        self.pending = 0;
+        true
+    }
+
+    /// The schedule is applied through `EmConfig::step_size`, keeping
+    /// `m_step` itself policy-free.
+    fn step_cfg(&self, policy: &UpdatePolicy, cfg: &EmConfig) -> EmConfig {
+        EmConfig {
+            step_size: policy.schedule.step_size(self.updates, cfg),
+            ..*cfg
         }
     }
 }

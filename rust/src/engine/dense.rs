@@ -261,9 +261,7 @@ impl DenseEngine {
         for si in 0..self.exec.steps.len() {
             self.run_forward_step(params, x, mask, bn, si, sr);
         }
-        for (b, lp) in logp.iter_mut().enumerate() {
-            *lp = self.arena[self.exec.root_row(b)];
-        }
+        exec::read_root_logp(&self.exec, &self.arena, bn, sr, logp);
     }
 
     /// See [`Engine::forward`].
@@ -483,15 +481,11 @@ impl DenseEngine {
         self.grad_scratch.fill(0.0);
     }
 
-    /// See [`Engine::seed_root_grad`]: d(sum_b log P_b)/d(log root_b) = 1,
-    /// plus the loglik/count accounting. Requires `clear_grad` first.
+    /// See [`Engine::seed_root_grad`]: d(sum_b log P_b)/d(log root_b) = 1
+    /// (class-conditional roots seed the class posterior), plus the
+    /// loglik/count accounting. Requires `clear_grad` first.
     pub fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
-        for b in 0..bn {
-            let r = self.exec.root_row(b);
-            self.grad_arena[r] = 1.0;
-            stats.loglik += self.arena[r] as f64;
-        }
-        stats.count += bn;
+        exec::seed_root_grad(&self.exec, &self.arena, &mut self.grad_arena, bn, stats);
     }
 
     /// Size the backward temporaries (all lazy: engines that never train
@@ -594,6 +588,34 @@ impl DenseEngine {
         for si in (0..self.exec.steps.len()).rev() {
             self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
         }
+    }
+
+    /// See [`Engine::backward_semiring`] with `MaxProduct`: the Viterbi
+    /// (hard) E-step over the activations a max-product forward left in
+    /// place — seed the root achiever, then descend through each max's
+    /// argmax via the shared [`exec::max_backward`] walk.
+    pub fn backward_max(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        self.clear_grad();
+        exec::seed_root_max(&self.exec, &self.arena, &mut self.grad_arena, bn, stats);
+        exec::max_backward(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            &mut self.grad_arena,
+            &mut self.grad_scratch,
+            x,
+            mask,
+            bn,
+            stats,
+        );
     }
 
     /// See [`Engine::backward_steps`]: the segmented backward sweep (the
@@ -1110,6 +1132,21 @@ impl Engine for DenseEngine {
         stats: &mut EmStats,
     ) {
         DenseEngine::backward(self, params, x, mask, bn, stats)
+    }
+
+    fn backward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+        sr: Semiring,
+    ) {
+        match sr {
+            Semiring::SumProduct => DenseEngine::backward(self, params, x, mask, bn, stats),
+            Semiring::MaxProduct => DenseEngine::backward_max(self, params, x, mask, bn, stats),
+        }
     }
 
     fn decode(

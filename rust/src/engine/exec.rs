@@ -1210,6 +1210,288 @@ pub(crate) fn leaf_backward(
 }
 
 // ---------------------------------------------------------------------------
+// shared max-product (Viterbi) backward
+// ---------------------------------------------------------------------------
+
+/// Seed the root gradient for a Viterbi E-step: the hard achiever. For
+/// a single-root plan this puts mass 1 on the root entry (and the
+/// accumulated `loglik` is the MPE score `max_z log p(x, z)` the
+/// max-product forward left there); for a class-conditional plan
+/// (root width > 1) the mass goes to the best class entry — the joint
+/// argmax over (class, latents).
+pub(crate) fn seed_root_max(
+    ep: &ExecPlan,
+    arena: &[f32],
+    grad_arena: &mut [f32],
+    bn: usize,
+    stats: &mut EmStats,
+) {
+    let width = ep.region_width[ep.plan.graph.root];
+    for b in 0..bn {
+        let r = ep.root_row(b);
+        let best = argmax(&arena[r..r + width]);
+        grad_arena[r + best] = 1.0;
+        stats.loglik += arena[r + best] as f64;
+    }
+    stats.count += bn;
+}
+
+/// Read the scalar root log-probability of each batch row. For the
+/// single-root plan this is the root activation itself (bit-identical
+/// to the historical read). A class-conditional root (width C > 1)
+/// holds per-class scores `log p(x | c)`; under a uniform class prior
+/// the scalar evidence is `logsumexp_c − ln C` (sum-product) or the
+/// best class's `max_c − ln C` (max-product).
+pub(crate) fn read_root_logp(
+    ep: &ExecPlan,
+    arena: &[f32],
+    bn: usize,
+    sr: Semiring,
+    logp: &mut [f32],
+) {
+    let width = ep.region_width[ep.plan.graph.root];
+    if width == 1 {
+        for (b, lp) in logp.iter_mut().enumerate().take(bn) {
+            *lp = arena[ep.root_row(b)];
+        }
+        return;
+    }
+    let lnc = (width as f32).ln();
+    for (b, lp) in logp.iter_mut().enumerate().take(bn) {
+        let r = ep.root_row(b);
+        let row = &arena[r..r + width];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        *lp = match sr {
+            Semiring::SumProduct => {
+                let s: f32 = row.iter().map(|&v| ep.math.exp1(v - m)).sum();
+                m + s.ln() - lnc
+            }
+            Semiring::MaxProduct => m - lnc,
+        };
+    }
+}
+
+/// Seed the root gradient rows for the soft (sum-product) E-step. The
+/// single-root plan seeds `d log P / d log root = 1` per row — the
+/// historical seed, bit-identical. A class-conditional root seeds the
+/// class posterior `exp(v_c − logsumexp)` (the gradient of the
+/// evidence through the uniform-prior mixture), so unsupervised EM on
+/// a class-conditional plan trains the shared structure under the
+/// latent class mixture. Accounts `stats.loglik`/`stats.count`;
+/// requires zeroed gradients.
+pub(crate) fn seed_root_grad(
+    ep: &ExecPlan,
+    arena: &[f32],
+    grad_arena: &mut [f32],
+    bn: usize,
+    stats: &mut EmStats,
+) {
+    let width = ep.region_width[ep.plan.graph.root];
+    if width == 1 {
+        for b in 0..bn {
+            let r = ep.root_row(b);
+            grad_arena[r] = 1.0;
+            stats.loglik += arena[r] as f64;
+        }
+        stats.count += bn;
+        return;
+    }
+    let lnc = (width as f32).ln();
+    for b in 0..bn {
+        let r = ep.root_row(b);
+        let row = &arena[r..r + width];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let s: f32 = row.iter().map(|&v| ep.math.exp1(v - m)).sum();
+        let lse = m + s.ln();
+        for c in 0..width {
+            grad_arena[r + c] = ep.math.exp1(arena[r + c] - lse);
+        }
+        stats.loglik += (lse - lnc) as f64;
+    }
+    stats.count += bn;
+}
+
+/// The Viterbi (hard/max-product) E-step: walk the step program in
+/// reverse over the activations a **max-product forward** left in
+/// `arena`/`scratch`, descending only through each max's achiever.
+///
+/// Where the sum-product backward distributes each node's posterior
+/// over all children (Eq. 6), the Viterbi backward re-derives the MPE
+/// latent assignment — at every Mix the argmax child, at every Einsum
+/// the argmax `(i, j)` entry of `W_kij · N_i · N'_j` (the exact
+/// computation the MPE backtrack in [`decode`] performs) — and
+/// accumulates **hard counts** into the same flat [`EmStats`] buffer.
+/// `m_step` then is the classical Viterbi-EM update: each weight's
+/// statistic is the number of samples whose MPE assignment used it,
+/// and the leaf statistics (via [`leaf_backward`], whose posteriors
+/// here are 0/1 indicator masses) are per-component hard-assignment
+/// moment sums.
+///
+/// Shared by every engine: their max-product forwards leave identical
+/// activation values (the same contract [`decode`] relies on). The
+/// gradient mirrors must be zeroed and root-seeded
+/// ([`seed_root_max`]) before the call.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn max_backward(
+    ep: &ExecPlan,
+    params: &ParamArena,
+    arena: &[f32],
+    scratch: &[f32],
+    grad_arena: &mut [f32],
+    grad_scratch: &mut [f32],
+    x: &[f32],
+    mask: &[f32],
+    bn: usize,
+    stats: &mut EmStats,
+) {
+    let k = ep.k;
+    let mut tbuf = vec![0.0f32; ep.family.stat_dim()];
+    let mut wbuf = vec![0.0f32; k * k];
+    for si in (0..ep.steps.len()).rev() {
+        match ep.steps[si] {
+            Step::Mix {
+                out,
+                ko,
+                children,
+                child,
+                child_stride,
+                w,
+                ..
+            } => {
+                let wrow = &params.data[w..w + children];
+                for b in 0..bn {
+                    for kk in 0..ko {
+                        let g = grad_arena[out + b * ko + kk];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        // the forward max's achiever, recomputed exactly
+                        // as the decode walk scores partition choices:
+                        // argmax_c w_c · exp(v_c − max_c v_c)
+                        let mut maxv = f32::NEG_INFINITY;
+                        for c in 0..children {
+                            let v = scratch[child + c * child_stride + b * ko + kk];
+                            maxv = maxv.max(v);
+                        }
+                        let mut best = 0usize;
+                        let mut bestv = f32::NEG_INFINITY;
+                        for (c, &wc) in wrow.iter().enumerate() {
+                            let v = wc
+                                * ep.math.exp1(
+                                    scratch[child + c * child_stride + b * ko + kk]
+                                        - maxv,
+                                );
+                            if v > bestv {
+                                bestv = v;
+                                best = c;
+                            }
+                        }
+                        stats.grad[w + best] += g;
+                        grad_scratch[child + best * child_stride + b * ko + kk] += g;
+                    }
+                }
+            }
+            Step::Einsum {
+                level,
+                left,
+                right,
+                ko,
+                w,
+                w2,
+                dest,
+                to_scratch,
+                ..
+            } => {
+                let structure = ep.layout.levels[level].structure;
+                for b in 0..bn {
+                    let loff = left + b * k;
+                    let roff = right + b * k;
+                    // the forward's per-row scaling maxima
+                    let mut a = f32::NEG_INFINITY;
+                    let mut ap = f32::NEG_INFINITY;
+                    for kk in 0..k {
+                        a = a.max(arena[loff + kk]);
+                        ap = ap.max(arena[roff + kk]);
+                    }
+                    for kout in 0..ko {
+                        let g = if to_scratch {
+                            grad_scratch[dest + b * ko + kout]
+                        } else {
+                            grad_arena[dest + b * ko + kout]
+                        };
+                        if g == 0.0 {
+                            continue;
+                        }
+                        // materialize the entry's (i, j) score table the
+                        // way the MPE backtrack does, and descend through
+                        // its argmax
+                        match structure {
+                            WeightStructure::Dense => {
+                                let wslot = &params.data
+                                    [w + kout * k * k..w + (kout + 1) * k * k];
+                                for ii in 0..k {
+                                    let eni = ep.math.exp1(arena[loff + ii] - a);
+                                    for jj in 0..k {
+                                        wbuf[ii * k + jj] = wslot[ii * k + jj]
+                                            * eni
+                                            * ep.math.exp1(arena[roff + jj] - ap);
+                                    }
+                                }
+                                let pick = argmax(&wbuf);
+                                let (bi, bj) = (pick / k, pick % k);
+                                stats.grad[w + kout * k * k + bi * k + bj] += g;
+                                grad_arena[loff + bi] += g;
+                                grad_arena[roff + bj] += g;
+                            }
+                            WeightStructure::Monarch { blocks } => {
+                                let q = k / blocks;
+                                let lslot = &params.data
+                                    [w + kout * k * q..w + (kout + 1) * k * q];
+                                let rslot = &params.data[w2 + kout * k * blocks
+                                    ..w2 + (kout + 1) * k * blocks];
+                                for ii in 0..k {
+                                    let eni = ep.math.exp1(arena[loff + ii] - a);
+                                    let gb = ii / q;
+                                    let lrow = &lslot[ii * q..(ii + 1) * q];
+                                    for jj in 0..k {
+                                        let s = jj / blocks;
+                                        let gp = jj % blocks;
+                                        let wij =
+                                            lrow[s] * rslot[(s * blocks + gb) * blocks + gp];
+                                        wbuf[ii * k + jj] = wij
+                                            * eni
+                                            * ep.math.exp1(arena[roff + jj] - ap);
+                                    }
+                                }
+                                let pick = argmax(&wbuf);
+                                let (bi, bj) = (pick / k, pick % k);
+                                let (s, gp) = (bj / blocks, bj % blocks);
+                                let gb = bi / q;
+                                // hard counts land on BOTH factors of the
+                                // used logical weight; m_step renormalizes
+                                // each factor group independently
+                                stats.grad[w + kout * k * q + bi * q + s] += g;
+                                stats.grad
+                                    [w2 + kout * k * blocks + (s * blocks + gb) * blocks + gp] +=
+                                    g;
+                                grad_arena[loff + bi] += g;
+                                grad_arena[roff + bj] += g;
+                            }
+                        }
+                    }
+                }
+            }
+            Step::Leaf { rid, out } => {
+                // hard leaf statistics: the gradient mirror now carries
+                // 0/1 path-indicator masses, so Eq. 6 degenerates to the
+                // Viterbi moment sums
+                leaf_backward(ep, rid, out, x, mask, bn, grad_arena, &mut tbuf, stats);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // shared top-down decode
 // ---------------------------------------------------------------------------
 

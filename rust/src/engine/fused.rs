@@ -154,7 +154,13 @@ impl FusedEngine {
             bn,
             sr,
         );
-        self.inner.read_logp(bn, logp);
+        exec::read_root_logp(
+            Engine::exec_plan(&self.inner),
+            Engine::arena(&self.inner),
+            bn,
+            sr,
+            logp,
+        );
     }
 
     /// See [`Engine::forward_steps`]: fuse the segment's step list
@@ -221,6 +227,20 @@ impl Engine for FusedEngine {
         // arena/scratch, so the dense backward produces bit-identical
         // statistics
         Engine::backward(&mut self.inner, params, x, mask, bn, stats)
+    }
+
+    fn backward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+        sr: Semiring,
+    ) {
+        // same delegation as `backward`: the semiring only changes which
+        // walk runs over those activations
+        Engine::backward_semiring(&mut self.inner, params, x, mask, bn, stats, sr)
     }
 
     fn decode(

@@ -1267,6 +1267,34 @@ pub trait Engine {
         stats: &mut EmStats,
     );
 
+    /// Accumulate E-step statistics under a semiring, mirroring
+    /// [`Engine::forward_semiring`]: `SumProduct` is the soft E-step
+    /// (expected statistics, Eq. 6 — identical to [`Engine::backward`]);
+    /// `MaxProduct` is the **Viterbi/hard E-step** — it re-derives the
+    /// MPE latent assignment from the max-product activations and
+    /// accumulates 0/1 path counts into the same flat [`EmStats`], so the
+    /// unchanged `m_step` becomes the classical Viterbi-EM update.
+    /// Requires a prior `forward_semiring` call with the SAME semiring,
+    /// batch, and mask (activations still in place). Every backend
+    /// overrides this over its own buffers via [`exec::max_backward`];
+    /// the default covers `SumProduct` only.
+    fn backward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+        sr: exec::Semiring,
+    ) {
+        match sr {
+            exec::Semiring::SumProduct => self.backward(params, x, mask, bn, stats),
+            exec::Semiring::MaxProduct => {
+                unimplemented!("this backend does not implement the Viterbi E-step")
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // segmented execution (scope-partitioned sharding; see exec::PlanPartition)
     //
@@ -1374,13 +1402,89 @@ pub trait Engine {
         }
     }
 
-    /// Read the root log-likelihoods of the last forward pass.
+    /// Read the root log-likelihoods of the last forward pass
+    /// (sum-product semantics; see [`Engine::read_logp_semiring`]).
     fn read_logp(&self, bn: usize, logp: &mut [f32]) {
+        self.read_logp_semiring(bn, logp, exec::Semiring::SumProduct)
+    }
+
+    /// Read the scalar root log-probability of the last forward pass
+    /// under the given semiring. For a single-root plan both semirings
+    /// read the root activation; a class-conditional root reduces its
+    /// per-class scores under a uniform class prior (`logsumexp − ln C`
+    /// for sum-product, `max − ln C` for max-product). The semiring must
+    /// match the forward pass that filled the arena.
+    fn read_logp_semiring(&self, bn: usize, logp: &mut [f32], sr: exec::Semiring) {
+        exec::read_root_logp(self.exec_plan(), self.arena(), bn, sr, logp)
+    }
+
+    /// Number of root outputs: C for a class-conditional plan
+    /// ([`crate::layers::LayeredPlan::with_classes`]), 1 otherwise.
+    fn num_classes(&self) -> usize {
+        let ep = self.exec_plan();
+        ep.region_width[ep.plan.graph.root]
+    }
+
+    /// Read the raw per-class root scores `log p(x | c)` of the last
+    /// forward pass into `out` (`[bn, C]` row-major). On a single-root
+    /// plan this is the `[bn, 1]` evidence column.
+    fn read_class_logp(&self, bn: usize, out: &mut [f32]) {
         let ep = self.exec_plan();
         let arena = self.arena();
-        for (b, lp) in logp.iter_mut().enumerate().take(bn) {
-            *lp = arena[ep.root_row(b)];
+        let width = ep.region_width[ep.plan.graph.root];
+        for b in 0..bn {
+            let r = ep.root_row(b);
+            out[b * width..(b + 1) * width].copy_from_slice(&arena[r..r + width]);
         }
+    }
+
+    /// Seed the root gradients for a **supervised** (labeled) E-step on a
+    /// class-conditional plan: mass 1 on each sample's labeled class
+    /// entry, so the backward sweep accumulates the statistics of
+    /// `log p(x | y)` — discriminative per-class EM over the shared
+    /// structure. Accounts `stats.loglik` (the conditional score) and
+    /// `stats.count`. Requires `clear_grad` first.
+    fn seed_root_grad_labeled(&mut self, bn: usize, labels: &[u8], stats: &mut EmStats) {
+        let rows = {
+            let ep = self.exec_plan();
+            let arena = self.arena();
+            let width = ep.region_width[ep.plan.graph.root];
+            let mut rows = Vec::with_capacity(bn);
+            for b in 0..bn {
+                let y = labels[b] as usize;
+                assert!(
+                    y < width,
+                    "label {y} out of range for {width} root class(es)"
+                );
+                let r = ep.root_row(b) + y;
+                stats.loglik += arena[r] as f64;
+                rows.push(r);
+            }
+            rows
+        };
+        stats.count += bn;
+        let grad = self.grad_buf_mut();
+        for r in rows {
+            grad[r] = 1.0;
+        }
+    }
+
+    /// Supervised E-step for the batch last passed to `forward`:
+    /// [`Engine::seed_root_grad_labeled`] + the full backward sweep.
+    /// `labels` holds one class index per batch row.
+    fn backward_labeled(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        labels: &[u8],
+        stats: &mut EmStats,
+    ) {
+        self.clear_grad();
+        self.seed_root_grad_labeled(bn, labels, stats);
+        let all: Vec<usize> = (0..self.exec_plan().steps.len()).collect();
+        self.backward_steps(params, x, mask, bn, &all, stats);
     }
 
     /// Execute a subset of the [`exec::SamplePlan`] steps (ascending
@@ -1554,6 +1658,54 @@ pub trait Engine {
         }
         assert!(!qp.passes.is_empty(), "query plan without passes");
         assert_eq!(x.len(), bn * row, "batch shape mismatch");
+        let classes = self.num_classes();
+        if let Some(cr) = qp.class_reduce {
+            assert!(
+                classes > 1,
+                "classify/posterior queries need a class-conditional circuit \
+                 (LayeredPlan::with_classes)"
+            );
+            out.rows.clear();
+            out.scores.clear();
+            out.scores.resize(
+                match cr {
+                    query::ClassReduce::Argmax => bn,
+                    query::ClassReduce::Posterior => bn * classes,
+                },
+                0.0,
+            );
+            let cap = self.batch_capacity();
+            let mut logp = vec![0.0f32; cap.min(bn)];
+            let mut cls = vec![0.0f32; cap.min(bn) * classes];
+            let mut b0 = 0usize;
+            while b0 < bn {
+                let chunk = cap.min(bn - b0);
+                let xs = &x[b0 * row..(b0 + chunk) * row];
+                self.forward_semiring(
+                    params,
+                    xs,
+                    &qp.passes[0].mask,
+                    &mut logp[..chunk],
+                    qp.passes[0].semiring,
+                );
+                self.read_class_logp(chunk, &mut cls[..chunk * classes]);
+                let dst = match cr {
+                    query::ClassReduce::Argmax => &mut out.scores[b0..b0 + chunk],
+                    query::ClassReduce::Posterior => {
+                        &mut out.scores[b0 * classes..(b0 + chunk) * classes]
+                    }
+                };
+                query::reduce_class_scores(
+                    &cls[..chunk * classes],
+                    chunk,
+                    classes,
+                    cr,
+                    dst,
+                );
+                b0 += chunk;
+            }
+            return;
+        }
         out.scores.clear();
         out.scores.resize(bn, 0.0);
         out.rows.clear();

@@ -23,12 +23,14 @@
 //! | `Mpe {mask}`           | (mask, MaxProduct)                  | `Mpe` (argmax backtrack, leaf modes) |
 //! | `Sample {n}`           | shared-rows fast path               | `Sample` |
 //! | `Inpaint {mask, mode}` | (mask, SumProduct)                  | `mode` |
+//! | `Classify {mask}`      | (mask, SumProduct); argmax class per row | — |
+//! | `Posterior {mask}`     | (mask, SumProduct); `[bn, C]` log-posteriors | — |
 //!
 //! Masks are canonicalized (0.0 / 1.0) and validated at compile time, so
 //! equivalent queries compile to comparable plans — which is what the
 //! inference server batches on ([`QueryPlan::group_cmp`]).
 
-use super::exec::Semiring;
+use super::exec::{self, Semiring};
 use super::DecodeMode;
 use crate::ensure;
 use crate::util::error::Result;
@@ -65,6 +67,26 @@ pub enum Query {
     /// per-branch modes over sum-product activations (greedy MPE — for
     /// the exact version use [`Query::Mpe`]).
     Inpaint { mask: Vec<f32>, mode: DecodeMode },
+    /// MAP class prediction on a class-conditional circuit
+    /// ([`crate::layers::LayeredPlan::with_classes`]): per row,
+    /// `argmax_c log p(x_e | c)` (uniform class prior, so this IS the
+    /// posterior argmax). `mask[d] == 0` marginalizes variable `d` out of
+    /// the evidence. Scores carry the winning class index as `f32`.
+    Classify { mask: Vec<f32> },
+    /// Full class posterior on a class-conditional circuit: per row, the
+    /// `C` log-posteriors `log p(c | x_e)` under the uniform prior
+    /// (`scores` is `[bn, C]` row-major).
+    Posterior { mask: Vec<f32> },
+}
+
+/// How a class-conditional root's per-class scores reduce to the query
+/// output (see [`Query::Classify`] / [`Query::Posterior`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ClassReduce {
+    /// one `f32` per row: the argmax class index
+    Argmax,
+    /// `C` values per row: normalized log-posteriors
+    Posterior,
 }
 
 /// One forward interpretation of the step program.
@@ -87,6 +109,9 @@ pub struct QueryPlan {
     pub decode: Option<DecodeMode>,
     /// `Some(n)`: the unconditional-sampling fast path (no batch input)
     pub sample_n: Option<usize>,
+    /// `Some`: reduce the class-conditional root's per-class scores
+    /// (classify / posterior) instead of reading the scalar evidence
+    pub class_reduce: Option<ClassReduce>,
 }
 
 impl QueryPlan {
@@ -106,7 +131,8 @@ impl QueryPlan {
     /// requests by this key and serve each group with one set of passes.
     pub fn group_cmp(&self, other: &QueryPlan) -> std::cmp::Ordering {
         use std::cmp::Ordering;
-        let key = |p: &QueryPlan| (p.passes.len(), p.decode, p.sample_n);
+        let key =
+            |p: &QueryPlan| (p.passes.len(), p.decode, p.sample_n, p.class_reduce);
         match key(self).cmp(&key(other)) {
             Ordering::Equal => {}
             o => return o,
@@ -175,6 +201,7 @@ impl Query {
                 }],
                 decode: None,
                 sample_n: None,
+                class_reduce: None,
             },
             Query::Marginal { mask } => QueryPlan {
                 passes: vec![QueryPass {
@@ -183,6 +210,7 @@ impl Query {
                 }],
                 decode: None,
                 sample_n: None,
+                class_reduce: None,
             },
             Query::Conditional {
                 query_mask,
@@ -213,6 +241,7 @@ impl Query {
                     ],
                     decode: None,
                     sample_n: None,
+                    class_reduce: None,
                 }
             }
             Query::Mpe { mask } => QueryPlan {
@@ -222,6 +251,7 @@ impl Query {
                 }],
                 decode: Some(DecodeMode::Mpe),
                 sample_n: None,
+                class_reduce: None,
             },
             Query::Sample { n } => {
                 ensure!(*n > 0, "sample count must be positive");
@@ -229,8 +259,27 @@ impl Query {
                     passes: Vec::new(),
                     decode: None,
                     sample_n: Some(*n),
+                    class_reduce: None,
                 }
             }
+            Query::Classify { mask } => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: canon_mask(mask, num_vars, "evidence")?,
+                    semiring: Semiring::SumProduct,
+                }],
+                decode: None,
+                sample_n: None,
+                class_reduce: Some(ClassReduce::Argmax),
+            },
+            Query::Posterior { mask } => QueryPlan {
+                passes: vec![QueryPass {
+                    mask: canon_mask(mask, num_vars, "evidence")?,
+                    semiring: Semiring::SumProduct,
+                }],
+                decode: None,
+                sample_n: None,
+                class_reduce: Some(ClassReduce::Posterior),
+            },
             // an Inpaint with DecodeMode::Mpe is legal: it emits
             // per-branch modes over SUM-product activations (greedy) —
             // the exact max-product query is Query::Mpe
@@ -241,6 +290,7 @@ impl Query {
                 }],
                 decode: Some(*mode),
                 sample_n: None,
+                class_reduce: None,
             },
         };
         Ok(plan)
@@ -255,6 +305,42 @@ impl Query {
             Query::Mpe { .. } => "mpe",
             Query::Sample { .. } => "sample",
             Query::Inpaint { .. } => "inpaint",
+            Query::Classify { .. } => "classify",
+            Query::Posterior { .. } => "posterior",
+        }
+    }
+}
+
+/// Reduce raw per-class root scores (`[bn, C]` row-major, natural-log
+/// `log p(x | c)`) into the query's answer shape: `Argmax` writes one
+/// predicted class index per row into `out[..bn]` (ties break to the
+/// lowest index, matching the decode tie-break); `Posterior` writes the
+/// `[bn, C]` normalized log-posteriors into `out[..bn * classes]` (the
+/// uniform class prior cancels in the normalization). One function so
+/// the in-process [`super::Engine::execute`] path and the sharded
+/// serving tier reduce bit-identically.
+pub fn reduce_class_scores(
+    cls: &[f32],
+    bn: usize,
+    classes: usize,
+    cr: ClassReduce,
+    out: &mut [f32],
+) {
+    for b in 0..bn {
+        let crow = &cls[b * classes..(b + 1) * classes];
+        match cr {
+            ClassReduce::Argmax => {
+                out[b] = exec::argmax(crow) as f32;
+            }
+            ClassReduce::Posterior => {
+                let m = crow.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+                let s: f32 = crow.iter().map(|&v| (v - m).exp()).sum();
+                let lse = m + s.ln();
+                let dst = &mut out[b * classes..(b + 1) * classes];
+                for (d, &v) in dst.iter_mut().zip(crow) {
+                    *d = v - lse;
+                }
+            }
         }
     }
 }

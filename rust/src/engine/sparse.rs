@@ -256,9 +256,7 @@ impl SparseEngine {
         for si in 0..self.exec.steps.len() {
             self.run_forward_step(params, x, mask, bn, si, sr);
         }
-        for (b, lp) in logp.iter_mut().enumerate() {
-            *lp = self.arena[self.exec.root_row(b)];
-        }
+        exec::read_root_logp(&self.exec, &self.arena, bn, sr, logp);
     }
 
     /// See [`Engine::forward`] (same contract as the dense engine).
@@ -520,12 +518,7 @@ impl SparseEngine {
 
     /// See [`Engine::seed_root_grad`]. Requires `clear_grad` first.
     pub fn seed_root_grad(&mut self, bn: usize, stats: &mut EmStats) {
-        for b in 0..bn {
-            let r = self.exec.root_row(b);
-            self.grad_arena[r] = 1.0;
-            stats.loglik += self.arena[r] as f64;
-        }
-        stats.count += bn;
+        exec::seed_root_grad(&self.exec, &self.arena, &mut self.grad_arena, bn, stats);
     }
 
     /// Execute one backward step by index (`params` feeds the Monarch
@@ -605,6 +598,36 @@ impl SparseEngine {
         for si in (0..self.exec.steps.len()).rev() {
             self.run_backward_step(params, x, mask, bn, si, stats, &mut tbuf);
         }
+    }
+
+    /// See [`Engine::backward_semiring`] with `MaxProduct`: the Viterbi
+    /// (hard) E-step. The sparse forward leaves the same max-product
+    /// activation values in its arena/scratch mirrors as the dense
+    /// engine (the contract [`exec::decode`] already relies on), so the
+    /// shared [`exec::max_backward`] walk applies unchanged; the
+    /// per-product gradient buffers of the soft path are not involved.
+    pub fn backward_max(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+    ) {
+        self.clear_grad();
+        exec::seed_root_max(&self.exec, &self.arena, &mut self.grad_arena, bn, stats);
+        exec::max_backward(
+            &self.exec,
+            params,
+            &self.arena,
+            &self.scratch,
+            &mut self.grad_arena,
+            &mut self.grad_scratch,
+            x,
+            mask,
+            bn,
+            stats,
+        );
     }
 
     /// See [`Engine::backward_steps`]: the segmented backward sweep.
@@ -960,6 +983,23 @@ impl Engine for SparseEngine {
         stats: &mut EmStats,
     ) {
         SparseEngine::backward(self, params, x, mask, bn, stats)
+    }
+
+    fn backward_semiring(
+        &mut self,
+        params: &ParamArena,
+        x: &[f32],
+        mask: &[f32],
+        bn: usize,
+        stats: &mut EmStats,
+        sr: Semiring,
+    ) {
+        match sr {
+            Semiring::SumProduct => SparseEngine::backward(self, params, x, mask, bn, stats),
+            Semiring::MaxProduct => {
+                SparseEngine::backward_max(self, params, x, mask, bn, stats)
+            }
+        }
     }
 
     fn decode(

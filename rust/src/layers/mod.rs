@@ -365,6 +365,34 @@ impl LayeredPlan {
         Ok(self)
     }
 
+    /// Widen the root level to `classes` outputs: one root sum node per
+    /// class over the SAME shared lower structure — the class-conditional
+    /// EiNet of the paper's discriminative experiments. The root's einsum
+    /// (and mixing, where the root mixes several partitions) `ko` becomes
+    /// `classes`, so every downstream consumer — parameter layout, the
+    /// flat step program, checkpoints (the per-level `ko` is stored) —
+    /// picks the class dimension up with no special cases: the root arena
+    /// block is `[batch, classes]` of per-class joint scores
+    /// `log p(x | y) ` (a uniform prior is applied at read time).
+    /// `classes == 1` is the generative single-root plan unchanged.
+    pub fn with_classes(mut self, classes: usize) -> Result<Self> {
+        ensure!(classes >= 1, "class count must be >= 1, got {classes}");
+        let lv = self
+            .levels
+            .last_mut()
+            .ok_or_else(|| crate::anyhow!("cannot widen an empty plan"))?;
+        // compile() always places the root alone on the top level
+        debug_assert_eq!(lv.einsum.ko, 1, "top level is not the root level");
+        lv.einsum.ko = classes;
+        Ok(self)
+    }
+
+    /// Number of root outputs: C for a class-conditional plan
+    /// ([`Self::with_classes`]), 1 for the generative single-root plan.
+    pub fn num_classes(&self) -> usize {
+        self.levels.last().map(|lv| lv.einsum.ko).unwrap_or(1)
+    }
+
     /// The plan-wide weight structure ([`Self::with_weight_structure`]
     /// applies one structure to every level; an empty plan reads as
     /// dense).

@@ -109,7 +109,7 @@ pub use coordinator::transport::{ShardError, ShardTransport, WorkerConfig};
 pub use engine::dense::DenseEngine;
 pub use engine::exec::{LayerPlan, PlanPartition, Segment, Semiring, Superblock};
 pub use engine::fused::FusedEngine;
-pub use engine::query::{Query, QueryOutput, QueryPass, QueryPlan};
+pub use engine::query::{ClassReduce, Query, QueryOutput, QueryPass, QueryPlan};
 pub use engine::registry::{boxed_build, EngineEntry, EngineFactory, EngineRegistry};
 pub use engine::sparse::SparseEngine;
 pub use engine::{

@@ -110,6 +110,8 @@ fn common_spec() -> Vec<OptSpec> {
         OptSpec { name: "epochs", help: "EM epochs", default: Some("10"), is_flag: false },
         OptSpec { name: "batch-size", help: "mini-batch size", default: Some("100"), is_flag: false },
         OptSpec { name: "step-size", help: "stochastic EM step size", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "online-em", help: "online-EM update policy FREQ:STEP (FREQ mini-batches per M-step, 0 = full-batch; STEP a constant like 0.05 or a decay s0/t^alpha like 0.5/t^0.7)", default: Some(""), is_flag: false },
+        OptSpec { name: "viterbi", help: "hard (Viterbi/max-product) EM: each sample contributes counts along its MPE latent assignment", default: None, is_flag: true },
         OptSpec { name: "workers", help: "worker threads", default: Some("4"), is_flag: false },
         OptSpec { name: "seed", help: "random seed", default: Some("0"), is_flag: false },
         OptSpec { name: "ckpt", help: "checkpoint path", default: Some("einet.bin"), is_flag: false },
@@ -273,6 +275,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     apply_fastmath(&a);
     let (ds, plan, family) = setup(&a, &spec)?;
     let mut params = EinetParams::init(&plan, family, a.get_usize("seed", &spec)? as u64);
+    let online = a.get_str("online-em", &spec)?;
+    let policy = if online.is_empty() {
+        einet::em::UpdatePolicy::default()
+    } else {
+        einet::em::UpdatePolicy::parse(&online)?
+    };
+    let semiring = if a.flag("viterbi") {
+        einet::Semiring::MaxProduct
+    } else {
+        einet::Semiring::SumProduct
+    };
     let cfg = TrainConfig {
         epochs: a.get_usize("epochs", &spec)?,
         batch_size: a.get_usize("batch-size", &spec)?,
@@ -281,6 +294,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             step_size: a.get_f64("step-size", &spec)? as f32,
             ..Default::default()
         },
+        policy,
+        semiring,
         log_every: 1,
     };
     let engine = a.get_str("engine", &spec)?;
@@ -300,6 +315,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             epochs: cfg.epochs,
             batch_size: cfg.batch_size,
             em: cfg.em,
+            policy: cfg.policy,
             log_every: cfg.log_every,
         };
         train_sharded(factory, &plan, family, &mut params, &ds.train.data, ds.train.n, &scfg)?;
@@ -556,6 +572,7 @@ fn table1_one(
         workers: 4,
         em: EmConfig { step_size: 0.5, ..Default::default() },
         log_every: 0,
+        ..Default::default()
     };
     // dense engine training
     let mut p_dense = EinetParams::init(plan, family, 1);

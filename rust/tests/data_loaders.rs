@@ -1,0 +1,337 @@
+//! Corruption and validation contract of the on-disk data loaders.
+//!
+//! The DEBD `.data` parser and the `.eimg` labeled-image codec ingest
+//! files that arrive from disk, not from this process, so — mirroring
+//! the checkpoint codec's corruption suite — every malformation must
+//! surface as a typed error naming the source, never a panic or a
+//! silently wrong dataset. Also pinned here:
+//!
+//! * `save_labeled` / `load_labeled` round-trip the committed fixture
+//!   format bit-for-bit (quantization aside);
+//! * the committed benchmark fixtures load and pass family validation;
+//! * `validate_family` rejects arity mismatches (categorical values
+//!   under Bernoulli leaves, rows not divisible by the observation
+//!   dim) at load time instead of inside a leaf kernel.
+
+use std::path::{Path, PathBuf};
+
+use einet::data::{debd, images, Split};
+use einet::LeafFamily;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("einet_data_{}_{name}", std::process::id()))
+}
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// Assert `r` is an error whose message contains `needle` — the typed
+/// message is the API surface operators grep for, so it is pinned.
+fn assert_err_contains<T: std::fmt::Debug>(
+    r: einet::util::error::Result<T>,
+    needle: &str,
+    what: &str,
+) {
+    let e = match r {
+        Ok(v) => panic!("{what}: expected an error containing {needle:?}, got Ok({v:?})"),
+        Err(e) => e.to_string(),
+    };
+    assert!(
+        e.contains(needle),
+        "{what}: error {e:?} does not mention {needle:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// DEBD .data parser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn debd_parse_accepts_the_canonical_format() {
+    // trailing newline optional, blank lines skipped, spaces tolerated
+    let s = debd::parse_split("1,0,1\n0, 1 ,0\n\n1,1,1", "t").unwrap();
+    assert_eq!(s.n, 3);
+    assert_eq!(s.row_len, 3);
+    assert_eq!(s.row(1), &[0.0, 1.0, 0.0]);
+}
+
+#[test]
+fn debd_parse_rejects_non_integer_tokens_with_line_numbers() {
+    for bad in ["1,0\nx,1\n", "1,0\n0.5,1\n", "1,0\n-1,1\n", "1,0\n,1\n"] {
+        let r = debd::parse_split(bad, "corrupt.data");
+        assert_err_contains(r, "is not a non-negative integer", bad);
+        // the offending line is named (line 2 in every case above)
+        assert_err_contains(
+            debd::parse_split(bad, "corrupt.data"),
+            "corrupt.data:2",
+            bad,
+        );
+    }
+}
+
+#[test]
+fn debd_parse_rejects_ragged_rows() {
+    let r = debd::parse_split("1,0,1\n0,1\n", "ragged.data");
+    assert_err_contains(r, "row has 2 values, expected 3", "ragged row");
+}
+
+#[test]
+fn debd_parse_rejects_empty_files() {
+    for empty in ["", "\n\n  \n"] {
+        assert_err_contains(debd::parse_split(empty, "void.data"), "no data rows", "empty");
+    }
+}
+
+#[test]
+fn debd_missing_split_file_is_a_typed_error_with_the_path() {
+    let r = debd::load_split_file(&tmp("does_not_exist.data"));
+    assert_err_contains(r, "cannot read DEBD split", "missing file");
+}
+
+#[test]
+fn debd_load_dir_rejects_disagreeing_splits() {
+    let dir = tmp("debd_disagree");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("toy.train.data"), "1,0,1\n0,1,0\n").unwrap();
+    std::fs::write(dir.join("toy.valid.data"), "1,0,1\n").unwrap();
+    std::fs::write(dir.join("toy.test.data"), "1,0\n").unwrap(); // 2 vars, not 3
+    let r = debd::load_dir(&dir, "toy");
+    assert_err_contains(r, "disagree on variable count", "ragged dataset");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn debd_load_dir_round_trips_a_written_dataset() {
+    let dir = tmp("debd_ok");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("toy.train.data"), "1,0,1\n0,1,0\n1,1,0\n").unwrap();
+    std::fs::write(dir.join("toy.valid.data"), "0,0,1\n").unwrap();
+    std::fs::write(dir.join("toy.test.data"), "1,0,0\n").unwrap();
+    let ds = debd::load_dir(&dir, "toy").unwrap();
+    assert_eq!(ds.num_vars, 3);
+    assert_eq!((ds.train.n, ds.valid.n, ds.test.n), (3, 1, 1));
+    assert_eq!(ds.train.row(2), &[1.0, 1.0, 0.0]);
+    ds.validate_family(LeafFamily::Bernoulli).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// .eimg labeled-image codec
+// ---------------------------------------------------------------------------
+
+/// A tiny valid in-memory .eimg: 2 images of 2x2x1, 2 classes.
+fn valid_eimg() -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(images::EIMG_MAGIC);
+    for v in [2u32, 2, 2, 1, 2] {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf.extend_from_slice(&[0u8, 1]); // labels
+    buf.extend_from_slice(&[0, 255, 128, 64, 255, 0, 0, 32]); // pixels
+    buf
+}
+
+#[test]
+fn eimg_parses_a_valid_buffer() {
+    let li = images::parse_labeled(&valid_eimg(), "t").unwrap();
+    assert_eq!((li.split.n, li.h, li.w, li.channels, li.classes), (2, 2, 2, 1, 2));
+    assert_eq!(li.labels, vec![0, 1]);
+    assert_eq!(li.split.row_len, 4);
+    assert!((li.split.data[1] - 1.0).abs() < 1e-6); // 255 -> 1.0
+    assert!((li.split.data[3] - 64.0 / 255.0).abs() < 1e-6);
+}
+
+#[test]
+fn eimg_rejects_short_headers() {
+    for cut in [0usize, 3, 4, 23] {
+        let r = images::parse_labeled(&valid_eimg()[..cut], "short");
+        assert_err_contains(r, "truncated header", &format!("cut at {cut}"));
+    }
+}
+
+#[test]
+fn eimg_rejects_bad_magic() {
+    let mut b = valid_eimg();
+    b[0] = b'X';
+    assert_err_contains(
+        images::parse_labeled(&b, "magic"),
+        "not an .eimg file",
+        "bad magic",
+    );
+}
+
+#[test]
+fn eimg_rejects_degenerate_shapes_and_zero_classes() {
+    // zero out each header field in turn: n, h, w, channels -> degenerate
+    for field in 0..4usize {
+        let mut b = valid_eimg();
+        b[4 + field * 4..4 + (field + 1) * 4].copy_from_slice(&0u32.to_le_bytes());
+        assert_err_contains(
+            images::parse_labeled(&b, "shape"),
+            "degenerate shape",
+            &format!("field {field}"),
+        );
+    }
+    let mut b = valid_eimg();
+    b[4 + 4 * 4..4 + 5 * 4].copy_from_slice(&0u32.to_le_bytes());
+    assert_err_contains(
+        images::parse_labeled(&b, "classes"),
+        "class count must be >= 1",
+        "zero classes",
+    );
+}
+
+#[test]
+fn eimg_rejects_truncated_and_oversized_payloads() {
+    let full = valid_eimg();
+    // every truncation point inside the body, and one trailing byte
+    for cut in 24..full.len() {
+        let r = images::parse_labeled(&full[..cut], "trunc");
+        assert_err_contains(r, "payload carries", &format!("cut at {cut}"));
+    }
+    let mut long = full.clone();
+    long.push(0);
+    assert_err_contains(
+        images::parse_labeled(&long, "long"),
+        "payload carries",
+        "trailing byte",
+    );
+}
+
+#[test]
+fn eimg_rejects_out_of_range_labels() {
+    let mut b = valid_eimg();
+    b[24 + 1] = 2; // second label == classes
+    assert_err_contains(
+        images::parse_labeled(&b, "label"),
+        "outside the declared 2 classes",
+        "label overflow",
+    );
+}
+
+#[test]
+fn eimg_rejects_overflowing_shape_headers() {
+    // h = w = channels = u32::MAX: h*w*channels overflows usize (64-bit:
+    // the product of three 2^32-1 factors), n*row_len certainly does
+    let mut b = valid_eimg();
+    for field in [1usize, 2, 3] {
+        b[4 + field * 4..4 + (field + 1) * 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    }
+    let e = images::parse_labeled(&b, "huge").unwrap_err().to_string();
+    assert!(
+        e.contains("overflows"),
+        "overflowing shape must be caught: {e}"
+    );
+}
+
+#[test]
+fn eimg_missing_file_is_a_typed_error_with_the_path() {
+    let r = images::load_labeled(&tmp("does_not_exist.eimg"));
+    assert_err_contains(r, "cannot read image file", "missing file");
+}
+
+#[test]
+fn eimg_save_load_round_trip() {
+    let split = Split {
+        n: 3,
+        row_len: 4,
+        data: vec![
+            0.0, 1.0, 0.5, 0.25, //
+            1.0, 0.0, 0.75, 0.1, //
+            0.2, 0.9, 0.0, 1.0,
+        ],
+    };
+    let labels = vec![0u8, 2, 1];
+    let path = tmp("roundtrip.eimg");
+    images::save_labeled(&path, &split, &labels, 2, 2, 1, 3).unwrap();
+    let li = images::load_labeled(&path).unwrap();
+    assert_eq!((li.split.n, li.h, li.w, li.channels, li.classes), (3, 2, 2, 1, 3));
+    assert_eq!(li.labels, labels);
+    // round-trip is exact up to the byte quantization the writer applies
+    for (a, b) in split.data.iter().zip(&li.split.data) {
+        assert!(
+            (a - b).abs() <= 0.5 / 255.0 + 1e-6,
+            "quantization drift: wrote {a}, read {b}"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn eimg_writer_validates_before_writing() {
+    let split = Split {
+        n: 2,
+        row_len: 4,
+        data: vec![0.0; 8],
+    };
+    let path = tmp("never_written.eimg");
+    // shape mismatch
+    assert!(images::save_labeled(&path, &split, &[0, 0], 3, 3, 1, 2).is_err());
+    // label count mismatch
+    assert!(images::save_labeled(&path, &split, &[0], 2, 2, 1, 2).is_err());
+    // label out of range
+    assert!(images::save_labeled(&path, &split, &[0, 5], 2, 2, 1, 2).is_err());
+    assert!(!path.exists(), "a rejected save must not leave a file");
+}
+
+// ---------------------------------------------------------------------------
+// committed fixtures + family validation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_debd_fixtures_load_and_validate() {
+    for (name, nv) in [("nltcs", 16usize), ("msnbc", 17)] {
+        let ds = debd::load_dir(&fixtures_dir().join("debd"), name).unwrap();
+        assert_eq!(ds.num_vars, nv, "{name}: fixture variable count");
+        assert_eq!(ds.train.n, 400, "{name}: fixture train size");
+        ds.validate_family(LeafFamily::Bernoulli)
+            .expect("committed fixture must be binary");
+    }
+}
+
+#[test]
+fn committed_image_fixture_loads_and_validates() {
+    let li = images::load_labeled(&fixtures_dir().join("images/digits3.eimg")).unwrap();
+    assert_eq!((li.h, li.w, li.channels, li.classes), (4, 4, 1, 3));
+    assert_eq!(li.split.n, 240);
+    assert_eq!(li.labels.len(), 240);
+    li.split
+        .validate_family(LeafFamily::Bernoulli, "digits3")
+        .expect("committed fixture must be binary");
+}
+
+#[test]
+fn validate_family_rejects_arity_mismatches() {
+    // categorical values under Bernoulli leaves: caught with row/variable
+    let s = debd::parse_split("0,1,2\n", "cat.data").unwrap();
+    assert_err_contains(
+        s.validate_family(LeafFamily::Bernoulli, "cat.data"),
+        "outside the support of Bernoulli",
+        "categorical under Bernoulli",
+    );
+    assert_err_contains(
+        s.validate_family(LeafFamily::Bernoulli, "cat.data"),
+        "row 0, variable 2",
+        "offender named",
+    );
+    // the same rows ARE a valid 3-ary categorical dataset
+    s.validate_family(LeafFamily::Categorical { cats: 3 }, "cat.data")
+        .unwrap();
+    // ... but not a 2-ary one
+    assert!(s
+        .validate_family(LeafFamily::Categorical { cats: 2 }, "cat.data")
+        .is_err());
+    // row length not divisible by the observation dim (Gaussian is the
+    // only multi-channel family: obs_dim == channels)
+    let odd = Split {
+        n: 1,
+        row_len: 3,
+        data: vec![0.0, 1.0, 0.0],
+    };
+    assert_err_contains(
+        odd.validate_family(LeafFamily::Gaussian { channels: 2 }, "odd"),
+        "not a multiple",
+        "obs-dim mismatch",
+    );
+}

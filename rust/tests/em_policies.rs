@@ -1,0 +1,358 @@
+//! Update-policy pinning for the online-EM subsystem.
+//!
+//! Two contracts:
+//!
+//! * **Bit-identity** — online EM at stepsize 1.0 and full-batch
+//!   frequency (`UpdatePolicy { frequency: 0, schedule: Constant(1.0) }`)
+//!   is the *same algorithm* as the historical per-epoch `m_step` over
+//!   epoch-accumulated statistics, so the trained parameters must match
+//!   bit for bit — across engines (dense / sparse / fused), structures
+//!   (RAT forests and Poon–Domingos grids), the data-parallel trainer,
+//!   1- and 4-shard model-parallel pools, and loopback-TCP pools. The
+//!   schedule must also *override* `EmConfig::step_size` (the configs
+//!   below deliberately set it to 0.5).
+//! * **Monotonicity** — full-batch EM (stepsize 1.0) is the exact EM
+//!   fixed-point update, so the per-epoch train log-likelihood is
+//!   non-decreasing over 10 epochs on a real on-disk DEBD fixture
+//!   (loaded through `data::debd::load_dir`, the file loader), for both
+//!   engines and both weight structures (Dense and Monarch).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use einet::coordinator::transport::spawn_loopback_workers;
+use einet::coordinator::{
+    train_parallel, train_sharded, ShardConfig, ShardedPool, TrainConfig,
+};
+use einet::data::debd;
+use einet::em::{m_step, EmConfig, PolicyState, StepSchedule, UpdatePolicy};
+use einet::structure::{from_spec, poon_domingos, random_binary_trees, PdAxes};
+use einet::util::rng::Rng;
+use einet::{
+    boxed_build, DenseEngine, EinetParams, EmStats, Engine, FusedEngine,
+    LayeredPlan, LeafFamily, SparseEngine, WeightStructure,
+};
+
+const EPOCHS: usize = 3;
+const BATCH: usize = 16;
+
+fn random_binary_data(n: usize, nv: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * nv)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// The historical batch-EM reference: accumulate every mini-batch's
+/// E-step statistics over one epoch, then apply one `m_step` at
+/// stepsize 1.0 — exactly what the pre-policy full-batch trainer did.
+fn batch_em_reference<E: Engine>(
+    plan: &LayeredPlan,
+    family: LeafFamily,
+    params0: &EinetParams,
+    data: &[f32],
+    n: usize,
+) -> EinetParams {
+    let nv = plan.graph.num_vars;
+    let mask = vec![1.0f32; nv];
+    let em = EmConfig {
+        step_size: 1.0,
+        ..Default::default()
+    };
+    let mut params = params0.clone();
+    let mut engine = E::build(plan.clone(), family, BATCH);
+    let mut logp = vec![0.0f32; BATCH];
+    for _ in 0..EPOCHS {
+        let mut epoch_stats = EmStats::zeros_like(&params);
+        let mut b0 = 0usize;
+        while b0 < n {
+            let bn = BATCH.min(n - b0);
+            let chunk = &data[b0 * nv..(b0 + bn) * nv];
+            let mut stats = EmStats::zeros_like(&params);
+            engine.forward(&params, chunk, &mask, &mut logp[..bn]);
+            engine.backward(&params, chunk, &mask, bn, &mut stats);
+            epoch_stats.merge(&stats);
+            b0 += bn;
+        }
+        m_step(&mut params, &epoch_stats, &em);
+    }
+    params
+}
+
+/// The policy under test: full-batch frequency, constant stepsize 1.0.
+/// `em.step_size` is set to 0.5 everywhere below so a failure to apply
+/// the schedule shows up as a parameter mismatch.
+fn full_batch_unit_policy() -> UpdatePolicy {
+    UpdatePolicy {
+        frequency: 0,
+        schedule: StepSchedule::Constant(1.0),
+    }
+}
+
+fn policy_parity_case<E: Engine + Send + 'static>(
+    plan: &LayeredPlan,
+    seed: u64,
+    label: &str,
+) {
+    let family = LeafFamily::Bernoulli;
+    let nv = plan.graph.num_vars;
+    let n = 64;
+    let params0 = EinetParams::init(plan, family, seed);
+    let data = random_binary_data(n, nv, seed + 1);
+    let reference = batch_em_reference::<E>(plan, family, &params0, &data, n);
+
+    // data-parallel trainer under the policy
+    let mut p = params0.clone();
+    let cfg = TrainConfig {
+        epochs: EPOCHS,
+        batch_size: BATCH,
+        workers: 1,
+        em: EmConfig {
+            step_size: 0.5,
+            ..Default::default()
+        },
+        policy: full_batch_unit_policy(),
+        log_every: 0,
+        ..Default::default()
+    };
+    train_parallel::<E>(plan, family, &mut p, &data, n, &cfg);
+    assert_eq!(
+        p.data, reference.data,
+        "{label}: train_parallel online EM (freq 0, step 1.0) diverged \
+         from the batch m_step reference"
+    );
+
+    // model-parallel pools, 1 and 4 shards
+    for shards in [1usize, 4] {
+        let mut p = params0.clone();
+        let scfg = ShardConfig {
+            n_shards: shards,
+            epochs: EPOCHS,
+            batch_size: BATCH,
+            em: EmConfig {
+                step_size: 0.5,
+                ..Default::default()
+            },
+            policy: full_batch_unit_policy(),
+            log_every: 0,
+        };
+        train_sharded(boxed_build::<E>, plan, family, &mut p, &data, n, &scfg)
+            .unwrap();
+        assert_eq!(
+            p.data, reference.data,
+            "{label} shards={shards}: sharded online EM diverged from the \
+             batch m_step reference"
+        );
+    }
+}
+
+fn rat_plan() -> LayeredPlan {
+    LayeredPlan::compile(random_binary_trees(12, 3, 3, 2), 3)
+}
+
+fn pd_plan() -> LayeredPlan {
+    LayeredPlan::compile(poon_domingos(3, 4, 1, PdAxes::Both), 3)
+}
+
+#[test]
+fn online_em_full_batch_identity_dense() {
+    policy_parity_case::<DenseEngine>(&rat_plan(), 41, "dense/rat");
+    policy_parity_case::<DenseEngine>(&pd_plan(), 42, "dense/pd");
+}
+
+#[test]
+fn online_em_full_batch_identity_sparse() {
+    policy_parity_case::<SparseEngine>(&rat_plan(), 43, "sparse/rat");
+    policy_parity_case::<SparseEngine>(&pd_plan(), 44, "sparse/pd");
+}
+
+#[test]
+fn online_em_full_batch_identity_fused() {
+    policy_parity_case::<FusedEngine>(&rat_plan(), 45, "fused/rat");
+    policy_parity_case::<FusedEngine>(&pd_plan(), 46, "fused/pd");
+}
+
+/// The same identity over real sockets: a 4-shard loopback-TCP pool
+/// driven through `train_step_policy` lands on the batch-EM reference
+/// parameters bit for bit, for every registered engine.
+#[test]
+fn online_em_full_batch_identity_over_loopback_tcp() {
+    const NV: usize = 12;
+    const STRUCTURE: &str = "rat:depth=2,replica=2,seed=3";
+    let family = LeafFamily::Bernoulli;
+    let n = 64;
+    for engine_name in ["dense", "sparse", "fused"] {
+        let plan =
+            LayeredPlan::compile(from_spec(NV, STRUCTURE).unwrap(), 2);
+        let params0 = EinetParams::init(&plan, family, 51);
+        let data = random_binary_data(n, NV, 52);
+        let reference = match engine_name {
+            "dense" => {
+                batch_em_reference::<DenseEngine>(&plan, family, &params0, &data, n)
+            }
+            "sparse" => {
+                batch_em_reference::<SparseEngine>(&plan, family, &params0, &data, n)
+            }
+            _ => batch_em_reference::<FusedEngine>(&plan, family, &params0, &data, n),
+        };
+
+        let (addrs, handles) = spawn_loopback_workers(4).unwrap();
+        let mut pool = ShardedPool::connect(
+            &addrs, STRUCTURE, engine_name, &plan, family, &params0, 4, BATCH,
+        )
+        .expect("connect loopback pool");
+        let em = EmConfig {
+            step_size: 0.5,
+            ..Default::default()
+        };
+        let policy = full_batch_unit_policy();
+        let mut state = PolicyState::new(pool.params());
+        let x = Arc::new(data.clone());
+        let mask = Arc::new(vec![1.0f32; NV]);
+        for _ in 0..EPOCHS {
+            let mut b0 = 0usize;
+            while b0 < n {
+                let bn = BATCH.min(n - b0);
+                pool.train_step_policy(
+                    x.clone(),
+                    b0,
+                    mask.clone(),
+                    bn,
+                    &em,
+                    &policy,
+                    &mut state,
+                    b0 + bn >= n,
+                )
+                .unwrap();
+                b0 += bn;
+            }
+        }
+        assert_eq!(
+            pool.params().data, reference.data,
+            "{engine_name}: loopback-TCP online EM diverged from the batch \
+             m_step reference"
+        );
+        pool.stop();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// full-batch EM monotonicity on a real on-disk DEBD fixture
+// ---------------------------------------------------------------------------
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+/// Train full-batch EM (exact fixed-point update: stepsize 1.0) on the
+/// committed `nltcs` DEBD fixture and assert the per-epoch train LL is
+/// non-decreasing (up to f32 accumulation noise) and clearly improves.
+fn monotone_case<E: Engine>(monarch: bool, label: &str) {
+    let family = LeafFamily::Bernoulli;
+    let ds = debd::load_dir(&fixtures_dir().join("debd"), "nltcs")
+        .expect("committed DEBD fixture");
+    ds.validate_family(family).expect("fixture arity");
+    let base = LayeredPlan::compile(random_binary_trees(ds.num_vars, 2, 2, 9), 4);
+    let plan = if monarch {
+        base.with_weight_structure(WeightStructure::Monarch { blocks: 2 })
+            .expect("monarch blocks")
+    } else {
+        base
+    };
+    let mut params = EinetParams::init(&plan, family, 13);
+    let cfg = TrainConfig {
+        epochs: 10,
+        batch_size: 100,
+        workers: 2,
+        em: EmConfig {
+            step_size: 1.0,
+            ..Default::default()
+        },
+        policy: UpdatePolicy::full_batch(),
+        log_every: 0,
+        ..Default::default()
+    };
+    let hist = train_parallel::<E>(
+        &plan,
+        family,
+        &mut params,
+        &ds.train.data,
+        ds.train.n,
+        &cfg,
+    );
+    assert_eq!(hist.len(), 10);
+    for w in hist.windows(2) {
+        assert!(
+            w[1].train_ll >= w[0].train_ll - 5e-3,
+            "{label}: full-batch EM decreased the train LL: epoch {} {} -> \
+             epoch {} {}",
+            w[0].epoch,
+            w[0].train_ll,
+            w[1].epoch,
+            w[1].train_ll
+        );
+    }
+    assert!(
+        hist[9].train_ll > hist[0].train_ll + 0.2,
+        "{label}: EM barely moved on the correlated fixture: {} -> {}",
+        hist[0].train_ll,
+        hist[9].train_ll
+    );
+    params.validate().unwrap();
+}
+
+#[test]
+fn full_batch_em_monotone_on_debd_fixture_dense() {
+    monotone_case::<DenseEngine>(false, "dense/Dense");
+}
+
+#[test]
+fn full_batch_em_monotone_on_debd_fixture_sparse() {
+    monotone_case::<SparseEngine>(false, "sparse/Dense");
+}
+
+#[test]
+fn full_batch_em_monotone_on_debd_fixture_dense_monarch() {
+    monotone_case::<DenseEngine>(true, "dense/Monarch");
+}
+
+#[test]
+fn full_batch_em_monotone_on_debd_fixture_sparse_monarch() {
+    monotone_case::<SparseEngine>(true, "sparse/Monarch");
+}
+
+/// The CLI policy grammar: round-trips of the `FREQ:STEP` forms and the
+/// typed rejections (non-numeric, out-of-range stepsizes).
+#[test]
+fn update_policy_parse_grammar() {
+    assert_eq!(
+        UpdatePolicy::parse("1:0.05").unwrap(),
+        UpdatePolicy {
+            frequency: 1,
+            schedule: StepSchedule::Constant(0.05),
+        }
+    );
+    assert_eq!(
+        UpdatePolicy::parse("0:1.0").unwrap(),
+        UpdatePolicy {
+            frequency: 0,
+            schedule: StepSchedule::Constant(1.0),
+        }
+    );
+    assert_eq!(
+        UpdatePolicy::parse("8:0.5/t^0.7").unwrap(),
+        UpdatePolicy {
+            frequency: 8,
+            schedule: StepSchedule::Decay { s0: 0.5, alpha: 0.7 },
+        }
+    );
+    for bad in ["", "1", "x:0.5", "1:x", "1:0", "1:1.5", "1:0/t^0.7"] {
+        assert!(
+            UpdatePolicy::parse(bad).is_err(),
+            "policy spec {bad:?} should be rejected"
+        );
+    }
+}

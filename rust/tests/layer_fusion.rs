@@ -351,6 +351,7 @@ fn shard_worker_handshake_refusal_lists_registered_names() {
         shard_id: 0,
         batch_cap: 2,
         fastmath: false,
+        classes: 1,
     };
     let err = TcpTransport::connect(&addrs[0], &cfg, 8)
         .expect_err("unknown engine must be refused")

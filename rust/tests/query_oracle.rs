@@ -16,13 +16,20 @@
 //!   density — and `Mpe` matches the enumerated true argmax;
 //! * sharded execution (4 segments) answers `Marginal` and `Mpe`
 //!   bit-identically to the single engine, across dense/sparse and
-//!   RAT/PD structures.
+//!   RAT/PD structures;
+//! * the **Viterbi E-step** (`backward_semiring` under `MaxProduct`)
+//!   accumulates exactly the hard-count statistics of the MPE *latent*
+//!   assignment, pinned against an independent enumeration of every
+//!   induced selection tree of the circuit;
+//! * `Classify` / `Posterior` on class-conditional circuits match
+//!   per-class exhaustive marginals.
 
 use einet::structure::{poon_domingos, random_binary_trees, PdAxes};
 use einet::util::rng::Rng;
 use einet::{
-    boxed_build, DecodeMode, DenseEngine, EinetParams, Engine, LayeredPlan,
-    LeafFamily, ParamLayout, Query, QueryOutput, Semiring, SparseEngine,
+    boxed_build, DecodeMode, DenseEngine, EinetParams, EmStats, Engine,
+    FusedEngine, LayeredPlan, LeafFamily, ParamLayout, Query, QueryOutput,
+    Semiring, SparseEngine,
 };
 
 // ---------------------------------------------------------------------------
@@ -512,4 +519,336 @@ fn sharded_mpe_is_bit_identical_dense() {
 #[test]
 fn sharded_mpe_is_bit_identical_sparse() {
     check_sharded_mpe::<SparseEngine>("sparse");
+}
+
+// ---------------------------------------------------------------------------
+// Viterbi E-step vs enumeration of the MPE latent assignment
+// ---------------------------------------------------------------------------
+
+/// One complete latent assignment (induced selection tree) of the
+/// circuit for a fully observed sample: its joint log-probability
+/// `log p(x, z)` and the hard-count statistics its selection implies —
+/// additions into the flat `EmStats::grad` buffer (sum/mixing weight
+/// counts at their arena offsets, Bernoulli moment sums at the theta
+/// offsets) and into `EmStats::sum_p` (one unit of posterior mass per
+/// selected leaf component per scope variable).
+#[derive(Clone)]
+struct Induced {
+    logp: f64,
+    grad: Vec<(usize, f64)>,
+    sump: Vec<usize>,
+}
+
+/// Enumerate EVERY induced selection tree below `(rid, kk)`: at a leaf
+/// there is exactly one (the component's factorized density over its
+/// scope); at a sum the choices multiply — a mixing child per
+/// partition, an `(i, j)` component pair per einsum, crossed with the
+/// subtree enumerations. Shares no code with `exec::max_backward`.
+fn enum_induced(
+    plan: &LayeredPlan,
+    params: &EinetParams,
+    x: &[f32],
+    rid: usize,
+    kk: usize,
+) -> Vec<Induced> {
+    let region = &plan.graph.regions[rid];
+    let k = plan.k;
+    let r_total = plan.num_replica;
+    let fam = params.family();
+    let s_dim = fam.stat_dim();
+    if region.is_leaf() {
+        let rep = region.replica.unwrap();
+        let mut logp = 0.0f64;
+        let mut grad = Vec::new();
+        let mut sump = Vec::new();
+        for d in region.scope.iter() {
+            let base = (d * k + kk) * r_total + rep;
+            let th = &params.theta()[base * s_dim..(base + 1) * s_dim];
+            logp += fam.log_prob(th, &x[d..d + 1]) as f64;
+            sump.push(base);
+            // Bernoulli sufficient statistic T(x) = x (the test is
+            // Bernoulli-only, s_dim == 1)
+            grad.push((base * s_dim, x[d] as f64));
+        }
+        return vec![Induced { logp, grad, sump }];
+    }
+    let (lvl, _) = part_pos(plan, region.partitions[0]);
+    let ko = plan.levels[lvl].einsum.ko;
+    let w_off = params.layout.levels[lvl].w_off;
+    let w = params.w(lvl);
+    let mut out: Vec<Induced> = Vec::new();
+    for (ci, &pid) in region.partitions.iter().enumerate() {
+        let (i, s) = part_pos(plan, pid);
+        assert_eq!(i, lvl);
+        let p = plan.graph.partitions[pid];
+        let mut choices: Vec<Induced> = Vec::new();
+        for ii in 0..k {
+            let lefts = enum_induced(plan, params, x, p.left, ii);
+            for jj in 0..k {
+                let rights = enum_induced(plan, params, x, p.right, jj);
+                let wl = (s * ko + kk) * k * k + ii * k + jj;
+                let lw = (w[wl] as f64).ln();
+                for l in &lefts {
+                    for r in &rights {
+                        let mut grad = l.grad.clone();
+                        grad.extend(r.grad.iter().cloned());
+                        grad.push((w_off + wl, 1.0));
+                        let mut sump = l.sump.clone();
+                        sump.extend(r.sump.iter().cloned());
+                        choices.push(Induced {
+                            logp: lw + l.logp + r.logp,
+                            grad,
+                            sump,
+                        });
+                    }
+                }
+            }
+        }
+        if region.partitions.len() == 1 {
+            out = choices;
+        } else {
+            // mixing: the selection also picks the partition, paying its
+            // mixing weight and counting on the mixing statistic
+            let m = plan.levels[lvl].mixing.as_ref().expect("mixing layer");
+            let j = m
+                .region_ids
+                .iter()
+                .position(|&r| r == rid)
+                .expect("region row");
+            let mix = params.mix(lvl).expect("mixing weights");
+            let lmix = (mix[j * m.cmax + ci] as f64).ln();
+            let ml = params.layout.levels[lvl]
+                .mix
+                .as_ref()
+                .expect("mixing layout");
+            let midx = ml.off + j * ml.cmax + ci;
+            for mut ch in choices {
+                ch.logp += lmix;
+                ch.grad.push((midx, 1.0));
+                out.push(ch);
+            }
+        }
+    }
+    out
+}
+
+/// Viterbi E-step oracle: on tiny circuits, the max-product forward
+/// score equals the best induced tree's `log p(x, z)`, and the
+/// `MaxProduct` backward's accumulated statistics equal the best tree's
+/// hard counts — for every engine, with and without a mixing layer.
+fn check_viterbi_stats<E: Engine>(label: &str) {
+    for (sname, plan) in [
+        // replicated forest: mixing at the root
+        ("rat-mix", LayeredPlan::compile(random_binary_trees(6, 2, 2, 3), 2)),
+        // single tree, larger leaf scopes, no mixing
+        ("rat-tree", LayeredPlan::compile(random_binary_trees(8, 2, 1, 5), 2)),
+    ] {
+        let nv = plan.graph.num_vars;
+        let family = LeafFamily::Bernoulli;
+        let params = EinetParams::init(&plan, family, 17);
+        let bn = 4;
+        let mut rng = Rng::new(29);
+        let mut x = Vec::with_capacity(bn * nv);
+        for _ in 0..bn {
+            x.extend(random_binary(nv, &mut rng));
+        }
+        let mask = vec![1.0f32; nv];
+        let ctx = format!("{label}/{sname}");
+
+        // enumerate the MPE latent assignment per sample and sum its
+        // hard counts into oracle accumulators
+        let total = params.layout.total;
+        let mut want_grad = vec![0.0f64; total];
+        let mut want_sump = vec![0.0f64; params.layout.num_vars * plan.k * plan.num_replica];
+        let mut want_ll = 0.0f64;
+        let mut want_scores = Vec::with_capacity(bn);
+        for b in 0..bn {
+            let row = &x[b * nv..(b + 1) * nv];
+            let trees = enum_induced(&plan, &params, row, plan.graph.root, 0);
+            let best = trees
+                .iter()
+                .max_by(|a, b| a.logp.partial_cmp(&b.logp).unwrap())
+                .unwrap();
+            want_scores.push(best.logp);
+            want_ll += best.logp;
+            for &(i, v) in &best.grad {
+                want_grad[i] += v;
+            }
+            for &c in &best.sump {
+                want_sump[c] += 1.0;
+            }
+        }
+
+        // the engine under max-product: forward scores are the MPE
+        // scores, the backward statistics are the hard counts
+        let mut engine = E::build(plan.clone(), family, bn);
+        let mut logp = vec![0.0f32; bn];
+        engine.forward_semiring(&params, &x, &mask, &mut logp, Semiring::MaxProduct);
+        for b in 0..bn {
+            assert!(
+                (logp[b] as f64 - want_scores[b]).abs() < 1e-3,
+                "{ctx}: max-product forward row {b}: {} vs enumerated {}",
+                logp[b],
+                want_scores[b]
+            );
+        }
+        let mut stats = EmStats::zeros_like(&params);
+        engine.backward_semiring(&params, &x, &mask, bn, &mut stats, Semiring::MaxProduct);
+        assert_eq!(stats.count, bn, "{ctx}: sample count");
+        assert!(
+            (stats.loglik - want_ll).abs() < 1e-3,
+            "{ctx}: Viterbi loglik {} vs enumerated {want_ll}",
+            stats.loglik
+        );
+        for i in 0..total {
+            assert!(
+                (stats.grad[i] as f64 - want_grad[i]).abs() < 1e-3,
+                "{ctx}: Viterbi statistic {i}: {} vs enumerated {}",
+                stats.grad[i],
+                want_grad[i]
+            );
+        }
+        for (c, (&got, &want)) in stats.sum_p.iter().zip(&want_sump).enumerate() {
+            assert!(
+                (got as f64 - want).abs() < 1e-3,
+                "{ctx}: leaf mass {c}: {got} vs enumerated {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn viterbi_stats_match_enumerated_mpe_assignment_dense() {
+    check_viterbi_stats::<DenseEngine>("dense");
+}
+
+#[test]
+fn viterbi_stats_match_enumerated_mpe_assignment_sparse() {
+    check_viterbi_stats::<SparseEngine>("sparse");
+}
+
+#[test]
+fn viterbi_stats_match_enumerated_mpe_assignment_fused() {
+    check_viterbi_stats::<FusedEngine>("fused");
+}
+
+// ---------------------------------------------------------------------------
+// Classify / Posterior vs per-class exhaustive marginals
+// ---------------------------------------------------------------------------
+
+/// Per-class evidence scores by enumeration: for each class entry of
+/// the widened root, logsumexp the root's class value over every
+/// completion of the evidence (the recursive oracle evaluates the
+/// widened root vector directly).
+fn oracle_class_scores(
+    plan: &LayeredPlan,
+    params: &EinetParams,
+    x: &[f32],
+    mask: &[f32],
+    classes: usize,
+) -> Vec<f64> {
+    let mut terms: Vec<Vec<f64>> = vec![Vec::new(); classes];
+    for c in completions(x, mask) {
+        let mut memo = vec![None; plan.graph.regions.len()];
+        let v = oracle_region(plan, params, &c, false, plan.graph.root, &mut memo);
+        assert_eq!(v.len(), classes, "widened root must carry one value per class");
+        for (ci, &s) in v.iter().enumerate() {
+            terms[ci].push(s);
+        }
+    }
+    terms.iter().map(|t| logsumexp(t)).collect()
+}
+
+fn check_class_queries<E: Engine>(label: &str) {
+    for (sname, classes, plan) in [
+        (
+            "rat-tree",
+            3usize,
+            LayeredPlan::compile(random_binary_trees(6, 2, 1, 4), 2),
+        ),
+        (
+            "rat-mix",
+            4usize,
+            LayeredPlan::compile(random_binary_trees(8, 2, 2, 6), 2),
+        ),
+    ] {
+        let plan = plan.with_classes(classes).expect("widen root");
+        let nv = plan.graph.num_vars;
+        let params = EinetParams::init(&plan, LeafFamily::Bernoulli, 37);
+        let bn = 3;
+        let mut engine = E::build(plan.clone(), LeafFamily::Bernoulli, bn);
+        let mut rng = Rng::new(41);
+        let mut x = Vec::with_capacity(bn * nv);
+        for _ in 0..bn {
+            x.extend(random_binary(nv, &mut rng));
+        }
+        for (mname, mask) in [("full", vec![1.0f32; nv]), ("half", half_mask(nv))] {
+            let ctx = format!("{label}/{sname}/{mname}");
+            let want: Vec<Vec<f64>> = (0..bn)
+                .map(|b| {
+                    oracle_class_scores(
+                        &plan,
+                        &params,
+                        &x[b * nv..(b + 1) * nv],
+                        &mask,
+                        classes,
+                    )
+                })
+                .collect();
+
+            // Classify: the argmax class (uniform prior, so the evidence
+            // argmax IS the posterior argmax)
+            let mut out = QueryOutput::default();
+            let qp = Query::Classify { mask: mask.clone() }.compile(nv).unwrap();
+            engine.execute(&params, &qp, &x, bn, &mut rng, &mut out);
+            assert_eq!(out.scores.len(), bn, "{ctx}: one prediction per row");
+            for b in 0..bn {
+                let best = want[b]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                assert_eq!(
+                    out.scores[b] as usize, best,
+                    "{ctx}: Classify row {b} picked {} but the enumerated \
+                     per-class marginals favor {best}",
+                    out.scores[b]
+                );
+            }
+
+            // Posterior: log-softmax of the enumerated per-class scores
+            let qp = Query::Posterior { mask: mask.clone() }.compile(nv).unwrap();
+            engine.execute(&params, &qp, &x, bn, &mut rng, &mut out);
+            assert_eq!(out.scores.len(), bn * classes, "{ctx}: [bn, C] posteriors");
+            for b in 0..bn {
+                let lse = logsumexp(&want[b]);
+                let mut mass = 0.0f64;
+                for c in 0..classes {
+                    let got = out.scores[b * classes + c] as f64;
+                    let expect = want[b][c] - lse;
+                    assert!(
+                        (got - expect).abs() < 1e-3,
+                        "{ctx}: posterior row {b} class {c}: {got} vs \
+                         enumerated {expect}"
+                    );
+                    mass += got.exp();
+                }
+                assert!(
+                    (mass - 1.0).abs() < 1e-4,
+                    "{ctx}: posterior row {b} is not normalized: mass {mass}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn class_queries_match_exhaustive_marginals_dense() {
+    check_class_queries::<DenseEngine>("dense");
+}
+
+#[test]
+fn class_queries_match_exhaustive_marginals_sparse() {
+    check_class_queries::<SparseEngine>("sparse");
 }

@@ -218,6 +218,7 @@ fn sharded_training_trajectories_match_across_shard_counts() {
                 ..Default::default()
             },
             log_every: 0,
+            ..Default::default()
         };
         let hist = train_sharded(
             boxed_build::<DenseEngine>,

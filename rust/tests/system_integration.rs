@@ -33,6 +33,7 @@ fn density_estimation_learns_tree_bn() {
             ..Default::default()
         },
         log_every: 0,
+        ..Default::default()
     };
     train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
     let test_ll = evaluate::<DenseEngine>(&plan, family, &params, &ds.test.data, ds.test.n, 256);
@@ -81,6 +82,7 @@ fn engines_reach_parity_on_test_ll() {
         workers: 2,
         em,
         log_every: 0,
+        ..Default::default()
     };
     train_parallel::<DenseEngine>(&plan, family, &mut p_d, ds.train.rows(0, n), n, &cfg);
     // sparse
@@ -202,6 +204,7 @@ fn gaussian_em_improves_on_continuous_data() {
             ..Default::default()
         },
         log_every: 0,
+        ..Default::default()
     };
     train_parallel::<DenseEngine>(&plan, family, &mut params, &data, n, &cfg);
     let ll1 = evaluate::<DenseEngine>(&plan, family, &params, &data, n, 64);
@@ -263,6 +266,7 @@ fn checkpoint_preserves_model_behaviour() {
         workers: 2,
         em: EmConfig::default(),
         log_every: 0,
+        ..Default::default()
     };
     train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
     let path = std::env::temp_dir().join("einet_system_ckpt.bin");
@@ -292,6 +296,7 @@ fn trained_inpainting_beats_random_fill() {
             ..Default::default()
         },
         log_every: 0,
+        ..Default::default()
     };
     train_parallel::<DenseEngine>(&plan, family, &mut params, &ds.train.data, ds.train.n, &cfg);
     let mut engine = DenseEngine::new(plan, family, 64);

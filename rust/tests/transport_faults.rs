@@ -321,6 +321,7 @@ fn corrupt_frames_cost_one_session_not_the_worker() {
         shard_id: 0,
         batch_cap: bn,
         fastmath: false,
+        classes: 1,
     };
     let err = TcpTransport::connect(&addrs[0], &cfg, NV)
         .expect_err("unknown engine must be refused");
@@ -364,6 +365,7 @@ fn crafted_payloads_cost_one_session_not_the_worker() {
         shard_id: 0,
         batch_cap: bn,
         fastmath: false,
+        classes: 1,
     };
     let row = NV; // Bernoulli evidence: one scalar per variable
     let sessions: Vec<(&str, ShardJob)> = vec![
